@@ -1,0 +1,10 @@
+//! Bench harness for the compile-time-overhead claim (§5.2: "0.18%
+//! compile-time geomean slowdown"). Best-of-5 per benchmark per config.
+//! Run: cargo bench --bench compile_time
+
+use volt::coordinator::{experiments, report};
+
+fn main() {
+    let rows = experiments::compile_time_sweep(5).expect("sweep");
+    print!("{}", report::render_compile_time(&rows));
+}

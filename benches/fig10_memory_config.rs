@@ -1,0 +1,10 @@
+//! Bench harness regenerating Figure 10 (shared-memory mapping x cache
+//! configuration sweep over the shared-memory kernels).
+//! Run: cargo bench --bench fig10_memory_config
+
+use volt::coordinator::{experiments, report};
+
+fn main() {
+    let rows = experiments::memory_config_sweep().expect("sweep");
+    print!("{}", report::render_fig10(&rows));
+}

@@ -1,0 +1,16 @@
+//! Bench harness regenerating Figure 7 (instruction-reduction factors
+//! across the optimization ladder) and timing the sweep.
+//! Run: cargo bench --bench fig7_instruction_reduction
+
+use std::time::Instant;
+use volt::coordinator::{experiments, report};
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = experiments::ladder_sweep(None).expect("sweep");
+    let dt = t0.elapsed();
+    print!("{}", report::render_ladder_fig7(&rows));
+    println!("\nsweep wall time: {:.2}s ({} benchmarks x 6 levels)", dt.as_secs_f64(), rows.len());
+    let g = experiments::geomean(rows.iter().map(|r| r.reduction(5)));
+    println!("geomean instruction-reduction (Recon vs Base): {g:.3}x");
+}

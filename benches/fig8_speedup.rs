@@ -1,0 +1,15 @@
+//! Bench harness regenerating Figure 8 (speedups across the ladder, plus
+//! the memory-request-density series behind the ZiCond discussion).
+//! Run: cargo bench --bench fig8_speedup
+
+use std::time::Instant;
+use volt::coordinator::{experiments, report};
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = experiments::ladder_sweep(None).expect("sweep");
+    print!("{}", report::render_ladder_fig8(&rows));
+    let g = experiments::geomean(rows.iter().map(|r| r.speedup(5)));
+    println!("\ngeomean speedup (Recon vs Base): {g:.3}x");
+    println!("sweep wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Bench harness regenerating Figure 9 (vote/shuffle/bscan/atomic-agg/gc
+//! with hardware warp ISA vs software emulation).
+//! Run: cargo bench --bench fig9_isa_extensions
+
+use volt::coordinator::{experiments, report};
+
+fn main() {
+    let rows = experiments::isa_extension_sweep().expect("sweep");
+    print!("{}", report::render_fig9(&rows));
+    let g = experiments::geomean(rows.iter().map(|r| r.speedup()));
+    println!("geomean HW-vs-SW speedup: {g:.2}x");
+}

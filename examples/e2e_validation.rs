@@ -1,0 +1,155 @@
+//! END-TO-END VALIDATION DRIVER — the full system on a real workload.
+//!
+//! Proves all layers compose: VCL/CUDA sources → VOLT front-end →
+//! centralized SIMT middle-end (full ladder) → Vortex back-end → SimX-style
+//! simulator → host runtime, with results validated against BOTH
+//! (a) host-side Rust references (every benchmark) and
+//! (b) the JAX/Pallas AOT reference kernels executed via PJRT from Rust
+//!     (the dense kernels) — Python never runs here; the HLO text in
+//!     `artifacts/` is the build product of `make artifacts`.
+//!
+//! Prints the paper's headline-style summary (coverage + ladder geomeans)
+//! and is the run recorded in EXPERIMENTS.md.
+//!
+//! Run: make artifacts && cargo run --release --example e2e_validation
+
+use volt::backend::emit::{BackendOptions, SharedMemMapping};
+use volt::coordinator::{benchmarks, compile_source, experiments, Rng};
+use volt::frontend::FrontendOptions;
+use volt::runtime::{default_artifacts_dir, ArgValue, PjrtReference, VoltDevice};
+use volt::sim::SimConfig;
+use volt::transform::OptLevel;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let t0 = std::time::Instant::now();
+    // ---- 1. §5.1-style coverage: full suite at the ladder extremes ----
+    let mut pass = 0;
+    let mut total = 0;
+    let mut base_instrs = 0u64;
+    let mut full_instrs = 0u64;
+    let mut base_cycles = 0u64;
+    let mut full_cycles = 0u64;
+    println!("== benchmark coverage (suite x {{Base, Recon}}) ==");
+    for b in benchmarks::registry() {
+        let mut line = format!("{:>14} [{:>8}]", b.name, b.suite);
+        for lvl in [OptLevel::Base, OptLevel::Recon] {
+            total += 1;
+            match experiments::run_bench(
+                &b,
+                lvl,
+                true,
+                SharedMemMapping::Local,
+                SimConfig::default(),
+            ) {
+                Ok(r) => {
+                    pass += 1;
+                    line.push_str(&format!(
+                        "  {}={}i/{}c",
+                        lvl.name(),
+                        r.stats.instrs,
+                        r.stats.cycles
+                    ));
+                    if lvl == OptLevel::Base {
+                        base_instrs += r.stats.instrs;
+                        base_cycles += r.stats.cycles;
+                    } else {
+                        full_instrs += r.stats.instrs;
+                        full_cycles += r.stats.cycles;
+                    }
+                }
+                Err(e) => line.push_str(&format!("  {}=FAIL({e})", lvl.name())),
+            }
+        }
+        println!("{line}");
+    }
+    println!(
+        "\n{pass}/{total} runs validated; suite instruction reduction {:.3}x, speedup {:.3}x (Recon vs Base)",
+        base_instrs as f64 / full_instrs as f64,
+        base_cycles as f64 / full_cycles as f64
+    );
+
+    // ---- 2. PJRT cross-validation of the device against JAX/Pallas ----
+    println!("\n== device vs JAX/Pallas PJRT reference ==");
+    match PjrtReference::load(&default_artifacts_dir()) {
+        Err(e) => println!("(skipped — run `make artifacts`): {e}"),
+        Ok(pjrt) => {
+            println!("PJRT platform: {}", pjrt.platform());
+            // SGEMM on device vs the Pallas tiled matmul.
+            let n = 24usize;
+            let src = std::fs::read_to_string(
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benchmarks/sgemm.cl"),
+            )?;
+            let out = compile_source(
+                &src,
+                &FrontendOptions::default(),
+                OptLevel::Recon,
+                &BackendOptions::default(),
+            )?;
+            let mut dev = VoltDevice::new(out.image.clone(), SimConfig::default());
+            let mut rng = Rng(2024);
+            let a: Vec<f32> = (0..n * n).map(|_| rng.f32_01() * 2.0 - 1.0).collect();
+            let b: Vec<f32> = (0..n * n).map(|_| rng.f32_01() * 2.0 - 1.0).collect();
+            let (pa, pb, pc) = (
+                dev.malloc((n * n * 4) as u32),
+                dev.malloc((n * n * 4) as u32),
+                dev.malloc((n * n * 4) as u32),
+            );
+            dev.write_f32(pa, &a)?;
+            dev.write_f32(pb, &b)?;
+            let stats = dev.launch(
+                "sgemm",
+                [3, 3, 1],
+                [8, 8, 1],
+                &[
+                    ArgValue::Ptr(pa),
+                    ArgValue::Ptr(pb),
+                    ArgValue::Ptr(pc),
+                    ArgValue::I32(n as i32),
+                    ArgValue::I32(n as i32),
+                    ArgValue::I32(n as i32),
+                ],
+            )?;
+            let device = dev.read_f32(pc, n * n)?;
+            let pallas = pjrt.run_f32("matmul24", &[a.clone(), b.clone()])?;
+            let mut max_err = 0f32;
+            for i in 0..n * n {
+                max_err = max_err.max((device[i] - pallas[i]).abs());
+            }
+            println!(
+                "sgemm 24x24: device {} cycles; max |device - pallas| = {max_err:.2e}  {}",
+                stats.cycles,
+                if max_err < 1e-3 { "OK" } else { "MISMATCH" }
+            );
+            assert!(max_err < 1e-3);
+
+            // Elementwise + reduction cross-checks.
+            let va: Vec<f32> = (0..1000).map(|i| i as f32 * 0.25).collect();
+            let vb: Vec<f32> = (0..1000).map(|i| 1000.0 - i as f32).collect();
+            let vr = pjrt.run_f32("vecadd1000", &[va.clone(), vb.clone()])?;
+            for i in 0..1000 {
+                assert!((vr[i] - (va[i] + vb[i])).abs() < 1e-4);
+            }
+            let xs: Vec<f32> = (0..512).map(|i| (i as f32 * 0.01).cos()).collect();
+            let sums = pjrt.run_f32("blocksum512", &[xs.clone()])?;
+            for (g, chunk) in sums.iter().zip(xs.chunks(64)) {
+                let want: f32 = chunk.iter().sum();
+                assert!((g - want).abs() < 1e-3);
+            }
+            println!("vecadd1000 + blocksum512 PJRT references: OK");
+        }
+    }
+
+    // ---- 3. Case-study spot checks ----
+    println!("\n== case studies ==");
+    let fig9 = experiments::isa_extension_sweep()?;
+    let g9 = experiments::geomean(fig9.iter().map(|r| r.speedup()));
+    println!("Fig 9 (ISA extensions): geomean HW/SW speedup {g9:.2}x over {} kernels", fig9.len());
+    let fig10 = experiments::memory_config_sweep()?;
+    println!("Fig 10 (memory configs): {} kernels x {} configs", fig10.len(), fig10[0].cells.len());
+
+    println!("\ntotal e2e wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    if pass != total {
+        std::process::exit(1);
+    }
+    Ok(())
+}

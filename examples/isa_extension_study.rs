@@ -1,0 +1,42 @@
+//! Case Study 1 (paper §5.3): extending ISA support.
+//!
+//! The same CUDA warp-level source compiled two ways:
+//! * **builtin-library path** — warp intrinsics replaced by software
+//!   emulation through per-core shared memory (the CuPBoP-runtime
+//!   fallback);
+//! * **ISA-table path** — the back-end table knows `vx_shfl`/`vx_vote`, so
+//!   the intrinsics lower to single instructions.
+//!
+//! Prints the Fig. 9 rows for the whole warp-feature suite.
+//!
+//! Run: cargo run --release --example isa_extension_study
+
+use volt::backend::emit::SharedMemMapping;
+use volt::coordinator::{experiments, report};
+use volt::sim::SimConfig;
+use volt::transform::OptLevel;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Per-benchmark Fig. 9 sweep.
+    let rows = experiments::isa_extension_sweep()?;
+    print!("{}", report::render_fig9(&rows));
+    let g = experiments::geomean(rows.iter().map(|r| r.speedup()));
+    println!("geomean HW/SW speedup: {g:.2}x");
+
+    // Zoom in on one kernel: what the two lowering modes cost.
+    let b = volt::coordinator::find("bscan").unwrap();
+    for (label, hw) in [("software emulation", false), ("vx_* ISA", true)] {
+        let r = experiments::run_bench(
+            &b,
+            OptLevel::Recon,
+            hw,
+            SharedMemMapping::Local,
+            SimConfig::default(),
+        )?;
+        println!(
+            "bscan [{label}]: {} instrs, {} cycles, {} warp-op instructions, {} local accesses",
+            r.stats.instrs, r.stats.cycles, r.stats.warp_ops, r.stats.local_accesses
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernels: element-wise reference ops (vecadd, saxpy,
+scale) with 1-D BlockSpec tiling."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@jax.jit
+def vecadd(a, b):
+    n = a.shape[0]
+    bs = _pick_block(n, 512)
+    return pl.pallas_call(
+        _vecadd_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+@jax.jit
+def saxpy(a, x, y):
+    """a is a (1,)-shaped array (scalar broadcast through VMEM)."""
+    n = x.shape[0]
+    bs = _pick_block(n, 512)
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, x, y)
+
+
+def _scale_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0]
+
+
+@jax.jit
+def scale(x, s):
+    n = x.shape[0]
+    bs = _pick_block(n, 512)
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, s)

@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: tiled matrix multiply.
+
+The compute hot-spot of the reference-executor suite. Written
+TPU-idiomatically: BlockSpec expresses the HBM->VMEM tile schedule, the
+inner contraction hits the MXU via `jnp.dot` with an f32 accumulator.
+`interpret=True` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md); real-TPU performance is
+estimated structurally in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (bm, K) x (K, bn) tile product per grid step, accumulated in f32.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of dim that is <= want (TPU-friendly when possible)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(a, b, bm: int = 128, bn: int = 128):
+    """C = A @ B via a Pallas grid over output tiles.
+
+    VMEM per grid step: bm*K + K*bn + bm*bn floats — sized for the 16 MiB
+    VMEM budget at the default 128x128 tiles up to K=8192.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

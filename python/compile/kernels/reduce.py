@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernel: per-block sums (the reduce0 reference)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blocksum_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_sums(x, block: int = 64):
+    n = x.shape[0]
+    assert n % block == 0, f"{n} not divisible by block {block}"
+    return pl.pallas_call(
+        _blocksum_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // block,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def total_sum(x, block: int = 64):
+    """L2 composition: Pallas partials + jnp final reduction."""
+    return jnp.sum(block_sums(x, block=block), keepdims=True)

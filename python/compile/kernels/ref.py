@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (the pytest
+comparison target — the CORE build-time correctness signal)."""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def vecadd(a, b):
+    return a + b
+
+
+def saxpy(a, x, y):
+    return a[0] * x + y
+
+
+def scale(x, s):
+    return x * s[0]
+
+
+def transpose(x):
+    return x.T
+
+
+def block_sums(x, block=64):
+    return x.reshape(-1, block).sum(axis=1)
+
+
+def total_sum(x, block=64):
+    return jnp.sum(x, keepdims=True)
+
+
+def gemm_bias_relu(a, b, bias):
+    return jnp.maximum(jnp.dot(a, b) + bias, 0.0)

@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernel: blocked 2-D transpose."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@jax.jit
+def transpose(x):
+    m, n = x.shape
+    bm = _pick_block(m, 128)
+    bn = _pick_block(n, 128)
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,64 @@
+"""Layer-2 JAX reference-executor suite.
+
+Composes the Layer-1 Pallas kernels into the reference functions the Rust
+coordinator validates device results against (the "reference CPU
+implementations" of paper §5). `aot.py` lowers each entry once to HLO
+text; the Rust runtime (rust/src/runtime/pjrt.rs) loads and executes them
+via PJRT. Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementwise, matmul as mm, reduce as red, transpose as tp
+
+
+def matmul(a, b):
+    return mm.matmul(a, b)
+
+
+def vecadd(a, b):
+    return elementwise.vecadd(a, b)
+
+
+def saxpy(a, x, y):
+    return elementwise.saxpy(a, x, y)
+
+
+def scale(x, s):
+    return elementwise.scale(x, s)
+
+
+def transpose(x):
+    return tp.transpose(x)
+
+
+def block_sums(x):
+    return red.block_sums(x, block=64)
+
+
+@jax.jit
+def gemm_bias_relu(a, b, bias):
+    """L2 composition: Pallas matmul fused with jnp epilogue — the kind of
+    model-level graph the paper's §6.2 GEMM/FlashAttention generation
+    produces."""
+    return jnp.maximum(mm.matmul(a, b) + bias[None, :], 0.0)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# name -> (fn, example input specs). Shapes match the Rust-side benchmark
+# workloads so e2e validation can compare directly.
+REGISTRY = {
+    "matmul16": (matmul, [f32(16, 16), f32(16, 16)]),
+    "matmul24": (matmul, [f32(24, 24), f32(24, 24)]),
+    "matmul128": (matmul, [f32(128, 128), f32(128, 128)]),
+    "vecadd1000": (vecadd, [f32(1000), f32(1000)]),
+    "saxpy777": (saxpy, [f32(1), f32(777), f32(777)]),
+    "scale512": (scale, [f32(512), f32(1)]),
+    "transpose24": (transpose, [f32(24, 24)]),
+    "blocksum512": (block_sums, [f32(512)]),
+    "gemm_bias_relu16": (gemm_bias_relu, [f32(16, 16), f32(16, 16), f32(16)]),
+}

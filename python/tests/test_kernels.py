@@ -1,0 +1,124 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes with hypothesis. This is the build-time gate for the AOT artifacts
+the Rust runtime executes."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import elementwise, matmul, reduce as red, ref, transpose
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rnd(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def assert_close(a, b, tol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rnd(seed, m, k)
+    b = rnd(seed + 1, k, n)
+    assert_close(matmul.matmul(a, b), ref.matmul(a, b), tol=1e-4)
+
+
+@given(st.sampled_from([8, 16, 64, 128, 256]), st.integers(0, 2**16))
+def test_matmul_block_shapes(n, seed):
+    a = rnd(seed, n, n)
+    b = rnd(seed + 1, n, n)
+    for bm in (8, 16, 128):
+        assert_close(matmul.matmul(a, b, bm=bm, bn=bm), ref.matmul(a, b), tol=1e-4)
+
+
+@given(n=st.integers(1, 2048), seed=st.integers(0, 2**16))
+def test_vecadd(n, seed):
+    a = rnd(seed, n)
+    b = rnd(seed + 1, n)
+    assert_close(elementwise.vecadd(a, b), ref.vecadd(a, b))
+
+
+@given(n=st.integers(1, 2048), a=st.floats(-8, 8), seed=st.integers(0, 2**16))
+def test_saxpy(n, a, seed):
+    av = jnp.array([a], dtype=jnp.float32)
+    x = rnd(seed, n)
+    y = rnd(seed + 1, n)
+    assert_close(elementwise.saxpy(av, x, y), ref.saxpy(av, x, y), tol=1e-4)
+
+
+@given(n=st.integers(1, 1024), s=st.floats(-4, 4), seed=st.integers(0, 2**16))
+def test_scale(n, s, seed):
+    x = rnd(seed, n)
+    sv = jnp.array([s], dtype=jnp.float32)
+    assert_close(elementwise.scale(x, sv), ref.scale(x, sv))
+
+
+@given(m=st.integers(1, 96), n=st.integers(1, 96), seed=st.integers(0, 2**16))
+def test_transpose(m, n, seed):
+    x = rnd(seed, m, n)
+    assert_close(transpose.transpose(x), ref.transpose(x))
+
+
+@given(
+    blocks=st.integers(1, 32),
+    block=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_block_sums(blocks, block, seed):
+    x = rnd(seed, blocks * block)
+    assert_close(
+        red.block_sums(x, block=block), ref.block_sums(x, block=block), tol=1e-4
+    )
+    assert_close(
+        red.total_sum(x, block=block), ref.total_sum(x, block=block), tol=1e-3
+    )
+
+
+def test_model_registry_shapes():
+    from compile.model import REGISTRY
+
+    for name, (fn, specs) in REGISTRY.items():
+        out = jax.eval_shape(fn, *specs)
+        assert out.dtype == jnp.float32, name
+        # Executing with zeros must succeed in interpret mode.
+        args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+        val = fn(*args)
+        assert val.shape == out.shape, name
+
+
+def test_gemm_bias_relu_composition():
+    from compile.model import gemm_bias_relu
+
+    a = rnd(3, 16, 16)
+    b = rnd(4, 16, 16)
+    bias = rnd(5, 16)
+    got = gemm_bias_relu(a, b, bias)
+    want = jnp.maximum(jnp.dot(a, b) + bias[None, :], 0.0)
+    assert_close(got, want, tol=1e-4)
+    assert float(jnp.min(got)) >= 0.0
+
+
+def test_hlo_text_is_parseable_form():
+    """The interchange contract: HLO text (not serialized protos)."""
+    from compile.aot import to_hlo_text
+    from compile.model import REGISTRY
+
+    fn, specs = REGISTRY["matmul16"]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "HloModule" in text
+    assert "f32[16,16]" in text

@@ -1,0 +1,134 @@
+//! Module call graph and reverse-post-order traversal, used by the
+//! function-argument analysis (paper Algorithm 1: "build the call graph and
+//! run our function-level analysis in reverse post-order").
+
+use crate::ir::{FuncId, InstKind, Module};
+
+#[derive(Debug)]
+pub struct CallGraph {
+    /// callees[f] = functions called from f (deduped).
+    pub callees: Vec<Vec<FuncId>>,
+    /// callers[f] = functions calling f (deduped).
+    pub callers: Vec<Vec<FuncId>>,
+}
+
+impl CallGraph {
+    pub fn build(m: &Module) -> CallGraph {
+        let n = m.funcs.len();
+        let mut callees: Vec<Vec<FuncId>> = vec![vec![]; n];
+        let mut callers: Vec<Vec<FuncId>> = vec![vec![]; n];
+        for (fi, f) in m.funcs.iter().enumerate() {
+            for inst in f.insts.iter().filter(|i| !i.dead) {
+                if let InstKind::Call { callee, .. } = &inst.kind {
+                    let from = FuncId(fi as u32);
+                    if !callees[fi].contains(callee) {
+                        callees[fi].push(*callee);
+                    }
+                    if !callers[callee.idx()].contains(&from) {
+                        callers[callee.idx()].push(from);
+                    }
+                }
+            }
+        }
+        CallGraph { callees, callers }
+    }
+
+    /// All call sites in the module calling `target`:
+    /// (caller, inst index within caller).
+    pub fn call_sites(m: &Module, target: FuncId) -> Vec<(FuncId, crate::ir::InstId)> {
+        let mut out = vec![];
+        for (fi, f) in m.funcs.iter().enumerate() {
+            for (ii, inst) in f.insts.iter().enumerate() {
+                if inst.dead {
+                    continue;
+                }
+                if let InstKind::Call { callee, .. } = &inst.kind {
+                    if *callee == target {
+                        out.push((FuncId(fi as u32), crate::ir::InstId(ii as u32)));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reverse post-order from the given roots (kernels / external
+    /// functions): callers are visited before callees, so argument
+    /// uniformity flows top-down in one sweep.
+    pub fn rpo_from(&self, roots: &[FuncId]) -> Vec<FuncId> {
+        let n = self.callees.len();
+        let mut visited = vec![false; n];
+        let mut post: Vec<FuncId> = vec![];
+        for &r in roots {
+            if visited[r.idx()] {
+                continue;
+            }
+            let mut stack: Vec<(FuncId, usize)> = vec![(r, 0)];
+            visited[r.idx()] = true;
+            while let Some((f, i)) = stack.pop() {
+                let cs = &self.callees[f.idx()];
+                if i < cs.len() {
+                    stack.push((f, i + 1));
+                    let c = cs[i];
+                    if !visited[c.idx()] {
+                        visited[c.idx()] = true;
+                        stack.push((c, 0));
+                    }
+                } else {
+                    post.push(f);
+                }
+            }
+        }
+        post.reverse();
+        post
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Function, Linkage, Type, Val};
+
+    fn mk_module() -> Module {
+        // k (kernel) calls a; a calls b.
+        let mut m = Module::new("t");
+        let mut b_fn = Function::new("b", vec![], Type::I32);
+        {
+            let mut bb = Builder::new(&mut b_fn);
+            bb.ret(Some(Val::ci(1)));
+        }
+        let b_id = m.add_func(b_fn);
+        let mut a_fn = Function::new("a", vec![], Type::I32);
+        {
+            let mut bb = Builder::new(&mut a_fn);
+            let v = bb.call(b_id, vec![], Type::I32);
+            bb.ret(Some(v));
+        }
+        let a_id = m.add_func(a_fn);
+        let mut k_fn = Function::new("k", vec![], Type::Void);
+        k_fn.is_kernel = true;
+        k_fn.linkage = Linkage::External;
+        {
+            let mut bb = Builder::new(&mut k_fn);
+            let _ = bb.call(a_id, vec![], Type::I32);
+            bb.ret(None);
+        }
+        m.add_func(k_fn);
+        m
+    }
+
+    #[test]
+    fn builds_edges_and_rpo() {
+        let m = mk_module();
+        let cg = CallGraph::build(&m);
+        let k = m.find_func("k").unwrap();
+        let a = m.find_func("a").unwrap();
+        let b = m.find_func("b").unwrap();
+        assert_eq!(cg.callees[k.idx()], vec![a]);
+        assert_eq!(cg.callees[a.idx()], vec![b]);
+        assert_eq!(cg.callers[b.idx()], vec![a]);
+        let order = cg.rpo_from(&[k]);
+        assert_eq!(order, vec![k, a, b]);
+        assert_eq!(CallGraph::call_sites(&m, b).len(), 1);
+    }
+}

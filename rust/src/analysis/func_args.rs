@@ -1,0 +1,228 @@
+//! Function-argument uniformity analysis — paper Algorithm 1.
+//!
+//! Walks the call graph in reverse post-order, determining for every
+//! internal-linkage function whether each argument is uniform at *all* call
+//! sites (then the parameter is marked `uniform`) and whether the return
+//! value is uniform. Iterates to convergence because argument refinement
+//! can make more call-site actuals uniform, and return refinement can make
+//! caller values uniform.
+//!
+//! This is the "Uni-Func" ladder step of the evaluation (Fig. 7/8).
+
+use super::callgraph::CallGraph;
+use super::tti::TargetDivergenceInfo;
+use super::{uniformity, UniformityOptions};
+use crate::ir::{FuncId, InstKind, Linkage, Module, Val};
+
+/// Result: which (function, param) pairs were newly proven uniform.
+#[derive(Debug, Default)]
+pub struct FuncArgReport {
+    pub params_marked: Vec<(String, usize)>,
+    pub rets_marked: Vec<String>,
+    pub iterations: u32,
+}
+
+pub fn run(m: &mut Module, opts: &UniformityOptions, tti: &dyn TargetDivergenceInfo) -> FuncArgReport {
+    let mut report = FuncArgReport::default();
+    if !opts.uni_func {
+        return report;
+    }
+    let roots: Vec<FuncId> = (0..m.funcs.len() as u32)
+        .map(FuncId)
+        .filter(|f| m.funcs[f.idx()].is_kernel || m.funcs[f.idx()].linkage == Linkage::External)
+        .collect();
+    let cg = CallGraph::build(m);
+    let order = cg.rpo_from(&roots);
+    // Fixpoint over the whole SCC-free ordering (recursion falls out
+    // conservatively: a cycle just never refines).
+    for iter in 0..8 {
+        report.iterations = iter + 1;
+        let mut changed = false;
+        for &fid in &order {
+            // (1) Argument refinement: internal functions whose every call
+            // site passes a uniform actual.
+            if m.func(fid).linkage == Linkage::Internal && !m.func(fid).params.is_empty() {
+                let sites = CallGraph::call_sites(m, fid);
+                if !sites.is_empty() {
+                    let nparams = m.func(fid).params.len();
+                    let mut all_uniform = vec![true; nparams];
+                    for (caller, inst) in &sites {
+                        let u = uniformity::analyze(m, *caller, opts, tti);
+                        let cf = m.func(*caller);
+                        if let InstKind::Call { args, .. } = &cf.inst(*inst).kind {
+                            for (pi, a) in args.iter().enumerate() {
+                                if u.val_div(*a) {
+                                    all_uniform[pi] = false;
+                                }
+                            }
+                        }
+                    }
+                    for (pi, ok) in all_uniform.iter().enumerate() {
+                        let p = &mut m.func_mut(fid).params[pi];
+                        if *ok && !p.uniform {
+                            p.uniform = true;
+                            changed = true;
+                            report
+                                .params_marked
+                                .push((m.func(fid).name.clone(), pi));
+                        }
+                    }
+                }
+            }
+            // (2) Return refinement: all returned values uniform under the
+            // current assumptions.
+            if m.func(fid).ret != crate::ir::Type::Void && !m.func(fid).ret_uniform {
+                let u = uniformity::analyze(m, fid, opts, tti);
+                let f = m.func(fid);
+                let all_rets_uniform = f
+                    .insts
+                    .iter()
+                    .filter(|i| !i.dead)
+                    .filter_map(|i| match &i.kind {
+                        InstKind::Ret { val: Some(v) } => Some(*v),
+                        _ => None,
+                    })
+                    .all(|v| !u.val_div(v));
+                let any_ret = f
+                    .insts
+                    .iter()
+                    .filter(|i| !i.dead)
+                    .any(|i| matches!(i.kind, InstKind::Ret { val: Some(_) }));
+                if any_ret && all_rets_uniform {
+                    m.func_mut(fid).ret_uniform = true;
+                    changed = true;
+                    report.rets_marked.push(m.func(fid).name.clone());
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    report
+}
+
+/// Convenience for tests: the set of values a caller passes at a call.
+pub fn call_actuals(m: &Module, caller: FuncId, callee: FuncId) -> Vec<Vec<Val>> {
+    let mut out = vec![];
+    for inst in m.func(caller).insts.iter().filter(|i| !i.dead) {
+        if let InstKind::Call { callee: c, args } = &inst.kind {
+            if *c == callee {
+                out.push(args.clone());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tti::VortexTti;
+    use crate::ir::*;
+
+    /// helper(n) loops to n; kernel calls helper(len) where len is a
+    /// uniform kernel param. Algorithm 1 must mark helper's param uniform
+    /// and its return uniform.
+    fn build() -> Module {
+        let mut m = Module::new("t");
+        let mut h = Function::new(
+            "helper",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        h.linkage = Linkage::Internal;
+        let entry = h.entry;
+        let hh = h.add_block("h");
+        let body = h.add_block("body");
+        let exit = h.add_block("exit");
+        {
+            let mut b = Builder::at(&mut h, entry);
+            b.br(hh);
+            b.set_block(hh);
+            let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+            let c = b.icmp(ICmp::Slt, i, Val::Arg(0));
+            b.cond_br(c, body, exit);
+            b.set_block(body);
+            let i2 = b.add(i, Val::ci(1));
+            b.br(hh);
+            b.set_block(exit);
+            b.ret(Some(i));
+            if let Val::Inst(ip) = i {
+                if let InstKind::Phi { incs } = &mut b.f.inst_mut(ip).kind {
+                    incs.push((body, i2));
+                }
+            }
+        }
+        let h_id = m.add_func(h);
+        let mut k = Function::new(
+            "k",
+            vec![Param {
+                name: "len".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        k.is_kernel = true;
+        k.linkage = Linkage::External;
+        {
+            let mut b = Builder::new(&mut k);
+            let _ = b.call(h_id, vec![Val::Arg(0)], Type::I32);
+            b.ret(None);
+        }
+        m.add_func(k);
+        m
+    }
+
+    #[test]
+    fn marks_uniform_args_and_ret() {
+        let mut m = build();
+        let opts = UniformityOptions::all();
+        let report = run(&mut m, &opts, &VortexTti);
+        let h = m.find_func("helper").unwrap();
+        assert!(m.func(h).params[0].uniform, "param should be inferred uniform");
+        assert!(m.func(h).ret_uniform, "ret should be inferred uniform");
+        assert!(!report.params_marked.is_empty());
+        assert!(!report.rets_marked.is_empty());
+    }
+
+    #[test]
+    fn divergent_site_blocks_refinement() {
+        let mut m = build();
+        // Add a second caller passing a divergent value.
+        let h = m.find_func("helper").unwrap();
+        let mut k2 = Function::new("k2", vec![], Type::Void);
+        k2.is_kernel = true;
+        k2.linkage = Linkage::External;
+        {
+            let mut b = Builder::new(&mut k2);
+            let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            let _ = b.call(h, vec![lane], Type::I32);
+            b.ret(None);
+        }
+        m.add_func(k2);
+        let opts = UniformityOptions::all();
+        run(&mut m, &opts, &VortexTti);
+        assert!(!m.func(h).params[0].uniform);
+        assert!(!m.func(h).ret_uniform);
+    }
+
+    #[test]
+    fn disabled_without_uni_func() {
+        let mut m = build();
+        let opts = UniformityOptions {
+            uni_hw: true,
+            uni_ann: true,
+            uni_func: false,
+        };
+        let report = run(&mut m, &opts, &VortexTti);
+        assert_eq!(report.iterations, 0);
+        let h = m.find_func("helper").unwrap();
+        assert!(!m.func(h).params[0].uniform);
+    }
+}

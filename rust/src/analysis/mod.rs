@@ -1,0 +1,39 @@
+//! Centralized SIMT-aware analyses (paper §4.3.1).
+//!
+//! The middle-end owns all divergence reasoning so it can be reused across
+//! Vortex variants and other open GPUs — the paper's core design decision.
+//! The entry point is [`uniformity::analyze`], seeded through the
+//! [`tti::TargetDivergenceInfo`] trait (the analogue of LLVM's TTI
+//! `isAlwaysUniform` / `isSourceOfDivergence` hooks) and refined by the
+//! annotation analysis and the call-graph function-argument analysis
+//! (Algorithm 1, [`func_args`]).
+
+pub mod callgraph;
+pub mod func_args;
+pub mod tti;
+pub mod uniformity;
+
+/// Which analysis refinements are enabled — the evaluation ladder of
+/// paper §5.2 (Figures 7/8).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UniformityOptions {
+    /// Uni-HW: hardware-structure always-uniform values (machine CSRs,
+    /// custom CSRs such as core_id/warp_id, loads from the uniform
+    /// argument block in constant memory).
+    pub uni_hw: bool,
+    /// Uni-Ann: honour `uniform` qualifiers, `vortex.uniform` metadata and
+    /// the intrinsic/stack-slot annotation reasoning.
+    pub uni_ann: bool,
+    /// Uni-Func: Algorithm-1 interprocedural argument/return refinement.
+    pub uni_func: bool,
+}
+
+impl UniformityOptions {
+    pub fn all() -> UniformityOptions {
+        UniformityOptions {
+            uni_hw: true,
+            uni_ann: true,
+            uni_func: true,
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Target Transformation Info for divergence (paper §4.3.1).
+//!
+//! LLVM's uniformity analysis is seeded through the TTI hooks
+//! `isSourceOfDivergence` and `isAlwaysUniform`; RISC-V, being CPU-born,
+//! implements neither. VOLT extends the RISC-V TTI with the *divergence
+//! tracker*: lane identifiers and atomic results are divergence sources,
+//! machine-level and custom CSRs are always uniform. We reproduce that
+//! interface as a trait so alternative open-GPU targets (paper §6.1:
+//! Ventus-style vector RISC-V, e-GPU, …) can plug in their own seeds.
+
+use super::UniformityOptions;
+use crate::ir::{Csr, Function, InstData, InstKind, Intr, WorkItem};
+
+pub trait TargetDivergenceInfo {
+    /// The value produced by `inst` differs across lanes regardless of its
+    /// operands (a divergence *seed*).
+    fn is_source_of_divergence(
+        &self,
+        f: &Function,
+        inst: &InstData,
+        opts: &UniformityOptions,
+    ) -> bool;
+
+    /// The value produced by `inst` is identical across lanes regardless of
+    /// its operands (an always-uniform seed that *overrides* operand
+    /// divergence, e.g. warp votes).
+    fn is_always_uniform(&self, f: &Function, inst: &InstData, opts: &UniformityOptions) -> bool;
+}
+
+/// The Vortex divergence tracker.
+pub struct VortexTti;
+
+impl TargetDivergenceInfo for VortexTti {
+    fn is_source_of_divergence(
+        &self,
+        _f: &Function,
+        inst: &InstData,
+        opts: &UniformityOptions,
+    ) -> bool {
+        match &inst.kind {
+            InstKind::Intr { intr, .. } => match intr {
+                // The lane id is the canonical divergence source.
+                Intr::Csr(Csr::LaneId) => true,
+                // Work-item ids embed the lane id.
+                Intr::WorkItem(WorkItem::GlobalId | WorkItem::LocalId) => true,
+                // Atomic results differ per lane by definition (each lane
+                // observes a different order) — divergence tracker rule 2.
+                Intr::Atomic(_) | Intr::AtomicCas => true,
+                // Shuffle reads another lane's value — per-lane result.
+                Intr::Shfl => true,
+                // Group-level queries are warp-uniform only when the
+                // hardware mapping guarantees a warp never spans groups —
+                // that is a property of the Vortex dispatcher, modeled by
+                // the Uni-HW ladder step.
+                Intr::WorkItem(_) => !opts.uni_hw,
+                // CSRs other than LaneId are handled by is_always_uniform;
+                // without Uni-HW they are conservatively divergent.
+                Intr::Csr(_) => !opts.uni_hw,
+                _ => false,
+            },
+            // Per-thread stack addresses differ per lane on Vortex
+            // (thread-indexed private memory).
+            InstKind::Alloca { .. } => true,
+            _ => false,
+        }
+    }
+
+    fn is_always_uniform(&self, _f: &Function, inst: &InstData, opts: &UniformityOptions) -> bool {
+        match &inst.kind {
+            InstKind::Intr { intr, .. } => match intr {
+                // Warp votes/ballots broadcast one value to all lanes.
+                Intr::VoteAll | Intr::VoteAny | Intr::Ballot | Intr::Mask => true,
+                // Machine-level CSRs (num_threads/num_warps/…) and custom
+                // user-level CSRs (core_id/warp_id) are uniform across the
+                // warp — divergence-tracker always-uniform rule, gated on
+                // the Uni-HW ladder step.
+                Intr::Csr(c) => opts.uni_hw && !matches!(c, Csr::LaneId),
+                Intr::WorkItem(w) => {
+                    opts.uni_hw
+                        && matches!(
+                            w,
+                            WorkItem::GroupId
+                                | WorkItem::LocalSize
+                                | WorkItem::GlobalSize
+                                | WorkItem::NumGroups
+                        )
+                }
+                _ => false,
+            },
+            _ => false,
+        }
+    }
+}
+
+/// A pessimistic TTI with no Vortex knowledge — what stock LLVM RISC-V
+/// provides (paper: "the llvm-riscv back-end does not consider branch
+/// divergence"). Everything non-constant is treated as divergent. Used to
+/// quantify what the divergence tracker buys.
+pub struct NullTti;
+
+impl TargetDivergenceInfo for NullTti {
+    fn is_source_of_divergence(
+        &self,
+        _f: &Function,
+        _inst: &InstData,
+        _opts: &UniformityOptions,
+    ) -> bool {
+        true
+    }
+    fn is_always_uniform(&self, _f: &Function, _inst: &InstData, _opts: &UniformityOptions) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Type, Val};
+
+    #[test]
+    fn lane_id_divergent_csr_uniform_under_hw() {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let (lane, wid);
+        {
+            let mut b = Builder::new(&mut f);
+            lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            wid = b.intr(Intr::Csr(Csr::WarpId), vec![]);
+            b.ret(None);
+        }
+        let tti = VortexTti;
+        let base = UniformityOptions::default();
+        let hw = UniformityOptions {
+            uni_hw: true,
+            ..Default::default()
+        };
+        let (lane_i, wid_i) = match (lane, wid) {
+            (Val::Inst(a), Val::Inst(b)) => (a, b),
+            _ => panic!(),
+        };
+        assert!(tti.is_source_of_divergence(&f, f.inst(lane_i), &base));
+        assert!(tti.is_source_of_divergence(&f, f.inst(lane_i), &hw));
+        assert!(!tti.is_always_uniform(&f, f.inst(lane_i), &hw));
+        // warp_id: divergent at base, uniform under Uni-HW.
+        assert!(tti.is_source_of_divergence(&f, f.inst(wid_i), &base));
+        assert!(tti.is_always_uniform(&f, f.inst(wid_i), &hw));
+    }
+
+    #[test]
+    fn votes_always_uniform() {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let v;
+        {
+            let mut b = Builder::new(&mut f);
+            let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            let c = b.icmp(crate::ir::ICmp::Eq, lane, Val::ci(0));
+            v = b.intr(Intr::VoteAny, vec![c]);
+            b.ret(None);
+        }
+        let tti = VortexTti;
+        if let Val::Inst(vi) = v {
+            assert!(tti.is_always_uniform(&f, f.inst(vi), &UniformityOptions::default()));
+        }
+    }
+}

@@ -1,0 +1,634 @@
+//! Uniformity (divergence) analysis — paper §4.3.1.
+//!
+//! Mirrors LLVM's UniformityAnalysis structure: seed values from the
+//! target's divergence tracker (TTI), then propagate along def-use chains
+//! and control-dependence (sync dependence) until fixpoint. Two
+//! SIMT-specific effects are modeled:
+//!
+//! * **join-point divergence** — phis reachable between a divergent branch
+//!   and its IPDOM merge lane-varying control decisions;
+//! * **temporal divergence** — values defined inside a loop with a
+//!   divergent exiting branch are divergent at any use outside the loop
+//!   (lanes leave at different iterations).
+//!
+//! The annotation analysis (paper: metadata `vortex.uniform`, `uniform`
+//! qualifiers, stack-slot reasoning) is folded in via `uniform_ann` flags,
+//! `Param::uniform`, and the alloca store tracking below.
+
+use super::tti::TargetDivergenceInfo;
+use super::UniformityOptions;
+use crate::ir::cfg::reachable_until;
+use crate::ir::dom::PostDomTree;
+use crate::ir::loops::LoopInfo;
+use crate::ir::*;
+use std::collections::HashSet;
+
+#[derive(Debug)]
+pub struct Uniformity {
+    /// Per-instruction divergence (indexed by InstId).
+    pub inst_div: Vec<bool>,
+    /// Per-argument divergence.
+    pub arg_div: Vec<bool>,
+    /// Blocks whose conditional terminator has a divergent condition.
+    pub div_branch_blocks: HashSet<BlockId>,
+}
+
+impl Uniformity {
+    pub fn val_div(&self, v: Val) -> bool {
+        match v {
+            Val::Inst(i) => self.inst_div[i.idx()],
+            Val::Arg(i) => self.arg_div[i as usize],
+            Val::I(..) | Val::F(..) | Val::G(..) => false,
+        }
+    }
+
+    /// Is the terminator of block `b` a uniform branch? (Algorithm 2,
+    /// IS_UNIFORM)
+    pub fn branch_uniform(&self, b: BlockId) -> bool {
+        !self.div_branch_blocks.contains(&b)
+    }
+
+    pub fn num_divergent(&self) -> usize {
+        self.inst_div.iter().filter(|&&d| d).count()
+    }
+}
+
+/// Trace a pointer value to its root: an alloca, a global, or unknown.
+fn ptr_root(f: &Function, mut v: Val) -> PtrRoot {
+    loop {
+        match v {
+            Val::Inst(i) => match &f.inst(i).kind {
+                InstKind::Gep { base, .. } => v = *base,
+                InstKind::Alloca { .. } => return PtrRoot::Alloca(i),
+                _ => return PtrRoot::Unknown,
+            },
+            Val::G(g) => return PtrRoot::Global(g),
+            Val::Arg(a) => return PtrRoot::Arg(a),
+            _ => return PtrRoot::Unknown,
+        }
+    }
+}
+
+#[derive(PartialEq, Eq, Clone, Copy, Debug)]
+enum PtrRoot {
+    Alloca(InstId),
+    Global(GlobalId),
+    Arg(u32),
+    Unknown,
+}
+
+pub fn analyze(
+    m: &Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+) -> Uniformity {
+    let f = m.func(fid);
+    let n = f.insts.len();
+    let pdom = PostDomTree::build(f);
+    let li = LoopInfo::build(f);
+    let mut div = vec![false; n];
+    // `uniform` parameter markings come from user annotations or the
+    // Algorithm-1 refinement — both are honoured only from the Uni-Ann
+    // ladder step up (paper §5.2).
+    let arg_div: Vec<bool> = f
+        .params
+        .iter()
+        .map(|p| !(opts.uni_ann && p.uniform))
+        .collect();
+    // Values forced divergent by control dependence (phis at joins,
+    // loop-escaping values).
+    let mut forced: HashSet<InstId> = HashSet::new();
+    let mut processed_branches: HashSet<BlockId> = HashSet::new();
+
+    // Alloca uniformity: an alloca slot is "uniform storage" if every store
+    // through it stores a uniform value at a uniform index and its address
+    // never escapes. Iterated with the main fixpoint. (paper: annotation
+    // analysis, stack-variable reasoning — gated on Uni-Ann.)
+    let allocas: Vec<InstId> = (0..n as u32)
+        .map(InstId)
+        .filter(|&i| !f.insts[i.idx()].dead && matches!(f.inst(i).kind, InstKind::Alloca { .. }))
+        .collect();
+    let mut alloca_uniform: std::collections::HashMap<InstId, bool> = allocas
+        .iter()
+        .map(|&a| (a, opts.uni_ann && !alloca_escapes(f, a)))
+        .collect();
+
+    let rpo = f.rpo();
+    let val_div = |div: &Vec<bool>, v: Val| -> bool {
+        match v {
+            Val::Inst(i) => div[i.idx()],
+            Val::Arg(i) => arg_div[i as usize],
+            _ => false,
+        }
+    };
+
+    loop {
+        let mut changed = false;
+        for &b in &rpo {
+            for &id in &f.blocks[b.idx()].insts {
+                if div[id.idx()] {
+                    continue;
+                }
+                let inst = f.inst(id);
+                // Annotation override (Uni-Ann): a user-asserted uniform
+                // value stops propagation here.
+                if opts.uni_ann && inst.uniform_ann {
+                    continue;
+                }
+                if tti.is_always_uniform(f, inst, opts) {
+                    continue;
+                }
+                let mut d = tti.is_source_of_divergence(f, inst, opts) || forced.contains(&id);
+                if !d {
+                    d = match &inst.kind {
+                        InstKind::Load { ptr } => {
+                            // Private (stack) slots: the per-lane base
+                            // address is always divergent, but the *slot
+                            // contents* are uniform when every store is a
+                            // uniform value at a uniform index under
+                            // uniform control (annotation analysis).
+                            if let PtrRoot::Alloca(a) = ptr_root(f, *ptr) {
+                                !(*alloca_uniform.get(&a).unwrap_or(&false)
+                                    && gep_indices_uniform(f, *ptr, &|v| val_div(&div, v)))
+                            } else if val_div(&div, *ptr) {
+                                true
+                            } else {
+                                !load_is_uniform(m, f, *ptr, opts)
+                            }
+                        }
+                        InstKind::Call { callee, args } => {
+                            let cf = m.func(*callee);
+                            // Return uniform only if inferred/marked AND the
+                            // per-site uniform params actually receive
+                            // uniform values here.
+                            if !cf.ret_uniform {
+                                true
+                            } else {
+                                cf.params
+                                    .iter()
+                                    .zip(args.iter())
+                                    .any(|(p, a)| p.uniform && val_div(&div, *a))
+                            }
+                        }
+                        InstKind::SplitBr { .. } => false, // token is warp-level
+                        k => k.operands().iter().any(|&v| val_div(&div, v)),
+                    };
+                }
+                if d {
+                    div[id.idx()] = true;
+                    changed = true;
+                }
+            }
+        }
+        // Re-evaluate alloca uniform storage: every store must write a
+        // uniform value at a uniform index, from a block whose control
+        // dependences are all uniform (otherwise some lanes skip the
+        // store and slot contents diverge).
+        let cdg_deps = crate::ir::cdg::Cdg::build_with(f, &pdom);
+        for &a in &allocas {
+            if !alloca_uniform[&a] {
+                continue;
+            }
+            let mut ok = true;
+            for inst in f.insts.iter() {
+                if inst.dead {
+                    continue;
+                }
+                if let InstKind::Store { ptr, val } = &inst.kind {
+                    if ptr_root(f, *ptr) == PtrRoot::Alloca(a) {
+                        let store_ctl_div = cdg_deps.deps[inst.block.idx()].iter().any(|dep| {
+                            let t = f.term(*dep);
+                            match &f.inst(t).kind {
+                                InstKind::CondBr { cond, .. }
+                                | InstKind::SplitBr { cond, .. }
+                                | InstKind::PredBr { cond, .. } => val_div(&div, *cond),
+                                _ => false,
+                            }
+                        });
+                        if val_div(&div, *val)
+                            || !gep_indices_uniform(f, *ptr, &|v| val_div(&div, v))
+                            || store_ctl_div
+                        {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !ok {
+                alloca_uniform.insert(a, false);
+                changed = true;
+            }
+        }
+        // Control-dependence (sync dependence) effects of newly divergent
+        // branches.
+        for &b in &rpo {
+            if processed_branches.contains(&b) {
+                continue;
+            }
+            let term = f.term(b);
+            let cond = match &f.inst(term).kind {
+                InstKind::CondBr { cond, .. }
+                | InstKind::SplitBr { cond, .. }
+                | InstKind::PredBr { cond, .. } => Some(*cond),
+                _ => None,
+            };
+            let Some(cond) = cond else { continue };
+            if !val_div(&div, cond) && !div[term.idx()] {
+                continue;
+            }
+            processed_branches.insert(b);
+            changed = true;
+            let succs = f.succs(b);
+            let ip = pdom.ipdom_of(b);
+            // Sync dependence: lanes that took different arms merge at the
+            // branch's IPDOM and at any block both arms reach — phis there
+            // observe lane-dependent control decisions. Phis strictly
+            // inside a single arm (e.g. a loop header within the arm) stay
+            // uniform: every active lane reached them the same way.
+            let stop = ip.unwrap_or(BlockId(u32::MAX));
+            let r1 = reachable_until(f, &succs[..1.min(succs.len())], stop);
+            let r2 = if succs.len() > 1 {
+                reachable_until(f, &succs[1..], stop)
+            } else {
+                Default::default()
+            };
+            let mut mark_blocks: Vec<BlockId> =
+                r1.intersection(&r2).copied().collect();
+            if let Some(ip) = ip {
+                mark_blocks.push(ip);
+            }
+            for x in mark_blocks {
+                for &id in &f.blocks[x.idx()].insts {
+                    if matches!(f.inst(id).kind, InstKind::Phi { .. }) {
+                        forced.insert(id);
+                    } else {
+                        break;
+                    }
+                }
+            }
+            // Temporal divergence: divergent branch that can leave its
+            // loop makes loop-defined values divergent outside the loop.
+            if let Some(l) = li.innermost(b) {
+                let leaves_loop = succs.iter().any(|s| !l.blocks.contains(s))
+                    || ip.map(|ip| !l.blocks.contains(&ip)).unwrap_or(true);
+                if leaves_loop {
+                    for (idx, inst) in f.insts.iter().enumerate() {
+                        if inst.dead || inst.ty == Type::Void {
+                            continue;
+                        }
+                        if !l.blocks.contains(&inst.block) {
+                            continue;
+                        }
+                        let id = InstId(idx as u32);
+                        // any use outside the loop?
+                        let escapes = f.insts.iter().enumerate().any(|(uidx, u)| {
+                            !u.dead
+                                && !l.blocks.contains(&u.block)
+                                && u.kind.operands().contains(&Val::Inst(id))
+                                && uidx != idx
+                        });
+                        if escapes {
+                            forced.insert(id);
+                        }
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Divergent-branch block set.
+    let mut div_branch_blocks = HashSet::new();
+    for &b in &rpo {
+        let term = f.term(b);
+        let divb = match &f.inst(term).kind {
+            InstKind::CondBr { cond, .. }
+            | InstKind::SplitBr { cond, .. }
+            | InstKind::PredBr { cond, .. } => val_div(&div, *cond),
+            _ => false,
+        };
+        if divb {
+            div_branch_blocks.insert(b);
+        }
+    }
+    Uniformity {
+        inst_div: div,
+        arg_div,
+        div_branch_blocks,
+    }
+}
+
+/// Does the alloca's address escape (passed to a call / stored / returned)?
+fn alloca_escapes(f: &Function, a: InstId) -> bool {
+    for inst in f.insts.iter().filter(|i| !i.dead) {
+        match &inst.kind {
+            InstKind::Load { .. } => {}
+            InstKind::Store { ptr, val } => {
+                // storing the pointer itself somewhere = escape
+                if ptr_root_is(f, *val, a) && !ptr_root_is(f, *ptr, a) {
+                    return true;
+                }
+            }
+            InstKind::Gep { .. } => {}
+            k => {
+                if k.operands().iter().any(|&v| ptr_root_is(f, v, a)) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn ptr_root_is(f: &Function, v: Val, a: InstId) -> bool {
+    ptr_root(f, v) == PtrRoot::Alloca(a)
+}
+
+/// Are the GEP indices along the pointer chain uniform?
+fn gep_indices_uniform(f: &Function, mut v: Val, val_div: &dyn Fn(Val) -> bool) -> bool {
+    loop {
+        match v {
+            Val::Inst(i) => match &f.inst(i).kind {
+                InstKind::Gep { base, index, .. } => {
+                    if val_div(*index) {
+                        return false;
+                    }
+                    v = *base;
+                }
+                _ => return true,
+            },
+            _ => return true,
+        }
+    }
+}
+
+/// Is a load through `ptr` (already known to have a uniform address)
+/// guaranteed to produce a uniform value?
+fn load_is_uniform(m: &Module, f: &Function, ptr: Val, opts: &UniformityOptions) -> bool {
+    match ptr_root(f, ptr) {
+        PtrRoot::Alloca(_) => unreachable!("handled by caller"),
+        PtrRoot::Global(g) => {
+            let gl = &m.globals[g.idx()];
+            if gl.space == AddrSpace::Const {
+                // The kernel argument block is uniform by hardware
+                // construction (Uni-HW); other constant buffers are covered
+                // by the annotation analysis (Uni-Ann).
+                if gl.name == "__args" {
+                    opts.uni_hw
+                } else {
+                    opts.uni_ann
+                }
+            } else {
+                false
+            }
+        }
+        // Loads through pointer arguments / unknown roots may race with
+        // other lanes' stores: conservatively divergent.
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tti::VortexTti;
+    use crate::ir::{Builder, Param};
+
+    fn opts_all() -> UniformityOptions {
+        UniformityOptions::all()
+    }
+
+    /// gid-dependent branch is divergent; uniform-arg loop is uniform.
+    #[test]
+    fn divergent_gid_branch() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let entry = f.entry;
+        let mut b = Builder::new(&mut f);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        let c = b.icmp(ICmp::Slt, gid, Val::Arg(0));
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        b.br(e);
+        b.set_block(e);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(u.val_div(gid));
+        assert!(u.val_div(c));
+        assert!(u.div_branch_blocks.contains(&entry));
+    }
+
+    /// Loop on a uniform bound: branch uniform, induction phi uniform.
+    #[test]
+    fn uniform_loop() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i, Val::Arg(0));
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let i2 = b.add(i, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        b.ret(None);
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+        }
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(!u.val_div(i));
+        assert!(!u.val_div(c));
+        assert!(u.branch_uniform(h));
+        // Same loop with a non-uniform bound is divergent.
+        let mut m2 = m.clone();
+        m2.funcs[0].params[0].uniform = false;
+        let u2 = analyze(&m2, FuncId(0), &opts_all(), &VortexTti);
+        assert!(u2.val_div(c));
+        assert!(!u2.branch_uniform(h));
+    }
+
+    /// Phi at the join of a divergent branch is divergent even with
+    /// uniform incomings (sync dependence).
+    #[test]
+    fn join_phi_divergent() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let j = f.add_block("j");
+        let entry = f.entry;
+        let mut b = Builder::at(&mut f, entry);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let c = b.icmp(ICmp::Eq, lane, Val::ci(0));
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        b.br(j);
+        b.set_block(e);
+        b.br(j);
+        b.set_block(j);
+        let p = b.phi(Type::I32, vec![(t, Val::ci(1)), (e, Val::ci(2))]);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(u.val_div(p));
+    }
+
+    /// Temporal divergence: value from a loop with divergent exit is
+    /// divergent outside the loop.
+    #[test]
+    fn loop_escape_divergence() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::I32);
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i, lane); // divergent bound
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let i2 = b.add(i, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        b.ret(Some(i2)); // i2 escapes the loop
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+        }
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(u.val_div(i2));
+    }
+
+    /// Vote results are uniform; branch on a vote is uniform.
+    #[test]
+    fn vote_uniform_branch() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let entry = f.entry;
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::at(&mut f, entry);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let c = b.icmp(ICmp::Eq, lane, Val::ci(0));
+        let v = b.intr(Intr::VoteAny, vec![c]);
+        b.cond_br(v, t, e);
+        b.set_block(t);
+        b.br(e);
+        b.set_block(e);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(!u.val_div(v));
+        assert!(u.branch_uniform(entry));
+    }
+
+    /// Annotation override: a `vortex.uniform`-annotated load is uniform
+    /// under Uni-Ann, divergent without it.
+    #[test]
+    fn annotation_override() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "p".into(),
+                ty: Type::Ptr(AddrSpace::Global),
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        let l;
+        {
+            let mut b = Builder::new(&mut f);
+            l = b.load(Val::Arg(0), Type::I32);
+            b.ret(None);
+        }
+        if let Val::Inst(li) = l {
+            f.inst_mut(li).uniform_ann = true;
+        }
+        let fid = m.add_func(f);
+        let with_ann = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(!with_ann.val_div(l));
+        let no_ann = analyze(
+            &m,
+            fid,
+            &UniformityOptions {
+                uni_hw: true,
+                uni_ann: false,
+                uni_func: false,
+            },
+            &VortexTti,
+        );
+        assert!(no_ann.val_div(l));
+    }
+
+    /// Loads from the kernel argument block are uniform under Uni-HW only.
+    #[test]
+    fn arg_block_loads() {
+        let mut m = Module::new("t");
+        let g = m.add_global(Global {
+            name: "__args".into(),
+            space: AddrSpace::Const,
+            size: 16,
+            align: 4,
+            init: None,
+        });
+        let mut f = Function::new("k", vec![], Type::Void);
+        let l;
+        {
+            let mut b = Builder::new(&mut f);
+            l = b.load(Val::G(g), Type::I32);
+            b.ret(None);
+        }
+        let fid = m.add_func(f);
+        let hw = analyze(
+            &m,
+            fid,
+            &UniformityOptions {
+                uni_hw: true,
+                ..Default::default()
+            },
+            &VortexTti,
+        );
+        assert!(!hw.val_div(l));
+        let base = analyze(&m, fid, &UniformityOptions::default(), &VortexTti);
+        assert!(base.val_div(l));
+    }
+}

@@ -1,0 +1,544 @@
+//! Final code generation: memory layout, crt0 synthesis, label resolution
+//! and instruction encoding into a [`ProgramImage`] the simulator loads.
+//!
+//! PCs are instruction indices. crt0 (per Vortex's startup contract,
+//! §2.4): each core's warp 0 starts with one active lane, spawns the
+//! remaining warps (`vx_wspawn`), then every warp activates all lanes
+//! (`vx_tmc`), computes its per-thread stack pointer and calls the kernel
+//! dispatcher; on return the warp parks itself with `vx_tmc x0`.
+
+use super::isa::{disasm, MachInst, Op};
+use super::mir::{MFunction, MReg, NONE};
+use super::{isel, mir_opt, regalloc, safety_net};
+use crate::ir::{AddrSpace, FuncId, GlobalId, Module};
+use std::collections::HashMap;
+
+/// Memory map (see DESIGN.md).
+pub const DATA_BASE: u32 = 0x0001_0000;
+pub const LOCAL_BASE: u32 = 0x1000_0000;
+pub const STACK_BASE: u32 = 0x2000_0000;
+pub const STACK_SIZE: u32 = 0x1000;
+pub const HEAP_BASE: u32 = 0x4000_0000;
+
+#[derive(Clone, Debug)]
+pub struct ProgramImage {
+    /// Decoded instruction stream (index == PC).
+    pub code: Vec<MachInst>,
+    /// Encoded form (round-trips with `code`).
+    pub words: Vec<u64>,
+    /// Initialized data segments (address, bytes).
+    pub data: Vec<(u32, Vec<u8>)>,
+    /// First free address after static data.
+    pub data_end: u32,
+    /// Global symbol table (name → address) — drives
+    /// `memcpy_to_symbol` (Case Study 2).
+    pub global_addr: HashMap<String, u32>,
+    /// Address of the kernel argument block.
+    pub args_addr: u32,
+    /// Per-core local memory statically used.
+    pub local_mem_size: u32,
+    /// Kernel (dispatcher) this image was linked for.
+    pub kernel: String,
+    /// Function entry points (diagnostics).
+    pub func_entries: HashMap<String, u32>,
+}
+
+impl ProgramImage {
+    pub fn disassemble(&self) -> String {
+        let mut s = String::new();
+        let mut entries: Vec<(&String, &u32)> = self.func_entries.iter().collect();
+        entries.sort_by_key(|(_, &pc)| pc);
+        for (idx, inst) in self.code.iter().enumerate() {
+            if let Some((name, _)) = entries.iter().find(|(_, &pc)| pc == idx as u32) {
+                s.push_str(&format!("\n{name}:\n"));
+            }
+            s.push_str(&format!("{idx:5}: {}\n", disasm(inst)));
+        }
+        s
+    }
+}
+
+/// How CUDA/OpenCL shared (`local`) memory is mapped (paper §5.4 /
+/// Fig. 10): onto the per-core scratchpad, or emulated in global memory
+/// (the CuPBoP-style fallback) with one bank per core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SharedMemMapping {
+    Local,
+    Global,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BackendOptions {
+    pub zicond: bool,
+    /// Run the fallthrough layout pass (and its arm-swapping).
+    pub opt_layout: bool,
+    /// Run the MIR safety net (disable only to demonstrate Fig. 5).
+    pub safety_net: bool,
+    pub smem: SharedMemMapping,
+}
+
+impl Default for BackendOptions {
+    fn default() -> Self {
+        BackendOptions {
+            zicond: true,
+            opt_layout: true,
+            safety_net: true,
+            smem: SharedMemMapping::Local,
+        }
+    }
+}
+
+/// Maximum cores a global-memory shared-mem bank set supports.
+pub const SMEM_MAX_CORES: u32 = 16;
+
+/// Global layout result handed to instruction selection.
+#[derive(Clone, Debug, Default)]
+pub struct LayoutInfo {
+    pub addr: HashMap<GlobalId, u32>,
+    /// Local-space globals that live in global memory with one bank per
+    /// core: address = base + core_id * stride.
+    pub core_banked: std::collections::HashSet<GlobalId>,
+    pub bank_stride: u32,
+}
+
+/// Lay out module globals: Const/Global into the data segment, Local into
+/// the per-core local segment (or, under `SharedMemMapping::Global`, into
+/// per-core banks in the data segment).
+pub fn layout_globals(
+    m: &Module,
+    smem: SharedMemMapping,
+) -> (LayoutInfo, Vec<(u32, Vec<u8>)>, u32, u32) {
+    let mut info = LayoutInfo::default();
+    let mut data = vec![];
+    let mut daddr = DATA_BASE;
+    let mut laddr = LOCAL_BASE;
+    // First pass: non-local globals.
+    for (i, g) in m.globals.iter().enumerate() {
+        let gid = GlobalId(i as u32);
+        if g.space != AddrSpace::Local {
+            info.addr.insert(gid, daddr);
+            if let Some(init) = &g.init {
+                data.push((daddr, init.clone()));
+            }
+            daddr += (g.size + 3) & !3;
+        }
+    }
+    // Second pass: local-space globals.
+    match smem {
+        SharedMemMapping::Local => {
+            for (i, g) in m.globals.iter().enumerate() {
+                let gid = GlobalId(i as u32);
+                if g.space == AddrSpace::Local {
+                    info.addr.insert(gid, laddr);
+                    laddr += (g.size + 3) & !3;
+                }
+            }
+        }
+        SharedMemMapping::Global => {
+            // Per-core banks carved from the data segment.
+            let total: u32 = m
+                .globals
+                .iter()
+                .filter(|g| g.space == AddrSpace::Local)
+                .map(|g| (g.size + 3) & !3)
+                .sum();
+            let stride = (total + 63) & !63;
+            info.bank_stride = stride;
+            let bank_base = (daddr + 63) & !63;
+            let mut off = 0;
+            for (i, g) in m.globals.iter().enumerate() {
+                let gid = GlobalId(i as u32);
+                if g.space == AddrSpace::Local {
+                    info.addr.insert(gid, bank_base + off);
+                    info.core_banked.insert(gid);
+                    off += (g.size + 3) & !3;
+                }
+            }
+            daddr = bank_base + stride * SMEM_MAX_CORES;
+        }
+    }
+    (info, data, daddr, laddr - LOCAL_BASE)
+}
+
+/// Lower one function through the full back-end pipeline.
+pub fn lower_function(
+    m: &Module,
+    fid: FuncId,
+    layout: &LayoutInfo,
+    opts: &BackendOptions,
+) -> Result<MFunction, String> {
+    let mut mf = isel::select_function(m, fid, layout);
+    mir_opt::copy_prop(&mut mf);
+    mir_opt::dce(&mut mf);
+    regalloc::allocate(&mut mf);
+    if opts.opt_layout {
+        mir_opt::layout(&mut mf);
+    }
+    if opts.safety_net {
+        let rep = safety_net::run(&mut mf, opts.zicond);
+        if !rep.errors.is_empty() {
+            return Err(format!(
+                "safety net rejected {}: {}",
+                mf.name,
+                rep.errors.join("; ")
+            ));
+        }
+    }
+    regalloc::finalize_frame(&mut mf);
+    Ok(mf)
+}
+
+/// Flattened function: instructions + per-instruction block-target fixups.
+struct FlatFunc {
+    name: String,
+    insts: Vec<MachInst>,
+    /// (inst index, kind) fixups to resolve once bases are known.
+    fixups: Vec<(usize, Fixup)>,
+    block_offset: Vec<u32>,
+}
+
+enum Fixup {
+    Branch(usize),          // t1 block (local)
+    Split(usize, usize),    // else block, join block (local)
+    PredExit(usize),        // t2 block (local)
+    Call(String),           // callee entry
+}
+
+fn flatten(mf: &MFunction) -> FlatFunc {
+    // First pass: block offsets, accounting for join coalescing and the
+    // split/pred fallthrough fix-up jumps.
+    let nb = mf.blocks.len();
+    let mut block_offset = vec![0u32; nb];
+    let mut size = 0u32;
+    let sizes: Vec<u32> = (0..nb)
+        .map(|bi| {
+            let b = &mf.blocks[bi];
+            let mut s = 0u32;
+            let mut joins_seen = 0;
+            for (k, i) in b.insts.iter().enumerate() {
+                if i.op == Op::JOIN {
+                    joins_seen += 1;
+                    if joins_seen > 1 {
+                        continue; // coalesced
+                    }
+                }
+                s += 1;
+                // Fallthrough fix-up after split/pred.
+                if matches!(i.op, Op::SPLIT | Op::SPLITN | Op::PRED) {
+                    let next_block = bi + 1;
+                    if i.t1 != Some(next_block) || k + 1 != b.insts.len() {
+                        s += 1; // explicit `j then/body`
+                    }
+                }
+            }
+            s
+        })
+        .collect();
+    for bi in 0..nb {
+        block_offset[bi] = size;
+        size += sizes[bi];
+    }
+    // Second pass: emit.
+    let mut insts: Vec<MachInst> = vec![];
+    let mut fixups: Vec<(usize, Fixup)> = vec![];
+    for bi in 0..nb {
+        let b = &mf.blocks[bi];
+        let mut joins_seen = 0;
+        for (k, i) in b.insts.iter().enumerate() {
+            if i.op == Op::JOIN {
+                joins_seen += 1;
+                if joins_seen > 1 {
+                    continue;
+                }
+            }
+            let phys = |r: MReg| -> u8 {
+                if r == NONE {
+                    0
+                } else {
+                    debug_assert!(r.is_phys(), "unallocated vreg {r:?} in {}", mf.name);
+                    r.0 as u8
+                }
+            };
+            let mut mi = MachInst {
+                op: i.op,
+                rd: phys(i.rd),
+                rs1: phys(i.rs1),
+                rs2: phys(i.rs2),
+                imm: i.imm as i32,
+            };
+            let idx = insts.len();
+            match i.op {
+                Op::J | Op::BEQZ | Op::BNEZ => {
+                    fixups.push((idx, Fixup::Branch(i.t1.unwrap())));
+                }
+                Op::JAL => {
+                    if let Some(c) = &i.callee {
+                        fixups.push((idx, Fixup::Call(c.clone())));
+                    } else {
+                        fixups.push((idx, Fixup::Branch(i.t1.unwrap())));
+                    }
+                }
+                Op::SPLIT | Op::SPLITN => {
+                    fixups.push((idx, Fixup::Split(i.t2.unwrap(), i.tjoin.unwrap())));
+                }
+                Op::PRED => {
+                    fixups.push((idx, Fixup::PredExit(i.t2.unwrap())));
+                }
+                Op::WSPAWN => {} // imm patched by crt0 builder only
+                _ => {}
+            }
+            insts.push(mi);
+            // Fallthrough fix-up jump.
+            if matches!(i.op, Op::SPLIT | Op::SPLITN | Op::PRED) {
+                let next_block = bi + 1;
+                if i.t1 != Some(next_block) || k + 1 != b.insts.len() {
+                    let jidx = insts.len();
+                    insts.push(MachInst {
+                        op: Op::J,
+                        rd: 0,
+                        rs1: 0,
+                        rs2: 0,
+                        imm: 0,
+                    });
+                    fixups.push((jidx, Fixup::Branch(i.t1.unwrap())));
+                }
+            }
+            let _ = &mut mi;
+        }
+    }
+    FlatFunc {
+        name: mf.name.clone(),
+        insts,
+        fixups,
+        block_offset,
+    }
+}
+
+/// Build the crt0 stub. The kernel entry PC is read from the argument
+/// block at launch time (`__args + 24`), so one image serves every kernel
+/// in the module and device memory persists across launches.
+fn build_crt0(args_addr: u32) -> (Vec<MachInst>, usize) {
+    use Op::*;
+    let x5 = 5u8;
+    let x6 = 6u8;
+    let sp = super::isa::SP;
+    let ra = super::isa::RA;
+    let mk = |op: Op, rd: u8, rs1: u8, rs2: u8, imm: i32| MachInst {
+        op,
+        rd,
+        rs1,
+        rs2,
+        imm,
+    };
+    let mut c = vec![
+        // warp 0, lane 0 only:
+        mk(CSRR, x5, 0, 0, 4),      // x5 = NUM_WARPS
+        mk(ADDI, x5, x5, 0, -1),    // x5 -= 1
+        mk(WSPAWN, 0, x5, 0, 3),    // spawn warps 1.. at entry2 (index 3)
+        // entry2:
+        mk(LI, x6, 0, 0, -1),
+        mk(TMC, 0, x6, 0, 0),       // all lanes on
+        mk(CSRR, x5, 0, 0, 2),      // core_id
+        mk(CSRR, x6, 0, 0, 4),      // num_warps
+        mk(MUL, x5, x5, x6, 0),
+        mk(CSRR, x6, 0, 0, 1),      // warp_id
+        mk(ADD, x5, x5, x6, 0),
+        mk(CSRR, x6, 0, 0, 3),      // num_threads
+        mk(MUL, x5, x5, x6, 0),
+        mk(CSRR, x6, 0, 0, 0),      // lane_id
+        mk(ADD, x5, x5, x6, 0),     // gtid
+        mk(LI, x6, 0, 0, STACK_SIZE as i32),
+        mk(MUL, x5, x5, x6, 0),
+        mk(LI, x6, 0, 0, (STACK_BASE + STACK_SIZE) as i32),
+        mk(ADD, sp, x5, x6, 0),     // sp = top of this thread's stack
+        mk(LI, x6, 0, 0, args_addr as i32),
+        mk(LW, x6, x6, 0, 24),      // kernel entry pc from __args
+        mk(JALR, ra, x6, 0, 0),     // call dispatcher
+        mk(TMC, 0, 0, 0, 0),        // x0 mask: warp retires
+        mk(ECALL, 0, 0, 0, 0),      // unreachable guard
+    ];
+    let entry2 = 3usize;
+    c[2].imm = entry2 as i32;
+    let len = c.len();
+    (c, len)
+}
+
+/// Link a complete image for one kernel dispatcher.
+pub fn build_image(
+    m: &Module,
+    dispatcher: &str,
+    opts: &BackendOptions,
+) -> Result<ProgramImage, String> {
+    let entry_fid = m
+        .find_func(dispatcher)
+        .ok_or_else(|| format!("unknown kernel entry '{dispatcher}'"))?;
+    let (layout, data, data_end, _local_static) = layout_globals(m, opts.smem);
+    // Reachable functions — from *every* kernel so one image serves all
+    // launches of this module.
+    let cg = crate::analysis::callgraph::CallGraph::build(m);
+    let mut roots = m.kernels();
+    if !roots.contains(&entry_fid) {
+        roots.push(entry_fid);
+    }
+    let order = cg.rpo_from(&roots);
+    let mut flats: Vec<FlatFunc> = vec![];
+    let mut local_mem = 0u32;
+    for fid in order {
+        let mf = lower_function(m, fid, &layout, opts)?;
+        local_mem = local_mem.max(mf.local_mem_size);
+        flats.push(flatten(&mf));
+    }
+    // crt0 + function bases. The args block address is known from layout.
+    let args_probe = m
+        .globals
+        .iter()
+        .position(|g| g.name == "__args")
+        .ok_or("module has no __args block (schedule pass not run?)")?;
+    let args_addr_v = layout.addr[&GlobalId(args_probe as u32)];
+    let (mut code, crt0_len) = build_crt0(args_addr_v);
+    let mut func_entries: HashMap<String, u32> = HashMap::new();
+    for fl in &flats {
+        func_entries.insert(fl.name.clone(), code.len() as u32);
+        code.extend(fl.insts.iter().cloned());
+    }
+    if !func_entries.contains_key(dispatcher) {
+        return Err("dispatcher dropped during lowering".into());
+    }
+    // Resolve fixups.
+    let mut cursor = crt0_len as u32;
+    for fl in &flats {
+        let base = cursor;
+        for (idx, fx) in &fl.fixups {
+            let gidx = base + *idx as u32;
+            let inst = &mut code[gidx as usize];
+            match fx {
+                Fixup::Branch(b) => inst.imm = (base + fl.block_offset[*b]) as i32,
+                Fixup::Split(else_b, join_b) => {
+                    inst.imm = MachInst::pack_split(
+                        base + fl.block_offset[*else_b],
+                        base + fl.block_offset[*join_b],
+                    );
+                }
+                Fixup::PredExit(b) => inst.imm = (base + fl.block_offset[*b]) as i32,
+                Fixup::Call(name) => {
+                    inst.imm = *func_entries
+                        .get(name)
+                        .ok_or_else(|| format!("unresolved call to '{name}'"))?
+                        as i32;
+                }
+            }
+        }
+        cursor += fl.insts.len() as u32;
+    }
+    let words: Vec<u64> = code.iter().map(|i| i.encode()).collect();
+    // Global name table.
+    let mut global_addr = HashMap::new();
+    for (i, g) in m.globals.iter().enumerate() {
+        global_addr.insert(g.name.clone(), layout.addr[&GlobalId(i as u32)]);
+    }
+    let args_addr = *global_addr
+        .get("__args")
+        .ok_or("module has no __args block (schedule pass not run?)")?;
+    // Account local memory from globals too.
+    let local_from_globals: u32 = m
+        .globals
+        .iter()
+        .filter(|g| g.space == AddrSpace::Local)
+        .map(|g| (g.size + 3) & !3)
+        .sum();
+    Ok(ProgramImage {
+        code,
+        words,
+        data,
+        data_end,
+        global_addr,
+        args_addr,
+        local_mem_size: local_mem.max(local_from_globals),
+        kernel: dispatcher.to_string(),
+        func_entries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{compile_kernels, FrontendOptions};
+    use crate::transform::{run_middle_end, OptLevel};
+
+    fn build(src: &str) -> ProgramImage {
+        let (mut m, infos) = compile_kernels(src, &FrontendOptions::default()).unwrap();
+        let mut cfg = OptLevel::Recon.config();
+        cfg.verify = true;
+        run_middle_end(&mut m, &cfg);
+        build_image(
+            &m,
+            &format!("__main_{}", infos[0].name),
+            &BackendOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_saxpy_image() {
+        let img = build(
+            r#"
+kernel void saxpy(global float* x, global float* y, float a, int n) {
+    int i = get_global_id(0);
+    if (i < n) { y[i] = a * x[i] + y[i]; }
+}
+"#,
+        );
+        assert!(img.code.len() > 30);
+        assert!(img.func_entries.contains_key("__main_saxpy"));
+        assert!(img.global_addr.contains_key("__args"));
+        // Round-trip encode/decode.
+        for (w, i) in img.words.iter().zip(img.code.iter()) {
+            assert_eq!(MachInst::decode(*w), Some(*i));
+        }
+        // The image contains divergence management (tail guard).
+        assert!(img
+            .code
+            .iter()
+            .any(|i| matches!(i.op, Op::SPLIT | Op::SPLITN)));
+        assert!(img.code.iter().any(|i| i.op == Op::JOIN));
+        // crt0 begins with the spawn sequence.
+        assert_eq!(img.code[2].op, Op::WSPAWN);
+        let dis = img.disassemble();
+        assert!(dis.contains("vx_split"));
+    }
+
+    #[test]
+    fn split_fixups_point_at_joins() {
+        let img = build(
+            r#"
+kernel void k(global int* out, int n) {
+    int i = get_global_id(0);
+    if (i % 3 == 0) { out[i] = 1; } else { out[i] = 2; }
+}
+"#,
+        );
+        for inst in &img.code {
+            if matches!(inst.op, Op::SPLIT | Op::SPLITN) {
+                let (else_i, join_i) = MachInst::split_targets(inst.imm);
+                assert!((else_i as usize) < img.code.len());
+                assert_eq!(img.code[join_i as usize].op, Op::JOIN, "join target must be a JOIN");
+            }
+        }
+    }
+
+    #[test]
+    fn data_layout_includes_constants() {
+        let img = build(
+            r#"
+__constant__ float lut[2] = { 1.5f, 2.5f };
+kernel void k(global float* out) {
+    out[get_global_id(0)] = lut[0];
+}
+"#,
+        );
+        assert!(img.global_addr.contains_key("lut"));
+        let lut_addr = img.global_addr["lut"];
+        let seg = img.data.iter().find(|(a, _)| *a == lut_addr).unwrap();
+        assert_eq!(&seg.1[0..4], &1.5f32.to_bits().to_le_bytes());
+    }
+}

@@ -1,0 +1,335 @@
+//! The Vortex-style target ISA (paper §2.4 Table 2 + §4.4 "ISA table
+//! extension").
+//!
+//! A RV32IMF-like scalar core extended with the Vortex SIMT operations:
+//! `vx_tmc`, `vx_wspawn`, `vx_split`, `vx_join`, `vx_pred`, `vx_barrier`,
+//! `vx_active_threads` (here `MASK`), plus the §5.3 case-study extensions
+//! `vx_shfl`, `vx_vote.*` and `vx_cmov` (the ZiCond CMOV). Instructions use
+//! a regular 64-bit encoding (op/rd/rs1/rs2 in the low word, a 32-bit
+//! immediate in the high word) — the semantic contract, not the RISC-V bit
+//! layout, is what the compiler pipeline targets (see DESIGN.md
+//! §Vortex-ISA-adaptation).
+//!
+//! `vx_split` packs two instruction indices in its immediate: the low half
+//! is the reconvergence (join) index pushed on the IPDOM stack, the high
+//! half the else-target (NVIDIA-SSY-style recorded reconvergence PC).
+
+/// Register indices: 0..32 integer (x0 hardwired zero), 32..64 float.
+pub const NUM_REGS: u8 = 64;
+pub const X0: u8 = 0;
+/// Return address (x1).
+pub const RA: u8 = 1;
+/// Stack pointer (x2).
+pub const SP: u8 = 2;
+/// First integer/float argument registers (x10.. / f10..).
+pub const A0: u8 = 10;
+pub const FA0: u8 = 32 + 10;
+/// Integer scratch registers reserved for spill reloads and crt0.
+pub const T5: u8 = 30;
+pub const T6: u8 = 31;
+pub const FT5: u8 = 32 + 30;
+
+pub fn is_float_reg(r: u8) -> bool {
+    r >= 32
+}
+
+/// CSR identifiers (immediate of `CSRR`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CsrId {
+    LaneId = 0,
+    WarpId = 1,
+    CoreId = 2,
+    NumThreads = 3,
+    NumWarps = 4,
+    NumCores = 5,
+}
+
+impl CsrId {
+    pub fn from_u32(v: u32) -> CsrId {
+        match v {
+            0 => CsrId::LaneId,
+            1 => CsrId::WarpId,
+            2 => CsrId::CoreId,
+            3 => CsrId::NumThreads,
+            4 => CsrId::NumWarps,
+            _ => CsrId::NumCores,
+        }
+    }
+}
+
+macro_rules! ops {
+    ($($name:ident = $code:expr => $mnem:expr ; $class:ident),+ $(,)?) => {
+        /// Opcode table — the "ISA description table" of §4.4.
+        #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+        #[repr(u8)]
+        pub enum Op { $($name = $code),+ }
+
+        impl Op {
+            pub fn mnemonic(self) -> &'static str {
+                match self { $(Op::$name => $mnem),+ }
+            }
+            pub fn from_u8(v: u8) -> Option<Op> {
+                match v { $($code => Some(Op::$name),)+ _ => None }
+            }
+            /// Functional class, used for timing and hazard checks.
+            pub fn class(self) -> OpClass {
+                match self { $(Op::$name => OpClass::$class),+ }
+            }
+            pub const ALL: &'static [Op] = &[$(Op::$name),+];
+        }
+    };
+}
+
+/// Functional-unit class (drives the simulator timing model).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpClass {
+    Alu,
+    Mul,
+    Div,
+    Fpu,
+    FDiv,
+    /// transcendental (software-library ops modeled as SFU)
+    Sfu,
+    Mem,
+    Branch,
+    /// Vortex divergence / warp control (executes on the SFU, paper Fig. 3)
+    Vx,
+    Sys,
+}
+
+ops! {
+    NOP    = 0x00 => "nop"; Alu,
+    LI     = 0x01 => "li"; Alu,
+    MOV    = 0x02 => "mv"; Alu,
+    ADD    = 0x03 => "add"; Alu,
+    SUB    = 0x04 => "sub"; Alu,
+    MUL    = 0x05 => "mul"; Mul,
+    DIV    = 0x06 => "div"; Div,
+    DIVU   = 0x07 => "divu"; Div,
+    REM    = 0x08 => "rem"; Div,
+    REMU   = 0x09 => "remu"; Div,
+    AND    = 0x0a => "and"; Alu,
+    OR     = 0x0b => "or"; Alu,
+    XOR    = 0x0c => "xor"; Alu,
+    SLL    = 0x0d => "sll"; Alu,
+    SRL    = 0x0e => "srl"; Alu,
+    SRA    = 0x0f => "sra"; Alu,
+    MIN    = 0x10 => "min"; Alu,
+    MAX    = 0x11 => "max"; Alu,
+    ADDI   = 0x12 => "addi"; Alu,
+    ANDI   = 0x13 => "andi"; Alu,
+    ORI    = 0x14 => "ori"; Alu,
+    XORI   = 0x15 => "xori"; Alu,
+    SLLI   = 0x16 => "slli"; Alu,
+    SRLI   = 0x17 => "srli"; Alu,
+    SRAI   = 0x18 => "srai"; Alu,
+    SEQ    = 0x19 => "seq"; Alu,
+    SNE    = 0x1a => "sne"; Alu,
+    SLT    = 0x1b => "slt"; Alu,
+    SLE    = 0x1c => "sle"; Alu,
+    SLTU   = 0x1d => "sltu"; Alu,
+    SGEU   = 0x1e => "sgeu"; Alu,
+    LW     = 0x20 => "lw"; Mem,
+    SW     = 0x21 => "sw"; Mem,
+    FADD   = 0x30 => "fadd.s"; Fpu,
+    FSUB   = 0x31 => "fsub.s"; Fpu,
+    FMUL   = 0x32 => "fmul.s"; Fpu,
+    FDIV   = 0x33 => "fdiv.s"; FDiv,
+    FMIN   = 0x34 => "fmin.s"; Fpu,
+    FMAX   = 0x35 => "fmax.s"; Fpu,
+    FSQRT  = 0x36 => "fsqrt.s"; FDiv,
+    FNEG   = 0x37 => "fneg.s"; Fpu,
+    FABS   = 0x38 => "fabs.s"; Fpu,
+    FEXP   = 0x39 => "fexp.s"; Sfu,
+    FLOG   = 0x3a => "flog.s"; Sfu,
+    FFLOOR = 0x3b => "ffloor.s"; Fpu,
+    FCVTWS = 0x3c => "fcvt.w.s"; Fpu,
+    FCVTSW = 0x3d => "fcvt.s.w"; Fpu,
+    FMVXW  = 0x3e => "fmv.x.w"; Alu,
+    FMVWX  = 0x3f => "fmv.w.x"; Alu,
+    FEQ    = 0x40 => "feq.s"; Fpu,
+    FLT    = 0x41 => "flt.s"; Fpu,
+    FLE    = 0x42 => "fle.s"; Fpu,
+    FNE    = 0x43 => "fne.s"; Fpu,
+    FGT    = 0x44 => "fgt.s"; Fpu,
+    FGE    = 0x45 => "fge.s"; Fpu,
+    BEQZ   = 0x50 => "beqz"; Branch,
+    BNEZ   = 0x51 => "bnez"; Branch,
+    J      = 0x52 => "j"; Branch,
+    JAL    = 0x53 => "jal"; Branch,
+    JALR   = 0x54 => "jalr"; Branch,
+    ECALL  = 0x55 => "ecall"; Sys,
+    CSRR   = 0x56 => "csrr"; Sys,
+    AMOADD = 0x60 => "amoadd.w"; Mem,
+    AMOAND = 0x61 => "amoand.w"; Mem,
+    AMOOR  = 0x62 => "amoor.w"; Mem,
+    AMOXOR = 0x63 => "amoxor.w"; Mem,
+    AMOMIN = 0x64 => "amomin.w"; Mem,
+    AMOMAX = 0x65 => "amomax.w"; Mem,
+    AMOSWAP= 0x66 => "amoswap.w"; Mem,
+    AMOCAS = 0x67 => "amocas.w"; Mem,
+    // ---- Vortex ISA extensions (Table 2) ----
+    TMC    = 0x70 => "vx_tmc"; Vx,
+    WSPAWN = 0x71 => "vx_wspawn"; Vx,
+    SPLIT  = 0x72 => "vx_split"; Vx,
+    SPLITN = 0x73 => "vx_split.n"; Vx,
+    JOIN   = 0x74 => "vx_join"; Vx,
+    PRED   = 0x75 => "vx_pred"; Vx,
+    BAR    = 0x76 => "vx_bar"; Vx,
+    MASK   = 0x77 => "vx_active_threads"; Vx,
+    // ---- §5.3 case-study extensions ----
+    SHFL   = 0x78 => "vx_shfl"; Vx,
+    VOTEALL= 0x79 => "vx_vote.all"; Vx,
+    VOTEANY= 0x7a => "vx_vote.any"; Vx,
+    BALLOT = 0x7b => "vx_vote.ballot"; Vx,
+    CMOV   = 0x7c => "vx_cmov"; Alu,
+    PRINTI = 0x7d => "vx_printi"; Sys,
+    PRINTF = 0x7e => "vx_printf"; Sys,
+}
+
+/// A fully-resolved machine instruction (also the decode target).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachInst {
+    pub op: Op,
+    pub rd: u8,
+    pub rs1: u8,
+    pub rs2: u8,
+    pub imm: i32,
+}
+
+impl MachInst {
+    pub fn encode(&self) -> u64 {
+        let lo = (self.op as u64)
+            | ((self.rd as u64) << 8)
+            | ((self.rs1 as u64) << 16)
+            | ((self.rs2 as u64) << 24);
+        lo | ((self.imm as u32 as u64) << 32)
+    }
+
+    pub fn decode(w: u64) -> Option<MachInst> {
+        Some(MachInst {
+            op: Op::from_u8((w & 0xff) as u8)?,
+            rd: ((w >> 8) & 0xff) as u8,
+            rs1: ((w >> 16) & 0xff) as u8,
+            rs2: ((w >> 24) & 0xff) as u8,
+            imm: (w >> 32) as u32 as i32,
+        })
+    }
+
+    /// Split: pack (else_idx, join_idx) into imm.
+    pub fn split_targets(imm: i32) -> (u32, u32) {
+        let u = imm as u32;
+        (u >> 16, u & 0xffff)
+    }
+    pub fn pack_split(else_idx: u32, join_idx: u32) -> i32 {
+        assert!(else_idx < 0x10000 && join_idx < 0x10000, "program too large for split encoding");
+        ((else_idx << 16) | join_idx) as i32
+    }
+}
+
+/// Disassemble one instruction.
+pub fn disasm(i: &MachInst) -> String {
+    let r = |x: u8| {
+        if is_float_reg(x) {
+            format!("f{}", x - 32)
+        } else {
+            format!("x{}", x)
+        }
+    };
+    match i.op.class() {
+        OpClass::Branch => match i.op {
+            Op::J => format!("j {}", i.imm),
+            Op::JAL => format!("jal {}, {}", r(i.rd), i.imm),
+            Op::JALR => format!("jalr {}, {}, {}", r(i.rd), r(i.rs1), i.imm),
+            _ => format!("{} {}, {}", i.op.mnemonic(), r(i.rs1), i.imm),
+        },
+        _ => match i.op {
+            Op::NOP | Op::JOIN => i.op.mnemonic().to_string(),
+            Op::LI => format!("li {}, {}", r(i.rd), i.imm),
+            Op::MOV | Op::FNEG | Op::FABS | Op::FSQRT | Op::FEXP | Op::FLOG | Op::FFLOOR
+            | Op::FCVTWS | Op::FCVTSW | Op::FMVXW | Op::FMVWX => {
+                format!("{} {}, {}", i.op.mnemonic(), r(i.rd), r(i.rs1))
+            }
+            Op::LW => format!("lw {}, {}({})", r(i.rd), i.imm, r(i.rs1)),
+            Op::SW => format!("sw {}, {}({})", r(i.rs2), i.imm, r(i.rs1)),
+            Op::ADDI | Op::ANDI | Op::ORI | Op::XORI | Op::SLLI | Op::SRLI | Op::SRAI => {
+                format!("{} {}, {}, {}", i.op.mnemonic(), r(i.rd), r(i.rs1), i.imm)
+            }
+            Op::ECALL => format!("ecall {}", i.imm),
+            Op::CSRR => format!("csrr {}, {:?}", r(i.rd), CsrId::from_u32(i.imm as u32)),
+            Op::TMC => format!("vx_tmc {}", r(i.rs1)),
+            Op::WSPAWN => format!("vx_wspawn {}, @{}", r(i.rs1), i.imm),
+            Op::SPLIT | Op::SPLITN => {
+                let (e, j) = MachInst::split_targets(i.imm);
+                format!("{} {}, else=@{}, join=@{}", i.op.mnemonic(), r(i.rs1), e, j)
+            }
+            Op::PRED => format!("vx_pred {}, {}, exit=@{}", r(i.rs1), r(i.rs2), i.imm),
+            Op::BAR => format!("vx_bar {}, {}", i.imm, r(i.rs1)),
+            Op::MASK => format!("vx_active_threads {}", r(i.rd)),
+            Op::PRINTI | Op::PRINTF => format!("{} {}", i.op.mnemonic(), r(i.rs1)),
+            _ => format!(
+                "{} {}, {}, {}",
+                i.op.mnemonic(),
+                r(i.rd),
+                r(i.rs1),
+                r(i.rs2)
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_round_trip() {
+        for &op in Op::ALL {
+            let i = MachInst {
+                op,
+                rd: 7,
+                rs1: 33,
+                rs2: 63,
+                imm: -12345,
+            };
+            assert_eq!(MachInst::decode(i.encode()), Some(i));
+        }
+    }
+
+    #[test]
+    fn split_target_packing() {
+        let imm = MachInst::pack_split(1234, 777);
+        assert_eq!(MachInst::split_targets(imm), (1234, 777));
+    }
+
+    #[test]
+    fn opcode_table_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for &op in Op::ALL {
+            assert!(seen.insert(op as u8), "duplicate opcode {op:?}");
+        }
+        assert!(Op::from_u8(0x72) == Some(Op::SPLIT));
+        assert_eq!(Op::SPLIT.class(), OpClass::Vx);
+        assert_eq!(Op::FEXP.class(), OpClass::Sfu);
+    }
+
+    #[test]
+    fn disasm_smoke() {
+        let i = MachInst {
+            op: Op::LW,
+            rd: 5,
+            rs1: 2,
+            rs2: 0,
+            imm: 16,
+        };
+        assert_eq!(disasm(&i), "lw x5, 16(x2)");
+        let s = MachInst {
+            op: Op::SPLIT,
+            rd: 0,
+            rs1: 9,
+            rs2: 0,
+            imm: MachInst::pack_split(20, 30),
+        };
+        assert!(disasm(&s).contains("else=@20"));
+    }
+}

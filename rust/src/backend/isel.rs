@@ -1,0 +1,835 @@
+//! Instruction selection: SSA IR → virtual-register MIR.
+//!
+//! Phis are destructed into parallel copies at predecessor ends (critical
+//! edges are split first — precisely, without disturbing the `SplitBr`
+//! reconvergence field). Divergence operations lower 1:1 onto the Vortex
+//! ISA extensions.
+
+use super::isa::{Op, A0, FA0, RA, SP};
+use super::mir::{MBlock, MFunction, MInst, MReg, NONE};
+use crate::ir::*;
+use std::collections::HashMap;
+
+/// Split critical edges without touching `SplitBr::ipdom`.
+fn split_critical_edges(f: &mut Function) {
+    loop {
+        let preds = f.preds();
+        let mut work: Option<(BlockId, usize, BlockId)> = None; // (block, succ field index, succ)
+        'outer: for b in f.block_ids() {
+            let succs = f.succs(b);
+            if succs.len() < 2 {
+                continue;
+            }
+            for (i, &s) in succs.iter().enumerate() {
+                if preds[s.idx()].len() > 1 {
+                    work = Some((b, i, s));
+                    break 'outer;
+                }
+            }
+        }
+        let Some((b, field, s)) = work else { return };
+        let stub = f.add_block("crit");
+        f.push_inst(stub, InstKind::Br { target: s }, Type::Void);
+        let t = f.term(b);
+        // Replace exactly the `field`-th successor.
+        match &mut f.inst_mut(t).kind {
+            InstKind::CondBr { t, f: fb, .. } => {
+                if field == 0 {
+                    *t = stub;
+                } else {
+                    *fb = stub;
+                }
+            }
+            InstKind::SplitBr { then_b, else_b, .. } => {
+                if field == 0 {
+                    *then_b = stub;
+                } else {
+                    *else_b = stub;
+                }
+            }
+            InstKind::PredBr { body, exit, .. } => {
+                if field == 0 {
+                    *body = stub;
+                } else {
+                    *exit = stub;
+                }
+            }
+            _ => unreachable!(),
+        }
+        // Rewrite phis in s: incoming from b (this edge) -> stub. With
+        // multiple parallel edges b->s the first matching incoming is
+        // rewritten; remaining ones are handled by later iterations.
+        let insts = f.blocks[s.idx()].insts.clone();
+        for i in insts {
+            if let InstKind::Phi { incs } = &mut f.insts[i.idx()].kind {
+                if let Some(e) = incs.iter_mut().find(|(p, _)| *p == b) {
+                    e.0 = stub;
+                }
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+pub struct IselResult {
+    pub mf: MFunction,
+}
+
+pub fn select_function(
+    m: &Module,
+    fid: FuncId,
+    layout: &super::emit::LayoutInfo,
+) -> MFunction {
+    let mut f = m.func(fid).clone();
+    f.remove_unreachable();
+    split_critical_edges(&mut f);
+    let nblocks = f.blocks.len();
+    let mut mf = MFunction {
+        name: f.name.clone(),
+        blocks: (0..nblocks)
+            .map(|i| MBlock {
+                insts: vec![],
+                name: f.blocks[i].name.clone(),
+            })
+            .collect(),
+        vreg_float: vec![],
+        frame_size: 0,
+        spill_size: 0,
+        has_calls: false,
+        local_mem_size: f.local_mem_size,
+    };
+
+    // Pre-assign vregs for every value-producing instruction.
+    let mut vmap: HashMap<InstId, MReg> = HashMap::new();
+    let mut alloca_off: HashMap<InstId, u32> = HashMap::new();
+    for (idx, inst) in f.insts.iter().enumerate() {
+        if inst.dead {
+            continue;
+        }
+        let id = InstId(idx as u32);
+        if let InstKind::Alloca { size } = inst.kind {
+            alloca_off.insert(id, mf.frame_size);
+            mf.frame_size += (size + 3) & !3;
+        }
+        if inst.ty != Type::Void {
+            let r = mf.new_vreg(inst.ty == Type::F32);
+            vmap.insert(id, r);
+        }
+    }
+    // Argument vregs, copied from the ABI registers at entry.
+    let mut arg_regs: Vec<MReg> = vec![];
+    {
+        let entry = f.entry.idx();
+        let mut ni = 0u8;
+        let mut nf = 0u8;
+        for p in &f.params {
+            let is_f = p.ty == Type::F32;
+            let v = mf.new_vreg(is_f);
+            let phys = if is_f {
+                let r = MReg::phys(FA0 + nf);
+                nf += 1;
+                r
+            } else {
+                let r = MReg::phys(A0 + ni);
+                ni += 1;
+                r
+            };
+            assert!(ni <= 8 && nf <= 8, "too many parameters for the ABI");
+            mf.blocks[entry].insts.push(MInst::mv(v, phys));
+            arg_regs.push(v);
+        }
+    }
+
+    let mut ctx = Ctx {
+        m,
+        f: &f,
+        mf,
+        vmap,
+        arg_regs,
+        alloca_off,
+        layout,
+        cur: 0,
+    };
+    for b in f.block_ids() {
+        ctx.cur = b.idx();
+        let insts = f.blocks[b.idx()].insts.clone();
+        for &id in &insts {
+            ctx.lower(id);
+        }
+    }
+    ctx.mf
+}
+
+struct Ctx<'a> {
+    m: &'a Module,
+    f: &'a Function,
+    mf: MFunction,
+    vmap: HashMap<InstId, MReg>,
+    arg_regs: Vec<MReg>,
+    alloca_off: HashMap<InstId, u32>,
+    layout: &'a super::emit::LayoutInfo,
+    cur: usize,
+}
+
+impl<'a> Ctx<'a> {
+    fn push(&mut self, i: MInst) {
+        self.mf.blocks[self.cur].insts.push(i);
+    }
+
+    fn reg(&mut self, v: Val) -> MReg {
+        match v {
+            Val::Inst(i) => self.vmap[&i],
+            Val::Arg(a) => self.arg_regs[a as usize],
+            Val::I(x, _) => {
+                let r = self.mf.new_vreg(false);
+                self.push(MInst::li(r, x as i32 as i64));
+                r
+            }
+            Val::F(bits) => {
+                let r = self.mf.new_vreg(true);
+                self.push(MInst::li(r, bits as i64));
+                r
+            }
+            Val::G(g) => {
+                let r = self.mf.new_vreg(false);
+                let addr = *self
+                    .layout
+                    .addr
+                    .get(&g)
+                    .unwrap_or_else(|| panic!("global g{} not laid out", g.0));
+                self.push(MInst::li(r, addr as i64));
+                if self.layout.core_banked.contains(&g) {
+                    // Shared memory mapped onto global memory (Fig. 10):
+                    // address = base + core_id * bank_stride.
+                    let cid = self.mf.new_vreg(false);
+                    self.push(MInst::rri(Op::CSRR, cid, NONE, 2)); // core_id
+                    let stride = self.mf.new_vreg(false);
+                    self.push(MInst::li(stride, self.layout.bank_stride as i64));
+                    let off = self.mf.new_vreg(false);
+                    self.push(MInst::rrr(Op::MUL, off, cid, stride));
+                    let fin = self.mf.new_vreg(false);
+                    self.push(MInst::rrr(Op::ADD, fin, r, off));
+                    return fin;
+                }
+                r
+            }
+        }
+    }
+
+    /// Address lowering: returns (base reg, displacement).
+    fn addr(&mut self, ptr: Val) -> (MReg, i64) {
+        if let Val::Inst(i) = ptr {
+            if let InstKind::Gep {
+                base,
+                index: Val::I(c, _),
+                scale,
+                disp,
+            } = self.f.inst(i).kind
+            {
+                let b = self.reg(base);
+                return (b, c * scale as i64 + disp as i64);
+            }
+        }
+        (self.reg(ptr), 0)
+    }
+
+    /// Emit the parallel phi copies for every successor of the current
+    /// block (critical edges are already split).
+    fn phi_copies(&mut self, b: BlockId) {
+        let mut pairs: Vec<(MReg, Val)> = vec![];
+        for s in self.f.succs(b) {
+            for &i in &self.f.blocks[s.idx()].insts {
+                if let InstKind::Phi { incs } = &self.f.inst(i).kind {
+                    if let Some((_, v)) = incs.iter().find(|(p, _)| *p == b) {
+                        pairs.push((self.vmap[&i], *v));
+                    }
+                } else {
+                    break;
+                }
+            }
+        }
+        if pairs.is_empty() {
+            return;
+        }
+        // Topological emission with cycle breaking via a temp.
+        let dsts: Vec<MReg> = pairs.iter().map(|(d, _)| *d).collect();
+        let mut remaining: Vec<(MReg, Val)> = pairs;
+        let mut emitted: Vec<MReg> = vec![];
+        while !remaining.is_empty() {
+            // Find a pair whose dst is not a source of any other remaining pair.
+            let idx = remaining.iter().position(|(d, _)| {
+                !remaining.iter().any(|(_, s2)| match s2 {
+                    Val::Inst(si) => self.vmap.get(si) == Some(d),
+                    Val::Arg(a) => self.arg_regs.get(*a as usize) == Some(d),
+                    _ => false,
+                })
+            });
+            match idx {
+                Some(k) => {
+                    let (d, s) = remaining.remove(k);
+                    let sr = self.reg(s);
+                    if sr != d {
+                        self.push(MInst::mv(d, sr));
+                    }
+                    emitted.push(d);
+                }
+                None => {
+                    // Cycle: break it with a temp.
+                    let (d, s) = remaining.remove(0);
+                    let is_f = self.mf.is_float(d);
+                    let tmp = self.mf.new_vreg(is_f);
+                    let sr = self.reg(s);
+                    self.push(MInst::mv(tmp, sr));
+                    // Re-point any remaining source equal to d? Sources are
+                    // IR values, not regs; instead emit the final move from
+                    // tmp after the rest complete.
+                    // Defer: emit remaining pairs that read d first.
+                    let mut defer: Vec<(MReg, Val)> = vec![];
+                    while let Some(pos) = remaining.iter().position(|(_, s2)| match s2 {
+                        Val::Inst(si) => self.vmap.get(si) == Some(&d),
+                        Val::Arg(a) => self.arg_regs.get(*a as usize) == Some(&d),
+                        _ => false,
+                    }) {
+                        defer.push(remaining.remove(pos));
+                    }
+                    for (d2, s2) in defer {
+                        let sr2 = self.reg(s2);
+                        if sr2 != d2 {
+                            self.push(MInst::mv(d2, sr2));
+                        }
+                    }
+                    self.push(MInst::mv(d, tmp));
+                }
+            }
+        }
+        let _ = dsts;
+        let _ = emitted;
+    }
+
+    fn lower(&mut self, id: InstId) {
+        let inst = self.f.inst(id);
+        let kind = inst.kind.clone();
+        let dst = self.vmap.get(&id).copied();
+        match kind {
+            InstKind::Phi { .. } => {} // handled by predecessor copies
+            InstKind::Bin { op, a, b } => self.lower_bin(dst.unwrap(), op, a, b),
+            InstKind::Un { op, a } => {
+                let d = dst.unwrap();
+                let s = self.reg(a);
+                let mop = match op {
+                    UnOp::Not => {
+                        self.push(MInst::rri(Op::XORI, d, s, -1));
+                        return;
+                    }
+                    UnOp::FNeg => Op::FNEG,
+                    UnOp::FSqrt => Op::FSQRT,
+                    UnOp::FAbs => Op::FABS,
+                    UnOp::FExp => Op::FEXP,
+                    UnOp::FLog => Op::FLOG,
+                    UnOp::FFloor => Op::FFLOOR,
+                    UnOp::SiToFp => Op::FCVTSW,
+                    UnOp::FpToSi => Op::FCVTWS,
+                    UnOp::ZExt => Op::MOV,
+                    UnOp::Trunc => {
+                        self.push(MInst::rrr(Op::SNE, d, s, MReg::phys(0)));
+                        return;
+                    }
+                    UnOp::FToBits => Op::FMVXW,
+                    UnOp::BitsToF => Op::FMVWX,
+                };
+                self.push(MInst::rrr(mop, d, s, NONE));
+            }
+            InstKind::ICmp { pred, a, b } => {
+                let d = dst.unwrap();
+                let (mut x, mut y) = (self.reg(a), self.reg(b));
+                let op = match pred {
+                    ICmp::Eq => Op::SEQ,
+                    ICmp::Ne => Op::SNE,
+                    ICmp::Slt => Op::SLT,
+                    ICmp::Sle => Op::SLE,
+                    ICmp::Sgt => {
+                        std::mem::swap(&mut x, &mut y);
+                        Op::SLT
+                    }
+                    ICmp::Sge => {
+                        std::mem::swap(&mut x, &mut y);
+                        Op::SLE
+                    }
+                    ICmp::Ult => Op::SLTU,
+                    ICmp::Uge => Op::SGEU,
+                };
+                self.push(MInst::rrr(op, d, x, y));
+            }
+            InstKind::FCmp { pred, a, b } => {
+                let d = dst.unwrap();
+                let x = self.reg(a);
+                let y = self.reg(b);
+                let op = match pred {
+                    FCmp::Oeq => Op::FEQ,
+                    FCmp::One => Op::FNE,
+                    FCmp::Olt => Op::FLT,
+                    FCmp::Ole => Op::FLE,
+                    FCmp::Ogt => Op::FGT,
+                    FCmp::Oge => Op::FGE,
+                };
+                self.push(MInst::rrr(op, d, x, y));
+            }
+            InstKind::Select { cond, t, f } => {
+                // ZiCond lowering (paper §5.3): mv d, f; vx_cmov d, c, t.
+                let d = dst.unwrap();
+                let fv = self.reg(f);
+                let c = self.reg(cond);
+                let tv = self.reg(t);
+                self.push(MInst::mv(d, fv));
+                self.push(MInst::rrr(Op::CMOV, d, c, tv));
+            }
+            InstKind::Alloca { .. } => {
+                let d = dst.unwrap();
+                let off = self.alloca_off[&id];
+                self.push(MInst::rri(Op::ADDI, d, MReg::phys(SP), off as i64));
+            }
+            InstKind::Load { ptr } => {
+                let d = dst.unwrap();
+                let (b, off) = self.addr(ptr);
+                self.push(MInst::rri(Op::LW, d, b, off));
+            }
+            InstKind::Store { ptr, val } => {
+                let v = self.reg(val);
+                let (b, off) = self.addr(ptr);
+                self.push(MInst {
+                    op: Op::SW,
+                    rd: NONE,
+                    rs1: b,
+                    rs2: v,
+                    imm: off,
+                    ..MInst::new(Op::SW)
+                });
+            }
+            InstKind::Gep {
+                base,
+                index,
+                scale,
+                disp,
+            } => {
+                let d = dst.unwrap();
+                let b = self.reg(base);
+                match index {
+                    Val::I(c, _) => {
+                        self.push(MInst::rri(
+                            Op::ADDI,
+                            d,
+                            b,
+                            c * scale as i64 + disp as i64,
+                        ));
+                    }
+                    _ => {
+                        let i = self.reg(index);
+                        let scaled = if scale == 4 {
+                            let t = self.mf.new_vreg(false);
+                            self.push(MInst::rri(Op::SLLI, t, i, 2));
+                            t
+                        } else if scale == 1 {
+                            i
+                        } else {
+                            let t = self.mf.new_vreg(false);
+                            let c = self.mf.new_vreg(false);
+                            self.push(MInst::li(c, scale as i64));
+                            self.push(MInst::rrr(Op::MUL, t, i, c));
+                            t
+                        };
+                        if disp == 0 {
+                            self.push(MInst::rrr(Op::ADD, d, b, scaled));
+                        } else {
+                            let t2 = self.mf.new_vreg(false);
+                            self.push(MInst::rrr(Op::ADD, t2, b, scaled));
+                            self.push(MInst::rri(Op::ADDI, d, t2, disp as i64));
+                        }
+                    }
+                }
+            }
+            InstKind::Call { callee, args } => {
+                self.mf.has_calls = true;
+                let mut ni = 0u8;
+                let mut nf = 0u8;
+                let arg_regs: Vec<MReg> = args.iter().map(|&a| self.reg(a)).collect();
+                for (i, &a) in args.iter().enumerate() {
+                    let is_f = self.f.val_type(a) == Type::F32;
+                    let phys = if is_f {
+                        let r = MReg::phys(FA0 + nf);
+                        nf += 1;
+                        r
+                    } else {
+                        let r = MReg::phys(A0 + ni);
+                        ni += 1;
+                        r
+                    };
+                    assert!(ni <= 8 && nf <= 8, "too many call arguments");
+                    self.push(MInst::mv(phys, arg_regs[i]));
+                }
+                let mut jal = MInst::new(Op::JAL);
+                jal.rd = MReg::phys(RA);
+                jal.callee = Some(self.m.func(callee).name.clone());
+                self.push(jal);
+                if let Some(d) = dst {
+                    let is_f = self.f.inst(id).ty == Type::F32;
+                    let src = if is_f { MReg::phys(FA0) } else { MReg::phys(A0) };
+                    self.push(MInst::mv(d, src));
+                }
+            }
+            InstKind::Intr { intr, args } => self.lower_intr(dst, intr, &args),
+            InstKind::Br { target } => {
+                self.phi_copies(BlockId(self.cur as u32));
+                let mut j = MInst::new(Op::J);
+                j.t1 = Some(target.idx());
+                self.push(j);
+            }
+            InstKind::CondBr { cond, t, f } => {
+                let c = self.reg(cond);
+                self.phi_copies(BlockId(self.cur as u32));
+                let mut bnez = MInst {
+                    rs1: c,
+                    ..MInst::new(Op::BNEZ)
+                };
+                bnez.t1 = Some(t.idx());
+                self.push(bnez);
+                let mut j = MInst::new(Op::J);
+                j.t1 = Some(f.idx());
+                self.push(j);
+            }
+            InstKind::SplitBr {
+                cond,
+                neg,
+                then_b,
+                else_b,
+                ipdom,
+            } => {
+                let c = self.reg(cond);
+                self.phi_copies(BlockId(self.cur as u32));
+                let mut s = MInst {
+                    rs1: c,
+                    ..MInst::new(if neg { Op::SPLITN } else { Op::SPLIT })
+                };
+                s.t1 = Some(then_b.idx());
+                s.t2 = Some(else_b.idx());
+                s.tjoin = Some(ipdom.idx());
+                self.push(s);
+            }
+            InstKind::PredBr {
+                cond,
+                mask,
+                body,
+                exit,
+            } => {
+                let c = self.reg(cond);
+                let m = self.reg(mask);
+                self.phi_copies(BlockId(self.cur as u32));
+                let mut p = MInst {
+                    rs1: c,
+                    rs2: m,
+                    ..MInst::new(Op::PRED)
+                };
+                p.t1 = Some(body.idx());
+                p.t2 = Some(exit.idx());
+                self.push(p);
+            }
+            InstKind::Ret { val } => {
+                if let Some(v) = val {
+                    let is_f = self.f.val_type(v) == Type::F32;
+                    let r = self.reg(v);
+                    let phys = if is_f { MReg::phys(FA0) } else { MReg::phys(A0) };
+                    self.push(MInst::mv(phys, r));
+                }
+                // JALR x0, ra, 0 == ret
+                let mut ret = MInst::new(Op::JALR);
+                ret.rd = MReg::phys(0);
+                ret.rs1 = MReg::phys(RA);
+                self.push(ret);
+            }
+            InstKind::Unreachable => {
+                let mut e = MInst::new(Op::ECALL);
+                e.imm = 1;
+                self.push(e);
+            }
+        }
+    }
+
+    fn lower_bin(&mut self, d: MReg, op: BinOp, a: Val, b: Val) {
+        // Immediate forms.
+        if let Val::I(c, _) = b {
+            let imm_op = match op {
+                BinOp::Add => Some(Op::ADDI),
+                BinOp::Sub => Some(Op::ADDI),
+                BinOp::And => Some(Op::ANDI),
+                BinOp::Or => Some(Op::ORI),
+                BinOp::Xor => Some(Op::XORI),
+                BinOp::Shl => Some(Op::SLLI),
+                BinOp::LShr => Some(Op::SRLI),
+                BinOp::AShr => Some(Op::SRAI),
+                _ => None,
+            };
+            if let Some(io) = imm_op {
+                let x = self.reg(a);
+                let imm = if op == BinOp::Sub { -c } else { c };
+                self.push(MInst::rri(io, d, x, imm));
+                return;
+            }
+        }
+        let mop = match op {
+            BinOp::Add => Op::ADD,
+            BinOp::Sub => Op::SUB,
+            BinOp::Mul => Op::MUL,
+            BinOp::SDiv => Op::DIV,
+            BinOp::SRem => Op::REM,
+            BinOp::UDiv => Op::DIVU,
+            BinOp::URem => Op::REMU,
+            BinOp::And => Op::AND,
+            BinOp::Or => Op::OR,
+            BinOp::Xor => Op::XOR,
+            BinOp::Shl => Op::SLL,
+            BinOp::LShr => Op::SRL,
+            BinOp::AShr => Op::SRA,
+            BinOp::SMin => Op::MIN,
+            BinOp::SMax => Op::MAX,
+            BinOp::FAdd => Op::FADD,
+            BinOp::FSub => Op::FSUB,
+            BinOp::FMul => Op::FMUL,
+            BinOp::FDiv => Op::FDIV,
+            BinOp::FMin => Op::FMIN,
+            BinOp::FMax => Op::FMAX,
+        };
+        let x = self.reg(a);
+        let y = self.reg(b);
+        self.push(MInst::rrr(mop, d, x, y));
+    }
+
+    fn lower_intr(&mut self, dst: Option<MReg>, intr: Intr, args: &[Val]) {
+        match intr {
+            Intr::Csr(c) => {
+                let d = dst.unwrap();
+                let id = match c {
+                    Csr::LaneId => 0,
+                    Csr::WarpId => 1,
+                    Csr::CoreId => 2,
+                    Csr::NumThreads => 3,
+                    Csr::NumWarps => 4,
+                    Csr::NumCores => 5,
+                };
+                self.push(MInst::rri(Op::CSRR, d, NONE, id));
+            }
+            Intr::Barrier => {
+                // args: [id const, count]
+                let id = match args.first() {
+                    Some(Val::I(v, _)) => *v,
+                    _ => 0,
+                };
+                let cnt = self.reg(args[1]);
+                let mut b = MInst::new(Op::BAR);
+                b.rs1 = cnt;
+                b.imm = id;
+                self.push(b);
+            }
+            Intr::Atomic(op) => {
+                let d = dst.unwrap();
+                let a = self.reg(args[0]);
+                let v = self.reg(args[1]);
+                let mop = match op {
+                    AtomOp::Add => Op::AMOADD,
+                    AtomOp::And => Op::AMOAND,
+                    AtomOp::Or => Op::AMOOR,
+                    AtomOp::Xor => Op::AMOXOR,
+                    AtomOp::Min => Op::AMOMIN,
+                    AtomOp::Max => Op::AMOMAX,
+                    AtomOp::Exch => Op::AMOSWAP,
+                };
+                self.push(MInst::rrr(mop, d, a, v));
+            }
+            Intr::AtomicCas => {
+                let d = dst.unwrap();
+                let a = self.reg(args[0]);
+                let cmp = self.reg(args[1]);
+                let nv = self.reg(args[2]);
+                self.push(MInst::mv(d, cmp));
+                self.push(MInst::rrr(Op::AMOCAS, d, a, nv));
+            }
+            Intr::VoteAll | Intr::VoteAny | Intr::Ballot => {
+                let d = dst.unwrap();
+                let p = self.reg(args[0]);
+                let op = match intr {
+                    Intr::VoteAll => Op::VOTEALL,
+                    Intr::VoteAny => Op::VOTEANY,
+                    _ => Op::BALLOT,
+                };
+                self.push(MInst::rrr(op, d, p, NONE));
+            }
+            Intr::Shfl => {
+                let d = dst.unwrap();
+                let v = self.reg(args[0]);
+                let l = self.reg(args[1]);
+                self.push(MInst::rrr(Op::SHFL, d, v, l));
+            }
+            Intr::Join => self.push(MInst::new(Op::JOIN)),
+            Intr::Tmc => {
+                let m = self.reg(args[0]);
+                let mut t = MInst::new(Op::TMC);
+                t.rs1 = m;
+                self.push(t);
+            }
+            Intr::Mask => {
+                let d = dst.unwrap();
+                self.push(MInst::rrr(Op::MASK, d, NONE, NONE));
+            }
+            Intr::PrintI | Intr::PrintF => {
+                let v = self.reg(args[0]);
+                let mut p = MInst::new(if matches!(intr, Intr::PrintI) {
+                    Op::PRINTI
+                } else {
+                    Op::PRINTF
+                });
+                p.rs1 = v;
+                self.push(p);
+            }
+            Intr::WorkItem(_) => {
+                panic!("work-item intrinsic survived to isel — schedule pass missing")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Param};
+
+    fn gaddrs() -> crate::backend::emit::LayoutInfo {
+        Default::default()
+    }
+
+    #[test]
+    fn selects_arith_kernel() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "p".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "x".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        {
+            let mut b = Builder::new(&mut f);
+            let v = b.add(Val::Arg(1), Val::ci(3));
+            let g = b.gep(Val::Arg(0), v, 4);
+            b.store(g, v);
+            b.ret(None);
+        }
+        let fid = m.add_func(f);
+        let mf = select_function(&m, fid, &gaddrs());
+        let ops: Vec<Op> = mf.blocks[0].insts.iter().map(|i| i.op).collect();
+        assert!(ops.contains(&Op::ADDI)); // add with immediate
+        assert!(ops.contains(&Op::SLLI)); // gep scaling
+        assert!(ops.contains(&Op::SW));
+        assert!(ops.contains(&Op::JALR)); // ret
+    }
+
+    #[test]
+    fn phi_copies_on_preds() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "c".into(),
+                ty: Type::I1,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let j = f.add_block("j");
+        let mut b = Builder::new(&mut f);
+        b.cond_br(Val::Arg(0), t, e);
+        b.set_block(t);
+        b.br(j);
+        b.set_block(e);
+        b.br(j);
+        b.set_block(j);
+        let p = b.phi(Type::I32, vec![(t, Val::ci(1)), (e, Val::ci(2))]);
+        b.ret(Some(p));
+        let fid = m.add_func(f);
+        let mf = select_function(&m, fid, &gaddrs());
+        // Both preds of j end with [LI, MOV, J].
+        for bi in [t.idx(), e.idx()] {
+            let ops: Vec<Op> = mf.blocks[bi].insts.iter().map(|i| i.op).collect();
+            assert!(ops.contains(&Op::MOV), "block {bi} ops {ops:?}");
+            assert_eq!(*ops.last().unwrap(), Op::J);
+        }
+    }
+
+    #[test]
+    fn split_lowering_carries_targets() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let j = f.add_block("j");
+        let mut b = Builder::new(&mut f);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let c = b.icmp(ICmp::Slt, lane, Val::ci(4));
+        b.split_br(c, t, e, j);
+        b.set_block(t);
+        b.br(j);
+        b.set_block(e);
+        b.br(j);
+        b.set_block(j);
+        b.intr(Intr::Join, vec![]);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let mf = select_function(&m, fid, &gaddrs());
+        let split = mf.blocks[0]
+            .insts
+            .iter()
+            .find(|i| i.op == Op::SPLIT)
+            .unwrap();
+        assert_eq!(split.t1, Some(t.idx()));
+        assert_eq!(split.t2, Some(e.idx()));
+        assert_eq!(split.tjoin, Some(j.idx()));
+        assert!(mf.blocks[j.idx()].insts.iter().any(|i| i.op == Op::JOIN));
+    }
+
+    #[test]
+    fn critical_edge_splitting_preserves_ipdom() {
+        // SplitBr with else == ipdom (critical edge): the stub must go on
+        // the else edge while the reconvergence field keeps pointing at j.
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let t = f.add_block("t");
+        let j = f.add_block("j");
+        let mut b = Builder::new(&mut f);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let c = b.icmp(ICmp::Slt, lane, Val::ci(4));
+        b.split_br(c, t, j, j);
+        b.set_block(t);
+        b.br(j);
+        b.set_block(j);
+        b.intr(Intr::Join, vec![]);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let mf = select_function(&m, fid, &gaddrs());
+        let split = mf.blocks[0]
+            .insts
+            .iter()
+            .find(|i| i.op == Op::SPLIT)
+            .unwrap();
+        assert_eq!(split.tjoin, Some(j.idx()));
+        assert_ne!(split.t2, Some(j.idx()), "else edge must be split");
+    }
+}

@@ -1,0 +1,315 @@
+//! Machine IR: virtual-register instructions over the target ISA, one
+//! MBlock per IR block, with explicit branch-target block indices that the
+//! emitter later resolves to instruction addresses.
+
+use super::isa::{is_float_reg, Op};
+
+/// Machine register: `< 64` = physical (x0..x31, f0..f31), `>= 64` virtual.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct MReg(pub u32);
+
+pub const NONE: MReg = MReg(u32::MAX);
+
+impl MReg {
+    pub fn phys(r: u8) -> MReg {
+        MReg(r as u32)
+    }
+    pub fn is_phys(self) -> bool {
+        self.0 < 64
+    }
+    pub fn is_virt(self) -> bool {
+        self.0 >= 64 && self != NONE
+    }
+    pub fn is_none(self) -> bool {
+        self == NONE
+    }
+    pub fn virt_idx(self) -> usize {
+        (self.0 - 64) as usize
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MInst {
+    pub op: Op,
+    pub rd: MReg,
+    pub rs1: MReg,
+    pub rs2: MReg,
+    pub imm: i64,
+    /// Primary branch target (then / body / jump).
+    pub t1: Option<usize>,
+    /// Secondary target (split else / pred exit / condbr fallthrough jump).
+    pub t2: Option<usize>,
+    /// Split reconvergence block.
+    pub tjoin: Option<usize>,
+    /// Call target function name (JAL).
+    pub callee: Option<String>,
+    /// Layout swapped split arms without fixing negation — the Fig. 5(a)
+    /// hazard marker the safety net repairs.
+    pub swapped: bool,
+}
+
+impl MInst {
+    pub fn new(op: Op) -> MInst {
+        MInst {
+            op,
+            rd: NONE,
+            rs1: NONE,
+            rs2: NONE,
+            imm: 0,
+            t1: None,
+            t2: None,
+            tjoin: None,
+            callee: None,
+            swapped: false,
+        }
+    }
+    pub fn rrr(op: Op, rd: MReg, rs1: MReg, rs2: MReg) -> MInst {
+        MInst {
+            rd,
+            rs1,
+            rs2,
+            ..MInst::new(op)
+        }
+    }
+    pub fn rri(op: Op, rd: MReg, rs1: MReg, imm: i64) -> MInst {
+        MInst {
+            rd,
+            rs1,
+            imm,
+            ..MInst::new(op)
+        }
+    }
+    pub fn li(rd: MReg, imm: i64) -> MInst {
+        MInst {
+            rd,
+            imm,
+            ..MInst::new(Op::LI)
+        }
+    }
+    pub fn mv(rd: MReg, rs1: MReg) -> MInst {
+        MInst {
+            rd,
+            rs1,
+            ..MInst::new(Op::MOV)
+        }
+    }
+
+    /// Registers read by this instruction.
+    pub fn uses(&self) -> Vec<MReg> {
+        let mut v = vec![];
+        match self.op {
+            // rd is also a source for conditional-move and CAS.
+            Op::CMOV | Op::AMOCAS => {
+                if !self.rd.is_none() {
+                    v.push(self.rd);
+                }
+            }
+            _ => {}
+        }
+        if !self.rs1.is_none() {
+            v.push(self.rs1);
+        }
+        if !self.rs2.is_none() {
+            v.push(self.rs2);
+        }
+        v
+    }
+
+    /// Register written (if any).
+    pub fn def(&self) -> Option<MReg> {
+        if self.rd.is_none() {
+            None
+        } else {
+            match self.op {
+                Op::SW | Op::BAR | Op::TMC | Op::PRED | Op::SPLIT | Op::SPLITN | Op::PRINTI
+                | Op::PRINTF | Op::WSPAWN => None,
+                _ => Some(self.rd),
+            }
+        }
+    }
+
+    pub fn is_terminator(&self) -> bool {
+        matches!(
+            self.op,
+            Op::J | Op::JALR | Op::ECALL | Op::SPLIT | Op::SPLITN | Op::PRED
+        ) && self.callee.is_none()
+    }
+
+    pub fn is_call(&self) -> bool {
+        self.op == Op::JAL && self.callee.is_some()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MBlock {
+    pub insts: Vec<MInst>,
+    pub name: String,
+}
+
+impl MBlock {
+    /// Successor block indices (for liveness / layout).
+    pub fn succs(&self) -> Vec<usize> {
+        let mut out = vec![];
+        for i in &self.insts {
+            if i.is_call() {
+                continue;
+            }
+            match i.op {
+                Op::J | Op::BEQZ | Op::BNEZ => {
+                    if let Some(t) = i.t1 {
+                        out.push(t);
+                    }
+                }
+                Op::SPLIT | Op::SPLITN | Op::PRED => {
+                    if let Some(t) = i.t1 {
+                        out.push(t);
+                    }
+                    if let Some(t) = i.t2 {
+                        out.push(t);
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MFunction {
+    pub name: String,
+    pub blocks: Vec<MBlock>,
+    /// Virtual register count and classes (true = float).
+    pub vreg_float: Vec<bool>,
+    /// Bytes of alloca frame space (before spills).
+    pub frame_size: u32,
+    /// Extra spill bytes (filled by regalloc).
+    pub spill_size: u32,
+    /// Does this function contain calls (needs ra save)?
+    pub has_calls: bool,
+    /// Shared-memory bytes required (from IR).
+    pub local_mem_size: u32,
+}
+
+impl MFunction {
+    pub fn new_vreg(&mut self, float: bool) -> MReg {
+        self.vreg_float.push(float);
+        MReg(64 + self.vreg_float.len() as u32 - 1)
+    }
+    pub fn is_float(&self, r: MReg) -> bool {
+        if r.is_virt() {
+            self.vreg_float[r.virt_idx()]
+        } else {
+            is_float_reg(r.0 as u8)
+        }
+    }
+    pub fn num_insts(&self) -> usize {
+        self.blocks.iter().map(|b| b.insts.len()).sum()
+    }
+}
+
+/// Per-block liveness (backward dataflow over vregs only).
+pub fn liveness(f: &MFunction) -> (Vec<std::collections::HashSet<MReg>>, Vec<std::collections::HashSet<MReg>>) {
+    let n = f.blocks.len();
+    let mut live_in: Vec<std::collections::HashSet<MReg>> = vec![Default::default(); n];
+    let mut live_out: Vec<std::collections::HashSet<MReg>> = vec![Default::default(); n];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for b in (0..n).rev() {
+            let mut out: std::collections::HashSet<MReg> = Default::default();
+            for s in f.blocks[b].succs() {
+                out.extend(live_in[s].iter().copied());
+            }
+            let mut inn = out.clone();
+            for i in f.blocks[b].insts.iter().rev() {
+                if let Some(d) = i.def() {
+                    if d.is_virt() {
+                        inn.remove(&d);
+                    }
+                }
+                for u in i.uses() {
+                    if u.is_virt() {
+                        inn.insert(u);
+                    }
+                }
+            }
+            if out != live_out[b] || inn != live_in[b] {
+                live_out[b] = out;
+                live_in[b] = inn;
+                changed = true;
+            }
+        }
+    }
+    (live_in, live_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uses_defs() {
+        let add = MInst::rrr(Op::ADD, MReg(64), MReg(65), MReg(66));
+        assert_eq!(add.def(), Some(MReg(64)));
+        assert_eq!(add.uses(), vec![MReg(65), MReg(66)]);
+        let sw = MInst {
+            rs1: MReg(64),
+            rs2: MReg(65),
+            rd: NONE,
+            ..MInst::new(Op::SW)
+        };
+        assert_eq!(sw.def(), None);
+        let cmov = MInst::rrr(Op::CMOV, MReg(64), MReg(65), MReg(66));
+        assert!(cmov.uses().contains(&MReg(64)));
+    }
+
+    #[test]
+    fn block_succs() {
+        let mut b = MBlock::default();
+        let mut bnez = MInst::new(Op::BNEZ);
+        bnez.t1 = Some(2);
+        b.insts.push(bnez);
+        let mut j = MInst::new(Op::J);
+        j.t1 = Some(3);
+        b.insts.push(j);
+        assert_eq!(b.succs(), vec![2, 3]);
+    }
+
+    #[test]
+    fn liveness_simple_loop() {
+        // b0: v0 = li; j b1   b1: v1 = add v0, v0; bnez v1 -> b1; j b2  b2: ecall
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default(), MBlock::default(), MBlock::default()],
+            vreg_float: vec![false, false],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let v0 = MReg(64);
+        let v1 = MReg(65);
+        f.blocks[0].insts.push(MInst::li(v0, 3));
+        let mut j = MInst::new(Op::J);
+        j.t1 = Some(1);
+        f.blocks[0].insts.push(j);
+        f.blocks[1].insts.push(MInst::rrr(Op::ADD, v1, v0, v0));
+        let mut bnez = MInst {
+            rs1: v1,
+            ..MInst::new(Op::BNEZ)
+        };
+        bnez.t1 = Some(1);
+        f.blocks[1].insts.push(bnez);
+        let mut j2 = MInst::new(Op::J);
+        j2.t1 = Some(2);
+        f.blocks[1].insts.push(j2);
+        f.blocks[2].insts.push(MInst::new(Op::ECALL));
+        let (live_in, live_out) = liveness(&f);
+        assert!(live_in[1].contains(&v0));
+        assert!(live_out[0].contains(&v0));
+        assert!(live_out[1].contains(&v0)); // loop back edge keeps v0 live
+        assert!(!live_in[2].contains(&v0));
+    }
+}

@@ -1,0 +1,321 @@
+//! MIR cleanups: copy propagation, dead-code elimination, and the final
+//! block-layout / branch-simplification pass (paper §4.4 "a final
+//! machine-code optimization pass then eliminates redundant register-copy
+//! instructions").
+//!
+//! The layout pass may put a split's *else* arm on the fallthrough path,
+//! swapping the split's arms — this is exactly the Fig. 5(a) "branch
+//! reordering" hazard: the swap is recorded on the instruction but the
+//! negate flag is NOT fixed here; the safety net repairs it. (Disabling
+//! the safety net demonstrably mis-executes — see the safety-net tests.)
+
+use super::isa::Op;
+use super::mir::{MFunction, MReg};
+use std::collections::HashMap;
+
+/// Forward-propagate single-def → single-def virtual copies; fold LI
+/// chains. Returns copies removed.
+pub fn copy_prop(f: &mut MFunction) -> usize {
+    // Count defs per vreg.
+    let mut defs: HashMap<MReg, u32> = HashMap::new();
+    for b in &f.blocks {
+        for i in &b.insts {
+            if let Some(d) = i.def() {
+                if d.is_virt() {
+                    *defs.entry(d).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    // Map: dst -> src for removable MOVs.
+    let mut fwd: HashMap<MReg, MReg> = HashMap::new();
+    for b in &f.blocks {
+        for i in &b.insts {
+            if i.op == Op::MOV
+                && i.rd.is_virt()
+                && i.rs1.is_virt()
+                && defs.get(&i.rd) == Some(&1)
+                && defs.get(&i.rs1) == Some(&1)
+            {
+                fwd.insert(i.rd, i.rs1);
+            }
+        }
+    }
+    if fwd.is_empty() {
+        return 0;
+    }
+    let resolve = |mut r: MReg| -> MReg {
+        let mut guard = 0;
+        while let Some(&n) = fwd.get(&r) {
+            r = n;
+            guard += 1;
+            if guard > 64 {
+                break;
+            }
+        }
+        r
+    };
+    let mut removed = 0;
+    for b in f.blocks.iter_mut() {
+        b.insts.retain(|i| {
+            if i.op == Op::MOV && fwd.contains_key(&i.rd) {
+                removed += 1;
+                false
+            } else {
+                true
+            }
+        });
+        for i in b.insts.iter_mut() {
+            if i.rs1.is_virt() {
+                i.rs1 = resolve(i.rs1);
+            }
+            if i.rs2.is_virt() {
+                i.rs2 = resolve(i.rs2);
+            }
+            if matches!(i.op, Op::CMOV | Op::AMOCAS) && i.rd.is_virt() {
+                // rd is read: must not be forwarded (it is also written).
+            }
+        }
+    }
+    removed
+}
+
+/// Remove side-effect-free instructions whose virtual def is never used.
+pub fn dce(f: &mut MFunction) -> usize {
+    let mut removed = 0;
+    loop {
+        let mut used: HashMap<MReg, u32> = HashMap::new();
+        for b in &f.blocks {
+            for i in &b.insts {
+                for u in i.uses() {
+                    *used.entry(u).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut change = 0;
+        for b in f.blocks.iter_mut() {
+            b.insts.retain(|i| {
+                let removable = matches!(
+                    i.op.class(),
+                    super::isa::OpClass::Alu | super::isa::OpClass::Mul | super::isa::OpClass::Div | super::isa::OpClass::Fpu | super::isa::OpClass::FDiv | super::isa::OpClass::Sfu
+                ) && i.op != Op::CMOV
+                    && !i.is_terminator()
+                    && i.def().map(|d| d.is_virt() && used.get(&d).is_none()).unwrap_or(false);
+                if removable {
+                    change += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        removed += change;
+        if change == 0 {
+            return removed;
+        }
+    }
+}
+
+/// Block layout: order blocks greedily for fallthrough, then simplify
+/// branches. Returns the new order (old indices). Rewrites all branch
+/// targets in terms of the *new* indices and enforces the ISA's implicit
+/// fallthrough rules (SPLIT falls through to its then-arm, PRED to its
+/// body).
+pub fn layout(f: &mut MFunction) -> Vec<usize> {
+    let n = f.blocks.len();
+    // Greedy chaining from entry.
+    let mut placed = vec![false; n];
+    let mut order: Vec<usize> = vec![];
+    let mut work: Vec<usize> = vec![0];
+    while order.len() < n {
+        let cur = match work.pop() {
+            Some(c) if !placed[c] => c,
+            Some(_) => continue,
+            None => match (0..n).find(|&i| !placed[i] && !f.blocks[i].insts.is_empty()) {
+                Some(c) => c,
+                None => break,
+            },
+        };
+        let mut c = cur;
+        loop {
+            placed[c] = true;
+            order.push(c);
+            // Preferred fallthrough successor.
+            let last = f.blocks[c].insts.last().cloned();
+            let next = match last {
+                Some(i) => match i.op {
+                    Op::J => i.t1,
+                    Op::SPLIT | Op::SPLITN => i.t1, // then-arm falls through
+                    Op::PRED => i.t1,               // body falls through
+                    _ => None,
+                },
+                None => None,
+            };
+            // Queue other successors.
+            for s in f.blocks[c].succs() {
+                if !placed[s] {
+                    work.push(s);
+                }
+            }
+            match next {
+                Some(nx) if !placed[nx] => c = nx,
+                _ => break,
+            }
+        }
+    }
+    // Append any stragglers (unreachable blocks with content).
+    for i in 0..n {
+        if !placed[i] && !f.blocks[i].insts.is_empty() {
+            order.push(i);
+            placed[i] = true;
+        }
+    }
+    // Remap blocks.
+    let mut new_index = vec![usize::MAX; n];
+    for (new_i, &old) in order.iter().enumerate() {
+        new_index[old] = new_i;
+    }
+    let mut new_blocks: Vec<super::mir::MBlock> =
+        order.iter().map(|&o| f.blocks[o].clone()).collect();
+    for b in new_blocks.iter_mut() {
+        for i in b.insts.iter_mut() {
+            i.t1 = i.t1.map(|t| new_index[t]);
+            i.t2 = i.t2.map(|t| new_index[t]);
+            i.tjoin = i.tjoin.map(|t| new_index[t]);
+        }
+    }
+    f.blocks = new_blocks;
+
+    // Branch simplification + fallthrough enforcement.
+    let nb = f.blocks.len();
+    for bi in 0..nb {
+        let next = bi + 1;
+        let Some(last) = f.blocks[bi].insts.last().cloned() else {
+            continue;
+        };
+        match last.op {
+            Op::J => {
+                if last.t1 == Some(next) {
+                    f.blocks[bi].insts.pop();
+                }
+            }
+            Op::BNEZ | Op::BEQZ => {}
+            Op::SPLIT | Op::SPLITN => {
+                let li = f.blocks[bi].insts.len() - 1;
+                if last.t1 == Some(next) {
+                    // already falls through
+                } else if last.t2 == Some(next) {
+                    // Swap arms for fallthrough — the Fig. 5(a) hazard:
+                    // negation is NOT fixed here.
+                    let inst = &mut f.blocks[bi].insts[li];
+                    std::mem::swap(&mut inst.t1, &mut inst.t2);
+                    inst.swapped = !inst.swapped;
+                } else {
+                    // Neither arm is next: the emitter inserts an explicit
+                    // `j then` after the split (the split itself only
+                    // transfers control on the else/empty-then path).
+                    let _ = li;
+                }
+            }
+            _ => {}
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mir::{MBlock, MInst, NONE};
+
+    #[test]
+    fn copy_prop_folds_chain() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        let c = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 7));
+        f.blocks[0].insts.push(MInst::mv(b, a));
+        f.blocks[0].insts.push(MInst::mv(c, b));
+        f.blocks[0]
+            .insts
+            .push(MInst::rrr(Op::ADD, MReg::phys(10), c, c));
+        let removed = copy_prop(&mut f);
+        assert_eq!(removed, 2);
+        let add = f.blocks[0].insts.iter().find(|i| i.op == Op::ADD).unwrap();
+        assert_eq!(add.rs1, a);
+        assert_eq!(add.rs2, a);
+    }
+
+    #[test]
+    fn dce_removes_dead_li() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 7));
+        f.blocks[0].insts.push(MInst::li(b, 9));
+        f.blocks[0]
+            .insts
+            .push(MInst::rrr(Op::ADD, MReg::phys(10), a, a));
+        assert_eq!(dce(&mut f), 1);
+        assert!(!f.blocks[0].insts.iter().any(|i| i.rd == b));
+    }
+
+    #[test]
+    fn layout_orders_fallthrough_and_marks_swaps() {
+        // b0: split then=b2 else=b1 join=b3 ; b1: j b3 ; b2: j b3 ; b3: ret
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![
+                MBlock::default(),
+                MBlock::default(),
+                MBlock::default(),
+                MBlock::default(),
+            ],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let mut s = MInst::new(Op::SPLIT);
+        s.rs1 = MReg::phys(5);
+        s.t1 = Some(2);
+        s.t2 = Some(1);
+        s.tjoin = Some(3);
+        f.blocks[0].insts.push(s);
+        let mut j1 = MInst::new(Op::J);
+        j1.t1 = Some(3);
+        f.blocks[1].insts.push(j1.clone());
+        f.blocks[2].insts.push(j1.clone());
+        f.blocks[3].insts.push(MInst {
+            rd: MReg::phys(0),
+            rs1: MReg::phys(1),
+            rs2: NONE,
+            ..MInst::new(Op::JALR)
+        });
+        let order = layout(&mut f);
+        // Entry first; then-arm (old b2) should follow the split.
+        assert_eq!(order[0], 0);
+        assert_eq!(order[1], 2);
+        let split = &f.blocks[0].insts[0];
+        assert_eq!(split.t1, Some(1)); // new index of old b2
+        assert!(!split.swapped);
+    }
+}

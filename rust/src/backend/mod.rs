@@ -1,0 +1,13 @@
+//! The VOLT back-end (paper §4.4): Vortex ISA table, instruction
+//! selection, linear-scan register allocation, machine-IR cleanups, the
+//! Fig. 5 divergence safety net, and final encoding/linking.
+
+pub mod emit;
+pub mod isa;
+pub mod isel;
+pub mod mir;
+pub mod mir_opt;
+pub mod regalloc;
+pub mod safety_net;
+
+pub use emit::{build_image, BackendOptions, ProgramImage};

@@ -1,0 +1,397 @@
+//! Linear-scan register allocation with spilling.
+//!
+//! Whole-interval linear scan (Poletto–Sarkar) over the MIR: liveness from
+//! the per-block dataflow in [`super::mir::liveness`], intervals extended
+//! across loop back edges. Values live across calls are spilled (the ABI
+//! treats every register as caller-saved; the middle-end's inlining makes
+//! surviving calls rare). Spilled values are rematerialized through
+//! reserved scratch registers (x30/x31, f30/f31).
+
+use super::isa::Op;
+use super::mir::{liveness, MFunction, MInst, MReg};
+use std::collections::HashMap;
+
+const T5: u32 = 30;
+const T6: u32 = 31;
+/// Scratch for spilled read-modify-write destinations (CMOV/AMOCAS): must
+/// not collide with the rs1/rs2 reload scratches.
+const T7: u32 = 29;
+const FT5: u32 = 62;
+const FT6: u32 = 63;
+const FT7: u32 = 61;
+
+#[derive(Debug, Default)]
+pub struct RegAllocReport {
+    pub assigned: usize,
+    pub spilled: usize,
+}
+
+struct Interval {
+    vreg: MReg,
+    start: u32,
+    end: u32,
+    float: bool,
+    crosses_call: bool,
+}
+
+pub fn allocate(f: &mut MFunction) -> RegAllocReport {
+    let mut report = RegAllocReport::default();
+    // Linear numbering.
+    let mut pos = 0u32;
+    let mut block_range: Vec<(u32, u32)> = vec![];
+    let mut call_positions: Vec<u32> = vec![];
+    for b in &f.blocks {
+        let s = pos;
+        for i in &b.insts {
+            if i.is_call() {
+                call_positions.push(pos);
+            }
+            pos += 1;
+        }
+        block_range.push((s, pos));
+    }
+    let (live_in, live_out) = liveness(f);
+    // Build intervals.
+    let mut ivs: HashMap<MReg, (u32, u32)> = HashMap::new();
+    let extend = |r: MReg, p: u32, ivs: &mut HashMap<MReg, (u32, u32)>| {
+        let e = ivs.entry(r).or_insert((p, p));
+        e.0 = e.0.min(p);
+        e.1 = e.1.max(p);
+    };
+    let mut pos = 0u32;
+    for (bi, b) in f.blocks.iter().enumerate() {
+        for r in live_in[bi].iter() {
+            extend(*r, block_range[bi].0, &mut ivs);
+        }
+        for r in live_out[bi].iter() {
+            extend(*r, block_range[bi].1.saturating_sub(1).max(block_range[bi].0), &mut ivs);
+        }
+        for i in &b.insts {
+            for u in i.uses() {
+                if u.is_virt() {
+                    extend(u, pos, &mut ivs);
+                }
+            }
+            if let Some(d) = i.def() {
+                if d.is_virt() {
+                    extend(d, pos, &mut ivs);
+                }
+            }
+            pos += 1;
+        }
+    }
+    let mut intervals: Vec<Interval> = ivs
+        .into_iter()
+        .map(|(vreg, (start, end))| Interval {
+            vreg,
+            start,
+            end,
+            float: f.is_float(vreg),
+            crosses_call: call_positions.iter().any(|&c| start < c && c < end),
+        })
+        .collect();
+    intervals.sort_by_key(|iv| iv.start);
+
+    // Register pools (scratch + special registers excluded).
+    let int_pool: Vec<u32> = if f.has_calls {
+        (5..=9).chain(18..=28).collect()
+    } else {
+        (5..=28).collect()
+    };
+    let float_pool: Vec<u32> = if f.has_calls {
+        (32..=41).chain(50..=60).collect()
+    } else {
+        (32..=60).collect()
+    };
+
+    let mut assignment: HashMap<MReg, u32> = HashMap::new();
+    let mut spills: HashMap<MReg, u32> = HashMap::new(); // vreg -> slot index
+    let mut next_slot = 0u32;
+    let mut active: Vec<(u32 /*end*/, MReg, u32 /*phys*/)> = vec![];
+    let mut free_int = int_pool.clone();
+    let mut free_float = float_pool.clone();
+    for iv in &intervals {
+        // Expire.
+        active.retain(|&(end, _, phys)| {
+            if end < iv.start {
+                if phys >= 32 {
+                    free_float.push(phys);
+                } else {
+                    free_int.push(phys);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        if iv.crosses_call {
+            spills.insert(iv.vreg, next_slot);
+            next_slot += 1;
+            report.spilled += 1;
+            continue;
+        }
+        let pool = if iv.float { &mut free_float } else { &mut free_int };
+        if let Some(phys) = pool.pop() {
+            assignment.insert(iv.vreg, phys);
+            active.push((iv.end, iv.vreg, phys));
+            report.assigned += 1;
+        } else {
+            // Spill the interval with the furthest end (current or active
+            // of the same class).
+            let victim = active
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, _, p))| (*p >= 32) == iv.float)
+                .max_by_key(|(_, (end, _, _))| *end);
+            match victim {
+                Some((ai, &(aend, avreg, aphys))) if aend > iv.end => {
+                    active.remove(ai);
+                    assignment.remove(&avreg);
+                    spills.insert(avreg, next_slot);
+                    next_slot += 1;
+                    report.spilled += 1;
+                    assignment.insert(iv.vreg, aphys);
+                    active.push((iv.end, iv.vreg, aphys));
+                }
+                _ => {
+                    spills.insert(iv.vreg, next_slot);
+                    next_slot += 1;
+                    report.spilled += 1;
+                }
+            }
+        }
+    }
+    f.spill_size = next_slot * 4;
+
+    // Rewrite: apply assignments, insert spill loads/stores.
+    let frame_base = f.frame_size; // spill slots sit above the allocas
+    for b in f.blocks.iter_mut() {
+        let mut out: Vec<MInst> = Vec::with_capacity(b.insts.len());
+        for inst in b.insts.drain(..) {
+            let mut i = inst;
+            let mut pre: Vec<MInst> = vec![];
+            let mut post: Vec<MInst> = vec![];
+            let map_use = |r: MReg,
+                           scratch: u32,
+                           pre: &mut Vec<MInst>,
+                           assignment: &HashMap<MReg, u32>,
+                           spills: &HashMap<MReg, u32>|
+             -> MReg {
+                if !r.is_virt() {
+                    return r;
+                }
+                if let Some(&p) = assignment.get(&r) {
+                    return MReg(p);
+                }
+                let slot = spills[&r];
+                pre.push(MInst::rri(
+                    Op::LW,
+                    MReg(scratch),
+                    MReg::phys(super::isa::SP),
+                    (frame_base + slot * 4) as i64,
+                ));
+                MReg(scratch)
+            };
+            // rd-as-use ops (CMOV, AMOCAS) read rd too.
+            let rd_is_use = matches!(i.op, Op::CMOV | Op::AMOCAS);
+            if !i.rs1.is_none() {
+                let sc = if i.rs1.is_virt() && f.vreg_float[i.rs1.virt_idx()] {
+                    FT5
+                } else {
+                    T5
+                };
+                i.rs1 = map_use(i.rs1, sc, &mut pre, &assignment, &spills);
+            }
+            if !i.rs2.is_none() {
+                let sc = if i.rs2.is_virt() && f.vreg_float[i.rs2.virt_idx()] {
+                    FT6
+                } else {
+                    T6
+                };
+                i.rs2 = map_use(i.rs2, sc, &mut pre, &assignment, &spills);
+            }
+            if !i.rd.is_none() && i.rd.is_virt() {
+                let r = i.rd;
+                if let Some(&p) = assignment.get(&r) {
+                    i.rd = MReg(p);
+                } else {
+                    let slot = spills[&r];
+                    // rd shares the instruction with rs1/rs2 reloads when it
+                    // is also a source (CMOV/AMOCAS): use a dedicated
+                    // scratch so the pre-load cannot clobber them.
+                    let sc = match (rd_is_use, f.vreg_float[r.virt_idx()]) {
+                        (true, true) => FT7,
+                        (true, false) => T7,
+                        (false, true) => FT5,
+                        (false, false) => T5,
+                    };
+                    if rd_is_use {
+                        pre.push(MInst::rri(
+                            Op::LW,
+                            MReg(sc),
+                            MReg::phys(super::isa::SP),
+                            (frame_base + slot * 4) as i64,
+                        ));
+                    }
+                    i.rd = MReg(sc);
+                    if i.def().is_some() {
+                        post.push(MInst {
+                            op: Op::SW,
+                            rd: super::mir::NONE,
+                            rs1: MReg::phys(super::isa::SP),
+                            rs2: MReg(sc),
+                            imm: (frame_base + slot * 4) as i64,
+                            ..MInst::new(Op::SW)
+                        });
+                    }
+                }
+            }
+            out.extend(pre);
+            out.push(i);
+            out.extend(post);
+        }
+        b.insts = out;
+    }
+    report
+}
+
+/// Insert prologue/epilogue once frame + spill sizes are final.
+pub fn finalize_frame(f: &mut MFunction) {
+    let ra_bytes = if f.has_calls { 4 } else { 0 };
+    let total = (f.frame_size + f.spill_size + ra_bytes + 7) & !7;
+    if total == 0 {
+        return;
+    }
+    let sp = MReg::phys(super::isa::SP);
+    let ra = MReg::phys(super::isa::RA);
+    // Prologue at the very beginning.
+    let mut pro = vec![MInst::rri(Op::ADDI, sp, sp, -(total as i64))];
+    if f.has_calls {
+        pro.push(MInst {
+            op: Op::SW,
+            rd: super::mir::NONE,
+            rs1: sp,
+            rs2: ra,
+            imm: (total - 4) as i64,
+            ..MInst::new(Op::SW)
+        });
+    }
+    let entry = &mut f.blocks[0].insts;
+    for (k, p) in pro.into_iter().enumerate() {
+        entry.insert(k, p);
+    }
+    // Epilogue before every return (JALR x0, ra).
+    for b in f.blocks.iter_mut() {
+        let mut k = 0;
+        while k < b.insts.len() {
+            let is_ret = b.insts[k].op == Op::JALR
+                && b.insts[k].rd == MReg::phys(0)
+                && b.insts[k].callee.is_none();
+            if is_ret {
+                let mut epi = vec![];
+                if f.has_calls {
+                    epi.push(MInst::rri(Op::LW, ra, sp, (total - 4) as i64));
+                }
+                epi.push(MInst::rri(Op::ADDI, sp, sp, total as i64));
+                for (j, e) in epi.into_iter().enumerate() {
+                    b.insts.insert(k + j, e);
+                    k += 1;
+                }
+            }
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mir::MBlock;
+
+    fn func_with_pressure(n: usize) -> MFunction {
+        // n live values summed at the end — forces spills for large n.
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let regs: Vec<MReg> = (0..n).map(|_| f.new_vreg(false)).collect();
+        for (k, &r) in regs.iter().enumerate() {
+            f.blocks[0].insts.push(MInst::li(r, k as i64));
+        }
+        let acc = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(acc, 0));
+        for &r in &regs {
+            f.blocks[0].insts.push(MInst::rrr(Op::ADD, acc, acc, r));
+        }
+        let mut ret = MInst::new(Op::JALR);
+        ret.rd = MReg::phys(0);
+        ret.rs1 = MReg::phys(super::super::isa::RA);
+        f.blocks[0].insts.push(MInst::mv(MReg::phys(10), acc));
+        f.blocks[0].insts.push(ret);
+        f
+    }
+
+    #[test]
+    fn allocates_without_spills_when_fits() {
+        let mut f = func_with_pressure(8);
+        let rep = allocate(&mut f);
+        assert_eq!(rep.spilled, 0);
+        // No virtual registers remain.
+        for b in &f.blocks {
+            for i in &b.insts {
+                assert!(!i.rd.is_virt() && !i.rs1.is_virt() && !i.rs2.is_virt(), "{i:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn spills_under_pressure() {
+        let mut f = func_with_pressure(40);
+        let rep = allocate(&mut f);
+        assert!(rep.spilled > 0);
+        assert!(f.spill_size >= 4 * rep.spilled as u32);
+        for b in &f.blocks {
+            for i in &b.insts {
+                assert!(!i.rd.is_virt() && !i.rs1.is_virt() && !i.rs2.is_virt(), "{i:?}");
+            }
+        }
+        // Spill traffic exists.
+        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::SW));
+        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::LW));
+    }
+
+    #[test]
+    fn call_crossing_values_are_spilled() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: true,
+            local_mem_size: 0,
+        };
+        let v = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(v, 42));
+        let mut call = MInst::new(Op::JAL);
+        call.rd = MReg::phys(super::super::isa::RA);
+        call.callee = Some("g".into());
+        f.blocks[0].insts.push(call);
+        f.blocks[0].insts.push(MInst::mv(MReg::phys(10), v)); // use after call
+        let mut ret = MInst::new(Op::JALR);
+        ret.rd = MReg::phys(0);
+        ret.rs1 = MReg::phys(super::super::isa::RA);
+        f.blocks[0].insts.push(ret);
+        let rep = allocate(&mut f);
+        assert_eq!(rep.spilled, 1);
+        finalize_frame(&mut f);
+        // prologue adjusts sp and saves ra.
+        assert_eq!(f.blocks[0].insts[0].op, Op::ADDI);
+        assert!(f.blocks[0].insts[1].op == Op::SW);
+    }
+}

@@ -1,0 +1,310 @@
+//! The divergence **safety net** — paper §4.3 / Fig. 5.
+//!
+//! VOLT plans divergence at the IR level; late machine passes can still
+//! break the invariants. This "lightweight MIR safety net", run as the
+//! *last* machine pass after register allocation, repairs or rejects:
+//!
+//! * **(a) branch reordering** — the layout pass may swap a split's arms
+//!   for fallthrough without updating the predicate sense; the split's
+//!   `swapped` marker is consumed here by flipping `vx_split` ↔
+//!   `vx_split.n` so lane semantics align.
+//! * **(b) predicate drift** — spill rematerialization may re-derive the
+//!   branch predicate into a different register than the one `vx_split`
+//!   reads. The net *unifies* split and predicate by checking the
+//!   reaching definition inside the block and, when the defining compare's
+//!   operands are still intact, re-materializing the compare immediately
+//!   before the split (back-to-back, as the paper describes).
+//! * **(c) divergent select** — when ZiCond is off the IR contract says no
+//!   `select` survives to isel; any `vx_cmov` found is an error.
+//!
+//! It finally *verifies* split/join pairing: every split's reconvergence
+//! block must begin with `vx_join`, and every `vx_pred` exit must be a
+//! block whose live mask was saved (structural check: the pred's mask
+//! operand must be a `vx_active_threads` result — tracked by the emitter's
+//! metadata in debug builds; here we check the join pairing, the part that
+//! is statically decidable).
+
+use super::isa::Op;
+use super::mir::MFunction;
+
+#[derive(Debug, Default)]
+pub struct SafetyNetReport {
+    pub negations_fixed: usize,
+    pub predicates_rematerialized: usize,
+    pub errors: Vec<String>,
+}
+
+pub fn run(f: &mut MFunction, zicond: bool) -> SafetyNetReport {
+    let mut rep = SafetyNetReport::default();
+    fix_inverted_splits(f, &mut rep);
+    unify_split_predicates(f, &mut rep);
+    if !zicond {
+        for b in &f.blocks {
+            for i in &b.insts {
+                if i.op == Op::CMOV {
+                    rep.errors.push(
+                        "divergent select reached the back-end without ZiCond (Fig. 5c)".into(),
+                    );
+                }
+            }
+        }
+    }
+    verify_pairing(f, &mut rep);
+    rep
+}
+
+/// (a) Swapped split arms: flip the negate sense.
+fn fix_inverted_splits(f: &mut MFunction, rep: &mut SafetyNetReport) {
+    for b in f.blocks.iter_mut() {
+        for i in b.insts.iter_mut() {
+            if matches!(i.op, Op::SPLIT | Op::SPLITN) && i.swapped {
+                i.op = if i.op == Op::SPLIT {
+                    Op::SPLITN
+                } else {
+                    Op::SPLIT
+                };
+                i.swapped = false;
+                rep.negations_fixed += 1;
+            }
+        }
+    }
+}
+
+/// (b) Predicate drift: the register a split reads must hold the value of
+/// the predicate-defining instruction at the split. Scan backwards from
+/// the split; if the register is clobbered between its defining compare
+/// and the split, re-materialize the compare right before the split.
+fn unify_split_predicates(f: &mut MFunction, rep: &mut SafetyNetReport) {
+    for bi in 0..f.blocks.len() {
+        let split_pos: Vec<usize> = f.blocks[bi]
+            .insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i.op, Op::SPLIT | Op::SPLITN))
+            .map(|(k, _)| k)
+            .collect();
+        for sp in split_pos {
+            let pred = f.blocks[bi].insts[sp].rs1;
+            // Find the last def of `pred` before the split in this block.
+            let mut def_idx: Option<usize> = None;
+            for k in (0..sp).rev() {
+                if f.blocks[bi].insts[k].def() == Some(pred) {
+                    def_idx = Some(k);
+                    break;
+                }
+            }
+            let Some(di) = def_idx else { continue };
+            let def = f.blocks[bi].insts[di].clone();
+            // A legitimate split predicate is produced by a compare/logical
+            // op or a spill reload (MOV / LW). Anything else means the
+            // register was clobbered after the real predicate definition —
+            // the Fig. 5(b) drift. Repair: find the most recent
+            // boolean-producing def of the same register and re-materialize
+            // it immediately before the split ("back-to-back").
+            if is_bool_producer(def.op) {
+                continue;
+            }
+            let remat_src = (0..di).rev().find(|&k| {
+                let i2 = &f.blocks[bi].insts[k];
+                i2.def() == Some(pred) && is_bool_producer(i2.op) && is_rematerializable(i2.op)
+            });
+            match remat_src {
+                Some(k) => {
+                    let cand = f.blocks[bi].insts[k].clone();
+                    // Sources must not be redefined between the compare and
+                    // the split.
+                    let sources_ok = cand.uses().iter().all(|s| {
+                        !f.blocks[bi].insts[k + 1..sp]
+                            .iter()
+                            .any(|i2| i2.def() == Some(*s))
+                    });
+                    if sources_ok {
+                        let mut remat = cand;
+                        remat.rd = pred;
+                        f.blocks[bi].insts.insert(sp, remat);
+                        rep.predicates_rematerialized += 1;
+                    } else {
+                        rep.errors.push(format!(
+                            "predicate drift at split in block {bi}: compare sources clobbered"
+                        ));
+                    }
+                }
+                None => rep.errors.push(format!(
+                    "predicate drift at split in block {bi}: no reaching compare"
+                )),
+            }
+        }
+    }
+}
+
+/// Ops that legitimately produce a split predicate.
+fn is_bool_producer(op: Op) -> bool {
+    matches!(
+        op,
+        Op::SEQ
+            | Op::SNE
+            | Op::SLT
+            | Op::SLE
+            | Op::SLTU
+            | Op::SGEU
+            | Op::FEQ
+            | Op::FNE
+            | Op::FLT
+            | Op::FLE
+            | Op::FGT
+            | Op::FGE
+            | Op::AND
+            | Op::OR
+            | Op::XOR
+            | Op::XORI
+            | Op::ANDI
+            | Op::ORI
+            | Op::MOV
+            | Op::LW
+            | Op::VOTEALL
+            | Op::VOTEANY
+            | Op::CMOV
+    )
+}
+
+fn is_rematerializable(op: Op) -> bool {
+    matches!(
+        op,
+        Op::SEQ
+            | Op::SNE
+            | Op::SLT
+            | Op::SLE
+            | Op::SLTU
+            | Op::SGEU
+            | Op::FEQ
+            | Op::FNE
+            | Op::FLT
+            | Op::FLE
+            | Op::FGT
+            | Op::FGE
+            | Op::AND
+            | Op::OR
+            | Op::XOR
+            | Op::XORI
+            | Op::ANDI
+            | Op::ORI
+            | Op::LI
+            | Op::MOV
+            | Op::LW
+    )
+}
+
+/// Split/join pairing: the reconvergence block of every split must start
+/// with `vx_join` (phis are already destructed at this stage, so the join
+/// must be the literal first instruction).
+fn verify_pairing(f: &MFunction, rep: &mut SafetyNetReport) {
+    for b in &f.blocks {
+        for i in &b.insts {
+            if matches!(i.op, Op::SPLIT | Op::SPLITN) {
+                let Some(j) = i.tjoin else {
+                    rep.errors.push("split without reconvergence block".into());
+                    continue;
+                };
+                let ok = f.blocks[j]
+                    .insts
+                    .iter()
+                    .any(|x| x.op == Op::JOIN);
+                if !ok {
+                    rep.errors
+                        .push(format!("split reconvergence block {j} has no vx_join"));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mir::{MBlock, MFunction, MInst, MReg};
+
+    fn base_func() -> MFunction {
+        MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default(), MBlock::default(), MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        }
+    }
+
+    #[test]
+    fn fixes_swapped_split() {
+        let mut f = base_func();
+        let mut s = MInst::new(Op::SPLIT);
+        s.rs1 = MReg::phys(5);
+        s.t1 = Some(1);
+        s.t2 = Some(2);
+        s.tjoin = Some(2);
+        s.swapped = true;
+        f.blocks[0].insts.push(s);
+        f.blocks[2].insts.push(MInst::new(Op::JOIN));
+        let rep = run(&mut f, true);
+        assert_eq!(rep.negations_fixed, 1);
+        assert_eq!(f.blocks[0].insts[0].op, Op::SPLITN);
+        assert!(!f.blocks[0].insts[0].swapped);
+        assert!(rep.errors.is_empty());
+    }
+
+    #[test]
+    fn rematerializes_drifted_predicate() {
+        // slt x5, x6, x7 ; li x5, 0 (clobber — injected drift) ; split x5
+        let mut f = base_func();
+        f.blocks[0].insts.push(MInst::rrr(
+            Op::SLT,
+            MReg::phys(5),
+            MReg::phys(6),
+            MReg::phys(7),
+        ));
+        f.blocks[0].insts.push(MInst::li(MReg::phys(5), 0));
+        let mut s = MInst::new(Op::SPLIT);
+        s.rs1 = MReg::phys(5);
+        s.t1 = Some(1);
+        s.t2 = Some(2);
+        s.tjoin = Some(2);
+        f.blocks[0].insts.push(s);
+        f.blocks[2].insts.push(MInst::new(Op::JOIN));
+        let rep = run(&mut f, true);
+        assert_eq!(rep.predicates_rematerialized, 1);
+        // The rematerialized compare sits immediately before the split.
+        let n = f.blocks[0].insts.len();
+        assert_eq!(f.blocks[0].insts[n - 2].op, Op::SLT);
+        assert!(matches!(f.blocks[0].insts[n - 1].op, Op::SPLIT));
+        assert!(rep.errors.is_empty());
+    }
+
+    #[test]
+    fn detects_missing_join() {
+        let mut f = base_func();
+        let mut s = MInst::new(Op::SPLIT);
+        s.rs1 = MReg::phys(5);
+        s.t1 = Some(1);
+        s.t2 = Some(2);
+        s.tjoin = Some(2); // block 2 has no JOIN
+        f.blocks[0].insts.push(s);
+        let rep = run(&mut f, true);
+        assert!(!rep.errors.is_empty());
+    }
+
+    #[test]
+    fn rejects_cmov_without_zicond() {
+        let mut f = base_func();
+        f.blocks[0].insts.push(MInst::rrr(
+            Op::CMOV,
+            MReg::phys(5),
+            MReg::phys(6),
+            MReg::phys(7),
+        ));
+        let rep = run(&mut f, false);
+        assert!(!rep.errors.is_empty());
+        let rep2 = run(&mut f, true);
+        assert!(rep2.errors.is_empty());
+    }
+}

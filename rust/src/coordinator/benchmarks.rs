@@ -1,0 +1,1055 @@
+//! Benchmark registry (paper §5.1 coverage): OpenCL-dialect kernels from
+//! the NVIDIA SDK / Parboil / Rodinia families and CUDA-dialect kernels
+//! from Rodinia / HeCBench, each with deterministic input generation and a
+//! host-side Rust reference validator (the "reference CPU implementation"
+//! role of §5; dense kernels are additionally cross-checked against the
+//! JAX/Pallas PJRT artifacts by `examples/e2e_validation.rs`).
+
+use crate::frontend::Dialect;
+use crate::runtime::{ArgValue, DevicePtr, VoltDevice};
+
+/// Deterministic xorshift32 PRNG (offline build: no rand crate).
+#[derive(Clone)]
+pub struct Rng(pub u32);
+
+impl Rng {
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.0 = x;
+        x
+    }
+    pub fn f32_01(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+    pub fn f32s(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_01() * 2.0 - 1.0).collect()
+    }
+    pub fn u32s(&mut self, n: usize, m: u32) -> Vec<u32> {
+        (0..n).map(|_| self.next_u32() % m).collect()
+    }
+}
+
+fn close(a: f32, b: f32) -> bool {
+    let d = (a - b).abs();
+    d <= 1e-3 + 2e-3 * a.abs().max(b.abs())
+}
+
+fn check_f32(dev: &VoltDevice, ptr: DevicePtr, want: &[f32], tag: &str) -> Result<(), String> {
+    let got = dev.read_f32(ptr, want.len()).map_err(|e| e.to_string())?;
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if !close(*g, *w) {
+            return Err(format!("{tag}[{i}]: got {g}, want {w}"));
+        }
+    }
+    Ok(())
+}
+
+fn check_u32(dev: &VoltDevice, ptr: DevicePtr, want: &[u32], tag: &str) -> Result<(), String> {
+    let got = dev.read_u32s(ptr, want.len()).map_err(|e| e.to_string())?;
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if g != w {
+            return Err(format!("{tag}[{i}]: got {g}, want {w}"));
+        }
+    }
+    Ok(())
+}
+
+type RunFn = fn(&mut VoltDevice) -> Result<(), String>;
+
+pub struct Benchmark {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub dialect: Dialect,
+    pub source: &'static str,
+    /// Uses warp-level builtins (Fig. 9 candidate).
+    pub warp_feature: bool,
+    /// Uses shared memory (Fig. 10 candidate).
+    pub smem: bool,
+    pub run: RunFn,
+}
+
+macro_rules! bench {
+    ($name:literal, $suite:literal, $dialect:expr, $file:literal, warp=$w:literal, smem=$s:literal, $run:expr) => {
+        Benchmark {
+            name: $name,
+            suite: $suite,
+            dialect: $dialect,
+            source: include_str!(concat!("../../../benchmarks/", $file)),
+            warp_feature: $w,
+            smem: $s,
+            run: $run,
+        }
+    };
+}
+
+pub fn registry() -> Vec<Benchmark> {
+    use Dialect::{Cuda, OpenCL};
+    vec![
+        bench!("vecadd", "sdk", OpenCL, "vecadd.cl", warp = false, smem = false, run_vecadd),
+        bench!("saxpy", "sdk", OpenCL, "saxpy.cl", warp = false, smem = false, run_saxpy),
+        bench!("sgemm", "parboil", OpenCL, "sgemm.cl", warp = false, smem = false, run_sgemm),
+        bench!("sgemm_tiled", "parboil", OpenCL, "sgemm_tiled.cl", warp = false, smem = true, run_sgemm_tiled),
+        bench!("transpose", "sdk", OpenCL, "transpose.cl", warp = false, smem = false, run_transpose),
+        bench!("reduce", "sdk", OpenCL, "reduce.cl", warp = false, smem = true, run_reduce),
+        bench!("dotproduct", "sdk", OpenCL, "dotproduct.cl", warp = false, smem = false, run_dotproduct),
+        bench!("psort", "sdk", OpenCL, "psort.cl", warp = false, smem = false, run_psort),
+        bench!("psum", "sdk", OpenCL, "psum.cl", warp = false, smem = true, run_psum),
+        bench!("gaussian", "rodinia", OpenCL, "gaussian.cl", warp = false, smem = false, run_gaussian),
+        bench!("bfs", "rodinia", OpenCL, "bfs.cl", warp = false, smem = false, run_bfs),
+        bench!("pathfinder", "rodinia", OpenCL, "pathfinder.cl", warp = false, smem = false, run_pathfinder),
+        bench!("kmeans", "rodinia", OpenCL, "kmeans.cl", warp = false, smem = false, run_kmeans),
+        bench!("nearn", "rodinia", OpenCL, "nearn.cl", warp = false, smem = false, run_nearn),
+        bench!("hotspot", "rodinia", OpenCL, "hotspot.cl", warp = false, smem = false, run_hotspot),
+        bench!("srad", "rodinia", OpenCL, "srad.cl", warp = false, smem = false, run_srad),
+        bench!("blackscholes", "sdk", OpenCL, "blackscholes.cl", warp = false, smem = false, run_blackscholes),
+        bench!("cfd", "rodinia", OpenCL, "cfd.cl", warp = false, smem = false, run_cfd),
+        bench!("backprop", "rodinia", OpenCL, "backprop.cl", warp = false, smem = false, run_backprop),
+        bench!("lud", "rodinia", OpenCL, "lud.cl", warp = false, smem = false, run_lud),
+        bench!("stencil", "parboil", OpenCL, "stencil.cl", warp = false, smem = true, run_stencil),
+        // CUDA dialect (Fig. 9 warp-feature suite + Rodinia-CUDA).
+        bench!("vote", "hecbench", Cuda, "vote.cu", warp = true, smem = false, run_vote),
+        bench!("shuffle", "hecbench", Cuda, "shuffle.cu", warp = true, smem = false, run_shuffle),
+        bench!("bscan", "hecbench", Cuda, "bscan.cu", warp = true, smem = false, run_bscan),
+        bench!("atomicagg", "hecbench", Cuda, "atomicagg.cu", warp = true, smem = false, run_atomicagg),
+        bench!("gc", "hecbench", Cuda, "gc.cu", warp = true, smem = false, run_gc),
+        bench!("nw", "rodinia", Cuda, "nw.cu", warp = false, smem = false, run_nw),
+        bench!("myocyte", "rodinia", Cuda, "myocyte.cu", warp = false, smem = false, run_myocyte),
+    ]
+}
+
+pub fn find(name: &str) -> Option<Benchmark> {
+    registry().into_iter().find(|b| b.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// Individual drivers
+// ---------------------------------------------------------------------------
+
+fn upload(dev: &mut VoltDevice, data: &[f32]) -> Result<DevicePtr, String> {
+    let p = dev.malloc(data.len() as u32 * 4);
+    dev.write_f32(p, data).map_err(|e| e.to_string())?;
+    Ok(p)
+}
+
+fn upload_u32(dev: &mut VoltDevice, data: &[u32]) -> Result<DevicePtr, String> {
+    let p = dev.malloc(data.len() as u32 * 4);
+    dev.write_u32s(p, data).map_err(|e| e.to_string())?;
+    Ok(p)
+}
+
+fn run_vecadd(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 1000usize;
+    let mut rng = Rng(11);
+    let a = rng.f32s(n);
+    let b = rng.f32s(n);
+    let pa = upload(dev, &a)?;
+    let pb = upload(dev, &b)?;
+    let pc = dev.malloc(n as u32 * 4);
+    dev.launch(
+        "vecadd",
+        [8, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(pa), ArgValue::Ptr(pb), ArgValue::Ptr(pc), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    check_f32(dev, pc, &want, "vecadd")
+}
+
+fn run_saxpy(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 777usize;
+    let mut rng = Rng(12);
+    let x = rng.f32s(n);
+    let y = rng.f32s(n);
+    let a = 1.75f32;
+    let px = upload(dev, &x)?;
+    let py = upload(dev, &y)?;
+    dev.launch(
+        "saxpy",
+        [7, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(px), ArgValue::Ptr(py), ArgValue::F32(a), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = x.iter().zip(&y).map(|(x, y)| a * x + y).collect();
+    check_f32(dev, py, &want, "saxpy")
+}
+
+fn run_sgemm(dev: &mut VoltDevice) -> Result<(), String> {
+    let (n, m, k) = (24usize, 24, 24);
+    let mut rng = Rng(13);
+    let a = rng.f32s(n * k);
+    let b = rng.f32s(k * m);
+    let pa = upload(dev, &a)?;
+    let pb = upload(dev, &b)?;
+    let pc = dev.malloc((n * m) as u32 * 4);
+    dev.launch(
+        "sgemm",
+        [3, 3, 1],
+        [8, 8, 1],
+        &[
+            ArgValue::Ptr(pa),
+            ArgValue::Ptr(pb),
+            ArgValue::Ptr(pc),
+            ArgValue::I32(n as i32),
+            ArgValue::I32(m as i32),
+            ArgValue::I32(k as i32),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0f32; n * m];
+    for r in 0..n {
+        for c in 0..m {
+            let mut s = 0f32;
+            for t in 0..k {
+                s += a[r * k + t] * b[t * m + c];
+            }
+            want[r * m + c] = s;
+        }
+    }
+    check_f32(dev, pc, &want, "sgemm")
+}
+
+fn run_sgemm_tiled(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 16usize;
+    let mut rng = Rng(14);
+    let a = rng.f32s(n * n);
+    let b = rng.f32s(n * n);
+    let pa = upload(dev, &a)?;
+    let pb = upload(dev, &b)?;
+    let pc = dev.malloc((n * n) as u32 * 4);
+    dev.launch(
+        "sgemm_tiled",
+        [2, 2, 1],
+        [8, 8, 1],
+        &[ArgValue::Ptr(pa), ArgValue::Ptr(pb), ArgValue::Ptr(pc), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0f32; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            let mut s = 0f32;
+            for t in 0..n {
+                s += a[r * n + t] * b[t * n + c];
+            }
+            want[r * n + c] = s;
+        }
+    }
+    check_f32(dev, pc, &want, "sgemm_tiled")
+}
+
+fn run_transpose(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 24usize;
+    let mut rng = Rng(15);
+    let input = rng.f32s(n * n);
+    let pi = upload(dev, &input)?;
+    let po = dev.malloc((n * n) as u32 * 4);
+    dev.launch(
+        "transpose",
+        [3, 3, 1],
+        [8, 8, 1],
+        &[ArgValue::Ptr(pi), ArgValue::Ptr(po), ArgValue::I32(n as i32), ArgValue::I32(0)],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let src = j * n + i;
+            let v = if i + 1 < n { input[src + 1] } else { input[src] };
+            want[i * n + j] = input[src] + v * 0.0001;
+        }
+    }
+    check_f32(dev, po, &want, "transpose")
+}
+
+fn run_reduce(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 512usize;
+    let groups = 8usize;
+    let mut rng = Rng(16);
+    let input = rng.f32s(n);
+    let pi = upload(dev, &input)?;
+    let po = dev.malloc(groups as u32 * 4);
+    dev.launch(
+        "reduce",
+        [groups as u32, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pi), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = (0..groups)
+        .map(|g| input[g * 64..(g + 1) * 64].iter().sum())
+        .collect();
+    check_f32(dev, po, &want, "reduce")
+}
+
+fn run_dotproduct(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 256usize;
+    let mut rng = Rng(17);
+    let a = rng.f32s(n);
+    let b = rng.f32s(n);
+    let pa = upload(dev, &a)?;
+    let pb = upload(dev, &b)?;
+    let pacc = upload_u32(dev, &[0])?;
+    dev.launch(
+        "dotproduct",
+        [2, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(pa), ArgValue::Ptr(pb), ArgValue::Ptr(pacc), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: i32 = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| {
+            // match the kernel's fcvt.w.s on p*256
+            let p = x * y * 256.0;
+            if p >= i32::MAX as f32 {
+                i32::MAX
+            } else if p <= i32::MIN as f32 {
+                i32::MIN
+            } else {
+                p as i32
+            }
+        })
+        .sum();
+    check_u32(dev, pacc, &[want as u32], "dotproduct")
+}
+
+fn run_psort(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let mut rng = Rng(18);
+    let data: Vec<u32> = rng.u32s(n, 10_000);
+    let pd = upload_u32(dev, &data)?;
+    for phase in 0..n as i32 {
+        dev.launch(
+            "psort",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(pd), ArgValue::I32(n as i32), ArgValue::I32(phase)],
+        )
+        .map_err(|e| e.to_string())?;
+    }
+    let mut want = data.clone();
+    want.sort_unstable();
+    check_u32(dev, pd, &want, "psort")
+}
+
+fn run_psum(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 256usize;
+    let mut rng = Rng(19);
+    let data: Vec<u32> = rng.u32s(n, 100);
+    let pd = upload_u32(dev, &data)?;
+    let po = dev.malloc(n as u32 * 4);
+    dev.launch(
+        "psum",
+        [4, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pd), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0u32; n];
+    for g in 0..4 {
+        let mut acc = 0u32;
+        for l in 0..64 {
+            acc += data[g * 64 + l];
+            want[g * 64 + l] = acc;
+        }
+    }
+    check_u32(dev, po, &want, "psum")
+}
+
+fn run_gaussian(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 16usize;
+    let mut rng = Rng(20);
+    let mut m = rng.f32s(n * n);
+    let mut v = rng.f32s(n);
+    // diagonally dominant
+    for i in 0..n {
+        m[i * n + i] = 8.0 + m[i * n + i].abs();
+    }
+    let pm = upload(dev, &m)?;
+    let pv = upload(dev, &v)?;
+    for pivot in 0..n as i32 - 1 {
+        dev.launch(
+            "gaussian",
+            [1, 1, 1],
+            [32, 1, 1],
+            &[ArgValue::Ptr(pm), ArgValue::Ptr(pv), ArgValue::I32(n as i32), ArgValue::I32(pivot)],
+        )
+        .map_err(|e| e.to_string())?;
+    }
+    // reference elimination
+    for p in 0..n - 1 {
+        for r in p + 1..n {
+            let f = m[r * n + p] / m[p * n + p];
+            for c in p..n {
+                m[r * n + c] -= f * m[p * n + c];
+            }
+            v[r] -= f * v[p];
+        }
+    }
+    check_f32(dev, pv, &v, "gaussian.v")?;
+    check_f32(dev, pm, &m, "gaussian.m")
+}
+
+/// Ring + chord graph in CSR form.
+fn make_graph(n: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut row_off = vec![0u32];
+    let mut cols = vec![];
+    for u in 0..n {
+        cols.push(((u + 1) % n) as u32);
+        cols.push(((u * 7 + 3) % n) as u32);
+        row_off.push(cols.len() as u32);
+    }
+    (row_off, cols)
+}
+
+fn run_bfs(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let (row_off, cols) = make_graph(n);
+    let mut levels = vec![-1i32; n];
+    levels[0] = 0;
+    let pro = upload_u32(dev, &row_off)?;
+    let pco = upload_u32(dev, &cols)?;
+    let plv = upload_u32(dev, &levels.iter().map(|&x| x as u32).collect::<Vec<_>>())?;
+    let pfl = upload_u32(dev, &[0])?;
+    let mut level = 0;
+    loop {
+        dev.write_u32s(pfl, &[0]).map_err(|e| e.to_string())?;
+        dev.launch(
+            "bfs",
+            [2, 1, 1],
+            [64, 1, 1],
+            &[
+                ArgValue::Ptr(pro),
+                ArgValue::Ptr(pco),
+                ArgValue::Ptr(plv),
+                ArgValue::Ptr(pfl),
+                ArgValue::I32(level),
+                ArgValue::I32(n as i32),
+            ],
+        )
+        .map_err(|e| e.to_string())?;
+        let flag = dev.read_u32s(pfl, 1).map_err(|e| e.to_string())?[0];
+        level += 1;
+        if flag == 0 || level > n as i32 {
+            break;
+        }
+    }
+    // reference BFS
+    let mut want = vec![-1i32; n];
+    want[0] = 0;
+    let mut frontier = vec![0usize];
+    let mut l = 0;
+    while !frontier.is_empty() {
+        let mut next = vec![];
+        for &u in &frontier {
+            for e in row_off[u] as usize..row_off[u + 1] as usize {
+                let v = cols[e] as usize;
+                if want[v] == -1 {
+                    want[v] = l + 1;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+        l += 1;
+    }
+    let wantu: Vec<u32> = want.iter().map(|&x| x as u32).collect();
+    check_u32(dev, plv, &wantu, "bfs")
+}
+
+fn run_pathfinder(dev: &mut VoltDevice) -> Result<(), String> {
+    let cols = 256usize;
+    let rows = 8usize;
+    let mut rng = Rng(21);
+    let wall: Vec<u32> = rng.u32s(cols * rows, 10);
+    let pw = upload_u32(dev, &wall)?;
+    let mut prev: Vec<u32> = wall[0..cols].to_vec();
+    let pprev = upload_u32(dev, &prev)?;
+    let pcur = dev.malloc(cols as u32 * 4);
+    let mut bufs = [pprev, pcur];
+    for row in 1..rows {
+        dev.launch(
+            "pathfinder",
+            [2, 1, 1],
+            [128, 1, 1],
+            &[
+                ArgValue::Ptr(bufs[0]),
+                ArgValue::Ptr(bufs[1]),
+                ArgValue::Ptr(pw),
+                ArgValue::I32(cols as i32),
+                ArgValue::I32(row as i32),
+            ],
+        )
+        .map_err(|e| e.to_string())?;
+        bufs.swap(0, 1);
+    }
+    // reference DP
+    for row in 1..rows {
+        let mut cur = vec![0u32; cols];
+        for c in 0..cols {
+            let left = if c > 0 { prev[c - 1] } else { prev[c] };
+            let up = prev[c];
+            let right = if c < cols - 1 { prev[c + 1] } else { prev[c] };
+            cur[c] = wall[row * cols + c] + left.min(up).min(right);
+        }
+        prev = cur;
+    }
+    check_u32(dev, bufs[0], &prev, "pathfinder")
+}
+
+fn run_kmeans(dev: &mut VoltDevice) -> Result<(), String> {
+    let (n, k, d) = (256usize, 4usize, 2usize);
+    let mut rng = Rng(22);
+    let pts = rng.f32s(n * d);
+    let centers = rng.f32s(k * d);
+    let pp = upload(dev, &pts)?;
+    let pc = upload(dev, &centers)?;
+    let pa = dev.malloc(n as u32 * 4);
+    let pparams = upload_u32(dev, &[k as u32, d as u32])?;
+    dev.launch(
+        "kmeans",
+        [2, 1, 1],
+        [128, 1, 1],
+        &[
+            ArgValue::Ptr(pp),
+            ArgValue::Ptr(pc),
+            ArgValue::Ptr(pa),
+            ArgValue::Ptr(pparams),
+            ArgValue::I32(n as i32),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0u32; n];
+    for i in 0..n {
+        let mut bestd = f32::MAX;
+        let mut best = 0u32;
+        for c in 0..k {
+            let mut acc = 0f32;
+            for j in 0..d {
+                let diff = pts[i * d + j] - centers[c * d + j];
+                acc += diff * diff;
+            }
+            if acc < bestd {
+                bestd = acc;
+                best = c as u32;
+            }
+        }
+        want[i] = best;
+    }
+    check_u32(dev, pa, &want, "kmeans")
+}
+
+fn run_nearn(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 512usize;
+    let mut rng = Rng(23);
+    let lat = rng.f32s(n);
+    let lon = rng.f32s(n);
+    let pla = upload(dev, &lat)?;
+    let plo = upload(dev, &lon)?;
+    let pd = dev.malloc(n as u32 * 4);
+    let (qlat, qlon) = (0.25f32, -0.5f32);
+    dev.launch(
+        "nearn",
+        [4, 1, 1],
+        [128, 1, 1],
+        &[
+            ArgValue::Ptr(pla),
+            ArgValue::Ptr(plo),
+            ArgValue::Ptr(pd),
+            ArgValue::I32(n as i32),
+            ArgValue::F32(qlat),
+            ArgValue::F32(qlon),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = (0..n)
+        .map(|i| {
+            let dy = lat[i] - qlat;
+            let dx = lon[i] - qlon;
+            (dy * dy + dx * dx).sqrt()
+        })
+        .collect();
+    check_f32(dev, pd, &want, "nearn")
+}
+
+fn run_hotspot(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 24usize;
+    let mut rng = Rng(24);
+    let temp = rng.f32s(n * n);
+    let power = rng.f32s(n * n);
+    let pt = upload(dev, &temp)?;
+    let pp = upload(dev, &power)?;
+    let po = dev.malloc((n * n) as u32 * 4);
+    let cap = 0.05f32;
+    dev.launch(
+        "hotspot",
+        [3, 3, 1],
+        [8, 8, 1],
+        &[
+            ArgValue::Ptr(pt),
+            ArgValue::Ptr(pp),
+            ArgValue::Ptr(po),
+            ArgValue::I32(n as i32),
+            ArgValue::F32(cap),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0f32; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let idx = y * n + x;
+            let c = temp[idx];
+            let l = if x > 0 { temp[idx - 1] } else { c };
+            let r = if x < n - 1 { temp[idx + 1] } else { c };
+            let u = if y > 0 { temp[idx - n] } else { c };
+            let d = if y < n - 1 { temp[idx + n] } else { c };
+            want[idx] = c + cap * (power[idx] + (l + r + u + d - 4.0 * c));
+        }
+    }
+    check_f32(dev, po, &want, "hotspot")
+}
+
+fn run_srad(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 512usize;
+    let mut rng = Rng(25);
+    let img = rng.f32s(n);
+    let pi = upload(dev, &img)?;
+    let po = dev.malloc(n as u32 * 4);
+    let lambda = 0.5f32;
+    dev.launch(
+        "srad",
+        [4, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(pi), ArgValue::Ptr(po), ArgValue::I32(n as i32), ArgValue::F32(lambda)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = img
+        .iter()
+        .map(|&v| {
+            let g = (-v.abs() * lambda).exp();
+            v + 0.25 * g * (v * 0.5 - v)
+        })
+        .collect();
+    check_f32(dev, po, &want, "srad")
+}
+
+fn run_blackscholes(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let mut rng = Rng(26);
+    let s: Vec<f32> = (0..n).map(|_| 10.0 + rng.f32_01() * 90.0).collect();
+    let x: Vec<f32> = (0..n).map(|_| 10.0 + rng.f32_01() * 90.0).collect();
+    let t: Vec<f32> = (0..n).map(|_| 0.2 + rng.f32_01() * 1.8).collect();
+    let ps = upload(dev, &s)?;
+    let px = upload(dev, &x)?;
+    let pt = upload(dev, &t)?;
+    let pc = dev.malloc(n as u32 * 4);
+    let (r, v) = (0.02f32, 0.30f32);
+    dev.launch(
+        "blackscholes",
+        [1, 1, 1],
+        [128, 1, 1],
+        &[
+            ArgValue::Ptr(ps),
+            ArgValue::Ptr(px),
+            ArgValue::Ptr(pt),
+            ArgValue::Ptr(pc),
+            ArgValue::I32(n as i32),
+            ArgValue::F32(r),
+            ArgValue::F32(v),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let cnd = |d: f32| -> f32 {
+        let k = 1.0 / (1.0 + 0.2316419 * d.abs());
+        let w = ((((1.330274429 * k - 1.821255978) * k + 1.781477937) * k - 0.356563782) * k
+            + 0.31938153)
+            * k;
+        let p = 1.0 - 0.3989422804 * (-0.5 * d * d).exp() * w;
+        if d < 0.0 {
+            1.0 - p
+        } else {
+            p
+        }
+    };
+    let want: Vec<f32> = (0..n)
+        .map(|i| {
+            let sq = t[i].sqrt();
+            let d1 = ((s[i] / x[i]).ln() + (r + 0.5 * v * v) * t[i]) / (v * sq);
+            let d2 = d1 - v * sq;
+            s[i] * cnd(d1) - x[i] * (-r * t[i]).exp() * cnd(d2)
+        })
+        .collect();
+    check_f32(dev, pc, &want, "blackscholes")
+}
+
+fn run_cfd(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 256usize;
+    let mut rng = Rng(27);
+    let flux: Vec<f32> = (0..n).map(|_| rng.f32_01() * 3.0).collect();
+    let mode: Vec<u32> = rng.u32s(n, 8);
+    let pf = upload(dev, &flux)?;
+    let pm = upload_u32(dev, &mode)?;
+    let po = dev.malloc(n as u32 * 4);
+    dev.launch(
+        "cfd",
+        [2, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(pf), ArgValue::Ptr(pm), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    // Mirror the goto logic.
+    let want: Vec<f32> = (0..n)
+        .map(|i| {
+            let f = flux[i];
+            let m = (mode[i] % 4) as i32;
+            let mut acc = 0f32;
+            let mut iter = 0i32;
+            #[derive(PartialEq)]
+            enum S {
+                Slow,
+                Fast,
+                Finish,
+            }
+            let mut st = if m == 0 { S::Fast } else { S::Slow };
+            loop {
+                match st {
+                    S::Slow => {
+                        acc += f * 0.5;
+                        iter += 1;
+                        if iter < m {
+                            st = S::Slow;
+                        } else if acc > 4.0 {
+                            st = S::Finish;
+                        } else {
+                            st = S::Fast;
+                        }
+                    }
+                    S::Fast => {
+                        acc += f;
+                        iter += 1;
+                        if iter < 3 && acc < 8.0 {
+                            st = S::Slow;
+                        } else {
+                            st = S::Finish;
+                        }
+                    }
+                    S::Finish => break,
+                }
+            }
+            acc
+        })
+        .collect();
+    check_f32(dev, po, &want, "cfd")
+}
+
+fn run_backprop(dev: &mut VoltDevice) -> Result<(), String> {
+    let (in_n, out_n) = (32usize, 16usize);
+    let mut rng = Rng(28);
+    let w = rng.f32s(out_n * in_n);
+    let input = rng.f32s(in_n);
+    let pw = upload(dev, &w)?;
+    let pi = upload(dev, &input)?;
+    let po = dev.malloc(out_n as u32 * 4);
+    let pdims = upload_u32(dev, &[in_n as u32, out_n as u32])?;
+    dev.launch(
+        "backprop",
+        [1, 1, 1],
+        [16, 1, 1],
+        &[
+            ArgValue::Ptr(pw),
+            ArgValue::Ptr(pi),
+            ArgValue::Ptr(po),
+            ArgValue::Ptr(pdims),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = (0..out_n)
+        .map(|o| {
+            let s: f32 = (0..in_n).map(|i| w[o * in_n + i] * input[i]).sum();
+            1.0 / (1.0 + (-s).exp())
+        })
+        .collect();
+    check_f32(dev, po, &want, "backprop")
+}
+
+fn run_lud(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 12usize;
+    let mut rng = Rng(29);
+    let mut m = rng.f32s(n * n);
+    for i in 0..n {
+        m[i * n + i] = 6.0 + m[i * n + i].abs();
+    }
+    let pm = upload(dev, &m)?;
+    for k in 0..n as i32 - 1 {
+        dev.launch(
+            "lud",
+            [1, 1, 1],
+            [16, 1, 1],
+            &[ArgValue::Ptr(pm), ArgValue::I32(n as i32), ArgValue::I32(k)],
+        )
+        .map_err(|e| e.to_string())?;
+    }
+    for k in 0..n - 1 {
+        for r in k + 1..n {
+            let f = m[r * n + k] / m[k * n + k];
+            m[r * n + k] = f;
+            for c in k + 1..n {
+                m[r * n + c] -= f * m[k * n + c];
+            }
+        }
+    }
+    check_f32(dev, pm, &m, "lud")
+}
+
+fn run_stencil(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 256usize;
+    let mut rng = Rng(30);
+    let input = rng.f32s(n);
+    let pi = upload(dev, &input)?;
+    let po = dev.malloc(n as u32 * 4);
+    dev.launch(
+        "stencil",
+        [4, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pi), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let at = |i: i64| -> f32 {
+        if i < 0 || i >= n as i64 {
+            0.0
+        } else {
+            input[i as usize]
+        }
+    };
+    let want: Vec<f32> = (0..n as i64)
+        .map(|i| 0.25 * at(i - 1) + 0.5 * at(i) + 0.25 * at(i + 1))
+        .collect();
+    check_f32(dev, po, &want, "stencil")
+}
+
+// ---- CUDA / warp-feature drivers (Fig. 9) ----
+
+fn run_vote(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let mut rng = Rng(31);
+    let data: Vec<u32> = (0..n)
+        .map(|i| {
+            if i / 32 == 1 {
+                1 // one warp all-positive
+            } else {
+                rng.next_u32() % 3
+            }
+        })
+        .collect();
+    let pd = upload_u32(dev, &data)?;
+    let po = dev.malloc(n as u32 * 4);
+    dev.launch(
+        "vote",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pd), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0u32; n];
+    for w in 0..n / 32 {
+        let chunk = &data[w * 32..(w + 1) * 32];
+        let all = chunk.iter().all(|&v| v > 0) as u32;
+        let any = chunk.iter().any(|&v| v > 0) as u32;
+        for l in 0..32 {
+            want[w * 32 + l] = all * 2 + any;
+        }
+    }
+    check_u32(dev, po, &want, "vote")
+}
+
+fn run_shuffle(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let mut rng = Rng(32);
+    let input = rng.f32s(n);
+    let pi = upload(dev, &input)?;
+    let po = dev.malloc((n / 32) as u32 * 4);
+    dev.launch(
+        "shuffle",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pi), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = (0..n / 32)
+        .map(|w| input[w * 32..(w + 1) * 32].iter().sum())
+        .collect();
+    // rotation-butterfly accumulates in different order; tolerance covers it
+    let got = dev.read_f32(po, want.len()).map_err(|e| e.to_string())?;
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if (g - w).abs() > 1e-2 {
+            return Err(format!("shuffle[{i}]: got {g}, want {w}"));
+        }
+    }
+    Ok(())
+}
+
+fn run_bscan(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let mut rng = Rng(33);
+    let flags: Vec<u32> = rng.u32s(n, 2);
+    let pf = upload_u32(dev, &flags)?;
+    let pr = dev.malloc(n as u32 * 4);
+    dev.launch(
+        "bscan",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pf), ArgValue::Ptr(pr), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0u32; n];
+    for w in 0..n / 32 {
+        let mut below = 0u32;
+        for l in 0..32 {
+            want[w * 32 + l] = below;
+            if flags[w * 32 + l] != 0 {
+                below += 1;
+            }
+        }
+    }
+    check_u32(dev, pr, &want, "bscan")
+}
+
+fn run_atomicagg(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let mut rng = Rng(34);
+    let data: Vec<u32> = rng.u32s(n, 3); // >0 is "selected"
+    let pd = upload_u32(dev, &data)?;
+    let pc = upload_u32(dev, &[0])?;
+    let pi = upload_u32(dev, &vec![0xffff_ffffu32; n])?;
+    dev.launch(
+        "atomicagg",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(pd), ArgValue::Ptr(pc), ArgValue::Ptr(pi), ArgValue::I32(n as i32)],
+    )
+    .map_err(|e| e.to_string())?;
+    let total: u32 = data.iter().filter(|&&v| v > 0).count() as u32;
+    let counter = dev.read_u32s(pc, 1).map_err(|e| e.to_string())?[0];
+    if counter != total {
+        return Err(format!("atomicagg counter: got {counter}, want {total}"));
+    }
+    // Every selected element got a unique index in [0, total).
+    let idx = dev.read_u32s(pi, n).map_err(|e| e.to_string())?;
+    let mut seen = vec![false; total as usize];
+    for (i, &d) in data.iter().enumerate() {
+        if d > 0 {
+            let v = idx[i];
+            if v as usize >= total as usize || seen[v as usize] {
+                return Err(format!("atomicagg idx[{i}]={v} invalid/duplicate"));
+            }
+            seen[v as usize] = true;
+        }
+    }
+    Ok(())
+}
+
+fn run_gc(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 128usize;
+    let (row_off, cols) = make_graph(n);
+    let colors: Vec<u32> = (0..n as u32).map(|i| i % 3).collect();
+    let pro = upload_u32(dev, &row_off)?;
+    let pco = upload_u32(dev, &cols)?;
+    let pcl = upload_u32(dev, &colors)?;
+    let pcf = upload_u32(dev, &vec![0u32; n])?;
+    dev.launch(
+        "gc",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[
+            ArgValue::Ptr(pro),
+            ArgValue::Ptr(pco),
+            ArgValue::Ptr(pcl),
+            ArgValue::Ptr(pcf),
+            ArgValue::I32(n as i32),
+        ],
+    )
+    .map_err(|e| e.to_string())?;
+    let mut want = vec![0u32; n];
+    for u in 0..n {
+        for e in row_off[u] as usize..row_off[u + 1] as usize {
+            let v = cols[e] as usize;
+            if v < u && colors[v] == colors[u] {
+                want[u] = 1;
+            }
+        }
+    }
+    check_u32(dev, pcf, &want, "gc")
+}
+
+fn run_nw(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 24usize;
+    let mut rng = Rng(35);
+    let refm: Vec<u32> = rng.u32s(n * n, 5);
+    let penalty = 2i32;
+    let mut score = vec![0i32; n * n];
+    for i in 0..n {
+        score[i * n] = -(i as i32) * penalty;
+        score[i] = -(i as i32) * penalty;
+    }
+    let ps = upload_u32(dev, &score.iter().map(|&x| x as u32).collect::<Vec<_>>())?;
+    let pr = upload_u32(dev, &refm)?;
+    for diag in 2..2 * n as i32 - 1 {
+        dev.launch(
+            "nw",
+            [1, 1, 1],
+            [32, 1, 1],
+            &[
+                ArgValue::Ptr(ps),
+                ArgValue::Ptr(pr),
+                ArgValue::I32(n as i32),
+                ArgValue::I32(diag),
+                ArgValue::I32(penalty),
+            ],
+        )
+        .map_err(|e| e.to_string())?;
+    }
+    for i in 1..n {
+        for j in 1..n {
+            let up = score[(i - 1) * n + j] - penalty;
+            let left = score[i * n + (j - 1)] - penalty;
+            let d = score[(i - 1) * n + (j - 1)] + refm[i * n + j] as i32;
+            score[i * n + j] = up.max(left).max(d);
+        }
+    }
+    check_u32(
+        dev,
+        ps,
+        &score.iter().map(|&x| x as u32).collect::<Vec<_>>(),
+        "nw",
+    )
+}
+
+fn run_myocyte(dev: &mut VoltDevice) -> Result<(), String> {
+    let n = 256usize;
+    let mut rng = Rng(36);
+    let state = rng.f32s(n);
+    let rate = rng.f32s(n);
+    let ps = upload(dev, &state)?;
+    let pr = upload(dev, &rate)?;
+    let dt = 0.01f32;
+    dev.launch(
+        "myocyte",
+        [2, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(ps), ArgValue::Ptr(pr), ArgValue::I32(n as i32), ArgValue::F32(dt)],
+    )
+    .map_err(|e| e.to_string())?;
+    let want: Vec<f32> = (0..n)
+        .map(|i| {
+            let s = state[i];
+            let dv = rate[i] * (-s.abs() * 0.1).exp() - s * 0.05;
+            s + dt * dv
+        })
+        .collect();
+    check_f32(dev, ps, &want, "myocyte")
+}

@@ -1,0 +1,374 @@
+//! Experiment harnesses regenerating every figure/table of the paper's
+//! evaluation (§5). Absolute numbers come from our simulator substrate;
+//! the claims under reproduction are the *relative* effects (who wins,
+//! roughly by how much, where it inverts).
+
+use super::benchmarks::{registry, Benchmark};
+use super::pipeline::{compile_source, CompileOutput};
+use crate::backend::emit::{BackendOptions, SharedMemMapping};
+use crate::frontend::FrontendOptions;
+use crate::runtime::VoltDevice;
+use crate::sim::{CacheConfig, SimConfig, SimStats};
+use crate::transform::OptLevel;
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub stats: SimStats,
+    pub compile_ms: f64,
+    pub middle_ms: f64,
+    pub code_size: usize,
+}
+
+pub fn run_bench(
+    b: &Benchmark,
+    opt: OptLevel,
+    warp_hw: bool,
+    smem: SharedMemMapping,
+    sim_cfg: SimConfig,
+) -> Result<RunResult, String> {
+    let fe = FrontendOptions {
+        dialect: b.dialect,
+        warp_hw,
+    };
+    let be = BackendOptions {
+        smem,
+        ..Default::default()
+    };
+    let out: CompileOutput = compile_source(b.source, &fe, opt, &be)?;
+    let mut dev = VoltDevice::new(out.image.clone(), sim_cfg);
+    (b.run)(&mut dev).map_err(|e| format!("{} @ {:?}: {e}", b.name, opt))?;
+    Ok(RunResult {
+        stats: dev.total_stats,
+        compile_ms: out.total_ms(),
+        middle_ms: out.middle_ms,
+        code_size: out.image.code.len(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figures 7 & 8: the optimization ladder
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct LadderRow {
+    pub name: &'static str,
+    /// Per-ladder-level dynamic warp-instruction counts (Fig. 7 raw).
+    pub instrs: Vec<u64>,
+    /// Per-ladder-level cycles (Fig. 8 raw).
+    pub cycles: Vec<u64>,
+    /// Per-level memory requests (the ZiCond density effect).
+    pub mem_requests: Vec<u64>,
+}
+
+impl LadderRow {
+    /// Fig. 7 metric: instruction-reduction factor vs Base (higher = better).
+    pub fn reduction(&self, level: usize) -> f64 {
+        self.instrs[0] as f64 / self.instrs[level] as f64
+    }
+    /// Fig. 8 metric: speedup vs Base.
+    pub fn speedup(&self, level: usize) -> f64 {
+        self.cycles[0] as f64 / self.cycles[level] as f64
+    }
+}
+
+/// Run the full ladder over the (non-warp-feature) suite.
+pub fn ladder_sweep(names: Option<&[&str]>) -> Result<Vec<LadderRow>, String> {
+    let mut rows = vec![];
+    for b in registry() {
+        if b.warp_feature {
+            continue;
+        }
+        if let Some(ns) = names {
+            if !ns.contains(&b.name) {
+                continue;
+            }
+        }
+        let mut row = LadderRow {
+            name: b.name,
+            instrs: vec![],
+            cycles: vec![],
+            mem_requests: vec![],
+        };
+        for lvl in OptLevel::LADDER {
+            let r = run_bench(
+                &b,
+                lvl,
+                true,
+                SharedMemMapping::Local,
+                SimConfig::default(),
+            )?;
+            row.instrs.push(r.stats.instrs);
+            row.cycles.push(r.stats.cycles);
+            row.mem_requests.push(r.stats.mem_requests);
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 9: ISA extensions (HW warp primitives vs software emulation)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct IsaExtRow {
+    pub name: &'static str,
+    pub sw_cycles: u64,
+    pub hw_cycles: u64,
+    pub sw_instrs: u64,
+    pub hw_instrs: u64,
+}
+
+impl IsaExtRow {
+    pub fn speedup(&self) -> f64 {
+        self.sw_cycles as f64 / self.hw_cycles as f64
+    }
+}
+
+pub fn isa_extension_sweep() -> Result<Vec<IsaExtRow>, String> {
+    let mut rows = vec![];
+    for b in registry() {
+        if !b.warp_feature {
+            continue;
+        }
+        let sw = run_bench(
+            &b,
+            OptLevel::Recon,
+            false,
+            SharedMemMapping::Local,
+            SimConfig::default(),
+        )?;
+        let hw = run_bench(
+            &b,
+            OptLevel::Recon,
+            true,
+            SharedMemMapping::Local,
+            SimConfig::default(),
+        )?;
+        rows.push(IsaExtRow {
+            name: b.name,
+            sw_cycles: sw.stats.cycles,
+            hw_cycles: hw.stats.cycles,
+            sw_instrs: sw.stats.instrs,
+            hw_instrs: hw.stats.instrs,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 10: shared-memory mapping × cache configuration
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct MemCfgRow {
+    pub name: &'static str,
+    /// (config label, cycles)
+    pub cells: Vec<(String, u64)>,
+}
+
+pub fn memory_config_sweep() -> Result<Vec<MemCfgRow>, String> {
+    let mut rows = vec![];
+    let configs: Vec<(String, SharedMemMapping, SimConfig)> = vec![
+        (
+            "smem=local,L2=on".into(),
+            SharedMemMapping::Local,
+            SimConfig::default(),
+        ),
+        (
+            "smem=local,L2=off".into(),
+            SharedMemMapping::Local,
+            SimConfig {
+                l2: None,
+                ..Default::default()
+            },
+        ),
+        (
+            "smem=global,L2=on".into(),
+            SharedMemMapping::Global,
+            SimConfig::default(),
+        ),
+        (
+            "smem=global,L2=off".into(),
+            SharedMemMapping::Global,
+            SimConfig {
+                l2: None,
+                ..Default::default()
+            },
+        ),
+        (
+            "smem=local,smallL1".into(),
+            SharedMemMapping::Local,
+            SimConfig {
+                l1d: CacheConfig {
+                    sets: 16,
+                    ways: 2,
+                    line: 64,
+                    latency: 2,
+                },
+                ..Default::default()
+            },
+        ),
+        (
+            "smem=global,smallL1".into(),
+            SharedMemMapping::Global,
+            SimConfig {
+                l1d: CacheConfig {
+                    sets: 16,
+                    ways: 2,
+                    line: 64,
+                    latency: 2,
+                },
+                ..Default::default()
+            },
+        ),
+    ];
+    for b in registry() {
+        if !b.smem {
+            continue;
+        }
+        let mut row = MemCfgRow {
+            name: b.name,
+            cells: vec![],
+        };
+        for (label, smem, cfg) in &configs {
+            let r = run_bench(&b, OptLevel::Recon, true, *smem, *cfg)?;
+            row.cells.push((label.clone(), r.stats.cycles));
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Compile-time overhead (§5.2: "0.18% compile-time geomean slowdown")
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct CompileTimeRow {
+    pub name: &'static str,
+    pub base_ms: f64,
+    pub full_ms: f64,
+}
+
+impl CompileTimeRow {
+    pub fn overhead_pct(&self) -> f64 {
+        (self.full_ms / self.base_ms - 1.0) * 100.0
+    }
+}
+
+pub fn compile_time_sweep(repeats: u32) -> Result<Vec<CompileTimeRow>, String> {
+    let mut rows = vec![];
+    for b in registry() {
+        let fe = FrontendOptions {
+            dialect: b.dialect,
+            warp_hw: true,
+        };
+        let be = BackendOptions::default();
+        let mut base = f64::MAX;
+        let mut full = f64::MAX;
+        for _ in 0..repeats {
+            base = base.min(compile_source(b.source, &fe, OptLevel::Base, &be)?.total_ms());
+            full = full.min(compile_source(b.source, &fe, OptLevel::Recon, &be)?.total_ms());
+        }
+        rows.push(CompileTimeRow {
+            name: b.name,
+            base_ms: base,
+            full_ms: full,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn geomean(vals: impl Iterator<Item = f64>) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0usize;
+    for v in vals {
+        log_sum += v.max(1e-12).ln();
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §5.1 coverage: validate the whole suite at every ladder level
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ValidationRow {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub results: Vec<(OptLevel, Result<(), String>)>,
+}
+
+pub fn validate_all(levels: &[OptLevel]) -> Vec<ValidationRow> {
+    let mut rows = vec![];
+    for b in registry() {
+        let mut results = vec![];
+        for &lvl in levels {
+            let r = run_bench(
+                &b,
+                lvl,
+                true,
+                SharedMemMapping::Local,
+                SimConfig::default(),
+            )
+            .map(|_| ());
+            results.push((lvl, r));
+        }
+        rows.push(ValidationRow {
+            name: b.name,
+            suite: b.suite,
+            results,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_sane() {
+        let g = geomean([1.0, 4.0].into_iter());
+        assert!((g - 2.0).abs() < 1e-9);
+    }
+
+    /// A couple of representative benchmarks validate at the ladder ends.
+    #[test]
+    fn spot_validation() {
+        for name in ["saxpy", "reduce", "pathfinder"] {
+            let b = super::super::benchmarks::find(name).unwrap();
+            for lvl in [OptLevel::Base, OptLevel::Recon] {
+                run_bench(
+                    &b,
+                    lvl,
+                    true,
+                    SharedMemMapping::Local,
+                    SimConfig::default(),
+                )
+                .unwrap_or_else(|e| panic!("{e}"));
+            }
+        }
+    }
+
+    /// The warp suite runs under both lowering modes; HW should not be
+    /// slower than SW.
+    #[test]
+    fn warp_hw_beats_sw() {
+        let b = super::super::benchmarks::find("bscan").unwrap();
+        let sw = run_bench(&b, OptLevel::Recon, false, SharedMemMapping::Local, SimConfig::default()).unwrap();
+        let hw = run_bench(&b, OptLevel::Recon, true, SharedMemMapping::Local, SimConfig::default()).unwrap();
+        assert!(
+            hw.stats.cycles < sw.stats.cycles,
+            "hw {} !< sw {}",
+            hw.stats.cycles,
+            sw.stats.cycles
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Coordinator: the end-to-end pipeline driver, the §5.1 benchmark
+//! registry, the figure/table experiment harnesses, and reporting.
+
+pub mod benchmarks;
+pub mod experiments;
+pub mod pipeline;
+pub mod propcheck;
+pub mod report;
+
+pub use benchmarks::{find, registry, Benchmark, Rng};
+pub use pipeline::{compile_source, CompileOutput};

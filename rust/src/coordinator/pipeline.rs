@@ -1,0 +1,77 @@
+//! End-to-end compile pipeline: source → front-end (+ dispatchers) →
+//! middle-end ladder → back-end image, with per-stage timing for the
+//! compile-time-overhead experiment (§5.2).
+
+use crate::backend::emit::{BackendOptions, ProgramImage};
+use crate::frontend::{compile_kernels, FrontendOptions, KernelInfo};
+use crate::transform::{run_middle_end, MiddleEndReport, OptLevel};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct CompileOutput {
+    pub image: ProgramImage,
+    pub middle: MiddleEndReport,
+    pub kernels: Vec<KernelInfo>,
+    pub frontend_ms: f64,
+    pub middle_ms: f64,
+    pub backend_ms: f64,
+}
+
+impl CompileOutput {
+    pub fn total_ms(&self) -> f64 {
+        self.frontend_ms + self.middle_ms + self.backend_ms
+    }
+}
+
+pub fn compile_source(
+    src: &str,
+    fe: &FrontendOptions,
+    opt: OptLevel,
+    be: &BackendOptions,
+) -> Result<CompileOutput, String> {
+    let t0 = Instant::now();
+    let (mut m, kernels) = compile_kernels(src, fe).map_err(|e| e.to_string())?;
+    let frontend_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if kernels.is_empty() {
+        return Err("no kernels in source".into());
+    }
+    let t1 = Instant::now();
+    let mut cfg = opt.config();
+    cfg.verify = false;
+    let middle = run_middle_end(&mut m, &cfg);
+    let middle_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let t2 = Instant::now();
+    let be = BackendOptions {
+        zicond: opt >= OptLevel::ZiCond,
+        ..*be
+    };
+    let image = crate::backend::build_image(&m, &format!("__main_{}", kernels[0].name), &be)?;
+    let backend_ms = t2.elapsed().as_secs_f64() * 1e3;
+    Ok(CompileOutput {
+        image,
+        middle,
+        kernels,
+        frontend_ms,
+        middle_ms,
+        backend_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compiles_with_timing() {
+        let out = compile_source(
+            "kernel void k(global int* o, int n) { int i = get_global_id(0); if (i < n) o[i] = i; }",
+            &FrontendOptions::default(),
+            OptLevel::Recon,
+            &BackendOptions::default(),
+        )
+        .unwrap();
+        assert!(out.total_ms() > 0.0);
+        assert_eq!(out.kernels.len(), 1);
+        assert!(out.image.code.len() > 20);
+    }
+}

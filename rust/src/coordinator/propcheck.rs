@@ -1,0 +1,87 @@
+//! Minimal property-testing harness (the build environment is offline, so
+//! `proptest` is unavailable; this provides the same discipline: seeded
+//! random cases, failure reporting with the reproducing seed, and
+//! last-known-good shrinking over a size parameter).
+
+use super::benchmarks::Rng;
+
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 32,
+            seed: 0x5eed_0001,
+        }
+    }
+}
+
+/// Run `f` over `cases` seeded RNGs; on failure, retry with progressively
+/// smaller `size` hints to report a minimal-ish reproduction.
+pub fn check<F>(cfg: &PropConfig, mut f: F)
+where
+    F: FnMut(&mut Rng, u32) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case.wrapping_mul(0x9e37_79b9));
+        let size = 4 + (case % 8) * 4;
+        let mut rng = Rng(seed);
+        if let Err(e) = f(&mut rng, size) {
+            // Shrink over size.
+            let mut best = (size, e);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng(seed);
+                match f(&mut rng, s) {
+                    Err(e2) => {
+                        best = (s, e2);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(&PropConfig::default(), |rng, size| {
+            let v = rng.u32s(size as usize, 100);
+            if v.len() == size as usize {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        check(
+            &PropConfig {
+                cases: 4,
+                seed: 42,
+            },
+            |_rng, size| {
+                if size > 2 {
+                    Err("too big".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,216 @@
+//! Text/CSV rendering of experiment results (the rows/series the paper's
+//! figures plot).
+
+use super::experiments::*;
+use crate::transform::OptLevel;
+
+fn fmt_row(cells: &[String], widths: &[usize]) -> String {
+    let mut s = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        s.push_str(&format!("{c:>w$}  ", w = w));
+    }
+    s.trim_end().to_string()
+}
+
+pub fn render_ladder_fig7(rows: &[LadderRow]) -> String {
+    let mut out = String::from(
+        "Figure 7 — instruction reduction factor vs Base (higher is better)\n",
+    );
+    let mut header = vec!["benchmark".to_string()];
+    header.extend(OptLevel::LADDER.iter().map(|l| l.name().to_string()));
+    let widths: Vec<usize> = std::iter::once(14usize).chain(std::iter::repeat(9).take(6)).collect();
+    out.push_str(&fmt_row(&header, &widths));
+    out.push('\n');
+    for r in rows {
+        let mut cells = vec![r.name.to_string()];
+        for i in 0..OptLevel::LADDER.len() {
+            cells.push(format!("{:.3}", r.reduction(i)));
+        }
+        out.push_str(&fmt_row(&cells, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn render_ladder_fig8(rows: &[LadderRow]) -> String {
+    let mut out = String::from("Figure 8 — speedup vs Base (higher is better)\n");
+    let mut header = vec!["benchmark".to_string()];
+    header.extend(OptLevel::LADDER.iter().map(|l| l.name().to_string()));
+    let widths: Vec<usize> = std::iter::once(14usize).chain(std::iter::repeat(9).take(6)).collect();
+    out.push_str(&fmt_row(&header, &widths));
+    out.push('\n');
+    for r in rows {
+        let mut cells = vec![r.name.to_string()];
+        for i in 0..OptLevel::LADDER.len() {
+            cells.push(format!("{:.3}", r.speedup(i)));
+        }
+        out.push_str(&fmt_row(&cells, &widths));
+        out.push('\n');
+    }
+    // Memory-request density (the ZiCond discussion).
+    out.push_str("\nmemory requests per level (ZiCond density effect):\n");
+    for r in rows {
+        let cells: Vec<String> = std::iter::once(r.name.to_string())
+            .chain(r.mem_requests.iter().map(|m| m.to_string()))
+            .collect();
+        out.push_str(&fmt_row(&cells, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn render_fig9(rows: &[IsaExtRow]) -> String {
+    let mut out = String::from(
+        "Figure 9 — ISA extension speedup (HW vote/shfl/atomics vs SW emulation)\n",
+    );
+    let widths = [12usize, 12, 12, 12, 12, 9];
+    out.push_str(&fmt_row(
+        &[
+            "benchmark".into(),
+            "sw cycles".into(),
+            "hw cycles".into(),
+            "sw instrs".into(),
+            "hw instrs".into(),
+            "speedup".into(),
+        ],
+        &widths,
+    ));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(
+            &[
+                r.name.to_string(),
+                r.sw_cycles.to_string(),
+                r.hw_cycles.to_string(),
+                r.sw_instrs.to_string(),
+                r.hw_instrs.to_string(),
+                format!("{:.2}x", r.speedup()),
+            ],
+            &widths,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn render_fig10(rows: &[MemCfgRow]) -> String {
+    let mut out = String::from(
+        "Figure 10 — cycles under shared-memory mapping × cache configs\n",
+    );
+    if rows.is_empty() {
+        return out;
+    }
+    let mut header = vec!["benchmark".to_string()];
+    header.extend(rows[0].cells.iter().map(|(l, _)| l.clone()));
+    let widths: Vec<usize> = std::iter::once(14usize)
+        .chain(rows[0].cells.iter().map(|(l, _)| l.len().max(10)))
+        .collect();
+    out.push_str(&fmt_row(&header, &widths));
+    out.push('\n');
+    for r in rows {
+        let mut cells = vec![r.name.to_string()];
+        cells.extend(r.cells.iter().map(|(_, c)| c.to_string()));
+        out.push_str(&fmt_row(&cells, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn render_compile_time(rows: &[CompileTimeRow]) -> String {
+    let mut out =
+        String::from("Compile time — Base vs full ladder (§5.2 overhead claim)\n");
+    let widths = [14usize, 12, 12, 10];
+    out.push_str(&fmt_row(
+        &[
+            "benchmark".into(),
+            "base ms".into(),
+            "full ms".into(),
+            "overhead".into(),
+        ],
+        &widths,
+    ));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(
+            &[
+                r.name.to_string(),
+                format!("{:.3}", r.base_ms),
+                format!("{:.3}", r.full_ms),
+                format!("{:+.2}%", r.overhead_pct()),
+            ],
+            &widths,
+        ));
+        out.push('\n');
+    }
+    let g = geomean(rows.iter().map(|r| r.full_ms / r.base_ms)) - 1.0;
+    out.push_str(&format!("geomean overhead: {:+.2}%\n", g * 100.0));
+    out
+}
+
+pub fn render_validation(rows: &[ValidationRow]) -> String {
+    let mut out = String::from("§5.1 coverage — correctness across the ladder\n");
+    for r in rows {
+        let status: Vec<String> = r
+            .results
+            .iter()
+            .map(|(l, res)| {
+                format!(
+                    "{}:{}",
+                    l.name(),
+                    if res.is_ok() { "PASS" } else { "FAIL" }
+                )
+            })
+            .collect();
+        out.push_str(&format!(
+            "{:>14} [{:>8}]  {}\n",
+            r.name,
+            r.suite,
+            status.join(" ")
+        ));
+        for (l, res) in &r.results {
+            if let Err(e) = res {
+                out.push_str(&format!("    {}: {}\n", l.name(), e));
+            }
+        }
+    }
+    out
+}
+
+/// CSV renderings (for EXPERIMENTS.md regeneration).
+pub fn csv_ladder(rows: &[LadderRow]) -> String {
+    let mut out = String::from("benchmark,level,instrs,cycles,mem_requests\n");
+    for r in rows {
+        for (i, lvl) in OptLevel::LADDER.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.name,
+                lvl.name(),
+                r.instrs[i],
+                r.cycles[i],
+                r.mem_requests[i]
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_tables() {
+        let rows = vec![LadderRow {
+            name: "x",
+            instrs: vec![100, 90, 80, 80, 70, 70],
+            cycles: vec![1000, 900, 800, 800, 700, 700],
+            mem_requests: vec![10, 10, 10, 10, 12, 12],
+        }];
+        let s7 = render_ladder_fig7(&rows);
+        assert!(s7.contains("1.250")); // 100/80
+        let s8 = render_ladder_fig8(&rows);
+        assert!(s8.contains("1.429")); // 1000/700
+        let c = csv_ladder(&rows);
+        assert!(c.contains("x,Base,100,1000,10"));
+    }
+}

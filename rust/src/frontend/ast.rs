@@ -1,0 +1,156 @@
+//! Abstract syntax tree for the VCL kernel language (OpenCL-C / CUDA-C
+//! subset, paper §4.2).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TypeSpec {
+    Void,
+    Int,
+    Uint,
+    Float,
+    Bool,
+}
+
+/// Address-space qualifier on pointers / declarations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceSpec {
+    Default,
+    Global,
+    Local,
+    Constant,
+    Private,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Float(f32),
+    Ident(String),
+    /// `base.member` — used for CUDA threadIdx.x etc.
+    Member(Box<Expr>, String),
+    Index(Box<Expr>, Box<Expr>),
+    Call(String, Vec<Expr>),
+    Un(UnAst, Box<Expr>),
+    Bin(BinAst, Box<Expr>, Box<Expr>),
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    Cast(TypeSpec, Box<Expr>),
+    /// `*p`
+    Deref(Box<Expr>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnAst {
+    Neg,
+    Not,
+    BitNot,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinAst {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    LogAnd,
+    LogOr,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    Decl {
+        ty: TypeSpec,
+        space: SpaceSpec,
+        is_ptr: bool,
+        name: String,
+        /// Array dimensions (product = element count); empty = scalar.
+        dims: Vec<u32>,
+        init: Option<Expr>,
+        uniform: bool,
+        line: u32,
+    },
+    /// `lhs op= rhs` (op None = plain assignment).
+    Assign {
+        lhs: Expr,
+        op: Option<BinAst>,
+        rhs: Expr,
+        line: u32,
+    },
+    If {
+        cond: Expr,
+        then_s: Vec<Stmt>,
+        else_s: Vec<Stmt>,
+        line: u32,
+    },
+    While {
+        cond: Expr,
+        body: Vec<Stmt>,
+        line: u32,
+    },
+    DoWhile {
+        body: Vec<Stmt>,
+        cond: Expr,
+        line: u32,
+    },
+    For {
+        init: Option<Box<Stmt>>,
+        cond: Option<Expr>,
+        step: Option<Box<Stmt>>,
+        body: Vec<Stmt>,
+        line: u32,
+    },
+    Break(u32),
+    Continue(u32),
+    Return(Option<Expr>, u32),
+    ExprStmt(Expr, u32),
+    Block(Vec<Stmt>),
+    Goto(String, u32),
+    Label(String, u32),
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamDecl {
+    pub name: String,
+    pub ty: TypeSpec,
+    pub is_ptr: bool,
+    pub space: SpaceSpec,
+    pub uniform: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct FuncDecl {
+    pub name: String,
+    pub ret: TypeSpec,
+    pub params: Vec<ParamDecl>,
+    pub body: Vec<Stmt>,
+    pub is_kernel: bool,
+    pub line: u32,
+}
+
+/// Module-scope variable (e.g. `__constant float lut[4] = {…};` or
+/// `__device__ int counter;`).
+#[derive(Clone, Debug)]
+pub struct GlobalDecl {
+    pub name: String,
+    pub ty: TypeSpec,
+    pub space: SpaceSpec,
+    pub dims: Vec<u32>,
+    pub init: Option<Vec<Expr>>,
+    pub line: u32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub funcs: Vec<FuncDecl>,
+    pub globals: Vec<GlobalDecl>,
+}

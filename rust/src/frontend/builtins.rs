@@ -1,0 +1,298 @@
+//! Builtin-function tables for the OpenCL and CUDA dialects (paper §4.2:
+//! "the optimization finds special function calls … then lowers each call
+//! appropriately in the built-in library"), plus the software warp-level
+//! helper synthesis used by the Fig. 9 ISA-extension study: when the
+//! target lacks vx_shfl / vx_vote, the builtins are emulated through the
+//! per-core shared-memory scratch area exactly as the CuPBoP runtime
+//! fallback does.
+
+use crate::ir::{
+    AddrSpace, BinOp, Builder, Csr, Function, Global, ICmp, InstKind, Intr, Linkage, Module,
+    Param, Type, UnOp, Val,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dialect {
+    OpenCL,
+    Cuda,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Builtin {
+    WorkItem(crate::ir::WorkItem),
+    Barrier,
+    Math1(UnOp),
+    MinI,
+    MaxI,
+    MinF,
+    MaxF,
+    AbsI,
+    Pow,
+    Rsqrt,
+    Mad,
+    Atomic(crate::ir::AtomOp),
+    AtomicSub,
+    AtomicCas,
+    Shfl,
+    ShflSync,
+    VoteAll,
+    VoteAny,
+    Ballot,
+    LaneId,
+    PrintInt,
+    PrintFloat,
+}
+
+pub fn lookup(dialect: Dialect, name: &str) -> Option<Builtin> {
+    use crate::ir::AtomOp as A;
+    use crate::ir::WorkItem as W;
+    // Dialect-independent debug helpers.
+    match name {
+        "print_int" => return Some(Builtin::PrintInt),
+        "print_float" => return Some(Builtin::PrintFloat),
+        "lane_id" => return Some(Builtin::LaneId),
+        _ => {}
+    }
+    match dialect {
+        Dialect::OpenCL => Some(match name {
+            "get_global_id" => Builtin::WorkItem(W::GlobalId),
+            "get_local_id" => Builtin::WorkItem(W::LocalId),
+            "get_group_id" => Builtin::WorkItem(W::GroupId),
+            "get_local_size" => Builtin::WorkItem(W::LocalSize),
+            "get_global_size" => Builtin::WorkItem(W::GlobalSize),
+            "get_num_groups" => Builtin::WorkItem(W::NumGroups),
+            "barrier" | "work_group_barrier" => Builtin::Barrier,
+            "sqrt" | "native_sqrt" => Builtin::Math1(UnOp::FSqrt),
+            "exp" | "native_exp" => Builtin::Math1(UnOp::FExp),
+            "log" | "native_log" => Builtin::Math1(UnOp::FLog),
+            "fabs" => Builtin::Math1(UnOp::FAbs),
+            "floor" => Builtin::Math1(UnOp::FFloor),
+            "fmin" => Builtin::MinF,
+            "fmax" => Builtin::MaxF,
+            "min" => Builtin::MinI,
+            "max" => Builtin::MaxI,
+            "abs" => Builtin::AbsI,
+            "pow" | "powr" => Builtin::Pow,
+            "rsqrt" | "native_rsqrt" => Builtin::Rsqrt,
+            "mad" | "fma" => Builtin::Mad,
+            "atomic_add" | "atom_add" => Builtin::Atomic(A::Add),
+            "atomic_sub" | "atom_sub" => Builtin::AtomicSub,
+            "atomic_min" | "atom_min" => Builtin::Atomic(A::Min),
+            "atomic_max" | "atom_max" => Builtin::Atomic(A::Max),
+            "atomic_and" | "atom_and" => Builtin::Atomic(A::And),
+            "atomic_or" | "atom_or" => Builtin::Atomic(A::Or),
+            "atomic_xor" | "atom_xor" => Builtin::Atomic(A::Xor),
+            "atomic_xchg" | "atom_xchg" => Builtin::Atomic(A::Exch),
+            "atomic_cmpxchg" | "atom_cmpxchg" => Builtin::AtomicCas,
+            _ => return None,
+        }),
+        Dialect::Cuda => Some(match name {
+            "__syncthreads" => Builtin::Barrier,
+            "sqrtf" => Builtin::Math1(UnOp::FSqrt),
+            "expf" => Builtin::Math1(UnOp::FExp),
+            "logf" => Builtin::Math1(UnOp::FLog),
+            "fabsf" => Builtin::Math1(UnOp::FAbs),
+            "floorf" => Builtin::Math1(UnOp::FFloor),
+            "fminf" => Builtin::MinF,
+            "fmaxf" => Builtin::MaxF,
+            "min" => Builtin::MinI,
+            "max" => Builtin::MaxI,
+            "abs" => Builtin::AbsI,
+            "powf" => Builtin::Pow,
+            "rsqrtf" => Builtin::Rsqrt,
+            "fmaf" => Builtin::Mad,
+            "atomicAdd" => Builtin::Atomic(A::Add),
+            "atomicSub" => Builtin::AtomicSub,
+            "atomicMin" => Builtin::Atomic(A::Min),
+            "atomicMax" => Builtin::Atomic(A::Max),
+            "atomicAnd" => Builtin::Atomic(A::And),
+            "atomicOr" => Builtin::Atomic(A::Or),
+            "atomicXor" => Builtin::Atomic(A::Xor),
+            "atomicExch" => Builtin::Atomic(A::Exch),
+            "atomicCAS" => Builtin::AtomicCas,
+            "__shfl" | "__shfl_idx" => Builtin::Shfl,
+            "__shfl_sync" => Builtin::ShflSync,
+            "__all" => Builtin::VoteAll,
+            "__all_sync" => Builtin::VoteAll,
+            "__any" => Builtin::VoteAny,
+            "__any_sync" => Builtin::VoteAny,
+            "__ballot" => Builtin::Ballot,
+            "__ballot_sync" => Builtin::Ballot,
+            _ => return None,
+        }),
+    }
+}
+
+/// Maximum threads-per-warp / warps-per-core the software scratch supports.
+pub const SCRATCH_LANES: u32 = 32;
+pub const SCRATCH_WARPS: u32 = 16;
+
+fn ensure_scratch(m: &mut Module) -> crate::ir::GlobalId {
+    if let Some(idx) = m.globals.iter().position(|g| g.name == "__warp_scratch") {
+        return crate::ir::GlobalId(idx as u32);
+    }
+    m.add_global(Global {
+        name: "__warp_scratch".into(),
+        space: AddrSpace::Local,
+        size: SCRATCH_LANES * SCRATCH_WARPS * 4,
+        align: 4,
+        init: None,
+    })
+}
+
+/// Synthesize (once) the software warp-primitive helper `name` ∈
+/// {"shfl", "ballot", "vote_all", "vote_any"} and return its id.
+pub fn ensure_sw_helper(m: &mut Module, name: &str) -> crate::ir::FuncId {
+    let fname = format!("__sw_{name}");
+    if let Some(fid) = m.find_func(&fname) {
+        return fid;
+    }
+    let scratch = ensure_scratch(m);
+    match name {
+        "shfl" => {
+            let mut f = Function::new(
+                &fname,
+                vec![
+                    Param {
+                        name: "v".into(),
+                        ty: Type::I32,
+                        uniform: false,
+                    },
+                    Param {
+                        name: "src".into(),
+                        ty: Type::I32,
+                        uniform: false,
+                    },
+                ],
+                Type::I32,
+            );
+            f.linkage = Linkage::Internal;
+            {
+                let mut b = Builder::new(&mut f);
+                let wid = b.intr(Intr::Csr(Csr::WarpId), vec![]);
+                let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+                let nt = b.intr(Intr::Csr(Csr::NumThreads), vec![]);
+                let base = b.mul(wid, Val::ci(SCRATCH_LANES as i64));
+                let my = b.add(base, lane);
+                let myp = b.gep(Val::G(scratch), my, 4);
+                b.store(myp, Val::Arg(0));
+                let srcm = b.bin(BinOp::URem, Val::Arg(1), nt);
+                let si = b.add(base, srcm);
+                let sp = b.gep(Val::G(scratch), si, 4);
+                let r = b.load(sp, Type::I32);
+                b.ret(Some(r));
+            }
+            m.add_func(f)
+        }
+        "ballot" | "vote_all" | "vote_any" => {
+            // ballot core: write my predicate bit, then a branchless loop
+            // OR-ing (scratch[i] & active_bit_i) << i over all lanes.
+            let mut f = Function::new(
+                &fname,
+                vec![Param {
+                    name: "p".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                }],
+                Type::I32,
+            );
+            f.linkage = Linkage::Internal;
+            f.ret_uniform = true; // warp-uniform by construction
+            let entry = f.entry;
+            let h = f.add_block("h");
+            let body = f.add_block("body");
+            let exit = f.add_block("exit");
+            {
+                let mut b = Builder::at(&mut f, entry);
+                let wid = b.intr(Intr::Csr(Csr::WarpId), vec![]);
+                let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+                let nt = b.intr(Intr::Csr(Csr::NumThreads), vec![]);
+                let mask = b.intr(Intr::Mask, vec![]);
+                let base = b.mul(wid, Val::ci(SCRATCH_LANES as i64));
+                let my = b.add(base, lane);
+                let myp = b.gep(Val::G(scratch), my, 4);
+                b.store(myp, Val::Arg(0));
+                b.br(h);
+                b.set_block(h);
+                let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+                let acc = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+                let c = b.icmp(ICmp::Slt, i, nt);
+                b.cond_br(c, body, exit);
+                b.set_block(body);
+                let idx = b.add(base, i);
+                let p = b.gep(Val::G(scratch), idx, 4);
+                let v = b.load(p, Type::I32);
+                let mbit = b.bin(BinOp::LShr, mask, i);
+                let active = b.bin(BinOp::And, mbit, Val::ci(1));
+                let vb = b.bin(BinOp::And, v, Val::ci(1));
+                let contrib0 = b.bin(BinOp::And, vb, active);
+                let contrib = b.bin(BinOp::Shl, contrib0, i);
+                let acc2 = b.bin(BinOp::Or, acc, contrib);
+                let i2 = b.add(i, Val::ci(1));
+                b.br(h);
+                b.set_block(exit);
+                // vote_all: acc == mask ; vote_any: acc != 0 ; ballot: acc
+                match name {
+                    "vote_all" => {
+                        let eq = b.icmp(ICmp::Eq, acc, mask);
+                        let z = b.un(UnOp::ZExt, eq);
+                        b.ret(Some(z));
+                    }
+                    "vote_any" => {
+                        let ne = b.icmp(ICmp::Ne, acc, Val::ci(0));
+                        let z = b.un(UnOp::ZExt, ne);
+                        b.ret(Some(z));
+                    }
+                    _ => b.ret(Some(acc)),
+                }
+                if let (Val::Inst(ip), Val::Inst(ap)) = (i, acc) {
+                    if let InstKind::Phi { incs } = &mut b.f.inst_mut(ip).kind {
+                        incs.push((body, i2));
+                    }
+                    if let InstKind::Phi { incs } = &mut b.f.inst_mut(ap).kind {
+                        incs.push((body, acc2));
+                    }
+                }
+            }
+            m.add_func(f)
+        }
+        _ => panic!("unknown software helper '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_tables() {
+        assert_eq!(
+            lookup(Dialect::OpenCL, "get_global_id"),
+            Some(Builtin::WorkItem(crate::ir::WorkItem::GlobalId))
+        );
+        assert_eq!(lookup(Dialect::Cuda, "__syncthreads"), Some(Builtin::Barrier));
+        assert_eq!(lookup(Dialect::Cuda, "get_global_id"), None);
+        assert_eq!(lookup(Dialect::OpenCL, "__syncthreads"), None);
+        assert_eq!(
+            lookup(Dialect::Cuda, "atomicCAS"),
+            Some(Builtin::AtomicCas)
+        );
+    }
+
+    #[test]
+    fn sw_helpers_build_and_verify() {
+        let mut m = Module::new("t");
+        let s = ensure_sw_helper(&mut m, "shfl");
+        let b1 = ensure_sw_helper(&mut m, "ballot");
+        let b2 = ensure_sw_helper(&mut m, "ballot");
+        assert_eq!(b1, b2, "helper must be synthesized once");
+        let _ = ensure_sw_helper(&mut m, "vote_all");
+        let _ = ensure_sw_helper(&mut m, "vote_any");
+        crate::ir::verify::verify_module(&m).unwrap();
+        assert!(m.func(s).name.starts_with("__sw_"));
+        assert!(m.globals.iter().any(|g| g.name == "__warp_scratch"));
+        // ballot is marked warp-uniform.
+        let bal = m.find_func("__sw_ballot").unwrap();
+        assert!(m.func(bal).ret_uniform);
+    }
+}

@@ -1,0 +1,306 @@
+//! Lexer for VCL, the OpenCL-C / CUDA-C kernel dialect accepted by the
+//! VOLT front-end (paper §4.2).
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Float(f32),
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    Question,
+    Dot,
+    Assign,
+    PlusAssign,
+    MinusAssign,
+    StarAssign,
+    SlashAssign,
+    PercentAssign,
+    AmpAssign,
+    PipeAssign,
+    CaretAssign,
+    ShlAssign,
+    ShrAssign,
+    PlusPlus,
+    MinusMinus,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Amp,
+    Pipe,
+    Caret,
+    Tilde,
+    Not,
+    AndAnd,
+    OrOr,
+    Shl,
+    Shr,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eof,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+#[derive(Debug)]
+pub struct LexError {
+    pub line: u32,
+    pub msg: String,
+}
+
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let mut out = vec![];
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                i += 2;
+                while i + 1 < n && !(b[i] == '*' && b[i + 1] == '/') {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i += 2;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let s = i;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Token {
+                    tok: Tok::Ident(b[s..i].iter().collect()),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let s = i;
+                let mut is_float = false;
+                if c == '0' && i + 1 < n && (b[i + 1] == 'x' || b[i + 1] == 'X') {
+                    i += 2;
+                    while i < n && b[i].is_ascii_hexdigit() {
+                        i += 1;
+                    }
+                    let text: String = b[s + 2..i].iter().collect();
+                    let v = i64::from_str_radix(&text, 16).map_err(|_| LexError {
+                        line,
+                        msg: format!("bad hex literal {text}"),
+                    })?;
+                    out.push(Token {
+                        tok: Tok::Int(v),
+                        line,
+                    });
+                    continue;
+                }
+                while i < n && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                if i < n && b[i] == '.' {
+                    is_float = true;
+                    i += 1;
+                    while i < n && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < n && (b[i] == 'e' || b[i] == 'E') {
+                    is_float = true;
+                    i += 1;
+                    if i < n && (b[i] == '+' || b[i] == '-') {
+                        i += 1;
+                    }
+                    while i < n && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                let text: String = b[s..i].iter().collect();
+                if i < n && (b[i] == 'f' || b[i] == 'F') {
+                    is_float = true;
+                    i += 1;
+                }
+                if is_float {
+                    let v: f32 = text.parse().map_err(|_| LexError {
+                        line,
+                        msg: format!("bad float literal {text}"),
+                    })?;
+                    out.push(Token {
+                        tok: Tok::Float(v),
+                        line,
+                    });
+                } else {
+                    // unsigned suffix (1u / 1U) — type is tracked by decls.
+                    if i < n && (b[i] == 'u' || b[i] == 'U') {
+                        i += 1;
+                    }
+                    let v: i64 = text.parse().map_err(|_| LexError {
+                        line,
+                        msg: format!("bad int literal {text}"),
+                    })?;
+                    out.push(Token {
+                        tok: Tok::Int(v),
+                        line,
+                    });
+                }
+            }
+            _ => {
+                let two = |a: char, b2: char, i: usize, b: &[char]| -> bool {
+                    b[i] == a && i + 1 < b.len() && b[i + 1] == b2
+                };
+                let three = |a: char, b2: char, c2: char, i: usize, b: &[char]| -> bool {
+                    b[i] == a && i + 2 < b.len() && b[i + 1] == b2 && b[i + 2] == c2
+                };
+                let (tok, len) = if three('<', '<', '=', i, &b) {
+                    (Tok::ShlAssign, 3)
+                } else if three('>', '>', '=', i, &b) {
+                    (Tok::ShrAssign, 3)
+                } else if two('+', '=', i, &b) {
+                    (Tok::PlusAssign, 2)
+                } else if two('-', '=', i, &b) {
+                    (Tok::MinusAssign, 2)
+                } else if two('*', '=', i, &b) {
+                    (Tok::StarAssign, 2)
+                } else if two('/', '=', i, &b) {
+                    (Tok::SlashAssign, 2)
+                } else if two('%', '=', i, &b) {
+                    (Tok::PercentAssign, 2)
+                } else if two('&', '=', i, &b) {
+                    (Tok::AmpAssign, 2)
+                } else if two('|', '=', i, &b) {
+                    (Tok::PipeAssign, 2)
+                } else if two('^', '=', i, &b) {
+                    (Tok::CaretAssign, 2)
+                } else if two('+', '+', i, &b) {
+                    (Tok::PlusPlus, 2)
+                } else if two('-', '-', i, &b) {
+                    (Tok::MinusMinus, 2)
+                } else if two('&', '&', i, &b) {
+                    (Tok::AndAnd, 2)
+                } else if two('|', '|', i, &b) {
+                    (Tok::OrOr, 2)
+                } else if two('<', '<', i, &b) {
+                    (Tok::Shl, 2)
+                } else if two('>', '>', i, &b) {
+                    (Tok::Shr, 2)
+                } else if two('=', '=', i, &b) {
+                    (Tok::Eq, 2)
+                } else if two('!', '=', i, &b) {
+                    (Tok::Ne, 2)
+                } else if two('<', '=', i, &b) {
+                    (Tok::Le, 2)
+                } else if two('>', '=', i, &b) {
+                    (Tok::Ge, 2)
+                } else {
+                    let t = match c {
+                        '(' => Tok::LParen,
+                        ')' => Tok::RParen,
+                        '{' => Tok::LBrace,
+                        '}' => Tok::RBrace,
+                        '[' => Tok::LBracket,
+                        ']' => Tok::RBracket,
+                        ',' => Tok::Comma,
+                        ';' => Tok::Semi,
+                        ':' => Tok::Colon,
+                        '?' => Tok::Question,
+                        '.' => Tok::Dot,
+                        '=' => Tok::Assign,
+                        '+' => Tok::Plus,
+                        '-' => Tok::Minus,
+                        '*' => Tok::Star,
+                        '/' => Tok::Slash,
+                        '%' => Tok::Percent,
+                        '&' => Tok::Amp,
+                        '|' => Tok::Pipe,
+                        '^' => Tok::Caret,
+                        '~' => Tok::Tilde,
+                        '!' => Tok::Not,
+                        '<' => Tok::Lt,
+                        '>' => Tok::Gt,
+                        _ => {
+                            return Err(LexError {
+                                line,
+                                msg: format!("unexpected character '{c}'"),
+                            })
+                        }
+                    };
+                    (t, 1)
+                };
+                out.push(Token { tok, line });
+                i += len;
+            }
+        }
+    }
+    out.push(Token {
+        tok: Tok::Eof,
+        line,
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_kernel_source() {
+        let toks = lex("kernel void f(global float* x) { x[0] = 1.5f + 2; // c\n }").unwrap();
+        assert!(toks.iter().any(|t| t.tok == Tok::Ident("kernel".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Float(1.5)));
+        assert!(toks.iter().any(|t| t.tok == Tok::Int(2)));
+        assert_eq!(toks.last().unwrap().tok, Tok::Eof);
+    }
+
+    #[test]
+    fn lexes_operators() {
+        let toks = lex("a += b << 2; c = a && !d || e >= 0x1F;").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|t| &t.tok).collect();
+        assert!(kinds.contains(&&Tok::PlusAssign));
+        assert!(kinds.contains(&&Tok::Shl));
+        assert!(kinds.contains(&&Tok::AndAnd));
+        assert!(kinds.contains(&&Tok::OrOr));
+        assert!(kinds.contains(&&Tok::Ge));
+        assert!(kinds.contains(&&Tok::Int(0x1F)));
+    }
+
+    #[test]
+    fn tracks_lines_and_block_comments() {
+        let toks = lex("a\n/* x\ny */ b").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 3);
+    }
+
+    #[test]
+    fn rejects_bad_char() {
+        assert!(lex("a @ b").is_err());
+    }
+}

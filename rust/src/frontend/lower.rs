@@ -1,0 +1,1530 @@
+//! AST → IR lowering with on-the-fly semantic analysis (paper §4.2:
+//! language-semantics analysis, memory-structure handling, builtin
+//! resolution).
+//!
+//! All named variables live in allocas until the middle-end's mem2reg —
+//! this keeps the early CFG passes (structurization / reconstruction) free
+//! of SSA repair. Short-circuit booleans and call-bearing ternaries lower
+//! to value-producing diamonds through a temp slot, so every conditional
+//! branch the middle-end sees has a proper single-entry/single-exit
+//! reconvergence structure.
+
+use super::ast::*;
+use super::builtins::{self, Builtin, Dialect};
+use super::parser::{parse_program, ParseError};
+use crate::ir::{
+    AddrSpace, AtomOp, BinOp, FCmp, Function, Global, GlobalId, ICmp, InstKind, Intr,
+    Linkage, Module, Param, Type, UnOp, Val, WorkItem,
+};
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct CompileError {
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "compile error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<ParseError> for CompileError {
+    fn from(e: ParseError) -> Self {
+        CompileError {
+            line: e.line,
+            msg: e.msg,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct FrontendOptions {
+    pub dialect: Dialect,
+    /// Lower warp-level builtins to hardware instructions (vx_shfl /
+    /// vx_vote) rather than shared-memory software emulation — the
+    /// Fig. 9 ISA-extension axis.
+    pub warp_hw: bool,
+}
+
+impl Default for FrontendOptions {
+    fn default() -> Self {
+        FrontendOptions {
+            dialect: Dialect::OpenCL,
+            warp_hw: true,
+        }
+    }
+}
+
+/// Value type during lowering (adds signedness and pointee info on top of
+/// the IR types).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VTy {
+    I32,
+    U32,
+    F32,
+    Bool,
+    Ptr(AddrSpace, TypeSpec),
+}
+
+impl VTy {
+    fn ir(self) -> Type {
+        match self {
+            VTy::I32 | VTy::U32 => Type::I32,
+            VTy::F32 => Type::F32,
+            VTy::Bool => Type::I1,
+            VTy::Ptr(sp, _) => Type::Ptr(sp),
+        }
+    }
+    fn of_spec(ts: TypeSpec) -> VTy {
+        match ts {
+            TypeSpec::Int => VTy::I32,
+            TypeSpec::Uint => VTy::U32,
+            TypeSpec::Float => VTy::F32,
+            TypeSpec::Bool => VTy::Bool,
+            TypeSpec::Void => VTy::I32, // callers check
+        }
+    }
+}
+
+fn space_of(s: SpaceSpec) -> AddrSpace {
+    match s {
+        SpaceSpec::Global | SpaceSpec::Default => AddrSpace::Global,
+        SpaceSpec::Local => AddrSpace::Local,
+        SpaceSpec::Constant => AddrSpace::Const,
+        SpaceSpec::Private => AddrSpace::Private,
+    }
+}
+
+#[derive(Clone, Copy)]
+struct VarSlot {
+    /// Pointer to the storage (alloca or global address).
+    ptr: Val,
+    ty: VTy,
+    is_array: bool,
+    uniform: bool,
+}
+
+pub fn compile(src: &str, opts: &FrontendOptions) -> Result<Module, CompileError> {
+    let prog = parse_program(src)?;
+    let mut module = Module::new("vcl");
+    // Globals first.
+    let mut global_map: HashMap<String, (GlobalId, VTy, bool)> = HashMap::new();
+    for g in &prog.globals {
+        let elems: u32 = g.dims.iter().product::<u32>().max(1);
+        let init = match &g.init {
+            Some(items) => {
+                let mut bytes = vec![];
+                for it in items {
+                    let w = const_eval(it).ok_or(CompileError {
+                        line: g.line,
+                        msg: "global initializers must be literals".into(),
+                    })?;
+                    bytes.extend_from_slice(&w.to_le_bytes());
+                }
+                bytes.resize((elems * 4) as usize, 0);
+                Some(bytes)
+            }
+            None => None,
+        };
+        let gid = module.add_global(Global {
+            name: g.name.clone(),
+            space: space_of(g.space),
+            size: elems * 4,
+            align: 4,
+            init,
+        });
+        global_map.insert(
+            g.name.clone(),
+            (
+                gid,
+                VTy::Ptr(space_of(g.space), g.ty),
+                !g.dims.is_empty(),
+            ),
+        );
+    }
+    // Function shells.
+    let mut sigs: HashMap<String, crate::ir::FuncId> = HashMap::new();
+    for fd in &prog.funcs {
+        let params: Vec<Param> = fd
+            .params
+            .iter()
+            .map(|p| Param {
+                name: p.name.clone(),
+                ty: if p.is_ptr {
+                    Type::Ptr(space_of(p.space))
+                } else {
+                    VTy::of_spec(p.ty).ir()
+                },
+                uniform: p.uniform,
+            })
+            .collect();
+        let ret = if fd.ret == TypeSpec::Void {
+            Type::Void
+        } else {
+            VTy::of_spec(fd.ret).ir()
+        };
+        let mut f = Function::new(&fd.name, params, ret);
+        f.is_kernel = fd.is_kernel;
+        f.linkage = if fd.is_kernel {
+            Linkage::External
+        } else {
+            Linkage::Internal
+        };
+        let fid = module.add_func(f);
+        if sigs.insert(fd.name.clone(), fid).is_some() {
+            return Err(CompileError {
+                line: fd.line,
+                msg: format!("duplicate function '{}'", fd.name),
+            });
+        }
+    }
+    // Bodies.
+    for fd in &prog.funcs {
+        let fid = sigs[&fd.name];
+        let mut lower = FnLower {
+            module: &mut module,
+            opts,
+            sigs: &sigs,
+            global_map: &global_map,
+            fid,
+            fd,
+            scopes: vec![],
+            loop_stack: vec![],
+            labels: HashMap::new(),
+            terminated: false,
+            cur: crate::ir::BlockId(0),
+            local_counter: 0,
+        };
+        lower.run()?;
+    }
+    crate::ir::verify::verify_module(&module).map_err(|e| CompileError {
+        line: 0,
+        msg: format!("internal: lowered module failed verification: {e}"),
+    })?;
+    Ok(module)
+}
+
+fn const_eval(e: &Expr) -> Option<u32> {
+    match e {
+        Expr::Int(v) => Some(*v as i32 as u32),
+        Expr::Float(v) => Some(v.to_bits()),
+        Expr::Un(UnAst::Neg, inner) => match &**inner {
+            Expr::Int(v) => Some((-(*v as i32)) as u32),
+            Expr::Float(v) => Some((-*v).to_bits()),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+struct FnLower<'a> {
+    module: &'a mut Module,
+    opts: &'a FrontendOptions,
+    sigs: &'a HashMap<String, crate::ir::FuncId>,
+    global_map: &'a HashMap<String, (GlobalId, VTy, bool)>,
+    fid: crate::ir::FuncId,
+    fd: &'a FuncDecl,
+    scopes: Vec<HashMap<String, VarSlot>>,
+    /// (continue target, break target)
+    loop_stack: Vec<(crate::ir::BlockId, crate::ir::BlockId)>,
+    labels: HashMap<String, crate::ir::BlockId>,
+    terminated: bool,
+    cur: crate::ir::BlockId,
+    local_counter: u32,
+}
+
+type LResult<T> = Result<T, CompileError>;
+
+impl<'a> FnLower<'a> {
+    fn f(&mut self) -> &mut Function {
+        &mut self.module.funcs[self.fid.idx()]
+    }
+
+    fn err<T>(&self, line: u32, msg: impl Into<String>) -> LResult<T> {
+        Err(CompileError {
+            line,
+            msg: msg.into(),
+        })
+    }
+
+    fn emit(&mut self, kind: InstKind, ty: Type) -> Val {
+        let cur = self.cur;
+        Val::Inst(self.f().push_inst(cur, kind, ty))
+    }
+
+    fn new_block(&mut self, name: &str) -> crate::ir::BlockId {
+        self.f().add_block(name)
+    }
+
+    fn switch(&mut self, b: crate::ir::BlockId) {
+        self.cur = b;
+        self.terminated = false;
+    }
+
+    fn run(&mut self) -> LResult<()> {
+        self.scopes.push(HashMap::new());
+        self.cur = self.module.funcs[self.fid.idx()].entry;
+        // Copy parameters into slots (C parameters are mutable lvalues).
+        for (i, p) in self.fd.params.iter().enumerate() {
+            let vty = if p.is_ptr {
+                VTy::Ptr(space_of(p.space), p.ty)
+            } else {
+                VTy::of_spec(p.ty)
+            };
+            let slot = self.emit(InstKind::Alloca { size: 4 }, Type::Ptr(AddrSpace::Private));
+            self.emit(
+                InstKind::Store {
+                    ptr: slot,
+                    val: Val::Arg(i as u32),
+                },
+                Type::Void,
+            );
+            self.scopes.last_mut().unwrap().insert(
+                p.name.clone(),
+                VarSlot {
+                    ptr: slot,
+                    ty: vty,
+                    is_array: false,
+                    uniform: p.uniform,
+                },
+            );
+        }
+        // Pre-create label blocks.
+        collect_labels(&self.fd.body, &mut |name| {
+            if !self.labels.contains_key(name) {
+                let b = self.module.funcs[self.fid.idx()].add_block(&format!("lbl.{name}"));
+                self.labels.insert(name.to_string(), b);
+            }
+        });
+        let body = self.fd.body.clone();
+        self.stmts(&body)?;
+        if !self.terminated {
+            if self.module.funcs[self.fid.idx()].ret == Type::Void {
+                self.emit(InstKind::Ret { val: None }, Type::Void);
+            } else {
+                // Implicit return 0 on fallthrough.
+                let z = match self.module.funcs[self.fid.idx()].ret {
+                    Type::F32 => Val::cf(0.0),
+                    _ => Val::ci(0),
+                };
+                self.emit(InstKind::Ret { val: Some(z) }, Type::Void);
+            }
+        }
+        self.module.funcs[self.fid.idx()].remove_unreachable();
+        Ok(())
+    }
+
+    fn lookup(&self, name: &str) -> Option<VarSlot> {
+        for sc in self.scopes.iter().rev() {
+            if let Some(s) = sc.get(name) {
+                return Some(*s);
+            }
+        }
+        None
+    }
+
+    fn stmts(&mut self, list: &[Stmt]) -> LResult<()> {
+        for s in list {
+            self.stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_open(&mut self) {
+        if self.terminated {
+            let b = self.new_block("dead");
+            self.switch(b);
+        }
+    }
+
+    fn stmt(&mut self, s: &Stmt) -> LResult<()> {
+        match s {
+            Stmt::Block(list) => {
+                self.scopes.push(HashMap::new());
+                self.stmts(list)?;
+                self.scopes.pop();
+                Ok(())
+            }
+            Stmt::Decl {
+                ty,
+                space,
+                is_ptr,
+                name,
+                dims,
+                init,
+                uniform,
+                line,
+            } => self.decl(*ty, *space, *is_ptr, name, dims, init.as_ref(), *uniform, *line),
+            Stmt::Assign { lhs, op, rhs, line } => self.assign(lhs, *op, rhs, *line),
+            Stmt::ExprStmt(e, line) => {
+                self.ensure_open();
+                self.expr(e, *line)?;
+                Ok(())
+            }
+            Stmt::Return(v, line) => {
+                self.ensure_open();
+                let ret_ty = self.module.funcs[self.fid.idx()].ret;
+                let val = match v {
+                    Some(e) => {
+                        let (val, vty) = self.expr(e, *line)?;
+                        let want = match ret_ty {
+                            Type::F32 => VTy::F32,
+                            Type::I1 => VTy::Bool,
+                            _ => VTy::I32,
+                        };
+                        Some(self.convert(val, vty, want))
+                    }
+                    None => None,
+                };
+                if ret_ty != Type::Void && val.is_none() {
+                    return self.err(*line, "missing return value");
+                }
+                self.emit(InstKind::Ret { val }, Type::Void);
+                self.terminated = true;
+                Ok(())
+            }
+            Stmt::If {
+                cond,
+                then_s,
+                else_s,
+                line,
+            } => {
+                self.ensure_open();
+                let c = self.cond_value(cond, *line)?;
+                let then_b = self.new_block("if.then");
+                let else_b = self.new_block("if.else");
+                let join = self.new_block("if.join");
+                self.emit(
+                    InstKind::CondBr {
+                        cond: c,
+                        t: then_b,
+                        f: else_b,
+                    },
+                    Type::Void,
+                );
+                self.switch(then_b);
+                self.scopes.push(HashMap::new());
+                self.stmts(then_s)?;
+                self.scopes.pop();
+                if !self.terminated {
+                    self.emit(InstKind::Br { target: join }, Type::Void);
+                }
+                self.switch(else_b);
+                self.scopes.push(HashMap::new());
+                self.stmts(else_s)?;
+                self.scopes.pop();
+                if !self.terminated {
+                    self.emit(InstKind::Br { target: join }, Type::Void);
+                }
+                self.switch(join);
+                Ok(())
+            }
+            Stmt::While { cond, body, line } => {
+                self.ensure_open();
+                let head = self.new_block("wh.head");
+                let body_b = self.new_block("wh.body");
+                let exit = self.new_block("wh.exit");
+                self.emit(InstKind::Br { target: head }, Type::Void);
+                self.switch(head);
+                let c = self.cond_value(cond, *line)?;
+                self.emit(
+                    InstKind::CondBr {
+                        cond: c,
+                        t: body_b,
+                        f: exit,
+                    },
+                    Type::Void,
+                );
+                self.switch(body_b);
+                self.loop_stack.push((head, exit));
+                self.scopes.push(HashMap::new());
+                self.stmts(body)?;
+                self.scopes.pop();
+                self.loop_stack.pop();
+                if !self.terminated {
+                    self.emit(InstKind::Br { target: head }, Type::Void);
+                }
+                self.switch(exit);
+                Ok(())
+            }
+            Stmt::DoWhile { body, cond, line } => {
+                self.ensure_open();
+                let body_b = self.new_block("do.body");
+                let cond_b = self.new_block("do.cond");
+                let exit = self.new_block("do.exit");
+                self.emit(InstKind::Br { target: body_b }, Type::Void);
+                self.switch(body_b);
+                self.loop_stack.push((cond_b, exit));
+                self.scopes.push(HashMap::new());
+                self.stmts(body)?;
+                self.scopes.pop();
+                self.loop_stack.pop();
+                if !self.terminated {
+                    self.emit(InstKind::Br { target: cond_b }, Type::Void);
+                }
+                self.switch(cond_b);
+                let c = self.cond_value(cond, *line)?;
+                self.emit(
+                    InstKind::CondBr {
+                        cond: c,
+                        t: body_b,
+                        f: exit,
+                    },
+                    Type::Void,
+                );
+                self.switch(exit);
+                Ok(())
+            }
+            Stmt::For {
+                init,
+                cond,
+                step,
+                body,
+                line,
+            } => {
+                self.ensure_open();
+                self.scopes.push(HashMap::new());
+                if let Some(i) = init {
+                    self.stmt(i)?;
+                }
+                let head = self.new_block("for.head");
+                let body_b = self.new_block("for.body");
+                let step_b = self.new_block("for.step");
+                let exit = self.new_block("for.exit");
+                self.emit(InstKind::Br { target: head }, Type::Void);
+                self.switch(head);
+                let c = match cond {
+                    Some(c) => self.cond_value(c, *line)?,
+                    None => Val::cb(true),
+                };
+                self.emit(
+                    InstKind::CondBr {
+                        cond: c,
+                        t: body_b,
+                        f: exit,
+                    },
+                    Type::Void,
+                );
+                self.switch(body_b);
+                self.loop_stack.push((step_b, exit));
+                self.scopes.push(HashMap::new());
+                self.stmts(body)?;
+                self.scopes.pop();
+                self.loop_stack.pop();
+                if !self.terminated {
+                    self.emit(InstKind::Br { target: step_b }, Type::Void);
+                }
+                self.switch(step_b);
+                if let Some(st) = step {
+                    self.stmt(st)?;
+                }
+                self.emit(InstKind::Br { target: head }, Type::Void);
+                self.switch(exit);
+                self.scopes.pop();
+                Ok(())
+            }
+            Stmt::Break(line) => {
+                self.ensure_open();
+                match self.loop_stack.last() {
+                    Some(&(_, brk)) => {
+                        self.emit(InstKind::Br { target: brk }, Type::Void);
+                        self.terminated = true;
+                        Ok(())
+                    }
+                    None => self.err(*line, "break outside loop"),
+                }
+            }
+            Stmt::Continue(line) => {
+                self.ensure_open();
+                match self.loop_stack.last() {
+                    Some(&(cont, _)) => {
+                        self.emit(InstKind::Br { target: cont }, Type::Void);
+                        self.terminated = true;
+                        Ok(())
+                    }
+                    None => self.err(*line, "continue outside loop"),
+                }
+            }
+            Stmt::Goto(name, line) => {
+                self.ensure_open();
+                match self.labels.get(name) {
+                    Some(&b) => {
+                        self.emit(InstKind::Br { target: b }, Type::Void);
+                        self.terminated = true;
+                        Ok(())
+                    }
+                    None => self.err(*line, format!("undefined label '{name}'")),
+                }
+            }
+            Stmt::Label(name, _line) => {
+                let b = self.labels[name];
+                if !self.terminated {
+                    self.emit(InstKind::Br { target: b }, Type::Void);
+                }
+                self.switch(b);
+                Ok(())
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decl(
+        &mut self,
+        ty: TypeSpec,
+        space: SpaceSpec,
+        is_ptr: bool,
+        name: &str,
+        dims: &[u32],
+        init: Option<&Expr>,
+        uniform: bool,
+        line: u32,
+    ) -> LResult<()> {
+        self.ensure_open();
+        if ty == TypeSpec::Void && !is_ptr {
+            return self.err(line, "cannot declare void variable");
+        }
+        let is_array = !dims.is_empty();
+        let elems: u32 = dims.iter().product::<u32>().max(1);
+        let (ptr, vty) = if is_array && matches!(space, SpaceSpec::Local) {
+            // Shared/local arrays become per-workgroup memory carved out of
+            // the function's local segment (paper §5.4 / Fig. 10).
+            let offset = self.module.funcs[self.fid.idx()].local_mem_size;
+            self.module.funcs[self.fid.idx()].local_mem_size = offset + elems * 4;
+            self.local_counter += 1;
+            let g = self.module.add_global(Global {
+                name: format!("{}.{}", self.fd.name, name),
+                space: AddrSpace::Local,
+                size: elems * 4,
+                align: 4,
+                init: None,
+            });
+            (Val::G(g), VTy::Ptr(AddrSpace::Local, ty))
+        } else if is_array {
+            let a = self.emit(
+                InstKind::Alloca { size: elems * 4 },
+                Type::Ptr(AddrSpace::Private),
+            );
+            (a, VTy::Ptr(AddrSpace::Private, ty))
+        } else {
+            let a = self.emit(InstKind::Alloca { size: 4 }, Type::Ptr(AddrSpace::Private));
+            let vty = if is_ptr {
+                VTy::Ptr(space_of(space), ty)
+            } else {
+                VTy::of_spec(ty)
+            };
+            (a, vty)
+        };
+        if let Some(e) = init {
+            if is_array {
+                return self.err(line, "array initializers are not supported for locals");
+            }
+            let (v, vt) = self.expr(e, line)?;
+            let v = self.convert(v, vt, vty);
+            let v_ann = v;
+            self.emit(InstKind::Store { ptr, val: v }, Type::Void);
+            if uniform {
+                if let Val::Inst(i) = v_ann {
+                    self.f().inst_mut(i).uniform_ann = true;
+                }
+            }
+        }
+        self.scopes.last_mut().unwrap().insert(
+            name.to_string(),
+            VarSlot {
+                ptr,
+                ty: vty,
+                is_array,
+                uniform,
+            },
+        );
+        Ok(())
+    }
+
+    fn assign(&mut self, lhs: &Expr, op: Option<BinAst>, rhs: &Expr, line: u32) -> LResult<()> {
+        self.ensure_open();
+        let (ptr, elem_ty, uniform) = self.lvalue(lhs, line)?;
+        let (rv, rt) = self.expr(rhs, line)?;
+        let value = match op {
+            None => self.convert(rv, rt, elem_ty),
+            Some(op) => {
+                let cur = self.emit(InstKind::Load { ptr }, elem_ty.ir());
+                let (res, resty) = self.binop(op, (cur, elem_ty), (rv, rt), line)?;
+                self.convert(res, resty, elem_ty)
+            }
+        };
+        if uniform {
+            if let Val::Inst(i) = value {
+                self.f().inst_mut(i).uniform_ann = true;
+            }
+        }
+        self.emit(InstKind::Store { ptr, val: value }, Type::Void);
+        Ok(())
+    }
+
+    /// Lower an lvalue to (pointer, element type, uniform-var flag).
+    fn lvalue(&mut self, e: &Expr, line: u32) -> LResult<(Val, VTy, bool)> {
+        match e {
+            Expr::Ident(name) => {
+                if let Some(slot) = self.lookup(name) {
+                    if slot.is_array {
+                        return self.err(line, format!("cannot assign to array '{name}'"));
+                    }
+                    Ok((slot.ptr, slot.ty, slot.uniform))
+                } else if let Some(&(g, vty, is_arr)) = self.global_map.get(name) {
+                    if is_arr {
+                        return self.err(line, format!("cannot assign to array '{name}'"));
+                    }
+                    let elem = match vty {
+                        VTy::Ptr(_, ts) => VTy::of_spec(ts),
+                        t => t,
+                    };
+                    Ok((Val::G(g), elem, false))
+                } else {
+                    self.err(line, format!("unknown variable '{name}'"))
+                }
+            }
+            Expr::Index(base, idx) => {
+                let (bptr, bty) = self.pointer_value(base, line)?;
+                let (iv, it) = self.expr(idx, line)?;
+                let iv = self.convert(iv, it, VTy::I32);
+                let elem = match bty {
+                    VTy::Ptr(_, ts) => VTy::of_spec(ts),
+                    _ => return self.err(line, "indexing a non-pointer"),
+                };
+                let ty = match bty {
+                    VTy::Ptr(sp, _) => Type::Ptr(sp),
+                    _ => unreachable!(),
+                };
+                let p = self.emit(
+                    InstKind::Gep {
+                        base: bptr,
+                        index: iv,
+                        scale: 4,
+                        disp: 0,
+                    },
+                    ty,
+                );
+                Ok((p, elem, false))
+            }
+            Expr::Deref(inner) => {
+                let (p, pty) = self.pointer_value(inner, line)?;
+                let elem = match pty {
+                    VTy::Ptr(_, ts) => VTy::of_spec(ts),
+                    _ => return self.err(line, "dereferencing a non-pointer"),
+                };
+                Ok((p, elem, false))
+            }
+            _ => self.err(line, "expression is not assignable"),
+        }
+    }
+
+    /// Evaluate an expression that must yield a pointer (array decay).
+    fn pointer_value(&mut self, e: &Expr, line: u32) -> LResult<(Val, VTy)> {
+        match e {
+            Expr::Ident(name) => {
+                if let Some(slot) = self.lookup(name) {
+                    if slot.is_array {
+                        return Ok((slot.ptr, slot.ty));
+                    }
+                    if let VTy::Ptr(..) = slot.ty {
+                        let v = self.emit(InstKind::Load { ptr: slot.ptr }, slot.ty.ir());
+                        return Ok((v, slot.ty));
+                    }
+                    self.err(line, format!("'{name}' is not a pointer"))
+                } else if let Some(&(g, vty, _)) = self.global_map.get(name) {
+                    Ok((Val::G(g), vty))
+                } else {
+                    self.err(line, format!("unknown variable '{name}'"))
+                }
+            }
+            _ => {
+                let (v, t) = self.expr(e, line)?;
+                match t {
+                    VTy::Ptr(..) => Ok((v, t)),
+                    _ => self.err(line, "expected pointer-valued expression"),
+                }
+            }
+        }
+    }
+
+    /// Convert value between arithmetic types.
+    fn convert(&mut self, v: Val, from: VTy, to: VTy) -> Val {
+        if from == to {
+            return v;
+        }
+        match (from, to) {
+            (VTy::Bool, VTy::I32) | (VTy::Bool, VTy::U32) => {
+                self.emit(InstKind::Un { op: UnOp::ZExt, a: v }, Type::I32)
+            }
+            (VTy::I32, VTy::U32) | (VTy::U32, VTy::I32) => v,
+            (VTy::I32, VTy::Bool) | (VTy::U32, VTy::Bool) => self.emit(
+                InstKind::ICmp {
+                    pred: ICmp::Ne,
+                    a: v,
+                    b: Val::ci(0),
+                },
+                Type::I1,
+            ),
+            (VTy::F32, VTy::Bool) => self.emit(
+                InstKind::FCmp {
+                    pred: FCmp::One,
+                    a: v,
+                    b: Val::cf(0.0),
+                },
+                Type::I1,
+            ),
+            (VTy::I32, VTy::F32) | (VTy::U32, VTy::F32) => {
+                self.emit(InstKind::Un { op: UnOp::SiToFp, a: v }, Type::F32)
+            }
+            (VTy::Bool, VTy::F32) => {
+                let i = self.emit(InstKind::Un { op: UnOp::ZExt, a: v }, Type::I32);
+                self.emit(InstKind::Un { op: UnOp::SiToFp, a: i }, Type::F32)
+            }
+            (VTy::F32, VTy::I32) | (VTy::F32, VTy::U32) => {
+                self.emit(InstKind::Un { op: UnOp::FpToSi, a: v }, Type::I32)
+            }
+            // Pointer conversions: bit-identical.
+            _ => v,
+        }
+    }
+
+    fn cond_value(&mut self, e: &Expr, line: u32) -> LResult<Val> {
+        let (v, t) = self.expr(e, line)?;
+        Ok(self.convert(v, t, VTy::Bool))
+    }
+
+    fn binop(
+        &mut self,
+        op: BinAst,
+        (av, at): (Val, VTy),
+        (bv, bt): (Val, VTy),
+        line: u32,
+    ) -> LResult<(Val, VTy)> {
+        use BinAst::*;
+        // Pointer arithmetic.
+        if let VTy::Ptr(sp, ts) = at {
+            if matches!(op, Add | Sub) && !matches!(bt, VTy::Ptr(..)) {
+                let idx = self.convert(bv, bt, VTy::I32);
+                let idx = if op == Sub {
+                    self.emit(
+                        InstKind::Bin {
+                            op: BinOp::Sub,
+                            a: Val::ci(0),
+                            b: idx,
+                        },
+                        Type::I32,
+                    )
+                } else {
+                    idx
+                };
+                let p = self.emit(
+                    InstKind::Gep {
+                        base: av,
+                        index: idx,
+                        scale: 4,
+                        disp: 0,
+                    },
+                    Type::Ptr(sp),
+                );
+                return Ok((p, VTy::Ptr(sp, ts)));
+            }
+        }
+        if matches!(op, LogAnd | LogOr) {
+            // Handled in expr() (short-circuit); direct values here.
+            let ab = self.convert(av, at, VTy::Bool);
+            let bb = self.convert(bv, bt, VTy::Bool);
+            let o = if op == LogAnd { BinOp::And } else { BinOp::Or };
+            let r = self.emit(InstKind::Bin { op: o, a: ab, b: bb }, Type::I1);
+            return Ok((r, VTy::Bool));
+        }
+        // Comparisons.
+        if matches!(op, Eq | Ne | Lt | Le | Gt | Ge) {
+            let fl = at == VTy::F32 || bt == VTy::F32;
+            if fl {
+                let a = self.convert(av, at, VTy::F32);
+                let b = self.convert(bv, bt, VTy::F32);
+                let pred = match op {
+                    Eq => FCmp::Oeq,
+                    Ne => FCmp::One,
+                    Lt => FCmp::Olt,
+                    Le => FCmp::Ole,
+                    Gt => FCmp::Ogt,
+                    Ge => FCmp::Oge,
+                    _ => unreachable!(),
+                };
+                let r = self.emit(InstKind::FCmp { pred, a, b }, Type::I1);
+                return Ok((r, VTy::Bool));
+            }
+            let unsigned = at == VTy::U32 || bt == VTy::U32 || matches!(at, VTy::Ptr(..));
+            let a = self.convert(av, at, VTy::I32);
+            let b = self.convert(bv, bt, VTy::I32);
+            let pred = match (op, unsigned) {
+                (Eq, _) => ICmp::Eq,
+                (Ne, _) => ICmp::Ne,
+                (Lt, false) => ICmp::Slt,
+                (Le, false) => ICmp::Sle,
+                (Gt, false) => ICmp::Sgt,
+                (Ge, false) => ICmp::Sge,
+                (Lt, true) => ICmp::Ult,
+                (Ge, true) => ICmp::Uge,
+                (Le, true) => {
+                    // a <= b  <=>  !(b < a)
+                    let c = self.emit(
+                        InstKind::ICmp {
+                            pred: ICmp::Ult,
+                            a: b,
+                            b: a,
+                        },
+                        Type::I1,
+                    );
+                    let r = self.emit(
+                        InstKind::Bin {
+                            op: BinOp::Xor,
+                            a: c,
+                            b: Val::cb(true),
+                        },
+                        Type::I1,
+                    );
+                    return Ok((r, VTy::Bool));
+                }
+                (Gt, true) => {
+                    let r = self.emit(
+                        InstKind::ICmp {
+                            pred: ICmp::Ult,
+                            a: b,
+                            b: a,
+                        },
+                        Type::I1,
+                    );
+                    return Ok((r, VTy::Bool));
+                }
+                _ => unreachable!(),
+            };
+            let r = self.emit(InstKind::ICmp { pred, a, b }, Type::I1);
+            return Ok((r, VTy::Bool));
+        }
+        // Arithmetic / bitwise.
+        let fl = at == VTy::F32 || bt == VTy::F32;
+        if fl {
+            let a = self.convert(av, at, VTy::F32);
+            let b = self.convert(bv, bt, VTy::F32);
+            let o = match op {
+                Add => BinOp::FAdd,
+                Sub => BinOp::FSub,
+                Mul => BinOp::FMul,
+                Div => BinOp::FDiv,
+                Rem => return self.err(line, "float remainder is not supported"),
+                _ => return self.err(line, "bitwise operation on float"),
+            };
+            let r = self.emit(InstKind::Bin { op: o, a, b }, Type::F32);
+            return Ok((r, VTy::F32));
+        }
+        let unsigned = at == VTy::U32 || bt == VTy::U32;
+        let a = self.convert(av, at, VTy::I32);
+        let b = self.convert(bv, bt, VTy::I32);
+        let o = match (op, unsigned) {
+            (Add, _) => BinOp::Add,
+            (Sub, _) => BinOp::Sub,
+            (Mul, _) => BinOp::Mul,
+            (Div, false) => BinOp::SDiv,
+            (Div, true) => BinOp::UDiv,
+            (Rem, false) => BinOp::SRem,
+            (Rem, true) => BinOp::URem,
+            (And, _) => BinOp::And,
+            (Or, _) => BinOp::Or,
+            (Xor, _) => BinOp::Xor,
+            (Shl, _) => BinOp::Shl,
+            (Shr, false) => BinOp::AShr,
+            (Shr, true) => BinOp::LShr,
+            _ => unreachable!(),
+        };
+        let r = self.emit(InstKind::Bin { op: o, a, b }, Type::I32);
+        Ok((r, if unsigned { VTy::U32 } else { VTy::I32 }))
+    }
+
+    fn expr(&mut self, e: &Expr, line: u32) -> LResult<(Val, VTy)> {
+        match e {
+            Expr::Int(v) => Ok((Val::ci(*v), VTy::I32)),
+            Expr::Float(v) => Ok((Val::cf(*v), VTy::F32)),
+            Expr::Ident(name) if name == "true" || name == "false" => {
+                Ok((Val::cb(name == "true"), VTy::Bool))
+            }
+            Expr::Ident(name) => {
+                if let Some(slot) = self.lookup(name) {
+                    if slot.is_array {
+                        return Ok((slot.ptr, slot.ty)); // decay
+                    }
+                    let v = self.emit(InstKind::Load { ptr: slot.ptr }, slot.ty.ir());
+                    Ok((v, slot.ty))
+                } else if let Some(&(g, vty, is_arr)) = self.global_map.get(name) {
+                    if is_arr {
+                        Ok((Val::G(g), vty))
+                    } else {
+                        let elem = match vty {
+                            VTy::Ptr(_, ts) => VTy::of_spec(ts),
+                            t => t,
+                        };
+                        let v = self.emit(InstKind::Load { ptr: Val::G(g) }, elem.ir());
+                        Ok((v, elem))
+                    }
+                } else {
+                    self.err(line, format!("unknown identifier '{name}'"))
+                }
+            }
+            Expr::Member(base, field) => self.member(base, field, line),
+            Expr::Index(..) | Expr::Deref(..) => {
+                let (p, elem, _) = self.lvalue(e, line)?;
+                let v = self.emit(InstKind::Load { ptr: p }, elem.ir());
+                Ok((v, elem))
+            }
+            Expr::Un(op, inner) => {
+                let (v, t) = self.expr(inner, line)?;
+                match op {
+                    UnAst::Neg => match t {
+                        VTy::F32 => Ok((
+                            self.emit(InstKind::Un { op: UnOp::FNeg, a: v }, Type::F32),
+                            VTy::F32,
+                        )),
+                        _ => {
+                            let v = self.convert(v, t, VTy::I32);
+                            Ok((
+                                self.emit(
+                                    InstKind::Bin {
+                                        op: BinOp::Sub,
+                                        a: Val::ci(0),
+                                        b: v,
+                                    },
+                                    Type::I32,
+                                ),
+                                VTy::I32,
+                            ))
+                        }
+                    },
+                    UnAst::Not => {
+                        let b = self.convert(v, t, VTy::Bool);
+                        Ok((
+                            self.emit(
+                                InstKind::Bin {
+                                    op: BinOp::Xor,
+                                    a: b,
+                                    b: Val::cb(true),
+                                },
+                                Type::I1,
+                            ),
+                            VTy::Bool,
+                        ))
+                    }
+                    UnAst::BitNot => {
+                        let v = self.convert(v, t, VTy::I32);
+                        Ok((
+                            self.emit(InstKind::Un { op: UnOp::Not, a: v }, Type::I32),
+                            VTy::I32,
+                        ))
+                    }
+                }
+            }
+            Expr::Cast(ts, inner) => {
+                let (v, t) = self.expr(inner, line)?;
+                let to = VTy::of_spec(*ts);
+                Ok((self.convert(v, t, to), to))
+            }
+            Expr::Bin(op, a, b) if matches!(op, BinAst::LogAnd | BinAst::LogOr) => {
+                // Short-circuit via a temp slot diamond (SESE; pre-SSA).
+                self.ensure_open();
+                let slot = self.emit(InstKind::Alloca { size: 4 }, Type::Ptr(AddrSpace::Private));
+                let av = self.cond_value(a, line)?;
+                let is_and = *op == BinAst::LogAnd;
+                self.emit(
+                    InstKind::Store {
+                        ptr: slot,
+                        val: Val::cb(!is_and),
+                    },
+                    Type::Void,
+                );
+                let eval_b = self.new_block("sc.rhs");
+                let join = self.new_block("sc.join");
+                let (t, f) = if is_and { (eval_b, join) } else { (join, eval_b) };
+                self.emit(InstKind::CondBr { cond: av, t, f }, Type::Void);
+                self.switch(eval_b);
+                let bv = self.cond_value(b, line)?;
+                self.emit(InstKind::Store { ptr: slot, val: bv }, Type::Void);
+                self.emit(InstKind::Br { target: join }, Type::Void);
+                self.switch(join);
+                let r = self.emit(InstKind::Load { ptr: slot }, Type::I1);
+                Ok((r, VTy::Bool))
+            }
+            Expr::Bin(op, a, b) => {
+                let av = self.expr(a, line)?;
+                let bv = self.expr(b, line)?;
+                self.binop(*op, av, bv, line)
+            }
+            Expr::Ternary(c, t, f) => {
+                // C semantics: arms evaluate lazily — always lower through
+                // control flow. The middle-end's select-formation pass
+                // speculates eligible diamonds back into selects under
+                // ZiCond (paper Fig. 5c / §5.3).
+                {
+                    // Lower with control flow through a temp slot.
+                    self.ensure_open();
+                    let slot =
+                        self.emit(InstKind::Alloca { size: 4 }, Type::Ptr(AddrSpace::Private));
+                    let cv = self.cond_value(c, line)?;
+                    let then_b = self.new_block("sel.t");
+                    let else_b = self.new_block("sel.f");
+                    let join = self.new_block("sel.j");
+                    self.emit(
+                        InstKind::CondBr {
+                            cond: cv,
+                            t: then_b,
+                            f: else_b,
+                        },
+                        Type::Void,
+                    );
+                    self.switch(then_b);
+                    let (tv, tt) = self.expr(t, line)?;
+                    self.emit(InstKind::Store { ptr: slot, val: tv }, Type::Void);
+                    self.emit(InstKind::Br { target: join }, Type::Void);
+                    self.switch(else_b);
+                    let (fv, ft) = self.expr(f, line)?;
+                    let fv = self.convert(fv, ft, tt);
+                    self.emit(InstKind::Store { ptr: slot, val: fv }, Type::Void);
+                    self.emit(InstKind::Br { target: join }, Type::Void);
+                    self.switch(join);
+                    let r = self.emit(InstKind::Load { ptr: slot }, tt.ir());
+                    Ok((r, tt))
+                }
+            }
+            Expr::Call(name, args) => self.call(name, args, line),
+        }
+    }
+
+    fn member(&mut self, base: &Expr, field: &str, line: u32) -> LResult<(Val, VTy)> {
+        let bname = match base {
+            Expr::Ident(n) => n.as_str(),
+            _ => return self.err(line, "no struct member access"),
+        };
+        let wi = match bname {
+            "threadIdx" => WorkItem::LocalId,
+            "blockIdx" => WorkItem::GroupId,
+            "blockDim" => WorkItem::LocalSize,
+            "gridDim" => WorkItem::NumGroups,
+            _ => return self.err(line, format!("unknown member base '{bname}'")),
+        };
+        let dim = match field {
+            "x" => 0,
+            "y" => 1,
+            "z" => 2,
+            _ => return self.err(line, format!("unknown member '{field}'")),
+        };
+        let v = self.emit(
+            InstKind::Intr {
+                intr: Intr::WorkItem(wi),
+                args: vec![Val::ci(dim)],
+            },
+            Type::I32,
+        );
+        Ok((v, VTy::I32))
+    }
+
+    fn call(&mut self, name: &str, args: &[Expr], line: u32) -> LResult<(Val, VTy)> {
+        if let Some(b) = builtins::lookup(self.opts.dialect, name) {
+            return self.builtin(b, args, line);
+        }
+        let Some(&fid) = self.sigs.get(name) else {
+            return self.err(line, format!("unknown function '{name}'"));
+        };
+        let callee_params: Vec<Type> = self.module.func(fid).params.iter().map(|p| p.ty).collect();
+        let ret = self.module.func(fid).ret;
+        if callee_params.len() != args.len() {
+            return self.err(
+                line,
+                format!(
+                    "'{name}' expects {} args, got {}",
+                    callee_params.len(),
+                    args.len()
+                ),
+            );
+        }
+        let mut vargs = vec![];
+        for (a, &want) in args.iter().zip(callee_params.iter()) {
+            let (v, t) = self.expr(a, line)?;
+            let wantv = match want {
+                Type::F32 => VTy::F32,
+                Type::I1 => VTy::Bool,
+                Type::I32 => VTy::I32,
+                Type::Ptr(sp) => VTy::Ptr(sp, TypeSpec::Int),
+                Type::Void => VTy::I32,
+            };
+            let v = match (t, wantv) {
+                (VTy::Ptr(..), VTy::Ptr(..)) => v,
+                _ => self.convert(v, t, wantv),
+            };
+            vargs.push(v);
+        }
+        let v = self.emit(InstKind::Call { callee: fid, args: vargs }, ret);
+        let vty = match ret {
+            Type::F32 => VTy::F32,
+            Type::I1 => VTy::Bool,
+            _ => VTy::I32,
+        };
+        Ok((v, vty))
+    }
+
+    fn builtin(&mut self, b: Builtin, args: &[Expr], line: u32) -> LResult<(Val, VTy)> {
+        let mut vals: Vec<(Val, VTy)> = vec![];
+        for a in args {
+            vals.push(self.expr(a, line)?);
+        }
+        let as_f = |s: &mut Self, i: usize, vals: &[(Val, VTy)]| {
+            let (v, t) = vals[i];
+            s.convert(v, t, VTy::F32)
+        };
+        let as_i = |s: &mut Self, i: usize, vals: &[(Val, VTy)]| {
+            let (v, t) = vals[i];
+            s.convert(v, t, VTy::I32)
+        };
+        match b {
+            Builtin::WorkItem(wi) => {
+                let d = match args.first() {
+                    Some(Expr::Int(d)) => *d,
+                    None => 0,
+                    _ => return self.err(line, "work-item dimension must be a literal"),
+                };
+                let v = self.emit(
+                    InstKind::Intr {
+                        intr: Intr::WorkItem(wi),
+                        args: vec![Val::ci(d)],
+                    },
+                    Type::I32,
+                );
+                Ok((v, VTy::U32))
+            }
+            Builtin::Barrier => {
+                // Argument (CLK_LOCAL_MEM_FENCE) ignored.
+                let v = self.emit(
+                    InstKind::Intr {
+                        intr: Intr::Barrier,
+                        args: vec![],
+                    },
+                    Type::Void,
+                );
+                Ok((v, VTy::I32))
+            }
+            Builtin::Math1(op) => {
+                let a = as_f(self, 0, &vals);
+                Ok((self.emit(InstKind::Un { op, a }, Type::F32), VTy::F32))
+            }
+            Builtin::MinF | Builtin::MaxF => {
+                let a = as_f(self, 0, &vals);
+                let bb = as_f(self, 1, &vals);
+                let op = if matches!(b, Builtin::MinF) {
+                    BinOp::FMin
+                } else {
+                    BinOp::FMax
+                };
+                Ok((self.emit(InstKind::Bin { op, a, b: bb }, Type::F32), VTy::F32))
+            }
+            Builtin::MinI | Builtin::MaxI => {
+                // Polymorphic min/max: float if either arg is float.
+                if vals.iter().any(|(_, t)| *t == VTy::F32) {
+                    let a = as_f(self, 0, &vals);
+                    let bb = as_f(self, 1, &vals);
+                    let op = if matches!(b, Builtin::MinI) {
+                        BinOp::FMin
+                    } else {
+                        BinOp::FMax
+                    };
+                    return Ok((
+                        self.emit(InstKind::Bin { op, a, b: bb }, Type::F32),
+                        VTy::F32,
+                    ));
+                }
+                let a = as_i(self, 0, &vals);
+                let bb = as_i(self, 1, &vals);
+                let op = if matches!(b, Builtin::MinI) {
+                    BinOp::SMin
+                } else {
+                    BinOp::SMax
+                };
+                Ok((self.emit(InstKind::Bin { op, a, b: bb }, Type::I32), VTy::I32))
+            }
+            Builtin::AbsI => {
+                let a = as_i(self, 0, &vals);
+                let n = self.emit(
+                    InstKind::Bin {
+                        op: BinOp::Sub,
+                        a: Val::ci(0),
+                        b: a,
+                    },
+                    Type::I32,
+                );
+                Ok((
+                    self.emit(
+                        InstKind::Bin {
+                            op: BinOp::SMax,
+                            a,
+                            b: n,
+                        },
+                        Type::I32,
+                    ),
+                    VTy::I32,
+                ))
+            }
+            Builtin::Pow => {
+                // pow(a, b) = exp(b * log(a))
+                let a = as_f(self, 0, &vals);
+                let bb = as_f(self, 1, &vals);
+                let l = self.emit(InstKind::Un { op: UnOp::FLog, a }, Type::F32);
+                let m = self.emit(
+                    InstKind::Bin {
+                        op: BinOp::FMul,
+                        a: bb,
+                        b: l,
+                    },
+                    Type::F32,
+                );
+                Ok((
+                    self.emit(InstKind::Un { op: UnOp::FExp, a: m }, Type::F32),
+                    VTy::F32,
+                ))
+            }
+            Builtin::Rsqrt => {
+                let a = as_f(self, 0, &vals);
+                let s = self.emit(InstKind::Un { op: UnOp::FSqrt, a }, Type::F32);
+                Ok((
+                    self.emit(
+                        InstKind::Bin {
+                            op: BinOp::FDiv,
+                            a: Val::cf(1.0),
+                            b: s,
+                        },
+                        Type::F32,
+                    ),
+                    VTy::F32,
+                ))
+            }
+            Builtin::Mad => {
+                let a = as_f(self, 0, &vals);
+                let bb = as_f(self, 1, &vals);
+                let c = as_f(self, 2, &vals);
+                let m = self.emit(
+                    InstKind::Bin {
+                        op: BinOp::FMul,
+                        a,
+                        b: bb,
+                    },
+                    Type::F32,
+                );
+                Ok((
+                    self.emit(
+                        InstKind::Bin {
+                            op: BinOp::FAdd,
+                            a: m,
+                            b: c,
+                        },
+                        Type::F32,
+                    ),
+                    VTy::F32,
+                ))
+            }
+            Builtin::Atomic(op) => {
+                let (p, pt) = vals[0];
+                if !matches!(pt, VTy::Ptr(..)) {
+                    return self.err(line, "atomic pointer argument expected");
+                }
+                let v = as_i(self, 1, &vals);
+                let r = self.emit(
+                    InstKind::Intr {
+                        intr: Intr::Atomic(op),
+                        args: vec![p, v],
+                    },
+                    Type::I32,
+                );
+                Ok((r, VTy::I32))
+            }
+            Builtin::AtomicSub => {
+                let (p, _) = vals[0];
+                let v = as_i(self, 1, &vals);
+                let n = self.emit(
+                    InstKind::Bin {
+                        op: BinOp::Sub,
+                        a: Val::ci(0),
+                        b: v,
+                    },
+                    Type::I32,
+                );
+                let r = self.emit(
+                    InstKind::Intr {
+                        intr: Intr::Atomic(AtomOp::Add),
+                        args: vec![p, n],
+                    },
+                    Type::I32,
+                );
+                Ok((r, VTy::I32))
+            }
+            Builtin::AtomicCas => {
+                let (p, _) = vals[0];
+                let cmp = as_i(self, 1, &vals);
+                let nv = as_i(self, 2, &vals);
+                let r = self.emit(
+                    InstKind::Intr {
+                        intr: Intr::AtomicCas,
+                        args: vec![p, cmp, nv],
+                    },
+                    Type::I32,
+                );
+                Ok((r, VTy::I32))
+            }
+            Builtin::Shfl | Builtin::ShflSync => {
+                // (__shfl_sync has a leading mask arg.)
+                let off = if matches!(b, Builtin::ShflSync) { 1 } else { 0 };
+                let (v, vt) = vals[off];
+                let lane = as_i(self, off + 1, &vals);
+                let is_float = vt == VTy::F32;
+                let vi = if is_float {
+                    self.emit(InstKind::Un { op: UnOp::FToBits, a: v }, Type::I32)
+                } else {
+                    self.convert(v, vt, VTy::I32)
+                };
+                let r = if self.opts.warp_hw {
+                    self.emit(
+                        InstKind::Intr {
+                            intr: Intr::Shfl,
+                            args: vec![vi, lane],
+                        },
+                        Type::I32,
+                    )
+                } else {
+                    let h = builtins::ensure_sw_helper(self.module, "shfl");
+                    self.emit(
+                        InstKind::Call {
+                            callee: h,
+                            args: vec![vi, lane],
+                        },
+                        Type::I32,
+                    )
+                };
+                if is_float {
+                    Ok((
+                        self.emit(InstKind::Un { op: UnOp::BitsToF, a: r }, Type::F32),
+                        VTy::F32,
+                    ))
+                } else {
+                    Ok((r, VTy::I32))
+                }
+            }
+            Builtin::VoteAll | Builtin::VoteAny | Builtin::Ballot => {
+                let off = vals.len() - 1; // _sync variants: predicate is last
+                let (pv, pt) = vals[off];
+                let p = self.convert(pv, pt, VTy::Bool);
+                if self.opts.warp_hw {
+                    let intr = match b {
+                        Builtin::VoteAll => Intr::VoteAll,
+                        Builtin::VoteAny => Intr::VoteAny,
+                        _ => Intr::Ballot,
+                    };
+                    let ty = if matches!(b, Builtin::Ballot) {
+                        Type::I32
+                    } else {
+                        Type::I1
+                    };
+                    let r = self.emit(
+                        InstKind::Intr {
+                            intr,
+                            args: vec![p],
+                        },
+                        ty,
+                    );
+                    Ok((
+                        r,
+                        if matches!(b, Builtin::Ballot) {
+                            VTy::U32
+                        } else {
+                            VTy::Bool
+                        },
+                    ))
+                } else {
+                    let name = match b {
+                        Builtin::VoteAll => "vote_all",
+                        Builtin::VoteAny => "vote_any",
+                        _ => "ballot",
+                    };
+                    let h = builtins::ensure_sw_helper(self.module, name);
+                    let pz = self.emit(InstKind::Un { op: UnOp::ZExt, a: p }, Type::I32);
+                    let r = self.emit(
+                        InstKind::Call {
+                            callee: h,
+                            args: vec![pz],
+                        },
+                        Type::I32,
+                    );
+                    if matches!(b, Builtin::Ballot) {
+                        Ok((r, VTy::U32))
+                    } else {
+                        let rb = self.emit(
+                            InstKind::ICmp {
+                                pred: ICmp::Ne,
+                                a: r,
+                                b: Val::ci(0),
+                            },
+                            Type::I1,
+                        );
+                        Ok((rb, VTy::Bool))
+                    }
+                }
+            }
+            Builtin::LaneId => {
+                let v = self.emit(
+                    InstKind::Intr {
+                        intr: Intr::Csr(crate::ir::Csr::LaneId),
+                        args: vec![],
+                    },
+                    Type::I32,
+                );
+                Ok((v, VTy::U32))
+            }
+            Builtin::PrintInt | Builtin::PrintFloat => {
+                let intr = if matches!(b, Builtin::PrintInt) {
+                    Intr::PrintI
+                } else {
+                    Intr::PrintF
+                };
+                let v = if matches!(b, Builtin::PrintInt) {
+                    as_i(self, 0, &vals)
+                } else {
+                    as_f(self, 0, &vals)
+                };
+                let r = self.emit(
+                    InstKind::Intr {
+                        intr,
+                        args: vec![v],
+                    },
+                    Type::Void,
+                );
+                Ok((r, VTy::I32))
+            }
+        }
+    }
+}
+
+
+fn collect_labels(stmts: &[Stmt], f: &mut impl FnMut(&str)) {
+    for s in stmts {
+        match s {
+            Stmt::Label(n, _) => f(n),
+            Stmt::Block(b) => collect_labels(b, f),
+            Stmt::If { then_s, else_s, .. } => {
+                collect_labels(then_s, f);
+                collect_labels(else_s, f);
+            }
+            Stmt::While { body, .. }
+            | Stmt::DoWhile { body, .. }
+            | Stmt::For { body, .. } => collect_labels(body, f),
+            _ => {}
+        }
+    }
+}

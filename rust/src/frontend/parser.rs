@@ -1,0 +1,780 @@
+//! Recursive-descent parser for VCL (OpenCL-C / CUDA-C subset).
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+pub fn parse_program(src: &str) -> Result<Program, ParseError> {
+    let toks = lex(src).map_err(|e| ParseError {
+        line: e.line,
+        msg: e.msg,
+    })?;
+    Parser { toks, pos: 0 }.program()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+const TYPE_KWS: [&str; 6] = ["void", "int", "uint", "unsigned", "float", "bool"];
+const SPACE_KWS: [&str; 10] = [
+    "global",
+    "__global",
+    "local",
+    "__local",
+    "constant",
+    "__constant",
+    "__constant__",
+    "__shared__",
+    "__device__",
+    "private",
+];
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+    fn peek_at(&self, off: usize) -> &Tok {
+        &self.toks[(self.pos + off).min(self.toks.len() - 1)].tok
+    }
+    fn line(&self) -> u32 {
+        self.toks[self.pos].line
+    }
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        self.pos += 1;
+        t
+    }
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError {
+            line: self.line(),
+            msg: msg.into(),
+        })
+    }
+    fn expect(&mut self, t: Tok) -> Result<(), ParseError> {
+        if *self.peek() == t {
+            self.pos += 1;
+            Ok(())
+        } else {
+            self.err(format!("expected {t:?}, found {:?}", self.peek()))
+        }
+    }
+    fn is_ident(&self, s: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(i) if i == s)
+    }
+    fn eat_ident(&mut self, s: &str) -> bool {
+        if self.is_ident(s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            t => self.err(format!("expected identifier, found {t:?}")),
+        }
+    }
+    fn is_type_kw(&self, off: usize) -> bool {
+        matches!(self.peek_at(off), Tok::Ident(s) if TYPE_KWS.contains(&s.as_str()))
+    }
+    fn is_space_kw(&self) -> bool {
+        matches!(self.peek(), Tok::Ident(s) if SPACE_KWS.contains(&s.as_str()))
+    }
+
+    fn type_spec(&mut self) -> Result<TypeSpec, ParseError> {
+        let name = self.ident()?;
+        Ok(match name.as_str() {
+            "void" => TypeSpec::Void,
+            "int" => TypeSpec::Int,
+            "uint" => TypeSpec::Uint,
+            "unsigned" => {
+                self.eat_ident("int"); // `unsigned int` / bare `unsigned`
+                TypeSpec::Uint
+            }
+            "float" => TypeSpec::Float,
+            "bool" => TypeSpec::Bool,
+            _ => return self.err(format!("unknown type '{name}'")),
+        })
+    }
+
+    fn space_spec(&mut self) -> SpaceSpec {
+        let mut space = SpaceSpec::Default;
+        loop {
+            let s = match self.peek() {
+                Tok::Ident(s) => s.clone(),
+                _ => break,
+            };
+            let sp = match s.as_str() {
+                "global" | "__global" | "__device__" => SpaceSpec::Global,
+                "local" | "__local" | "__shared__" => SpaceSpec::Local,
+                "constant" | "__constant" | "__constant__" => SpaceSpec::Constant,
+                "private" => SpaceSpec::Private,
+                _ => break,
+            };
+            space = sp;
+            self.pos += 1;
+        }
+        space
+    }
+
+    fn program(&mut self) -> Result<Program, ParseError> {
+        let mut p = Program::default();
+        while *self.peek() != Tok::Eof {
+            let line = self.line();
+            // Leading qualifiers.
+            let mut is_kernel = false;
+            let mut space = SpaceSpec::Default;
+            loop {
+                if self.eat_ident("kernel") || self.eat_ident("__kernel") || self.eat_ident("__global__") {
+                    is_kernel = true;
+                } else if self.is_space_kw() {
+                    space = self.space_spec();
+                } else {
+                    break;
+                }
+            }
+            let ty = self.type_spec()?;
+            let name = self.ident()?;
+            if *self.peek() == Tok::LParen {
+                p.funcs.push(self.func_decl(name, ty, is_kernel, line)?);
+            } else {
+                // Global variable declaration.
+                let mut dims = vec![];
+                while *self.peek() == Tok::LBracket {
+                    self.next();
+                    let d = match self.next() {
+                        Tok::Int(v) if v > 0 => v as u32,
+                        _ => return self.err("array dimension must be a positive int literal"),
+                    };
+                    dims.push(d);
+                    self.expect(Tok::RBracket)?;
+                }
+                let init = if *self.peek() == Tok::Assign {
+                    self.next();
+                    self.expect(Tok::LBrace)?;
+                    let mut items = vec![];
+                    while *self.peek() != Tok::RBrace {
+                        items.push(self.expr()?);
+                        if *self.peek() == Tok::Comma {
+                            self.next();
+                        }
+                    }
+                    self.expect(Tok::RBrace)?;
+                    Some(items)
+                } else {
+                    None
+                };
+                self.expect(Tok::Semi)?;
+                if space == SpaceSpec::Default {
+                    space = SpaceSpec::Global;
+                }
+                p.globals.push(GlobalDecl {
+                    name,
+                    ty,
+                    space,
+                    dims,
+                    init,
+                    line,
+                });
+            }
+        }
+        Ok(p)
+    }
+
+    fn func_decl(
+        &mut self,
+        name: String,
+        ret: TypeSpec,
+        is_kernel: bool,
+        line: u32,
+    ) -> Result<FuncDecl, ParseError> {
+        self.expect(Tok::LParen)?;
+        let mut params = vec![];
+        while *self.peek() != Tok::RParen {
+            let mut uniform = false;
+            let mut space = SpaceSpec::Default;
+            loop {
+                if self.eat_ident("uniform") {
+                    uniform = true;
+                } else if self.is_space_kw() {
+                    space = self.space_spec();
+                } else {
+                    break;
+                }
+            }
+            let ty = self.type_spec()?;
+            let mut is_ptr = false;
+            while *self.peek() == Tok::Star {
+                self.next();
+                is_ptr = true;
+            }
+            // trailing qualifiers after '*' (OpenCL allows `float* restrict`)
+            if self.eat_ident("restrict") || self.eat_ident("__restrict__") {}
+            let pname = self.ident()?;
+            if is_ptr && space == SpaceSpec::Default {
+                space = SpaceSpec::Global;
+            }
+            params.push(ParamDecl {
+                name: pname,
+                ty,
+                is_ptr,
+                space,
+                uniform,
+            });
+            if *self.peek() == Tok::Comma {
+                self.next();
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::LBrace)?;
+        let body = self.block_stmts()?;
+        Ok(FuncDecl {
+            name,
+            ret,
+            params,
+            body,
+            is_kernel,
+            line,
+        })
+    }
+
+    fn block_stmts(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        let mut out = vec![];
+        while *self.peek() != Tok::RBrace {
+            if *self.peek() == Tok::Eof {
+                return self.err("unexpected EOF in block");
+            }
+            out.push(self.stmt()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(out)
+    }
+
+    fn starts_decl(&self) -> bool {
+        // uniform / space qualifier / type keyword starts a declaration.
+        match self.peek() {
+            Tok::Ident(s) => {
+                s == "uniform" || SPACE_KWS.contains(&s.as_str()) || TYPE_KWS.contains(&s.as_str())
+            }
+            _ => false,
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        match self.peek().clone() {
+            Tok::LBrace => {
+                self.next();
+                Ok(Stmt::Block(self.block_stmts()?))
+            }
+            Tok::Semi => {
+                self.next();
+                Ok(Stmt::Block(vec![]))
+            }
+            Tok::Ident(s) => match s.as_str() {
+                "if" => {
+                    self.next();
+                    self.expect(Tok::LParen)?;
+                    let cond = self.expr()?;
+                    self.expect(Tok::RParen)?;
+                    let then_s = vec![self.stmt()?];
+                    let else_s = if self.eat_ident("else") {
+                        vec![self.stmt()?]
+                    } else {
+                        vec![]
+                    };
+                    Ok(Stmt::If {
+                        cond,
+                        then_s,
+                        else_s,
+                        line,
+                    })
+                }
+                "while" => {
+                    self.next();
+                    self.expect(Tok::LParen)?;
+                    let cond = self.expr()?;
+                    self.expect(Tok::RParen)?;
+                    let body = vec![self.stmt()?];
+                    Ok(Stmt::While { cond, body, line })
+                }
+                "do" => {
+                    self.next();
+                    let body = vec![self.stmt()?];
+                    if !self.eat_ident("while") {
+                        return self.err("expected 'while' after do body");
+                    }
+                    self.expect(Tok::LParen)?;
+                    let cond = self.expr()?;
+                    self.expect(Tok::RParen)?;
+                    self.expect(Tok::Semi)?;
+                    Ok(Stmt::DoWhile { body, cond, line })
+                }
+                "for" => {
+                    self.next();
+                    self.expect(Tok::LParen)?;
+                    let init = if *self.peek() == Tok::Semi {
+                        self.next();
+                        None
+                    } else {
+                        let s = self.simple_stmt()?;
+                        self.expect(Tok::Semi)?;
+                        Some(Box::new(s))
+                    };
+                    let cond = if *self.peek() == Tok::Semi {
+                        None
+                    } else {
+                        Some(self.expr()?)
+                    };
+                    self.expect(Tok::Semi)?;
+                    let step = if *self.peek() == Tok::RParen {
+                        None
+                    } else {
+                        Some(Box::new(self.simple_stmt()?))
+                    };
+                    self.expect(Tok::RParen)?;
+                    let body = vec![self.stmt()?];
+                    Ok(Stmt::For {
+                        init,
+                        cond,
+                        step,
+                        body,
+                        line,
+                    })
+                }
+                "break" => {
+                    self.next();
+                    self.expect(Tok::Semi)?;
+                    Ok(Stmt::Break(line))
+                }
+                "continue" => {
+                    self.next();
+                    self.expect(Tok::Semi)?;
+                    Ok(Stmt::Continue(line))
+                }
+                "return" => {
+                    self.next();
+                    let v = if *self.peek() == Tok::Semi {
+                        None
+                    } else {
+                        Some(self.expr()?)
+                    };
+                    self.expect(Tok::Semi)?;
+                    Ok(Stmt::Return(v, line))
+                }
+                "goto" => {
+                    self.next();
+                    let l = self.ident()?;
+                    self.expect(Tok::Semi)?;
+                    Ok(Stmt::Goto(l, line))
+                }
+                _ => {
+                    // Label?  ident ':'
+                    if matches!(self.peek_at(1), Tok::Colon)
+                        && !TYPE_KWS.contains(&s.as_str())
+                        && !SPACE_KWS.contains(&s.as_str())
+                    {
+                        self.next();
+                        self.next();
+                        return Ok(Stmt::Label(s, line));
+                    }
+                    let st = self.simple_stmt()?;
+                    self.expect(Tok::Semi)?;
+                    Ok(st)
+                }
+            },
+            _ => {
+                let st = self.simple_stmt()?;
+                self.expect(Tok::Semi)?;
+                Ok(st)
+            }
+        }
+    }
+
+    /// Declaration, assignment, inc/dec or expression — no trailing ';'.
+    fn simple_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        if self.starts_decl() {
+            let mut uniform = false;
+            let mut space = SpaceSpec::Default;
+            loop {
+                if self.eat_ident("uniform") {
+                    uniform = true;
+                } else if self.is_space_kw() && !self.is_type_kw(0) {
+                    space = self.space_spec();
+                } else {
+                    break;
+                }
+            }
+            let ty = self.type_spec()?;
+            let mut is_ptr = false;
+            while *self.peek() == Tok::Star {
+                self.next();
+                is_ptr = true;
+            }
+            let name = self.ident()?;
+            let mut dims = vec![];
+            while *self.peek() == Tok::LBracket {
+                self.next();
+                let d = match self.next() {
+                    Tok::Int(v) if v > 0 => v as u32,
+                    _ => return self.err("array dimension must be positive int literal"),
+                };
+                dims.push(d);
+                self.expect(Tok::RBracket)?;
+            }
+            let init = if *self.peek() == Tok::Assign {
+                self.next();
+                Some(self.expr()?)
+            } else {
+                None
+            };
+            Ok(Stmt::Decl {
+                ty,
+                space,
+                is_ptr,
+                name,
+                dims,
+                init,
+                uniform,
+                line,
+            })
+        } else {
+            let e = self.expr()?;
+            let op = match self.peek() {
+                Tok::Assign => Some(None),
+                Tok::PlusAssign => Some(Some(BinAst::Add)),
+                Tok::MinusAssign => Some(Some(BinAst::Sub)),
+                Tok::StarAssign => Some(Some(BinAst::Mul)),
+                Tok::SlashAssign => Some(Some(BinAst::Div)),
+                Tok::PercentAssign => Some(Some(BinAst::Rem)),
+                Tok::AmpAssign => Some(Some(BinAst::And)),
+                Tok::PipeAssign => Some(Some(BinAst::Or)),
+                Tok::CaretAssign => Some(Some(BinAst::Xor)),
+                Tok::ShlAssign => Some(Some(BinAst::Shl)),
+                Tok::ShrAssign => Some(Some(BinAst::Shr)),
+                Tok::PlusPlus => {
+                    self.next();
+                    return Ok(Stmt::Assign {
+                        lhs: e.clone(),
+                        op: Some(BinAst::Add),
+                        rhs: Expr::Int(1),
+                        line,
+                    });
+                }
+                Tok::MinusMinus => {
+                    self.next();
+                    return Ok(Stmt::Assign {
+                        lhs: e.clone(),
+                        op: Some(BinAst::Sub),
+                        rhs: Expr::Int(1),
+                        line,
+                    });
+                }
+                _ => None,
+            };
+            match op {
+                Some(op) => {
+                    self.next();
+                    let rhs = self.expr()?;
+                    Ok(Stmt::Assign {
+                        lhs: e,
+                        op,
+                        rhs,
+                        line,
+                    })
+                }
+                None => Ok(Stmt::ExprStmt(e, line)),
+            }
+        }
+    }
+
+    // ---- expressions (precedence climbing) ----
+
+    pub fn expr(&mut self) -> Result<Expr, ParseError> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> Result<Expr, ParseError> {
+        let c = self.logor()?;
+        if *self.peek() == Tok::Question {
+            self.next();
+            let t = self.expr()?;
+            self.expect(Tok::Colon)?;
+            let f = self.expr()?;
+            Ok(Expr::Ternary(Box::new(c), Box::new(t), Box::new(f)))
+        } else {
+            Ok(c)
+        }
+    }
+
+    fn binary_level(
+        &mut self,
+        ops: &[(Tok, BinAst)],
+        next: fn(&mut Self) -> Result<Expr, ParseError>,
+    ) -> Result<Expr, ParseError> {
+        let mut lhs = next(self)?;
+        loop {
+            let mut matched = None;
+            for (t, op) in ops {
+                if self.peek() == t {
+                    matched = Some(*op);
+                    break;
+                }
+            }
+            match matched {
+                Some(op) => {
+                    self.next();
+                    let rhs = next(self)?;
+                    lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+                }
+                None => return Ok(lhs),
+            }
+        }
+    }
+
+    fn logor(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(&[(Tok::OrOr, BinAst::LogOr)], Self::logand)
+    }
+    fn logand(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(&[(Tok::AndAnd, BinAst::LogAnd)], Self::bitor)
+    }
+    fn bitor(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(&[(Tok::Pipe, BinAst::Or)], Self::bitxor)
+    }
+    fn bitxor(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(&[(Tok::Caret, BinAst::Xor)], Self::bitand)
+    }
+    fn bitand(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(&[(Tok::Amp, BinAst::And)], Self::equality)
+    }
+    fn equality(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(
+            &[(Tok::Eq, BinAst::Eq), (Tok::Ne, BinAst::Ne)],
+            Self::relational,
+        )
+    }
+    fn relational(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(
+            &[
+                (Tok::Lt, BinAst::Lt),
+                (Tok::Le, BinAst::Le),
+                (Tok::Gt, BinAst::Gt),
+                (Tok::Ge, BinAst::Ge),
+            ],
+            Self::shift,
+        )
+    }
+    fn shift(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(
+            &[(Tok::Shl, BinAst::Shl), (Tok::Shr, BinAst::Shr)],
+            Self::additive,
+        )
+    }
+    fn additive(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(
+            &[(Tok::Plus, BinAst::Add), (Tok::Minus, BinAst::Sub)],
+            Self::multiplicative,
+        )
+    }
+    fn multiplicative(&mut self) -> Result<Expr, ParseError> {
+        self.binary_level(
+            &[
+                (Tok::Star, BinAst::Mul),
+                (Tok::Slash, BinAst::Div),
+                (Tok::Percent, BinAst::Rem),
+            ],
+            Self::unary,
+        )
+    }
+
+    fn unary(&mut self) -> Result<Expr, ParseError> {
+        match self.peek().clone() {
+            Tok::Minus => {
+                self.next();
+                Ok(Expr::Un(UnAst::Neg, Box::new(self.unary()?)))
+            }
+            Tok::Not => {
+                self.next();
+                Ok(Expr::Un(UnAst::Not, Box::new(self.unary()?)))
+            }
+            Tok::Tilde => {
+                self.next();
+                Ok(Expr::Un(UnAst::BitNot, Box::new(self.unary()?)))
+            }
+            Tok::Star => {
+                self.next();
+                Ok(Expr::Deref(Box::new(self.unary()?)))
+            }
+            Tok::LParen if self.is_type_kw(1) && *self.peek_at(2) == Tok::RParen => {
+                self.next();
+                let ty = self.type_spec()?;
+                self.expect(Tok::RParen)?;
+                Ok(Expr::Cast(ty, Box::new(self.unary()?)))
+            }
+            _ => self.postfix(),
+        }
+    }
+
+    fn postfix(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.primary()?;
+        loop {
+            match self.peek().clone() {
+                Tok::LBracket => {
+                    self.next();
+                    let idx = self.expr()?;
+                    self.expect(Tok::RBracket)?;
+                    e = Expr::Index(Box::new(e), Box::new(idx));
+                }
+                Tok::Dot => {
+                    self.next();
+                    let m = self.ident()?;
+                    e = Expr::Member(Box::new(e), m);
+                }
+                Tok::LParen => {
+                    let name = match &e {
+                        Expr::Ident(n) => n.clone(),
+                        _ => return self.err("call target must be a name"),
+                    };
+                    self.next();
+                    let mut args = vec![];
+                    while *self.peek() != Tok::RParen {
+                        args.push(self.expr()?);
+                        if *self.peek() == Tok::Comma {
+                            self.next();
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    e = Expr::Call(name, args);
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        match self.next() {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Float(v) => Ok(Expr::Float(v)),
+            Tok::Ident(s) => Ok(Expr::Ident(s)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            t => {
+                self.pos -= 1;
+                self.err(format!("unexpected token {t:?} in expression"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_opencl_kernel() {
+        let src = r#"
+kernel void saxpy(global float* x, global float* y, float a, uniform int n) {
+    int i = get_global_id(0);
+    if (i < n) {
+        y[i] = a * x[i] + y[i];
+    }
+}
+"#;
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.funcs.len(), 1);
+        let f = &p.funcs[0];
+        assert!(f.is_kernel);
+        assert_eq!(f.params.len(), 4);
+        assert_eq!(f.params[0].space, SpaceSpec::Global);
+        assert!(f.params[3].uniform);
+        assert_eq!(f.body.len(), 2);
+    }
+
+    #[test]
+    fn parses_cuda_kernel() {
+        let src = r#"
+__global__ void add(float* a, float* b, int n) {
+    int i = blockIdx.x * blockDim.x + threadIdx.x;
+    __shared__ float tile[64];
+    tile[threadIdx.x] = a[i];
+    __syncthreads();
+    b[i] = tile[threadIdx.x] * 2.0f;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        let f = &p.funcs[0];
+        assert!(f.is_kernel);
+        // first stmt uses Member exprs
+        if let Stmt::Decl { init: Some(e), .. } = &f.body[0] {
+            assert!(format!("{e:?}").contains("Member"));
+        } else {
+            panic!("expected decl");
+        }
+        if let Stmt::Decl { space, dims, .. } = &f.body[1] {
+            assert_eq!(*space, SpaceSpec::Local);
+            assert_eq!(dims, &vec![64]);
+        } else {
+            panic!("expected shared decl");
+        }
+    }
+
+    #[test]
+    fn parses_control_flow_and_ops() {
+        let src = r#"
+void f(int n) {
+    int s = 0;
+    for (int i = 0; i < n; i++) {
+        if (i % 2 == 0 && i != 4) s += i;
+        else continue;
+        while (s > 100) { s -= 10; break; }
+    }
+    do { s++; } while (s < 5);
+    int m = s > 0 ? s : -s;
+    goto done;
+done:
+    return;
+}
+"#;
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.funcs.len(), 1);
+        assert!(!p.funcs[0].is_kernel);
+    }
+
+    #[test]
+    fn parses_globals_with_init() {
+        let src = r#"
+__constant__ float lut[4] = { 1.0f, 2.0f, 3.0f, 4.0f };
+__device__ int counter;
+kernel void k(global int* o) { o[0] = counter; }
+"#;
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.globals.len(), 2);
+        assert_eq!(p.globals[0].space, SpaceSpec::Constant);
+        assert_eq!(p.globals[0].init.as_ref().unwrap().len(), 4);
+        assert_eq!(p.globals[1].space, SpaceSpec::Global);
+    }
+
+    #[test]
+    fn reports_error_line() {
+        let err = parse_program("kernel void f() {\n  int x = ;\n}").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+}

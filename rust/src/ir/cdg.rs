@@ -1,0 +1,155 @@
+//! Control-dependence graph (Ferrante–Ottenstein–Warren, via the
+//! post-dominator tree).
+//!
+//! Used by the uniformity analysis (divergent branches taint
+//! control-dependent values, paper §4.3.1) and by the CFG-reconstruction
+//! pass, which duplicates *divergent CDG leaf nodes* to reduce
+//! linearization predicate complexity (paper §4.3.2, Fig. 6).
+
+use super::dom::PostDomTree;
+use super::{BlockId, Function};
+
+#[derive(Debug)]
+pub struct Cdg {
+    /// For each block b: the branch blocks that b is control-dependent on.
+    pub deps: Vec<Vec<BlockId>>,
+    /// For each branch block a: the blocks control-dependent on a.
+    pub dependents: Vec<Vec<BlockId>>,
+}
+
+impl Cdg {
+    pub fn build(f: &Function) -> Cdg {
+        let pdom = PostDomTree::build(f);
+        Cdg::build_with(f, &pdom)
+    }
+
+    pub fn build_with(f: &Function, pdom: &PostDomTree) -> Cdg {
+        let n = f.blocks.len();
+        let mut deps: Vec<Vec<BlockId>> = vec![vec![]; n];
+        let mut dependents: Vec<Vec<BlockId>> = vec![vec![]; n];
+        for a in f.block_ids() {
+            let succs = f.succs(a);
+            if succs.len() < 2 {
+                continue;
+            }
+            let stop = pdom.ipdom_of(a);
+            for s in succs {
+                // Walk the postdom tree from s up to (exclusive) ipdom(a);
+                // every visited node is control-dependent on a.
+                let mut cur = Some(s);
+                while let Some(c) = cur {
+                    if Some(c) == stop {
+                        break;
+                    }
+                    if !deps[c.idx()].contains(&a) {
+                        deps[c.idx()].push(a);
+                        dependents[a.idx()].push(c);
+                    }
+                    cur = pdom.ipdom_of(c);
+                }
+            }
+        }
+        Cdg { deps, dependents }
+    }
+
+    /// Depth of the control-dependence chain for block `b` (number of
+    /// distinct branch blocks it transitively depends on). A proxy for
+    /// linearization predicate cost (paper: "the OpenCL cfd benchmark's CDG
+    /// exhibits substantial depth").
+    pub fn dep_depth(&self, b: BlockId) -> usize {
+        let mut seen: Vec<BlockId> = vec![];
+        let mut work = vec![b];
+        while let Some(x) = work.pop() {
+            for &d in &self.deps[x.idx()] {
+                if !seen.contains(&d) {
+                    seen.push(d);
+                    work.push(d);
+                }
+            }
+        }
+        seen.len()
+    }
+
+    /// A CDG *leaf* node: a block that nothing is control-dependent on
+    /// (no dependents), but which itself has control dependences.
+    pub fn is_leaf(&self, b: BlockId) -> bool {
+        self.dependents[b.idx()].is_empty() && !self.deps[b.idx()].is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Type, Val};
+
+    #[test]
+    fn diamond_cdg() {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let b = f.add_block("b");
+        let j = f.add_block("j");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.cond_br(Val::cb(true), a, b);
+        bl.set_block(a);
+        bl.br(j);
+        bl.set_block(b);
+        bl.br(j);
+        bl.set_block(j);
+        bl.ret(None);
+        let cdg = Cdg::build(&f);
+        assert_eq!(cdg.deps[a.idx()], vec![entry]);
+        assert_eq!(cdg.deps[b.idx()], vec![entry]);
+        assert!(cdg.deps[j.idx()].is_empty());
+        assert_eq!(cdg.dependents[entry.idx()].len(), 2);
+        assert!(cdg.is_leaf(a));
+        assert_eq!(cdg.dep_depth(a), 1);
+    }
+
+    #[test]
+    fn loop_header_self_dependence() {
+        // while loop: header is control-dependent on itself (via latch path).
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.br(h);
+        bl.set_block(h);
+        bl.cond_br(Val::cb(true), body, exit);
+        bl.set_block(body);
+        bl.br(h);
+        bl.set_block(exit);
+        bl.ret(None);
+        let cdg = Cdg::build(&f);
+        // body and h are control dependent on h.
+        assert!(cdg.deps[body.idx()].contains(&h));
+        assert!(cdg.deps[h.idx()].contains(&h));
+        assert!(cdg.deps[exit.idx()].is_empty());
+    }
+
+    #[test]
+    fn nested_depth() {
+        // entry -> (c1 ? m : j); m -> (c2 ? x : j2)... x depends on 2 branches.
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let m = f.add_block("m");
+        let x = f.add_block("x");
+        let j2 = f.add_block("j2");
+        let j = f.add_block("j");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.cond_br(Val::cb(true), m, j);
+        bl.set_block(m);
+        bl.cond_br(Val::cb(true), x, j2);
+        bl.set_block(x);
+        bl.br(j2);
+        bl.set_block(j2);
+        bl.br(j);
+        bl.set_block(j);
+        bl.ret(None);
+        let cdg = Cdg::build(&f);
+        assert_eq!(cdg.dep_depth(x), 2);
+        assert!(cdg.is_leaf(x));
+    }
+}

@@ -1,0 +1,200 @@
+//! CFG utilities: reachability, reducibility testing, edge classification.
+//!
+//! Reducibility matters because the Vortex IPDOM stack requires structured
+//! (reducible) control flow (paper §2.3 / §4.3.2): every divergence point
+//! must reconverge at its immediate post-dominator.
+
+use super::{BlockId, Function};
+use std::collections::{HashMap, HashSet};
+
+/// Result of DFS edge classification on the CFG.
+#[derive(Debug, Default)]
+pub struct EdgeClasses {
+    /// Back edges found by the DFS (target is an ancestor on the DFS stack).
+    pub back_edges: Vec<(BlockId, BlockId)>,
+    /// All other (tree/forward/cross) edges.
+    pub forward_edges: Vec<(BlockId, BlockId)>,
+}
+
+/// Classify edges with a DFS from the entry block.
+pub fn classify_edges(f: &Function) -> EdgeClasses {
+    let n = f.blocks.len();
+    let mut color = vec![0u8; n]; // 0=white 1=grey 2=black
+    let mut out = EdgeClasses::default();
+    let mut stack: Vec<(BlockId, usize)> = vec![(f.entry, 0)];
+    color[f.entry.idx()] = 1;
+    while let Some((b, i)) = stack.pop() {
+        let succs = f.succs(b);
+        if i < succs.len() {
+            stack.push((b, i + 1));
+            let s = succs[i];
+            match color[s.idx()] {
+                0 => {
+                    color[s.idx()] = 1;
+                    out.forward_edges.push((b, s));
+                    stack.push((s, 0));
+                }
+                1 => out.back_edges.push((b, s)),
+                _ => out.forward_edges.push((b, s)),
+            }
+        } else {
+            color[b.idx()] = 2;
+        }
+    }
+    out
+}
+
+/// A flow graph is reducible iff every DFS back edge `n -> m` has `m`
+/// dominating `n` (Hecht & Ullman). Irreducible graphs break IPDOM-stack
+/// reconvergence and must be restructured (paper §4.3.2).
+pub fn is_reducible(f: &Function) -> bool {
+    let dom = super::dom::DomTree::build(f);
+    let classes = classify_edges(f);
+    classes
+        .back_edges
+        .iter()
+        .all(|&(n, m)| dom.dominates(m, n))
+}
+
+/// The set of "offending" back edges whose target does not dominate the
+/// source — each identifies an irreducible region entry.
+pub fn irreducible_back_edges(f: &Function) -> Vec<(BlockId, BlockId)> {
+    let dom = super::dom::DomTree::build(f);
+    classify_edges(f)
+        .back_edges
+        .into_iter()
+        .filter(|&(n, m)| !dom.dominates(m, n))
+        .collect()
+}
+
+/// Blocks reachable from `from` without passing through `stop`.
+/// Used to find the influence region of a divergent branch (blocks between
+/// the branch and its IPDOM).
+pub fn reachable_until(f: &Function, from: &[BlockId], stop: BlockId) -> HashSet<BlockId> {
+    let mut seen: HashSet<BlockId> = HashSet::new();
+    let mut work: Vec<BlockId> = from.iter().copied().filter(|&b| b != stop).collect();
+    for &b in &work {
+        seen.insert(b);
+    }
+    while let Some(b) = work.pop() {
+        for s in f.succs(b) {
+            if s != stop && seen.insert(s) {
+                work.push(s);
+            }
+        }
+    }
+    seen
+}
+
+/// True if `to` is reachable from `from` (inclusive of `from == to`).
+pub fn is_reachable(f: &Function, from: BlockId, to: BlockId) -> bool {
+    if from == to {
+        return true;
+    }
+    let mut seen = HashSet::new();
+    let mut work = vec![from];
+    seen.insert(from);
+    while let Some(b) = work.pop() {
+        for s in f.succs(b) {
+            if s == to {
+                return true;
+            }
+            if seen.insert(s) {
+                work.push(s);
+            }
+        }
+    }
+    false
+}
+
+/// Exit blocks (terminated by Ret or Unreachable).
+pub fn exit_blocks(f: &Function) -> Vec<BlockId> {
+    f.block_ids()
+        .into_iter()
+        .filter(|&b| {
+            !f.block(b).insts.is_empty()
+                && matches!(
+                    f.inst(f.term(b)).kind,
+                    super::InstKind::Ret { .. } | super::InstKind::Unreachable
+                )
+        })
+        .collect()
+}
+
+/// Count of static edges in the CFG.
+pub fn num_edges(f: &Function) -> usize {
+    f.block_ids().iter().map(|&b| f.succs(b).len()).sum()
+}
+
+/// Map from block to its position in RPO (reachable blocks only).
+pub fn rpo_index(f: &Function) -> HashMap<BlockId, usize> {
+    f.rpo().into_iter().enumerate().map(|(i, b)| (b, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, InstKind, Type, Val};
+
+    /// entry -> a -> b -> a (loop), b -> exit : reducible.
+    #[test]
+    fn reducible_loop() {
+        let mut f = crate::ir::Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let b = f.add_block("b");
+        let x = f.add_block("x");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.br(a);
+        bl.set_block(a);
+        bl.br(b);
+        bl.set_block(b);
+        bl.cond_br(Val::cb(true), a, x);
+        bl.set_block(x);
+        bl.ret(None);
+        assert!(is_reducible(&f));
+        let cls = classify_edges(&f);
+        assert_eq!(cls.back_edges, vec![(b, a)]);
+    }
+
+    /// Classic irreducible graph: entry branches to a and b; a -> b, b -> a.
+    #[test]
+    fn irreducible_two_headed_loop() {
+        let mut f = crate::ir::Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let b = f.add_block("b");
+        let x = f.add_block("x");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.cond_br(Val::cb(true), a, b);
+        bl.set_block(a);
+        bl.cond_br(Val::cb(true), b, x);
+        bl.set_block(b);
+        bl.cond_br(Val::cb(true), a, x);
+        bl.set_block(x);
+        bl.ret(None);
+        assert!(!is_reducible(&f));
+        assert!(!irreducible_back_edges(&f).is_empty());
+        let _ = entry;
+    }
+
+    #[test]
+    fn reachability() {
+        let mut f = crate::ir::Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let b = f.add_block("b");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.br(a);
+        bl.set_block(a);
+        bl.br(b);
+        bl.set_block(b);
+        bl.ret(None);
+        assert!(is_reachable(&f, entry, b));
+        assert!(!is_reachable(&f, b, entry));
+        let r = reachable_until(&f, &[a], b);
+        assert!(r.contains(&a) && !r.contains(&b));
+        assert_eq!(exit_blocks(&f), vec![b]);
+        assert!(matches!(f.inst(f.term(b)).kind, InstKind::Ret { .. }));
+    }
+}

@@ -1,0 +1,334 @@
+//! Dominator and post-dominator trees (Cooper–Harvey–Kennedy).
+//!
+//! The post-dominator tree supplies the IPDOM reconvergence points that the
+//! divergence-management insertion (paper Algorithm 2) and the IPDOM-stack
+//! hardware contract (paper §2.3) rely on.
+
+use super::{BlockId, Function};
+use std::collections::HashMap;
+
+/// Generic CHK dominator computation over an indexed graph.
+///
+/// `order` must be a reverse post-order of reachable nodes starting with the
+/// root; `preds` gives predecessors in the same index space.
+fn compute_idoms(order: &[usize], preds: &[Vec<usize>], n: usize) -> Vec<Option<usize>> {
+    let mut rpo_num = vec![usize::MAX; n];
+    for (i, &b) in order.iter().enumerate() {
+        rpo_num[b] = i;
+    }
+    let mut idom: Vec<Option<usize>> = vec![None; n];
+    let root = order[0];
+    idom[root] = Some(root);
+    let intersect = |idom: &Vec<Option<usize>>, mut a: usize, mut b: usize| -> usize {
+        while a != b {
+            while rpo_num[a] > rpo_num[b] {
+                a = idom[a].unwrap();
+            }
+            while rpo_num[b] > rpo_num[a] {
+                b = idom[b].unwrap();
+            }
+        }
+        a
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in order.iter().skip(1) {
+            let mut new_idom: Option<usize> = None;
+            for &p in &preds[b] {
+                if rpo_num[p] == usize::MAX {
+                    continue; // unreachable predecessor
+                }
+                if idom[p].is_some() {
+                    new_idom = Some(match new_idom {
+                        None => p,
+                        Some(cur) => intersect(&idom, p, cur),
+                    });
+                }
+            }
+            if let Some(ni) = new_idom {
+                if idom[b] != Some(ni) {
+                    idom[b] = Some(ni);
+                    changed = true;
+                }
+            }
+        }
+    }
+    idom[root] = None; // root has no idom
+    idom
+}
+
+/// Dominator tree over a function's CFG.
+pub struct DomTree {
+    /// Immediate dominator per block (None for entry / unreachable blocks).
+    pub idom: Vec<Option<BlockId>>,
+    /// Whether the block is reachable from entry.
+    pub reachable: Vec<bool>,
+}
+
+impl DomTree {
+    pub fn build(f: &Function) -> DomTree {
+        let n = f.blocks.len();
+        let rpo = f.rpo();
+        let order: Vec<usize> = rpo.iter().map(|b| b.idx()).collect();
+        let preds_b = f.preds();
+        let preds: Vec<Vec<usize>> = preds_b
+            .iter()
+            .map(|ps| ps.iter().map(|p| p.idx()).collect())
+            .collect();
+        let idom_raw = compute_idoms(&order, &preds, n);
+        let mut reachable = vec![false; n];
+        for b in &rpo {
+            reachable[b.idx()] = true;
+        }
+        DomTree {
+            idom: idom_raw
+                .into_iter()
+                .map(|o| o.map(|i| BlockId(i as u32)))
+                .collect(),
+            reachable,
+        }
+    }
+
+    /// Does `a` dominate `b`? (reflexive)
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        if !self.reachable[b.idx()] {
+            return false;
+        }
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            match self.idom[cur.idx()] {
+                Some(d) => cur = d,
+                None => return false,
+            }
+        }
+    }
+
+    /// Children in the dominator tree.
+    pub fn children(&self) -> Vec<Vec<BlockId>> {
+        let mut ch = vec![vec![]; self.idom.len()];
+        for (i, d) in self.idom.iter().enumerate() {
+            if let Some(d) = d {
+                ch[d.idx()].push(BlockId(i as u32));
+            }
+        }
+        ch
+    }
+
+    /// Dominance frontier (Cytron et al.) — used by mem2reg phi placement.
+    pub fn frontiers(&self, f: &Function) -> Vec<Vec<BlockId>> {
+        let n = f.blocks.len();
+        let mut df: Vec<Vec<BlockId>> = vec![vec![]; n];
+        let preds = f.preds();
+        for b in f.block_ids() {
+            if preds[b.idx()].len() >= 2 {
+                for &p in &preds[b.idx()] {
+                    if !self.reachable[p.idx()] {
+                        continue;
+                    }
+                    let mut runner = p;
+                    while Some(runner) != self.idom[b.idx()] && self.reachable[runner.idx()] {
+                        if !df[runner.idx()].contains(&b) {
+                            df[runner.idx()].push(b);
+                        }
+                        match self.idom[runner.idx()] {
+                            Some(r) => runner = r,
+                            None => break,
+                        }
+                    }
+                }
+            }
+        }
+        df
+    }
+}
+
+/// Post-dominator tree. Built on the reverse CFG with a virtual exit that
+/// post-dominates every Ret/Unreachable block.
+pub struct PostDomTree {
+    /// Immediate post-dominator; None means the virtual exit (or
+    /// unreachable-in-reverse).
+    pub ipdom: Vec<Option<BlockId>>,
+    pub reachable_rev: Vec<bool>,
+}
+
+impl PostDomTree {
+    pub fn build(f: &Function) -> PostDomTree {
+        let n = f.blocks.len();
+        // Virtual exit gets index n.
+        let exits = super::cfg::exit_blocks(f);
+        // Reverse-graph preds(x) = successors of x in forward graph;
+        // virtual exit's reverse-preds = nothing; each exit block has the
+        // virtual exit as a reverse-predecessor... careful: in the REVERSE
+        // graph, edges are reversed: forward a->b becomes b->a. The reverse
+        // graph's root is the virtual exit with edges to every exit block.
+        let mut rev_succ: Vec<Vec<usize>> = vec![vec![]; n + 1]; // edges of reverse graph
+        let mut rev_pred: Vec<Vec<usize>> = vec![vec![]; n + 1];
+        for b in f.block_ids() {
+            for s in f.succs(b) {
+                // forward edge b->s: reverse edge s->b
+                rev_succ[s.idx()].push(b.idx());
+                rev_pred[b.idx()].push(s.idx());
+            }
+        }
+        for e in &exits {
+            rev_succ[n].push(e.idx());
+            rev_pred[e.idx()].push(n);
+        }
+        // RPO of reverse graph from virtual exit.
+        let mut visited = vec![false; n + 1];
+        let mut post: Vec<usize> = vec![];
+        let mut stack: Vec<(usize, usize)> = vec![(n, 0)];
+        visited[n] = true;
+        while let Some((b, i)) = stack.pop() {
+            if i < rev_succ[b].len() {
+                stack.push((b, i + 1));
+                let s = rev_succ[b][i];
+                if !visited[s] {
+                    visited[s] = true;
+                    stack.push((s, 0));
+                }
+            } else {
+                post.push(b);
+            }
+        }
+        post.reverse();
+        let idom_raw = compute_idoms(&post, &rev_pred, n + 1);
+        let mut reachable_rev = vec![false; n];
+        for &b in &post {
+            if b < n {
+                reachable_rev[b] = true;
+            }
+        }
+        PostDomTree {
+            ipdom: (0..n)
+                .map(|i| match idom_raw[i] {
+                    Some(d) if d < n => Some(BlockId(d as u32)),
+                    _ => None,
+                })
+                .collect(),
+            reachable_rev,
+        }
+    }
+
+    /// Does `a` post-dominate `b`? (reflexive; virtual exit handled)
+    pub fn post_dominates(&self, a: BlockId, b: BlockId) -> bool {
+        if !self.reachable_rev[b.idx()] {
+            return false;
+        }
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            match self.ipdom[cur.idx()] {
+                Some(d) => cur = d,
+                None => return false,
+            }
+        }
+    }
+
+    /// Immediate post-dominator of a block (None = function exit).
+    pub fn ipdom_of(&self, b: BlockId) -> Option<BlockId> {
+        self.ipdom[b.idx()]
+    }
+}
+
+/// Convenience: both trees plus a preds map, built together.
+pub struct DomInfo {
+    pub dom: DomTree,
+    pub pdom: PostDomTree,
+    pub preds: Vec<Vec<BlockId>>,
+}
+
+impl DomInfo {
+    pub fn build(f: &Function) -> DomInfo {
+        DomInfo {
+            dom: DomTree::build(f),
+            pdom: PostDomTree::build(f),
+            preds: f.preds(),
+        }
+    }
+}
+
+/// Cache of per-function block orderings used by analyses.
+pub fn block_order_map(f: &Function) -> HashMap<BlockId, usize> {
+    super::cfg::rpo_index(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Type, Val};
+
+    fn diamond() -> (Function, BlockId, BlockId, BlockId, BlockId) {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let b = f.add_block("b");
+        let j = f.add_block("j");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.cond_br(Val::cb(true), a, b);
+        bl.set_block(a);
+        bl.br(j);
+        bl.set_block(b);
+        bl.br(j);
+        bl.set_block(j);
+        bl.ret(None);
+        (f, entry, a, b, j)
+    }
+
+    #[test]
+    fn dom_diamond() {
+        let (f, entry, a, b, j) = diamond();
+        let dom = DomTree::build(&f);
+        assert!(dom.dominates(entry, j));
+        assert!(dom.dominates(entry, a));
+        assert!(!dom.dominates(a, j));
+        assert_eq!(dom.idom[j.idx()], Some(entry));
+        assert_eq!(dom.idom[a.idx()], Some(entry));
+        let _ = b;
+    }
+
+    #[test]
+    fn postdom_diamond() {
+        let (f, entry, a, b, j) = diamond();
+        let pdom = PostDomTree::build(&f);
+        assert_eq!(pdom.ipdom_of(entry), Some(j));
+        assert_eq!(pdom.ipdom_of(a), Some(j));
+        assert_eq!(pdom.ipdom_of(b), Some(j));
+        assert_eq!(pdom.ipdom_of(j), None);
+        assert!(pdom.post_dominates(j, entry));
+        assert!(!pdom.post_dominates(a, entry));
+    }
+
+    #[test]
+    fn frontiers_diamond() {
+        let (f, _entry, a, b, j) = diamond();
+        let dom = DomTree::build(&f);
+        let df = dom.frontiers(&f);
+        assert_eq!(df[a.idx()], vec![j]);
+        assert_eq!(df[b.idx()], vec![j]);
+        assert!(df[j.idx()].is_empty());
+    }
+
+    #[test]
+    fn postdom_multiple_exits() {
+        // entry -> (a: ret) / (b: ret) — ipdom(entry) = virtual exit = None.
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let b = f.add_block("b");
+        let mut bl = Builder::at(&mut f, entry);
+        bl.cond_br(Val::cb(true), a, b);
+        bl.set_block(a);
+        bl.ret(None);
+        bl.set_block(b);
+        bl.ret(None);
+        let pdom = PostDomTree::build(&f);
+        assert_eq!(pdom.ipdom_of(entry), None);
+    }
+}

@@ -1,0 +1,660 @@
+//! Scalar (per-thread) IR interpreter.
+//!
+//! Runs *pre-scheduling* kernel IR one thread at a time over a flat memory
+//! image. This is the correctness oracle for property tests: random
+//! programs are compiled through the full VOLT pipeline, simulated on the
+//! SIMT simulator, and results compared against this interpreter.
+//!
+//! The [`scalar`] submodule holds the single source of truth for scalar
+//! operation semantics (RISC-V division rules, float ops); the simulator's
+//! execute stage uses the same functions, so oracle and simulator cannot
+//! drift apart.
+
+use super::*;
+
+/// Scalar operation semantics shared between the interpreter and the
+/// simulator execute stage.
+pub mod scalar {
+    use crate::ir::{BinOp, FCmp, ICmp, UnOp};
+
+    /// Integer binop on 32-bit values; RISC-V semantics for div/rem by zero
+    /// (quotient = -1 / all-ones, remainder = dividend) and overflow
+    /// (INT_MIN / -1 = INT_MIN).
+    pub fn bin_i(op: BinOp, a: u32, b: u32) -> u32 {
+        let (sa, sb) = (a as i32, b as i32);
+        match op {
+            BinOp::Add => sa.wrapping_add(sb) as u32,
+            BinOp::Sub => sa.wrapping_sub(sb) as u32,
+            BinOp::Mul => sa.wrapping_mul(sb) as u32,
+            BinOp::SDiv => {
+                if sb == 0 {
+                    u32::MAX
+                } else if sa == i32::MIN && sb == -1 {
+                    sa as u32
+                } else {
+                    (sa / sb) as u32
+                }
+            }
+            BinOp::SRem => {
+                if sb == 0 {
+                    a
+                } else if sa == i32::MIN && sb == -1 {
+                    0
+                } else {
+                    (sa % sb) as u32
+                }
+            }
+            BinOp::UDiv => {
+                if b == 0 {
+                    u32::MAX
+                } else {
+                    a / b
+                }
+            }
+            BinOp::URem => {
+                if b == 0 {
+                    a
+                } else {
+                    a % b
+                }
+            }
+            BinOp::And => a & b,
+            BinOp::Or => a | b,
+            BinOp::Xor => a ^ b,
+            BinOp::Shl => a.wrapping_shl(b & 31),
+            BinOp::LShr => a.wrapping_shr(b & 31),
+            BinOp::AShr => (sa.wrapping_shr(b & 31)) as u32,
+            BinOp::SMin => sa.min(sb) as u32,
+            BinOp::SMax => sa.max(sb) as u32,
+            _ => panic!("bin_i called with float op {op:?}"),
+        }
+    }
+
+    pub fn bin_f(op: BinOp, a: f32, b: f32) -> f32 {
+        match op {
+            BinOp::FAdd => a + b,
+            BinOp::FSub => a - b,
+            BinOp::FMul => a * b,
+            BinOp::FDiv => a / b,
+            BinOp::FMin => a.min(b),
+            BinOp::FMax => a.max(b),
+            _ => panic!("bin_f called with int op {op:?}"),
+        }
+    }
+
+    /// Unary op over raw 32-bit value (float ops interpret bits as f32).
+    pub fn un(op: UnOp, a: u32) -> u32 {
+        let f = f32::from_bits(a);
+        match op {
+            UnOp::Not => !a,
+            UnOp::FNeg => (-f).to_bits(),
+            UnOp::FSqrt => f.sqrt().to_bits(),
+            UnOp::FAbs => f.abs().to_bits(),
+            UnOp::FExp => f.exp().to_bits(),
+            UnOp::FLog => f.ln().to_bits(),
+            UnOp::FFloor => f.floor().to_bits(),
+            UnOp::SiToFp => ((a as i32) as f32).to_bits(),
+            UnOp::FpToSi => {
+                // Saturating like RISC-V fcvt.w.s.
+                if f.is_nan() {
+                    0
+                } else if f >= i32::MAX as f32 {
+                    i32::MAX as u32
+                } else if f <= i32::MIN as f32 {
+                    i32::MIN as u32
+                } else {
+                    (f as i32) as u32
+                }
+            }
+            UnOp::ZExt => a & 1,
+            UnOp::Trunc => (a != 0) as u32,
+            UnOp::FToBits | UnOp::BitsToF => a,
+        }
+    }
+
+    pub fn icmp(pred: ICmp, a: u32, b: u32) -> bool {
+        let (sa, sb) = (a as i32, b as i32);
+        match pred {
+            ICmp::Eq => a == b,
+            ICmp::Ne => a != b,
+            ICmp::Slt => sa < sb,
+            ICmp::Sle => sa <= sb,
+            ICmp::Sgt => sa > sb,
+            ICmp::Sge => sa >= sb,
+            ICmp::Ult => a < b,
+            ICmp::Uge => a >= b,
+        }
+    }
+
+    pub fn fcmp(pred: FCmp, a: f32, b: f32) -> bool {
+        match pred {
+            FCmp::Oeq => a == b,
+            FCmp::One => a != b && !a.is_nan() && !b.is_nan(),
+            FCmp::Olt => a < b,
+            FCmp::Ole => a <= b,
+            FCmp::Ogt => a > b,
+            FCmp::Oge => a >= b,
+        }
+    }
+}
+
+/// Per-thread work-item coordinates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkItemCtx {
+    pub gid: [u32; 3],
+    pub lid: [u32; 3],
+    pub group: [u32; 3],
+    pub lsize: [u32; 3],
+    pub gsize: [u32; 3],
+    pub ngroups: [u32; 3],
+}
+
+pub struct Interp<'a> {
+    pub module: &'a Module,
+    pub mem: &'a mut Vec<u8>,
+    pub wi: WorkItemCtx,
+    /// Bump pointer for per-thread allocas.
+    pub sp: u32,
+    /// Address where each global lives (same layout the backend uses).
+    pub global_addrs: Vec<u32>,
+    pub used_barrier: bool,
+    pub used_warp_op: bool,
+    pub steps: u64,
+    pub max_steps: u64,
+    pub prints: Vec<String>,
+}
+
+pub fn read_u32(mem: &[u8], addr: u32) -> u32 {
+    let a = addr as usize;
+    u32::from_le_bytes([mem[a], mem[a + 1], mem[a + 2], mem[a + 3]])
+}
+
+pub fn write_u32(mem: &mut [u8], addr: u32, v: u32) {
+    let a = addr as usize;
+    mem[a..a + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+impl<'a> Interp<'a> {
+    fn val(&self, _f: &Function, frame: &[Option<u32>], args: &[u32], v: Val) -> Result<u32, String> {
+        Ok(match v {
+            Val::Inst(i) => frame[i.idx()].ok_or(format!("read of unset %i{}", i.0))?,
+            Val::Arg(i) => args[i as usize],
+            Val::I(x, _) => x as u32,
+            Val::F(b) => b,
+            Val::G(g) => self.global_addrs[g.idx()],
+        })
+    }
+
+    /// Execute one function for the current thread. Returns the return
+    /// value (raw bits) if any.
+    pub fn exec_function(&mut self, fid: FuncId, args: &[u32]) -> Result<Option<u32>, String> {
+        let f = self.module.func(fid);
+        let mut frame: Vec<Option<u32>> = vec![None; f.insts.len()];
+        let mut cur = f.entry;
+        let mut prev: Option<BlockId> = None;
+        let saved_sp = self.sp;
+        loop {
+            // Phase 1: evaluate phis against prev (parallel copy).
+            let insts = f.blocks[cur.idx()].insts.clone();
+            let mut phi_vals: Vec<(InstId, u32)> = vec![];
+            for &id in &insts {
+                if let InstKind::Phi { incs } = &f.inst(id).kind {
+                    let p = prev.ok_or("phi in entry block")?;
+                    let (_, v) = incs
+                        .iter()
+                        .find(|(b, _)| *b == p)
+                        .ok_or(format!("phi %i{} missing incoming for b{}", id.0, p.0))?;
+                    phi_vals.push((id, self.val(f, &frame, args, *v)?));
+                } else {
+                    break;
+                }
+            }
+            for (id, v) in phi_vals {
+                frame[id.idx()] = Some(v);
+            }
+            // Phase 2: straight-line execution.
+            for &id in &insts {
+                self.steps += 1;
+                if self.steps > self.max_steps {
+                    return Err("interpreter step limit exceeded".into());
+                }
+                let inst = f.inst(id);
+                let kind = inst.kind.clone();
+                match kind {
+                    InstKind::Phi { .. } => {}
+                    InstKind::Bin { op, a, b } => {
+                        let (x, y) = (
+                            self.val(f, &frame, args, a)?,
+                            self.val(f, &frame, args, b)?,
+                        );
+                        let r = if op.is_float() {
+                            scalar::bin_f(op, f32::from_bits(x), f32::from_bits(y)).to_bits()
+                        } else {
+                            scalar::bin_i(op, x, y)
+                        };
+                        frame[id.idx()] = Some(r);
+                    }
+                    InstKind::Un { op, a } => {
+                        let x = self.val(f, &frame, args, a)?;
+                        frame[id.idx()] = Some(scalar::un(op, x));
+                    }
+                    InstKind::ICmp { pred, a, b } => {
+                        let (x, y) = (
+                            self.val(f, &frame, args, a)?,
+                            self.val(f, &frame, args, b)?,
+                        );
+                        frame[id.idx()] = Some(scalar::icmp(pred, x, y) as u32);
+                    }
+                    InstKind::FCmp { pred, a, b } => {
+                        let (x, y) = (
+                            self.val(f, &frame, args, a)?,
+                            self.val(f, &frame, args, b)?,
+                        );
+                        frame[id.idx()] =
+                            Some(scalar::fcmp(pred, f32::from_bits(x), f32::from_bits(y)) as u32);
+                    }
+                    InstKind::Select { cond, t, f: fv } => {
+                        let c = self.val(f, &frame, args, cond)?;
+                        let r = if c != 0 {
+                            self.val(f, &frame, args, t)?
+                        } else {
+                            self.val(f, &frame, args, fv)?
+                        };
+                        frame[id.idx()] = Some(r);
+                    }
+                    InstKind::Alloca { size } => {
+                        let addr = self.sp;
+                        self.sp += (size + 3) & !3;
+                        if self.sp as usize > self.mem.len() {
+                            return Err("interpreter stack overflow".into());
+                        }
+                        frame[id.idx()] = Some(addr);
+                    }
+                    InstKind::Load { ptr } => {
+                        let a = self.val(f, &frame, args, ptr)?;
+                        if a as usize + 4 > self.mem.len() {
+                            return Err(format!("load OOB at {a:#x}"));
+                        }
+                        frame[id.idx()] = Some(read_u32(self.mem, a));
+                    }
+                    InstKind::Store { ptr, val } => {
+                        let a = self.val(f, &frame, args, ptr)?;
+                        let v = self.val(f, &frame, args, val)?;
+                        if a as usize + 4 > self.mem.len() {
+                            return Err(format!("store OOB at {a:#x}"));
+                        }
+                        write_u32(self.mem, a, v);
+                    }
+                    InstKind::Gep {
+                        base,
+                        index,
+                        scale,
+                        disp,
+                    } => {
+                        let b = self.val(f, &frame, args, base)?;
+                        let i = self.val(f, &frame, args, index)?;
+                        let r = b
+                            .wrapping_add((i as i32).wrapping_mul(scale as i32) as u32)
+                            .wrapping_add(disp as u32);
+                        frame[id.idx()] = Some(r);
+                    }
+                    InstKind::Call { callee, args: cargs } => {
+                        let mut vals = vec![];
+                        for a in &cargs {
+                            vals.push(self.val(f, &frame, args, *a)?);
+                        }
+                        let r = self.exec_function(callee, &vals)?;
+                        if f.inst(id).ty != Type::Void {
+                            frame[id.idx()] =
+                                Some(r.ok_or("void call used as value")?);
+                        }
+                    }
+                    InstKind::Intr { intr, args: iargs } => {
+                        let r = self.exec_intr(f, &frame, args, &intr, &iargs)?;
+                        if f.inst(id).ty != Type::Void {
+                            frame[id.idx()] = Some(r);
+                        }
+                    }
+                    InstKind::Br { target } => {
+                        prev = Some(cur);
+                        cur = target;
+                        break;
+                    }
+                    InstKind::CondBr { cond, t, f: fb } => {
+                        let c = self.val(f, &frame, args, cond)?;
+                        prev = Some(cur);
+                        cur = if c != 0 { t } else { fb };
+                        break;
+                    }
+                    InstKind::SplitBr {
+                        cond,
+                        neg,
+                        then_b,
+                        else_b,
+                        ..
+                    } => {
+                        // Scalar semantics: behaves like a cond branch.
+                        let c = self.val(f, &frame, args, cond)? != 0;
+                        let c = if neg { !c } else { c };
+                        prev = Some(cur);
+                        cur = if c { then_b } else { else_b };
+                        break;
+                    }
+                    InstKind::PredBr {
+                        cond,
+                        mask: _,
+                        body,
+                        exit,
+                    } => {
+                        let c = self.val(f, &frame, args, cond)? != 0;
+                        prev = Some(cur);
+                        cur = if c { body } else { exit };
+                        break;
+                    }
+                    InstKind::Ret { val } => {
+                        self.sp = saved_sp;
+                        return Ok(match val {
+                            Some(v) => Some(self.val(f, &frame, args, v)?),
+                            None => None,
+                        });
+                    }
+                    InstKind::Unreachable => return Err("reached unreachable".into()),
+                }
+            }
+        }
+    }
+
+    fn exec_intr(
+        &mut self,
+        f: &Function,
+        frame: &[Option<u32>],
+        args: &[u32],
+        intr: &Intr,
+        iargs: &[Val],
+    ) -> Result<u32, String> {
+        let dim = |s: &mut Self, v: Val| -> Result<usize, String> {
+            Ok((s.val(f, frame, args, v)? as usize).min(2))
+        };
+        match intr {
+            Intr::WorkItem(w) => {
+                let d = dim(self, iargs[0])?;
+                Ok(match w {
+                    WorkItem::GlobalId => self.wi.gid[d],
+                    WorkItem::LocalId => self.wi.lid[d],
+                    WorkItem::GroupId => self.wi.group[d],
+                    WorkItem::LocalSize => self.wi.lsize[d],
+                    WorkItem::GlobalSize => self.wi.gsize[d],
+                    WorkItem::NumGroups => self.wi.ngroups[d],
+                })
+            }
+            Intr::Csr(c) => Ok(match c {
+                // Scalar model: one thread per "lane 0" of a 1-warp machine.
+                Csr::LaneId => {
+                    let lin = self.wi.lid[0]
+                        + self.wi.lid[1] * self.wi.lsize[0]
+                        + self.wi.lid[2] * self.wi.lsize[0] * self.wi.lsize[1];
+                    lin % 32
+                }
+                Csr::WarpId => 0,
+                Csr::CoreId => 0,
+                Csr::NumThreads => 32,
+                Csr::NumWarps => 1,
+                Csr::NumCores => 1,
+            }),
+            Intr::Barrier => {
+                self.used_barrier = true;
+                Ok(0)
+            }
+            Intr::Atomic(op) => {
+                let a = self.val(f, frame, args, iargs[0])?;
+                let v = self.val(f, frame, args, iargs[1])?;
+                if a as usize + 4 > self.mem.len() {
+                    return Err(format!("atomic OOB at {a:#x}"));
+                }
+                let old = read_u32(self.mem, a);
+                let new = match op {
+                    AtomOp::Add => old.wrapping_add(v),
+                    AtomOp::And => old & v,
+                    AtomOp::Or => old | v,
+                    AtomOp::Xor => old ^ v,
+                    AtomOp::Min => ((old as i32).min(v as i32)) as u32,
+                    AtomOp::Max => ((old as i32).max(v as i32)) as u32,
+                    AtomOp::Exch => v,
+                };
+                write_u32(self.mem, a, new);
+                Ok(old)
+            }
+            Intr::AtomicCas => {
+                let a = self.val(f, frame, args, iargs[0])?;
+                let cmp = self.val(f, frame, args, iargs[1])?;
+                let new = self.val(f, frame, args, iargs[2])?;
+                let old = read_u32(self.mem, a);
+                if old == cmp {
+                    write_u32(self.mem, a, new);
+                }
+                Ok(old)
+            }
+            Intr::VoteAll | Intr::VoteAny => {
+                self.used_warp_op = true;
+                // Single-thread warp: vote == own predicate.
+                self.val(f, frame, args, iargs[0])
+            }
+            Intr::Ballot => {
+                self.used_warp_op = true;
+                let p = self.val(f, frame, args, iargs[0])?;
+                Ok(if p != 0 { 1 } else { 0 })
+            }
+            Intr::Shfl => {
+                self.used_warp_op = true;
+                self.val(f, frame, args, iargs[0])
+            }
+            Intr::Join | Intr::Tmc => Ok(0),
+            Intr::Mask => Ok(1),
+            Intr::PrintI => {
+                let v = self.val(f, frame, args, iargs[0])?;
+                self.prints.push(format!("{}", v as i32));
+                Ok(0)
+            }
+            Intr::PrintF => {
+                let v = self.val(f, frame, args, iargs[0])?;
+                self.prints.push(format!("{}", f32::from_bits(v)));
+                Ok(0)
+            }
+        }
+    }
+}
+
+/// Run a kernel over a full NDRange, one thread at a time.
+/// `global_addrs[i]` must hold the address assigned to module global i.
+/// Returns whether any thread used a barrier (result then suspect unless
+/// the kernel is barrier-safe under sequential execution).
+#[allow(clippy::too_many_arguments)]
+pub fn run_kernel_scalar(
+    module: &Module,
+    fid: FuncId,
+    args: &[u32],
+    grid: [u32; 3],
+    block: [u32; 3],
+    mem: &mut Vec<u8>,
+    stack_base: u32,
+    global_addrs: &[u32],
+) -> Result<ScalarRunInfo, String> {
+    let mut info = ScalarRunInfo::default();
+    let lsize = block;
+    let gsize = [grid[0] * block[0], grid[1] * block[1], grid[2] * block[2]];
+    for gz in 0..grid[2] {
+        for gy in 0..grid[1] {
+            for gx in 0..grid[0] {
+                for lz in 0..block[2] {
+                    for ly in 0..block[1] {
+                        for lx in 0..block[0] {
+                            let wi = WorkItemCtx {
+                                gid: [
+                                    gx * block[0] + lx,
+                                    gy * block[1] + ly,
+                                    gz * block[2] + lz,
+                                ],
+                                lid: [lx, ly, lz],
+                                group: [gx, gy, gz],
+                                lsize,
+                                gsize,
+                                ngroups: grid,
+                            };
+                            let mut it = Interp {
+                                module,
+                                mem,
+                                wi,
+                                sp: stack_base,
+                                global_addrs: global_addrs.to_vec(),
+                                used_barrier: false,
+                                used_warp_op: false,
+                                steps: 0,
+                                max_steps: 4_000_000,
+                                prints: vec![],
+                            };
+                            it.exec_function(fid, args)?;
+                            info.used_barrier |= it.used_barrier;
+                            info.used_warp_op |= it.used_warp_op;
+                            info.total_steps += it.steps;
+                            info.prints.extend(it.prints);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(info)
+}
+
+#[derive(Default, Debug)]
+pub struct ScalarRunInfo {
+    pub used_barrier: bool,
+    pub used_warp_op: bool,
+    pub total_steps: u64,
+    pub prints: Vec<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Param};
+
+    /// Build: kernel writes gid*2+arg into out[gid].
+    fn build_kernel() -> Module {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "c".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        f.is_kernel = true;
+        let mut b = Builder::new(&mut f);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        let two = b.mul(gid, Val::ci(2));
+        let v = b.add(two, Val::Arg(1));
+        let p = b.gep(Val::Arg(0), gid, 4);
+        b.store(p, v);
+        b.ret(None);
+        m.add_func(f);
+        m
+    }
+
+    #[test]
+    fn runs_simple_kernel() {
+        let m = build_kernel();
+        let mut mem = vec![0u8; 4096];
+        let out_addr = 256u32;
+        run_kernel_scalar(
+            &m,
+            FuncId(0),
+            &[out_addr, 7],
+            [2, 1, 1],
+            [4, 1, 1],
+            &mut mem,
+            2048,
+            &[],
+        )
+        .unwrap();
+        for i in 0..8u32 {
+            assert_eq!(read_u32(&mem, out_addr + i * 4), i * 2 + 7);
+        }
+    }
+
+    #[test]
+    fn loop_and_phi() {
+        // sum 0..n via loop, store at out[0].
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "n".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        b.br(h);
+        b.set_block(body);
+        // placeholders filled after phis exist
+        b.set_block(h);
+        let i_phi = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let s_phi = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i_phi, Val::Arg(1));
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let s2 = b.add(s_phi, i_phi);
+        let i2 = b.add(i_phi, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        b.store(Val::Arg(0), s_phi);
+        b.ret(None);
+        // complete the phis
+        if let (Val::Inst(ip), Val::Inst(sp)) = (i_phi, s_phi) {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+            if let InstKind::Phi { incs } = &mut f.inst_mut(sp).kind {
+                incs.push((body, s2));
+            }
+        }
+        m.add_func(f);
+        let mut mem = vec![0u8; 1024];
+        run_kernel_scalar(&m, FuncId(0), &[64, 10], [1, 1, 1], [1, 1, 1], &mut mem, 512, &[])
+            .unwrap();
+        assert_eq!(read_u32(&mem, 64), 45);
+    }
+
+    #[test]
+    fn riscv_div_semantics() {
+        assert_eq!(scalar::bin_i(BinOp::SDiv, 7, 0), u32::MAX);
+        assert_eq!(scalar::bin_i(BinOp::SRem, 7, 0), 7);
+        assert_eq!(
+            scalar::bin_i(BinOp::SDiv, i32::MIN as u32, (-1i32) as u32),
+            i32::MIN as u32
+        );
+        assert_eq!(scalar::bin_i(BinOp::SRem, i32::MIN as u32, (-1i32) as u32), 0);
+    }
+}

@@ -1,0 +1,323 @@
+//! Natural-loop detection (back edges on the dominator tree) and loop
+//! canonicalization helpers (preheader / single-latch / dedicated exits),
+//! prerequisites for the TRANSFORM_LOOP divergence handling (paper §4.3.3).
+
+use super::dom::DomTree;
+use super::{BlockId, Builder, Function, InstKind};
+use std::collections::HashSet;
+
+#[derive(Debug, Clone)]
+pub struct Loop {
+    pub header: BlockId,
+    /// Blocks with a back edge to the header.
+    pub latches: Vec<BlockId>,
+    /// All blocks in the loop body (header included).
+    pub blocks: HashSet<BlockId>,
+    /// Parent loop index in `LoopInfo::loops`, if nested.
+    pub parent: Option<usize>,
+    pub depth: u32,
+}
+
+impl Loop {
+    /// Blocks outside the loop that are targets of edges leaving the loop.
+    pub fn exit_targets(&self, f: &Function) -> Vec<BlockId> {
+        let mut out = vec![];
+        for &b in &self.blocks {
+            for s in f.succs(b) {
+                if !self.blocks.contains(&s) && !out.contains(&s) {
+                    out.push(s);
+                }
+            }
+        }
+        out
+    }
+
+    /// In-loop blocks with an edge leaving the loop.
+    pub fn exiting_blocks(&self, f: &Function) -> Vec<BlockId> {
+        let mut out = vec![];
+        for &b in &self.blocks {
+            if f.succs(b).iter().any(|s| !self.blocks.contains(s)) && !out.contains(&b) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// The unique preheader: the single non-latch predecessor of the header,
+    /// if it exists and has the header as its only successor.
+    pub fn preheader(&self, f: &Function) -> Option<BlockId> {
+        let preds = f.preds();
+        let outside: Vec<BlockId> = preds[self.header.idx()]
+            .iter()
+            .copied()
+            .filter(|p| !self.blocks.contains(p))
+            .collect();
+        match outside.as_slice() {
+            [p] if f.succs(*p).len() == 1 => Some(*p),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct LoopInfo {
+    pub loops: Vec<Loop>,
+    /// Innermost loop index per block.
+    pub loop_of: Vec<Option<usize>>,
+}
+
+impl LoopInfo {
+    pub fn build(f: &Function) -> LoopInfo {
+        let dom = DomTree::build(f);
+        let mut loops: Vec<Loop> = vec![];
+        // Find back edges n->h with h dominating n; group by header.
+        let mut by_header: Vec<(BlockId, Vec<BlockId>)> = vec![];
+        for b in f.block_ids() {
+            for s in f.succs(b) {
+                if dom.dominates(s, b) {
+                    match by_header.iter_mut().find(|(h, _)| *h == s) {
+                        Some((_, l)) => l.push(b),
+                        None => by_header.push((s, vec![b])),
+                    }
+                }
+            }
+        }
+        let preds = f.preds();
+        for (header, latches) in by_header {
+            // Natural loop body: header + all blocks that reach a latch
+            // without passing through the header.
+            let mut blocks: HashSet<BlockId> = HashSet::new();
+            blocks.insert(header);
+            let mut work: Vec<BlockId> = latches.clone();
+            while let Some(b) = work.pop() {
+                if blocks.insert(b) {
+                    for &p in &preds[b.idx()] {
+                        if !blocks.contains(&p) {
+                            work.push(p);
+                        }
+                    }
+                }
+            }
+            loops.push(Loop {
+                header,
+                latches,
+                blocks,
+                parent: None,
+                depth: 1,
+            });
+        }
+        // Establish nesting: loop A is parent of B if A != B and A.blocks ⊇ B.blocks.
+        // Sort by size so parents come later; pick the smallest strict superset.
+        let mut order: Vec<usize> = (0..loops.len()).collect();
+        order.sort_by_key(|&i| loops[i].blocks.len());
+        for oi in 0..order.len() {
+            let i = order[oi];
+            let mut best: Option<usize> = None;
+            for &j in order.iter().skip(oi + 1) {
+                if loops[j].blocks.is_superset(&loops[i].blocks) && loops[j].header != loops[i].header
+                {
+                    best = match best {
+                        None => Some(j),
+                        Some(b) if loops[j].blocks.len() < loops[b].blocks.len() => Some(j),
+                        b => b,
+                    };
+                }
+            }
+            loops[i].parent = best;
+        }
+        // Depths.
+        for i in 0..loops.len() {
+            let mut d = 1;
+            let mut p = loops[i].parent;
+            while let Some(pi) = p {
+                d += 1;
+                p = loops[pi].parent;
+            }
+            loops[i].depth = d;
+        }
+        // Innermost loop per block = the smallest loop containing it.
+        let mut loop_of: Vec<Option<usize>> = vec![None; f.blocks.len()];
+        for (i, l) in loops.iter().enumerate() {
+            for &b in &l.blocks {
+                loop_of[b.idx()] = match loop_of[b.idx()] {
+                    None => Some(i),
+                    Some(j) if l.blocks.len() < loops[j].blocks.len() => Some(i),
+                    j => j,
+                };
+            }
+        }
+        LoopInfo { loops, loop_of }
+    }
+
+    pub fn is_header(&self, b: BlockId) -> bool {
+        self.loops.iter().any(|l| l.header == b)
+    }
+
+    /// The loop (innermost) containing block `b`, if any.
+    pub fn innermost(&self, b: BlockId) -> Option<&Loop> {
+        self.loop_of[b.idx()].map(|i| &self.loops[i])
+    }
+
+    /// Is the terminator of `b` a "loop branch" — i.e. an exiting or
+    /// latch branch of the loop containing `b`? (paper Algorithm 2,
+    /// IS_LOOP_BRANCH)
+    pub fn is_loop_branch(&self, f: &Function, b: BlockId) -> bool {
+        if let Some(l) = self.innermost(b) {
+            let succs = f.succs(b);
+            let is_latch = succs.contains(&l.header) && l.latches.contains(&b);
+            let is_exiting = succs.iter().any(|s| !l.blocks.contains(s));
+            is_latch || is_exiting
+        } else {
+            false
+        }
+    }
+}
+
+/// Ensure the loop with header `header` has a preheader; create one if
+/// needed. Returns the preheader block. Rebuild analyses afterwards.
+pub fn ensure_preheader(f: &mut Function, li_header: BlockId, body: &HashSet<BlockId>) -> BlockId {
+    let preds = f.preds();
+    let outside: Vec<BlockId> = preds[li_header.idx()]
+        .iter()
+        .copied()
+        .filter(|p| !body.contains(p))
+        .collect();
+    if let [p] = outside.as_slice() {
+        if f.succs(*p).len() == 1 {
+            return *p;
+        }
+    }
+    // Create preheader: all outside preds retarget to it.
+    let ph = f.add_block("preheader");
+    {
+        let mut b = Builder::at(f, ph);
+        b.br(li_header);
+    }
+    for p in &outside {
+        let t = f.term(*p);
+        f.inst_mut(t).kind.replace_successor(li_header, ph);
+    }
+    // Rewrite header phis: merge the outside incomings into one via-ph
+    // incoming. Since multiple outside preds may exist with different
+    // values, we must build a phi in the preheader.
+    let header_insts = f.blocks[li_header.idx()].insts.clone();
+    for i in header_insts {
+        let is_phi = matches!(f.inst(i).kind, InstKind::Phi { .. });
+        if !is_phi {
+            break;
+        }
+        let ty = f.inst(i).ty;
+        let (mut outside_incs, inside_incs): (Vec<_>, Vec<_>) =
+            if let InstKind::Phi { incs } = &f.inst(i).kind {
+                incs.iter()
+                    .cloned()
+                    .partition(|(p, _)| outside.contains(p))
+            } else {
+                unreachable!()
+            };
+        if outside_incs.is_empty() {
+            continue;
+        }
+        let merged = if outside_incs.len() == 1 {
+            outside_incs.pop().unwrap().1
+        } else {
+            // Insert a phi in the preheader merging the outside values.
+            let id = f.insert_inst(
+                ph,
+                0,
+                InstKind::Phi {
+                    incs: outside_incs,
+                },
+                ty,
+            );
+            super::Val::Inst(id)
+        };
+        let mut incs = inside_incs;
+        incs.push((ph, merged));
+        if let InstKind::Phi { incs: pincs } = &mut f.inst_mut(i).kind {
+            *pincs = incs;
+        }
+    }
+    ph
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Type, Val};
+
+    /// while-loop shape: entry -> header; header -> body|exit; body -> header.
+    fn simple_loop() -> (Function, BlockId, BlockId, BlockId) {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        b.br(h);
+        b.set_block(h);
+        b.cond_br(Val::cb(true), body, exit);
+        b.set_block(body);
+        b.br(h);
+        b.set_block(exit);
+        b.ret(None);
+        (f, h, body, exit)
+    }
+
+    #[test]
+    fn detects_loop() {
+        let (f, h, body, exit) = simple_loop();
+        let li = LoopInfo::build(&f);
+        assert_eq!(li.loops.len(), 1);
+        let l = &li.loops[0];
+        assert_eq!(l.header, h);
+        assert_eq!(l.latches, vec![body]);
+        assert!(l.blocks.contains(&h) && l.blocks.contains(&body));
+        assert!(!l.blocks.contains(&exit));
+        assert_eq!(l.exit_targets(&f), vec![exit]);
+        assert!(li.is_loop_branch(&f, h));
+        assert!(li.is_loop_branch(&f, body)); // latch
+    }
+
+    #[test]
+    fn preheader_detection_and_creation() {
+        let (mut f, h, _body, _exit) = simple_loop();
+        let li = LoopInfo::build(&f);
+        // entry is a valid preheader already (single succ).
+        assert_eq!(li.loops[0].preheader(&f), Some(f.entry));
+        let body = li.loops[0].blocks.clone();
+        let ph = ensure_preheader(&mut f, h, &body);
+        assert_eq!(ph, f.entry);
+    }
+
+    #[test]
+    fn nested_loops_depth() {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let oh = f.add_block("oh");
+        let ih = f.add_block("ih");
+        let ib = f.add_block("ib");
+        let ol = f.add_block("ol");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        b.br(oh);
+        b.set_block(oh);
+        b.br(ih);
+        b.set_block(ih);
+        b.cond_br(Val::cb(true), ib, ol);
+        b.set_block(ib);
+        b.br(ih);
+        b.set_block(ol);
+        b.cond_br(Val::cb(true), oh, exit);
+        b.set_block(exit);
+        b.ret(None);
+        let li = LoopInfo::build(&f);
+        assert_eq!(li.loops.len(), 2);
+        let inner = li.innermost(ib).unwrap();
+        assert_eq!(inner.header, ih);
+        assert_eq!(inner.depth, 2);
+        let outer_idx = li.loop_of[ol.idx()].unwrap();
+        assert_eq!(li.loops[outer_idx].header, oh);
+        assert_eq!(li.loops[outer_idx].depth, 1);
+    }
+}

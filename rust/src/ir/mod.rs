@@ -1,0 +1,1167 @@
+//! The VOLT intermediate representation.
+//!
+//! A compact SSA IR in the style of LLVM-IR, specialized for SIMT kernel
+//! compilation. Values are produced by instructions (`Val::Inst`), function
+//! arguments (`Val::Arg`) or constants; instructions live in basic blocks
+//! which form an explicit CFG. Divergence-management operations
+//! ([`InstKind::SplitBr`], [`InstKind::PredBr`], [`Intr::Join`], …) are
+//! first-class so the middle-end can plan divergence at the IR level — the
+//! paper's central design decision (§4.3).
+
+pub mod cdg;
+pub mod cfg;
+pub mod dom;
+pub mod interp;
+pub mod loops;
+pub mod parser;
+pub mod printer;
+pub mod verify;
+
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// Ids
+// ---------------------------------------------------------------------------
+
+/// Identifier of a basic block within a function.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// Identifier of an instruction within a function (arena index).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct InstId(pub u32);
+
+/// Identifier of a function within a module.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct FuncId(pub u32);
+
+/// Identifier of a module-level global variable.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct GlobalId(pub u32);
+
+impl BlockId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+impl InstId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+impl FuncId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+impl GlobalId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Types
+// ---------------------------------------------------------------------------
+
+/// GPU address spaces, mirroring OpenCL/CUDA semantics on Vortex.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum AddrSpace {
+    /// Device global memory.
+    Global,
+    /// Per-workgroup local (CUDA `__shared__`) memory. May be mapped to the
+    /// per-core scratchpad or aliased onto global memory (paper Fig. 10).
+    Local,
+    /// Read-only constant memory (lowered onto global memory on Vortex,
+    /// paper §5.4).
+    Const,
+    /// Per-thread private (stack) memory.
+    Private,
+}
+
+/// IR value types. The machine is ILP32 (RV32IMF), so a single 32-bit
+/// integer type plus f32 suffices; pointers are opaque per address space.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Type {
+    Void,
+    /// Boolean / predicate.
+    I1,
+    /// 32-bit integer (signed ops distinguish signedness).
+    I32,
+    /// 32-bit IEEE float.
+    F32,
+    Ptr(AddrSpace),
+}
+
+impl Type {
+    pub fn is_ptr(self) -> bool {
+        matches!(self, Type::Ptr(_))
+    }
+    /// Size in bytes when stored in memory.
+    pub fn size(self) -> u32 {
+        match self {
+            Type::Void => 0,
+            Type::I1 => 4, // stored as a word
+            Type::I32 | Type::F32 | Type::Ptr(_) => 4,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Values
+// ---------------------------------------------------------------------------
+
+/// An SSA value operand.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Val {
+    /// Result of an instruction.
+    Inst(InstId),
+    /// Function argument (by index).
+    Arg(u32),
+    /// Integer (or boolean) constant with its type.
+    I(i64, Type),
+    /// f32 constant (bit pattern, for Eq/Hash).
+    F(u32),
+    /// Address of a module global.
+    G(GlobalId),
+}
+
+impl Val {
+    pub fn ci(v: i64) -> Val {
+        Val::I(v, Type::I32)
+    }
+    pub fn cb(v: bool) -> Val {
+        Val::I(v as i64, Type::I1)
+    }
+    pub fn cf(v: f32) -> Val {
+        Val::F(v.to_bits())
+    }
+    pub fn as_f32(self) -> Option<f32> {
+        match self {
+            Val::F(b) => Some(f32::from_bits(b)),
+            _ => None,
+        }
+    }
+    pub fn as_int(self) -> Option<i64> {
+        match self {
+            Val::I(v, _) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn is_const(self) -> bool {
+        matches!(self, Val::I(..) | Val::F(..))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operations
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    SDiv,
+    SRem,
+    UDiv,
+    URem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    LShr,
+    AShr,
+    SMin,
+    SMax,
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    FMin,
+    FMax,
+}
+
+impl BinOp {
+    pub fn is_float(self) -> bool {
+        matches!(
+            self,
+            BinOp::FAdd | BinOp::FSub | BinOp::FMul | BinOp::FDiv | BinOp::FMin | BinOp::FMax
+        )
+    }
+    pub fn is_commutative(self) -> bool {
+        matches!(
+            self,
+            BinOp::Add
+                | BinOp::Mul
+                | BinOp::And
+                | BinOp::Or
+                | BinOp::Xor
+                | BinOp::SMin
+                | BinOp::SMax
+                | BinOp::FAdd
+                | BinOp::FMul
+                | BinOp::FMin
+                | BinOp::FMax
+        )
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum UnOp {
+    /// Integer bitwise not.
+    Not,
+    FNeg,
+    FSqrt,
+    FAbs,
+    FExp,
+    FLog,
+    FFloor,
+    /// signed i32 -> f32
+    SiToFp,
+    /// f32 -> signed i32 (truncating)
+    FpToSi,
+    /// i1 -> i32 zero-extension
+    ZExt,
+    /// i32 -> i1 (icmp ne 0)
+    Trunc,
+    /// f32 -> i32 bit pattern (fmv.x.w)
+    FToBits,
+    /// i32 bit pattern -> f32 (fmv.w.x)
+    BitsToF,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ICmp {
+    Eq,
+    Ne,
+    Slt,
+    Sle,
+    Sgt,
+    Sge,
+    Ult,
+    Uge,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum FCmp {
+    Oeq,
+    One,
+    Olt,
+    Ole,
+    Ogt,
+    Oge,
+}
+
+/// Atomic read-modify-write operations (map to RV32A `amo*.w`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum AtomOp {
+    Add,
+    And,
+    Or,
+    Xor,
+    Min,
+    Max,
+    Exch,
+}
+
+/// Pre-scheduling work-item queries (OpenCL surface; CUDA maps onto these).
+/// Eliminated by the thread-schedule insertion pass (paper §4.2).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum WorkItem {
+    GlobalId,
+    LocalId,
+    GroupId,
+    LocalSize,
+    GlobalSize,
+    NumGroups,
+}
+
+/// Hardware control/status registers. Machine-level CSRs are
+/// always-uniform; `LaneId` is the canonical source of divergence
+/// (paper §4.3.1 "VOLT Divergence Tracker").
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Csr {
+    /// Lane index within the warp — divergent by definition.
+    LaneId,
+    WarpId,
+    CoreId,
+    /// Threads per warp.
+    NumThreads,
+    /// Warps per core.
+    NumWarps,
+    NumCores,
+}
+
+/// IR-level intrinsics (non-terminator).
+#[derive(Clone, PartialEq, Debug)]
+pub enum Intr {
+    /// Work-item query; args: [dim:i32 const].
+    WorkItem(WorkItem),
+    /// CSR read; no args.
+    Csr(Csr),
+    /// Workgroup barrier; args: [] (count resolved at schedule time).
+    Barrier,
+    /// Atomic RMW; args: [ptr, val] -> old value.
+    Atomic(AtomOp),
+    /// Atomic compare-and-swap; args: [ptr, cmp, new] -> old.
+    AtomicCas,
+    /// Warp vote; args: [pred:i1] -> i1.
+    VoteAll,
+    VoteAny,
+    /// Warp ballot; args: [pred:i1] -> i32 mask.
+    Ballot,
+    /// Warp shuffle (indexed); args: [val, src_lane:i32] -> val.
+    Shfl,
+    /// Reconvergence point; no args. Must be the first instruction (after
+    /// phis) of the immediate-post-dominator block of its paired
+    /// `SplitBr`s. Semantics: pop/redirect every IPDOM-stack entry whose
+    /// recorded reconvergence block is this block (see DESIGN.md — this is
+    /// the NVIDIA-SSY-style "reconvergence PC recorded at push" variant of
+    /// the Vortex join).
+    Join,
+    /// Set thread mask; args: [mask:i32]. (`vx_tmc`)
+    Tmc,
+    /// Read active thread mask; -> i32. (`vx_active_threads`)
+    Mask,
+    /// Debug print of an i32/f32 (simulator hook; lowered to a nop-cost op).
+    PrintI,
+    PrintF,
+}
+
+impl Intr {
+    /// Result type, given arg types where needed.
+    pub fn ret_type(&self, args: &[Type]) -> Type {
+        match self {
+            Intr::WorkItem(_) | Intr::Csr(_) => Type::I32,
+            Intr::Barrier | Intr::Tmc | Intr::PrintI | Intr::PrintF => Type::Void,
+            Intr::Atomic(_) | Intr::AtomicCas => Type::I32,
+            Intr::VoteAll | Intr::VoteAny => Type::I1,
+            Intr::Ballot | Intr::Mask => Type::I32,
+            Intr::Shfl => args.first().copied().unwrap_or(Type::I32),
+            Intr::Join => Type::Void,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instructions
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, PartialEq, Debug)]
+pub enum InstKind {
+    Bin {
+        op: BinOp,
+        a: Val,
+        b: Val,
+    },
+    Un {
+        op: UnOp,
+        a: Val,
+    },
+    ICmp {
+        pred: ICmp,
+        a: Val,
+        b: Val,
+    },
+    FCmp {
+        pred: FCmp,
+        a: Val,
+        b: Val,
+    },
+    Select {
+        cond: Val,
+        t: Val,
+        f: Val,
+    },
+    /// Stack allocation of `size` bytes in Private space; value is the
+    /// per-thread pointer.
+    Alloca {
+        size: u32,
+    },
+    Load {
+        ptr: Val,
+    },
+    Store {
+        ptr: Val,
+        val: Val,
+    },
+    /// `base + index*scale + disp` pointer arithmetic.
+    Gep {
+        base: Val,
+        index: Val,
+        scale: u32,
+        disp: i32,
+    },
+    Call {
+        callee: FuncId,
+        args: Vec<Val>,
+    },
+    Intr {
+        intr: Intr,
+        args: Vec<Val>,
+    },
+    Phi {
+        incs: Vec<(BlockId, Val)>,
+    },
+    // ---- terminators ----
+    Br {
+        target: BlockId,
+    },
+    CondBr {
+        cond: Val,
+        t: BlockId,
+        f: BlockId,
+    },
+    /// Divergence split (`vx_split` + fused branch, see DESIGN.md):
+    /// take `then_b` with lanes where cond≠neg, queue `else_b` on the IPDOM
+    /// stack together with the reconvergence block `ipdom` (where the
+    /// matching `Intr::Join` lives).
+    SplitBr {
+        cond: Val,
+        neg: bool,
+        then_b: BlockId,
+        else_b: BlockId,
+        ipdom: BlockId,
+    },
+    /// Divergent-loop predicate (`vx_pred`): continue into `body` with
+    /// tmask &= cond; when the mask empties, restore `mask` and branch to
+    /// `exit`.
+    PredBr {
+        cond: Val,
+        mask: Val,
+        body: BlockId,
+        exit: BlockId,
+    },
+    Ret {
+        val: Option<Val>,
+    },
+    Unreachable,
+}
+
+impl InstKind {
+    pub fn is_terminator(&self) -> bool {
+        matches!(
+            self,
+            InstKind::Br { .. }
+                | InstKind::CondBr { .. }
+                | InstKind::SplitBr { .. }
+                | InstKind::PredBr { .. }
+                | InstKind::Ret { .. }
+                | InstKind::Unreachable
+        )
+    }
+
+    /// Whether this instruction may read or write memory or have other side
+    /// effects (and must not be removed by DCE even if unused).
+    pub fn has_side_effects(&self) -> bool {
+        match self {
+            InstKind::Store { .. } | InstKind::Call { .. } => true,
+            InstKind::Load { .. } => false, // loads are removable if unused
+            InstKind::Intr { intr, .. } => matches!(
+                intr,
+                Intr::Barrier
+                    | Intr::Atomic(_)
+                    | Intr::AtomicCas
+                    | Intr::Join
+                    | Intr::Tmc
+                    | Intr::PrintI
+                    | Intr::PrintF
+            ),
+            k => k.is_terminator(),
+        }
+    }
+
+    /// Operand values (for generic traversal).
+    pub fn operands(&self) -> Vec<Val> {
+        match self {
+            InstKind::Bin { a, b, .. } | InstKind::ICmp { a, b, .. } | InstKind::FCmp { a, b, .. } => {
+                vec![*a, *b]
+            }
+            InstKind::Un { a, .. } => vec![*a],
+            InstKind::Select { cond, t, f } => vec![*cond, *t, *f],
+            InstKind::Alloca { .. } => vec![],
+            InstKind::Load { ptr } => vec![*ptr],
+            InstKind::Store { ptr, val } => vec![*ptr, *val],
+            InstKind::Gep { base, index, .. } => vec![*base, *index],
+            InstKind::Call { args, .. } | InstKind::Intr { args, .. } => args.clone(),
+            InstKind::Phi { incs } => incs.iter().map(|(_, v)| *v).collect(),
+            InstKind::Br { .. } => vec![],
+            InstKind::CondBr { cond, .. } => vec![*cond],
+            InstKind::SplitBr { cond, .. } => vec![*cond],
+            InstKind::PredBr { cond, mask, .. } => vec![*cond, *mask],
+            InstKind::Ret { val } => val.iter().copied().collect(),
+            InstKind::Unreachable => vec![],
+        }
+    }
+
+    /// Apply `f` to every operand in place.
+    pub fn map_operands(&mut self, mut f: impl FnMut(Val) -> Val) {
+        match self {
+            InstKind::Bin { a, b, .. } | InstKind::ICmp { a, b, .. } | InstKind::FCmp { a, b, .. } => {
+                *a = f(*a);
+                *b = f(*b);
+            }
+            InstKind::Un { a, .. } => *a = f(*a),
+            InstKind::Select { cond, t, f: fv } => {
+                *cond = f(*cond);
+                *t = f(*t);
+                *fv = f(*fv);
+            }
+            InstKind::Alloca { .. } => {}
+            InstKind::Load { ptr } => *ptr = f(*ptr),
+            InstKind::Store { ptr, val } => {
+                *ptr = f(*ptr);
+                *val = f(*val);
+            }
+            InstKind::Gep { base, index, .. } => {
+                *base = f(*base);
+                *index = f(*index);
+            }
+            InstKind::Call { args, .. } | InstKind::Intr { args, .. } => {
+                for a in args.iter_mut() {
+                    *a = f(*a);
+                }
+            }
+            InstKind::Phi { incs } => {
+                for (_, v) in incs.iter_mut() {
+                    *v = f(*v);
+                }
+            }
+            InstKind::Br { .. } => {}
+            InstKind::CondBr { cond, .. } => *cond = f(*cond),
+            InstKind::SplitBr { cond, .. } => *cond = f(*cond),
+            InstKind::PredBr { cond, mask, .. } => {
+                *cond = f(*cond);
+                *mask = f(*mask);
+            }
+            InstKind::Ret { val } => {
+                if let Some(v) = val {
+                    *v = f(*v);
+                }
+            }
+            InstKind::Unreachable => {}
+        }
+    }
+
+    /// Successor blocks if this is a terminator.
+    pub fn successors(&self) -> Vec<BlockId> {
+        match self {
+            InstKind::Br { target } => vec![*target],
+            InstKind::CondBr { t, f, .. } => vec![*t, *f],
+            InstKind::SplitBr { then_b, else_b, .. } => vec![*then_b, *else_b],
+            InstKind::PredBr { body, exit, .. } => vec![*body, *exit],
+            _ => vec![],
+        }
+    }
+
+    /// Replace successor `from` with `to` (all occurrences).
+    pub fn replace_successor(&mut self, from: BlockId, to: BlockId) {
+        let repl = |b: &mut BlockId| {
+            if *b == from {
+                *b = to;
+            }
+        };
+        match self {
+            InstKind::Br { target } => repl(target),
+            InstKind::CondBr { t, f, .. } => {
+                repl(t);
+                repl(f);
+            }
+            InstKind::SplitBr {
+                then_b,
+                else_b,
+                ipdom,
+                ..
+            } => {
+                repl(then_b);
+                repl(else_b);
+                repl(ipdom);
+            }
+            InstKind::PredBr { body, exit, .. } => {
+                repl(body);
+                repl(exit);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// An instruction in the arena.
+#[derive(Clone, Debug)]
+pub struct InstData {
+    pub kind: InstKind,
+    pub ty: Type,
+    pub block: BlockId,
+    /// `vortex.uniform` annotation (paper §4.3.1 "Annotation Analysis").
+    pub uniform_ann: bool,
+    /// Source-level name hint (for printing and debugging).
+    pub name: Option<String>,
+    /// Tombstone: true once removed.
+    pub dead: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Blocks / functions / module
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub insts: Vec<InstId>,
+    pub name: String,
+    pub dead: bool,
+}
+
+/// A function parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+    /// Declared or inferred uniform (paper Algorithm 1 / `uniform` keyword).
+    pub uniform: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Linkage {
+    /// Visible entry point (kernels).
+    External,
+    /// Module-internal device function — eligible for Algorithm-1 argument
+    /// refinement.
+    Internal,
+}
+
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub ret: Type,
+    /// Inferred: return value is uniform across the warp.
+    pub ret_uniform: bool,
+    pub is_kernel: bool,
+    pub linkage: Linkage,
+    pub blocks: Vec<Block>,
+    pub insts: Vec<InstData>,
+    pub entry: BlockId,
+    /// Bytes of `__shared__`/`local` memory statically required.
+    pub local_mem_size: u32,
+}
+
+impl Function {
+    pub fn new(name: &str, params: Vec<Param>, ret: Type) -> Function {
+        let mut f = Function {
+            name: name.to_string(),
+            params,
+            ret,
+            ret_uniform: false,
+            is_kernel: false,
+            linkage: Linkage::Internal,
+            blocks: vec![],
+            insts: vec![],
+            entry: BlockId(0),
+            local_mem_size: 0,
+        };
+        f.entry = f.add_block("entry");
+        f
+    }
+
+    pub fn add_block(&mut self, name: &str) -> BlockId {
+        let id = BlockId(self.blocks.len() as u32);
+        self.blocks.push(Block {
+            insts: vec![],
+            name: format!("{}{}", name, id.0),
+            dead: false,
+        });
+        id
+    }
+
+    pub fn inst(&self, id: InstId) -> &InstData {
+        &self.insts[id.idx()]
+    }
+    pub fn inst_mut(&mut self, id: InstId) -> &mut InstData {
+        &mut self.insts[id.idx()]
+    }
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id.idx()]
+    }
+    pub fn block_mut(&mut self, id: BlockId) -> &mut Block {
+        &mut self.blocks[id.idx()]
+    }
+
+    /// Ids of all live blocks, in arena order.
+    pub fn block_ids(&self) -> Vec<BlockId> {
+        (0..self.blocks.len() as u32)
+            .map(BlockId)
+            .filter(|b| !self.blocks[b.idx()].dead)
+            .collect()
+    }
+
+    /// Terminator of a block (panics if missing — verifier enforces).
+    pub fn term(&self, b: BlockId) -> InstId {
+        *self.blocks[b.idx()]
+            .insts
+            .last()
+            .unwrap_or_else(|| panic!("block {} has no terminator", b.0))
+    }
+
+    pub fn succs(&self, b: BlockId) -> Vec<BlockId> {
+        if self.blocks[b.idx()].insts.is_empty() {
+            return vec![];
+        }
+        self.inst(self.term(b)).kind.successors()
+    }
+
+    /// Predecessor map for all blocks.
+    pub fn preds(&self) -> Vec<Vec<BlockId>> {
+        let mut preds = vec![vec![]; self.blocks.len()];
+        for b in self.block_ids() {
+            for s in self.succs(b) {
+                preds[s.idx()].push(b);
+            }
+        }
+        preds
+    }
+
+    /// Append a new instruction to a block. Terminators allowed only at the
+    /// end (caller responsibility; verifier checks).
+    pub fn push_inst(&mut self, b: BlockId, kind: InstKind, ty: Type) -> InstId {
+        let id = InstId(self.insts.len() as u32);
+        self.insts.push(InstData {
+            kind,
+            ty,
+            block: b,
+            uniform_ann: false,
+            name: None,
+            dead: false,
+        });
+        self.blocks[b.idx()].insts.push(id);
+        id
+    }
+
+    /// Insert an instruction at position `pos` within block `b`.
+    pub fn insert_inst(&mut self, b: BlockId, pos: usize, kind: InstKind, ty: Type) -> InstId {
+        let id = InstId(self.insts.len() as u32);
+        self.insts.push(InstData {
+            kind,
+            ty,
+            block: b,
+            uniform_ann: false,
+            name: None,
+            dead: false,
+        });
+        self.blocks[b.idx()].insts.insert(pos, id);
+        id
+    }
+
+    /// Remove an instruction (tombstone + unlink from its block).
+    pub fn remove_inst(&mut self, id: InstId) {
+        let b = self.insts[id.idx()].block;
+        self.blocks[b.idx()].insts.retain(|&i| i != id);
+        self.insts[id.idx()].dead = true;
+    }
+
+    /// Replace every use of value `from` with `to` across the function.
+    pub fn replace_uses(&mut self, from: Val, to: Val) {
+        for inst in self.insts.iter_mut() {
+            if inst.dead {
+                continue;
+            }
+            inst.kind.map_operands(|v| if v == from { to } else { v });
+        }
+    }
+
+    /// Value type of an operand.
+    pub fn val_type(&self, v: Val) -> Type {
+        match v {
+            Val::Inst(i) => self.inst(i).ty,
+            Val::Arg(i) => self.params[i as usize].ty,
+            Val::I(_, t) => t,
+            Val::F(_) => Type::F32,
+            Val::G(_) => Type::Ptr(AddrSpace::Global), // refined via module
+        }
+    }
+
+    /// Reverse post-order over live, reachable blocks starting at entry.
+    pub fn rpo(&self) -> Vec<BlockId> {
+        let mut visited = vec![false; self.blocks.len()];
+        let mut post = vec![];
+        // Iterative DFS with explicit stack of (block, next-successor-index).
+        let mut stack: Vec<(BlockId, usize)> = vec![(self.entry, 0)];
+        visited[self.entry.idx()] = true;
+        while let Some((b, i)) = stack.pop() {
+            let succs = self.succs(b);
+            if i < succs.len() {
+                stack.push((b, i + 1));
+                let s = succs[i];
+                if !visited[s.idx()] {
+                    visited[s.idx()] = true;
+                    stack.push((s, 0));
+                }
+            } else {
+                post.push(b);
+            }
+        }
+        post.reverse();
+        post
+    }
+
+    /// Mark blocks unreachable from entry as dead; drop their instructions.
+    pub fn remove_unreachable(&mut self) {
+        let reach: Vec<BlockId> = self.rpo();
+        let mut live = vec![false; self.blocks.len()];
+        for b in &reach {
+            live[b.idx()] = true;
+        }
+        let dead_blocks: Vec<BlockId> = self
+            .block_ids()
+            .into_iter()
+            .filter(|b| !live[b.idx()])
+            .collect();
+        for b in &dead_blocks {
+            let insts = std::mem::take(&mut self.blocks[b.idx()].insts);
+            for i in insts {
+                self.insts[i.idx()].dead = true;
+            }
+            self.blocks[b.idx()].dead = true;
+        }
+        // Remove phi incomings from now-dead predecessors.
+        if !dead_blocks.is_empty() {
+            let deadset: std::collections::HashSet<BlockId> = dead_blocks.into_iter().collect();
+            for inst in self.insts.iter_mut() {
+                if inst.dead {
+                    continue;
+                }
+                if let InstKind::Phi { incs } = &mut inst.kind {
+                    incs.retain(|(p, _)| !deadset.contains(p));
+                }
+            }
+        }
+    }
+
+    /// Split the edge `a -> b`, inserting a fresh block containing a single
+    /// `Br b`. Phi incomings in `b` from `a` are rewritten to the new block.
+    pub fn split_edge(&mut self, a: BlockId, b: BlockId) -> BlockId {
+        let nb = self.add_block("crit");
+        self.push_inst(nb, InstKind::Br { target: b }, Type::Void);
+        let t = self.term(a);
+        self.inst_mut(t).kind.replace_successor(b, nb);
+        // Fix phis in b.
+        let insts = self.blocks[b.idx()].insts.clone();
+        for i in insts {
+            if let InstKind::Phi { incs } = &mut self.insts[i.idx()].kind {
+                for (p, _) in incs.iter_mut() {
+                    if *p == a {
+                        *p = nb;
+                    }
+                }
+            } else {
+                break; // phis are a prefix of the block
+            }
+        }
+        nb
+    }
+
+    /// Number of live instructions.
+    pub fn num_insts(&self) -> usize {
+        self.insts.iter().filter(|i| !i.dead).count()
+    }
+
+    /// Build use lists: for every inst id, the list of (user inst id).
+    pub fn uses(&self) -> HashMap<InstId, Vec<InstId>> {
+        let mut map: HashMap<InstId, Vec<InstId>> = HashMap::new();
+        for (idx, inst) in self.insts.iter().enumerate() {
+            if inst.dead {
+                continue;
+            }
+            let user = InstId(idx as u32);
+            for op in inst.kind.operands() {
+                if let Val::Inst(def) = op {
+                    map.entry(def).or_default().push(user);
+                }
+            }
+        }
+        map
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Globals and module
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Global {
+    pub name: String,
+    pub space: AddrSpace,
+    pub size: u32,
+    pub align: u32,
+    /// Optional initializer bytes (Const/Global space only).
+    pub init: Option<Vec<u8>>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Module {
+    pub name: String,
+    pub funcs: Vec<Function>,
+    pub globals: Vec<Global>,
+}
+
+impl Module {
+    pub fn new(name: &str) -> Module {
+        Module {
+            name: name.to_string(),
+            funcs: vec![],
+            globals: vec![],
+        }
+    }
+
+    pub fn add_func(&mut self, f: Function) -> FuncId {
+        self.funcs.push(f);
+        FuncId(self.funcs.len() as u32 - 1)
+    }
+
+    pub fn add_global(&mut self, g: Global) -> GlobalId {
+        self.globals.push(g);
+        GlobalId(self.globals.len() as u32 - 1)
+    }
+
+    pub fn func(&self, id: FuncId) -> &Function {
+        &self.funcs[id.idx()]
+    }
+    pub fn func_mut(&mut self, id: FuncId) -> &mut Function {
+        &mut self.funcs[id.idx()]
+    }
+
+    pub fn find_func(&self, name: &str) -> Option<FuncId> {
+        self.funcs
+            .iter()
+            .position(|f| f.name == name)
+            .map(|i| FuncId(i as u32))
+    }
+
+    pub fn kernels(&self) -> Vec<FuncId> {
+        (0..self.funcs.len() as u32)
+            .map(FuncId)
+            .filter(|f| self.funcs[f.idx()].is_kernel)
+            .collect()
+    }
+
+    pub fn global_ptr_type(&self, g: GlobalId) -> Type {
+        Type::Ptr(self.globals[g.idx()].space)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Convenience builder that appends instructions to a current block.
+pub struct Builder<'a> {
+    pub f: &'a mut Function,
+    pub cur: BlockId,
+}
+
+impl<'a> Builder<'a> {
+    pub fn new(f: &'a mut Function) -> Builder<'a> {
+        let entry = f.entry;
+        Builder { f, cur: entry }
+    }
+
+    pub fn at(f: &'a mut Function, b: BlockId) -> Builder<'a> {
+        Builder { f, cur: b }
+    }
+
+    pub fn set_block(&mut self, b: BlockId) {
+        self.cur = b;
+    }
+
+    pub fn block(&mut self, name: &str) -> BlockId {
+        self.f.add_block(name)
+    }
+
+    fn push(&mut self, kind: InstKind, ty: Type) -> Val {
+        Val::Inst(self.f.push_inst(self.cur, kind, ty))
+    }
+
+    pub fn bin(&mut self, op: BinOp, a: Val, b: Val) -> Val {
+        let ty = if op.is_float() { Type::F32 } else { self.f.val_type(a) };
+        self.push(InstKind::Bin { op, a, b }, ty)
+    }
+    pub fn add(&mut self, a: Val, b: Val) -> Val {
+        self.bin(BinOp::Add, a, b)
+    }
+    pub fn sub(&mut self, a: Val, b: Val) -> Val {
+        self.bin(BinOp::Sub, a, b)
+    }
+    pub fn mul(&mut self, a: Val, b: Val) -> Val {
+        self.bin(BinOp::Mul, a, b)
+    }
+    pub fn un(&mut self, op: UnOp, a: Val) -> Val {
+        let ty = match op {
+            UnOp::SiToFp | UnOp::FNeg | UnOp::FSqrt | UnOp::FAbs | UnOp::FExp | UnOp::FLog
+            | UnOp::FFloor | UnOp::BitsToF => Type::F32,
+            UnOp::FpToSi | UnOp::ZExt | UnOp::Not | UnOp::FToBits => Type::I32,
+            UnOp::Trunc => Type::I1,
+        };
+        self.push(InstKind::Un { op, a }, ty)
+    }
+    pub fn icmp(&mut self, pred: ICmp, a: Val, b: Val) -> Val {
+        self.push(InstKind::ICmp { pred, a, b }, Type::I1)
+    }
+    pub fn fcmp(&mut self, pred: FCmp, a: Val, b: Val) -> Val {
+        self.push(InstKind::FCmp { pred, a, b }, Type::I1)
+    }
+    pub fn select(&mut self, cond: Val, t: Val, f: Val) -> Val {
+        let ty = self.f.val_type(t);
+        self.push(InstKind::Select { cond, t, f }, ty)
+    }
+    pub fn alloca(&mut self, size: u32) -> Val {
+        self.push(InstKind::Alloca { size }, Type::Ptr(AddrSpace::Private))
+    }
+    pub fn load(&mut self, ptr: Val, ty: Type) -> Val {
+        self.push(InstKind::Load { ptr }, ty)
+    }
+    pub fn store(&mut self, ptr: Val, val: Val) {
+        self.push(InstKind::Store { ptr, val }, Type::Void);
+    }
+    pub fn gep(&mut self, base: Val, index: Val, scale: u32) -> Val {
+        let ty = self.f.val_type(base);
+        self.push(
+            InstKind::Gep {
+                base,
+                index,
+                scale,
+                disp: 0,
+            },
+            ty,
+        )
+    }
+    pub fn call(&mut self, callee: FuncId, args: Vec<Val>, ret: Type) -> Val {
+        self.push(InstKind::Call { callee, args }, ret)
+    }
+    pub fn intr(&mut self, intr: Intr, args: Vec<Val>) -> Val {
+        let at: Vec<Type> = args.iter().map(|&a| self.f.val_type(a)).collect();
+        let ty = intr.ret_type(&at);
+        self.push(InstKind::Intr { intr, args }, ty)
+    }
+    pub fn phi(&mut self, ty: Type, incs: Vec<(BlockId, Val)>) -> Val {
+        // Phis must be at the head of the block.
+        let id = self.f.insert_inst(self.cur, 0, InstKind::Phi { incs }, ty);
+        Val::Inst(id)
+    }
+    pub fn br(&mut self, target: BlockId) {
+        self.push(InstKind::Br { target }, Type::Void);
+    }
+    pub fn cond_br(&mut self, cond: Val, t: BlockId, f: BlockId) {
+        self.push(InstKind::CondBr { cond, t, f }, Type::Void);
+    }
+    pub fn split_br(&mut self, cond: Val, then_b: BlockId, else_b: BlockId, ipdom: BlockId) {
+        self.push(
+            InstKind::SplitBr {
+                cond,
+                neg: false,
+                then_b,
+                else_b,
+                ipdom,
+            },
+            Type::Void,
+        );
+    }
+    pub fn pred_br(&mut self, cond: Val, mask: Val, body: BlockId, exit: BlockId) {
+        self.push(
+            InstKind::PredBr {
+                cond,
+                mask,
+                body,
+                exit,
+            },
+            Type::Void,
+        );
+    }
+    pub fn ret(&mut self, val: Option<Val>) {
+        self.push(InstKind::Ret { val }, Type::Void);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query_cfg() {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let then_b;
+        let else_b;
+        let join;
+        {
+            let mut b = Builder::new(&mut f);
+            then_b = b.block("then");
+            else_b = b.block("else");
+            join = b.block("join");
+            let c = b.icmp(ICmp::Slt, Val::ci(1), Val::ci(2));
+            b.cond_br(c, then_b, else_b);
+            b.set_block(then_b);
+            b.br(join);
+            b.set_block(else_b);
+            b.br(join);
+            b.set_block(join);
+            b.ret(None);
+        }
+        assert_eq!(f.succs(entry), vec![then_b, else_b]);
+        let preds = f.preds();
+        assert_eq!(preds[join.idx()].len(), 2);
+        let rpo = f.rpo();
+        assert_eq!(rpo[0], entry);
+        assert_eq!(*rpo.last().unwrap(), join);
+    }
+
+    #[test]
+    fn replace_uses_and_removal() {
+        let mut f = Function::new("t", vec![Param { name: "x".into(), ty: Type::I32, uniform: false }], Type::I32);
+        let (v, w);
+        {
+            let mut b = Builder::new(&mut f);
+            v = b.add(Val::Arg(0), Val::ci(1));
+            w = b.mul(v, v);
+            b.ret(Some(w));
+        }
+        f.replace_uses(v, Val::ci(7));
+        if let Val::Inst(wi) = w {
+            assert_eq!(f.inst(wi).kind.operands(), vec![Val::ci(7), Val::ci(7)]);
+        } else {
+            panic!()
+        }
+        if let Val::Inst(vi) = v {
+            f.remove_inst(vi);
+            assert!(f.inst(vi).dead);
+        }
+        assert_eq!(f.num_insts(), 2);
+    }
+
+    #[test]
+    fn split_edge_fixes_phis() {
+        let mut f = Function::new("t", vec![], Type::I32);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        let join = f.add_block("j");
+        {
+            let mut b = Builder::at(&mut f, entry);
+            let c = b.icmp(ICmp::Eq, Val::ci(0), Val::ci(0));
+            b.cond_br(c, a, join);
+            b.set_block(a);
+            b.br(join);
+            b.set_block(join);
+            let p = b.phi(Type::I32, vec![(entry, Val::ci(1)), (a, Val::ci(2))]);
+            b.ret(Some(p));
+        }
+        let nb = f.split_edge(entry, join);
+        assert!(f.succs(entry).contains(&nb));
+        // Phi incoming from entry now comes from nb.
+        let phi_id = f.blocks[join.idx()].insts[0];
+        if let InstKind::Phi { incs } = &f.inst(phi_id).kind {
+            assert!(incs.iter().any(|(p, _)| *p == nb));
+            assert!(!incs.iter().any(|(p, _)| *p == entry));
+        } else {
+            panic!()
+        }
+    }
+}

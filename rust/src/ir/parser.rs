@@ -1,0 +1,636 @@
+//! Parser for the textual IR emitted by [`super::printer`]. Round-trips the
+//! printer's output; used by tests, golden files, and the `volt ir` CLI.
+
+use super::*;
+use std::collections::HashMap;
+
+pub fn parse_module(src: &str) -> Result<Module, String> {
+    let mut m = Module::new("parsed");
+    let mut lines = src.lines().map(str::trim).filter(|l| !l.is_empty() && !l.starts_with('#')).peekable();
+    while let Some(&line) = lines.peek() {
+        if let Some(rest) = line.strip_prefix("module ") {
+            m.name = rest.trim().trim_matches('"').to_string();
+            lines.next();
+        } else if line.starts_with("global ") {
+            m.globals.push(parse_global(line)?);
+            lines.next();
+        } else if line.starts_with("func ") {
+            let mut body: Vec<String> = vec![lines.next().unwrap().to_string()];
+            for l in lines.by_ref() {
+                body.push(l.to_string());
+                if l == "}" {
+                    break;
+                }
+            }
+            m.funcs.push(parse_function(&body)?);
+        } else {
+            return Err(format!("unexpected line: {line}"));
+        }
+    }
+    Ok(m)
+}
+
+fn parse_global(line: &str) -> Result<Global, String> {
+    // global @name space size=N align=N [init=hex]
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    let name = toks
+        .get(1)
+        .and_then(|t| t.strip_prefix('@'))
+        .ok_or("bad global name")?
+        .to_string();
+    let space = parse_space(toks.get(2).copied().unwrap_or(""))?;
+    let mut size = 0;
+    let mut align = 4;
+    let mut init = None;
+    for t in &toks[3..] {
+        if let Some(v) = t.strip_prefix("size=") {
+            size = v.parse().map_err(|_| "bad size")?;
+        } else if let Some(v) = t.strip_prefix("align=") {
+            align = v.parse().map_err(|_| "bad align")?;
+        } else if let Some(v) = t.strip_prefix("init=") {
+            let mut bytes = vec![];
+            let chars: Vec<char> = v.chars().collect();
+            for ch in chars.chunks(2) {
+                let s: String = ch.iter().collect();
+                bytes.push(u8::from_str_radix(&s, 16).map_err(|_| "bad init hex")?);
+            }
+            init = Some(bytes);
+        }
+    }
+    Ok(Global {
+        name,
+        space,
+        size,
+        align,
+        init,
+    })
+}
+
+fn parse_space(s: &str) -> Result<AddrSpace, String> {
+    match s {
+        "global" => Ok(AddrSpace::Global),
+        "local" => Ok(AddrSpace::Local),
+        "const" => Ok(AddrSpace::Const),
+        "private" => Ok(AddrSpace::Private),
+        _ => Err(format!("bad address space: {s}")),
+    }
+}
+
+fn parse_type(s: &str) -> Result<Type, String> {
+    match s {
+        "void" => Ok(Type::Void),
+        "i1" => Ok(Type::I1),
+        "i32" => Ok(Type::I32),
+        "f32" => Ok(Type::F32),
+        _ => {
+            if let Some(sp) = s.strip_prefix("ptr.") {
+                Ok(Type::Ptr(parse_space(sp)?))
+            } else {
+                Err(format!("bad type: {s}"))
+            }
+        }
+    }
+}
+
+struct FuncParser {
+    inst_map: HashMap<u32, InstId>,
+    params: Vec<Param>,
+}
+
+impl FuncParser {
+    fn val(&self, s: &str) -> Result<Val, String> {
+        let s = s.trim().trim_end_matches(',');
+        if let Some(rest) = s.strip_prefix("%i") {
+            let n: u32 = rest.parse().map_err(|_| format!("bad inst ref {s}"))?;
+            return self
+                .inst_map
+                .get(&n)
+                .map(|&i| Val::Inst(i))
+                .ok_or(format!("undefined %i{n}"));
+        }
+        if let Some(name) = s.strip_prefix('%') {
+            let idx = self
+                .params
+                .iter()
+                .position(|p| p.name == name)
+                .ok_or(format!("unknown arg %{name}"))?;
+            return Ok(Val::Arg(idx as u32));
+        }
+        if s == "true" {
+            return Ok(Val::cb(true));
+        }
+        if s == "false" {
+            return Ok(Val::cb(false));
+        }
+        if let Some(hexs) = s.strip_prefix("f0x") {
+            let b = u32::from_str_radix(hexs, 16).map_err(|_| format!("bad float {s}"))?;
+            return Ok(Val::F(b));
+        }
+        if let Some(g) = s.strip_prefix("@g") {
+            let n: u32 = g.parse().map_err(|_| format!("bad global ref {s}"))?;
+            return Ok(Val::G(GlobalId(n)));
+        }
+        s.parse::<i64>()
+            .map(Val::ci)
+            .map_err(|_| format!("bad value: {s}"))
+    }
+}
+
+pub fn parse_function(lines: &[String]) -> Result<Function, String> {
+    let header = &lines[0];
+    // func @name(params) -> ty [kernel] [internal] [retuniform] [localmem=N] {
+    let open = header.find('(').ok_or("missing (")?;
+    let close = header.rfind(')').ok_or("missing )")?;
+    let name = header[..open]
+        .trim()
+        .strip_prefix("func @")
+        .ok_or("bad func header")?
+        .to_string();
+    let mut params = vec![];
+    let ps = header[open + 1..close].trim();
+    if !ps.is_empty() {
+        for p in ps.split(',') {
+            let toks: Vec<&str> = p.trim().split_whitespace().collect();
+            let ty = parse_type(toks[0])?;
+            let pname = toks
+                .get(1)
+                .and_then(|t| t.strip_prefix('%'))
+                .ok_or("bad param")?
+                .to_string();
+            let uniform = toks.contains(&"uniform");
+            params.push(Param {
+                name: pname,
+                ty,
+                uniform,
+            });
+        }
+    }
+    let tail = &header[close + 1..];
+    let tail = tail.trim().strip_prefix("->").ok_or("missing ->")?.trim();
+    let ttoks: Vec<&str> = tail.trim_end_matches('{').split_whitespace().collect();
+    let ret = parse_type(ttoks[0])?;
+    let is_kernel = ttoks.contains(&"kernel");
+    let internal = ttoks.contains(&"internal");
+    let ret_uniform = ttoks.contains(&"retuniform");
+    let local_mem_size = ttoks
+        .iter()
+        .find_map(|t| t.strip_prefix("localmem="))
+        .map(|v| v.parse().unwrap_or(0))
+        .unwrap_or(0);
+
+    // Pre-scan: block labels and instruction result labels, in order.
+    let body = &lines[1..lines.len() - 1]; // strip trailing '}'
+    let mut max_block = 0u32;
+    for l in body {
+        if let Some(label) = l.strip_suffix(':') {
+            if let Some(n) = label.strip_prefix('b') {
+                let n: u32 = n.parse().map_err(|_| format!("bad block label {l}"))?;
+                max_block = max_block.max(n);
+            }
+        }
+    }
+    let mut f = Function {
+        name,
+        params: params.clone(),
+        ret,
+        ret_uniform,
+        is_kernel,
+        linkage: if internal {
+            Linkage::Internal
+        } else {
+            Linkage::External
+        },
+        blocks: (0..=max_block)
+            .map(|i| Block {
+                insts: vec![],
+                name: format!("b{i}"),
+                dead: true, // resurrected when the label appears
+            })
+            .collect(),
+        insts: vec![],
+        entry: BlockId(0),
+        local_mem_size,
+    };
+    let mut fp = FuncParser {
+        inst_map: HashMap::new(),
+        params,
+    };
+    // First pass: create placeholder instructions in block order.
+    let mut cur = BlockId(0);
+    let mut inst_lines: Vec<(InstId, String)> = vec![];
+    for l in body {
+        if let Some(label) = l.strip_suffix(':') {
+            let n: u32 = label
+                .strip_prefix('b')
+                .ok_or("bad label")?
+                .parse()
+                .map_err(|_| "bad label")?;
+            cur = BlockId(n);
+            f.blocks[cur.idx()].dead = false;
+            continue;
+        }
+        // result label?
+        let (label, ty, rest) = if l.starts_with("%i") {
+            let eq = l.find('=').ok_or("missing =")?;
+            let lhs = l[..eq].trim();
+            let colon = lhs.find(':').ok_or("missing result type")?;
+            let n: u32 = lhs[2..colon].parse().map_err(|_| "bad result label")?;
+            let ty = parse_type(&lhs[colon + 1..])?;
+            (Some(n), ty, l[eq + 1..].trim().to_string())
+        } else {
+            (None, Type::Void, l.to_string())
+        };
+        let id = f.push_inst(cur, InstKind::Unreachable, ty);
+        if let Some(n) = label {
+            fp.inst_map.insert(n, id);
+        }
+        inst_lines.push((id, rest));
+    }
+    // Second pass: parse kinds.
+    for (id, rest) in inst_lines {
+        let uniform_ann = rest.ends_with("!uniform");
+        let rest = rest.trim_end_matches("!uniform").trim();
+        let kind = parse_kind(&fp, rest)?;
+        let inst = f.inst_mut(id);
+        inst.kind = kind;
+        inst.uniform_ann = uniform_ann;
+    }
+    Ok(f)
+}
+
+fn parse_block_ref(s: &str) -> Result<BlockId, String> {
+    s.trim()
+        .trim_end_matches(',')
+        .strip_prefix('b')
+        .and_then(|n| n.parse().ok())
+        .map(BlockId)
+        .ok_or(format!("bad block ref {s}"))
+}
+
+fn parse_kind(fp: &FuncParser, s: &str) -> Result<InstKind, String> {
+    let (op, rest) = match s.find(' ') {
+        Some(i) => (&s[..i], s[i + 1..].trim()),
+        None => (s, ""),
+    };
+    let args = |rest: &str| -> Vec<String> {
+        if rest.is_empty() {
+            vec![]
+        } else {
+            rest.split(',').map(|t| t.trim().to_string()).collect()
+        }
+    };
+    if let Some(bop) = op.strip_prefix("bin.") {
+        let a = args(rest);
+        let opk = match bop {
+            "add" => BinOp::Add,
+            "sub" => BinOp::Sub,
+            "mul" => BinOp::Mul,
+            "sdiv" => BinOp::SDiv,
+            "srem" => BinOp::SRem,
+            "udiv" => BinOp::UDiv,
+            "urem" => BinOp::URem,
+            "and" => BinOp::And,
+            "or" => BinOp::Or,
+            "xor" => BinOp::Xor,
+            "shl" => BinOp::Shl,
+            "lshr" => BinOp::LShr,
+            "ashr" => BinOp::AShr,
+            "smin" => BinOp::SMin,
+            "smax" => BinOp::SMax,
+            "fadd" => BinOp::FAdd,
+            "fsub" => BinOp::FSub,
+            "fmul" => BinOp::FMul,
+            "fdiv" => BinOp::FDiv,
+            "fmin" => BinOp::FMin,
+            "fmax" => BinOp::FMax,
+            _ => return Err(format!("bad binop {bop}")),
+        };
+        return Ok(InstKind::Bin {
+            op: opk,
+            a: fp.val(&a[0])?,
+            b: fp.val(&a[1])?,
+        });
+    }
+    if let Some(uop) = op.strip_prefix("un.") {
+        let opk = match uop {
+            "not" => UnOp::Not,
+            "fneg" => UnOp::FNeg,
+            "fsqrt" => UnOp::FSqrt,
+            "fabs" => UnOp::FAbs,
+            "fexp" => UnOp::FExp,
+            "flog" => UnOp::FLog,
+            "ffloor" => UnOp::FFloor,
+            "sitofp" => UnOp::SiToFp,
+            "fptosi" => UnOp::FpToSi,
+            "zext" => UnOp::ZExt,
+            "trunc" => UnOp::Trunc,
+            "ftobits" => UnOp::FToBits,
+            "bitstof" => UnOp::BitsToF,
+            _ => return Err(format!("bad unop {uop}")),
+        };
+        return Ok(InstKind::Un {
+            op: opk,
+            a: fp.val(rest)?,
+        });
+    }
+    if let Some(p) = op.strip_prefix("icmp.") {
+        let a = args(rest);
+        let pred = match p {
+            "eq" => ICmp::Eq,
+            "ne" => ICmp::Ne,
+            "slt" => ICmp::Slt,
+            "sle" => ICmp::Sle,
+            "sgt" => ICmp::Sgt,
+            "sge" => ICmp::Sge,
+            "ult" => ICmp::Ult,
+            "uge" => ICmp::Uge,
+            _ => return Err(format!("bad icmp {p}")),
+        };
+        return Ok(InstKind::ICmp {
+            pred,
+            a: fp.val(&a[0])?,
+            b: fp.val(&a[1])?,
+        });
+    }
+    if let Some(p) = op.strip_prefix("fcmp.") {
+        let a = args(rest);
+        let pred = match p {
+            "oeq" => FCmp::Oeq,
+            "one" => FCmp::One,
+            "olt" => FCmp::Olt,
+            "ole" => FCmp::Ole,
+            "ogt" => FCmp::Ogt,
+            "oge" => FCmp::Oge,
+            _ => return Err(format!("bad fcmp {p}")),
+        };
+        return Ok(InstKind::FCmp {
+            pred,
+            a: fp.val(&a[0])?,
+            b: fp.val(&a[1])?,
+        });
+    }
+    match op {
+        "select" => {
+            let a = args(rest);
+            Ok(InstKind::Select {
+                cond: fp.val(&a[0])?,
+                t: fp.val(&a[1])?,
+                f: fp.val(&a[2])?,
+            })
+        }
+        "alloca" => Ok(InstKind::Alloca {
+            size: rest.parse().map_err(|_| "bad alloca size")?,
+        }),
+        "load" => Ok(InstKind::Load { ptr: fp.val(rest)? }),
+        "store" => {
+            let a = args(rest);
+            Ok(InstKind::Store {
+                ptr: fp.val(&a[0])?,
+                val: fp.val(&a[1])?,
+            })
+        }
+        "gep" => {
+            let a = args(rest);
+            Ok(InstKind::Gep {
+                base: fp.val(&a[0])?,
+                index: fp.val(&a[1])?,
+                scale: a[2].parse().map_err(|_| "bad scale")?,
+                disp: a[3].parse().map_err(|_| "bad disp")?,
+            })
+        }
+        "call" => {
+            let open = rest.find('(').ok_or("bad call")?;
+            let close = rest.rfind(')').ok_or("bad call")?;
+            let fid: u32 = rest[..open]
+                .trim()
+                .strip_prefix("@f")
+                .ok_or("bad callee")?
+                .parse()
+                .map_err(|_| "bad callee id")?;
+            let inner = rest[open + 1..close].trim();
+            let mut vargs = vec![];
+            if !inner.is_empty() {
+                for a in inner.split(',') {
+                    vargs.push(fp.val(a)?);
+                }
+            }
+            Ok(InstKind::Call {
+                callee: FuncId(fid),
+                args: vargs,
+            })
+        }
+        "phi" => {
+            // phi [b0: v], [b1: v]
+            let mut incs = vec![];
+            for part in rest.split("],") {
+                let part = part.trim().trim_start_matches('[').trim_end_matches(']');
+                let colon = part.find(':').ok_or("bad phi")?;
+                let b = parse_block_ref(&part[..colon])?;
+                let v = fp.val(&part[colon + 1..])?;
+                incs.push((b, v));
+            }
+            Ok(InstKind::Phi { incs })
+        }
+        "br" => Ok(InstKind::Br {
+            target: parse_block_ref(rest)?,
+        }),
+        "condbr" => {
+            let a = args(rest);
+            Ok(InstKind::CondBr {
+                cond: fp.val(&a[0])?,
+                t: parse_block_ref(&a[1])?,
+                f: parse_block_ref(&a[2])?,
+            })
+        }
+        "splitbr" => {
+            let a = args(rest);
+            Ok(InstKind::SplitBr {
+                cond: fp.val(&a[0])?,
+                neg: a[1] == "neg",
+                then_b: parse_block_ref(&a[2])?,
+                else_b: parse_block_ref(&a[3])?,
+                ipdom: parse_block_ref(&a[4])?,
+            })
+        }
+        "predbr" => {
+            let a = args(rest);
+            Ok(InstKind::PredBr {
+                cond: fp.val(&a[0])?,
+                mask: fp.val(&a[1])?,
+                body: parse_block_ref(&a[2])?,
+                exit: parse_block_ref(&a[3])?,
+            })
+        }
+        "ret" => {
+            if rest.is_empty() {
+                Ok(InstKind::Ret { val: None })
+            } else {
+                Ok(InstKind::Ret {
+                    val: Some(fp.val(rest)?),
+                })
+            }
+        }
+        "unreachable" => Ok(InstKind::Unreachable),
+        _ => {
+            if let Some(iname) = op.strip_prefix("intr.") {
+                let a = args(rest);
+                let mut vargs = vec![];
+                for x in &a {
+                    vargs.push(fp.val(x)?);
+                }
+                let intr = match iname {
+                    "barrier" => Intr::Barrier,
+                    "atomic.cas" => Intr::AtomicCas,
+                    "vote.all" => Intr::VoteAll,
+                    "vote.any" => Intr::VoteAny,
+                    "ballot" => Intr::Ballot,
+                    "shfl" => Intr::Shfl,
+                    "join" => Intr::Join,
+                    "tmc" => Intr::Tmc,
+                    "mask" => Intr::Mask,
+                    "printi" => Intr::PrintI,
+                    "printf" => Intr::PrintF,
+                    _ => {
+                        if let Some(w) = iname.strip_prefix("workitem.") {
+                            Intr::WorkItem(match w {
+                                "global_id" => WorkItem::GlobalId,
+                                "local_id" => WorkItem::LocalId,
+                                "group_id" => WorkItem::GroupId,
+                                "local_size" => WorkItem::LocalSize,
+                                "global_size" => WorkItem::GlobalSize,
+                                "num_groups" => WorkItem::NumGroups,
+                                _ => return Err(format!("bad workitem {w}")),
+                            })
+                        } else if let Some(c) = iname.strip_prefix("csr.") {
+                            Intr::Csr(match c {
+                                "lane_id" => Csr::LaneId,
+                                "warp_id" => Csr::WarpId,
+                                "core_id" => Csr::CoreId,
+                                "num_threads" => Csr::NumThreads,
+                                "num_warps" => Csr::NumWarps,
+                                "num_cores" => Csr::NumCores,
+                                _ => return Err(format!("bad csr {c}")),
+                            })
+                        } else if let Some(at) = iname.strip_prefix("atomic.") {
+                            Intr::Atomic(match at {
+                                "add" => AtomOp::Add,
+                                "and" => AtomOp::And,
+                                "or" => AtomOp::Or,
+                                "xor" => AtomOp::Xor,
+                                "min" => AtomOp::Min,
+                                "max" => AtomOp::Max,
+                                "exch" => AtomOp::Exch,
+                                _ => return Err(format!("bad atomic {at}")),
+                            })
+                        } else {
+                            return Err(format!("bad intrinsic {iname}"));
+                        }
+                    }
+                };
+                return Ok(InstKind::Intr { intr, args: vargs });
+            }
+            Err(format!("unknown instruction: {s}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::{print_function, print_module};
+
+    #[test]
+    fn round_trip_function() {
+        let src = r#"
+func @k(ptr.global %x uniform, i32 %n) -> void kernel {
+b0:
+  %i0:i32 = intr.workitem.global_id 0
+  %i1:i1 = icmp.slt %i0, %n
+  condbr %i1, b1, b2
+b1:
+  %i3:ptr.global = gep %x, %i0, 4, 0
+  %i4:f32 = load %i3
+  %i5:f32 = bin.fmul %i4, f0x40000000
+  store %i3, %i5
+  br b2
+b2:
+  ret
+}
+"#;
+        let m = parse_module(src).unwrap();
+        assert_eq!(m.funcs.len(), 1);
+        let f = &m.funcs[0];
+        assert!(f.is_kernel);
+        assert_eq!(f.params.len(), 2);
+        assert!(f.params[0].uniform);
+        let printed = print_function(f);
+        // Re-parse the printed form and print again: must be identical.
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(print_function(&m2.funcs[0]), printed);
+    }
+
+    #[test]
+    fn round_trip_module_with_globals() {
+        let src = r#"
+module "test"
+global @lut const size=8 align=4 init=0102030405060708
+func @f(i32 %a) -> i32 internal {
+b0:
+  %i0:i32 = bin.add %a, 1
+  ret %i0
+}
+"#;
+        let m = parse_module(src).unwrap();
+        assert_eq!(m.globals.len(), 1);
+        assert_eq!(m.globals[0].init.as_ref().unwrap().len(), 8);
+        let printed = print_module(&m);
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(print_module(&m2), printed);
+    }
+
+    #[test]
+    fn parses_divergence_ops() {
+        let src = r#"
+func @d(i32 %n) -> void {
+b0:
+  %i0:i1 = icmp.slt 1, %n
+  splitbr %i0, pos, b1, b2, b3
+b1:
+  br b3
+b2:
+  br b3
+b3:
+  intr.join
+  ret
+}
+"#;
+        let m = parse_module(src).unwrap();
+        let f = &m.funcs[0];
+        let printed = print_function(f);
+        assert!(printed.contains("splitbr %i0, pos, b1, b2, b3"));
+        assert!(printed.contains("intr.join"));
+    }
+
+    #[test]
+    fn parses_phi_and_loop() {
+        let src = r#"
+func @l(i32 %n) -> i32 {
+b0:
+  br b1
+b1:
+  %i1:i32 = phi [b0: 0], [b2: %i3]
+  %i2:i1 = icmp.slt %i1, %n
+  condbr %i2, b2, b3
+b2:
+  %i3:i32 = bin.add %i1, 1
+  br b1
+b3:
+  ret %i1
+}
+"#;
+        let m = parse_module(src).unwrap();
+        let printed = print_function(&m.funcs[0]);
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(print_function(&m2.funcs[0]), printed);
+    }
+}

@@ -1,0 +1,367 @@
+//! Textual IR printer. The syntax is regular and round-trips through
+//! [`super::parser`]; it is the `volt ir` CLI output and the substrate for
+//! golden tests.
+
+use super::*;
+use std::fmt::Write;
+
+pub fn print_module(m: &Module) -> String {
+    let mut s = String::new();
+    writeln!(s, "module \"{}\"", m.name).unwrap();
+    for (i, g) in m.globals.iter().enumerate() {
+        write!(
+            s,
+            "global @{} {} size={} align={}",
+            g.name,
+            space_name(g.space),
+            g.size,
+            g.align
+        )
+        .unwrap();
+        if let Some(init) = &g.init {
+            write!(s, " init=").unwrap();
+            for b in init {
+                write!(s, "{:02x}", b).unwrap();
+            }
+        }
+        writeln!(s).unwrap();
+        let _ = i;
+    }
+    for f in &m.funcs {
+        s.push_str(&print_function(f));
+    }
+    s
+}
+
+pub fn space_name(sp: AddrSpace) -> &'static str {
+    match sp {
+        AddrSpace::Global => "global",
+        AddrSpace::Local => "local",
+        AddrSpace::Const => "const",
+        AddrSpace::Private => "private",
+    }
+}
+
+pub fn type_name(t: Type) -> String {
+    match t {
+        Type::Void => "void".into(),
+        Type::I1 => "i1".into(),
+        Type::I32 => "i32".into(),
+        Type::F32 => "f32".into(),
+        Type::Ptr(sp) => format!("ptr.{}", space_name(sp)),
+    }
+}
+
+fn val_str(f: &Function, v: Val) -> String {
+    match v {
+        Val::Inst(i) => format!("%i{}", i.0),
+        Val::Arg(i) => format!("%{}", f.params[i as usize].name),
+        Val::I(x, Type::I1) => if x != 0 { "true".into() } else { "false".into() },
+        Val::I(x, _) => format!("{}", x),
+        Val::F(b) => format!("f0x{:08x}", b),
+        Val::G(g) => format!("@g{}", g.0),
+    }
+}
+
+fn bin_name(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "add",
+        BinOp::Sub => "sub",
+        BinOp::Mul => "mul",
+        BinOp::SDiv => "sdiv",
+        BinOp::SRem => "srem",
+        BinOp::UDiv => "udiv",
+        BinOp::URem => "urem",
+        BinOp::And => "and",
+        BinOp::Or => "or",
+        BinOp::Xor => "xor",
+        BinOp::Shl => "shl",
+        BinOp::LShr => "lshr",
+        BinOp::AShr => "ashr",
+        BinOp::SMin => "smin",
+        BinOp::SMax => "smax",
+        BinOp::FAdd => "fadd",
+        BinOp::FSub => "fsub",
+        BinOp::FMul => "fmul",
+        BinOp::FDiv => "fdiv",
+        BinOp::FMin => "fmin",
+        BinOp::FMax => "fmax",
+    }
+}
+
+fn un_name(op: UnOp) -> &'static str {
+    match op {
+        UnOp::Not => "not",
+        UnOp::FNeg => "fneg",
+        UnOp::FSqrt => "fsqrt",
+        UnOp::FAbs => "fabs",
+        UnOp::FExp => "fexp",
+        UnOp::FLog => "flog",
+        UnOp::FFloor => "ffloor",
+        UnOp::SiToFp => "sitofp",
+        UnOp::FpToSi => "fptosi",
+        UnOp::ZExt => "zext",
+        UnOp::Trunc => "trunc",
+        UnOp::FToBits => "ftobits",
+        UnOp::BitsToF => "bitstof",
+    }
+}
+
+fn icmp_name(p: ICmp) -> &'static str {
+    match p {
+        ICmp::Eq => "eq",
+        ICmp::Ne => "ne",
+        ICmp::Slt => "slt",
+        ICmp::Sle => "sle",
+        ICmp::Sgt => "sgt",
+        ICmp::Sge => "sge",
+        ICmp::Ult => "ult",
+        ICmp::Uge => "uge",
+    }
+}
+
+fn fcmp_name(p: FCmp) -> &'static str {
+    match p {
+        FCmp::Oeq => "oeq",
+        FCmp::One => "one",
+        FCmp::Olt => "olt",
+        FCmp::Ole => "ole",
+        FCmp::Ogt => "ogt",
+        FCmp::Oge => "oge",
+    }
+}
+
+fn atom_name(a: AtomOp) -> &'static str {
+    match a {
+        AtomOp::Add => "add",
+        AtomOp::And => "and",
+        AtomOp::Or => "or",
+        AtomOp::Xor => "xor",
+        AtomOp::Min => "min",
+        AtomOp::Max => "max",
+        AtomOp::Exch => "exch",
+    }
+}
+
+fn wi_name(w: WorkItem) -> &'static str {
+    match w {
+        WorkItem::GlobalId => "global_id",
+        WorkItem::LocalId => "local_id",
+        WorkItem::GroupId => "group_id",
+        WorkItem::LocalSize => "local_size",
+        WorkItem::GlobalSize => "global_size",
+        WorkItem::NumGroups => "num_groups",
+    }
+}
+
+fn csr_name(c: Csr) -> &'static str {
+    match c {
+        Csr::LaneId => "lane_id",
+        Csr::WarpId => "warp_id",
+        Csr::CoreId => "core_id",
+        Csr::NumThreads => "num_threads",
+        Csr::NumWarps => "num_warps",
+        Csr::NumCores => "num_cores",
+    }
+}
+
+pub fn intr_name(i: &Intr) -> String {
+    match i {
+        Intr::WorkItem(w) => format!("workitem.{}", wi_name(*w)),
+        Intr::Csr(c) => format!("csr.{}", csr_name(*c)),
+        Intr::Barrier => "barrier".into(),
+        Intr::Atomic(a) => format!("atomic.{}", atom_name(*a)),
+        Intr::AtomicCas => "atomic.cas".into(),
+        Intr::VoteAll => "vote.all".into(),
+        Intr::VoteAny => "vote.any".into(),
+        Intr::Ballot => "ballot".into(),
+        Intr::Shfl => "shfl".into(),
+        Intr::Join => "join".into(),
+        Intr::Tmc => "tmc".into(),
+        Intr::Mask => "mask".into(),
+        Intr::PrintI => "printi".into(),
+        Intr::PrintF => "printf".into(),
+    }
+}
+
+pub fn print_function(f: &Function) -> String {
+    let mut s = String::new();
+    write!(s, "func @{}(", f.name).unwrap();
+    for (i, p) in f.params.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        write!(s, "{} %{}", type_name(p.ty), p.name).unwrap();
+        if p.uniform {
+            s.push_str(" uniform");
+        }
+    }
+    write!(s, ") -> {}", type_name(f.ret)).unwrap();
+    if f.is_kernel {
+        s.push_str(" kernel");
+    }
+    if f.linkage == Linkage::Internal {
+        s.push_str(" internal");
+    }
+    if f.ret_uniform {
+        s.push_str(" retuniform");
+    }
+    if f.local_mem_size > 0 {
+        write!(s, " localmem={}", f.local_mem_size).unwrap();
+    }
+    s.push_str(" {\n");
+    for b in f.block_ids() {
+        writeln!(s, "b{}:", b.0).unwrap();
+        for &i in &f.blocks[b.idx()].insts {
+            s.push_str("  ");
+            s.push_str(&print_inst(f, i));
+            s.push('\n');
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+pub fn print_inst(f: &Function, id: InstId) -> String {
+    let inst = f.inst(id);
+    let v = |x: Val| val_str(f, x);
+    let mut s = String::new();
+    if inst.ty != Type::Void {
+        write!(s, "%i{}:{} = ", id.0, type_name(inst.ty)).unwrap();
+    }
+    match &inst.kind {
+        InstKind::Bin { op, a, b } => write!(s, "bin.{} {}, {}", bin_name(*op), v(*a), v(*b)).unwrap(),
+        InstKind::Un { op, a } => write!(s, "un.{} {}", un_name(*op), v(*a)).unwrap(),
+        InstKind::ICmp { pred, a, b } => {
+            write!(s, "icmp.{} {}, {}", icmp_name(*pred), v(*a), v(*b)).unwrap()
+        }
+        InstKind::FCmp { pred, a, b } => {
+            write!(s, "fcmp.{} {}, {}", fcmp_name(*pred), v(*a), v(*b)).unwrap()
+        }
+        InstKind::Select { cond, t, f: fv } => {
+            write!(s, "select {}, {}, {}", v(*cond), v(*t), v(*fv)).unwrap()
+        }
+        InstKind::Alloca { size } => write!(s, "alloca {}", size).unwrap(),
+        InstKind::Load { ptr } => write!(s, "load {}", v(*ptr)).unwrap(),
+        InstKind::Store { ptr, val } => write!(s, "store {}, {}", v(*ptr), v(*val)).unwrap(),
+        InstKind::Gep {
+            base,
+            index,
+            scale,
+            disp,
+        } => write!(s, "gep {}, {}, {}, {}", v(*base), v(*index), scale, disp).unwrap(),
+        InstKind::Call { callee, args } => {
+            write!(s, "call @f{}(", callee.0).unwrap();
+            for (i, a) in args.iter().enumerate() {
+                if i > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&v(*a));
+            }
+            s.push(')');
+        }
+        InstKind::Intr { intr, args } => {
+            write!(s, "intr.{}", intr_name(intr)).unwrap();
+            for (i, a) in args.iter().enumerate() {
+                s.push_str(if i == 0 { " " } else { ", " });
+                s.push_str(&v(*a));
+            }
+        }
+        InstKind::Phi { incs } => {
+            s.push_str("phi");
+            for (i, (b, val)) in incs.iter().enumerate() {
+                s.push_str(if i == 0 { " " } else { ", " });
+                write!(s, "[b{}: {}]", b.0, v(*val)).unwrap();
+            }
+        }
+        InstKind::Br { target } => write!(s, "br b{}", target.0).unwrap(),
+        InstKind::CondBr { cond, t, f: fb } => {
+            write!(s, "condbr {}, b{}, b{}", v(*cond), t.0, fb.0).unwrap()
+        }
+        InstKind::SplitBr {
+            cond,
+            neg,
+            then_b,
+            else_b,
+            ipdom,
+        } => write!(
+            s,
+            "splitbr {}, {}, b{}, b{}, b{}",
+            v(*cond),
+            if *neg { "neg" } else { "pos" },
+            then_b.0,
+            else_b.0,
+            ipdom.0
+        )
+        .unwrap(),
+        InstKind::PredBr {
+            cond,
+            mask,
+            body,
+            exit,
+        } => write!(
+            s,
+            "predbr {}, {}, b{}, b{}",
+            v(*cond),
+            v(*mask),
+            body.0,
+            exit.0
+        )
+        .unwrap(),
+        InstKind::Ret { val } => match val {
+            Some(x) => write!(s, "ret {}", v(*x)).unwrap(),
+            None => s.push_str("ret"),
+        },
+        InstKind::Unreachable => s.push_str("unreachable"),
+    }
+    if inst.uniform_ann {
+        s.push_str(" !uniform");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Param};
+
+    #[test]
+    fn prints_kernel() {
+        let mut f = Function::new(
+            "saxpy",
+            vec![
+                Param {
+                    name: "x".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "n".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                },
+            ],
+            Type::Void,
+        );
+        f.is_kernel = true;
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::new(&mut f);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        let c = b.icmp(ICmp::Slt, gid, Val::Arg(1));
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        let p = b.gep(Val::Arg(0), gid, 4);
+        let l = b.load(p, Type::F32);
+        let m = b.bin(BinOp::FMul, l, Val::cf(2.0));
+        b.store(p, m);
+        b.br(e);
+        b.set_block(e);
+        b.ret(None);
+        let s = print_function(&f);
+        assert!(s.contains("func @saxpy(ptr.global %x uniform, i32 %n) -> void kernel"));
+        assert!(s.contains("intr.workitem.global_id 0"));
+        assert!(s.contains("bin.fmul"));
+        assert!(s.contains("condbr"));
+    }
+}

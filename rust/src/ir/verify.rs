@@ -1,0 +1,320 @@
+//! IR verifier: structural and SSA invariants. Run between every pass in
+//! debug pipelines; the pass manager asserts it in tests.
+
+use super::dom::DomTree;
+use super::*;
+use std::collections::HashSet;
+
+#[derive(Debug)]
+pub struct VerifyError {
+    pub func: String,
+    pub msg: String,
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "verify({}): {}", self.func, self.msg)
+    }
+}
+
+pub fn verify_module(m: &Module) -> Result<(), VerifyError> {
+    for f in &m.funcs {
+        verify_function(f).map_err(|msg| VerifyError {
+            func: f.name.clone(),
+            msg,
+        })?;
+        // Call signatures.
+        for inst in f.insts.iter().filter(|i| !i.dead) {
+            if let InstKind::Call { callee, args } = &inst.kind {
+                let cf = m
+                    .funcs
+                    .get(callee.idx())
+                    .ok_or_else(|| VerifyError {
+                        func: f.name.clone(),
+                        msg: format!("call to unknown function f{}", callee.0),
+                    })?;
+                if cf.params.len() != args.len() {
+                    return Err(VerifyError {
+                        func: f.name.clone(),
+                        msg: format!(
+                            "call to @{} with {} args, expected {}",
+                            cf.name,
+                            args.len(),
+                            cf.params.len()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn verify_function(f: &Function) -> Result<(), String> {
+    let preds = f.preds();
+    // Block structure.
+    for b in f.block_ids() {
+        let insts = &f.blocks[b.idx()].insts;
+        if insts.is_empty() {
+            return Err(format!("block b{} is empty", b.0));
+        }
+        for (i, &id) in insts.iter().enumerate() {
+            let inst = f.inst(id);
+            if inst.dead {
+                return Err(format!("block b{} references dead inst %i{}", b.0, id.0));
+            }
+            if inst.block != b {
+                return Err(format!(
+                    "inst %i{} thinks it is in b{} but listed in b{}",
+                    id.0, inst.block.0, b.0
+                ));
+            }
+            let is_last = i + 1 == insts.len();
+            if inst.kind.is_terminator() != is_last {
+                return Err(format!(
+                    "terminator placement error at %i{} in b{}",
+                    id.0, b.0
+                ));
+            }
+            // Phis must form a prefix of the block.
+            if matches!(inst.kind, InstKind::Phi { .. }) {
+                let all_phi_before = insts[..i]
+                    .iter()
+                    .all(|&p| matches!(f.inst(p).kind, InstKind::Phi { .. }));
+                if !all_phi_before {
+                    return Err(format!("phi %i{} not at head of b{}", id.0, b.0));
+                }
+            }
+            // Join must be the first non-phi instruction.
+            if matches!(
+                inst.kind,
+                InstKind::Intr {
+                    intr: Intr::Join,
+                    ..
+                }
+            ) {
+                let pre_ok = insts[..i].iter().all(|&p| {
+                    matches!(
+                        f.inst(p).kind,
+                        InstKind::Phi { .. }
+                            | InstKind::Intr {
+                                intr: Intr::Join,
+                                ..
+                            }
+                    )
+                });
+                if !pre_ok {
+                    return Err(format!("join %i{} not at head of b{}", id.0, b.0));
+                }
+            }
+        }
+        // Successors must be live.
+        for s in f.succs(b) {
+            if f.blocks[s.idx()].dead {
+                return Err(format!("b{} branches to dead block b{}", b.0, s.0));
+            }
+        }
+    }
+    // Phi incoming sets match predecessors (for reachable blocks).
+    let reachable: HashSet<BlockId> = f.rpo().into_iter().collect();
+    for b in f.block_ids() {
+        if !reachable.contains(&b) {
+            continue;
+        }
+        for &id in &f.blocks[b.idx()].insts {
+            if let InstKind::Phi { incs } = &f.inst(id).kind {
+                let inc_blocks: HashSet<BlockId> = incs.iter().map(|(p, _)| *p).collect();
+                let pred_set: HashSet<BlockId> = preds[b.idx()]
+                    .iter()
+                    .copied()
+                    .filter(|p| reachable.contains(p))
+                    .collect();
+                if inc_blocks != pred_set {
+                    return Err(format!(
+                        "phi %i{} in b{} incoming blocks {:?} != preds {:?}",
+                        id.0, b.0, inc_blocks, pred_set
+                    ));
+                }
+                if incs.len() != inc_blocks.len() {
+                    return Err(format!("phi %i{} has duplicate incoming blocks", id.0));
+                }
+            }
+        }
+    }
+    // SSA dominance: every use is dominated by its def.
+    let dom = DomTree::build(f);
+    let pos_of = |id: InstId| -> (BlockId, usize) {
+        let b = f.inst(id).block;
+        let i = f.blocks[b.idx()].insts.iter().position(|&x| x == id).unwrap();
+        (b, i)
+    };
+    for b in f.block_ids() {
+        if !reachable.contains(&b) {
+            continue;
+        }
+        for (use_pos, &id) in f.blocks[b.idx()].insts.iter().enumerate() {
+            let inst = f.inst(id);
+            let check = |def: InstId, at_block: BlockId, at_pos: usize| -> Result<(), String> {
+                if f.inst(def).dead {
+                    return Err(format!("%i{} uses dead value %i{}", id.0, def.0));
+                }
+                let (db, dp) = pos_of(def);
+                let ok = if db == at_block {
+                    dp < at_pos
+                        || matches!(f.inst(id).kind, InstKind::Phi { .. }) && db != at_block
+                } else {
+                    dom.dominates(db, at_block)
+                };
+                if !ok && !matches!(f.inst(def).kind, InstKind::SplitBr { .. }) {
+                    return Err(format!(
+                        "use of %i{} in %i{} (b{}) not dominated by def (b{})",
+                        def.0, id.0, at_block.0, db.0
+                    ));
+                }
+                Ok(())
+            };
+            match &inst.kind {
+                InstKind::Phi { incs } => {
+                    for (p, v) in incs {
+                        if let Val::Inst(def) = v {
+                            // Use point is the end of predecessor p.
+                            if reachable.contains(p) {
+                                check(*def, *p, f.blocks[p.idx()].insts.len())?;
+                            }
+                        }
+                    }
+                }
+                k => {
+                    for op in k.operands() {
+                        if let Val::Inst(def) = op {
+                            check(def, b, use_pos)?;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Joins take no arguments (stack-popping semantics); every SplitBr's
+    // recorded ipdom block must contain a Join.
+    for inst in f.insts.iter().filter(|i| !i.dead) {
+        if let InstKind::Intr {
+            intr: Intr::Join,
+            args,
+        } = &inst.kind
+        {
+            if !args.is_empty() {
+                return Err("join takes no arguments".into());
+            }
+        }
+        if let InstKind::SplitBr { ipdom, .. } = &inst.kind {
+            let has_join = f.blocks[ipdom.idx()].insts.iter().any(|&i| {
+                matches!(
+                    f.inst(i).kind,
+                    InstKind::Intr {
+                        intr: Intr::Join,
+                        ..
+                    }
+                )
+            });
+            if !has_join {
+                return Err(format!(
+                    "splitbr reconvergence block b{} has no join",
+                    ipdom.0
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Param};
+
+    #[test]
+    fn accepts_valid_function() {
+        let mut f = Function::new(
+            "ok",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        let exit = f.add_block("exit");
+        let body = f.add_block("body");
+        let mut b = Builder::new(&mut f);
+        let c = b.icmp(ICmp::Slt, Val::Arg(0), Val::ci(10));
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        b.br(exit);
+        b.set_block(exit);
+        b.ret(Some(Val::Arg(0)));
+        verify_function(&f).unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_terminator() {
+        let mut f = Function::new("bad", vec![], Type::Void);
+        let e = f.entry;
+        f.push_inst(
+            e,
+            InstKind::Bin {
+                op: BinOp::Add,
+                a: Val::ci(1),
+                b: Val::ci(2),
+            },
+            Type::I32,
+        );
+        assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_phi_pred_mismatch() {
+        let mut f = Function::new("bad", vec![], Type::I32);
+        let e = f.entry;
+        let x = f.add_block("x");
+        let mut b = Builder::at(&mut f, e);
+        b.br(x);
+        b.set_block(x);
+        // Phi claims an incoming from x itself, which is not a pred.
+        let p = b.phi(Type::I32, vec![(x, Val::ci(1))]);
+        b.ret(Some(p));
+        assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_use_before_def() {
+        let mut f = Function::new("bad", vec![], Type::I32);
+        let e = f.entry;
+        // Manually create use-before-def in the same block.
+        let use_id = f.push_inst(
+            e,
+            InstKind::Bin {
+                op: BinOp::Add,
+                a: Val::Inst(InstId(1)), // defined below
+                b: Val::ci(1),
+            },
+            Type::I32,
+        );
+        let _def = f.push_inst(
+            e,
+            InstKind::Bin {
+                op: BinOp::Add,
+                a: Val::ci(1),
+                b: Val::ci(2),
+            },
+            Type::I32,
+        );
+        f.push_inst(
+            e,
+            InstKind::Ret {
+                val: Some(Val::Inst(use_id)),
+            },
+            Type::Void,
+        );
+        assert!(verify_function(&f).is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! `volt` — CLI for the VOLT reproduction: compile kernels, run the
+//! benchmark suite on the SimX-style simulator, and regenerate the
+//! paper's figures/tables.
+//!
+//! (The build environment is offline, so argument parsing is hand-rolled
+//! rather than clap.)
+
+use volt::backend::emit::{BackendOptions, SharedMemMapping};
+use volt::coordinator::{benchmarks, experiments, pipeline, report};
+use volt::frontend::{Dialect, FrontendOptions};
+use volt::sim::SimConfig;
+use volt::transform::OptLevel;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: volt <command> [options]
+
+commands:
+  compile <file> [--cuda] [--opt LEVEL] [--asm] [--ir]   compile a kernel file
+  run <benchmark> [--opt LEVEL] [--sw-warp] [--smem-global]
+                                                         run a registry benchmark
+  validate [--levels L1,L2,...]                          run + check the whole suite
+  list                                                   list registry benchmarks
+  figures --fig 7|8|9|10 [--only a,b] [--csv FILE]       regenerate a paper figure
+  figures --compile-time                                 compile-time overhead table
+  figures --table1                                       per-stage LoC summary
+
+LEVEL: base | uni-hw | uni-ann | uni-func | zicond | recon (default: recon)"
+    );
+    std::process::exit(2);
+}
+
+fn parse_level(s: &str) -> OptLevel {
+    match s.to_lowercase().as_str() {
+        "base" => OptLevel::Base,
+        "uni-hw" | "unihw" => OptLevel::UniHw,
+        "uni-ann" | "uniann" => OptLevel::UniAnn,
+        "uni-func" | "unifunc" => OptLevel::UniFunc,
+        "zicond" => OptLevel::ZiCond,
+        "recon" => OptLevel::Recon,
+        _ => {
+            eprintln!("unknown opt level '{s}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt_val(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "compile" => cmd_compile(rest),
+        "run" => cmd_run(rest),
+        "validate" => cmd_validate(rest),
+        "list" => cmd_list(),
+        "figures" => cmd_figures(rest),
+        _ => {
+            usage();
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_compile(args: &[String]) -> Result<(), String> {
+    let file = args.first().ok_or("compile: missing file")?;
+    let src = std::fs::read_to_string(file).map_err(|e| format!("{file}: {e}"))?;
+    let dialect = if flag(args, "--cuda") || file.ends_with(".cu") {
+        Dialect::Cuda
+    } else {
+        Dialect::OpenCL
+    };
+    let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
+    if flag(args, "--ir") {
+        // Dump middle-end IR.
+        let (mut m, _infos) = volt::frontend::compile_kernels(
+            &src,
+            &FrontendOptions {
+                dialect,
+                warp_hw: true,
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let mut cfg = level.config();
+        cfg.verify = false;
+        volt::transform::run_middle_end(&mut m, &cfg);
+        print!("{}", volt::ir::printer::print_module(&m));
+        return Ok(());
+    }
+    let out = pipeline::compile_source(
+        &src,
+        &FrontendOptions {
+            dialect,
+            warp_hw: true,
+        },
+        level,
+        &BackendOptions::default(),
+    )?;
+    println!(
+        "compiled {} kernels, {} instructions, {:.2} ms (frontend {:.2} / middle {:.2} / backend {:.2})",
+        out.kernels.len(),
+        out.image.code.len(),
+        out.total_ms(),
+        out.frontend_ms,
+        out.middle_ms,
+        out.backend_ms
+    );
+    println!(
+        "divergence management: {} splits, {} divergent loops",
+        out.middle.total_splits(),
+        out.middle.total_pred_loops()
+    );
+    if flag(args, "--asm") {
+        print!("{}", out.image.disassemble());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let name = args.first().ok_or("run: missing benchmark name")?;
+    let b = benchmarks::find(name).ok_or(format!("unknown benchmark '{name}'"))?;
+    let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
+    let warp_hw = !flag(args, "--sw-warp");
+    let smem = if flag(args, "--smem-global") {
+        SharedMemMapping::Global
+    } else {
+        SharedMemMapping::Local
+    };
+    let r = experiments::run_bench(&b, level, warp_hw, smem, SimConfig::default())?;
+    let s = &r.stats;
+    println!("benchmark {name} @ {:?}: PASS", level);
+    println!(
+        "  cycles {}  instrs {}  thread-instrs {}  IPC {:.3}",
+        s.cycles,
+        s.instrs,
+        s.thread_instrs,
+        s.ipc()
+    );
+    println!(
+        "  splits {}  joins {}  preds {}  tmc {}  barriers {}  warp-ops {}  atomics {}",
+        s.splits, s.joins, s.preds, s.tmcs, s.barriers_executed, s.warp_ops, s.atomics
+    );
+    println!(
+        "  loads {}  stores {}  mem-reqs {}  L1 {}/{}  L2 {}/{}  local {}",
+        s.loads,
+        s.stores,
+        s.mem_requests,
+        s.l1_hits,
+        s.l1_hits + s.l1_misses,
+        s.l2_hits,
+        s.l2_hits + s.l2_misses,
+        s.local_accesses
+    );
+    println!("  compile {:.2} ms, code {} instrs", r.compile_ms, r.code_size);
+    Ok(())
+}
+
+fn cmd_validate(args: &[String]) -> Result<(), String> {
+    let levels: Vec<OptLevel> = match opt_val(args, "--levels") {
+        Some(s) => s.split(',').map(parse_level).collect(),
+        None => vec![OptLevel::Base, OptLevel::UniFunc, OptLevel::Recon],
+    };
+    let rows = experiments::validate_all(&levels);
+    print!("{}", report::render_validation(&rows));
+    let failures: usize = rows
+        .iter()
+        .map(|r| r.results.iter().filter(|(_, res)| res.is_err()).count())
+        .sum();
+    let total: usize = rows.iter().map(|r| r.results.len()).sum();
+    println!("{} / {} runs passed", total - failures, total);
+    if failures > 0 {
+        return Err(format!("{failures} validation failures"));
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<(), String> {
+    for b in benchmarks::registry() {
+        println!(
+            "{:>14}  suite={:<9} dialect={:?}{}{}",
+            b.name,
+            b.suite,
+            b.dialect,
+            if b.warp_feature { " warp" } else { "" },
+            if b.smem { " smem" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &[String]) -> Result<(), String> {
+    if flag(args, "--compile-time") {
+        let rows = experiments::compile_time_sweep(3)?;
+        print!("{}", report::render_compile_time(&rows));
+        return Ok(());
+    }
+    if flag(args, "--table1") {
+        print!("{}", table1());
+        return Ok(());
+    }
+    let fig = opt_val(args, "--fig").ok_or("figures: need --fig N or --compile-time/--table1")?;
+    let only: Option<Vec<String>> =
+        opt_val(args, "--only").map(|s| s.split(',').map(|x| x.to_string()).collect());
+    let only_refs: Option<Vec<&str>> = only
+        .as_ref()
+        .map(|v| v.iter().map(|s| s.as_str()).collect());
+    match fig.as_str() {
+        "7" | "8" => {
+            let rows = experiments::ladder_sweep(only_refs.as_deref())?;
+            if fig == "7" {
+                print!("{}", report::render_ladder_fig7(&rows));
+            } else {
+                print!("{}", report::render_ladder_fig8(&rows));
+            }
+            if let Some(path) = opt_val(args, "--csv") {
+                std::fs::write(&path, report::csv_ladder(&rows)).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
+        "9" => {
+            let rows = experiments::isa_extension_sweep()?;
+            print!("{}", report::render_fig9(&rows));
+        }
+        "10" => {
+            let rows = experiments::memory_config_sweep()?;
+            print!("{}", report::render_fig10(&rows));
+        }
+        _ => return Err(format!("unknown figure '{fig}'")),
+    }
+    Ok(())
+}
+
+/// Table 1: per-stage LoC of this implementation.
+fn table1() -> String {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let count = |dirs: &[&str]| -> usize {
+        let mut n = 0;
+        for d in dirs {
+            let p = root.join("rust/src").join(d);
+            if let Ok(entries) = std::fs::read_dir(&p) {
+                for e in entries.flatten() {
+                    if e.path().extension().map(|x| x == "rs").unwrap_or(false) {
+                        if let Ok(s) = std::fs::read_to_string(e.path()) {
+                            n += s.lines().count();
+                        }
+                    }
+                }
+            }
+        }
+        n
+    };
+    let rows = [
+        ("OpenCL/CUDA front-end", count(&["frontend"])),
+        ("Middle-end (IR + analyses + transforms)", count(&["ir", "analysis", "transform"])),
+        ("Back-end (ISA table + codegen)", count(&["backend"])),
+        ("SimX substrate", count(&["sim"])),
+        ("Host runtime + coordinator", count(&["runtime", "coordinator"])),
+    ];
+    let mut out = String::from("Table 1 — per-stage implementation size (this reproduction)\n");
+    for (name, loc) in rows {
+        out.push_str(&format!("{name:>42}: {loc:>6} LoC\n"));
+    }
+    out
+}

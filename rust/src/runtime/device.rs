@@ -1,0 +1,355 @@
+//! The VOLT host runtime (paper §4.2 host compilation + §5.4 Case Study
+//! 2): device buffers, host↔device copies, deferred `memcpy_to_symbol`
+//! materialization, shared-memory mapping selection, and kernel launch.
+//!
+//! This is the layer PoCL/CuPBoP host-API calls translate onto: a
+//! `clCreateBuffer`/`cudaMalloc` becomes [`VoltDevice::malloc`], a
+//! `clEnqueueNDRangeKernel`/kernel<<<>>> launch becomes
+//! [`VoltDevice::launch`], and `cudaMemcpyToSymbol` becomes
+//! [`VoltDevice::memcpy_to_symbol`] — buffered on the host and
+//! materialized just before launch, after global addresses are resolved,
+//! exactly as the paper describes.
+
+use crate::backend::emit::ProgramImage;
+use crate::sim::{Gpu, SimConfig, SimError, SimStats};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DevicePtr(pub u32);
+
+#[derive(Clone, Copy, Debug)]
+pub enum ArgValue {
+    I32(i32),
+    U32(u32),
+    F32(f32),
+    Ptr(DevicePtr),
+}
+
+impl ArgValue {
+    pub fn bits(self) -> u32 {
+        match self {
+            ArgValue::I32(v) => v as u32,
+            ArgValue::U32(v) => v,
+            ArgValue::F32(v) => v.to_bits(),
+            ArgValue::Ptr(p) => p.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum RuntimeError {
+    UnknownKernel(String),
+    UnknownSymbol(String),
+    BadLaunch(String),
+    Sim(SimError),
+    Mem(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::UnknownKernel(k) => write!(f, "unknown kernel '{k}'"),
+            RuntimeError::UnknownSymbol(s) => write!(f, "unknown device symbol '{s}'"),
+            RuntimeError::BadLaunch(m) => write!(f, "bad launch: {m}"),
+            RuntimeError::Sim(e) => write!(f, "{e}"),
+            RuntimeError::Mem(m) => write!(f, "memory error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Free-list entry for the device allocator.
+#[derive(Debug, Clone, Copy)]
+struct FreeBlock {
+    addr: u32,
+    size: u32,
+}
+
+pub struct VoltDevice {
+    pub image: ProgramImage,
+    pub gpu: Gpu,
+    free_list: Vec<FreeBlock>,
+    /// Deferred symbol writes (Case Study 2): (symbol, offset, bytes).
+    pending_symbols: Vec<(String, u32, Vec<u8>)>,
+    /// Accumulated stats over all launches.
+    pub total_stats: SimStats,
+    pub launches: u32,
+}
+
+impl VoltDevice {
+    pub fn new(image: ProgramImage, cfg: SimConfig) -> VoltDevice {
+        let gpu = Gpu::load(&image, cfg);
+        VoltDevice {
+            image,
+            gpu,
+            free_list: vec![],
+            pending_symbols: vec![],
+            total_stats: SimStats::default(),
+            launches: 0,
+        }
+    }
+
+    /// Allocate device-global memory (first-fit free list over a bump
+    /// allocator).
+    pub fn malloc(&mut self, size: u32) -> DevicePtr {
+        let size = (size + 63) & !63;
+        if let Some(k) = self
+            .free_list
+            .iter()
+            .position(|b| b.size >= size)
+        {
+            let b = self.free_list[k];
+            if b.size > size {
+                self.free_list[k] = FreeBlock {
+                    addr: b.addr + size,
+                    size: b.size - size,
+                };
+            } else {
+                self.free_list.remove(k);
+            }
+            return DevicePtr(b.addr);
+        }
+        DevicePtr(self.gpu.alloc(size))
+    }
+
+    pub fn free(&mut self, ptr: DevicePtr, size: u32) {
+        self.free_list.push(FreeBlock {
+            addr: ptr.0,
+            size: (size + 63) & !63,
+        });
+    }
+
+    pub fn memcpy_h2d(&mut self, dst: DevicePtr, bytes: &[u8]) -> Result<(), RuntimeError> {
+        self.gpu
+            .mem
+            .write_bytes(dst.0, bytes)
+            .map_err(|e| RuntimeError::Mem(format!("h2d fault at {:#x}", e.addr)))
+    }
+
+    pub fn memcpy_d2h(&self, src: DevicePtr, len: usize) -> Result<Vec<u8>, RuntimeError> {
+        self.gpu
+            .mem
+            .read_bytes(src.0, len)
+            .map_err(|e| RuntimeError::Mem(format!("d2h fault at {:#x}", e.addr)))
+    }
+
+    pub fn write_f32(&mut self, dst: DevicePtr, vals: &[f32]) -> Result<(), RuntimeError> {
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
+        self.memcpy_h2d(dst, &bytes)
+    }
+
+    pub fn read_f32(&self, src: DevicePtr, n: usize) -> Result<Vec<f32>, RuntimeError> {
+        let b = self.memcpy_d2h(src, n * 4)?;
+        Ok(b.chunks(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn write_u32s(&mut self, dst: DevicePtr, vals: &[u32]) -> Result<(), RuntimeError> {
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.memcpy_h2d(dst, &bytes)
+    }
+
+    pub fn read_u32s(&self, src: DevicePtr, n: usize) -> Result<Vec<u32>, RuntimeError> {
+        let b = self.memcpy_d2h(src, n * 4)?;
+        Ok(b.chunks(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `cudaMemcpyToSymbol`: buffered now, materialized at the next launch
+    /// once device addresses are final (paper §5.4).
+    pub fn memcpy_to_symbol(
+        &mut self,
+        symbol: &str,
+        bytes: &[u8],
+        offset: u32,
+    ) -> Result<(), RuntimeError> {
+        if !self.image.global_addr.contains_key(symbol) {
+            return Err(RuntimeError::UnknownSymbol(symbol.to_string()));
+        }
+        self.pending_symbols
+            .push((symbol.to_string(), offset, bytes.to_vec()));
+        Ok(())
+    }
+
+    /// Number of symbol writes still buffered (observable deferral).
+    pub fn pending_symbol_writes(&self) -> usize {
+        self.pending_symbols.len()
+    }
+
+    /// Launch a kernel by (source) name.
+    pub fn launch(
+        &mut self,
+        kernel: &str,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: &[ArgValue],
+    ) -> Result<SimStats, RuntimeError> {
+        let entry_name = format!("__main_{kernel}");
+        let entry = *self
+            .image
+            .func_entries
+            .get(&entry_name)
+            .ok_or_else(|| RuntimeError::UnknownKernel(kernel.to_string()))?;
+        // Validate geometry.
+        let bsize: u64 = block.iter().map(|&b| b as u64).product();
+        if bsize == 0 || grid.iter().any(|&g| g == 0) {
+            return Err(RuntimeError::BadLaunch("zero-sized launch".into()));
+        }
+        let nt = self.gpu.cfg.threads_per_warp as u64;
+        let wpb = bsize.div_ceil(nt);
+        if wpb > self.gpu.cfg.warps_per_core as u64 {
+            return Err(RuntimeError::BadLaunch(format!(
+                "block of {bsize} threads needs {wpb} warps, core has {}",
+                self.gpu.cfg.warps_per_core
+            )));
+        }
+        // Materialize deferred symbol writes.
+        for (sym, off, bytes) in std::mem::take(&mut self.pending_symbols) {
+            let base = self.image.global_addr[&sym];
+            self.gpu
+                .mem
+                .write_bytes(base + off, &bytes)
+                .map_err(|e| RuntimeError::Mem(format!("symbol write fault at {:#x}", e.addr)))?;
+        }
+        // Argument block.
+        let a = self.image.args_addr;
+        let mut words: Vec<u32> = grid.to_vec();
+        words.extend(block);
+        words.push(entry);
+        words.extend(args.iter().map(|v| v.bits()));
+        for (i, w) in words.iter().enumerate() {
+            self.gpu
+                .mem
+                .write_u32(a + 4 * i as u32, *w)
+                .map_err(|e| RuntimeError::Mem(format!("args fault at {:#x}", e.addr)))?;
+        }
+        let stats = self.gpu.run().map_err(RuntimeError::Sim)?;
+        self.launches += 1;
+        accumulate(&mut self.total_stats, &stats);
+        Ok(stats)
+    }
+}
+
+fn accumulate(t: &mut SimStats, s: &SimStats) {
+    t.cycles += s.cycles;
+    t.instrs += s.instrs;
+    t.thread_instrs += s.thread_instrs;
+    t.splits += s.splits;
+    t.joins += s.joins;
+    t.preds += s.preds;
+    t.tmcs += s.tmcs;
+    t.barriers_executed += s.barriers_executed;
+    t.warp_ops += s.warp_ops;
+    t.atomics += s.atomics;
+    t.loads += s.loads;
+    t.stores += s.stores;
+    t.mem_requests += s.mem_requests;
+    t.l1_hits += s.l1_hits;
+    t.l1_misses += s.l1_misses;
+    t.l2_hits += s.l2_hits;
+    t.l2_misses += s.l2_misses;
+    t.local_accesses += s.local_accesses;
+    t.prints.extend(s.prints.iter().cloned());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{build_image, BackendOptions};
+    use crate::frontend::{compile_kernels, FrontendOptions};
+    use crate::transform::{run_middle_end, OptLevel};
+
+    fn device(src: &str) -> VoltDevice {
+        let (mut m, infos) = compile_kernels(src, &FrontendOptions::default()).unwrap();
+        let mut cfg = OptLevel::Recon.config();
+        cfg.verify = true;
+        run_middle_end(&mut m, &cfg);
+        let img = build_image(
+            &m,
+            &format!("__main_{}", infos[0].name),
+            &BackendOptions::default(),
+        )
+        .unwrap();
+        VoltDevice::new(img, crate::sim::SimConfig::default())
+    }
+
+    #[test]
+    fn malloc_free_reuse() {
+        let mut dev = device("kernel void k(global int* o) { o[0] = 1; }");
+        let a = dev.malloc(100);
+        let b = dev.malloc(100);
+        assert_ne!(a, b);
+        dev.free(a, 100);
+        let c = dev.malloc(64);
+        assert_eq!(c.0, a.0, "free list reuse");
+    }
+
+    #[test]
+    fn launch_and_repeat_with_persistent_memory() {
+        let mut dev = device(
+            r#"
+kernel void inc(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] + 1;
+}
+"#,
+        );
+        let buf = dev.malloc(64 * 4);
+        dev.write_u32s(buf, &[0u32; 64]).unwrap();
+        for _ in 0..3 {
+            dev.launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])
+                .unwrap();
+        }
+        assert_eq!(dev.read_u32s(buf, 64).unwrap(), vec![3u32; 64]);
+        assert_eq!(dev.launches, 3);
+        assert!(dev.total_stats.instrs > 0);
+    }
+
+    #[test]
+    fn deferred_memcpy_to_symbol() {
+        // Case Study 2: constant symbol initialized via the host API.
+        let mut dev = device(
+            r#"
+__constant__ float coef[4] = { 0.0f, 0.0f, 0.0f, 0.0f };
+kernel void apply(global float* x) {
+    int i = get_global_id(0);
+    x[i] = x[i] * coef[i % 4];
+}
+"#,
+        );
+        let buf = dev.malloc(8 * 4);
+        dev.write_f32(buf, &[1.0; 8]).unwrap();
+        let coefs: Vec<u8> = [2.0f32, 3.0, 4.0, 5.0]
+            .iter()
+            .flat_map(|v| v.to_bits().to_le_bytes())
+            .collect();
+        dev.memcpy_to_symbol("coef", &coefs, 0).unwrap();
+        // The write is deferred until launch.
+        assert_eq!(dev.pending_symbol_writes(), 1);
+        dev.launch("apply", [1, 1, 1], [8, 1, 1], &[ArgValue::Ptr(buf)])
+            .unwrap();
+        assert_eq!(dev.pending_symbol_writes(), 0);
+        assert_eq!(
+            dev.read_f32(buf, 8).unwrap(),
+            vec![2.0, 3.0, 4.0, 5.0, 2.0, 3.0, 4.0, 5.0]
+        );
+        assert!(dev.memcpy_to_symbol("nosuch", &[0], 0).is_err());
+    }
+
+    #[test]
+    fn launch_validation() {
+        let mut dev = device("kernel void k(global int* o) { o[0] = 1; }");
+        let b = dev.malloc(4);
+        let err = dev.launch(
+            "k",
+            [1, 1, 1],
+            [4096, 1, 1],
+            &[ArgValue::Ptr(b)],
+        );
+        assert!(matches!(err, Err(RuntimeError::BadLaunch(_))));
+        let err2 = dev.launch("nope", [1, 1, 1], [1, 1, 1], &[]);
+        assert!(matches!(err2, Err(RuntimeError::UnknownKernel(_))));
+    }
+}

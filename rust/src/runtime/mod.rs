@@ -1,0 +1,9 @@
+//! Runtime layer: the VOLT host runtime (device memory, launches, the
+//! Case-Study-2 host-API extensions) and the PJRT bridge that executes the
+//! JAX/Pallas AOT reference artifacts used as correctness oracles.
+
+pub mod device;
+pub mod pjrt;
+
+pub use device::{ArgValue, DevicePtr, RuntimeError, VoltDevice};
+pub use pjrt::{default_artifacts_dir, PjrtReference};

@@ -1,0 +1,198 @@
+//! PJRT bridge: loads the JAX/Pallas AOT reference kernels
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them on the XLA CPU client.
+//!
+//! This is the correctness-oracle role the paper assigns to "reference CPU
+//! implementations" (§5): every benchmark's device results are validated
+//! against an independently-computed reference. Python never runs at this
+//! point — the HLO text is the build artifact (see
+//! /opt/xla-example/README.md for why text, not serialized protos).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry of the artifact manifest (a simple line format to keep the
+/// offline build dependency-free):
+/// `name=<k> file=<f.hlo.txt> in=<d0xd1,d0,...> out=<d0xd1>`
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+pub fn parse_manifest(text: &str) -> Result<Vec<KernelSpec>, String> {
+    let mut out = vec![];
+    for line in text.lines().map(str::trim) {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut name = None;
+        let mut file = None;
+        let mut inputs = vec![];
+        let mut output = vec![];
+        for tok in line.split_whitespace() {
+            let (k, v) = tok.split_once('=').ok_or(format!("bad manifest token {tok}"))?;
+            match k {
+                "name" => name = Some(v.to_string()),
+                "file" => file = Some(v.to_string()),
+                "in" => {
+                    for shape in v.split(',') {
+                        inputs.push(parse_shape(shape)?);
+                    }
+                }
+                "out" => output = parse_shape(v)?,
+                _ => return Err(format!("unknown manifest key {k}")),
+            }
+        }
+        out.push(KernelSpec {
+            name: name.ok_or("manifest line missing name")?,
+            file: file.ok_or("manifest line missing file")?,
+            inputs,
+            output,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>, String> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse().map_err(|_| format!("bad dim {d}")))
+        .collect()
+}
+
+/// Reference executor over the AOT artifacts.
+pub struct PjrtReference {
+    client: xla::PjRtClient,
+    specs: HashMap<String, KernelSpec>,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl PjrtReference {
+    /// Load from the artifacts directory (expects `manifest.txt` +
+    /// `*.hlo.txt`). Returns Err when artifacts are not built.
+    pub fn load(dir: &Path) -> Result<PjrtReference, String> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("no artifacts at {}: {e}", manifest_path.display()))?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        let mut spec_map = HashMap::new();
+        for s in specs {
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(&s.file).to_str().ok_or("bad path")?,
+            )
+            .map_err(|e| format!("load {}: {e:?}", s.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format!("compile {}: {e:?}", s.name))?;
+            execs.insert(s.name.clone(), exe);
+            spec_map.insert(s.name.clone(), s);
+        }
+        Ok(PjrtReference {
+            client,
+            specs: spec_map,
+            execs,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn kernels(&self) -> Vec<&KernelSpec> {
+        self.specs.values().collect()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    /// Execute a reference kernel on f32 inputs; shapes are validated
+    /// against the manifest.
+    pub fn run_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String> {
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or(format!("unknown reference kernel '{name}'"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(format!(
+                "'{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut lits = vec![];
+        for (data, shape) in inputs.iter().zip(spec.inputs.iter()) {
+            let want: usize = shape.iter().product::<usize>().max(1);
+            if data.len() != want {
+                return Err(format!(
+                    "'{name}' input size {} != shape {:?}",
+                    data.len(),
+                    shape
+                ));
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.is_empty() {
+                lit
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| format!("reshape: {e:?}"))?
+            };
+            lits.push(lit);
+        }
+        let exe = &self.execs[name];
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| format!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {name}: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| format!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| format!("to_vec {name}: {e:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// Default artifacts directory (repo-root relative).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "\
+# comment
+name=matmul file=matmul.hlo.txt in=16x16,16x16 out=16x16
+name=vecadd file=vecadd.hlo.txt in=64,64 out=64
+name=scale file=scale.hlo.txt in=8,scalar out=8
+";
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].inputs, vec![vec![16, 16], vec![16, 16]]);
+        assert_eq!(specs[1].output, vec![64]);
+        assert_eq!(specs[2].inputs[1], Vec::<usize>::new());
+        assert!(parse_manifest("name").is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(PjrtReference::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,746 @@
+//! One Vortex core: warp table, IPDOM stacks, barrier table, scheduler and
+//! the execute stage (including the SFU implementing the vx_* extensions).
+//!
+//! Scalar arithmetic semantics are shared with the IR interpreter
+//! ([`crate::ir::interp::scalar`]) so the property-test oracle and the
+//! simulator cannot diverge.
+
+use super::mem::{Cache, GlobalMem};
+use super::{SimConfig, SimError, SimStats};
+use crate::backend::emit::LOCAL_BASE;
+use crate::backend::isa::{CsrId, MachInst, Op, OpClass};
+use crate::ir::interp::scalar;
+use crate::ir::{BinOp, FCmp, ICmp, UnOp};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct IpdomEntry {
+    pub restore: u32,
+    pub other: u32,
+    pub other_pc: u32,
+    pub join_pc: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Warp {
+    pub pc: u32,
+    pub tmask: u32,
+    pub active: bool,
+    pub stall_until: u64,
+    pub at_barrier: bool,
+    pub ipdom: Vec<IpdomEntry>,
+    /// regs[lane][reg] — 0..32 integer x-regs (x0 = 0), 32..64 f-regs.
+    pub regs: Vec<[u32; 64]>,
+}
+
+impl Warp {
+    fn new(nt: u32) -> Warp {
+        Warp {
+            pc: 0,
+            tmask: 0,
+            active: false,
+            stall_until: 0,
+            at_barrier: false,
+            ipdom: vec![],
+            regs: vec![[0u32; 64]; nt as usize],
+        }
+    }
+}
+
+pub struct Core {
+    pub id: u32,
+    pub warps: Vec<Warp>,
+    pub l1: Cache,
+    pub local: Vec<u8>,
+    /// barrier id -> bitmask of arrived warps.
+    pub barriers: HashMap<u32, u32>,
+    rr: usize,
+    full_mask: u32,
+}
+
+pub enum StepOutcome {
+    Executed,
+    NoneReady,
+}
+
+impl Core {
+    pub fn new(cfg: &SimConfig, id: u32) -> Core {
+        let full_mask = if cfg.threads_per_warp >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << cfg.threads_per_warp) - 1
+        };
+        Core {
+            id,
+            warps: (0..cfg.warps_per_core)
+                .map(|_| Warp::new(cfg.threads_per_warp))
+                .collect(),
+            l1: Cache::new(cfg.l1d),
+            local: vec![0; cfg.local_mem_bytes as usize],
+            barriers: HashMap::new(),
+            rr: 0,
+            full_mask,
+        }
+    }
+
+    pub fn reset(&mut self, cfg: &SimConfig) {
+        for w in self.warps.iter_mut() {
+            *w = Warp::new(cfg.threads_per_warp);
+        }
+        self.barriers.clear();
+        self.rr = 0;
+        // Launch contract: warp 0, lane 0 active at pc 0.
+        self.warps[0].active = true;
+        self.warps[0].tmask = 1;
+        self.warps[0].pc = 0;
+    }
+
+    pub fn idle(&self) -> bool {
+        self.warps.iter().all(|w| !w.active)
+    }
+
+    /// Earliest cycle at which some warp could issue, if any.
+    pub fn next_ready(&self) -> Option<u64> {
+        self.warps
+            .iter()
+            .filter(|w| w.active && !w.at_barrier)
+            .map(|w| w.stall_until)
+            .min()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        cycle: u64,
+        prog: &[MachInst],
+        mem: &mut GlobalMem,
+        l2: &mut Option<Cache>,
+        cfg: &SimConfig,
+        stats: &mut SimStats,
+    ) -> Result<StepOutcome, SimError> {
+        // Round-robin issue selection over the active list.
+        let n = self.warps.len();
+        let mut chosen: Option<usize> = None;
+        for k in 0..n {
+            let wi = (self.rr + k) % n;
+            let w = &self.warps[wi];
+            if w.active && !w.at_barrier && w.stall_until <= cycle {
+                chosen = Some(wi);
+                break;
+            }
+        }
+        let Some(wi) = chosen else {
+            return Ok(StepOutcome::NoneReady);
+        };
+        self.rr = (wi + 1) % n;
+        self.exec(wi, cycle, prog, mem, l2, cfg, stats)?;
+        Ok(StepOutcome::Executed)
+    }
+
+    fn err(&self, wi: usize, pc: u32, msg: impl Into<String>) -> SimError {
+        SimError {
+            core: self.id,
+            warp: wi as u32,
+            pc,
+            msg: msg.into(),
+        }
+    }
+
+    /// Uniform read of a register across active lanes.
+    fn uniform_read(&self, wi: usize, r: u8, pc: u32) -> Result<u32, SimError> {
+        let w = &self.warps[wi];
+        let mut val: Option<u32> = None;
+        for l in 0..w.regs.len() {
+            if w.tmask >> l & 1 == 1 {
+                let v = read_reg(&w.regs[l], r);
+                match val {
+                    None => val = Some(v),
+                    Some(x) if x == v => {}
+                    Some(x) => {
+                        return Err(self.err(
+                            wi,
+                            pc,
+                            format!(
+                                "non-uniform register x{r} at warp-level op ({x} vs {v}) — \
+                                 unmanaged divergence (compiler bug)"
+                            ),
+                        ))
+                    }
+                }
+            }
+        }
+        val.ok_or_else(|| self.err(wi, pc, "warp-level read with empty mask"))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec(
+        &mut self,
+        wi: usize,
+        cycle: u64,
+        prog: &[MachInst],
+        mem: &mut GlobalMem,
+        l2: &mut Option<Cache>,
+        cfg: &SimConfig,
+        stats: &mut SimStats,
+    ) -> Result<(), SimError> {
+        let pc = self.warps[wi].pc;
+        let inst = *prog
+            .get(pc as usize)
+            .ok_or_else(|| self.err(wi, pc, "pc out of program"))?;
+        let nt = cfg.threads_per_warp as usize;
+        let tmask = self.warps[wi].tmask;
+        // Hot path: lane list in a stack buffer (no per-instruction heap
+        // allocation — see EXPERIMENTS.md §Perf).
+        let mut lanes_buf = [0usize; 32];
+        let mut nl = 0;
+        for l in 0..nt {
+            if tmask >> l & 1 == 1 {
+                lanes_buf[nl] = l;
+                nl += 1;
+            }
+        }
+        let lanes = &lanes_buf[..nl];
+        if lanes.is_empty() {
+            return Err(self.err(wi, pc, "issued with empty thread mask"));
+        }
+        stats.instrs += 1;
+        stats.thread_instrs += lanes.len() as u64;
+        let mut next_pc = pc + 1;
+        let mut cost = match inst.op.class() {
+            OpClass::Alu => 1,
+            OpClass::Mul => 3,
+            OpClass::Div => 16,
+            OpClass::Fpu => 4,
+            OpClass::FDiv => 16,
+            OpClass::Sfu => 8,
+            OpClass::Mem => 1, // adjusted below
+            OpClass::Branch => 1,
+            OpClass::Vx => 2,
+            OpClass::Sys => 1,
+        } as u64;
+
+        macro_rules! w {
+            () => {
+                self.warps[wi]
+            };
+        }
+
+        match inst.op {
+            Op::NOP => {}
+            Op::LI => {
+                for &l in lanes {
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, inst.imm as u32);
+                }
+            }
+            Op::MOV => {
+                for &l in lanes {
+                    let v = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                }
+            }
+            // Integer ALU (register forms).
+            Op::ADD | Op::SUB | Op::MUL | Op::DIV | Op::DIVU | Op::REM | Op::REMU | Op::AND
+            | Op::OR | Op::XOR | Op::SLL | Op::SRL | Op::SRA | Op::MIN | Op::MAX => {
+                let bop = match inst.op {
+                    Op::ADD => BinOp::Add,
+                    Op::SUB => BinOp::Sub,
+                    Op::MUL => BinOp::Mul,
+                    Op::DIV => BinOp::SDiv,
+                    Op::DIVU => BinOp::UDiv,
+                    Op::REM => BinOp::SRem,
+                    Op::REMU => BinOp::URem,
+                    Op::AND => BinOp::And,
+                    Op::OR => BinOp::Or,
+                    Op::XOR => BinOp::Xor,
+                    Op::SLL => BinOp::Shl,
+                    Op::SRL => BinOp::LShr,
+                    Op::SRA => BinOp::AShr,
+                    Op::MIN => BinOp::SMin,
+                    _ => BinOp::SMax,
+                };
+                for &l in lanes {
+                    let a = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    let b = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, scalar::bin_i(bop, a, b));
+                }
+            }
+            Op::ADDI | Op::ANDI | Op::ORI | Op::XORI | Op::SLLI | Op::SRLI | Op::SRAI => {
+                let bop = match inst.op {
+                    Op::ADDI => BinOp::Add,
+                    Op::ANDI => BinOp::And,
+                    Op::ORI => BinOp::Or,
+                    Op::XORI => BinOp::Xor,
+                    Op::SLLI => BinOp::Shl,
+                    Op::SRLI => BinOp::LShr,
+                    _ => BinOp::AShr,
+                };
+                for &l in lanes {
+                    let a = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    write_reg(
+                        &mut self.warps[wi].regs[l],
+                        inst.rd,
+                        scalar::bin_i(bop, a, inst.imm as u32),
+                    );
+                }
+            }
+            Op::SEQ | Op::SNE | Op::SLT | Op::SLE | Op::SLTU | Op::SGEU => {
+                let pred = match inst.op {
+                    Op::SEQ => ICmp::Eq,
+                    Op::SNE => ICmp::Ne,
+                    Op::SLT => ICmp::Slt,
+                    Op::SLE => ICmp::Sle,
+                    Op::SLTU => ICmp::Ult,
+                    _ => ICmp::Uge,
+                };
+                for &l in lanes {
+                    let a = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    let b = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                    write_reg(
+                        &mut self.warps[wi].regs[l],
+                        inst.rd,
+                        scalar::icmp(pred, a, b) as u32,
+                    );
+                }
+            }
+            // Float ALU.
+            Op::FADD | Op::FSUB | Op::FMUL | Op::FDIV | Op::FMIN | Op::FMAX => {
+                let bop = match inst.op {
+                    Op::FADD => BinOp::FAdd,
+                    Op::FSUB => BinOp::FSub,
+                    Op::FMUL => BinOp::FMul,
+                    Op::FDIV => BinOp::FDiv,
+                    Op::FMIN => BinOp::FMin,
+                    _ => BinOp::FMax,
+                };
+                for &l in lanes {
+                    let a = f32::from_bits(read_reg(&self.warps[wi].regs[l], inst.rs1));
+                    let b = f32::from_bits(read_reg(&self.warps[wi].regs[l], inst.rs2));
+                    write_reg(
+                        &mut self.warps[wi].regs[l],
+                        inst.rd,
+                        scalar::bin_f(bop, a, b).to_bits(),
+                    );
+                }
+            }
+            Op::FSQRT | Op::FNEG | Op::FABS | Op::FEXP | Op::FLOG | Op::FFLOOR | Op::FCVTWS
+            | Op::FCVTSW | Op::FMVXW | Op::FMVWX => {
+                let uop = match inst.op {
+                    Op::FSQRT => UnOp::FSqrt,
+                    Op::FNEG => UnOp::FNeg,
+                    Op::FABS => UnOp::FAbs,
+                    Op::FEXP => UnOp::FExp,
+                    Op::FLOG => UnOp::FLog,
+                    Op::FFLOOR => UnOp::FFloor,
+                    Op::FCVTWS => UnOp::FpToSi,
+                    Op::FCVTSW => UnOp::SiToFp,
+                    Op::FMVXW => UnOp::FToBits,
+                    _ => UnOp::BitsToF,
+                };
+                for &l in lanes {
+                    let a = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, scalar::un(uop, a));
+                }
+            }
+            Op::FEQ | Op::FNE | Op::FLT | Op::FLE | Op::FGT | Op::FGE => {
+                let pred = match inst.op {
+                    Op::FEQ => FCmp::Oeq,
+                    Op::FNE => FCmp::One,
+                    Op::FLT => FCmp::Olt,
+                    Op::FLE => FCmp::Ole,
+                    Op::FGT => FCmp::Ogt,
+                    _ => FCmp::Oge,
+                };
+                for &l in lanes {
+                    let a = f32::from_bits(read_reg(&self.warps[wi].regs[l], inst.rs1));
+                    let b = f32::from_bits(read_reg(&self.warps[wi].regs[l], inst.rs2));
+                    write_reg(
+                        &mut self.warps[wi].regs[l],
+                        inst.rd,
+                        scalar::fcmp(pred, a, b) as u32,
+                    );
+                }
+            }
+            Op::CMOV => {
+                for &l in lanes {
+                    let c = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    if c != 0 {
+                        let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                        write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                    }
+                }
+            }
+            // Memory.
+            Op::LW | Op::SW => {
+                let is_store = inst.op == Op::SW;
+                if is_store {
+                    stats.stores += 1;
+                } else {
+                    stats.loads += 1;
+                }
+                // Per-thread stacks live in core-local storage on Vortex:
+                // scratchpad timing, not the cache hierarchy.
+                let stack_end = crate::backend::emit::STACK_BASE
+                    + cfg.total_threads() * crate::backend::emit::STACK_SIZE;
+                let mut lines_buf = [0u32; 32];
+                let mut n_lines = 0usize;
+                let mut local_touched = false;
+                for &l in lanes {
+                    let addr = read_reg(&self.warps[wi].regs[l], inst.rs1)
+                        .wrapping_add(inst.imm as u32);
+                    let local_off = addr.wrapping_sub(LOCAL_BASE) as usize;
+                    if (crate::backend::emit::STACK_BASE..stack_end).contains(&addr) {
+                        // data via global memory image, scratchpad timing
+                        if is_store {
+                            let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                            mem.write_u32(addr, v).map_err(|f| {
+                                self.err(wi, pc, format!("stack store fault at {:#x}", f.addr))
+                            })?;
+                        } else {
+                            let v = mem.read_u32(addr).map_err(|f| {
+                                self.err(wi, pc, format!("stack load fault at {:#x}", f.addr))
+                            })?;
+                            write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                        }
+                        local_touched = true;
+                    } else if local_off + 4 <= self.local.len() {
+                        local_touched = true;
+                        if is_store {
+                            let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                            self.local[local_off..local_off + 4]
+                                .copy_from_slice(&v.to_le_bytes());
+                        } else {
+                            let v = u32::from_le_bytes(
+                                self.local[local_off..local_off + 4].try_into().unwrap(),
+                            );
+                            write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                        }
+                    } else {
+                        if is_store {
+                            let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                            mem.write_u32(addr, v).map_err(|f| {
+                                self.err(wi, pc, format!("store fault at {:#x}", f.addr))
+                            })?;
+                        } else {
+                            let v = mem.read_u32(addr).map_err(|f| {
+                                self.err(wi, pc, format!("load fault at {:#x}", f.addr))
+                            })?;
+                            write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                        }
+                        let line = addr / 64;
+                        if !lines_buf[..n_lines].contains(&line) {
+                            lines_buf[n_lines] = line;
+                            n_lines += 1;
+                        }
+                    }
+                }
+                // Timing: coalesced unique lines through L1 -> L2 -> DRAM.
+                let mut max_lat = 0u64;
+                stats.mem_requests += n_lines as u64;
+                for line in &lines_buf[..n_lines] {
+                    let lat = if self.l1.access_line(*line) {
+                        stats.l1_hits += 1;
+                        self.l1.latency() as u64
+                    } else {
+                        stats.l1_misses += 1;
+                        match l2 {
+                            Some(l2c) => {
+                                if l2c.access_line(*line) {
+                                    stats.l2_hits += 1;
+                                    l2c.latency() as u64
+                                } else {
+                                    stats.l2_misses += 1;
+                                    cfg.mem_latency as u64
+                                }
+                            }
+                            None => cfg.mem_latency as u64,
+                        }
+                    };
+                    max_lat = max_lat.max(lat);
+                }
+                if local_touched {
+                    stats.local_accesses += 1;
+                    max_lat = max_lat.max(2);
+                }
+                cost = max_lat + n_lines.saturating_sub(1) as u64;
+                cost = cost.max(1);
+            }
+            Op::AMOADD | Op::AMOAND | Op::AMOOR | Op::AMOXOR | Op::AMOMIN | Op::AMOMAX
+            | Op::AMOSWAP | Op::AMOCAS => {
+                stats.atomics += 1;
+                for &l in lanes {
+                    let addr = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
+                    let local_off = addr.wrapping_sub(LOCAL_BASE) as usize;
+                    let old = if local_off + 4 <= self.local.len() {
+                        u32::from_le_bytes(self.local[local_off..local_off + 4].try_into().unwrap())
+                    } else {
+                        mem.read_u32(addr)
+                            .map_err(|f| self.err(wi, pc, format!("atomic fault at {:#x}", f.addr)))?
+                    };
+                    let new = match inst.op {
+                        Op::AMOADD => old.wrapping_add(v),
+                        Op::AMOAND => old & v,
+                        Op::AMOOR => old | v,
+                        Op::AMOXOR => old ^ v,
+                        Op::AMOMIN => (old as i32).min(v as i32) as u32,
+                        Op::AMOMAX => (old as i32).max(v as i32) as u32,
+                        Op::AMOSWAP => v,
+                        _ => {
+                            // CAS: rd holds the expected value on entry.
+                            let expect = read_reg(&self.warps[wi].regs[l], inst.rd);
+                            if old == expect {
+                                v
+                            } else {
+                                old
+                            }
+                        }
+                    };
+                    if local_off + 4 <= self.local.len() {
+                        self.local[local_off..local_off + 4].copy_from_slice(&new.to_le_bytes());
+                    } else {
+                        mem.write_u32(addr, new)
+                            .map_err(|f| self.err(wi, pc, format!("atomic fault at {:#x}", f.addr)))?;
+                    }
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, old);
+                }
+                cost = (l2.as_ref().map(|c| c.latency()).unwrap_or(cfg.mem_latency) as u64)
+                    + lanes.len() as u64;
+            }
+            // Branches.
+            Op::BEQZ | Op::BNEZ => {
+                let v = self.uniform_read(wi, inst.rs1, pc)?;
+                let taken = if inst.op == Op::BEQZ { v == 0 } else { v != 0 };
+                if taken {
+                    next_pc = inst.imm as u32;
+                }
+            }
+            Op::J => next_pc = inst.imm as u32,
+            Op::JAL => {
+                for &l in lanes {
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, pc + 1);
+                }
+                next_pc = inst.imm as u32;
+            }
+            Op::JALR => {
+                let target = self.uniform_read(wi, inst.rs1, pc)?;
+                for &l in lanes {
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, pc + 1);
+                }
+                next_pc = target.wrapping_add(inst.imm as u32);
+            }
+            Op::ECALL => {
+                if inst.imm != 0 {
+                    return Err(self.err(wi, pc, format!("trap: ecall {}", inst.imm)));
+                }
+                // ecall 0: retire the warp.
+                w!().active = false;
+            }
+            Op::CSRR => {
+                let id = CsrId::from_u32(inst.imm as u32);
+                for &l in lanes {
+                    let v = match id {
+                        CsrId::LaneId => l as u32,
+                        CsrId::WarpId => wi as u32,
+                        CsrId::CoreId => self.id,
+                        CsrId::NumThreads => cfg.threads_per_warp,
+                        CsrId::NumWarps => cfg.warps_per_core,
+                        CsrId::NumCores => cfg.num_cores,
+                    };
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                }
+            }
+            // ---- Vortex extensions ----
+            Op::TMC => {
+                stats.tmcs += 1;
+                let v = if inst.rs1 == 0 {
+                    0
+                } else {
+                    self.uniform_read(wi, inst.rs1, pc)?
+                };
+                let new = v & self.full_mask;
+                if new == 0 {
+                    w!().active = false;
+                } else {
+                    w!().tmask = new;
+                }
+            }
+            Op::WSPAWN => {
+                let count = self.uniform_read(wi, inst.rs1, pc)? as usize;
+                let target = inst.imm as u32;
+                for k in 1..=count.min(self.warps.len() - 1) {
+                    let w = &mut self.warps[k];
+                    if !w.active {
+                        w.active = true;
+                        w.pc = target;
+                        w.tmask = 1;
+                        w.stall_until = cycle + 1;
+                    }
+                }
+            }
+            Op::SPLIT | Op::SPLITN => {
+                stats.splits += 1;
+                let (else_pc, join_pc) = MachInst::split_targets(inst.imm);
+                let neg = inst.op == Op::SPLITN;
+                let mut t = 0u32;
+                for &l in lanes {
+                    let p = read_reg(&self.warps[wi].regs[l], inst.rs1) != 0;
+                    if p ^ neg {
+                        t |= 1 << l;
+                    }
+                }
+                let e = tmask & !t;
+                let w = &mut self.warps[wi];
+                if t == 0 {
+                    w.ipdom.push(IpdomEntry {
+                        restore: tmask,
+                        other: 0,
+                        other_pc: 0,
+                        join_pc,
+                    });
+                    next_pc = else_pc;
+                } else if e == 0 {
+                    w.ipdom.push(IpdomEntry {
+                        restore: tmask,
+                        other: 0,
+                        other_pc: 0,
+                        join_pc,
+                    });
+                } else {
+                    w.ipdom.push(IpdomEntry {
+                        restore: tmask,
+                        other: e,
+                        other_pc: else_pc,
+                        join_pc,
+                    });
+                    w.tmask = t;
+                }
+                if w.ipdom.len() > 4096 {
+                    return Err(self.err(wi, pc, "IPDOM stack overflow"));
+                }
+            }
+            Op::JOIN => {
+                stats.joins += 1;
+                let w = &mut self.warps[wi];
+                loop {
+                    match w.ipdom.last_mut() {
+                        Some(en) if en.join_pc == pc => {
+                            if en.other != 0 {
+                                w.tmask = en.other;
+                                next_pc = en.other_pc;
+                                en.other = 0;
+                                break;
+                            } else {
+                                w.tmask = en.restore;
+                                w.ipdom.pop();
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+            }
+            Op::PRED => {
+                stats.preds += 1;
+                let mut p = 0u32;
+                for &l in lanes {
+                    if read_reg(&self.warps[wi].regs[l], inst.rs1) != 0 {
+                        p |= 1 << l;
+                    }
+                }
+                let new = tmask & p;
+                if new == 0 {
+                    let restore = self.uniform_read(wi, inst.rs2, pc)?;
+                    let w = &mut self.warps[wi];
+                    w.tmask = restore & self.full_mask;
+                    next_pc = inst.imm as u32;
+                    if w.tmask == 0 {
+                        return Err(self.err(wi, pc, "vx_pred restored empty mask"));
+                    }
+                } else {
+                    self.warps[wi].tmask = new;
+                }
+            }
+            Op::BAR => {
+                stats.barriers_executed += 1;
+                let count = self.uniform_read(wi, inst.rs1, pc)?;
+                let id = inst.imm as u32;
+                let arrived = self.barriers.entry(id).or_insert(0);
+                *arrived |= 1 << wi;
+                if arrived.count_ones() >= count {
+                    let mask = *arrived;
+                    self.barriers.remove(&id);
+                    for k in 0..self.warps.len() {
+                        if mask >> k & 1 == 1 {
+                            self.warps[k].at_barrier = false;
+                        }
+                    }
+                } else {
+                    self.warps[wi].at_barrier = true;
+                }
+            }
+            Op::MASK => {
+                for &l in lanes {
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, tmask);
+                }
+            }
+            Op::SHFL => {
+                stats.warp_ops += 1;
+                let snapshot: Vec<u32> = (0..nt)
+                    .map(|l| read_reg(&self.warps[wi].regs[l], inst.rs1))
+                    .collect();
+                for &l in lanes {
+                    let src =
+                        read_reg(&self.warps[wi].regs[l], inst.rs2) % cfg.threads_per_warp;
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, snapshot[src as usize]);
+                }
+            }
+            Op::VOTEALL | Op::VOTEANY | Op::BALLOT => {
+                stats.warp_ops += 1;
+                let mut ballot = 0u32;
+                for &l in lanes {
+                    if read_reg(&self.warps[wi].regs[l], inst.rs1) != 0 {
+                        ballot |= 1 << l;
+                    }
+                }
+                let v = match inst.op {
+                    Op::VOTEALL => (ballot == tmask) as u32,
+                    Op::VOTEANY => (ballot != 0) as u32,
+                    _ => ballot,
+                };
+                for &l in lanes {
+                    write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
+                }
+            }
+            Op::PRINTI | Op::PRINTF => {
+                for &l in lanes {
+                    let v = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                    let s = if inst.op == Op::PRINTI {
+                        format!("c{}w{}l{}: {}", self.id, wi, l, v as i32)
+                    } else {
+                        format!("c{}w{}l{}: {}", self.id, wi, l, f32::from_bits(v))
+                    };
+                    stats.prints.push(s);
+                }
+            }
+        }
+        let w = &mut self.warps[wi];
+        w.pc = next_pc;
+        w.stall_until = cycle + cost;
+        Ok(())
+    }
+}
+
+#[inline]
+fn read_reg(regs: &[u32; 64], r: u8) -> u32 {
+    if r == 0 {
+        0
+    } else {
+        regs[r as usize]
+    }
+}
+
+#[inline]
+fn write_reg(regs: &mut [u32; 64], r: u8, v: u32) {
+    if r != 0 {
+        regs[r as usize] = v;
+    }
+}

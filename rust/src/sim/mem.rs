@@ -1,0 +1,212 @@
+//! Device memory (segmented flat memory) and the set-associative cache
+//! timing model with LRU replacement.
+
+use super::CacheConfig;
+
+#[derive(Debug)]
+pub struct Segment {
+    pub base: u32,
+    pub data: Vec<u8>,
+}
+
+/// Global device memory: data / stack / heap segments.
+#[derive(Debug, Default)]
+pub struct GlobalMem {
+    pub segs: Vec<Segment>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MemFault {
+    pub addr: u32,
+    pub write: bool,
+}
+
+impl GlobalMem {
+    pub fn add_segment(&mut self, base: u32, size: u32) {
+        self.segs.push(Segment {
+            base,
+            data: vec![0; size as usize],
+        });
+        // Most-recently added first is wrong for hot paths; keep sorted by
+        // base so lookup can scan; heap (largest traffic) is added last and
+        // probed first by iterating in reverse.
+    }
+
+    #[inline]
+    fn seg_mut(&mut self, addr: u32) -> Option<(&mut Segment, usize)> {
+        for s in self.segs.iter_mut().rev() {
+            let off = addr.wrapping_sub(s.base);
+            if (off as usize) < s.data.len() {
+                return Some((s, off as usize));
+            }
+        }
+        None
+    }
+
+    #[inline]
+    fn seg(&self, addr: u32) -> Option<(&Segment, usize)> {
+        for s in self.segs.iter().rev() {
+            let off = addr.wrapping_sub(s.base);
+            if (off as usize) < s.data.len() {
+                return Some((s, off as usize));
+            }
+        }
+        None
+    }
+
+    #[inline]
+    pub fn read_u32(&self, addr: u32) -> Result<u32, MemFault> {
+        let (s, off) = self.seg(addr).ok_or(MemFault { addr, write: false })?;
+        if off + 4 > s.data.len() {
+            return Err(MemFault { addr, write: false });
+        }
+        Ok(u32::from_le_bytes([
+            s.data[off],
+            s.data[off + 1],
+            s.data[off + 2],
+            s.data[off + 3],
+        ]))
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, addr: u32, v: u32) -> Result<(), MemFault> {
+        let (s, off) = self.seg_mut(addr).ok_or(MemFault { addr, write: true })?;
+        if off + 4 > s.data.len() {
+            return Err(MemFault { addr, write: true });
+        }
+        s.data[off..off + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn write_bytes(&mut self, addr: u32, bytes: &[u8]) -> Result<(), MemFault> {
+        let (s, off) = self.seg_mut(addr).ok_or(MemFault { addr, write: true })?;
+        if off + bytes.len() > s.data.len() {
+            return Err(MemFault { addr, write: true });
+        }
+        s.data[off..off + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn read_bytes(&self, addr: u32, len: usize) -> Result<Vec<u8>, MemFault> {
+        let (s, off) = self.seg(addr).ok_or(MemFault { addr, write: false })?;
+        if off + len > s.data.len() {
+            return Err(MemFault { addr, write: false });
+        }
+        Ok(s.data[off..off + len].to_vec())
+    }
+}
+
+/// Set-associative LRU cache (tags only — a timing model).
+#[derive(Debug)]
+pub struct Cache {
+    cfg: CacheConfig,
+    /// tags[set * ways + way] = Some(tag)
+    tags: Vec<Option<u32>>,
+    /// LRU counters (higher = more recent).
+    lru: Vec<u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Cache {
+        Cache {
+            cfg,
+            tags: vec![None; (cfg.sets * cfg.ways) as usize],
+            lru: vec![0; (cfg.sets * cfg.ways) as usize],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn line_of(&self, addr: u32) -> u32 {
+        addr / self.cfg.line
+    }
+
+    /// Access one line (by line number). Returns hit.
+    pub fn access_line(&mut self, line: u32) -> bool {
+        self.tick += 1;
+        let set = (line % self.cfg.sets) as usize;
+        let ways = self.cfg.ways as usize;
+        let base = set * ways;
+        for w in 0..ways {
+            if self.tags[base + w] == Some(line) {
+                self.lru[base + w] = self.tick;
+                self.hits += 1;
+                return true;
+            }
+        }
+        // Miss: fill LRU way.
+        let mut victim = 0;
+        for w in 1..ways {
+            if self.lru[base + w] < self.lru[base + victim] {
+                victim = w;
+            }
+        }
+        self.tags[base + victim] = Some(line);
+        self.lru[base + victim] = self.tick;
+        self.misses += 1;
+        false
+    }
+
+    pub fn latency(&self) -> u32 {
+        self.cfg.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_rw() {
+        let mut m = GlobalMem::default();
+        m.add_segment(0x1000, 0x100);
+        m.add_segment(0x4000_0000, 0x1000);
+        m.write_u32(0x1004, 0xdeadbeef).unwrap();
+        assert_eq!(m.read_u32(0x1004).unwrap(), 0xdeadbeef);
+        m.write_u32(0x4000_0ffc, 7).unwrap();
+        assert_eq!(m.read_u32(0x4000_0ffc).unwrap(), 7);
+        assert!(m.read_u32(0x2000).is_err());
+        assert!(m.write_u32(0x0, 1).is_err());
+        m.write_bytes(0x1000, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(m.read_bytes(0x1000, 5).unwrap(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn cache_lru_behaviour() {
+        let mut c = Cache::new(CacheConfig {
+            sets: 1,
+            ways: 2,
+            line: 64,
+            latency: 2,
+        });
+        assert!(!c.access_line(0)); // miss
+        assert!(!c.access_line(1)); // miss
+        assert!(c.access_line(0)); // hit
+        assert!(!c.access_line(2)); // miss, evicts line 1 (LRU)
+        assert!(c.access_line(0)); // still resident
+        assert!(!c.access_line(1)); // was evicted
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn cache_indexing_spreads_sets() {
+        let mut c = Cache::new(CacheConfig {
+            sets: 4,
+            ways: 1,
+            line: 64,
+            latency: 2,
+        });
+        // Lines 0..4 map to different sets: all miss, none evict another.
+        for l in 0..4 {
+            assert!(!c.access_line(l));
+        }
+        for l in 0..4 {
+            assert!(c.access_line(l));
+        }
+    }
+}

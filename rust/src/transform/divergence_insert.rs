@@ -1,0 +1,789 @@
+//! Divergence-management function insertion — paper §4.3.3, Algorithm 2.
+//!
+//! Classifies every divergent conditional branch as either a divergent
+//! *loop* branch (its IPDOM lies outside its loop — TRANSFORM_LOOP) or a
+//! divergent plain branch (TRANSFORM_BRANCH):
+//!
+//! * **TRANSFORM_BRANCH** replaces the `CondBr` with a `SplitBr` carrying
+//!   its reconvergence block, and places a `Join` at that block's head.
+//!   Multiple splits may share one reconvergence block (early returns,
+//!   short-circuit booleans); the stack-popping `Join` semantics handle the
+//!   nesting (see DESIGN.md).
+//! * **TRANSFORM_LOOP** saves the active mask in the preheader
+//!   (`vx_active_threads`), converts every exiting branch to a `PredBr`
+//!   (`vx_pred`) that masks off leaving lanes and restores the saved mask
+//!   when none remain. Loops with several distinct exit targets are first
+//!   unified through per-lane exit-code/live-out slots in private memory,
+//!   routed by a (divergent, later split-managed) dispatch chain.
+
+use crate::analysis::tti::TargetDivergenceInfo;
+use crate::analysis::{uniformity, UniformityOptions};
+use crate::ir::dom::PostDomTree;
+use crate::ir::loops::{ensure_preheader, LoopInfo};
+use crate::ir::*;
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Default)]
+pub struct DivergenceReport {
+    pub splits: usize,
+    pub joins: usize,
+    pub loops_transformed: usize,
+    pub pred_branches: usize,
+    pub exit_unified_loops: usize,
+    pub warnings: Vec<String>,
+}
+
+pub fn run(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+) -> DivergenceReport {
+    let mut report = DivergenceReport::default();
+    transform_loops(m, fid, opts, tti, &mut report);
+    transform_branches(m, fid, opts, tti, &mut report);
+    report
+}
+
+// ---------------------------------------------------------------------------
+// TRANSFORM_LOOP
+// ---------------------------------------------------------------------------
+
+fn transform_loops(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+    report: &mut DivergenceReport,
+) {
+    let mut done_headers: HashSet<BlockId> = HashSet::new();
+    for _ in 0..256 {
+        let u = uniformity::analyze(m, fid, opts, tti);
+        let f = m.func(fid);
+        let li = LoopInfo::build(f);
+        // Deepest loop with a divergent exiting CondBr first.
+        let mut cand: Option<usize> = None;
+        for (i, l) in li.loops.iter().enumerate() {
+            if done_headers.contains(&l.header) {
+                continue;
+            }
+            let divergent_exit = l.exiting_blocks(f).iter().any(|&b| {
+                matches!(f.inst(f.term(b)).kind, InstKind::CondBr { .. })
+                    && !u.branch_uniform(b)
+            });
+            if divergent_exit {
+                cand = match cand {
+                    None => Some(i),
+                    Some(j) if li.loops[i].depth > li.loops[j].depth => Some(i),
+                    j => j,
+                };
+            }
+        }
+        let Some(ci) = cand else { return };
+        let header = li.loops[ci].header;
+        let blocks = li.loops[ci].blocks.clone();
+        done_headers.insert(header);
+        transform_one_loop(m.func_mut(fid), header, &blocks, report);
+        report.loops_transformed += 1;
+    }
+    panic!("divergent loop transformation did not converge");
+}
+
+/// Exiting CondBr info: (block, exit_cond_value_is_true_branch, exit_succ,
+/// cont_succ).
+fn exiting_branches(f: &Function, blocks: &HashSet<BlockId>) -> Vec<(BlockId, bool, BlockId, BlockId)> {
+    let mut out = vec![];
+    for &b in blocks {
+        if f.blocks[b.idx()].insts.is_empty() {
+            continue;
+        }
+        if let InstKind::CondBr { t, f: fb, .. } = f.inst(f.term(b)).kind {
+            let t_out = !blocks.contains(&t);
+            let f_out = !blocks.contains(&fb);
+            match (t_out, f_out) {
+                (true, false) => out.push((b, true, t, fb)),
+                (false, true) => out.push((b, false, fb, t)),
+                (true, true) => {
+                    // Both arms leave the loop — a degenerate shape the
+                    // front-end never emits (simplify folds it). Leave it
+                    // to TRANSFORM_BRANCH, which is still correct: both
+                    // paths reconverge outside at the branch's IPDOM.
+                }
+                (false, false) => {}
+            }
+        }
+    }
+    out.sort_by_key(|(b, ..)| *b);
+    out
+}
+
+fn transform_one_loop(
+    f: &mut Function,
+    header: BlockId,
+    blocks: &HashSet<BlockId>,
+    report: &mut DivergenceReport,
+) {
+    let ph = ensure_preheader(f, header, blocks);
+    // Read the active mask in the preheader.
+    let term_pos = f.blocks[ph.idx()].insts.len() - 1;
+    let mask_id = f.insert_inst(
+        ph,
+        term_pos,
+        InstKind::Intr {
+            intr: Intr::Mask,
+            args: vec![],
+        },
+        Type::I32,
+    );
+    let mval = Val::Inst(mask_id);
+
+    let exits = exiting_branches(f, blocks);
+    let mut targets: Vec<BlockId> = vec![];
+    for (_, _, t, c) in &exits {
+        if !targets.contains(t) {
+            targets.push(*t);
+        }
+        // both-arms-exit case contributes the cont target too
+        if !blocks.contains(c) && !targets.contains(c) {
+            targets.push(*c);
+        }
+    }
+
+    if targets.len() == 1 {
+        // Simple path: every exit goes to the same block.
+        for (b, exit_on_true, exit_t, cont) in exits {
+            let term = f.term(b);
+            let cond = match f.inst(term).kind {
+                InstKind::CondBr { cond, .. } => cond,
+                _ => continue,
+            };
+            let cont_pred = if exit_on_true {
+                // continue-pred = !cond
+                let pos = f.blocks[b.idx()].insts.len() - 1;
+                Val::Inst(f.insert_inst(
+                    b,
+                    pos,
+                    InstKind::Bin {
+                        op: BinOp::Xor,
+                        a: cond,
+                        b: Val::cb(true),
+                    },
+                    Type::I1,
+                ))
+            } else {
+                cond
+            };
+            f.inst_mut(term).kind = InstKind::PredBr {
+                cond: cont_pred,
+                mask: mval,
+                body: cont,
+                exit: exit_t,
+            };
+            report.pred_branches += 1;
+        }
+        return;
+    }
+
+    // ---- Exit unification (multiple exit targets) ----
+    report.exit_unified_loops += 1;
+    let dom = crate::ir::dom::DomTree::build(f);
+    // Per-lane exit code slot + live-out slots for phis in the targets.
+    let code_slot = Val::Inst(f.insert_inst(
+        f.entry,
+        0,
+        InstKind::Alloca { size: 4 },
+        Type::Ptr(AddrSpace::Private),
+    ));
+    // (A) Collect target phis fed from exiting blocks; one slot per phi.
+    let exit_blocks: HashSet<BlockId> = exits.iter().map(|(b, ..)| *b).collect();
+    let mut phi_slots: HashMap<InstId, Val> = HashMap::new();
+    for &t in &targets {
+        for &i in f.blocks[t.idx()].insts.clone().iter() {
+            if let InstKind::Phi { incs } = &f.inst(i).kind {
+                if incs.iter().any(|(p, _)| exit_blocks.contains(p)) {
+                    let slot = Val::Inst(f.insert_inst(
+                        f.entry,
+                        0,
+                        InstKind::Alloca { size: 4 },
+                        Type::Ptr(AddrSpace::Private),
+                    ));
+                    phi_slots.insert(i, slot);
+                }
+            } else {
+                break;
+            }
+        }
+    }
+    // (B) Generalized live-outs: loop-defined values with uses outside the
+    // loop (beyond the direct-target phis of (A)) are spilled per-lane at
+    // each exit their definition dominates and reloaded at the use sites.
+    let mut liveout_slots: HashMap<InstId, Val> = HashMap::new();
+    let mut liveout_users: HashMap<InstId, Vec<InstId>> = HashMap::new();
+    for (idx, inst) in f.insts.clone().iter().enumerate() {
+        if inst.dead || inst.ty == Type::Void || !blocks.contains(&inst.block) {
+            continue;
+        }
+        let v = InstId(idx as u32);
+        let users: Vec<InstId> = f
+            .insts
+            .iter()
+            .enumerate()
+            .filter(|(ui, u)| {
+                !u.dead
+                    && !blocks.contains(&u.block)
+                    && *ui != idx
+                    && u.kind.operands().contains(&Val::Inst(v))
+            })
+            .map(|(ui, _)| InstId(ui as u32))
+            .collect();
+        if users.is_empty() {
+            continue;
+        }
+        let slot = Val::Inst(f.insert_inst(
+            f.entry,
+            0,
+            InstKind::Alloca { size: 4 },
+            Type::Ptr(AddrSpace::Private),
+        ));
+        liveout_slots.insert(v, slot);
+        liveout_users.insert(v, users);
+    }
+    let landing = f.add_block("lexit");
+    // Per exiting branch: diamond storing code+liveouts for leaving lanes,
+    // then a PredBr that masks them off.
+    for (b, exit_on_true, exit_t, cont) in &exits {
+        let (b, exit_t, cont) = (*b, *exit_t, *cont);
+        let term = f.term(b);
+        let cond = match f.inst(term).kind {
+            InstKind::CondBr { cond, .. } => cond,
+            _ => continue,
+        };
+        let pos = f.blocks[b.idx()].insts.len() - 1;
+        let exit_cond = if *exit_on_true {
+            cond
+        } else {
+            Val::Inst(f.insert_inst(
+                b,
+                pos,
+                InstKind::Bin {
+                    op: BinOp::Xor,
+                    a: cond,
+                    b: Val::cb(true),
+                },
+                Type::I1,
+            ))
+        };
+        let store_blk = f.add_block("lexit.store");
+        let back_blk = f.add_block("lexit.back");
+        // Stores in store_blk: live-outs then exit code.
+        let tidx = targets.iter().position(|&x| x == exit_t).unwrap();
+        for (&phi, &slot) in &phi_slots {
+            let (phi_block, inc) = {
+                let pdat = f.inst(phi);
+                let inc = if let InstKind::Phi { incs } = &pdat.kind {
+                    incs.iter().find(|(p, _)| *p == b).map(|(_, v)| *v)
+                } else {
+                    None
+                };
+                (pdat.block, inc)
+            };
+            if phi_block != exit_t {
+                continue;
+            }
+            if let Some(v) = inc {
+                f.push_inst(
+                    store_blk,
+                    InstKind::Store { ptr: slot, val: v },
+                    Type::Void,
+                );
+            }
+        }
+        // (B) spill live-outs whose definition dominates this exit.
+        for (&v, &slot) in &liveout_slots {
+            if dom.dominates(f.inst(v).block, b) {
+                f.push_inst(
+                    store_blk,
+                    InstKind::Store {
+                        ptr: slot,
+                        val: Val::Inst(v),
+                    },
+                    Type::Void,
+                );
+            }
+        }
+        f.push_inst(
+            store_blk,
+            InstKind::Store {
+                ptr: code_slot,
+                val: Val::ci(tidx as i64),
+            },
+            Type::Void,
+        );
+        f.push_inst(
+            store_blk,
+            InstKind::Br { target: back_blk },
+            Type::Void,
+        );
+        // back_blk: join; continue-pred; PredBr.
+        f.push_inst(
+            back_blk,
+            InstKind::Intr {
+                intr: Intr::Join,
+                args: vec![],
+            },
+            Type::Void,
+        );
+        let not_exit = f.push_inst(
+            back_blk,
+            InstKind::Bin {
+                op: BinOp::Xor,
+                a: exit_cond,
+                b: Val::cb(true),
+            },
+            Type::I1,
+        );
+        f.push_inst(
+            back_blk,
+            InstKind::PredBr {
+                cond: Val::Inst(not_exit),
+                mask: mval,
+                body: cont,
+                exit: landing,
+            },
+            Type::Void,
+        );
+        // Replace the exiting branch with the store diamond.
+        f.inst_mut(term).kind = InstKind::SplitBr {
+            cond: exit_cond,
+            neg: false,
+            then_b: store_blk,
+            else_b: back_blk,
+            ipdom: back_blk,
+        };
+        // The continue edge moved from b to back_blk: rewrite phis in cont.
+        for &i in f.blocks[cont.idx()].insts.clone().iter() {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(i).kind {
+                for (p, _) in incs.iter_mut() {
+                    if *p == b {
+                        *p = back_blk;
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+        report.splits += 1;
+        report.joins += 1;
+        report.pred_branches += 1;
+        // Remove the phi incomings from b in exit_t.
+        for &i in f.blocks[exit_t.idx()].insts.clone().iter() {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(i).kind {
+                incs.retain(|(p, _)| *p != b);
+            } else {
+                break;
+            }
+        }
+    }
+    // Landing dispatch chain: load code, route to each target through a
+    // reload block that feeds the target phis.
+    let code = Val::Inst(f.push_inst(
+        landing,
+        InstKind::Load { ptr: code_slot },
+        Type::I32,
+    ));
+    let mut chain = landing;
+    for (tidx, &t) in targets.iter().enumerate() {
+        let reload = f.add_block("lexit.reload");
+        // Reload live-outs for phis in t.
+        for &i in f.blocks[t.idx()].insts.clone().iter() {
+            if let Some(&slot) = phi_slots.get(&i) {
+                let lv = Val::Inst(f.push_inst(reload, InstKind::Load { ptr: slot }, f.inst(i).ty));
+                if let InstKind::Phi { incs } = &mut f.inst_mut(i).kind {
+                    incs.push((reload, lv));
+                }
+            }
+        }
+        f.push_inst(reload, InstKind::Br { target: t }, Type::Void);
+        if tidx + 1 == targets.len() {
+            // Last target: unconditional.
+            f.push_inst(chain, InstKind::Br { target: reload }, Type::Void);
+        } else {
+            let c = Val::Inst(f.push_inst(
+                chain,
+                InstKind::ICmp {
+                    pred: ICmp::Eq,
+                    a: code,
+                    b: Val::ci(tidx as i64),
+                },
+                Type::I1,
+            ));
+            let next = f.add_block("lexit.chain");
+            f.push_inst(
+                chain,
+                InstKind::CondBr {
+                    cond: c,
+                    t: reload,
+                    f: next,
+                },
+                Type::Void,
+            );
+            chain = next;
+        }
+    }
+    // (B) rewrite the remaining outside uses through the spill slots.
+    for (&v, users) in &liveout_users {
+        let slot = liveout_slots[&v];
+        let vty = f.inst(v).ty;
+        for &u in users {
+            if f.insts[u.idx()].dead {
+                continue;
+            }
+            let kind = f.inst(u).kind.clone();
+            if let InstKind::Phi { incs } = kind {
+                for (p, val) in incs {
+                    if val == Val::Inst(v) && !exit_blocks.contains(&p) {
+                        let pos = f.blocks[p.idx()].insts.len() - 1;
+                        let ld = Val::Inst(f.insert_inst(
+                            p,
+                            pos,
+                            InstKind::Load { ptr: slot },
+                            vty,
+                        ));
+                        if let InstKind::Phi { incs } = &mut f.inst_mut(u).kind {
+                            for (pp, vv) in incs.iter_mut() {
+                                if *pp == p && *vv == Val::Inst(v) {
+                                    *vv = ld;
+                                }
+                            }
+                        }
+                    }
+                }
+            } else {
+                let ub = f.inst(u).block;
+                let pos = f.blocks[ub.idx()]
+                    .insts
+                    .iter()
+                    .position(|&x| x == u)
+                    .unwrap();
+                let ld = Val::Inst(f.insert_inst(ub, pos, InstKind::Load { ptr: slot }, vty));
+                f.inst_mut(u)
+                    .kind
+                    .map_operands(|x| if x == Val::Inst(v) { ld } else { x });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TRANSFORM_BRANCH
+// ---------------------------------------------------------------------------
+
+fn transform_branches(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+    report: &mut DivergenceReport,
+) {
+    let mut skipped: HashSet<BlockId> = HashSet::new();
+    for _round in 0..64 {
+        let u = uniformity::analyze(m, fid, opts, tti);
+        let f = m.func(fid);
+        let pdom = PostDomTree::build(f);
+        let rpo = f.rpo();
+        let rpo_pos: HashMap<BlockId, usize> =
+            rpo.iter().enumerate().map(|(i, &b)| (b, i)).collect();
+        let mut work: Vec<(BlockId, BlockId)> = vec![];
+        for &b in &rpo {
+            if skipped.contains(&b) {
+                continue;
+            }
+            if !matches!(f.inst(f.term(b)).kind, InstKind::CondBr { .. }) {
+                continue;
+            }
+            if u.branch_uniform(b) {
+                continue;
+            }
+            match pdom.ipdom_of(b) {
+                Some(ip) => work.push((b, ip)),
+                None => {
+                    report.warnings.push(format!(
+                        "divergent branch b{} has no post-dominator; left unmanaged",
+                        b.0
+                    ));
+                    skipped.insert(b);
+                }
+            }
+        }
+        if work.is_empty() {
+            return;
+        }
+        // Outer-first (RPO order); join insertion after phis puts inner
+        // joins ahead of outer ones, matching the stack pop order.
+        work.sort_by_key(|(b, _)| rpo_pos[b]);
+        let f = m.func_mut(fid);
+        for (b, ip) in work {
+            let term = f.term(b);
+            if let InstKind::CondBr { cond, t, f: fb } = f.inst(term).kind {
+                f.inst_mut(term).kind = InstKind::SplitBr {
+                    cond,
+                    neg: false,
+                    then_b: t,
+                    else_b: fb,
+                    ipdom: ip,
+                };
+                report.splits += 1;
+                // Join after the phis of ip.
+                let nphis = f.blocks[ip.idx()]
+                    .insts
+                    .iter()
+                    .take_while(|&&i| matches!(f.inst(i).kind, InstKind::Phi { .. }))
+                    .count();
+                f.insert_inst(
+                    ip,
+                    nphis,
+                    InstKind::Intr {
+                        intr: Intr::Join,
+                        args: vec![],
+                    },
+                    Type::Void,
+                );
+                report.joins += 1;
+            }
+        }
+    }
+    panic!("divergent branch transformation did not converge");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tti::VortexTti;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    fn opts() -> UniformityOptions {
+        UniformityOptions::all()
+    }
+
+    /// Simple divergent diamond gets split + join.
+    #[test]
+    fn splits_divergent_diamond() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let j = f.add_block("j");
+        let mut b = Builder::new(&mut f);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let c = b.icmp(ICmp::Slt, lane, Val::ci(8));
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        b.br(j);
+        b.set_block(e);
+        b.br(j);
+        b.set_block(j);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let rep = run(&mut m, fid, &opts(), &VortexTti);
+        assert_eq!(rep.splits, 1);
+        assert_eq!(rep.joins, 1);
+        verify_function(&m.funcs[0]).unwrap();
+        let f = &m.funcs[0];
+        assert!(matches!(
+            f.inst(f.term(f.entry)).kind,
+            InstKind::SplitBr { ipdom, .. } if ipdom == j
+        ));
+        // Join is the first instruction of j.
+        let j0 = f.blocks[j.idx()].insts[0];
+        assert!(matches!(
+            f.inst(j0).kind,
+            InstKind::Intr {
+                intr: Intr::Join,
+                ..
+            }
+        ));
+    }
+
+    /// Uniform branch untouched.
+    #[test]
+    fn uniform_branch_untouched() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::new(&mut f);
+        let c = b.icmp(ICmp::Slt, Val::Arg(0), Val::ci(8));
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        b.br(e);
+        b.set_block(e);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let rep = run(&mut m, fid, &opts(), &VortexTti);
+        assert_eq!(rep.splits, 0);
+        assert!(matches!(
+            m.funcs[0].inst(m.funcs[0].term(m.funcs[0].entry)).kind,
+            InstKind::CondBr { .. }
+        ));
+    }
+
+    /// Divergent while loop: exiting branch becomes PredBr with the
+    /// preheader mask.
+    #[test]
+    fn divergent_loop_gets_pred() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i, lane);
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let i2 = b.add(i, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        b.ret(None);
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+        }
+        let fid = m.add_func(f);
+        let rep = run(&mut m, fid, &opts(), &VortexTti);
+        assert_eq!(rep.loops_transformed, 1);
+        assert_eq!(rep.pred_branches, 1);
+        verify_function(&m.funcs[0]).unwrap();
+        let f = &m.funcs[0];
+        // Header terminator is a PredBr whose mask comes from Intr::Mask.
+        match f.inst(f.term(h)).kind {
+            InstKind::PredBr { mask: Val::Inst(mi), body: bb, exit: ex, .. } => {
+                assert!(matches!(
+                    f.inst(mi).kind,
+                    InstKind::Intr {
+                        intr: Intr::Mask,
+                        ..
+                    }
+                ));
+                assert_eq!(bb, body);
+                assert_eq!(ex, exit);
+            }
+            ref k => panic!("expected PredBr, got {k:?}"),
+        }
+    }
+
+    /// Loop with a divergent break to a *different* target than the header
+    /// exit: exit unification kicks in.
+    #[test]
+    fn multi_target_exit_unification() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::I32,
+        );
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit1 = f.add_block("exit1");
+        let exit2 = f.add_block("exit2");
+        let done = f.add_block("done");
+        let mut b = Builder::at(&mut f, entry);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i, Val::Arg(0));
+        b.cond_br(c, body, exit1);
+        b.set_block(body);
+        let brk = b.icmp(ICmp::Eq, i, lane); // divergent break
+        let i2 = b.add(i, Val::ci(1));
+        b.cond_br(brk, exit2, h);
+        b.set_block(exit1);
+        b.br(done);
+        b.set_block(exit2);
+        b.br(done);
+        b.set_block(done);
+        let r = b.phi(Type::I32, vec![(exit1, Val::ci(1)), (exit2, Val::ci(2))]);
+        b.ret(Some(r));
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+        }
+        let fid = m.add_func(f);
+        let rep = run(&mut m, fid, &opts(), &VortexTti);
+        assert_eq!(rep.exit_unified_loops, 1);
+        assert!(rep.pred_branches >= 2);
+        verify_function(&m.funcs[0]).unwrap();
+        // Scalar semantics preserved (SplitBr/PredBr interpret as branches).
+        let mut mem = vec![0u8; 1024];
+        crate::ir::interp::run_kernel_scalar(
+            &m, fid, &[5], [1, 1, 1], [1, 1, 1], &mut mem, 512, &[],
+        )
+        .unwrap();
+    }
+
+    /// Two early-exit style divergent branches sharing a reconvergence
+    /// block produce two joins at that block.
+    #[test]
+    fn shared_ipdom_double_join() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let r1 = f.add_block("r1");
+        let r2 = f.add_block("r2");
+        let e2 = f.add_block("e2");
+        let fin = f.add_block("fin");
+        let mut b = Builder::new(&mut f);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let c1 = b.icmp(ICmp::Slt, lane, Val::ci(4));
+        b.cond_br(c1, fin, r1);
+        b.set_block(r1);
+        let c2 = b.icmp(ICmp::Slt, lane, Val::ci(8));
+        b.cond_br(c2, fin, r2);
+        b.set_block(r2);
+        b.br(e2);
+        b.set_block(e2);
+        b.br(fin);
+        b.set_block(fin);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let rep = run(&mut m, fid, &opts(), &VortexTti);
+        assert_eq!(rep.splits, 2);
+        assert_eq!(rep.joins, 2);
+        let f = &m.funcs[0];
+        let joins_at_fin = f.blocks[fin.idx()]
+            .insts
+            .iter()
+            .filter(|&&i| {
+                matches!(
+                    f.inst(i).kind,
+                    InstKind::Intr {
+                        intr: Intr::Join,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(joins_at_fin, 2);
+        verify_function(f).unwrap();
+    }
+}

@@ -1,0 +1,333 @@
+//! Function inlining. GPU compilers inline aggressively; VOLT inlines the
+//! kernel body into the generated dispatcher unconditionally and inlines
+//! small internal device functions, leaving larger ones as real calls so
+//! the Algorithm-1 argument analysis (Uni-Func) has something to refine.
+
+use crate::ir::*;
+use std::collections::HashMap;
+
+/// Inline one call site. Returns false (no change) for recursive calls.
+pub fn inline_call(m: &mut Module, caller_id: FuncId, call: InstId) -> bool {
+    let (callee_id, actuals) = {
+        let caller = m.func(caller_id);
+        match &caller.inst(call).kind {
+            InstKind::Call { callee, args } => (*callee, args.clone()),
+            _ => return false,
+        }
+    };
+    if callee_id == caller_id {
+        return false;
+    }
+    let callee = m.func(callee_id).clone();
+    let caller = m.func_mut(caller_id);
+
+    // Split the caller block at the call.
+    let cb = caller.inst(call).block;
+    let pos = caller.blocks[cb.idx()]
+        .insts
+        .iter()
+        .position(|&i| i == call)
+        .unwrap();
+    let tail_b = caller.add_block("inl.cont");
+    let tail: Vec<InstId> = caller.blocks[cb.idx()].insts.split_off(pos + 1);
+    for &i in &tail {
+        caller.insts[i.idx()].block = tail_b;
+    }
+    caller.blocks[tail_b.idx()].insts = tail;
+    // Successor phis that referenced cb now come from tail_b.
+    for s in caller.succs(tail_b) {
+        let si = caller.blocks[s.idx()].insts.clone();
+        for i in si {
+            if let InstKind::Phi { incs } = &mut caller.insts[i.idx()].kind {
+                for (p, _) in incs.iter_mut() {
+                    if *p == cb {
+                        *p = tail_b;
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    // Clone callee blocks.
+    let mut bmap: HashMap<BlockId, BlockId> = HashMap::new();
+    for b in callee.block_ids() {
+        let nb = caller.add_block(&format!("inl.{}", callee.blocks[b.idx()].name));
+        bmap.insert(b, nb);
+    }
+    // Pre-assign the cloned instruction ids (push_inst allocates
+    // sequentially) so operand remapping is complete in a single pass even
+    // across forward references (phis over back edges).
+    let mut imap: HashMap<InstId, InstId> = HashMap::new();
+    let mut next = caller.insts.len() as u32;
+    for b in callee.block_ids() {
+        for &i in &callee.blocks[b.idx()].insts {
+            imap.insert(i, InstId(next));
+            next += 1;
+        }
+    }
+    let mut rets: Vec<(BlockId, Option<Val>)> = vec![];
+    for b in callee.block_ids() {
+        for &i in &callee.blocks[b.idx()].insts {
+            let inst = callee.inst(i);
+            let mut kind = inst.kind.clone();
+            // Remap operands: args -> actuals, insts -> cloned insts.
+            kind.map_operands(|v| match v {
+                Val::Arg(a) => actuals[a as usize],
+                Val::Inst(d) => Val::Inst(imap[&d]),
+                v => v,
+            });
+            // Remap phi incoming blocks and successors.
+            if let InstKind::Phi { incs } = &mut kind {
+                for (p, _) in incs.iter_mut() {
+                    *p = bmap[p];
+                }
+            }
+            for s in kind.successors() {
+                kind.replace_successor(s, bmap[&s]);
+            }
+            // Rets become branches to the tail.
+            if let InstKind::Ret { val } = &kind {
+                rets.push((bmap[&b], *val));
+                kind = InstKind::Br { target: tail_b };
+            }
+            let ni = caller.push_inst(bmap[&b], kind, inst.ty);
+            debug_assert_eq!(ni, imap[&i]);
+            caller.insts[ni.idx()].uniform_ann = inst.uniform_ann;
+        }
+    }
+
+    // Return value: phi at tail head (or single value).
+    let call_ty = caller.inst(call).ty;
+    if call_ty != Type::Void {
+        let rv = if rets.len() == 1 {
+            rets[0].1.unwrap_or(Val::ci(0))
+        } else {
+            let incs: Vec<(BlockId, Val)> = rets
+                .iter()
+                .map(|(b, v)| (*b, v.unwrap_or(Val::ci(0))))
+                .collect();
+            Val::Inst(caller.insert_inst(tail_b, 0, InstKind::Phi { incs }, call_ty))
+        };
+        caller.replace_uses(Val::Inst(call), rv);
+    }
+    // Replace the call with a branch into the inlined entry.
+    caller.remove_inst(call);
+    caller.push_inst(
+        cb,
+        InstKind::Br {
+            target: bmap[&callee.entry],
+        },
+        Type::Void,
+    );
+    // Local (shared) memory requirements propagate.
+    let need = callee.local_mem_size;
+    let cl = m.func_mut(caller_id);
+    cl.local_mem_size = cl.local_mem_size.max(need);
+    true
+}
+
+/// Inline all calls in `caller` to functions whose size is within
+/// `threshold` live instructions (or all calls when `threshold` is None).
+/// Repeats until fixpoint (nested calls become visible after inlining).
+pub fn inline_into(m: &mut Module, caller_id: FuncId, threshold: Option<usize>) -> usize {
+    let mut n = 0;
+    for _round in 0..16 {
+        let caller = m.func(caller_id);
+        let mut site: Option<InstId> = None;
+        for (idx, inst) in caller.insts.iter().enumerate() {
+            if inst.dead {
+                continue;
+            }
+            if let InstKind::Call { callee, .. } = &inst.kind {
+                if *callee == caller_id {
+                    continue;
+                }
+                let size = m.func(*callee).num_insts();
+                // Loop-bearing callees are never inlined (the LLVM-like
+                // heuristic): they are the targets the Algorithm-1
+                // argument analysis refines.
+                let has_loop = threshold.is_some()
+                    && !crate::ir::cfg::classify_edges(m.func(*callee))
+                        .back_edges
+                        .is_empty();
+                if threshold.map(|t| size <= t && !has_loop).unwrap_or(true) {
+                    site = Some(InstId(idx as u32));
+                    break;
+                }
+            }
+        }
+        match site {
+            Some(s) => {
+                if inline_call(m, caller_id, s) {
+                    n += 1;
+                } else {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    fn helper_square(m: &mut Module) -> FuncId {
+        let mut h = Function::new(
+            "sq",
+            vec![Param {
+                name: "x".into(),
+                ty: Type::I32,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        h.linkage = Linkage::Internal;
+        {
+            let mut b = Builder::new(&mut h);
+            let v = b.mul(Val::Arg(0), Val::Arg(0));
+            b.ret(Some(v));
+        }
+        m.add_func(h)
+    }
+
+    #[test]
+    fn inlines_simple_call() {
+        let mut m = Module::new("t");
+        let h = helper_square(&mut m);
+        let mut k = Function::new(
+            "k",
+            vec![Param {
+                name: "out".into(),
+                ty: Type::Ptr(AddrSpace::Global),
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        k.is_kernel = true;
+        {
+            let mut b = Builder::new(&mut k);
+            let v = b.call(h, vec![Val::ci(7)], Type::I32);
+            let w = b.add(v, Val::ci(1));
+            b.store(Val::Arg(0), w);
+            b.ret(None);
+        }
+        let kid = m.add_func(k);
+        assert_eq!(inline_into(&mut m, kid, None), 1);
+        verify_function(&m.funcs[kid.idx()]).unwrap();
+        // No calls remain.
+        assert!(!m.funcs[kid.idx()]
+            .insts
+            .iter()
+            .any(|i| !i.dead && matches!(i.kind, InstKind::Call { .. })));
+        // Behaviour: out[0] = 7*7+1 = 50.
+        let mut mem = vec![0u8; 256];
+        crate::ir::interp::run_kernel_scalar(
+            &m, kid, &[64], [1, 1, 1], [1, 1, 1], &mut mem, 128, &[],
+        )
+        .unwrap();
+        assert_eq!(crate::ir::interp::read_u32(&mem, 64), 50);
+    }
+
+    /// Inlining a callee with control flow (abs) preserves semantics and
+    /// merges return values with a phi.
+    #[test]
+    fn inlines_branchy_callee() {
+        let mut m = Module::new("t");
+        let mut h = Function::new(
+            "absf",
+            vec![Param {
+                name: "x".into(),
+                ty: Type::I32,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        h.linkage = Linkage::Internal;
+        let neg = h.add_block("neg");
+        let pos = h.add_block("pos");
+        {
+            let mut b = Builder::new(&mut h);
+            let c = b.icmp(ICmp::Slt, Val::Arg(0), Val::ci(0));
+            b.cond_br(c, neg, pos);
+            b.set_block(neg);
+            let n = b.sub(Val::ci(0), Val::Arg(0));
+            b.ret(Some(n));
+            b.set_block(pos);
+            b.ret(Some(Val::Arg(0)));
+        }
+        let hid = m.add_func(h);
+        let mut k = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "x".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        k.is_kernel = true;
+        {
+            let mut b = Builder::new(&mut k);
+            let v = b.call(hid, vec![Val::Arg(1)], Type::I32);
+            b.store(Val::Arg(0), v);
+            b.ret(None);
+        }
+        let kid = m.add_func(k);
+        inline_into(&mut m, kid, None);
+        verify_function(&m.funcs[kid.idx()]).unwrap();
+        for (input, expect) in [(5i32, 5u32), (-9, 9)] {
+            let mut mem = vec![0u8; 256];
+            crate::ir::interp::run_kernel_scalar(
+                &m,
+                kid,
+                &[64, input as u32],
+                [1, 1, 1],
+                [1, 1, 1],
+                &mut mem,
+                128,
+                &[],
+            )
+            .unwrap();
+            assert_eq!(crate::ir::interp::read_u32(&mem, 64), expect);
+        }
+    }
+
+    #[test]
+    fn threshold_blocks_large_callee() {
+        let mut m = Module::new("t");
+        let mut h = Function::new("big", vec![], Type::I32);
+        h.linkage = Linkage::Internal;
+        {
+            let mut b = Builder::new(&mut h);
+            let mut v = Val::ci(1);
+            for _ in 0..40 {
+                v = b.add(v, Val::ci(1));
+            }
+            b.ret(Some(v));
+        }
+        let hid = m.add_func(h);
+        let mut k = Function::new("k", vec![], Type::Void);
+        {
+            let mut b = Builder::new(&mut k);
+            let _ = b.call(hid, vec![], Type::I32);
+            b.ret(None);
+        }
+        let kid = m.add_func(k);
+        assert_eq!(inline_into(&mut m, kid, Some(10)), 0);
+        assert_eq!(inline_into(&mut m, kid, Some(100)), 1);
+    }
+}

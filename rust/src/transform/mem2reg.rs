@@ -1,0 +1,341 @@
+//! Promote single-word allocas to SSA registers (classic Cytron et al.
+//! iterated-dominance-frontier phi placement + dominator-tree renaming).
+//!
+//! The VOLT front-end lowers every named local through an alloca so that
+//! early CFG surgery (structurization / reconstruction, which run before
+//! SSA construction) never has to repair cross-block SSA uses; this pass
+//! then builds the SSA form the uniformity analysis and divergence
+//! insertion operate on.
+
+use crate::ir::dom::DomTree;
+use crate::ir::*;
+use std::collections::{HashMap, HashSet};
+
+/// Is this alloca promotable: 4 bytes, address used only directly by
+/// loads/stores (no GEP, no escape)?
+fn promotable(f: &Function, a: InstId) -> bool {
+    match f.inst(a).kind {
+        InstKind::Alloca { size } if size == 4 => {}
+        _ => return false,
+    }
+    for inst in f.insts.iter().filter(|i| !i.dead) {
+        match &inst.kind {
+            InstKind::Load { ptr } => {
+                if *ptr == Val::Inst(a) {
+                    continue;
+                }
+            }
+            InstKind::Store { ptr, val } => {
+                if *val == Val::Inst(a) {
+                    return false; // address stored = escape
+                }
+                if *ptr == Val::Inst(a) {
+                    continue;
+                }
+            }
+            _ => {}
+        }
+        if inst.kind.operands().contains(&Val::Inst(a))
+            && !matches!(inst.kind, InstKind::Load { .. } | InstKind::Store { .. })
+        {
+            return false;
+        }
+    }
+    true
+}
+
+/// Infer the value type stored in the slot (from loads; default i32).
+fn slot_type(f: &Function, a: InstId) -> Type {
+    for inst in f.insts.iter().filter(|i| !i.dead) {
+        if let InstKind::Load { ptr } = &inst.kind {
+            if *ptr == Val::Inst(a) {
+                return inst.ty;
+            }
+        }
+        if let InstKind::Store { ptr, val } = &inst.kind {
+            if *ptr == Val::Inst(a) {
+                return f.val_type(*val);
+            }
+        }
+    }
+    Type::I32
+}
+
+pub fn run(f: &mut Function) -> usize {
+    f.remove_unreachable();
+    let allocas: Vec<InstId> = (0..f.insts.len() as u32)
+        .map(InstId)
+        .filter(|&i| {
+            !f.insts[i.idx()].dead
+                && matches!(f.inst(i).kind, InstKind::Alloca { .. })
+                && promotable(f, i)
+        })
+        .collect();
+    if allocas.is_empty() {
+        return 0;
+    }
+    let dom = DomTree::build(f);
+    let df = dom.frontiers(f);
+    let types: HashMap<InstId, Type> = allocas.iter().map(|&a| (a, slot_type(f, a))).collect();
+
+    // Phi placement: iterated dominance frontier of store blocks.
+    // phi_map: (block, alloca) -> phi inst id
+    let mut phi_map: HashMap<(BlockId, InstId), InstId> = HashMap::new();
+    for &a in &allocas {
+        let mut def_blocks: HashSet<BlockId> = HashSet::new();
+        for inst in f.insts.iter().filter(|i| !i.dead) {
+            if let InstKind::Store { ptr, .. } = &inst.kind {
+                if *ptr == Val::Inst(a) {
+                    def_blocks.insert(inst.block);
+                }
+            }
+        }
+        let mut work: Vec<BlockId> = def_blocks.iter().copied().collect();
+        let mut has_phi: HashSet<BlockId> = HashSet::new();
+        while let Some(b) = work.pop() {
+            for &y in &df[b.idx()] {
+                if has_phi.insert(y) {
+                    let phi = f.insert_inst(y, 0, InstKind::Phi { incs: vec![] }, types[&a]);
+                    phi_map.insert((y, a), phi);
+                    if !def_blocks.contains(&y) {
+                        work.push(y);
+                    }
+                }
+            }
+        }
+    }
+
+    // Renaming via dominator-tree DFS.
+    let children = dom.children();
+    let mut stacks: HashMap<InstId, Vec<Val>> = allocas.iter().map(|&a| (a, vec![])).collect();
+    let alloca_set: HashSet<InstId> = allocas.iter().copied().collect();
+    // Replacements collected and applied inline during the walk.
+    struct Walker<'a> {
+        f: &'a mut Function,
+        alloca_set: &'a HashSet<InstId>,
+        types: &'a HashMap<InstId, Type>,
+        phi_map: &'a HashMap<(BlockId, InstId), InstId>,
+        phi_owner: HashMap<InstId, InstId>, // phi -> alloca
+        children: &'a Vec<Vec<BlockId>>,
+        removed: Vec<InstId>,
+    }
+    let phi_owner: HashMap<InstId, InstId> =
+        phi_map.iter().map(|((_, a), &p)| (p, *a)).collect();
+    impl<'a> Walker<'a> {
+        fn cur(&self, stacks: &HashMap<InstId, Vec<Val>>, a: InstId) -> Val {
+            stacks[&a].last().copied().unwrap_or(match self.types[&a] {
+                Type::F32 => Val::F(0),
+                Type::I1 => Val::cb(false),
+                _ => Val::ci(0),
+            })
+        }
+        fn walk(&mut self, b: BlockId, stacks: &mut HashMap<InstId, Vec<Val>>) {
+            let mut pushed: Vec<InstId> = vec![];
+            let insts = self.f.blocks[b.idx()].insts.clone();
+            for id in insts {
+                let kind = self.f.inst(id).kind.clone();
+                match kind {
+                    InstKind::Phi { .. } => {
+                        if let Some(&a) = self.phi_owner.get(&id) {
+                            stacks.get_mut(&a).unwrap().push(Val::Inst(id));
+                            pushed.push(a);
+                        }
+                    }
+                    InstKind::Load { ptr: Val::Inst(a) } if self.alloca_set.contains(&a) => {
+                        let v = self.cur(stacks, a);
+                        self.f.replace_uses(Val::Inst(id), v);
+                        self.removed.push(id);
+                    }
+                    InstKind::Store {
+                        ptr: Val::Inst(a),
+                        val,
+                    } if self.alloca_set.contains(&a) => {
+                        stacks.get_mut(&a).unwrap().push(val);
+                        pushed.push(a);
+                        self.removed.push(id);
+                    }
+                    _ => {}
+                }
+            }
+            // Fill phi incomings in successors.
+            for s in self.f.succs(b) {
+                let sinsts = self.f.blocks[s.idx()].insts.clone();
+                for id in sinsts {
+                    if let Some(&a) = self.phi_owner.get(&id) {
+                        let v = self.cur(stacks, a);
+                        if let InstKind::Phi { incs } = &mut self.f.inst_mut(id).kind {
+                            if !incs.iter().any(|(p, _)| *p == b) {
+                                incs.push((b, v));
+                            }
+                        }
+                    } else if !matches!(self.f.inst(id).kind, InstKind::Phi { .. }) {
+                        break;
+                    }
+                }
+            }
+            for c in self.children[b.idx()].clone() {
+                self.walk(c, stacks);
+            }
+            for a in pushed.into_iter().rev() {
+                stacks.get_mut(&a).unwrap().pop();
+            }
+        }
+    }
+    let entry = f.entry;
+    let mut w = Walker {
+        f,
+        alloca_set: &alloca_set,
+        types: &types,
+        phi_map: &phi_map,
+        phi_owner,
+        children: &children,
+        removed: vec![],
+    };
+    w.walk(entry, &mut stacks);
+    let removed = w.removed.clone();
+    let _ = &w.phi_map;
+    for id in removed {
+        f.remove_inst(id);
+    }
+    for a in &allocas {
+        f.remove_inst(*a);
+    }
+    allocas.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    /// if/else writing a variable then reading it after the join — must
+    /// produce a phi.
+    #[test]
+    fn promotes_diamond() {
+        let mut f = Function::new(
+            "t",
+            vec![Param {
+                name: "c".into(),
+                ty: Type::I1,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        let (t, e, j) = {
+            let t = f.add_block("t");
+            let e = f.add_block("e");
+            let j = f.add_block("j");
+            (t, e, j)
+        };
+        let mut b = Builder::new(&mut f);
+        let x = b.alloca(4);
+        b.store(x, Val::ci(0));
+        b.cond_br(Val::Arg(0), t, e);
+        b.set_block(t);
+        b.store(x, Val::ci(1));
+        b.br(j);
+        b.set_block(e);
+        b.store(x, Val::ci(2));
+        b.br(j);
+        b.set_block(j);
+        let l = b.load(x, Type::I32);
+        b.ret(Some(l));
+        let n = run(&mut f);
+        assert_eq!(n, 1);
+        verify_function(&f).unwrap();
+        // No loads/stores/allocas remain; a phi exists in j.
+        assert!(!f
+            .insts
+            .iter()
+            .filter(|i| !i.dead)
+            .any(|i| matches!(
+                i.kind,
+                InstKind::Load { .. } | InstKind::Store { .. } | InstKind::Alloca { .. }
+            )));
+        let phi = f.blocks[j.idx()].insts[0];
+        assert!(matches!(f.inst(phi).kind, InstKind::Phi { .. }));
+    }
+
+    /// Loop counter promotion produces header phi; semantics preserved via
+    /// the interpreter.
+    #[test]
+    fn promotes_loop_counter() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "n".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::new(&mut f);
+        let i = b.alloca(4);
+        let s = b.alloca(4);
+        b.store(i, Val::ci(0));
+        b.store(s, Val::ci(0));
+        b.br(h);
+        b.set_block(h);
+        let iv = b.load(i, Type::I32);
+        let c = b.icmp(ICmp::Slt, iv, Val::Arg(1));
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let iv2 = b.load(i, Type::I32);
+        let sv = b.load(s, Type::I32);
+        let s2 = b.add(sv, iv2);
+        b.store(s, s2);
+        let i2 = b.add(iv2, Val::ci(1));
+        b.store(i, i2);
+        b.br(h);
+        b.set_block(exit);
+        let sv2 = b.load(s, Type::I32);
+        b.store(Val::Arg(0), sv2);
+        b.ret(None);
+        let fid = m.add_func(f);
+        // Reference result before promotion.
+        let mut mem1 = vec![0u8; 1024];
+        crate::ir::interp::run_kernel_scalar(
+            &m, fid, &[128, 10], [1, 1, 1], [1, 1, 1], &mut mem1, 512, &[],
+        )
+        .unwrap();
+        let n = run(&mut m.funcs[0]);
+        assert_eq!(n, 2);
+        verify_function(&m.funcs[0]).unwrap();
+        let mut mem2 = vec![0u8; 1024];
+        crate::ir::interp::run_kernel_scalar(
+            &m, fid, &[128, 10], [1, 1, 1], [1, 1, 1], &mut mem2, 512, &[],
+        )
+        .unwrap();
+        assert_eq!(
+            crate::ir::interp::read_u32(&mem1, 128),
+            crate::ir::interp::read_u32(&mem2, 128)
+        );
+        assert_eq!(crate::ir::interp::read_u32(&mem2, 128), 45);
+    }
+
+    /// Arrays (size > 4) and escaping allocas are not promoted.
+    #[test]
+    fn skips_arrays_and_escapes() {
+        let mut f = Function::new("t", vec![], Type::I32);
+        let mut b = Builder::new(&mut f);
+        let arr = b.alloca(64);
+        let p = b.gep(arr, Val::ci(2), 4);
+        b.store(p, Val::ci(5));
+        let l = b.load(p, Type::I32);
+        b.ret(Some(l));
+        assert_eq!(run(&mut f), 0);
+        verify_function(&f).unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Middle-end transformations (paper §4.3.2 / §4.3.3) and the pass
+//! manager that sequences them into the VOLT optimization ladder.
+
+pub mod divergence_insert;
+pub mod inline;
+pub mod mem2reg;
+pub mod pass;
+pub mod reconstruct;
+pub mod simplify;
+pub mod structurize;
+
+pub use pass::{run_middle_end, MiddleEndReport, OptConfig, OptLevel};

@@ -1,0 +1,248 @@
+//! CFG reconstruction (paper §4.3.2, Fig. 6).
+//!
+//! When unstructured regions are deeply nested, the dispatcher/linearization
+//! predicates become expensive. VOLT instead *selectively duplicates* nodes
+//! to simplify predicates: when an unstructured block is a **divergent CDG
+//! leaf**, duplicating it per entering edge removes the irreducible entry
+//! without any predicate computation. If the controlling dependency is
+//! uniform, each warp takes a single pass through the dispatcher anyway and
+//! duplication buys nothing — so uniform nodes are left to the dispatcher.
+//!
+//! Runs before SSA construction (same contract as [`super::structurize`]),
+//! immediately before it in the pipeline; whatever this pass does not
+//! resolve, the dispatcher will.
+
+use crate::analysis::tti::TargetDivergenceInfo;
+use crate::analysis::{uniformity, UniformityOptions};
+use crate::ir::cdg::Cdg;
+use crate::ir::cfg::irreducible_back_edges;
+use crate::ir::*;
+
+#[derive(Debug, Default)]
+pub struct ReconReport {
+    pub duplicated: usize,
+    pub leaf_duplications: usize,
+    pub skipped_uniform: usize,
+    pub skipped_unsafe: usize,
+}
+
+/// Maximum instruction count of a node eligible for duplication.
+const DUP_LIMIT: usize = 24;
+
+pub fn run(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+) -> ReconReport {
+    let mut report = ReconReport::default();
+    if !opts_enabled(opts) {
+        return report;
+    }
+    for _ in 0..32 {
+        let f = m.func(fid);
+        let offending = irreducible_back_edges(f);
+        if offending.is_empty() {
+            break;
+        }
+        // Try to fix one offending edge by duplicating its target.
+        let u = uniformity::analyze(m, fid, opts, tti);
+        let f = m.func(fid);
+        let cdg = Cdg::build(f);
+        let mut progressed = false;
+        for &(n, mm) in &offending {
+            // Paper rule: duplicate only divergent CDG leaf nodes.
+            let divergent = cdg.deps[mm.idx()]
+                .iter()
+                .any(|dep| u.div_branch_blocks.contains(dep));
+            if !divergent {
+                report.skipped_uniform += 1;
+                continue;
+            }
+            // Prefer CDG leaves (the paper's Fig. 6 case); inside cyclic
+            // irreducible regions the entry nodes usually have dependents,
+            // so non-leaf nodes are still eligible when small and safe.
+            if cdg.is_leaf(mm) {
+                report.leaf_duplications += 1;
+            }
+            if !duplicable(f, mm, DUP_LIMIT) {
+                report.skipped_unsafe += 1;
+                continue;
+            }
+            duplicate_node(m.func_mut(fid), n, mm);
+            report.duplicated += 1;
+            progressed = true;
+            break;
+        }
+        if !progressed {
+            break; // leave the rest for the dispatcher
+        }
+    }
+    report
+}
+
+fn opts_enabled(_opts: &UniformityOptions) -> bool {
+    true // gating on the Recon flag happens in the pass manager
+}
+
+/// A node is duplicable when it is small, has no phis, and none of its
+/// instructions are referenced outside the node (pre-SSA front-end IR
+/// guarantees this for all frontend-emitted blocks).
+fn duplicable(f: &Function, b: BlockId, limit: usize) -> bool {
+    let insts = &f.blocks[b.idx()].insts;
+    if insts.len() > limit {
+        return false;
+    }
+    for &i in insts {
+        if matches!(f.inst(i).kind, InstKind::Phi { .. } | InstKind::Alloca { .. }) {
+            return false;
+        }
+    }
+    // No external uses of values defined here.
+    let mine: std::collections::HashSet<InstId> = insts.iter().copied().collect();
+    for (idx, inst) in f.insts.iter().enumerate() {
+        if inst.dead || mine.contains(&InstId(idx as u32)) {
+            continue;
+        }
+        for op in inst.kind.operands() {
+            if let Val::Inst(d) = op {
+                if mine.contains(&d) {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Duplicate block `b` as `b2` and retarget the edge `n -> b` to `n -> b2`.
+pub fn duplicate_node(f: &mut Function, n: BlockId, b: BlockId) -> BlockId {
+    let b2 = f.add_block(&format!("{}.dup", f.blocks[b.idx()].name.clone()));
+    let insts = f.blocks[b.idx()].insts.clone();
+    let mut map: std::collections::HashMap<InstId, InstId> = Default::default();
+    for &i in &insts {
+        let mut kind = f.inst(i).kind.clone();
+        kind.map_operands(|v| match v {
+            Val::Inst(d) if map.contains_key(&d) => Val::Inst(map[&d]),
+            v => v,
+        });
+        let ty = f.inst(i).ty;
+        let ni = f.push_inst(b2, kind, ty);
+        f.insts[ni.idx()].uniform_ann = f.insts[i.idx()].uniform_ann;
+        map.insert(i, ni);
+    }
+    let t = f.term(n);
+    f.inst_mut(t).kind.replace_successor(b, b2);
+    b2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tti::VortexTti;
+    use crate::ir::cfg::is_reducible;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    /// Irreducible region whose second header is a divergent CDG leaf:
+    /// reconstruction should duplicate it instead of needing a dispatcher.
+    fn build(divergent: bool) -> Module {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "c".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        let a = f.add_block("a");
+        let d = f.add_block("d"); // the node to duplicate
+        let exit = f.add_block("x");
+        let mut b = Builder::new(&mut f);
+        let x = b.alloca(4);
+        b.store(x, Val::ci(0));
+        let c = if divergent {
+            let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            b.icmp(ICmp::Slt, lane, Val::Arg(1))
+        } else {
+            b.icmp(ICmp::Ne, Val::Arg(1), Val::ci(0))
+        };
+        b.cond_br(c, a, d);
+        // a: x += 1; if x < 5 -> d else exit
+        b.set_block(a);
+        let xv = b.load(x, Type::I32);
+        let x1 = b.add(xv, Val::ci(1));
+        b.store(x, x1);
+        let ca = b.icmp(ICmp::Slt, x1, Val::ci(5));
+        b.cond_br(ca, d, exit);
+        // d: x += 10; if x < 40 -> a else exit   (d -> a is the irreducible edge)
+        b.set_block(d);
+        let xv2 = b.load(x, Type::I32);
+        let x2 = b.add(xv2, Val::ci(10));
+        b.store(x, x2);
+        let cd = b.icmp(ICmp::Slt, x2, Val::ci(40));
+        b.cond_br(cd, a, exit);
+        b.set_block(exit);
+        let xf = b.load(x, Type::I32);
+        b.store(Val::Arg(0), xf);
+        b.ret(None);
+        m.add_func(f);
+        m
+    }
+
+    fn run_and_read(m: &Module, c: u32) -> u32 {
+        let mut mem = vec![0u8; 4096];
+        crate::ir::interp::run_kernel_scalar(
+            m,
+            FuncId(0),
+            &[64, c],
+            [1, 1, 1],
+            [1, 1, 1],
+            &mut mem,
+            2048,
+            &[],
+        )
+        .unwrap();
+        crate::ir::interp::read_u32(&mem, 64)
+    }
+
+    #[test]
+    fn duplicates_divergent_leaf() {
+        let m0 = build(true);
+        assert!(!is_reducible(&m0.funcs[0]));
+        let before: Vec<u32> = [0u32, 64].iter().map(|&c| run_and_read(&m0, c)).collect();
+        let mut m = m0.clone();
+        let rep = run(&mut m, FuncId(0), &UniformityOptions::default(), &VortexTti);
+        assert!(rep.duplicated >= 1, "report: {rep:?}");
+        verify_function(&m.funcs[0]).unwrap();
+        let after: Vec<u32> = [0u32, 64].iter().map(|&c| run_and_read(&m, c)).collect();
+        assert_eq!(before, after);
+        // The region should now be reducible without any dispatcher.
+        assert!(is_reducible(&m.funcs[0]));
+    }
+
+    #[test]
+    fn uniform_leaf_left_for_dispatcher() {
+        let m0 = build(false);
+        let mut m = m0.clone();
+        // Uniform branch condition (uniform arg + Uni-HW reasoning).
+        let rep = run(
+            &mut m,
+            FuncId(0),
+            &UniformityOptions::all(),
+            &VortexTti,
+        );
+        assert_eq!(rep.duplicated, 0);
+        assert!(rep.skipped_uniform > 0);
+        assert!(!is_reducible(&m.funcs[0]));
+    }
+}

@@ -1,0 +1,614 @@
+//! Code and CFG simplification (paper §4.3.2 "Code and CFG
+//! Simplification"): constant folding, algebraic identities, dead-code
+//! elimination, CFG cleanup (constant branches, block merging, unreachable
+//! removal), canonicalization into a single-exit form, and `select`
+//! normalization — rewriting selects into branch-based control flow unless
+//! the target supports them natively (ZiCond → `vx_cmov`, paper §5.3).
+
+use crate::ir::interp::scalar;
+use crate::ir::*;
+
+/// Fold constant expressions and apply algebraic identities. Returns the
+/// number of instructions simplified.
+pub fn const_fold(f: &mut Function) -> usize {
+    let mut n = 0;
+    for idx in 0..f.insts.len() {
+        let id = InstId(idx as u32);
+        if f.insts[idx].dead {
+            continue;
+        }
+        let kind = f.insts[idx].kind.clone();
+        let repl: Option<Val> = match kind {
+            InstKind::Bin { op, a, b } => match (a, b) {
+                (Val::I(x, _), Val::I(y, _)) if !op.is_float() => Some(Val::I(
+                    scalar::bin_i(op, x as u32, y as u32) as i32 as i64,
+                    Type::I32,
+                )),
+                (Val::F(x), Val::F(y)) if op.is_float() => Some(Val::F(
+                    scalar::bin_f(op, f32::from_bits(x), f32::from_bits(y)).to_bits(),
+                )),
+                // Algebraic identities.
+                (x, Val::I(0, _)) if matches!(op, BinOp::Add | BinOp::Sub | BinOp::Or | BinOp::Xor | BinOp::Shl | BinOp::LShr | BinOp::AShr) => Some(x),
+                (Val::I(0, _), x) if matches!(op, BinOp::Add | BinOp::Or | BinOp::Xor) => Some(x),
+                (x, Val::I(1, _)) if matches!(op, BinOp::Mul | BinOp::SDiv | BinOp::UDiv) => Some(x),
+                (Val::I(1, _), x) if matches!(op, BinOp::Mul) => Some(x),
+                (_, Val::I(0, _)) if matches!(op, BinOp::Mul | BinOp::And) => Some(Val::ci(0)),
+                (Val::I(0, _), _) if matches!(op, BinOp::Mul | BinOp::And) => Some(Val::ci(0)),
+                (x, Val::F(z)) if matches!(op, BinOp::FAdd | BinOp::FSub) && f32::from_bits(z) == 0.0 => Some(x),
+                (x, Val::F(z)) if matches!(op, BinOp::FMul | BinOp::FDiv) && f32::from_bits(z) == 1.0 => Some(x),
+                _ => None,
+            },
+            InstKind::Un { op, a } => match a {
+                Val::I(x, _) => Some(match op {
+                    UnOp::ZExt => Val::ci(x & 1),
+                    UnOp::Trunc => Val::cb(x != 0),
+                    UnOp::BitsToF => Val::F(x as u32),
+                    _ => Val::I(scalar::un(op, x as u32) as i32 as i64, f.insts[idx].ty),
+                }),
+                Val::F(x) => Some(match op {
+                    UnOp::FpToSi => Val::I(scalar::un(op, x) as i32 as i64, Type::I32),
+                    UnOp::FToBits => Val::I(x as i64, Type::I32),
+                    _ => Val::F(scalar::un(op, x)),
+                }),
+                _ => None,
+            },
+            InstKind::ICmp { pred, a, b } => match (a, b) {
+                (Val::I(x, _), Val::I(y, _)) => {
+                    Some(Val::cb(scalar::icmp(pred, x as u32, y as u32)))
+                }
+                _ => None,
+            },
+            InstKind::FCmp { pred, a, b } => match (a, b) {
+                (Val::F(x), Val::F(y)) => Some(Val::cb(scalar::fcmp(
+                    pred,
+                    f32::from_bits(x),
+                    f32::from_bits(y),
+                ))),
+                _ => None,
+            },
+            InstKind::Select { cond, t, f: fv } => match cond {
+                Val::I(c, _) => Some(if c != 0 { t } else { fv }),
+                _ if t == fv => Some(t),
+                _ => None,
+            },
+            InstKind::Gep { base, index: Val::I(0, _), disp: 0, .. } => Some(base),
+            InstKind::Phi { ref incs } => {
+                // Phi with all-identical incomings (ignoring self-refs).
+                let mut uniq: Option<Val> = None;
+                let mut ok = true;
+                for (_, v) in incs {
+                    if *v == Val::Inst(id) {
+                        continue;
+                    }
+                    match uniq {
+                        None => uniq = Some(*v),
+                        Some(u) if u == *v => {}
+                        _ => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    uniq
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        if let Some(v) = repl {
+            if v != Val::Inst(id) {
+                f.replace_uses(Val::Inst(id), v);
+                f.remove_inst(id);
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Remove instructions whose results are unused and that have no side
+/// effects. Iterates until fixpoint.
+pub fn dce(f: &mut Function) -> usize {
+    let mut removed = 0;
+    loop {
+        let uses = f.uses();
+        let dead: Vec<InstId> = (0..f.insts.len() as u32)
+            .map(InstId)
+            .filter(|&id| {
+                let inst = &f.insts[id.idx()];
+                !inst.dead
+                    && !inst.kind.has_side_effects()
+                    && !inst.kind.is_terminator()
+                    && uses.get(&id).map(|u| u.is_empty()).unwrap_or(true)
+            })
+            .collect();
+        if dead.is_empty() {
+            return removed;
+        }
+        for id in dead {
+            f.remove_inst(id);
+            removed += 1;
+        }
+    }
+}
+
+/// CFG cleanup: fold constant conditional branches, thread trivial jumps,
+/// merge straight-line block pairs, drop unreachable blocks.
+pub fn cfg_cleanup(f: &mut Function) -> usize {
+    let mut n = 0;
+    loop {
+        let mut changed = false;
+        // 1. Constant conditional branches -> unconditional.
+        for b in f.block_ids() {
+            let t = f.term(b);
+            if let InstKind::CondBr { cond, t: tb, f: fb } = f.inst(t).kind.clone() {
+                let target = match cond {
+                    Val::I(c, _) => Some(if c != 0 { tb } else { fb }),
+                    _ if tb == fb => Some(tb),
+                    _ => None,
+                };
+                if let Some(target) = target {
+                    let dropped = if target == tb { fb } else { tb };
+                    f.inst_mut(t).kind = InstKind::Br { target };
+                    // Remove phi incomings along the dropped edge if the
+                    // dropped block is no longer a successor.
+                    if dropped != target {
+                        remove_phi_incoming_if_not_pred(f, dropped, b);
+                    }
+                    changed = true;
+                    n += 1;
+                }
+            }
+        }
+        // 2. Merge b -> s when s has exactly one pred and b ends in Br.
+        let preds = f.preds();
+        for b in f.block_ids() {
+            if f.blocks[b.idx()].dead {
+                continue;
+            }
+            let t = f.term(b);
+            if let InstKind::Br { target: s } = f.inst(t).kind {
+                if s != b
+                    && preds[s.idx()].len() == 1
+                    && s != f.entry
+                    && !f.blocks[s.idx()]
+                        .insts
+                        .iter()
+                        .any(|&i| matches!(f.inst(i).kind, InstKind::Phi { .. }))
+                {
+                    // Splice s into b.
+                    f.remove_inst(t);
+                    let s_insts = std::mem::take(&mut f.blocks[s.idx()].insts);
+                    for &i in &s_insts {
+                        f.insts[i.idx()].block = b;
+                    }
+                    f.blocks[b.idx()].insts.extend(s_insts);
+                    f.blocks[s.idx()].dead = true;
+                    // Phis in s's successors referring to s now come from b.
+                    for succ in f.succs(b) {
+                        let si = f.blocks[succ.idx()].insts.clone();
+                        for i in si {
+                            if let InstKind::Phi { incs } = &mut f.insts[i.idx()].kind {
+                                for (p, _) in incs.iter_mut() {
+                                    if *p == s {
+                                        *p = b;
+                                    }
+                                }
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    changed = true;
+                    n += 1;
+                    break; // preds map stale; restart
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    f.remove_unreachable();
+    n
+}
+
+fn remove_phi_incoming_if_not_pred(f: &mut Function, block: BlockId, pred: BlockId) {
+    let still_pred = f.preds()[block.idx()].contains(&pred);
+    if still_pred {
+        return;
+    }
+    let insts = f.blocks[block.idx()].insts.clone();
+    for i in insts {
+        if let InstKind::Phi { incs } = &mut f.insts[i.idx()].kind {
+            incs.retain(|(p, _)| *p != pred);
+        } else {
+            break;
+        }
+    }
+}
+
+/// Canonicalize to a single return block (paper: "merge functions with
+/// multiple return instructions into one exit block").
+pub fn single_exit(f: &mut Function) -> bool {
+    let rets: Vec<BlockId> = f
+        .block_ids()
+        .into_iter()
+        .filter(|&b| matches!(f.inst(f.term(b)).kind, InstKind::Ret { .. }))
+        .collect();
+    if rets.len() <= 1 {
+        return false;
+    }
+    let exit = f.add_block("exit");
+    let has_val = f.ret != Type::Void;
+    let mut incs: Vec<(BlockId, Val)> = vec![];
+    for b in &rets {
+        let t = f.term(*b);
+        if let InstKind::Ret { val } = f.inst(t).kind.clone() {
+            if has_val {
+                incs.push((*b, val.unwrap_or(Val::ci(0))));
+            }
+            f.inst_mut(t).kind = InstKind::Br { target: exit };
+        }
+    }
+    let ret_val = if has_val {
+        let ty = f.ret;
+        let phi = f.insert_inst(exit, 0, InstKind::Phi { incs }, ty);
+        Some(Val::Inst(phi))
+    } else {
+        None
+    };
+    f.push_inst(exit, InstKind::Ret { val: ret_val }, Type::Void);
+    true
+}
+
+/// Select normalization: rewrite `select` into a diamond (branch-based
+/// control flow) unless ZiCond is enabled, in which case selects lower to
+/// `vx_cmov` natively. Returns number of selects expanded.
+///
+/// This is the Fig. 5(c) hazard fix: a *divergent* select must become an
+/// explicit diamond **in the IR** so the {vx_split, vx_join} insertion sees
+/// it; leaving it to the back-end would silently skip instrumentation.
+pub fn select_normalize(f: &mut Function, zicond: bool) -> usize {
+    if zicond {
+        return 0;
+    }
+    let mut n = 0;
+    loop {
+        // Find a select to expand.
+        let mut found: Option<(InstId, Val, Val, Val)> = None;
+        'outer: for b in f.block_ids() {
+            for &id in &f.blocks[b.idx()].insts {
+                if let InstKind::Select { cond, t, f: fv } = f.inst(id).kind {
+                    found = Some((id, cond, t, fv));
+                    break 'outer;
+                }
+            }
+        }
+        let Some((id, cond, tval, fval)) = found else {
+            return n;
+        };
+        let b = f.inst(id).block;
+        let ty = f.inst(id).ty;
+        let pos = f.blocks[b.idx()].insts.iter().position(|&x| x == id).unwrap();
+        // Split block b at pos: tail goes to a new join block.
+        let join = f.add_block("sel.join");
+        let tail: Vec<InstId> = f.blocks[b.idx()].insts.split_off(pos + 1);
+        for &i in &tail {
+            f.insts[i.idx()].block = join;
+        }
+        f.blocks[join.idx()].insts = tail;
+        // Fix phis in successors of the moved terminator: they referred to b.
+        for s in f.succs(join) {
+            let si = f.blocks[s.idx()].insts.clone();
+            for i in si {
+                if let InstKind::Phi { incs } = &mut f.insts[i.idx()].kind {
+                    for (p, _) in incs.iter_mut() {
+                        if *p == b {
+                            *p = join;
+                        }
+                    }
+                } else {
+                    break;
+                }
+            }
+        }
+        let then_b = f.add_block("sel.then");
+        let else_b = f.add_block("sel.else");
+        f.push_inst(then_b, InstKind::Br { target: join }, Type::Void);
+        f.push_inst(else_b, InstKind::Br { target: join }, Type::Void);
+        // Replace the select with a phi in join; b terminates with condbr.
+        f.remove_inst(id);
+        f.push_inst(
+            b,
+            InstKind::CondBr {
+                cond,
+                t: then_b,
+                f: else_b,
+            },
+            Type::Void,
+        );
+        let phi = f.insert_inst(
+            join,
+            0,
+            InstKind::Phi {
+                incs: vec![(then_b, tval), (else_b, fval)],
+            },
+            ty,
+        );
+        f.replace_uses(Val::Inst(id), Val::Inst(phi));
+        n += 1;
+    }
+}
+
+/// Select formation (the ZiCond direction of §4.3.2): speculate small
+/// side-effect-free diamonds/triangles into `select`s, which the back-end
+/// lowers to `vx_cmov`. This is how real pipelines create the Fig. 5(c)
+/// divergent-select situation: both arms execute for every lane, trading
+/// split/join instructions for extra (possibly wasted) memory traffic.
+pub fn form_selects(f: &mut Function) -> usize {
+    let mut formed = 0;
+    loop {
+        let mut did = false;
+        'scan: for a in f.block_ids() {
+            let term = f.term(a);
+            let InstKind::CondBr { cond, t, f: fb } = f.inst(term).kind else {
+                continue;
+            };
+            if t == fb {
+                continue;
+            }
+            let preds = f.preds();
+            // A speculatable arm: single-pred straight-line block of cheap
+            // side-effect-free ops ending in an unconditional branch;
+            // returns its jump target.
+            let spec_arm = |f: &Function, arm: BlockId| -> Option<BlockId> {
+                if preds[arm.idx()].len() != 1 {
+                    return None;
+                }
+                let insts = &f.blocks[arm.idx()].insts;
+                if insts.len() > 7 {
+                    return None;
+                }
+                let mut loads = 0;
+                let mut target = None;
+                for (i, &id) in insts.iter().enumerate() {
+                    let last = i + 1 == insts.len();
+                    match &f.inst(id).kind {
+                        InstKind::Br { target: tg } if last => target = Some(*tg),
+                        k if k.is_terminator() => return None,
+                        InstKind::Load { ptr } => {
+                            // Speculate only global/const loads: the device
+                            // heap carries guard slack for near-OOB halo
+                            // reads; scratchpad/stack windows do not.
+                            if !matches!(
+                                f.val_type(*ptr),
+                                Type::Ptr(crate::ir::AddrSpace::Global)
+                                    | Type::Ptr(crate::ir::AddrSpace::Const)
+                            ) {
+                                return None;
+                            }
+                            loads += 1;
+                            if loads > 2 {
+                                return None;
+                            }
+                        }
+                        InstKind::Bin { .. }
+                        | InstKind::Un { .. }
+                        | InstKind::ICmp { .. }
+                        | InstKind::FCmp { .. }
+                        | InstKind::Select { .. }
+                        | InstKind::Gep { .. } => {}
+                        _ => return None,
+                    }
+                }
+                target
+            };
+            // Diamond: A -> T -> J, A -> F -> J. Triangle: one arm is J.
+            let jt = spec_arm(f, t);
+            let jf = spec_arm(f, fb);
+            let (join, arms): (BlockId, Vec<BlockId>) = if jt == Some(fb) {
+                (fb, vec![t])
+            } else if jf == Some(t) {
+                (t, vec![fb])
+            } else if jt.is_some() && jt == jf {
+                (jt.unwrap(), vec![t, fb])
+            } else {
+                continue;
+            };
+            // Hoist arm instructions into A (before the terminator).
+            let term_pos = f.blocks[a.idx()].insts.len() - 1;
+            let mut insert_at = term_pos;
+            for &arm in &arms {
+                let insts: Vec<InstId> = f.blocks[arm.idx()].insts.clone();
+                for &id in &insts {
+                    if matches!(f.inst(id).kind, InstKind::Br { .. }) {
+                        continue;
+                    }
+                    // unlink from arm, relink into A
+                    f.blocks[arm.idx()].insts.retain(|&x| x != id);
+                    f.insts[id.idx()].block = a;
+                    f.blocks[a.idx()].insts.insert(insert_at, id);
+                    insert_at += 1;
+                }
+            }
+            // Rewrite J's phis: incomings from arms / from A fold into a
+            // select placed in A.
+            let then_src: BlockId = if arms.contains(&t) { t } else { a };
+            let else_src: BlockId = if arms.contains(&fb) { fb } else { a };
+            let jinsts = f.blocks[join.idx()].insts.clone();
+            for id in jinsts {
+                let InstKind::Phi { incs } = f.inst(id).kind.clone() else {
+                    break;
+                };
+                let tv = incs.iter().find(|(p, _)| *p == then_src).map(|(_, v)| *v);
+                let fv = incs.iter().find(|(p, _)| *p == else_src).map(|(_, v)| *v);
+                let (Some(tv), Some(fv)) = (tv, fv) else { continue };
+                let ty = f.inst(id).ty;
+                let pos = f.blocks[a.idx()]
+                    .insts
+                    .iter()
+                    .position(|&x| x == f.term(a))
+                    .unwrap();
+                let sel = Val::Inst(f.insert_inst(
+                    a,
+                    pos,
+                    InstKind::Select {
+                        cond,
+                        t: tv,
+                        f: fv,
+                    },
+                    ty,
+                ));
+                if let InstKind::Phi { incs } = &mut f.inst_mut(id).kind {
+                    incs.retain(|(p, _)| *p != then_src && *p != else_src);
+                    incs.push((a, sel));
+                }
+            }
+            // A now branches straight to J.
+            let term = f.term(a);
+            f.inst_mut(term).kind = InstKind::Br { target: join };
+            formed += 1;
+            did = true;
+            let _ = &arms;
+            break 'scan;
+        }
+        if !did {
+            break;
+        }
+        // Clean up the detached arm blocks + fold single-incoming phis.
+        const_fold(f);
+        cfg_cleanup(f);
+    }
+    formed
+}
+
+/// One standard cleanup bundle.
+pub fn simplify(f: &mut Function) -> usize {
+    let mut n = 0;
+    loop {
+        let c = const_fold(f) + dce(f) + cfg_cleanup(f);
+        n += c;
+        if c == 0 {
+            return n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    #[test]
+    fn folds_constants_and_identities() {
+        let mut f = Function::new("t", vec![Param { name: "x".into(), ty: Type::I32, uniform: false }], Type::I32);
+        let mut b = Builder::new(&mut f);
+        let c = b.add(Val::ci(3), Val::ci(4)); // 7
+        let d = b.mul(Val::Arg(0), Val::ci(1)); // x
+        let e = b.add(c, d); // 7 + x
+        b.ret(Some(e));
+        const_fold(&mut f);
+        dce(&mut f);
+        verify_function(&f).unwrap();
+        // only the add and the ret remain
+        assert_eq!(f.num_insts(), 2);
+        let add = f.insts.iter().find(|i| !i.dead && matches!(i.kind, InstKind::Bin { .. })).unwrap();
+        assert_eq!(add.kind.operands(), vec![Val::ci(7), Val::Arg(0)]);
+    }
+
+    #[test]
+    fn removes_constant_branch_and_merges() {
+        let mut f = Function::new("t", vec![], Type::I32);
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::new(&mut f);
+        b.cond_br(Val::cb(true), t, e);
+        b.set_block(t);
+        b.ret(Some(Val::ci(1)));
+        b.set_block(e);
+        b.ret(Some(Val::ci(2)));
+        cfg_cleanup(&mut f);
+        verify_function(&f).unwrap();
+        // e unreachable and removed; t merged into entry.
+        assert_eq!(f.block_ids().len(), 1);
+    }
+
+    #[test]
+    fn single_exit_merges_rets() {
+        let mut f = Function::new("t", vec![Param { name: "c".into(), ty: Type::I1, uniform: false }], Type::I32);
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::new(&mut f);
+        b.cond_br(Val::Arg(0), t, e);
+        b.set_block(t);
+        b.ret(Some(Val::ci(1)));
+        b.set_block(e);
+        b.ret(Some(Val::ci(2)));
+        assert!(single_exit(&mut f));
+        verify_function(&f).unwrap();
+        let rets: Vec<_> = f
+            .insts
+            .iter()
+            .filter(|i| !i.dead && matches!(i.kind, InstKind::Ret { .. }))
+            .collect();
+        assert_eq!(rets.len(), 1);
+        // The single ret returns a phi.
+        if let InstKind::Ret { val: Some(Val::Inst(p)) } = rets[0].kind {
+            assert!(matches!(f.inst(p).kind, InstKind::Phi { .. }));
+        } else {
+            panic!("ret should return phi");
+        }
+    }
+
+    #[test]
+    fn select_expands_to_diamond() {
+        let mut f = Function::new(
+            "t",
+            vec![
+                Param { name: "c".into(), ty: Type::I1, uniform: false },
+                Param { name: "a".into(), ty: Type::I32, uniform: false },
+                Param { name: "b".into(), ty: Type::I32, uniform: false },
+            ],
+            Type::I32,
+        );
+        let mut b = Builder::new(&mut f);
+        let s = b.select(Val::Arg(0), Val::Arg(1), Val::Arg(2));
+        let u = b.add(s, Val::ci(1));
+        b.ret(Some(u));
+        assert_eq!(select_normalize(&mut f, false), 1);
+        verify_function(&f).unwrap();
+        assert!(!f.insts.iter().any(|i| !i.dead && matches!(i.kind, InstKind::Select { .. })));
+        assert!(f.insts.iter().any(|i| !i.dead && matches!(i.kind, InstKind::CondBr { .. })));
+        // With zicond the select survives.
+        let mut f2 = Function::new("t", vec![Param { name: "c".into(), ty: Type::I1, uniform: false }], Type::I32);
+        let mut b2 = Builder::new(&mut f2);
+        let s2 = b2.select(Val::Arg(0), Val::ci(1), Val::ci(2));
+        b2.ret(Some(s2));
+        assert_eq!(select_normalize(&mut f2, true), 0);
+    }
+
+    #[test]
+    fn phi_with_identical_incomings_folds() {
+        let mut f = Function::new("t", vec![Param { name: "c".into(), ty: Type::I1, uniform: false }], Type::I32);
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let j = f.add_block("j");
+        let mut b = Builder::new(&mut f);
+        b.cond_br(Val::Arg(0), t, e);
+        b.set_block(t);
+        b.br(j);
+        b.set_block(e);
+        b.br(j);
+        b.set_block(j);
+        let p = b.phi(Type::I32, vec![(t, Val::ci(5)), (e, Val::ci(5))]);
+        b.ret(Some(p));
+        const_fold(&mut f);
+        dce(&mut f);
+        verify_function(&f).unwrap();
+        assert!(!f.insts.iter().any(|i| !i.dead && matches!(i.kind, InstKind::Phi { .. })));
+    }
+}

@@ -1,0 +1,380 @@
+//! Control-flow structurization (paper §4.3.2).
+//!
+//! The Vortex IPDOM stack requires reducible (structured) control flow.
+//! LLVM's StructurizeCFG linearizes unstructured regions behind computed
+//! predicates; we reproduce that cost model with the classic *dispatcher*
+//! construction: every irreducible region gets a single dispatch header
+//! that routes control by a predicate variable. The predicate
+//! store/load/compare chain is exactly the "linearization predicate"
+//! overhead the CFG-reconstruction pass (paper Fig. 6, [`super::reconstruct`])
+//! exists to avoid.
+//!
+//! MUST run before mem2reg: the front-end keeps all cross-block dataflow in
+//! allocas, so retargeting edges and creating blocks needs no SSA repair.
+//! (The dispatcher's predicate slot is itself an alloca that mem2reg later
+//! promotes into the phi + compare chain form.)
+
+use crate::ir::cfg::irreducible_back_edges;
+use crate::ir::*;
+use std::collections::HashSet;
+
+#[derive(Debug, Default)]
+pub struct StructurizeReport {
+    /// Number of dispatcher headers created.
+    pub dispatchers: usize,
+    /// Total entry blocks routed through dispatchers.
+    pub entries_routed: usize,
+}
+
+/// Strongly connected component containing `seed`, restricted to the
+/// `allowed` node set (None = whole CFG).
+fn scc_of(f: &Function, seed: BlockId, allowed: Option<&HashSet<BlockId>>) -> HashSet<BlockId> {
+    let ok = |b: BlockId| allowed.map(|a| a.contains(&b)).unwrap_or(true);
+    let mut fwd: HashSet<BlockId> = HashSet::new();
+    let mut stack = vec![seed];
+    while let Some(b) = stack.pop() {
+        if ok(b) && fwd.insert(b) {
+            for s in f.succs(b) {
+                stack.push(s);
+            }
+        }
+    }
+    let preds = f.preds();
+    let mut bwd: HashSet<BlockId> = HashSet::new();
+    let mut stack = vec![seed];
+    while let Some(b) = stack.pop() {
+        if ok(b) && bwd.insert(b) {
+            for &p in &preds[b.idx()] {
+                stack.push(p);
+            }
+        }
+    }
+    fwd.intersection(&bwd).copied().collect()
+}
+
+/// Find the innermost multi-entry (irreducible) region around `m` by
+/// repeatedly peeling single-entry loop headers (Havlak-style nesting
+/// descent): the whole-graph SCC of an irreducible region nested inside a
+/// reducible loop has just that loop's header as entry.
+fn find_irreducible_region(
+    f: &Function,
+    m: BlockId,
+) -> Option<(HashSet<BlockId>, Vec<BlockId>)> {
+    let mut region = scc_of(f, m, None);
+    for _ in 0..f.blocks.len() + 1 {
+        if region.len() < 2 {
+            return None;
+        }
+        let entries = region_entries(f, &region);
+        if entries.len() >= 2 {
+            return Some((region, entries));
+        }
+        let h = entries[0];
+        let mut allowed = region.clone();
+        allowed.remove(&h);
+        if !allowed.contains(&m) {
+            return None;
+        }
+        region = scc_of(f, m, Some(&allowed));
+    }
+    None
+}
+
+/// Entries of a region: blocks with a predecessor outside the region
+/// (or the function entry itself).
+fn region_entries(f: &Function, region: &HashSet<BlockId>) -> Vec<BlockId> {
+    let preds = f.preds();
+    let mut entries: Vec<BlockId> = region
+        .iter()
+        .copied()
+        .filter(|&b| b == f.entry || preds[b.idx()].iter().any(|p| !region.contains(p)))
+        .collect();
+    entries.sort();
+    entries
+}
+
+/// Structurize the function: repeatedly find an irreducible region and
+/// route all its entries through a dispatcher block keyed on a predicate
+/// slot. Terminates because each dispatcher strictly reduces the number of
+/// multi-entry SCCs; bounded at 64 iterations defensively.
+pub fn run(f: &mut Function) -> StructurizeReport {
+    let mut report = StructurizeReport::default();
+    for _ in 0..64 {
+        let offending = irreducible_back_edges(f);
+        let Some(&(_, m)) = offending.first() else {
+            return report;
+        };
+        let (region, entries) = find_irreducible_region(f, m)
+            .expect("offending back edge must sit in a multi-entry region");
+        let _ = &region;
+        // No phis allowed (pre-SSA contract).
+        for &e in &entries {
+            assert!(
+                !f.blocks[e.idx()]
+                    .insts
+                    .iter()
+                    .any(|&i| matches!(f.inst(i).kind, InstKind::Phi { .. })),
+                "structurize must run before SSA construction"
+            );
+        }
+        dispatch_region(f, &entries);
+        report.dispatchers += 1;
+        report.entries_routed += entries.len();
+    }
+    panic!("structurization did not converge in 64 iterations");
+}
+
+/// Create the dispatcher for the given entry set and reroute every edge
+/// into any entry through it.
+fn dispatch_region(f: &mut Function, entries: &[BlockId]) {
+    // Predicate slot, allocated in (a possibly fresh) entry block.
+    let entry_in_region = entries.contains(&f.entry);
+    let alloca_block = if entry_in_region {
+        // Create a fresh function entry that falls into the dispatcher.
+        let ne = f.add_block("entry2");
+        ne
+    } else {
+        f.entry
+    };
+    let slot = f.insert_inst(
+        alloca_block,
+        0,
+        InstKind::Alloca { size: 4 },
+        Type::Ptr(AddrSpace::Private),
+    );
+
+    // Dispatch header: load slot, compare-chain to entries.
+    let d = f.add_block("dispatch");
+    let ld = f.push_inst(
+        d,
+        InstKind::Load {
+            ptr: Val::Inst(slot),
+        },
+        Type::I32,
+    );
+    // Chain blocks: d tests entries[0]; chain_i tests entries[i].
+    let mut chain_blocks = vec![d];
+    for i in 1..entries.len().saturating_sub(1) {
+        chain_blocks.push(f.add_block("dchain"));
+        let _ = i;
+    }
+    for (i, &cb) in chain_blocks.iter().enumerate() {
+        let is_last_test = i + 1 == chain_blocks.len();
+        let cond = f.push_inst(
+            cb,
+            InstKind::ICmp {
+                pred: ICmp::Eq,
+                a: Val::Inst(ld),
+                b: Val::ci(i as i64),
+            },
+            Type::I1,
+        );
+        let fallthrough = if is_last_test {
+            // last test: false -> final entry
+            entries[entries.len() - 1]
+        } else {
+            chain_blocks[i + 1]
+        };
+        f.push_inst(
+            cb,
+            InstKind::CondBr {
+                cond: Val::Inst(cond),
+                t: entries[i],
+                f: fallthrough,
+            },
+            Type::Void,
+        );
+    }
+    if chain_blocks.len() == 1 && entries.len() == 1 {
+        unreachable!();
+    }
+    // Reroute all edges into each entry (from anywhere) through d, storing
+    // the selector first.
+    let all_blocks = f.block_ids();
+    for b in all_blocks {
+        if b == d || chain_blocks.contains(&b) {
+            continue;
+        }
+        if f.blocks[b.idx()].insts.is_empty() {
+            continue;
+        }
+        let term = f.term(b);
+        let succs = f.inst(term).kind.successors();
+        for (i, &e) in entries.iter().enumerate() {
+            if succs.contains(&e) {
+                // Edge b -> e: go through a stub that stores i and jumps d.
+                let stub = f.add_block("dstore");
+                f.push_inst(
+                    stub,
+                    InstKind::Store {
+                        ptr: Val::Inst(slot),
+                        val: Val::ci(i as i64),
+                    },
+                    Type::Void,
+                );
+                f.push_inst(stub, InstKind::Br { target: d }, Type::Void);
+                f.inst_mut(term).kind.replace_successor(e, stub);
+            }
+        }
+    }
+    // Fresh function entry if the old one was inside the region.
+    if entry_in_region {
+        let old_entry = f.entry;
+        let idx = entries.iter().position(|&e| e == old_entry).unwrap();
+        f.push_inst(
+            alloca_block,
+            InstKind::Store {
+                ptr: Val::Inst(slot),
+                val: Val::ci(idx as i64),
+            },
+            Type::Void,
+        );
+        f.push_inst(alloca_block, InstKind::Br { target: d }, Type::Void);
+        f.entry = alloca_block;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::cfg::is_reducible;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    /// The classic two-headed loop becomes reducible and keeps semantics.
+    /// Program: x starts at arg; loop A: x+=1, if x<10 goto B else exit;
+    /// B: x+=100, if x<200 goto A else exit. Entered at A or B based on c.
+    fn build_irreducible() -> Module {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "c".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        let a = f.add_block("a");
+        let bb = f.add_block("b");
+        let exit = f.add_block("x");
+        let mut b = Builder::new(&mut f);
+        let x = b.alloca(4);
+        b.store(x, Val::ci(0));
+        let c = b.icmp(ICmp::Ne, Val::Arg(1), Val::ci(0));
+        b.cond_br(c, a, bb);
+        b.set_block(a);
+        let xv = b.load(x, Type::I32);
+        let x1 = b.add(xv, Val::ci(1));
+        b.store(x, x1);
+        let ca = b.icmp(ICmp::Slt, x1, Val::ci(10));
+        b.cond_br(ca, bb, exit);
+        b.set_block(bb);
+        let xv2 = b.load(x, Type::I32);
+        let x2 = b.add(xv2, Val::ci(100));
+        b.store(x, x2);
+        let cb2 = b.icmp(ICmp::Slt, x2, Val::ci(200));
+        b.cond_br(cb2, a, exit);
+        b.set_block(exit);
+        let xf = b.load(x, Type::I32);
+        b.store(Val::Arg(0), xf);
+        b.ret(None);
+        m.add_func(f);
+        m
+    }
+
+    fn run_and_read(m: &Module, c: u32) -> u32 {
+        let mut mem = vec![0u8; 4096];
+        crate::ir::interp::run_kernel_scalar(
+            m,
+            FuncId(0),
+            &[64, c],
+            [1, 1, 1],
+            [1, 1, 1],
+            &mut mem,
+            2048,
+            &[],
+        )
+        .unwrap();
+        crate::ir::interp::read_u32(&mem, 64)
+    }
+
+    #[test]
+    fn dispatch_makes_reducible_and_preserves_semantics() {
+        let m0 = build_irreducible();
+        assert!(!is_reducible(&m0.funcs[0]));
+        let before: Vec<u32> = [0u32, 1].iter().map(|&c| run_and_read(&m0, c)).collect();
+        let mut m = m0.clone();
+        let rep = run(&mut m.funcs[0]);
+        assert!(rep.dispatchers >= 1);
+        assert!(is_reducible(&m.funcs[0]));
+        verify_function(&m.funcs[0]).unwrap();
+        let after: Vec<u32> = [0u32, 1].iter().map(|&c| run_and_read(&m, c)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn reducible_input_untouched() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let h = f.add_block("h");
+        let x = f.add_block("x");
+        let mut b = Builder::new(&mut f);
+        b.br(h);
+        b.set_block(h);
+        b.cond_br(Val::cb(true), h, x);
+        b.set_block(x);
+        b.ret(None);
+        let rep = run(&mut f);
+        assert_eq!(rep.dispatchers, 0);
+        m.add_func(f);
+    }
+
+    /// Entry-in-region case: loop straight back to the function entry.
+    #[test]
+    fn entry_inside_irreducible_region() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "out".into(),
+                ty: Type::Ptr(AddrSpace::Global),
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        // entry <-> b two-headed-ish: entry -> b, b -> entry (back into entry),
+        // entry -> exit. Entry has implicit external entry: multi-entry SCC.
+        let bb = f.add_block("b");
+        let exit = f.add_block("x");
+        let entry0 = f.entry;
+        let mut b = Builder::new(&mut f);
+        let x = b.alloca(4);
+        let xv = b.load(x, Type::I32);
+        let x1 = b.add(xv, Val::ci(1));
+        b.store(x, x1);
+        let c = b.icmp(ICmp::Slt, x1, Val::ci(3));
+        b.cond_br(c, bb, exit);
+        b.set_block(bb);
+        b.br(entry0);
+        b.set_block(exit);
+        let xf = b.load(x, Type::I32);
+        b.store(Val::Arg(0), xf);
+        b.ret(None);
+        // NOTE: alloca-in-entry gets re-executed per iteration in this
+        // contrived graph; the interpreter bumps sp each time but the slot
+        // address changes, so avoid interp comparison here and just check
+        // structure.
+        let _rep = run(&mut f);
+        assert!(is_reducible(&f));
+        verify_function(&f).unwrap();
+        m.add_func(f);
+    }
+}

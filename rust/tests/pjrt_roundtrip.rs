@@ -1,0 +1,137 @@
+//! PJRT round-trip: the JAX/Pallas AOT artifacts load, compile and
+//! execute from Rust, and their results validate the simulated GPU's
+//! output (the §5 "reference CPU implementation" role).
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) when the
+//! artifacts directory has not been built.
+
+use volt::backend::emit::BackendOptions;
+use volt::coordinator::{compile_source, Rng};
+use volt::frontend::FrontendOptions;
+use volt::runtime::{default_artifacts_dir, ArgValue, PjrtReference, VoltDevice};
+use volt::sim::SimConfig;
+use volt::transform::OptLevel;
+
+fn reference() -> Option<PjrtReference> {
+    match PjrtReference::load(&default_artifacts_dir()) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping PJRT tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_execute_with_known_values() {
+    let Some(r) = reference() else { return };
+    assert!(r.platform().to_lowercase().contains("cpu") || !r.platform().is_empty());
+    // vecadd
+    let a: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..1000).map(|i| 2.0 * i as f32).collect();
+    let out = r.run_f32("vecadd1000", &[a.clone(), b.clone()]).unwrap();
+    for i in 0..1000 {
+        assert_eq!(out[i], 3.0 * i as f32);
+    }
+    // matmul against a Rust-computed reference
+    let mut rng = Rng(7);
+    let ma: Vec<f32> = (0..256).map(|_| rng.f32_01()).collect();
+    let mb: Vec<f32> = (0..256).map(|_| rng.f32_01()).collect();
+    let mm = r.run_f32("matmul16", &[ma.clone(), mb.clone()]).unwrap();
+    for i in 0..16 {
+        for j in 0..16 {
+            let want: f32 = (0..16).map(|k| ma[i * 16 + k] * mb[k * 16 + j]).sum();
+            assert!(
+                (mm[i * 16 + j] - want).abs() < 1e-3,
+                "({i},{j}): {} vs {want}",
+                mm[i * 16 + j]
+            );
+        }
+    }
+    // composed L2 graph: gemm+bias+relu is non-negative and matches.
+    let bias: Vec<f32> = (0..16).map(|i| -0.5 + i as f32 * 0.05).collect();
+    let g = r
+        .run_f32("gemm_bias_relu16", &[ma.clone(), mb.clone(), bias.clone()])
+        .unwrap();
+    for i in 0..16 {
+        for j in 0..16 {
+            let dot: f32 = (0..16).map(|k| ma[i * 16 + k] * mb[k * 16 + j]).sum();
+            let want = (dot + bias[j]).max(0.0);
+            assert!((g[i * 16 + j] - want).abs() < 1e-3);
+        }
+    }
+}
+
+/// The mandated cross-validation: device (compiled VCL on the SIMT
+/// simulator) vs the PJRT-executed Pallas reference, same inputs.
+#[test]
+fn device_sgemm_matches_pallas_reference() {
+    let Some(r) = reference() else { return };
+    let src = r#"
+kernel void sgemm(global float* a, global float* b, global float* c, int n) {
+    int row = get_global_id(1);
+    int col = get_global_id(0);
+    if (row < n && col < n) {
+        float s = 0.0f;
+        for (int t = 0; t < n; t++) { s += a[row * n + t] * b[t * n + col]; }
+        c[row * n + col] = s;
+    }
+}
+"#;
+    let out = compile_source(
+        src,
+        &FrontendOptions::default(),
+        OptLevel::Recon,
+        &BackendOptions::default(),
+    )
+    .unwrap();
+    let mut dev = VoltDevice::new(out.image.clone(), SimConfig::default());
+    let n = 16usize;
+    let mut rng = Rng(99);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32_01() * 2.0 - 1.0).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f32_01() * 2.0 - 1.0).collect();
+    let pa = dev.malloc((n * n * 4) as u32);
+    let pb = dev.malloc((n * n * 4) as u32);
+    let pc = dev.malloc((n * n * 4) as u32);
+    dev.write_f32(pa, &a).unwrap();
+    dev.write_f32(pb, &b).unwrap();
+    dev.launch(
+        "sgemm",
+        [2, 2, 1],
+        [8, 8, 1],
+        &[
+            ArgValue::Ptr(pa),
+            ArgValue::Ptr(pb),
+            ArgValue::Ptr(pc),
+            ArgValue::I32(n as i32),
+        ],
+    )
+    .unwrap();
+    let device_out = dev.read_f32(pc, n * n).unwrap();
+    let pallas_out = r.run_f32("matmul16", &[a, b]).unwrap();
+    for i in 0..n * n {
+        assert!(
+            (device_out[i] - pallas_out[i]).abs() < 1e-3,
+            "elem {i}: device {} vs pallas {}",
+            device_out[i],
+            pallas_out[i]
+        );
+    }
+}
+
+#[test]
+fn manifest_covers_expected_kernels() {
+    let Some(r) = reference() else { return };
+    for k in [
+        "matmul16",
+        "matmul24",
+        "matmul128",
+        "vecadd1000",
+        "saxpy777",
+        "transpose24",
+        "blocksum512",
+        "gemm_bias_relu16",
+    ] {
+        assert!(r.has(k), "missing artifact {k}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Property test: random structured kernels, compiled at random ladder
+//! levels through the FULL pipeline (frontend → middle-end → backend →
+//! simulator), must produce the same memory image as the scalar IR
+//! interpreter oracle running the pre-middle-end kernel.
+//!
+//! This single property transitively checks structurization, divergence
+//! insertion, register allocation, encoding and the simulator's IPDOM
+//! semantics: any unsound "uniform" claim trips the simulator's
+//! non-uniform-branch trap; any broken reconvergence corrupts results.
+
+use volt::backend::{build_image, BackendOptions};
+use volt::coordinator::propcheck::{check, PropConfig};
+use volt::coordinator::Rng;
+use volt::frontend::{compile, compile_kernels, FrontendOptions};
+use volt::ir::interp::{read_u32, run_kernel_scalar, write_u32};
+use volt::sim::{Gpu, SimConfig};
+use volt::transform::{run_middle_end, OptLevel};
+
+/// Generate a random kernel over `out`, `a` (ints) and scalar n.
+fn gen_kernel(rng: &mut Rng, size: u32) -> String {
+    let mut body = String::new();
+    let mut vars = vec!["i".to_string(), "v".to_string()];
+    body.push_str("    int i = get_global_id(0);\n");
+    body.push_str("    int v = a[i];\n");
+    let nstmt = 2 + (rng.next_u32() % size.max(1)) as usize;
+    for s in 0..nstmt {
+        let pick = rng.next_u32() % 10;
+        // never mutate the index var `i`: out[i] stores must stay
+        // lane-private or the program is racy and order-dependent.
+        let mut_vars: Vec<&String> = vars.iter().filter(|v| *v != "i").collect();
+        let var = mut_vars[(rng.next_u32() as usize) % mut_vars.len()].clone();
+        let rhs_var = vars[(rng.next_u32() as usize) % vars.len()].clone();
+        let c1 = (rng.next_u32() % 13) as i32 + 1;
+        let c2 = (rng.next_u32() % 7) as i32;
+        match pick {
+            0..=2 => {
+                let op = ["+", "-", "*", "^", "&", "|"][(rng.next_u32() as usize) % 6];
+                body.push_str(&format!("    {var} = ({var} {op} {rhs_var}) + {c2};\n"));
+            }
+            3..=4 => {
+                let cmp = ["<", ">", "==", "!="][(rng.next_u32() as usize) % 4];
+                body.push_str(&format!(
+                    "    if ({var} % {c1} {cmp} {c2}) {{ {var} = {var} * 3 + 1; }} else {{ {var} = {var} - {rhs_var}; }}\n"
+                ));
+            }
+            5 => {
+                body.push_str(&format!(
+                    "    {var} = {var} > {c2} ? {var} - {rhs_var} : {var} + {c1};\n"
+                ));
+            }
+            6..=7 => {
+                let nv = format!("t{s}");
+                body.push_str(&format!(
+                    "    int {nv} = 0;\n    for (int k{s} = 0; k{s} < ({var} & 7); k{s}++) {{ {nv} = {nv} + k{s} + ({rhs_var} & 3); }}\n"
+                ));
+                vars.push(nv);
+            }
+            8 => {
+                let nv = format!("u{s}");
+                body.push_str(&format!(
+                    "    int {nv} = 0;\n    for (int q{s} = 0; q{s} < n; q{s}++) {{ {nv} = {nv} + q{s}; }}\n"
+                ));
+                vars.push(nv);
+            }
+            _ => {
+                body.push_str(&format!(
+                    "    if ({var} == {c1}) {{ out[i] = 9999; return; }}\n"
+                ));
+            }
+        }
+    }
+    let fold = vars
+        .iter()
+        .map(|v| v.as_str())
+        .collect::<Vec<_>>()
+        .join(" ^ ");
+    format!(
+        "kernel void k(global int* out, global int* a, int n) {{\n{body}    out[i] = {fold};\n}}\n"
+    )
+}
+
+#[test]
+fn random_kernels_match_scalar_oracle() {
+    let cfg = PropConfig {
+        cases: 24,
+        seed: 0xC0FFEE,
+    };
+    check(&cfg, |rng, size| {
+        let src = gen_kernel(rng, size);
+        let lvl = OptLevel::LADDER[(rng.next_u32() as usize) % OptLevel::LADDER.len()];
+        run_case(&src, lvl).map_err(|e| format!("{e}\nsource:\n{src}"))
+    });
+}
+
+/// A fixed stress case: deep nesting + early returns + loops together.
+#[test]
+fn nested_stress_kernel_all_levels() {
+    let src = r#"
+kernel void k(global int* out, global int* a, int n) {
+    int i = get_global_id(0);
+    int v = a[i];
+    if (i % 3 == 0) {
+        for (int k = 0; k < (v & 7); k++) {
+            if (k % 2 == 0) { v += k; } else { v -= 1; }
+            if (v == 13) { out[i] = 777; return; }
+        }
+    } else {
+        if (v > 500) { out[i] = 1; return; }
+        v = v > 250 ? v - 250 : v + 3;
+    }
+    int u = 0;
+    for (int q = 0; q < n; q++) { u += q * (i & 1); }
+    out[i] = v + u;
+}
+"#;
+    for lvl in OptLevel::LADDER {
+        run_case(src, lvl).unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+fn run_case(src: &str, lvl: OptLevel) -> Result<(), String> {
+    const N: u32 = 64;
+    let n_arg = 5u32;
+    // Oracle: pre-middle-end kernel through the scalar interpreter.
+    let m0 = compile(src, &FrontendOptions::default()).map_err(|e| e.to_string())?;
+    let k = m0.find_func("k").ok_or("no kernel")?;
+    let mut mem = vec![0u8; 1 << 20];
+    let out0 = 0x1000u32;
+    let a0 = 0x2000u32;
+    for i in 0..N {
+        write_u32(&mut mem, a0 + i * 4, i.wrapping_mul(2654435761) % 1000);
+    }
+    run_kernel_scalar(
+        &m0,
+        k,
+        &[out0, a0, n_arg],
+        [2, 1, 1],
+        [32, 1, 1],
+        &mut mem,
+        1 << 18,
+        &[],
+    )
+    .map_err(|e| format!("oracle: {e}"))?;
+    let want: Vec<u32> = (0..N).map(|i| read_u32(&mem, out0 + i * 4)).collect();
+
+    // Full pipeline + simulator.
+    let (mut m, infos) =
+        compile_kernels(src, &FrontendOptions::default()).map_err(|e| e.to_string())?;
+    let mut mcfg = lvl.config();
+    mcfg.verify = true;
+    run_middle_end(&mut m, &mcfg);
+    let image = build_image(
+        &m,
+        &format!("__main_{}", infos[0].name),
+        &BackendOptions {
+            zicond: lvl >= OptLevel::ZiCond,
+            ..Default::default()
+        },
+    )?;
+    let sim_cfg = SimConfig {
+        num_cores: 2,
+        warps_per_core: 4,
+        heap_bytes: 1 << 20,
+        ..SimConfig::default()
+    };
+    let mut gpu = Gpu::load(&image, sim_cfg);
+    let out = gpu.alloc(N * 4);
+    let a = gpu.alloc(N * 4);
+    for i in 0..N {
+        gpu.mem
+            .write_u32(a + i * 4, i.wrapping_mul(2654435761) % 1000)
+            .map_err(|e| format!("seed: {e:?}"))?;
+    }
+    let args_addr = gpu.image_args_addr;
+    let entry = image.func_entries[&format!("__main_{}", infos[0].name)];
+    for (off, v) in [
+        (0u32, 2u32),
+        (4, 1),
+        (8, 1),
+        (12, 32),
+        (16, 1),
+        (20, 1),
+        (24, entry),
+        (28, out),
+        (32, a),
+        (36, n_arg),
+    ] {
+        gpu.mem
+            .write_u32(args_addr + off, v)
+            .map_err(|e| format!("args: {e:?}"))?;
+    }
+    let _stats = gpu.run().map_err(|e| format!("sim @ {lvl:?}: {e}"))?;
+    for i in 0..N {
+        let got = gpu
+            .mem
+            .read_u32(out + i * 4)
+            .map_err(|e| format!("{e:?}"))?;
+        if got != want[i as usize] {
+            return Err(format!(
+                "lane {i} mismatch at {lvl:?}: got {got}, want {}",
+                want[i as usize]
+            ));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Property tests over the uniformity analysis:
+//!
+//! * **monotonicity** — enabling more analysis (the §5.2 ladder) never
+//!   increases the number of divergent values or divergent branches;
+//! * **soundness via the simulator** — any value the analysis calls
+//!   uniform that actually diverges would leave a uniform `CondBr` in the
+//!   binary, and the simulator traps on non-uniform branch conditions.
+//!   (The full-pipeline property in prop_compile.rs exercises this; here
+//!   we assert the analysis-level invariants directly.)
+
+use volt::analysis::tti::VortexTti;
+use volt::analysis::{uniformity, UniformityOptions};
+use volt::coordinator::propcheck::{check, PropConfig};
+use volt::coordinator::Rng;
+use volt::frontend::{compile, FrontendOptions};
+use volt::transform::{mem2reg, simplify};
+
+fn gen_kernel(rng: &mut Rng, size: u32) -> String {
+    let mut body = String::new();
+    body.push_str("    int i = get_global_id(0);\n    int v = a[i];\n    int acc = 0;\n");
+    for s in 0..(2 + rng.next_u32() % size.max(1)) {
+        match rng.next_u32() % 4 {
+            0 => body.push_str(&format!(
+                "    if (v % {} == 0) acc += {}; else acc -= v;\n",
+                rng.next_u32() % 9 + 2,
+                rng.next_u32() % 100
+            )),
+            1 => body.push_str(&format!(
+                "    for (int k{s} = 0; k{s} < n; k{s}++) acc += k{s};\n"
+            )),
+            2 => body.push_str(&format!(
+                "    for (int d{s} = 0; d{s} < (v & 3); d{s}++) acc ^= d{s};\n"
+            )),
+            _ => body.push_str("    acc = acc > 0 ? acc - i : acc + 1;\n"),
+        }
+    }
+    format!(
+        "kernel void k(global int* out, global int* a, uniform int n) {{\n{body}    out[i] = acc;\n}}\n"
+    )
+}
+
+#[test]
+fn ladder_is_monotone() {
+    let ladder = [
+        UniformityOptions::default(),
+        UniformityOptions {
+            uni_hw: true,
+            ..Default::default()
+        },
+        UniformityOptions {
+            uni_hw: true,
+            uni_ann: true,
+            uni_func: false,
+        },
+        UniformityOptions::all(),
+    ];
+    check(
+        &PropConfig {
+            cases: 20,
+            seed: 0xAB1E,
+        },
+        |rng, size| {
+            let src = gen_kernel(rng, size);
+            let mut m = compile(&src, &FrontendOptions::default()).map_err(|e| e.to_string())?;
+            let k = m.find_func("k").unwrap();
+            // SSA form for a meaningful analysis.
+            mem2reg::run(&mut m.funcs[k.idx()]);
+            simplify::simplify(&mut m.funcs[k.idx()]);
+            let mut prev_div = usize::MAX;
+            let mut prev_branches = usize::MAX;
+            for opts in &ladder {
+                let u = uniformity::analyze(&m, k, opts, &VortexTti);
+                let nd = u.num_divergent();
+                let nb = u.div_branch_blocks.len();
+                if nd > prev_div || nb > prev_branches {
+                    return Err(format!(
+                        "ladder not monotone: {nd}/{nb} after {prev_div}/{prev_branches} at {opts:?}\n{src}"
+                    ));
+                }
+                prev_div = nd;
+                prev_branches = nb;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lane_id_rooted_values_stay_divergent() {
+    // No amount of analysis may mark gid-derived data uniform.
+    check(
+        &PropConfig {
+            cases: 12,
+            seed: 0xD177,
+        },
+        |rng, size| {
+            let src = gen_kernel(rng, size);
+            let m = {
+                let mut m =
+                    compile(&src, &FrontendOptions::default()).map_err(|e| e.to_string())?;
+                let k = m.find_func("k").unwrap();
+                mem2reg::run(&mut m.funcs[k.idx()]);
+                m
+            };
+            let k = m.find_func("k").unwrap();
+            let u = uniformity::analyze(&m, k, &UniformityOptions::all(), &VortexTti);
+            let f = m.func(k);
+            // The out[i] store's address must be divergent (i is per-lane).
+            for inst in f.insts.iter().filter(|i| !i.dead) {
+                if let volt::ir::InstKind::Store { ptr, .. } = &inst.kind {
+                    if let volt::ir::Val::Inst(p) = ptr {
+                        if let volt::ir::InstKind::Gep { index, .. } = &f.inst(*p).kind {
+                            if u.val_div(*index) {
+                                return Ok(()); // found the divergent store index
+                            }
+                        }
+                    }
+                }
+            }
+            Err(format!("no divergent store index found\n{src}"))
+        },
+    );
+}

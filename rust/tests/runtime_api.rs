@@ -1,0 +1,191 @@
+//! Host-runtime API integration (paper §4.2 host path + §5.4 Case Study
+//! 2): multi-kernel modules with persistent device memory, deferred
+//! symbol copies, allocator behaviour and launch validation.
+
+use volt::backend::emit::BackendOptions;
+use volt::coordinator::compile_source;
+use volt::frontend::FrontendOptions;
+use volt::runtime::{ArgValue, RuntimeError, VoltDevice};
+use volt::sim::SimConfig;
+use volt::transform::OptLevel;
+
+fn device(src: &str) -> VoltDevice {
+    let out = compile_source(
+        src,
+        &FrontendOptions::default(),
+        OptLevel::Recon,
+        &BackendOptions::default(),
+    )
+    .unwrap();
+    VoltDevice::new(out.image.clone(), SimConfig::default())
+}
+
+/// Two kernels, one image: init writes, scale reads what init wrote.
+#[test]
+fn multi_kernel_module_shares_memory() {
+    let mut dev = device(
+        r#"
+kernel void init(global float* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = (float)i;
+}
+kernel void scale(global float* x, float a, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] * a;
+}
+"#,
+    );
+    let n = 96u32;
+    let buf = dev.malloc(n * 4);
+    dev.launch("init", [1, 1, 1], [96, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(n as i32)])
+        .unwrap();
+    dev.launch(
+        "scale",
+        [1, 1, 1],
+        [96, 1, 1],
+        &[ArgValue::Ptr(buf), ArgValue::F32(2.5), ArgValue::I32(n as i32)],
+    )
+    .unwrap();
+    let got = dev.read_f32(buf, n as usize).unwrap();
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, i as f32 * 2.5);
+    }
+    assert_eq!(dev.launches, 2);
+}
+
+/// cudaMemcpyToSymbol with offset into a constant table.
+#[test]
+fn memcpy_to_symbol_with_offset() {
+    let mut dev = device(
+        r#"
+__constant__ float table[8] = { 0.0f, 0.0f, 0.0f, 0.0f, 0.0f, 0.0f, 0.0f, 0.0f };
+kernel void k(global float* out) {
+    int i = get_global_id(0);
+    out[i] = table[i % 8];
+}
+"#,
+    );
+    // Overwrite entries 4..8 only.
+    let bytes: Vec<u8> = [9.0f32, 8.0, 7.0, 6.0]
+        .iter()
+        .flat_map(|v| v.to_bits().to_le_bytes())
+        .collect();
+    dev.memcpy_to_symbol("table", &bytes, 16).unwrap();
+    let out = dev.malloc(8 * 4);
+    dev.launch("k", [1, 1, 1], [8, 1, 1], &[ArgValue::Ptr(out)]).unwrap();
+    assert_eq!(
+        dev.read_f32(out, 8).unwrap(),
+        vec![0.0, 0.0, 0.0, 0.0, 9.0, 8.0, 7.0, 6.0]
+    );
+}
+
+/// __device__ globals are writable by kernels and persist across launches.
+#[test]
+fn device_global_counter() {
+    let mut dev = device(
+        r#"
+__device__ int counter[1];
+kernel void bump(global int* unused) {
+    unused[0] = 0;
+    atomic_add(counter, 1);
+}
+"#,
+    );
+    let b = dev.malloc(4);
+    for _ in 0..2 {
+        dev.launch("bump", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(b)]).unwrap();
+    }
+    let addr = dev.image.global_addr["counter"];
+    assert_eq!(dev.gpu.mem.read_u32(addr).unwrap(), 128);
+}
+
+/// Allocator: free-list coalescing behaviour (first-fit reuse, distinct
+/// live blocks).
+#[test]
+fn allocator_first_fit() {
+    let mut dev = device("kernel void k(global int* o) { o[0] = 1; }");
+    let a = dev.malloc(256);
+    let b = dev.malloc(256);
+    let c = dev.malloc(1024);
+    assert!(a.0 < b.0 && b.0 < c.0);
+    dev.free(b, 256);
+    let d = dev.malloc(128);
+    assert_eq!(d.0, b.0, "first fit reuses the freed block");
+    let e = dev.malloc(64);
+    assert_eq!(e.0, b.0 + 128, "remainder split");
+}
+
+/// Launch validation catches unknown kernels, oversized blocks, zero grids.
+#[test]
+fn launch_validation_errors() {
+    let mut dev = device("kernel void k(global int* o) { o[0] = 1; }");
+    let b = dev.malloc(4);
+    assert!(matches!(
+        dev.launch("nope", [1, 1, 1], [1, 1, 1], &[]),
+        Err(RuntimeError::UnknownKernel(_))
+    ));
+    assert!(matches!(
+        dev.launch("k", [0, 1, 1], [1, 1, 1], &[ArgValue::Ptr(b)]),
+        Err(RuntimeError::BadLaunch(_))
+    ));
+    assert!(matches!(
+        dev.launch("k", [1, 1, 1], [32 * 64, 1, 1], &[ArgValue::Ptr(b)]),
+        Err(RuntimeError::BadLaunch(_))
+    ));
+    // A good launch still works afterwards.
+    dev.launch("k", [1, 1, 1], [1, 1, 1], &[ArgValue::Ptr(b)]).unwrap();
+    assert_eq!(dev.read_u32s(b, 1).unwrap(), vec![1]);
+}
+
+/// 2-D/3-D geometry round-trips through the dispatcher correctly.
+#[test]
+fn multi_dim_launch_geometry() {
+    let mut dev = device(
+        r#"
+kernel void idx3(global int* out, int nx, int ny) {
+    int x = get_global_id(0);
+    int y = get_global_id(1);
+    int z = get_global_id(2);
+    out[(z * ny + y) * nx + x] = x + 100 * y + 10000 * z;
+}
+"#,
+    );
+    let (nx, ny, nz) = (8u32, 4u32, 2u32);
+    let out = dev.malloc(nx * ny * nz * 4);
+    dev.launch(
+        "idx3",
+        [2, 2, 2],
+        [4, 2, 1],
+        &[ArgValue::Ptr(out), ArgValue::I32(nx as i32), ArgValue::I32(ny as i32)],
+    )
+    .unwrap();
+    let got = dev.read_u32s(out, (nx * ny * nz) as usize).unwrap();
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                assert_eq!(
+                    got[((z * ny + y) * nx + x) as usize],
+                    x + 100 * y + 10000 * z,
+                    "({x},{y},{z})"
+                );
+            }
+        }
+    }
+}
+
+/// Stats accumulate across launches.
+#[test]
+fn stats_accumulation() {
+    let mut dev = device(
+        "kernel void k(global int* o, int n) { int i = get_global_id(0); if (i < n) o[i] = i; }",
+    );
+    let b = dev.malloc(64 * 4);
+    let s1 = dev
+        .launch("k", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(b), ArgValue::I32(64)])
+        .unwrap();
+    let s2 = dev
+        .launch("k", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(b), ArgValue::I32(64)])
+        .unwrap();
+    assert_eq!(dev.total_stats.instrs, s1.instrs + s2.instrs);
+    assert!(dev.total_stats.cycles >= s1.cycles + s2.cycles - 1);
+}

@@ -1,0 +1,274 @@
+//! Direct ISA-level simulator tests: hand-assembled programs exercising
+//! the Vortex extension semantics (Table 2) — split/join nesting, pred
+//! loops with mask restore, tmc retirement, barrier synchronisation,
+//! warp shuffles/votes and the ZiCond conditional move.
+
+use std::collections::HashMap;
+use volt::backend::emit::{ProgramImage, DATA_BASE, HEAP_BASE};
+use volt::backend::isa::{MachInst, Op};
+use volt::sim::{Gpu, SimConfig, SimStats};
+
+fn mk(op: Op, rd: u8, rs1: u8, rs2: u8, imm: i32) -> MachInst {
+    MachInst {
+        op,
+        rd,
+        rs1,
+        rs2,
+        imm,
+    }
+}
+
+fn image(code: Vec<MachInst>) -> ProgramImage {
+    let words = code.iter().map(|i| i.encode()).collect();
+    ProgramImage {
+        code,
+        words,
+        data: vec![],
+        data_end: DATA_BASE + 4096,
+        global_addr: HashMap::new(),
+        args_addr: DATA_BASE,
+        local_mem_size: 0,
+        kernel: "raw".into(),
+        func_entries: HashMap::new(),
+    }
+}
+
+fn run(code: Vec<MachInst>, cfg: SimConfig) -> (Gpu, SimStats) {
+    let img = image(code);
+    let mut gpu = Gpu::load(&img, cfg);
+    let stats = gpu.run().expect("sim run");
+    (gpu, stats)
+}
+
+fn one_core() -> SimConfig {
+    SimConfig {
+        num_cores: 1,
+        warps_per_core: 2,
+        threads_per_warp: 8,
+        ..SimConfig::default()
+    }
+}
+
+const OUT: i32 = HEAP_BASE as i32;
+
+/// Activate all lanes, store lane ids to memory, retire.
+#[test]
+fn tmc_and_lane_stores() {
+    let code = vec![
+        mk(Op::LI, 5, 0, 0, -1),
+        mk(Op::TMC, 0, 5, 0, 0),
+        mk(Op::CSRR, 6, 0, 0, 0),  // lane id
+        mk(Op::LI, 7, 0, 0, OUT),
+        mk(Op::SLLI, 8, 6, 0, 2),
+        mk(Op::ADD, 7, 7, 8, 0),
+        mk(Op::SW, 0, 7, 6, 0), // mem[out + 4*lane] = lane
+        mk(Op::TMC, 0, 0, 0, 0), // retire
+    ];
+    let (gpu, stats) = run(code, one_core());
+    for l in 0..8u32 {
+        assert_eq!(gpu.mem.read_u32(OUT as u32 + l * 4).unwrap(), l);
+    }
+    assert_eq!(stats.tmcs, 2);
+}
+
+/// Divergent split: even lanes add 100, odd lanes add 200; all reconverge
+/// and store.
+#[test]
+fn split_join_divergence() {
+    // x6 = lane; x7 = lane & 1; split(x7 == 0 -> then)
+    let code = vec![
+        /*0*/ mk(Op::LI, 5, 0, 0, -1),
+        /*1*/ mk(Op::TMC, 0, 5, 0, 0),
+        /*2*/ mk(Op::CSRR, 6, 0, 0, 0),
+        /*3*/ mk(Op::ANDI, 7, 6, 0, 1),
+        /*4*/ mk(Op::SEQ, 8, 7, 0, 0), // pred: even lane
+        /*5*/ mk(Op::SPLIT, 0, 8, 0, MachInst::pack_split(8, 10)), // else=8 join=10
+        /*6 then*/ mk(Op::ADDI, 9, 6, 0, 100),
+        /*7*/ mk(Op::J, 0, 0, 0, 10),
+        /*8 else*/ mk(Op::ADDI, 9, 6, 0, 200),
+        /*9*/ mk(Op::J, 0, 0, 0, 10),
+        /*10 join*/ mk(Op::JOIN, 0, 0, 0, 0),
+        /*11*/ mk(Op::LI, 10, 0, 0, OUT),
+        /*12*/ mk(Op::SLLI, 11, 6, 0, 2),
+        /*13*/ mk(Op::ADD, 10, 10, 11, 0),
+        /*14*/ mk(Op::SW, 0, 10, 9, 0),
+        /*15*/ mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let (gpu, stats) = run(code, one_core());
+    for l in 0..8u32 {
+        let want = if l % 2 == 0 { l + 100 } else { l + 200 };
+        assert_eq!(gpu.mem.read_u32(OUT as u32 + l * 4).unwrap(), want, "lane {l}");
+    }
+    assert_eq!(stats.splits, 1); // single live warp
+    assert!(stats.joins >= stats.splits);
+}
+
+/// vx_pred loop: each lane loops lane+1 times; mask restored at exit.
+#[test]
+fn pred_loop_mask_restore() {
+    let code = vec![
+        /*0*/ mk(Op::LI, 5, 0, 0, -1),
+        /*1*/ mk(Op::TMC, 0, 5, 0, 0),
+        /*2*/ mk(Op::CSRR, 6, 0, 0, 0),  // lane
+        /*3*/ mk(Op::ADDI, 7, 6, 0, 1),  // trips = lane+1
+        /*4*/ mk(Op::LI, 8, 0, 0, 0),    // counter
+        /*5*/ mk(Op::MASK, 9, 0, 0, 0),  // save entry mask
+        /*6 header*/ mk(Op::ADDI, 8, 8, 0, 1),
+        /*7*/ mk(Op::SLT, 10, 8, 7, 0), // continue pred: counter < trips
+        /*8*/ mk(Op::PRED, 0, 10, 9, 10), // exit -> 10
+        /*9*/ mk(Op::J, 0, 0, 0, 6),
+        /*10 exit*/ mk(Op::MASK, 11, 0, 0, 0),
+        /*11*/ mk(Op::LI, 12, 0, 0, OUT),
+        /*12*/ mk(Op::SLLI, 13, 6, 0, 2),
+        /*13*/ mk(Op::ADD, 12, 12, 13, 0),
+        /*14*/ mk(Op::SW, 0, 12, 8, 0),  // store per-lane trip count
+        /*15*/ mk(Op::LI, 14, 0, 0, OUT + 64),
+        /*16*/ mk(Op::ADD, 14, 14, 13, 0),
+        /*17*/ mk(Op::SW, 0, 14, 11, 0), // store post-loop mask
+        /*18*/ mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let (gpu, stats) = run(code, one_core());
+    for l in 0..8u32 {
+        assert_eq!(
+            gpu.mem.read_u32(OUT as u32 + l * 4).unwrap(),
+            l + 1,
+            "lane {l} trip count"
+        );
+        // Mask fully restored after the loop.
+        assert_eq!(
+            gpu.mem.read_u32(OUT as u32 + 64 + l * 4).unwrap(),
+            0xff,
+            "lane {l} restored mask"
+        );
+    }
+    assert!(stats.preds > 0);
+}
+
+/// Warp ops: ballot/vote/shfl semantics.
+#[test]
+fn warp_primitives() {
+    let code = vec![
+        mk(Op::LI, 5, 0, 0, -1),
+        mk(Op::TMC, 0, 5, 0, 0),
+        mk(Op::CSRR, 6, 0, 0, 0),
+        mk(Op::ANDI, 7, 6, 0, 1),   // odd-lane pred
+        mk(Op::BALLOT, 8, 7, 0, 0), // 0xAA
+        mk(Op::VOTEANY, 9, 7, 0, 0),
+        mk(Op::VOTEALL, 10, 7, 0, 0),
+        // shfl: read lane+1 (mod nt) of lane id -> rotated ids
+        mk(Op::ADDI, 11, 6, 0, 1),
+        mk(Op::SHFL, 12, 6, 11, 0),
+        mk(Op::LI, 13, 0, 0, OUT),
+        mk(Op::SLLI, 14, 6, 0, 2),
+        mk(Op::ADD, 13, 13, 14, 0),
+        mk(Op::SW, 0, 13, 8, 0),
+        mk(Op::SW, 0, 13, 9, 64),
+        mk(Op::SW, 0, 13, 10, 128),
+        mk(Op::SW, 0, 13, 12, 192),
+        mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let (gpu, _) = run(code, one_core());
+    for l in 0..8u32 {
+        let base = OUT as u32 + l * 4;
+        assert_eq!(gpu.mem.read_u32(base).unwrap(), 0xAA, "ballot");
+        assert_eq!(gpu.mem.read_u32(base + 64).unwrap(), 1, "any");
+        assert_eq!(gpu.mem.read_u32(base + 128).unwrap(), 0, "all");
+        assert_eq!(gpu.mem.read_u32(base + 192).unwrap(), (l + 1) % 8, "shfl");
+    }
+}
+
+/// CMOV: per-lane conditional move (the ZiCond vx_cmov).
+#[test]
+fn cmov_semantics() {
+    let code = vec![
+        mk(Op::LI, 5, 0, 0, -1),
+        mk(Op::TMC, 0, 5, 0, 0),
+        mk(Op::CSRR, 6, 0, 0, 0),
+        mk(Op::ANDI, 7, 6, 0, 1),  // cond = odd
+        mk(Op::LI, 8, 0, 0, 111),  // default
+        mk(Op::LI, 9, 0, 0, 222),
+        mk(Op::CMOV, 8, 7, 9, 0),  // odd lanes: 222
+        mk(Op::LI, 10, 0, 0, OUT),
+        mk(Op::SLLI, 11, 6, 0, 2),
+        mk(Op::ADD, 10, 10, 11, 0),
+        mk(Op::SW, 0, 10, 8, 0),
+        mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let (gpu, _) = run(code, one_core());
+    for l in 0..8u32 {
+        let want = if l % 2 == 1 { 222 } else { 111 };
+        assert_eq!(gpu.mem.read_u32(OUT as u32 + l * 4).unwrap(), want);
+    }
+}
+
+/// wspawn + barrier: two warps rendezvous, then warp 1 writes after warp 0.
+#[test]
+fn wspawn_and_barrier() {
+    let code = vec![
+        /*0*/ mk(Op::LI, 5, 0, 0, 1),
+        /*1*/ mk(Op::WSPAWN, 0, 5, 0, 2), // spawn warp1 at 2
+        /*2*/ mk(Op::LI, 6, 0, 0, -1),
+        /*3*/ mk(Op::TMC, 0, 6, 0, 0),
+        /*4*/ mk(Op::CSRR, 7, 0, 0, 1), // warp id
+        /*5*/ mk(Op::LI, 8, 0, 0, 2),
+        /*6*/ mk(Op::BAR, 0, 8, 0, 0), // both warps arrive
+        /*7*/ mk(Op::LI, 9, 0, 0, OUT),
+        /*8*/ mk(Op::SLLI, 10, 7, 0, 2),
+        /*9*/ mk(Op::ADD, 9, 9, 10, 0),
+        /*10*/ mk(Op::ADDI, 11, 7, 0, 40),
+        /*11*/ mk(Op::SW, 0, 9, 11, 0),
+        /*12*/ mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let (gpu, stats) = run(code, one_core());
+    assert_eq!(gpu.mem.read_u32(OUT as u32).unwrap(), 40);
+    assert_eq!(gpu.mem.read_u32(OUT as u32 + 4).unwrap(), 41);
+    assert!(stats.barriers_executed >= 2);
+}
+
+/// Unmanaged divergent branch traps (the compiler-contract check).
+#[test]
+fn divergent_branch_traps() {
+    let code = vec![
+        mk(Op::LI, 5, 0, 0, -1),
+        mk(Op::TMC, 0, 5, 0, 0),
+        mk(Op::CSRR, 6, 0, 0, 0),
+        mk(Op::ANDI, 7, 6, 0, 1),
+        mk(Op::BNEZ, 0, 7, 0, 6), // divergent cond, no split!
+        mk(Op::TMC, 0, 0, 0, 0),
+        mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let img = image(code);
+    let mut gpu = Gpu::load(&img, one_core());
+    let err = gpu.run().unwrap_err();
+    assert!(err.msg.contains("non-uniform"), "{err}");
+}
+
+/// Atomics serialize per lane in lane order.
+#[test]
+fn atomic_add_all_lanes() {
+    let code = vec![
+        mk(Op::LI, 5, 0, 0, -1),
+        mk(Op::TMC, 0, 5, 0, 0),
+        mk(Op::LI, 6, 0, 0, OUT),
+        mk(Op::LI, 7, 0, 0, 1),
+        mk(Op::AMOADD, 8, 6, 7, 0),
+        mk(Op::CSRR, 9, 0, 0, 0),
+        mk(Op::SLLI, 10, 9, 0, 2),
+        mk(Op::ADD, 11, 6, 10, 0),
+        mk(Op::SW, 0, 11, 8, 64), // store each lane's observed old value
+        mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let cfg = SimConfig {
+        num_cores: 1,
+        warps_per_core: 1,
+        threads_per_warp: 8,
+        ..SimConfig::default()
+    };
+    let (gpu, stats) = run(code, cfg);
+    assert_eq!(gpu.mem.read_u32(OUT as u32).unwrap(), 8);
+    // Old values are 0..7 in lane order.
+    for l in 0..8u32 {
+        assert_eq!(gpu.mem.read_u32(OUT as u32 + 64 + l * 4).unwrap(), l);
+    }
+    assert_eq!(stats.atomics, 1);
+}
