@@ -1,0 +1,80 @@
+//! Bench: the session binary cache makes recompiles near-free.
+//!
+//! Compiles the whole benchmark-suite source set cold (fresh session per
+//! pass) and warm (one session, repeated compiles), and reports the
+//! speedup. The ISSUE-1 acceptance bar is >= 10x on identical-source
+//! recompiles; in practice a hit is a hash + HashMap lookup and lands
+//! orders of magnitude beyond that.
+//!
+//! Run: cargo bench --bench recompile_cache
+
+use std::time::Instant;
+use volt::coordinator::benchmarks;
+use volt::driver::{Session, VoltOptions};
+
+fn main() {
+    let sources: Vec<(&str, &str)> = benchmarks::registry()
+        .into_iter()
+        .map(|b| (b.name, b.source))
+        .collect();
+    let opts_for = |b: &str| {
+        let bench = benchmarks::find(b).unwrap();
+        VoltOptions {
+            dialect: bench.dialect,
+            ..VoltOptions::default()
+        }
+    };
+
+    // Cold: a fresh session per compile — every compile is a miss.
+    let passes = 3u32;
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        for (name, src) in &sources {
+            let mut s = Session::new(opts_for(name));
+            s.compile(src).expect(name);
+        }
+    }
+    let cold = t0.elapsed().as_secs_f64();
+
+    // Warm: one session per kernel source, compile once to populate, then
+    // time the repeated compiles (all hits).
+    let mut sessions: Vec<Session> = sources
+        .iter()
+        .map(|(name, src)| {
+            let mut s = Session::new(opts_for(name));
+            s.compile(src).expect(name);
+            s
+        })
+        .collect();
+    let t1 = Instant::now();
+    for _ in 0..passes {
+        for (s, (name, src)) in sessions.iter_mut().zip(&sources) {
+            s.compile(src).expect(name);
+        }
+    }
+    let warm = t1.elapsed().as_secs_f64();
+
+    let n = sources.len() as u32 * passes;
+    println!(
+        "cold: {n} compiles in {:.3}s ({:.2} ms each)",
+        cold,
+        cold * 1e3 / n as f64
+    );
+    println!(
+        "warm: {n} cache hits in {:.6}s ({:.4} ms each)",
+        warm,
+        warm * 1e3 / n as f64
+    );
+    let speedup = cold / warm.max(1e-9);
+    println!("cached-recompile speedup: {speedup:.0}x");
+    assert!(
+        speedup >= 10.0,
+        "cache must be at least 10x faster than cold compiles (got {speedup:.1}x)"
+    );
+    for s in &sessions {
+        let st = s.cache_stats();
+        assert_eq!(st.hits, passes as u64);
+        assert_eq!(st.misses, 1);
+    }
+    println!("OK: every warm compile was a cache hit");
+}

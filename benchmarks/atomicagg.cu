@@ -1,0 +1,32 @@
+// HeCBench-style warp-aggregated atomics: the warp elects a leader that
+// performs one atomicAdd for all selected lanes, then broadcasts the base
+// index with a shuffle; each selected lane adds its intra-warp rank.
+__global__ void atomicagg(unsigned* d, unsigned* counter, unsigned* idx,
+                          int n) {
+    int i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) {
+        int p = d[i] > 0;
+        unsigned b = __ballot(p);
+        int lane = lane_id();
+        int rank = 0;
+        int total = 0;
+        int leader = 0;
+        for (int k = 31; k >= 0; k--) {
+            if (((b >> k) & 1u) != 0u) {
+                total = total + 1;
+                if (k < lane) {
+                    rank = rank + 1;
+                }
+                leader = k;
+            }
+        }
+        int base = 0;
+        if (p != 0 && lane == leader) {
+            base = atomicAdd(counter, total);
+        }
+        base = __shfl(base, leader);
+        if (p != 0) {
+            idx[i] = base + rank;
+        }
+    }
+}

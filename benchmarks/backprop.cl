@@ -1,0 +1,15 @@
+// Rodinia backprop forward layer: weighted sum per output unit followed
+// by the logistic activation.
+kernel void backprop(global float* w, global float* in, global float* out,
+                     global int* dims) {
+    int o = get_global_id(0);
+    int in_n = dims[0];
+    int out_n = dims[1];
+    if (o < out_n) {
+        float s = 0.0f;
+        for (int i = 0; i < in_n; i++) {
+            s += w[o * in_n + i] * in[i];
+        }
+        out[o] = 1.0f / (1.0f + exp(-s));
+    }
+}

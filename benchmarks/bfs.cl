@@ -1,0 +1,15 @@
+// Rodinia-style level-synchronous BFS over a CSR graph: one launch per
+// frontier level; the host loops until no vertex is newly visited.
+kernel void bfs(global uint* row_off, global uint* cols, global int* levels,
+                global int* flag, int level, int n) {
+    int u = get_global_id(0);
+    if (u < n && levels[u] == level) {
+        for (int e = (int)row_off[u]; e < (int)row_off[u + 1]; e++) {
+            int v = (int)cols[e];
+            if (levels[v] == -1) {
+                levels[v] = level + 1;
+                flag[0] = 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+// SDK Black-Scholes call pricing with the Abramowitz-Stegun polynomial
+// approximation of the cumulative normal distribution.
+float cnd(float d) {
+    float k = 1.0f / (1.0f + 0.2316419f * fabs(d));
+    float w = ((((1.330274429f * k - 1.821255978f) * k + 1.781477937f) * k
+                - 0.356563782f) * k + 0.31938153f) * k;
+    float p = 1.0f - 0.3989422804f * exp(-0.5f * d * d) * w;
+    return d < 0.0f ? 1.0f - p : p;
+}
+
+kernel void blackscholes(global float* s, global float* x, global float* t,
+                         global float* c, int n, float r, float v) {
+    int i = get_global_id(0);
+    if (i < n) {
+        float sq = sqrt(t[i]);
+        float d1 = (log(s[i] / x[i]) + (r + 0.5f * v * v) * t[i]) / (v * sq);
+        float d2 = d1 - v * sq;
+        c[i] = s[i] * cnd(d1) - x[i] * exp(-r * t[i]) * cnd(d2);
+    }
+}

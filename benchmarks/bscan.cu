@@ -1,0 +1,16 @@
+// HeCBench-style binary warp scan: each lane counts how many lower lanes
+// of its warp have the flag set (ballot + mask + popcount).
+__global__ void bscan(unsigned* flags, unsigned* r, int n) {
+    int i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) {
+        int p = flags[i] != 0;
+        unsigned b = __ballot(p);
+        unsigned mask = (1u << lane_id()) - 1u;
+        unsigned low = b & mask;
+        int cnt = 0;
+        for (int k = 0; k < 32; k++) {
+            cnt += (int)((low >> k) & 1u);
+        }
+        r[i] = cnt;
+    }
+}

@@ -1,0 +1,28 @@
+// Rodinia-CFD-flavored flux accumulation written as the original's goto
+// state machine — deliberately irreducible control flow the middle-end
+// must structurize.
+kernel void cfd(global float* flux, global uint* mode, global float* out,
+                int n) {
+    int i = get_global_id(0);
+    float f = 0.0f;
+    int m = 0;
+    float acc = 0.0f;
+    int iter = 0;
+    if (i >= n) goto done;
+    f = flux[i];
+    m = (int)(mode[i] % 4);
+    if (m == 0) goto fast;
+slow:
+    acc = acc + f * 0.5f;
+    iter = iter + 1;
+    if (iter < m) goto slow;
+    if (acc > 4.0f) goto finish;
+    goto fast;
+fast:
+    acc = acc + f;
+    iter = iter + 1;
+    if (iter < 3 && acc < 8.0f) goto slow;
+finish:
+    out[i] = acc;
+done:
+}

@@ -1,0 +1,9 @@
+// SDK-style dot product: fixed-point partial products accumulated with a
+// global atomic (the host checks the saturating fcvt.w.s semantics).
+kernel void dotproduct(global float* a, global float* b, global int* acc,
+                       int n) {
+    int i = get_global_id(0);
+    if (i < n) {
+        atomic_add(acc, (int)(a[i] * b[i] * 256.0f));
+    }
+}

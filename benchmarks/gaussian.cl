@@ -1,0 +1,12 @@
+// Rodinia-style Gaussian elimination: one pivot per launch, one row per
+// work-item (rows below the pivot are eliminated in parallel).
+kernel void gaussian(global float* m, global float* v, int n, int pivot) {
+    int r = get_global_id(0);
+    if (r > pivot && r < n) {
+        float f = m[r * n + pivot] / m[pivot * n + pivot];
+        for (int c = pivot; c < n; c++) {
+            m[r * n + c] -= f * m[pivot * n + c];
+        }
+        v[r] -= f * v[pivot];
+    }
+}

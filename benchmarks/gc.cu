@@ -1,0 +1,21 @@
+// HeCBench-style graph-coloring conflict detection over a CSR graph; the
+// warp votes so conflict-free warps take the cheap uniform path.
+__global__ void gc(unsigned* row_off, unsigned* cols, unsigned* color,
+                   unsigned* conflict, int n) {
+    int u = blockIdx.x * blockDim.x + threadIdx.x;
+    if (u < n) {
+        int c = 0;
+        for (int e = (int)row_off[u]; e < (int)row_off[u + 1]; e++) {
+            int v = (int)cols[e];
+            if (v < u && color[v] == color[u]) {
+                c = 1;
+            }
+        }
+        int w = __any(c);
+        if (w != 0) {
+            conflict[u] = c;
+        } else {
+            conflict[u] = 0;
+        }
+    }
+}

@@ -1,0 +1,16 @@
+// Rodinia hotspot: one explicit-Euler step of the thermal simulation on
+// an n x n grid with clamped boundaries.
+kernel void hotspot(global float* temp, global float* power,
+                    global float* out, int n, float cap) {
+    int x = get_global_id(0);
+    int y = get_global_id(1);
+    if (x < n && y < n) {
+        int idx = y * n + x;
+        float c = temp[idx];
+        float l = (x > 0) ? temp[idx - 1] : c;
+        float r = (x < n - 1) ? temp[idx + 1] : c;
+        float u = (y > 0) ? temp[idx - n] : c;
+        float d = (y < n - 1) ? temp[idx + n] : c;
+        out[idx] = c + cap * (power[idx] + (l + r + u + d - 4.0f * c));
+    }
+}

@@ -1,0 +1,24 @@
+// Rodinia-style k-means assignment step: each point picks the nearest
+// center by squared Euclidean distance (first-wins on ties).
+kernel void kmeans(global float* pts, global float* centers,
+                   global int* assign, global int* params, int n) {
+    int i = get_global_id(0);
+    if (i < n) {
+        int k = params[0];
+        int d = params[1];
+        float bestd = 1e30f;
+        int best = 0;
+        for (int c = 0; c < k; c++) {
+            float acc = 0.0f;
+            for (int j = 0; j < d; j++) {
+                float diff = pts[i * d + j] - centers[c * d + j];
+                acc += diff * diff;
+            }
+            if (acc < bestd) {
+                bestd = acc;
+                best = c;
+            }
+        }
+        assign[i] = best;
+    }
+}

@@ -1,0 +1,13 @@
+// Rodinia LU decomposition (Doolittle, in place): one pivot column per
+// launch; each work-item eliminates one row below the pivot and stores
+// the multiplier in the L part.
+kernel void lud(global float* m, int n, int k) {
+    int r = get_global_id(0);
+    if (r > k && r < n) {
+        float f = m[r * n + k] / m[k * n + k];
+        m[r * n + k] = f;
+        for (int c = k + 1; c < n; c++) {
+            m[r * n + c] -= f * m[k * n + c];
+        }
+    }
+}

@@ -1,0 +1,10 @@
+// Rodinia myocyte, reduced to its per-cell ODE step: exponential rate
+// damping plus linear leak, integrated with forward Euler in place.
+__global__ void myocyte(float* state, float* rate, int n, float dt) {
+    int i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) {
+        float s = state[i];
+        float dv = rate[i] * expf(-fabsf(s) * 0.1f) - s * 0.05f;
+        state[i] = s + dt * dv;
+    }
+}

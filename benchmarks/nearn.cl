@@ -1,0 +1,11 @@
+// Rodinia nearest-neighbor: Euclidean distance from every record to the
+// query point.
+kernel void nearn(global float* lat, global float* lon, global float* d,
+                  int n, float qlat, float qlon) {
+    int i = get_global_id(0);
+    if (i < n) {
+        float dy = lat[i] - qlat;
+        float dx = lon[i] - qlon;
+        d[i] = sqrt(dy * dy + dx * dx);
+    }
+}

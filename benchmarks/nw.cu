@@ -1,0 +1,15 @@
+// Rodinia Needleman-Wunsch: anti-diagonal wavefront, one diagonal per
+// launch; each work-item relaxes one cell.
+__global__ void nw(int* score, unsigned* r, int n, int diag, int penalty) {
+    int t = blockIdx.x * blockDim.x + threadIdx.x;
+    int i = t + 1;
+    int j = diag - i;
+    if (i < n && j >= 1 && j < n) {
+        int up = score[(i - 1) * n + j] - penalty;
+        int left = score[i * n + (j - 1)] - penalty;
+        int d = score[(i - 1) * n + (j - 1)] + (int)r[i * n + j];
+        int m = max(up, left);
+        m = max(m, d);
+        score[i * n + j] = m;
+    }
+}

@@ -1,0 +1,14 @@
+// Rodinia pathfinder: dynamic-programming row relaxation; one row of the
+// cost grid per launch.
+kernel void pathfinder(global int* prev, global int* cur, global int* wall,
+                       int cols, int row) {
+    int c = get_global_id(0);
+    if (c < cols) {
+        int left = (c > 0) ? prev[c - 1] : prev[c];
+        int up = prev[c];
+        int right = (c < cols - 1) ? prev[c + 1] : prev[c];
+        int m = min(left, up);
+        m = min(m, right);
+        cur[c] = wall[row * cols + c] + m;
+    }
+}

@@ -1,0 +1,14 @@
+// Odd-even transposition sort: one phase per launch, each work-item
+// compares-and-swaps one adjacent pair.
+kernel void psort(global uint* d, int n, int phase) {
+    int t = get_global_id(0);
+    int i = 2 * t + (phase % 2);
+    if (i + 1 < n) {
+        uint x = d[i];
+        uint y = d[i + 1];
+        if (x > y) {
+            d[i] = y;
+            d[i + 1] = x;
+        }
+    }
+}

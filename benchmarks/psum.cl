@@ -1,0 +1,19 @@
+// Per-workgroup inclusive prefix sum (Hillis-Steele) through shared
+// memory; each group of 64 work-items scans its contiguous slice.
+kernel void psum(global uint* in, global uint* out, int n) {
+    local uint buf[64];
+    int l = get_local_id(0);
+    int base = get_group_id(0) * 64;
+    buf[l] = in[base + l];
+    barrier(0);
+    for (int off = 1; off < 64; off = off * 2) {
+        uint v = 0;
+        if (l >= off) {
+            v = buf[l - off];
+        }
+        barrier(0);
+        buf[l] = buf[l] + v;
+        barrier(0);
+    }
+    out[base + l] = buf[l];
+}

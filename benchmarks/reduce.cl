@@ -1,0 +1,19 @@
+// SDK-style per-workgroup tree reduction through shared memory.
+// Each group of 64 work-items sums its contiguous 64-element slice.
+kernel void reduce(global float* in, global float* out, int n) {
+    local float buf[64];
+    int l = get_local_id(0);
+    int g = get_group_id(0);
+    int i = g * 64 + l;
+    buf[l] = (i < n) ? in[i] : 0.0f;
+    barrier(0);
+    for (int s = 32; s > 0; s = s / 2) {
+        if (l < s) {
+            buf[l] += buf[l + s];
+        }
+        barrier(0);
+    }
+    if (l == 0) {
+        out[g] = buf[0];
+    }
+}

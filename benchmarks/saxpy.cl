@@ -1,0 +1,7 @@
+// NVIDIA SDK style single-precision a*x + y.
+kernel void saxpy(global float* x, global float* y, float a, int n) {
+    int i = get_global_id(0);
+    if (i < n) {
+        y[i] = a * x[i] + y[i];
+    }
+}

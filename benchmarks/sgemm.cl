@@ -1,0 +1,13 @@
+// Parboil-style dense matrix multiply: C[n x m] = A[n x k] * B[k x m].
+kernel void sgemm(global float* a, global float* b, global float* c,
+                  int n, int m, int k) {
+    int col = get_global_id(0);
+    int row = get_global_id(1);
+    if (row < n && col < m) {
+        float s = 0.0f;
+        for (int t = 0; t < k; t++) {
+            s += a[row * k + t] * b[t * m + col];
+        }
+        c[row * m + col] = s;
+    }
+}

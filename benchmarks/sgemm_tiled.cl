@@ -1,0 +1,22 @@
+// Parboil-style tiled matrix multiply with 8x8 shared-memory tiles.
+// C[n x n] = A[n x n] * B[n x n]; n must be a multiple of 8.
+kernel void sgemm_tiled(global float* a, global float* b, global float* c,
+                        int n) {
+    local float ta[64];
+    local float tb[64];
+    int lx = get_local_id(0);
+    int ly = get_local_id(1);
+    int col = get_global_id(0);
+    int row = get_global_id(1);
+    float s = 0.0f;
+    for (int t = 0; t < n; t += 8) {
+        ta[ly * 8 + lx] = a[row * n + (t + lx)];
+        tb[ly * 8 + lx] = b[(t + ly) * n + col];
+        barrier(0);
+        for (int kk = 0; kk < 8; kk++) {
+            s += ta[ly * 8 + kk] * tb[kk * 8 + lx];
+        }
+        barrier(0);
+    }
+    c[row * n + col] = s;
+}

@@ -1,0 +1,13 @@
+// HeCBench-style warp reduction via butterfly shuffles: lane 0 of each
+// warp writes the warp's sum.
+__global__ void shuffle(float* in, float* out, int n) {
+    int i = blockIdx.x * blockDim.x + threadIdx.x;
+    float v = (i < n) ? in[i] : 0.0f;
+    for (int off = 16; off > 0; off = off / 2) {
+        int src = lane_id() ^ off;
+        v += __shfl(v, src);
+    }
+    if (i % 32 == 0) {
+        out[i / 32] = v;
+    }
+}

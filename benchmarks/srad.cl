@@ -1,0 +1,11 @@
+// Rodinia SRAD (speckle-reducing anisotropic diffusion), simplified to
+// its per-pixel update: exponential diffusion coefficient times the
+// directional derivative.
+kernel void srad(global float* img, global float* out, int n, float lambda) {
+    int i = get_global_id(0);
+    if (i < n) {
+        float v = img[i];
+        float g = exp(-fabs(v) * lambda);
+        out[i] = v + 0.25f * g * (v * 0.5f - v);
+    }
+}

@@ -1,0 +1,18 @@
+// Parboil-style 1D 3-point stencil staged through shared memory with
+// halo cells; zero boundary condition.
+kernel void stencil(global float* in, global float* out, int n) {
+    local float tile[66];
+    int l = get_local_id(0);
+    int i = get_global_id(0);
+    tile[l + 1] = (i < n) ? in[i] : 0.0f;
+    if (l == 0) {
+        tile[0] = (i > 0) ? in[i - 1] : 0.0f;
+    }
+    if (l == 63) {
+        tile[65] = (i + 1 < n) ? in[i + 1] : 0.0f;
+    }
+    barrier(0);
+    if (i < n) {
+        out[i] = 0.25f * tile[l] + 0.5f * tile[l + 1] + 0.25f * tile[l + 2];
+    }
+}

@@ -1,0 +1,12 @@
+// SDK-style matrix transpose with a fused smoothing term so the access
+// pattern is not a pure permutation: out[i][j] = in[j][i] + eps*in[j][i+1].
+kernel void transpose(global float* in, global float* out, int n, int mode) {
+    int i = get_global_id(0);
+    int j = get_global_id(1);
+    if (i < n && j < n) {
+        int src = j * n + i;
+        float v = in[src];
+        float w = (i + 1 < n) ? in[src + 1] : v;
+        out[i * n + j] = v + w * 0.0001f;
+    }
+}

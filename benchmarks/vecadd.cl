@@ -1,0 +1,7 @@
+// NVIDIA SDK style vector addition.
+kernel void vecadd(global float* a, global float* b, global float* c, int n) {
+    int i = get_global_id(0);
+    if (i < n) {
+        c[i] = a[i] + b[i];
+    }
+}

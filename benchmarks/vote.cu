@@ -1,0 +1,11 @@
+// HeCBench-style warp-vote microkernel: every lane publishes whether its
+// whole warp is / has any positive element (Fig. 9 ISA-extension axis).
+__global__ void vote(unsigned* d, unsigned* o, int n) {
+    int i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) {
+        int p = d[i] > 0;
+        int all = __all(p);
+        int any = __any(p);
+        o[i] = all * 2 + any;
+    }
+}

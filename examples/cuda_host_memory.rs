@@ -1,20 +1,18 @@
 //! Case Study 2 (paper §5.4): extending host memory APIs.
 //!
 //! * `cudaMemcpyToSymbol` onto the Vortex memory model: constant symbols
-//!   live in global memory; host writes are buffered and materialized just
-//!   before launch, after device addresses resolve.
+//!   live in global memory; host writes are enqueued on the stream and
+//!   materialized just before launch, after device addresses resolve.
 //! * Shared-memory mapping choice (Fig. 10): `__shared__` onto the
 //!   per-core scratchpad vs emulated in global memory — identical results,
 //!   different performance.
 //!
 //! Run: cargo run --release --example cuda_host_memory
 
-use volt::backend::emit::{BackendOptions, SharedMemMapping};
-use volt::coordinator::compile_source;
-use volt::frontend::{Dialect, FrontendOptions};
-use volt::runtime::{ArgValue, VoltDevice};
-use volt::sim::SimConfig;
-use volt::transform::OptLevel;
+use volt::backend::emit::SharedMemMapping;
+use volt::driver::{CommandKind, Session, VoltOptions};
+use volt::frontend::Dialect;
+use volt::runtime::ArgValue;
 
 const SRC: &str = r#"
 __constant__ float coeffs[4] = { 0.0f, 0.0f, 0.0f, 0.0f };
@@ -35,54 +33,56 @@ __global__ void filter(float* data, float* out, int n) {
 "#;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let fe = FrontendOptions {
-        dialect: Dialect::Cuda,
-        warp_hw: true,
-    };
     let n = 256usize;
     let data: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
     let coeffs = [0.1f32, 0.4, 0.4, 0.1];
+    let coeff_bytes: Vec<u8> = coeffs
+        .iter()
+        .flat_map(|v| v.to_bits().to_le_bytes())
+        .collect();
 
     let mut results = vec![];
     for smem in [SharedMemMapping::Local, SharedMemMapping::Global] {
-        let out = compile_source(
-            SRC,
-            &fe,
-            OptLevel::Recon,
-            &BackendOptions {
-                smem,
-                ..Default::default()
-            },
-        )?;
-        let mut dev = VoltDevice::new(out.image.clone(), SimConfig::default());
-        // cudaMemcpyToSymbol: buffered now...
-        let bytes: Vec<u8> = coeffs
-            .iter()
-            .flat_map(|v| v.to_bits().to_le_bytes())
-            .collect();
-        dev.memcpy_to_symbol("coeffs", &bytes, 0)?;
-        println!(
-            "smem={smem:?}: {} symbol write(s) buffered (deferred until launch)",
-            dev.pending_symbol_writes()
+        let mut session = Session::new(
+            VoltOptions::builder()
+                .dialect(Dialect::Cuda)
+                .smem(smem)
+                .build()?,
         );
-        let pd = dev.malloc((n * 4) as u32);
-        let po = dev.malloc((n * 4) as u32);
-        dev.write_f32(pd, &data)?;
-        // ...materialized here, after device addresses are final.
-        let stats = dev.launch(
+        let program = session.compile(SRC)?;
+        let mut stream = session.create_stream(&program);
+
+        // cudaMemcpyToSymbol: enqueued now, materialized by the runtime
+        // just before the launch executes, once device addresses are final.
+        stream.enqueue_write_symbol("coeffs", &coeff_bytes, 0)?;
+        let pd = stream.malloc((n * 4) as u32);
+        let po = stream.malloc((n * 4) as u32);
+        stream.enqueue_write_f32(pd, &data);
+        stream.enqueue_launch(
             "filter",
             [4, 1, 1],
             [64, 1, 1],
             &[ArgValue::Ptr(pd), ArgValue::Ptr(po), ArgValue::I32(n as i32)],
         )?;
-        assert_eq!(dev.pending_symbol_writes(), 0);
-        let got = dev.read_f32(po, n)?;
+        let out = stream.enqueue_read_f32(po, n);
+        stream.synchronize()?;
+        let got = stream.take_f32(out)?;
+
+        let launch = stream
+            .events()
+            .iter()
+            .find(|e| e.kind == CommandKind::Launch)
+            .expect("launch event");
+        let cycles = launch.end_cycles - launch.start_cycles;
         println!(
             "smem={smem:?}: {} cycles, {} local accesses, {} mem requests",
-            stats.cycles, stats.local_accesses, stats.mem_requests
+            cycles,
+            stream.stats().local_accesses,
+            stream.stats().mem_requests
         );
-        results.push((smem, stats.cycles, got));
+        results.push((smem, cycles, got));
     }
+
     // Same numerics under both mappings; scratchpad is faster.
     let (m0, c0, r0) = &results[0];
     let (m1, c1, r1) = &results[1];

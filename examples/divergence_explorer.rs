@@ -5,8 +5,7 @@
 //!
 //! Run: cargo run --release --example divergence_explorer
 
-use volt::backend::emit::BackendOptions;
-use volt::coordinator::compile_source;
+use volt::driver::{Session, VoltOptions};
 use volt::frontend::{compile_kernels, FrontendOptions};
 use volt::ir::printer::print_function;
 use volt::transform::{run_middle_end, OptLevel};
@@ -61,7 +60,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
 
     println!("=== final machine code (Recon, Fig. 2-style) ===");
-    let out = compile_source(SRC, &fe, OptLevel::Recon, &BackendOptions::default())?;
+    let mut session = Session::new(VoltOptions::builder().opt_level(OptLevel::Recon).build()?);
+    let out = session.compile(SRC)?;
     let dis = out.image.disassemble();
     let mut shown = 0;
     for line in dis.lines() {

@@ -13,9 +13,9 @@
 //!
 //! Run: make artifacts && cargo run --release --example e2e_validation
 
-use volt::backend::emit::{BackendOptions, SharedMemMapping};
-use volt::coordinator::{benchmarks, compile_source, experiments, Rng};
-use volt::frontend::FrontendOptions;
+use volt::backend::emit::SharedMemMapping;
+use volt::coordinator::{benchmarks, experiments, Rng};
+use volt::driver::{Session, VoltOptions};
 use volt::runtime::{default_artifacts_dir, ArgValue, PjrtReference, VoltDevice};
 use volt::sim::SimConfig;
 use volt::transform::OptLevel;
@@ -79,12 +79,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let src = std::fs::read_to_string(
                 std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benchmarks/sgemm.cl"),
             )?;
-            let out = compile_source(
-                &src,
-                &FrontendOptions::default(),
-                OptLevel::Recon,
-                &BackendOptions::default(),
-            )?;
+            let mut session = Session::new(VoltOptions::builder().build()?);
+            let out = session.compile(&src)?;
             let mut dev = VoltDevice::new(out.image.clone(), SimConfig::default());
             let mut rng = Rng(2024);
             let a: Vec<f32> = (0..n * n).map(|_| rng.f32_01() * 2.0 - 1.0).collect();

@@ -1,17 +1,21 @@
-//! Quickstart: compile an OpenCL kernel with the full VOLT pipeline, run
-//! it on the SimX-style simulator through the host runtime, and read back
-//! the results.
+//! Quickstart: the session-based driver API end to end.
+//!
+//! One source file with two kernels is compiled into a single multi-kernel
+//! program through a `Session` (content-addressed binary cache included),
+//! then both kernels run on a `Stream` — enqueue uploads, launches and
+//! reads, `synchronize()`, inspect per-command events with sim-cycle
+//! timestamps.
 //!
 //! Run: cargo run --release --example quickstart
 
-use volt::backend::emit::BackendOptions;
-use volt::coordinator::compile_source;
-use volt::frontend::FrontendOptions;
-use volt::runtime::{ArgValue, VoltDevice};
-use volt::sim::SimConfig;
-use volt::transform::OptLevel;
+use volt::driver::{Session, VoltOptions};
+use volt::runtime::ArgValue;
 
 const SRC: &str = r#"
+kernel void ramp(global float* x, float step, int n) {
+    int i = get_global_id(0);
+    if (i < n) { x[i] = (float)i * step; }
+}
 kernel void saxpy(global float* x, global float* y, float a, int n) {
     int i = get_global_id(0);
     if (i < n) { y[i] = a * x[i] + y[i]; }
@@ -19,33 +23,42 @@ kernel void saxpy(global float* x, global float* y, float a, int n) {
 "#;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    // 1. Compile: front-end -> middle-end ladder -> Vortex binary.
-    let out = compile_source(
-        SRC,
-        &FrontendOptions::default(),
-        OptLevel::Recon,
-        &BackendOptions::default(),
-    )?;
+    // 1. A session: unified options, validated once, binary cache inside.
+    let mut session = Session::new(VoltOptions::builder().build()?);
+
+    // 2. Compile. The program exposes a launchable entry for EVERY kernel
+    //    in the source — one image serves both.
+    let program = session.compile(SRC)?;
     println!(
-        "compiled saxpy: {} instructions, {:.2} ms total ({} splits, {} managed loops)",
-        out.image.code.len(),
-        out.total_ms(),
-        out.middle.total_splits(),
-        out.middle.total_pred_loops()
+        "compiled {} kernels {:?} in {:.2} ms ({} instructions)",
+        program.kernels.len(),
+        program.kernel_names(),
+        program.timings.total_ms(),
+        program.image.code.len()
     );
 
-    // 2. Create a device (paper §5 config: 4 cores x 16 warps x 32 threads).
-    let mut dev = VoltDevice::new(out.image.clone(), SimConfig::default());
+    // Recompiling identical source is a cache hit (near-free).
+    let again = session.compile(SRC)?;
+    assert_eq!(program.fingerprint, again.fingerprint);
+    let stats = session.cache_stats();
+    println!(
+        "binary cache: {} hit(s), {} miss(es)",
+        stats.hits, stats.misses
+    );
 
-    // 3. Host API: allocate, upload, launch, download.
+    // 3. A stream: CUDA/OpenCL-style command queue on a fresh device.
     let n = 1000usize;
-    let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
-    let y: Vec<f32> = vec![1.0; n];
-    let px = dev.malloc((n * 4) as u32);
-    let py = dev.malloc((n * 4) as u32);
-    dev.write_f32(px, &x)?;
-    dev.write_f32(py, &y)?;
-    let stats = dev.launch(
+    let mut stream = session.create_stream(&program);
+    let px = stream.malloc((n * 4) as u32);
+    let py = stream.malloc((n * 4) as u32);
+    stream.enqueue_write_f32(py, &vec![1.0f32; n]);
+    stream.enqueue_launch(
+        "ramp",
+        [8, 1, 1],
+        [128, 1, 1],
+        &[ArgValue::Ptr(px), ArgValue::F32(1.0), ArgValue::I32(n as i32)],
+    )?;
+    stream.enqueue_launch(
         "saxpy",
         [8, 1, 1],
         [128, 1, 1],
@@ -56,19 +69,31 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             ArgValue::I32(n as i32),
         ],
     )?;
+    let result = stream.enqueue_read_f32(py, n);
 
-    // 4. Validate.
-    let got = dev.read_f32(py, n)?;
-    for i in 0..n {
-        assert_eq!(got[i], 2.0 * i as f32 + 1.0, "element {i}");
+    // 4. Everything executes, in order, here.
+    stream.synchronize()?;
+
+    // 5. Validate: y = 2*i + 1.
+    let got = stream.take_f32(result)?;
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, 2.0 * i as f32 + 1.0, "element {i}");
     }
+
+    // 6. Events carry device sim-cycle timestamps per command.
+    for e in stream.events() {
+        println!(
+            "  [{:>10} .. {:>10}] {:?} {} ({} warp instrs)",
+            e.start_cycles, e.end_cycles, e.kind, e.label, e.instrs
+        );
+    }
+    let s = stream.stats();
     println!(
-        "OK: {} warp-instructions in {} cycles (IPC {:.2}), {} L1 hits / {} misses",
-        stats.instrs,
-        stats.cycles,
-        stats.ipc(),
-        stats.l1_hits,
-        stats.l1_misses
+        "OK: {} launches, {} warp instructions in {} cycles (IPC {:.2})",
+        stream.events().iter().filter(|e| e.instrs > 0).count(),
+        s.instrs,
+        s.cycles,
+        s.ipc()
     );
     Ok(())
 }

@@ -13,6 +13,42 @@ use super::{isel, mir_opt, regalloc, safety_net};
 use crate::ir::{AddrSpace, FuncId, GlobalId, Module};
 use std::collections::HashMap;
 
+/// Typed back-end failure: which function (if known) and what went wrong.
+/// Wrapped into [`crate::driver::VoltError::Backend`] by the driver.
+#[derive(Clone, Debug)]
+pub struct BackendError {
+    /// Function being lowered/linked when the error was detected.
+    pub function: Option<String>,
+    pub msg: String,
+}
+
+impl BackendError {
+    fn new(function: Option<&str>, msg: impl Into<String>) -> BackendError {
+        BackendError {
+            function: function.map(|s| s.to_string()),
+            msg: msg.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.function {
+            Some(name) => write!(f, "backend error in '{name}': {}", self.msg),
+            None => write!(f, "backend error: {}", self.msg),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// Legacy string-error contexts (`Result<_, String>` + `?`) keep working.
+impl From<BackendError> for String {
+    fn from(e: BackendError) -> String {
+        e.to_string()
+    }
+}
+
 /// Memory map (see DESIGN.md).
 pub const DATA_BASE: u32 = 0x0001_0000;
 pub const LOCAL_BASE: u32 = 0x1000_0000;
@@ -33,6 +69,9 @@ pub struct ProgramImage {
     /// Global symbol table (name → address) — drives
     /// `memcpy_to_symbol` (Case Study 2).
     pub global_addr: HashMap<String, u32>,
+    /// Symbol extents (name → size in bytes) — bounds-checks symbol
+    /// writes.
+    pub global_size: HashMap<String, u32>,
     /// Address of the kernel argument block.
     pub args_addr: u32,
     /// Per-core local memory statically used.
@@ -44,6 +83,26 @@ pub struct ProgramImage {
 }
 
 impl ProgramImage {
+    /// Validate a `memcpy_to_symbol`-style write against the symbol table
+    /// and the symbol's extent. Returns the error message, or `None` when
+    /// the write is acceptable. Shared by the stream (enqueue-time) and
+    /// device (run-time) checks so the two can not diverge.
+    pub fn symbol_write_error(&self, symbol: &str, offset: u32, len: usize) -> Option<String> {
+        if !self.global_addr.contains_key(symbol) {
+            return Some(format!("unknown device symbol '{symbol}'"));
+        }
+        if let Some(&size) = self.global_size.get(symbol) {
+            let end = offset as u64 + len as u64;
+            if end > size as u64 {
+                return Some(format!(
+                    "symbol write out of range: '{symbol}' is {size} bytes, write covers \
+                     {offset}..{end}"
+                ));
+            }
+        }
+        None
+    }
+
     pub fn disassemble(&self) -> String {
         let mut s = String::new();
         let mut entries: Vec<(&String, &u32)> = self.func_entries.iter().collect();
@@ -166,7 +225,7 @@ pub fn lower_function(
     fid: FuncId,
     layout: &LayoutInfo,
     opts: &BackendOptions,
-) -> Result<MFunction, String> {
+) -> Result<MFunction, BackendError> {
     let mut mf = isel::select_function(m, fid, layout);
     mir_opt::copy_prop(&mut mf);
     mir_opt::dce(&mut mf);
@@ -177,10 +236,9 @@ pub fn lower_function(
     if opts.safety_net {
         let rep = safety_net::run(&mut mf, opts.zicond);
         if !rep.errors.is_empty() {
-            return Err(format!(
-                "safety net rejected {}: {}",
-                mf.name,
-                rep.errors.join("; ")
+            return Err(BackendError::new(
+                Some(mf.name.as_str()),
+                format!("safety net rejected: {}", rep.errors.join("; ")),
             ));
         }
     }
@@ -368,10 +426,10 @@ pub fn build_image(
     m: &Module,
     dispatcher: &str,
     opts: &BackendOptions,
-) -> Result<ProgramImage, String> {
-    let entry_fid = m
-        .find_func(dispatcher)
-        .ok_or_else(|| format!("unknown kernel entry '{dispatcher}'"))?;
+) -> Result<ProgramImage, BackendError> {
+    let entry_fid = m.find_func(dispatcher).ok_or_else(|| {
+        BackendError::new(Some(dispatcher), "unknown kernel entry")
+    })?;
     let (layout, data, data_end, _local_static) = layout_globals(m, opts.smem);
     // Reachable functions — from *every* kernel so one image serves all
     // launches of this module.
@@ -389,11 +447,9 @@ pub fn build_image(
         flats.push(flatten(&mf));
     }
     // crt0 + function bases. The args block address is known from layout.
-    let args_probe = m
-        .globals
-        .iter()
-        .position(|g| g.name == "__args")
-        .ok_or("module has no __args block (schedule pass not run?)")?;
+    let args_probe = m.globals.iter().position(|g| g.name == "__args").ok_or_else(|| {
+        BackendError::new(None, "module has no __args block (schedule pass not run?)")
+    })?;
     let args_addr_v = layout.addr[&GlobalId(args_probe as u32)];
     let (mut code, crt0_len) = build_crt0(args_addr_v);
     let mut func_entries: HashMap<String, u32> = HashMap::new();
@@ -402,7 +458,10 @@ pub fn build_image(
         code.extend(fl.insts.iter().cloned());
     }
     if !func_entries.contains_key(dispatcher) {
-        return Err("dispatcher dropped during lowering".into());
+        return Err(BackendError::new(
+            Some(dispatcher),
+            "dispatcher dropped during lowering",
+        ));
     }
     // Resolve fixups.
     let mut cursor = crt0_len as u32;
@@ -421,10 +480,12 @@ pub fn build_image(
                 }
                 Fixup::PredExit(b) => inst.imm = (base + fl.block_offset[*b]) as i32,
                 Fixup::Call(name) => {
-                    inst.imm = *func_entries
-                        .get(name)
-                        .ok_or_else(|| format!("unresolved call to '{name}'"))?
-                        as i32;
+                    inst.imm = *func_entries.get(name).ok_or_else(|| {
+                        BackendError::new(
+                            Some(fl.name.as_str()),
+                            format!("unresolved call to '{name}'"),
+                        )
+                    })? as i32;
                 }
             }
         }
@@ -433,12 +494,14 @@ pub fn build_image(
     let words: Vec<u64> = code.iter().map(|i| i.encode()).collect();
     // Global name table.
     let mut global_addr = HashMap::new();
+    let mut global_size = HashMap::new();
     for (i, g) in m.globals.iter().enumerate() {
         global_addr.insert(g.name.clone(), layout.addr[&GlobalId(i as u32)]);
+        global_size.insert(g.name.clone(), g.size);
     }
-    let args_addr = *global_addr
-        .get("__args")
-        .ok_or("module has no __args block (schedule pass not run?)")?;
+    let args_addr = *global_addr.get("__args").ok_or_else(|| {
+        BackendError::new(None, "module has no __args block (schedule pass not run?)")
+    })?;
     // Account local memory from globals too.
     let local_from_globals: u32 = m
         .globals
@@ -452,6 +515,7 @@ pub fn build_image(
         data,
         data_end,
         global_addr,
+        global_size,
         args_addr,
         local_mem_size: local_mem.max(local_from_globals),
         kernel: dispatcher.to_string(),

@@ -10,4 +10,4 @@ pub mod mir_opt;
 pub mod regalloc;
 pub mod safety_net;
 
-pub use emit::{build_image, BackendOptions, ProgramImage};
+pub use emit::{build_image, BackendError, BackendOptions, ProgramImage};

@@ -4,9 +4,8 @@
 //! roughly by how much, where it inverts).
 
 use super::benchmarks::{registry, Benchmark};
-use super::pipeline::{compile_source, CompileOutput};
-use crate::backend::emit::{BackendOptions, SharedMemMapping};
-use crate::frontend::FrontendOptions;
+use crate::backend::emit::SharedMemMapping;
+use crate::driver::{compile_program, VoltError, VoltOptions};
 use crate::runtime::VoltDevice;
 use crate::sim::{CacheConfig, SimConfig, SimStats};
 use crate::transform::OptLevel;
@@ -19,29 +18,42 @@ pub struct RunResult {
     pub code_size: usize,
 }
 
+/// The driver options a benchmark run uses.
+fn bench_options(
+    b: &Benchmark,
+    opt: OptLevel,
+    warp_hw: bool,
+    smem: SharedMemMapping,
+    sim_cfg: SimConfig,
+) -> VoltOptions {
+    VoltOptions {
+        dialect: b.dialect,
+        warp_hw,
+        opt,
+        smem,
+        sim: sim_cfg,
+        ..VoltOptions::default()
+    }
+}
+
 pub fn run_bench(
     b: &Benchmark,
     opt: OptLevel,
     warp_hw: bool,
     smem: SharedMemMapping,
     sim_cfg: SimConfig,
-) -> Result<RunResult, String> {
-    let fe = FrontendOptions {
-        dialect: b.dialect,
-        warp_hw,
-    };
-    let be = BackendOptions {
-        smem,
-        ..Default::default()
-    };
-    let out: CompileOutput = compile_source(b.source, &fe, opt, &be)?;
-    let mut dev = VoltDevice::new(out.image.clone(), sim_cfg);
-    (b.run)(&mut dev).map_err(|e| format!("{} @ {:?}: {e}", b.name, opt))?;
+) -> Result<RunResult, VoltError> {
+    let opts = bench_options(b, opt, warp_hw, smem, sim_cfg);
+    let prog = compile_program(b.source, &opts)?;
+    let mut dev = VoltDevice::new(prog.image.clone(), sim_cfg);
+    (b.run)(&mut dev).map_err(|msg| VoltError::Validation {
+        msg: format!("{} @ {:?}: {msg}", b.name, opt),
+    })?;
     Ok(RunResult {
         stats: dev.total_stats,
-        compile_ms: out.total_ms(),
-        middle_ms: out.middle_ms,
-        code_size: out.image.code.len(),
+        compile_ms: prog.timings.total_ms(),
+        middle_ms: prog.timings.middle_ms,
+        code_size: prog.image.code.len(),
     })
 }
 
@@ -72,7 +84,7 @@ impl LadderRow {
 }
 
 /// Run the full ladder over the (non-warp-feature) suite.
-pub fn ladder_sweep(names: Option<&[&str]>) -> Result<Vec<LadderRow>, String> {
+pub fn ladder_sweep(names: Option<&[&str]>) -> Result<Vec<LadderRow>, VoltError> {
     let mut rows = vec![];
     for b in registry() {
         if b.warp_feature {
@@ -125,7 +137,7 @@ impl IsaExtRow {
     }
 }
 
-pub fn isa_extension_sweep() -> Result<Vec<IsaExtRow>, String> {
+pub fn isa_extension_sweep() -> Result<Vec<IsaExtRow>, VoltError> {
     let mut rows = vec![];
     for b in registry() {
         if !b.warp_feature {
@@ -167,7 +179,7 @@ pub struct MemCfgRow {
     pub cells: Vec<(String, u64)>,
 }
 
-pub fn memory_config_sweep() -> Result<Vec<MemCfgRow>, String> {
+pub fn memory_config_sweep() -> Result<Vec<MemCfgRow>, VoltError> {
     let mut rows = vec![];
     let configs: Vec<(String, SharedMemMapping, SimConfig)> = vec![
         (
@@ -257,19 +269,23 @@ impl CompileTimeRow {
     }
 }
 
-pub fn compile_time_sweep(repeats: u32) -> Result<Vec<CompileTimeRow>, String> {
+pub fn compile_time_sweep(repeats: u32) -> Result<Vec<CompileTimeRow>, VoltError> {
     let mut rows = vec![];
     for b in registry() {
-        let fe = FrontendOptions {
+        let base_opts = VoltOptions {
             dialect: b.dialect,
-            warp_hw: true,
+            opt: OptLevel::Base,
+            ..VoltOptions::default()
         };
-        let be = BackendOptions::default();
+        let full_opts = VoltOptions {
+            opt: OptLevel::Recon,
+            ..base_opts
+        };
         let mut base = f64::MAX;
         let mut full = f64::MAX;
         for _ in 0..repeats {
-            base = base.min(compile_source(b.source, &fe, OptLevel::Base, &be)?.total_ms());
-            full = full.min(compile_source(b.source, &fe, OptLevel::Recon, &be)?.total_ms());
+            base = base.min(compile_program(b.source, &base_opts)?.timings.total_ms());
+            full = full.min(compile_program(b.source, &full_opts)?.timings.total_ms());
         }
         rows.push(CompileTimeRow {
             name: b.name,
@@ -317,7 +333,8 @@ pub fn validate_all(levels: &[OptLevel]) -> Vec<ValidationRow> {
                 SharedMemMapping::Local,
                 SimConfig::default(),
             )
-            .map(|_| ());
+            .map(|_| ())
+            .map_err(|e| e.to_string());
             results.push((lvl, r));
         }
         rows.push(ValidationRow {

@@ -1,17 +1,24 @@
-//! End-to-end compile pipeline: source → front-end (+ dispatchers) →
-//! middle-end ladder → back-end image, with per-stage timing for the
-//! compile-time-overhead experiment (§5.2).
+//! Deprecated compile entry point, kept as a thin shim over
+//! [`crate::driver`] for pre-session callers and tests.
+//!
+//! New code should use [`crate::driver::Session`]: it adds the binary
+//! cache, multi-kernel [`crate::driver::Program`]s and streams. This
+//! module only adapts the old `(FrontendOptions, OptLevel,
+//! BackendOptions)` triple onto the unified [`VoltOptions`] and flattens
+//! the result. Unlike the seed, the produced image carries a launchable
+//! entry for *every* kernel in the source, not just `kernels[0]`.
 
 use crate::backend::emit::{BackendOptions, ProgramImage};
-use crate::frontend::{compile_kernels, FrontendOptions, KernelInfo};
-use crate::transform::{run_middle_end, MiddleEndReport, OptLevel};
-use std::time::Instant;
+use crate::driver::{compile_program, KernelEntry, VoltError, VoltOptions};
+use crate::frontend::FrontendOptions;
+use crate::transform::{MiddleEndReport, OptLevel};
 
 #[derive(Debug)]
 pub struct CompileOutput {
     pub image: ProgramImage,
     pub middle: MiddleEndReport,
-    pub kernels: Vec<KernelInfo>,
+    /// Launchable entries for every kernel in the source.
+    pub kernels: Vec<KernelEntry>,
     pub frontend_ms: f64,
     pub middle_ms: f64,
     pub backend_ms: f64,
@@ -23,37 +30,34 @@ impl CompileOutput {
     }
 }
 
+/// Deprecated: use [`crate::driver::Session::compile`]. One-shot compile
+/// with the legacy split option structs; no caching.
 pub fn compile_source(
     src: &str,
     fe: &FrontendOptions,
     opt: OptLevel,
     be: &BackendOptions,
-) -> Result<CompileOutput, String> {
-    let t0 = Instant::now();
-    let (mut m, kernels) = compile_kernels(src, fe).map_err(|e| e.to_string())?;
-    let frontend_ms = t0.elapsed().as_secs_f64() * 1e3;
-    if kernels.is_empty() {
-        return Err("no kernels in source".into());
-    }
-    let t1 = Instant::now();
-    let mut cfg = opt.config();
-    cfg.verify = false;
-    let middle = run_middle_end(&mut m, &cfg);
-    let middle_ms = t1.elapsed().as_secs_f64() * 1e3;
-    let t2 = Instant::now();
-    let be = BackendOptions {
-        zicond: opt >= OptLevel::ZiCond,
-        ..*be
+) -> Result<CompileOutput, VoltError> {
+    let opts = VoltOptions {
+        dialect: fe.dialect,
+        warp_hw: fe.warp_hw,
+        opt,
+        // The old pipeline derived zicond from the ladder level,
+        // overriding whatever the caller put in BackendOptions.
+        zicond: None,
+        opt_layout: be.opt_layout,
+        safety_net: be.safety_net,
+        smem: be.smem,
+        ..VoltOptions::default()
     };
-    let image = crate::backend::build_image(&m, &format!("__main_{}", kernels[0].name), &be)?;
-    let backend_ms = t2.elapsed().as_secs_f64() * 1e3;
+    let p = compile_program(src, &opts)?;
     Ok(CompileOutput {
-        image,
-        middle,
-        kernels,
-        frontend_ms,
-        middle_ms,
-        backend_ms,
+        image: p.image,
+        middle: p.middle,
+        kernels: p.kernels,
+        frontend_ms: p.timings.frontend_ms,
+        middle_ms: p.timings.middle_ms,
+        backend_ms: p.timings.backend_ms,
     })
 }
 
@@ -73,5 +77,36 @@ mod tests {
         assert!(out.total_ms() > 0.0);
         assert_eq!(out.kernels.len(), 1);
         assert!(out.image.code.len() > 20);
+    }
+
+    /// Regression for the seed's `kernels[0]`-only entry: a two-kernel
+    /// source must produce launchable entries for both.
+    #[test]
+    fn multi_kernel_source_links_every_entry() {
+        let out = compile_source(
+            r#"
+kernel void first(global int* o, int n) {
+    int i = get_global_id(0);
+    if (i < n) o[i] = 1;
+}
+kernel void second(global int* o, int n) {
+    int i = get_global_id(0);
+    if (i < n) o[i] = 2;
+}
+"#,
+            &FrontendOptions::default(),
+            OptLevel::Recon,
+            &BackendOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(out.kernels.len(), 2);
+        for k in &out.kernels {
+            assert!(
+                out.image.func_entries.contains_key(&k.entry_symbol),
+                "missing entry for kernel '{}'",
+                k.name
+            );
+        }
+        assert_ne!(out.kernels[0].entry_pc, out.kernels[1].entry_pc);
     }
 }

@@ -1,0 +1,158 @@
+//! The one error type of the public driver API.
+//!
+//! Every stage of the stack reports failures through [`VoltError`]: the
+//! front-end with source locations, the middle-end with the failing pass,
+//! the back-end with the failing function, and the host runtime with the
+//! launch/memory/simulation fault. This replaces the seed's
+//! `Result<_, String>` plumbing so callers can match on the stage and
+//! recover (e.g. surface front-end diagnostics but abort on back-end
+//! bugs).
+
+use crate::backend::BackendError;
+use crate::frontend::CompileError;
+use crate::runtime::RuntimeError;
+use crate::sim::SimError;
+use std::fmt;
+
+#[derive(Debug)]
+pub enum VoltError {
+    /// Lex / parse / semantic failure, with the 1-based source line
+    /// (0 when the failure is not tied to a specific line, e.g. an empty
+    /// module).
+    Frontend { line: u32, msg: String },
+    /// A middle-end pass or the IR verifier rejected the module.
+    MiddleEnd { pass: &'static str, msg: String },
+    /// Back-end lowering / linking failure.
+    Backend(BackendError),
+    /// Host-runtime failure: bad launch, memory fault, simulator trap.
+    Runtime(RuntimeError),
+    /// [`super::VoltOptionsBuilder::build`] rejected an inconsistent
+    /// option combination.
+    InvalidOptions { msg: String },
+    /// Stream-API misuse: reading a transfer before `synchronize`, a
+    /// stale transfer handle, an argument-count mismatch, ...
+    Stream { msg: String },
+    /// Host-side validation of device results failed (benchmark drivers).
+    Validation { msg: String },
+}
+
+impl VoltError {
+    /// Which layer produced the error — stable strings for logs/metrics.
+    pub fn stage(&self) -> &'static str {
+        match self {
+            VoltError::Frontend { .. } => "frontend",
+            VoltError::MiddleEnd { .. } => "middle-end",
+            VoltError::Backend(_) => "backend",
+            VoltError::Runtime(_) => "runtime",
+            VoltError::InvalidOptions { .. } => "options",
+            VoltError::Stream { .. } => "stream",
+            VoltError::Validation { .. } => "validation",
+        }
+    }
+
+    /// Source line for front-end diagnostics, if one is attached.
+    pub fn line(&self) -> Option<u32> {
+        match self {
+            VoltError::Frontend { line, .. } if *line > 0 => Some(*line),
+            _ => None,
+        }
+    }
+
+    pub fn invalid_options(msg: impl Into<String>) -> VoltError {
+        VoltError::InvalidOptions { msg: msg.into() }
+    }
+
+    pub fn stream(msg: impl Into<String>) -> VoltError {
+        VoltError::Stream { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for VoltError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VoltError::Frontend { line: 0, msg } => write!(f, "frontend error: {msg}"),
+            VoltError::Frontend { line, msg } => {
+                write!(f, "frontend error at line {line}: {msg}")
+            }
+            VoltError::MiddleEnd { pass, msg } => {
+                write!(f, "middle-end error in pass '{pass}': {msg}")
+            }
+            VoltError::Backend(e) => write!(f, "{e}"),
+            VoltError::Runtime(e) => write!(f, "runtime error: {e}"),
+            VoltError::InvalidOptions { msg } => write!(f, "invalid options: {msg}"),
+            VoltError::Stream { msg } => write!(f, "stream error: {msg}"),
+            VoltError::Validation { msg } => write!(f, "validation failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for VoltError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            VoltError::Backend(e) => Some(e),
+            VoltError::Runtime(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CompileError> for VoltError {
+    fn from(e: CompileError) -> VoltError {
+        VoltError::Frontend {
+            line: e.line,
+            msg: e.msg,
+        }
+    }
+}
+
+impl From<BackendError> for VoltError {
+    fn from(e: BackendError) -> VoltError {
+        VoltError::Backend(e)
+    }
+}
+
+impl From<RuntimeError> for VoltError {
+    fn from(e: RuntimeError) -> VoltError {
+        VoltError::Runtime(e)
+    }
+}
+
+impl From<SimError> for VoltError {
+    fn from(e: SimError) -> VoltError {
+        VoltError::Runtime(RuntimeError::Sim(e))
+    }
+}
+
+/// Legacy string-error contexts (`Result<_, String>` + `?`) keep working.
+impl From<VoltError> for String {
+    fn from(e: VoltError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_and_display() {
+        let e = VoltError::Frontend {
+            line: 7,
+            msg: "unknown variable 'q'".into(),
+        };
+        assert_eq!(e.stage(), "frontend");
+        assert_eq!(e.line(), Some(7));
+        assert!(e.to_string().contains("line 7"));
+
+        let e = VoltError::from(CompileError {
+            line: 3,
+            msg: "x".into(),
+        });
+        assert!(matches!(e, VoltError::Frontend { line: 3, .. }));
+
+        let e = VoltError::Runtime(RuntimeError::UnknownKernel("k".into()));
+        assert_eq!(e.stage(), "runtime");
+        assert!(e.to_string().contains("unknown kernel"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,0 +1,45 @@
+//! The public compile-and-run API (paper §4 layering, Cranelift-style
+//! embeddable driver).
+//!
+//! Everything a host program needs lives here:
+//!
+//! * [`VoltOptions`] / [`VoltOptionsBuilder`] — one validated options
+//!   struct unifying front-end dialect, the §5.2 optimization ladder, and
+//!   back-end/device configuration.
+//! * [`Session`] — compiles source modules into multi-kernel
+//!   [`Program`]s through a content-addressed binary cache with hit/miss
+//!   counters.
+//! * [`Stream`] — an in-order command queue (h2d / launch / d2h /
+//!   symbol-write) over the simulated Vortex device, with per-command
+//!   [`Event`] records carrying sim-cycle timestamps.
+//! * [`VoltError`] — the typed error every layer reports through.
+//!
+//! ```no_run
+//! use volt::driver::{Session, VoltOptions};
+//! use volt::runtime::ArgValue;
+//!
+//! let mut session = Session::new(VoltOptions::builder().build()?);
+//! let program = session.compile(
+//!     "kernel void k(global int* o, int n) { int i = get_global_id(0); if (i < n) o[i] = i; }",
+//! )?;
+//! let mut stream = session.create_stream(&program);
+//! let buf = stream.malloc(64 * 4);
+//! stream.enqueue_launch("k", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])?;
+//! let out = stream.enqueue_read_u32(buf, 64);
+//! stream.synchronize()?;
+//! let values = stream.take_u32(out)?;
+//! # let _ = values;
+//! # Ok::<(), volt::driver::VoltError>(())
+//! ```
+
+pub mod error;
+pub mod options;
+pub mod session;
+pub mod stream;
+
+pub use error::VoltError;
+pub use options::{VoltOptions, VoltOptionsBuilder};
+pub use session::{
+    compile_program, fingerprint, CacheStats, CompileTimings, KernelEntry, Program, Session,
+};
+pub use stream::{CommandKind, Event, Stream, Transfer};

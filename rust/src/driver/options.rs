@@ -1,0 +1,336 @@
+//! Unified compile/run options with build-time validation.
+//!
+//! The seed spread configuration over three disjoint structs
+//! (`FrontendOptions` + `OptLevel` + `BackendOptions`) and let callers
+//! combine them inconsistently (e.g. a `zicond` back-end with a ladder
+//! level that never forms selects). [`VoltOptions`] owns the whole
+//! configuration, derives the per-layer views, and
+//! [`VoltOptionsBuilder::build`] rejects combinations the stack cannot
+//! honor.
+
+use super::error::VoltError;
+use crate::backend::emit::{BackendOptions, SharedMemMapping, SMEM_MAX_CORES};
+use crate::frontend::builtins::{SCRATCH_LANES, SCRATCH_WARPS};
+use crate::frontend::{Dialect, FrontendOptions};
+use crate::sim::SimConfig;
+use crate::transform::{OptConfig, OptLevel};
+
+#[derive(Clone, Copy, Debug)]
+pub struct VoltOptions {
+    pub dialect: Dialect,
+    /// Lower warp builtins to vx_shfl/vx_vote (true) or the CuPBoP-style
+    /// shared-memory software emulation (false) — the Fig. 9 axis.
+    pub warp_hw: bool,
+    /// Ladder point (paper §5.2).
+    pub opt: OptLevel,
+    /// Back-end conditional-move support. `None` derives it from the
+    /// ladder level (the only consistent default); `Some(_)` overrides.
+    pub zicond: Option<bool>,
+    pub opt_layout: bool,
+    /// The Fig. 5 divergence safety net.
+    pub safety_net: bool,
+    /// Shared-memory mapping (Fig. 10 axis).
+    pub smem: SharedMemMapping,
+    /// Run the IR verifier after every middle-end pass.
+    pub verify_ir: bool,
+    /// Keep compiled binaries in the session's content-addressed cache.
+    pub cache: bool,
+    /// Device geometry streams created from this session will use.
+    pub sim: SimConfig,
+}
+
+impl Default for VoltOptions {
+    /// The paper's evaluation defaults: OpenCL dialect, full ladder,
+    /// hardware warp primitives, scratchpad shared memory, caching on.
+    fn default() -> Self {
+        VoltOptions {
+            dialect: Dialect::OpenCL,
+            warp_hw: true,
+            opt: OptLevel::Recon,
+            zicond: None,
+            opt_layout: true,
+            safety_net: true,
+            smem: SharedMemMapping::Local,
+            verify_ir: false,
+            cache: true,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+impl VoltOptions {
+    pub fn builder() -> VoltOptionsBuilder {
+        VoltOptionsBuilder {
+            opts: VoltOptions::default(),
+        }
+    }
+
+    /// Effective conditional-move setting (explicit override, else
+    /// derived from the ladder level).
+    pub fn effective_zicond(&self) -> bool {
+        self.zicond.unwrap_or(self.opt >= OptLevel::ZiCond)
+    }
+
+    /// Front-end view.
+    pub fn frontend(&self) -> FrontendOptions {
+        FrontendOptions {
+            dialect: self.dialect,
+            warp_hw: self.warp_hw,
+        }
+    }
+
+    /// Middle-end view. ZiCond is kept consistent with the back-end so
+    /// select formation and cmov emission always agree.
+    ///
+    /// Per-pass verification (`OptConfig::verify`) is deliberately left
+    /// off: it panics on failure (a debug harness), while the driver's
+    /// `verify_ir` runs one post-middle-end verification that reports a
+    /// typed [`VoltError::MiddleEnd`] instead.
+    pub fn opt_config(&self) -> OptConfig {
+        let mut cfg = self.opt.config();
+        cfg.zicond = self.effective_zicond();
+        cfg.verify = false;
+        cfg
+    }
+
+    /// Back-end view.
+    pub fn backend(&self) -> BackendOptions {
+        BackendOptions {
+            zicond: self.effective_zicond(),
+            opt_layout: self.opt_layout,
+            safety_net: self.safety_net,
+            smem: self.smem,
+        }
+    }
+
+    /// Fold every field that affects the produced binary into the cache
+    /// fingerprint (FNV-1a). Simulator geometry and `verify_ir` do not
+    /// change the image and are deliberately excluded.
+    pub(crate) fn hash_into(&self, h: &mut Fnv1a) {
+        h.byte(match self.dialect {
+            Dialect::OpenCL => 0,
+            Dialect::Cuda => 1,
+        });
+        h.byte(self.warp_hw as u8);
+        h.byte(self.opt as u8);
+        h.byte(self.effective_zicond() as u8);
+        h.byte(self.opt_layout as u8);
+        h.byte(self.safety_net as u8);
+        h.byte(match self.smem {
+            SharedMemMapping::Local => 0,
+            SharedMemMapping::Global => 1,
+        });
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VoltOptionsBuilder {
+    opts: VoltOptions,
+}
+
+impl VoltOptionsBuilder {
+    pub fn dialect(mut self, d: Dialect) -> Self {
+        self.opts.dialect = d;
+        self
+    }
+    pub fn opt_level(mut self, lvl: OptLevel) -> Self {
+        self.opts.opt = lvl;
+        self
+    }
+    pub fn warp_hw(mut self, on: bool) -> Self {
+        self.opts.warp_hw = on;
+        self
+    }
+    /// Force the back-end cmov setting instead of deriving it from the
+    /// ladder level. `build` rejects forcing it *on* below `ZiCond`.
+    pub fn force_zicond(mut self, on: bool) -> Self {
+        self.opts.zicond = Some(on);
+        self
+    }
+    pub fn opt_layout(mut self, on: bool) -> Self {
+        self.opts.opt_layout = on;
+        self
+    }
+    pub fn safety_net(mut self, on: bool) -> Self {
+        self.opts.safety_net = on;
+        self
+    }
+    pub fn smem(mut self, m: SharedMemMapping) -> Self {
+        self.opts.smem = m;
+        self
+    }
+    pub fn verify_ir(mut self, on: bool) -> Self {
+        self.opts.verify_ir = on;
+        self
+    }
+    pub fn cache(mut self, on: bool) -> Self {
+        self.opts.cache = on;
+        self
+    }
+    pub fn sim(mut self, cfg: SimConfig) -> Self {
+        self.opts.sim = cfg;
+        self
+    }
+
+    /// Validate and produce the final options.
+    pub fn build(self) -> Result<VoltOptions, VoltError> {
+        self.opts.validate()?;
+        Ok(self.opts)
+    }
+}
+
+impl VoltOptions {
+    /// The builder's consistency rules. Also enforced by
+    /// [`super::session::compile_program`], so options constructed with a
+    /// struct literal (the legacy shim path) cannot bypass them.
+    pub fn validate(&self) -> Result<(), VoltError> {
+        let o = self;
+        if o.sim.num_cores == 0 || o.sim.warps_per_core == 0 || o.sim.threads_per_warp == 0 {
+            return Err(VoltError::invalid_options(
+                "device geometry must be non-zero (cores, warps, threads)",
+            ));
+        }
+        if o.sim.threads_per_warp > 32 {
+            return Err(VoltError::invalid_options(format!(
+                "threads_per_warp {} exceeds the 32-lane divergence-mask width",
+                o.sim.threads_per_warp
+            )));
+        }
+        if o.smem == SharedMemMapping::Global && o.sim.num_cores > SMEM_MAX_CORES {
+            return Err(VoltError::invalid_options(format!(
+                "global shared-memory emulation banks support at most {SMEM_MAX_CORES} cores, \
+                 device has {}",
+                o.sim.num_cores
+            )));
+        }
+        if !o.warp_hw
+            && (o.sim.threads_per_warp > SCRATCH_LANES || o.sim.warps_per_core > SCRATCH_WARPS)
+        {
+            return Err(VoltError::invalid_options(format!(
+                "software warp emulation scratch supports {SCRATCH_LANES} lanes x \
+                 {SCRATCH_WARPS} warps, device has {} x {}",
+                o.sim.threads_per_warp, o.sim.warps_per_core
+            )));
+        }
+        if o.zicond == Some(true) && o.opt < OptLevel::ZiCond {
+            return Err(VoltError::invalid_options(format!(
+                "zicond cmov forced on, but ladder level {:?} never forms selects",
+                o.opt
+            )));
+        }
+        if !o.safety_net && o.opt < OptLevel::Recon {
+            return Err(VoltError::invalid_options(format!(
+                "safety net disabled below Recon ({:?}): unstructured divergence would be \
+                 unguarded (paper Fig. 5)",
+                o.opt
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Minimal deterministic FNV-1a (offline build: no hasher crates; the
+/// std `DefaultHasher` is not guaranteed stable across releases).
+pub(crate) struct Fnv1a(pub u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+    pub fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+    }
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build() {
+        let o = VoltOptions::builder().build().unwrap();
+        assert!(o.effective_zicond());
+        assert_eq!(o.opt, OptLevel::Recon);
+        let be = o.backend();
+        assert!(be.zicond && be.safety_net);
+    }
+
+    #[test]
+    fn rejects_inconsistent_combos() {
+        assert!(matches!(
+            VoltOptions::builder()
+                .opt_level(OptLevel::Base)
+                .force_zicond(true)
+                .build(),
+            Err(VoltError::InvalidOptions { .. })
+        ));
+        assert!(matches!(
+            VoltOptions::builder()
+                .opt_level(OptLevel::Base)
+                .safety_net(false)
+                .build(),
+            Err(VoltError::InvalidOptions { .. })
+        ));
+        let big = SimConfig {
+            num_cores: 32,
+            ..SimConfig::default()
+        };
+        assert!(matches!(
+            VoltOptions::builder()
+                .smem(SharedMemMapping::Global)
+                .sim(big)
+                .build(),
+            Err(VoltError::InvalidOptions { .. })
+        ));
+    }
+
+    #[test]
+    fn zicond_derivation_follows_ladder() {
+        let o = VoltOptions::builder()
+            .opt_level(OptLevel::UniFunc)
+            .build()
+            .unwrap();
+        assert!(!o.effective_zicond());
+        assert!(!o.opt_config().zicond);
+        let o = VoltOptions::builder()
+            .opt_level(OptLevel::ZiCond)
+            .build()
+            .unwrap();
+        assert!(o.effective_zicond());
+    }
+
+    #[test]
+    fn fingerprint_tracks_output_relevant_fields() {
+        let mut a = Fnv1a::new();
+        VoltOptions::default().hash_into(&mut a);
+        let mut b = Fnv1a::new();
+        VoltOptions {
+            verify_ir: true,
+            ..VoltOptions::default()
+        }
+        .hash_into(&mut b);
+        assert_eq!(a.finish(), b.finish(), "verify_ir must not change the key");
+        let mut c = Fnv1a::new();
+        VoltOptions {
+            opt: OptLevel::Base,
+            ..VoltOptions::default()
+        }
+        .hash_into(&mut c);
+        assert_ne!(a.finish(), c.finish());
+    }
+}

@@ -1,0 +1,296 @@
+//! Compilation sessions: source in, cached multi-kernel [`Program`] out.
+//!
+//! A [`Session`] owns one [`VoltOptions`] configuration and a
+//! content-addressed binary cache keyed by FNV-1a over (source bytes,
+//! output-relevant options). Repeated compiles of identical source are
+//! near-free cache hits — the property a production service compiling the
+//! same kernels for many users depends on. Unlike the seed's
+//! `compile_source`, a `Program` exposes a launchable entry for *every*
+//! kernel in the module, not just `kernels[0]`.
+
+use super::error::VoltError;
+use super::options::{Fnv1a, VoltOptions};
+use super::stream::Stream;
+use crate::backend::emit::{build_image, BackendError, ProgramImage};
+use crate::frontend::compile_kernels;
+use crate::ir::Type;
+use crate::transform::{run_middle_end, MiddleEndReport};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-stage wall-clock compile timings (the §5.2 overhead experiment).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileTimings {
+    pub frontend_ms: f64,
+    pub middle_ms: f64,
+    pub backend_ms: f64,
+}
+
+impl CompileTimings {
+    pub fn total_ms(&self) -> f64 {
+        self.frontend_ms + self.middle_ms + self.backend_ms
+    }
+}
+
+/// One launchable kernel of a [`Program`]: the host-visible ABI plus the
+/// entry PC crt0 jumps to (read from the argument block at launch).
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    /// Source-level kernel name (what you pass to launch).
+    pub name: String,
+    /// Linked dispatcher symbol (`__main_<name>`).
+    pub entry_symbol: String,
+    /// Instruction-index PC of the dispatcher in the image.
+    pub entry_pc: u32,
+    /// Kernel parameters in ABI order.
+    pub params: Vec<(String, Type)>,
+    /// Static per-core shared memory the kernel uses.
+    pub local_mem: u32,
+    pub uses_barrier: bool,
+}
+
+/// A compiled module: one linked image serving every kernel it contains.
+#[derive(Debug)]
+pub struct Program {
+    pub image: ProgramImage,
+    pub kernels: Vec<KernelEntry>,
+    pub middle: MiddleEndReport,
+    pub timings: CompileTimings,
+    /// Cache key this program is stored under.
+    pub fingerprint: u64,
+}
+
+impl Program {
+    pub fn kernel(&self, name: &str) -> Option<&KernelEntry> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.kernels.iter().map(|k| k.name.as_str()).collect()
+    }
+}
+
+/// Binary-cache hit/miss counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// A compile-and-run session: configuration + binary cache.
+pub struct Session {
+    opts: VoltOptions,
+    cache: HashMap<u64, Arc<Program>>,
+    stats: CacheStats,
+}
+
+impl Session {
+    pub fn new(opts: VoltOptions) -> Session {
+        Session {
+            opts,
+            cache: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Session with the paper's default configuration.
+    pub fn with_defaults() -> Session {
+        Session::new(VoltOptions::default())
+    }
+
+    pub fn options(&self) -> &VoltOptions {
+        &self.opts
+    }
+
+    /// Compile `src` into a [`Program`], serving identical (source,
+    /// options) requests from the binary cache.
+    pub fn compile(&mut self, src: &str) -> Result<Arc<Program>, VoltError> {
+        let key = fingerprint(src, &self.opts);
+        if self.opts.cache {
+            if let Some(p) = self.cache.get(&key) {
+                self.stats.hits += 1;
+                return Ok(p.clone());
+            }
+        }
+        self.stats.misses += 1;
+        let prog = Arc::new(compile_program_keyed(src, &self.opts, key)?);
+        if self.opts.cache {
+            self.cache.insert(key, prog.clone());
+        }
+        Ok(prog)
+    }
+
+    /// Create a command stream executing `program` on a fresh device with
+    /// this session's simulator geometry.
+    pub fn create_stream(&self, program: &Arc<Program>) -> Stream {
+        Stream::new(program.clone(), self.opts.sim)
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn cached_programs(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+}
+
+/// Cache key: FNV-1a over the source bytes and every output-relevant
+/// option field.
+pub fn fingerprint(src: &str, opts: &VoltOptions) -> u64 {
+    let mut h = Fnv1a::new();
+    h.bytes(src.as_bytes());
+    opts.hash_into(&mut h);
+    h.finish()
+}
+
+/// The full uncached pipeline: front-end → middle-end ladder → linked
+/// image, with per-stage timing and a launchable entry for every kernel.
+pub fn compile_program(src: &str, opts: &VoltOptions) -> Result<Program, VoltError> {
+    compile_program_keyed(src, opts, fingerprint(src, opts))
+}
+
+fn compile_program_keyed(
+    src: &str,
+    opts: &VoltOptions,
+    key: u64,
+) -> Result<Program, VoltError> {
+    // Literal-constructed options go through the same consistency rules
+    // as the builder.
+    opts.validate()?;
+    let t0 = Instant::now();
+    let (mut m, infos) = compile_kernels(src, &opts.frontend())?;
+    if infos.is_empty() {
+        return Err(VoltError::Frontend {
+            line: 0,
+            msg: "no kernels in source".into(),
+        });
+    }
+    let frontend_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t1 = Instant::now();
+    let middle = run_middle_end(&mut m, &opts.opt_config());
+    if opts.verify_ir {
+        crate::ir::verify::verify_module(&m).map_err(|e| VoltError::MiddleEnd {
+            pass: "verify",
+            msg: e.to_string(),
+        })?;
+    }
+    let middle_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    // One image serves every kernel in the module: crt0 reads the entry
+    // PC from the argument block, so linking once with all dispatchers as
+    // roots removes the seed's kernels[0]-only limitation.
+    let t2 = Instant::now();
+    let image = build_image(&m, &format!("__main_{}", infos[0].name), &opts.backend())?;
+    let backend_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+    let mut kernels = Vec::with_capacity(infos.len());
+    for info in &infos {
+        let entry_symbol = format!("__main_{}", info.name);
+        let entry_pc = *image.func_entries.get(&entry_symbol).ok_or_else(|| {
+            VoltError::Backend(BackendError {
+                function: Some(entry_symbol.clone()),
+                msg: "kernel entry missing from linked image".into(),
+            })
+        })?;
+        kernels.push(KernelEntry {
+            name: info.name.clone(),
+            entry_symbol,
+            entry_pc,
+            params: info.params.clone(),
+            local_mem: info.local_mem,
+            uses_barrier: info.uses_barrier,
+        });
+    }
+    Ok(Program {
+        image,
+        kernels,
+        middle,
+        timings: CompileTimings {
+            frontend_ms,
+            middle_ms,
+            backend_ms,
+        },
+        fingerprint: key,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TWO_KERNELS: &str = r#"
+kernel void init(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = i * 2;
+}
+kernel void add1(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] + 1;
+}
+"#;
+
+    #[test]
+    fn program_exposes_every_kernel_entry() {
+        let mut s = Session::with_defaults();
+        let p = s.compile(TWO_KERNELS).unwrap();
+        assert_eq!(p.kernel_names(), vec!["init", "add1"]);
+        for k in &p.kernels {
+            assert!(p.image.func_entries.contains_key(&k.entry_symbol));
+            assert_eq!(p.image.func_entries[&k.entry_symbol], k.entry_pc);
+        }
+        assert_ne!(
+            p.kernel("init").unwrap().entry_pc,
+            p.kernel("add1").unwrap().entry_pc
+        );
+        assert_eq!(p.kernel("init").unwrap().params.len(), 2);
+    }
+
+    #[test]
+    fn cache_hits_on_identical_source_and_misses_on_changes() {
+        let mut s = Session::with_defaults();
+        let p1 = s.compile(TWO_KERNELS).unwrap();
+        let p2 = s.compile(TWO_KERNELS).unwrap();
+        assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 1 });
+        assert!(Arc::ptr_eq(&p1, &p2));
+        // Different source: miss.
+        s.compile("kernel void k(global int* o) { o[0] = 1; }")
+            .unwrap();
+        assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(s.cached_programs(), 2);
+        s.clear_cache();
+        assert_eq!(s.cached_programs(), 0);
+    }
+
+    #[test]
+    fn cache_disabled_always_misses() {
+        let mut s = Session::new(
+            crate::driver::VoltOptions::builder()
+                .cache(false)
+                .build()
+                .unwrap(),
+        );
+        s.compile(TWO_KERNELS).unwrap();
+        s.compile(TWO_KERNELS).unwrap();
+        assert_eq!(s.cache_stats(), CacheStats { hits: 0, misses: 2 });
+        assert_eq!(s.cached_programs(), 0);
+    }
+
+    #[test]
+    fn frontend_errors_carry_lines() {
+        let mut s = Session::with_defaults();
+        let e = s.compile("kernel void k() {\n  int x = ;\n}").unwrap_err();
+        match e {
+            VoltError::Frontend { line, .. } => assert_eq!(line, 2),
+            other => panic!("expected frontend error, got {other:?}"),
+        }
+        let e = s.compile("int f(int x) { return x; }").unwrap_err();
+        assert!(matches!(e, VoltError::Frontend { line: 0, .. }));
+    }
+}

@@ -1,0 +1,494 @@
+//! Command streams: the asynchronous host API over [`VoltDevice`].
+//!
+//! Host programs written against CUDA streams / OpenCL command queues
+//! enqueue work and synchronize at batch boundaries; the seed only
+//! offered blocking `VoltDevice` calls. A [`Stream`] records
+//! host-to-device copies, kernel launches, symbol writes and
+//! device-to-host reads in FIFO order, executes them at
+//! [`Stream::synchronize`], and emits one [`Event`] per command with
+//! device sim-cycle timestamps — the profiling hooks `cudaEvent`-style
+//! code expects.
+//!
+//! Launches are validated at *enqueue* time against the program's kernel
+//! table (name and argument count), so API misuse surfaces as a typed
+//! error before any simulation runs.
+
+use super::error::VoltError;
+use super::session::Program;
+use crate::runtime::{ArgValue, DevicePtr, VoltDevice};
+use crate::sim::{SimConfig, SimStats};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Handle for a device-to-host read enqueued on a stream. Redeem it with
+/// [`Stream::take_bytes`] / [`Stream::take_f32`] / [`Stream::take_u32`]
+/// after the stream synchronized. Handles are bound to the stream that
+/// issued them; redeeming on another stream is a typed error.
+#[derive(Debug)]
+pub struct Transfer {
+    stream: u64,
+    slot: usize,
+}
+
+/// Lifecycle of one device-to-host transfer slot.
+enum Slot {
+    /// Enqueued, not yet executed.
+    Pending,
+    /// Executed; data waiting to be taken.
+    Ready(Vec<u8>),
+    /// The D2H command failed during synchronize; no data will arrive.
+    Failed,
+    /// Data already handed out.
+    Taken,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommandKind {
+    H2D,
+    D2H,
+    Launch,
+    SymbolWrite,
+    Free,
+}
+
+/// Completion record of one executed command.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Kernel name for launches, symbol for symbol writes, `h2d`/`d2h`
+    /// otherwise.
+    pub label: String,
+    pub kind: CommandKind,
+    /// Cumulative device sim-cycles when the command started / finished
+    /// (copies are host-side and take zero device cycles).
+    pub start_cycles: u64,
+    pub end_cycles: u64,
+    /// Warp instructions executed (launches only).
+    pub instrs: u64,
+}
+
+enum Cmd {
+    H2D {
+        dst: DevicePtr,
+        bytes: Vec<u8>,
+    },
+    D2H {
+        src: DevicePtr,
+        len: usize,
+        slot: usize,
+    },
+    Launch {
+        kernel: String,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: Vec<ArgValue>,
+    },
+    SymbolWrite {
+        symbol: String,
+        offset: u32,
+        bytes: Vec<u8>,
+    },
+    Free {
+        ptr: DevicePtr,
+        size: u32,
+    },
+}
+
+/// An in-order command queue bound to one device executing one
+/// [`Program`].
+pub struct Stream {
+    id: u64,
+    program: Arc<Program>,
+    dev: VoltDevice,
+    queue: VecDeque<Cmd>,
+    slots: Vec<Slot>,
+    events: Vec<Event>,
+}
+
+/// Process-unique stream ids so [`Transfer`] handles cannot be redeemed
+/// on the wrong stream.
+static NEXT_STREAM_ID: AtomicU64 = AtomicU64::new(1);
+
+impl Stream {
+    pub fn new(program: Arc<Program>, cfg: SimConfig) -> Stream {
+        let dev = VoltDevice::new(program.image.clone(), cfg);
+        Stream {
+            id: NEXT_STREAM_ID.fetch_add(1, Ordering::Relaxed),
+            program,
+            dev,
+            queue: VecDeque::new(),
+            slots: vec![],
+            events: vec![],
+        }
+    }
+
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    /// Device-memory allocation is host-side bookkeeping and immediate.
+    pub fn malloc(&mut self, size: u32) -> DevicePtr {
+        self.dev.malloc(size)
+    }
+
+    /// Release a buffer *in stream order*: the free executes at
+    /// `synchronize()` after every previously enqueued command, so queued
+    /// copies/launches still referencing the buffer cannot be clobbered
+    /// by an immediate reallocation (cudaFreeAsync semantics).
+    pub fn free(&mut self, ptr: DevicePtr, size: u32) {
+        self.queue.push_back(Cmd::Free { ptr, size });
+    }
+
+    pub fn enqueue_write_bytes(&mut self, dst: DevicePtr, bytes: &[u8]) {
+        self.queue.push_back(Cmd::H2D {
+            dst,
+            bytes: bytes.to_vec(),
+        });
+    }
+
+    pub fn enqueue_write_f32(&mut self, dst: DevicePtr, vals: &[f32]) {
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
+        self.queue.push_back(Cmd::H2D { dst, bytes });
+    }
+
+    pub fn enqueue_write_u32(&mut self, dst: DevicePtr, vals: &[u32]) {
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.queue.push_back(Cmd::H2D { dst, bytes });
+    }
+
+    /// Enqueue a `cudaMemcpyToSymbol`-style write; materialized by the
+    /// runtime just before the next launch executes (paper §5.4). The
+    /// symbol name and write extent are validated now, before anything
+    /// runs.
+    pub fn enqueue_write_symbol(
+        &mut self,
+        symbol: &str,
+        bytes: &[u8],
+        offset: u32,
+    ) -> Result<(), VoltError> {
+        if let Some(msg) = self
+            .program
+            .image
+            .symbol_write_error(symbol, offset, bytes.len())
+        {
+            return Err(VoltError::stream(msg));
+        }
+        self.queue.push_back(Cmd::SymbolWrite {
+            symbol: symbol.to_string(),
+            offset,
+            bytes: bytes.to_vec(),
+        });
+        Ok(())
+    }
+
+    /// Enqueue a kernel launch, validating the kernel name and argument
+    /// count against the program's kernel table.
+    pub fn enqueue_launch(
+        &mut self,
+        kernel: &str,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: &[ArgValue],
+    ) -> Result<(), VoltError> {
+        let Some(entry) = self.program.kernel(kernel) else {
+            return Err(VoltError::stream(format!(
+                "program has no kernel '{kernel}' (kernels: {})",
+                self.program.kernel_names().join(", ")
+            )));
+        };
+        if entry.params.len() != args.len() {
+            return Err(VoltError::stream(format!(
+                "kernel '{kernel}' takes {} arguments, {} enqueued",
+                entry.params.len(),
+                args.len()
+            )));
+        }
+        self.queue.push_back(Cmd::Launch {
+            kernel: kernel.to_string(),
+            grid,
+            block,
+            args: args.to_vec(),
+        });
+        Ok(())
+    }
+
+    /// Enqueue a device-to-host read of `len` bytes; redeem the returned
+    /// [`Transfer`] after [`Stream::synchronize`].
+    pub fn enqueue_read(&mut self, src: DevicePtr, len: usize) -> Transfer {
+        let slot = self.slots.len();
+        self.slots.push(Slot::Pending);
+        self.queue.push_back(Cmd::D2H { src, len, slot });
+        Transfer {
+            stream: self.id,
+            slot,
+        }
+    }
+
+    pub fn enqueue_read_f32(&mut self, src: DevicePtr, n: usize) -> Transfer {
+        self.enqueue_read(src, n * 4)
+    }
+
+    pub fn enqueue_read_u32(&mut self, src: DevicePtr, n: usize) -> Transfer {
+        self.enqueue_read(src, n * 4)
+    }
+
+    /// Number of commands not yet executed.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Execute every queued command in FIFO order. Already-completed work
+    /// is kept on error; the failing command is consumed (the error names
+    /// it) and commands behind it stay queued.
+    pub fn synchronize(&mut self) -> Result<(), VoltError> {
+        while let Some(cmd) = self.queue.pop_front() {
+            let (label, kind) = match &cmd {
+                Cmd::H2D { .. } => ("h2d".to_string(), CommandKind::H2D),
+                Cmd::D2H { .. } => ("d2h".to_string(), CommandKind::D2H),
+                Cmd::Launch { kernel, .. } => (kernel.clone(), CommandKind::Launch),
+                Cmd::SymbolWrite { symbol, .. } => (symbol.clone(), CommandKind::SymbolWrite),
+                Cmd::Free { .. } => ("free".to_string(), CommandKind::Free),
+            };
+            let start_cycles = self.dev.total_stats.cycles;
+            let mut instrs = 0;
+            match cmd {
+                Cmd::H2D { dst, bytes } => {
+                    self.dev.memcpy_h2d(dst, &bytes)?;
+                }
+                Cmd::D2H { src, len, slot } => match self.dev.memcpy_d2h(src, len) {
+                    Ok(data) => self.slots[slot] = Slot::Ready(data),
+                    Err(e) => {
+                        self.slots[slot] = Slot::Failed;
+                        return Err(e.into());
+                    }
+                },
+                Cmd::Launch {
+                    kernel,
+                    grid,
+                    block,
+                    args,
+                } => {
+                    let stats = self.dev.launch(&kernel, grid, block, &args)?;
+                    instrs = stats.instrs;
+                }
+                Cmd::SymbolWrite {
+                    symbol,
+                    offset,
+                    bytes,
+                } => {
+                    self.dev.memcpy_to_symbol(&symbol, &bytes, offset)?;
+                }
+                Cmd::Free { ptr, size } => {
+                    self.dev.free(ptr, size);
+                }
+            }
+            self.events.push(Event {
+                label,
+                kind,
+                start_cycles,
+                end_cycles: self.dev.total_stats.cycles,
+                instrs,
+            });
+        }
+        Ok(())
+    }
+
+    /// Redeem a completed transfer. Typed errors distinguish a handle
+    /// from another stream, a transfer not yet synchronized, a transfer
+    /// whose command failed, and a handle already taken.
+    pub fn take_bytes(&mut self, t: Transfer) -> Result<Vec<u8>, VoltError> {
+        if t.stream != self.id {
+            return Err(VoltError::stream(
+                "transfer handle belongs to a different stream",
+            ));
+        }
+        let slot = self
+            .slots
+            .get_mut(t.slot)
+            .ok_or_else(|| VoltError::stream("stale transfer handle"))?;
+        match std::mem::replace(slot, Slot::Taken) {
+            Slot::Ready(data) => Ok(data),
+            Slot::Pending => {
+                *slot = Slot::Pending;
+                Err(VoltError::stream(
+                    "transfer not complete: synchronize() the stream first",
+                ))
+            }
+            Slot::Failed => {
+                *slot = Slot::Failed;
+                Err(VoltError::stream(
+                    "transfer's d2h command failed during synchronize()",
+                ))
+            }
+            Slot::Taken => Err(VoltError::stream("transfer was already taken")),
+        }
+    }
+
+    fn take_words(&mut self, t: Transfer) -> Result<Vec<[u8; 4]>, VoltError> {
+        let b = self.take_bytes(t)?;
+        if b.len() % 4 != 0 {
+            return Err(VoltError::stream(format!(
+                "transfer length {} is not a multiple of 4",
+                b.len()
+            )));
+        }
+        Ok(b.chunks_exact(4)
+            .map(|c| [c[0], c[1], c[2], c[3]])
+            .collect())
+    }
+
+    pub fn take_f32(&mut self, t: Transfer) -> Result<Vec<f32>, VoltError> {
+        Ok(self
+            .take_words(t)?
+            .into_iter()
+            .map(|w| f32::from_bits(u32::from_le_bytes(w)))
+            .collect())
+    }
+
+    pub fn take_u32(&mut self, t: Transfer) -> Result<Vec<u32>, VoltError> {
+        Ok(self
+            .take_words(t)?
+            .into_iter()
+            .map(u32::from_le_bytes)
+            .collect())
+    }
+
+    /// Completion records of every executed command, in execution order.
+    /// Records accumulate until drained with [`Stream::take_events`] —
+    /// long-running streams should drain between batches.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Drain the completion records (bounds memory on long-lived
+    /// streams; transfer slots keep only a small marker once taken).
+    pub fn take_events(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Cumulative device statistics over all launches on this stream.
+    pub fn stats(&self) -> &SimStats {
+        &self.dev.total_stats
+    }
+
+    /// Escape hatch to the underlying synchronous device (advanced /
+    /// legacy use; commands already enqueued are not reordered).
+    pub fn device_mut(&mut self) -> &mut VoltDevice {
+        &mut self.dev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::{Session, VoltOptions};
+
+    fn stream_for(src: &str) -> Stream {
+        let mut s = Session::new(VoltOptions::builder().build().unwrap());
+        let p = s.compile(src).unwrap();
+        s.create_stream(&p)
+    }
+
+    #[test]
+    fn ordered_h2d_launch_d2h_roundtrip() {
+        let mut st = stream_for(
+            r#"
+kernel void double_it(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] * 2;
+}
+"#,
+        );
+        let buf = st.malloc(64 * 4);
+        let data: Vec<u32> = (0..64).collect();
+        st.enqueue_write_u32(buf, &data);
+        st.enqueue_launch(
+            "double_it",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(buf), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t = st.enqueue_read_u32(buf, 64);
+        assert_eq!(st.pending(), 3);
+        st.synchronize().unwrap();
+        assert_eq!(st.pending(), 0);
+        let got = st.take_u32(t).unwrap();
+        let want: Vec<u32> = (0..64).map(|i| i * 2).collect();
+        assert_eq!(got, want, "d2h after launch must observe kernel writes");
+    }
+
+    #[test]
+    fn enqueue_validates_kernel_and_arity() {
+        let mut st = stream_for("kernel void k(global int* o, int n) { o[0] = n; }");
+        let e = st.enqueue_launch("nope", [1, 1, 1], [1, 1, 1], &[]).unwrap_err();
+        assert!(matches!(e, VoltError::Stream { .. }), "{e}");
+        let b = st.malloc(4);
+        let e = st
+            .enqueue_launch("k", [1, 1, 1], [1, 1, 1], &[ArgValue::Ptr(b)])
+            .unwrap_err();
+        assert!(e.to_string().contains("takes 2 arguments"), "{e}");
+    }
+
+    #[test]
+    fn free_is_deferred_to_stream_order() {
+        let mut st = stream_for("kernel void k(global int* o, int n) { o[0] = n; }");
+        let a = st.malloc(256);
+        st.enqueue_write_u32(a, &[7u32; 4]);
+        st.free(a, 256);
+        // The queued write still references `a`: the allocator must not
+        // hand its address out again before synchronize.
+        let b = st.malloc(256);
+        assert_ne!(a, b, "free must not take effect before synchronize");
+        st.synchronize().unwrap();
+        assert_eq!(
+            st.events().last().map(|e| e.kind),
+            Some(CommandKind::Free)
+        );
+        let c = st.malloc(64);
+        assert_eq!(c, a, "after synchronize the freed block is reusable");
+    }
+
+    #[test]
+    fn take_before_sync_is_a_typed_error() {
+        let mut st = stream_for("kernel void k(global int* o, int n) { o[0] = n; }");
+        let b = st.malloc(16);
+        let t = st.enqueue_read_u32(b, 4);
+        let e = st.take_u32(t).unwrap_err();
+        assert!(matches!(e, VoltError::Stream { .. }));
+        st.synchronize().unwrap();
+    }
+
+    #[test]
+    fn events_record_launch_cycles_in_order() {
+        let mut st = stream_for(
+            r#"
+kernel void fill(global int* x, int v, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = v;
+}
+"#,
+        );
+        let b = st.malloc(256);
+        st.enqueue_write_u32(b, &[0u32; 64]);
+        st.enqueue_launch(
+            "fill",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(b), ArgValue::I32(9), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t = st.enqueue_read_u32(b, 64);
+        st.synchronize().unwrap();
+        let ev = st.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].kind, CommandKind::H2D);
+        assert_eq!(ev[1].kind, CommandKind::Launch);
+        assert_eq!(ev[2].kind, CommandKind::D2H);
+        assert_eq!(ev[1].label, "fill");
+        assert!(ev[1].end_cycles > ev[1].start_cycles, "launch takes cycles");
+        assert!(ev[1].instrs > 0);
+        assert_eq!(ev[2].start_cycles, ev[1].end_cycles);
+        assert_eq!(st.take_u32(t).unwrap(), vec![9u32; 64]);
+    }
+}

@@ -108,13 +108,24 @@ struct VarSlot {
     uniform: bool,
 }
 
+/// Element count of an array declaration, rejecting byte-size overflow
+/// (user-controlled dims must not panic the compiler).
+fn checked_elems(dims: &[u32]) -> Option<u32> {
+    let elems = dims.iter().try_fold(1u32, |a, &d| a.checked_mul(d))?;
+    elems.max(1).checked_mul(4)?;
+    Some(elems.max(1))
+}
+
 pub fn compile(src: &str, opts: &FrontendOptions) -> Result<Module, CompileError> {
     let prog = parse_program(src)?;
     let mut module = Module::new("vcl");
     // Globals first.
     let mut global_map: HashMap<String, (GlobalId, VTy, bool)> = HashMap::new();
     for g in &prog.globals {
-        let elems: u32 = g.dims.iter().product::<u32>().max(1);
+        let elems: u32 = checked_elems(&g.dims).ok_or(CompileError {
+            line: g.line,
+            msg: format!("array '{}' is too large", g.name),
+        })?;
         let init = match &g.init {
             Some(items) => {
                 let mut bytes = vec![];
@@ -588,7 +599,9 @@ impl<'a> FnLower<'a> {
             return self.err(line, "cannot declare void variable");
         }
         let is_array = !dims.is_empty();
-        let elems: u32 = dims.iter().product::<u32>().max(1);
+        let Some(elems) = checked_elems(dims) else {
+            return self.err(line, format!("array '{name}' is too large"));
+        };
         let (ptr, vty) = if is_array && matches!(space, SpaceSpec::Local) {
             // Shared/local arrays become per-workgroup memory carved out of
             // the function's local segment (paper §5.4 / Fig. 10).

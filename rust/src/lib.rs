@@ -1,7 +1,15 @@
 //! VOLT reproduction library.
 //!
 //! A full reimplementation of the VOLT open-source GPU compiler stack
-//! ("Inside VOLT: Designing an Open-Source GPU Compiler", CS.DC 2025):
+//! ("Inside VOLT: Designing an Open-Source GPU Compiler", CS.DC 2025).
+//!
+//! **Start at [`driver`]** — the public compile-and-run API. A
+//! [`driver::Session`] turns VCL/CUDA source into a multi-kernel
+//! [`driver::Program`] through a content-addressed binary cache, and a
+//! [`driver::Stream`] runs it CUDA/OpenCL-style (enqueue copies and
+//! launches, `synchronize()`, inspect per-command events with sim-cycle
+//! timestamps). All failures are typed [`driver::VoltError`]s naming the
+//! stage that produced them. The layers underneath, in pipeline order:
 //!
 //! * [`frontend`] — OpenCL-C / CUDA-C kernel dialect ("VCL") front-end:
 //!   lexing, parsing, semantic analysis, IR lowering, builtin libraries and
@@ -23,18 +31,25 @@
 //! * [`sim`] — a SimX-style deterministic cycle-level SIMT simulator
 //!   (cores × warps × threads, per-warp IPDOM stacks, warp/barrier tables,
 //!   L1/L2 caches) used as the evaluation substrate (paper §5).
-//! * [`runtime`] — the host runtime: device buffers, `memcpy_to_symbol`
-//!   deferred materialization (Case Study 2), shared-memory mapping modes
+//! * [`runtime`] — the synchronous host runtime the driver's streams
+//!   execute on: device buffers, `memcpy_to_symbol` deferred
+//!   materialization (Case Study 2), shared-memory mapping modes
 //!   (Fig. 10), kernel launch; and the PJRT bridge that executes the
 //!   JAX/Pallas AOT reference artifacts used as correctness oracles.
-//! * [`coordinator`] — the end-to-end pipeline, the benchmark registry and
-//!   the experiment harnesses regenerating every figure/table in §5.
+//! * [`coordinator`] — the benchmark registry and the experiment
+//!   harnesses regenerating every figure/table in §5 (plus the deprecated
+//!   pre-`driver` `compile_source` shim).
+//!
+//! See `docs/API.md` for an end-to-end quickstart.
 
 pub mod analysis;
 pub mod backend;
 pub mod coordinator;
+pub mod driver;
 pub mod frontend;
 pub mod ir;
 pub mod runtime;
 pub mod sim;
 pub mod transform;
+
+pub use driver::{Program, Session, Stream, VoltError, VoltOptions};

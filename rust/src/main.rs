@@ -5,9 +5,10 @@
 //! (The build environment is offline, so argument parsing is hand-rolled
 //! rather than clap.)
 
-use volt::backend::emit::{BackendOptions, SharedMemMapping};
-use volt::coordinator::{benchmarks, experiments, pipeline, report};
-use volt::frontend::{Dialect, FrontendOptions};
+use volt::backend::emit::SharedMemMapping;
+use volt::coordinator::{benchmarks, experiments, report};
+use volt::driver::{Session, VoltOptions};
+use volt::frontend::Dialect;
 use volt::sim::SimConfig;
 use volt::transform::OptLevel;
 
@@ -84,45 +85,47 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
         Dialect::OpenCL
     };
     let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
+    let opts = VoltOptions {
+        dialect,
+        opt: level,
+        ..VoltOptions::default()
+    };
     if flag(args, "--ir") {
         // Dump middle-end IR.
-        let (mut m, _infos) = volt::frontend::compile_kernels(
-            &src,
-            &FrontendOptions {
-                dialect,
-                warp_hw: true,
-            },
-        )
-        .map_err(|e| e.to_string())?;
-        let mut cfg = level.config();
-        cfg.verify = false;
-        volt::transform::run_middle_end(&mut m, &cfg);
+        let (mut m, _infos) =
+            volt::frontend::compile_kernels(&src, &opts.frontend()).map_err(|e| e.to_string())?;
+        volt::transform::run_middle_end(&mut m, &opts.opt_config());
         print!("{}", volt::ir::printer::print_module(&m));
         return Ok(());
     }
-    let out = pipeline::compile_source(
-        &src,
-        &FrontendOptions {
-            dialect,
-            warp_hw: true,
-        },
-        level,
-        &BackendOptions::default(),
-    )?;
+    let mut session = Session::new(opts);
+    let out = session.compile(&src)?;
+    let names: Vec<&str> = out.kernel_names();
     println!(
-        "compiled {} kernels, {} instructions, {:.2} ms (frontend {:.2} / middle {:.2} / backend {:.2})",
+        "compiled {} kernel(s) [{}], {} instructions, {:.2} ms (frontend {:.2} / middle {:.2} / backend {:.2})",
         out.kernels.len(),
+        names.join(", "),
         out.image.code.len(),
-        out.total_ms(),
-        out.frontend_ms,
-        out.middle_ms,
-        out.backend_ms
+        out.timings.total_ms(),
+        out.timings.frontend_ms,
+        out.timings.middle_ms,
+        out.timings.backend_ms
     );
     println!(
         "divergence management: {} splits, {} divergent loops",
         out.middle.total_splits(),
         out.middle.total_pred_loops()
     );
+    for k in &out.kernels {
+        println!(
+            "  kernel {} @ pc {} ({} params{}{})",
+            k.name,
+            k.entry_pc,
+            k.params.len(),
+            if k.uses_barrier { ", barriers" } else { "" },
+            if k.local_mem > 0 { ", smem" } else { "" }
+        );
+    }
     if flag(args, "--asm") {
         print!("{}", out.image.disassemble());
     }

@@ -168,6 +168,9 @@ impl VoltDevice {
         if !self.image.global_addr.contains_key(symbol) {
             return Err(RuntimeError::UnknownSymbol(symbol.to_string()));
         }
+        if let Some(msg) = self.image.symbol_write_error(symbol, offset, bytes.len()) {
+            return Err(RuntimeError::Mem(msg));
+        }
         self.pending_symbols
             .push((symbol.to_string(), offset, bytes.to_vec()));
         Ok(())

@@ -26,6 +26,7 @@ fn image(code: Vec<MachInst>) -> ProgramImage {
         data: vec![],
         data_end: DATA_BASE + 4096,
         global_addr: HashMap::new(),
+        global_size: HashMap::new(),
         args_addr: DATA_BASE,
         local_mem_size: 0,
         kernel: "raw".into(),
