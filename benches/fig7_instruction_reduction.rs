@@ -10,7 +10,14 @@ fn main() {
     let rows = experiments::ladder_sweep(None).expect("sweep");
     let dt = t0.elapsed();
     print!("{}", report::render_ladder_fig7(&rows));
-    println!("\nsweep wall time: {:.2}s ({} benchmarks x 6 levels)", dt.as_secs_f64(), rows.len());
+    println!(
+        "\nsweep wall time: {:.2}s ({} benchmarks x {} levels)",
+        dt.as_secs_f64(),
+        rows.len(),
+        volt::transform::OptLevel::LADDER.len()
+    );
     let g = experiments::geomean(rows.iter().map(|r| r.reduction(5)));
     println!("geomean instruction-reduction (Recon vs Base): {g:.3}x");
+    let g3 = experiments::geomean(rows.iter().map(|r| r.reduction(6)));
+    println!("geomean instruction-reduction (O3 vs Base): {g3:.3}x");
 }

@@ -11,5 +11,7 @@ fn main() {
     print!("{}", report::render_ladder_fig8(&rows));
     let g = experiments::geomean(rows.iter().map(|r| r.speedup(5)));
     println!("\ngeomean speedup (Recon vs Base): {g:.3}x");
+    let g3 = experiments::geomean(rows.iter().map(|r| r.speedup(6)));
+    println!("geomean speedup (O3 vs Base): {g3:.3}x");
     println!("sweep wall time: {:.2}s", t0.elapsed().as_secs_f64());
 }

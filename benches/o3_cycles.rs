@@ -1,0 +1,41 @@
+//! O3 acceptance gate: run the full 28-kernel corpus through the simulator
+//! at Recon and at O3, write BENCH_cycles.json, and fail (non-zero exit)
+//! unless O3 achieves a >= 3% geomean cycle reduction with ZERO kernels
+//! regressing. Every run also executes the kernel's host-side validator,
+//! so a miscompiling optimization cannot trade correctness for cycles.
+//! Run: cargo bench --bench o3_cycles
+
+use volt::coordinator::experiments::{geomean, o3_cycle_sweep};
+use volt::coordinator::report;
+
+fn main() {
+    let rows = o3_cycle_sweep().expect("o3 sweep (includes per-kernel validators)");
+    print!("{}", report::render_o3_cycles(&rows));
+
+    let json = report::json_o3_cycles(&rows);
+    std::fs::write("BENCH_cycles.json", &json).expect("write BENCH_cycles.json");
+    println!("wrote BENCH_cycles.json ({} kernels)", rows.len());
+
+    let regressions: Vec<&str> = rows
+        .iter()
+        .filter(|r| r.regressed())
+        .map(|r| r.name)
+        .collect();
+    let g = geomean(rows.iter().map(|r| r.cycle_reduction()));
+    let mut failed = false;
+    if !regressions.is_empty() {
+        eprintln!("FAIL: O3 regressed vs Recon on: {}", regressions.join(", "));
+        failed = true;
+    }
+    if g < 1.03 {
+        eprintln!(
+            "FAIL: geomean cycle reduction {:.3}x is below the 1.03x gate",
+            g
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("PASS: geomean {:.3}x, no regressions", g);
+}

@@ -18,7 +18,7 @@
 use super::tti::TargetDivergenceInfo;
 use super::UniformityOptions;
 use crate::ir::cfg::reachable_until;
-use crate::ir::dom::PostDomTree;
+use crate::ir::dom::{DomTree, PostDomTree};
 use crate::ir::loops::LoopInfo;
 use crate::ir::*;
 use std::collections::HashSet;
@@ -50,6 +50,48 @@ impl Uniformity {
 
     pub fn num_divergent(&self) -> usize {
         self.inst_div.iter().filter(|&&d| d).count()
+    }
+
+    /// The SIMT-safety walk shared by the O3 redundancy passes: walk the
+    /// dominator chain from `from` (exclusive) up to `to`; return true if
+    /// a block whose terminator is a divergent branch — and that `exempt`
+    /// does not excuse — lies on the path. `to` itself is checked only
+    /// when `check_to` (GVN checks the defining block's split; LICM stops
+    /// short of the loop header, whose branch is the loop test). A chain
+    /// that never reaches `to` counts as crossing (conservative).
+    ///
+    /// Scope of the guarantee: this detects *dominating* divergent splits
+    /// — every split whose region the whole `from` block sits inside. A
+    /// divergent branch that does not dominate `from` (e.g. `from` is a
+    /// merge block also reachable around the split) is not on the chain
+    /// and is deliberately not a barrier: SSA dominance ensures every
+    /// lane active at `from` executed the definition, and the per-lane
+    /// register file preserves inactive lanes' values across mask
+    /// changes, so reusing a value across a reconvergence point is
+    /// mask-safe. The barrier exists to keep divergent live ranges out of
+    /// the split regions they would otherwise span end-to-end.
+    pub fn crosses_divergent_branch(
+        &self,
+        dom: &DomTree,
+        from: BlockId,
+        to: BlockId,
+        check_to: bool,
+        exempt: &dyn Fn(BlockId) -> bool,
+    ) -> bool {
+        let mut cur = from;
+        while cur != to {
+            match dom.idom[cur.idx()] {
+                Some(d) => cur = d,
+                None => return true,
+            }
+            if cur == to && !check_to {
+                break;
+            }
+            if self.div_branch_blocks.contains(&cur) && !exempt(cur) {
+                return true;
+            }
+        }
+        false
     }
 }
 
@@ -84,9 +126,39 @@ pub fn analyze(
     tti: &dyn TargetDivergenceInfo,
 ) -> Uniformity {
     let f = m.func(fid);
-    let n = f.insts.len();
     let pdom = PostDomTree::build(f);
     let li = LoopInfo::build(f);
+    analyze_with(m, fid, opts, tti, &pdom, &li)
+}
+
+/// [`analyze`] with the function's cached dominator trees (callers holding
+/// `&mut Module` get the CFG-version-checked cache for free; the loop info
+/// is derived from the cached forward tree instead of a fresh build).
+pub fn analyze_cached(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+) -> Uniformity {
+    let (dom, pdom) = {
+        let f = m.func_mut(fid);
+        (f.dom_tree(), f.pdom_tree())
+    };
+    let li = LoopInfo::build_with(m.func(fid), &dom);
+    analyze_with(m, fid, opts, tti, &pdom, &li)
+}
+
+/// The fixpoint core, parameterized over caller-supplied analyses.
+pub fn analyze_with(
+    m: &Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+    pdom: &PostDomTree,
+    li: &LoopInfo,
+) -> Uniformity {
+    let f = m.func(fid);
+    let n = f.insts.len();
     let mut div = vec![false; n];
     // `uniform` parameter markings come from user annotations or the
     // Algorithm-1 refinement — both are honoured only from the Uni-Ann
@@ -185,7 +257,7 @@ pub fn analyze(
         // uniform value at a uniform index, from a block whose control
         // dependences are all uniform (otherwise some lanes skip the
         // store and slot contents diverge).
-        let cdg_deps = crate::ir::cdg::Cdg::build_with(f, &pdom);
+        let cdg_deps = crate::ir::cdg::Cdg::build_with(f, pdom);
         for &a in &allocas {
             if !alloca_uniform[&a] {
                 continue;

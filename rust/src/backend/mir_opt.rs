@@ -11,10 +11,17 @@
 
 use super::isa::Op;
 use super::mir::{MFunction, MReg};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-/// Forward-propagate single-def → single-def virtual copies; fold LI
-/// chains. Returns copies removed.
+/// Forward-propagate single-def → single-def virtual copies and fold
+/// redundant LI chains (same-block re-materializations of one constant,
+/// which GVN/strength reduction expose in bulk). Returns copies removed.
+///
+/// A `fwd` cycle (mutually-referential MOVs) would previously spin the
+/// resolver into its guard limit and return a register whose defining MOV
+/// had just been deleted — a silent miscompile. Cycles are now detected
+/// up front: the whole chain is skipped (its MOVs stay), and a debug
+/// assertion fires so the broken input cannot hide.
 pub fn copy_prop(f: &mut MFunction) -> usize {
     // Count defs per vreg.
     let mut defs: HashMap<MReg, u32> = HashMap::new();
@@ -27,9 +34,11 @@ pub fn copy_prop(f: &mut MFunction) -> usize {
             }
         }
     }
-    // Map: dst -> src for removable MOVs.
+    // Map: dst -> src for removable MOVs, plus dst -> canonical dst for
+    // duplicate same-block LIs.
     let mut fwd: HashMap<MReg, MReg> = HashMap::new();
     for b in &f.blocks {
+        let mut li_seen: HashMap<i64, MReg> = HashMap::new();
         for i in &b.insts {
             if i.op == Op::MOV
                 && i.rd.is_virt()
@@ -39,26 +48,81 @@ pub fn copy_prop(f: &mut MFunction) -> usize {
             {
                 fwd.insert(i.rd, i.rs1);
             }
+            if i.op == Op::LI && i.rd.is_virt() && defs.get(&i.rd) == Some(&1) {
+                match li_seen.get(&i.imm).copied() {
+                    Some(first) if first != i.rd => {
+                        fwd.insert(i.rd, first);
+                    }
+                    Some(_) => {}
+                    None => {
+                        li_seen.insert(i.imm, i.rd);
+                    }
+                }
+            }
         }
     }
     if fwd.is_empty() {
         return 0;
     }
-    let resolve = |mut r: MReg| -> MReg {
-        let mut guard = 0;
-        while let Some(&n) = fwd.get(&r) {
-            r = n;
-            guard += 1;
-            if guard > 64 {
+    // Resolve every chain to its root, detecting cycles. Any chain that
+    // reaches a cycle is dropped wholesale (conservative: keep the MOVs).
+    let mut resolved: HashMap<MReg, MReg> = HashMap::new();
+    let mut cyclic: HashSet<MReg> = HashSet::new();
+    for &start in fwd.keys() {
+        if resolved.contains_key(&start) || cyclic.contains(&start) {
+            continue;
+        }
+        let mut seen: Vec<MReg> = vec![start];
+        let mut seen_set: HashSet<MReg> = seen.iter().copied().collect();
+        let mut r = start;
+        loop {
+            if let Some(&root) = resolved.get(&r) {
+                for &s in &seen {
+                    resolved.insert(s, root);
+                }
                 break;
             }
+            if cyclic.contains(&r) {
+                cyclic.extend(seen.iter().copied());
+                break;
+            }
+            match fwd.get(&r) {
+                Some(&n) => {
+                    if seen_set.contains(&n) {
+                        debug_assert!(
+                            false,
+                            "copy_prop: MOV/LI forwarding cycle through v{}",
+                            n.0
+                        );
+                        cyclic.extend(seen.iter().copied());
+                        break;
+                    }
+                    seen.push(n);
+                    seen_set.insert(n);
+                    r = n;
+                }
+                None => {
+                    // `r` itself is the chain root (not a fwd key): it must
+                    // NOT enter `resolved`, or its defining LI/MOV would be
+                    // deleted by the retain pass below.
+                    for &s in &seen {
+                        if s != r {
+                            resolved.insert(s, r);
+                        }
+                    }
+                    break;
+                }
+            }
         }
-        r
-    };
+    }
+    for r in &cyclic {
+        resolved.remove(r);
+    }
     let mut removed = 0;
     for b in f.blocks.iter_mut() {
         b.insts.retain(|i| {
-            if i.op == Op::MOV && fwd.contains_key(&i.rd) {
+            if matches!(i.op, Op::MOV | Op::LI) && i.rd.is_virt() && resolved.contains_key(&i.rd)
+            {
                 removed += 1;
                 false
             } else {
@@ -67,14 +131,17 @@ pub fn copy_prop(f: &mut MFunction) -> usize {
         });
         for i in b.insts.iter_mut() {
             if i.rs1.is_virt() {
-                i.rs1 = resolve(i.rs1);
+                if let Some(&r) = resolved.get(&i.rs1) {
+                    i.rs1 = r;
+                }
             }
             if i.rs2.is_virt() {
-                i.rs2 = resolve(i.rs2);
+                if let Some(&r) = resolved.get(&i.rs2) {
+                    i.rs2 = r;
+                }
             }
-            if matches!(i.op, Op::CMOV | Op::AMOCAS) && i.rd.is_virt() {
-                // rd is read: must not be forwarded (it is also written).
-            }
+            // CMOV/AMOCAS read rd, but rd is also written: never forwarded
+            // (its def count is >= 2, so it can't be in the map).
         }
     }
     removed
@@ -253,6 +320,71 @@ mod tests {
         let add = f.blocks[0].insts.iter().find(|i| i.op == Op::ADD).unwrap();
         assert_eq!(add.rs1, a);
         assert_eq!(add.rs2, a);
+    }
+
+    /// A mutually-referential MOV pair (broken input) must not be folded:
+    /// in release the chain is skipped wholesale; in debug the assertion
+    /// fires so the miscompile cannot hide.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "forwarding cycle"))]
+    fn copy_prop_skips_mov_cycle() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::mv(a, b));
+        f.blocks[0].insts.push(MInst::mv(b, a));
+        f.blocks[0]
+            .insts
+            .push(MInst::rrr(Op::ADD, MReg::phys(10), a, b));
+        let removed = copy_prop(&mut f);
+        assert_eq!(removed, 0, "cyclic chain must be left alone");
+        let movs = f.blocks[0].insts.iter().filter(|i| i.op == Op::MOV).count();
+        assert_eq!(movs, 2);
+        let add = f.blocks[0].insts.iter().find(|i| i.op == Op::ADD).unwrap();
+        assert_eq!((add.rs1, add.rs2), (a, b), "uses must not be rewritten");
+    }
+
+    /// Duplicate same-block LIs of one constant fold onto the first.
+    #[test]
+    fn copy_prop_dedups_li_chains() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        let c = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 42));
+        f.blocks[0].insts.push(MInst::li(b, 42)); // redundant
+        f.blocks[0].insts.push(MInst::li(c, 7)); // different constant
+        f.blocks[0]
+            .insts
+            .push(MInst::rrr(Op::ADD, MReg::phys(10), b, c));
+        let removed = copy_prop(&mut f);
+        assert_eq!(removed, 1);
+        let lis: Vec<i64> = f
+            .blocks[0]
+            .insts
+            .iter()
+            .filter(|i| i.op == Op::LI)
+            .map(|i| i.imm)
+            .collect();
+        assert_eq!(lis, vec![42, 7]);
+        let add = f.blocks[0].insts.iter().find(|i| i.op == Op::ADD).unwrap();
+        assert_eq!((add.rs1, add.rs2), (a, c));
     }
 
     #[test]

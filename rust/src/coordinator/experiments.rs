@@ -119,6 +119,68 @@ pub fn ladder_sweep(names: Option<&[&str]>) -> Result<Vec<LadderRow>, VoltError>
 }
 
 // ---------------------------------------------------------------------------
+// The O3 rung: Recon vs O3 simulated cycles over the full 28-kernel corpus
+// (the repo's perf-trajectory baseline, serialized to BENCH_cycles.json by
+// benches/o3_cycles.rs)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct O3Row {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub recon_cycles: u64,
+    pub o3_cycles: u64,
+    pub recon_instrs: u64,
+    pub o3_instrs: u64,
+}
+
+impl O3Row {
+    /// Cycle-reduction factor vs Recon (>1 means O3 is faster).
+    pub fn cycle_reduction(&self) -> f64 {
+        self.recon_cycles as f64 / self.o3_cycles as f64
+    }
+    /// Dynamic-instruction-reduction factor vs Recon.
+    pub fn instr_reduction(&self) -> f64 {
+        self.recon_instrs as f64 / self.o3_instrs as f64
+    }
+    pub fn regressed(&self) -> bool {
+        self.o3_cycles > self.recon_cycles
+    }
+}
+
+/// Every kernel in the registry (warp-feature and shared-memory suites
+/// included), compiled and *validated* at Recon and at O3; any validator
+/// failure propagates as an error.
+pub fn o3_cycle_sweep() -> Result<Vec<O3Row>, VoltError> {
+    let mut rows = vec![];
+    for b in registry() {
+        let recon = run_bench(
+            &b,
+            OptLevel::Recon,
+            true,
+            SharedMemMapping::Local,
+            SimConfig::default(),
+        )?;
+        let o3 = run_bench(
+            &b,
+            OptLevel::O3,
+            true,
+            SharedMemMapping::Local,
+            SimConfig::default(),
+        )?;
+        rows.push(O3Row {
+            name: b.name,
+            suite: b.suite,
+            recon_cycles: recon.stats.cycles,
+            o3_cycles: o3.stats.cycles,
+            recon_instrs: recon.stats.instrs,
+            o3_instrs: o3.stats.instrs,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 9: ISA extensions (HW warp primitives vs software emulation)
 // ---------------------------------------------------------------------------
 
@@ -361,7 +423,7 @@ mod tests {
     fn spot_validation() {
         for name in ["saxpy", "reduce", "pathfinder"] {
             let b = super::super::benchmarks::find(name).unwrap();
-            for lvl in [OptLevel::Base, OptLevel::Recon] {
+            for lvl in [OptLevel::Base, OptLevel::Recon, OptLevel::O3] {
                 run_bench(
                     &b,
                     lvl,

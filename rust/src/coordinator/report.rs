@@ -18,7 +18,9 @@ pub fn render_ladder_fig7(rows: &[LadderRow]) -> String {
     );
     let mut header = vec!["benchmark".to_string()];
     header.extend(OptLevel::LADDER.iter().map(|l| l.name().to_string()));
-    let widths: Vec<usize> = std::iter::once(14usize).chain(std::iter::repeat(9).take(6)).collect();
+    let widths: Vec<usize> = std::iter::once(14usize)
+        .chain(std::iter::repeat(9).take(OptLevel::LADDER.len()))
+        .collect();
     out.push_str(&fmt_row(&header, &widths));
     out.push('\n');
     for r in rows {
@@ -36,7 +38,9 @@ pub fn render_ladder_fig8(rows: &[LadderRow]) -> String {
     let mut out = String::from("Figure 8 — speedup vs Base (higher is better)\n");
     let mut header = vec!["benchmark".to_string()];
     header.extend(OptLevel::LADDER.iter().map(|l| l.name().to_string()));
-    let widths: Vec<usize> = std::iter::once(14usize).chain(std::iter::repeat(9).take(6)).collect();
+    let widths: Vec<usize> = std::iter::once(14usize)
+        .chain(std::iter::repeat(9).take(OptLevel::LADDER.len()))
+        .collect();
     out.push_str(&fmt_row(&header, &widths));
     out.push('\n');
     for r in rows {
@@ -147,6 +151,75 @@ pub fn render_compile_time(rows: &[CompileTimeRow]) -> String {
     out
 }
 
+pub fn render_o3_cycles(rows: &[O3Row]) -> String {
+    let mut out = String::from("O3 rung — simulated cycles, Recon vs O3 (reduction > 1 is better)\n");
+    let widths = [14usize, 12, 12, 10, 12, 12, 10];
+    out.push_str(&fmt_row(
+        &[
+            "benchmark".into(),
+            "recon-cyc".into(),
+            "o3-cyc".into(),
+            "cyc-red".into(),
+            "recon-instr".into(),
+            "o3-instr".into(),
+            "instr-red".into(),
+        ],
+        &widths,
+    ));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(
+            &[
+                r.name.to_string(),
+                r.recon_cycles.to_string(),
+                r.o3_cycles.to_string(),
+                format!("{:.3}{}", r.cycle_reduction(), if r.regressed() { " !" } else { "" }),
+                r.recon_instrs.to_string(),
+                r.o3_instrs.to_string(),
+                format!("{:.3}", r.instr_reduction()),
+            ],
+            &widths,
+        ));
+        out.push('\n');
+    }
+    let g = geomean(rows.iter().map(|r| r.cycle_reduction()));
+    let gi = geomean(rows.iter().map(|r| r.instr_reduction()));
+    out.push_str(&format!(
+        "geomean cycle reduction: {:.3}x ({:+.2}%), instr reduction: {:.3}x\n",
+        g,
+        (g - 1.0) * 100.0,
+        gi
+    ));
+    out
+}
+
+/// Machine-readable serialization of the O3 sweep (BENCH_cycles.json).
+/// Hand-rolled JSON: the offline build has no serde.
+pub fn json_o3_cycles(rows: &[O3Row]) -> String {
+    let mut s = String::from("{\n  \"baseline\": \"Recon\",\n  \"candidate\": \"O3\",\n");
+    let g = geomean(rows.iter().map(|r| r.cycle_reduction()));
+    s.push_str(&format!(
+        "  \"geomean_cycle_reduction\": {:.6},\n  \"kernels\": [\n",
+        g
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"suite\": \"{}\", \"recon_cycles\": {}, \"o3_cycles\": {}, \
+             \"recon_instrs\": {}, \"o3_instrs\": {}, \"cycle_reduction\": {:.6}}}{}\n",
+            r.name,
+            r.suite,
+            r.recon_cycles,
+            r.o3_cycles,
+            r.recon_instrs,
+            r.o3_instrs,
+            r.cycle_reduction(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 pub fn render_validation(rows: &[ValidationRow]) -> String {
     let mut out = String::from("§5.1 coverage — correctness across the ladder\n");
     for r in rows {
@@ -200,17 +273,52 @@ mod tests {
 
     #[test]
     fn renders_tables() {
+        // One entry per LADDER rung (7 with the O3 rung).
         let rows = vec![LadderRow {
             name: "x",
-            instrs: vec![100, 90, 80, 80, 70, 70],
-            cycles: vec![1000, 900, 800, 800, 700, 700],
-            mem_requests: vec![10, 10, 10, 10, 12, 12],
+            instrs: vec![100, 90, 80, 80, 70, 70, 65],
+            cycles: vec![1000, 900, 800, 800, 700, 700, 650],
+            mem_requests: vec![10, 10, 10, 10, 12, 12, 12],
         }];
+        assert_eq!(rows[0].instrs.len(), OptLevel::LADDER.len());
         let s7 = render_ladder_fig7(&rows);
         assert!(s7.contains("1.250")); // 100/80
         let s8 = render_ladder_fig8(&rows);
         assert!(s8.contains("1.429")); // 1000/700
         let c = csv_ladder(&rows);
         assert!(c.contains("x,Base,100,1000,10"));
+        assert!(c.contains("x,O3,65,650,12"));
+    }
+
+    #[test]
+    fn renders_o3_table_and_json() {
+        let rows = vec![
+            O3Row {
+                name: "a",
+                suite: "sdk",
+                recon_cycles: 1000,
+                o3_cycles: 900,
+                recon_instrs: 500,
+                o3_instrs: 450,
+            },
+            O3Row {
+                name: "b",
+                suite: "rodinia",
+                recon_cycles: 800,
+                o3_cycles: 820,
+                recon_instrs: 400,
+                o3_instrs: 410,
+            },
+        ];
+        let t = render_o3_cycles(&rows);
+        assert!(t.contains("1.111")); // 1000/900
+        assert!(t.contains('!')); // regression marker for b
+        let j = json_o3_cycles(&rows);
+        assert!(j.contains("\"baseline\": \"Recon\""));
+        assert!(j.contains("\"name\": \"a\""));
+        assert!(j.contains("\"o3_cycles\": 820"));
+        assert!(j.contains("\"geomean_cycle_reduction\""));
+        // Exactly one comma-separated kernel boundary (2 entries).
+        assert_eq!(j.matches("},").count(), 1);
     }
 }

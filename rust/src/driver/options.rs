@@ -21,7 +21,7 @@ pub struct VoltOptions {
     /// Lower warp builtins to vx_shfl/vx_vote (true) or the CuPBoP-style
     /// shared-memory software emulation (false) — the Fig. 9 axis.
     pub warp_hw: bool,
-    /// Ladder point (paper §5.2).
+    /// Ladder point (paper §5.2, plus the repo's O3 rung above Recon).
     pub opt: OptLevel,
     /// Back-end conditional-move support. `None` derives it from the
     /// ladder level (the only consistent default); `Some(_)` overrides.
@@ -297,6 +297,33 @@ mod tests {
                 .build(),
             Err(VoltError::InvalidOptions { .. })
         ));
+    }
+
+    #[test]
+    fn o3_builds_and_is_output_relevant() {
+        let o = VoltOptions::builder()
+            .opt_level(OptLevel::O3)
+            .build()
+            .unwrap();
+        assert!(o.effective_zicond(), "O3 derives zicond on");
+        assert!(o.opt_config().o3 && o.opt_config().recon);
+        // O3 must produce a different cache fingerprint than Recon.
+        let mut a = Fnv1a::new();
+        o.hash_into(&mut a);
+        let mut b = Fnv1a::new();
+        VoltOptions::default().hash_into(&mut b);
+        assert_ne!(a.finish(), b.finish());
+        // The ladder-consistency rules still apply above Recon.
+        assert!(VoltOptions::builder()
+            .opt_level(OptLevel::O3)
+            .force_zicond(true)
+            .build()
+            .is_ok());
+        assert!(VoltOptions::builder()
+            .opt_level(OptLevel::O3)
+            .safety_net(false)
+            .build()
+            .is_ok());
     }
 
     #[test]

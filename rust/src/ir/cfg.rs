@@ -48,7 +48,11 @@ pub fn classify_edges(f: &Function) -> EdgeClasses {
 /// dominating `n` (Hecht & Ullman). Irreducible graphs break IPDOM-stack
 /// reconvergence and must be restructured (paper §4.3.2).
 pub fn is_reducible(f: &Function) -> bool {
-    let dom = super::dom::DomTree::build(f);
+    is_reducible_with(f, &super::dom::DomTree::build(f))
+}
+
+/// [`is_reducible`] against a caller-supplied (typically cached) tree.
+pub fn is_reducible_with(f: &Function, dom: &super::dom::DomTree) -> bool {
     let classes = classify_edges(f);
     classes
         .back_edges
@@ -59,7 +63,14 @@ pub fn is_reducible(f: &Function) -> bool {
 /// The set of "offending" back edges whose target does not dominate the
 /// source — each identifies an irreducible region entry.
 pub fn irreducible_back_edges(f: &Function) -> Vec<(BlockId, BlockId)> {
-    let dom = super::dom::DomTree::build(f);
+    irreducible_back_edges_with(f, &super::dom::DomTree::build(f))
+}
+
+/// [`irreducible_back_edges`] against a caller-supplied (cached) tree.
+pub fn irreducible_back_edges_with(
+    f: &Function,
+    dom: &super::dom::DomTree,
+) -> Vec<(BlockId, BlockId)> {
     classify_edges(f)
         .back_edges
         .into_iter()

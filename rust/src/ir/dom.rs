@@ -59,6 +59,7 @@ fn compute_idoms(order: &[usize], preds: &[Vec<usize>], n: usize) -> Vec<Option<
 }
 
 /// Dominator tree over a function's CFG.
+#[derive(Clone, Debug)]
 pub struct DomTree {
     /// Immediate dominator per block (None for entry / unreachable blocks).
     pub idom: Vec<Option<BlockId>>,
@@ -148,6 +149,7 @@ impl DomTree {
 
 /// Post-dominator tree. Built on the reverse CFG with a virtual exit that
 /// post-dominates every Ret/Unreachable block.
+#[derive(Clone, Debug)]
 pub struct PostDomTree {
     /// Immediate post-dominator; None means the virtual exit (or
     /// unreachable-in-reverse).

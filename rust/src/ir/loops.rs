@@ -68,7 +68,11 @@ pub struct LoopInfo {
 
 impl LoopInfo {
     pub fn build(f: &Function) -> LoopInfo {
-        let dom = DomTree::build(f);
+        LoopInfo::build_with(f, &DomTree::build(f))
+    }
+
+    /// [`LoopInfo::build`] against a caller-supplied (cached) tree.
+    pub fn build_with(f: &Function, dom: &DomTree) -> LoopInfo {
         let mut loops: Vec<Loop> = vec![];
         // Find back edges n->h with h dominating n; group by header.
         let mut by_header: Vec<(BlockId, Vec<BlockId>)> = vec![];
@@ -197,6 +201,7 @@ pub fn ensure_preheader(f: &mut Function, li_header: BlockId, body: &HashSet<Blo
         let t = f.term(*p);
         f.inst_mut(t).kind.replace_successor(li_header, ph);
     }
+    f.invalidate_cfg_cache();
     // Rewrite header phis: merge the outside incomings into one via-ph
     // incoming. Since multiple outside preds may exist with different
     // values, we must build a phi in the preheader.

@@ -18,6 +18,7 @@ pub mod printer;
 pub mod verify;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 // ---------------------------------------------------------------------------
 // Ids
@@ -330,6 +331,18 @@ pub enum Intr {
 }
 
 impl Intr {
+    /// Does this intrinsic write memory or act as a synchronization point
+    /// across which other lanes' writes become visible? This is the
+    /// clobber rule the redundancy passes (GVN load-CSE, LICM) share;
+    /// keep it in sync with [`InstKind::has_side_effects`] when adding
+    /// intrinsics.
+    pub fn clobbers_memory(&self) -> bool {
+        matches!(
+            self,
+            Intr::Barrier | Intr::Atomic(_) | Intr::AtomicCas | Intr::Tmc
+        )
+    }
+
     /// Result type, given arg types where needed.
     pub fn ret_type(&self, args: &[Type]) -> Type {
         match self {
@@ -644,6 +657,13 @@ pub struct Function {
     pub entry: BlockId,
     /// Bytes of `__shared__`/`local` memory statically required.
     pub local_mem_size: u32,
+    /// Monotonic CFG version: bumped by every mutation that can change the
+    /// block structure or edge set. Cached dominator trees are tagged with
+    /// the version they were built at and rebuilt lazily on mismatch, so
+    /// passes that only touch straight-line code keep the cache warm.
+    pub cfg_version: u64,
+    pub(crate) dom_cache: Option<(u64, Arc<dom::DomTree>)>,
+    pub(crate) pdom_cache: Option<(u64, Arc<dom::PostDomTree>)>,
 }
 
 impl Function {
@@ -659,9 +679,46 @@ impl Function {
             insts: vec![],
             entry: BlockId(0),
             local_mem_size: 0,
+            cfg_version: 0,
+            dom_cache: None,
+            pdom_cache: None,
         };
         f.entry = f.add_block("entry");
         f
+    }
+
+    /// Declare the CFG changed: bump the version and drop cached trees.
+    /// CFG-mutating helpers call this automatically; passes that rewrite
+    /// terminators in place (via [`Function::inst_mut`]) must call it
+    /// themselves once they are done.
+    pub fn invalidate_cfg_cache(&mut self) {
+        self.cfg_version += 1;
+        self.dom_cache = None;
+        self.pdom_cache = None;
+    }
+
+    /// Dominator tree for the current CFG, cached per [`Self::cfg_version`].
+    pub fn dom_tree(&mut self) -> Arc<dom::DomTree> {
+        if let Some((v, t)) = &self.dom_cache {
+            if *v == self.cfg_version {
+                return t.clone();
+            }
+        }
+        let t = Arc::new(dom::DomTree::build(self));
+        self.dom_cache = Some((self.cfg_version, t.clone()));
+        t
+    }
+
+    /// Post-dominator tree, cached per [`Self::cfg_version`].
+    pub fn pdom_tree(&mut self) -> Arc<dom::PostDomTree> {
+        if let Some((v, t)) = &self.pdom_cache {
+            if *v == self.cfg_version {
+                return t.clone();
+            }
+        }
+        let t = Arc::new(dom::PostDomTree::build(self));
+        self.pdom_cache = Some((self.cfg_version, t.clone()));
+        t
     }
 
     pub fn add_block(&mut self, name: &str) -> BlockId {
@@ -671,6 +728,7 @@ impl Function {
             name: format!("{}{}", name, id.0),
             dead: false,
         });
+        self.invalidate_cfg_cache();
         id
     }
 
@@ -724,6 +782,7 @@ impl Function {
     /// Append a new instruction to a block. Terminators allowed only at the
     /// end (caller responsibility; verifier checks).
     pub fn push_inst(&mut self, b: BlockId, kind: InstKind, ty: Type) -> InstId {
+        let is_term = kind.is_terminator();
         let id = InstId(self.insts.len() as u32);
         self.insts.push(InstData {
             kind,
@@ -734,11 +793,15 @@ impl Function {
             dead: false,
         });
         self.blocks[b.idx()].insts.push(id);
+        if is_term {
+            self.invalidate_cfg_cache();
+        }
         id
     }
 
     /// Insert an instruction at position `pos` within block `b`.
     pub fn insert_inst(&mut self, b: BlockId, pos: usize, kind: InstKind, ty: Type) -> InstId {
+        let is_term = kind.is_terminator();
         let id = InstId(self.insts.len() as u32);
         self.insts.push(InstData {
             kind,
@@ -749,14 +812,21 @@ impl Function {
             dead: false,
         });
         self.blocks[b.idx()].insts.insert(pos, id);
+        if is_term {
+            self.invalidate_cfg_cache();
+        }
         id
     }
 
     /// Remove an instruction (tombstone + unlink from its block).
     pub fn remove_inst(&mut self, id: InstId) {
         let b = self.insts[id.idx()].block;
+        let is_term = self.insts[id.idx()].kind.is_terminator();
         self.blocks[b.idx()].insts.retain(|&i| i != id);
         self.insts[id.idx()].dead = true;
+        if is_term {
+            self.invalidate_cfg_cache();
+        }
     }
 
     /// Replace every use of value `from` with `to` across the function.
@@ -816,6 +886,9 @@ impl Function {
             .into_iter()
             .filter(|b| !live[b.idx()])
             .collect();
+        if !dead_blocks.is_empty() {
+            self.invalidate_cfg_cache();
+        }
         for b in &dead_blocks {
             let insts = std::mem::take(&mut self.blocks[b.idx()].insts);
             for i in insts {
@@ -844,6 +917,7 @@ impl Function {
         self.push_inst(nb, InstKind::Br { target: b }, Type::Void);
         let t = self.term(a);
         self.inst_mut(t).kind.replace_successor(b, nb);
+        self.invalidate_cfg_cache();
         // Fix phis in b.
         let insts = self.blocks[b.idx()].insts.clone();
         for i in insts {
@@ -1135,6 +1209,35 @@ mod tests {
             assert!(f.inst(vi).dead);
         }
         assert_eq!(f.num_insts(), 2);
+    }
+
+    #[test]
+    fn dom_cache_invalidated_by_cfg_mutation() {
+        let mut f = Function::new("t", vec![], Type::Void);
+        let entry = f.entry;
+        let a = f.add_block("a");
+        {
+            let mut b = Builder::at(&mut f, entry);
+            b.br(a);
+            b.set_block(a);
+            b.ret(None);
+        }
+        let d1 = f.dom_tree();
+        let d2 = f.dom_tree();
+        // Same version: the Arc is shared, not rebuilt.
+        assert!(std::sync::Arc::ptr_eq(&d1, &d2));
+        assert_eq!(d1.idom[a.idx()], Some(entry));
+        // Splitting the edge bumps the version and rebuilds.
+        let v = f.cfg_version;
+        let nb = f.split_edge(entry, a);
+        assert!(f.cfg_version > v);
+        let d3 = f.dom_tree();
+        assert!(!std::sync::Arc::ptr_eq(&d1, &d3));
+        assert_eq!(d3.idom[a.idx()], Some(nb));
+        // Post-dominator cache follows the same protocol.
+        let p1 = f.pdom_tree();
+        let p2 = f.pdom_tree();
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2));
     }
 
     #[test]

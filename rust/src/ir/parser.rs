@@ -210,6 +210,9 @@ pub fn parse_function(lines: &[String]) -> Result<Function, String> {
         insts: vec![],
         entry: BlockId(0),
         local_mem_size,
+        cfg_version: 0,
+        dom_cache: None,
+        pdom_cache: None,
     };
     let mut fp = FuncParser {
         inst_map: HashMap::new(),

@@ -26,7 +26,7 @@ commands:
   figures --compile-time                                 compile-time overhead table
   figures --table1                                       per-stage LoC summary
 
-LEVEL: base | uni-hw | uni-ann | uni-func | zicond | recon (default: recon)"
+LEVEL: base | uni-hw | uni-ann | uni-func | zicond | recon | o3 (default: recon)"
     );
     std::process::exit(2);
 }
@@ -39,6 +39,7 @@ fn parse_level(s: &str) -> OptLevel {
         "uni-func" | "unifunc" => OptLevel::UniFunc,
         "zicond" => OptLevel::ZiCond,
         "recon" => OptLevel::Recon,
+        "o3" => OptLevel::O3,
         _ => {
             eprintln!("unknown opt level '{s}'");
             std::process::exit(2);
@@ -174,7 +175,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 fn cmd_validate(args: &[String]) -> Result<(), String> {
     let levels: Vec<OptLevel> = match opt_val(args, "--levels") {
         Some(s) => s.split(',').map(parse_level).collect(),
-        None => vec![OptLevel::Base, OptLevel::UniFunc, OptLevel::Recon],
+        None => vec![
+            OptLevel::Base,
+            OptLevel::UniFunc,
+            OptLevel::Recon,
+            OptLevel::O3,
+        ],
     };
     let rows = experiments::validate_all(&levels);
     print!("{}", report::render_validation(&rows));

@@ -18,7 +18,6 @@
 
 use crate::analysis::tti::TargetDivergenceInfo;
 use crate::analysis::{uniformity, UniformityOptions};
-use crate::ir::dom::PostDomTree;
 use crate::ir::loops::{ensure_preheader, LoopInfo};
 use crate::ir::*;
 use std::collections::{HashMap, HashSet};
@@ -58,9 +57,10 @@ fn transform_loops(
 ) {
     let mut done_headers: HashSet<BlockId> = HashSet::new();
     for _ in 0..256 {
-        let u = uniformity::analyze(m, fid, opts, tti);
+        let u = uniformity::analyze_cached(m, fid, opts, tti);
+        let dom = m.func_mut(fid).dom_tree();
         let f = m.func(fid);
-        let li = LoopInfo::build(f);
+        let li = LoopInfo::build_with(f, &dom);
         // Deepest loop with a divergent exiting CondBr first.
         let mut cand: Option<usize> = None;
         for (i, l) in li.loops.iter().enumerate() {
@@ -179,6 +179,7 @@ fn transform_one_loop(
                 body: cont,
                 exit: exit_t,
             };
+            f.invalidate_cfg_cache();
             report.pred_branches += 1;
         }
         return;
@@ -186,7 +187,7 @@ fn transform_one_loop(
 
     // ---- Exit unification (multiple exit targets) ----
     report.exit_unified_loops += 1;
-    let dom = crate::ir::dom::DomTree::build(f);
+    let dom = f.dom_tree();
     // Per-lane exit code slot + live-out slots for phis in the targets.
     let code_slot = Val::Inst(f.insert_inst(
         f.entry,
@@ -383,6 +384,8 @@ fn transform_one_loop(
                 break;
             }
         }
+        // The SplitBr rewrite above changed b's successors in place.
+        f.invalidate_cfg_cache();
     }
     // Landing dispatch chain: load code, route to each target through a
     // reload block that feeds the target phis.
@@ -487,9 +490,9 @@ fn transform_branches(
 ) {
     let mut skipped: HashSet<BlockId> = HashSet::new();
     for _round in 0..64 {
-        let u = uniformity::analyze(m, fid, opts, tti);
+        let u = uniformity::analyze_cached(m, fid, opts, tti);
+        let pdom = m.func_mut(fid).pdom_tree();
         let f = m.func(fid);
-        let pdom = PostDomTree::build(f);
         let rpo = f.rpo();
         let rpo_pos: HashMap<BlockId, usize> =
             rpo.iter().enumerate().map(|(i, &b)| (b, i)).collect();
@@ -551,6 +554,8 @@ fn transform_branches(
                 report.joins += 1;
             }
         }
+        // The CondBr→SplitBr rewrites happened in place via `inst_mut`.
+        f.invalidate_cfg_cache();
     }
     panic!("divergent branch transformation did not converge");
 }

@@ -1,0 +1,348 @@
+//! Uniformity-aware global value numbering (the first O3 rung pass).
+//!
+//! Classic dominator-tree GVN/CSE with a scoped hash table: walking the
+//! dominator tree in preorder, a pure instruction whose expression key is
+//! already available from a dominating definition is replaced by that
+//! definition. Two SIMT-specific refinements on top of the textbook pass:
+//!
+//! * **Dominating divergent splits are barriers.** A merge is refused when
+//!   the dominator-tree path from the use back to the dominating
+//!   definition crosses a block whose terminator is a *divergent* branch
+//!   (per [`crate::analysis::uniformity`]): reusing the value would pin a
+//!   divergent live range end-to-end across the {vx_split, vx_join}
+//!   region the back-end later materializes, and recomputing inside the
+//!   arm is the cheap, conservative choice. Divergent branches that do
+//!   *not* dominate the use (merge blocks reachable around a split) are
+//!   deliberately no barrier — SSA dominance plus the per-lane register
+//!   file make reuse across a reconvergence point mask-safe (see
+//!   `Uniformity::crosses_divergent_branch` for the precise guarantee).
+//!   *Uniform* branches are no barrier either — this is what the
+//!   centralized uniformity analysis buys: a naive tmask-paranoid CSE
+//!   would have to refuse every branch.
+//! * **Block-local load CSE.** A repeated load from the same address with
+//!   no intervening store / atomic / call / barrier in the same block
+//!   reuses the earlier result. Same-block reuse crosses no branch at all,
+//!   so no divergence reasoning is needed.
+
+use crate::analysis::tti::TargetDivergenceInfo;
+use crate::analysis::{uniformity, UniformityOptions};
+use crate::ir::*;
+use std::collections::HashMap;
+
+/// Hashable key for a pure expression. Only side-effect-free,
+/// non-memory, non-mask-dependent instructions get a key.
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum ExprKey {
+    Bin(BinOp, Val, Val),
+    Un(UnOp, Val),
+    ICmp(ICmp, Val, Val),
+    FCmp(FCmp, Val, Val),
+    Select(Val, Val, Val),
+    Gep(Val, Val, u32, i32),
+}
+
+/// Deterministic ordering key so commutative operands canonicalize.
+fn val_rank(v: Val) -> (u8, u64, u64) {
+    match v {
+        Val::Inst(i) => (0, i.0 as u64, 0),
+        Val::Arg(i) => (1, i as u64, 0),
+        Val::I(x, t) => (2, x as u64, type_rank(t)),
+        Val::F(b) => (3, b as u64, 0),
+        Val::G(g) => (4, g.0 as u64, 0),
+    }
+}
+
+fn type_rank(t: Type) -> u64 {
+    match t {
+        Type::Void => 0,
+        Type::I1 => 1,
+        Type::I32 => 2,
+        Type::F32 => 3,
+        Type::Ptr(AddrSpace::Global) => 4,
+        Type::Ptr(AddrSpace::Local) => 5,
+        Type::Ptr(AddrSpace::Const) => 6,
+        Type::Ptr(AddrSpace::Private) => 7,
+    }
+}
+
+fn expr_key(kind: &InstKind) -> Option<ExprKey> {
+    Some(match *kind {
+        InstKind::Bin { op, a, b } => {
+            let (a, b) = if op.is_commutative() && val_rank(b) < val_rank(a) {
+                (b, a)
+            } else {
+                (a, b)
+            };
+            ExprKey::Bin(op, a, b)
+        }
+        InstKind::Un { op, a } => ExprKey::Un(op, a),
+        InstKind::ICmp { pred, a, b } => ExprKey::ICmp(pred, a, b),
+        InstKind::FCmp { pred, a, b } => ExprKey::FCmp(pred, a, b),
+        InstKind::Select { cond, t, f } => ExprKey::Select(cond, t, f),
+        InstKind::Gep {
+            base,
+            index,
+            scale,
+            disp,
+        } => ExprKey::Gep(base, index, scale, disp),
+        _ => return None,
+    })
+}
+
+/// Run GVN over one function. Returns the number of merged instructions.
+pub fn run(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+) -> usize {
+    let u = uniformity::analyze_cached(m, fid, opts, tti);
+    let f = &mut m.funcs[fid.idx()];
+    let dom = f.dom_tree();
+    let children = dom.children();
+    let mut merged = 0;
+
+    // Scoped available-expression table: key -> stack of dominating defs.
+    let mut table: HashMap<ExprKey, Vec<InstId>> = HashMap::new();
+    // Preorder DFS with explicit exit events for scope popping.
+    let mut work: Vec<(BlockId, bool)> = vec![(f.entry, false)];
+    let mut scope_added: HashMap<BlockId, Vec<ExprKey>> = HashMap::new();
+    while let Some((b, exiting)) = work.pop() {
+        if exiting {
+            for key in scope_added.remove(&b).unwrap_or_default() {
+                if let Some(stack) = table.get_mut(&key) {
+                    stack.pop();
+                    if stack.is_empty() {
+                        table.remove(&key);
+                    }
+                }
+            }
+            continue;
+        }
+        work.push((b, true));
+        for &c in children[b.idx()].iter().rev() {
+            work.push((c, false));
+        }
+
+        let mut added: Vec<ExprKey> = vec![];
+        // Block-local load CSE state: address -> available load result.
+        let mut avail_loads: HashMap<Val, InstId> = HashMap::new();
+        for id in f.blocks[b.idx()].insts.clone() {
+            if f.insts[id.idx()].dead {
+                continue;
+            }
+            let kind = f.inst(id).kind.clone();
+            match &kind {
+                InstKind::Load { ptr } => {
+                    if let Some(&prev) = avail_loads.get(ptr) {
+                        if f.inst(prev).ty == f.inst(id).ty {
+                            f.replace_uses(Val::Inst(id), Val::Inst(prev));
+                            f.remove_inst(id);
+                            merged += 1;
+                            continue;
+                        }
+                    }
+                    avail_loads.insert(*ptr, id);
+                    continue;
+                }
+                InstKind::Store { .. } | InstKind::Call { .. } => {
+                    avail_loads.clear();
+                    continue;
+                }
+                InstKind::Intr { intr, .. } => {
+                    if intr.clobbers_memory() {
+                        avail_loads.clear();
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+            let Some(key) = expr_key(&kind) else { continue };
+            if let Some(&prev) = table.get(&key).and_then(|s| s.last()) {
+                let def_b = f.inst(prev).block;
+                if !u.crosses_divergent_branch(&dom, b, def_b, true, &|_| false) {
+                    f.replace_uses(Val::Inst(id), Val::Inst(prev));
+                    f.remove_inst(id);
+                    merged += 1;
+                    continue;
+                }
+            }
+            table.entry(key.clone()).or_default().push(id);
+            added.push(key);
+        }
+        scope_added.insert(b, added);
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tti::VortexTti;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    fn opts_all() -> UniformityOptions {
+        UniformityOptions::all()
+    }
+
+    fn count_muls(f: &Function) -> usize {
+        f.insts
+            .iter()
+            .filter(|i| !i.dead && matches!(i.kind, InstKind::Bin { op: BinOp::Mul, .. }))
+            .count()
+    }
+
+    /// A redundant expression in a dominated block merges with the
+    /// dominating definition when only *uniform* branches separate them.
+    #[test]
+    fn merges_across_uniform_branch() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "n".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::new(&mut f);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        let x1 = b.mul(gid, Val::ci(3)); // divergent value
+        let c = b.icmp(ICmp::Ne, Val::Arg(1), Val::ci(0)); // uniform branch
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        let x2 = b.mul(gid, Val::ci(3)); // redundant
+        let p = b.gep(Val::Arg(0), gid, 4);
+        b.store(p, x2);
+        b.br(e);
+        b.set_block(e);
+        b.ret(None);
+        let _ = x1;
+        let fid = m.add_func(f);
+        let merged = run(&mut m, fid, &opts_all(), &VortexTti);
+        assert_eq!(merged, 1, "uniform-branch merge should fire");
+        assert_eq!(count_muls(&m.funcs[0]), 1);
+        verify_function(&m.funcs[0]).unwrap();
+    }
+
+    /// Golden rule (a): GVN never merges an op across a divergent split —
+    /// the identical expression inside the divergent arm is recomputed.
+    #[test]
+    fn never_merges_across_divergent_split() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "out".into(),
+                ty: Type::Ptr(AddrSpace::Global),
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        let t = f.add_block("t");
+        let e = f.add_block("e");
+        let mut b = Builder::new(&mut f);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        let x1 = b.mul(gid, Val::ci(3));
+        let c = b.icmp(ICmp::Slt, gid, Val::ci(8)); // divergent branch
+        b.cond_br(c, t, e);
+        b.set_block(t);
+        let x2 = b.mul(gid, Val::ci(3)); // same expr, inside the divergent arm
+        let p = b.gep(Val::Arg(0), gid, 4);
+        b.store(p, x2);
+        b.br(e);
+        b.set_block(e);
+        b.ret(None);
+        let _ = x1;
+        let fid = m.add_func(f);
+        let merged = run(&mut m, fid, &opts_all(), &VortexTti);
+        assert_eq!(merged, 0, "must not merge across a divergent split");
+        assert_eq!(count_muls(&m.funcs[0]), 2);
+        verify_function(&m.funcs[0]).unwrap();
+    }
+
+    /// Same-block redundancy always merges (local CSE), and commutative
+    /// operands canonicalize.
+    #[test]
+    fn local_cse_and_commutativity() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "a".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                },
+                Param {
+                    name: "b".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                },
+            ],
+            Type::I32,
+        );
+        let mut b = Builder::new(&mut f);
+        let s1 = b.add(Val::Arg(0), Val::Arg(1));
+        let s2 = b.add(Val::Arg(1), Val::Arg(0)); // commuted duplicate
+        let r = b.mul(s1, s2);
+        b.ret(Some(r));
+        let fid = m.add_func(f);
+        let merged = run(&mut m, fid, &opts_all(), &VortexTti);
+        assert_eq!(merged, 1);
+        verify_function(&m.funcs[0]).unwrap();
+        // The mul now squares the single surviving add.
+        let mul = m.funcs[0]
+            .insts
+            .iter()
+            .find(|i| !i.dead && matches!(i.kind, InstKind::Bin { op: BinOp::Mul, .. }))
+            .unwrap();
+        let ops = mul.kind.operands();
+        assert_eq!(ops[0], ops[1]);
+    }
+
+    /// Block-local load CSE fires without an intervening store and is
+    /// killed by one.
+    #[test]
+    fn local_load_cse_respects_clobbers() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "p".into(),
+                ty: Type::Ptr(AddrSpace::Global),
+                uniform: true,
+            }],
+            Type::I32,
+        );
+        let mut b = Builder::new(&mut f);
+        let l1 = b.load(Val::Arg(0), Type::I32);
+        let l2 = b.load(Val::Arg(0), Type::I32); // redundant
+        let s = b.add(l1, l2);
+        b.store(Val::Arg(0), s);
+        let l3 = b.load(Val::Arg(0), Type::I32); // NOT redundant: store between
+        let r = b.add(s, l3);
+        b.ret(Some(r));
+        let fid = m.add_func(f);
+        let merged = run(&mut m, fid, &opts_all(), &VortexTti);
+        assert_eq!(merged, 1);
+        let loads = m.funcs[0]
+            .insts
+            .iter()
+            .filter(|i| !i.dead && matches!(i.kind, InstKind::Load { .. }))
+            .count();
+        assert_eq!(loads, 2);
+        verify_function(&m.funcs[0]).unwrap();
+    }
+}

@@ -1,0 +1,393 @@
+//! Uniformity-aware loop-invariant code motion (second O3 rung pass).
+//!
+//! Works the natural-loop forest innermost-first: for each loop it
+//! guarantees a preheader, then hoists side-effect-free instructions whose
+//! operands are all defined outside the loop. SIMT rules on top of the
+//! classic pass:
+//!
+//! * **No hoisting across a divergent split.** An instruction nested under
+//!   a divergent *non-loop* branch inside the loop stays put: moving it to
+//!   the preheader would execute it under the pre-split thread mask, the
+//!   exact hazard the `vx_split`/`vx_join` planning assumes away (paper
+//!   §4.3.3). Uniform in-loop branches are no barrier — every active lane
+//!   agrees on them, so preheader execution is equivalent.
+//! * **Loads are hoisted only non-speculatively.** A load moves out only
+//!   if the loop body contains no store / atomic / call / barrier (our
+//!   conservative aliasing), its block dominates every exiting block (it
+//!   executes on every trip, so the preheader copy is not speculative),
+//!   and — the temporal-divergence rule — it is refused outright when the
+//!   load result is divergent *and* the loop has a divergent exiting
+//!   branch: after TRANSFORM_LOOP the body runs under a shrinking
+//!   `vx_pred` mask, and a pre-loop full-mask execution of a per-lane
+//!   address is exactly the Fig. 5-class speculation the safety net exists
+//!   to catch.
+//!
+//! Divisions are hoistable: the target has RISC-V div/rem-by-zero
+//! semantics (defined results, no traps), so speculation cannot fault.
+
+use crate::analysis::tti::TargetDivergenceInfo;
+use crate::analysis::{uniformity, UniformityOptions};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::{ensure_preheader, LoopInfo};
+use crate::ir::*;
+use std::collections::HashSet;
+
+/// Run LICM over one function. Returns the number of hoisted instructions.
+pub fn run(
+    m: &mut Module,
+    fid: FuncId,
+    opts: &UniformityOptions,
+    tti: &dyn TargetDivergenceInfo,
+) -> usize {
+    let mut hoisted = 0;
+    let mut processed: HashSet<BlockId> = HashSet::new();
+    // One loop per iteration, innermost (deepest) first; analyses are
+    // rebuilt after each loop because hoisting moves definitions into
+    // preheaders that enclosing loops must then see as loop-interior.
+    loop {
+        let f = &mut m.funcs[fid.idx()];
+        let dom0 = f.dom_tree();
+        let li = LoopInfo::build_with(f, &dom0);
+        let cand = (0..li.loops.len())
+            .filter(|&i| !processed.contains(&li.loops[i].header))
+            .max_by_key(|&i| li.loops[i].depth);
+        let Some(ci) = cand else { break };
+        let header = li.loops[ci].header;
+        let blocks = li.loops[ci].blocks.clone();
+        processed.insert(header);
+        if header == f.entry {
+            continue; // degenerate loop back to entry: no place to hoist to
+        }
+        let ph = ensure_preheader(f, header, &blocks);
+        let dom = f.dom_tree();
+        let u = uniformity::analyze_cached(m, fid, opts, tti);
+        let f = &mut m.funcs[fid.idx()];
+        hoisted += hoist_loop(f, &dom, &u, header, &blocks, ph);
+    }
+    hoisted
+}
+
+/// Pure, always-safe-to-speculate instruction kinds.
+fn speculatable(kind: &InstKind) -> bool {
+    matches!(
+        kind,
+        InstKind::Bin { .. }
+            | InstKind::Un { .. }
+            | InstKind::ICmp { .. }
+            | InstKind::FCmp { .. }
+            | InstKind::Select { .. }
+            | InstKind::Gep { .. }
+    )
+}
+
+fn operands_invariant(f: &Function, blocks: &HashSet<BlockId>, id: InstId) -> bool {
+    f.inst(id).kind.operands().iter().all(|v| match v {
+        Val::Inst(d) => !blocks.contains(&f.inst(*d).block),
+        _ => true,
+    })
+}
+
+fn hoist_loop(
+    f: &mut Function,
+    dom: &DomTree,
+    u: &uniformity::Uniformity,
+    header: BlockId,
+    blocks: &HashSet<BlockId>,
+    ph: BlockId,
+) -> usize {
+    // Loop-wide memory facts for the load rules.
+    let mut mem_clobbered = false;
+    for &b in blocks {
+        for &id in &f.blocks[b.idx()].insts {
+            match &f.inst(id).kind {
+                InstKind::Store { .. } | InstKind::Call { .. } => mem_clobbered = true,
+                InstKind::Intr { intr, .. } => {
+                    if intr.clobbers_memory() {
+                        mem_clobbered = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let exiting: Vec<BlockId> = blocks
+        .iter()
+        .copied()
+        .filter(|&b| f.succs(b).iter().any(|s| !blocks.contains(s)))
+        .collect();
+    let divergent_exit = exiting.iter().any(|b| u.div_branch_blocks.contains(b));
+
+    // Dominance-compatible order over the loop body.
+    let order: Vec<BlockId> = f
+        .rpo()
+        .into_iter()
+        .filter(|b| blocks.contains(b))
+        .collect();
+    let mut count = 0;
+    loop {
+        let mut changed = false;
+        for &b in &order {
+            for id in f.blocks[b.idx()].insts.clone() {
+                if f.insts[id.idx()].dead {
+                    continue;
+                }
+                let kind = &f.inst(id).kind;
+                let ok = if speculatable(kind) {
+                    true
+                } else if matches!(kind, InstKind::Load { .. }) {
+                    let load_div = u.inst_div.get(id.idx()).copied().unwrap_or(true);
+                    !mem_clobbered
+                        && exiting.iter().all(|&e| dom.dominates(b, e))
+                        && !(load_div && divergent_exit)
+                } else {
+                    false
+                };
+                // Loop (latch/exiting) branches are exempt from the
+                // divergent-split barrier: their divergence is temporal,
+                // not a mask split the hoist would cross. The header's own
+                // loop test is excluded via `check_to = false`.
+                let loop_branch = |cur: BlockId| {
+                    let succs = f.succs(cur);
+                    succs.contains(&header) || succs.iter().any(|s| !blocks.contains(s))
+                };
+                if !ok
+                    || !operands_invariant(f, blocks, id)
+                    || u.crosses_divergent_branch(dom, b, header, false, &loop_branch)
+                {
+                    continue;
+                }
+                // Move to the preheader, just before its terminator.
+                f.blocks[b.idx()].insts.retain(|&x| x != id);
+                let pos = f.blocks[ph.idx()].insts.len() - 1;
+                f.blocks[ph.idx()].insts.insert(pos, id);
+                f.insts[id.idx()].block = ph;
+                count += 1;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tti::VortexTti;
+    use crate::ir::interp::{read_u32, run_kernel_scalar};
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    fn opts_all() -> UniformityOptions {
+        UniformityOptions::all()
+    }
+
+    /// Kernel: for (i = 0; i < bound; i++) acc += n*3 [+ src[gid]];
+    /// out[gid] = acc. The invariant load (when present) sits in the loop
+    /// *header*, so it dominates the exiting block and only the
+    /// divergence rules decide its fate.
+    fn build_loop_kernel(divergent_bound: bool, with_load: bool) -> Module {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "n".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+                Param {
+                    name: "src".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        f.is_kernel = true;
+        f.linkage = Linkage::External;
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        let bound = if divergent_bound {
+            b.bin(BinOp::And, gid, Val::ci(3))
+        } else {
+            Val::Arg(1)
+        };
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let acc = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let step0 = if with_load {
+            let p = b.gep(Val::Arg(2), gid, 4); // invariant address (gid from entry)
+            Some(b.load(p, Type::I32)) // divergent result (arg-root load)
+        } else {
+            None
+        };
+        let c = b.icmp(ICmp::Slt, i, bound);
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let inv = b.mul(Val::Arg(1), Val::ci(3)); // loop-invariant
+        let step = match step0 {
+            Some(l) => b.add(inv, l),
+            None => inv,
+        };
+        let acc2 = b.add(acc, step);
+        let i2 = b.add(i, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        let op = b.gep(Val::Arg(0), gid, 4);
+        b.store(op, acc);
+        b.ret(None);
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+        }
+        if let Val::Inst(ap) = acc {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ap).kind {
+                incs.push((body, acc2));
+            }
+        }
+        m.add_func(f);
+        m
+    }
+
+    fn run_out(m: &Module) -> Vec<u32> {
+        let mut mem = vec![0u8; 4096];
+        // Seed src[0..4] with distinct values.
+        for g in 0..4u32 {
+            mem[(128 + g * 4) as usize..(128 + g * 4 + 4) as usize]
+                .copy_from_slice(&(10 + 7 * g).to_le_bytes());
+        }
+        run_kernel_scalar(
+            m,
+            FuncId(0),
+            &[256, 5, 128],
+            [1, 1, 1],
+            [4, 1, 1],
+            &mut mem,
+            2048,
+            &[],
+        )
+        .unwrap();
+        (0..4).map(|g| read_u32(&mem, 256 + g * 4)).collect()
+    }
+
+    fn block_of(f: &Function, pred: impl Fn(&InstKind) -> bool) -> Vec<BlockId> {
+        f.insts
+            .iter()
+            .filter(|i| !i.dead && pred(&i.kind))
+            .map(|i| i.block)
+            .collect()
+    }
+
+    /// Invariant arithmetic hoists out of a uniform loop and semantics
+    /// are preserved (interp differential).
+    #[test]
+    fn hoists_invariant_arithmetic() {
+        let m0 = build_loop_kernel(false, false);
+        let before = run_out(&m0);
+        let mut m = m0.clone();
+        let n = run(&mut m, FuncId(0), &opts_all(), &VortexTti);
+        assert!(n >= 1, "expected a hoist, got {n}");
+        verify_function(&m.funcs[0]).unwrap();
+        // The mul no longer lives in the loop body.
+        let li = LoopInfo::build(&m.funcs[0]);
+        let mul_blocks = block_of(&m.funcs[0], |k| {
+            matches!(k, InstKind::Bin { op: BinOp::Mul, .. })
+        });
+        for b in mul_blocks {
+            assert!(
+                !li.loops.iter().any(|l| l.blocks.contains(&b)),
+                "mul still inside a loop"
+            );
+        }
+        assert_eq!(before, run_out(&m));
+        // Expected value: acc = 5 iterations * n*3 = 5 * 15 = 75.
+        assert_eq!(before, vec![75; 4]);
+    }
+
+    /// Golden rule (b): a divergent load must not be hoisted out of a
+    /// loop with a divergent exiting branch.
+    #[test]
+    fn refuses_divergent_load_from_divergent_loop() {
+        let mut m = build_loop_kernel(true, true);
+        run(&mut m, FuncId(0), &opts_all(), &VortexTti);
+        verify_function(&m.funcs[0]).unwrap();
+        let li = LoopInfo::build(&m.funcs[0]);
+        let load_blocks = block_of(&m.funcs[0], |k| matches!(k, InstKind::Load { .. }));
+        assert!(!load_blocks.is_empty());
+        for b in load_blocks {
+            assert!(
+                li.loops.iter().any(|l| l.blocks.contains(&b)),
+                "divergent load escaped a divergent loop"
+            );
+        }
+    }
+
+    /// The same load DOES hoist when the loop exit is uniform (and there
+    /// are no stores in the body).
+    #[test]
+    fn hoists_load_from_uniform_loop() {
+        let m0 = build_loop_kernel(false, true);
+        let before = run_out(&m0);
+        let mut m = m0.clone();
+        let n = run(&mut m, FuncId(0), &opts_all(), &VortexTti);
+        assert!(n >= 2, "expected gep+load+mul hoists, got {n}");
+        assert_eq!(before, run_out(&m));
+        verify_function(&m.funcs[0]).unwrap();
+        let li = LoopInfo::build(&m.funcs[0]);
+        let load_blocks = block_of(&m.funcs[0], |k| matches!(k, InstKind::Load { .. }));
+        for b in load_blocks {
+            assert!(
+                !li.loops.iter().any(|l| l.blocks.contains(&b)),
+                "load not hoisted from uniform loop"
+            );
+        }
+    }
+
+    /// A store in the body pins every load.
+    #[test]
+    fn store_in_loop_pins_loads() {
+        let mut m = build_loop_kernel(false, true);
+        // Add a store into the body block (before the terminator).
+        let f = &mut m.funcs[0];
+        let body = f
+            .insts
+            .iter()
+            .find(|i| !i.dead && matches!(i.kind, InstKind::Load { .. }))
+            .map(|i| i.block)
+            .unwrap();
+        let pos = f.blocks[body.idx()].insts.len() - 1;
+        f.insert_inst(
+            body,
+            pos,
+            InstKind::Store {
+                ptr: Val::Arg(0),
+                val: Val::ci(1),
+            },
+            Type::Void,
+        );
+        run(&mut m, FuncId(0), &opts_all(), &VortexTti);
+        verify_function(&m.funcs[0]).unwrap();
+        let li = LoopInfo::build(&m.funcs[0]);
+        let load_blocks = block_of(&m.funcs[0], |k| matches!(k, InstKind::Load { .. }));
+        for b in load_blocks {
+            assert!(
+                li.loops.iter().any(|l| l.blocks.contains(&b)),
+                "load hoisted past an in-loop store"
+            );
+        }
+    }
+}

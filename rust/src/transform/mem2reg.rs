@@ -7,7 +7,6 @@
 //! then builds the SSA form the uniformity analysis and divergence
 //! insertion operate on.
 
-use crate::ir::dom::DomTree;
 use crate::ir::*;
 use std::collections::{HashMap, HashSet};
 
@@ -74,7 +73,7 @@ pub fn run(f: &mut Function) -> usize {
     if allocas.is_empty() {
         return 0;
     }
-    let dom = DomTree::build(f);
+    let dom = f.dom_tree();
     let df = dom.frontiers(f);
     let types: HashMap<InstId, Type> = allocas.iter().map(|&a| (a, slot_type(f, a))).collect();
 

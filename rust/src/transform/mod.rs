@@ -2,11 +2,14 @@
 //! manager that sequences them into the VOLT optimization ladder.
 
 pub mod divergence_insert;
+pub mod gvn;
 pub mod inline;
+pub mod licm;
 pub mod mem2reg;
 pub mod pass;
 pub mod reconstruct;
 pub mod simplify;
+pub mod strength;
 pub mod structurize;
 
 pub use pass::{run_middle_end, MiddleEndReport, OptConfig, OptLevel};

@@ -25,16 +25,22 @@ pub enum OptLevel {
     ZiCond,
     /// + CFG reconstruction (divergent node duplication).
     Recon,
+    /// + uniformity-aware redundancy elimination: dominator GVN/CSE,
+    /// loop-invariant code motion, and power-of-two strength reduction —
+    /// the first rung past the paper's published ladder (§5.2), built on
+    /// the same centralized SIMT analyses.
+    O3,
 }
 
 impl OptLevel {
-    pub const LADDER: [OptLevel; 6] = [
+    pub const LADDER: [OptLevel; 7] = [
         OptLevel::Base,
         OptLevel::UniHw,
         OptLevel::UniAnn,
         OptLevel::UniFunc,
         OptLevel::ZiCond,
         OptLevel::Recon,
+        OptLevel::O3,
     ];
 
     pub fn name(self) -> &'static str {
@@ -45,6 +51,7 @@ impl OptLevel {
             OptLevel::UniFunc => "Uni-Func",
             OptLevel::ZiCond => "ZiCond",
             OptLevel::Recon => "Recon",
+            OptLevel::O3 => "O3",
         }
     }
 
@@ -57,6 +64,7 @@ impl OptLevel {
             },
             zicond: self >= OptLevel::ZiCond,
             recon: self >= OptLevel::Recon,
+            o3: self >= OptLevel::O3,
             ..OptConfig::default()
         }
     }
@@ -67,6 +75,8 @@ pub struct OptConfig {
     pub uniformity: UniformityOptions,
     pub zicond: bool,
     pub recon: bool,
+    /// O3 rung: GVN + LICM + strength reduction.
+    pub o3: bool,
     /// Device functions at most this many instructions are inlined.
     pub inline_threshold: usize,
     /// Run the IR verifier after every pass (tests/debug).
@@ -79,6 +89,7 @@ impl Default for OptConfig {
             uniformity: UniformityOptions::all(),
             zicond: true,
             recon: true,
+            o3: true,
             inline_threshold: 48,
             verify: cfg!(debug_assertions),
         }
@@ -96,6 +107,10 @@ pub struct MiddleEndReport {
     pub selects_formed: usize,
     pub inlined: usize,
     pub allocas_promoted: usize,
+    /// O3 rung counters.
+    pub gvn_merged: usize,
+    pub licm_hoisted: usize,
+    pub strength_reduced: usize,
 }
 
 impl MiddleEndReport {
@@ -217,6 +232,30 @@ pub fn run_middle_end_with(
             rep.selects_expanded += simplify::select_normalize(&mut m.funcs[f.idx()], cfg.zicond);
         }
     });
+    // 7b. The O3 rung: redundancy elimination on the canonical CondBr CFG,
+    //     before divergence management rewrites loops into PredBr form.
+    if cfg.o3 {
+        timed("gvn", m, &mut rep, &mut |m, rep| {
+            for &f in &funcs {
+                rep.gvn_merged += gvn::run(m, f, &cfg.uniformity, tti);
+            }
+        });
+        timed("licm", m, &mut rep, &mut |m, rep| {
+            for &f in &funcs {
+                rep.licm_hoisted += licm::run(m, f, &cfg.uniformity, tti);
+            }
+        });
+        timed("strength-reduce", m, &mut rep, &mut |m, rep| {
+            for &f in &funcs {
+                rep.strength_reduced += strength::run(&mut m.funcs[f.idx()]);
+            }
+        });
+        timed("simplify-o3", m, &mut rep, &mut |m, _| {
+            for &f in &funcs {
+                simplify::simplify(&mut m.funcs[f.idx()]);
+            }
+        });
+    }
     // 8. Divergence-management insertion (Algorithm 2).
     timed("divergence-insert", m, &mut rep, &mut |m, rep| {
         for &f in &funcs {
@@ -371,5 +410,31 @@ mod tests {
         let rep = run_middle_end(&mut m, &OptConfig::default());
         assert!(rep.timings.iter().any(|(n, _)| n == "divergence-insert"));
         assert!(rep.total_ms() > 0.0);
+    }
+
+    /// O3 sits above Recon: its config enables the new passes, the ladder
+    /// includes it, and the rung runs (and is timed) without changing
+    /// kernel semantics (covered by `ladder_preserves_semantics` looping
+    /// over the full LADDER).
+    #[test]
+    fn o3_rung_wired() {
+        assert_eq!(*OptLevel::LADDER.last().unwrap(), OptLevel::O3);
+        assert!(OptLevel::O3 > OptLevel::Recon);
+        let cfg = OptLevel::O3.config();
+        assert!(cfg.o3 && cfg.recon && cfg.zicond);
+        assert!(!OptLevel::Recon.config().o3);
+        let mut m = build_kernel();
+        let mut c = OptLevel::O3.config();
+        c.verify = true;
+        let rep = run_middle_end(&mut m, &c);
+        for pass in ["gvn", "licm", "strength-reduce"] {
+            assert!(
+                rep.timings.iter().any(|(n, _)| n == pass),
+                "missing O3 pass {pass}"
+            );
+        }
+        let got = run_out(&m, 16);
+        let expect = run_out(&build_kernel(), 16);
+        assert_eq!(got, expect);
     }
 }

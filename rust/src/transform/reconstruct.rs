@@ -15,7 +15,7 @@
 use crate::analysis::tti::TargetDivergenceInfo;
 use crate::analysis::{uniformity, UniformityOptions};
 use crate::ir::cdg::Cdg;
-use crate::ir::cfg::irreducible_back_edges;
+use crate::ir::cfg::irreducible_back_edges_with;
 use crate::ir::*;
 
 #[derive(Debug, Default)]
@@ -40,15 +40,16 @@ pub fn run(
         return report;
     }
     for _ in 0..32 {
-        let f = m.func(fid);
-        let offending = irreducible_back_edges(f);
+        let dom = m.func_mut(fid).dom_tree();
+        let offending = irreducible_back_edges_with(m.func(fid), &dom);
         if offending.is_empty() {
             break;
         }
         // Try to fix one offending edge by duplicating its target.
-        let u = uniformity::analyze(m, fid, opts, tti);
+        let u = uniformity::analyze_cached(m, fid, opts, tti);
+        let pdom = m.func_mut(fid).pdom_tree();
         let f = m.func(fid);
-        let cdg = Cdg::build(f);
+        let cdg = Cdg::build_with(f, &pdom);
         let mut progressed = false;
         for &(n, mm) in &offending {
             // Paper rule: duplicate only divergent CDG leaf nodes.
@@ -70,6 +71,7 @@ pub fn run(
                 continue;
             }
             duplicate_node(m.func_mut(fid), n, mm);
+            m.func_mut(fid).invalidate_cfg_cache();
             report.duplicated += 1;
             progressed = true;
             break;

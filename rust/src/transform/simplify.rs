@@ -152,6 +152,7 @@ pub fn cfg_cleanup(f: &mut Function) -> usize {
                 if let Some(target) = target {
                     let dropped = if target == tb { fb } else { tb };
                     f.inst_mut(t).kind = InstKind::Br { target };
+                    f.invalidate_cfg_cache();
                     // Remove phi incomings along the dropped edge if the
                     // dropped block is no longer a successor.
                     if dropped != target {
@@ -339,6 +340,7 @@ pub fn select_normalize(f: &mut Function, zicond: bool) -> usize {
             ty,
         );
         f.replace_uses(Val::Inst(id), Val::Inst(phi));
+        f.invalidate_cfg_cache();
         n += 1;
     }
 }
@@ -470,6 +472,7 @@ pub fn form_selects(f: &mut Function) -> usize {
             // A now branches straight to J.
             let term = f.term(a);
             f.inst_mut(term).kind = InstKind::Br { target: join };
+            f.invalidate_cfg_cache();
             formed += 1;
             did = true;
             let _ = &arms;

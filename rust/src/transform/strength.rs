@@ -1,0 +1,253 @@
+//! Strength reduction (third O3 rung pass): rewrite integer multiply /
+//! divide / remainder by power-of-two constants into shifts and masks
+//! before instruction selection.
+//!
+//! On the target, `div`/`rem` occupy the 16-cycle serial divider and
+//! `mul` the 3-cycle multiplier, while shifts and masks are 1-cycle ALU
+//! ops with immediate forms (`slli`/`srli`/`srai`/`andi`) — so even the
+//! 4-instruction signed-division expansion wins by ~4x. Signed semantics
+//! are preserved exactly (RISC-V truncating division): `x / 2^k` becomes
+//! `(x + ((x >> 31) >>> (32-k))) >> k` — the bias corrects the rounding
+//! direction for negative dividends — and `x % 2^k` is rebuilt as
+//! `x - (x / 2^k) << k`. The differential test below checks negative
+//! operands against the interpreter's reference semantics.
+//!
+//! Runs after GVN/LICM (so redundancy is eliminated on the canonical
+//! mul/div form) and before divergence insertion; per-lane semantics are
+//! untouched, so no uniformity reasoning is needed here.
+
+use crate::ir::*;
+
+/// Returns `Some(k)` when `v` is the constant `2^k` with `1 <= k <= 30`.
+fn pow2_exp(v: Val) -> Option<u32> {
+    match v {
+        Val::I(c, _) if (2..=(1i64 << 30)).contains(&c) && (c as u64).is_power_of_two() => {
+            Some((c as u64).trailing_zeros())
+        }
+        _ => None,
+    }
+}
+
+/// Run strength reduction over one function. Returns rewrites performed.
+pub fn run(f: &mut Function) -> usize {
+    let mut n = 0;
+    let end = f.insts.len(); // rewrites append; never revisit new insts
+    for idx in 0..end {
+        let id = InstId(idx as u32);
+        if f.insts[idx].dead || f.insts[idx].ty != Type::I32 {
+            continue;
+        }
+        let InstKind::Bin { op, a, b } = f.insts[idx].kind.clone() else {
+            continue;
+        };
+        let blk = f.insts[idx].block;
+        let Some(pos) = f.blocks[blk.idx()].insts.iter().position(|&x| x == id) else {
+            continue;
+        };
+        let rewritten: Option<Val> = match op {
+            BinOp::Mul => {
+                // Constant on either side (commutative).
+                if let Some(k) = pow2_exp(b) {
+                    Some(emit_shl(f, blk, pos, a, k))
+                } else if let Some(k) = pow2_exp(a) {
+                    Some(emit_shl(f, blk, pos, b, k))
+                } else {
+                    None
+                }
+            }
+            BinOp::UDiv => {
+                pow2_exp(b).map(|k| emit_bin(f, blk, pos, BinOp::LShr, a, Val::ci(k as i64)))
+            }
+            BinOp::URem => pow2_exp(b).map(|k| {
+                let mask = (1i64 << k) - 1;
+                emit_bin(f, blk, pos, BinOp::And, a, Val::ci(mask))
+            }),
+            BinOp::SDiv => pow2_exp(b).map(|k| emit_sdiv_pow2(f, blk, pos, a, k).0),
+            BinOp::SRem => pow2_exp(b).map(|k| {
+                // x % 2^k  ==  x - ((x / 2^k) << k), with the corrected
+                // signed quotient.
+                let (q, pos) = emit_sdiv_pow2(f, blk, pos, a, k);
+                let m = emit_bin(f, blk, pos, BinOp::Shl, q, Val::ci(k as i64));
+                emit_bin(f, blk, pos + 1, BinOp::Sub, a, m)
+            }),
+            _ => None,
+        };
+        if let Some(v) = rewritten {
+            f.replace_uses(Val::Inst(id), v);
+            f.remove_inst(id);
+            n += 1;
+        }
+    }
+    n
+}
+
+fn emit_bin(f: &mut Function, blk: BlockId, pos: usize, op: BinOp, a: Val, b: Val) -> Val {
+    Val::Inst(f.insert_inst(blk, pos, InstKind::Bin { op, a, b }, Type::I32))
+}
+
+fn emit_shl(f: &mut Function, blk: BlockId, pos: usize, a: Val, k: u32) -> Val {
+    emit_bin(f, blk, pos, BinOp::Shl, a, Val::ci(k as i64))
+}
+
+/// Truncating signed division by `2^k`:
+/// `sign = x >> 31; bias = sign >>> (32-k); q = (x + bias) >> k`.
+/// Returns the quotient and the insertion position just past it.
+fn emit_sdiv_pow2(f: &mut Function, blk: BlockId, pos: usize, x: Val, k: u32) -> (Val, usize) {
+    let sign = emit_bin(f, blk, pos, BinOp::AShr, x, Val::ci(31));
+    let bias = emit_bin(f, blk, pos + 1, BinOp::LShr, sign, Val::ci((32 - k) as i64));
+    let sum = emit_bin(f, blk, pos + 2, BinOp::Add, x, bias);
+    let q = emit_bin(f, blk, pos + 3, BinOp::AShr, sum, Val::ci(k as i64));
+    (q, pos + 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::scalar;
+    use crate::ir::verify::verify_function;
+    use crate::ir::{Builder, Param};
+
+    fn has_op(f: &Function, op: BinOp) -> bool {
+        f.insts
+            .iter()
+            .any(|i| !i.dead && matches!(i.kind, InstKind::Bin { op: o, .. } if o == op))
+    }
+
+    /// Build `fn(x) -> x <op> c`, reduce it, and evaluate both versions
+    /// through the scalar interpreter reference semantics.
+    fn differential(op: BinOp, c: i64, inputs: &[i32]) {
+        let mut f = Function::new(
+            "t",
+            vec![Param {
+                name: "x".into(),
+                ty: Type::I32,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        let mut b = Builder::new(&mut f);
+        let r = b.bin(op, Val::Arg(0), Val::ci(c));
+        b.ret(Some(r));
+        let reduced = run(&mut f);
+        assert_eq!(reduced, 1, "{op:?} by {c} should reduce");
+        assert!(!has_op(&f, op), "{op:?} survived reduction");
+        verify_function(&f).unwrap();
+        for &x in inputs {
+            let want = scalar::bin_i(op, x as u32, c as u32);
+            let got = eval(&f, x as u32);
+            assert_eq!(
+                got, want,
+                "{op:?}: {x} vs {c}: got {got}, want {want} (reduced IR disagrees)"
+            );
+        }
+    }
+
+    /// Evaluate the straight-line single-block function on one input.
+    fn eval(f: &Function, x: u32) -> u32 {
+        let mut vals: std::collections::HashMap<InstId, u32> = Default::default();
+        let get = |vals: &std::collections::HashMap<InstId, u32>, v: Val| -> u32 {
+            match v {
+                Val::Inst(i) => vals[&i],
+                Val::Arg(0) => x,
+                Val::I(c, _) => c as u32,
+                _ => panic!("unexpected operand"),
+            }
+        };
+        for &id in &f.blocks[f.entry.idx()].insts {
+            match &f.inst(id).kind {
+                InstKind::Bin { op, a, b } => {
+                    let r = scalar::bin_i(*op, get(&vals, *a), get(&vals, *b));
+                    vals.insert(id, r);
+                }
+                InstKind::Ret { val: Some(v) } => return get(&vals, *v),
+                k => panic!("unexpected inst {k:?}"),
+            }
+        }
+        panic!("no return")
+    }
+
+    const NEGATIVES: &[i32] = &[
+        0,
+        1,
+        7,
+        8,
+        9,
+        37,
+        -1,
+        -7,
+        -8,
+        -9,
+        -37,
+        i32::MAX,
+        i32::MIN,
+        i32::MIN + 1,
+    ];
+
+    /// Golden rule (c): signed div/rem by powers of two preserve RISC-V
+    /// truncating semantics for negative operands.
+    #[test]
+    fn signed_div_rem_semantics_preserved() {
+        for c in [2i64, 4, 8, 1 << 15, 1 << 30] {
+            differential(BinOp::SDiv, c, NEGATIVES);
+            differential(BinOp::SRem, c, NEGATIVES);
+        }
+    }
+
+    #[test]
+    fn unsigned_and_mul_reduce() {
+        for c in [2i64, 16, 1 << 30] {
+            differential(BinOp::Mul, c, NEGATIVES);
+            differential(BinOp::UDiv, c, NEGATIVES);
+            differential(BinOp::URem, c, NEGATIVES);
+        }
+    }
+
+    /// Non-powers-of-two and non-constant divisors are left alone.
+    #[test]
+    fn leaves_non_pow2_alone() {
+        let mut f = Function::new(
+            "t",
+            vec![
+                Param {
+                    name: "x".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                },
+                Param {
+                    name: "y".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                },
+            ],
+            Type::I32,
+        );
+        let mut b = Builder::new(&mut f);
+        let a = b.bin(BinOp::SDiv, Val::Arg(0), Val::ci(7));
+        let c = b.bin(BinOp::SRem, Val::Arg(0), Val::Arg(1));
+        let d = b.add(a, c);
+        b.ret(Some(d));
+        assert_eq!(run(&mut f), 0);
+        assert!(has_op(&f, BinOp::SDiv) && has_op(&f, BinOp::SRem));
+    }
+
+    /// Mul with the constant on the left also reduces.
+    #[test]
+    fn mul_constant_on_left() {
+        let mut f = Function::new(
+            "t",
+            vec![Param {
+                name: "x".into(),
+                ty: Type::I32,
+                uniform: false,
+            }],
+            Type::I32,
+        );
+        let mut b = Builder::new(&mut f);
+        let r = b.bin(BinOp::Mul, Val::ci(8), Val::Arg(0));
+        b.ret(Some(r));
+        assert_eq!(run(&mut f), 1);
+        assert!(!has_op(&f, BinOp::Mul));
+        assert!(has_op(&f, BinOp::Shl));
+        assert_eq!(eval(&f, 5), 40);
+    }
+}

@@ -14,7 +14,7 @@
 //! (The dispatcher's predicate slot is itself an alloca that mem2reg later
 //! promotes into the phi + compare chain form.)
 
-use crate::ir::cfg::irreducible_back_edges;
+use crate::ir::cfg::irreducible_back_edges_with;
 use crate::ir::*;
 use std::collections::HashSet;
 
@@ -100,7 +100,8 @@ fn region_entries(f: &Function, region: &HashSet<BlockId>) -> Vec<BlockId> {
 pub fn run(f: &mut Function) -> StructurizeReport {
     let mut report = StructurizeReport::default();
     for _ in 0..64 {
-        let offending = irreducible_back_edges(f);
+        let dom = f.dom_tree();
+        let offending = irreducible_back_edges_with(f, &dom);
         let Some(&(_, m)) = offending.first() else {
             return report;
         };
@@ -118,6 +119,7 @@ pub fn run(f: &mut Function) -> StructurizeReport {
             );
         }
         dispatch_region(f, &entries);
+        f.invalidate_cfg_cache();
         report.dispatchers += 1;
         report.entries_routed += entries.len();
     }
