@@ -10,7 +10,7 @@
 use super::isa::{disasm, MachInst, Op};
 use super::mir::{MFunction, MReg, NONE};
 use super::{isel, mir_opt, regalloc, safety_net};
-use crate::ir::{AddrSpace, FuncId, GlobalId, Module};
+use crate::ir::{AddrSpace, FuncId, GlobalId, Loc, Module};
 use std::collections::HashMap;
 
 /// Typed back-end failure: which function (if known) and what went wrong.
@@ -80,6 +80,14 @@ pub struct ProgramImage {
     pub kernel: String,
     /// Function entry points (diagnostics).
     pub func_entries: HashMap<String, u32>,
+    /// Per-PC source locations (index == PC, parallel to `code`). Inside
+    /// each compiled function, PCs with no direct location inherit the
+    /// nearest located neighbour (standard line-table fill); crt0 PCs
+    /// (< `crt0_len`) are runtime startup code and carry `None`.
+    pub pc_loc: Vec<Option<Loc>>,
+    /// Length of the crt0 stub at the head of `code` — the boundary the
+    /// profiler uses to separate runtime startup from compiled kernels.
+    pub crt0_len: u32,
 }
 
 impl ProgramImage {
@@ -250,9 +258,32 @@ pub fn lower_function(
 struct FlatFunc {
     name: String,
     insts: Vec<MachInst>,
+    /// Source location per emitted instruction (parallel to `insts`).
+    locs: Vec<Option<Loc>>,
     /// (inst index, kind) fixups to resolve once bases are known.
     fixups: Vec<(usize, Fixup)>,
     block_offset: Vec<u32>,
+}
+
+/// Line-table fill: PCs without a direct source location inherit the
+/// nearest located instruction — forward first (the usual "still on the
+/// previous source line" reading), then backward for a located-code
+/// prefix (prologue/arg copies attribute to the first real line).
+fn fill_locs(locs: &mut [Option<Loc>]) {
+    let mut last: Option<Loc> = None;
+    for l in locs.iter_mut() {
+        match l {
+            Some(x) => last = Some(*x),
+            None => *l = last,
+        }
+    }
+    let mut next: Option<Loc> = None;
+    for l in locs.iter_mut().rev() {
+        match l {
+            Some(x) => next = Some(*x),
+            None => *l = next,
+        }
+    }
 }
 
 enum Fixup {
@@ -298,6 +329,7 @@ fn flatten(mf: &MFunction) -> FlatFunc {
     }
     // Second pass: emit.
     let mut insts: Vec<MachInst> = vec![];
+    let mut locs: Vec<Option<Loc>> = vec![];
     let mut fixups: Vec<(usize, Fixup)> = vec![];
     for bi in 0..nb {
         let b = &mf.blocks[bi];
@@ -346,6 +378,7 @@ fn flatten(mf: &MFunction) -> FlatFunc {
                 _ => {}
             }
             insts.push(mi);
+            locs.push(i.loc);
             // Fallthrough fix-up jump.
             if matches!(i.op, Op::SPLIT | Op::SPLITN | Op::PRED) {
                 let next_block = bi + 1;
@@ -358,15 +391,19 @@ fn flatten(mf: &MFunction) -> FlatFunc {
                         rs2: 0,
                         imm: 0,
                     });
+                    locs.push(i.loc);
                     fixups.push((jidx, Fixup::Branch(i.t1.unwrap())));
                 }
             }
             let _ = &mut mi;
         }
     }
+    debug_assert_eq!(insts.len(), locs.len());
+    fill_locs(&mut locs);
     FlatFunc {
         name: mf.name.clone(),
         insts,
+        locs,
         fixups,
         block_offset,
     }
@@ -452,10 +489,13 @@ pub fn build_image(
     })?;
     let args_addr_v = layout.addr[&GlobalId(args_probe as u32)];
     let (mut code, crt0_len) = build_crt0(args_addr_v);
+    // crt0 is runtime startup, not source code: no line-table entries.
+    let mut pc_loc: Vec<Option<Loc>> = vec![None; crt0_len];
     let mut func_entries: HashMap<String, u32> = HashMap::new();
     for fl in &flats {
         func_entries.insert(fl.name.clone(), code.len() as u32);
         code.extend(fl.insts.iter().cloned());
+        pc_loc.extend(fl.locs.iter().cloned());
     }
     if !func_entries.contains_key(dispatcher) {
         return Err(BackendError::new(
@@ -520,6 +560,8 @@ pub fn build_image(
         local_mem_size: local_mem.max(local_from_globals),
         kernel: dispatcher.to_string(),
         func_entries,
+        pc_loc,
+        crt0_len: crt0_len as u32,
     })
 }
 
@@ -569,6 +611,17 @@ kernel void saxpy(global float* x, global float* y, float a, int n) {
         assert_eq!(img.code[2].op, Op::WSPAWN);
         let dis = img.disassemble();
         assert!(dis.contains("vx_split"));
+        // Line table: parallel to code, empty over crt0, filled over the
+        // compiled functions (kernel body lines 3/4 of the source above).
+        assert_eq!(img.pc_loc.len(), img.code.len());
+        assert!(img.crt0_len > 0);
+        assert!(img.pc_loc[..img.crt0_len as usize].iter().all(|l| l.is_none()));
+        let body = &img.pc_loc[img.crt0_len as usize..];
+        assert!(body.iter().all(|l| l.is_some()), "line-table fill left gaps");
+        assert!(
+            body.iter().any(|l| l.map(|x| x.line) == Some(4)),
+            "kernel body line 4 missing from the line table"
+        );
     }
 
     #[test]

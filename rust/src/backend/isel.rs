@@ -155,7 +155,19 @@ pub fn select_function(
         ctx.cur = b.idx();
         let insts = f.blocks[b.idx()].insts.clone();
         for &id in &insts {
+            let loc = ctx.f.inst(id).loc;
+            let start = ctx.mf.blocks[ctx.cur].insts.len();
             ctx.lower(id);
+            // Everything this IR instruction selected into (including
+            // operand materialization and phi copies) inherits its
+            // source location.
+            if loc.is_some() {
+                for mi in ctx.mf.blocks[ctx.cur].insts[start..].iter_mut() {
+                    if mi.loc.is_none() {
+                        mi.loc = loc;
+                    }
+                }
+            }
         }
     }
     ctx.mf

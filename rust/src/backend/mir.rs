@@ -3,6 +3,7 @@
 //! emitter later resolves to instruction addresses.
 
 use super::isa::{is_float_reg, Op};
+use crate::ir::Loc;
 
 /// Machine register: `< 64` = physical (x0..x31, f0..f31), `>= 64` virtual.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
@@ -46,6 +47,11 @@ pub struct MInst {
     /// Layout swapped split arms without fixing negation — the Fig. 5(a)
     /// hazard marker the safety net repairs.
     pub swapped: bool,
+    /// Source location inherited from the IR instruction this was
+    /// selected from (`None` for selection/regalloc-synthesized code;
+    /// the emitter's line-table fill resolves those to the nearest
+    /// located neighbour).
+    pub loc: Option<Loc>,
 }
 
 impl MInst {
@@ -61,6 +67,7 @@ impl MInst {
             tjoin: None,
             callee: None,
             swapped: false,
+            loc: None,
         }
     }
     pub fn rrr(op: Op, rd: MReg, rs1: MReg, rs2: MReg) -> MInst {

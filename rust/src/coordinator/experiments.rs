@@ -6,6 +6,8 @@
 use super::benchmarks::{registry, Benchmark};
 use crate::backend::emit::SharedMemMapping;
 use crate::driver::{compile_program, VoltError, VoltOptions};
+use crate::prof::counters::StallBreakdown;
+use crate::prof::report::KernelProfile;
 use crate::runtime::VoltDevice;
 use crate::sim::{CacheConfig, SimConfig, SimStats};
 use crate::transform::OptLevel;
@@ -178,6 +180,114 @@ pub fn o3_cycle_sweep() -> Result<Vec<O3Row>, VoltError> {
         });
     }
     Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// volt::prof — per-kernel profiles and the suite-wide BENCH_profile.json
+// ---------------------------------------------------------------------------
+
+/// Run one benchmark with the profiler attached; returns the usual
+/// [`RunResult`] plus one [`KernelProfile`] per launch the validator
+/// performed.
+pub fn profile_bench(
+    b: &Benchmark,
+    opt: OptLevel,
+) -> Result<(RunResult, Vec<KernelProfile>), VoltError> {
+    let sim_cfg = SimConfig::default();
+    let opts = bench_options(b, opt, true, SharedMemMapping::Local, sim_cfg);
+    let prog = compile_program(b.source, &opts)?;
+    let mut dev = VoltDevice::new(prog.image.clone(), sim_cfg);
+    dev.profiling = true;
+    (b.run)(&mut dev).map_err(|msg| VoltError::Validation {
+        msg: format!("{} @ {:?}: {msg}", b.name, opt),
+    })?;
+    let profiles = dev.take_profiles();
+    Ok((
+        RunResult {
+            stats: dev.total_stats,
+            compile_ms: prog.timings.total_ms(),
+            middle_ms: prog.timings.middle_ms,
+            code_size: prog.image.code.len(),
+        },
+        profiles,
+    ))
+}
+
+/// One row of the profile sweep (aggregated over a benchmark's launches).
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub launches: usize,
+    pub cycles: u64,
+    pub instrs: u64,
+    pub ipc: f64,
+    /// Cycle-weighted average occupancy over launches.
+    pub occupancy_pct: f64,
+    pub stalls: StallBreakdown,
+    /// Executed-PC source-line coverage (distinct PCs, crt0 excluded).
+    pub mapped_pct: f64,
+    pub l1_hit_rate: f64,
+    pub l2_hit_rate: f64,
+    /// Hottest source line across all launches: (line, cycles).
+    pub hot_line: Option<(u32, u64)>,
+}
+
+/// Profile every kernel in the registry at `opt` (validators run under
+/// the profiler) — the raw material of `BENCH_profile.json`.
+pub fn profile_sweep(opt: OptLevel) -> Result<Vec<ProfileRow>, VoltError> {
+    let mut rows = vec![];
+    for b in registry() {
+        let (r, profiles) = profile_bench(&b, opt)?;
+        let mut stalls = StallBreakdown::default();
+        let mut occ_weighted = 0.0f64;
+        let mut mapped = 0u64;
+        let mut executed = 0u64;
+        let mut lines: std::collections::HashMap<u32, u64> = Default::default();
+        for p in &profiles {
+            stalls.add(&p.stalls);
+            occ_weighted += p.occupancy_pct * p.cycles as f64;
+            mapped += p.pc_mapped;
+            executed += p.pc_executed;
+            for (l, c) in &p.hot_lines {
+                *lines.entry(*l).or_insert(0) += c;
+            }
+        }
+        let mut hot: Vec<(u32, u64)> = lines.into_iter().collect();
+        hot.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let s = &r.stats;
+        rows.push(ProfileRow {
+            name: b.name,
+            suite: b.suite,
+            launches: profiles.len(),
+            cycles: s.cycles,
+            instrs: s.instrs,
+            ipc: s.ipc(),
+            occupancy_pct: if s.cycles > 0 {
+                occ_weighted / s.cycles as f64
+            } else {
+                0.0
+            },
+            stalls,
+            mapped_pct: if executed > 0 {
+                mapped as f64 / executed as f64 * 100.0
+            } else {
+                100.0
+            },
+            l1_hit_rate: pct(s.l1_hits, s.l1_hits + s.l1_misses),
+            l2_hit_rate: pct(s.l2_hits, s.l2_hits + s.l2_misses),
+            hot_line: hot.first().copied(),
+        });
+    }
+    Ok(rows)
+}
+
+fn pct(num: u64, denom: u64) -> f64 {
+    if denom == 0 {
+        0.0
+    } else {
+        num as f64 / denom as f64 * 100.0
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -12,16 +12,27 @@ fn fmt_row(cells: &[String], widths: &[usize]) -> String {
     s.trim_end().to_string()
 }
 
+/// Column layout for the fig7/fig8 ladder tables, derived entirely from
+/// `OptLevel::LADDER`: one column per rung, each wide enough for the
+/// rung's name. Adding the next rung changes nothing here.
+fn ladder_widths() -> Vec<usize> {
+    std::iter::once(14usize)
+        .chain(OptLevel::LADDER.iter().map(|l| l.name().len().max(9)))
+        .collect()
+}
+
+fn ladder_header() -> Vec<String> {
+    std::iter::once("benchmark".to_string())
+        .chain(OptLevel::LADDER.iter().map(|l| l.name().to_string()))
+        .collect()
+}
+
 pub fn render_ladder_fig7(rows: &[LadderRow]) -> String {
     let mut out = String::from(
         "Figure 7 — instruction reduction factor vs Base (higher is better)\n",
     );
-    let mut header = vec!["benchmark".to_string()];
-    header.extend(OptLevel::LADDER.iter().map(|l| l.name().to_string()));
-    let widths: Vec<usize> = std::iter::once(14usize)
-        .chain(std::iter::repeat(9).take(OptLevel::LADDER.len()))
-        .collect();
-    out.push_str(&fmt_row(&header, &widths));
+    let widths = ladder_widths();
+    out.push_str(&fmt_row(&ladder_header(), &widths));
     out.push('\n');
     for r in rows {
         let mut cells = vec![r.name.to_string()];
@@ -36,12 +47,8 @@ pub fn render_ladder_fig7(rows: &[LadderRow]) -> String {
 
 pub fn render_ladder_fig8(rows: &[LadderRow]) -> String {
     let mut out = String::from("Figure 8 — speedup vs Base (higher is better)\n");
-    let mut header = vec!["benchmark".to_string()];
-    header.extend(OptLevel::LADDER.iter().map(|l| l.name().to_string()));
-    let widths: Vec<usize> = std::iter::once(14usize)
-        .chain(std::iter::repeat(9).take(OptLevel::LADDER.len()))
-        .collect();
-    out.push_str(&fmt_row(&header, &widths));
+    let widths = ladder_widths();
+    out.push_str(&fmt_row(&ladder_header(), &widths));
     out.push('\n');
     for r in rows {
         let mut cells = vec![r.name.to_string()];
@@ -220,6 +227,102 @@ pub fn json_o3_cycles(rows: &[O3Row]) -> String {
     s
 }
 
+pub fn render_profile_sweep(rows: &[ProfileRow]) -> String {
+    let mut out = String::from(
+        "volt::prof sweep — per-kernel cycle attribution (latency-weighted)\n",
+    );
+    let widths = [14usize, 10, 8, 6, 6, 6, 6, 6, 6, 6, 7, 10];
+    out.push_str(&fmt_row(
+        &[
+            "benchmark".into(),
+            "cycles".into(),
+            "IPC".into(),
+            "occ%".into(),
+            "iss%".into(),
+            "mem%".into(),
+            "sb%".into(),
+            "bar%".into(),
+            "div%".into(),
+            "idle%".into(),
+            "map%".into(),
+            "hot-line".into(),
+        ],
+        &widths,
+    ));
+    out.push('\n');
+    for r in rows {
+        let t = r.stalls.total().max(1) as f64;
+        let pct = |v: u64| format!("{:.1}", v as f64 / t * 100.0);
+        out.push_str(&fmt_row(
+            &[
+                r.name.to_string(),
+                r.cycles.to_string(),
+                format!("{:.3}", r.ipc),
+                format!("{:.1}", r.occupancy_pct),
+                pct(r.stalls.issue),
+                pct(r.stalls.memory),
+                pct(r.stalls.scoreboard),
+                pct(r.stalls.barrier),
+                pct(r.stalls.divergence),
+                pct(r.stalls.no_active_warp),
+                format!("{:.1}", r.mapped_pct),
+                match r.hot_line {
+                    Some((l, _)) => format!("L{l}"),
+                    None => "-".into(),
+                },
+            ],
+            &widths,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+/// Machine-readable serialization of the profile sweep
+/// (`BENCH_profile.json`). Hand-rolled JSON: the offline build has no
+/// serde. Schema documented in `docs/PROFILING.md`.
+pub fn json_profile(rows: &[ProfileRow], level: OptLevel) -> String {
+    let mut s = format!(
+        "{{\n  \"level\": \"{}\",\n  \"kernels\": [\n",
+        level.name()
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let st = &r.stalls;
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"suite\": \"{}\", \"launches\": {}, \
+             \"cycles\": {}, \"instrs\": {}, \"ipc\": {:.6}, \
+             \"occupancy_pct\": {:.3}, \"mapped_pct\": {:.3}, \
+             \"l1_hit_rate\": {:.3}, \"l2_hit_rate\": {:.3}, \
+             \"stalls\": {{\"issue\": {}, \"no_active_warp\": {}, \
+             \"scoreboard\": {}, \"barrier\": {}, \"memory\": {}, \
+             \"divergence\": {}}}, \"hot_line\": {}}}{}\n",
+            r.name,
+            r.suite,
+            r.launches,
+            r.cycles,
+            r.instrs,
+            r.ipc,
+            r.occupancy_pct,
+            r.mapped_pct,
+            r.l1_hit_rate,
+            r.l2_hit_rate,
+            st.issue,
+            st.no_active_warp,
+            st.scoreboard,
+            st.barrier,
+            st.memory,
+            st.divergence,
+            match r.hot_line {
+                Some((l, c)) => format!("{{\"line\": {l}, \"cycles\": {c}}}"),
+                None => "null".into(),
+            },
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 pub fn render_validation(rows: &[ValidationRow]) -> String {
     let mut out = String::from("§5.1 coverage — correctness across the ladder\n");
     for r in rows {
@@ -320,5 +423,54 @@ mod tests {
         assert!(j.contains("\"geomean_cycle_reduction\""));
         // Exactly one comma-separated kernel boundary (2 entries).
         assert_eq!(j.matches("},").count(), 1);
+    }
+
+    #[test]
+    fn ladder_widths_track_the_ladder() {
+        // One column per rung plus the benchmark column, each wide enough
+        // for the rung name — the next rung needs no width fix.
+        let w = ladder_widths();
+        assert_eq!(w.len(), OptLevel::LADDER.len() + 1);
+        for (lvl, width) in OptLevel::LADDER.iter().zip(&w[1..]) {
+            assert!(*width >= lvl.name().len());
+        }
+        let h = ladder_header();
+        assert_eq!(h.len(), w.len());
+        assert_eq!(h[0], "benchmark");
+    }
+
+    #[test]
+    fn profile_sweep_render_and_json() {
+        use crate::prof::counters::StallBreakdown;
+        let rows = vec![ProfileRow {
+            name: "saxpy",
+            suite: "sdk",
+            launches: 1,
+            cycles: 1000,
+            instrs: 400,
+            ipc: 0.4,
+            occupancy_pct: 55.0,
+            stalls: StallBreakdown {
+                issue: 400,
+                no_active_warp: 100,
+                scoreboard: 200,
+                barrier: 0,
+                memory: 250,
+                divergence: 50,
+            },
+            mapped_pct: 97.5,
+            l1_hit_rate: 88.0,
+            l2_hit_rate: 60.0,
+            hot_line: Some((4, 720)),
+        }];
+        let t = render_profile_sweep(&rows);
+        assert!(t.contains("saxpy"));
+        assert!(t.contains("L4"));
+        let j = json_profile(&rows, OptLevel::O3);
+        crate::prof::trace::validate_json(&j)
+            .unwrap_or_else(|e| panic!("BENCH_profile.json invalid: {e}\n{j}"));
+        assert!(j.contains("\"level\": \"O3\""));
+        assert!(j.contains("\"memory\": 250"));
+        assert!(j.contains("\"hot_line\": {\"line\": 4, \"cycles\": 720}"));
     }
 }

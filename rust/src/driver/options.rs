@@ -35,6 +35,12 @@ pub struct VoltOptions {
     pub verify_ir: bool,
     /// Keep compiled binaries in the session's content-addressed cache.
     pub cache: bool,
+    /// Run every launch under the `volt::prof` profiler: streams created
+    /// from this session collect a per-launch
+    /// [`crate::prof::KernelProfile`]. Pure observation — cycle counts
+    /// and results are bit-identical with it on or off — and it does not
+    /// affect the produced binary (excluded from the cache fingerprint).
+    pub profiling: bool,
     /// Device geometry streams created from this session will use.
     pub sim: SimConfig,
 }
@@ -53,6 +59,7 @@ impl Default for VoltOptions {
             smem: SharedMemMapping::Local,
             verify_ir: false,
             cache: true,
+            profiling: false,
             sim: SimConfig::default(),
         }
     }
@@ -165,6 +172,12 @@ impl VoltOptionsBuilder {
     }
     pub fn cache(mut self, on: bool) -> Self {
         self.opts.cache = on;
+        self
+    }
+    /// Collect a per-launch [`crate::prof::KernelProfile`] on streams
+    /// created from this session.
+    pub fn profiling(mut self, on: bool) -> Self {
+        self.opts.profiling = on;
         self
     }
     pub fn sim(mut self, cfg: SimConfig) -> Self {

@@ -122,9 +122,10 @@ impl Session {
     }
 
     /// Create a command stream executing `program` on a fresh device with
-    /// this session's simulator geometry.
+    /// this session's simulator geometry (and profiler, when
+    /// [`VoltOptions::profiling`] is set).
     pub fn create_stream(&self, program: &Arc<Program>) -> Stream {
-        Stream::new(program.clone(), self.opts.sim)
+        Stream::with_profiling(program.clone(), self.opts.sim, self.opts.profiling)
     }
 
     pub fn cache_stats(&self) -> CacheStats {

@@ -15,6 +15,7 @@
 
 use super::error::VoltError;
 use super::session::Program;
+use crate::prof::report::KernelProfile;
 use crate::runtime::{ArgValue, DevicePtr, VoltDevice};
 use crate::sim::{SimConfig, SimStats};
 use std::collections::VecDeque;
@@ -111,7 +112,15 @@ static NEXT_STREAM_ID: AtomicU64 = AtomicU64::new(1);
 
 impl Stream {
     pub fn new(program: Arc<Program>, cfg: SimConfig) -> Stream {
-        let dev = VoltDevice::new(program.image.clone(), cfg);
+        Stream::with_profiling(program, cfg, false)
+    }
+
+    /// Stream whose launches run under the `volt::prof` profiler,
+    /// collecting one [`KernelProfile`] per launch (see
+    /// [`Stream::profiles`]). Profiling never perturbs device timing.
+    pub fn with_profiling(program: Arc<Program>, cfg: SimConfig, profiling: bool) -> Stream {
+        let mut dev = VoltDevice::new(program.image.clone(), cfg);
+        dev.profiling = profiling;
         Stream {
             id: NEXT_STREAM_ID.fetch_add(1, Ordering::Relaxed),
             program,
@@ -369,6 +378,29 @@ impl Stream {
     /// Cumulative device statistics over all launches on this stream.
     pub fn stats(&self) -> &SimStats {
         &self.dev.total_stats
+    }
+
+    /// Per-launch kernel profiles, in launch order. Empty unless the
+    /// stream was created with profiling on
+    /// ([`crate::driver::VoltOptions::profiling`] /
+    /// [`Stream::with_profiling`]).
+    pub fn profiles(&self) -> &[KernelProfile] {
+        &self.dev.profiles
+    }
+
+    /// Drain the collected kernel profiles (bounds memory on long-lived
+    /// profiled streams).
+    pub fn take_profiles(&mut self) -> Vec<KernelProfile> {
+        self.dev.take_profiles()
+    }
+
+    /// chrome://tracing JSON over everything this stream executed: one
+    /// slice per command (from the event cycle stamps), one track per
+    /// core and a warp-occupancy counter track (from the per-launch
+    /// profiles, when profiling is on). Load in `chrome://tracing` or
+    /// Perfetto; 1 simulated cycle = 1 µs.
+    pub fn chrome_trace(&self) -> String {
+        crate::prof::trace::chrome_trace(&self.events, &self.dev.profiles)
     }
 
     /// Escape hatch to the underlying synchronous device (advanced /

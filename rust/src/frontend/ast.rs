@@ -1,6 +1,16 @@
 //! Abstract syntax tree for the VCL kernel language (OpenCL-C / CUDA-C
 //! subset, paper §4.2).
 
+/// Source position of a statement: 1-based (line, col) of its first
+/// token. Lowering stamps it onto every IR instruction the statement
+/// produces ([`crate::ir::Loc`]) — the root of the profiler's PC→source
+/// mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct SrcLoc {
+    pub line: u32,
+    pub col: u32,
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TypeSpec {
     Void,
@@ -77,45 +87,45 @@ pub enum Stmt {
         dims: Vec<u32>,
         init: Option<Expr>,
         uniform: bool,
-        line: u32,
+        loc: SrcLoc,
     },
     /// `lhs op= rhs` (op None = plain assignment).
     Assign {
         lhs: Expr,
         op: Option<BinAst>,
         rhs: Expr,
-        line: u32,
+        loc: SrcLoc,
     },
     If {
         cond: Expr,
         then_s: Vec<Stmt>,
         else_s: Vec<Stmt>,
-        line: u32,
+        loc: SrcLoc,
     },
     While {
         cond: Expr,
         body: Vec<Stmt>,
-        line: u32,
+        loc: SrcLoc,
     },
     DoWhile {
         body: Vec<Stmt>,
         cond: Expr,
-        line: u32,
+        loc: SrcLoc,
     },
     For {
         init: Option<Box<Stmt>>,
         cond: Option<Expr>,
         step: Option<Box<Stmt>>,
         body: Vec<Stmt>,
-        line: u32,
+        loc: SrcLoc,
     },
-    Break(u32),
-    Continue(u32),
-    Return(Option<Expr>, u32),
-    ExprStmt(Expr, u32),
+    Break(SrcLoc),
+    Continue(SrcLoc),
+    Return(Option<Expr>, SrcLoc),
+    ExprStmt(Expr, SrcLoc),
     Block(Vec<Stmt>),
-    Goto(String, u32),
-    Label(String, u32),
+    Goto(String, SrcLoc),
+    Label(String, SrcLoc),
 }
 
 #[derive(Clone, Debug)]

@@ -58,6 +58,8 @@ pub enum Tok {
 pub struct Token {
     pub tok: Tok,
     pub line: u32,
+    /// 1-based column of the token's first character.
+    pub col: u32,
 }
 
 #[derive(Debug)]
@@ -71,13 +73,17 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
     let b: Vec<char> = src.chars().collect();
     let mut i = 0;
     let mut line: u32 = 1;
+    // Char index where the current line starts (for 1-based columns).
+    let mut line_start: usize = 0;
     let n = b.len();
     while i < n {
         let c = b[i];
+        let col = (i - line_start) as u32 + 1;
         match c {
             '\n' => {
                 line += 1;
                 i += 1;
+                line_start = i;
             }
             ' ' | '\t' | '\r' => i += 1,
             '/' if i + 1 < n && b[i + 1] == '/' => {
@@ -90,6 +96,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
                 while i + 1 < n && !(b[i] == '*' && b[i + 1] == '/') {
                     if b[i] == '\n' {
                         line += 1;
+                        line_start = i + 1;
                     }
                     i += 1;
                 }
@@ -103,6 +110,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
                 out.push(Token {
                     tok: Tok::Ident(b[s..i].iter().collect()),
                     line,
+                    col,
                 });
             }
             c if c.is_ascii_digit() => {
@@ -121,6 +129,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
                     out.push(Token {
                         tok: Tok::Int(v),
                         line,
+                        col,
                     });
                     continue;
                 }
@@ -157,6 +166,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
                     out.push(Token {
                         tok: Tok::Float(v),
                         line,
+                        col,
                     });
                 } else {
                     // unsigned suffix (1u / 1U) — type is tracked by decls.
@@ -170,6 +180,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
                     out.push(Token {
                         tok: Tok::Int(v),
                         line,
+                        col,
                     });
                 }
             }
@@ -255,7 +266,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
                     };
                     (t, 1)
                 };
-                out.push(Token { tok, line });
+                out.push(Token { tok, line, col });
                 i += len;
             }
         }
@@ -263,6 +274,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
     out.push(Token {
         tok: Tok::Eof,
         line,
+        col: (i - line_start) as u32 + 1,
     });
     Ok(out)
 }
@@ -297,6 +309,19 @@ mod tests {
         let toks = lex("a\n/* x\ny */ b").unwrap();
         assert_eq!(toks[0].line, 1);
         assert_eq!(toks[1].line, 3);
+    }
+
+    #[test]
+    fn tracks_columns() {
+        let toks = lex("ab + c\n  xy = 3").unwrap();
+        // "ab" col 1, "+" col 4, "c" col 6.
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (1, 4));
+        assert_eq!((toks[2].line, toks[2].col), (1, 6));
+        // Second line: "xy" at col 3 (two leading spaces).
+        assert_eq!((toks[3].line, toks[3].col), (2, 3));
+        assert_eq!(toks[4].tok, Tok::Assign);
+        assert_eq!(toks[4].col, 6);
     }
 
     #[test]

@@ -180,6 +180,7 @@ pub fn compile(src: &str, opts: &FrontendOptions) -> Result<Module, CompileError
         };
         let mut f = Function::new(&fd.name, params, ret);
         f.is_kernel = fd.is_kernel;
+        f.src_line = fd.line;
         f.linkage = if fd.is_kernel {
             Linkage::External
         } else {
@@ -209,6 +210,10 @@ pub fn compile(src: &str, opts: &FrontendOptions) -> Result<Module, CompileError
             terminated: false,
             cur: crate::ir::BlockId(0),
             local_counter: 0,
+            cur_loc: SrcLoc {
+                line: fd.line,
+                col: 0,
+            },
         };
         lower.run()?;
     }
@@ -246,6 +251,9 @@ struct FnLower<'a> {
     terminated: bool,
     cur: crate::ir::BlockId,
     local_counter: u32,
+    /// Source position of the statement being lowered; stamped onto every
+    /// emitted instruction (the profiler's PC→source root).
+    cur_loc: SrcLoc,
 }
 
 type LResult<T> = Result<T, CompileError>;
@@ -264,7 +272,15 @@ impl<'a> FnLower<'a> {
 
     fn emit(&mut self, kind: InstKind, ty: Type) -> Val {
         let cur = self.cur;
-        Val::Inst(self.f().push_inst(cur, kind, ty))
+        let loc = self.cur_loc;
+        let id = self.f().push_inst(cur, kind, ty);
+        if loc.line != 0 {
+            self.f().inst_mut(id).loc = Some(crate::ir::Loc {
+                line: loc.line,
+                col: loc.col,
+            });
+        }
+        Val::Inst(id)
     }
 
     fn new_block(&mut self, name: &str) -> crate::ir::BlockId {
@@ -368,20 +384,22 @@ impl<'a> FnLower<'a> {
                 dims,
                 init,
                 uniform,
-                line,
-            } => self.decl(*ty, *space, *is_ptr, name, dims, init.as_ref(), *uniform, *line),
-            Stmt::Assign { lhs, op, rhs, line } => self.assign(lhs, *op, rhs, *line),
-            Stmt::ExprStmt(e, line) => {
+                loc,
+            } => self.decl(*ty, *space, *is_ptr, name, dims, init.as_ref(), *uniform, *loc),
+            Stmt::Assign { lhs, op, rhs, loc } => self.assign(lhs, *op, rhs, *loc),
+            Stmt::ExprStmt(e, loc) => {
+                self.cur_loc = *loc;
                 self.ensure_open();
-                self.expr(e, *line)?;
+                self.expr(e, loc.line)?;
                 Ok(())
             }
-            Stmt::Return(v, line) => {
+            Stmt::Return(v, loc) => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 let ret_ty = self.module.funcs[self.fid.idx()].ret;
                 let val = match v {
                     Some(e) => {
-                        let (val, vty) = self.expr(e, *line)?;
+                        let (val, vty) = self.expr(e, loc.line)?;
                         let want = match ret_ty {
                             Type::F32 => VTy::F32,
                             Type::I1 => VTy::Bool,
@@ -392,7 +410,7 @@ impl<'a> FnLower<'a> {
                     None => None,
                 };
                 if ret_ty != Type::Void && val.is_none() {
-                    return self.err(*line, "missing return value");
+                    return self.err(loc.line, "missing return value");
                 }
                 self.emit(InstKind::Ret { val }, Type::Void);
                 self.terminated = true;
@@ -402,10 +420,11 @@ impl<'a> FnLower<'a> {
                 cond,
                 then_s,
                 else_s,
-                line,
+                loc,
             } => {
+                self.cur_loc = *loc;
                 self.ensure_open();
-                let c = self.cond_value(cond, *line)?;
+                let c = self.cond_value(cond, loc.line)?;
                 let then_b = self.new_block("if.then");
                 let else_b = self.new_block("if.else");
                 let join = self.new_block("if.join");
@@ -434,14 +453,15 @@ impl<'a> FnLower<'a> {
                 self.switch(join);
                 Ok(())
             }
-            Stmt::While { cond, body, line } => {
+            Stmt::While { cond, body, loc } => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 let head = self.new_block("wh.head");
                 let body_b = self.new_block("wh.body");
                 let exit = self.new_block("wh.exit");
                 self.emit(InstKind::Br { target: head }, Type::Void);
                 self.switch(head);
-                let c = self.cond_value(cond, *line)?;
+                let c = self.cond_value(cond, loc.line)?;
                 self.emit(
                     InstKind::CondBr {
                         cond: c,
@@ -462,7 +482,8 @@ impl<'a> FnLower<'a> {
                 self.switch(exit);
                 Ok(())
             }
-            Stmt::DoWhile { body, cond, line } => {
+            Stmt::DoWhile { body, cond, loc } => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 let body_b = self.new_block("do.body");
                 let cond_b = self.new_block("do.cond");
@@ -478,7 +499,8 @@ impl<'a> FnLower<'a> {
                     self.emit(InstKind::Br { target: cond_b }, Type::Void);
                 }
                 self.switch(cond_b);
-                let c = self.cond_value(cond, *line)?;
+                self.cur_loc = *loc;
+                let c = self.cond_value(cond, loc.line)?;
                 self.emit(
                     InstKind::CondBr {
                         cond: c,
@@ -495,8 +517,9 @@ impl<'a> FnLower<'a> {
                 cond,
                 step,
                 body,
-                line,
+                loc,
             } => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 self.scopes.push(HashMap::new());
                 if let Some(i) = init {
@@ -508,8 +531,9 @@ impl<'a> FnLower<'a> {
                 let exit = self.new_block("for.exit");
                 self.emit(InstKind::Br { target: head }, Type::Void);
                 self.switch(head);
+                self.cur_loc = *loc;
                 let c = match cond {
-                    Some(c) => self.cond_value(c, *line)?,
+                    Some(c) => self.cond_value(c, loc.line)?,
                     None => Val::cb(true),
                 };
                 self.emit(
@@ -538,7 +562,8 @@ impl<'a> FnLower<'a> {
                 self.scopes.pop();
                 Ok(())
             }
-            Stmt::Break(line) => {
+            Stmt::Break(loc) => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 match self.loop_stack.last() {
                     Some(&(_, brk)) => {
@@ -546,10 +571,11 @@ impl<'a> FnLower<'a> {
                         self.terminated = true;
                         Ok(())
                     }
-                    None => self.err(*line, "break outside loop"),
+                    None => self.err(loc.line, "break outside loop"),
                 }
             }
-            Stmt::Continue(line) => {
+            Stmt::Continue(loc) => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 match self.loop_stack.last() {
                     Some(&(cont, _)) => {
@@ -557,10 +583,11 @@ impl<'a> FnLower<'a> {
                         self.terminated = true;
                         Ok(())
                     }
-                    None => self.err(*line, "continue outside loop"),
+                    None => self.err(loc.line, "continue outside loop"),
                 }
             }
-            Stmt::Goto(name, line) => {
+            Stmt::Goto(name, loc) => {
+                self.cur_loc = *loc;
                 self.ensure_open();
                 match self.labels.get(name) {
                     Some(&b) => {
@@ -568,10 +595,10 @@ impl<'a> FnLower<'a> {
                         self.terminated = true;
                         Ok(())
                     }
-                    None => self.err(*line, format!("undefined label '{name}'")),
+                    None => self.err(loc.line, format!("undefined label '{name}'")),
                 }
             }
-            Stmt::Label(name, _line) => {
+            Stmt::Label(name, _loc) => {
                 let b = self.labels[name];
                 if !self.terminated {
                     self.emit(InstKind::Br { target: b }, Type::Void);
@@ -592,8 +619,10 @@ impl<'a> FnLower<'a> {
         dims: &[u32],
         init: Option<&Expr>,
         uniform: bool,
-        line: u32,
+        loc: SrcLoc,
     ) -> LResult<()> {
+        self.cur_loc = loc;
+        let line = loc.line;
         self.ensure_open();
         if ty == TypeSpec::Void && !is_ptr {
             return self.err(line, "cannot declare void variable");
@@ -657,7 +686,9 @@ impl<'a> FnLower<'a> {
         Ok(())
     }
 
-    fn assign(&mut self, lhs: &Expr, op: Option<BinAst>, rhs: &Expr, line: u32) -> LResult<()> {
+    fn assign(&mut self, lhs: &Expr, op: Option<BinAst>, rhs: &Expr, loc: SrcLoc) -> LResult<()> {
+        self.cur_loc = loc;
+        let line = loc.line;
         self.ensure_open();
         let (ptr, elem_ty, uniform) = self.lvalue(lhs, line)?;
         let (rv, rt) = self.expr(rhs, line)?;

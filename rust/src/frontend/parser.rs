@@ -52,6 +52,13 @@ impl Parser {
     fn line(&self) -> u32 {
         self.toks[self.pos].line
     }
+    fn loc(&self) -> SrcLoc {
+        let t = &self.toks[self.pos];
+        SrcLoc {
+            line: t.line,
+            col: t.col,
+        }
+    }
     fn next(&mut self) -> Tok {
         let t = self.toks[self.pos].tok.clone();
         self.pos += 1;
@@ -275,7 +282,7 @@ impl Parser {
     }
 
     fn stmt(&mut self) -> Result<Stmt, ParseError> {
-        let line = self.line();
+        let loc = self.loc();
         match self.peek().clone() {
             Tok::LBrace => {
                 self.next();
@@ -301,7 +308,7 @@ impl Parser {
                         cond,
                         then_s,
                         else_s,
-                        line,
+                        loc,
                     })
                 }
                 "while" => {
@@ -310,7 +317,7 @@ impl Parser {
                     let cond = self.expr()?;
                     self.expect(Tok::RParen)?;
                     let body = vec![self.stmt()?];
-                    Ok(Stmt::While { cond, body, line })
+                    Ok(Stmt::While { cond, body, loc })
                 }
                 "do" => {
                     self.next();
@@ -322,7 +329,7 @@ impl Parser {
                     let cond = self.expr()?;
                     self.expect(Tok::RParen)?;
                     self.expect(Tok::Semi)?;
-                    Ok(Stmt::DoWhile { body, cond, line })
+                    Ok(Stmt::DoWhile { body, cond, loc })
                 }
                 "for" => {
                     self.next();
@@ -353,18 +360,18 @@ impl Parser {
                         cond,
                         step,
                         body,
-                        line,
+                        loc,
                     })
                 }
                 "break" => {
                     self.next();
                     self.expect(Tok::Semi)?;
-                    Ok(Stmt::Break(line))
+                    Ok(Stmt::Break(loc))
                 }
                 "continue" => {
                     self.next();
                     self.expect(Tok::Semi)?;
-                    Ok(Stmt::Continue(line))
+                    Ok(Stmt::Continue(loc))
                 }
                 "return" => {
                     self.next();
@@ -374,13 +381,13 @@ impl Parser {
                         Some(self.expr()?)
                     };
                     self.expect(Tok::Semi)?;
-                    Ok(Stmt::Return(v, line))
+                    Ok(Stmt::Return(v, loc))
                 }
                 "goto" => {
                     self.next();
                     let l = self.ident()?;
                     self.expect(Tok::Semi)?;
-                    Ok(Stmt::Goto(l, line))
+                    Ok(Stmt::Goto(l, loc))
                 }
                 _ => {
                     // Label?  ident ':'
@@ -390,7 +397,7 @@ impl Parser {
                     {
                         self.next();
                         self.next();
-                        return Ok(Stmt::Label(s, line));
+                        return Ok(Stmt::Label(s, loc));
                     }
                     let st = self.simple_stmt()?;
                     self.expect(Tok::Semi)?;
@@ -407,7 +414,7 @@ impl Parser {
 
     /// Declaration, assignment, inc/dec or expression — no trailing ';'.
     fn simple_stmt(&mut self) -> Result<Stmt, ParseError> {
-        let line = self.line();
+        let loc = self.loc();
         if self.starts_decl() {
             let mut uniform = false;
             let mut space = SpaceSpec::Default;
@@ -451,7 +458,7 @@ impl Parser {
                 dims,
                 init,
                 uniform,
-                line,
+                loc,
             })
         } else {
             let e = self.expr()?;
@@ -473,7 +480,7 @@ impl Parser {
                         lhs: e.clone(),
                         op: Some(BinAst::Add),
                         rhs: Expr::Int(1),
-                        line,
+                        loc,
                     });
                 }
                 Tok::MinusMinus => {
@@ -482,7 +489,7 @@ impl Parser {
                         lhs: e.clone(),
                         op: Some(BinAst::Sub),
                         rhs: Expr::Int(1),
-                        line,
+                        loc,
                     });
                 }
                 _ => None,
@@ -495,10 +502,10 @@ impl Parser {
                         lhs: e,
                         op,
                         rhs,
-                        line,
+                        loc,
                     })
                 }
-                None => Ok(Stmt::ExprStmt(e, line)),
+                None => Ok(Stmt::ExprStmt(e, loc)),
             }
         }
     }

@@ -106,6 +106,7 @@ pub fn build_dispatcher(m: &mut Module, kernel: FuncId) -> Result<KernelInfo, Co
         .map(|p| (p.name.clone(), p.ty))
         .collect();
     let (uses_barrier, local_mem) = kernel_traits(m, kernel);
+    let kernel_line = m.func(kernel).src_line;
     let args_g = ensure_args_global(m, params.len());
     // Demote the kernel.
     {
@@ -200,6 +201,16 @@ pub fn build_dispatcher(m: &mut Module, kernel: FuncId) -> Result<KernelInfo, Co
     if let Val::Inst(bp) = bphi {
         if let InstKind::Phi { incs } = &mut f.inst_mut(bp).kind {
             incs.push((sync, bnext));
+        }
+    }
+    // The schedule arithmetic is synthesized, not source code; attribute
+    // it to the kernel's declaration line so profiler cycles spent in the
+    // dispatch loop show up against the kernel signature instead of
+    // vanishing from the line table.
+    f.src_line = kernel_line;
+    if kernel_line != 0 {
+        for inst in f.insts.iter_mut() {
+            inst.loc = Some(Loc::line(kernel_line));
         }
     }
     let disp = m.add_func(f);
@@ -304,12 +315,15 @@ fn rewrite_workitems(f: &mut Function, env: &WorkItemEnv) -> Result<(), CompileE
             return Ok(());
         };
         let bid = f.inst(site).block;
+        let site_loc = f.inst(site).loc;
         let mut pos = f.blocks[bid.idx()].insts.iter().position(|&x| x == site).unwrap();
-        // Helpers to insert arithmetic before the site.
+        // Helpers to insert arithmetic before the site; the expansion
+        // inherits the work-item query's source location.
         let mut ins = |f: &mut Function, kind: InstKind, ty: Type| -> Val {
-            let v = Val::Inst(f.insert_inst(bid, pos, kind, ty));
+            let id = f.insert_inst(bid, pos, kind, ty);
+            f.inst_mut(id).loc = site_loc;
             pos += 1;
-            v
+            Val::Inst(id)
         };
         let bin = |f: &mut Function,
                    ins: &mut dyn FnMut(&mut Function, InstKind, Type) -> Val,

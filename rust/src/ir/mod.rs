@@ -62,6 +62,27 @@ impl GlobalId {
 }
 
 // ---------------------------------------------------------------------------
+// Source locations
+// ---------------------------------------------------------------------------
+
+/// A kernel-source location carried from the front-end through every
+/// middle-end pass onto MIR and finally into the per-PC line table of the
+/// linked image ([`crate::backend::emit::ProgramImage::pc_loc`]) — the
+/// substrate of the `volt::prof` cycle-attribution profiler. Lines and
+/// columns are 1-based; `col == 0` means "line known, column not".
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Loc {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Loc {
+    pub fn line(line: u32) -> Loc {
+        Loc { line, col: 0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Types
 // ---------------------------------------------------------------------------
 
@@ -610,6 +631,12 @@ pub struct InstData {
     pub uniform_ann: bool,
     /// Source-level name hint (for printing and debugging).
     pub name: Option<String>,
+    /// Source location this instruction was lowered from (`None` for
+    /// compiler-synthesized code). Transforms that move or rewrite
+    /// instructions in place preserve it for free since it lives on the
+    /// arena entry; passes that *clone* instructions (inlining) copy it
+    /// explicitly.
+    pub loc: Option<Loc>,
     /// Tombstone: true once removed.
     pub dead: bool,
 }
@@ -657,6 +684,10 @@ pub struct Function {
     pub entry: BlockId,
     /// Bytes of `__shared__`/`local` memory statically required.
     pub local_mem_size: u32,
+    /// Source line of the declaration this function was lowered from
+    /// (0 = synthesized). Dispatchers inherit their kernel's line so their
+    /// schedule arithmetic attributes to the kernel signature.
+    pub src_line: u32,
     /// Monotonic CFG version: bumped by every mutation that can change the
     /// block structure or edge set. Cached dominator trees are tagged with
     /// the version they were built at and rebuilt lazily on mismatch, so
@@ -679,6 +710,7 @@ impl Function {
             insts: vec![],
             entry: BlockId(0),
             local_mem_size: 0,
+            src_line: 0,
             cfg_version: 0,
             dom_cache: None,
             pdom_cache: None,
@@ -790,6 +822,7 @@ impl Function {
             block: b,
             uniform_ann: false,
             name: None,
+            loc: None,
             dead: false,
         });
         self.blocks[b.idx()].insts.push(id);
@@ -809,6 +842,7 @@ impl Function {
             block: b,
             uniform_ann: false,
             name: None,
+            loc: None,
             dead: false,
         });
         self.blocks[b.idx()].insts.insert(pos, id);

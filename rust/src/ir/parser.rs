@@ -210,6 +210,7 @@ pub fn parse_function(lines: &[String]) -> Result<Function, String> {
         insts: vec![],
         entry: BlockId(0),
         local_mem_size,
+        src_line: 0,
         cfg_version: 0,
         dom_cache: None,
         pdom_cache: None,
@@ -251,12 +252,24 @@ pub fn parse_function(lines: &[String]) -> Result<Function, String> {
     }
     // Second pass: parse kinds.
     for (id, rest) in inst_lines {
+        // Suffix annotations, last first: `!loc L:C` then `!uniform`.
+        let mut rest = rest.as_str();
+        let mut loc = None;
+        if let Some(pos) = rest.rfind(" !loc ") {
+            let lc = rest[pos + 6..].trim();
+            let colon = lc.find(':').ok_or(format!("bad !loc '{lc}'"))?;
+            let line: u32 = lc[..colon].parse().map_err(|_| format!("bad !loc '{lc}'"))?;
+            let col: u32 = lc[colon + 1..].parse().map_err(|_| format!("bad !loc '{lc}'"))?;
+            loc = Some(Loc { line, col });
+            rest = rest[..pos].trim_end();
+        }
         let uniform_ann = rest.ends_with("!uniform");
         let rest = rest.trim_end_matches("!uniform").trim();
         let kind = parse_kind(&fp, rest)?;
         let inst = f.inst_mut(id);
         inst.kind = kind;
         inst.uniform_ann = uniform_ann;
+        inst.loc = loc;
     }
     Ok(f)
 }
@@ -612,6 +625,29 @@ b3:
         let printed = print_function(f);
         assert!(printed.contains("splitbr %i0, pos, b1, b2, b3"));
         assert!(printed.contains("intr.join"));
+    }
+
+    #[test]
+    fn round_trips_loc_annotations() {
+        let src = r#"
+func @k(i32 %n) -> i32 {
+b0:
+  %i0:i32 = bin.add %n, 1 !loc 12:5
+  %i1:i32 = bin.mul %i0, %i0 !uniform !loc 13:9
+  ret %i1
+}
+"#;
+        let m = parse_module(src).unwrap();
+        let f = &m.funcs[0];
+        assert_eq!(f.insts[0].loc, Some(Loc { line: 12, col: 5 }));
+        assert_eq!(f.insts[1].loc, Some(Loc { line: 13, col: 9 }));
+        assert!(f.insts[1].uniform_ann);
+        assert_eq!(f.insts[2].loc, None);
+        let printed = print_function(f);
+        assert!(printed.contains("!loc 12:5"));
+        assert!(printed.contains("!uniform !loc 13:9"));
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(print_function(&m2.funcs[0]), printed);
     }
 
     #[test]

@@ -317,6 +317,9 @@ pub fn print_inst(f: &Function, id: InstId) -> String {
     if inst.uniform_ann {
         s.push_str(" !uniform");
     }
+    if let Some(loc) = inst.loc {
+        write!(s, " !loc {}:{}", loc.line, loc.col).unwrap();
+    }
     s
 }
 

@@ -31,6 +31,10 @@
 //! * [`sim`] — a SimX-style deterministic cycle-level SIMT simulator
 //!   (cores × warps × threads, per-warp IPDOM stacks, warp/barrier tables,
 //!   L1/L2 caches) used as the evaluation substrate (paper §5).
+//! * [`prof`] — the cycle-attributing profiler: per-PC/per-line cycle
+//!   attribution over the image's line table, an issue-stall taxonomy
+//!   that sums to total cycles, occupancy accounting, text reports and
+//!   chrome://tracing export (see `docs/PROFILING.md`).
 //! * [`runtime`] — the synchronous host runtime the driver's streams
 //!   execute on: device buffers, `memcpy_to_symbol` deferred
 //!   materialization (Case Study 2), shared-memory mapping modes
@@ -48,6 +52,7 @@ pub mod coordinator;
 pub mod driver;
 pub mod frontend;
 pub mod ir;
+pub mod prof;
 pub mod runtime;
 pub mod sim;
 pub mod transform;

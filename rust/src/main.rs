@@ -20,6 +20,11 @@ commands:
   compile <file> [--cuda] [--opt LEVEL] [--asm] [--ir]   compile a kernel file
   run <benchmark> [--opt LEVEL] [--sw-warp] [--smem-global]
                                                          run a registry benchmark
+  prof <benchmark> [--opt LEVEL] [--top N] [--annotate] [--trace FILE]
+                                                         profile a benchmark: stall
+                                                         breakdown + hot source lines
+  prof --sweep [--opt LEVEL] [--json FILE]               profile all kernels
+                                                         (BENCH_profile.json)
   validate [--levels L1,L2,...]                          run + check the whole suite
   list                                                   list registry benchmarks
   figures --fig 7|8|9|10 [--only a,b] [--csv FILE]       regenerate a paper figure
@@ -64,6 +69,7 @@ fn main() {
     let result = match cmd.as_str() {
         "compile" => cmd_compile(rest),
         "run" => cmd_run(rest),
+        "prof" => cmd_prof(rest),
         "validate" => cmd_validate(rest),
         "list" => cmd_list(),
         "figures" => cmd_figures(rest),
@@ -169,6 +175,52 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         s.local_accesses
     );
     println!("  compile {:.2} ms, code {} instrs", r.compile_ms, r.code_size);
+    Ok(())
+}
+
+fn cmd_prof(args: &[String]) -> Result<(), String> {
+    let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::O3);
+    if flag(args, "--sweep") {
+        let rows = experiments::profile_sweep(level).map_err(|e| e.to_string())?;
+        print!("{}", report::render_profile_sweep(&rows));
+        let json = report::json_profile(&rows, level);
+        volt::prof::validate_json(&json)
+            .map_err(|e| format!("internal: BENCH_profile.json invalid: {e}"))?;
+        if let Some(path) = opt_val(args, "--json") {
+            std::fs::write(&path, &json).map_err(|e| e.to_string())?;
+            println!("wrote {path} ({} bytes, JSON validated)", json.len());
+        }
+        return Ok(());
+    }
+    let name = args.first().ok_or("prof: missing benchmark name (or --sweep)")?;
+    let b = benchmarks::find(name).ok_or(format!("unknown benchmark '{name}'"))?;
+    let top = opt_val(args, "--top")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10usize);
+    let (r, profiles) =
+        experiments::profile_bench(&b, level).map_err(|e| e.to_string())?;
+    println!(
+        "benchmark {name} @ {:?}: PASS ({} launches, {} cycles total)",
+        level,
+        profiles.len(),
+        r.stats.cycles
+    );
+    for p in &profiles {
+        print!("{}", volt::prof::render_text(p, top));
+    }
+    if flag(args, "--annotate") {
+        // Merge launches into one listing via the hottest profile.
+        if let Some(p) = profiles.iter().max_by_key(|p| p.cycles) {
+            print!("{}", volt::prof::annotate_source(b.source, p));
+        }
+    }
+    if let Some(path) = opt_val(args, "--trace") {
+        let trace = volt::prof::chrome_trace(&[], &profiles);
+        volt::prof::validate_json(&trace)
+            .map_err(|e| format!("internal: emitted trace is invalid JSON: {e}"))?;
+        std::fs::write(&path, &trace).map_err(|e| e.to_string())?;
+        println!("wrote {path} ({} bytes, JSON validated)", trace.len());
+    }
     Ok(())
 }
 

@@ -1,0 +1,221 @@
+//! The in-simulator profiler sink: per-PC and per-core cycle accounting.
+//!
+//! [`Profiler`] is handed to [`crate::sim::Gpu::run_profiled`] and fed
+//! once per simulated cycle per core. It is strictly write-only from the
+//! simulator's point of view — nothing in the timing model reads it — so
+//! a profiled run is cycle-for-cycle identical to an unprofiled one.
+//!
+//! Accounting invariant (tested): for every core,
+//! `issue_cycles + stalls.iter().sum() == SimStats::cycles`.
+
+/// Why a core could not issue on a given cycle. One reason per core per
+/// stalled cycle, chosen deterministically (the warp closest to ready is
+/// the bottleneck; ties broken by warp index).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum StallReason {
+    /// No active warp on the core (retired or not yet spawned).
+    NoActiveWarp = 0,
+    /// Waiting on a non-memory functional unit (ALU/MUL/DIV/FPU/SFU
+    /// latency) — the scoreboard would hold the issue slot.
+    Scoreboard = 1,
+    /// Every active warp is parked at a workgroup barrier.
+    Barrier = 2,
+    /// Waiting on the memory system (L1 miss, L2, DRAM, atomics).
+    Memory = 3,
+    /// Waiting after a divergence-management op (vx_split / vx_join /
+    /// vx_pred / vx_tmc) — reconvergence overhead.
+    Divergence = 4,
+}
+
+/// Number of [`StallReason`] variants (array-indexed counters).
+pub const STALL_KINDS: usize = 5;
+
+pub const STALL_NAMES: [&str; STALL_KINDS] = [
+    "no-active-warp",
+    "scoreboard",
+    "barrier",
+    "memory",
+    "divergence",
+];
+
+/// Cap on stored occupancy change-samples per core (the chrome-trace
+/// counter track); further changes are counted in `occupancy_dropped`
+/// and the accumulators stay exact.
+pub const OCCUPANCY_SAMPLE_CAP: usize = 4096;
+
+/// Per-core cycle ledger.
+#[derive(Clone, Debug, Default)]
+pub struct CoreProfile {
+    /// Cycles on which this core issued an instruction.
+    pub issue_cycles: u64,
+    /// Stalled cycles, by [`StallReason`] discriminant.
+    pub stalls: [u64; STALL_KINDS],
+    /// Σ over cycles of the core's active-warp count (occupancy integral).
+    pub active_warp_cycles: u64,
+    /// First / last cycle an instruction issued (core busy window).
+    pub first_issue: Option<u64>,
+    pub last_issue: u64,
+    /// (cycle, active warps) recorded when the count changes, capped at
+    /// [`OCCUPANCY_SAMPLE_CAP`].
+    pub occupancy: Vec<(u64, u32)>,
+    /// Change-samples dropped after the cap was reached.
+    pub occupancy_dropped: u64,
+    last_occ: Option<u32>,
+}
+
+impl CoreProfile {
+    /// Total cycles this ledger accounts for.
+    pub fn total(&self) -> u64 {
+        self.issue_cycles + self.stalls.iter().sum::<u64>()
+    }
+}
+
+/// The per-launch profiler: one instance per `Gpu::run_profiled` call.
+#[derive(Clone, Debug)]
+pub struct Profiler {
+    /// Issue count per PC (instruction index).
+    pub pc_issues: Vec<u64>,
+    /// Latency-weighted cycles per PC: each issue charges the
+    /// instruction's issue-to-ready cost, so long-latency memory ops
+    /// surface as hot even at low issue counts.
+    pub pc_cycles: Vec<u64>,
+    pub cores: Vec<CoreProfile>,
+}
+
+impl Profiler {
+    pub fn new(num_pcs: usize, num_cores: usize) -> Profiler {
+        Profiler {
+            pc_issues: vec![0; num_pcs],
+            pc_cycles: vec![0; num_pcs],
+            cores: vec![CoreProfile::default(); num_cores],
+        }
+    }
+
+    pub fn record_issue(&mut self, core: usize, pc: u32, cost: u64, cycle: u64) {
+        let c = &mut self.cores[core];
+        c.issue_cycles += 1;
+        if c.first_issue.is_none() {
+            c.first_issue = Some(cycle);
+        }
+        c.last_issue = cycle;
+        if let Some(n) = self.pc_issues.get_mut(pc as usize) {
+            *n += 1;
+        }
+        if let Some(n) = self.pc_cycles.get_mut(pc as usize) {
+            *n += cost.max(1);
+        }
+    }
+
+    pub fn record_stall(&mut self, core: usize, reason: StallReason, cycles: u64) {
+        self.cores[core].stalls[reason as usize] += cycles;
+    }
+
+    pub fn record_occupancy(&mut self, core: usize, cycle: u64, active: u32, delta: u64) {
+        let c = &mut self.cores[core];
+        c.active_warp_cycles += active as u64 * delta;
+        if c.last_occ != Some(active) {
+            if c.occupancy.len() < OCCUPANCY_SAMPLE_CAP {
+                c.occupancy.push((cycle, active));
+            } else {
+                c.occupancy_dropped += 1;
+            }
+            c.last_occ = Some(active);
+        }
+    }
+}
+
+/// Whole-device stall breakdown aggregated over cores. `total()` equals
+/// `cycles × num_cores` — every core accounts for every cycle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StallBreakdown {
+    pub issue: u64,
+    pub no_active_warp: u64,
+    pub scoreboard: u64,
+    pub barrier: u64,
+    pub memory: u64,
+    pub divergence: u64,
+}
+
+impl StallBreakdown {
+    pub fn from_cores(cores: &[CoreProfile]) -> StallBreakdown {
+        let mut b = StallBreakdown::default();
+        for c in cores {
+            b.issue += c.issue_cycles;
+            b.no_active_warp += c.stalls[StallReason::NoActiveWarp as usize];
+            b.scoreboard += c.stalls[StallReason::Scoreboard as usize];
+            b.barrier += c.stalls[StallReason::Barrier as usize];
+            b.memory += c.stalls[StallReason::Memory as usize];
+            b.divergence += c.stalls[StallReason::Divergence as usize];
+        }
+        b
+    }
+
+    pub fn total(&self) -> u64 {
+        self.issue
+            + self.no_active_warp
+            + self.scoreboard
+            + self.barrier
+            + self.memory
+            + self.divergence
+    }
+
+    pub fn add(&mut self, o: &StallBreakdown) {
+        self.issue += o.issue;
+        self.no_active_warp += o.no_active_warp;
+        self.scoreboard += o.scoreboard;
+        self.barrier += o.barrier;
+        self.memory += o.memory;
+        self.divergence += o.divergence;
+    }
+
+    /// (label, cycles) pairs in display order, stall categories only.
+    pub fn stall_rows(&self) -> [(&'static str, u64); STALL_KINDS] {
+        [
+            ("memory", self.memory),
+            ("scoreboard", self.scoreboard),
+            ("barrier", self.barrier),
+            ("divergence", self.divergence),
+            ("no-active-warp", self.no_active_warp),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_sums_and_occupancy_samples() {
+        let mut p = Profiler::new(8, 2);
+        p.record_issue(0, 3, 4, 10);
+        p.record_issue(0, 3, 4, 11);
+        p.record_stall(0, StallReason::Memory, 7);
+        p.record_stall(1, StallReason::NoActiveWarp, 9);
+        assert_eq!(p.pc_issues[3], 2);
+        assert_eq!(p.pc_cycles[3], 8);
+        assert_eq!(p.cores[0].total(), 9);
+        assert_eq!(p.cores[1].total(), 9);
+        assert_eq!(p.cores[0].first_issue, Some(10));
+        assert_eq!(p.cores[0].last_issue, 11);
+        // Occupancy: only changes are sampled; the integral stays exact.
+        p.record_occupancy(0, 0, 4, 2);
+        p.record_occupancy(0, 2, 4, 1);
+        p.record_occupancy(0, 3, 2, 3);
+        assert_eq!(p.cores[0].active_warp_cycles, 4 * 2 + 4 + 2 * 3);
+        assert_eq!(p.cores[0].occupancy, vec![(0, 4), (3, 2)]);
+        let b = StallBreakdown::from_cores(&p.cores);
+        assert_eq!(b.issue, 2);
+        assert_eq!(b.memory, 7);
+        assert_eq!(b.no_active_warp, 9);
+        assert_eq!(b.total(), 18);
+    }
+
+    #[test]
+    fn out_of_range_pc_is_ignored() {
+        // crt0-relative raw programs can touch any pc; the profiler must
+        // not panic on images smaller than the executed range.
+        let mut p = Profiler::new(2, 1);
+        p.record_issue(0, 99, 1, 0);
+        assert_eq!(p.cores[0].issue_cycles, 1);
+    }
+}

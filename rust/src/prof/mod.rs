@@ -1,0 +1,39 @@
+//! `volt::prof` — the cycle-attributing profiler (measurement foundation
+//! for every perf PR; see `docs/PROFILING.md`).
+//!
+//! The paper's evaluation lives and dies on *explaining* cycle deltas:
+//! SimX exists precisely so that performance differences are
+//! deterministic and attributable to the compiler (§5). This subsystem
+//! turns the simulator's raw determinism into attribution:
+//!
+//! * [`counters`] — the in-simulator [`counters::Profiler`] sink: per-PC
+//!   issue/cycle accumulators, a per-core per-cycle issue-stall taxonomy
+//!   (no-active-warp / scoreboard / barrier / memory / divergence) that
+//!   sums exactly to the run's cycle count, and warp-occupancy
+//!   accumulators. Pure observer: cycle counts are bit-identical with
+//!   profiling on or off.
+//! * [`srcmap`] — the PC→source mapping derived from the line table the
+//!   backend links into every [`crate::backend::emit::ProgramImage`]
+//!   (`pc_loc`), itself fed by the `Loc` plumbing that runs
+//!   lexer → AST → IR → transforms → MIR → encoded PCs.
+//! * [`report`] — [`report::KernelProfile`]: per-launch cycles, IPC,
+//!   occupancy, stall breakdown, cache hit rates and hot source lines,
+//!   with a text report and a per-line annotated source listing.
+//! * [`trace`] — chrome://tracing JSON export (one track per core, a
+//!   warp-occupancy counter track, one slice per stream command) plus a
+//!   dependency-free JSON parser used to validate every emitted trace.
+//!
+//! Entry points: [`crate::driver::VoltOptions`]`::profiling(true)` for
+//! session/stream use, [`crate::runtime::VoltDevice`]`::profiling` for
+//! direct device use, `volt prof <benchmark>` on the CLI, and
+//! `experiments::profile_sweep` for the whole-suite `BENCH_profile.json`.
+
+pub mod counters;
+pub mod report;
+pub mod srcmap;
+pub mod trace;
+
+pub use counters::{CoreProfile, Profiler, StallBreakdown, StallReason};
+pub use report::{annotate_source, build_profile, render_text, KernelProfile};
+pub use srcmap::SourceMap;
+pub use trace::{chrome_trace, validate_json};

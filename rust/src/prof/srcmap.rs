@@ -1,0 +1,129 @@
+//! PC→source mapping over the line table the backend links into every
+//! [`ProgramImage`] (`pc_loc`), plus the aggregations the reports need:
+//! per-line cycle totals and executed-PC coverage.
+
+use crate::backend::emit::ProgramImage;
+use crate::ir::Loc;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct SourceMap {
+    /// Per-PC source location (index == PC); `None` over crt0 and any
+    /// function compiled without locations.
+    pub pc_loc: Vec<Option<Loc>>,
+    /// PCs below this are runtime startup (crt0), not compiled source.
+    pub crt0_len: u32,
+    /// (entry pc, function name), sorted by entry pc.
+    funcs: Vec<(u32, String)>,
+}
+
+impl SourceMap {
+    pub fn from_image(img: &ProgramImage) -> SourceMap {
+        let mut funcs: Vec<(u32, String)> = img
+            .func_entries
+            .iter()
+            .map(|(n, &pc)| (pc, n.clone()))
+            .collect();
+        funcs.sort();
+        SourceMap {
+            pc_loc: img.pc_loc.clone(),
+            crt0_len: img.crt0_len,
+            funcs,
+        }
+    }
+
+    pub fn loc(&self, pc: u32) -> Option<Loc> {
+        self.pc_loc.get(pc as usize).copied().flatten()
+    }
+
+    /// crt0 startup code (not attributable to source).
+    pub fn is_runtime(&self, pc: u32) -> bool {
+        pc < self.crt0_len
+    }
+
+    /// Name of the linked function containing `pc`.
+    pub fn func_of(&self, pc: u32) -> Option<&str> {
+        if self.is_runtime(pc) {
+            return None;
+        }
+        let mut best: Option<&str> = None;
+        for (entry, name) in &self.funcs {
+            if *entry <= pc {
+                best = Some(name.as_str());
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    /// Aggregate per-PC cycles into per-source-line totals, sorted by
+    /// descending cycles (then ascending line for determinism).
+    pub fn line_cycles(&self, pc_cycles: &[u64]) -> Vec<(u32, u64)> {
+        let mut by_line: HashMap<u32, u64> = HashMap::new();
+        for (pc, &cyc) in pc_cycles.iter().enumerate() {
+            if cyc == 0 {
+                continue;
+            }
+            if let Some(loc) = self.loc(pc as u32) {
+                *by_line.entry(loc.line).or_insert(0) += cyc;
+            }
+        }
+        let mut rows: Vec<(u32, u64)> = by_line.into_iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        rows
+    }
+
+    /// Executed-PC line coverage: `(mapped, executed)` over distinct PCs
+    /// with at least one issue, crt0 excluded (startup code is runtime,
+    /// not source). The acceptance bar is mapped/executed >= 0.9.
+    pub fn coverage(&self, pc_issues: &[u64]) -> (u64, u64) {
+        let mut mapped = 0u64;
+        let mut executed = 0u64;
+        for (pc, &n) in pc_issues.iter().enumerate() {
+            if n == 0 || self.is_runtime(pc as u32) {
+                continue;
+            }
+            executed += 1;
+            if self.loc(pc as u32).is_some() {
+                mapped += 1;
+            }
+        }
+        (mapped, executed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> SourceMap {
+        SourceMap {
+            pc_loc: vec![
+                None,                  // 0: crt0
+                None,                  // 1: crt0
+                Some(Loc::line(10)),   // 2
+                Some(Loc::line(10)),   // 3
+                Some(Loc::line(12)),   // 4
+                None,                  // 5: unlocated body pc
+            ],
+            crt0_len: 2,
+            funcs: vec![(2, "__main_k".into())],
+        }
+    }
+
+    #[test]
+    fn line_aggregation_and_coverage() {
+        let m = map();
+        let pc_cycles = [5u64, 0, 3, 4, 9, 2];
+        let rows = m.line_cycles(&pc_cycles);
+        assert_eq!(rows, vec![(12, 9), (10, 7)]);
+        // Executed everywhere: pcs 0,2,3,4,5 (pc1 never issued); crt0
+        // pc0 excluded → executed = 4, mapped = 3.
+        let pc_issues = [1u64, 0, 1, 1, 1, 1];
+        assert_eq!(m.coverage(&pc_issues), (3, 4));
+        assert_eq!(m.func_of(3), Some("__main_k"));
+        assert_eq!(m.func_of(1), None);
+        assert!(m.is_runtime(0) && !m.is_runtime(2));
+    }
+}

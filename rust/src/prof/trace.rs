@@ -1,0 +1,359 @@
+//! chrome://tracing export and a dependency-free JSON parser used to
+//! validate every emitted trace (the offline build has no serde).
+//!
+//! Timeline model: 1 simulated cycle = 1 microsecond of trace time.
+//! Tracks (tid) on pid 0:
+//! * tid 0 — the stream: one complete slice (`ph:X`) per executed
+//!   command, reusing the [`Event`] cycle stamps (copies are host-side
+//!   and show as zero-duration slices).
+//! * tid 1+c — core `c`: one busy slice per profiled launch spanning the
+//!   core's first to last issue, plus a `warps.core{c}` counter track
+//!   (`ph:C`) sampled from the occupancy change-log.
+
+use super::report::KernelProfile;
+use crate::driver::stream::{CommandKind, Event};
+use std::fmt::Write;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                write!(out, "\\u{:04x}", c as u32).unwrap();
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn kind_cat(k: CommandKind) -> &'static str {
+    match k {
+        CommandKind::H2D => "h2d",
+        CommandKind::D2H => "d2h",
+        CommandKind::Launch => "launch",
+        CommandKind::SymbolWrite => "symbol",
+        CommandKind::Free => "free",
+    }
+}
+
+/// Build a chrome://tracing JSON document from a stream's command events
+/// and/or per-launch profiles. Either slice may be empty: `volt prof`
+/// passes device profiles with no stream events (launch slices are then
+/// synthesized from the profiles themselves).
+pub fn chrome_trace(events: &[Event], profiles: &[KernelProfile]) -> String {
+    let mut ev: Vec<String> = vec![];
+    let meta = |tid: u32, label: &str| {
+        format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            tid,
+            esc(label),
+        )
+    };
+    ev.push(meta(0, "stream"));
+    for e in events {
+        ev.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":0,\
+             \"ts\":{},\"dur\":{},\"args\":{{\"instrs\":{}}}}}",
+            esc(&e.label),
+            kind_cat(e.kind),
+            e.start_cycles,
+            e.end_cycles - e.start_cycles,
+            e.instrs
+        ));
+    }
+    if events.is_empty() {
+        // Device-only profiling: synthesize the launch slices.
+        for p in profiles {
+            ev.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"launch\",\"ph\":\"X\",\"pid\":0,\"tid\":0,\
+                 \"ts\":{},\"dur\":{},\"args\":{{\"instrs\":{}}}}}",
+                esc(&p.kernel),
+                p.start_cycles,
+                p.cycles,
+                p.instrs
+            ));
+        }
+    }
+    let num_cores = profiles.iter().map(|p| p.num_cores).max().unwrap_or(0);
+    for c in 0..num_cores {
+        ev.push(meta(1 + c, &format!("core{c}")));
+    }
+    for p in profiles {
+        for (c, core) in p.per_core.iter().enumerate() {
+            let tid = 1 + c as u32;
+            if let Some(first) = core.first_issue {
+                ev.push(format!(
+                    "{{\"name\":\"{}\",\"cat\":\"core\",\"ph\":\"X\",\"pid\":0,\
+                     \"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"issue_cycles\":{}}}}}",
+                    esc(&p.kernel),
+                    tid,
+                    p.start_cycles + first,
+                    core.last_issue.saturating_sub(first) + 1,
+                    core.issue_cycles
+                ));
+            }
+            for (cycle, warps) in &core.occupancy {
+                ev.push(format!(
+                    "{{\"name\":\"warps.core{}\",\"ph\":\"C\",\"pid\":0,\"tid\":{},\
+                     \"ts\":{},\"args\":{{\"active\":{}}}}}",
+                    c,
+                    tid,
+                    p.start_cycles + cycle,
+                    warps
+                ));
+            }
+        }
+    }
+    let mut s = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    for (i, e) in ev.iter().enumerate() {
+        s.push_str(e);
+        if i + 1 != ev.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]}\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON parser (validation only — no DOM is built)
+// ---------------------------------------------------------------------------
+
+/// Parse `src` as a single JSON value (RFC 8259 subset: no surrogate
+/// validation) and reject trailing garbage. Used by tests and the CLI to
+/// prove emitted traces/readouts are well-formed.
+pub fn validate_json(src: &str) -> Result<(), String> {
+    let b: Vec<char> = src.chars().collect();
+    let mut p = Json { b: &b, i: 0 };
+    p.ws();
+    p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at char {}", p.i));
+    }
+    Ok(())
+}
+
+struct Json<'a> {
+    b: &'a [char],
+    i: usize,
+}
+
+impl<'a> Json<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], ' ' | '\t' | '\n' | '\r')
+        {
+            self.i += 1;
+        }
+    }
+    fn peek(&self) -> Option<char> {
+        self.b.get(self.i).copied()
+    }
+    fn eat(&mut self, c: char) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{c}' at char {}", self.i))
+        }
+    }
+    fn lit(&mut self, s: &str) -> Result<(), String> {
+        for c in s.chars() {
+            self.eat(c)?;
+        }
+        Ok(())
+    }
+    fn value(&mut self) -> Result<(), String> {
+        match self.peek() {
+            Some('{') => self.object(),
+            Some('[') => self.array(),
+            Some('"') => self.string(),
+            Some('t') => self.lit("true"),
+            Some('f') => self.lit("false"),
+            Some('n') => self.lit("null"),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at char {}", self.i)),
+        }
+    }
+    fn object(&mut self) -> Result<(), String> {
+        self.eat('{')?;
+        self.ws();
+        if self.peek() == Some('}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            self.eat(':')?;
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(',') => self.i += 1,
+                Some('}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                other => return Err(format!("bad object at char {} ({other:?})", self.i)),
+            }
+        }
+    }
+    fn array(&mut self) -> Result<(), String> {
+        self.eat('[')?;
+        self.ws();
+        if self.peek() == Some(']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(',') => self.i += 1,
+                Some(']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                other => return Err(format!("bad array at char {} ({other:?})", self.i)),
+            }
+        }
+    }
+    fn string(&mut self) -> Result<(), String> {
+        self.eat('"')?;
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some('"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some('\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some('"' | '\\' | '/' | 'b' | 'f' | 'n' | 'r' | 't') => self.i += 1,
+                        Some('u') => {
+                            self.i += 1;
+                            for _ in 0..4 {
+                                match self.peek() {
+                                    Some(c) if c.is_ascii_hexdigit() => self.i += 1,
+                                    _ => return Err("bad \\u escape".into()),
+                                }
+                            }
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    }
+                }
+                Some(c) if (c as u32) < 0x20 => {
+                    return Err("raw control char in string".into())
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+    fn number(&mut self) -> Result<(), String> {
+        if self.peek() == Some('-') {
+            self.i += 1;
+        }
+        let mut digits = 0;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+            digits += 1;
+        }
+        if digits == 0 {
+            return Err(format!("bad number at char {}", self.i));
+        }
+        if self.peek() == Some('.') {
+            self.i += 1;
+            let mut frac = 0;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+                frac += 1;
+            }
+            if frac == 0 {
+                return Err("bad fraction".into());
+            }
+        }
+        if matches!(self.peek(), Some('e' | 'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some('+' | '-')) {
+                self.i += 1;
+            }
+            let mut exp = 0;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+                exp += 1;
+            }
+            if exp == 0 {
+                return Err("bad exponent".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parser_accepts_valid() {
+        for ok in [
+            "{}",
+            "[]",
+            "null",
+            "-12.5e+3",
+            "{\"a\":[1,2,{\"b\":\"x\\n\\u0041\"}],\"c\":true}",
+            " { \"traceEvents\" : [ ] } ",
+        ] {
+            validate_json(ok).unwrap_or_else(|e| panic!("{ok}: {e}"));
+        }
+    }
+
+    #[test]
+    fn json_parser_rejects_invalid() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "tru",
+            "1.2.3",
+            "\"unterminated",
+            "{} garbage",
+            "01e",
+            "{\"a\":}",
+        ] {
+            assert!(validate_json(bad).is_err(), "accepted invalid: {bad}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_valid_json() {
+        let t = chrome_trace(&[], &[]);
+        validate_json(&t).unwrap();
+        assert!(t.contains("traceEvents"));
+    }
+
+    #[test]
+    fn escapes_labels() {
+        let e = Event {
+            label: "we\"ird\\name".into(),
+            kind: CommandKind::H2D,
+            start_cycles: 0,
+            end_cycles: 0,
+            instrs: 0,
+        };
+        let t = chrome_trace(&[e], &[]);
+        validate_json(&t).unwrap();
+    }
+}

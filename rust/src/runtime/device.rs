@@ -11,6 +11,8 @@
 //! exactly as the paper describes.
 
 use crate::backend::emit::ProgramImage;
+use crate::prof::counters::Profiler;
+use crate::prof::report::{build_profile, KernelProfile};
 use crate::sim::{Gpu, SimConfig, SimError, SimStats};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +76,12 @@ pub struct VoltDevice {
     /// Accumulated stats over all launches.
     pub total_stats: SimStats,
     pub launches: u32,
+    /// When set, every launch runs under the `volt::prof` profiler and
+    /// appends a [`KernelProfile`] to `profiles`. Profiling is a pure
+    /// observer: cycle counts and results are bit-identical either way.
+    pub profiling: bool,
+    /// Per-launch profiles, in launch order (only when `profiling`).
+    pub profiles: Vec<KernelProfile>,
 }
 
 impl VoltDevice {
@@ -86,7 +94,14 @@ impl VoltDevice {
             pending_symbols: vec![],
             total_stats: SimStats::default(),
             launches: 0,
+            profiling: false,
+            profiles: vec![],
         }
+    }
+
+    /// Drain collected per-launch profiles.
+    pub fn take_profiles(&mut self) -> Vec<KernelProfile> {
+        std::mem::take(&mut self.profiles)
     }
 
     /// Allocate device-global memory (first-fit free list over a bump
@@ -228,7 +243,24 @@ impl VoltDevice {
                 .write_u32(a + 4 * i as u32, *w)
                 .map_err(|e| RuntimeError::Mem(format!("args fault at {:#x}", e.addr)))?;
         }
-        let stats = self.gpu.run().map_err(RuntimeError::Sim)?;
+        let stats = if self.profiling {
+            let mut prof = Profiler::new(self.image.code.len(), self.gpu.cfg.num_cores as usize);
+            let stats = self
+                .gpu
+                .run_profiled(Some(&mut prof))
+                .map_err(RuntimeError::Sim)?;
+            self.profiles.push(build_profile(
+                kernel,
+                &self.image,
+                &self.gpu.cfg,
+                &stats,
+                &prof,
+                self.total_stats.cycles,
+            ));
+            stats
+        } else {
+            self.gpu.run().map_err(RuntimeError::Sim)?
+        };
         self.launches += 1;
         accumulate(&mut self.total_stats, &stats);
         Ok(stats)

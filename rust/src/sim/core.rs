@@ -11,6 +11,7 @@ use crate::backend::emit::LOCAL_BASE;
 use crate::backend::isa::{CsrId, MachInst, Op, OpClass};
 use crate::ir::interp::scalar;
 use crate::ir::{BinOp, FCmp, ICmp, UnOp};
+use crate::prof::counters::StallReason;
 use std::collections::HashMap;
 
 #[derive(Clone, Debug)]
@@ -28,6 +29,11 @@ pub struct Warp {
     pub active: bool,
     pub stall_until: u64,
     pub at_barrier: bool,
+    /// Functional class of the last issued instruction — why this warp
+    /// is stalled while `stall_until > cycle`. Written unconditionally
+    /// (pure bookkeeping, never read by the timing model) so profiling
+    /// cannot perturb the deterministic schedule.
+    pub last_class: OpClass,
     pub ipdom: Vec<IpdomEntry>,
     /// regs[lane][reg] — 0..32 integer x-regs (x0 = 0), 32..64 f-regs.
     pub regs: Vec<[u32; 64]>,
@@ -41,6 +47,7 @@ impl Warp {
             active: false,
             stall_until: 0,
             at_barrier: false,
+            last_class: OpClass::Alu,
             ipdom: vec![],
             regs: vec![[0u32; 64]; nt as usize],
         }
@@ -58,8 +65,17 @@ pub struct Core {
     full_mask: u32,
 }
 
+/// What one issue slot executed — the profiler's attribution record.
+#[derive(Clone, Copy, Debug)]
+pub struct Issue {
+    pub warp: u32,
+    pub pc: u32,
+    /// Issue-to-ready latency charged to this instruction (cycles).
+    pub cost: u64,
+}
+
 pub enum StepOutcome {
-    Executed,
+    Executed(Issue),
     NoneReady,
 }
 
@@ -133,8 +149,46 @@ impl Core {
             return Ok(StepOutcome::NoneReady);
         };
         self.rr = (wi + 1) % n;
-        self.exec(wi, cycle, prog, mem, l2, cfg, stats)?;
-        Ok(StepOutcome::Executed)
+        let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats)?;
+        Ok(StepOutcome::Executed(issue))
+    }
+
+    /// Why this core cannot issue right now: the warp closest to becoming
+    /// ready (lowest `stall_until`, then lowest index — deterministic) is
+    /// the bottleneck and its last instruction class names the reason.
+    /// Barrier-parked warps report [`StallReason::Barrier`]; a fully
+    /// retired core reports [`StallReason::NoActiveWarp`].
+    pub fn stall_reason(&self) -> StallReason {
+        let mut best: Option<&Warp> = None;
+        let mut any_active = false;
+        for w in &self.warps {
+            if !w.active {
+                continue;
+            }
+            any_active = true;
+            if w.at_barrier {
+                continue;
+            }
+            match best {
+                None => best = Some(w),
+                Some(b) if w.stall_until < b.stall_until => best = Some(w),
+                _ => {}
+            }
+        }
+        match (any_active, best) {
+            (false, _) => StallReason::NoActiveWarp,
+            (true, None) => StallReason::Barrier,
+            (true, Some(w)) => match w.last_class {
+                OpClass::Mem => StallReason::Memory,
+                OpClass::Vx => StallReason::Divergence,
+                _ => StallReason::Scoreboard,
+            },
+        }
+    }
+
+    /// Number of active (not yet retired) warps — the occupancy sample.
+    pub fn active_warps(&self) -> u32 {
+        self.warps.iter().filter(|w| w.active).count() as u32
     }
 
     fn err(&self, wi: usize, pc: u32, msg: impl Into<String>) -> SimError {
@@ -182,7 +236,7 @@ impl Core {
         l2: &mut Option<Cache>,
         cfg: &SimConfig,
         stats: &mut SimStats,
-    ) -> Result<(), SimError> {
+    ) -> Result<Issue, SimError> {
         let pc = self.warps[wi].pc;
         let inst = *prog
             .get(pc as usize)
@@ -725,7 +779,12 @@ impl Core {
         let w = &mut self.warps[wi];
         w.pc = next_pc;
         w.stall_until = cycle + cost;
-        Ok(())
+        w.last_class = inst.op.class();
+        Ok(Issue {
+            warp: wi as u32,
+            pc,
+            cost,
+        })
     }
 }
 

@@ -1,10 +1,11 @@
 //! Top-level GPU: cores + shared L2 + global memory + the tick loop.
 
-use super::core::{Core, StepOutcome};
+use super::core::{Core, Issue, StepOutcome};
 use super::mem::{Cache, GlobalMem};
 use super::{SimConfig, SimError, SimStats};
 use crate::backend::emit::{ProgramImage, DATA_BASE, HEAP_BASE, STACK_BASE, STACK_SIZE};
 use crate::backend::isa::MachInst;
+use crate::prof::counters::Profiler;
 
 pub struct Gpu {
     pub cfg: SimConfig,
@@ -57,19 +58,35 @@ impl Gpu {
     /// Run the loaded program to completion: every core starts warp 0 at
     /// pc 0 (the crt0), per the Vortex launch contract.
     pub fn run(&mut self) -> Result<SimStats, SimError> {
+        self.run_profiled(None)
+    }
+
+    /// [`Gpu::run`] with an optional profiler attached. The profiler is a
+    /// pure observer: it never feeds back into scheduling, so the cycle
+    /// count and all device state are bit-identical with it on or off
+    /// (guarded by `rust/tests/prof_api.rs`). Per core, every simulated
+    /// cycle is attributed to exactly one category — an issue or one
+    /// [`crate::prof::counters::StallReason`] — so the recorded breakdown
+    /// sums to the total cycle count.
+    pub fn run_profiled(
+        &mut self,
+        mut prof: Option<&mut Profiler>,
+    ) -> Result<SimStats, SimError> {
         let mut stats = SimStats::default();
         for c in self.cores.iter_mut() {
             c.reset(&self.cfg);
         }
         // Reset per-run cache state is implicit (new caches per load); for
         // repeated runs, rebuild via `Gpu::load`.
+        let mut issued: Vec<Option<Issue>> = vec![None; self.cores.len()];
         let mut cycle: u64 = 0;
         loop {
             if self.cores.iter().all(|c| c.idle()) {
                 break;
             }
             let mut any = false;
-            for c in self.cores.iter_mut() {
+            for (ci, c) in self.cores.iter_mut().enumerate() {
+                issued[ci] = None;
                 match c.step(
                     cycle,
                     &self.program,
@@ -78,22 +95,23 @@ impl Gpu {
                     &self.cfg,
                     &mut stats,
                 )? {
-                    StepOutcome::Executed => any = true,
+                    StepOutcome::Executed(info) => {
+                        any = true;
+                        issued[ci] = Some(info);
+                    }
                     StepOutcome::NoneReady => {}
                 }
             }
-            if any {
-                cycle += 1;
+            // How far time advances this iteration (preserves the exact
+            // event-skip schedule of the unprofiled loop).
+            let delta: u64 = if any {
+                1
             } else {
                 // All ready warps are stalled: skip to the next event.
-                let next = self
-                    .cores
-                    .iter()
-                    .filter_map(|c| c.next_ready())
-                    .min();
+                let next = self.cores.iter().filter_map(|c| c.next_ready()).min();
                 match next {
-                    Some(n) if n > cycle => cycle = n,
-                    Some(_) => cycle += 1,
+                    Some(n) if n > cycle => n - cycle,
+                    Some(_) => 1,
                     None => {
                         // Only barrier-parked warps remain -> deadlock.
                         if self.cores.iter().any(|c| !c.idle()) {
@@ -107,7 +125,18 @@ impl Gpu {
                         break;
                     }
                 }
+            };
+            if let Some(p) = prof.as_deref_mut() {
+                for (ci, c) in self.cores.iter().enumerate() {
+                    match &issued[ci] {
+                        // delta == 1 whenever anything issued.
+                        Some(info) => p.record_issue(ci, info.pc, info.cost, cycle),
+                        None => p.record_stall(ci, c.stall_reason(), delta),
+                    }
+                    p.record_occupancy(ci, cycle, c.active_warps(), delta);
+                }
             }
+            cycle += delta;
             if cycle > self.cfg.max_cycles {
                 return Err(SimError {
                     core: 0,

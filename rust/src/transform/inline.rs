@@ -95,6 +95,7 @@ pub fn inline_call(m: &mut Module, caller_id: FuncId, call: InstId) -> bool {
             let ni = caller.push_inst(bmap[&b], kind, inst.ty);
             debug_assert_eq!(ni, imap[&i]);
             caller.insts[ni.idx()].uniform_ann = inst.uniform_ann;
+            caller.insts[ni.idx()].loc = inst.loc;
         }
     }
 

@@ -32,6 +32,16 @@ use crate::ir::loops::{ensure_preheader, LoopInfo};
 use crate::ir::*;
 use std::collections::HashSet;
 
+/// Per-loop hoist budget. Every hoisted value is live across the whole
+/// loop body, so an uncapped hoist set converts redundant recomputation
+/// into register pressure and, past the allocatable set, into spill
+/// traffic *inside* the loop — strictly worse than what LICM removed
+/// (the PR-2 postmortem hazard). Because [`run`] works the loop forest
+/// innermost-first and each loop spends its own budget, deeper
+/// (hotter, trip-count-multiplied) loops claim their hoists before any
+/// enclosing loop gets a turn — the loop-depth-weighted preference.
+pub const MAX_HOISTS_PER_LOOP: usize = 16;
+
 /// Run LICM over one function. Returns the number of hoisted instructions.
 pub fn run(
     m: &mut Module,
@@ -124,10 +134,13 @@ fn hoist_loop(
         .filter(|b| blocks.contains(b))
         .collect();
     let mut count = 0;
-    loop {
+    'budget: loop {
         let mut changed = false;
         for &b in &order {
             for id in f.blocks[b.idx()].insts.clone() {
+                if count >= MAX_HOISTS_PER_LOOP {
+                    break 'budget;
+                }
                 if f.insts[id.idx()].dead {
                     continue;
                 }
@@ -355,6 +368,107 @@ mod tests {
                 "load not hoisted from uniform loop"
             );
         }
+    }
+
+    /// More invariants than the per-loop budget: the cap holds (exactly
+    /// MAX_HOISTS_PER_LOOP hoists), the rest stay in the loop, and
+    /// semantics are unchanged (interp differential).
+    #[test]
+    fn hoist_cap_bounds_spill_pressure() {
+        const N_INV: usize = 20;
+        assert!(N_INV > MAX_HOISTS_PER_LOOP);
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![
+                Param {
+                    name: "out".into(),
+                    ty: Type::Ptr(AddrSpace::Global),
+                    uniform: true,
+                },
+                Param {
+                    name: "n".into(),
+                    ty: Type::I32,
+                    uniform: true,
+                },
+            ],
+            Type::Void,
+        );
+        f.is_kernel = true;
+        f.linkage = Linkage::External;
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        let gid = b.intr(Intr::WorkItem(WorkItem::GlobalId), vec![Val::ci(0)]);
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let acc = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i, Val::Arg(1));
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        // N_INV independent loop-invariant computations, all summed.
+        let mut step = Val::ci(0);
+        for k in 0..N_INV {
+            let inv = b.mul(Val::Arg(1), Val::ci(k as i64 + 3));
+            step = b.add(step, inv);
+        }
+        let acc2 = b.add(acc, step);
+        let i2 = b.add(i, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        let op = b.gep(Val::Arg(0), gid, 4);
+        b.store(op, acc);
+        b.ret(None);
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((body, i2));
+            }
+        }
+        if let Val::Inst(ap) = acc {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ap).kind {
+                incs.push((body, acc2));
+            }
+        }
+        m.add_func(f);
+
+        let run_out = |m: &Module| -> Vec<u32> {
+            let mut mem = vec![0u8; 4096];
+            run_kernel_scalar(
+                m,
+                FuncId(0),
+                &[256, 5],
+                [1, 1, 1],
+                [4, 1, 1],
+                &mut mem,
+                2048,
+                &[],
+            )
+            .unwrap();
+            (0..4).map(|g| read_u32(&mem, 256 + g * 4)).collect()
+        };
+        let before = run_out(&m);
+        // 5 iterations x sum_{k=0..19} 5*(k+3) = 5 * 5 * 250 / ... check:
+        // sum k+3 for k in 0..20 = 3+4+..+22 = 250; * n(5) = 1250; * 5 trips.
+        assert_eq!(before, vec![6250; 4]);
+        let n = run(&mut m, FuncId(0), &opts_all(), &VortexTti);
+        assert_eq!(n, MAX_HOISTS_PER_LOOP, "cap must bound the hoist set");
+        verify_function(&m.funcs[0]).unwrap();
+        assert_eq!(before, run_out(&m));
+        // The un-hoisted invariants are still inside the loop.
+        let li = LoopInfo::build(&m.funcs[0]);
+        let muls_in_loop = m.funcs[0]
+            .insts
+            .iter()
+            .filter(|i| !i.dead && matches!(i.kind, InstKind::Bin { op: BinOp::Mul, .. }))
+            .filter(|i| li.loops.iter().any(|l| l.blocks.contains(&i.block)))
+            .count();
+        assert!(
+            muls_in_loop >= N_INV - MAX_HOISTS_PER_LOOP,
+            "expected leftover invariants in the loop, found {muls_in_loop}"
+        );
     }
 
     /// A store in the body pins every load.

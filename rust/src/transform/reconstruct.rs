@@ -131,6 +131,7 @@ pub fn duplicate_node(f: &mut Function, n: BlockId, b: BlockId) -> BlockId {
         let ty = f.inst(i).ty;
         let ni = f.push_inst(b2, kind, ty);
         f.insts[ni.idx()].uniform_ann = f.insts[i.idx()].uniform_ann;
+        f.insts[ni.idx()].loc = f.insts[i.idx()].loc;
         map.insert(i, ni);
     }
     let t = f.term(n);

@@ -20,6 +20,7 @@ fn mk(op: Op, rd: u8, rs1: u8, rs2: u8, imm: i32) -> MachInst {
 
 fn image(code: Vec<MachInst>) -> ProgramImage {
     let words = code.iter().map(|i| i.encode()).collect();
+    let pc_loc = vec![None; code.len()];
     ProgramImage {
         code,
         words,
@@ -31,6 +32,8 @@ fn image(code: Vec<MachInst>) -> ProgramImage {
         local_mem_size: 0,
         kernel: "raw".into(),
         func_entries: HashMap::new(),
+        pc_loc,
+        crt0_len: 0,
     }
 }
 
