@@ -11,6 +11,7 @@ use super::isa::{disasm, MachInst, Op};
 use super::mir::{MFunction, MReg, NONE};
 use super::{isel, mir_opt, regalloc, safety_net};
 use crate::ir::{AddrSpace, FuncId, GlobalId, Loc, Module};
+use crate::target::{AddressMap, TargetDesc};
 use std::collections::HashMap;
 
 /// Typed back-end failure: which function (if known) and what went wrong.
@@ -23,7 +24,7 @@ pub struct BackendError {
 }
 
 impl BackendError {
-    fn new(function: Option<&str>, msg: impl Into<String>) -> BackendError {
+    pub(crate) fn new(function: Option<&str>, msg: impl Into<String>) -> BackendError {
         BackendError {
             function: function.map(|s| s.to_string()),
             msg: msg.into(),
@@ -49,12 +50,17 @@ impl From<BackendError> for String {
     }
 }
 
-/// Memory map (see DESIGN.md).
-pub const DATA_BASE: u32 = 0x0001_0000;
-pub const LOCAL_BASE: u32 = 0x1000_0000;
-pub const STACK_BASE: u32 = 0x2000_0000;
-pub const STACK_SIZE: u32 = 0x1000;
-pub const HEAP_BASE: u32 = 0x4000_0000;
+/// The Vortex memory map (see DESIGN.md), *derived* from
+/// [`crate::target::AddressMap::vortex`] so there is exactly one copy of
+/// the map. The named constants exist for raw-image tests and host-side
+/// helpers; the emitter and simulator read the map from the active
+/// [`TargetDesc`] / [`ProgramImage`], so a target with a different map
+/// needs no code change.
+pub const DATA_BASE: u32 = AddressMap::vortex().data_base;
+pub const LOCAL_BASE: u32 = AddressMap::vortex().local_base;
+pub const STACK_BASE: u32 = AddressMap::vortex().stack_base;
+pub const STACK_SIZE: u32 = AddressMap::vortex().stack_size;
+pub const HEAP_BASE: u32 = AddressMap::vortex().heap_base;
 
 #[derive(Clone, Debug)]
 pub struct ProgramImage {
@@ -88,6 +94,13 @@ pub struct ProgramImage {
     /// Length of the crt0 stub at the head of `code` — the boundary the
     /// profiler uses to separate runtime startup from compiled kernels.
     pub crt0_len: u32,
+    /// Name of the target this image was linked for (stamped into
+    /// profiles, traces, and sweep artifacts).
+    pub target: String,
+    /// The address map the image was laid out against; the simulator
+    /// decodes address spaces from this, so image and device can never
+    /// disagree about where local/stack/heap memory sits.
+    pub addr_map: AddressMap,
 }
 
 impl ProgramImage {
@@ -142,6 +155,10 @@ pub struct BackendOptions {
     /// Run the MIR safety net (disable only to demonstrate Fig. 5).
     pub safety_net: bool,
     pub smem: SharedMemMapping,
+    /// The machine being compiled for: feature gates (isel refusal + the
+    /// final image audit), register-file shape for the allocator, and the
+    /// address map for layout/crt0.
+    pub target: TargetDesc,
 }
 
 impl Default for BackendOptions {
@@ -151,6 +168,7 @@ impl Default for BackendOptions {
             opt_layout: true,
             safety_net: true,
             smem: SharedMemMapping::Local,
+            target: TargetDesc::vortex(),
         }
     }
 }
@@ -168,17 +186,19 @@ pub struct LayoutInfo {
     pub bank_stride: u32,
 }
 
-/// Lay out module globals: Const/Global into the data segment, Local into
-/// the per-core local segment (or, under `SharedMemMapping::Global`, into
-/// per-core banks in the data segment).
+/// Lay out module globals against the target's address map: Const/Global
+/// into the data segment, Local into the per-core local segment (or,
+/// under `SharedMemMapping::Global`, into per-core banks in the data
+/// segment).
 pub fn layout_globals(
     m: &Module,
     smem: SharedMemMapping,
+    map: &AddressMap,
 ) -> (LayoutInfo, Vec<(u32, Vec<u8>)>, u32, u32) {
     let mut info = LayoutInfo::default();
     let mut data = vec![];
-    let mut daddr = DATA_BASE;
-    let mut laddr = LOCAL_BASE;
+    let mut daddr = map.data_base;
+    let mut laddr = map.local_base;
     // First pass: non-local globals.
     for (i, g) in m.globals.iter().enumerate() {
         let gid = GlobalId(i as u32);
@@ -224,7 +244,7 @@ pub fn layout_globals(
             daddr = bank_base + stride * SMEM_MAX_CORES;
         }
     }
-    (info, data, daddr, laddr - LOCAL_BASE)
+    (info, data, daddr, laddr - map.local_base)
 }
 
 /// Lower one function through the full back-end pipeline.
@@ -234,10 +254,10 @@ pub fn lower_function(
     layout: &LayoutInfo,
     opts: &BackendOptions,
 ) -> Result<MFunction, BackendError> {
-    let mut mf = isel::select_function(m, fid, layout);
+    let mut mf = isel::select_function(m, fid, layout, opts)?;
     mir_opt::copy_prop(&mut mf);
     mir_opt::dce(&mut mf);
-    regalloc::allocate(&mut mf);
+    regalloc::allocate(&mut mf, &opts.target.regfile);
     if opts.opt_layout {
         mir_opt::layout(&mut mf);
     }
@@ -411,8 +431,9 @@ fn flatten(mf: &MFunction) -> FlatFunc {
 
 /// Build the crt0 stub. The kernel entry PC is read from the argument
 /// block at launch time (`__args + 24`), so one image serves every kernel
-/// in the module and device memory persists across launches.
-fn build_crt0(args_addr: u32) -> (Vec<MachInst>, usize) {
+/// in the module and device memory persists across launches. Stack
+/// geometry comes from the target's address map.
+fn build_crt0(args_addr: u32, map: &AddressMap) -> (Vec<MachInst>, usize) {
     use Op::*;
     let x5 = 5u8;
     let x6 = 6u8;
@@ -442,9 +463,9 @@ fn build_crt0(args_addr: u32) -> (Vec<MachInst>, usize) {
         mk(MUL, x5, x5, x6, 0),
         mk(CSRR, x6, 0, 0, 0),      // lane_id
         mk(ADD, x5, x5, x6, 0),     // gtid
-        mk(LI, x6, 0, 0, STACK_SIZE as i32),
+        mk(LI, x6, 0, 0, map.stack_size as i32),
         mk(MUL, x5, x5, x6, 0),
-        mk(LI, x6, 0, 0, (STACK_BASE + STACK_SIZE) as i32),
+        mk(LI, x6, 0, 0, (map.stack_base + map.stack_size) as i32),
         mk(ADD, sp, x5, x6, 0),     // sp = top of this thread's stack
         mk(LI, x6, 0, 0, args_addr as i32),
         mk(LW, x6, x6, 0, 24),      // kernel entry pc from __args
@@ -467,7 +488,8 @@ pub fn build_image(
     let entry_fid = m.find_func(dispatcher).ok_or_else(|| {
         BackendError::new(Some(dispatcher), "unknown kernel entry")
     })?;
-    let (layout, data, data_end, _local_static) = layout_globals(m, opts.smem);
+    let map = opts.target.addr_map;
+    let (layout, data, data_end, _local_static) = layout_globals(m, opts.smem, &map);
     // Reachable functions — from *every* kernel so one image serves all
     // launches of this module.
     let cg = crate::analysis::callgraph::CallGraph::build(m);
@@ -488,7 +510,7 @@ pub fn build_image(
         BackendError::new(None, "module has no __args block (schedule pass not run?)")
     })?;
     let args_addr_v = layout.addr[&GlobalId(args_probe as u32)];
-    let (mut code, crt0_len) = build_crt0(args_addr_v);
+    let (mut code, crt0_len) = build_crt0(args_addr_v, &map);
     // crt0 is runtime startup, not source code: no line-table entries.
     let mut pc_loc: Vec<Option<Loc>> = vec![None; crt0_len];
     let mut func_entries: HashMap<String, u32> = HashMap::new();
@@ -531,6 +553,24 @@ pub fn build_image(
         }
         cursor += fl.insts.len() as u32;
     }
+    // Final image audit: no instruction may use an extension the target
+    // lacks. isel already refuses per-function; this catches anything a
+    // later MIR pass or crt0 could introduce, making "no vx_cmov in a
+    // vortex-min image" a structural guarantee, not a convention.
+    for (pc, inst) in code.iter().enumerate() {
+        if !opts.target.supports_op(inst.op) {
+            let gate = crate::target::Features::gate_name(inst.op).unwrap_or("?");
+            return Err(BackendError::new(
+                Some(dispatcher),
+                format!(
+                    "linked image contains '{}' at pc {pc}, but target '{}' lacks the \
+                     '{gate}' extension",
+                    inst.op.mnemonic(),
+                    opts.target.name
+                ),
+            ));
+        }
+    }
     let words: Vec<u64> = code.iter().map(|i| i.encode()).collect();
     // Global name table.
     let mut global_addr = HashMap::new();
@@ -562,6 +602,8 @@ pub fn build_image(
         func_entries,
         pc_loc,
         crt0_len: crt0_len as u32,
+        target: opts.target.name.to_string(),
+        addr_map: map,
     })
 }
 
@@ -641,6 +683,61 @@ kernel void k(global int* out, int n) {
                 assert_eq!(img.code[join_i as usize].op, Op::JOIN, "join target must be a JOIN");
             }
         }
+    }
+
+    /// Cross-target legalization at the image level: the same kernel
+    /// compiled for vortex keeps its select as vx_cmov, while the
+    /// vortex-min image is proven free of every gated extension op.
+    #[test]
+    fn vortex_min_image_has_no_gated_ops() {
+        let src = r#"
+kernel void k(global int* out, int n) {
+    int i = get_global_id(0);
+    int v = 0;
+    if (i % 2 == 0) { v = i * 3; } else { v = i + 7; }
+    if (i < n) out[i] = v;
+}
+"#;
+        let (mut mv, infos) = compile_kernels(src, &FrontendOptions::default()).unwrap();
+        let mut mm = mv.clone();
+        let dispatcher = format!("__main_{}", infos[0].name);
+        // vortex @ Recon (zicond on): select survives to vx_cmov.
+        let mut cfg = OptLevel::Recon.config();
+        cfg.verify = true;
+        run_middle_end(&mut mv, &cfg);
+        let img_v = build_image(&mv, &dispatcher, &BackendOptions::default()).unwrap();
+        assert_eq!(img_v.target, "vortex");
+        assert!(
+            img_v.code.iter().any(|i| i.op == Op::CMOV),
+            "vortex image should retain the formed select as vx_cmov"
+        );
+        // vortex-min: the middle-end legalizes selects to branches and the
+        // linked image contains no gated op at all.
+        let min = crate::target::TargetDesc::vortex_min();
+        let mut cfg_min = OptLevel::Recon.config();
+        cfg_min.features = min.features;
+        cfg_min.verify = true;
+        run_middle_end(&mut mm, &cfg_min);
+        let img_m = build_image(
+            &mm,
+            &dispatcher,
+            &BackendOptions {
+                zicond: false,
+                target: min,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(img_m.target, "vortex-min");
+        for inst in &img_m.code {
+            assert!(
+                min.supports_op(inst.op),
+                "gated op {:?} leaked into a vortex-min image",
+                inst.op
+            );
+        }
+        assert!(img_m.code.iter().all(|i| i.op != Op::CMOV));
+        assert_eq!(img_m.addr_map, min.addr_map);
     }
 
     #[test]

@@ -45,14 +45,18 @@ pub enum CsrId {
 }
 
 impl CsrId {
-    pub fn from_u32(v: u32) -> CsrId {
+    /// Decode a CSR index. Unknown indices are `None` — the simulator
+    /// traps on them (a silently-misdecoded CSR read is a miscompile
+    /// masquerading as a hardware value).
+    pub fn from_u32(v: u32) -> Option<CsrId> {
         match v {
-            0 => CsrId::LaneId,
-            1 => CsrId::WarpId,
-            2 => CsrId::CoreId,
-            3 => CsrId::NumThreads,
-            4 => CsrId::NumWarps,
-            _ => CsrId::NumCores,
+            0 => Some(CsrId::LaneId),
+            1 => Some(CsrId::WarpId),
+            2 => Some(CsrId::CoreId),
+            3 => Some(CsrId::NumThreads),
+            4 => Some(CsrId::NumWarps),
+            5 => Some(CsrId::NumCores),
+            _ => None,
         }
     }
 }
@@ -256,7 +260,10 @@ pub fn disasm(i: &MachInst) -> String {
                 format!("{} {}, {}, {}", i.op.mnemonic(), r(i.rd), r(i.rs1), i.imm)
             }
             Op::ECALL => format!("ecall {}", i.imm),
-            Op::CSRR => format!("csrr {}, {:?}", r(i.rd), CsrId::from_u32(i.imm as u32)),
+            Op::CSRR => match CsrId::from_u32(i.imm as u32) {
+                Some(id) => format!("csrr {}, {:?}", r(i.rd), id),
+                None => format!("csrr {}, ?{}", r(i.rd), i.imm),
+            },
             Op::TMC => format!("vx_tmc {}", r(i.rs1)),
             Op::WSPAWN => format!("vx_wspawn {}, @{}", r(i.rs1), i.imm),
             Op::SPLIT | Op::SPLITN => {
@@ -311,6 +318,22 @@ mod tests {
         assert!(Op::from_u8(0x72) == Some(Op::SPLIT));
         assert_eq!(Op::SPLIT.class(), OpClass::Vx);
         assert_eq!(Op::FEXP.class(), OpClass::Sfu);
+    }
+
+    #[test]
+    fn csr_decode_is_fallible() {
+        assert_eq!(CsrId::from_u32(0), Some(CsrId::LaneId));
+        assert_eq!(CsrId::from_u32(5), Some(CsrId::NumCores));
+        assert_eq!(CsrId::from_u32(6), None);
+        assert_eq!(CsrId::from_u32(u32::MAX), None);
+        let bad = MachInst {
+            op: Op::CSRR,
+            rd: 5,
+            rs1: 0,
+            rs2: 0,
+            imm: 99,
+        };
+        assert_eq!(disasm(&bad), "csrr x5, ?99");
     }
 
     #[test]

@@ -4,7 +4,15 @@
 //! edges are split first — precisely, without disturbing the `SplitBr`
 //! reconvergence field). Divergence operations lower 1:1 onto the Vortex
 //! ISA extensions.
+//!
+//! Selection is target-checked: ops gated on an ISA feature the
+//! [`crate::target::TargetDesc`] does not declare are refused with a
+//! typed [`BackendError`] (select→branch legalization happens in the
+//! middle-end, *before* divergence management — see
+//! `transform::pass::OptConfig::features`; there is no post-isel
+//! fallback for `vx_shfl`/`vx_vote`).
 
+use super::emit::BackendError;
 use super::isa::{Op, A0, FA0, RA, SP};
 use super::mir::{MBlock, MFunction, MInst, MReg, NONE};
 use crate::ir::*;
@@ -76,11 +84,49 @@ pub struct IselResult {
     pub mf: MFunction,
 }
 
+/// Refuse selected MIR that uses an extension the target lacks. The
+/// middle-end keeps selects/warp intrinsics out of reach on such targets
+/// when driven through `VoltOptions`; this is the hard backstop for
+/// hand-built IR or mismatched configurations.
+fn check_target_support(
+    mf: &MFunction,
+    target: &crate::target::TargetDesc,
+) -> Result<(), BackendError> {
+    for b in &mf.blocks {
+        for i in &b.insts {
+            if !target.supports_op(i.op) {
+                let gate = crate::target::Features::gate_name(i.op).unwrap_or("?");
+                let hint = match i.op {
+                    Op::CMOV => {
+                        " (selects must be legalized to branches in the middle-end: \
+                         compile with OptConfig.features matching the target)"
+                    }
+                    Op::SHFL | Op::VOTEALL | Op::VOTEANY | Op::BALLOT => {
+                        " (no hardware fallback: recompile with warp_hw = false \
+                         for the shared-memory software emulation)"
+                    }
+                    _ => "",
+                };
+                return Err(BackendError::new(
+                    Some(mf.name.as_str()),
+                    format!(
+                        "'{}' selected but target '{}' lacks the '{gate}' extension{hint}",
+                        i.op.mnemonic(),
+                        target.name
+                    ),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 pub fn select_function(
     m: &Module,
     fid: FuncId,
     layout: &super::emit::LayoutInfo,
-) -> MFunction {
+    opts: &super::emit::BackendOptions,
+) -> Result<MFunction, BackendError> {
     let mut f = m.func(fid).clone();
     f.remove_unreachable();
     split_critical_edges(&mut f);
@@ -170,7 +216,8 @@ pub fn select_function(
             }
         }
     }
-    ctx.mf
+    check_target_support(&ctx.mf, &opts.target)?;
+    Ok(ctx.mf)
 }
 
 struct Ctx<'a> {
@@ -744,7 +791,7 @@ mod tests {
             b.ret(None);
         }
         let fid = m.add_func(f);
-        let mf = select_function(&m, fid, &gaddrs());
+        let mf = select_function(&m, fid, &gaddrs(), &Default::default()).unwrap();
         let ops: Vec<Op> = mf.blocks[0].insts.iter().map(|i| i.op).collect();
         assert!(ops.contains(&Op::ADDI)); // add with immediate
         assert!(ops.contains(&Op::SLLI)); // gep scaling
@@ -777,7 +824,7 @@ mod tests {
         let p = b.phi(Type::I32, vec![(t, Val::ci(1)), (e, Val::ci(2))]);
         b.ret(Some(p));
         let fid = m.add_func(f);
-        let mf = select_function(&m, fid, &gaddrs());
+        let mf = select_function(&m, fid, &gaddrs(), &Default::default()).unwrap();
         // Both preds of j end with [LI, MOV, J].
         for bi in [t.idx(), e.idx()] {
             let ops: Vec<Op> = mf.blocks[bi].insts.iter().map(|i| i.op).collect();
@@ -805,7 +852,7 @@ mod tests {
         b.intr(Intr::Join, vec![]);
         b.ret(None);
         let fid = m.add_func(f);
-        let mf = select_function(&m, fid, &gaddrs());
+        let mf = select_function(&m, fid, &gaddrs(), &Default::default()).unwrap();
         let split = mf.blocks[0]
             .insts
             .iter()
@@ -815,6 +862,49 @@ mod tests {
         assert_eq!(split.t2, Some(e.idx()));
         assert_eq!(split.tjoin, Some(j.idx()));
         assert!(mf.blocks[j.idx()].insts.iter().any(|i| i.op == Op::JOIN));
+    }
+
+    /// Feature refusal: extension ops on a target lacking them are typed
+    /// back-end errors naming the gate, never silent selections.
+    #[test]
+    fn refuses_extension_ops_target_lacks() {
+        use crate::backend::emit::BackendOptions;
+        let min = BackendOptions {
+            target: crate::target::TargetDesc::vortex_min(),
+            zicond: false,
+            ..Default::default()
+        };
+        // vx_shfl on vortex-min.
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        {
+            let mut b = Builder::new(&mut f);
+            let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            let s = b.intr(Intr::Shfl, vec![lane, Val::ci(0)]);
+            let _ = s;
+            b.ret(None);
+        }
+        let fid = m.add_func(f);
+        let e = select_function(&m, fid, &gaddrs(), &min).unwrap_err();
+        assert!(e.msg.contains("shfl"), "{e}");
+        assert!(e.msg.contains("vortex-min"), "{e}");
+        // Select → vx_cmov on vortex-min (unlegalized middle-end output).
+        let mut m2 = Module::new("t");
+        let mut f2 = Function::new("k", vec![], Type::Void);
+        {
+            let mut b = Builder::new(&mut f2);
+            let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            let c = b.icmp(ICmp::Slt, lane, Val::ci(4));
+            let s = b.select(c, Val::ci(1), Val::ci(2));
+            let _ = s;
+            b.ret(None);
+        }
+        let fid2 = m2.add_func(f2);
+        let e2 = select_function(&m2, fid2, &gaddrs(), &min).unwrap_err();
+        assert!(e2.msg.contains("zicond"), "{e2}");
+        // The same functions select fine for the full vortex target.
+        select_function(&m, fid, &gaddrs(), &Default::default()).unwrap();
+        select_function(&m2, fid2, &gaddrs(), &Default::default()).unwrap();
     }
 
     #[test]
@@ -835,7 +925,7 @@ mod tests {
         b.intr(Intr::Join, vec![]);
         b.ret(None);
         let fid = m.add_func(f);
-        let mf = select_function(&m, fid, &gaddrs());
+        let mf = select_function(&m, fid, &gaddrs(), &Default::default()).unwrap();
         let split = mf.blocks[0]
             .insts
             .iter()

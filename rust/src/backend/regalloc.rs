@@ -9,6 +9,7 @@
 
 use super::isa::Op;
 use super::mir::{liveness, MFunction, MInst, MReg};
+use crate::target::RegFile;
 use std::collections::HashMap;
 
 const T5: u32 = 30;
@@ -34,7 +35,7 @@ struct Interval {
     crosses_call: bool,
 }
 
-pub fn allocate(f: &mut MFunction) -> RegAllocReport {
+pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
     let mut report = RegAllocReport::default();
     // Linear numbering.
     let mut pos = 0u32;
@@ -92,17 +93,20 @@ pub fn allocate(f: &mut MFunction) -> RegAllocReport {
         .collect();
     intervals.sort_by_key(|iv| iv.start);
 
-    // Register pools (scratch + special registers excluded).
-    let int_pool: Vec<u32> = if f.has_calls {
-        (5..=9).chain(18..=28).collect()
-    } else {
-        (5..=28).collect()
-    };
-    let float_pool: Vec<u32> = if f.has_calls {
-        (32..=41).chain(50..=60).collect()
-    } else {
-        (32..=60).collect()
-    };
+    // Register pools from the target's register-file shape (scratch +
+    // special registers sit outside the allocatable windows). Functions
+    // with calls additionally avoid the ABI argument registers. All
+    // window arithmetic is u32 and half-open so a custom RegFile with
+    // arg_count == 0 (or a window at the type boundary) cannot wrap.
+    let args = rf.arg_base as u32..rf.arg_base as u32 + rf.arg_count as u32;
+    let fargs = rf.float_base as u32 + rf.arg_base as u32
+        ..rf.float_base as u32 + rf.arg_base as u32 + rf.arg_count as u32;
+    let int_pool: Vec<u32> = (rf.int_alloc.0 as u32..=rf.int_alloc.1 as u32)
+        .filter(|r| !f.has_calls || !args.contains(r))
+        .collect();
+    let float_pool: Vec<u32> = (rf.float_alloc.0 as u32..=rf.float_alloc.1 as u32)
+        .filter(|r| !f.has_calls || !fargs.contains(r))
+        .collect();
 
     let mut assignment: HashMap<MReg, u32> = HashMap::new();
     let mut spills: HashMap<MReg, u32> = HashMap::new(); // vreg -> slot index
@@ -339,7 +343,7 @@ mod tests {
     #[test]
     fn allocates_without_spills_when_fits() {
         let mut f = func_with_pressure(8);
-        let rep = allocate(&mut f);
+        let rep = allocate(&mut f, &RegFile::vortex());
         assert_eq!(rep.spilled, 0);
         // No virtual registers remain.
         for b in &f.blocks {
@@ -352,7 +356,7 @@ mod tests {
     #[test]
     fn spills_under_pressure() {
         let mut f = func_with_pressure(40);
-        let rep = allocate(&mut f);
+        let rep = allocate(&mut f, &RegFile::vortex());
         assert!(rep.spilled > 0);
         assert!(f.spill_size >= 4 * rep.spilled as u32);
         for b in &f.blocks {
@@ -363,6 +367,28 @@ mod tests {
         // Spill traffic exists.
         assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::SW));
         assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::LW));
+    }
+
+    /// The allocator pools come from the target's register-file shape: a
+    /// narrower allocatable window spills where the full file does not.
+    #[test]
+    fn pools_follow_regfile_shape() {
+        let narrow = RegFile {
+            int_alloc: (5, 12),
+            ..RegFile::vortex()
+        };
+        let mut f = func_with_pressure(12);
+        let rep = allocate(&mut f, &narrow);
+        assert!(rep.spilled > 0, "13 live values cannot fit 8 allocatable regs");
+        for b in &f.blocks {
+            for i in &b.insts {
+                for r in [i.rd, i.rs1, i.rs2] {
+                    assert!(!r.is_virt());
+                }
+            }
+        }
+        let mut f2 = func_with_pressure(12);
+        assert_eq!(allocate(&mut f2, &RegFile::vortex()).spilled, 0);
     }
 
     #[test]
@@ -387,7 +413,7 @@ mod tests {
         ret.rd = MReg::phys(0);
         ret.rs1 = MReg::phys(super::super::isa::RA);
         f.blocks[0].insts.push(ret);
-        let rep = allocate(&mut f);
+        let rep = allocate(&mut f, &RegFile::vortex());
         assert_eq!(rep.spilled, 1);
         finalize_frame(&mut f);
         // prologue adjusts sp and saves ra.

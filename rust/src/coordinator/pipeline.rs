@@ -11,6 +11,7 @@
 use crate::backend::emit::{BackendOptions, ProgramImage};
 use crate::driver::{compile_program, KernelEntry, VoltError, VoltOptions};
 use crate::frontend::FrontendOptions;
+use crate::sim::SimConfig;
 use crate::transform::{MiddleEndReport, OptLevel};
 
 #[derive(Debug)]
@@ -48,6 +49,11 @@ pub fn compile_source(
         opt_layout: be.opt_layout,
         safety_net: be.safety_net,
         smem: be.smem,
+        // Forward the caller's target (and its default device geometry,
+        // so caps validation checks against the right profile) instead
+        // of silently compiling for vortex.
+        target: be.target,
+        sim: SimConfig::from_target(&be.target),
         ..VoltOptions::default()
     };
     let p = compile_program(src, &opts)?;

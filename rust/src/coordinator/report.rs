@@ -200,10 +200,14 @@ pub fn render_o3_cycles(rows: &[O3Row]) -> String {
     out
 }
 
-/// Machine-readable serialization of the O3 sweep (BENCH_cycles.json).
-/// Hand-rolled JSON: the offline build has no serde.
-pub fn json_o3_cycles(rows: &[O3Row]) -> String {
-    let mut s = String::from("{\n  \"baseline\": \"Recon\",\n  \"candidate\": \"O3\",\n");
+/// Machine-readable serialization of the O3 sweep (BENCH_cycles.json),
+/// stamped with the target it was measured on so per-target CI artifacts
+/// stay distinguishable. Hand-rolled JSON: the offline build has no
+/// serde.
+pub fn json_o3_cycles(rows: &[O3Row], target: &str) -> String {
+    let mut s = format!(
+        "{{\n  \"target\": \"{target}\",\n  \"baseline\": \"Recon\",\n  \"candidate\": \"O3\",\n"
+    );
     let g = geomean(rows.iter().map(|r| r.cycle_reduction()));
     s.push_str(&format!(
         "  \"geomean_cycle_reduction\": {:.6},\n  \"kernels\": [\n",
@@ -220,6 +224,68 @@ pub fn json_o3_cycles(rows: &[O3Row]) -> String {
             r.recon_instrs,
             r.o3_instrs,
             r.cycle_reduction(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// The cross-target differential sweep table: per-benchmark cycles /
+/// instrs / code size on every built-in target.
+pub fn render_cross_target(rows: &[CrossTargetRow]) -> String {
+    let mut out = String::from(
+        "Cross-target sweep — every kernel validated on every built-in target\n",
+    );
+    if rows.is_empty() {
+        return out;
+    }
+    let mut header = vec!["benchmark".to_string()];
+    for (t, _, _, _) in &rows[0].cells {
+        header.push(format!("{t}-cyc"));
+        header.push(format!("{t}-instr"));
+        header.push(format!("{t}-code"));
+    }
+    let widths: Vec<usize> = std::iter::once(14usize)
+        .chain(header[1..].iter().map(|h| h.len().max(11)))
+        .collect();
+    out.push_str(&fmt_row(&header, &widths));
+    out.push('\n');
+    for r in rows {
+        let mut cells = vec![r.name.to_string()];
+        for (_, cyc, instr, code) in &r.cells {
+            cells.push(cyc.to_string());
+            cells.push(instr.to_string());
+            cells.push(code.to_string());
+        }
+        out.push_str(&fmt_row(&cells, &widths));
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{} kernels x {} targets: all validators passed\n",
+        rows.len(),
+        rows[0].cells.len()
+    ));
+    out
+}
+
+/// Machine-readable serialization of the cross-target sweep
+/// (BENCH_cross_target.json).
+pub fn json_cross_target(rows: &[CrossTargetRow], opt: OptLevel) -> String {
+    let mut s = format!("{{\n  \"level\": \"{}\",\n  \"kernels\": [\n", opt.name());
+    for (i, r) in rows.iter().enumerate() {
+        let mut cells = String::new();
+        for (j, (t, cyc, instr, code)) in r.cells.iter().enumerate() {
+            cells.push_str(&format!(
+                "{{\"target\": \"{t}\", \"cycles\": {cyc}, \"instrs\": {instr}, \
+                 \"code_size\": {code}}}{}",
+                if j + 1 == r.cells.len() { "" } else { ", " }
+            ));
+        }
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"suite\": \"{}\", \"targets\": [{cells}]}}{}\n",
+            r.name,
+            r.suite,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -279,11 +345,12 @@ pub fn render_profile_sweep(rows: &[ProfileRow]) -> String {
 }
 
 /// Machine-readable serialization of the profile sweep
-/// (`BENCH_profile.json`). Hand-rolled JSON: the offline build has no
-/// serde. Schema documented in `docs/PROFILING.md`.
-pub fn json_profile(rows: &[ProfileRow], level: OptLevel) -> String {
+/// (`BENCH_profile.json`), stamped with the target it profiled.
+/// Hand-rolled JSON: the offline build has no serde. Schema documented
+/// in `docs/PROFILING.md`.
+pub fn json_profile(rows: &[ProfileRow], level: OptLevel, target: &str) -> String {
     let mut s = format!(
-        "{{\n  \"level\": \"{}\",\n  \"kernels\": [\n",
+        "{{\n  \"target\": \"{target}\",\n  \"level\": \"{}\",\n  \"kernels\": [\n",
         level.name()
     );
     for (i, r) in rows.iter().enumerate() {
@@ -416,13 +483,40 @@ mod tests {
         let t = render_o3_cycles(&rows);
         assert!(t.contains("1.111")); // 1000/900
         assert!(t.contains('!')); // regression marker for b
-        let j = json_o3_cycles(&rows);
+        let j = json_o3_cycles(&rows, "vortex");
+        assert!(j.contains("\"target\": \"vortex\""));
         assert!(j.contains("\"baseline\": \"Recon\""));
         assert!(j.contains("\"name\": \"a\""));
         assert!(j.contains("\"o3_cycles\": 820"));
         assert!(j.contains("\"geomean_cycle_reduction\""));
         // Exactly one comma-separated kernel boundary (2 entries).
         assert_eq!(j.matches("},").count(), 1);
+        crate::prof::trace::validate_json(&j).unwrap();
+    }
+
+    #[test]
+    fn renders_cross_target_table_and_json() {
+        let rows = vec![
+            CrossTargetRow {
+                name: "saxpy",
+                suite: "sdk",
+                cells: vec![("vortex", 1000, 400, 120), ("vortex-min", 1400, 520, 130)],
+            },
+            CrossTargetRow {
+                name: "vote",
+                suite: "hecbench",
+                cells: vec![("vortex", 800, 300, 90), ("vortex-min", 2400, 900, 140)],
+            },
+        ];
+        let t = render_cross_target(&rows);
+        assert!(t.contains("vortex-cyc"));
+        assert!(t.contains("vortex-min-cyc"));
+        assert!(t.contains("2 kernels x 2 targets"));
+        let j = json_cross_target(&rows, OptLevel::Recon);
+        crate::prof::trace::validate_json(&j)
+            .unwrap_or_else(|e| panic!("cross-target json invalid: {e}\n{j}"));
+        assert!(j.contains("\"target\": \"vortex-min\""));
+        assert!(j.contains("\"cycles\": 2400"));
     }
 
     #[test]
@@ -466,10 +560,11 @@ mod tests {
         let t = render_profile_sweep(&rows);
         assert!(t.contains("saxpy"));
         assert!(t.contains("L4"));
-        let j = json_profile(&rows, OptLevel::O3);
+        let j = json_profile(&rows, OptLevel::O3, "vortex");
         crate::prof::trace::validate_json(&j)
             .unwrap_or_else(|e| panic!("BENCH_profile.json invalid: {e}\n{j}"));
         assert!(j.contains("\"level\": \"O3\""));
+        assert!(j.contains("\"target\": \"vortex\""));
         assert!(j.contains("\"memory\": 250"));
         assert!(j.contains("\"hot_line\": {\"line\": 4, \"cycles\": 720}"));
     }

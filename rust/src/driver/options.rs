@@ -13,18 +13,28 @@ use crate::backend::emit::{BackendOptions, SharedMemMapping, SMEM_MAX_CORES};
 use crate::frontend::builtins::{SCRATCH_LANES, SCRATCH_WARPS};
 use crate::frontend::{Dialect, FrontendOptions};
 use crate::sim::SimConfig;
+use crate::target::TargetDesc;
 use crate::transform::{OptConfig, OptLevel};
 
 #[derive(Clone, Copy, Debug)]
 pub struct VoltOptions {
     pub dialect: Dialect,
+    /// The machine being compiled for (`volt::target`). Select legality,
+    /// warp-primitive availability, register-file shape, the address map
+    /// and the device feature set all derive from this; it is part of
+    /// the binary-cache fingerprint, so the same source compiled for two
+    /// targets occupies two cache entries.
+    pub target: TargetDesc,
     /// Lower warp builtins to vx_shfl/vx_vote (true) or the CuPBoP-style
-    /// shared-memory software emulation (false) — the Fig. 9 axis.
+    /// shared-memory software emulation (false) — the Fig. 9 axis. On a
+    /// target without the shfl/vote extensions, `true` makes kernels that
+    /// actually use warp builtins fail with a typed back-end error.
     pub warp_hw: bool,
     /// Ladder point (paper §5.2, plus the repo's O3 rung above Recon).
     pub opt: OptLevel,
-    /// Back-end conditional-move support. `None` derives it from the
-    /// ladder level (the only consistent default); `Some(_)` overrides.
+    /// Back-end conditional-move override. `None` derives it from the
+    /// ladder level and the target's feature set (the only consistent
+    /// default); `Some(true)` on a target without ZiCond is rejected.
     pub zicond: Option<bool>,
     pub opt_layout: bool,
     /// The Fig. 5 divergence safety net.
@@ -51,6 +61,7 @@ impl Default for VoltOptions {
     fn default() -> Self {
         VoltOptions {
             dialect: Dialect::OpenCL,
+            target: TargetDesc::vortex(),
             warp_hw: true,
             opt: OptLevel::Recon,
             zicond: None,
@@ -69,13 +80,18 @@ impl VoltOptions {
     pub fn builder() -> VoltOptionsBuilder {
         VoltOptionsBuilder {
             opts: VoltOptions::default(),
+            bad_target: None,
+            sim_explicit: false,
+            warp_hw_explicit: false,
         }
     }
 
-    /// Effective conditional-move setting (explicit override, else
-    /// derived from the ladder level).
+    /// Effective conditional-move setting: the explicit override (else
+    /// the ladder-level derivation), gated on the target actually
+    /// implementing the extension. On `vortex-min` this is always false
+    /// — selects are legalized to branches regardless of ladder level.
     pub fn effective_zicond(&self) -> bool {
-        self.zicond.unwrap_or(self.opt >= OptLevel::ZiCond)
+        self.zicond.unwrap_or(self.opt >= OptLevel::ZiCond) && self.target.features.zicond
     }
 
     /// Front-end view.
@@ -96,6 +112,7 @@ impl VoltOptions {
     pub fn opt_config(&self) -> OptConfig {
         let mut cfg = self.opt.config();
         cfg.zicond = self.effective_zicond();
+        cfg.features = self.target.features;
         cfg.verify = false;
         cfg
     }
@@ -107,13 +124,30 @@ impl VoltOptions {
             opt_layout: self.opt_layout,
             safety_net: self.safety_net,
             smem: self.smem,
+            target: self.target,
+        }
+    }
+
+    /// The device configuration streams created from this session use:
+    /// the caller's geometry, with the feature set, address map and cost
+    /// model always taken from the target (geometry is configurable,
+    /// machine identity is not).
+    pub fn device_config(&self) -> SimConfig {
+        SimConfig {
+            features: self.target.features,
+            addr_map: self.target.addr_map,
+            costs: self.target.costs,
+            ..self.sim
         }
     }
 
     /// Fold every field that affects the produced binary into the cache
     /// fingerprint (FNV-1a). Simulator geometry and `verify_ir` do not
-    /// change the image and are deliberately excluded.
+    /// change the image and are deliberately excluded; the target (name,
+    /// features, shape, map) is included, so identical source compiled
+    /// for two targets yields two distinct cache entries.
     pub(crate) fn hash_into(&self, h: &mut Fnv1a) {
+        h.bytes(&self.target.fingerprint_bytes());
         h.byte(match self.dialect {
             Dialect::OpenCL => 0,
             Dialect::Cuda => 1,
@@ -133,6 +167,16 @@ impl VoltOptions {
 #[derive(Clone, Debug)]
 pub struct VoltOptionsBuilder {
     opts: VoltOptions,
+    /// Unknown target name passed to [`VoltOptionsBuilder::target`];
+    /// surfaced as a typed error at `build()`.
+    bad_target: Option<String>,
+    /// Whether the caller set the simulator geometry explicitly (a later
+    /// `target()` then keeps it instead of resetting to the profile's
+    /// default geometry).
+    sim_explicit: bool,
+    /// Whether the caller chose warp lowering explicitly (a later
+    /// `target()` then keeps it instead of following the profile).
+    warp_hw_explicit: bool,
 }
 
 impl VoltOptionsBuilder {
@@ -140,12 +184,45 @@ impl VoltOptionsBuilder {
         self.opts.dialect = d;
         self
     }
+    /// Select a built-in target profile by name (`"vortex"`,
+    /// `"vortex-min"`). Unknown names become a typed `InvalidOptions`
+    /// error at `build()`. Unless the caller already set them
+    /// explicitly, the device configuration switches to the profile's
+    /// default ([`SimConfig::from_target`]) and warp lowering follows
+    /// the profile (`default_warp_hw`) — so `target("vortex-min")`
+    /// compiles warp builtins through the software emulation instead of
+    /// failing on the missing shfl/vote extensions.
+    pub fn target(mut self, name: &str) -> Self {
+        match TargetDesc::by_name(name) {
+            Some(t) => self.set_target(t),
+            None => {
+                self.bad_target = Some(name.to_string());
+            }
+        }
+        self
+    }
+    /// Select a target by description (custom targets included).
+    pub fn target_desc(mut self, t: TargetDesc) -> Self {
+        self.set_target(t);
+        self
+    }
+    fn set_target(&mut self, t: TargetDesc) {
+        self.opts.target = t;
+        self.bad_target = None;
+        if !self.sim_explicit {
+            self.opts.sim = SimConfig::from_target(&t);
+        }
+        if !self.warp_hw_explicit {
+            self.opts.warp_hw = t.default_warp_hw();
+        }
+    }
     pub fn opt_level(mut self, lvl: OptLevel) -> Self {
         self.opts.opt = lvl;
         self
     }
     pub fn warp_hw(mut self, on: bool) -> Self {
         self.opts.warp_hw = on;
+        self.warp_hw_explicit = true;
         self
     }
     /// Force the back-end cmov setting instead of deriving it from the
@@ -182,11 +259,18 @@ impl VoltOptionsBuilder {
     }
     pub fn sim(mut self, cfg: SimConfig) -> Self {
         self.opts.sim = cfg;
+        self.sim_explicit = true;
         self
     }
 
     /// Validate and produce the final options.
     pub fn build(self) -> Result<VoltOptions, VoltError> {
+        if let Some(name) = &self.bad_target {
+            return Err(VoltError::invalid_options(format!(
+                "unknown target '{name}' (built-in targets: {})",
+                TargetDesc::BUILTIN_NAMES.join(", ")
+            )));
+        }
         self.opts.validate()?;
         Ok(self.opts)
     }
@@ -198,15 +282,51 @@ impl VoltOptions {
     /// struct literal (the legacy shim path) cannot bypass them.
     pub fn validate(&self) -> Result<(), VoltError> {
         let o = self;
-        if o.sim.num_cores == 0 || o.sim.warps_per_core == 0 || o.sim.threads_per_warp == 0 {
-            return Err(VoltError::invalid_options(
-                "device geometry must be non-zero (cores, warps, threads)",
-            ));
+        // Geometry vs the target's capability ceilings (and the 32-bit
+        // mask structural limits): typed errors, never silent clamping.
+        o.sim
+            .check_caps(&o.target)
+            .map_err(VoltError::invalid_options)?;
+        // Custom register files must respect the machine's reserved set
+        // (x0/ra/sp, spill scratch) — a window overlapping the scratch
+        // registers would be a silent miscompile, not an error.
+        o.target
+            .regfile
+            .validate()
+            .map_err(|e| VoltError::invalid_options(format!("target '{}': {e}", o.target.name)))?;
+        // Custom address maps must give this geometry disjoint, ordered
+        // windows: GlobalMem resolves overlapping segments to whichever
+        // was added last, so an overlap is silent aliasing (stack stores
+        // clobbering the heap), not a fault.
+        {
+            let m = o.target.addr_map;
+            let local_end = m.local_base as u64 + o.sim.local_mem_bytes as u64;
+            let stack_end =
+                m.stack_base as u64 + o.sim.total_threads() as u64 * m.stack_size as u64;
+            let heap_end = m.heap_base as u64 + o.sim.heap_bytes as u64;
+            if m.stack_size == 0
+                || !(m.data_base < m.local_base
+                    && local_end <= m.stack_base as u64
+                    && stack_end <= m.heap_base as u64
+                    && heap_end <= 1 << 32)
+            {
+                return Err(VoltError::invalid_options(format!(
+                    "target '{}': address map windows overlap or overflow for this \
+                     geometry (data {:#x} < local {:#x}..{local_end:#x} <= stack \
+                     {:#x}..{stack_end:#x} <= heap {:#x}..{heap_end:#x} <= 4GiB \
+                     must hold)",
+                    o.target.name,
+                    m.data_base,
+                    m.local_base,
+                    m.stack_base,
+                    m.heap_base,
+                )));
+            }
         }
-        if o.sim.threads_per_warp > 32 {
+        if o.zicond == Some(true) && !o.target.features.zicond {
             return Err(VoltError::invalid_options(format!(
-                "threads_per_warp {} exceeds the 32-lane divergence-mask width",
-                o.sim.threads_per_warp
+                "zicond cmov forced on, but target '{}' does not implement the extension",
+                o.target.name
             )));
         }
         if o.smem == SharedMemMapping::Global && o.sim.num_cores > SMEM_MAX_CORES {
@@ -352,6 +472,127 @@ mod tests {
             .build()
             .unwrap();
         assert!(o.effective_zicond());
+    }
+
+    #[test]
+    fn target_selection_and_validation() {
+        // Builder by name: geometry follows the profile default.
+        let o = VoltOptions::builder().target("vortex-min").build().unwrap();
+        assert_eq!(o.target.name, "vortex-min");
+        assert_eq!(o.sim.num_cores, 2);
+        assert_eq!(o.sim.warps_per_core, 8);
+        assert!(
+            !o.warp_hw,
+            "warp lowering follows the profile (no shfl/vote on vortex-min)"
+        );
+        // An explicit warp_hw choice survives target selection in either
+        // order.
+        let o2 = VoltOptions::builder()
+            .warp_hw(true)
+            .target("vortex-min")
+            .build()
+            .unwrap();
+        assert!(o2.warp_hw);
+        let o3 = VoltOptions::builder()
+            .target("vortex-min")
+            .warp_hw(true)
+            .build()
+            .unwrap();
+        assert!(o3.warp_hw);
+        assert!(!o.effective_zicond(), "vortex-min never forms selects");
+        assert!(!o.opt_config().effective_zicond());
+        assert!(!o.backend().zicond);
+        assert_eq!(o.backend().target.name, "vortex-min");
+        let dev = o.device_config();
+        assert!(!dev.features.zicond && !dev.features.shfl);
+        // Unknown target name: typed error at build.
+        let e = VoltOptions::builder().target("ventus").build().unwrap_err();
+        assert!(matches!(e, VoltError::InvalidOptions { .. }));
+        assert!(e.to_string().contains("ventus"), "{e}");
+        // Explicit geometry set before target() is preserved...
+        let o = VoltOptions::builder()
+            .sim(SimConfig {
+                num_cores: 1,
+                warps_per_core: 4,
+                ..SimConfig::default()
+            })
+            .target("vortex-min")
+            .build()
+            .unwrap();
+        assert_eq!((o.sim.num_cores, o.sim.warps_per_core), (1, 4));
+        // ...but the device identity still comes from the target.
+        assert!(!o.device_config().features.vote);
+        // Geometry above the target's caps: typed error, no clamping.
+        let e = VoltOptions::builder()
+            .target("vortex-min")
+            .sim(SimConfig {
+                warps_per_core: 16,
+                ..SimConfig::from_target(&TargetDesc::vortex_min())
+            })
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, VoltError::InvalidOptions { .. }), "{e}");
+        assert!(e.to_string().contains("warps_per_core"), "{e}");
+        // A custom target with a narrower warp cap rejects wide configs.
+        let narrow = TargetDesc {
+            caps: crate::target::WarpCaps {
+                max_threads_per_warp: 8,
+                max_warps_per_core: 32,
+                max_cores: 64,
+            },
+            ..TargetDesc::vortex()
+        };
+        let e = VoltOptionsBuilder {
+            opts: VoltOptions {
+                target: narrow,
+                ..VoltOptions::default()
+            },
+            bad_target: None,
+            sim_explicit: true,
+            warp_hw_explicit: false,
+        }
+        .build()
+        .unwrap_err();
+        assert!(e.to_string().contains("threads_per_warp"), "{e}");
+        // Forcing zicond on a target without it is inconsistent.
+        let e = VoltOptions {
+            target: TargetDesc::vortex_min(),
+            sim: SimConfig::from_target(&TargetDesc::vortex_min()),
+            zicond: Some(true),
+            ..VoltOptions::default()
+        }
+        .validate()
+        .unwrap_err();
+        assert!(e.to_string().contains("zicond"), "{e}");
+    }
+
+    #[test]
+    fn target_changes_cache_fingerprint() {
+        let mut a = Fnv1a::new();
+        VoltOptions::default().hash_into(&mut a);
+        let min = VoltOptions {
+            target: TargetDesc::vortex_min(),
+            sim: SimConfig::from_target(&TargetDesc::vortex_min()),
+            ..VoltOptions::default()
+        };
+        let mut b = Fnv1a::new();
+        min.hash_into(&mut b);
+        assert_ne!(
+            a.finish(),
+            b.finish(),
+            "same source on two targets must occupy two cache entries"
+        );
+        // Geometry alone (same target) does not change the key.
+        let mut c = Fnv1a::new();
+        VoltOptions {
+            sim: SimConfig {
+                num_cores: 1,
+                ..SimConfig::default()
+            },
+            ..VoltOptions::default()
+        }
+        .hash_into(&mut c);
+        assert_eq!(a.finish(), c.finish());
     }
 
     #[test]

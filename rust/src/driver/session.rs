@@ -14,7 +14,8 @@ use super::stream::Stream;
 use crate::backend::emit::{build_image, BackendError, ProgramImage};
 use crate::frontend::compile_kernels;
 use crate::ir::Type;
-use crate::transform::{run_middle_end, MiddleEndReport};
+use crate::transform::pass::run_middle_end_with;
+use crate::transform::MiddleEndReport;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -125,7 +126,11 @@ impl Session {
     /// this session's simulator geometry (and profiler, when
     /// [`VoltOptions::profiling`] is set).
     pub fn create_stream(&self, program: &Arc<Program>) -> Stream {
-        Stream::with_profiling(program.clone(), self.opts.sim, self.opts.profiling)
+        Stream::with_profiling(
+            program.clone(),
+            self.opts.device_config(),
+            self.opts.profiling,
+        )
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -175,7 +180,9 @@ fn compile_program_keyed(
     let frontend_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let t1 = Instant::now();
-    let middle = run_middle_end(&mut m, &opts.opt_config());
+    // The target owns its divergence seeds (paper §4.3.1): the middle-end
+    // runs with the target's TargetDivergenceInfo implementation.
+    let middle = run_middle_end_with(&mut m, &opts.opt_config(), &opts.target);
     if opts.verify_ir {
         crate::ir::verify::verify_module(&m).map_err(|e| VoltError::MiddleEnd {
             pass: "verify",

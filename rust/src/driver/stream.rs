@@ -397,10 +397,16 @@ impl Stream {
     /// chrome://tracing JSON over everything this stream executed: one
     /// slice per command (from the event cycle stamps), one track per
     /// core and a warp-occupancy counter track (from the per-launch
-    /// profiles, when profiling is on). Load in `chrome://tracing` or
-    /// Perfetto; 1 simulated cycle = 1 µs.
+    /// profiles, when profiling is on). The trace metadata is stamped
+    /// with the program's target name, so per-target artifacts stay
+    /// distinguishable. Load in `chrome://tracing` or Perfetto;
+    /// 1 simulated cycle = 1 µs.
     pub fn chrome_trace(&self) -> String {
-        crate::prof::trace::chrome_trace(&self.events, &self.dev.profiles)
+        crate::prof::trace::chrome_trace(
+            &self.events,
+            &self.dev.profiles,
+            &self.program.image.target,
+        )
     }
 
     /// Escape hatch to the underlying synchronous device (advanced /

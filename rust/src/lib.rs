@@ -17,6 +17,11 @@
 //! * [`ir`] — the SSA intermediate representation shared by all middle-end
 //!   passes: CFG, dominators/post-dominators, loops, control-dependence
 //!   graph, verifier, textual printer/parser.
+//! * [`target`] — the target-description layer: [`target::TargetDesc`]
+//!   centralizes ISA features, warp-geometry capabilities, register-file
+//!   shape, the address map and cost hints, and owns the divergence
+//!   seeds. Two built-in profiles (`vortex`, `vortex-min`) exercise it;
+//!   see `docs/TARGETS.md`.
 //! * [`analysis`] — the centralized SIMT analyses (paper §4.3.1): the
 //!   target-transform-info trait (`isAlwaysUniform`/`isSourceOfDivergence`),
 //!   the uniformity analysis, annotation analysis and the call-graph RPO
@@ -55,6 +60,8 @@ pub mod ir;
 pub mod prof;
 pub mod runtime;
 pub mod sim;
+pub mod target;
 pub mod transform;
 
 pub use driver::{Program, Session, Stream, VoltError, VoltOptions};
+pub use target::TargetDesc;

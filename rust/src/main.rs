@@ -10,6 +10,7 @@ use volt::coordinator::{benchmarks, experiments, report};
 use volt::driver::{Session, VoltOptions};
 use volt::frontend::Dialect;
 use volt::sim::SimConfig;
+use volt::target::TargetDesc;
 use volt::transform::OptLevel;
 
 fn usage() -> ! {
@@ -17,23 +18,41 @@ fn usage() -> ! {
         "usage: volt <command> [options]
 
 commands:
-  compile <file> [--cuda] [--opt LEVEL] [--asm] [--ir]   compile a kernel file
-  run <benchmark> [--opt LEVEL] [--sw-warp] [--smem-global]
+  compile <file> [--cuda] [--opt LEVEL] [--target T] [--asm] [--ir]
+                                                         compile a kernel file
+  run <benchmark> [--opt LEVEL] [--target T] [--sw-warp] [--smem-global]
                                                          run a registry benchmark
   prof <benchmark> [--opt LEVEL] [--top N] [--annotate] [--trace FILE]
                                                          profile a benchmark: stall
                                                          breakdown + hot source lines
   prof --sweep [--opt LEVEL] [--json FILE]               profile all kernels
                                                          (BENCH_profile.json)
+  targets                                                list built-in targets
+  targets --sweep [--opt LEVEL] [--json FILE]            validate every kernel on
+                                                         every built-in target
   validate [--levels L1,L2,...]                          run + check the whole suite
   list                                                   list registry benchmarks
   figures --fig 7|8|9|10 [--only a,b] [--csv FILE]       regenerate a paper figure
   figures --compile-time                                 compile-time overhead table
   figures --table1                                       per-stage LoC summary
 
-LEVEL: base | uni-hw | uni-ann | uni-func | zicond | recon | o3 (default: recon)"
+LEVEL: base | uni-hw | uni-ann | uni-func | zicond | recon | o3 (default: recon)
+T: vortex | vortex-min (default: vortex)"
     );
     std::process::exit(2);
+}
+
+fn parse_target(args: &[String]) -> TargetDesc {
+    match opt_val(args, "--target") {
+        None => TargetDesc::vortex(),
+        Some(name) => TargetDesc::by_name(&name).unwrap_or_else(|| {
+            eprintln!(
+                "unknown target '{name}' (built-in: {})",
+                TargetDesc::BUILTIN_NAMES.join(", ")
+            );
+            std::process::exit(2);
+        }),
+    }
 }
 
 fn parse_level(s: &str) -> OptLevel {
@@ -70,6 +89,7 @@ fn main() {
         "compile" => cmd_compile(rest),
         "run" => cmd_run(rest),
         "prof" => cmd_prof(rest),
+        "targets" => cmd_targets(rest),
         "validate" => cmd_validate(rest),
         "list" => cmd_list(),
         "figures" => cmd_figures(rest),
@@ -92,11 +112,14 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
         Dialect::OpenCL
     };
     let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
-    let opts = VoltOptions {
-        dialect,
-        opt: level,
-        ..VoltOptions::default()
-    };
+    let target = parse_target(args);
+    // The builder derives the profile's geometry and warp lowering.
+    let opts = VoltOptions::builder()
+        .dialect(dialect)
+        .opt_level(level)
+        .target_desc(target)
+        .build()
+        .map_err(|e| e.to_string())?;
     if flag(args, "--ir") {
         // Dump middle-end IR.
         let (mut m, _infos) =
@@ -109,9 +132,10 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
     let out = session.compile(&src)?;
     let names: Vec<&str> = out.kernel_names();
     println!(
-        "compiled {} kernel(s) [{}], {} instructions, {:.2} ms (frontend {:.2} / middle {:.2} / backend {:.2})",
+        "compiled {} kernel(s) [{}] for {}, {} instructions, {:.2} ms (frontend {:.2} / middle {:.2} / backend {:.2})",
         out.kernels.len(),
         names.join(", "),
+        out.image.target,
         out.image.code.len(),
         out.timings.total_ms(),
         out.timings.frontend_ms,
@@ -149,9 +173,24 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     } else {
         SharedMemMapping::Local
     };
-    let r = experiments::run_bench(&b, level, warp_hw, smem, SimConfig::default())?;
+    let target = parse_target(args);
+    let r = if target.name == "vortex" {
+        experiments::run_bench(&b, level, warp_hw, smem, SimConfig::default())?
+    } else {
+        // Non-default target: geometry and warp lowering follow the
+        // profile (vortex-min has no hardware shfl/vote). Refuse flag
+        // combinations the profile path would silently ignore.
+        if flag(args, "--sw-warp") || flag(args, "--smem-global") {
+            return Err(format!(
+                "--sw-warp/--smem-global are not configurable with --target {} \
+                 (the profile determines warp lowering and memory mapping)",
+                target.name
+            ));
+        }
+        experiments::run_bench_on(&b, &target, level)?
+    };
     let s = &r.stats;
-    println!("benchmark {name} @ {:?}: PASS", level);
+    println!("benchmark {name} @ {:?} on {}: PASS", level, target.name);
     println!(
         "  cycles {}  instrs {}  thread-instrs {}  IPC {:.3}",
         s.cycles,
@@ -183,7 +222,7 @@ fn cmd_prof(args: &[String]) -> Result<(), String> {
     if flag(args, "--sweep") {
         let rows = experiments::profile_sweep(level).map_err(|e| e.to_string())?;
         print!("{}", report::render_profile_sweep(&rows));
-        let json = report::json_profile(&rows, level);
+        let json = report::json_profile(&rows, level, "vortex");
         volt::prof::validate_json(&json)
             .map_err(|e| format!("internal: BENCH_profile.json invalid: {e}"))?;
         if let Some(path) = opt_val(args, "--json") {
@@ -215,11 +254,49 @@ fn cmd_prof(args: &[String]) -> Result<(), String> {
         }
     }
     if let Some(path) = opt_val(args, "--trace") {
-        let trace = volt::prof::chrome_trace(&[], &profiles);
+        let target = profiles
+            .first()
+            .map(|p| p.target.clone())
+            .unwrap_or_else(|| "vortex".into());
+        let trace = volt::prof::chrome_trace(&[], &profiles, &target);
         volt::prof::validate_json(&trace)
             .map_err(|e| format!("internal: emitted trace is invalid JSON: {e}"))?;
         std::fs::write(&path, &trace).map_err(|e| e.to_string())?;
         println!("wrote {path} ({} bytes, JSON validated)", trace.len());
+    }
+    Ok(())
+}
+
+fn cmd_targets(args: &[String]) -> Result<(), String> {
+    if !flag(args, "--sweep") {
+        for t in TargetDesc::builtins() {
+            let f = t.features;
+            println!(
+                "{:>12}  {} cores x {} warps x {} threads  features: zicond={} shfl={} \
+                 vote={} fp={}  l2={}",
+                t.name,
+                t.default_cores,
+                t.default_warps_per_core,
+                t.default_threads_per_warp,
+                f.zicond,
+                f.shfl,
+                f.vote,
+                f.fp,
+                t.default_l2
+            );
+        }
+        return Ok(());
+    }
+    let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
+    let targets = TargetDesc::builtins();
+    let rows = experiments::cross_target_sweep(&targets, level).map_err(|e| e.to_string())?;
+    print!("{}", report::render_cross_target(&rows));
+    let json = report::json_cross_target(&rows, level);
+    volt::prof::validate_json(&json)
+        .map_err(|e| format!("internal: cross-target json invalid: {e}"))?;
+    if let Some(path) = opt_val(args, "--json") {
+        std::fs::write(&path, &json).map_err(|e| e.to_string())?;
+        println!("wrote {path} ({} bytes, JSON validated)", json.len());
     }
     Ok(())
 }
@@ -326,6 +403,7 @@ fn table1() -> String {
     let rows = [
         ("OpenCL/CUDA front-end", count(&["frontend"])),
         ("Middle-end (IR + analyses + transforms)", count(&["ir", "analysis", "transform"])),
+        ("Target descriptions", count(&["target"])),
         ("Back-end (ISA table + codegen)", count(&["backend"])),
         ("SimX substrate", count(&["sim"])),
         ("Host runtime + coordinator", count(&["runtime", "coordinator"])),

@@ -22,6 +22,9 @@ pub struct PcSample {
 #[derive(Clone, Debug)]
 pub struct KernelProfile {
     pub kernel: String,
+    /// Target the profiled image was compiled for (stamped from
+    /// [`ProgramImage::target`] into reports and chrome traces).
+    pub target: String,
     /// Cumulative device cycles when this launch started (stream/event
     /// timeline offset for the chrome trace).
     pub start_cycles: u64,
@@ -116,6 +119,7 @@ pub fn build_profile(
         * cfg.num_cores as f64;
     KernelProfile {
         kernel: kernel.to_string(),
+        target: image.target.clone(),
         start_cycles,
         cycles: stats.cycles,
         instrs: stats.instrs,
@@ -147,8 +151,8 @@ pub fn render_text(p: &KernelProfile, top_n: usize) -> String {
     let mut s = String::new();
     writeln!(
         s,
-        "profile: {}  ({} cores x {} warps)",
-        p.kernel, p.num_cores, p.warps_per_core
+        "profile: {}  [target {}]  ({} cores x {} warps)",
+        p.kernel, p.target, p.num_cores, p.warps_per_core
     )
     .unwrap();
     writeln!(
@@ -280,6 +284,8 @@ mod tests {
             func_entries: [("__main_k".to_string(), 2u32)].into_iter().collect(),
             pc_loc: vec![None, None, Some(crate::ir::Loc::line(3)), Some(crate::ir::Loc::line(4))],
             crt0_len: 2,
+            target: "vortex".into(),
+            addr_map: crate::target::AddressMap::vortex(),
         };
         build_profile(
             "k",
@@ -304,7 +310,9 @@ mod tests {
         assert_eq!(p.mapped_pct(), 100.0);
         assert_eq!(p.hot_lines[0], (3, 3));
         assert!((p.occupancy_pct - 100.0).abs() < 1e-9); // 2 of 2 warps
+        assert_eq!(p.target, "vortex", "profile stamped with the image's target");
         let txt = render_text(&p, 5);
+        assert!(txt.contains("target vortex"));
         assert!(txt.contains("core-cycle breakdown"));
         assert!(txt.contains("memory"));
         assert!(txt.contains("line    3"));

@@ -43,9 +43,17 @@ fn kind_cat(k: CommandKind) -> &'static str {
 /// Build a chrome://tracing JSON document from a stream's command events
 /// and/or per-launch profiles. Either slice may be empty: `volt prof`
 /// passes device profiles with no stream events (launch slices are then
-/// synthesized from the profiles themselves).
-pub fn chrome_trace(events: &[Event], profiles: &[KernelProfile]) -> String {
+/// synthesized from the profiles themselves). `target` names the machine
+/// the traced image was compiled for; it is stamped into the trace's
+/// `otherData` metadata and a `ph:M` process label so per-target
+/// artifacts stay distinguishable.
+pub fn chrome_trace(events: &[Event], profiles: &[KernelProfile], target: &str) -> String {
     let mut ev: Vec<String> = vec![];
+    ev.push(format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\
+         \"args\":{{\"name\":\"volt:{}\"}}}}",
+        esc(target),
+    ));
     let meta = |tid: u32, label: &str| {
         format!(
             "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\
@@ -109,7 +117,11 @@ pub fn chrome_trace(events: &[Event], profiles: &[KernelProfile]) -> String {
             }
         }
     }
-    let mut s = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    let mut s = format!(
+        "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"target\":\"{}\"}},\
+         \"traceEvents\":[\n",
+        esc(target)
+    );
     for (i, e) in ev.iter().enumerate() {
         s.push_str(e);
         if i + 1 != ev.len() {
@@ -339,7 +351,7 @@ mod tests {
 
     #[test]
     fn empty_trace_is_valid_json() {
-        let t = chrome_trace(&[], &[]);
+        let t = chrome_trace(&[], &[], "vortex");
         validate_json(&t).unwrap();
         assert!(t.contains("traceEvents"));
     }
@@ -353,7 +365,15 @@ mod tests {
             end_cycles: 0,
             instrs: 0,
         };
-        let t = chrome_trace(&[e], &[]);
+        let t = chrome_trace(&[e], &[], "we\"ird\\target");
         validate_json(&t).unwrap();
+    }
+
+    #[test]
+    fn trace_is_stamped_with_target() {
+        let t = chrome_trace(&[], &[], "vortex-min");
+        validate_json(&t).unwrap();
+        assert!(t.contains("\"otherData\":{\"target\":\"vortex-min\"}"), "{t}");
+        assert!(t.contains("volt:vortex-min"));
     }
 }

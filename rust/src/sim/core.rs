@@ -7,7 +7,6 @@
 
 use super::mem::{Cache, GlobalMem};
 use super::{SimConfig, SimError, SimStats};
-use crate::backend::emit::LOCAL_BASE;
 use crate::backend::isa::{CsrId, MachInst, Op, OpClass};
 use crate::ir::interp::scalar;
 use crate::ir::{BinOp, FCmp, ICmp, UnOp};
@@ -81,6 +80,13 @@ pub enum StepOutcome {
 
 impl Core {
     pub fn new(cfg: &SimConfig, id: u32) -> Core {
+        // Geometry beyond the 32-bit thread/warp masks is rejected with a
+        // typed error at option-build time (SimConfig::check_caps); this
+        // guards direct construction.
+        debug_assert!(
+            cfg.threads_per_warp <= 32 && cfg.warps_per_core <= 32,
+            "geometry exceeds the 32-bit mask width (cfg bypassed validation)"
+        );
         let full_mask = if cfg.threads_per_warp >= 32 {
             u32::MAX
         } else {
@@ -257,21 +263,15 @@ impl Core {
         if lanes.is_empty() {
             return Err(self.err(wi, pc, "issued with empty thread mask"));
         }
+        // Feature-gated opcodes were audited once at run start
+        // (Gpu::run_profiled) — the per-issue hot path carries no check.
+        debug_assert!(cfg.features.supports_op(inst.op));
         stats.instrs += 1;
         stats.thread_instrs += lanes.len() as u64;
         let mut next_pc = pc + 1;
-        let mut cost = match inst.op.class() {
-            OpClass::Alu => 1,
-            OpClass::Mul => 3,
-            OpClass::Div => 16,
-            OpClass::Fpu => 4,
-            OpClass::FDiv => 16,
-            OpClass::Sfu => 8,
-            OpClass::Mem => 1, // adjusted below
-            OpClass::Branch => 1,
-            OpClass::Vx => 2,
-            OpClass::Sys => 1,
-        } as u64;
+        // Issue-to-ready latency from the target's cost model (memory is
+        // a floor, adjusted below by the cache hierarchy).
+        let mut cost = cfg.costs.issue_cost(inst.op.class());
 
         macro_rules! w {
             () => {
@@ -432,17 +432,18 @@ impl Core {
                     stats.loads += 1;
                 }
                 // Per-thread stacks live in core-local storage on Vortex:
-                // scratchpad timing, not the cache hierarchy.
-                let stack_end = crate::backend::emit::STACK_BASE
-                    + cfg.total_threads() * crate::backend::emit::STACK_SIZE;
+                // scratchpad timing, not the cache hierarchy. Address
+                // spaces decode through the target's map.
+                let map = &cfg.addr_map;
+                let stack_end = map.stack_base + cfg.total_threads() * map.stack_size;
                 let mut lines_buf = [0u32; 32];
                 let mut n_lines = 0usize;
                 let mut local_touched = false;
                 for &l in lanes {
                     let addr = read_reg(&self.warps[wi].regs[l], inst.rs1)
                         .wrapping_add(inst.imm as u32);
-                    let local_off = addr.wrapping_sub(LOCAL_BASE) as usize;
-                    if (crate::backend::emit::STACK_BASE..stack_end).contains(&addr) {
+                    let local_off = addr.wrapping_sub(map.local_base) as usize;
+                    if (map.stack_base..stack_end).contains(&addr) {
                         // data via global memory image, scratchpad timing
                         if is_store {
                             let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
@@ -524,7 +525,7 @@ impl Core {
                 for &l in lanes {
                     let addr = read_reg(&self.warps[wi].regs[l], inst.rs1);
                     let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
-                    let local_off = addr.wrapping_sub(LOCAL_BASE) as usize;
+                    let local_off = addr.wrapping_sub(cfg.addr_map.local_base) as usize;
                     let old = if local_off + 4 <= self.local.len() {
                         u32::from_le_bytes(self.local[local_off..local_off + 4].try_into().unwrap())
                     } else {
@@ -590,7 +591,9 @@ impl Core {
                 w!().active = false;
             }
             Op::CSRR => {
-                let id = CsrId::from_u32(inst.imm as u32);
+                let id = CsrId::from_u32(inst.imm as u32).ok_or_else(|| {
+                    self.err(wi, pc, format!("unknown CSR index {}", inst.imm))
+                })?;
                 for &l in lanes {
                     let v = match id {
                         CsrId::LaneId => l as u32,

@@ -3,7 +3,7 @@
 use super::core::{Core, Issue, StepOutcome};
 use super::mem::{Cache, GlobalMem};
 use super::{SimConfig, SimError, SimStats};
-use crate::backend::emit::{ProgramImage, DATA_BASE, HEAP_BASE, STACK_BASE, STACK_SIZE};
+use crate::backend::emit::ProgramImage;
 use crate::backend::isa::MachInst;
 use crate::prof::counters::Profiler;
 
@@ -18,14 +18,20 @@ pub struct Gpu {
 }
 
 impl Gpu {
-    /// Load a program image onto a freshly configured device.
+    /// Load a program image onto a freshly configured device. The
+    /// image's address map overrides the configured one: the memory the
+    /// emitter laid out and the memory the cores decode are always the
+    /// same map.
     pub fn load(image: &ProgramImage, cfg: SimConfig) -> Gpu {
+        let mut cfg = cfg;
+        cfg.addr_map = image.addr_map;
+        let map = cfg.addr_map;
         let mut mem = GlobalMem::default();
-        // Data segment covers DATA_BASE .. data_end (+ slack for runtime).
-        let data_size = (image.data_end - DATA_BASE).max(4096) + 4096;
-        mem.add_segment(DATA_BASE, data_size);
-        mem.add_segment(STACK_BASE, cfg.total_threads() * STACK_SIZE);
-        mem.add_segment(HEAP_BASE, cfg.heap_bytes);
+        // Data segment covers data_base .. data_end (+ slack for runtime).
+        let data_size = (image.data_end - map.data_base).max(4096) + 4096;
+        mem.add_segment(map.data_base, data_size);
+        mem.add_segment(map.stack_base, cfg.total_threads() * map.stack_size);
+        mem.add_segment(map.heap_base, cfg.heap_bytes);
         for (addr, bytes) in &image.data {
             mem.write_bytes(*addr, bytes).expect("image data fits");
         }
@@ -40,7 +46,7 @@ impl Gpu {
             // A small guard gap: speculative reads just before the first
             // allocation (flattened selects evaluate both arms) stay in
             // bounds.
-            heap_next: HEAP_BASE + 4096,
+            heap_next: map.heap_base + 4096,
         }
     }
 
@@ -49,7 +55,7 @@ impl Gpu {
         let addr = self.heap_next;
         self.heap_next += (size + 63) & !63;
         assert!(
-            self.heap_next - HEAP_BASE <= self.cfg.heap_bytes,
+            self.heap_next - self.cfg.addr_map.heap_base <= self.cfg.heap_bytes,
             "device heap exhausted"
         );
         addr
@@ -72,6 +78,26 @@ impl Gpu {
         &mut self,
         mut prof: Option<&mut Profiler>,
     ) -> Result<SimStats, SimError> {
+        // Feature audit, once per run instead of per issued instruction:
+        // an opcode outside the device's declared feature set is a trap,
+        // not an instruction — a compiler bug (or an image built for a
+        // richer target) is a loud typed error before any cycle runs,
+        // never silently wrong results.
+        for (pc, inst) in self.program.iter().enumerate() {
+            if !self.cfg.features.supports_op(inst.op) {
+                let gate = crate::target::Features::gate_name(inst.op).unwrap_or("?");
+                return Err(SimError {
+                    core: 0,
+                    warp: 0,
+                    pc: pc as u32,
+                    msg: format!(
+                        "illegal instruction '{}': device does not implement the \
+                         '{gate}' extension (image/target mismatch?)",
+                        inst.op.mnemonic()
+                    ),
+                });
+            }
+        }
         let mut stats = SimStats::default();
         for c in self.cores.iter_mut() {
             c.reset(&self.cfg);

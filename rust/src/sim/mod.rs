@@ -15,6 +15,8 @@ pub mod mem;
 
 pub use gpu::Gpu;
 
+use crate::target::{AddressMap, CostModel, Features, TargetDesc};
+
 /// Cache geometry + latency.
 #[derive(Clone, Copy, Debug)]
 pub struct CacheConfig {
@@ -54,27 +56,82 @@ pub struct SimConfig {
     pub mem_latency: u32,
     pub heap_bytes: u32,
     pub max_cycles: u64,
+    /// ISA features the modeled hardware implements. The device audits
+    /// the loaded program at run start and *traps* on feature-gated
+    /// opcodes outside this set, so running an image built for the
+    /// wrong target is a loud [`SimError`], never a silently wrong
+    /// answer.
+    pub features: Features,
+    /// Address-space decode map (local / stack / heap windows). Kept in
+    /// sync with the loaded image by [`Gpu::load`].
+    pub addr_map: AddressMap,
+    /// Per-functional-class issue costs (the target's timing hints).
+    pub costs: CostModel,
 }
 
 impl Default for SimConfig {
     /// The paper's evaluation configuration (§5): 4 cores × 16 warps ×
-    /// 32 threads, L2 enabled.
+    /// 32 threads, L2 enabled — i.e. [`SimConfig::from_target`] of the
+    /// built-in `vortex` profile.
     fn default() -> Self {
-        SimConfig {
-            num_cores: 4,
-            warps_per_core: 16,
-            threads_per_warp: 32,
-            local_mem_bytes: 128 << 10,
-            l1d: CacheConfig::l1_default(),
-            l2: Some(CacheConfig::l2_default()),
-            mem_latency: 100,
-            heap_bytes: 64 << 20,
-            max_cycles: 500_000_000,
-        }
+        SimConfig::from_target(&TargetDesc::vortex())
     }
 }
 
 impl SimConfig {
+    /// The target's default device configuration: geometry from the
+    /// profile, features/address-map/costs always from the profile.
+    pub fn from_target(t: &TargetDesc) -> SimConfig {
+        SimConfig {
+            num_cores: t.default_cores,
+            warps_per_core: t.default_warps_per_core,
+            threads_per_warp: t.default_threads_per_warp,
+            local_mem_bytes: 128 << 10,
+            l1d: CacheConfig::l1_default(),
+            l2: t.default_l2.then(CacheConfig::l2_default),
+            mem_latency: 100,
+            heap_bytes: 64 << 20,
+            max_cycles: 500_000_000,
+            features: t.features,
+            addr_map: t.addr_map,
+            costs: t.costs,
+        }
+    }
+
+    /// Check this geometry against a target's capability ceilings and
+    /// the simulator's own structural limits (32-bit thread and warp
+    /// masks). Returns a message describing the first violation; the
+    /// driver wraps it in a typed `InvalidOptions` error — geometry is
+    /// never silently clamped.
+    pub fn check_caps(&self, t: &TargetDesc) -> Result<(), String> {
+        if self.num_cores == 0 || self.warps_per_core == 0 || self.threads_per_warp == 0 {
+            return Err("device geometry must be non-zero (cores, warps, threads)".into());
+        }
+        let tmax = t.caps.max_threads_per_warp.min(32);
+        if self.threads_per_warp > tmax {
+            return Err(format!(
+                "threads_per_warp {} exceeds target '{}' max {} (divergence masks are \
+                 32-bit; the target caps at {})",
+                self.threads_per_warp, t.name, tmax, t.caps.max_threads_per_warp
+            ));
+        }
+        let wmax = t.caps.max_warps_per_core.min(32);
+        if self.warps_per_core > wmax {
+            return Err(format!(
+                "warps_per_core {} exceeds target '{}' max {} (barrier arrival \
+                 tables are 32-bit warp masks; the target caps at {})",
+                self.warps_per_core, t.name, wmax, t.caps.max_warps_per_core
+            ));
+        }
+        if self.num_cores > t.caps.max_cores {
+            return Err(format!(
+                "num_cores {} exceeds target '{}' max {}",
+                self.num_cores, t.name, t.caps.max_cores
+            ));
+        }
+        Ok(())
+    }
+
     /// Small config for unit tests.
     pub fn tiny() -> SimConfig {
         SimConfig {
@@ -151,3 +208,63 @@ impl std::fmt::Display for SimError {
 }
 
 impl std::error::Error for SimError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_target_follows_profiles() {
+        let v = SimConfig::from_target(&TargetDesc::vortex());
+        assert_eq!((v.num_cores, v.warps_per_core, v.threads_per_warp), (4, 16, 32));
+        assert!(v.l2.is_some());
+        assert!(v.features.zicond && v.features.shfl);
+        let m = SimConfig::from_target(&TargetDesc::vortex_min());
+        assert_eq!((m.num_cores, m.warps_per_core, m.threads_per_warp), (2, 8, 32));
+        assert!(m.l2.is_none());
+        assert!(!m.features.zicond && !m.features.vote);
+        assert_eq!(m.addr_map, TargetDesc::vortex_min().addr_map);
+    }
+
+    #[test]
+    fn caps_checked_not_clamped() {
+        let min = TargetDesc::vortex_min();
+        assert!(SimConfig::from_target(&min).check_caps(&min).is_ok());
+        let cfg = SimConfig {
+            warps_per_core: 16, // min caps at 8
+            ..SimConfig::from_target(&min)
+        };
+        assert!(cfg.check_caps(&min).unwrap_err().contains("warps_per_core"));
+        let cfg = SimConfig {
+            num_cores: 4, // min caps at 2
+            ..SimConfig::from_target(&min)
+        };
+        assert!(cfg.check_caps(&min).unwrap_err().contains("num_cores"));
+        // The 32-lane mask edge is a structural ceiling even when a
+        // (hypothetical) target declares more.
+        let wide = TargetDesc {
+            caps: crate::target::WarpCaps {
+                max_threads_per_warp: 64,
+                max_warps_per_core: 64,
+                max_cores: 64,
+            },
+            ..TargetDesc::vortex()
+        };
+        let cfg = SimConfig {
+            threads_per_warp: 33,
+            ..SimConfig::default()
+        };
+        let e = cfg.check_caps(&wide).unwrap_err();
+        assert!(e.contains("32-bit"), "{e}");
+        let cfg = SimConfig {
+            warps_per_core: 33,
+            ..SimConfig::default()
+        };
+        assert!(cfg.check_caps(&wide).is_err());
+        let cfg = SimConfig {
+            num_cores: 0,
+            ..SimConfig::default()
+        };
+        assert!(cfg.check_caps(&wide).is_err());
+    }
+}

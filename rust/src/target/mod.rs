@@ -1,0 +1,543 @@
+//! `volt::target` — the target-description layer (paper §5.3 / §6.1).
+//!
+//! The paper's extensibility claim ("easily adapted to emerging open-GPU
+//! variants") needs every layer to consult *one* description of the
+//! machine instead of hardcoding the evaluation Vortex. [`TargetDesc`]
+//! centralizes all target knowledge:
+//!
+//! * [`Features`] — which ISA extensions exist (`vx_cmov`/ZiCond,
+//!   `vx_shfl`, `vx_vote.*`, the FPU). The middle-end derives select
+//!   legality from this set, instruction selection refuses extension ops
+//!   the target lacks with a typed [`crate::backend::BackendError`], and
+//!   the simulator traps on feature-gated opcodes it did not declare —
+//!   so a miscompile for the wrong target is a loud error, never a
+//!   silently wrong answer.
+//! * [`WarpCaps`] — capability ceilings on the device geometry
+//!   (threads/warp, warps/core, cores). [`crate::driver::VoltOptions`]
+//!   validates the configured [`crate::sim::SimConfig`] against these at
+//!   build time with typed `InvalidOptions` errors.
+//! * [`RegFile`] — register-file shape; the linear-scan allocator builds
+//!   its pools from it instead of hardcoded ranges.
+//! * [`AddressMap`] — the device memory map previously frozen as
+//!   constants in `backend/emit.rs`; the emitter lays out images and the
+//!   simulator decodes address spaces from the same map.
+//! * [`CostModel`] — per-functional-class issue costs driving the
+//!   simulator timing model.
+//!
+//! A `TargetDesc` also *owns* its divergence seeds: it implements
+//! [`TargetDivergenceInfo`], so `run_middle_end_with(m, cfg, &target)`
+//! uses the target's own uniformity model (paper §4.3.1).
+//!
+//! Two built-in profiles ship: [`TargetDesc::vortex`] (the paper's
+//! evaluation machine) and [`TargetDesc::vortex_min`] (a cut-down variant
+//! with no ZiCond/shfl/vote extensions, a half-size warp table, two
+//! cores, and no L2) — see `docs/TARGETS.md` for how to add more.
+
+use crate::analysis::tti::{TargetDivergenceInfo, VortexTti};
+use crate::analysis::UniformityOptions;
+use crate::backend::isa::{Op, OpClass};
+use crate::ir::{Function, InstData};
+
+/// ISA-extension feature set (the §5.3 case-study axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Features {
+    /// `vx_cmov` (ZiCond conditional move): divergent selects stay flat.
+    pub zicond: bool,
+    /// `vx_shfl`: cross-lane register reads.
+    pub shfl: bool,
+    /// `vx_vote.all` / `vx_vote.any` / `vx_vote.ballot`.
+    pub vote: bool,
+    /// Single-precision FPU (FADD..FSQRT plus the SFU transcendentals).
+    pub fp: bool,
+}
+
+impl Features {
+    /// Everything the evaluation Vortex implements.
+    pub const fn vortex() -> Features {
+        Features {
+            zicond: true,
+            shfl: true,
+            vote: true,
+            fp: true,
+        }
+    }
+
+    /// Base machine only: no case-study extensions (FPU retained).
+    pub const fn minimal() -> Features {
+        Features {
+            zicond: false,
+            shfl: false,
+            vote: false,
+            fp: true,
+        }
+    }
+
+    /// Stable bit encoding for cache fingerprints.
+    pub fn bits(&self) -> u8 {
+        (self.zicond as u8)
+            | ((self.shfl as u8) << 1)
+            | ((self.vote as u8) << 2)
+            | ((self.fp as u8) << 3)
+    }
+
+    /// Whether this feature set implements `op`. Base-ISA ops are always
+    /// supported; extension ops and FPU classes are gated.
+    pub fn supports_op(&self, op: Op) -> bool {
+        match op {
+            Op::CMOV => self.zicond,
+            Op::SHFL => self.shfl,
+            Op::VOTEALL | Op::VOTEANY | Op::BALLOT => self.vote,
+            _ => match op.class() {
+                OpClass::Fpu | OpClass::FDiv | OpClass::Sfu => self.fp,
+                _ => true,
+            },
+        }
+    }
+
+    /// Human-readable name of the feature gating `op` (diagnostics).
+    pub fn gate_name(op: Op) -> Option<&'static str> {
+        match op {
+            Op::CMOV => Some("zicond"),
+            Op::SHFL => Some("shfl"),
+            Op::VOTEALL | Op::VOTEANY | Op::BALLOT => Some("vote"),
+            _ => match op.class() {
+                OpClass::Fpu | OpClass::FDiv | OpClass::Sfu => Some("fp"),
+                _ => None,
+            },
+        }
+    }
+}
+
+impl Default for Features {
+    fn default() -> Features {
+        Features::vortex()
+    }
+}
+
+/// Capability ceilings on device geometry. The configured
+/// [`crate::sim::SimConfig`] must sit at or below these; the options
+/// layer enforces it with typed errors (no silent clamping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WarpCaps {
+    /// ≤ 32: the divergence/thread masks are 32-bit.
+    pub max_threads_per_warp: u32,
+    /// ≤ 32: the barrier arrival table is a 32-bit warp bitmask.
+    pub max_warps_per_core: u32,
+    pub max_cores: u32,
+}
+
+/// Register-file shape. Indices 0..`num_int` are integer (x0 hardwired
+/// zero), `float_base`..`float_base+num_float` are floats. The allocator
+/// derives its pools from the allocatable windows; the top three
+/// registers of each bank are reserved spill scratch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegFile {
+    pub num_int: u8,
+    pub num_float: u8,
+    pub float_base: u8,
+    /// First/last allocatable integer register (inclusive).
+    pub int_alloc: (u8, u8),
+    /// First/last allocatable float register (inclusive).
+    pub float_alloc: (u8, u8),
+    /// ABI argument window (excluded from pools in functions with calls).
+    pub arg_base: u8,
+    pub arg_count: u8,
+}
+
+impl RegFile {
+    pub const fn vortex() -> RegFile {
+        RegFile {
+            num_int: 32,
+            num_float: 32,
+            float_base: 32,
+            int_alloc: (5, 28),
+            float_alloc: (32, 60),
+            arg_base: 10,
+            arg_count: 8,
+        }
+    }
+
+    /// Structural validation against the machine's fixed register
+    /// encoding and reserved set. The 64-bit instruction encoding pins
+    /// the banks (x0..x31 integer, f0..f31 at `float_base` 32; see
+    /// `backend/isa.rs::is_float_reg`), x0/ra/sp are special, and
+    /// x29–x31 / f61–f63 are the allocator's spill scratch — an
+    /// allocatable window that overlaps any of those would let the
+    /// spill/reload path silently clobber live values, exactly the
+    /// silent-miscompile class this layer exists to eliminate.
+    /// [`crate::driver::VoltOptions::validate`] enforces this for every
+    /// custom target.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_int != 32 || self.num_float != 32 || self.float_base != 32 {
+            return Err(format!(
+                "register file shape {}i+{}f@{} is unsupported: the instruction \
+                 encoding pins 32 integer + 32 float registers at float_base 32",
+                self.num_int, self.num_float, self.float_base
+            ));
+        }
+        let (ilo, ihi) = self.int_alloc;
+        if ilo < 3 || ihi > 28 || ilo > ihi {
+            return Err(format!(
+                "int_alloc ({ilo}, {ihi}) must lie within x3..=x28 (x0/ra/sp are \
+                 special, x29-x31 are spill scratch)"
+            ));
+        }
+        let (flo, fhi) = self.float_alloc;
+        if flo < 32 || fhi > 60 || flo > fhi {
+            return Err(format!(
+                "float_alloc ({flo}, {fhi}) must lie within f0..=f28 (register \
+                 indices 32..=60; f61-f63 are spill scratch)"
+            ));
+        }
+        if self.arg_base as u32 + self.arg_count as u32 > 32 {
+            return Err(format!(
+                "ABI argument window ({}, +{}) exceeds the register bank",
+                self.arg_base, self.arg_count
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The device memory map (previously `backend/emit.rs` constants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddressMap {
+    pub data_base: u32,
+    pub local_base: u32,
+    pub stack_base: u32,
+    pub stack_size: u32,
+    pub heap_base: u32,
+}
+
+impl AddressMap {
+    pub const fn vortex() -> AddressMap {
+        AddressMap {
+            data_base: 0x0001_0000,
+            local_base: 0x1000_0000,
+            stack_base: 0x2000_0000,
+            stack_size: 0x1000,
+            heap_base: 0x4000_0000,
+        }
+    }
+}
+
+impl Default for AddressMap {
+    fn default() -> AddressMap {
+        AddressMap::vortex()
+    }
+}
+
+/// Per-functional-class issue costs (cycles until the issuing warp is
+/// ready again). Memory is a floor — the cache hierarchy adds latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostModel {
+    pub alu: u32,
+    pub mul: u32,
+    pub div: u32,
+    pub fpu: u32,
+    pub fdiv: u32,
+    pub sfu: u32,
+    pub mem_min: u32,
+    pub branch: u32,
+    pub vx: u32,
+    pub sys: u32,
+}
+
+impl CostModel {
+    pub const fn vortex() -> CostModel {
+        CostModel {
+            alu: 1,
+            mul: 3,
+            div: 16,
+            fpu: 4,
+            fdiv: 16,
+            sfu: 8,
+            mem_min: 1,
+            branch: 1,
+            vx: 2,
+            sys: 1,
+        }
+    }
+
+    pub fn issue_cost(&self, class: OpClass) -> u64 {
+        (match class {
+            OpClass::Alu => self.alu,
+            OpClass::Mul => self.mul,
+            OpClass::Div => self.div,
+            OpClass::Fpu => self.fpu,
+            OpClass::FDiv => self.fdiv,
+            OpClass::Sfu => self.sfu,
+            OpClass::Mem => self.mem_min,
+            OpClass::Branch => self.branch,
+            OpClass::Vx => self.vx,
+            OpClass::Sys => self.sys,
+        }) as u64
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel::vortex()
+    }
+}
+
+/// Everything the stack knows about one machine. `Copy` so it can ride
+/// inside [`crate::driver::VoltOptions`]; custom targets are plain
+/// `const`-constructible literals (see `docs/TARGETS.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TargetDesc {
+    pub name: &'static str,
+    pub features: Features,
+    pub caps: WarpCaps,
+    pub regfile: RegFile,
+    pub addr_map: AddressMap,
+    pub costs: CostModel,
+    /// Default device geometry ([`crate::sim::SimConfig::from_target`]).
+    pub default_cores: u32,
+    pub default_warps_per_core: u32,
+    pub default_threads_per_warp: u32,
+    /// Whether the default configuration has an L2.
+    pub default_l2: bool,
+}
+
+impl TargetDesc {
+    /// The paper's evaluation machine (§5): full extension set,
+    /// 4 cores × 16 warps × 32 threads, L2 enabled.
+    pub const fn vortex() -> TargetDesc {
+        TargetDesc {
+            name: "vortex",
+            features: Features::vortex(),
+            caps: WarpCaps {
+                max_threads_per_warp: 32,
+                max_warps_per_core: 32,
+                max_cores: 64,
+            },
+            regfile: RegFile::vortex(),
+            addr_map: AddressMap::vortex(),
+            costs: CostModel::vortex(),
+            default_cores: 4,
+            default_warps_per_core: 16,
+            default_threads_per_warp: 32,
+            default_l2: true,
+        }
+    }
+
+    /// A cut-down Vortex variant: no ZiCond/shfl/vote extensions, a
+    /// half-size warp table, two cores, no L2. Warp *width* stays 32 —
+    /// the VCL warp contract (`warpSize == 32`) is baked into CUDA-dialect
+    /// kernels and the software warp-emulation scratch, so narrowing the
+    /// machine means fewer warps and cores, not narrower warps. Selects
+    /// are legalized to branches for this profile (no `vx_cmov` in its
+    /// images) and warp builtins must use the software emulation
+    /// (`warp_hw = false`); hardware shfl/vote requests fail with a typed
+    /// back-end error.
+    pub const fn vortex_min() -> TargetDesc {
+        TargetDesc {
+            name: "vortex-min",
+            features: Features::minimal(),
+            caps: WarpCaps {
+                max_threads_per_warp: 32,
+                max_warps_per_core: 8,
+                max_cores: 2,
+            },
+            regfile: RegFile::vortex(),
+            addr_map: AddressMap::vortex(),
+            costs: CostModel::vortex(),
+            default_cores: 2,
+            default_warps_per_core: 8,
+            default_threads_per_warp: 32,
+            default_l2: false,
+        }
+    }
+
+    /// Names of the built-in profiles, in presentation order (kept in
+    /// lock-step with [`TargetDesc::builtins`] by a unit test; the
+    /// registration point for a new profile is `builtins()`).
+    pub const BUILTIN_NAMES: [&'static str; 2] = ["vortex", "vortex-min"];
+
+    /// The built-in profiles themselves — the single registration point
+    /// for new profiles (`by_name` and the name list derive from it).
+    pub fn builtins() -> Vec<TargetDesc> {
+        vec![TargetDesc::vortex(), TargetDesc::vortex_min()]
+    }
+
+    /// Look up a built-in profile by name (`_` and `-` are
+    /// interchangeable).
+    pub fn by_name(name: &str) -> Option<TargetDesc> {
+        let canon = name.replace('_', "-");
+        TargetDesc::builtins().into_iter().find(|t| t.name == canon)
+    }
+
+    /// Whether this target implements `op` (feature gate).
+    pub fn supports_op(&self, op: Op) -> bool {
+        self.features.supports_op(op)
+    }
+
+    /// Effective warp-builtin lowering for this target: hardware
+    /// shfl/vote when both extensions exist, software emulation
+    /// otherwise.
+    pub fn default_warp_hw(&self) -> bool {
+        self.features.shfl && self.features.vote
+    }
+
+    /// Stable byte serialization of every field that affects generated
+    /// code, for cache fingerprints. Two targets that differ anywhere
+    /// observable produce different streams.
+    pub fn fingerprint_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(self.name.len() + 40);
+        v.extend_from_slice(self.name.as_bytes());
+        v.push(0);
+        v.push(self.features.bits());
+        for x in [
+            self.caps.max_threads_per_warp,
+            self.caps.max_warps_per_core,
+            self.caps.max_cores,
+            self.addr_map.data_base,
+            self.addr_map.local_base,
+            self.addr_map.stack_base,
+            self.addr_map.stack_size,
+            self.addr_map.heap_base,
+        ] {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        for r in [
+            self.regfile.num_int,
+            self.regfile.num_float,
+            self.regfile.float_base,
+            self.regfile.int_alloc.0,
+            self.regfile.int_alloc.1,
+            self.regfile.float_alloc.0,
+            self.regfile.float_alloc.1,
+            self.regfile.arg_base,
+            self.regfile.arg_count,
+        ] {
+            v.push(r);
+        }
+        v
+    }
+}
+
+impl Default for TargetDesc {
+    fn default() -> TargetDesc {
+        TargetDesc::vortex()
+    }
+}
+
+/// A target owns its divergence seeds (paper §4.3.1). Both built-in
+/// profiles are Vortex-family machines — lane-indexed private stacks,
+/// per-lane atomics, warp-uniform machine CSRs — so the Vortex tracker
+/// rules apply; a non-Vortex target would implement this differently.
+impl TargetDivergenceInfo for TargetDesc {
+    fn is_source_of_divergence(
+        &self,
+        f: &Function,
+        inst: &InstData,
+        opts: &UniformityOptions,
+    ) -> bool {
+        VortexTti.is_source_of_divergence(f, inst, opts)
+    }
+
+    fn is_always_uniform(&self, f: &Function, inst: &InstData, opts: &UniformityOptions) -> bool {
+        VortexTti.is_always_uniform(f, inst, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_lookup_and_names() {
+        for name in TargetDesc::BUILTIN_NAMES {
+            let t = TargetDesc::by_name(name).unwrap();
+            assert_eq!(t.name, name);
+        }
+        // BUILTIN_NAMES is exactly the names of builtins(), in order —
+        // builtins() is the single registration point.
+        let names: Vec<&str> = TargetDesc::builtins().iter().map(|t| t.name).collect();
+        assert_eq!(names, TargetDesc::BUILTIN_NAMES.to_vec());
+        assert!(TargetDesc::by_name("nope").is_none());
+        assert_eq!(TargetDesc::by_name("vortex_min").unwrap().name, "vortex-min");
+        assert_eq!(TargetDesc::default().name, "vortex");
+    }
+
+    #[test]
+    fn feature_gates() {
+        let full = Features::vortex();
+        let min = Features::minimal();
+        assert!(full.supports_op(Op::CMOV) && full.supports_op(Op::SHFL));
+        assert!(!min.supports_op(Op::CMOV));
+        assert!(!min.supports_op(Op::SHFL));
+        assert!(!min.supports_op(Op::BALLOT));
+        assert!(min.supports_op(Op::FADD), "vortex-min keeps the FPU");
+        assert!(min.supports_op(Op::SPLIT), "core divergence ops are base ISA");
+        assert!(min.supports_op(Op::ADD) && min.supports_op(Op::BAR));
+        let nofp = Features { fp: false, ..Features::minimal() };
+        assert!(!nofp.supports_op(Op::FADD));
+        assert!(!nofp.supports_op(Op::FSQRT));
+        assert!(nofp.supports_op(Op::FMVXW), "bit moves are ALU-class");
+        assert_ne!(full.bits(), min.bits());
+        assert_eq!(Features::gate_name(Op::CMOV), Some("zicond"));
+        assert_eq!(Features::gate_name(Op::ADD), None);
+    }
+
+    #[test]
+    fn profiles_differ_where_they_should() {
+        let v = TargetDesc::vortex();
+        let m = TargetDesc::vortex_min();
+        assert!(v.default_warp_hw());
+        assert!(!m.default_warp_hw());
+        assert_eq!(m.default_threads_per_warp, 32, "warp width pinned by VCL contract");
+        assert!(m.caps.max_warps_per_core < v.caps.max_warps_per_core);
+        assert!(m.caps.max_cores < v.caps.max_cores);
+        assert_eq!(v.addr_map, m.addr_map, "both profiles share the Vortex memory map");
+        assert_ne!(v.fingerprint_bytes(), m.fingerprint_bytes());
+    }
+
+    #[test]
+    fn regfile_windows_must_avoid_reserved_registers() {
+        assert!(RegFile::vortex().validate().is_ok());
+        // Window reaching into the spill scratch (x29-x31): rejected.
+        let bad = RegFile {
+            int_alloc: (5, 31),
+            ..RegFile::vortex()
+        };
+        assert!(bad.validate().unwrap_err().contains("spill scratch"));
+        // Window covering x0/ra/sp: rejected.
+        let bad = RegFile {
+            int_alloc: (0, 28),
+            ..RegFile::vortex()
+        };
+        assert!(bad.validate().is_err());
+        // Float window into f61-f63: rejected.
+        let bad = RegFile {
+            float_alloc: (32, 63),
+            ..RegFile::vortex()
+        };
+        assert!(bad.validate().is_err());
+        // Unsupported bank shape: rejected.
+        let bad = RegFile {
+            num_int: 16,
+            ..RegFile::vortex()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn owned_tti_matches_vortex_tracker() {
+        use crate::ir::{Builder, Csr, Function, Intr, Type, Val};
+        let mut f = Function::new("t", vec![], Type::Void);
+        let lane;
+        {
+            let mut b = Builder::new(&mut f);
+            lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+            b.ret(None);
+        }
+        let Val::Inst(li) = lane else { panic!() };
+        let opts = UniformityOptions::default();
+        for t in TargetDesc::builtins() {
+            assert!(t.is_source_of_divergence(&f, f.inst(li), &opts));
+            assert!(!t.is_always_uniform(&f, f.inst(li), &opts));
+        }
+    }
+}

@@ -12,4 +12,4 @@ pub mod simplify;
 pub mod strength;
 pub mod structurize;
 
-pub use pass::{run_middle_end, MiddleEndReport, OptConfig, OptLevel};
+pub use pass::{run_middle_end, run_middle_end_with, MiddleEndReport, OptConfig, OptLevel};

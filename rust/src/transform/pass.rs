@@ -73,14 +73,32 @@ impl OptLevel {
 #[derive(Clone, Debug)]
 pub struct OptConfig {
     pub uniformity: UniformityOptions,
+    /// Ladder request for select formation (the ZiCond rung). The passes
+    /// only honor it when the target also implements the extension — see
+    /// [`OptConfig::effective_zicond`].
     pub zicond: bool,
     pub recon: bool,
     /// O3 rung: GVN + LICM + strength reduction.
     pub o3: bool,
+    /// ISA feature set of the compilation target. Legality is derived
+    /// from this, not from the ladder rung alone: on a target without
+    /// ZiCond, `form_selects` never runs and `select_normalize` expands
+    /// every select into a branch diamond *before* divergence management
+    /// (the select→branch legalization point — after Algorithm 2 the
+    /// expansion would produce unmanaged divergent branches).
+    pub features: crate::target::Features,
     /// Device functions at most this many instructions are inlined.
     pub inline_threshold: usize,
     /// Run the IR verifier after every pass (tests/debug).
     pub verify: bool,
+}
+
+impl OptConfig {
+    /// Select formation/retention is legal only when the ladder asks for
+    /// it *and* the target implements `vx_cmov`.
+    pub fn effective_zicond(&self) -> bool {
+        self.zicond && self.features.zicond
+    }
 }
 
 impl Default for OptConfig {
@@ -90,6 +108,7 @@ impl Default for OptConfig {
             zicond: true,
             recon: true,
             o3: true,
+            features: crate::target::Features::vortex(),
             inline_threshold: 48,
             verify: cfg!(debug_assertions),
         }
@@ -219,7 +238,12 @@ pub fn run_middle_end_with(
             simplify::single_exit(&mut m.funcs[f.idx()]);
         }
     });
-    if cfg.zicond {
+    // Select legality comes from the target's feature set, not the
+    // ladder rung alone: no vx_cmov → no select formation, and every
+    // select (front-end ternaries included) is expanded to a branch
+    // diamond here, while divergence management can still guard it.
+    let zicond = cfg.effective_zicond();
+    if zicond {
         // ZiCond: speculate small diamonds into selects (→ vx_cmov).
         timed("select-form", m, &mut rep, &mut |m, rep| {
             for &f in &funcs {
@@ -229,7 +253,7 @@ pub fn run_middle_end_with(
     }
     timed("select-normalize", m, &mut rep, &mut |m, rep| {
         for &f in &funcs {
-            rep.selects_expanded += simplify::select_normalize(&mut m.funcs[f.idx()], cfg.zicond);
+            rep.selects_expanded += simplify::select_normalize(&mut m.funcs[f.idx()], zicond);
         }
     });
     // 7b. The O3 rung: redundancy elimination on the canonical CondBr CFG,
@@ -410,6 +434,37 @@ mod tests {
         let rep = run_middle_end(&mut m, &OptConfig::default());
         assert!(rep.timings.iter().any(|(n, _)| n == "divergence-insert"));
         assert!(rep.total_ms() > 0.0);
+    }
+
+    /// Target-feature legality overrides the ladder: with a no-ZiCond
+    /// feature set even O3 forms no selects, select-normalize expands any
+    /// that exist, and semantics are preserved.
+    #[test]
+    fn features_gate_select_formation() {
+        let m0 = build_kernel();
+        let expect = run_out(&m0, 16);
+        let mut cfg = OptLevel::O3.config();
+        cfg.features = crate::target::Features::minimal();
+        cfg.verify = true;
+        assert!(cfg.zicond && !cfg.effective_zicond());
+        let mut m = m0.clone();
+        let rep = run_middle_end(&mut m, &cfg);
+        assert_eq!(rep.selects_formed, 0, "no vx_cmov -> no select formation");
+        assert!(
+            !rep.timings.iter().any(|(n, _)| n == "select-form"),
+            "select-form must not run without the zicond feature"
+        );
+        // No select instruction may survive to the backend boundary.
+        for f in &m.funcs {
+            for inst in &f.insts {
+                assert!(
+                    inst.dead || !matches!(inst.kind, crate::ir::InstKind::Select { .. }),
+                    "select survived legalization in {}",
+                    f.name
+                );
+            }
+        }
+        assert_eq!(run_out(&m, 16), expect, "legalized module changed semantics");
     }
 
     /// O3 sits above Recon: its config enables the new passes, the ladder

@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use volt::backend::emit::{ProgramImage, DATA_BASE, HEAP_BASE};
 use volt::backend::isa::{MachInst, Op};
 use volt::sim::{Gpu, SimConfig, SimStats};
+use volt::target::{AddressMap, TargetDesc};
 
 fn mk(op: Op, rd: u8, rs1: u8, rs2: u8, imm: i32) -> MachInst {
     MachInst {
@@ -34,6 +35,8 @@ fn image(code: Vec<MachInst>) -> ProgramImage {
         func_entries: HashMap::new(),
         pc_loc,
         crt0_len: 0,
+        target: "vortex".into(),
+        addr_map: AddressMap::vortex(),
     }
 }
 
@@ -245,6 +248,55 @@ fn divergent_branch_traps() {
     let mut gpu = Gpu::load(&img, one_core());
     let err = gpu.run().unwrap_err();
     assert!(err.msg.contains("non-uniform"), "{err}");
+}
+
+/// An unknown CSR index is a trap, not a silent NumCores read.
+#[test]
+fn unknown_csr_traps() {
+    let code = vec![
+        mk(Op::LI, 5, 0, 0, -1),
+        mk(Op::TMC, 0, 5, 0, 0),
+        mk(Op::CSRR, 6, 0, 0, 99), // no such CSR
+        mk(Op::TMC, 0, 0, 0, 0),
+    ];
+    let img = image(code);
+    let mut gpu = Gpu::load(&img, one_core());
+    let err = gpu.run().unwrap_err();
+    assert!(err.msg.contains("unknown CSR"), "{err}");
+    assert!(err.msg.contains("99"), "{err}");
+}
+
+/// Feature-gated opcodes outside the device's declared feature set trap
+/// with a message naming the gate — the image/target-mismatch guard.
+#[test]
+fn undeclared_extension_ops_trap() {
+    let min_features = TargetDesc::vortex_min().features;
+    for (op, gate) in [
+        (Op::CMOV, "zicond"),
+        (Op::SHFL, "shfl"),
+        (Op::BALLOT, "vote"),
+        (Op::VOTEALL, "vote"),
+        (Op::VOTEANY, "vote"),
+    ] {
+        let code = vec![
+            mk(Op::LI, 5, 0, 0, -1),
+            mk(Op::TMC, 0, 5, 0, 0),
+            mk(op, 6, 5, 5, 0),
+            mk(Op::TMC, 0, 0, 0, 0),
+        ];
+        let img = image(code.clone());
+        let cfg = SimConfig {
+            features: min_features,
+            ..one_core()
+        };
+        let mut gpu = Gpu::load(&img, cfg);
+        let err = gpu.run().unwrap_err();
+        assert!(err.msg.contains("illegal instruction"), "{op:?}: {err}");
+        assert!(err.msg.contains(gate), "{op:?}: {err}");
+        // The same program runs on a full-featured device.
+        let mut gpu = Gpu::load(&image(code), one_core());
+        gpu.run().unwrap_or_else(|e| panic!("{op:?} on vortex: {e}"));
+    }
 }
 
 /// Atomics serialize per lane in lane order.

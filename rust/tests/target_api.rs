@@ -1,0 +1,273 @@
+//! Cross-target semantics: the same source compiled through one
+//! middle-end for `vortex` and `vortex-min` must produce bit-identical
+//! results, with select→branch legalization proven on `vortex-min`
+//! (no `vx_cmov` in its images), typed errors for hardware warp
+//! primitives the target lacks, a target-keyed binary cache, and loud
+//! simulator traps on image/target mismatches.
+
+use std::sync::Arc;
+use volt::backend::isa::Op;
+use volt::driver::{fingerprint, Program, Session, VoltError, VoltOptions};
+use volt::runtime::{ArgValue, VoltDevice};
+use volt::sim::SimConfig;
+use volt::target::TargetDesc;
+use volt::transform::OptLevel;
+
+/// The pass.rs ladder kernel as VCL source: a divergent loop (per-lane
+/// trip counts) followed by a divergent if/else — the shape that forms a
+/// select on ZiCond targets and a branch diamond on vortex-min.
+const LADDER_SRC: &str = r#"
+kernel void k(global int* out, int n) {
+    int i = get_global_id(0);
+    int s = 0;
+    for (int j = 0; j < i % 7; j++) { s += j; }
+    int v = 0;
+    if ((i & 1) != 0) { v = s * 3; } else { v = s + 100; }
+    if (i < n) out[i] = v;
+}
+"#;
+
+fn compile_on(target: &str, opt: OptLevel, src: &str) -> (Session, Arc<Program>) {
+    let opts = VoltOptions::builder()
+        .target(target)
+        .opt_level(opt)
+        .build()
+        .unwrap();
+    let mut s = Session::new(opts);
+    let p = s.compile(src).unwrap();
+    (s, p)
+}
+
+fn run_k_on(target: &str, opt: OptLevel, src: &str, n: u32) -> Vec<u32> {
+    let (s, p) = compile_on(target, opt, src);
+    let mut st = s.create_stream(&p);
+    let buf = st.malloc(n * 4);
+    st.enqueue_write_u32(buf, &vec![0u32; n as usize]);
+    st.enqueue_launch(
+        "k",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(buf), ArgValue::I32(n as i32)],
+    )
+    .unwrap();
+    let t = st.enqueue_read_u32(buf, n as usize);
+    st.synchronize().unwrap();
+    st.take_u32(t).unwrap()
+}
+
+/// The ladder kernel produces bit-identical outputs on both built-in
+/// targets, at the ladder's top rung, and matches the host-side model.
+#[test]
+fn ladder_kernel_bit_identical_across_targets() {
+    let n = 128u32;
+    let vortex = run_k_on("vortex", OptLevel::O3, LADDER_SRC, n);
+    let min = run_k_on("vortex-min", OptLevel::O3, LADDER_SRC, n);
+    assert_eq!(vortex, min, "cross-target outputs diverged");
+    let host: Vec<u32> = (0..n)
+        .map(|i| {
+            let s: u32 = (0..i % 7).sum();
+            if i & 1 != 0 {
+                s * 3
+            } else {
+                s + 100
+            }
+        })
+        .collect();
+    assert_eq!(vortex, host, "device disagrees with the host model");
+    // Recon too (the paper's default rung).
+    assert_eq!(
+        run_k_on("vortex", OptLevel::Recon, LADDER_SRC, n),
+        run_k_on("vortex-min", OptLevel::Recon, LADDER_SRC, n)
+    );
+}
+
+/// Select→branch legalization is structural: the vortex image keeps the
+/// select as vx_cmov, the vortex-min image contains no gated op at all.
+#[test]
+fn vortex_min_images_are_free_of_gated_ops() {
+    let (_s, pv) = compile_on("vortex", OptLevel::O3, LADDER_SRC);
+    assert!(
+        pv.image.code.iter().any(|i| i.op == Op::CMOV),
+        "vortex @ O3 should form a select for the if/else diamond"
+    );
+    let (_s, pm) = compile_on("vortex-min", OptLevel::O3, LADDER_SRC);
+    let min = TargetDesc::vortex_min();
+    for inst in &pm.image.code {
+        assert!(
+            min.supports_op(inst.op),
+            "gated op {:?} in a vortex-min image",
+            inst.op
+        );
+    }
+    assert_eq!(pm.image.target, "vortex-min");
+    assert_eq!(pv.image.target, "vortex");
+}
+
+const SHFL_SRC: &str = r#"
+__global__ void k(int* out) {
+    int l = lane_id();
+    out[l] = __shfl(l, 0);
+}
+"#;
+
+const VOTE_SRC: &str = r#"
+__global__ void k(int* out) {
+    int l = lane_id();
+    out[l] = __any(l > 0);
+}
+"#;
+
+/// A shfl/vote kernel on vortex-min with hardware lowering requested is
+/// a typed back-end error naming the missing extension — never a
+/// miscompile. The software-emulation path compiles and runs.
+#[test]
+fn hw_warp_builtins_on_vortex_min_are_typed_errors() {
+    use volt::frontend::Dialect;
+    for (src, gate) in [(SHFL_SRC, "shfl"), (VOTE_SRC, "vote")] {
+        let opts = VoltOptions::builder()
+            .target("vortex-min")
+            .dialect(Dialect::Cuda)
+            .warp_hw(true)
+            .build()
+            .unwrap();
+        let mut s = Session::new(opts);
+        let e = s.compile(src).unwrap_err();
+        match &e {
+            VoltError::Backend(be) => {
+                assert!(be.msg.contains(gate), "{gate}: {be}");
+                assert!(be.msg.contains("vortex-min"), "{be}");
+            }
+            other => panic!("expected Backend error for {gate}, got {other:?}"),
+        }
+        // Software emulation: same kernel compiles and runs to the same
+        // answers a vortex device produces.
+        let opts = VoltOptions::builder()
+            .target("vortex-min")
+            .dialect(Dialect::Cuda)
+            .warp_hw(false)
+            .build()
+            .unwrap();
+        let mut s = Session::new(opts);
+        let p = s.compile(src).unwrap();
+        let mut st = s.create_stream(&p);
+        let buf = st.malloc(32 * 4);
+        st.enqueue_launch("k", [1, 1, 1], [32, 1, 1], &[ArgValue::Ptr(buf)])
+            .unwrap();
+        let t = st.enqueue_read_u32(buf, 32);
+        st.synchronize().unwrap();
+        let got = st.take_u32(t).unwrap();
+        let want: Vec<u32> = match gate {
+            "shfl" => vec![0; 32],
+            _ => (0..32).map(|_| 1u32).collect(),
+        };
+        assert_eq!(got, want, "{gate} sw emulation on vortex-min");
+    }
+}
+
+/// Same source, two targets → two cache keys; same source, same target →
+/// one. The Session serves the hit from the cache (pointer-equal Arc).
+#[test]
+fn binary_cache_is_keyed_by_target() {
+    let vortex = VoltOptions::builder().target("vortex").build().unwrap();
+    let min = VoltOptions::builder().target("vortex-min").build().unwrap();
+    assert_ne!(
+        fingerprint(LADDER_SRC, &vortex),
+        fingerprint(LADDER_SRC, &min),
+        "two targets must occupy two cache entries"
+    );
+    assert_eq!(fingerprint(LADDER_SRC, &vortex), fingerprint(LADDER_SRC, &vortex));
+    let mut s = Session::new(vortex);
+    let p1 = s.compile(LADDER_SRC).unwrap();
+    let p2 = s.compile(LADDER_SRC).unwrap();
+    assert!(Arc::ptr_eq(&p1, &p2), "same target: cache hit");
+    assert_eq!(s.cache_stats().hits, 1);
+    let mut sm = Session::new(min);
+    let pm = sm.compile(LADDER_SRC).unwrap();
+    assert_ne!(p1.fingerprint, pm.fingerprint);
+    assert_ne!(
+        p1.image.code.len(),
+        0,
+        "sanity: programs materialized"
+    );
+}
+
+/// Running a vortex image (with vx_cmov) on a vortex-min device is a
+/// loud simulator trap naming the missing extension, not silent wrong
+/// answers.
+#[test]
+fn device_traps_on_undeclared_extension_ops() {
+    let (_s, pv) = compile_on("vortex", OptLevel::O3, LADDER_SRC);
+    assert!(pv.image.code.iter().any(|i| i.op == Op::CMOV));
+    let min_cfg = SimConfig::from_target(&TargetDesc::vortex_min());
+    let mut dev = VoltDevice::new(pv.image.clone(), min_cfg);
+    let buf = dev.malloc(128 * 4);
+    let err = dev
+        .launch(
+            "k",
+            [2, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(buf), ArgValue::I32(128)],
+        )
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("zicond"), "trap should name the gate: {msg}");
+    assert!(msg.contains("illegal instruction"), "{msg}");
+}
+
+/// Stream profiling and chrome traces are stamped with the target.
+#[test]
+fn profiles_and_traces_carry_the_target() {
+    let opts = VoltOptions::builder()
+        .target("vortex-min")
+        .profiling(true)
+        .build()
+        .unwrap();
+    let mut s = Session::new(opts);
+    let p = s.compile(LADDER_SRC).unwrap();
+    let mut st = s.create_stream(&p);
+    let buf = st.malloc(128 * 4);
+    st.enqueue_launch(
+        "k",
+        [2, 1, 1],
+        [64, 1, 1],
+        &[ArgValue::Ptr(buf), ArgValue::I32(128)],
+    )
+    .unwrap();
+    st.synchronize().unwrap();
+    let profiles = st.profiles();
+    assert_eq!(profiles.len(), 1);
+    assert_eq!(profiles[0].target, "vortex-min");
+    let trace = st.chrome_trace();
+    volt::prof::validate_json(&trace).unwrap();
+    assert!(trace.contains("\"target\":\"vortex-min\""), "{trace}");
+}
+
+/// Capability caps at option-build time: typed errors, not clamping.
+#[test]
+fn geometry_above_caps_is_invalid_options() {
+    let e = VoltOptions::builder()
+        .target("vortex-min")
+        .sim(SimConfig {
+            num_cores: 4,
+            ..SimConfig::from_target(&TargetDesc::vortex_min())
+        })
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, VoltError::InvalidOptions { .. }), "{e}");
+    assert!(e.to_string().contains("num_cores"), "{e}");
+    // Launch geometry still validates against the (capped) device.
+    let opts = VoltOptions::builder().target("vortex-min").build().unwrap();
+    let mut s = Session::new(opts);
+    let p = s.compile(LADDER_SRC).unwrap();
+    let mut st = s.create_stream(&p);
+    let buf = st.malloc(4);
+    st.enqueue_launch(
+        "k",
+        [1, 1, 1],
+        [512, 1, 1], // 16 warps of 32 > vortex-min's 8 warps/core
+        &[ArgValue::Ptr(buf), ArgValue::I32(1)],
+    )
+    .unwrap();
+    let e = st.synchronize().unwrap_err();
+    assert!(matches!(e, VoltError::Runtime(_)), "{e}");
+}
