@@ -9,11 +9,18 @@
 //! * every target — all 28 kernels compile, run, and validate at both
 //!   levels (this is the cross-target acceptance: on `vortex-min` the
 //!   images are additionally audited to contain no zicond/shfl/vote op);
-//! * `vortex` only — O3 achieves a >= 3% geomean cycle reduction with
-//!   ZERO kernels regressing (the original single-target perf gate,
-//!   unchanged). Other targets report their numbers without a perf gate:
-//!   vortex-min has no ZiCond rung to harvest, so its Recon/O3 delta is
-//!   a different (smaller) quantity.
+//! * `vortex` only — O3 achieves a >= 5% geomean cycle reduction with
+//!   ZERO kernels regressing. The bar was 3% when O3 was the middle-end
+//!   rung alone; the backend codegen rung (MIR combine, coalescing
+//!   spill-aware regalloc) also rides the O3 ladder point, and its
+//!   harvest raises the gate. Other targets gate on validators plus
+//!   zero per-kernel regressions (no geomean bar: vortex-min has no
+//!   ZiCond rung to harvest, so its Recon/O3 delta is a different,
+//!   smaller quantity).
+//!
+//! Per-kernel rows carry dynamic-instruction and static spill-traffic
+//! columns (recon_spills / o3_spills in the JSON) so instruction-count
+//! and spill regressions are visible even when cycles hide them.
 //!
 //! Run: cargo bench --bench o3_cycles
 //!      VOLT_TARGET=vortex-min cargo bench --bench o3_cycles
@@ -45,28 +52,41 @@ fn main() {
     println!("wrote {path} ({} kernels, target {})", rows.len(), target.name);
 
     let g = geomean(rows.iter().map(|r| r.cycle_reduction()));
+    let regressions: Vec<&str> = rows
+        .iter()
+        .filter(|r| r.regressed())
+        .map(|r| r.name)
+        .collect();
     if target.name != "vortex" {
+        // Non-vortex targets: validators + zero per-kernel regressions
+        // (the backend rung rides O3 on every target; no geomean bar —
+        // vortex-min has no ZiCond rung to harvest).
+        if !regressions.is_empty() {
+            eprintln!(
+                "FAIL: O3 regressed vs Recon on {}: {}",
+                target.name,
+                regressions.join(", ")
+            );
+            std::process::exit(1);
+        }
         println!(
-            "PASS: {} kernels validated at Recon and O3 on {} (geomean {:.3}x, no perf gate)",
+            "PASS: {} kernels validated at Recon and O3 on {} (geomean {:.3}x, no regressions, \
+             no geomean gate)",
             rows.len(),
             target.name,
             g
         );
         return;
     }
-    let regressions: Vec<&str> = rows
-        .iter()
-        .filter(|r| r.regressed())
-        .map(|r| r.name)
-        .collect();
     let mut failed = false;
     if !regressions.is_empty() {
         eprintln!("FAIL: O3 regressed vs Recon on: {}", regressions.join(", "));
         failed = true;
     }
-    if g < 1.03 {
+    if g < 1.05 {
         eprintln!(
-            "FAIL: geomean cycle reduction {:.3}x is below the 1.03x gate",
+            "FAIL: geomean cycle reduction {:.3}x is below the 1.05x gate \
+             (middle-end O3 + backend codegen rung)",
             g
         );
         failed = true;

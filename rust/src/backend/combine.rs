@@ -1,0 +1,702 @@
+//! MIR combine/peephole pass — the backend half of the codegen-quality
+//! rung (runs between isel cleanups and register allocation, only when
+//! `BackendOptions::codegen_opt` is set).
+//!
+//! On the blocking-issue Vortex timing model every eliminated dynamic
+//! instruction is a direct cycle win, so the pass goes after the dynamic
+//! instruction count the naive selector leaves behind:
+//!
+//! * **absolute-address folding through `x0`** — `li v, addr` feeding a
+//!   global `lw`/`sw` base folds into the memory immediate
+//!   (`lw d, addr(x0)`), killing the `li`. Refused when the combined
+//!   displacement does not fit the i32 immediate (the emitter truncates
+//!   `MInst::imm` to i32, so an out-of-range fold would be a silent
+//!   miscompile).
+//! * **`addi`-chain collapsing** — `addi t, b, k` feeding a load/store
+//!   (or another `addi`) folds `k` into the consumer's immediate. Bases
+//!   may be single-def vregs, `x0`, or `sp` (constant inside the body:
+//!   the prologue/epilogue are inserted *after* this pass).
+//! * **compare-before-branch fusion** — `sne t, a, x0; bnez t` becomes
+//!   `bnez a` (and the `seq` variants flip the branch sense). Sound
+//!   because `beqz`/`bnez` only exist for statically-uniform conditions
+//!   and the uniformity analysis only proves `t` uniform when `a` is.
+//! * **identity-op elimination** — `addi d, s, 0`, shift-by-0, `ori`/
+//!   `xori` 0 and `andi -1` become copies for `mir_opt::copy_prop` to
+//!   fold; a post-regalloc [`cleanup_identities`] removes the `mv r, r`
+//!   residue that copy coalescing exposes.
+//! * **cross-block `li` rematerialization dedup** — generalizes the
+//!   block-local dedup in `mir_opt::copy_prop` across the dominator
+//!   tree. This is the one pattern that *extends* a live range across
+//!   blocks, so it refuses any candidate pair with a mask-widening
+//!   operation (`vx_tmc`, `vx_pred`, `vx_join`) on a connecting path: a
+//!   lane activated between the two `li`s would read a register it never
+//!   wrote. Folds at a *use site* need no such check — they recompute
+//!   the same per-lane value from registers the lane demonstrably wrote
+//!   (single-def SSA residue), never resurrect a stale one.
+//!
+//! All rewrites require the forwarded-through vregs to be single-def
+//! (the SSA residue isel leaves; phi destinations are multi-def and are
+//! never touched).
+
+use super::isa::Op;
+use super::mir::{MFunction, MReg, NONE};
+use std::collections::HashMap;
+
+/// What the pass did (per function).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CombineReport {
+    /// `li` bases folded into absolute `lw addr(x0)` / `sw addr(x0)`.
+    pub addr_folds: usize,
+    /// `addi` displacements collapsed into consumer immediates.
+    pub addi_folds: usize,
+    /// Compare-before-branch pairs fused.
+    pub branch_fusions: usize,
+    /// Identity ops rewritten to copies (pre-RA) or removed (post-RA).
+    pub identities: usize,
+    /// Cross-block duplicate `li`s forwarded to a dominating twin.
+    pub li_dedups: usize,
+}
+
+impl CombineReport {
+    pub fn total(&self) -> usize {
+        self.addr_folds + self.addi_folds + self.branch_fusions + self.identities + self.li_dedups
+    }
+}
+
+/// The defining instruction of a single-def vreg (the fields the
+/// patterns need).
+#[derive(Clone, Copy)]
+struct DefSite {
+    op: Op,
+    rs1: MReg,
+    rs2: MReg,
+    imm: i64,
+}
+
+/// Single-def tracking, owned (no borrow of the function retained) so
+/// rewriting can proceed while consulting it.
+struct Defs {
+    count: Vec<u32>,
+    site: Vec<Option<DefSite>>,
+    float: Vec<bool>,
+}
+
+impl Defs {
+    fn build(f: &MFunction) -> Defs {
+        let nv = f.vreg_float.len();
+        let mut d = Defs {
+            count: vec![0; nv],
+            site: vec![None; nv],
+            float: f.vreg_float.clone(),
+        };
+        for b in &f.blocks {
+            for i in &b.insts {
+                if let Some(r) = i.def() {
+                    if r.is_virt() {
+                        let v = r.virt_idx();
+                        d.count[v] += 1;
+                        d.site[v] = Some(DefSite {
+                            op: i.op,
+                            rs1: i.rs1,
+                            rs2: i.rs2,
+                            imm: i.imm,
+                        });
+                    }
+                }
+            }
+        }
+        d
+    }
+
+    fn single(&self, r: MReg) -> Option<DefSite> {
+        if r.is_virt() && self.count[r.virt_idx()] == 1 {
+            self.site[r.virt_idx()]
+        } else {
+            None
+        }
+    }
+
+    fn single_int(&self, r: MReg) -> Option<DefSite> {
+        match self.single(r) {
+            Some(s) if !self.float[r.virt_idx()] => Some(s),
+            _ => None,
+        }
+    }
+
+    /// A register whose value is constant between a folded-away def and
+    /// its use: `x0`, `sp` (the prologue/epilogue are inserted after
+    /// this pass, so `sp` is invariant inside the body), or a
+    /// single-def integer vreg.
+    fn stable_base(&self, r: MReg) -> bool {
+        if r == MReg::phys(0) || r == MReg::phys(super::isa::SP) {
+            return true;
+        }
+        r.is_virt() && !self.float[r.virt_idx()] && self.count[r.virt_idx()] == 1
+    }
+}
+
+fn fits_i32(v: i64) -> bool {
+    i32::try_from(v).is_ok()
+}
+
+/// The one identity-op table shared by the pre-RA copy conversion and
+/// the post-RA cleanup (keeping the two passes from drifting apart).
+fn identity_imm(op: Op, imm: i64) -> bool {
+    match op {
+        Op::ADDI | Op::ORI | Op::XORI | Op::SLLI | Op::SRLI | Op::SRAI => imm == 0,
+        Op::ANDI => imm == -1,
+        _ => false,
+    }
+}
+
+/// Run the pre-regalloc combine patterns. Call `mir_opt::copy_prop` +
+/// `mir_opt::dce` afterwards to fold the copies this exposes and drop
+/// the dead `li`/compare defs.
+pub fn run(f: &mut MFunction) -> CombineReport {
+    let mut rep = CombineReport::default();
+    // A couple of rounds: folding an addi link exposes the li behind it.
+    for _ in 0..3 {
+        let before = rep.total();
+        fold_identities(f, &mut rep);
+        fold_uses(f, &mut rep);
+        if rep.total() == before {
+            break;
+        }
+    }
+    dedup_li(f, &mut rep);
+    rep
+}
+
+/// Identity ops become plain copies (folded by `copy_prop`).
+fn fold_identities(f: &mut MFunction, rep: &mut CombineReport) {
+    for b in f.blocks.iter_mut() {
+        for i in b.insts.iter_mut() {
+            if identity_imm(i.op, i.imm) && !i.rd.is_none() && !i.rs1.is_none() {
+                i.op = Op::MOV;
+                i.imm = 0;
+                rep.identities += 1;
+            }
+        }
+    }
+}
+
+/// At-use folds: address materialization into memory immediates, addi
+/// chains, and compare-before-branch fusion. Per-lane safe without any
+/// path analysis: the rewritten use recomputes the value from registers
+/// the executing lane wrote itself (single-def bases).
+fn fold_uses(f: &mut MFunction, rep: &mut CombineReport) {
+    let defs = Defs::build(f);
+    for b in f.blocks.iter_mut() {
+        for i in b.insts.iter_mut() {
+            match i.op {
+                Op::LW | Op::SW => {
+                    // Chase the base through addi links, then an li root.
+                    let mut fuel = 4;
+                    while fuel > 0 {
+                        fuel -= 1;
+                        match defs.single_int(i.rs1) {
+                            Some(DefSite { op: Op::LI, imm: c, .. }) => {
+                                let total = c + i.imm;
+                                if (0..=i32::MAX as i64).contains(&total) {
+                                    i.rs1 = MReg::phys(0);
+                                    i.imm = total;
+                                    rep.addr_folds += 1;
+                                }
+                                break;
+                            }
+                            Some(DefSite {
+                                op: Op::ADDI,
+                                rs1: base,
+                                imm: k,
+                                ..
+                            }) if defs.stable_base(base) && fits_i32(i.imm + k) => {
+                                i.rs1 = base;
+                                i.imm += k;
+                                rep.addi_folds += 1;
+                            }
+                            _ => break,
+                        }
+                    }
+                }
+                Op::ADDI => match defs.single_int(i.rs1) {
+                    Some(DefSite {
+                        op: Op::ADDI,
+                        rs1: base,
+                        imm: k,
+                        ..
+                    }) if defs.stable_base(base) && fits_i32(i.imm + k) => {
+                        i.rs1 = base;
+                        i.imm += k;
+                        rep.addi_folds += 1;
+                    }
+                    Some(DefSite { op: Op::LI, imm: c, .. }) if fits_i32(c + i.imm) => {
+                        // addi over a constant is just another constant.
+                        i.op = Op::LI;
+                        i.imm += c;
+                        i.rs1 = NONE;
+                        rep.addi_folds += 1;
+                    }
+                    _ => {}
+                },
+                Op::BEQZ | Op::BNEZ => {
+                    // sne t, a, 0 ; bnez t  ->  bnez a  (seq flips sense).
+                    // The zero may be literal x0 (trunc lowering) or a
+                    // materialized `li 0` vreg (icmp-against-constant).
+                    if let Some(cmp) = defs.single_int(i.rs1) {
+                        let a = cmp.rs1;
+                        let value_stable = a == MReg::phys(0) || defs.single_int(a).is_some();
+                        let rs2_zero = cmp.rs2 == MReg::phys(0)
+                            || matches!(
+                                defs.single_int(cmp.rs2),
+                                Some(DefSite { op: Op::LI, imm: 0, .. })
+                            );
+                        if value_stable && rs2_zero {
+                            match cmp.op {
+                                Op::SNE => {
+                                    i.rs1 = a;
+                                    rep.branch_fusions += 1;
+                                }
+                                Op::SEQ => {
+                                    i.op = if i.op == Op::BNEZ { Op::BEQZ } else { Op::BNEZ };
+                                    i.rs1 = a;
+                                    rep.branch_fusions += 1;
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Mask-widening ops: a lane can become active *after* skipping code
+/// containing them, so a live range must never be stretched across one.
+fn widens_mask(op: Op) -> bool {
+    matches!(op, Op::TMC | Op::PRED | Op::JOIN)
+}
+
+/// Cross-block `li` dedup over the dominator tree, refusing any pair
+/// with a mask-widening block on a connecting path.
+fn dedup_li(f: &mut MFunction, rep: &mut CombineReport) {
+    let nb = f.blocks.len();
+    if nb == 0 {
+        return;
+    }
+    let defs = Defs::build(f);
+    // Single-def li vregs: (vreg idx, imm, float, block). Collected
+    // before the dominator/reachability work so functions with no
+    // duplicate constants (the common case) pay nothing.
+    let mut lis: Vec<(usize, i64, bool, usize)> = vec![];
+    for (bi, b) in f.blocks.iter().enumerate() {
+        for i in &b.insts {
+            if i.op == Op::LI && i.rd.is_virt() && defs.count[i.rd.virt_idx()] == 1 {
+                lis.push((i.rd.virt_idx(), i.imm, f.vreg_float[i.rd.virt_idx()], bi));
+            }
+        }
+    }
+    let mut keys: Vec<(i64, bool)> = lis.iter().map(|&(_, imm, fl, _)| (imm, fl)).collect();
+    keys.sort_unstable();
+    if !keys.windows(2).any(|w| w[0] == w[1]) {
+        return; // no duplicate (imm, class) anywhere
+    }
+    let (idom, depth) = dominators(f);
+    let reach = reachability(f);
+    let widening: Vec<bool> = f
+        .blocks
+        .iter()
+        .map(|b| b.insts.iter().any(|i| widens_mask(i.op)))
+        .collect();
+    // Strict dominance via the idom chain.
+    let dominates = |a: usize, b: usize| -> bool {
+        let mut x = b;
+        while let Some(p) = idom[x] {
+            if p == a {
+                return true;
+            }
+            x = p;
+        }
+        false
+    };
+    // No widening block W may sit on any D -> U path (conservatively:
+    // W reachable from D and U reachable from W; D and U themselves
+    // count, so a widening op before the def or after the use also
+    // refuses — safe over-approximation).
+    let path_clear = |d: usize, u: usize| -> bool {
+        (0..nb).all(|w| !(widening[w] && reach[d][w] && reach[w][u]))
+    };
+    // Sort by dominator depth so every strict dominator of an entry is
+    // processed — and its root/forwarded status final — before it.
+    lis.sort_by_key(|&(v, _, _, bi)| (depth[bi], bi, v));
+    let mut fwd: HashMap<usize, usize> = HashMap::new();
+    let mut processed: Vec<(usize, i64, bool, usize)> = Vec::with_capacity(lis.len());
+    for &(v, imm, fl, bv) in &lis {
+        // Only link to designated roots: dominators were processed
+        // first (depth order), so a forwarded candidate already has a
+        // root and is skipped (keeps the map one level deep, no chains).
+        for &(w, imm2, fl2, bw) in &processed {
+            if imm == imm2
+                && fl == fl2
+                && !fwd.contains_key(&w)
+                && dominates(bw, bv)
+                && path_clear(bw, bv)
+            {
+                fwd.insert(v, w);
+                break;
+            }
+        }
+        processed.push((v, imm, fl, bv));
+    }
+    if fwd.is_empty() {
+        return;
+    }
+    for b in f.blocks.iter_mut() {
+        b.insts.retain(|i| {
+            if i.op == Op::LI && i.rd.is_virt() && fwd.contains_key(&i.rd.virt_idx()) {
+                rep.li_dedups += 1;
+                false
+            } else {
+                true
+            }
+        });
+        for i in b.insts.iter_mut() {
+            if i.rs1.is_virt() {
+                if let Some(&r) = fwd.get(&i.rs1.virt_idx()) {
+                    i.rs1 = MReg(64 + r as u32);
+                }
+            }
+            if i.rs2.is_virt() {
+                if let Some(&r) = fwd.get(&i.rs2.virt_idx()) {
+                    i.rs2 = MReg(64 + r as u32);
+                }
+            }
+            // rd of CMOV/AMOCAS is a read too, but those vregs are
+            // multi-def (mv + the op) and can never be in `fwd`.
+        }
+    }
+}
+
+/// Iterative dominators over the MIR block graph (entry = 0). Returns
+/// the immediate dominator per block (`None` for the entry and
+/// unreachable blocks) plus the dominator-tree depth (0 for entry and
+/// unreachable blocks).
+fn dominators(f: &MFunction) -> (Vec<Option<usize>>, Vec<u32>) {
+    let nb = f.blocks.len();
+    let succs: Vec<Vec<usize>> = f.blocks.iter().map(|b| b.succs()).collect();
+    let mut preds: Vec<Vec<usize>> = vec![vec![]; nb];
+    for (bi, ss) in succs.iter().enumerate() {
+        for &s in ss {
+            if s < nb {
+                preds[s].push(bi);
+            }
+        }
+    }
+    // Reverse post-order over reachable blocks.
+    let mut order: Vec<usize> = vec![];
+    let mut seen = vec![false; nb];
+    let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
+    seen[0] = true;
+    while let Some(frame) = stack.last_mut() {
+        let (b, k) = *frame;
+        if k < succs[b].len() {
+            frame.1 += 1;
+            let s = succs[b][k];
+            if s < nb && !seen[s] {
+                seen[s] = true;
+                stack.push((s, 0));
+            }
+        } else {
+            order.push(b);
+            stack.pop();
+        }
+    }
+    order.reverse();
+    let mut rpo_num = vec![usize::MAX; nb];
+    for (k, &b) in order.iter().enumerate() {
+        rpo_num[b] = k;
+    }
+    let mut idom: Vec<Option<usize>> = vec![None; nb];
+    idom[0] = Some(0);
+    fn intersect(idom: &[Option<usize>], rpo_num: &[usize], mut a: usize, mut b: usize) -> usize {
+        while a != b {
+            while rpo_num[a] > rpo_num[b] {
+                a = idom[a].unwrap();
+            }
+            while rpo_num[b] > rpo_num[a] {
+                b = idom[b].unwrap();
+            }
+        }
+        a
+    }
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in order.iter().skip(1) {
+            let mut new: Option<usize> = None;
+            for &p in &preds[b] {
+                if idom[p].is_none() {
+                    continue;
+                }
+                new = Some(match new {
+                    None => p,
+                    Some(n) => intersect(&idom, &rpo_num, n, p),
+                });
+            }
+            if new.is_some() && new != idom[b] {
+                idom[b] = new;
+                changed = true;
+            }
+        }
+    }
+    idom[0] = None; // entry has no strict dominator
+    let mut depth = vec![0u32; nb];
+    for &b in &order {
+        if let Some(p) = idom[b] {
+            depth[b] = depth[p] + 1;
+        }
+    }
+    (idom, depth)
+}
+
+/// Block-level reachability closure (`reach[a][b]`: b reachable from a,
+/// including a itself).
+fn reachability(f: &MFunction) -> Vec<Vec<bool>> {
+    let nb = f.blocks.len();
+    let succs: Vec<Vec<usize>> = f.blocks.iter().map(|b| b.succs()).collect();
+    let mut reach = vec![vec![false; nb]; nb];
+    for (start, row) in reach.iter_mut().enumerate() {
+        let mut stack = vec![start];
+        row[start] = true;
+        while let Some(b) = stack.pop() {
+            for &s in &succs[b] {
+                if s < nb && !row[s] {
+                    row[s] = true;
+                    stack.push(s);
+                }
+            }
+        }
+    }
+    reach
+}
+
+/// Post-regalloc cleanup: remove the identity residue copy coalescing
+/// and the pre-RA folds leave behind (`mv r, r`, `addi r, r, 0`, …).
+pub fn cleanup_identities(f: &mut MFunction) -> usize {
+    let mut removed = 0;
+    for b in f.blocks.iter_mut() {
+        b.insts.retain(|i| {
+            let same = i.rd == i.rs1 && !i.rd.is_none();
+            let identity = same && (i.op == Op::MOV || identity_imm(i.op, i.imm));
+            if identity {
+                removed += 1;
+                false
+            } else {
+                true
+            }
+        });
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::mir::{MBlock, MInst};
+
+    fn func(nblocks: usize) -> MFunction {
+        MFunction {
+            name: "t".into(),
+            blocks: (0..nblocks).map(|_| MBlock::default()).collect(),
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        }
+    }
+
+    fn jmp(t: usize) -> MInst {
+        let mut j = MInst::new(Op::J);
+        j.t1 = Some(t);
+        j
+    }
+
+    #[test]
+    fn folds_li_base_into_absolute_lw() {
+        let mut f = func(1);
+        let a = f.new_vreg(false);
+        let d = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 0x1_0000));
+        f.blocks[0].insts.push(MInst::rri(Op::LW, d, a, 8));
+        let rep = run(&mut f);
+        assert_eq!(rep.addr_folds, 1);
+        let lw = f.blocks[0].insts.iter().find(|i| i.op == Op::LW).unwrap();
+        assert_eq!(lw.rs1, MReg::phys(0));
+        assert_eq!(lw.imm, 0x1_0000 + 8);
+    }
+
+    /// Negative case: the combined displacement must fit the i32
+    /// immediate the emitter encodes — an address beyond it stays
+    /// register-based.
+    #[test]
+    fn refuses_absolute_fold_beyond_i32() {
+        let mut f = func(1);
+        let a = f.new_vreg(false);
+        let d = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, i32::MAX as i64));
+        f.blocks[0].insts.push(MInst::rri(Op::LW, d, a, 8)); // overflows i32
+        let rep = run(&mut f);
+        assert_eq!(rep.addr_folds, 0);
+        let lw = f.blocks[0].insts.iter().find(|i| i.op == Op::LW).unwrap();
+        assert_eq!(lw.rs1, a, "oversized absolute address must not fold");
+        assert_eq!(lw.imm, 8);
+    }
+
+    #[test]
+    fn collapses_addi_chain_into_store_imm() {
+        let mut f = func(1);
+        let base = f.new_vreg(false); // e.g. a pointer argument
+        let t1 = f.new_vreg(false);
+        let t2 = f.new_vreg(false);
+        let v = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::mv(base, MReg::phys(10)));
+        f.blocks[0].insts.push(MInst::rri(Op::ADDI, t1, base, 16));
+        f.blocks[0].insts.push(MInst::rri(Op::ADDI, t2, t1, 4));
+        let mut sw = MInst::new(Op::SW);
+        sw.rd = NONE;
+        sw.rs1 = t2;
+        sw.rs2 = v;
+        sw.imm = 8;
+        f.blocks[0].insts.push(sw);
+        let rep = run(&mut f);
+        assert!(rep.addi_folds >= 2, "{rep:?}");
+        let sw = f.blocks[0].insts.iter().find(|i| i.op == Op::SW).unwrap();
+        assert_eq!(sw.rs1, base);
+        assert_eq!(sw.imm, 28);
+    }
+
+    #[test]
+    fn fuses_compare_before_branch() {
+        // sne t, a, x0 ; bnez t  ->  bnez a
+        let mut f = func(2);
+        let a = f.new_vreg(false);
+        let t = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 1));
+        f.blocks[0]
+            .insts
+            .push(MInst::rrr(Op::SNE, t, a, MReg::phys(0)));
+        let mut bnez = MInst {
+            rs1: t,
+            ..MInst::new(Op::BNEZ)
+        };
+        bnez.t1 = Some(1);
+        f.blocks[0].insts.push(bnez);
+        f.blocks[0].insts.push(jmp(1));
+        let rep = run(&mut f);
+        assert_eq!(rep.branch_fusions, 1);
+        let br = f.blocks[0].insts.iter().find(|i| i.op == Op::BNEZ).unwrap();
+        assert_eq!(br.rs1, a);
+
+        // seq flips the sense.
+        let mut f2 = func(2);
+        let a2 = f2.new_vreg(false);
+        let t2 = f2.new_vreg(false);
+        f2.blocks[0].insts.push(MInst::li(a2, 1));
+        f2.blocks[0]
+            .insts
+            .push(MInst::rrr(Op::SEQ, t2, a2, MReg::phys(0)));
+        let mut beqz = MInst {
+            rs1: t2,
+            ..MInst::new(Op::BEQZ)
+        };
+        beqz.t1 = Some(1);
+        f2.blocks[0].insts.push(beqz);
+        f2.blocks[0].insts.push(jmp(1));
+        let rep2 = run(&mut f2);
+        assert_eq!(rep2.branch_fusions, 1);
+        let br2 = f2.blocks[0]
+            .insts
+            .iter()
+            .find(|i| matches!(i.op, Op::BNEZ | Op::BEQZ))
+            .unwrap();
+        assert_eq!(br2.op, Op::BNEZ, "seq+beqz must flip to bnez");
+        assert_eq!(br2.rs1, a2);
+    }
+
+    #[test]
+    fn identity_ops_become_copies() {
+        let mut f = func(1);
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 5));
+        f.blocks[0].insts.push(MInst::rri(Op::ADDI, b, a, 0));
+        let rep = run(&mut f);
+        assert_eq!(rep.identities, 1);
+        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::MOV));
+    }
+
+    #[test]
+    fn cross_block_li_dedup_and_widening_refusal() {
+        // b0: li v0, 7 ; j b1   b1: [tmc] j b2   b2: li v1, 7 ; add a0, v0, v1
+        let build = |widen: bool| -> MFunction {
+            let mut f = func(3);
+            let v0 = f.new_vreg(false);
+            let v1 = f.new_vreg(false);
+            f.blocks[0].insts.push(MInst::li(v0, 7));
+            f.blocks[0].insts.push(jmp(1));
+            if widen {
+                let mut t = MInst::new(Op::TMC);
+                t.rs1 = MReg::phys(5);
+                f.blocks[1].insts.push(t);
+            }
+            f.blocks[1].insts.push(jmp(2));
+            f.blocks[2].insts.push(MInst::li(v1, 7));
+            f.blocks[2]
+                .insts
+                .push(MInst::rrr(Op::ADD, MReg::phys(10), v0, v1));
+            f
+        };
+        let mut f = build(false);
+        let rep = run(&mut f);
+        assert_eq!(rep.li_dedups, 1);
+        let lis = f
+            .blocks
+            .iter()
+            .flat_map(|b| &b.insts)
+            .filter(|i| i.op == Op::LI)
+            .count();
+        assert_eq!(lis, 1);
+        let add = f.blocks[2].insts.iter().find(|i| i.op == Op::ADD).unwrap();
+        assert_eq!(add.rs1, add.rs2, "both operands forwarded to the root li");
+
+        // With a mask-widening vx_tmc on the path the dedup must refuse.
+        let mut fw = build(true);
+        let repw = run(&mut fw);
+        assert_eq!(repw.li_dedups, 0, "widening path must block li dedup");
+        let lis = fw
+            .blocks
+            .iter()
+            .flat_map(|b| &b.insts)
+            .filter(|i| i.op == Op::LI)
+            .count();
+        assert_eq!(lis, 2);
+    }
+
+    #[test]
+    fn post_ra_cleanup_removes_identity_moves() {
+        let mut f = func(1);
+        f.blocks[0]
+            .insts
+            .push(MInst::mv(MReg::phys(7), MReg::phys(7)));
+        f.blocks[0]
+            .insts
+            .push(MInst::rri(Op::ADDI, MReg::phys(8), MReg::phys(8), 0));
+        f.blocks[0]
+            .insts
+            .push(MInst::mv(MReg::phys(7), MReg::phys(8)));
+        assert_eq!(cleanup_identities(&mut f), 2);
+        assert_eq!(f.blocks[0].insts.len(), 1);
+    }
+}

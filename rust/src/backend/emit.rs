@@ -9,7 +9,7 @@
 
 use super::isa::{disasm, MachInst, Op};
 use super::mir::{MFunction, MReg, NONE};
-use super::{isel, mir_opt, regalloc, safety_net};
+use super::{combine, isel, mir_opt, regalloc, safety_net};
 use crate::ir::{AddrSpace, FuncId, GlobalId, Loc, Module};
 use crate::target::{AddressMap, TargetDesc};
 use std::collections::HashMap;
@@ -94,6 +94,12 @@ pub struct ProgramImage {
     /// Length of the crt0 stub at the head of `code` — the boundary the
     /// profiler uses to separate runtime startup from compiled kernels.
     pub crt0_len: u32,
+    /// Per-PC spill marker (parallel to `code`): true for the reload
+    /// `lw`/store `sw` instructions the register allocator inserted.
+    /// The profiler aggregates these into
+    /// [`crate::prof::KernelProfile::spill_cycles`] and the cycle bench
+    /// publishes the static count per kernel.
+    pub pc_spill: Vec<bool>,
     /// Name of the target this image was linked for (stamped into
     /// profiles, traces, and sweep artifacts).
     pub target: String,
@@ -124,6 +130,12 @@ impl ProgramImage {
         None
     }
 
+    /// Number of spill-traffic instructions linked into the image (the
+    /// static spill count reported per kernel by `benches/o3_cycles.rs`).
+    pub fn spill_insts(&self) -> usize {
+        self.pc_spill.iter().filter(|&&s| s).count()
+    }
+
     pub fn disassemble(&self) -> String {
         let mut s = String::new();
         let mut entries: Vec<(&String, &u32)> = self.func_entries.iter().collect();
@@ -132,7 +144,12 @@ impl ProgramImage {
             if let Some((name, _)) = entries.iter().find(|(_, &pc)| pc == idx as u32) {
                 s.push_str(&format!("\n{name}:\n"));
             }
-            s.push_str(&format!("{idx:5}: {}\n", disasm(inst)));
+            let spill = if self.pc_spill.get(idx).copied().unwrap_or(false) {
+                "*"
+            } else {
+                " "
+            };
+            s.push_str(&format!("{idx:5}:{spill} {}\n", disasm(inst)));
         }
         s
     }
@@ -155,6 +172,15 @@ pub struct BackendOptions {
     /// Run the MIR safety net (disable only to demonstrate Fig. 5).
     pub safety_net: bool,
     pub smem: SharedMemMapping,
+    /// The backend codegen-quality rung: the MIR combine/peephole pass
+    /// plus the allocator quality features (holes, copy coalescing,
+    /// Belady spill choice). The raw-struct default is **on** (direct
+    /// backend users get the best codegen, and every backend unit test
+    /// exercises the rung); the driver instead derives it from the
+    /// ladder — on at `OptLevel::O3` and above, off below — so the
+    /// `benches/o3_cycles.rs` Recon baseline measures the rung's
+    /// harvest.
+    pub codegen_opt: bool,
     /// The machine being compiled for: feature gates (isel refusal + the
     /// final image audit), register-file shape for the allocator, and the
     /// address map for layout/crt0.
@@ -168,6 +194,7 @@ impl Default for BackendOptions {
             opt_layout: true,
             safety_net: true,
             smem: SharedMemMapping::Local,
+            codegen_opt: true,
             target: TargetDesc::vortex(),
         }
     }
@@ -257,7 +284,23 @@ pub fn lower_function(
     let mut mf = isel::select_function(m, fid, layout, opts)?;
     mir_opt::copy_prop(&mut mf);
     mir_opt::dce(&mut mf);
-    regalloc::allocate(&mut mf, &opts.target.regfile);
+    if opts.codegen_opt {
+        // The combine patterns expose copies and dead defs; run the
+        // cleanups again so regalloc sees the slimmed function.
+        combine::run(&mut mf);
+        mir_opt::copy_prop(&mut mf);
+        mir_opt::dce(&mut mf);
+    }
+    let ra_opts = if opts.codegen_opt {
+        regalloc::RegAllocOptions::quality()
+    } else {
+        regalloc::RegAllocOptions::default()
+    };
+    regalloc::allocate_with(&mut mf, &opts.target.regfile, ra_opts);
+    if opts.codegen_opt {
+        // Coalesced copies are `mv r, r` after assignment.
+        combine::cleanup_identities(&mut mf);
+    }
     if opts.opt_layout {
         mir_opt::layout(&mut mf);
     }
@@ -280,6 +323,8 @@ struct FlatFunc {
     insts: Vec<MachInst>,
     /// Source location per emitted instruction (parallel to `insts`).
     locs: Vec<Option<Loc>>,
+    /// Spill-traffic marker per emitted instruction (parallel to `insts`).
+    spills: Vec<bool>,
     /// (inst index, kind) fixups to resolve once bases are known.
     fixups: Vec<(usize, Fixup)>,
     block_offset: Vec<u32>,
@@ -350,6 +395,7 @@ fn flatten(mf: &MFunction) -> FlatFunc {
     // Second pass: emit.
     let mut insts: Vec<MachInst> = vec![];
     let mut locs: Vec<Option<Loc>> = vec![];
+    let mut spills: Vec<bool> = vec![];
     let mut fixups: Vec<(usize, Fixup)> = vec![];
     for bi in 0..nb {
         let b = &mf.blocks[bi];
@@ -399,6 +445,7 @@ fn flatten(mf: &MFunction) -> FlatFunc {
             }
             insts.push(mi);
             locs.push(i.loc);
+            spills.push(i.spill);
             // Fallthrough fix-up jump.
             if matches!(i.op, Op::SPLIT | Op::SPLITN | Op::PRED) {
                 let next_block = bi + 1;
@@ -412,6 +459,7 @@ fn flatten(mf: &MFunction) -> FlatFunc {
                         imm: 0,
                     });
                     locs.push(i.loc);
+                    spills.push(false);
                     fixups.push((jidx, Fixup::Branch(i.t1.unwrap())));
                 }
             }
@@ -419,11 +467,13 @@ fn flatten(mf: &MFunction) -> FlatFunc {
         }
     }
     debug_assert_eq!(insts.len(), locs.len());
+    debug_assert_eq!(insts.len(), spills.len());
     fill_locs(&mut locs);
     FlatFunc {
         name: mf.name.clone(),
         insts,
         locs,
+        spills,
         fixups,
         block_offset,
     }
@@ -511,13 +561,16 @@ pub fn build_image(
     })?;
     let args_addr_v = layout.addr[&GlobalId(args_probe as u32)];
     let (mut code, crt0_len) = build_crt0(args_addr_v, &map);
-    // crt0 is runtime startup, not source code: no line-table entries.
+    // crt0 is runtime startup, not source code: no line-table entries
+    // and no spill traffic.
     let mut pc_loc: Vec<Option<Loc>> = vec![None; crt0_len];
+    let mut pc_spill: Vec<bool> = vec![false; crt0_len];
     let mut func_entries: HashMap<String, u32> = HashMap::new();
     for fl in &flats {
         func_entries.insert(fl.name.clone(), code.len() as u32);
         code.extend(fl.insts.iter().cloned());
         pc_loc.extend(fl.locs.iter().cloned());
+        pc_spill.extend(fl.spills.iter().cloned());
     }
     if !func_entries.contains_key(dispatcher) {
         return Err(BackendError::new(
@@ -602,6 +655,7 @@ pub fn build_image(
         func_entries,
         pc_loc,
         crt0_len: crt0_len as u32,
+        pc_spill,
         target: opts.target.name.to_string(),
         addr_map: map,
     })
@@ -738,6 +792,59 @@ kernel void k(global int* out, int n) {
         }
         assert!(img_m.code.iter().all(|i| i.op != Op::CMOV));
         assert_eq!(img_m.addr_map, min.addr_map);
+    }
+
+    /// The backend codegen rung folds the `li` before every `__args`
+    /// load into an absolute `lw addr(x0)`, shrinking the image; the
+    /// spill table stays parallel to the code either way.
+    #[test]
+    fn codegen_opt_folds_absolute_addresses() {
+        let src = r#"
+kernel void k(global int* out, int n) {
+    int i = get_global_id(0);
+    if (i < n) { out[i] = i * 2 + 1; }
+}
+"#;
+        let (mut m, infos) = compile_kernels(src, &FrontendOptions::default()).unwrap();
+        let mut cfg = OptLevel::Recon.config();
+        cfg.verify = true;
+        run_middle_end(&mut m, &cfg);
+        let dispatcher = format!("__main_{}", infos[0].name);
+        let on = build_image(&m, &dispatcher, &BackendOptions::default()).unwrap();
+        let off = build_image(
+            &m,
+            &dispatcher,
+            &BackendOptions {
+                codegen_opt: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            on.code.len() < off.code.len(),
+            "combine must shrink the image ({} !< {})",
+            on.code.len(),
+            off.code.len()
+        );
+        assert!(
+            on.code[on.crt0_len as usize..]
+                .iter()
+                .any(|i| i.op == Op::LW && i.rs1 == 0 && i.imm > 0),
+            "expected an absolute lw addr(x0) after x0-folding"
+        );
+        for img in [&on, &off] {
+            assert_eq!(img.pc_spill.len(), img.code.len());
+            assert!(img.pc_spill[..img.crt0_len as usize].iter().all(|&s| !s));
+            // Spill-tagged PCs can only be memory traffic.
+            for (pc, &s) in img.pc_spill.iter().enumerate() {
+                if s {
+                    assert!(
+                        matches!(img.code[pc].op, Op::LW | Op::SW),
+                        "non-memory op tagged as spill at pc {pc}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

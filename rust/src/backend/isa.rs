@@ -271,6 +271,30 @@ pub fn disasm(i: &MachInst) -> String {
                 format!("{} {}, else=@{}, join=@{}", i.op.mnemonic(), r(i.rs1), e, j)
             }
             Op::PRED => format!("vx_pred {}, {}, exit=@{}", r(i.rs1), r(i.rs2), i.imm),
+            // Read-modify-write memory ops: the address is rs1 (shown in
+            // parens), the operand rs2, and rd receives the OLD memory
+            // value. AMOCAS additionally reads rd as the expected value.
+            Op::AMOADD | Op::AMOAND | Op::AMOOR | Op::AMOXOR | Op::AMOMIN | Op::AMOMAX
+            | Op::AMOSWAP => {
+                format!("{} {}, {}, ({})", i.op.mnemonic(), r(i.rd), r(i.rs2), r(i.rs1))
+            }
+            Op::AMOCAS => format!(
+                "amocas.w {}, {}, ({}), expect={}",
+                r(i.rd),
+                r(i.rs2),
+                r(i.rs1),
+                r(i.rd)
+            ),
+            // ZiCond conditional move: rd is also a source (kept when the
+            // condition is false) — the contract regalloc's dedicated T7
+            // scratch exists for.
+            Op::CMOV => format!(
+                "vx_cmov {}, {}, {}, old={}",
+                r(i.rd),
+                r(i.rs1),
+                r(i.rs2),
+                r(i.rd)
+            ),
             Op::BAR => format!("vx_bar {}, {}", i.imm, r(i.rs1)),
             Op::MASK => format!("vx_active_threads {}", r(i.rd)),
             Op::PRINTI | Op::PRINTF => format!("{} {}", i.op.mnemonic(), r(i.rs1)),
@@ -354,5 +378,50 @@ mod tests {
             imm: MachInst::pack_split(20, 30),
         };
         assert!(disasm(&s).contains("else=@20"));
+    }
+
+    /// Read-modify-write ops disassemble with their rd-is-also-source /
+    /// rd-gets-old-value contracts spelled out instead of the generic
+    /// 3-register form.
+    #[test]
+    fn disasm_shows_rmw_semantics() {
+        let cmov = MachInst {
+            op: Op::CMOV,
+            rd: 5,
+            rs1: 6,
+            rs2: 7,
+            imm: 0,
+        };
+        assert_eq!(disasm(&cmov), "vx_cmov x5, x6, x7, old=x5");
+        let amo = MachInst {
+            op: Op::AMOADD,
+            rd: 5,
+            rs1: 6,
+            rs2: 7,
+            imm: 0,
+        };
+        assert_eq!(disasm(&amo), "amoadd.w x5, x7, (x6)");
+        let cas = MachInst {
+            op: Op::AMOCAS,
+            rd: 5,
+            rs1: 6,
+            rs2: 7,
+            imm: 0,
+        };
+        assert_eq!(disasm(&cas), "amocas.w x5, x7, (x6), expect=x5");
+        for op in [Op::AMOAND, Op::AMOOR, Op::AMOXOR, Op::AMOMIN, Op::AMOMAX, Op::AMOSWAP] {
+            let i = MachInst {
+                op,
+                rd: 3,
+                rs1: 4,
+                rs2: 5,
+                imm: 0,
+            };
+            let d = disasm(&i);
+            assert!(
+                d.contains("(x4)") && d.contains("x3") && d.contains("x5"),
+                "{op:?}: {d}"
+            );
+        }
     }
 }

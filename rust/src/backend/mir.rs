@@ -52,6 +52,11 @@ pub struct MInst {
     /// the emitter's line-table fill resolves those to the nearest
     /// located neighbour).
     pub loc: Option<Loc>,
+    /// Spill traffic inserted by the register allocator (reload `lw` /
+    /// store `sw` through the scratch registers). Carried into
+    /// [`crate::backend::emit::ProgramImage::pc_spill`] so the profiler
+    /// can attribute spill cycles per source line.
+    pub spill: bool,
 }
 
 impl MInst {
@@ -68,6 +73,7 @@ impl MInst {
             callee: None,
             swapped: false,
             loc: None,
+            spill: false,
         }
     }
     pub fn rrr(op: Op, rd: MReg, rs1: MReg, rs2: MReg) -> MInst {

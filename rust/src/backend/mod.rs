@@ -2,6 +2,7 @@
 //! selection, linear-scan register allocation, machine-IR cleanups, the
 //! Fig. 5 divergence safety net, and final encoding/linking.
 
+pub mod combine;
 pub mod emit;
 pub mod isa;
 pub mod isel;

@@ -1,11 +1,35 @@
 //! Linear-scan register allocation with spilling.
 //!
-//! Whole-interval linear scan (Poletto–Sarkar) over the MIR: liveness from
-//! the per-block dataflow in [`super::mir::liveness`], intervals extended
-//! across loop back edges. Values live across calls are spilled (the ABI
-//! treats every register as caller-saved; the middle-end's inlining makes
-//! surviving calls rare). Spilled values are rematerialized through
-//! reserved scratch registers (x30/x31, f30/f31).
+//! The engine builds per-vreg **live ranges** (half-open position
+//! intervals over a use/def-slotted numbering: instruction `g` reads at
+//! `2g` and writes at `2g+1`) from the per-block dataflow in
+//! [`super::mir::liveness`]. Three quality features sit behind
+//! [`RegAllocOptions`] (the backend codegen rung enables all of them;
+//! the default mimics the seed Poletto–Sarkar whole-interval scan so
+//! baselines stay comparable):
+//!
+//! * **holes** — a value dead across a region (e.g. across a loop it is
+//!   not used in) releases its register there instead of occupying it
+//!   for the whole envelope. Per-lane sound: lanes follow CFG edges, so
+//!   a lane that executes a clobber inside a hole can never reach a use
+//!   of the holed value afterwards (the value is CFG-dead there).
+//! * **coalescing** — virtual `mv d, s` copies (isel select/CAS
+//!   prologues, phi-destruction copies) merge `d` and `s` into one
+//!   interval when their range sets do not interfere; after assignment
+//!   the copy is `mv r, r` and `combine::cleanup_identities` drops it.
+//! * **Belady spill choice** — under pressure the victim is the value
+//!   with the *furthest next use* instead of the longest interval end,
+//!   so loop-carried values stop losing their registers to long-lived
+//!   cold values.
+//!
+//! Values live across calls are spilled (the ABI treats every register
+//! as caller-saved; the middle-end's inlining makes surviving calls
+//! rare). Spilled values are rematerialized through reserved scratch
+//! registers (x30/x31 for sources, x29 for read-modify-write
+//! destinations — CMOV/AMOCAS read `rd` too, so the reload must not
+//! collide with the rs1/rs2 scratches; f61–f63 mirror this for floats).
+//! Spill loads/stores are tagged (`MInst::spill`) so the emitter can
+//! publish per-PC spill traffic to the profiler.
 
 use super::isa::Op;
 use super::mir::{liveness, MFunction, MInst, MReg};
@@ -21,77 +45,177 @@ const FT5: u32 = 62;
 const FT6: u32 = 63;
 const FT7: u32 = 61;
 
+/// Quality switches for the allocator (see module docs). `default()` is
+/// the seed behavior; [`RegAllocOptions::quality`] is the codegen rung.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegAllocOptions {
+    /// Keep per-block live-range holes.
+    pub holes: bool,
+    /// Coalesce virtual copies by interval merging.
+    pub coalesce: bool,
+    /// Furthest-next-use (Belady) spill victims.
+    pub spill_next_use: bool,
+}
+
+impl RegAllocOptions {
+    pub fn quality() -> RegAllocOptions {
+        RegAllocOptions {
+            holes: true,
+            coalesce: true,
+            spill_next_use: true,
+        }
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct RegAllocReport {
     pub assigned: usize,
     pub spilled: usize,
+    /// Virtual copies folded away by interval merging.
+    pub coalesced: usize,
 }
 
-struct Interval {
-    vreg: MReg,
-    start: u32,
-    end: u32,
-    float: bool,
-    crosses_call: bool,
-}
-
+/// Seed-compatible entry point (whole intervals, longest-end spilling).
 pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
+    allocate_with(f, rf, RegAllocOptions::default())
+}
+
+pub fn allocate_with(f: &mut MFunction, rf: &RegFile, opts: RegAllocOptions) -> RegAllocReport {
     let mut report = RegAllocReport::default();
-    // Linear numbering.
-    let mut pos = 0u32;
-    let mut block_range: Vec<(u32, u32)> = vec![];
+    let nv = f.vreg_float.len();
+    let nb = f.blocks.len();
+
+    // Global instruction numbering and call positions.
+    let mut block_start = vec![0u32; nb];
     let mut call_positions: Vec<u32> = vec![];
-    for b in &f.blocks {
-        let s = pos;
-        for i in &b.insts {
-            if i.is_call() {
-                call_positions.push(pos);
-            }
-            pos += 1;
-        }
-        block_range.push((s, pos));
-    }
-    let (live_in, live_out) = liveness(f);
-    // Build intervals.
-    let mut ivs: HashMap<MReg, (u32, u32)> = HashMap::new();
-    let extend = |r: MReg, p: u32, ivs: &mut HashMap<MReg, (u32, u32)>| {
-        let e = ivs.entry(r).or_insert((p, p));
-        e.0 = e.0.min(p);
-        e.1 = e.1.max(p);
-    };
-    let mut pos = 0u32;
-    for (bi, b) in f.blocks.iter().enumerate() {
-        for r in live_in[bi].iter() {
-            extend(*r, block_range[bi].0, &mut ivs);
-        }
-        for r in live_out[bi].iter() {
-            extend(*r, block_range[bi].1.saturating_sub(1).max(block_range[bi].0), &mut ivs);
-        }
-        for i in &b.insts {
-            for u in i.uses() {
-                if u.is_virt() {
-                    extend(u, pos, &mut ivs);
+    {
+        let mut g = 0u32;
+        for (bi, b) in f.blocks.iter().enumerate() {
+            block_start[bi] = g;
+            for i in &b.insts {
+                if i.is_call() {
+                    call_positions.push(g);
                 }
+                g += 1;
             }
-            if let Some(d) = i.def() {
+        }
+    }
+
+    // ---- Live-range construction (positions: use = 2g, def = 2g+1). ----
+    let (_live_in, live_out) = liveness(f);
+    let mut ranges: Vec<Vec<(u32, u32)>> = vec![vec![]; nv];
+    let mut use_pos: Vec<Vec<u32>> = vec![vec![]; nv];
+    for bi in 0..nb {
+        let gs = block_start[bi];
+        let len = f.blocks[bi].insts.len() as u32;
+        let (bs, be) = (2 * gs, 2 * (gs + len));
+        // vreg -> end of the currently-open range in this block.
+        let mut open: HashMap<usize, u32> = live_out[bi]
+            .iter()
+            .filter(|r| r.is_virt())
+            .map(|r| (r.virt_idx(), be))
+            .collect();
+        for k in (0..f.blocks[bi].insts.len()).rev() {
+            let g = gs + k as u32;
+            let inst = &f.blocks[bi].insts[k];
+            if let Some(d) = inst.def() {
                 if d.is_virt() {
-                    extend(d, pos, &mut ivs);
+                    let vi = d.virt_idx();
+                    let end = open.remove(&vi).unwrap_or(2 * g + 2);
+                    ranges[vi].push((2 * g + 1, end.max(2 * g + 2)));
+                    use_pos[vi].push(2 * g + 1);
                 }
             }
-            pos += 1;
+            for u in inst.uses() {
+                if u.is_virt() {
+                    let vi = u.virt_idx();
+                    open.entry(vi).or_insert(2 * g + 1);
+                    use_pos[vi].push(2 * g);
+                }
+            }
+        }
+        for (vi, end) in open {
+            ranges[vi].push((bs, end));
         }
     }
-    let mut intervals: Vec<Interval> = ivs
-        .into_iter()
-        .map(|(vreg, (start, end))| Interval {
-            vreg,
+    for v in 0..nv {
+        normalize(&mut ranges[v]);
+        use_pos[v].sort_unstable();
+        if !opts.holes && !ranges[v].is_empty() {
+            // Whole-interval envelope (seed behavior).
+            let s = ranges[v][0].0;
+            let e = ranges[v].last().unwrap().1;
+            ranges[v] = vec![(s, e)];
+        }
+    }
+
+    // ---- Copy coalescing (union-find; ranges live on the root). ----
+    let mut parent: Vec<usize> = (0..nv).collect();
+    fn find(parent: &mut [usize], mut v: usize) -> usize {
+        while parent[v] != v {
+            parent[v] = parent[parent[v]];
+            v = parent[v];
+        }
+        v
+    }
+    if opts.coalesce {
+        for b in &f.blocks {
+            for i in &b.insts {
+                if i.op != Op::MOV || !i.rd.is_virt() || !i.rs1.is_virt() {
+                    continue;
+                }
+                let (d, s) = (i.rd.virt_idx(), i.rs1.virt_idx());
+                if f.vreg_float[d] != f.vreg_float[s] {
+                    continue;
+                }
+                let (rd, rs) = (find(&mut parent, d), find(&mut parent, s));
+                if rd == rs {
+                    continue;
+                }
+                if ranges_overlap(&ranges[rd], &ranges[rs]) {
+                    continue;
+                }
+                // Merge rs into rd.
+                let taken = std::mem::take(&mut ranges[rs]);
+                ranges[rd].extend(taken);
+                normalize(&mut ranges[rd]);
+                let taken_uses = std::mem::take(&mut use_pos[rs]);
+                use_pos[rd].extend(taken_uses);
+                use_pos[rd].sort_unstable();
+                parent[rs] = rd;
+                report.coalesced += 1;
+            }
+        }
+    }
+
+    // ---- Interval list (roots only), in start order. ----
+    struct Iv {
+        root: usize,
+        start: u32,
+        end: u32,
+        float: bool,
+        crosses_call: bool,
+    }
+    let mut intervals: Vec<Iv> = vec![];
+    for v in 0..nv {
+        if parent[v] != v || ranges[v].is_empty() {
+            continue;
+        }
+        let start = ranges[v][0].0;
+        let end = ranges[v].last().unwrap().1;
+        let crosses_call = call_positions.iter().any(|&c| {
+            let p = 2 * c + 1;
+            ranges[v].iter().any(|&(s, e)| s < p && e > p + 1)
+        });
+        intervals.push(Iv {
+            root: v,
             start,
             end,
-            float: f.is_float(vreg),
-            crosses_call: call_positions.iter().any(|&c| start < c && c < end),
-        })
-        .collect();
-    intervals.sort_by_key(|iv| iv.start);
+            float: f.vreg_float[v],
+            crosses_call,
+        });
+    }
+    intervals.sort_by_key(|iv| (iv.start, iv.root));
 
     // Register pools from the target's register-file shape (scratch +
     // special registers sit outside the allocatable windows). Functions
@@ -108,92 +232,148 @@ pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
         .filter(|r| !f.has_calls || !fargs.contains(r))
         .collect();
 
-    let mut assignment: HashMap<MReg, u32> = HashMap::new();
-    let mut spills: HashMap<MReg, u32> = HashMap::new(); // vreg -> slot index
+    let mut assignment: HashMap<usize, u32> = HashMap::new(); // root -> phys
+    let mut spills: HashMap<usize, u32> = HashMap::new(); // root -> slot
     let mut next_slot = 0u32;
-    let mut active: Vec<(u32 /*end*/, MReg, u32 /*phys*/)> = vec![];
-    let mut free_int = int_pool.clone();
-    let mut free_float = float_pool.clone();
+    // phys -> currently-relevant roots. Intervals are processed in
+    // start order, so roots whose envelope ended before the current
+    // start can never conflict again and are pruned each step (the
+    // seed's active-list expiry, keeping the fit/eviction scans linear
+    // in *live* intervals rather than all prior ones).
+    let mut assigned_to: HashMap<u32, Vec<usize>> = HashMap::new();
+
+    // First use at or after `pos` (Belady distance).
+    let next_use_after = |root: usize, pos: u32, strict: bool| -> u64 {
+        match use_pos[root]
+            .iter()
+            .find(|&&u| if strict { u > pos } else { u >= pos })
+        {
+            Some(&u) => u as u64,
+            None => u64::MAX,
+        }
+    };
+
     for iv in &intervals {
-        // Expire.
-        active.retain(|&(end, _, phys)| {
-            if end < iv.start {
-                if phys >= 32 {
-                    free_float.push(phys);
-                } else {
-                    free_int.push(phys);
-                }
-                false
-            } else {
-                true
-            }
-        });
         if iv.crosses_call {
-            spills.insert(iv.vreg, next_slot);
+            spills.insert(iv.root, next_slot);
             next_slot += 1;
             report.spilled += 1;
             continue;
         }
-        let pool = if iv.float { &mut free_float } else { &mut free_int };
-        if let Some(phys) = pool.pop() {
-            assignment.insert(iv.vreg, phys);
-            active.push((iv.end, iv.vreg, phys));
+        // Expire: drop roots whose last range ended at or before this
+        // interval's start.
+        for roots in assigned_to.values_mut() {
+            roots.retain(|&o| ranges[o].last().is_some_and(|&(_, e)| e > iv.start));
+        }
+        let pool = if iv.float { &float_pool } else { &int_pool };
+        // Highest-register-first, matching the seed's pool.pop() bias.
+        let fit = pool.iter().rev().copied().find(|r| {
+            assigned_to
+                .get(r)
+                .map(|roots| {
+                    roots
+                        .iter()
+                        .all(|&o| !ranges_overlap(&ranges[o], &ranges[iv.root]))
+                })
+                .unwrap_or(true)
+        });
+        if let Some(r) = fit {
+            assignment.insert(iv.root, r);
+            assigned_to.entry(r).or_default().push(iv.root);
             report.assigned += 1;
+            continue;
+        }
+        // Under pressure: pick a victim to evict, or spill the current
+        // interval. Only registers with exactly one conflicting holder
+        // are eviction candidates (holes can pack several values into
+        // one register; evicting a whole stack is never profitable).
+        let mut best: Option<(u64, u32, usize)> = None; // (score, reg, victim)
+        for &r in pool.iter().rev() {
+            let conflicting: Vec<usize> = assigned_to
+                .get(&r)
+                .map(|roots| {
+                    roots
+                        .iter()
+                        .copied()
+                        .filter(|&o| ranges_overlap(&ranges[o], &ranges[iv.root]))
+                        .collect()
+                })
+                .unwrap_or_default();
+            if conflicting.len() != 1 {
+                continue;
+            }
+            let victim = conflicting[0];
+            let score = if opts.spill_next_use {
+                next_use_after(victim, iv.start, false)
+            } else {
+                ranges[victim].last().unwrap().1 as u64
+            };
+            if best.map(|(s, _, _)| score > s).unwrap_or(true) {
+                best = Some((score, r, victim));
+            }
+        }
+        let cur_score = if opts.spill_next_use {
+            next_use_after(iv.root, iv.start, true)
         } else {
-            // Spill the interval with the furthest end (current or active
-            // of the same class).
-            let victim = active
-                .iter()
-                .enumerate()
-                .filter(|(_, (_, _, p))| (*p >= 32) == iv.float)
-                .max_by_key(|(_, (end, _, _))| *end);
-            match victim {
-                Some((ai, &(aend, avreg, aphys))) if aend > iv.end => {
-                    active.remove(ai);
-                    assignment.remove(&avreg);
-                    spills.insert(avreg, next_slot);
-                    next_slot += 1;
-                    report.spilled += 1;
-                    assignment.insert(iv.vreg, aphys);
-                    active.push((iv.end, iv.vreg, aphys));
-                }
-                _ => {
-                    spills.insert(iv.vreg, next_slot);
-                    next_slot += 1;
-                    report.spilled += 1;
-                }
+            iv.end as u64
+        };
+        match best {
+            Some((score, r, victim)) if score > cur_score => {
+                assignment.remove(&victim);
+                assigned_to.get_mut(&r).unwrap().retain(|&o| o != victim);
+                spills.insert(victim, next_slot);
+                next_slot += 1;
+                report.spilled += 1;
+                assignment.insert(iv.root, r);
+                assigned_to.entry(r).or_default().push(iv.root);
+                report.assigned += 1;
+            }
+            _ => {
+                spills.insert(iv.root, next_slot);
+                next_slot += 1;
+                report.spilled += 1;
             }
         }
     }
     f.spill_size = next_slot * 4;
 
-    // Rewrite: apply assignments, insert spill loads/stores.
+    // ---- Rewrite: apply assignments, insert spill loads/stores. ----
     let frame_base = f.frame_size; // spill slots sit above the allocas
+    let root_of = {
+        let mut memo = parent.clone();
+        for v in 0..nv {
+            let r = find(&mut memo, v);
+            memo[v] = r;
+        }
+        memo
+    };
+    let spill_lw = |sc: u32, slot: u32| -> MInst {
+        MInst {
+            spill: true,
+            ..MInst::rri(
+                Op::LW,
+                MReg(sc),
+                MReg::phys(super::isa::SP),
+                (frame_base + slot * 4) as i64,
+            )
+        }
+    };
     for b in f.blocks.iter_mut() {
         let mut out: Vec<MInst> = Vec::with_capacity(b.insts.len());
         for inst in b.insts.drain(..) {
             let mut i = inst;
             let mut pre: Vec<MInst> = vec![];
             let mut post: Vec<MInst> = vec![];
-            let map_use = |r: MReg,
-                           scratch: u32,
-                           pre: &mut Vec<MInst>,
-                           assignment: &HashMap<MReg, u32>,
-                           spills: &HashMap<MReg, u32>|
-             -> MReg {
+            let map_use = |r: MReg, scratch: u32, pre: &mut Vec<MInst>| -> MReg {
                 if !r.is_virt() {
                     return r;
                 }
-                if let Some(&p) = assignment.get(&r) {
+                let root = root_of[r.virt_idx()];
+                if let Some(&p) = assignment.get(&root) {
                     return MReg(p);
                 }
-                let slot = spills[&r];
-                pre.push(MInst::rri(
-                    Op::LW,
-                    MReg(scratch),
-                    MReg::phys(super::isa::SP),
-                    (frame_base + slot * 4) as i64,
-                ));
+                let slot = spills[&root];
+                pre.push(spill_lw(scratch, slot));
                 MReg(scratch)
             };
             // rd-as-use ops (CMOV, AMOCAS) read rd too.
@@ -204,7 +384,7 @@ pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
                 } else {
                     T5
                 };
-                i.rs1 = map_use(i.rs1, sc, &mut pre, &assignment, &spills);
+                i.rs1 = map_use(i.rs1, sc, &mut pre);
             }
             if !i.rs2.is_none() {
                 let sc = if i.rs2.is_virt() && f.vreg_float[i.rs2.virt_idx()] {
@@ -212,14 +392,15 @@ pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
                 } else {
                     T6
                 };
-                i.rs2 = map_use(i.rs2, sc, &mut pre, &assignment, &spills);
+                i.rs2 = map_use(i.rs2, sc, &mut pre);
             }
             if !i.rd.is_none() && i.rd.is_virt() {
                 let r = i.rd;
-                if let Some(&p) = assignment.get(&r) {
+                let root = root_of[r.virt_idx()];
+                if let Some(&p) = assignment.get(&root) {
                     i.rd = MReg(p);
                 } else {
-                    let slot = spills[&r];
+                    let slot = spills[&root];
                     // rd shares the instruction with rs1/rs2 reloads when it
                     // is also a source (CMOV/AMOCAS): use a dedicated
                     // scratch so the pre-load cannot clobber them.
@@ -230,12 +411,7 @@ pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
                         (false, false) => T5,
                     };
                     if rd_is_use {
-                        pre.push(MInst::rri(
-                            Op::LW,
-                            MReg(sc),
-                            MReg::phys(super::isa::SP),
-                            (frame_base + slot * 4) as i64,
-                        ));
+                        pre.push(spill_lw(sc, slot));
                     }
                     i.rd = MReg(sc);
                     if i.def().is_some() {
@@ -245,6 +421,7 @@ pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
                             rs1: MReg::phys(super::isa::SP),
                             rs2: MReg(sc),
                             imm: (frame_base + slot * 4) as i64,
+                            spill: true,
                             ..MInst::new(Op::SW)
                         });
                     }
@@ -257,6 +434,40 @@ pub fn allocate(f: &mut MFunction, rf: &RegFile) -> RegAllocReport {
         b.insts = out;
     }
     report
+}
+
+/// Sort and merge touching/overlapping half-open ranges in place.
+fn normalize(rs: &mut Vec<(u32, u32)>) {
+    if rs.len() <= 1 {
+        return;
+    }
+    rs.sort_unstable();
+    let mut out: Vec<(u32, u32)> = Vec::with_capacity(rs.len());
+    for &(s, e) in rs.iter() {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    *rs = out;
+}
+
+/// Any overlap between two normalized range sets?
+fn ranges_overlap(a: &[(u32, u32)], b: &[(u32, u32)]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let (s1, e1) = a[i];
+        let (s2, e2) = b[j];
+        if s1 < e2 && s2 < e1 {
+            return true;
+        }
+        if e1 <= e2 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    false
 }
 
 /// Insert prologue/epilogue once frame + spill sizes are final.
@@ -340,12 +551,7 @@ mod tests {
         f
     }
 
-    #[test]
-    fn allocates_without_spills_when_fits() {
-        let mut f = func_with_pressure(8);
-        let rep = allocate(&mut f, &RegFile::vortex());
-        assert_eq!(rep.spilled, 0);
-        // No virtual registers remain.
+    fn assert_allocated(f: &MFunction) {
         for b in &f.blocks {
             for i in &b.insts {
                 assert!(!i.rd.is_virt() && !i.rs1.is_virt() && !i.rs2.is_virt(), "{i:?}");
@@ -354,19 +560,23 @@ mod tests {
     }
 
     #[test]
+    fn allocates_without_spills_when_fits() {
+        let mut f = func_with_pressure(8);
+        let rep = allocate(&mut f, &RegFile::vortex());
+        assert_eq!(rep.spilled, 0);
+        assert_allocated(&f);
+    }
+
+    #[test]
     fn spills_under_pressure() {
         let mut f = func_with_pressure(40);
         let rep = allocate(&mut f, &RegFile::vortex());
         assert!(rep.spilled > 0);
         assert!(f.spill_size >= 4 * rep.spilled as u32);
-        for b in &f.blocks {
-            for i in &b.insts {
-                assert!(!i.rd.is_virt() && !i.rs1.is_virt() && !i.rs2.is_virt(), "{i:?}");
-            }
-        }
-        // Spill traffic exists.
-        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::SW));
-        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::LW));
+        assert_allocated(&f);
+        // Spill traffic exists and is tagged.
+        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::SW && i.spill));
+        assert!(f.blocks[0].insts.iter().any(|i| i.op == Op::LW && i.spill));
     }
 
     /// The allocator pools come from the target's register-file shape: a
@@ -380,13 +590,7 @@ mod tests {
         let mut f = func_with_pressure(12);
         let rep = allocate(&mut f, &narrow);
         assert!(rep.spilled > 0, "13 live values cannot fit 8 allocatable regs");
-        for b in &f.blocks {
-            for i in &b.insts {
-                for r in [i.rd, i.rs1, i.rs2] {
-                    assert!(!r.is_virt());
-                }
-            }
-        }
+        assert_allocated(&f);
         let mut f2 = func_with_pressure(12);
         assert_eq!(allocate(&mut f2, &RegFile::vortex()).spilled, 0);
     }
@@ -419,5 +623,252 @@ mod tests {
         // prologue adjusts sp and saves ra.
         assert_eq!(f.blocks[0].insts[0].op, Op::ADDI);
         assert!(f.blocks[0].insts[1].op == Op::SW);
+    }
+
+    /// Coalescing: a chain of phi-style copies collapses onto one
+    /// physical register; `cleanup_identities` then removes the movs.
+    #[test]
+    fn coalesces_virtual_copies() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 3));
+        f.blocks[0].insts.push(MInst::mv(b, a)); // a dead after this copy
+        f.blocks[0].insts.push(MInst::rrr(Op::ADD, MReg::phys(10), b, b));
+        let rep = allocate_with(&mut f, &RegFile::vortex(), RegAllocOptions::quality());
+        assert_eq!(rep.coalesced, 1);
+        let mv = f.blocks[0].insts.iter().find(|i| i.op == Op::MOV).unwrap();
+        assert_eq!(mv.rd, mv.rs1, "coalesced copy must be an identity");
+        let removed = crate::backend::combine::cleanup_identities(&mut f);
+        assert_eq!(removed, 1);
+        assert!(!f.blocks[0].insts.iter().any(|i| i.op == Op::MOV));
+    }
+
+    /// Coalescing must refuse when source and destination interfere
+    /// (the source lives past the copy).
+    #[test]
+    fn coalescing_respects_interference() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let a = f.new_vreg(false);
+        let b = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(a, 3));
+        f.blocks[0].insts.push(MInst::mv(b, a));
+        // b redefined while a still live -> they interfere.
+        f.blocks[0].insts.push(MInst::rri(Op::ADDI, b, b, 1));
+        f.blocks[0].insts.push(MInst::rrr(Op::ADD, MReg::phys(10), a, b));
+        let rep = allocate_with(&mut f, &RegFile::vortex(), RegAllocOptions::quality());
+        assert_eq!(rep.coalesced, 0);
+        let mv = f.blocks[0].insts.iter().find(|i| i.op == Op::MOV).unwrap();
+        assert_ne!(mv.rd, mv.rs1, "interfering copy must keep two registers");
+    }
+
+    /// Live-range holes: two values whose ranges do not overlap share
+    /// one register under a one-register pool, with no spill.
+    #[test]
+    fn holes_allow_register_sharing() {
+        let one_reg = RegFile {
+            int_alloc: (5, 5),
+            ..RegFile::vortex()
+        };
+        let build = || {
+            let mut f = MFunction {
+                name: "t".into(),
+                blocks: vec![MBlock::default()],
+                vreg_float: vec![],
+                frame_size: 0,
+                spill_size: 0,
+                has_calls: false,
+                local_mem_size: 0,
+            };
+            let a = f.new_vreg(false);
+            let b = f.new_vreg(false);
+            f.blocks[0].insts.push(MInst::li(a, 1));
+            f.blocks[0].insts.push(MInst::mv(MReg::phys(10), a)); // a dies
+            f.blocks[0].insts.push(MInst::li(b, 2));
+            f.blocks[0].insts.push(MInst::mv(MReg::phys(11), b));
+            f
+        };
+        let mut f = build();
+        let rep = allocate_with(
+            &mut f,
+            &one_reg,
+            RegAllocOptions {
+                holes: true,
+                ..Default::default()
+            },
+        );
+        assert_eq!(rep.spilled, 0, "disjoint ranges share x5");
+        assert_allocated(&f);
+    }
+
+    /// Belady spill choice: under a two-register pool, the value whose
+    /// next use is furthest loses its register; the loop-carried
+    /// accumulator pattern keeps its register and total spill traffic is
+    /// no worse than the longest-interval heuristic.
+    #[test]
+    fn furthest_next_use_spills_cold_value() {
+        let build = || {
+            let mut f = MFunction {
+                name: "t".into(),
+                blocks: vec![MBlock::default()],
+                vreg_float: vec![],
+                frame_size: 0,
+                spill_size: 0,
+                has_calls: false,
+                local_mem_size: 0,
+            };
+            // cold is defined first, used only at the very end; the
+            // hot pair cycles in between.
+            let cold = f.new_vreg(false);
+            let h1 = f.new_vreg(false);
+            let h2 = f.new_vreg(false);
+            f.blocks[0].insts.push(MInst::li(cold, 9));
+            f.blocks[0].insts.push(MInst::li(h1, 1));
+            f.blocks[0].insts.push(MInst::li(h2, 2));
+            for _ in 0..4 {
+                f.blocks[0].insts.push(MInst::rrr(Op::ADD, h1, h1, h2));
+                f.blocks[0].insts.push(MInst::rrr(Op::ADD, h2, h2, h1));
+            }
+            f.blocks[0].insts.push(MInst::rrr(Op::ADD, MReg::phys(10), h1, cold));
+            f
+        };
+        let two_regs = RegFile {
+            int_alloc: (5, 6),
+            ..RegFile::vortex()
+        };
+        let mut f = build();
+        let rep = allocate_with(
+            &mut f,
+            &two_regs,
+            RegAllocOptions {
+                spill_next_use: true,
+                ..Default::default()
+            },
+        );
+        assert_allocated(&f);
+        assert_eq!(rep.spilled, 1, "only the cold value spills");
+        // The hot accumulators keep registers: no spill reload inside
+        // the add chain (the only tagged lw is the final cold reload).
+        let reloads = f
+            .blocks[0]
+            .insts
+            .iter()
+            .filter(|i| i.op == Op::LW && i.spill)
+            .count();
+        assert_eq!(reloads, 1);
+    }
+
+    /// Spill-scratch collision (the satellite case): CMOV and AMOCAS
+    /// with rs1, rs2 AND the read-modify-write destination all spilled
+    /// must reload through three distinct scratches (T5/T6/T7) and
+    /// store the result from the rd scratch.
+    #[test]
+    fn rmw_spill_scratches_never_alias() {
+        for op in [Op::CMOV, Op::AMOCAS] {
+            let mut f = MFunction {
+                name: "t".into(),
+                blocks: vec![MBlock::default()],
+                vreg_float: vec![],
+                frame_size: 0,
+                spill_size: 0,
+                has_calls: false,
+                local_mem_size: 0,
+            };
+            // One allocatable register, pinned by `filler` (its next use
+            // is always nearer than d/c/v's, so Belady never evicts it
+            // and the CMOV/AMOCAS operands all spill).
+            let no_regs = RegFile {
+                int_alloc: (5, 5),
+                ..RegFile::vortex()
+            };
+            let filler = f.new_vreg(false);
+            let d = f.new_vreg(false);
+            let c = f.new_vreg(false);
+            let v = f.new_vreg(false);
+            f.blocks[0].insts.push(MInst::li(filler, 0));
+            f.blocks[0].insts.push(MInst::li(d, 1));
+            f.blocks[0].insts.push(MInst::li(c, 2));
+            f.blocks[0].insts.push(MInst::li(v, 3));
+            f.blocks[0]
+                .insts
+                .push(MInst::rrr(Op::ADD, MReg::phys(12), filler, filler));
+            f.blocks[0].insts.push(MInst::rrr(op, d, c, v));
+            // Keep everything live past the op.
+            f.blocks[0].insts.push(MInst::rrr(Op::ADD, MReg::phys(10), d, c));
+            f.blocks[0].insts.push(MInst::rrr(Op::ADD, MReg::phys(11), v, filler));
+            let rep = allocate_with(&mut f, &no_regs, RegAllocOptions::quality());
+            assert!(rep.spilled >= 3, "{op:?}: want rs1/rs2/rd all spilled");
+            let pos = f.blocks[0].insts.iter().position(|i| i.op == op).unwrap();
+            let i = &f.blocks[0].insts[pos];
+            assert_eq!(i.rs1, MReg(T5), "{op:?} rs1 reload scratch");
+            assert_eq!(i.rs2, MReg(T6), "{op:?} rs2 reload scratch");
+            assert_eq!(i.rd, MReg(T7), "{op:?} rmw destination scratch");
+            // The three pre-loads hit three distinct scratches...
+            let pre: Vec<&MInst> = f.blocks[0].insts[pos.saturating_sub(3)..pos].iter().collect();
+            assert_eq!(pre.len(), 3);
+            assert!(pre.iter().all(|p| p.op == Op::LW && p.spill));
+            let mut scratches: Vec<u32> = pre.iter().map(|p| p.rd.0).collect();
+            scratches.sort_unstable();
+            assert_eq!(scratches, vec![T7, T5, T6], "{op:?} scratch set");
+            // ...and the post-store writes back from the rd scratch.
+            let post = &f.blocks[0].insts[pos + 1];
+            assert!(post.op == Op::SW && post.spill);
+            assert_eq!(post.rs2, MReg(T7));
+        }
+    }
+
+    /// Quality mode never leaves a virtual register behind on a
+    /// multi-block CFG with a loop (ranges across back edges).
+    #[test]
+    fn quality_mode_handles_loops() {
+        let mut f = MFunction {
+            name: "t".into(),
+            blocks: vec![MBlock::default(), MBlock::default(), MBlock::default()],
+            vreg_float: vec![],
+            frame_size: 0,
+            spill_size: 0,
+            has_calls: false,
+            local_mem_size: 0,
+        };
+        let v0 = f.new_vreg(false);
+        let v1 = f.new_vreg(false);
+        f.blocks[0].insts.push(MInst::li(v0, 3));
+        let mut j = MInst::new(Op::J);
+        j.t1 = Some(1);
+        f.blocks[0].insts.push(j);
+        f.blocks[1].insts.push(MInst::rrr(Op::ADD, v1, v0, v0));
+        let mut bnez = MInst {
+            rs1: v1,
+            ..MInst::new(Op::BNEZ)
+        };
+        bnez.t1 = Some(1);
+        f.blocks[1].insts.push(bnez);
+        let mut j2 = MInst::new(Op::J);
+        j2.t1 = Some(2);
+        f.blocks[1].insts.push(j2);
+        f.blocks[2].insts.push(MInst::mv(MReg::phys(10), v0));
+        f.blocks[2].insts.push(MInst::new(Op::ECALL));
+        let rep = allocate_with(&mut f, &RegFile::vortex(), RegAllocOptions::quality());
+        assert_eq!(rep.spilled, 0);
+        assert_allocated(&f);
+        // v0 is live around the loop: v1's register must differ.
+        let add = f.blocks[1].insts.iter().find(|i| i.op == Op::ADD).unwrap();
+        assert_ne!(add.rd, add.rs1, "loop-live value must not be clobbered");
     }
 }

@@ -19,6 +19,9 @@ pub struct RunResult {
     pub compile_ms: f64,
     pub middle_ms: f64,
     pub code_size: usize,
+    /// Static regalloc spill-traffic instructions linked into the image
+    /// ([`crate::backend::emit::ProgramImage::spill_insts`]).
+    pub spill_insts: usize,
 }
 
 /// The driver options a benchmark run uses.
@@ -57,6 +60,7 @@ pub fn run_bench(
         compile_ms: prog.timings.total_ms(),
         middle_ms: prog.timings.middle_ms,
         code_size: prog.image.code.len(),
+        spill_insts: prog.image.spill_insts(),
     })
 }
 
@@ -87,6 +91,7 @@ pub fn run_bench_on(
         compile_ms: prog.timings.total_ms(),
         middle_ms: prog.timings.middle_ms,
         code_size: prog.image.code.len(),
+        spill_insts: prog.image.spill_insts(),
     })
 }
 
@@ -165,6 +170,10 @@ pub struct O3Row {
     pub o3_cycles: u64,
     pub recon_instrs: u64,
     pub o3_instrs: u64,
+    /// Static spill-traffic instructions in each image (the backend
+    /// rung's regalloc upgrade should push the O3 column down).
+    pub recon_spills: usize,
+    pub o3_spills: usize,
 }
 
 impl O3Row {
@@ -202,6 +211,8 @@ pub fn o3_cycle_sweep_on(target: &TargetDesc) -> Result<Vec<O3Row>, VoltError> {
             o3_cycles: o3.stats.cycles,
             recon_instrs: recon.stats.instrs,
             o3_instrs: o3.stats.instrs,
+            recon_spills: recon.spill_insts,
+            o3_spills: o3.spill_insts,
         });
     }
     Ok(rows)
@@ -276,6 +287,7 @@ pub fn profile_bench(
             compile_ms: prog.timings.total_ms(),
             middle_ms: prog.timings.middle_ms,
             code_size: prog.image.code.len(),
+            spill_insts: prog.image.spill_insts(),
         },
         profiles,
     ))
@@ -299,6 +311,8 @@ pub struct ProfileRow {
     pub l2_hit_rate: f64,
     /// Hottest source line across all launches: (line, cycles).
     pub hot_line: Option<(u32, u64)>,
+    /// Latency-weighted cycles in regalloc spill traffic (all launches).
+    pub spill_cycles: u64,
 }
 
 /// Profile every kernel in the registry at `opt` (validators run under
@@ -311,12 +325,14 @@ pub fn profile_sweep(opt: OptLevel) -> Result<Vec<ProfileRow>, VoltError> {
         let mut occ_weighted = 0.0f64;
         let mut mapped = 0u64;
         let mut executed = 0u64;
+        let mut spill_cycles = 0u64;
         let mut lines: std::collections::HashMap<u32, u64> = Default::default();
         for p in &profiles {
             stalls.add(&p.stalls);
             occ_weighted += p.occupancy_pct * p.cycles as f64;
             mapped += p.pc_mapped;
             executed += p.pc_executed;
+            spill_cycles += p.spill_cycles;
             for (l, c) in &p.hot_lines {
                 *lines.entry(*l).or_insert(0) += c;
             }
@@ -345,6 +361,7 @@ pub fn profile_sweep(opt: OptLevel) -> Result<Vec<ProfileRow>, VoltError> {
             l1_hit_rate: pct(s.l1_hits, s.l1_hits + s.l1_misses),
             l2_hit_rate: pct(s.l2_hits, s.l2_hits + s.l2_misses),
             hot_line: hot.first().copied(),
+            spill_cycles,
         });
     }
     Ok(rows)

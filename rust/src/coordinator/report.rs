@@ -160,7 +160,7 @@ pub fn render_compile_time(rows: &[CompileTimeRow]) -> String {
 
 pub fn render_o3_cycles(rows: &[O3Row]) -> String {
     let mut out = String::from("O3 rung — simulated cycles, Recon vs O3 (reduction > 1 is better)\n");
-    let widths = [14usize, 12, 12, 10, 12, 12, 10];
+    let widths = [14usize, 12, 12, 10, 12, 12, 10, 10, 9];
     out.push_str(&fmt_row(
         &[
             "benchmark".into(),
@@ -170,6 +170,8 @@ pub fn render_o3_cycles(rows: &[O3Row]) -> String {
             "recon-instr".into(),
             "o3-instr".into(),
             "instr-red".into(),
+            "rec-spill".into(),
+            "o3-spill".into(),
         ],
         &widths,
     ));
@@ -184,6 +186,8 @@ pub fn render_o3_cycles(rows: &[O3Row]) -> String {
                 r.recon_instrs.to_string(),
                 r.o3_instrs.to_string(),
                 format!("{:.3}", r.instr_reduction()),
+                r.recon_spills.to_string(),
+                r.o3_spills.to_string(),
             ],
             &widths,
         ));
@@ -216,13 +220,16 @@ pub fn json_o3_cycles(rows: &[O3Row], target: &str) -> String {
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"suite\": \"{}\", \"recon_cycles\": {}, \"o3_cycles\": {}, \
-             \"recon_instrs\": {}, \"o3_instrs\": {}, \"cycle_reduction\": {:.6}}}{}\n",
+             \"recon_instrs\": {}, \"o3_instrs\": {}, \"recon_spills\": {}, \"o3_spills\": {}, \
+             \"cycle_reduction\": {:.6}}}{}\n",
             r.name,
             r.suite,
             r.recon_cycles,
             r.o3_cycles,
             r.recon_instrs,
             r.o3_instrs,
+            r.recon_spills,
+            r.o3_spills,
             r.cycle_reduction(),
             if i + 1 == rows.len() { "" } else { "," }
         ));
@@ -297,7 +304,7 @@ pub fn render_profile_sweep(rows: &[ProfileRow]) -> String {
     let mut out = String::from(
         "volt::prof sweep — per-kernel cycle attribution (latency-weighted)\n",
     );
-    let widths = [14usize, 10, 8, 6, 6, 6, 6, 6, 6, 6, 7, 10];
+    let widths = [14usize, 10, 8, 6, 6, 6, 6, 6, 6, 6, 7, 9, 10];
     out.push_str(&fmt_row(
         &[
             "benchmark".into(),
@@ -311,6 +318,7 @@ pub fn render_profile_sweep(rows: &[ProfileRow]) -> String {
             "div%".into(),
             "idle%".into(),
             "map%".into(),
+            "spill-cyc".into(),
             "hot-line".into(),
         ],
         &widths,
@@ -332,6 +340,7 @@ pub fn render_profile_sweep(rows: &[ProfileRow]) -> String {
                 pct(r.stalls.divergence),
                 pct(r.stalls.no_active_warp),
                 format!("{:.1}", r.mapped_pct),
+                r.spill_cycles.to_string(),
                 match r.hot_line {
                     Some((l, _)) => format!("L{l}"),
                     None => "-".into(),
@@ -360,6 +369,7 @@ pub fn json_profile(rows: &[ProfileRow], level: OptLevel, target: &str) -> Strin
              \"cycles\": {}, \"instrs\": {}, \"ipc\": {:.6}, \
              \"occupancy_pct\": {:.3}, \"mapped_pct\": {:.3}, \
              \"l1_hit_rate\": {:.3}, \"l2_hit_rate\": {:.3}, \
+             \"spill_cycles\": {}, \
              \"stalls\": {{\"issue\": {}, \"no_active_warp\": {}, \
              \"scoreboard\": {}, \"barrier\": {}, \"memory\": {}, \
              \"divergence\": {}}}, \"hot_line\": {}}}{}\n",
@@ -373,6 +383,7 @@ pub fn json_profile(rows: &[ProfileRow], level: OptLevel, target: &str) -> Strin
             r.mapped_pct,
             r.l1_hit_rate,
             r.l2_hit_rate,
+            r.spill_cycles,
             st.issue,
             st.no_active_warp,
             st.scoreboard,
@@ -470,6 +481,8 @@ mod tests {
                 o3_cycles: 900,
                 recon_instrs: 500,
                 o3_instrs: 450,
+                recon_spills: 24,
+                o3_spills: 6,
             },
             O3Row {
                 name: "b",
@@ -478,6 +491,8 @@ mod tests {
                 o3_cycles: 820,
                 recon_instrs: 400,
                 o3_instrs: 410,
+                recon_spills: 0,
+                o3_spills: 0,
             },
         ];
         let t = render_o3_cycles(&rows);
@@ -488,6 +503,8 @@ mod tests {
         assert!(j.contains("\"baseline\": \"Recon\""));
         assert!(j.contains("\"name\": \"a\""));
         assert!(j.contains("\"o3_cycles\": 820"));
+        assert!(j.contains("\"recon_spills\": 24"));
+        assert!(j.contains("\"o3_spills\": 6"));
         assert!(j.contains("\"geomean_cycle_reduction\""));
         // Exactly one comma-separated kernel boundary (2 entries).
         assert_eq!(j.matches("},").count(), 1);
@@ -556,6 +573,7 @@ mod tests {
             l1_hit_rate: 88.0,
             l2_hit_rate: 60.0,
             hot_line: Some((4, 720)),
+            spill_cycles: 96,
         }];
         let t = render_profile_sweep(&rows);
         assert!(t.contains("saxpy"));
@@ -566,6 +584,7 @@ mod tests {
         assert!(j.contains("\"level\": \"O3\""));
         assert!(j.contains("\"target\": \"vortex\""));
         assert!(j.contains("\"memory\": 250"));
+        assert!(j.contains("\"spill_cycles\": 96"));
         assert!(j.contains("\"hot_line\": {\"line\": 4, \"cycles\": 720}"));
     }
 }

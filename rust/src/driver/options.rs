@@ -117,13 +117,17 @@ impl VoltOptions {
         cfg
     }
 
-    /// Back-end view.
+    /// Back-end view. The codegen-quality rung (MIR combine + regalloc
+    /// holes/coalescing/Belady spilling) rides the O3 ladder point, so
+    /// `benches/o3_cycles.rs` measures its harvest against the Recon
+    /// baseline the same way the middle-end O3 passes are measured.
     pub fn backend(&self) -> BackendOptions {
         BackendOptions {
             zicond: self.effective_zicond(),
             opt_layout: self.opt_layout,
             safety_net: self.safety_net,
             smem: self.smem,
+            codegen_opt: self.opt >= OptLevel::O3,
             target: self.target,
         }
     }
@@ -440,6 +444,12 @@ mod tests {
             .unwrap();
         assert!(o.effective_zicond(), "O3 derives zicond on");
         assert!(o.opt_config().o3 && o.opt_config().recon);
+        // The backend codegen rung rides the O3 ladder point.
+        assert!(o.backend().codegen_opt);
+        assert!(
+            !VoltOptions::default().backend().codegen_opt,
+            "Recon is the baseline: backend rung off"
+        );
         // O3 must produce a different cache fingerprint than Recon.
         let mut a = Fnv1a::new();
         o.hash_into(&mut a);

@@ -21,7 +21,10 @@ commands:
   compile <file> [--cuda] [--opt LEVEL] [--target T] [--asm] [--ir]
                                                          compile a kernel file
   run <benchmark> [--opt LEVEL] [--target T] [--sw-warp] [--smem-global]
-                                                         run a registry benchmark
+                  [--no-fast-forward]                    run a registry benchmark
+                                                         (prints sim throughput;
+                                                         --no-fast-forward disables
+                                                         the idle-cycle skip)
   prof <benchmark> [--opt LEVEL] [--top N] [--annotate] [--trace FILE]
                                                          profile a benchmark: stall
                                                          breakdown + hot source lines
@@ -174,23 +177,42 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         SharedMemMapping::Local
     };
     let target = parse_target(args);
+    let fast_forward = !flag(args, "--no-fast-forward");
+    let t0 = std::time::Instant::now();
     let r = if target.name == "vortex" {
-        experiments::run_bench(&b, level, warp_hw, smem, SimConfig::default())?
+        let sim = SimConfig {
+            fast_forward,
+            ..SimConfig::default()
+        };
+        experiments::run_bench(&b, level, warp_hw, smem, sim)?
     } else {
         // Non-default target: geometry and warp lowering follow the
         // profile (vortex-min has no hardware shfl/vote). Refuse flag
         // combinations the profile path would silently ignore.
-        if flag(args, "--sw-warp") || flag(args, "--smem-global") {
+        if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward {
             return Err(format!(
-                "--sw-warp/--smem-global are not configurable with --target {} \
-                 (the profile determines warp lowering and memory mapping)",
+                "--sw-warp/--smem-global/--no-fast-forward are not configurable with \
+                 --target {} (the profile determines the device configuration)",
                 target.name
             ));
         }
         experiments::run_bench_on(&b, &target, level)?
     };
+    let wall_s = t0.elapsed().as_secs_f64();
     let s = &r.stats;
+    // Report simulator throughput against run-phase wall time only —
+    // subtracting the measured compile time keeps the fast-forward
+    // on/off CI smoke sensitive to the simulator, not the compiler.
+    let sim_wall = (wall_s - r.compile_ms / 1000.0).max(1e-9);
     println!("benchmark {name} @ {:?} on {}: PASS", level, target.name);
+    println!(
+        "  sim throughput: {:.0} warp-instrs/sec wall ({:.2}s sim of {:.2}s total, \
+         fast-forward {})",
+        s.instrs as f64 / sim_wall,
+        sim_wall,
+        wall_s,
+        if fast_forward { "on" } else { "off" }
+    );
     println!(
         "  cycles {}  instrs {}  thread-instrs {}  IPC {:.3}",
         s.cycles,
@@ -213,7 +235,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         s.l2_hits + s.l2_misses,
         s.local_accesses
     );
-    println!("  compile {:.2} ms, code {} instrs", r.compile_ms, r.code_size);
+    println!(
+        "  compile {:.2} ms, code {} instrs ({} spill-traffic)",
+        r.compile_ms, r.code_size, r.spill_insts
+    );
     Ok(())
 }
 

@@ -44,6 +44,12 @@ pub struct KernelProfile {
     pub mem_requests: u64,
     /// (source line, latency-weighted cycles), descending.
     pub hot_lines: Vec<(u32, u64)>,
+    /// Latency-weighted cycles spent in regalloc spill traffic (the
+    /// reload `lw`/store `sw` PCs tagged in [`ProgramImage::pc_spill`]).
+    pub spill_cycles: u64,
+    /// Spill cycles per source line, descending (the `--annotate`
+    /// margin markers).
+    pub spill_lines: Vec<(u32, u64)>,
     /// Distinct executed PCs mapping to a source line / total (crt0
     /// excluded). `mapped_pct()` is the acceptance metric.
     pub pc_mapped: u64,
@@ -101,6 +107,20 @@ pub fn build_profile(
     let stalls = StallBreakdown::from_cores(&prof.cores);
     let (pc_mapped, pc_executed) = map.coverage(&prof.pc_issues);
     let hot_lines = map.line_cycles(&prof.pc_cycles);
+    // Spill traffic: the allocator-tagged PCs, total and per line.
+    let mut spill_cycles = 0u64;
+    let mut spill_by_line: std::collections::HashMap<u32, u64> = Default::default();
+    for (pc, &cyc) in prof.pc_cycles.iter().enumerate() {
+        if cyc == 0 || !image.pc_spill.get(pc).copied().unwrap_or(false) {
+            continue;
+        }
+        spill_cycles += cyc;
+        if let Some(loc) = map.loc(pc as u32) {
+            *spill_by_line.entry(loc.line).or_insert(0) += cyc;
+        }
+    }
+    let mut spill_lines: Vec<(u32, u64)> = spill_by_line.into_iter().collect();
+    spill_lines.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
     let mut pc_samples = vec![];
     for (pc, &n) in prof.pc_issues.iter().enumerate() {
         if n == 0 {
@@ -136,6 +156,8 @@ pub fn build_profile(
         l2_misses: stats.l2_misses,
         mem_requests: stats.mem_requests,
         hot_lines,
+        spill_cycles,
+        spill_lines,
         pc_mapped,
         pc_executed,
         pc_samples,
@@ -209,6 +231,18 @@ pub fn render_text(p: &KernelProfile, top_n: usize) -> String {
     )
     .unwrap();
     let total = p.line_cycles_total().max(1);
+    // Spill share only: unmapped spill PCs contribute to spill_cycles
+    // but not to the per-line totals, so clamp this denominator alone —
+    // the hot-line shares below keep the plain per-line total.
+    let spill_denom = total.max(p.spill_cycles);
+    writeln!(
+        s,
+        "  spill traffic: {} latency-weighted cyc ({:.1}% of line cycles) across {} lines",
+        p.spill_cycles,
+        p.spill_cycles as f64 / spill_denom as f64 * 100.0,
+        p.spill_lines.len()
+    )
+    .unwrap();
     writeln!(s, "  hot lines (latency-weighted):").unwrap();
     for (line, cyc) in p.hot_lines_top(top_n) {
         writeln!(
@@ -224,28 +258,42 @@ pub fn render_text(p: &KernelProfile, top_n: usize) -> String {
 }
 
 /// Annotated source listing: every line of `src` prefixed with its
-/// latency-weighted cycle total and share.
+/// latency-weighted cycle total and share, plus a `spill` column
+/// marking lines whose cycles include regalloc spill traffic.
 pub fn annotate_source(src: &str, p: &KernelProfile) -> String {
     let mut per_line = std::collections::HashMap::new();
     for (line, cyc) in &p.hot_lines {
         per_line.insert(*line, *cyc);
     }
+    let mut spill_line: std::collections::HashMap<u32, u64> = Default::default();
+    for (line, cyc) in &p.spill_lines {
+        spill_line.insert(*line, *cyc);
+    }
     let total = p.line_cycles_total().max(1);
     let mut s = String::new();
-    writeln!(s, "{:>10}  {:>6}  source ({})", "cycles", "%", p.kernel).unwrap();
+    writeln!(
+        s,
+        "{:>10}  {:>6}  {:>9}  source ({})",
+        "cycles", "%", "spill", p.kernel
+    )
+    .unwrap();
     for (i, text) in src.lines().enumerate() {
         let line = i as u32 + 1;
+        let spill = match spill_line.get(&line) {
+            Some(c) => format!("s!{c:>7}"),
+            None => "         ".into(),
+        };
         match per_line.get(&line) {
             Some(cyc) => writeln!(
                 s,
-                "{:>10}  {:>5.1}%  {:4} | {}",
+                "{:>10}  {:>5.1}%  {spill}  {:4} | {}",
                 cyc,
                 *cyc as f64 / total as f64 * 100.0,
                 line,
                 text
             )
             .unwrap(),
-            None => writeln!(s, "{:>10}  {:>6}  {:4} | {}", "", "", line, text).unwrap(),
+            None => writeln!(s, "{:>10}  {:>6}  {spill}  {:4} | {}", "", "", line, text).unwrap(),
         }
     }
     s
@@ -284,6 +332,7 @@ mod tests {
             func_entries: [("__main_k".to_string(), 2u32)].into_iter().collect(),
             pc_loc: vec![None, None, Some(crate::ir::Loc::line(3)), Some(crate::ir::Loc::line(4))],
             crt0_len: 2,
+            pc_spill: vec![false, false, false, true],
             target: "vortex".into(),
             addr_map: crate::target::AddressMap::vortex(),
         };
@@ -311,13 +360,22 @@ mod tests {
         assert_eq!(p.hot_lines[0], (3, 3));
         assert!((p.occupancy_pct - 100.0).abs() < 1e-9); // 2 of 2 warps
         assert_eq!(p.target, "vortex", "profile stamped with the image's target");
+        // Spill visibility: pc 3 is tagged spill traffic on line 4.
+        assert_eq!(p.spill_cycles, 1);
+        assert_eq!(p.spill_lines, vec![(4, 1)]);
         let txt = render_text(&p, 5);
         assert!(txt.contains("target vortex"));
         assert!(txt.contains("core-cycle breakdown"));
         assert!(txt.contains("memory"));
         assert!(txt.contains("line    3"));
+        assert!(txt.contains("spill traffic: 1 "));
         let annotated = annotate_source("a\nb\nc\nd\n", &p);
         assert!(annotated.lines().count() >= 5);
         assert!(annotated.contains("   3 | c"));
+        let spill_row = annotated
+            .lines()
+            .find(|l| l.ends_with("   4 | d"))
+            .expect("line 4 in listing");
+        assert!(spill_row.contains("s!"), "spill marker missing: {spill_row}");
     }
 }

@@ -62,6 +62,24 @@ pub struct Core {
     pub barriers: HashMap<u32, u32>,
     rr: usize,
     full_mask: u32,
+    /// Idle-cycle fast-forward cache ([`SimConfig::fast_forward`]):
+    /// while no warp can issue, the core's state is frozen — warp
+    /// readiness only changes through this core's own `exec` (wspawn
+    /// and barrier release are core-local) — so the first no-issue scan
+    /// records the earliest ready cycle plus the stall attribution, and
+    /// subsequent cycles skip the warp-table scan entirely. Invalidated
+    /// on every executed instruction and on reset.
+    idle: Option<IdleInfo>,
+}
+
+/// Snapshot of a stalled core, valid until it next issues.
+#[derive(Clone, Copy, Debug)]
+struct IdleInfo {
+    /// Earliest cycle a warp becomes issueable (`u64::MAX`: never —
+    /// every active warp is barrier-parked, or none is active).
+    ready_at: u64,
+    reason: StallReason,
+    active: u32,
 }
 
 /// What one issue slot executed — the profiler's attribution record.
@@ -102,6 +120,7 @@ impl Core {
             barriers: HashMap::new(),
             rr: 0,
             full_mask,
+            idle: None,
         }
     }
 
@@ -111,6 +130,7 @@ impl Core {
         }
         self.barriers.clear();
         self.rr = 0;
+        self.idle = None;
         // Launch contract: warp 0, lane 0 active at pc 0.
         self.warps[0].active = true;
         self.warps[0].tmask = 1;
@@ -140,6 +160,15 @@ impl Core {
         cfg: &SimConfig,
         stats: &mut SimStats,
     ) -> Result<StepOutcome, SimError> {
+        // Idle fast-forward: nothing about this core can change until
+        // `ready_at`, so skip the warp-table scan entirely.
+        if cfg.fast_forward {
+            if let Some(info) = self.idle {
+                if cycle < info.ready_at {
+                    return Ok(StepOutcome::NoneReady);
+                }
+            }
+        }
         // Round-robin issue selection over the active list.
         let n = self.warps.len();
         let mut chosen: Option<usize> = None;
@@ -152,8 +181,16 @@ impl Core {
             }
         }
         let Some(wi) = chosen else {
+            if cfg.fast_forward {
+                self.idle = Some(IdleInfo {
+                    ready_at: self.next_ready().unwrap_or(u64::MAX),
+                    reason: self.compute_stall_reason(),
+                    active: self.compute_active_warps(),
+                });
+            }
             return Ok(StepOutcome::NoneReady);
         };
+        self.idle = None;
         self.rr = (wi + 1) % n;
         let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats)?;
         Ok(StepOutcome::Executed(issue))
@@ -163,8 +200,17 @@ impl Core {
     /// ready (lowest `stall_until`, then lowest index — deterministic) is
     /// the bottleneck and its last instruction class names the reason.
     /// Barrier-parked warps report [`StallReason::Barrier`]; a fully
-    /// retired core reports [`StallReason::NoActiveWarp`].
+    /// retired core reports [`StallReason::NoActiveWarp`]. Served from
+    /// the idle cache while fast-forwarding (the state is frozen, so the
+    /// cached value equals a rescan).
     pub fn stall_reason(&self) -> StallReason {
+        if let Some(info) = self.idle {
+            return info.reason;
+        }
+        self.compute_stall_reason()
+    }
+
+    fn compute_stall_reason(&self) -> StallReason {
         let mut best: Option<&Warp> = None;
         let mut any_active = false;
         for w in &self.warps {
@@ -193,7 +239,15 @@ impl Core {
     }
 
     /// Number of active (not yet retired) warps — the occupancy sample.
+    /// Served from the idle cache while fast-forwarding.
     pub fn active_warps(&self) -> u32 {
+        if let Some(info) = self.idle {
+            return info.active;
+        }
+        self.compute_active_warps()
+    }
+
+    fn compute_active_warps(&self) -> u32 {
         self.warps.iter().filter(|w| w.active).count() as u32
     }
 

@@ -248,6 +248,61 @@ kernel void saxpy(global float* x, global float* y, float a, int n) {
         }
     }
 
+    /// Idle-cycle fast-forward is a wall-clock optimization only: cycle
+    /// counts, all stats, and device results are bit-identical with it
+    /// on or off, with and without the profiler attached (and the
+    /// profiler's per-core ledgers still sum to the cycle count).
+    #[test]
+    fn fast_forward_bit_identical() {
+        let src = r#"
+kernel void rev(global int* a, int n) {
+    local int tile[64];
+    int l = get_local_id(0);
+    int g = get_global_id(0);
+    tile[l] = a[g];
+    barrier(0);
+    if (g < n) a[g] = tile[63 - l] + a[g] / 3;
+}
+"#;
+        let img = compile(src, OptLevel::O3);
+        let run_with = |ff: bool, profile: bool| {
+            let cfg = SimConfig {
+                fast_forward: ff,
+                ..SimConfig::default()
+            };
+            let mut gpu = Gpu::load(&img, cfg);
+            let a = gpu.alloc(128 * 4);
+            for i in 0..128u32 {
+                gpu.mem.write_u32(a + i * 4, i * 3).unwrap();
+            }
+            write_args(&mut gpu, &img, [2, 1, 1], [64, 1, 1], &[a, 128]);
+            let mut prof = profile.then(|| {
+                crate::prof::counters::Profiler::new(img.code.len(), gpu.cfg.num_cores as usize)
+            });
+            let stats = gpu.run_profiled(prof.as_mut()).unwrap();
+            let out: Vec<u32> = (0..128).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+            (stats, out, prof)
+        };
+        let (s_on, out_on, _) = run_with(true, false);
+        let (s_off, out_off, _) = run_with(false, false);
+        assert_eq!(s_on.cycles, s_off.cycles, "fast-forward changed the cycle count");
+        assert_eq!(s_on.instrs, s_off.instrs);
+        assert_eq!(out_on, out_off, "fast-forward changed device results");
+        // Profiled runs: identical cycles, and every core-cycle is still
+        // attributed exactly once under fast-forward.
+        let (s_pon, out_pon, prof_on) = run_with(true, true);
+        let (s_poff, _, prof_off) = run_with(false, true);
+        assert_eq!(s_pon.cycles, s_on.cycles);
+        assert_eq!(s_poff.cycles, s_on.cycles);
+        assert_eq!(out_pon, out_on);
+        let (p_on, p_off) = (prof_on.unwrap(), prof_off.unwrap());
+        for (c_on, c_off) in p_on.cores.iter().zip(p_off.cores.iter()) {
+            assert_eq!(c_on.total(), s_on.cycles, "ledger must sum to cycles");
+            assert_eq!(c_on.issue_cycles, c_off.issue_cycles);
+            assert_eq!(c_on.stalls, c_off.stalls, "stall attribution must match");
+        }
+    }
+
     /// Divergent loop (per-lane trip counts) — exercises vx_pred.
     #[test]
     fn divergent_loop_pred() {

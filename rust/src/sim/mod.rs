@@ -67,6 +67,14 @@ pub struct SimConfig {
     pub addr_map: AddressMap,
     /// Per-functional-class issue costs (the target's timing hints).
     pub costs: CostModel,
+    /// Idle-cycle fast-forward: a core with no issueable warp caches the
+    /// earliest cycle one becomes ready (plus its stall attribution) and
+    /// skips the per-cycle warp-table scan until then. A pure host-side
+    /// (wall-clock) optimization — simulated cycle counts, results and
+    /// profiler attribution are bit-identical with it on or off (the
+    /// core's state is frozen while nothing issues, so the cached
+    /// reason/occupancy equal what a rescan would produce).
+    pub fast_forward: bool,
 }
 
 impl Default for SimConfig {
@@ -95,6 +103,7 @@ impl SimConfig {
             features: t.features,
             addr_map: t.addr_map,
             costs: t.costs,
+            fast_forward: true,
         }
     }
 

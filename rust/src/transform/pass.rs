@@ -28,7 +28,10 @@ pub enum OptLevel {
     /// + uniformity-aware redundancy elimination: dominator GVN/CSE,
     /// loop-invariant code motion, and power-of-two strength reduction —
     /// the first rung past the paper's published ladder (§5.2), built on
-    /// the same centralized SIMT analyses.
+    /// the same centralized SIMT analyses. The driver also enables the
+    /// backend codegen rung at this level (MIR combine/peephole +
+    /// quality register allocation — `BackendOptions::codegen_opt`, see
+    /// docs/OPTIMIZATIONS.md "The backend rung").
     O3,
 }
 

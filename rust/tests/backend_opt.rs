@@ -1,0 +1,233 @@
+//! Backend codegen-quality rung acceptance: interp-differential coverage
+//! for the MIR combine pass + upgraded register allocator over the whole
+//! benchmark registry, on both built-in targets, plus the narrow-regfile
+//! CAS/CMOV spill-pressure differential.
+//!
+//! "Differential" here means: the same middle-end output is lowered with
+//! the rung on and off, both images run their benchmark's host-side
+//! validator (which asserts exact expected device results), and the
+//! on/off device outputs are therefore bit-identical whenever both
+//! validators pass.
+
+use volt::backend::emit::{build_image, BackendOptions, ProgramImage};
+use volt::coordinator::benchmarks::{self, Benchmark};
+use volt::frontend::{compile_kernels, FrontendOptions};
+use volt::runtime::VoltDevice;
+use volt::sim::{SimConfig, SimStats};
+use volt::target::TargetDesc;
+use volt::transform::{run_middle_end_with, OptLevel};
+
+/// Lower one benchmark at O3 for `target` with the backend rung on or
+/// off, sharing the middle-end output between the two lowerings.
+fn build_pair(b: &Benchmark, target: &TargetDesc) -> (ProgramImage, ProgramImage) {
+    let fe = FrontendOptions {
+        dialect: b.dialect,
+        warp_hw: target.default_warp_hw(),
+    };
+    let (mut m, infos) =
+        compile_kernels(b.source, &fe).unwrap_or_else(|e| panic!("{}: {e:?}", b.name));
+    let mut cfg = OptLevel::O3.config();
+    cfg.features = target.features;
+    run_middle_end_with(&mut m, &cfg, target);
+    let dispatcher = format!("__main_{}", infos[0].name);
+    let mk = |codegen_opt: bool| -> ProgramImage {
+        build_image(
+            &m,
+            &dispatcher,
+            &BackendOptions {
+                zicond: target.features.zicond,
+                codegen_opt,
+                target: *target,
+                ..Default::default()
+            },
+        )
+        .unwrap_or_else(|e| panic!("{} (codegen_opt={codegen_opt}): {e}", b.name))
+    };
+    (mk(true), mk(false))
+}
+
+/// Run a benchmark's validator against a prebuilt image; returns the
+/// accumulated stats (the validator itself asserts device results).
+fn validate(b: &Benchmark, img: &ProgramImage, target: &TargetDesc) -> SimStats {
+    let mut dev = VoltDevice::new(img.clone(), SimConfig::from_target(target));
+    (b.run)(&mut dev).unwrap_or_else(|e| panic!("{} on {}: {e}", b.name, target.name));
+    dev.total_stats.clone()
+}
+
+/// The satellite acceptance: every registry kernel at O3 on vortex,
+/// validators pass with the rung on AND off (so results are bit-exact
+/// both ways), and across the suite the rung strictly reduces dynamic
+/// instructions and cycles.
+#[test]
+fn combine_differential_all_kernels_vortex() {
+    let target = TargetDesc::vortex();
+    let (mut cyc_on, mut cyc_off) = (0u64, 0u64);
+    let (mut ins_on, mut ins_off) = (0u64, 0u64);
+    for b in benchmarks::registry() {
+        let (on, off) = build_pair(&b, &target);
+        let s_on = validate(&b, &on, &target);
+        let s_off = validate(&b, &off, &target);
+        // Per kernel: the rung must not cost more than noise (cache
+        // interleaving can shift a little when instructions disappear);
+        // the hard zero-regression gate is benches/o3_cycles.rs's
+        // Recon-vs-O3 comparison.
+        assert!(
+            s_on.cycles <= s_off.cycles + s_off.cycles / 100,
+            "{}: backend rung regressed cycles ({} > {})",
+            b.name,
+            s_on.cycles,
+            s_off.cycles
+        );
+        cyc_on += s_on.cycles;
+        cyc_off += s_off.cycles;
+        ins_on += s_on.instrs;
+        ins_off += s_off.instrs;
+    }
+    assert!(
+        ins_on < ins_off,
+        "rung must cut dynamic instructions suite-wide ({ins_on} !< {ins_off})"
+    );
+    assert!(
+        cyc_on < cyc_off,
+        "rung must cut cycles suite-wide ({cyc_on} !< {cyc_off})"
+    );
+}
+
+/// The same differential on vortex-min (no ZiCond/shfl/vote: selects
+/// legalized to branches, warp builtins through the software emulation)
+/// over a representative non-warp subset — validators pass and no
+/// kernel regresses.
+#[test]
+fn combine_differential_vortex_min_subset() {
+    let target = TargetDesc::vortex_min();
+    for name in ["saxpy", "reduce", "pathfinder", "sgemm", "bfs", "psum"] {
+        let b = benchmarks::find(name).unwrap();
+        let (on, off) = build_pair(&b, &target);
+        // Gated-op audit still holds on the optimized image.
+        for inst in &on.code {
+            assert!(
+                target.supports_op(inst.op),
+                "{name}: gated op {:?} in a vortex-min image",
+                inst.op
+            );
+        }
+        let s_on = validate(&b, &on, &target);
+        let s_off = validate(&b, &off, &target);
+        assert!(
+            s_on.cycles <= s_off.cycles + s_off.cycles / 100,
+            "{name}: rung regressed on vortex-min ({} > {})",
+            s_on.cycles,
+            s_off.cycles
+        );
+    }
+}
+
+/// Spill-scratch collision under real execution: a kernel whose CMOV
+/// (ternary) and AMOCAS (atomic_cmpxchg) operands all spill on a
+/// narrow register file. The device results with the rung on must be
+/// bit-identical to the rung-off lowering AND to the full register
+/// file — if T5/T6/T7 ever aliased, the read-modify-write destination
+/// would clobber a reloaded source and the buffers would differ.
+#[test]
+fn narrow_regfile_cas_cmov_pressure_differential() {
+    let src = r#"
+kernel void stress(global int* out, global int* lock, int n) {
+    int i = get_global_id(0);
+    int a = i * 3 + 1;
+    int b = i * 5 + 2;
+    int c = i * 7 + 3;
+    int d = i * 11 + 4;
+    int e = a * b + c * d;
+    int f = a + b + c + d;
+    int g = e ^ f;
+    int h = (a & c) + (b | d);
+    int v = 0;
+    if (i % 2 == 0) { v = e + h; } else { v = f + g; }
+    atomic_cmpxchg(lock + (i % 4), 0, i + 1);
+    if (i < n) { out[i] = v + a + e - g; }
+}
+"#;
+    let narrow = TargetDesc {
+        regfile: volt::target::RegFile {
+            int_alloc: (5, 10),
+            ..volt::target::RegFile::vortex()
+        },
+        ..TargetDesc::vortex()
+    };
+    let run_with = |target: &TargetDesc, codegen_opt: bool| -> (Vec<u32>, Vec<u32>, usize) {
+        let (mut m, infos) =
+            compile_kernels(src, &FrontendOptions::default()).unwrap();
+        let mut cfg = OptLevel::O3.config();
+        cfg.verify = true;
+        run_middle_end_with(&mut m, &cfg, target);
+        let img = build_image(
+            &m,
+            &format!("__main_{}", infos[0].name),
+            &BackendOptions {
+                codegen_opt,
+                target: *target,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // The test is only meaningful if both read-modify-write paths
+        // (select -> vx_cmov, cmpxchg -> amocas) made it into the image.
+        use volt::backend::isa::Op;
+        assert!(
+            img.code.iter().any(|i| i.op == Op::CMOV),
+            "stress kernel lost its vx_cmov"
+        );
+        assert!(
+            img.code.iter().any(|i| i.op == Op::AMOCAS),
+            "stress kernel lost its amocas"
+        );
+        let mut dev = VoltDevice::new(img.clone(), SimConfig::from_target(target));
+        let n = 128u32;
+        let out = dev.malloc(n * 4);
+        let lock = dev.malloc(4 * 4);
+        dev.write_u32s(out, &vec![0u32; n as usize]).unwrap();
+        dev.write_u32s(lock, &[0u32; 4]).unwrap();
+        dev.launch(
+            "stress",
+            [2, 1, 1],
+            [64, 1, 1],
+            &[
+                volt::runtime::ArgValue::Ptr(out),
+                volt::runtime::ArgValue::Ptr(lock),
+                volt::runtime::ArgValue::I32(n as i32),
+            ],
+        )
+        .unwrap();
+        (
+            dev.read_u32s(out, n as usize).unwrap(),
+            dev.read_u32s(lock, 4).unwrap(),
+            img.spill_insts(),
+        )
+    };
+    let (out_on, lock_on, spills_on) = run_with(&narrow, true);
+    let (out_off, lock_off, spills_off) = run_with(&narrow, false);
+    let (out_wide, lock_wide, _) = run_with(&TargetDesc::vortex(), true);
+    assert!(spills_on > 0, "narrow regfile must actually spill");
+    assert!(spills_off > 0);
+    assert_eq!(out_on, out_off, "rung on/off results differ under spills");
+    assert_eq!(lock_on, lock_off, "CAS results differ under spills");
+    assert_eq!(out_on, out_wide, "narrow-regfile results differ from wide");
+    assert_eq!(lock_on, lock_wide);
+    // Host-side expected values for the non-atomic output.
+    for i in 0..128u32 {
+        let (a, b, c, d) = (i * 3 + 1, i * 5 + 2, i * 7 + 3, i * 11 + 4);
+        let e = a.wrapping_mul(b).wrapping_add(c.wrapping_mul(d));
+        let f = a + b + c + d;
+        let g = e ^ f;
+        let h = (a & c) + (b | d);
+        let v = if i % 2 == 0 { e.wrapping_add(h) } else { f.wrapping_add(g) };
+        let want = v.wrapping_add(a).wrapping_add(e).wrapping_sub(g);
+        assert_eq!(out_on[i as usize], want, "i={i}");
+    }
+    // Every lock slot was CAS'd exactly once from 0: the winner is some
+    // thread id+1 congruent to the slot (mod 4).
+    for (j, &l) in lock_on.iter().enumerate() {
+        assert!(l != 0, "slot {j} never won a CAS");
+        assert_eq!((l - 1) as usize % 4, j, "slot {j} holds {l}");
+    }
+}

@@ -22,6 +22,7 @@ fn mk(op: Op, rd: u8, rs1: u8, rs2: u8, imm: i32) -> MachInst {
 fn image(code: Vec<MachInst>) -> ProgramImage {
     let words = code.iter().map(|i| i.encode()).collect();
     let pc_loc = vec![None; code.len()];
+    let pc_spill = vec![false; code.len()];
     ProgramImage {
         code,
         words,
@@ -35,6 +36,7 @@ fn image(code: Vec<MachInst>) -> ProgramImage {
         func_entries: HashMap::new(),
         pc_loc,
         crt0_len: 0,
+        pc_spill,
         target: "vortex".into(),
         addr_map: AddressMap::vortex(),
     }
