@@ -1,0 +1,12 @@
+// BUG: the barrier sits under a thread-id-dependent branch, so only half
+// the workgroup reaches it — deadlock on hardware.
+// volt-check: barrier.divergence
+kernel void barrier_divergent_if(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    if (l < 32) {
+        barrier(0);
+    }
+    out[l] = buf[l];
+}

@@ -1,0 +1,13 @@
+// BUG: the loop trip count is the thread id, so different lanes execute
+// the in-loop barrier a different number of times and desynchronize.
+// volt-check: barrier.divergent-loop
+kernel void barrier_divergent_loop(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    for (int i = 0; i < l; i++) {
+        barrier(0);
+        buf[l] += 1.0f;
+    }
+    out[l] = buf[l];
+}

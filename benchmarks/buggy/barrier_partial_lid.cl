@@ -1,0 +1,14 @@
+// BUG: the upper half of the workgroup returns early, so the barrier
+// only ever sees the lower half.
+// volt-check: barrier.divergence
+kernel void barrier_partial_lid(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    if (l >= 32) {
+        out[l] = 0.0f;
+        return;
+    }
+    barrier(0);
+    out[l] = buf[l];
+}

@@ -1,0 +1,10 @@
+// BUG: strided read walks off the end of the tile — threads 32..63 read
+// buf[64..126] of a 64-element array.
+// volt-check: bounds.local-oob
+kernel void oob_read_stride(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    barrier(0);
+    out[l] = buf[l * 2];
+}

@@ -1,0 +1,10 @@
+// BUG: classic off-by-one halo indexing — thread 63 touches buf[64] of a
+// 64-element array.
+// volt-check: bounds.local-oob
+kernel void oob_write_offby1(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l + 1] = in[l];
+    barrier(0);
+    out[l] = buf[l + 1];
+}

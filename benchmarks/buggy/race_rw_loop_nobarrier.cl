@@ -1,0 +1,18 @@
+// BUG: a Hillis-Steele scan missing the second barrier of each round:
+// the update write of round i races the gather read of round i+1.
+// volt-check: race.read-write
+kernel void race_rw_loop_nobarrier(global uint* in, global uint* out) {
+    local uint buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    barrier(0);
+    for (int off = 1; off < 64; off = off * 2) {
+        uint v = 0;
+        if (l >= off) {
+            v = buf[l - off];
+        }
+        barrier(0);
+        buf[l] = buf[l] + v;
+    }
+    out[l] = buf[l];
+}

@@ -1,0 +1,9 @@
+// BUG: the mirrored read happens in the same barrier phase as the
+// writes — thread l reads the word thread 63-l is writing.
+// volt-check: race.read-write
+kernel void race_rw_missing_barrier(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    out[l] = buf[63 - l];
+}

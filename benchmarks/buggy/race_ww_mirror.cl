@@ -1,0 +1,11 @@
+// BUG: thread l writes buf[l] and buf[63-l] in the same phase, so
+// threads l and 63-l both write each word — write-write race.
+// volt-check: race.write-write
+kernel void race_ww_mirror(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    buf[63 - l] = in[l];
+    barrier(0);
+    out[l] = buf[l];
+}

@@ -1,0 +1,10 @@
+// BUG: every thread of the workgroup writes word 0 of the tile in the
+// same barrier phase — a classic write-write race.
+// volt-check: race.write-write
+kernel void race_ww_same_word(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[0] = in[l];
+    barrier(0);
+    out[l] = buf[0];
+}

@@ -1,0 +1,13 @@
+// BUG: only the lower half of the workgroup initializes the tile, but
+// every thread reads it back — threads 32..63 read uninitialized local
+// memory (which is not zeroed on real hardware).
+// volt-check: uninit.local-read
+kernel void uninit_read(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    if (l < 32) {
+        buf[l] = in[l];
+    }
+    barrier(0);
+    out[l] = buf[l];
+}

@@ -1,0 +1,143 @@
+//! Graph-generic iterative dominators (Cooper–Harvey–Kennedy).
+//!
+//! The IR has its own [`crate::ir::DomTree`] keyed on [`crate::ir::BlockId`];
+//! this module is the *shared* computation for every other block graph in
+//! the stack — MIR in [`crate::backend::combine`], and anything else shaped
+//! as `usize` nodes with a successor closure. One implementation, one set
+//! of edge-case fixes (unreachable blocks, self-loop entries).
+
+/// Immediate dominators plus dominator-tree depth for a graph of `n`
+/// nodes given by a successor closure. `idom[entry]` is `None` (the
+/// entry has no strict dominator) and unreachable nodes get `None` with
+/// depth 0. Successors `>= n` are ignored (MIR terminators may carry
+/// out-of-range sentinel targets).
+pub fn dominators(
+    n: usize,
+    entry: usize,
+    mut succs_of: impl FnMut(usize) -> Vec<usize>,
+) -> (Vec<Option<usize>>, Vec<u32>) {
+    if n == 0 {
+        return (vec![], vec![]);
+    }
+    let succs: Vec<Vec<usize>> = (0..n).map(&mut succs_of).collect();
+    let mut preds: Vec<Vec<usize>> = vec![vec![]; n];
+    for (b, ss) in succs.iter().enumerate() {
+        for &s in ss {
+            if s < n {
+                preds[s].push(b);
+            }
+        }
+    }
+    // Reverse post-order over reachable nodes (iterative DFS).
+    let mut order: Vec<usize> = vec![];
+    let mut seen = vec![false; n];
+    let mut stack: Vec<(usize, usize)> = vec![(entry, 0)];
+    seen[entry] = true;
+    while let Some(frame) = stack.last_mut() {
+        let (b, k) = *frame;
+        if k < succs[b].len() {
+            frame.1 += 1;
+            let s = succs[b][k];
+            if s < n && !seen[s] {
+                seen[s] = true;
+                stack.push((s, 0));
+            }
+        } else {
+            order.push(b);
+            stack.pop();
+        }
+    }
+    order.reverse();
+    let mut rpo_num = vec![usize::MAX; n];
+    for (k, &b) in order.iter().enumerate() {
+        rpo_num[b] = k;
+    }
+    let mut idom: Vec<Option<usize>> = vec![None; n];
+    idom[entry] = Some(entry);
+    fn intersect(idom: &[Option<usize>], rpo_num: &[usize], mut a: usize, mut b: usize) -> usize {
+        while a != b {
+            while rpo_num[a] > rpo_num[b] {
+                a = idom[a].unwrap();
+            }
+            while rpo_num[b] > rpo_num[a] {
+                b = idom[b].unwrap();
+            }
+        }
+        a
+    }
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in order.iter().skip(1) {
+            let mut new: Option<usize> = None;
+            for &p in &preds[b] {
+                if idom[p].is_none() {
+                    continue;
+                }
+                new = Some(match new {
+                    None => p,
+                    Some(x) => intersect(&idom, &rpo_num, x, p),
+                });
+            }
+            if new.is_some() && new != idom[b] {
+                idom[b] = new;
+                changed = true;
+            }
+        }
+    }
+    idom[entry] = None; // entry has no strict dominator
+    let mut depth = vec![0u32; n];
+    for &b in &order {
+        if let Some(p) = idom[b] {
+            depth[b] = depth[p] + 1;
+        }
+    }
+    (idom, depth)
+}
+
+/// Strict dominance via the idom chain (convenience over the
+/// [`dominators`] result; O(tree height) per query).
+pub fn strictly_dominates(idom: &[Option<usize>], a: usize, b: usize) -> bool {
+    let mut x = b;
+    while let Some(p) = idom[x] {
+        if p == a {
+            return true;
+        }
+        x = p;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diamond() {
+        // 0 -> {1, 2} -> 3
+        let succs = [vec![1, 2], vec![3], vec![3], vec![]];
+        let (idom, depth) = dominators(4, 0, |b| succs[b].clone());
+        assert_eq!(idom, vec![None, Some(0), Some(0), Some(0)]);
+        assert_eq!(depth, vec![0, 1, 1, 1]);
+        assert!(strictly_dominates(&idom, 0, 3));
+        assert!(!strictly_dominates(&idom, 1, 3));
+        assert!(!strictly_dominates(&idom, 3, 3));
+    }
+
+    #[test]
+    fn loop_with_unreachable_and_bogus_edge() {
+        // 0 -> 1 -> 2 -> 1 (backedge), node 3 unreachable, and node 2
+        // also lists an out-of-range successor (ignored).
+        let succs = [vec![1], vec![2], vec![1, 9], vec![0]];
+        let (idom, depth) = dominators(4, 0, |b| succs[b].clone());
+        assert_eq!(idom, vec![None, Some(0), Some(1), None]);
+        assert_eq!(depth, vec![0, 1, 2, 0]);
+        assert!(strictly_dominates(&idom, 1, 2));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let (idom, depth) = dominators(0, 0, |_| vec![]);
+        assert!(idom.is_empty() && depth.is_empty());
+    }
+}

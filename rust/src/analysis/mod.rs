@@ -10,6 +10,7 @@
 
 pub mod callgraph;
 pub mod func_args;
+pub mod graphdom;
 pub mod tti;
 pub mod uniformity;
 

@@ -671,6 +671,119 @@ mod tests {
         assert!(no_ann.val_div(l));
     }
 
+    /// A uniform branch guarding a divergent body stays uniform: only
+    /// the condition decides branch divergence, and the merge phi turns
+    /// divergent through plain data dependence, not sync dependence.
+    #[test]
+    fn uniform_branch_divergent_body() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::Void,
+        );
+        let entry = f.entry;
+        let t = f.add_block("t");
+        let j = f.add_block("j");
+        let mut b = Builder::at(&mut f, entry);
+        let c = b.icmp(ICmp::Slt, Val::Arg(0), Val::ci(10));
+        b.cond_br(c, t, j);
+        b.set_block(t);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let dv = b.add(lane, Val::ci(1));
+        b.br(j);
+        b.set_block(j);
+        let p = b.phi(Type::I32, vec![(entry, Val::ci(0)), (t, dv)]);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(!u.val_div(c));
+        assert!(u.branch_uniform(entry), "uniform cond keeps the branch uniform");
+        assert!(!u.div_branch_blocks.contains(&entry));
+        assert!(u.val_div(dv), "body value is still divergent");
+        assert!(u.val_div(p), "divergent incoming flows through the merge phi");
+    }
+
+    /// A divergent branch fully contained in a loop body does not poison
+    /// the loop: with a uniform exit condition the induction phi, its
+    /// escaping value, and the header branch all stay uniform (the
+    /// divergence reconverges at the latch, so there is no temporal
+    /// divergence).
+    #[test]
+    fn divergent_body_uniform_exit_loop() {
+        let mut m = Module::new("t");
+        let mut f = Function::new(
+            "k",
+            vec![Param {
+                name: "n".into(),
+                ty: Type::I32,
+                uniform: true,
+            }],
+            Type::I32,
+        );
+        let entry = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let odd = f.add_block("odd");
+        let latch = f.add_block("latch");
+        let exit = f.add_block("exit");
+        let mut b = Builder::at(&mut f, entry);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        b.br(h);
+        b.set_block(h);
+        let i = b.phi(Type::I32, vec![(entry, Val::ci(0))]);
+        let c = b.icmp(ICmp::Slt, i, Val::Arg(0));
+        b.cond_br(c, body, exit);
+        b.set_block(body);
+        let lc = b.icmp(ICmp::Eq, lane, Val::ci(0));
+        b.cond_br(lc, odd, latch);
+        b.set_block(odd);
+        b.br(latch);
+        b.set_block(latch);
+        let i2 = b.add(i, Val::ci(1));
+        b.br(h);
+        b.set_block(exit);
+        b.ret(Some(i2));
+        if let Val::Inst(ip) = i {
+            if let InstKind::Phi { incs } = &mut f.inst_mut(ip).kind {
+                incs.push((latch, i2));
+            }
+        }
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(u.val_div(lc), "lane-dependent inner branch is divergent");
+        assert!(!u.branch_uniform(body));
+        assert!(!u.val_div(i), "induction phi stays uniform");
+        assert!(!u.val_div(i2), "escaping value stays uniform");
+        assert!(u.branch_uniform(h), "uniform exit keeps the loop uniform");
+    }
+
+    /// A select over a lane-dependent condition is divergent even with
+    /// constant arms — exactly what the barrier checks must see when a
+    /// select feeds a barrier's participation operand — while a select
+    /// over a uniform condition stays uniform.
+    #[test]
+    fn select_feeding_barrier_condition() {
+        let mut m = Module::new("t");
+        let mut f = Function::new("k", vec![], Type::Void);
+        let mut b = Builder::new(&mut f);
+        let lane = b.intr(Intr::Csr(Csr::LaneId), vec![]);
+        let lc = b.icmp(ICmp::Eq, lane, Val::ci(0));
+        let s = b.select(lc, Val::ci(1), Val::ci(2));
+        let uc = b.icmp(ICmp::Eq, Val::ci(1), Val::ci(1));
+        let s2 = b.select(uc, Val::ci(1), Val::ci(2));
+        b.intr(Intr::Barrier, vec![Val::ci(0), s]);
+        b.ret(None);
+        let fid = m.add_func(f);
+        let u = analyze(&m, fid, &opts_all(), &VortexTti);
+        assert!(u.val_div(s), "select over a divergent condition is divergent");
+        assert!(!u.val_div(s2), "select over a uniform condition is uniform");
+    }
+
     /// Loads from the kernel argument block are uniform under Uni-HW only.
     #[test]
     fn arg_block_loads() {

@@ -40,6 +40,7 @@
 
 use super::isa::Op;
 use super::mir::{MFunction, MReg, NONE};
+use crate::analysis::graphdom;
 use std::collections::HashMap;
 
 /// What the pass did (per function).
@@ -302,24 +303,14 @@ fn dedup_li(f: &mut MFunction, rep: &mut CombineReport) {
     if !keys.windows(2).any(|w| w[0] == w[1]) {
         return; // no duplicate (imm, class) anywhere
     }
-    let (idom, depth) = dominators(f);
+    let (idom, depth) = graphdom::dominators(nb, 0, |b| f.blocks[b].succs());
     let reach = reachability(f);
     let widening: Vec<bool> = f
         .blocks
         .iter()
         .map(|b| b.insts.iter().any(|i| widens_mask(i.op)))
         .collect();
-    // Strict dominance via the idom chain.
-    let dominates = |a: usize, b: usize| -> bool {
-        let mut x = b;
-        while let Some(p) = idom[x] {
-            if p == a {
-                return true;
-            }
-            x = p;
-        }
-        false
-    };
+    let dominates = |a: usize, b: usize| graphdom::strictly_dominates(&idom, a, b);
     // No widening block W may sit on any D -> U path (conservatively:
     // W reachable from D and U reachable from W; D and U themselves
     // count, so a widening op before the def or after the use also
@@ -376,88 +367,6 @@ fn dedup_li(f: &mut MFunction, rep: &mut CombineReport) {
             // multi-def (mv + the op) and can never be in `fwd`.
         }
     }
-}
-
-/// Iterative dominators over the MIR block graph (entry = 0). Returns
-/// the immediate dominator per block (`None` for the entry and
-/// unreachable blocks) plus the dominator-tree depth (0 for entry and
-/// unreachable blocks).
-fn dominators(f: &MFunction) -> (Vec<Option<usize>>, Vec<u32>) {
-    let nb = f.blocks.len();
-    let succs: Vec<Vec<usize>> = f.blocks.iter().map(|b| b.succs()).collect();
-    let mut preds: Vec<Vec<usize>> = vec![vec![]; nb];
-    for (bi, ss) in succs.iter().enumerate() {
-        for &s in ss {
-            if s < nb {
-                preds[s].push(bi);
-            }
-        }
-    }
-    // Reverse post-order over reachable blocks.
-    let mut order: Vec<usize> = vec![];
-    let mut seen = vec![false; nb];
-    let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
-    seen[0] = true;
-    while let Some(frame) = stack.last_mut() {
-        let (b, k) = *frame;
-        if k < succs[b].len() {
-            frame.1 += 1;
-            let s = succs[b][k];
-            if s < nb && !seen[s] {
-                seen[s] = true;
-                stack.push((s, 0));
-            }
-        } else {
-            order.push(b);
-            stack.pop();
-        }
-    }
-    order.reverse();
-    let mut rpo_num = vec![usize::MAX; nb];
-    for (k, &b) in order.iter().enumerate() {
-        rpo_num[b] = k;
-    }
-    let mut idom: Vec<Option<usize>> = vec![None; nb];
-    idom[0] = Some(0);
-    fn intersect(idom: &[Option<usize>], rpo_num: &[usize], mut a: usize, mut b: usize) -> usize {
-        while a != b {
-            while rpo_num[a] > rpo_num[b] {
-                a = idom[a].unwrap();
-            }
-            while rpo_num[b] > rpo_num[a] {
-                b = idom[b].unwrap();
-            }
-        }
-        a
-    }
-    let mut changed = true;
-    while changed {
-        changed = false;
-        for &b in order.iter().skip(1) {
-            let mut new: Option<usize> = None;
-            for &p in &preds[b] {
-                if idom[p].is_none() {
-                    continue;
-                }
-                new = Some(match new {
-                    None => p,
-                    Some(n) => intersect(&idom, &rpo_num, n, p),
-                });
-            }
-            if new.is_some() && new != idom[b] {
-                idom[b] = new;
-                changed = true;
-            }
-        }
-    }
-    idom[0] = None; // entry has no strict dominator
-    let mut depth = vec![0u32; nb];
-    for &b in &order {
-        if let Some(p) = idom[b] {
-            depth[b] = depth[p] + 1;
-        }
-    }
-    (idom, depth)
 }
 
 /// Block-level reachability closure (`reach[a][b]`: b reachable from a,

@@ -1,0 +1,372 @@
+//! Affine normalization of values into `Σ cᵈ·tidᵈ + Σ cₛ·sym + k` form —
+//! the substrate of the GPUVerify-style two-thread race reduction and the
+//! static bounds pass. `tid` terms are the three local work-item id
+//! dimensions (the only per-thread quantities of interest at workgroup
+//! scope); `sym` terms are workgroup-uniform unknowns (kernel arguments,
+//! uniform instruction results such as loop counters); everything else is
+//! non-affine and falls back to conservative handling.
+
+use crate::analysis::uniformity::Uniformity;
+use crate::ir::{AddrSpace, BinOp, Function, GlobalId, InstId, InstKind, Intr, Module, Val, WorkItem};
+use std::collections::HashMap;
+
+/// A workgroup-uniform symbolic unknown.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub enum Sym {
+    /// A uniform instruction result (loop counter, computed stride, the
+    /// uniform group-base residual of a global id, …).
+    Inst(InstId),
+    /// A kernel argument (uniform across the workgroup by dispatch).
+    Arg(u32),
+}
+
+/// A linear expression over the three local-id dims and uniform symbols.
+/// Coefficients are i128 so byte-scaled 32-bit arithmetic can never
+/// overflow during normalization.
+#[derive(Clone, PartialEq, Eq, Debug, Default)]
+pub struct LinExpr {
+    /// Coefficient of the local id in dims x/y/z.
+    pub tid: [i128; 3],
+    /// Uniform symbolic terms, sorted by key, coefficients nonzero.
+    pub syms: Vec<(Sym, i128)>,
+    /// Constant term.
+    pub k: i128,
+}
+
+impl LinExpr {
+    pub fn konst(k: i128) -> LinExpr {
+        LinExpr {
+            k,
+            ..Default::default()
+        }
+    }
+
+    pub fn sym(s: Sym) -> LinExpr {
+        LinExpr {
+            syms: vec![(s, 1)],
+            ..Default::default()
+        }
+    }
+
+    pub fn tid_dim(d: usize) -> LinExpr {
+        let mut e = LinExpr::default();
+        e.tid[d] = 1;
+        e
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.tid == [0, 0, 0] && self.syms.is_empty()
+    }
+
+    /// No symbolic unknowns — only tid terms and a constant (the shape the
+    /// interval bounds pass can fully evaluate).
+    pub fn sym_free(&self) -> bool {
+        self.syms.is_empty()
+    }
+
+    pub fn coeff_of(&self, s: Sym) -> i128 {
+        self.syms
+            .iter()
+            .find(|(t, _)| *t == s)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    fn add_sym(&mut self, s: Sym, c: i128) {
+        match self.syms.binary_search_by(|(t, _)| t.cmp(&s)) {
+            Ok(i) => {
+                self.syms[i].1 += c;
+                if self.syms[i].1 == 0 {
+                    self.syms.remove(i);
+                }
+            }
+            Err(i) => {
+                if c != 0 {
+                    self.syms.insert(i, (s, c));
+                }
+            }
+        }
+    }
+
+    pub fn add(&self, o: &LinExpr) -> LinExpr {
+        let mut r = self.clone();
+        for d in 0..3 {
+            r.tid[d] += o.tid[d];
+        }
+        for &(s, c) in &o.syms {
+            r.add_sym(s, c);
+        }
+        r.k += o.k;
+        r
+    }
+
+    pub fn scale(&self, c: i128) -> LinExpr {
+        if c == 0 {
+            return LinExpr::default();
+        }
+        let mut r = self.clone();
+        for d in 0..3 {
+            r.tid[d] *= c;
+        }
+        for t in r.syms.iter_mut() {
+            t.1 *= c;
+        }
+        r.k *= c;
+        r
+    }
+
+    pub fn sub(&self, o: &LinExpr) -> LinExpr {
+        self.add(&o.scale(-1))
+    }
+}
+
+/// Normalizer: maps IR values to linear expressions, memoized per
+/// function. Uniformity decides which instruction results may stand as
+/// opaque uniform symbols.
+pub struct Normalizer<'a> {
+    pub f: &'a Function,
+    pub u: &'a Uniformity,
+    memo: HashMap<InstId, Option<LinExpr>>,
+}
+
+impl<'a> Normalizer<'a> {
+    pub fn new(f: &'a Function, u: &'a Uniformity) -> Normalizer<'a> {
+        Normalizer {
+            f,
+            u,
+            memo: HashMap::new(),
+        }
+    }
+
+    /// Linear form of `v`, or `None` if the value is not affine in
+    /// (tid, uniform symbols).
+    pub fn lin(&mut self, v: Val) -> Option<LinExpr> {
+        match v {
+            Val::I(k, _) => Some(LinExpr::konst(k as i128)),
+            Val::Arg(a) => Some(LinExpr::sym(Sym::Arg(a))),
+            Val::F(_) | Val::G(_) => None,
+            Val::Inst(i) => self.lin_inst(i),
+        }
+    }
+
+    fn lin_inst(&mut self, i: InstId) -> Option<LinExpr> {
+        if let Some(m) = self.memo.get(&i) {
+            return m.clone();
+        }
+        // Break cycles (divergent phis through themselves) conservatively.
+        self.memo.insert(i, None);
+        let r = self.lin_inst_uncached(i);
+        self.memo.insert(i, r.clone());
+        r
+    }
+
+    fn lin_inst_uncached(&mut self, i: InstId) -> Option<LinExpr> {
+        let inst = self.f.inst(i);
+        if let InstKind::Intr { intr, args } = &inst.kind {
+            match intr {
+                Intr::WorkItem(WorkItem::LocalId) => {
+                    let d = args.first().and_then(|a| a.as_int())?;
+                    if (0..3).contains(&d) {
+                        return Some(LinExpr::tid_dim(d as usize));
+                    }
+                    return None;
+                }
+                Intr::WorkItem(WorkItem::GlobalId) => {
+                    // global = group·local_size + local: the group base is
+                    // workgroup-uniform, so model it as tidᵈ plus an opaque
+                    // uniform residual keyed by this instruction.
+                    let d = args.first().and_then(|a| a.as_int())?;
+                    if (0..3).contains(&d) {
+                        let mut e = LinExpr::tid_dim(d as usize);
+                        e.add_sym(Sym::Inst(i), 1);
+                        return Some(e);
+                    }
+                    return None;
+                }
+                _ => {}
+            }
+        }
+        // Any other uniform value is an opaque uniform symbol.
+        if !self.u.inst_div[i.idx()] {
+            return Some(LinExpr::sym(Sym::Inst(i)));
+        }
+        match &inst.kind {
+            InstKind::Bin { op, a, b } => {
+                let (a, b) = (*a, *b);
+                match op {
+                    BinOp::Add => Some(self.lin(a)?.add(&self.lin(b)?)),
+                    BinOp::Sub => Some(self.lin(a)?.sub(&self.lin(b)?)),
+                    BinOp::Mul => {
+                        let la = self.lin(a)?;
+                        let lb = self.lin(b)?;
+                        if la.is_const() {
+                            Some(lb.scale(la.k))
+                        } else if lb.is_const() {
+                            Some(la.scale(lb.k))
+                        } else {
+                            None
+                        }
+                    }
+                    BinOp::Shl => {
+                        let lb = self.lin(b)?;
+                        if lb.is_const() && (0..31).contains(&lb.k) {
+                            Some(self.lin(a)?.scale(1i128 << lb.k))
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Resolve a pointer to `(local global, byte-offset linear form)`.
+    /// Returns `Some((g, None))` when the pointer certainly targets local
+    /// global `g` but the offset is not affine.
+    pub fn local_addr(&mut self, m: &Module, mut ptr: Val) -> Option<(GlobalId, Option<LinExpr>)> {
+        let mut off = LinExpr::konst(0);
+        let mut affine = true;
+        loop {
+            match ptr {
+                Val::G(g) => {
+                    if m.globals[g.idx()].space != AddrSpace::Local {
+                        return None;
+                    }
+                    return Some((g, if affine { Some(off) } else { None }));
+                }
+                Val::Inst(i) => match self.f.inst(i).kind.clone() {
+                    InstKind::Gep {
+                        base,
+                        index,
+                        scale,
+                        disp,
+                    } => {
+                        match self.lin(index) {
+                            Some(l) => {
+                                off = off.add(&l.scale(scale as i128));
+                                off.k += disp as i128;
+                            }
+                            None => affine = false,
+                        }
+                        ptr = base;
+                    }
+                    _ => return None,
+                },
+                _ => return None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::uniformity;
+    use crate::analysis::UniformityOptions;
+    use crate::check::WorkgroupTti;
+    use crate::ir::{Builder, Function, Global, Intr, Module, Type};
+
+    fn analyze(m: &Module) -> Uniformity {
+        uniformity::analyze(
+            m,
+            crate::ir::FuncId(0),
+            &UniformityOptions {
+                uni_hw: true,
+                uni_ann: true,
+                uni_func: false,
+            },
+            &WorkgroupTti,
+        )
+    }
+
+    #[test]
+    fn local_id_times_stride_plus_disp() {
+        let mut m = Module::new("t");
+        let g = m.add_global(Global {
+            name: "k.buf".into(),
+            space: AddrSpace::Local,
+            size: 256,
+            align: 4,
+            init: None,
+        });
+        let mut f = Function::new("k", vec![], Type::Void);
+        let gep;
+        {
+            let mut b = Builder::new(&mut f);
+            let l = b.intr(Intr::WorkItem(WorkItem::LocalId), vec![Val::ci(0)]);
+            let idx = b.add(l, Val::ci(3));
+            gep = b.gep(Val::G(g), idx, 4);
+            b.ret(None);
+        }
+        let fid = m.add_func(f);
+        let u = analyze(&m);
+        let f = m.func(fid);
+        let mut n = Normalizer::new(f, &u);
+        let (gg, off) = n.local_addr(&m, gep).unwrap();
+        assert_eq!(gg, g);
+        let off = off.unwrap();
+        assert_eq!(off.tid, [4, 0, 0]);
+        assert_eq!(off.k, 12);
+        assert!(off.sym_free());
+    }
+
+    #[test]
+    fn uniform_value_becomes_symbol() {
+        let mut m = Module::new("t");
+        let g = m.add_global(Global {
+            name: "k.buf".into(),
+            space: AddrSpace::Local,
+            size: 256,
+            align: 4,
+            init: None,
+        });
+        let mut f = Function::new("k", vec![], Type::Void);
+        let (gep, s);
+        {
+            let mut b = Builder::new(&mut f);
+            let l = b.intr(Intr::WorkItem(WorkItem::LocalId), vec![Val::ci(0)]);
+            s = b.intr(Intr::WorkItem(WorkItem::LocalSize), vec![Val::ci(0)]);
+            let idx = b.add(l, s);
+            gep = b.gep(Val::G(g), idx, 4);
+            b.ret(None);
+        }
+        let fid = m.add_func(f);
+        let u = analyze(&m);
+        let f = m.func(fid);
+        let mut n = Normalizer::new(f, &u);
+        let off = n.local_addr(&m, gep).unwrap().1.unwrap();
+        assert_eq!(off.tid, [4, 0, 0]);
+        assert_eq!(off.syms.len(), 1);
+        assert_eq!(off.syms[0].1, 4);
+    }
+
+    #[test]
+    fn divergent_product_is_not_affine() {
+        let mut m = Module::new("t");
+        let g = m.add_global(Global {
+            name: "k.buf".into(),
+            space: AddrSpace::Local,
+            size: 256,
+            align: 4,
+            init: None,
+        });
+        let mut f = Function::new("k", vec![], Type::Void);
+        let gep;
+        {
+            let mut b = Builder::new(&mut f);
+            let l = b.intr(Intr::WorkItem(WorkItem::LocalId), vec![Val::ci(0)]);
+            let idx = b.mul(l, l); // tid² — not linear
+            gep = b.gep(Val::G(g), idx, 4);
+            b.ret(None);
+        }
+        let fid = m.add_func(f);
+        let u = analyze(&m);
+        let f = m.func(fid);
+        let mut n = Normalizer::new(f, &u);
+        let (gg, off) = n.local_addr(&m, gep).unwrap();
+        assert_eq!(gg, g);
+        assert!(off.is_none());
+    }
+}

@@ -1,0 +1,91 @@
+//! Barrier-divergence verification: a workgroup barrier that is
+//! (transitively) control-dependent on a divergent branch may be reached
+//! by only part of the workgroup — on Vortex hardware that is a deadlock,
+//! not a diagnostic. Walks the control-dependence graph from every
+//! `Intr::Barrier` and reports the nearest divergent controlling branch;
+//! barriers controlled by a divergent *loop* branch (divergent trip
+//! count) get their own check id.
+
+use super::diag::{CheckId, Diag, Severity};
+use crate::analysis::uniformity::Uniformity;
+use crate::ir::cdg::Cdg;
+use crate::ir::dom::PostDomTree;
+use crate::ir::loops::LoopInfo;
+use crate::ir::{BlockId, Function, InstKind, Intr};
+use std::collections::HashSet;
+
+pub fn check(f: &Function, u: &Uniformity, kernel: &str, diags: &mut Vec<Diag>) {
+    let pdom = PostDomTree::build(f);
+    let cdg = Cdg::build_with(f, &pdom);
+    let li = LoopInfo::build(f);
+    for b in f.rpo() {
+        for &id in &f.blocks[b.idx()].insts {
+            if !matches!(
+                f.inst(id).kind,
+                InstKind::Intr {
+                    intr: Intr::Barrier,
+                    ..
+                }
+            ) {
+                continue;
+            }
+            // BFS over control-dependence edges: collect every divergent
+            // branch that (transitively) decides whether this barrier runs.
+            let mut seen: HashSet<BlockId> = HashSet::new();
+            let mut work: Vec<BlockId> = cdg.deps[b.idx()].clone();
+            let mut divergent: Vec<BlockId> = vec![];
+            while let Some(d) = work.pop() {
+                if !seen.insert(d) {
+                    continue;
+                }
+                if !u.branch_uniform(d) {
+                    divergent.push(d);
+                }
+                work.extend(cdg.deps[d.idx()].iter().copied());
+            }
+            if divergent.is_empty() {
+                continue;
+            }
+            // Prefer the loop classification: a divergent exiting/latch
+            // branch of a loop that contains the barrier means lanes run
+            // different trip counts against the same barrier.
+            let loop_branch = divergent.iter().copied().find(|&d| {
+                li.is_loop_branch(f, d)
+                    && li
+                        .innermost(d)
+                        .map(|l| l.blocks.contains(&b))
+                        .unwrap_or(false)
+            });
+            let (check, witness) = match loop_branch {
+                Some(d) => (CheckId::BarrierDivergentLoop, d),
+                None => (CheckId::BarrierDivergence, divergent[0]),
+            };
+            let branch_loc = f.inst(f.term(witness)).loc;
+            let msg = match check {
+                CheckId::BarrierDivergentLoop => {
+                    "barrier inside a loop with a divergent trip count: lanes \
+                     exit at different iterations and desynchronize at this \
+                     barrier"
+                        .to_string()
+                }
+                _ => "barrier is control-dependent on a divergent branch: \
+                      only part of the workgroup may reach it (deadlock on \
+                      hardware)"
+                    .to_string(),
+            };
+            let mut notes = vec![];
+            match branch_loc {
+                Some(l) => notes.push(format!("divergent branch at line {}", l.line)),
+                None => notes.push("divergent branch in compiler-synthesized code".to_string()),
+            }
+            diags.push(Diag {
+                id: check,
+                severity: Severity::Warning,
+                kernel: kernel.to_string(),
+                loc: f.inst(id).loc,
+                msg,
+                notes,
+            });
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Static bounds and uninitialized-read checking over statically-sized
+//! local arrays, by interval evaluation of the same normalized address
+//! forms the race detector uses.
+//!
+//! * **bounds**: an access whose address is affine with *no* symbolic
+//!   unknowns (`Σ c·tid + k` only) gets its byte interval evaluated over
+//!   the declared workgroup size, tightened by single-dimension guards
+//!   (`l == 63`, `l < 32`, …); intervals escaping `[0, size)` are
+//!   reported. Symbolic addresses are left to the race detector and the
+//!   runtime sanitizer — reporting "maybe" bounds findings on every
+//!   `buf[l + off]` would drown real ones.
+//! * **uninit**: array-granularity forward must-write dataflow; a read of
+//!   a local array on some path where nothing has written the array yet
+//!   is reported.
+
+use super::affine::{LinExpr, Normalizer};
+use super::diag::{CheckId, Diag, Severity};
+use super::race::{block_guards, collect_accesses, Access, Segments};
+use super::CheckParams;
+use crate::analysis::uniformity::Uniformity;
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopInfo;
+use crate::ir::{AddrSpace, BlockId, Function, GlobalId, Module};
+use std::collections::{HashMap, HashSet};
+
+/// Per-dimension inclusive tid range after guard tightening.
+fn tid_ranges(ls: [u64; 3], guards: &[LinExpr]) -> Option<[(i128, i128); 3]> {
+    let mut r = [(0i128, 0i128); 3];
+    for d in 0..3 {
+        r[d] = (0, ls[d] as i128 - 1);
+    }
+    for g in guards {
+        // Use only facts over exactly one tid dim and no symbols:
+        // c·t + k ≥ 0.
+        if !g.sym_free() {
+            continue;
+        }
+        let dims: Vec<usize> = (0..3).filter(|&d| g.tid[d] != 0).collect();
+        if dims.len() != 1 {
+            continue;
+        }
+        let d = dims[0];
+        let c = g.tid[d];
+        if c > 0 {
+            // t ≥ ⌈−k/c⌉
+            let lo = (-g.k).div_euclid(c) + if (-g.k).rem_euclid(c) != 0 { 1 } else { 0 };
+            r[d].0 = r[d].0.max(lo);
+        } else {
+            // t ≤ ⌊k/−c⌋
+            let hi = g.k.div_euclid(-c);
+            r[d].1 = r[d].1.min(hi);
+        }
+    }
+    for d in 0..3 {
+        if r[d].0 > r[d].1 {
+            return None; // contradictory guards: path is dead
+        }
+    }
+    Some(r)
+}
+
+fn interval(off: &LinExpr, r: &[(i128, i128); 3]) -> (i128, i128) {
+    let mut lo = off.k;
+    let mut hi = off.k;
+    for d in 0..3 {
+        let c = off.tid[d];
+        if c >= 0 {
+            lo += c * r[d].0;
+            hi += c * r[d].1;
+        } else {
+            lo += c * r[d].1;
+            hi += c * r[d].0;
+        }
+    }
+    (lo, hi)
+}
+
+pub fn check(
+    m: &Module,
+    f: &Function,
+    u: &Uniformity,
+    params: &CheckParams,
+    kernel: &str,
+    diags: &mut Vec<Diag>,
+) {
+    let dom = DomTree::build(f);
+    let li = LoopInfo::build(f);
+    let segs = Segments::build(f, &dom);
+    let mut norm = Normalizer::new(f, u);
+    let accesses = collect_accesses(m, f, &mut norm, &segs);
+
+    // ---- bounds ----
+    let mut guard_cache: HashMap<BlockId, Vec<LinExpr>> = HashMap::new();
+    let mut reported: HashSet<(GlobalId, u32)> = HashSet::new();
+    for a in &accesses {
+        let (g, off) = match (a.g, &a.off) {
+            (Some(g), Some(off)) if off.sym_free() => (g, off),
+            _ => continue,
+        };
+        let guards = guard_cache
+            .entry(a.block)
+            .or_insert_with(|| block_guards(&mut norm, &dom, &li, a.block))
+            .clone();
+        let ranges = match tid_ranges(params.local_size, &guards) {
+            Some(r) => r,
+            None => continue,
+        };
+        let size = m.globals[g.idx()].size as i128;
+        let (lo, hi) = interval(off, &ranges);
+        if lo >= 0 && hi + 4 <= size {
+            continue;
+        }
+        let line = f.inst(a.inst).loc.map(|l| l.line).unwrap_or(0);
+        if !reported.insert((g, line)) {
+            continue;
+        }
+        diags.push(Diag {
+            id: CheckId::BoundsLocalOob,
+            severity: Severity::Warning,
+            kernel: kernel.to_string(),
+            loc: f.inst(a.inst).loc,
+            msg: format!(
+                "{} of {} reaches byte offsets {}..{} outside the array (0..{}) \
+                 for a {}x{}x{} workgroup",
+                if a.write { "write" } else { "read" },
+                name_of(m, g),
+                lo,
+                hi + 3,
+                size,
+                params.local_size[0],
+                params.local_size[1],
+                params.local_size[2],
+            ),
+            notes: vec![],
+        });
+    }
+
+    // ---- uninit: array-granularity must-write dataflow ----
+    let locals: Vec<GlobalId> = (0..m.globals.len() as u32)
+        .map(GlobalId)
+        .filter(|g| m.globals[g.idx()].space == AddrSpace::Local)
+        .collect();
+    if locals.is_empty() {
+        return;
+    }
+    let universe: HashSet<GlobalId> = locals.iter().copied().collect();
+    let rpo = f.rpo();
+    let preds = f.preds();
+    let reachable: HashSet<BlockId> = rpo.iter().copied().collect();
+    // Per-block generated (written) arrays. An unresolved local write
+    // (g = None) conservatively initializes every array.
+    let mut gen: HashMap<BlockId, HashSet<GlobalId>> = HashMap::new();
+    let by_block: HashMap<BlockId, Vec<&Access>> = {
+        let mut map: HashMap<BlockId, Vec<&Access>> = HashMap::new();
+        for a in &accesses {
+            map.entry(a.block).or_default().push(a);
+        }
+        map
+    };
+    for (&b, accs) in &by_block {
+        let e = gen.entry(b).or_default();
+        for a in accs {
+            if a.write {
+                match a.g {
+                    Some(g) => {
+                        e.insert(g);
+                    }
+                    None => {
+                        e.extend(universe.iter().copied());
+                    }
+                }
+            }
+        }
+    }
+    // in[entry] = ∅; in[b] = ∩ preds out[p]; out = in ∪ gen. Iterate to
+    // fixpoint from ⊤ (= universe).
+    let mut out_sets: HashMap<BlockId, HashSet<GlobalId>> = rpo
+        .iter()
+        .map(|&b| (b, universe.clone()))
+        .collect();
+    out_sets.insert(
+        f.entry,
+        gen.get(&f.entry).cloned().unwrap_or_default(),
+    );
+    loop {
+        let mut changed = false;
+        for &b in &rpo {
+            if b == f.entry {
+                continue;
+            }
+            let mut inb: Option<HashSet<GlobalId>> = None;
+            for p in preds[b.idx()].iter().filter(|p| reachable.contains(p)) {
+                let po = &out_sets[p];
+                inb = Some(match inb {
+                    None => po.clone(),
+                    Some(acc) => acc.intersection(po).copied().collect(),
+                });
+            }
+            let mut ob = inb.unwrap_or_default();
+            if let Some(g) = gen.get(&b) {
+                ob.extend(g.iter().copied());
+            }
+            if out_sets[&b] != ob {
+                out_sets.insert(b, ob);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut uninit_reported: HashSet<(GlobalId, u32)> = HashSet::new();
+    for &b in &rpo {
+        // Recompute in[b] and walk the block in order.
+        let mut written: HashSet<GlobalId> = if b == f.entry {
+            HashSet::new()
+        } else {
+            let mut inb: Option<HashSet<GlobalId>> = None;
+            for p in preds[b.idx()].iter().filter(|p| reachable.contains(p)) {
+                let po = &out_sets[p];
+                inb = Some(match inb {
+                    None => po.clone(),
+                    Some(acc) => acc.intersection(po).copied().collect(),
+                });
+            }
+            inb.unwrap_or_default()
+        };
+        let accs = match by_block.get(&b) {
+            Some(a) => a,
+            None => continue,
+        };
+        // Accesses are collected in block order (collect walks insts in
+        // order), so a linear scan respects intra-block ordering.
+        for a in accs {
+            if a.write {
+                match a.g {
+                    Some(g) => {
+                        written.insert(g);
+                    }
+                    None => written.extend(universe.iter().copied()),
+                }
+            } else {
+                let g = match a.g {
+                    Some(g) => g,
+                    None => continue,
+                };
+                if written.contains(&g) {
+                    continue;
+                }
+                let line = f.inst(a.inst).loc.map(|l| l.line).unwrap_or(0);
+                if !uninit_reported.insert((g, line)) {
+                    continue;
+                }
+                diags.push(Diag {
+                    id: CheckId::UninitLocalRead,
+                    severity: Severity::Warning,
+                    kernel: kernel.to_string(),
+                    loc: f.inst(a.inst).loc,
+                    msg: format!(
+                        "read of {} on a path where no thread has written it \
+                         (local memory is not zero-initialized)",
+                        name_of(m, g)
+                    ),
+                    notes: vec![],
+                });
+            }
+        }
+    }
+}
+
+fn name_of(m: &Module, g: GlobalId) -> String {
+    let full = &m.globals[g.idx()].name;
+    format!("'{}'", full.rsplit('.').next().unwrap_or(full))
+}

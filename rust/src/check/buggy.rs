@@ -1,0 +1,113 @@
+//! The intentionally-broken kernel corpus (`benchmarks/buggy/`): each
+//! kernel contains exactly one classic SIMT bug and is annotated with the
+//! check id `volt check` must report for it. The corpus is the regression
+//! net for the static verifier (every kernel fires exactly its expected
+//! id) and the dynamic sanitizer (every race / bounds / uninit kernel is
+//! also caught by shadow-memory tracking at simulation time).
+
+use super::diag::CheckId;
+use crate::frontend::Dialect;
+
+/// One corpus entry.
+pub struct BuggyCase {
+    pub name: &'static str,
+    pub source: &'static str,
+    pub dialect: Dialect,
+    /// The check id every diagnostic for this kernel must carry.
+    pub expect: CheckId,
+    /// Workgroup size the bug manifests at (checker assumption and
+    /// simulator launch shape).
+    pub block: [u64; 3],
+}
+
+impl BuggyCase {
+    /// Whether the dynamic sanitizer is expected to catch this bug at
+    /// runtime. Barrier-divergence bugs are deadlocks, not memory bugs —
+    /// they are the static checker's alone.
+    pub fn sanitizer_catchable(&self) -> bool {
+        !matches!(
+            self.expect,
+            CheckId::BarrierDivergence | CheckId::BarrierDivergentLoop
+        )
+    }
+}
+
+macro_rules! buggy {
+    ($name:literal, $expect:expr) => {
+        BuggyCase {
+            name: $name,
+            source: include_str!(concat!("../../../benchmarks/buggy/", $name, ".cl")),
+            dialect: Dialect::OpenCL,
+            expect: $expect,
+            block: [64, 1, 1],
+        }
+    };
+}
+
+/// Every corpus kernel, in catalog order.
+pub fn all() -> Vec<BuggyCase> {
+    vec![
+        buggy!("barrier_divergent_if", CheckId::BarrierDivergence),
+        buggy!("barrier_divergent_loop", CheckId::BarrierDivergentLoop),
+        buggy!("barrier_partial_lid", CheckId::BarrierDivergence),
+        buggy!("race_ww_same_word", CheckId::RaceWriteWrite),
+        buggy!("race_ww_mirror", CheckId::RaceWriteWrite),
+        buggy!("race_rw_missing_barrier", CheckId::RaceReadWrite),
+        buggy!("race_rw_loop_nobarrier", CheckId::RaceReadWrite),
+        buggy!("oob_write_offby1", CheckId::BoundsLocalOob),
+        buggy!("oob_read_stride", CheckId::BoundsLocalOob),
+        buggy!("uninit_read", CheckId::UninitLocalRead),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{check_source, CheckParams};
+
+    #[test]
+    fn every_buggy_kernel_fires_exactly_its_expected_check() {
+        for case in all() {
+            let params = CheckParams {
+                local_size: case.block,
+            };
+            let diags = check_source(case.source, case.dialect, &params)
+                .unwrap_or_else(|e| panic!("{}: {}", case.name, e));
+            assert!(
+                !diags.is_empty(),
+                "{}: expected {} but kernel came back clean",
+                case.name,
+                case.expect.id_str()
+            );
+            for d in &diags {
+                assert_eq!(
+                    d.id,
+                    case.expect,
+                    "{}: expected only {}, got {} ({})",
+                    case.name,
+                    case.expect.id_str(),
+                    d.id.id_str(),
+                    d.msg
+                );
+                assert!(
+                    d.line().is_some(),
+                    "{}: diagnostic has no source location",
+                    case.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_names_are_unique_and_sources_nonempty() {
+        let cases = all();
+        let mut names: Vec<&str> = cases.iter().map(|c| c.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), cases.len());
+        for c in &cases {
+            assert!(c.source.contains("kernel void"), "{}", c.name);
+            assert!(c.source.contains("volt-check:"), "{}", c.name);
+        }
+    }
+}

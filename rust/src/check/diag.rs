@@ -1,0 +1,239 @@
+//! Diagnostics for the `volt::check` static verifier: typed check ids,
+//! severities, and rendering — both a human caret listing into the kernel
+//! source (same visual language as `volt prof --annotate`) and a stable
+//! JSON form for CI.
+
+use crate::ir::Loc;
+use std::fmt::Write;
+
+/// Stable identifier of one check. The string forms (`id_str`) are the
+/// public contract: tests, CI and docs key on them.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum CheckId {
+    /// A workgroup barrier is control-dependent on a divergent branch.
+    BarrierDivergence,
+    /// A barrier sits inside a loop whose trip count is divergent.
+    BarrierDivergentLoop,
+    /// Two distinct threads may write the same local word in one barrier
+    /// phase.
+    RaceWriteWrite,
+    /// A read and a write of the same local word by distinct threads in
+    /// one barrier phase.
+    RaceReadWrite,
+    /// A local access whose address is not affine in the thread id —
+    /// conservatively reported as a possible race.
+    RaceMayAlias,
+    /// A statically-sized local array access provably outside the array.
+    BoundsLocalOob,
+    /// A read of a local array no path has written first.
+    UninitLocalRead,
+}
+
+impl CheckId {
+    pub fn id_str(self) -> &'static str {
+        match self {
+            CheckId::BarrierDivergence => "barrier.divergence",
+            CheckId::BarrierDivergentLoop => "barrier.divergent-loop",
+            CheckId::RaceWriteWrite => "race.write-write",
+            CheckId::RaceReadWrite => "race.read-write",
+            CheckId::RaceMayAlias => "race.may-alias",
+            CheckId::BoundsLocalOob => "bounds.local-oob",
+            CheckId::UninitLocalRead => "uninit.local-read",
+        }
+    }
+
+    pub fn all() -> [CheckId; 7] {
+        [
+            CheckId::BarrierDivergence,
+            CheckId::BarrierDivergentLoop,
+            CheckId::RaceWriteWrite,
+            CheckId::RaceReadWrite,
+            CheckId::RaceMayAlias,
+            CheckId::BoundsLocalOob,
+            CheckId::UninitLocalRead,
+        ]
+    }
+
+    pub fn from_str(s: &str) -> Option<CheckId> {
+        CheckId::all().into_iter().find(|c| c.id_str() == s)
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding. `loc` points into the kernel source the check ran over
+/// (`None` only for compiler-synthesized code, which the checks avoid
+/// reporting on where possible).
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub id: CheckId,
+    pub severity: Severity,
+    /// Kernel function the finding is in.
+    pub kernel: String,
+    pub loc: Option<Loc>,
+    pub msg: String,
+    /// Secondary locations / explanations ("note: conflicting write at
+    /// line 12").
+    pub notes: Vec<String>,
+}
+
+impl Diag {
+    pub fn line(&self) -> Option<u32> {
+        self.loc.map(|l| l.line)
+    }
+}
+
+/// Render diagnostics as a human listing with source carets, in the style
+/// of the profiler's annotated listing.
+pub fn render_text(diags: &[Diag], src: &str) -> String {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = String::new();
+    for d in diags {
+        match d.loc {
+            Some(loc) => {
+                let _ = writeln!(
+                    out,
+                    "{}[{}] kernel '{}' line {}: {}",
+                    d.severity.label(),
+                    d.id.id_str(),
+                    d.kernel,
+                    loc.line,
+                    d.msg
+                );
+                if loc.line >= 1 && (loc.line as usize) <= lines.len() {
+                    let text = lines[loc.line as usize - 1];
+                    let _ = writeln!(out, "  {:4} | {}", loc.line, text);
+                    let col = if loc.col >= 1 {
+                        loc.col as usize
+                    } else {
+                        // Point at the first non-blank character.
+                        text.len() - text.trim_start().len() + 1
+                    };
+                    let _ = writeln!(out, "       | {}^", " ".repeat(col.saturating_sub(1)));
+                }
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "{}[{}] kernel '{}': {}",
+                    d.severity.label(),
+                    d.id.id_str(),
+                    d.kernel,
+                    d.msg
+                );
+            }
+        }
+        for n in &d.notes {
+            let _ = writeln!(out, "       note: {}", n);
+        }
+    }
+    out
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Stable JSON rendering (an array of finding objects) for `volt check
+/// --json` and the CI sweep artifact.
+pub fn render_json(diags: &[Diag]) -> String {
+    let mut out = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"id\":\"{}\",\"severity\":\"{}\",\"kernel\":\"{}\",\"line\":{},\"msg\":\"{}\",\"notes\":[",
+            d.id.id_str(),
+            d.severity.label(),
+            esc(&d.kernel),
+            d.line().map(|l| l.to_string()).unwrap_or_else(|| "null".into()),
+            esc(&d.msg)
+        );
+        for (j, n) in d.notes.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{}\"", esc(n));
+        }
+        out.push_str("]}");
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_strings_round_trip() {
+        for id in CheckId::all() {
+            assert_eq!(CheckId::from_str(id.id_str()), Some(id));
+        }
+        assert_eq!(CheckId::from_str("nope"), None);
+    }
+
+    #[test]
+    fn text_render_carets_into_source() {
+        let src = "kernel void k() {\n    barrier(0);\n}\n";
+        let d = Diag {
+            id: CheckId::BarrierDivergence,
+            severity: Severity::Warning,
+            kernel: "k".into(),
+            loc: Some(Loc::line(2)),
+            msg: "barrier under divergent branch".into(),
+            notes: vec!["branch at line 1".into()],
+        };
+        let t = render_text(&[d], src);
+        assert!(t.contains("warning[barrier.divergence]"));
+        assert!(t.contains("barrier(0);"));
+        assert!(t.contains("^"));
+        assert!(t.contains("note: branch at line 1"));
+    }
+
+    #[test]
+    fn json_render_escapes_and_validates() {
+        let d = Diag {
+            id: CheckId::RaceWriteWrite,
+            severity: Severity::Error,
+            kernel: "we\"ird".into(),
+            loc: None,
+            msg: "a\\b".into(),
+            notes: vec![],
+        };
+        let j = render_json(&[d]);
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\\\"ird"));
+        assert!(j.contains("a\\\\b"));
+        assert!(j.contains("\"line\":null"));
+        crate::prof::validate_json(&j).unwrap();
+    }
+}

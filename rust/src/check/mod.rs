@@ -1,0 +1,369 @@
+//! `volt::check` — static SIMT verification (paper §6: correctness
+//! tooling). Three analyses over the pre-dispatch kernel IR:
+//!
+//! * **barrier divergence** ([`barrier`]): a workgroup barrier that is
+//!   control-dependent on a divergent branch, or that sits in a loop with
+//!   a divergent trip count, deadlocks part of the workgroup on hardware.
+//! * **shared-memory races** ([`race`]): GPUVerify-style two-thread
+//!   reduction over barrier-delimited phases — local-memory accesses are
+//!   normalized to `Σ c·tid + Σ c·sym + k` form and a Fourier–Motzkin
+//!   solver decides whether two *distinct* threads of the workgroup can
+//!   touch the same word within one phase. Non-affine accesses degrade to
+//!   a conservative "may alias" diagnostic.
+//! * **bounds / uninitialized reads** ([`bounds`]): interval evaluation
+//!   of fully-static access patterns against declared array extents, and
+//!   an array-granularity must-write dataflow for reads of local memory
+//!   that no path has initialized.
+//!
+//! The checker is target-independent: it always analyzes the
+//! hardware-warp lowering of the source (`warp_hw = true`) because the
+//! checks describe the *portable* semantics of the kernel, not the
+//! scratch memory a software warp-emulation lowering would add. Kernel
+//! arguments are uniform by dispatch, so they are annotated as such
+//! before the uniformity analysis runs.
+//!
+//! Entry point: [`check_source`]. The driver exposes the same pipeline as
+//! [`crate::driver::VoltOptions::check`] (Warn / Deny), the CLI as
+//! `volt check`. The simulator's shadow-memory sanitizer
+//! (`SimConfig::sanitize`) dynamically cross-checks the race and bounds
+//! verdicts at runtime.
+
+pub mod affine;
+mod barrier;
+mod bounds;
+pub mod buggy;
+pub mod diag;
+mod race;
+pub mod solver;
+
+pub use diag::{render_json, render_text, CheckId, Diag, Severity};
+
+use crate::analysis::tti::{TargetDivergenceInfo, VortexTti};
+use crate::analysis::{uniformity, UniformityOptions};
+use crate::frontend::{compile, CompileError, Dialect, FrontendOptions};
+use crate::ir::{InstData, InstKind, Intr, Module};
+use crate::transform::{inline, mem2reg, simplify, structurize};
+
+/// How diagnostics from the static checker are treated by the driver.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum CheckMode {
+    /// Don't run the checker.
+    #[default]
+    Off,
+    /// Run it; report diagnostics but compile anyway.
+    Warn,
+    /// Run it; any diagnostic fails the compile with a validation error.
+    Deny,
+}
+
+/// Static facts about the launch the checker may assume.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct CheckParams {
+    /// Workgroup (local) size per dimension. Bounds the two-thread race
+    /// reduction and the interval bounds pass. Defaults to the Vortex
+    /// default workgroup shape.
+    pub local_size: [u64; 3],
+}
+
+impl Default for CheckParams {
+    fn default() -> CheckParams {
+        CheckParams {
+            local_size: [64, 1, 1],
+        }
+    }
+}
+
+/// Divergence info at *workgroup* scope: like [`VortexTti`], except the
+/// warp vote/ballot/mask primitives are only warp-uniform — different
+/// warps of the same workgroup can see different values — so they must
+/// not be treated as always-uniform here. (A vote of a uniform predicate
+/// still comes out uniform through normal operand propagation.)
+pub struct WorkgroupTti;
+
+impl TargetDivergenceInfo for WorkgroupTti {
+    fn is_source_of_divergence(
+        &self,
+        f: &crate::ir::Function,
+        inst: &InstData,
+        opts: &UniformityOptions,
+    ) -> bool {
+        VortexTti.is_source_of_divergence(f, inst, opts)
+    }
+
+    fn is_always_uniform(
+        &self,
+        f: &crate::ir::Function,
+        inst: &InstData,
+        opts: &UniformityOptions,
+    ) -> bool {
+        if let InstKind::Intr { intr, .. } = &inst.kind {
+            if matches!(
+                intr,
+                Intr::VoteAll | Intr::VoteAny | Intr::Ballot | Intr::Mask
+            ) {
+                return false;
+            }
+        }
+        VortexTti.is_always_uniform(f, inst, opts)
+    }
+}
+
+/// Run all static checks over every kernel in `src`. Returns the
+/// diagnostics sorted by (source line, check id); an empty vector means
+/// the kernels are clean under the assumptions in `params`.
+pub fn check_source(
+    src: &str,
+    dialect: Dialect,
+    params: &CheckParams,
+) -> Result<Vec<Diag>, CompileError> {
+    let opts = FrontendOptions {
+        dialect,
+        // Always analyze the hardware-warp lowering: the checks are about
+        // the portable semantics of the source, and the software warp
+        // emulation's scratch traffic is compiler-managed, not user code.
+        warp_hw: true,
+    };
+    let mut m = compile(src, &opts)?;
+    Ok(check_module(&mut m, params))
+}
+
+/// Check an already-compiled (pre-dispatch) module. Normalizes the module
+/// in place: structurization + mem2reg so addresses are in SSA form, and
+/// device functions inlined into kernels so the phase analysis sees the
+/// whole kernel body.
+pub fn check_module(m: &mut Module, params: &CheckParams) -> Vec<Diag> {
+    for f in m.funcs.iter_mut() {
+        simplify::simplify(f);
+        structurize::run(f);
+        mem2reg::run(f);
+        simplify::simplify(f);
+    }
+    let kernels = m.kernels();
+    for &k in &kernels {
+        inline::inline_into(m, k, None);
+        simplify::simplify(m.func_mut(k));
+        // Kernel arguments are the same for every thread of the dispatch.
+        for p in m.func_mut(k).params.iter_mut() {
+            p.uniform = true;
+        }
+    }
+    let m: &Module = m;
+    let uopts = UniformityOptions {
+        uni_hw: true,
+        uni_ann: true,
+        uni_func: false,
+    };
+    let mut diags = vec![];
+    for &k in &kernels {
+        let u = uniformity::analyze(m, k, &uopts, &WorkgroupTti);
+        let f = m.func(k);
+        let kernel = f.name.clone();
+        barrier::check(f, &u, &kernel, &mut diags);
+        race::check(m, f, &u, params, &kernel, &mut diags);
+        bounds::check(m, f, &u, params, &kernel, &mut diags);
+    }
+    diags.sort_by(|a, b| {
+        (a.line().unwrap_or(0), a.id.id_str(), &a.kernel, &a.msg).cmp(&(
+            b.line().unwrap_or(0),
+            b.id.id_str(),
+            &b.kernel,
+            &b.msg,
+        ))
+    });
+    diags.dedup_by(|a, b| {
+        a.id == b.id && a.kernel == b.kernel && a.line() == b.line() && a.msg == b.msg
+    });
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(src: &str) -> Vec<Diag> {
+        check_source(src, Dialect::OpenCL, &CheckParams::default()).unwrap()
+    }
+
+    fn ids(diags: &[Diag]) -> Vec<CheckId> {
+        diags.iter().map(|d| d.id).collect()
+    }
+
+    #[test]
+    fn clean_reduction_is_silent() {
+        let diags = check(include_str!("../../../benchmarks/reduce.cl"));
+        assert!(diags.is_empty(), "unexpected: {:?}", ids(&diags));
+    }
+
+    #[test]
+    fn clean_prefix_sum_is_silent() {
+        let diags = check(include_str!("../../../benchmarks/psum.cl"));
+        assert!(diags.is_empty(), "unexpected: {:?}", ids(&diags));
+    }
+
+    #[test]
+    fn clean_stencil_is_silent() {
+        let diags = check(include_str!("../../../benchmarks/stencil.cl"));
+        assert!(diags.is_empty(), "unexpected: {:?}", ids(&diags));
+    }
+
+    #[test]
+    fn clean_tiled_sgemm_is_silent_at_8x8() {
+        let diags = check_source(
+            include_str!("../../../benchmarks/sgemm_tiled.cl"),
+            Dialect::OpenCL,
+            &CheckParams {
+                local_size: [8, 8, 1],
+            },
+        )
+        .unwrap();
+        assert!(diags.is_empty(), "unexpected: {:?}", ids(&diags));
+    }
+
+    #[test]
+    fn barrier_under_divergent_branch() {
+        let diags = check(
+            r#"
+kernel void k(global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = 1.0f;
+    if (l < 32) {
+        barrier(0);
+    }
+    out[l] = buf[l];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::BarrierDivergence]);
+        assert_eq!(diags[0].line(), Some(7));
+    }
+
+    #[test]
+    fn barrier_in_divergent_loop() {
+        let diags = check(
+            r#"
+kernel void k(global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = 0.0f;
+    for (int i = 0; i < l; i++) {
+        barrier(0);
+        buf[l] += 1.0f;
+    }
+    out[l] = buf[l];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::BarrierDivergentLoop]);
+    }
+
+    #[test]
+    fn all_threads_write_one_word() {
+        let diags = check(
+            r#"
+kernel void k(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[0] = in[l];
+    barrier(0);
+    out[l] = buf[0];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::RaceWriteWrite]);
+        assert_eq!(diags[0].line(), Some(5));
+    }
+
+    #[test]
+    fn mirrored_read_without_barrier() {
+        let diags = check(
+            r#"
+kernel void k(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    out[l] = buf[63 - l];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::RaceReadWrite]);
+    }
+
+    #[test]
+    fn off_by_one_write_escapes_array() {
+        let diags = check(
+            r#"
+kernel void k(global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l + 1] = 1.0f;
+    barrier(0);
+    out[l] = buf[l];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::BoundsLocalOob]);
+        assert_eq!(diags[0].line(), Some(5));
+    }
+
+    #[test]
+    fn partial_initialization_read_back() {
+        let diags = check(
+            r#"
+kernel void k(global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    if (l < 32) {
+        buf[l] = 1.0f;
+    }
+    barrier(0);
+    out[l] = buf[l];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::UninitLocalRead]);
+    }
+
+    #[test]
+    fn data_dependent_index_may_alias() {
+        let diags = check(
+            r#"
+kernel void k(global int* idx, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[idx[l]] = 1.0f;
+    barrier(0);
+    out[l] = buf[l];
+}
+"#,
+        );
+        assert_eq!(ids(&diags), vec![CheckId::RaceMayAlias]);
+    }
+
+    #[test]
+    fn guard_makes_single_writer_safe() {
+        // Only thread 0 writes the word: equality guard must suppress the
+        // write-write report.
+        let diags = check(
+            r#"
+kernel void k(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    if (l == 0) {
+        buf[0] = buf[0] * 2.0f;
+    }
+    barrier(0);
+    out[l] = buf[l];
+}
+"#,
+        );
+        assert!(diags.is_empty(), "unexpected: {:?}", ids(&diags));
+    }
+
+    #[test]
+    fn deny_mode_default_and_param_defaults() {
+        assert_eq!(CheckMode::default(), CheckMode::Off);
+        assert_eq!(CheckParams::default().local_size, [64, 1, 1]);
+    }
+}

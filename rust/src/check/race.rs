@@ -1,0 +1,636 @@
+//! Barrier-phase race detection for `AddrSpace::Local` memory — the
+//! GPUVerify-style two-thread reduction. The function is cut into
+//! barrier-delimited *segments*; two accesses are in the same barrier
+//! phase when a barrier-free path connects their segments. For affine
+//! accesses (`base + Σ c·tid + Σ c·uniform + k`) we ask a Fourier–Motzkin
+//! solver whether two *distinct* threads can touch overlapping words in
+//! one phase; proven-disjoint pairs are silent, satisfiable ones are
+//! reported. Non-affine local accesses degrade to a conservative
+//! `race.may-alias`.
+
+use super::affine::{LinExpr, Normalizer, Sym};
+use super::diag::{CheckId, Diag, Severity};
+use super::solver::{feasible, Constraint};
+use super::CheckParams;
+use crate::analysis::uniformity::Uniformity;
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopInfo;
+use crate::ir::{
+    BinOp, BlockId, Function, GlobalId, ICmp as IcmpPred, InstId, InstKind, Intr, Module, Val,
+};
+use std::collections::{HashMap, HashSet};
+
+// ---------------------------------------------------------------------------
+// Segment graph
+// ---------------------------------------------------------------------------
+
+/// Barrier-free segment graph: each block is cut at its barriers; control
+/// leaves a block only from its last segment, so edges run last(b) →
+/// first(succ). Reachability in this graph is exactly "a barrier-free
+/// execution path exists".
+pub struct Segments {
+    pub n: usize,
+    pub first: Vec<usize>,
+    pub last: Vec<usize>,
+    pub seg_of: HashMap<InstId, usize>,
+    reach: Vec<Vec<bool>>,
+    /// (source segment, target segment) of every loop back edge.
+    backedges: Vec<(usize, usize)>,
+}
+
+fn is_barrier(f: &Function, i: InstId) -> bool {
+    matches!(
+        f.inst(i).kind,
+        InstKind::Intr {
+            intr: Intr::Barrier,
+            ..
+        }
+    )
+}
+
+impl Segments {
+    pub fn build(f: &Function, dom: &DomTree) -> Segments {
+        let blocks = f.rpo();
+        let nb = f.blocks.len();
+        let mut first = vec![usize::MAX; nb];
+        let mut last = vec![usize::MAX; nb];
+        let mut seg_of = HashMap::new();
+        let mut n = 0usize;
+        for &b in &blocks {
+            first[b.idx()] = n;
+            let mut cur = n;
+            n += 1;
+            for &i in &f.blocks[b.idx()].insts {
+                seg_of.insert(i, cur);
+                if is_barrier(f, i) {
+                    cur = n;
+                    n += 1;
+                }
+            }
+            last[b.idx()] = cur;
+        }
+        let mut adj: Vec<Vec<usize>> = vec![vec![]; n];
+        let mut backedges = vec![];
+        for &b in &blocks {
+            for s in f.succs(b) {
+                if first[s.idx()] == usize::MAX {
+                    continue;
+                }
+                adj[last[b.idx()]].push(first[s.idx()]);
+                if dom.dominates(s, b) {
+                    backedges.push((last[b.idx()], first[s.idx()]));
+                }
+            }
+        }
+        // Transitive closure by BFS from each segment (segment counts are
+        // tiny — tens, not thousands).
+        let mut reach = vec![vec![false; n]; n];
+        for s in 0..n {
+            let mut work = adj[s].clone();
+            while let Some(t) = work.pop() {
+                if !reach[s][t] {
+                    reach[s][t] = true;
+                    work.extend(adj[t].iter().copied());
+                }
+            }
+        }
+        Segments {
+            n,
+            first,
+            last,
+            seg_of,
+            reach,
+            backedges,
+        }
+    }
+
+    /// Barrier-free path (or same segment).
+    pub fn reaches(&self, a: usize, b: usize) -> bool {
+        a == b || self.reach[a][b]
+    }
+
+    /// Same barrier phase: one can reach the other without a barrier.
+    pub fn same_phase(&self, a: usize, b: usize) -> bool {
+        self.reaches(a, b) || self.reaches(b, a)
+    }
+
+    /// A barrier-free path from `a` to `b` that crosses a loop back edge —
+    /// the two accesses may belong to *different iterations* of a loop
+    /// with no intervening barrier.
+    pub fn crosses_backedge(&self, a: usize, b: usize) -> bool {
+        self.backedges
+            .iter()
+            .any(|&(u, h)| self.reaches(a, u) && self.reaches(h, b))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Access collection
+// ---------------------------------------------------------------------------
+
+pub struct Access {
+    pub inst: InstId,
+    pub write: bool,
+    pub atomic: bool,
+    /// `None`: the pointer is statically Local but its base global could
+    /// not be resolved (conservatively aliases every local array).
+    pub g: Option<GlobalId>,
+    /// Byte offset from the array base; `None` when not affine.
+    pub off: Option<LinExpr>,
+    pub block: BlockId,
+    pub seg: usize,
+}
+
+fn ptr_is_local(m: &Module, f: &Function, v: Val) -> bool {
+    let ty = match v {
+        Val::G(g) => m.global_ptr_type(g),
+        Val::Inst(i) => f.inst(i).ty,
+        Val::Arg(a) => f.params[a as usize].ty,
+        _ => return false,
+    };
+    matches!(ty, crate::ir::Type::Ptr(crate::ir::AddrSpace::Local))
+}
+
+pub fn collect_accesses(
+    m: &Module,
+    f: &Function,
+    norm: &mut Normalizer,
+    segs: &Segments,
+) -> Vec<Access> {
+    let mut out = vec![];
+    for b in f.rpo() {
+        for &id in &f.blocks[b.idx()].insts {
+            let (ptr, write, atomic) = match &f.inst(id).kind {
+                InstKind::Load { ptr } => (*ptr, false, false),
+                InstKind::Store { ptr, .. } => (*ptr, true, false),
+                InstKind::Intr {
+                    intr: Intr::Atomic(_) | Intr::AtomicCas,
+                    args,
+                } => match args.first() {
+                    Some(p) => (*p, true, true),
+                    None => continue,
+                },
+                _ => continue,
+            };
+            match norm.local_addr(m, ptr) {
+                Some((g, off)) => out.push(Access {
+                    inst: id,
+                    write,
+                    atomic,
+                    g: Some(g),
+                    off,
+                    block: b,
+                    seg: segs.seg_of[&id],
+                }),
+                None => {
+                    if ptr_is_local(m, f, ptr) {
+                        out.push(Access {
+                            inst: id,
+                            write,
+                            atomic,
+                            g: None,
+                            off: None,
+                            block: b,
+                            seg: segs.seg_of[&id],
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Guard extraction
+// ---------------------------------------------------------------------------
+
+/// Linear facts (each `expr ≥ 0`) known to hold at entry to block `b`:
+/// conditions of dominating branches whose taken side dominates `b`,
+/// restricted to branches in the same innermost loop as `b` (a guard
+/// evaluated in an outer iteration scope may be stale inside an inner
+/// loop).
+pub fn block_guards(
+    norm: &mut Normalizer,
+    dom: &DomTree,
+    li: &LoopInfo,
+    b: BlockId,
+) -> Vec<LinExpr> {
+    let f = norm.f;
+    let mut out = vec![];
+    let mut cur = b;
+    while let Some(d) = dom.idom[cur.idx()] {
+        cur = d;
+        if li.loop_of[d.idx()] != li.loop_of[b.idx()] {
+            continue;
+        }
+        if let InstKind::CondBr { cond, t, f: fb } = f.inst(f.term(d)).kind {
+            if t == fb {
+                continue;
+            }
+            let t_dom = dom.dominates(t, b);
+            let f_dom = dom.dominates(fb, b);
+            if t_dom && !f_dom {
+                cond_facts(norm, cond, true, &mut out);
+            } else if f_dom && !t_dom {
+                cond_facts(norm, cond, false, &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Decompose a branch condition (with polarity) into linear facts.
+/// Unsupported shapes contribute nothing — dropping a fact only loses
+/// precision, never soundness, for a race *checker*.
+fn cond_facts(norm: &mut Normalizer, v: Val, positive: bool, out: &mut Vec<LinExpr>) {
+    let i = match v {
+        Val::Inst(i) => i,
+        Val::I(k, _) => {
+            // Constant condition: nothing useful (dead branch handled by CFG).
+            let _ = k;
+            return;
+        }
+        _ => return,
+    };
+    match norm.f.inst(i).kind.clone() {
+        InstKind::ICmp { pred, a, b } => {
+            let (la, lb) = match (norm.lin(a), norm.lin(b)) {
+                (Some(x), Some(y)) => (x, y),
+                _ => return,
+            };
+            let mut ge0 = |e: LinExpr| out.push(e);
+            match (pred, positive) {
+                // a < b  ⇔  b − a − 1 ≥ 0 (integers)
+                (IcmpPred::Slt, true) | (IcmpPred::Sge, false) => {
+                    let mut e = lb.sub(&la);
+                    e.k -= 1;
+                    ge0(e);
+                }
+                (IcmpPred::Slt, false) | (IcmpPred::Sge, true) => ge0(la.sub(&lb)),
+                (IcmpPred::Sle, true) | (IcmpPred::Sgt, false) => ge0(lb.sub(&la)),
+                (IcmpPred::Sle, false) | (IcmpPred::Sgt, true) => {
+                    let mut e = la.sub(&lb);
+                    e.k -= 1;
+                    ge0(e);
+                }
+                (IcmpPred::Eq, true) | (IcmpPred::Ne, false) => {
+                    ge0(la.sub(&lb));
+                    ge0(lb.sub(&la));
+                }
+                // Disequalities are disjunctive — skipped (sound).
+                (IcmpPred::Eq, false) | (IcmpPred::Ne, true) => {}
+                // Unsigned comparisons mix signs — skipped (sound).
+                (IcmpPred::Ult, _) | (IcmpPred::Uge, _) => {}
+            }
+        }
+        InstKind::Bin { op: BinOp::And, a, b } if positive => {
+            cond_facts(norm, a, true, out);
+            cond_facts(norm, b, true, out);
+        }
+        InstKind::Bin { op: BinOp::Or, a, b } if !positive => {
+            cond_facts(norm, a, false, out);
+            cond_facts(norm, b, false, out);
+        }
+        // ¬x via `xor x, true` (the IR's boolean negation idiom).
+        InstKind::Bin { op: BinOp::Xor, a, b } => {
+            if b == Val::cb(true) {
+                cond_facts(norm, a, !positive, out);
+            } else if a == Val::cb(true) {
+                cond_facts(norm, b, !positive, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-thread solving
+// ---------------------------------------------------------------------------
+
+/// Variable layout: 0..3 = thread-1 tid dims, 3..6 = thread-2 tid dims,
+/// then uniform symbols. In the cross-iteration scenario, instruction-
+/// defined symbols are renamed apart between the two access instances
+/// (loop-carried uniform values differ across iterations); argument
+/// symbols stay shared (dispatch constants).
+struct VarMap {
+    cross: bool,
+    idx: HashMap<(usize, Sym), usize>,
+    n: usize,
+}
+
+impl VarMap {
+    fn build(cross: bool, sides: [&[&LinExpr]; 2]) -> VarMap {
+        let mut vm = VarMap {
+            cross,
+            idx: HashMap::new(),
+            n: 6,
+        };
+        for (side, exprs) in sides.iter().enumerate() {
+            for e in exprs.iter() {
+                for &(s, _) in &e.syms {
+                    let key = vm.key(side, s);
+                    if !vm.idx.contains_key(&key) {
+                        vm.idx.insert(key, vm.n);
+                        vm.n += 1;
+                    }
+                }
+            }
+        }
+        vm
+    }
+
+    fn key(&self, side: usize, s: Sym) -> (usize, Sym) {
+        match s {
+            Sym::Inst(_) if self.cross => (side, s),
+            _ => (0, s),
+        }
+    }
+
+    fn var(&self, side: usize, s: Sym) -> usize {
+        self.idx[&self.key(side, s)]
+    }
+
+    fn lin(&self, e: &LinExpr, side: usize) -> Constraint {
+        let mut c = Constraint::new(self.n);
+        for d in 0..3 {
+            c.coef[side * 3 + d] = e.tid[d];
+        }
+        for &(s, co) in &e.syms {
+            c.coef[self.var(side, s)] += co;
+        }
+        c.k = e.k;
+        c
+    }
+}
+
+/// Can two distinct threads hit overlapping 4-byte words? `cross` renames
+/// instruction symbols apart (different loop iterations).
+fn may_overlap(
+    off1: &LinExpr,
+    g1: &[LinExpr],
+    off2: &LinExpr,
+    g2: &[LinExpr],
+    ls: [u64; 3],
+    cross: bool,
+) -> bool {
+    let side1: Vec<&LinExpr> = std::iter::once(off1).chain(g1.iter()).collect();
+    let side2: Vec<&LinExpr> = std::iter::once(off2).chain(g2.iter()).collect();
+    let vm = VarMap::build(cross, [side1.as_slice(), side2.as_slice()]);
+    let mut base: Vec<Constraint> = vec![];
+    for side in 0..2 {
+        for d in 0..3 {
+            let mut lo = Constraint::new(vm.n);
+            lo.coef[side * 3 + d] = 1;
+            base.push(lo); // t ≥ 0
+            let mut hi = Constraint::new(vm.n);
+            hi.coef[side * 3 + d] = -1;
+            hi.k = ls[d] as i128 - 1;
+            base.push(hi); // t ≤ ls−1
+        }
+    }
+    for g in g1 {
+        base.push(vm.lin(g, 0));
+    }
+    for g in g2 {
+        base.push(vm.lin(g, 1));
+    }
+    // Overlap of the 4-byte words: |addr1 − addr2| ≤ 3.
+    let c1 = vm.lin(off1, 0);
+    let c2 = vm.lin(off2, 1);
+    let mut dpos = Constraint::new(vm.n); // (addr1 − addr2) + 3 ≥ 0
+    let mut dneg = Constraint::new(vm.n); // (addr2 − addr1) + 3 ≥ 0
+    for i in 0..vm.n {
+        dpos.coef[i] = c1.coef[i] - c2.coef[i];
+        dneg.coef[i] = c2.coef[i] - c1.coef[i];
+    }
+    dpos.k = c1.k - c2.k + 3;
+    dneg.k = c2.k - c1.k + 3;
+    base.push(dpos);
+    base.push(dneg);
+    // Distinct threads: branch over dims and directions.
+    for d in 0..3 {
+        if ls[d] <= 1 {
+            continue;
+        }
+        for dir in 0..2 {
+            let mut cons = base.clone();
+            let mut ne = Constraint::new(vm.n);
+            // dir 0: t1ᵈ ≤ t2ᵈ − 1;  dir 1: t2ᵈ ≤ t1ᵈ − 1.
+            ne.coef[d] = if dir == 0 { -1 } else { 1 };
+            ne.coef[3 + d] = -ne.coef[d];
+            ne.k = -1;
+            cons.push(ne);
+            if feasible(cons, vm.n) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+pub fn check(
+    m: &Module,
+    f: &Function,
+    u: &Uniformity,
+    params: &CheckParams,
+    kernel: &str,
+    diags: &mut Vec<Diag>,
+) {
+    let dom = DomTree::build(f);
+    let li = LoopInfo::build(f);
+    let segs = Segments::build(f, &dom);
+    let mut norm = Normalizer::new(f, u);
+    let accesses = collect_accesses(m, f, &mut norm, &segs);
+    if accesses.is_empty() {
+        return;
+    }
+    let mut guard_cache: HashMap<BlockId, Vec<LinExpr>> = HashMap::new();
+    let mut guards = |norm: &mut Normalizer, b: BlockId| -> Vec<LinExpr> {
+        guard_cache
+            .entry(b)
+            .or_insert_with(|| block_guards(norm, &dom, &li, b))
+            .clone()
+    };
+    let ls = params.local_size;
+    let mut reported: HashSet<(InstId, InstId)> = HashSet::new();
+    let mut may_alias_reported: HashSet<InstId> = HashSet::new();
+    for i in 0..accesses.len() {
+        for j in i..accesses.len() {
+            let (a, b) = (&accesses[i], &accesses[j]);
+            if !a.write && !b.write {
+                continue;
+            }
+            // Atomic-vs-atomic on the same array is synchronization, not a
+            // race.
+            if a.atomic && b.atomic {
+                continue;
+            }
+            match (a.g, b.g) {
+                (Some(x), Some(y)) if x != y => continue, // distinct arrays never alias
+                _ => {}
+            }
+            let same = segs.same_phase(a.seg, b.seg);
+            let cross =
+                segs.crosses_backedge(a.seg, b.seg) || segs.crosses_backedge(b.seg, a.seg);
+            if !same && !cross {
+                continue;
+            }
+            let key = if a.inst <= b.inst {
+                (a.inst, b.inst)
+            } else {
+                (b.inst, a.inst)
+            };
+            if reported.contains(&key) {
+                continue;
+            }
+            let (off_a, off_b) = match (&a.off, &b.off) {
+                (Some(x), Some(y)) => (x, y),
+                _ => {
+                    // Non-affine: conservative may-race, one diag per
+                    // offending instruction.
+                    let culprit = if a.off.is_none() { a } else { b };
+                    if may_alias_reported.insert(culprit.inst) {
+                        let gname = culprit
+                            .g
+                            .map(|g| short_name(m, g))
+                            .unwrap_or_else(|| "local memory".to_string());
+                        diags.push(Diag {
+                            id: CheckId::RaceMayAlias,
+                            severity: Severity::Warning,
+                            kernel: kernel.to_string(),
+                            loc: f.inst(culprit.inst).loc,
+                            msg: format!(
+                                "local access to {} has a non-affine address; cannot \
+                                 prove it race-free within its barrier phase",
+                                gname
+                            ),
+                            notes: vec![],
+                        });
+                    }
+                    reported.insert(key);
+                    continue;
+                }
+            };
+            let ga = guards(&mut norm, a.block);
+            let gb = guards(&mut norm, b.block);
+            let racy = (same && may_overlap(off_a, &ga, off_b, &gb, ls, false))
+                || (cross && may_overlap(off_a, &ga, off_b, &gb, ls, true));
+            if !racy {
+                continue;
+            }
+            reported.insert(key);
+            let (id, verb) = if a.write && b.write {
+                (CheckId::RaceWriteWrite, "write")
+            } else {
+                (CheckId::RaceReadWrite, "access")
+            };
+            // Anchor the diagnostic on a write.
+            let (w, other) = if a.write { (a, b) } else { (b, a) };
+            let gname = w
+                .g
+                .or(other.g)
+                .map(|g| short_name(m, g))
+                .unwrap_or_else(|| "local memory".to_string());
+            let mut notes = vec![];
+            if w.inst != other.inst {
+                match f.inst(other.inst).loc {
+                    Some(l) => notes.push(format!(
+                        "conflicting {} at line {}",
+                        if other.write { "write" } else { "read" },
+                        l.line
+                    )),
+                    None => notes.push("conflicting access in synthesized code".to_string()),
+                }
+            } else {
+                notes.push("two threads of the workgroup execute this access".to_string());
+            }
+            if !same && cross {
+                notes.push(
+                    "the conflict spans loop iterations with no barrier in between".to_string(),
+                );
+            }
+            diags.push(Diag {
+                id,
+                severity: Severity::Warning,
+                kernel: kernel.to_string(),
+                loc: f.inst(w.inst).loc,
+                msg: format!(
+                    "two threads may {} the same word of {} within one barrier phase",
+                    verb, gname
+                ),
+                notes,
+            });
+        }
+    }
+}
+
+fn short_name(m: &Module, g: GlobalId) -> String {
+    let full = &m.globals[g.idx()].name;
+    let short = full.rsplit('.').next().unwrap_or(full);
+    format!("'{}'", short)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Builder, Type, Val};
+
+    /// entry: [st, barrier, ld] → loop(header → body → header) …
+    #[test]
+    fn segments_split_at_barriers_and_find_backedges() {
+        let mut f = Function::new("k", vec![], Type::Void);
+        let header = f.add_block("h");
+        let body = f.add_block("b");
+        let exit = f.add_block("x");
+        let (st, ld, bar);
+        {
+            let mut b = Builder::new(&mut f);
+            let p = b.alloca(4);
+            st = b.f.push_inst(
+                b.cur,
+                InstKind::Store {
+                    ptr: p,
+                    val: Val::ci(0),
+                },
+                Type::Void,
+            );
+            bar = b.f.push_inst(
+                b.cur,
+                InstKind::Intr {
+                    intr: Intr::Barrier,
+                    args: vec![],
+                },
+                Type::Void,
+            );
+            ld = b.f.push_inst(b.cur, InstKind::Load { ptr: p }, Type::I32);
+            b.br(header);
+            b.set_block(header);
+            let c = b.icmp(crate::ir::ICmp::Slt, Val::ci(0), Val::ci(1));
+            b.cond_br(c, body, exit);
+            b.set_block(body);
+            b.br(header);
+            b.set_block(exit);
+            b.ret(None);
+        }
+        let dom = DomTree::build(&f);
+        let segs = Segments::build(&f, &dom);
+        // Store is barrier-separated from the load in the same block.
+        assert_ne!(segs.seg_of[&st], segs.seg_of[&ld]);
+        assert_eq!(segs.seg_of[&bar], segs.seg_of[&st]);
+        assert!(!segs.same_phase(segs.seg_of[&st], segs.seg_of[&ld]));
+        // The load flows into the loop barrier-free.
+        assert!(segs.reaches(segs.seg_of[&ld], segs.first[header.idx()]));
+        // One backedge: body → header.
+        assert_eq!(segs.backedges.len(), 1);
+        // The loop body re-reaches itself across the backedge.
+        let bseg = segs.first[body.idx()];
+        assert!(segs.crosses_backedge(bseg, bseg));
+        // The pre-barrier store reaches nothing outside its segment.
+        assert!(!segs.reaches(segs.seg_of[&st], segs.first[header.idx()]));
+    }
+}

@@ -1,0 +1,206 @@
+//! A small Fourier–Motzkin feasibility solver over integer linear
+//! constraints, used by the two-thread race reduction. Constraints are
+//! `Σ cᵢ·xᵢ + k ≥ 0` with i128 coefficients; strict inequalities are
+//! pre-encoded by the caller with the integer gap (`a < b` ⇒ `b−a−1 ≥ 0`),
+//! so rational infeasibility of the encoded system proves integer
+//! infeasibility of the original. The solver errs on the side of
+//! "feasible": arithmetic overflow or blowup reports `true`, which the
+//! race detector turns into a (conservative) diagnostic rather than a
+//! missed race.
+
+/// `Σ coef[i]·x[i] + k ≥ 0`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub coef: Vec<i128>,
+    pub k: i128,
+}
+
+impl Constraint {
+    pub fn new(nvars: usize) -> Constraint {
+        Constraint {
+            coef: vec![0; nvars],
+            k: 0,
+        }
+    }
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Integer-tightening normalization: divide by the gcd of the
+/// coefficients and floor the constant (valid because the variables are
+/// integers; `Σ(c/g)x ≥ ⌈−k/g⌉`).
+fn normalize(c: &mut Constraint) {
+    let mut g = 0i128;
+    for &v in &c.coef {
+        g = gcd(g, v);
+    }
+    if g > 1 {
+        for v in c.coef.iter_mut() {
+            *v /= g;
+        }
+        c.k = c.k.div_euclid(g);
+    }
+}
+
+/// Upper bound on the working set; beyond it we give up and report
+/// feasible (conservative for a race checker).
+const MAX_CONSTRAINTS: usize = 6000;
+
+/// Rational feasibility of the constraint system by Fourier–Motzkin
+/// elimination. `false` is a proof of (integer) infeasibility; `true`
+/// means "could not prove infeasible".
+pub fn feasible(mut cons: Vec<Constraint>, nvars: usize) -> bool {
+    for c in cons.iter_mut() {
+        normalize(c);
+    }
+    for j in 0..nvars {
+        let mut pos: Vec<Constraint> = vec![];
+        let mut neg: Vec<Constraint> = vec![];
+        let mut rest: Vec<Constraint> = vec![];
+        for c in cons.drain(..) {
+            match c.coef[j].cmp(&0) {
+                std::cmp::Ordering::Greater => pos.push(c),
+                std::cmp::Ordering::Less => neg.push(c),
+                std::cmp::Ordering::Equal => rest.push(c),
+            }
+        }
+        if rest.len() + pos.len() * neg.len() > MAX_CONSTRAINTS {
+            return true;
+        }
+        for p in &pos {
+            for n in &neg {
+                // p: a·xⱼ + P ≥ 0 (a>0);  n: −b·xⱼ + N ≥ 0 (b>0)
+                // ⇒ b·P + a·N ≥ 0.
+                let a = p.coef[j];
+                let b = -n.coef[j];
+                let mut c = Constraint::new(p.coef.len());
+                for i in 0..p.coef.len() {
+                    let t1 = match b.checked_mul(p.coef[i]) {
+                        Some(v) => v,
+                        None => return true,
+                    };
+                    let t2 = match a.checked_mul(n.coef[i]) {
+                        Some(v) => v,
+                        None => return true,
+                    };
+                    c.coef[i] = match t1.checked_add(t2) {
+                        Some(v) => v,
+                        None => return true,
+                    };
+                }
+                let t1 = match b.checked_mul(p.k) {
+                    Some(v) => v,
+                    None => return true,
+                };
+                let t2 = match a.checked_mul(n.k) {
+                    Some(v) => v,
+                    None => return true,
+                };
+                c.k = match t1.checked_add(t2) {
+                    Some(v) => v,
+                    None => return true,
+                };
+                debug_assert_eq!(c.coef[j], 0);
+                normalize(&mut c);
+                rest.push(c);
+            }
+        }
+        cons = rest;
+    }
+    // Only constants remain: `k ≥ 0` must hold for every row.
+    cons.iter().all(|c| c.k >= 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(coef: &[i128], k: i128) -> Constraint {
+        Constraint {
+            coef: coef.to_vec(),
+            k,
+        }
+    }
+
+    #[test]
+    fn trivial_sat_and_unsat() {
+        // x ≥ 0 ∧ x ≤ 5  — sat.
+        assert!(feasible(vec![c(&[1], 0), c(&[-1], 5)], 1));
+        // x ≥ 3 ∧ x ≤ 2  — unsat.
+        assert!(!feasible(vec![c(&[1], -3), c(&[-1], 2)], 1));
+        // No constraints — sat.
+        assert!(feasible(vec![], 2));
+    }
+
+    #[test]
+    fn two_var_chain() {
+        // x ≤ y−1 ∧ y ≤ x  — unsat.
+        assert!(!feasible(vec![c(&[-1, 1], -1), c(&[1, -1], 0)], 2));
+        // x ≤ y−1 ∧ y ≤ x+1 — sat.
+        assert!(feasible(vec![c(&[-1, 1], -1), c(&[1, -1], 1)], 2));
+    }
+
+    #[test]
+    fn reduce_pattern_disjoint() {
+        // vars: t1, t2, s. Writes buf[t1] (t1 < s), reads buf[t2+s]:
+        // t1 ≤ s−1, t2 ≥ 0, overlap |4t1 − 4t2 − 4s| ≤ 3 — unsat.
+        let cons = vec![
+            c(&[-1, 0, 1], -1), // s − t1 − 1 ≥ 0
+            c(&[0, 1, 0], 0),   // t2 ≥ 0
+            c(&[4, -4, -4], 3), // 4t1 − 4t2 − 4s + 3 ≥ 0
+            c(&[-4, 4, 4], 3),  // −(…) + 3 ≥ 0
+        ];
+        assert!(!feasible(cons, 3));
+    }
+
+    #[test]
+    fn tiled_2d_pattern_needs_integer_gap() {
+        // vars: lx1, ly1, lx2, ly2 in [0,7]; addresses 4(8·ly+lx);
+        // distinct rows ly1 ≤ ly2 − 1. Overlap impossible only because
+        // the row distinctness carries the integer gap.
+        let mut cons = vec![];
+        for v in 0..4 {
+            let mut lo = [0i128; 4];
+            lo[v] = 1;
+            cons.push(c(&lo, 0)); // xᵥ ≥ 0
+            let mut hi = [0i128; 4];
+            hi[v] = -1;
+            cons.push(c(&hi, 7)); // xᵥ ≤ 7
+        }
+        cons.push(c(&[0, -1, 0, 1], -1)); // ly1 ≤ ly2 − 1
+        // |4(8ly1+lx1) − 4(8ly2+lx2)| ≤ 3
+        cons.push(c(&[4, 32, -4, -32], 3));
+        cons.push(c(&[-4, -32, 4, 32], 3));
+        assert!(!feasible(cons, 4));
+    }
+
+    #[test]
+    fn same_word_race_is_feasible() {
+        // buf[0] written by all threads: t1 ≠ t2 (t1 ≤ t2−1 branch),
+        // addresses both 0 → overlap trivially holds — sat.
+        let cons = vec![
+            c(&[1, 0], 0),
+            c(&[-1, 0], 63),
+            c(&[0, 1], 0),
+            c(&[0, -1], 63),
+            c(&[-1, 1], -1), // t1 ≤ t2 − 1
+            c(&[0, 0], 3),   // |0−0| ≤ 3
+        ];
+        assert!(feasible(cons, 2));
+    }
+
+    #[test]
+    fn normalization_tightens_integers() {
+        // 2x ≥ 1 ∧ x ≤ 0: rationally sat (x = 0.5) but integer-tightened
+        // 2x ≥ 1 → x ≥ 1 makes it unsat.
+        assert!(!feasible(vec![c(&[2], -1), c(&[-1], 0)], 1));
+    }
+}

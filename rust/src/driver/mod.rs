@@ -37,6 +37,7 @@ pub mod options;
 pub mod session;
 pub mod stream;
 
+pub use crate::check::{CheckId, CheckMode, Diag};
 pub use error::VoltError;
 pub use options::{VoltOptions, VoltOptionsBuilder};
 pub use session::{

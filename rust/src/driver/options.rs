@@ -10,6 +10,7 @@
 
 use super::error::VoltError;
 use crate::backend::emit::{BackendOptions, SharedMemMapping, SMEM_MAX_CORES};
+use crate::check::{CheckMode, CheckParams};
 use crate::frontend::builtins::{SCRATCH_LANES, SCRATCH_WARPS};
 use crate::frontend::{Dialect, FrontendOptions};
 use crate::sim::SimConfig;
@@ -51,6 +52,16 @@ pub struct VoltOptions {
     /// and results are bit-identical with it on or off — and it does not
     /// affect the produced binary (excluded from the cache fingerprint).
     pub profiling: bool,
+    /// Run the `volt::check` static SIMT verifier on every compile.
+    /// `Warn` records diagnostics on the session
+    /// ([`super::Session::last_diagnostics`]); `Deny` turns any
+    /// diagnostic into a typed [`VoltError::Validation`]. Pure analysis —
+    /// the produced binary is identical in all modes, so this is excluded
+    /// from the cache fingerprint (like `profiling`).
+    pub check: CheckMode,
+    /// Workgroup size the static checker assumes (the two-thread race
+    /// reduction and the bounds pass are relative to it).
+    pub check_local_size: [u32; 3],
     /// Device geometry streams created from this session will use.
     pub sim: SimConfig,
 }
@@ -71,6 +82,8 @@ impl Default for VoltOptions {
             verify_ir: false,
             cache: true,
             profiling: false,
+            check: CheckMode::Off,
+            check_local_size: [64, 1, 1],
             sim: SimConfig::default(),
         }
     }
@@ -142,6 +155,17 @@ impl VoltOptions {
             addr_map: self.target.addr_map,
             costs: self.target.costs,
             ..self.sim
+        }
+    }
+
+    /// Static-checker view.
+    pub fn check_params(&self) -> CheckParams {
+        CheckParams {
+            local_size: [
+                self.check_local_size[0] as u64,
+                self.check_local_size[1] as u64,
+                self.check_local_size[2] as u64,
+            ],
         }
     }
 
@@ -259,6 +283,16 @@ impl VoltOptionsBuilder {
     /// created from this session.
     pub fn profiling(mut self, on: bool) -> Self {
         self.opts.profiling = on;
+        self
+    }
+    /// Run the static SIMT verifier on every compile (`Warn` or `Deny`).
+    pub fn check(mut self, mode: CheckMode) -> Self {
+        self.opts.check = mode;
+        self
+    }
+    /// Workgroup size the static checker assumes (default 64x1x1).
+    pub fn check_local_size(mut self, ls: [u32; 3]) -> Self {
+        self.opts.check_local_size = ls;
         self
     }
     pub fn sim(mut self, cfg: SimConfig) -> Self {
@@ -616,6 +650,16 @@ mod tests {
         }
         .hash_into(&mut b);
         assert_eq!(a.finish(), b.finish(), "verify_ir must not change the key");
+        // The static checker is pure analysis: same binary either way, so
+        // enabling it must hit the same cache entry.
+        let mut chk = Fnv1a::new();
+        VoltOptions {
+            check: CheckMode::Deny,
+            check_local_size: [8, 8, 1],
+            ..VoltOptions::default()
+        }
+        .hash_into(&mut chk);
+        assert_eq!(a.finish(), chk.finish(), "check must not change the key");
         let mut c = Fnv1a::new();
         VoltOptions {
             opt: OptLevel::Base,

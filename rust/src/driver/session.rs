@@ -12,6 +12,7 @@ use super::error::VoltError;
 use super::options::{Fnv1a, VoltOptions};
 use super::stream::Stream;
 use crate::backend::emit::{build_image, BackendError, ProgramImage};
+use crate::check::{self, CheckMode, Diag};
 use crate::frontend::compile_kernels;
 use crate::ir::Type;
 use crate::transform::pass::run_middle_end_with;
@@ -84,6 +85,9 @@ pub struct Session {
     opts: VoltOptions,
     cache: HashMap<u64, Arc<Program>>,
     stats: CacheStats,
+    /// Diagnostics from the last compile's static-checker run (empty when
+    /// the checker is off or the kernels were clean).
+    last_check: Vec<Diag>,
 }
 
 impl Session {
@@ -92,6 +96,7 @@ impl Session {
             opts,
             cache: HashMap::new(),
             stats: CacheStats::default(),
+            last_check: Vec::new(),
         }
     }
 
@@ -104,9 +109,49 @@ impl Session {
         &self.opts
     }
 
+    /// Diagnostics the static checker produced on the last
+    /// [`Session::compile`] call (empty when [`VoltOptions::check`] is
+    /// off or every kernel was clean).
+    pub fn last_diagnostics(&self) -> &[Diag] {
+        &self.last_check
+    }
+
     /// Compile `src` into a [`Program`], serving identical (source,
     /// options) requests from the binary cache.
+    ///
+    /// When [`VoltOptions::check`] is enabled, the `volt::check` static
+    /// verifier runs on *every* call — the checker is pure analysis, so
+    /// it is independent of the binary cache (a cache hit still
+    /// re-reports diagnostics, and `Deny` still rejects).
     pub fn compile(&mut self, src: &str) -> Result<Arc<Program>, VoltError> {
+        self.last_check.clear();
+        if self.opts.check != CheckMode::Off {
+            // Checker-internal front-end errors are ignored here: the
+            // main pipeline below reports them as typed frontend errors.
+            if let Ok(diags) =
+                check::check_source(src, self.opts.dialect, &self.opts.check_params())
+            {
+                self.last_check = diags;
+            }
+            if self.opts.check == CheckMode::Deny && !self.last_check.is_empty() {
+                let first = &self.last_check[0];
+                return Err(VoltError::Validation {
+                    msg: format!(
+                        "volt check found {} issue{} (check=deny); first: [{}] kernel \
+                         '{}'{}: {}",
+                        self.last_check.len(),
+                        if self.last_check.len() == 1 { "" } else { "s" },
+                        first.id.id_str(),
+                        first.kernel,
+                        match first.line() {
+                            Some(l) => format!(" line {l}"),
+                            None => String::new(),
+                        },
+                        first.msg
+                    ),
+                });
+            }
+        }
         let key = fingerprint(src, &self.opts);
         if self.opts.cache {
             if let Some(p) = self.cache.get(&key) {
@@ -288,6 +333,52 @@ kernel void add1(global int* x, int n) {
         s.compile(TWO_KERNELS).unwrap();
         assert_eq!(s.cache_stats(), CacheStats { hits: 0, misses: 2 });
         assert_eq!(s.cached_programs(), 0);
+    }
+
+    #[test]
+    fn check_warn_records_and_deny_rejects() {
+        const RACY: &str = r#"
+kernel void k(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[0] = in[l];
+    barrier(0);
+    out[l] = buf[0];
+}
+"#;
+        // Warn: diagnostics recorded, compile succeeds.
+        let mut s = Session::new(
+            crate::driver::VoltOptions::builder()
+                .check(CheckMode::Warn)
+                .build()
+                .unwrap(),
+        );
+        s.compile(RACY).unwrap();
+        assert_eq!(s.last_diagnostics().len(), 1);
+        assert_eq!(
+            s.last_diagnostics()[0].id,
+            crate::check::CheckId::RaceWriteWrite
+        );
+        // A clean compile clears the previous diagnostics.
+        s.compile(TWO_KERNELS).unwrap();
+        assert!(s.last_diagnostics().is_empty());
+        // Deny: typed validation error naming the check id; diagnostics
+        // still inspectable. A cache hit re-rejects (the checker is
+        // independent of the binary cache).
+        let mut s = Session::new(
+            crate::driver::VoltOptions::builder()
+                .check(CheckMode::Deny)
+                .build()
+                .unwrap(),
+        );
+        for _ in 0..2 {
+            let e = s.compile(RACY).unwrap_err();
+            assert!(matches!(e, VoltError::Validation { .. }), "{e}");
+            assert!(e.to_string().contains("race.write-write"), "{e}");
+            assert_eq!(s.last_diagnostics().len(), 1);
+        }
+        // Deny with clean source compiles fine.
+        s.compile(TWO_KERNELS).unwrap();
     }
 
     #[test]

@@ -224,6 +224,86 @@ pub fn verify_function(f: &Function) -> Result<(), String> {
             }
         }
     }
+    verify_split_join_nesting(f)?;
+    Ok(())
+}
+
+/// `vx_split` / `vx_join` well-nesting (meaningful after
+/// `divergence_insert`; vacuous before, when no SplitBr/Join exists).
+///
+/// Models the hardware IPDOM stack along every static path: a `SplitBr`
+/// pushes its reconvergence block, a `Join` pops the top entry when it
+/// names the current block (the hardware no-ops otherwise, so stray
+/// joins are tolerated exactly as silicon tolerates them). Two
+/// invariants must hold or runtime masks corrupt:
+///
+/// * every block must be reached with the same pending-reconvergence
+///   stack on all paths (otherwise stack depth is path-dependent), and
+/// * a `Ret` must retire with an empty stack (otherwise the warp dies
+///   holding queued else-sides whose lanes never run).
+fn verify_split_join_nesting(f: &Function) -> Result<(), String> {
+    let managed = f.insts.iter().any(|i| {
+        !i.dead
+            && matches!(
+                i.kind,
+                InstKind::SplitBr { .. }
+                    | InstKind::Intr {
+                        intr: Intr::Join,
+                        ..
+                    }
+            )
+    });
+    if !managed {
+        return Ok(());
+    }
+    let mut states: Vec<Option<Vec<BlockId>>> = vec![None; f.blocks.len()];
+    states[f.entry.idx()] = Some(vec![]);
+    let mut work = vec![f.entry];
+    while let Some(b) = work.pop() {
+        let mut stack = states[b.idx()].clone().expect("enqueued with a state");
+        for &id in &f.blocks[b.idx()].insts {
+            match &f.inst(id).kind {
+                InstKind::Intr {
+                    intr: Intr::Join, ..
+                } => {
+                    // Pop only a matching top — hardware join semantics.
+                    if stack.last() == Some(&b) {
+                        stack.pop();
+                    }
+                }
+                InstKind::SplitBr { ipdom, .. } => stack.push(*ipdom),
+                InstKind::Ret { .. } => {
+                    if !stack.is_empty() {
+                        return Err(format!(
+                            "ret in b{} retires with pending vx_split reconvergence \
+                             {:?} (unbalanced vx_split/vx_join nesting)",
+                            b.0,
+                            stack.iter().map(|x| x.0).collect::<Vec<_>>()
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for s in f.succs(b) {
+            match &states[s.idx()] {
+                Some(prev) if *prev != stack => {
+                    return Err(format!(
+                        "b{} is reached with vx_split reconvergence stack {:?} on one \
+                         path and {:?} on another (unbalanced vx_split/vx_join nesting)",
+                        s.0,
+                        stack.iter().map(|x| x.0).collect::<Vec<_>>(),
+                        prev.iter().map(|x| x.0).collect::<Vec<_>>()
+                    ));
+                }
+                Some(_) => {}
+                None => {
+                    states[s.idx()] = Some(stack.clone());
+                    work.push(s);
+                }
+            }
+        }
+    }
     Ok(())
 }
 
@@ -283,6 +363,45 @@ mod tests {
         let p = b.phi(Type::I32, vec![(x, Val::ci(1))]);
         b.ret(Some(p));
         assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn split_join_nesting_enforced() {
+        // ret inside the split region (before the join at the
+        // reconvergence block runs) — the warp would retire holding a
+        // queued else-side. Must be rejected.
+        let build = |early_ret: bool| {
+            let mut f = Function::new(
+                "t",
+                vec![Param {
+                    name: "c".into(),
+                    ty: Type::I32,
+                    uniform: false,
+                }],
+                Type::Void,
+            );
+            let e = f.entry;
+            let a = f.add_block("then");
+            let bb = f.add_block("else");
+            let m = f.add_block("merge");
+            let mut b = Builder::at(&mut f, e);
+            b.split_br(Val::Arg(0), a, bb, m);
+            b.set_block(a);
+            if early_ret {
+                b.ret(None);
+            } else {
+                b.br(m);
+            }
+            b.set_block(bb);
+            b.br(m);
+            b.set_block(m);
+            b.intr(Intr::Join, vec![]);
+            b.ret(None);
+            f
+        };
+        let err = verify_function(&build(true)).unwrap_err();
+        assert!(err.contains("vx_split"), "{err}");
+        verify_function(&build(false)).unwrap();
     }
 
     #[test]

@@ -36,6 +36,13 @@
 //! * [`sim`] — a SimX-style deterministic cycle-level SIMT simulator
 //!   (cores × warps × threads, per-warp IPDOM stacks, warp/barrier tables,
 //!   L1/L2 caches) used as the evaluation substrate (paper §5).
+//! * [`check`] — the static SIMT verifier behind `volt check` and
+//!   [`driver::VoltOptions::check`]: barrier-divergence verification over
+//!   the uniformity/control-dependence analyses, a GPUVerify-style
+//!   two-thread shared-memory race detector over barrier-delimited
+//!   phases, and static bounds / uninitialized-read checking of local
+//!   arrays — cross-checked at runtime by the simulator's shadow-memory
+//!   sanitizer (`SimConfig::sanitize`); see `docs/CHECKS.md`.
 //! * [`prof`] — the cycle-attributing profiler: per-PC/per-line cycle
 //!   attribution over the image's line table, an issue-stall taxonomy
 //!   that sums to total cycles, occupancy accounting, text reports and
@@ -53,6 +60,7 @@
 
 pub mod analysis;
 pub mod backend;
+pub mod check;
 pub mod coordinator;
 pub mod driver;
 pub mod frontend;

@@ -21,10 +21,19 @@ commands:
   compile <file> [--cuda] [--opt LEVEL] [--target T] [--asm] [--ir]
                                                          compile a kernel file
   run <benchmark> [--opt LEVEL] [--target T] [--sw-warp] [--smem-global]
-                  [--no-fast-forward]                    run a registry benchmark
+                  [--no-fast-forward] [--sanitize]       run a registry benchmark
                                                          (prints sim throughput;
                                                          --no-fast-forward disables
-                                                         the idle-cycle skip)
+                                                         the idle-cycle skip;
+                                                         --sanitize enables the
+                                                         shadow-memory sanitizer)
+  check <benchmark|file> [--cuda] [--block X,Y,Z] [--json]
+                                                         static SIMT verification:
+                                                         barrier divergence, shared-
+                                                         memory races, bounds
+  check --sweep [--json FILE]                            check every registry kernel
+                                                         (must be clean) and the
+                                                         buggy corpus (must fire)
   prof <benchmark> [--opt LEVEL] [--top N] [--annotate] [--trace FILE]
                                                          profile a benchmark: stall
                                                          breakdown + hot source lines
@@ -91,6 +100,7 @@ fn main() {
     let result = match cmd.as_str() {
         "compile" => cmd_compile(rest),
         "run" => cmd_run(rest),
+        "check" => cmd_check(rest),
         "prof" => cmd_prof(rest),
         "targets" => cmd_targets(rest),
         "validate" => cmd_validate(rest),
@@ -178,10 +188,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     };
     let target = parse_target(args);
     let fast_forward = !flag(args, "--no-fast-forward");
+    let sanitize = flag(args, "--sanitize");
     let t0 = std::time::Instant::now();
     let r = if target.name == "vortex" {
         let sim = SimConfig {
             fast_forward,
+            sanitize,
             ..SimConfig::default()
         };
         experiments::run_bench(&b, level, warp_hw, smem, sim)?
@@ -189,10 +201,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         // Non-default target: geometry and warp lowering follow the
         // profile (vortex-min has no hardware shfl/vote). Refuse flag
         // combinations the profile path would silently ignore.
-        if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward {
+        if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward || sanitize {
             return Err(format!(
-                "--sw-warp/--smem-global/--no-fast-forward are not configurable with \
-                 --target {} (the profile determines the device configuration)",
+                "--sw-warp/--smem-global/--no-fast-forward/--sanitize are not configurable \
+                 with --target {} (the profile determines the device configuration)",
                 target.name
             ));
         }
@@ -238,6 +250,206 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!(
         "  compile {:.2} ms, code {} instrs ({} spill-traffic)",
         r.compile_ms, r.code_size, r.spill_insts
+    );
+    if sanitize {
+        let reps = &s.sanitize_reports;
+        if reps.is_empty() {
+            println!("  sanitizer: clean (shadow local-memory tracking on)");
+        } else {
+            println!("  sanitizer: {} report(s)", reps.len());
+            for rep in reps {
+                println!(
+                    "    {} at pc {} addr {:#x} (core {} warp {} lane {}{})",
+                    rep.kind.name(),
+                    rep.pc,
+                    rep.addr,
+                    rep.core,
+                    rep.warp,
+                    rep.lane,
+                    match rep.line {
+                        Some(l) => format!(", source line {l}"),
+                        None => String::new(),
+                    }
+                );
+            }
+            return Err(format!("sanitizer found {} issue(s)", reps.len()));
+        }
+    }
+    Ok(())
+}
+
+/// Workgroup shape the static checker assumes for a registry benchmark.
+/// Matches the launch shape the experiment drivers use: the tiled SGEMM
+/// dispatches 8x8 workgroups, everything else is the Vortex default.
+fn check_block_hint(name: &str) -> [u64; 3] {
+    if name == "sgemm_tiled" {
+        [8, 8, 1]
+    } else {
+        [64, 1, 1]
+    }
+}
+
+fn parse_block(args: &[String]) -> Result<Option<[u64; 3]>, String> {
+    let Some(s) = opt_val(args, "--block") else {
+        return Ok(None);
+    };
+    let parts: Vec<u64> = s.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+    if parts.len() != 3 || parts.iter().any(|&x| x == 0) {
+        return Err(format!("check: bad --block '{s}' (expected X,Y,Z, e.g. 64,1,1)"));
+    }
+    Ok(Some([parts[0], parts[1], parts[2]]))
+}
+
+fn cmd_check(args: &[String]) -> Result<(), String> {
+    use volt::check::{check_source, render_json, render_text, CheckParams};
+    let block = parse_block(args)?;
+    if flag(args, "--sweep") {
+        return check_sweep(args);
+    }
+    // First argument that is neither a flag nor --block's value names the
+    // benchmark or kernel file to check.
+    let mut name: Option<&String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--block" {
+            i += 2;
+            continue;
+        }
+        if args[i].starts_with("--") {
+            i += 1;
+            continue;
+        }
+        name = Some(&args[i]);
+        break;
+    }
+    let name = name.ok_or("check: missing benchmark/file name (or --sweep)")?;
+    let (src, dialect, local_size) = match benchmarks::find(name) {
+        Some(b) => (
+            b.source.to_string(),
+            b.dialect,
+            block.unwrap_or_else(|| check_block_hint(name)),
+        ),
+        None => {
+            let src = std::fs::read_to_string(name)
+                .map_err(|e| format!("'{name}' is not a registry benchmark or readable file: {e}"))?;
+            let dialect = if flag(args, "--cuda") || name.ends_with(".cu") {
+                Dialect::Cuda
+            } else {
+                Dialect::OpenCL
+            };
+            (src, dialect, block.unwrap_or([64, 1, 1]))
+        }
+    };
+    let diags = check_source(&src, dialect, &CheckParams { local_size })
+        .map_err(|e| e.to_string())?;
+    if flag(args, "--json") {
+        let json = render_json(&diags);
+        volt::prof::validate_json(&json)
+            .map_err(|e| format!("internal: check json invalid: {e}"))?;
+        println!("{json}");
+    } else if diags.is_empty() {
+        println!(
+            "{name}: clean ({}x{}x{} workgroup)",
+            local_size[0], local_size[1], local_size[2]
+        );
+    } else {
+        print!("{}", render_text(&diags, &src));
+    }
+    if diags.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("check found {} issue(s) in {name}", diags.len()))
+    }
+}
+
+/// `volt check --sweep`: every registry kernel must come back clean at its
+/// launch shape, and every buggy-corpus kernel must fire exactly its
+/// expected check id. Mirrors the `check_api` integration test so CI can
+/// gate on the shipped binary.
+fn check_sweep(args: &[String]) -> Result<(), String> {
+    use volt::check::{buggy, check_source, render_json, CheckParams};
+    let mut json = String::from("{\"schema\":\"volt-check-sweep/v1\",\"benches\":[");
+    let mut failures = 0usize;
+    for (i, b) in benchmarks::registry().iter().enumerate() {
+        let local_size = check_block_hint(b.name);
+        let entry = check_source(b.source, b.dialect, &CheckParams { local_size });
+        let (status, findings) = match &entry {
+            Ok(diags) if diags.is_empty() => ("clean".to_string(), render_json(diags)),
+            Ok(diags) => {
+                failures += 1;
+                (format!("{} issue(s)", diags.len()), render_json(diags))
+            }
+            Err(e) => {
+                failures += 1;
+                (format!("compile error: {e}"), "[]".to_string())
+            }
+        };
+        println!("{:>16}  {status}", b.name);
+        if let Ok(diags) = &entry {
+            if !diags.is_empty() {
+                print!("{}", volt::check::render_text(diags, b.source));
+            }
+        }
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"name\":\"{}\",\"block\":[{},{},{}],\"clean\":{},\"findings\":{}}}",
+            b.name,
+            local_size[0],
+            local_size[1],
+            local_size[2],
+            matches!(&entry, Ok(d) if d.is_empty()),
+            findings
+        ));
+    }
+    json.push_str("],\"buggy\":[");
+    for (i, case) in buggy::all().iter().enumerate() {
+        let params = CheckParams {
+            local_size: case.block,
+        };
+        let entry = check_source(case.source, case.dialect, &params);
+        let (ok, findings) = match &entry {
+            Ok(diags) => (
+                !diags.is_empty() && diags.iter().all(|d| d.id == case.expect),
+                render_json(diags),
+            ),
+            Err(_) => (false, "[]".to_string()),
+        };
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "{:>16}  expect {:<22} {}",
+            case.name,
+            case.expect.id_str(),
+            if ok { "fires" } else { "MISMATCH" }
+        );
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"name\":\"{}\",\"expect\":\"{}\",\"ok\":{},\"findings\":{}}}",
+            case.name,
+            case.expect.id_str(),
+            ok,
+            findings
+        ));
+    }
+    json.push_str(&format!("],\"failures\":{failures}}}"));
+    volt::prof::validate_json(&json)
+        .map_err(|e| format!("internal: BENCH_check.json invalid: {e}"))?;
+    if let Some(path) = opt_val(args, "--json") {
+        std::fs::write(&path, &json).map_err(|e| e.to_string())?;
+        println!("wrote {path} ({} bytes, JSON validated)", json.len());
+    }
+    if failures > 0 {
+        return Err(format!("check sweep: {failures} failure(s)"));
+    }
+    println!(
+        "check sweep: {} registry kernels clean, {} buggy kernels fire as expected",
+        benchmarks::registry().len(),
+        buggy::all().len()
     );
     Ok(())
 }

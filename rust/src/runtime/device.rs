@@ -287,6 +287,7 @@ fn accumulate(t: &mut SimStats, s: &SimStats) {
     t.l2_misses += s.l2_misses;
     t.local_accesses += s.local_accesses;
     t.prints.extend(s.prints.iter().cloned());
+    t.sanitize_reports.extend(s.sanitize_reports.iter().cloned());
 }
 
 #[cfg(test)]

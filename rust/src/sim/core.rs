@@ -5,7 +5,7 @@
 //! ([`crate::ir::interp::scalar`]) so the property-test oracle and the
 //! simulator cannot diverge.
 
-use super::mem::{Cache, GlobalMem};
+use super::mem::{Cache, GlobalMem, ShadowLocal};
 use super::{SimConfig, SimError, SimStats};
 use crate::backend::isa::{CsrId, MachInst, Op, OpClass};
 use crate::ir::interp::scalar;
@@ -70,6 +70,11 @@ pub struct Core {
     /// subsequent cycles skip the warp-table scan entirely. Invalidated
     /// on every executed instruction and on reset.
     idle: Option<IdleInfo>,
+    /// Shadow memory over the local window ([`SimConfig::sanitize`]):
+    /// `Some` only when the sanitizer is attached by [`super::Gpu::load`]
+    /// (it needs the image's declared local extent). A pure observer —
+    /// `None` leaves execution untouched.
+    pub shadow: Option<ShadowLocal>,
 }
 
 /// Snapshot of a stalled core, valid until it next issues.
@@ -121,6 +126,7 @@ impl Core {
             rr: 0,
             full_mask,
             idle: None,
+            shadow: None,
         }
     }
 
@@ -131,6 +137,9 @@ impl Core {
         self.barriers.clear();
         self.rr = 0;
         self.idle = None;
+        if let Some(sh) = self.shadow.as_mut() {
+            sh.reset();
+        }
         // Launch contract: warp 0, lane 0 active at pc 0.
         self.warps[0].active = true;
         self.warps[0].tmask = 1;
@@ -513,6 +522,11 @@ impl Core {
                         local_touched = true;
                     } else if local_off + 4 <= self.local.len() {
                         local_touched = true;
+                        if let Some(sh) = self.shadow.as_mut() {
+                            sh.on_access(
+                                stats, is_store, local_off, addr, pc, self.id, wi as u32, l as u32,
+                            );
+                        }
                         if is_store {
                             let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
                             self.local[local_off..local_off + 4]
@@ -580,6 +594,11 @@ impl Core {
                     let addr = read_reg(&self.warps[wi].regs[l], inst.rs1);
                     let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
                     let local_off = addr.wrapping_sub(cfg.addr_map.local_base) as usize;
+                    if local_off + 4 <= self.local.len() {
+                        if let Some(sh) = self.shadow.as_mut() {
+                            sh.on_atomic(stats, local_off, addr, pc, self.id, wi as u32, l as u32);
+                        }
+                    }
                     let old = if local_off + 4 <= self.local.len() {
                         u32::from_le_bytes(self.local[local_off..local_off + 4].try_into().unwrap())
                     } else {
@@ -783,6 +802,11 @@ impl Core {
                         if mask >> k & 1 == 1 {
                             self.warps[k].at_barrier = false;
                         }
+                    }
+                    // Phase boundary for the sanitizer: conflicts do not
+                    // span a released barrier.
+                    if let Some(sh) = self.shadow.as_mut() {
+                        sh.barrier_release();
                     }
                 } else {
                     self.warps[wi].at_barrier = true;

@@ -1,10 +1,11 @@
 //! Top-level GPU: cores + shared L2 + global memory + the tick loop.
 
 use super::core::{Core, Issue, StepOutcome};
-use super::mem::{Cache, GlobalMem};
+use super::mem::{Cache, GlobalMem, ShadowLocal};
 use super::{SimConfig, SimError, SimStats};
 use crate::backend::emit::ProgramImage;
 use crate::backend::isa::MachInst;
+use crate::ir::Loc;
 use crate::prof::counters::Profiler;
 
 pub struct Gpu {
@@ -15,6 +16,19 @@ pub struct Gpu {
     pub program: Vec<MachInst>,
     pub image_args_addr: u32,
     pub heap_next: u32,
+    /// The image's pc→source-location table, retained so runtime traps
+    /// and sanitizer reports can name the offending source line.
+    pub pc_loc: Vec<Option<Loc>>,
+}
+
+/// Append the source line (when the image's line table has one for the
+/// faulting pc) to a trap message, so "store fault at 0x..." points at
+/// the kernel line instead of only a machine pc.
+fn locate(pc_loc: &[Option<Loc>], mut e: SimError) -> SimError {
+    if let Some(loc) = pc_loc.get(e.pc as usize).copied().flatten() {
+        e.msg = format!("{} (source line {})", e.msg, loc.line);
+    }
+    e
 }
 
 impl Gpu {
@@ -35,7 +49,15 @@ impl Gpu {
         for (addr, bytes) in &image.data {
             mem.write_bytes(*addr, bytes).expect("image data fits");
         }
-        let cores = (0..cfg.num_cores).map(|i| Core::new(&cfg, i)).collect();
+        let mut cores: Vec<Core> = (0..cfg.num_cores).map(|i| Core::new(&cfg, i)).collect();
+        if cfg.sanitize {
+            // The shadow's out-of-bounds line is the image's declared
+            // local extent, not the hardware window size.
+            let extent = (image.local_mem_size as usize).min(cfg.local_mem_bytes as usize);
+            for c in cores.iter_mut() {
+                c.shadow = Some(ShadowLocal::new(extent));
+            }
+        }
         Gpu {
             cfg,
             cores,
@@ -47,6 +69,7 @@ impl Gpu {
             // allocation (flattened selects evaluate both arms) stay in
             // bounds.
             heap_next: map.heap_base + 4096,
+            pc_loc: image.pc_loc.clone(),
         }
     }
 
@@ -86,16 +109,19 @@ impl Gpu {
         for (pc, inst) in self.program.iter().enumerate() {
             if !self.cfg.features.supports_op(inst.op) {
                 let gate = crate::target::Features::gate_name(inst.op).unwrap_or("?");
-                return Err(SimError {
-                    core: 0,
-                    warp: 0,
-                    pc: pc as u32,
-                    msg: format!(
-                        "illegal instruction '{}': device does not implement the \
-                         '{gate}' extension (image/target mismatch?)",
-                        inst.op.mnemonic()
-                    ),
-                });
+                return Err(locate(
+                    &self.pc_loc,
+                    SimError {
+                        core: 0,
+                        warp: 0,
+                        pc: pc as u32,
+                        msg: format!(
+                            "illegal instruction '{}': device does not implement the \
+                             '{gate}' extension (image/target mismatch?)",
+                            inst.op.mnemonic()
+                        ),
+                    },
+                ));
             }
         }
         let mut stats = SimStats::default();
@@ -106,6 +132,7 @@ impl Gpu {
         // repeated runs, rebuild via `Gpu::load`.
         let mut issued: Vec<Option<Issue>> = vec![None; self.cores.len()];
         let mut cycle: u64 = 0;
+        let pc_loc = &self.pc_loc;
         loop {
             if self.cores.iter().all(|c| c.idle()) {
                 break;
@@ -120,7 +147,9 @@ impl Gpu {
                     &mut self.l2,
                     &self.cfg,
                     &mut stats,
-                )? {
+                )
+                .map_err(|e| locate(pc_loc, e))?
+                {
                     StepOutcome::Executed(info) => {
                         any = true;
                         issued[ci] = Some(info);
@@ -173,6 +202,14 @@ impl Gpu {
             }
         }
         stats.cycles = cycle;
+        for r in stats.sanitize_reports.iter_mut() {
+            r.line = self
+                .pc_loc
+                .get(r.pc as usize)
+                .copied()
+                .flatten()
+                .map(|l| l.line);
+        }
         Ok(stats)
     }
 }
@@ -300,6 +337,83 @@ kernel void rev(global int* a, int n) {
             assert_eq!(c_on.total(), s_on.cycles, "ledger must sum to cycles");
             assert_eq!(c_on.issue_cycles, c_off.issue_cycles);
             assert_eq!(c_on.stalls, c_off.stalls, "stall attribution must match");
+        }
+    }
+
+    /// The sanitizer is a pure observer: cycle counts, stats and device
+    /// results are bit-identical with it on or off, a clean kernel yields
+    /// no reports, and a block-level write-write race is caught with the
+    /// source line of the racing store.
+    #[test]
+    fn sanitize_bit_identical_and_catches_races() {
+        let clean = r#"
+kernel void rev(global int* a, int n) {
+    local int tile[64];
+    int l = get_local_id(0);
+    int g = get_global_id(0);
+    tile[l] = a[g];
+    barrier(0);
+    if (g < n) a[g] = tile[63 - l] + a[g] / 3;
+}
+"#;
+        let img = compile(clean, OptLevel::O3);
+        let run_with = |san: bool| {
+            let cfg = SimConfig {
+                sanitize: san,
+                ..SimConfig::default()
+            };
+            let mut gpu = Gpu::load(&img, cfg);
+            let a = gpu.alloc(128 * 4);
+            for i in 0..128u32 {
+                gpu.mem.write_u32(a + i * 4, i * 3).unwrap();
+            }
+            write_args(&mut gpu, &img, [2, 1, 1], [64, 1, 1], &[a, 128]);
+            let stats = gpu.run().unwrap();
+            let out: Vec<u32> = (0..128).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+            (stats, out)
+        };
+        let (s_on, out_on) = run_with(true);
+        let (s_off, out_off) = run_with(false);
+        assert_eq!(s_on.cycles, s_off.cycles, "sanitizer changed the cycle count");
+        assert_eq!(s_on.instrs, s_off.instrs);
+        assert_eq!(s_on.l1_hits, s_off.l1_hits);
+        assert_eq!(out_on, out_off, "sanitizer changed device results");
+        assert!(
+            s_on.sanitize_reports.is_empty(),
+            "clean kernel flagged: {:?}",
+            s_on.sanitize_reports
+        );
+        assert!(s_off.sanitize_reports.is_empty(), "reports with sanitizer off");
+
+        // Every thread of the block stores tile[0] in the same phase.
+        let racy = r#"
+kernel void racy(global int* a) {
+    local int tile[64];
+    int l = get_local_id(0);
+    tile[0] = l;
+    barrier(0);
+    a[l] = tile[0];
+}
+"#;
+        let img = compile(racy, OptLevel::O3);
+        let cfg = SimConfig {
+            sanitize: true,
+            ..SimConfig::default()
+        };
+        let mut gpu = Gpu::load(&img, cfg);
+        let a = gpu.alloc(64 * 4);
+        write_args(&mut gpu, &img, [1, 1, 1], [64, 1, 1], &[a]);
+        let stats = gpu.run().unwrap();
+        assert!(
+            stats
+                .sanitize_reports
+                .iter()
+                .any(|r| r.kind == crate::sim::SanitizeKind::WriteWrite),
+            "write-write race not caught: {:?}",
+            stats.sanitize_reports
+        );
+        for r in &stats.sanitize_reports {
+            assert!(r.line.is_some(), "report without a source line: {r:?}");
         }
     }
 

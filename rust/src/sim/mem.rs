@@ -1,7 +1,9 @@
-//! Device memory (segmented flat memory) and the set-associative cache
-//! timing model with LRU replacement.
+//! Device memory (segmented flat memory), the set-associative cache
+//! timing model with LRU replacement, and the shadow-memory state behind
+//! the runtime sanitizer ([`super::SimConfig::sanitize`]).
 
-use super::CacheConfig;
+use super::{CacheConfig, SimStats};
+use std::collections::HashSet;
 
 #[derive(Debug)]
 pub struct Segment {
@@ -96,6 +98,204 @@ impl GlobalMem {
     }
 }
 
+/// What the runtime sanitizer caught — the dynamic mirror of the static
+/// checker's `race.*` / `bounds.local-oob` / `uninit.local-read` ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SanitizeKind {
+    /// Two distinct threads stored the same local word within one
+    /// barrier phase (static id `race.write-write`).
+    WriteWrite,
+    /// A load and a store from distinct threads touched the same local
+    /// word within one barrier phase (static id `race.read-write`).
+    ReadWrite,
+    /// Access inside the local window but past the image's declared
+    /// local-memory extent (static id `bounds.local-oob`).
+    OutOfBounds,
+    /// Load from a local word no thread has written since launch
+    /// (static id `uninit.local-read`).
+    UninitRead,
+}
+
+impl SanitizeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SanitizeKind::WriteWrite => "write-write race",
+            SanitizeKind::ReadWrite => "read-write race",
+            SanitizeKind::OutOfBounds => "out-of-bounds local access",
+            SanitizeKind::UninitRead => "uninitialized local read",
+        }
+    }
+}
+
+/// One sanitizer finding, reported through [`SimStats::sanitize_reports`].
+#[derive(Clone, Debug)]
+pub struct SanitizeReport {
+    pub kind: SanitizeKind,
+    pub pc: u32,
+    pub addr: u32,
+    pub core: u32,
+    pub warp: u32,
+    pub lane: u32,
+    /// Source line from the image's pc→loc table; filled in by
+    /// [`super::Gpu`] after the run.
+    pub line: Option<u32>,
+}
+
+/// Per-word shadow state for one core's local-memory window.
+#[derive(Clone, Copy, Debug, Default)]
+struct ShadowWord {
+    /// Last (warp, lane) to store this word in the current barrier phase.
+    writer: Option<(u16, u16)>,
+    /// Last (warp, lane) to load this word in the current barrier phase.
+    reader: Option<(u16, u16)>,
+    /// Whether any thread has ever written this word (survives barriers).
+    init: bool,
+}
+
+/// Shadow memory for one core's local window — the runtime cross-check
+/// of the static `volt check` verifier. A pure observer: it never feeds
+/// back into execution or timing, so runs are bit-identical with the
+/// sanitizer on or off.
+///
+/// The model matches the checker's barrier-phase semantics: each word
+/// remembers its last writer and last reader; a store over another
+/// thread's write (or read) in the same phase is a race, and barrier
+/// release wipes the writer/reader marks for the whole core (the
+/// dispatcher's end-of-block barrier also passes through here, so local
+/// reuse across sequential blocks on one core never misfires).
+/// Atomics only mark words initialized — atomic/atomic interleavings
+/// are legal, and mixed atomic/plain conflicts are left to the static
+/// checker. Reports are deduplicated per (kind, pc) and capped.
+#[derive(Clone, Debug)]
+pub struct ShadowLocal {
+    words: Vec<ShadowWord>,
+    /// Bytes of local memory the loaded image actually declares;
+    /// in-window accesses at or past this are out-of-bounds.
+    extent: usize,
+    seen: HashSet<(SanitizeKind, u32)>,
+}
+
+/// Report-list cap: enough for every distinct (kind, pc) in practice,
+/// bounded in pathological programs.
+const MAX_REPORTS: usize = 256;
+
+impl ShadowLocal {
+    pub fn new(extent: usize) -> ShadowLocal {
+        ShadowLocal {
+            words: vec![ShadowWord::default(); extent.div_ceil(4)],
+            extent,
+            seen: HashSet::new(),
+        }
+    }
+
+    /// Back to launch state (new kernel run on the same device).
+    pub fn reset(&mut self) {
+        for w in self.words.iter_mut() {
+            *w = ShadowWord::default();
+        }
+        self.seen.clear();
+    }
+
+    /// Barrier release: conflicts no longer span the phase boundary.
+    /// Initialization marks survive — a write before the barrier
+    /// legitimately feeds reads after it.
+    pub fn barrier_release(&mut self) {
+        for w in self.words.iter_mut() {
+            w.writer = None;
+            w.reader = None;
+        }
+    }
+
+    /// Record one plain load/store decoded into the local window.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_access(
+        &mut self,
+        stats: &mut SimStats,
+        is_store: bool,
+        local_off: usize,
+        addr: u32,
+        pc: u32,
+        core: u32,
+        warp: u32,
+        lane: u32,
+    ) {
+        if local_off + 4 > self.extent {
+            self.emit(stats, SanitizeKind::OutOfBounds, pc, addr, core, warp, lane);
+            return;
+        }
+        let me = (warp as u16, lane as u16);
+        let (mut ww, mut rw, mut uninit) = (false, false, false);
+        {
+            let w = &mut self.words[local_off / 4];
+            if is_store {
+                ww = matches!(w.writer, Some(o) if o != me);
+                rw = matches!(w.reader, Some(o) if o != me);
+                w.writer = Some(me);
+                w.init = true;
+            } else {
+                rw = matches!(w.writer, Some(o) if o != me);
+                uninit = !w.init;
+                w.reader = Some(me);
+            }
+        }
+        if ww {
+            self.emit(stats, SanitizeKind::WriteWrite, pc, addr, core, warp, lane);
+        }
+        if rw {
+            self.emit(stats, SanitizeKind::ReadWrite, pc, addr, core, warp, lane);
+        }
+        if uninit {
+            self.emit(stats, SanitizeKind::UninitRead, pc, addr, core, warp, lane);
+        }
+    }
+
+    /// Record one atomic decoded into the local window: bounds-checked
+    /// and marked initialized, but never a race (atomics are how threads
+    /// legitimately share a word within a phase).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_atomic(
+        &mut self,
+        stats: &mut SimStats,
+        local_off: usize,
+        addr: u32,
+        pc: u32,
+        core: u32,
+        warp: u32,
+        lane: u32,
+    ) {
+        if local_off + 4 > self.extent {
+            self.emit(stats, SanitizeKind::OutOfBounds, pc, addr, core, warp, lane);
+            return;
+        }
+        self.words[local_off / 4].init = true;
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn emit(
+        &mut self,
+        stats: &mut SimStats,
+        kind: SanitizeKind,
+        pc: u32,
+        addr: u32,
+        core: u32,
+        warp: u32,
+        lane: u32,
+    ) {
+        if !self.seen.insert((kind, pc)) || stats.sanitize_reports.len() >= MAX_REPORTS {
+            return;
+        }
+        stats.sanitize_reports.push(SanitizeReport {
+            kind,
+            pc,
+            addr,
+            core,
+            warp,
+            lane,
+            line: None,
+        });
+    }
+}
+
 /// Set-associative LRU cache (tags only — a timing model).
 #[derive(Debug)]
 pub struct Cache {
@@ -173,6 +373,39 @@ mod tests {
         assert!(m.write_u32(0x0, 1).is_err());
         m.write_bytes(0x1000, &[1, 2, 3, 4, 5]).unwrap();
         assert_eq!(m.read_bytes(0x1000, 5).unwrap(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn shadow_local_phase_semantics() {
+        let mut st = SimStats::default();
+        let mut sh = ShadowLocal::new(16); // 4 words declared
+        // Two distinct threads store the same word in one phase.
+        sh.on_access(&mut st, true, 0, 0x100, 10, 0, 0, 0);
+        sh.on_access(&mut st, true, 0, 0x100, 11, 0, 0, 1);
+        assert_eq!(st.sanitize_reports.len(), 1);
+        assert_eq!(st.sanitize_reports[0].kind, SanitizeKind::WriteWrite);
+        // Same-thread rewrite is silent (and (kind, pc) dedup holds).
+        sh.on_access(&mut st, true, 0, 0x100, 11, 0, 0, 1);
+        assert_eq!(st.sanitize_reports.len(), 1);
+        // Cross-thread read of the freshly written word: read-write race.
+        sh.on_access(&mut st, false, 0, 0x100, 12, 0, 1, 0);
+        assert_eq!(st.sanitize_reports[1].kind, SanitizeKind::ReadWrite);
+        // After barrier release the same read is legal; init survives.
+        sh.barrier_release();
+        sh.on_access(&mut st, false, 0, 0x100, 13, 0, 1, 0);
+        assert_eq!(st.sanitize_reports.len(), 2);
+        // Reading a never-written word.
+        sh.on_access(&mut st, false, 4, 0x104, 14, 0, 0, 0);
+        assert_eq!(st.sanitize_reports[2].kind, SanitizeKind::UninitRead);
+        // In-window accesses past the declared extent.
+        sh.on_access(&mut st, true, 16, 0x110, 15, 0, 0, 0);
+        assert_eq!(st.sanitize_reports[3].kind, SanitizeKind::OutOfBounds);
+        sh.on_atomic(&mut st, 20, 0x114, 16, 0, 0, 0);
+        assert_eq!(st.sanitize_reports[4].kind, SanitizeKind::OutOfBounds);
+        // Atomic/atomic sharing within a phase is not a race.
+        sh.on_atomic(&mut st, 8, 0x108, 17, 0, 0, 0);
+        sh.on_atomic(&mut st, 8, 0x108, 18, 0, 0, 1);
+        assert_eq!(st.sanitize_reports.len(), 5);
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod gpu;
 pub mod mem;
 
 pub use gpu::Gpu;
+pub use mem::{SanitizeKind, SanitizeReport, ShadowLocal};
 
 use crate::target::{AddressMap, CostModel, Features, TargetDesc};
 
@@ -75,6 +76,14 @@ pub struct SimConfig {
     /// core's state is frozen while nothing issues, so the cached
     /// reason/occupancy equal what a rescan would produce).
     pub fast_forward: bool,
+    /// Runtime sanitizer: shadow-memory tracking of local (shared)
+    /// accesses per barrier phase, flagging cross-thread races,
+    /// out-of-extent accesses and uninitialized reads into
+    /// [`SimStats::sanitize_reports`] — the dynamic cross-check of the
+    /// static `volt check` verifier. A pure observer with the same
+    /// discipline as `fast_forward`: cycle counts, results and profiler
+    /// attribution are bit-identical with it on or off.
+    pub sanitize: bool,
 }
 
 impl Default for SimConfig {
@@ -104,6 +113,7 @@ impl SimConfig {
             addr_map: t.addr_map,
             costs: t.costs,
             fast_forward: true,
+            sanitize: false,
         }
     }
 
@@ -186,6 +196,9 @@ pub struct SimStats {
     /// Cycles warps spent stalled at barriers.
     pub barrier_stall_cycles: u64,
     pub prints: Vec<String>,
+    /// What the runtime sanitizer caught ([`SimConfig::sanitize`]);
+    /// always empty when the sanitizer is off.
+    pub sanitize_reports: Vec<mem::SanitizeReport>,
 }
 
 impl SimStats {

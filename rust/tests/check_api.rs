@@ -1,0 +1,272 @@
+//! Integration tests for the `volt::check` static SIMT verifier and the
+//! simulator's shadow-memory sanitizer cross-check.
+//!
+//! The contract under test (ISSUE 6 acceptance criteria):
+//!
+//! * every registry benchmark kernel is clean at its launch shape, both
+//!   through `check_source` directly and through `Session` with the
+//!   checker in Deny mode on every built-in target;
+//! * every `benchmarks/buggy/` kernel fires exactly its expected check
+//!   id with a source-located diagnostic, and Deny mode turns that into
+//!   a typed `VoltError::Validation`;
+//! * the checker is pure analysis: enabling it does not change the
+//!   program's cache fingerprint;
+//! * the dynamic sanitizer catches every memory bug of the buggy corpus
+//!   at runtime (barrier-divergence deadlocks are the static checker's
+//!   alone) and is a pure observer on clean kernels.
+
+use volt::backend::emit::SharedMemMapping;
+use volt::check::{buggy, check_source, CheckId, CheckMode, CheckParams};
+use volt::coordinator::{benchmarks, experiments};
+use volt::driver::{compile_program, Session, VoltError, VoltOptions};
+use volt::runtime::{ArgValue, VoltDevice};
+use volt::sim::{SanitizeKind, SimConfig};
+use volt::transform::OptLevel;
+
+/// Workgroup shape the checker assumes per benchmark — the same shape
+/// the experiment drivers dispatch (`volt check` uses the same hint).
+fn block_hint(name: &str) -> [u64; 3] {
+    if name == "sgemm_tiled" {
+        [8, 8, 1]
+    } else {
+        [64, 1, 1]
+    }
+}
+
+#[test]
+fn every_registry_kernel_is_clean_statically() {
+    for b in benchmarks::registry() {
+        let params = CheckParams {
+            local_size: block_hint(b.name),
+        };
+        let diags = check_source(b.source, b.dialect, &params)
+            .unwrap_or_else(|e| panic!("{}: checker front-end error: {e}", b.name));
+        assert!(
+            diags.is_empty(),
+            "{}: expected clean, got {:?}",
+            b.name,
+            diags
+                .iter()
+                .map(|d| (d.id.id_str(), d.kernel.as_str(), d.line()))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn every_registry_kernel_compiles_under_deny_on_every_target() {
+    // Deny mode rejects any diagnostic at compile time, so a successful
+    // compile *is* the cleanliness assertion. The checker itself is
+    // target-independent (it always analyzes the portable hardware-warp
+    // lowering); running on both built-in targets proves the driver
+    // wiring holds when the main pipeline lowers differently
+    // (vortex-min compiles warp builtins through software emulation).
+    for target in ["vortex", "vortex-min"] {
+        for b in benchmarks::registry() {
+            let hint = block_hint(b.name);
+            let opts = VoltOptions::builder()
+                .dialect(b.dialect)
+                .target(target)
+                .check(CheckMode::Deny)
+                .check_local_size([hint[0] as u32, hint[1] as u32, hint[2] as u32])
+                .build()
+                .unwrap();
+            let mut s = Session::new(opts);
+            s.compile(b.source)
+                .unwrap_or_else(|e| panic!("{target}/{}: {e}", b.name));
+            assert!(
+                s.last_diagnostics().is_empty(),
+                "{target}/{}: diagnostics recorded on a clean kernel",
+                b.name
+            );
+        }
+    }
+}
+
+#[test]
+fn buggy_corpus_fires_exactly_its_expected_ids_through_the_driver() {
+    for case in buggy::all() {
+        let ls = [
+            case.block[0] as u32,
+            case.block[1] as u32,
+            case.block[2] as u32,
+        ];
+        // Warn: compile succeeds, diagnostics recorded on the session,
+        // every diagnostic carries the expected id and a source line.
+        let mut s = Session::new(
+            VoltOptions::builder()
+                .dialect(case.dialect)
+                .check(CheckMode::Warn)
+                .check_local_size(ls)
+                .build()
+                .unwrap(),
+        );
+        s.compile(case.source)
+            .unwrap_or_else(|e| panic!("{}: warn mode must still compile: {e}", case.name));
+        let diags = s.last_diagnostics();
+        assert!(
+            !diags.is_empty(),
+            "{}: expected {} but the kernel came back clean",
+            case.name,
+            case.expect.id_str()
+        );
+        for d in diags {
+            assert_eq!(
+                d.id,
+                case.expect,
+                "{}: expected only {}, got {} ({})",
+                case.name,
+                case.expect.id_str(),
+                d.id.id_str(),
+                d.msg
+            );
+            assert!(
+                d.line().is_some(),
+                "{}: diagnostic is not source-located: {}",
+                case.name,
+                d.msg
+            );
+        }
+        // Deny: typed validation error naming the check id.
+        let mut s = Session::new(
+            VoltOptions::builder()
+                .dialect(case.dialect)
+                .check(CheckMode::Deny)
+                .check_local_size(ls)
+                .build()
+                .unwrap(),
+        );
+        let e = s.compile(case.source).unwrap_err();
+        assert!(
+            matches!(e, VoltError::Validation { .. }),
+            "{}: expected a validation error, got {e}",
+            case.name
+        );
+        assert!(
+            e.to_string().contains(case.expect.id_str()),
+            "{}: error does not name the check id: {e}",
+            case.name
+        );
+    }
+}
+
+#[test]
+fn check_mode_does_not_change_the_cache_fingerprint() {
+    let src = benchmarks::find("vecadd").unwrap().source;
+    let p_off = Session::new(VoltOptions::builder().build().unwrap())
+        .compile(src)
+        .unwrap();
+    let p_checked = Session::new(
+        VoltOptions::builder()
+            .check(CheckMode::Warn)
+            .check_local_size([8, 8, 1])
+            .build()
+            .unwrap(),
+    )
+    .compile(src)
+    .unwrap();
+    assert_eq!(
+        p_off.fingerprint, p_checked.fingerprint,
+        "the checker is pure analysis: same binary, same cache entry"
+    );
+}
+
+/// Sanitizer report kinds a given static check id may legitimately
+/// manifest as at runtime. A missing-barrier read-write race can also
+/// surface as an uninitialized read depending on warp interleaving, but
+/// the conflicting store always fires ReadWrite, so the mapping stays
+/// exact.
+fn expected_kinds(id: CheckId) -> &'static [SanitizeKind] {
+    match id {
+        CheckId::RaceWriteWrite => &[SanitizeKind::WriteWrite],
+        CheckId::RaceReadWrite => &[SanitizeKind::ReadWrite],
+        CheckId::RaceMayAlias => &[SanitizeKind::WriteWrite, SanitizeKind::ReadWrite],
+        CheckId::BoundsLocalOob => &[SanitizeKind::OutOfBounds],
+        CheckId::UninitLocalRead => &[SanitizeKind::UninitRead],
+        CheckId::BarrierDivergence | CheckId::BarrierDivergentLoop => &[],
+    }
+}
+
+#[test]
+fn sanitizer_catches_the_buggy_corpus_at_runtime() {
+    for case in buggy::all() {
+        if !case.sanitizer_catchable() {
+            continue;
+        }
+        let opts = VoltOptions::builder()
+            .dialect(case.dialect)
+            .build()
+            .unwrap();
+        let prog = compile_program(case.source, &opts)
+            .unwrap_or_else(|e| panic!("{}: {e}", case.name));
+        let cfg = SimConfig {
+            sanitize: true,
+            ..opts.device_config()
+        };
+        let mut dev = VoltDevice::new(prog.image.clone(), cfg);
+        // Every corpus kernel has the (global T* in, global T* out)
+        // signature over one 64-element workgroup.
+        let n = 64usize;
+        let input: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let a = dev.malloc(n as u32 * 4);
+        let b = dev.malloc(n as u32 * 4);
+        dev.write_f32(a, &input).unwrap();
+        dev.write_f32(b, &vec![0.0; n]).unwrap();
+        let kernel = prog.kernels[0].name.clone();
+        let stats = dev
+            .launch(
+                &kernel,
+                [1, 1, 1],
+                [
+                    case.block[0] as u32,
+                    case.block[1] as u32,
+                    case.block[2] as u32,
+                ],
+                &[ArgValue::Ptr(a), ArgValue::Ptr(b)],
+            )
+            .unwrap_or_else(|e| panic!("{}: launch failed: {e}", case.name));
+        let want = expected_kinds(case.expect);
+        let kinds: Vec<SanitizeKind> = stats.sanitize_reports.iter().map(|r| r.kind).collect();
+        assert!(
+            stats
+                .sanitize_reports
+                .iter()
+                .any(|r| want.contains(&r.kind) && r.line.is_some()),
+            "{}: expected a source-located report of {:?}, got {:?}",
+            case.name,
+            want,
+            kinds
+        );
+    }
+}
+
+#[test]
+fn sanitizer_is_a_pure_observer_on_a_clean_benchmark() {
+    let b = benchmarks::find("reduce").unwrap();
+    let run = |sanitize: bool| {
+        experiments::run_bench(
+            &b,
+            OptLevel::O3,
+            true,
+            SharedMemMapping::Local,
+            SimConfig {
+                sanitize,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    let base = run(false);
+    let san = run(true);
+    // run_bench validates the benchmark's results internally, so both
+    // runs already proved correctness; here we pin bit-identical timing.
+    assert_eq!(base.stats.cycles, san.stats.cycles);
+    assert_eq!(base.stats.instrs, san.stats.instrs);
+    assert_eq!(base.stats.l1_hits, san.stats.l1_hits);
+    assert_eq!(base.stats.local_accesses, san.stats.local_accesses);
+    assert!(
+        san.stats.sanitize_reports.is_empty(),
+        "clean benchmark produced sanitizer reports: {:?}",
+        san.stats.sanitize_reports
+    );
+}
