@@ -1,0 +1,17 @@
+// BUG: the loop condition reads a zero-initialized buffer that the loop
+// never writes, so every thread spins forever. No barrier, no shared
+// memory, no out-of-bounds access — the static checker rightly finds
+// nothing; only the runtime watchdog (LaunchPolicy.watchdog_max_cycles /
+// SimConfig.max_cycles) can catch it, naming the kernel and dumping
+// per-warp state.
+// volt-check: clean (runtime watchdog trap)
+kernel void watchdog_infinite_loop(global int* out, int n) {
+    int i = get_global_id(0);
+    if (i < n) {
+        int acc = 0;
+        while (out[i] >= 0) {
+            acc += 1;
+        }
+        out[i] = acc;
+    }
+}

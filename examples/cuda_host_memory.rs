@@ -57,7 +57,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         stream.enqueue_write_symbol("coeffs", &coeff_bytes, 0)?;
         let pd = stream.malloc((n * 4) as u32);
         let po = stream.malloc((n * 4) as u32);
-        stream.enqueue_write_f32(pd, &data);
+        stream.enqueue_write_f32(pd, &data)?;
         stream.enqueue_launch(
             "filter",
             [4, 1, 1],

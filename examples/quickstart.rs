@@ -51,7 +51,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut stream = session.create_stream(&program);
     let px = stream.malloc((n * 4) as u32);
     let py = stream.malloc((n * 4) as u32);
-    stream.enqueue_write_f32(py, &vec![1.0f32; n]);
+    stream.enqueue_write_f32(py, &vec![1.0f32; n])?;
     stream.enqueue_launch(
         "ramp",
         [8, 1, 1],

@@ -44,6 +44,22 @@ macro_rules! buggy {
     };
 }
 
+/// One runtime-only corpus entry: a kernel the static verifier rightly
+/// finds clean, but that traps when simulated. These exercise the runtime
+/// containment path (watchdog / deadlock traps plus launch-level
+/// recovery) rather than the static sweep, so they live in a separate
+/// catalog from [`all`].
+pub struct RuntimeBuggyCase {
+    pub name: &'static str,
+    pub source: &'static str,
+    pub dialect: Dialect,
+    /// Human-readable trap the simulator must raise ("watchdog",
+    /// "deadlock").
+    pub expect_trap: &'static str,
+    /// Launch shape the hang manifests at.
+    pub block: [u64; 3],
+}
+
 /// Every corpus kernel, in catalog order.
 pub fn all() -> Vec<BuggyCase> {
     vec![
@@ -58,6 +74,18 @@ pub fn all() -> Vec<BuggyCase> {
         buggy!("oob_read_stride", CheckId::BoundsLocalOob),
         buggy!("uninit_read", CheckId::UninitLocalRead),
     ]
+}
+
+/// Runtime-only corpus kernels: statically clean, hang or trap under
+/// simulation. Disjoint from [`all`] so the static sweep stays exact.
+pub fn runtime_all() -> Vec<RuntimeBuggyCase> {
+    vec![RuntimeBuggyCase {
+        name: "watchdog_infinite_loop",
+        source: include_str!("../../../benchmarks/buggy/watchdog_infinite_loop.cl"),
+        dialect: Dialect::OpenCL,
+        expect_trap: "watchdog",
+        block: [64, 1, 1],
+    }]
 }
 
 #[cfg(test)]
@@ -95,6 +123,36 @@ mod tests {
                     case.name
                 );
             }
+        }
+    }
+
+    #[test]
+    fn runtime_corpus_is_statically_clean_and_disjoint() {
+        let static_names: Vec<&str> = all().iter().map(|c| c.name).collect();
+        for case in runtime_all() {
+            assert!(
+                !static_names.contains(&case.name),
+                "{}: runtime corpus entry shadows a static one",
+                case.name
+            );
+            assert!(case.source.contains("kernel void"), "{}", case.name);
+            assert!(
+                !case.expect_trap.is_empty(),
+                "{}: missing expected trap",
+                case.name
+            );
+            let params = CheckParams {
+                local_size: case.block,
+            };
+            let diags = check_source(case.source, case.dialect, &params)
+                .unwrap_or_else(|e| panic!("{}: {}", case.name, e));
+            assert!(
+                diags.is_empty(),
+                "{}: runtime-only bug must not fire static checks, got {} ({})",
+                case.name,
+                diags[0].id.id_str(),
+                diags[0].msg
+            );
         }
     }
 

@@ -5,11 +5,11 @@
 
 use super::benchmarks::{registry, Benchmark};
 use crate::backend::emit::SharedMemMapping;
-use crate::driver::{compile_program, VoltError, VoltOptions};
+use crate::driver::{compile_program, CacheStats, Session, VoltError, VoltOptions};
 use crate::prof::counters::StallBreakdown;
 use crate::prof::report::KernelProfile;
-use crate::runtime::VoltDevice;
-use crate::sim::{CacheConfig, SimConfig, SimStats};
+use crate::runtime::{LaunchPolicy, VoltDevice};
+use crate::sim::{CacheConfig, FaultPlan, SimConfig, SimStats};
 use crate::target::TargetDesc;
 use crate::transform::OptLevel;
 
@@ -62,6 +62,71 @@ pub fn run_bench(
         code_size: prog.image.code.len(),
         spill_insts: prog.image.spill_insts(),
     })
+}
+
+/// Resilience counters from a [`run_bench_resilient`] run.
+#[derive(Debug, Clone)]
+pub struct ResilienceReport {
+    /// Faults the simulator actually injected.
+    pub injected: u64,
+    /// Launch retries the device performed.
+    pub retries: u64,
+    /// Launches that trapped at least once but ultimately succeeded.
+    pub recovered: u64,
+    /// Human-readable log of every injected fault.
+    pub fault_log: Vec<String>,
+    /// Compile-cache counters (disk fields populated when `cache_dir`
+    /// was given).
+    pub cache: CacheStats,
+    /// Corrupt disk entries quarantined under the cache directory.
+    pub quarantined: usize,
+}
+
+/// [`run_bench`] under `volt::resilience`: a deterministic [`FaultPlan`]
+/// armed on the device, a [`LaunchPolicy`] retrying transient traps, and
+/// optionally the persistent compile cache at `cache_dir`. The
+/// benchmark's own validator still checks the results, so `Ok` means
+/// every injected fault was contained and recovered with correct output.
+pub fn run_bench_resilient(
+    b: &Benchmark,
+    opt: OptLevel,
+    faults: FaultPlan,
+    policy: LaunchPolicy,
+    cache_dir: Option<&std::path::Path>,
+) -> Result<(RunResult, ResilienceReport), VoltError> {
+    let sim = SimConfig {
+        faults,
+        ..SimConfig::default()
+    };
+    let opts = bench_options(b, opt, true, SharedMemMapping::Local, sim);
+    let mut session = match cache_dir {
+        Some(dir) => Session::with_disk_cache(opts, dir, 0),
+        None => Session::new(opts),
+    };
+    let prog = session.compile(b.source)?;
+    let mut dev = VoltDevice::new(prog.image.clone(), session.options().device_config());
+    dev.policy = policy;
+    (b.run)(&mut dev).map_err(|msg| VoltError::Validation {
+        msg: format!("{} @ {:?}: {msg}", b.name, opt),
+    })?;
+    let report = ResilienceReport {
+        injected: dev.gpu.faults.injected() as u64,
+        retries: dev.retries_performed,
+        recovered: dev.launches_recovered,
+        fault_log: dev.gpu.faults.log.clone(),
+        cache: session.cache_stats(),
+        quarantined: session.disk_cache().map(|d| d.quarantined()).unwrap_or(0),
+    };
+    Ok((
+        RunResult {
+            stats: dev.total_stats,
+            compile_ms: prog.timings.total_ms(),
+            middle_ms: prog.timings.middle_ms,
+            code_size: prog.image.code.len(),
+            spill_insts: prog.image.spill_insts(),
+        },
+        report,
+    ))
 }
 
 /// [`run_bench`] against an explicit target: device geometry from

@@ -1,0 +1,667 @@
+//! Corruption-safe persistent compile cache (`volt::resilience`).
+//!
+//! An on-disk tier under the session's in-memory binary cache, keyed by
+//! the same source × options × target fingerprint
+//! ([`super::session::fingerprint`]). Each entry is one file
+//! `<key:016x>.voltc` holding the linked [`ProgramImage`] and kernel
+//! table in a hand-rolled little-endian format:
+//!
+//! ```text
+//! magic "VOLTDC1\0" (8) | key u64 | payload_len u64 | fnv1a(payload) u64 | payload
+//! ```
+//!
+//! Durability rules, in order of importance:
+//!
+//! * **A bad entry is never a crash.** Every read validates magic, key,
+//!   length and checksum, and decodes with bounds-checked readers; any
+//!   mismatch degrades to a miss ([`DiskLookup::Corrupt`]) and the file
+//!   is moved to a `quarantine/` subdirectory for post-mortem.
+//! * **Writes are atomic**: temp file + rename, so a crash mid-store
+//!   leaves either the old entry or none — never a torn file at the
+//!   entry's name.
+//! * **Size-capped**: after each store the cache evicts
+//!   least-recently-used entries (a best-effort `lru.txt` index; entries
+//!   missing from it are evicted first) until under `max_bytes`.
+//! * **Best-effort**: I/O errors never surface to the compile path; a
+//!   failed store just means the next session recompiles.
+//!
+//! Decoded programs carry default middle-end/timing reports (the pass
+//! pipeline did not run); the image, kernel ABI and fingerprint are
+//! exactly what the compiling session stored.
+
+use super::options::Fnv1a;
+use super::session::KernelEntry;
+use crate::backend::emit::ProgramImage;
+use crate::backend::isa::MachInst;
+use crate::ir::{AddrSpace, Loc, Type};
+use crate::target::AddressMap;
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"VOLTDC1\0";
+
+/// Outcome of a disk-cache probe.
+pub enum DiskLookup {
+    /// Entry present and verified; the decoded image and kernel table.
+    Hit(Box<(ProgramImage, Vec<KernelEntry>)>),
+    /// No entry under this key.
+    Miss,
+    /// Entry present but failed validation; it has been quarantined and
+    /// the caller should treat this as a miss (recompile).
+    Corrupt,
+}
+
+/// The persistent tier. All methods are infallible at the API level:
+/// I/O problems turn into misses (loads) or dropped writes (stores).
+pub struct DiskCache {
+    dir: PathBuf,
+    /// Eviction threshold over the summed `.voltc` sizes; `0` = uncapped.
+    max_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub corrupt: u64,
+    pub evicted: u64,
+}
+
+impl DiskCache {
+    pub fn new(dir: impl AsRef<Path>, max_bytes: u64) -> DiskCache {
+        let dir = dir.as_ref().to_path_buf();
+        let _ = fs::create_dir_all(&dir);
+        DiskCache {
+            dir,
+            max_bytes,
+            hits: 0,
+            misses: 0,
+            corrupt: 0,
+            evicted: 0,
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entry_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.voltc"))
+    }
+
+    /// Number of quarantined (corrupt) entries currently on disk.
+    pub fn quarantined(&self) -> usize {
+        fs::read_dir(self.dir.join("quarantine"))
+            .map(|d| d.count())
+            .unwrap_or(0)
+    }
+
+    /// Probe the cache. A verified entry is a [`DiskLookup::Hit`]; a
+    /// missing file is a miss; anything that fails validation is
+    /// quarantined and reported [`DiskLookup::Corrupt`].
+    pub fn load(&mut self, key: u64) -> DiskLookup {
+        let bytes = match fs::read(self.entry_path(key)) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses += 1;
+                return DiskLookup::Miss;
+            }
+        };
+        match decode_entry(key, &bytes) {
+            Some(hit) => {
+                self.hits += 1;
+                self.touch(key);
+                DiskLookup::Hit(Box::new(hit))
+            }
+            None => {
+                self.corrupt += 1;
+                self.quarantine(key);
+                DiskLookup::Corrupt
+            }
+        }
+    }
+
+    /// Store an entry atomically (temp + rename), then evict down to the
+    /// size cap. Best-effort: failures are swallowed.
+    pub fn store(&mut self, key: u64, image: &ProgramImage, kernels: &[KernelEntry]) {
+        let payload = encode_payload(image, kernels);
+        let mut file = Vec::with_capacity(payload.len() + 32);
+        file.extend_from_slice(MAGIC);
+        file.extend_from_slice(&key.to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let mut h = Fnv1a::new();
+        h.bytes(&payload);
+        file.extend_from_slice(&h.finish().to_le_bytes());
+        file.extend_from_slice(&payload);
+        let _ = fs::create_dir_all(&self.dir);
+        let tmp = self
+            .dir
+            .join(format!("{key:016x}.tmp.{}", std::process::id()));
+        if fs::write(&tmp, &file).is_ok() && fs::rename(&tmp, self.entry_path(key)).is_ok() {
+            self.touch(key);
+            self.evict_to_cap();
+        } else {
+            let _ = fs::remove_file(&tmp);
+        }
+    }
+
+    /// Move a bad entry aside so it cannot poison future sessions but
+    /// stays available for inspection.
+    fn quarantine(&self, key: u64) {
+        let qdir = self.dir.join("quarantine");
+        let _ = fs::create_dir_all(&qdir);
+        let _ = fs::rename(self.entry_path(key), qdir.join(format!("{key:016x}.voltc")));
+    }
+
+    fn lru_path(&self) -> PathBuf {
+        self.dir.join("lru.txt")
+    }
+
+    fn read_lru(&self) -> Vec<u64> {
+        let Ok(text) = fs::read_to_string(self.lru_path()) else {
+            return vec![];
+        };
+        text.lines()
+            .filter_map(|l| u64::from_str_radix(l.trim(), 16).ok())
+            .collect()
+    }
+
+    fn write_lru(&self, keys: &[u64]) {
+        let text: String = keys.iter().map(|k| format!("{k:016x}\n")).collect();
+        let tmp = self.dir.join(format!("lru.tmp.{}", std::process::id()));
+        if fs::write(&tmp, text).is_ok() {
+            let _ = fs::rename(&tmp, self.lru_path());
+        }
+    }
+
+    /// Mark `key` most-recently-used.
+    fn touch(&self, key: u64) {
+        let mut lru = self.read_lru();
+        lru.retain(|&k| k != key);
+        lru.push(key);
+        self.write_lru(&lru);
+    }
+
+    /// Delete least-recently-used entries until the summed entry size is
+    /// under the cap. Entries absent from the LRU index (e.g. the index
+    /// was lost) are evicted first.
+    fn evict_to_cap(&mut self) {
+        if self.max_bytes == 0 {
+            return;
+        }
+        let mut sizes: HashMap<u64, u64> = HashMap::new();
+        let Ok(entries) = fs::read_dir(&self.dir) else {
+            return;
+        };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if let Some(hex) = name.strip_suffix(".voltc") {
+                if let Ok(key) = u64::from_str_radix(hex, 16) {
+                    let size = e.metadata().map(|m| m.len()).unwrap_or(0);
+                    sizes.insert(key, size);
+                }
+            }
+        }
+        let mut total: u64 = sizes.values().sum();
+        if total <= self.max_bytes {
+            return;
+        }
+        let mut lru = self.read_lru();
+        let mut order: Vec<u64> = sizes
+            .keys()
+            .copied()
+            .filter(|k| !lru.contains(k))
+            .collect();
+        order.sort_unstable(); // deterministic order for unindexed keys
+        order.extend(lru.iter().copied().filter(|k| sizes.contains_key(k)));
+        for key in order {
+            if total <= self.max_bytes {
+                break;
+            }
+            if fs::remove_file(self.entry_path(key)).is_ok() {
+                self.evicted += 1;
+                total -= sizes[&key];
+                lru.retain(|&k| k != key);
+            }
+        }
+        self.write_lru(&lru);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry framing
+// ---------------------------------------------------------------------------
+
+fn decode_entry(key: u64, bytes: &[u8]) -> Option<(ProgramImage, Vec<KernelEntry>)> {
+    if bytes.len() < 32 || &bytes[0..8] != MAGIC {
+        return None;
+    }
+    let stored_key = u64::from_le_bytes(bytes[8..16].try_into().ok()?);
+    if stored_key != key {
+        return None;
+    }
+    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().ok()?) as usize;
+    let checksum = u64::from_le_bytes(bytes[24..32].try_into().ok()?);
+    let payload = bytes.get(32..)?;
+    if payload.len() != payload_len {
+        return None; // truncated or trailing garbage
+    }
+    let mut h = Fnv1a::new();
+    h.bytes(payload);
+    if h.finish() != checksum {
+        return None;
+    }
+    decode_payload(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Payload serialization (bounds-checked, deterministic: maps are written
+// in sorted key order, so identical programs produce identical bytes)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn b(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn s(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+    fn str_u32_map(&mut self, m: &HashMap<String, u32>) {
+        let mut keys: Vec<&String> = m.keys().collect();
+        keys.sort();
+        self.u32(keys.len() as u32);
+        for k in keys {
+            self.s(k);
+            self.u32(m[k]);
+        }
+    }
+}
+
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.buf.get(self.pos..self.pos.checked_add(n)?)?;
+        self.pos += n;
+        Some(s)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+    fn b(&mut self) -> Option<bool> {
+        match self.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+    fn s(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+    fn bytes(&mut self) -> Option<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Some(self.take(n)?.to_vec())
+    }
+    fn str_u32_map(&mut self) -> Option<HashMap<String, u32>> {
+        let n = self.u32()? as usize;
+        let mut m = HashMap::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let k = self.s()?;
+            let v = self.u32()?;
+            m.insert(k, v);
+        }
+        Some(m)
+    }
+}
+
+fn type_tag(t: Type) -> u8 {
+    match t {
+        Type::Void => 0,
+        Type::I1 => 1,
+        Type::I32 => 2,
+        Type::F32 => 3,
+        Type::Ptr(AddrSpace::Global) => 4,
+        Type::Ptr(AddrSpace::Local) => 5,
+        Type::Ptr(AddrSpace::Const) => 6,
+        Type::Ptr(AddrSpace::Private) => 7,
+    }
+}
+
+fn type_from_tag(tag: u8) -> Option<Type> {
+    Some(match tag {
+        0 => Type::Void,
+        1 => Type::I1,
+        2 => Type::I32,
+        3 => Type::F32,
+        4 => Type::Ptr(AddrSpace::Global),
+        5 => Type::Ptr(AddrSpace::Local),
+        6 => Type::Ptr(AddrSpace::Const),
+        7 => Type::Ptr(AddrSpace::Private),
+        _ => return None,
+    })
+}
+
+pub(crate) fn encode_payload(image: &ProgramImage, kernels: &[KernelEntry]) -> Vec<u8> {
+    let mut w = W::default();
+    w.s(&image.target);
+    w.s(&image.kernel);
+    // Instructions travel in their encoded form; decode on read
+    // re-validates every opcode.
+    w.u32(image.words.len() as u32);
+    for &word in &image.words {
+        w.u64(word);
+    }
+    w.u32(image.data.len() as u32);
+    for (addr, bytes) in &image.data {
+        w.u32(*addr);
+        w.bytes(bytes);
+    }
+    w.u32(image.data_end);
+    w.str_u32_map(&image.global_addr);
+    w.str_u32_map(&image.global_size);
+    w.u32(image.args_addr);
+    w.u32(image.local_mem_size);
+    w.str_u32_map(&image.func_entries);
+    w.u32(image.pc_loc.len() as u32);
+    for loc in &image.pc_loc {
+        match loc {
+            Some(l) => {
+                w.u8(1);
+                w.u32(l.line);
+                w.u32(l.col);
+            }
+            None => w.u8(0),
+        }
+    }
+    w.u32(image.crt0_len);
+    w.u32(image.pc_spill.len() as u32);
+    for &s in &image.pc_spill {
+        w.b(s);
+    }
+    let am = image.addr_map;
+    w.u32(am.data_base);
+    w.u32(am.local_base);
+    w.u32(am.stack_base);
+    w.u32(am.stack_size);
+    w.u32(am.heap_base);
+    w.u32(kernels.len() as u32);
+    for k in kernels {
+        w.s(&k.name);
+        w.s(&k.entry_symbol);
+        w.u32(k.entry_pc);
+        w.u32(k.params.len() as u32);
+        for (name, ty) in &k.params {
+            w.s(name);
+            w.u8(type_tag(*ty));
+        }
+        w.u32(k.local_mem);
+        w.b(k.uses_barrier);
+    }
+    w.buf
+}
+
+fn decode_payload(buf: &[u8]) -> Option<(ProgramImage, Vec<KernelEntry>)> {
+    let mut r = R { buf, pos: 0 };
+    let target = r.s()?;
+    let kernel = r.s()?;
+    let n_words = r.u32()? as usize;
+    let mut words = Vec::with_capacity(n_words.min(1 << 22));
+    for _ in 0..n_words {
+        words.push(r.u64()?);
+    }
+    let code: Vec<MachInst> = words
+        .iter()
+        .map(|&w| MachInst::decode(w))
+        .collect::<Option<Vec<_>>>()?;
+    let n_data = r.u32()? as usize;
+    let mut data = Vec::with_capacity(n_data.min(1 << 16));
+    for _ in 0..n_data {
+        let addr = r.u32()?;
+        let bytes = r.bytes()?;
+        data.push((addr, bytes));
+    }
+    let data_end = r.u32()?;
+    let global_addr = r.str_u32_map()?;
+    let global_size = r.str_u32_map()?;
+    let args_addr = r.u32()?;
+    let local_mem_size = r.u32()?;
+    let func_entries = r.str_u32_map()?;
+    let n_loc = r.u32()? as usize;
+    if n_loc != code.len() {
+        return None; // pc_loc must stay parallel to code
+    }
+    let mut pc_loc = Vec::with_capacity(n_loc.min(1 << 22));
+    for _ in 0..n_loc {
+        pc_loc.push(match r.u8()? {
+            0 => None,
+            1 => Some(Loc {
+                line: r.u32()?,
+                col: r.u32()?,
+            }),
+            _ => return None,
+        });
+    }
+    let crt0_len = r.u32()?;
+    let n_spill = r.u32()? as usize;
+    if n_spill != code.len() {
+        return None;
+    }
+    let mut pc_spill = Vec::with_capacity(n_spill.min(1 << 22));
+    for _ in 0..n_spill {
+        pc_spill.push(r.b()?);
+    }
+    let addr_map = AddressMap {
+        data_base: r.u32()?,
+        local_base: r.u32()?,
+        stack_base: r.u32()?,
+        stack_size: r.u32()?,
+        heap_base: r.u32()?,
+    };
+    let n_kernels = r.u32()? as usize;
+    let mut kernels = Vec::with_capacity(n_kernels.min(1 << 12));
+    for _ in 0..n_kernels {
+        let name = r.s()?;
+        let entry_symbol = r.s()?;
+        let entry_pc = r.u32()?;
+        let n_params = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_params.min(1 << 8));
+        for _ in 0..n_params {
+            let pname = r.s()?;
+            let ty = type_from_tag(r.u8()?)?;
+            params.push((pname, ty));
+        }
+        let local_mem = r.u32()?;
+        let uses_barrier = r.b()?;
+        kernels.push(KernelEntry {
+            name,
+            entry_symbol,
+            entry_pc,
+            params,
+            local_mem,
+            uses_barrier,
+        });
+    }
+    if r.pos != buf.len() {
+        return None; // trailing garbage
+    }
+    Some((
+        ProgramImage {
+            code,
+            words,
+            data,
+            data_end,
+            global_addr,
+            global_size,
+            args_addr,
+            local_mem_size,
+            kernel,
+            func_entries,
+            pc_loc,
+            crt0_len,
+            pc_spill,
+            target,
+            addr_map,
+        },
+        kernels,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::session::compile_program;
+    use crate::driver::VoltOptions;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "volt-dc-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample() -> crate::driver::session::Program {
+        compile_program(
+            r#"
+kernel void double_it(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] * 2;
+}
+"#,
+            &VoltOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_lossless_and_deterministic() {
+        let p = sample();
+        let dir = tmpdir("rt");
+        let mut dc = DiskCache::new(&dir, 0);
+        dc.store(p.fingerprint, &p.image, &p.kernels);
+        let mut dc2 = DiskCache::new(&dir, 0);
+        let DiskLookup::Hit(hit) = dc2.load(p.fingerprint) else {
+            panic!("expected hit");
+        };
+        let (image, kernels) = *hit;
+        assert_eq!(image.words, p.image.words);
+        assert_eq!(image.code.len(), p.image.code.len());
+        assert_eq!(image.data, p.image.data);
+        assert_eq!(image.func_entries, p.image.func_entries);
+        assert_eq!(image.pc_loc, p.image.pc_loc);
+        assert_eq!(image.pc_spill, p.image.pc_spill);
+        assert_eq!(image.target, p.image.target);
+        assert_eq!(kernels.len(), p.kernels.len());
+        assert_eq!(kernels[0].name, "double_it");
+        assert_eq!(kernels[0].params, p.kernels[0].params);
+        // Deterministic bytes: re-encoding the decoded entry is identical.
+        assert_eq!(
+            encode_payload(&image, &kernels),
+            encode_payload(&p.image, &p.kernels)
+        );
+        assert_eq!(dc2.hits, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flipped_byte_quarantines_and_degrades_to_miss() {
+        let p = sample();
+        let dir = tmpdir("corrupt");
+        let mut dc = DiskCache::new(&dir, 0);
+        dc.store(p.fingerprint, &p.image, &p.kernels);
+        let path = dc.entry_path(p.fingerprint);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+
+        let mut dc2 = DiskCache::new(&dir, 0);
+        assert!(matches!(dc2.load(p.fingerprint), DiskLookup::Corrupt));
+        assert_eq!(dc2.corrupt, 1);
+        assert_eq!(dc2.quarantined(), 1, "bad entry must be quarantined");
+        assert!(!path.exists(), "bad entry must leave the cache dir");
+        // The poisoned key is now a plain miss.
+        assert!(matches!(dc2.load(p.fingerprint), DiskLookup::Miss));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncation_and_key_mismatch_are_corrupt() {
+        let p = sample();
+        let dir = tmpdir("trunc");
+        let mut dc = DiskCache::new(&dir, 0);
+        dc.store(p.fingerprint, &p.image, &p.kernels);
+        let path = dc.entry_path(p.fingerprint);
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(matches!(dc.load(p.fingerprint), DiskLookup::Corrupt));
+
+        // An entry copied to the wrong key (embedded key mismatch).
+        dc.store(p.fingerprint, &p.image, &p.kernels);
+        let other = p.fingerprint ^ 1;
+        fs::copy(dc.entry_path(p.fingerprint), dc.entry_path(other)).unwrap();
+        assert!(matches!(dc.load(other), DiskLookup::Corrupt));
+        assert_eq!(dc.corrupt, 2);
+        assert_eq!(dc.quarantined(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_drops_least_recently_used_first() {
+        let p = sample();
+        let entry_size = {
+            let dir = tmpdir("size");
+            let mut dc = DiskCache::new(&dir, 0);
+            dc.store(p.fingerprint, &p.image, &p.kernels);
+            let n = fs::metadata(dc.entry_path(p.fingerprint)).unwrap().len();
+            let _ = fs::remove_dir_all(&dir);
+            n
+        };
+        let dir = tmpdir("evict");
+        // Cap fits two entries but not three.
+        let mut dc = DiskCache::new(&dir, entry_size * 2 + entry_size / 2);
+        let (k1, k2, k3) = (p.fingerprint, p.fingerprint ^ 2, p.fingerprint ^ 4);
+        dc.store(k1, &p.image, &p.kernels);
+        dc.store(k2, &p.image, &p.kernels);
+        assert_eq!(dc.evicted, 0);
+        // Touch k1 so k2 is the LRU entry when k3 forces an eviction.
+        assert!(matches!(dc.load(k1), DiskLookup::Hit(_)));
+        dc.store(k3, &p.image, &p.kernels);
+        assert_eq!(dc.evicted, 1);
+        assert!(matches!(dc.load(k2), DiskLookup::Miss), "LRU entry evicted");
+        assert!(matches!(dc.load(k1), DiskLookup::Hit(_)));
+        assert!(matches!(dc.load(k3), DiskLookup::Hit(_)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -14,7 +14,9 @@ use crate::runtime::RuntimeError;
 use crate::sim::SimError;
 use std::fmt;
 
-#[derive(Debug)]
+// `Clone` so a faulted stream can retain the original typed cause and
+// hand an owned copy back from every subsequent call (`volt::resilience`).
+#[derive(Debug, Clone)]
 pub enum VoltError {
     /// Lex / parse / semantic failure, with the 1-based source line
     /// (0 when the failure is not tied to a specific line, e.g. an empty

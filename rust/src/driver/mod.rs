@@ -32,15 +32,17 @@
 //! # Ok::<(), volt::driver::VoltError>(())
 //! ```
 
+pub mod diskcache;
 pub mod error;
 pub mod options;
 pub mod session;
 pub mod stream;
 
 pub use crate::check::{CheckId, CheckMode, Diag};
+pub use diskcache::{DiskCache, DiskLookup};
 pub use error::VoltError;
 pub use options::{VoltOptions, VoltOptionsBuilder};
 pub use session::{
     compile_program, fingerprint, CacheStats, CompileTimings, KernelEntry, Program, Session,
 };
-pub use stream::{CommandKind, Event, Stream, Transfer};
+pub use stream::{CommandKind, Event, Stream, StreamFault, Transfer};

@@ -8,6 +8,7 @@
 //! `compile_source`, a `Program` exposes a launchable entry for *every*
 //! kernel in the module, not just `kernels[0]`.
 
+use super::diskcache::{DiskCache, DiskLookup};
 use super::error::VoltError;
 use super::options::{Fnv1a, VoltOptions};
 use super::stream::Stream;
@@ -73,17 +74,31 @@ impl Program {
     }
 }
 
-/// Binary-cache hit/miss counters.
+/// Binary-cache counters across both tiers. `hits`/`misses` keep their
+/// original meaning — in-memory hits and full compiles — so existing
+/// consumers are unaffected; the `disk_*` fields stay zero unless the
+/// session was built with [`Session::with_disk_cache`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// In-memory cache hits.
     pub hits: u64,
+    /// Full compiles (neither tier had the entry).
     pub misses: u64,
+    /// Programs served from the persistent tier.
+    pub disk_hits: u64,
+    /// Persistent entries that failed validation (quarantined, recompiled).
+    pub disk_corrupt: u64,
+    /// Persistent entries evicted by the size cap.
+    pub disk_evicted: u64,
 }
 
-/// A compile-and-run session: configuration + binary cache.
+/// A compile-and-run session: configuration + binary cache (an in-memory
+/// tier, plus an optional persistent tier — see
+/// [`Session::with_disk_cache`]).
 pub struct Session {
     opts: VoltOptions,
     cache: HashMap<u64, Arc<Program>>,
+    disk: Option<DiskCache>,
     stats: CacheStats,
     /// Diagnostics from the last compile's static-checker run (empty when
     /// the checker is off or the kernels were clean).
@@ -95,9 +110,31 @@ impl Session {
         Session {
             opts,
             cache: HashMap::new(),
+            disk: None,
             stats: CacheStats::default(),
             last_check: Vec::new(),
         }
+    }
+
+    /// Session with a persistent content-addressed cache tier under
+    /// `dir`, capped at `max_bytes` (`0` = uncapped). Programs compiled
+    /// here are stored on disk and served back — checksum-verified — by
+    /// any later session pointed at the same directory. Corrupt entries
+    /// are quarantined and recompiled, never a crash; all disk I/O is
+    /// best-effort, so an unusable directory degrades to plain misses.
+    pub fn with_disk_cache(
+        opts: VoltOptions,
+        dir: impl AsRef<std::path::Path>,
+        max_bytes: u64,
+    ) -> Session {
+        let mut s = Session::new(opts);
+        s.disk = Some(DiskCache::new(dir, max_bytes));
+        s
+    }
+
+    /// The persistent tier, when one is attached.
+    pub fn disk_cache(&self) -> Option<&DiskCache> {
+        self.disk.as_ref()
     }
 
     /// Session with the paper's default configuration.
@@ -159,10 +196,34 @@ impl Session {
                 return Ok(p.clone());
             }
         }
+        // Persistent tier: a verified entry skips the whole pipeline (the
+        // stored image is checksum-validated and every instruction
+        // re-decoded); middle-end/timing reports default — the passes did
+        // not run. Corrupt entries were quarantined by the cache and fall
+        // through to a recompile.
+        if let Some(disk) = &mut self.disk {
+            if let DiskLookup::Hit(hit) = disk.load(key) {
+                let (image, kernels) = *hit;
+                let prog = Arc::new(Program {
+                    image,
+                    kernels,
+                    middle: MiddleEndReport::default(),
+                    timings: CompileTimings::default(),
+                    fingerprint: key,
+                });
+                if self.opts.cache {
+                    self.cache.insert(key, prog.clone());
+                }
+                return Ok(prog);
+            }
+        }
         self.stats.misses += 1;
         let prog = Arc::new(compile_program_keyed(src, &self.opts, key)?);
         if self.opts.cache {
             self.cache.insert(key, prog.clone());
+        }
+        if let Some(disk) = &mut self.disk {
+            disk.store(key, &prog.image, &prog.kernels);
         }
         Ok(prog)
     }
@@ -179,7 +240,13 @@ impl Session {
     }
 
     pub fn cache_stats(&self) -> CacheStats {
-        self.stats
+        let mut s = self.stats;
+        if let Some(d) = &self.disk {
+            s.disk_hits = d.hits;
+            s.disk_corrupt = d.corrupt;
+            s.disk_evicted = d.evicted;
+        }
+        s
     }
 
     pub fn cached_programs(&self) -> usize {
@@ -310,12 +377,12 @@ kernel void add1(global int* x, int n) {
         let mut s = Session::with_defaults();
         let p1 = s.compile(TWO_KERNELS).unwrap();
         let p2 = s.compile(TWO_KERNELS).unwrap();
-        assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 1, ..Default::default() });
         assert!(Arc::ptr_eq(&p1, &p2));
         // Different source: miss.
         s.compile("kernel void k(global int* o) { o[0] = 1; }")
             .unwrap();
-        assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 2, ..Default::default() });
         assert_eq!(s.cached_programs(), 2);
         s.clear_cache();
         assert_eq!(s.cached_programs(), 0);
@@ -331,7 +398,7 @@ kernel void add1(global int* x, int n) {
         );
         s.compile(TWO_KERNELS).unwrap();
         s.compile(TWO_KERNELS).unwrap();
-        assert_eq!(s.cache_stats(), CacheStats { hits: 0, misses: 2 });
+        assert_eq!(s.cache_stats(), CacheStats { hits: 0, misses: 2, ..Default::default() });
         assert_eq!(s.cached_programs(), 0);
     }
 
@@ -391,5 +458,103 @@ kernel void k(global float* in, global float* out) {
         }
         let e = s.compile("int f(int x) { return x; }").unwrap_err();
         assert!(matches!(e, VoltError::Frontend { line: 0, .. }));
+    }
+
+    fn disk_dir(tag: &str) -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "volt-session-dc-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn run_double_it(p: &Arc<Program>, s: &Session) -> Vec<u32> {
+        use crate::runtime::ArgValue;
+        let mut st = s.create_stream(p);
+        let buf = st.malloc(64 * 4);
+        st.enqueue_write_u32(buf, &(0..64u32).collect::<Vec<_>>())
+            .unwrap();
+        st.enqueue_launch(
+            "double_it",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(buf), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t = st.enqueue_read_u32(buf, 64);
+        st.synchronize().unwrap();
+        st.take_u32(t).unwrap()
+    }
+
+    const DOUBLE_IT: &str = r#"
+kernel void double_it(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] * 2;
+}
+"#;
+
+    #[test]
+    fn disk_cache_serves_later_sessions() {
+        let dir = disk_dir("hit");
+        let opts = || crate::driver::VoltOptions::builder().build().unwrap();
+
+        let mut s1 = Session::with_disk_cache(opts(), &dir, 0);
+        let p1 = s1.compile(DOUBLE_IT).unwrap();
+        assert_eq!(s1.cache_stats().misses, 1);
+        let r1 = run_double_it(&p1, &s1);
+
+        // A fresh session (empty memory cache) is served from disk: no
+        // full compile, identical fingerprint, image and results.
+        let mut s2 = Session::with_disk_cache(opts(), &dir, 0);
+        let p2 = s2.compile(DOUBLE_IT).unwrap();
+        let stats = s2.cache_stats();
+        assert_eq!(stats.misses, 0, "disk hit must not recompile");
+        assert_eq!(stats.disk_hits, 1);
+        assert_eq!(p2.fingerprint, p1.fingerprint);
+        assert_eq!(p2.image.words, p1.image.words);
+        assert_eq!(run_double_it(&p2, &s2), r1);
+
+        // Within s2 the program is now also in the memory tier.
+        s2.compile(DOUBLE_IT).unwrap();
+        assert_eq!(s2.cache_stats().hits, 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_disk_entry_recompiles_and_quarantines() {
+        let dir = disk_dir("corrupt");
+        let opts = || crate::driver::VoltOptions::builder().build().unwrap();
+
+        let mut s1 = Session::with_disk_cache(opts(), &dir, 0);
+        let p1 = s1.compile(DOUBLE_IT).unwrap();
+        let path = s1.disk_cache().unwrap().entry_path(p1.fingerprint);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+
+        // The flipped byte is a logged miss + successful recompile —
+        // never a crash — and the bad entry is quarantined.
+        let mut s2 = Session::with_disk_cache(opts(), &dir, 0);
+        let p2 = s2.compile(DOUBLE_IT).unwrap();
+        let stats = s2.cache_stats();
+        assert_eq!(stats.disk_corrupt, 1);
+        assert_eq!(stats.disk_hits, 0);
+        assert_eq!(stats.misses, 1, "corrupt entry must recompile");
+        assert_eq!(s2.disk_cache().unwrap().quarantined(), 1);
+        assert_eq!(p2.image.words, p1.image.words);
+        assert_eq!(run_double_it(&p2, &s2), run_double_it(&p1, &s1));
+
+        // The recompile re-stored a good entry; a third session hits.
+        let mut s3 = Session::with_disk_cache(opts(), &dir, 0);
+        s3.compile(DOUBLE_IT).unwrap();
+        assert_eq!(s3.cache_stats().disk_hits, 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -12,11 +12,24 @@
 //! Launches are validated at *enqueue* time against the program's kernel
 //! table (name and argument count), so API misuse surfaces as a typed
 //! error before any simulation runs.
+//!
+//! # Fault containment
+//!
+//! A command that fails during [`Stream::synchronize`] puts the stream
+//! into a sticky *faulted* state ([`Stream::fault`]): the residual queue
+//! is discarded, every not-yet-executed device-to-host transfer is marked
+//! `Failed`, and all subsequent enqueues and synchronizes return a clone
+//! of the original typed cause until [`Stream::recover`] clears it.
+//! Streams run their device transactionally (a pre-launch global-memory
+//! snapshot), so a trapped launch rolls back and the device holds the
+//! last consistent state. Transient traps can be retried automatically
+//! by attaching a [`LaunchPolicy`] ([`Stream::set_launch_policy`] /
+//! [`Stream::enqueue_launch_with_policy`]).
 
 use super::error::VoltError;
 use super::session::Program;
 use crate::prof::report::KernelProfile;
-use crate::runtime::{ArgValue, DevicePtr, VoltDevice};
+use crate::runtime::{ArgValue, DevicePtr, LaunchPolicy, VoltDevice};
 use crate::sim::{SimConfig, SimStats};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -38,7 +51,8 @@ enum Slot {
     Pending,
     /// Executed; data waiting to be taken.
     Ready(Vec<u8>),
-    /// The D2H command failed during synchronize; no data will arrive.
+    /// The D2H command failed, or was discarded because an earlier
+    /// command faulted the stream; no data will arrive.
     Failed,
     /// Data already handed out.
     Taken,
@@ -68,6 +82,17 @@ pub struct Event {
     pub instrs: u64,
 }
 
+/// Why a stream is faulted: the command that failed and its typed cause.
+/// Held by the stream until [`Stream::recover`]; every call made while
+/// faulted hands back a clone of `cause`.
+#[derive(Clone, Debug)]
+pub struct StreamFault {
+    /// Label of the failing command (kernel name, symbol, `h2d`/`d2h`).
+    pub label: String,
+    pub kind: CommandKind,
+    pub cause: VoltError,
+}
+
 enum Cmd {
     H2D {
         dst: DevicePtr,
@@ -83,6 +108,8 @@ enum Cmd {
         grid: [u32; 3],
         block: [u32; 3],
         args: Vec<ArgValue>,
+        /// Per-launch override of the stream's launch policy.
+        policy: Option<LaunchPolicy>,
     },
     SymbolWrite {
         symbol: String,
@@ -104,6 +131,7 @@ pub struct Stream {
     queue: VecDeque<Cmd>,
     slots: Vec<Slot>,
     events: Vec<Event>,
+    fault: Option<StreamFault>,
 }
 
 /// Process-unique stream ids so [`Transfer`] handles cannot be redeemed
@@ -121,6 +149,10 @@ impl Stream {
     pub fn with_profiling(program: Arc<Program>, cfg: SimConfig, profiling: bool) -> Stream {
         let mut dev = VoltDevice::new(program.image.clone(), cfg);
         dev.profiling = profiling;
+        // Streams promise containment: a trapped launch must leave the
+        // device at the last consistent state, so every launch runs
+        // against a pre-launch snapshot.
+        dev.transactional = true;
         Stream {
             id: NEXT_STREAM_ID.fetch_add(1, Ordering::Relaxed),
             program,
@@ -128,11 +160,45 @@ impl Stream {
             queue: VecDeque::new(),
             slots: vec![],
             events: vec![],
+            fault: None,
         }
     }
 
     pub fn program(&self) -> &Arc<Program> {
         &self.program
+    }
+
+    /// The sticky fault, if a command failed during a past synchronize.
+    pub fn fault(&self) -> Option<&StreamFault> {
+        self.fault.as_ref()
+    }
+
+    pub fn is_faulted(&self) -> bool {
+        self.fault.is_some()
+    }
+
+    /// Clear the sticky fault (and the underlying device's fault latch),
+    /// returning what was cleared. Device memory stays at the last
+    /// consistent state — the transactional rollback already undid the
+    /// failing launch — so the caller can re-enqueue and continue.
+    pub fn recover(&mut self) -> Option<StreamFault> {
+        let f = self.fault.take()?;
+        self.dev.clear_fault();
+        Some(f)
+    }
+
+    /// Launch policy applied to subsequent launches enqueued without an
+    /// explicit per-launch policy (see
+    /// [`Stream::enqueue_launch_with_policy`]).
+    pub fn set_launch_policy(&mut self, policy: LaunchPolicy) {
+        self.dev.policy = policy;
+    }
+
+    fn check_fault(&self) -> Result<(), VoltError> {
+        match &self.fault {
+            Some(f) => Err(f.cause.clone()),
+            None => Ok(()),
+        }
     }
 
     /// Device-memory allocation is host-side bookkeeping and immediate.
@@ -143,26 +209,34 @@ impl Stream {
     /// Release a buffer *in stream order*: the free executes at
     /// `synchronize()` after every previously enqueued command, so queued
     /// copies/launches still referencing the buffer cannot be clobbered
-    /// by an immediate reallocation (cudaFreeAsync semantics).
+    /// by an immediate reallocation (cudaFreeAsync semantics). On a
+    /// faulted stream nothing else will run, so the free applies
+    /// immediately (no leak across recovery).
     pub fn free(&mut self, ptr: DevicePtr, size: u32) {
-        self.queue.push_back(Cmd::Free { ptr, size });
+        if self.fault.is_some() {
+            self.dev.free(ptr, size);
+        } else {
+            self.queue.push_back(Cmd::Free { ptr, size });
+        }
     }
 
-    pub fn enqueue_write_bytes(&mut self, dst: DevicePtr, bytes: &[u8]) {
+    pub fn enqueue_write_bytes(&mut self, dst: DevicePtr, bytes: &[u8]) -> Result<(), VoltError> {
+        self.check_fault()?;
         self.queue.push_back(Cmd::H2D {
             dst,
             bytes: bytes.to_vec(),
         });
+        Ok(())
     }
 
-    pub fn enqueue_write_f32(&mut self, dst: DevicePtr, vals: &[f32]) {
+    pub fn enqueue_write_f32(&mut self, dst: DevicePtr, vals: &[f32]) -> Result<(), VoltError> {
         let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
-        self.queue.push_back(Cmd::H2D { dst, bytes });
+        self.enqueue_write_bytes(dst, &bytes)
     }
 
-    pub fn enqueue_write_u32(&mut self, dst: DevicePtr, vals: &[u32]) {
+    pub fn enqueue_write_u32(&mut self, dst: DevicePtr, vals: &[u32]) -> Result<(), VoltError> {
         let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.queue.push_back(Cmd::H2D { dst, bytes });
+        self.enqueue_write_bytes(dst, &bytes)
     }
 
     /// Enqueue a `cudaMemcpyToSymbol`-style write; materialized by the
@@ -175,6 +249,7 @@ impl Stream {
         bytes: &[u8],
         offset: u32,
     ) -> Result<(), VoltError> {
+        self.check_fault()?;
         if let Some(msg) = self
             .program
             .image
@@ -199,6 +274,33 @@ impl Stream {
         block: [u32; 3],
         args: &[ArgValue],
     ) -> Result<(), VoltError> {
+        self.enqueue_launch_inner(kernel, grid, block, args, None)
+    }
+
+    /// [`Stream::enqueue_launch`] with a per-launch [`LaunchPolicy`]
+    /// override (retries for transient faults, a launch watchdog). The
+    /// stream's default policy ([`Stream::set_launch_policy`]) applies to
+    /// launches enqueued without one.
+    pub fn enqueue_launch_with_policy(
+        &mut self,
+        kernel: &str,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: &[ArgValue],
+        policy: LaunchPolicy,
+    ) -> Result<(), VoltError> {
+        self.enqueue_launch_inner(kernel, grid, block, args, Some(policy))
+    }
+
+    fn enqueue_launch_inner(
+        &mut self,
+        kernel: &str,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: &[ArgValue],
+        policy: Option<LaunchPolicy>,
+    ) -> Result<(), VoltError> {
+        self.check_fault()?;
         let Some(entry) = self.program.kernel(kernel) else {
             return Err(VoltError::stream(format!(
                 "program has no kernel '{kernel}' (kernels: {})",
@@ -217,16 +319,22 @@ impl Stream {
             grid,
             block,
             args: args.to_vec(),
+            policy,
         });
         Ok(())
     }
 
     /// Enqueue a device-to-host read of `len` bytes; redeem the returned
-    /// [`Transfer`] after [`Stream::synchronize`].
+    /// [`Transfer`] after [`Stream::synchronize`]. On a faulted stream
+    /// the transfer is born `Failed` (redeeming it reports the fault).
     pub fn enqueue_read(&mut self, src: DevicePtr, len: usize) -> Transfer {
         let slot = self.slots.len();
-        self.slots.push(Slot::Pending);
-        self.queue.push_back(Cmd::D2H { src, len, slot });
+        if self.fault.is_some() {
+            self.slots.push(Slot::Failed);
+        } else {
+            self.slots.push(Slot::Pending);
+            self.queue.push_back(Cmd::D2H { src, len, slot });
+        }
         Transfer {
             stream: self.id,
             slot,
@@ -246,10 +354,33 @@ impl Stream {
         self.queue.len()
     }
 
-    /// Execute every queued command in FIFO order. Already-completed work
-    /// is kept on error; the failing command is consumed (the error names
-    /// it) and commands behind it stay queued.
+    /// Discard the residual queue after a fault: not-yet-executed D2H
+    /// commands mark their slots `Failed`, queued frees still apply
+    /// (host-side bookkeeping; nothing that could reuse the memory will
+    /// run), everything else is dropped.
+    fn fail_residual(&mut self) {
+        while let Some(cmd) = self.queue.pop_front() {
+            match cmd {
+                Cmd::D2H { slot, .. } => self.slots[slot] = Slot::Failed,
+                Cmd::Free { ptr, size } => self.dev.free(ptr, size),
+                _ => {}
+            }
+        }
+    }
+
+    /// Execute every queued command in FIFO order.
+    ///
+    /// # Error contract
+    ///
+    /// Already-completed work is kept. If a command fails, the stream
+    /// becomes faulted ([`Stream::fault`]): the queue is cleared,
+    /// transfers enqueued after the failing command are marked `Failed`,
+    /// the event log is truncated at the fault (only completed commands
+    /// have events), and this call — like every later enqueue /
+    /// synchronize until [`Stream::recover`] — returns the original typed
+    /// cause.
     pub fn synchronize(&mut self) -> Result<(), VoltError> {
+        self.check_fault()?;
         while let Some(cmd) = self.queue.pop_front() {
             let (label, kind) = match &cmd {
                 Cmd::H2D { .. } => ("h2d".to_string(), CommandKind::H2D),
@@ -260,15 +391,18 @@ impl Stream {
             };
             let start_cycles = self.dev.total_stats.cycles;
             let mut instrs = 0;
-            match cmd {
+            let result: Result<(), VoltError> = match cmd {
                 Cmd::H2D { dst, bytes } => {
-                    self.dev.memcpy_h2d(dst, &bytes)?;
+                    self.dev.memcpy_h2d(dst, &bytes).map_err(VoltError::from)
                 }
                 Cmd::D2H { src, len, slot } => match self.dev.memcpy_d2h(src, len) {
-                    Ok(data) => self.slots[slot] = Slot::Ready(data),
+                    Ok(data) => {
+                        self.slots[slot] = Slot::Ready(data);
+                        Ok(())
+                    }
                     Err(e) => {
                         self.slots[slot] = Slot::Failed;
-                        return Err(e.into());
+                        Err(e.into())
                     }
                 },
                 Cmd::Launch {
@@ -276,20 +410,38 @@ impl Stream {
                     grid,
                     block,
                     args,
+                    policy,
                 } => {
-                    let stats = self.dev.launch(&kernel, grid, block, &args)?;
-                    instrs = stats.instrs;
+                    let p = policy.unwrap_or(self.dev.policy);
+                    match self.dev.launch_with_policy(&kernel, grid, block, &args, p) {
+                        Ok(stats) => {
+                            instrs = stats.instrs;
+                            Ok(())
+                        }
+                        Err(e) => Err(e.into()),
+                    }
                 }
                 Cmd::SymbolWrite {
                     symbol,
                     offset,
                     bytes,
-                } => {
-                    self.dev.memcpy_to_symbol(&symbol, &bytes, offset)?;
-                }
+                } => self
+                    .dev
+                    .memcpy_to_symbol(&symbol, &bytes, offset)
+                    .map_err(VoltError::from),
                 Cmd::Free { ptr, size } => {
                     self.dev.free(ptr, size);
+                    Ok(())
                 }
+            };
+            if let Err(cause) = result {
+                self.fail_residual();
+                self.fault = Some(StreamFault {
+                    label,
+                    kind,
+                    cause: cause.clone(),
+                });
+                return Err(cause);
             }
             self.events.push(Event {
                 label,
@@ -304,13 +456,20 @@ impl Stream {
 
     /// Redeem a completed transfer. Typed errors distinguish a handle
     /// from another stream, a transfer not yet synchronized, a transfer
-    /// whose command failed, and a handle already taken.
+    /// whose command failed (naming the stream fault when one is latched),
+    /// and a handle already taken.
     pub fn take_bytes(&mut self, t: Transfer) -> Result<Vec<u8>, VoltError> {
         if t.stream != self.id {
             return Err(VoltError::stream(
                 "transfer handle belongs to a different stream",
             ));
         }
+        let fault_msg = self.fault.as_ref().map(|f| {
+            format!(
+                "transfer failed: stream faulted at '{}': {}",
+                f.label, f.cause
+            )
+        });
         let slot = self
             .slots
             .get_mut(t.slot)
@@ -325,9 +484,9 @@ impl Stream {
             }
             Slot::Failed => {
                 *slot = Slot::Failed;
-                Err(VoltError::stream(
-                    "transfer's d2h command failed during synchronize()",
-                ))
+                Err(VoltError::stream(fault_msg.unwrap_or_else(|| {
+                    "transfer's d2h command failed during synchronize()".to_string()
+                })))
             }
             Slot::Taken => Err(VoltError::stream("transfer was already taken")),
         }
@@ -420,11 +579,18 @@ impl Stream {
 mod tests {
     use super::*;
     use crate::driver::{Session, VoltOptions};
+    use crate::sim::{FaultKind, FaultPlan, FaultState};
 
     fn stream_for(src: &str) -> Stream {
         let mut s = Session::new(VoltOptions::builder().build().unwrap());
         let p = s.compile(src).unwrap();
         s.create_stream(&p)
+    }
+
+    /// Arm a deterministic fault plan on the stream's device (the plan
+    /// would normally come in through `SimConfig.faults`).
+    fn inject(st: &mut Stream, plan: FaultPlan) {
+        st.device_mut().gpu.faults = FaultState::new(plan);
     }
 
     #[test]
@@ -439,7 +605,7 @@ kernel void double_it(global int* x, int n) {
         );
         let buf = st.malloc(64 * 4);
         let data: Vec<u32> = (0..64).collect();
-        st.enqueue_write_u32(buf, &data);
+        st.enqueue_write_u32(buf, &data).unwrap();
         st.enqueue_launch(
             "double_it",
             [1, 1, 1],
@@ -472,7 +638,7 @@ kernel void double_it(global int* x, int n) {
     fn free_is_deferred_to_stream_order() {
         let mut st = stream_for("kernel void k(global int* o, int n) { o[0] = n; }");
         let a = st.malloc(256);
-        st.enqueue_write_u32(a, &[7u32; 4]);
+        st.enqueue_write_u32(a, &[7u32; 4]).unwrap();
         st.free(a, 256);
         // The queued write still references `a`: the allocator must not
         // hand its address out again before synchronize.
@@ -508,7 +674,7 @@ kernel void fill(global int* x, int v, int n) {
 "#,
         );
         let b = st.malloc(256);
-        st.enqueue_write_u32(b, &[0u32; 64]);
+        st.enqueue_write_u32(b, &[0u32; 64]).unwrap();
         st.enqueue_launch(
             "fill",
             [1, 1, 1],
@@ -528,5 +694,133 @@ kernel void fill(global int* x, int v, int n) {
         assert!(ev[1].instrs > 0);
         assert_eq!(ev[2].start_cycles, ev[1].end_cycles);
         assert_eq!(st.take_u32(t).unwrap(), vec![9u32; 64]);
+    }
+
+    /// The containment contract: a failing command faults the stream,
+    /// clears the residual queue, fails the pending transfers behind it,
+    /// truncates events at the fault, and stays sticky until recover().
+    #[test]
+    fn failed_command_faults_stream_and_defines_residual_queue() {
+        let mut st = stream_for(
+            r#"
+kernel void double_it(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] * 2;
+}
+"#,
+        );
+        inject(
+            &mut st,
+            FaultPlan::none().with(0, FaultKind::IllegalTrap { pc: None }),
+        );
+        let buf = st.malloc(64 * 4);
+        let data: Vec<u32> = (0..64).collect();
+        st.enqueue_write_u32(buf, &data).unwrap();
+        st.enqueue_launch(
+            "double_it",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(buf), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t1 = st.enqueue_read_u32(buf, 64);
+        let t2 = st.enqueue_read_u32(buf, 64);
+        let e = st.synchronize().unwrap_err();
+        assert!(e.to_string().contains("[injected]"), "{e}");
+
+        // Residual queue is defined: cleared, transfers Failed, events
+        // truncated at the fault (only the h2d completed).
+        assert_eq!(st.pending(), 0, "queue must be cleared on fault");
+        assert!(st.is_faulted());
+        let f = st.fault().unwrap();
+        assert_eq!(f.kind, CommandKind::Launch);
+        assert_eq!(f.label, "double_it");
+        assert_eq!(st.events().len(), 1);
+        assert_eq!(st.events()[0].kind, CommandKind::H2D);
+        let e = st.take_u32(t1).unwrap_err();
+        assert!(
+            e.to_string().contains("stream faulted at 'double_it'"),
+            "{e}"
+        );
+
+        // Sticky: every subsequent call returns the original cause.
+        let e = st.enqueue_write_u32(buf, &data).unwrap_err();
+        assert!(e.to_string().contains("[injected]"), "{e}");
+        let e = st
+            .enqueue_launch(
+                "double_it",
+                [1, 1, 1],
+                [64, 1, 1],
+                &[ArgValue::Ptr(buf), ArgValue::I32(64)],
+            )
+            .unwrap_err();
+        assert!(e.to_string().contains("[injected]"), "{e}");
+        let e = st.synchronize().unwrap_err();
+        assert!(e.to_string().contains("[injected]"), "{e}");
+        // Reads enqueued while faulted are born Failed.
+        let t3 = st.enqueue_read_u32(buf, 64);
+        assert!(st.take_u32(t3).is_err());
+
+        // Recovery: fault cleared, device rolled back, rerun succeeds
+        // (the injected fault was one-shot and already consumed).
+        let f = st.recover().expect("fault to clear");
+        assert_eq!(f.kind, CommandKind::Launch);
+        assert!(st.recover().is_none(), "recover is idempotent");
+        st.enqueue_launch(
+            "double_it",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(buf), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t = st.enqueue_read_u32(buf, 64);
+        st.synchronize().unwrap();
+        let want: Vec<u32> = (0..64).map(|i| i * 2).collect();
+        assert_eq!(
+            st.take_u32(t).unwrap(),
+            want,
+            "rollback must have restored the pre-launch input"
+        );
+        let _ = st.take_u32(t2).unwrap_err();
+    }
+
+    /// A LaunchPolicy with enough retries absorbs transient injected
+    /// faults; the stream never faults and results are correct.
+    #[test]
+    fn launch_policy_retries_transient_faults_on_stream() {
+        let mut st = stream_for(
+            r#"
+kernel void fill(global int* x, int v, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = v;
+}
+"#,
+        );
+        inject(
+            &mut st,
+            FaultPlan::none()
+                .with(0, FaultKind::IllegalTrap { pc: None })
+                .with(0, FaultKind::MemTrap { pc: None }),
+        );
+        st.set_launch_policy(LaunchPolicy {
+            retries: 2,
+            backoff_cycles: 0,
+            watchdog_max_cycles: None,
+        });
+        let b = st.malloc(256);
+        st.enqueue_write_u32(b, &[0u32; 64]).unwrap();
+        st.enqueue_launch(
+            "fill",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(b), ArgValue::I32(9), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t = st.enqueue_read_u32(b, 64);
+        st.synchronize().unwrap();
+        assert!(!st.is_faulted());
+        assert_eq!(st.take_u32(t).unwrap(), vec![9u32; 64]);
+        assert_eq!(st.device_mut().launches_recovered, 1);
+        assert_eq!(st.device_mut().retries_performed, 2);
     }
 }

@@ -9,7 +9,13 @@
 //! [`driver::Stream`] runs it CUDA/OpenCL-style (enqueue copies and
 //! launches, `synchronize()`, inspect per-command events with sim-cycle
 //! timestamps). All failures are typed [`driver::VoltError`]s naming the
-//! stage that produced them. The layers underneath, in pipeline order:
+//! stage that produced them — and they are *contained*: a trapped launch
+//! sticky-faults its device/stream until recovered, transient faults can
+//! be retried from a pre-launch snapshot ([`runtime::LaunchPolicy`]), a
+//! deterministic fault injector ([`sim::FaultPlan`]) makes those paths
+//! testable, and [`driver::Session::with_disk_cache`] adds a persistent,
+//! corruption-safe compile cache (see `docs/RESILIENCE.md`). The layers
+//! underneath, in pipeline order:
 //!
 //! * [`frontend`] — OpenCL-C / CUDA-C kernel dialect ("VCL") front-end:
 //!   lexing, parsing, semantic analysis, IR lowering, builtin libraries and

@@ -9,7 +9,8 @@ use volt::backend::emit::SharedMemMapping;
 use volt::coordinator::{benchmarks, experiments, report};
 use volt::driver::{Session, VoltOptions};
 use volt::frontend::Dialect;
-use volt::sim::SimConfig;
+use volt::runtime::LaunchPolicy;
+use volt::sim::{FaultPlan, SimConfig};
 use volt::target::TargetDesc;
 use volt::transform::OptLevel;
 
@@ -19,14 +20,22 @@ fn usage() -> ! {
 
 commands:
   compile <file> [--cuda] [--opt LEVEL] [--target T] [--asm] [--ir]
-                                                         compile a kernel file
+                 [--cache-dir DIR]                       compile a kernel file
+                                                         (--cache-dir adds a
+                                                         persistent, corruption-
+                                                         safe compile cache)
   run <benchmark> [--opt LEVEL] [--target T] [--sw-warp] [--smem-global]
                   [--no-fast-forward] [--sanitize]       run a registry benchmark
-                                                         (prints sim throughput;
-                                                         --no-fast-forward disables
+                  [--inject SPEC] [--retries N]          (prints sim throughput;
+                  [--backoff CYCLES] [--cache-dir DIR]   --no-fast-forward disables
                                                          the idle-cycle skip;
                                                          --sanitize enables the
-                                                         shadow-memory sanitizer)
+                                                         shadow-memory sanitizer;
+                                                         --inject arms deterministic
+                                                         faults, --retries/--backoff
+                                                         set the launch recovery
+                                                         policy, --cache-dir the
+                                                         persistent compile cache)
   check <benchmark|file> [--cuda] [--block X,Y,Z] [--json]
                                                          static SIMT verification:
                                                          barrier divergence, shared-
@@ -49,7 +58,9 @@ commands:
   figures --table1                                       per-stage LoC summary
 
 LEVEL: base | uni-hw | uni-ann | uni-func | zicond | recon | o3 (default: recon)
-T: vortex | vortex-min (default: vortex)"
+T: vortex | vortex-min (default: vortex)
+SPEC: ';'-separated faults — flip@CYCLE[:BIT] | trap@CYCLE[:PC] |
+      memtrap@CYCLE[:PC] | stuckbar@CYCLE | seed@SEED[:N[:HORIZON]]"
     );
     std::process::exit(2);
 }
@@ -141,7 +152,10 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
         print!("{}", volt::ir::printer::print_module(&m));
         return Ok(());
     }
-    let mut session = Session::new(opts);
+    let mut session = match opt_val(args, "--cache-dir") {
+        Some(dir) => Session::with_disk_cache(opts, dir, 0),
+        None => Session::new(opts),
+    };
     let out = session.compile(&src)?;
     let names: Vec<&str> = out.kernel_names();
     println!(
@@ -173,6 +187,16 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
     if flag(args, "--asm") {
         print!("{}", out.image.disassemble());
     }
+    if let Some(dc) = session.disk_cache() {
+        let c = session.cache_stats();
+        println!(
+            "disk-cache: hits={} corrupt={} evicted={} quarantined={}",
+            c.disk_hits,
+            c.disk_corrupt,
+            c.disk_evicted,
+            dc.quarantined()
+        );
+    }
     Ok(())
 }
 
@@ -189,6 +213,75 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let target = parse_target(args);
     let fast_forward = !flag(args, "--no-fast-forward");
     let sanitize = flag(args, "--sanitize");
+
+    // volt::resilience path: deterministic fault injection, launch-level
+    // recovery, and/or the persistent compile cache.
+    let inject = opt_val(args, "--inject");
+    let retries: u32 = opt_val(args, "--retries")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let backoff: u64 = opt_val(args, "--backoff")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let cache_dir = opt_val(args, "--cache-dir");
+    if inject.is_some() || retries > 0 || cache_dir.is_some() {
+        if target.name != "vortex" {
+            return Err(format!(
+                "--inject/--retries/--backoff/--cache-dir are only available with the \
+                 default vortex target, not --target {}",
+                target.name
+            ));
+        }
+        if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward || sanitize {
+            return Err(
+                "--inject/--retries/--cache-dir cannot be combined with \
+                 --sw-warp/--smem-global/--no-fast-forward/--sanitize"
+                    .to_string(),
+            );
+        }
+        let plan = match &inject {
+            Some(spec) => FaultPlan::parse(spec).map_err(|e| format!("--inject: {e}"))?,
+            None => FaultPlan::none(),
+        };
+        let policy = LaunchPolicy {
+            retries,
+            backoff_cycles: backoff,
+            watchdog_max_cycles: None,
+        };
+        let (r, rep) = experiments::run_bench_resilient(
+            &b,
+            level,
+            plan,
+            policy,
+            cache_dir.as_deref().map(std::path::Path::new),
+        )
+        .map_err(|e| e.to_string())?;
+        println!("benchmark {name} @ {level:?} on vortex: PASS (resilient)");
+        println!(
+            "  resilience: injected={} retries={} recovered={}",
+            rep.injected, rep.retries, rep.recovered
+        );
+        for l in &rep.fault_log {
+            println!("    fault: {l}");
+        }
+        if cache_dir.is_some() {
+            let c = rep.cache;
+            println!(
+                "  disk-cache: hits={} corrupt={} evicted={} quarantined={}",
+                c.disk_hits, c.disk_corrupt, c.disk_evicted, rep.quarantined
+            );
+        }
+        let s = &r.stats;
+        println!(
+            "  cycles {}  instrs {}  thread-instrs {}  IPC {:.3}",
+            s.cycles,
+            s.instrs,
+            s.thread_instrs,
+            s.ipc()
+        );
+        return Ok(());
+    }
+
     let t0 = std::time::Instant::now();
     let r = if target.name == "vortex" {
         let sim = SimConfig {

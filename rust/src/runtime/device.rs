@@ -15,6 +15,26 @@ use crate::prof::counters::Profiler;
 use crate::prof::report::{build_profile, KernelProfile};
 use crate::sim::{Gpu, SimConfig, SimError, SimStats};
 
+/// Per-launch recovery policy (`volt::resilience` layer 2): how many
+/// times a *transient* trap ([`crate::sim::TrapKind::transient`]) is
+/// rolled back and retried from the pre-launch snapshot, how many
+/// simulated cycles each recovery pause charges to the device's
+/// accumulated ledger, and an optional per-launch watchdog override.
+/// Deterministic faults (barrier deadlock, watchdog, structural errors)
+/// always pass straight through — replaying them yields the same hang.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaunchPolicy {
+    /// Max rollback-and-retry attempts after a transient trap (0 = fail
+    /// on the first trap, today's behavior).
+    pub retries: u32,
+    /// Simulated cycles charged to `total_stats` per retry (models the
+    /// reset/replay pause; never perturbs per-run stats).
+    pub backoff_cycles: u64,
+    /// Per-launch `max_cycles` override — a tight watchdog for launches
+    /// that must not hang the queue.
+    pub watchdog_max_cycles: Option<u64>,
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DevicePtr(pub u32);
 
@@ -37,13 +57,17 @@ impl ArgValue {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum RuntimeError {
     UnknownKernel(String),
     UnknownSymbol(String),
     BadLaunch(String),
     Sim(SimError),
     Mem(String),
+    /// The device is sticky-faulted by an earlier trapped launch; every
+    /// subsequent launch returns this until [`VoltDevice::reset`] (or a
+    /// stream-level recover) clears it.
+    Faulted { kernel: String, cause: SimError },
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -54,11 +78,35 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::BadLaunch(m) => write!(f, "bad launch: {m}"),
             RuntimeError::Sim(e) => write!(f, "{e}"),
             RuntimeError::Mem(m) => write!(f, "memory error: {m}"),
+            RuntimeError::Faulted { kernel, cause } => write!(
+                f,
+                "device is faulted (kernel '{kernel}' trapped: {cause}); \
+                 reset() the device or recover() the stream to continue"
+            ),
         }
     }
 }
 
 impl std::error::Error for RuntimeError {}
+
+/// What faulted a device: the trapped kernel, the trap, and how many
+/// attempts (1 + retries) were burned before giving up.
+#[derive(Clone, Debug)]
+pub struct DeviceFault {
+    pub kernel: String,
+    pub cause: SimError,
+    pub attempts: u32,
+}
+
+/// Device health. A trapped launch moves the device to `Faulted` and it
+/// stays there (sticky) until explicitly cleared — half-mutated memory
+/// is never silently reused.
+#[derive(Clone, Debug, Default)]
+pub enum DeviceState {
+    #[default]
+    Ready,
+    Faulted(DeviceFault),
+}
 
 /// Free-list entry for the device allocator.
 #[derive(Debug, Clone, Copy)]
@@ -82,6 +130,21 @@ pub struct VoltDevice {
     pub profiling: bool,
     /// Per-launch profiles, in launch order (only when `profiling`).
     pub profiles: Vec<KernelProfile>,
+    /// Default recovery policy applied by [`VoltDevice::launch`] — set
+    /// it once and every launch (including the registry validators,
+    /// which call `launch` directly) retries transient faults.
+    pub policy: LaunchPolicy,
+    /// Take a pre-launch snapshot on *every* launch, so even a launch
+    /// with no retry budget rolls memory back on a trap. Off by default
+    /// (the snapshot copies the heap — a wall-clock cost benches don't
+    /// want); streams turn it on for their devices. A snapshot is always
+    /// taken when `policy.retries > 0` or faults are armed, regardless.
+    pub transactional: bool,
+    /// Rollback-and-retry attempts performed across all launches.
+    pub retries_performed: u64,
+    /// Launches that trapped at least once but completed after retry.
+    pub launches_recovered: u64,
+    state: DeviceState,
 }
 
 impl VoltDevice {
@@ -96,7 +159,52 @@ impl VoltDevice {
             launches: 0,
             profiling: false,
             profiles: vec![],
+            policy: LaunchPolicy::default(),
+            transactional: false,
+            retries_performed: 0,
+            launches_recovered: 0,
+            state: DeviceState::Ready,
         }
+    }
+
+    /// Sticky fault from an earlier trapped launch, if any.
+    pub fn fault(&self) -> Option<&DeviceFault> {
+        match &self.state {
+            DeviceState::Faulted(f) => Some(f),
+            DeviceState::Ready => None,
+        }
+    }
+
+    pub fn is_faulted(&self) -> bool {
+        self.fault().is_some()
+    }
+
+    /// Acknowledge a sticky fault without rebuilding the machine: the
+    /// device returns to `Ready` with memory as the rollback left it
+    /// (rolled back to pre-launch state when a snapshot was taken).
+    /// Used by `Stream::recover`; prefer [`VoltDevice::reset`] when a
+    /// known-clean machine matters more than preserved buffers.
+    pub fn clear_fault(&mut self) -> Option<DeviceFault> {
+        match std::mem::take(&mut self.state) {
+            DeviceState::Faulted(f) => Some(f),
+            DeviceState::Ready => None,
+        }
+    }
+
+    /// Restore a clean machine: reload the image onto a fresh GPU
+    /// (fresh memory, caches, allocator, re-armed fault plan) and clear
+    /// all accumulated state. A reset device is bit-identical to a
+    /// freshly constructed one (asserted in `rust/tests/resilience_api.rs`).
+    pub fn reset(&mut self) {
+        self.gpu = Gpu::load(&self.image, self.gpu.cfg);
+        self.free_list.clear();
+        self.pending_symbols.clear();
+        self.total_stats = SimStats::default();
+        self.launches = 0;
+        self.profiles.clear();
+        self.retries_performed = 0;
+        self.launches_recovered = 0;
+        self.state = DeviceState::Ready;
     }
 
     /// Drain collected per-launch profiles.
@@ -196,7 +304,8 @@ impl VoltDevice {
         self.pending_symbols.len()
     }
 
-    /// Launch a kernel by (source) name.
+    /// Launch a kernel by (source) name under the device's default
+    /// [`LaunchPolicy`].
     pub fn launch(
         &mut self,
         kernel: &str,
@@ -204,6 +313,36 @@ impl VoltDevice {
         block: [u32; 3],
         args: &[ArgValue],
     ) -> Result<SimStats, RuntimeError> {
+        let policy = self.policy;
+        self.launch_with_policy(kernel, grid, block, args, policy)
+    }
+
+    /// [`VoltDevice::launch`] with an explicit per-launch policy.
+    ///
+    /// The launch is transactional when a snapshot is in play (always
+    /// when `policy.retries > 0`, faults are armed, or
+    /// [`VoltDevice::transactional`] is set): deferred symbol writes and
+    /// the argument block are committed first, a snapshot of everything
+    /// the run can mutate is taken, and on a trap the machine is rolled
+    /// back — so a retry replays deterministically from identical state,
+    /// and a final failure leaves memory pre-launch rather than
+    /// half-mutated. A trap that survives the retry budget (or any
+    /// deterministic trap) moves the device to sticky
+    /// [`DeviceState::Faulted`].
+    pub fn launch_with_policy(
+        &mut self,
+        kernel: &str,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: &[ArgValue],
+        policy: LaunchPolicy,
+    ) -> Result<SimStats, RuntimeError> {
+        if let DeviceState::Faulted(f) = &self.state {
+            return Err(RuntimeError::Faulted {
+                kernel: f.kernel.clone(),
+                cause: f.cause.clone(),
+            });
+        }
         let entry_name = format!("__main_{kernel}");
         let entry = *self
             .image
@@ -243,27 +382,75 @@ impl VoltDevice {
                 .write_u32(a + 4 * i as u32, *w)
                 .map_err(|e| RuntimeError::Mem(format!("args fault at {:#x}", e.addr)))?;
         }
-        let stats = if self.profiling {
-            let mut prof = Profiler::new(self.image.code.len(), self.gpu.cfg.num_cores as usize);
-            let stats = self
-                .gpu
-                .run_profiled(Some(&mut prof))
-                .map_err(RuntimeError::Sim)?;
-            self.profiles.push(build_profile(
-                kernel,
-                &self.image,
-                &self.gpu.cfg,
-                &stats,
-                &prof,
-                self.total_stats.cycles,
-            ));
-            stats
-        } else {
-            self.gpu.run().map_err(RuntimeError::Sim)?
+        // Transactional snapshot: only taken when something can use it
+        // (retry budget, armed fault plan, or the stream-level promise)
+        // — launches without any of those keep today's zero-copy path.
+        let snap = (self.transactional || policy.retries > 0 || self.gpu.faults.pending() > 0)
+            .then(|| self.gpu.snapshot());
+        let saved_max = self.gpu.cfg.max_cycles;
+        if let Some(w) = policy.watchdog_max_cycles {
+            self.gpu.cfg.max_cycles = w;
+        }
+        self.gpu.label = kernel.to_string();
+        let mut attempt: u32 = 0;
+        let outcome = loop {
+            let run = if self.profiling {
+                let mut prof =
+                    Profiler::new(self.image.code.len(), self.gpu.cfg.num_cores as usize);
+                self.gpu
+                    .run_profiled(Some(&mut prof))
+                    .map(|stats| (stats, Some(prof)))
+            } else {
+                self.gpu.run().map(|stats| (stats, None))
+            };
+            match run {
+                Ok(ok) => break Ok(ok),
+                Err(e) => {
+                    // Roll back everything the trapped run mutated.
+                    if let Some(s) = snap.as_ref() {
+                        self.gpu.restore(s);
+                    }
+                    if e.kind.transient() && attempt < policy.retries && snap.is_some() {
+                        attempt += 1;
+                        self.retries_performed += 1;
+                        // The recovery pause is modeled time: charged to
+                        // the accumulated ledger, never to per-run stats.
+                        self.total_stats.cycles += policy.backoff_cycles;
+                        continue;
+                    }
+                    break Err(e);
+                }
+            }
         };
-        self.launches += 1;
-        accumulate(&mut self.total_stats, &stats);
-        Ok(stats)
+        self.gpu.cfg.max_cycles = saved_max;
+        match outcome {
+            Ok((stats, prof)) => {
+                if attempt > 0 {
+                    self.launches_recovered += 1;
+                }
+                if let Some(prof) = prof {
+                    self.profiles.push(build_profile(
+                        kernel,
+                        &self.image,
+                        &self.gpu.cfg,
+                        &stats,
+                        &prof,
+                        self.total_stats.cycles,
+                    ));
+                }
+                self.launches += 1;
+                accumulate(&mut self.total_stats, &stats);
+                Ok(stats)
+            }
+            Err(e) => {
+                self.state = DeviceState::Faulted(DeviceFault {
+                    kernel: kernel.to_string(),
+                    cause: e.clone(),
+                    attempts: attempt + 1,
+                });
+                Err(RuntimeError::Sim(e))
+            }
+        }
     }
 }
 
@@ -372,6 +559,94 @@ kernel void apply(global float* x) {
             vec![2.0, 3.0, 4.0, 5.0, 2.0, 3.0, 4.0, 5.0]
         );
         assert!(dev.memcpy_to_symbol("nosuch", &[0], 0).is_err());
+    }
+
+    #[test]
+    fn trap_sticks_until_reset() {
+        // A store through a null pointer traps; the device goes sticky
+        // Faulted (typed), and reset() restores a working machine.
+        let mut dev = device("kernel void k(global int* o) { o[0] = 1; }");
+        let e = dev
+            .launch("k", [1, 1, 1], [1, 1, 1], &[ArgValue::Ptr(DevicePtr(0))])
+            .unwrap_err();
+        assert!(matches!(e, RuntimeError::Sim(_)), "{e}");
+        assert!(dev.is_faulted());
+        let f = dev.fault().unwrap();
+        assert_eq!(f.kernel, "k");
+        assert_eq!(f.attempts, 1);
+        // Sticky: even a valid launch is refused with the original cause.
+        let good = dev.malloc(64);
+        let e2 = dev
+            .launch("k", [1, 1, 1], [1, 1, 1], &[ArgValue::Ptr(good)])
+            .unwrap_err();
+        assert!(matches!(e2, RuntimeError::Faulted { .. }), "{e2}");
+        assert!(e2.to_string().contains("reset()"), "{e2}");
+        dev.reset();
+        assert!(!dev.is_faulted());
+        let good = dev.malloc(64);
+        dev.launch("k", [1, 1, 1], [1, 1, 1], &[ArgValue::Ptr(good)])
+            .unwrap();
+        assert_eq!(dev.read_u32s(good, 1).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn transient_injected_faults_retry_to_success() {
+        use crate::sim::{FaultKind, FaultPlan};
+        let src = r#"
+kernel void inc(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] + 1;
+}
+"#;
+        let build = |retries: u32| {
+            let (mut m, infos) = compile_kernels(src, &FrontendOptions::default()).unwrap();
+            let mut cfg = OptLevel::Recon.config();
+            cfg.verify = true;
+            run_middle_end(&mut m, &cfg);
+            let img = build_image(
+                &m,
+                &format!("__main_{}", infos[0].name),
+                &BackendOptions::default(),
+            )
+            .unwrap();
+            let sim = crate::sim::SimConfig {
+                faults: FaultPlan::none()
+                    .with(0, FaultKind::IllegalTrap { pc: None })
+                    .with(0, FaultKind::MemTrap { pc: None }),
+                ..crate::sim::SimConfig::default()
+            };
+            let mut dev = VoltDevice::new(img, sim);
+            dev.policy = LaunchPolicy {
+                retries,
+                backoff_cycles: 50,
+                watchdog_max_cycles: None,
+            };
+            dev
+        };
+        // Two scheduled transient faults: retries=2 absorbs both exactly.
+        let mut dev = build(2);
+        let buf = dev.malloc(64 * 4);
+        dev.write_u32s(buf, &[7u32; 64]).unwrap();
+        dev.launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])
+            .unwrap();
+        assert_eq!(dev.read_u32s(buf, 64).unwrap(), vec![8u32; 64]);
+        assert_eq!(dev.retries_performed, 2);
+        assert_eq!(dev.launches_recovered, 1);
+        assert!(dev.total_stats.cycles >= 100, "backoff not charged");
+        // retries=1 burns the budget on the first fault and fails on the
+        // second — "succeeds exactly at retries >= fault count".
+        let mut dev = build(1);
+        let buf = dev.malloc(64 * 4);
+        dev.write_u32s(buf, &[7u32; 64]).unwrap();
+        let e = dev
+            .launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])
+            .unwrap_err();
+        assert!(matches!(e, RuntimeError::Sim(ref s) if s.injected), "{e}");
+        assert!(dev.is_faulted());
+        assert_eq!(dev.fault().unwrap().attempts, 2);
+        // The rollback left the inputs pre-launch (transactional).
+        dev.clear_fault();
+        assert_eq!(dev.read_u32s(buf, 64).unwrap(), vec![7u32; 64]);
     }
 
     #[test]

@@ -5,5 +5,7 @@
 pub mod device;
 pub mod pjrt;
 
-pub use device::{ArgValue, DevicePtr, RuntimeError, VoltDevice};
+pub use device::{
+    ArgValue, DeviceFault, DevicePtr, DeviceState, LaunchPolicy, RuntimeError, VoltDevice,
+};
 pub use pjrt::{default_artifacts_dir, PjrtReference};

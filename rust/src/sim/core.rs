@@ -5,8 +5,9 @@
 //! ([`crate::ir::interp::scalar`]) so the property-test oracle and the
 //! simulator cannot diverge.
 
+use super::fault::FaultState;
 use super::mem::{Cache, GlobalMem, ShadowLocal};
-use super::{SimConfig, SimError, SimStats};
+use super::{SimConfig, SimError, SimStats, TrapKind};
 use crate::backend::isa::{CsrId, MachInst, Op, OpClass};
 use crate::ir::interp::scalar;
 use crate::ir::{BinOp, FCmp, ICmp, UnOp};
@@ -168,6 +169,7 @@ impl Core {
         l2: &mut Option<Cache>,
         cfg: &SimConfig,
         stats: &mut SimStats,
+        faults: &mut FaultState,
     ) -> Result<StepOutcome, SimError> {
         // Idle fast-forward: nothing about this core can change until
         // `ready_at`, so skip the warp-table scan entirely.
@@ -201,7 +203,7 @@ impl Core {
         };
         self.idle = None;
         self.rr = (wi + 1) % n;
-        let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats)?;
+        let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats, faults)?;
         Ok(StepOutcome::Executed(issue))
     }
 
@@ -261,11 +263,47 @@ impl Core {
     }
 
     fn err(&self, wi: usize, pc: u32, msg: impl Into<String>) -> SimError {
+        SimError::fatal(self.id, wi as u32, pc, msg)
+    }
+
+    /// Typed trap with an explicit [`TrapKind`] (memory faults and
+    /// injected faults; everything else defaults to `Fatal` via `err`).
+    fn err_kind(&self, wi: usize, pc: u32, kind: TrapKind, msg: impl Into<String>) -> SimError {
         SimError {
             core: self.id,
             warp: wi as u32,
             pc,
             msg: msg.into(),
+            kind,
+            injected: false,
+        }
+    }
+
+    /// Memory-fault trap ([`TrapKind::MemFault`]).
+    fn mem_err(&self, wi: usize, pc: u32, msg: impl Into<String>) -> SimError {
+        self.err_kind(wi, pc, TrapKind::MemFault, msg)
+    }
+
+    /// Record a barrier arrival and release the block when everyone is
+    /// there (the normal, un-injected `vx_bar` semantics).
+    fn apply_barrier(&mut self, wi: usize, id: u32, count: u32) {
+        let arrived = self.barriers.entry(id).or_insert(0);
+        *arrived |= 1 << wi;
+        if arrived.count_ones() >= count {
+            let mask = *arrived;
+            self.barriers.remove(&id);
+            for k in 0..self.warps.len() {
+                if mask >> k & 1 == 1 {
+                    self.warps[k].at_barrier = false;
+                }
+            }
+            // Phase boundary for the sanitizer: conflicts do not
+            // span a released barrier.
+            if let Some(sh) = self.shadow.as_mut() {
+                sh.barrier_release();
+            }
+        } else {
+            self.warps[wi].at_barrier = true;
         }
     }
 
@@ -305,6 +343,7 @@ impl Core {
         l2: &mut Option<Cache>,
         cfg: &SimConfig,
         stats: &mut SimStats,
+        faults: &mut FaultState,
     ) -> Result<Issue, SimError> {
         let pc = self.warps[wi].pc;
         let inst = *prog
@@ -325,6 +364,16 @@ impl Core {
         let lanes = &lanes_buf[..nl];
         if lanes.is_empty() {
             return Err(self.err(wi, pc, "issued with empty thread mask"));
+        }
+        // Fault injection ([`SimConfig::faults`]): a scheduled trap due at
+        // this (cycle, pc) fires before the instruction issues. One bool
+        // load when no plan is armed — the empty plan stays bit-identical.
+        if faults.armed() {
+            if let Some((kind, msg)) = faults.trap_at(cycle, pc) {
+                let mut e = self.err_kind(wi, pc, kind, msg);
+                e.injected = true;
+                return Err(e);
+            }
         }
         // Feature-gated opcodes were audited once at run start
         // (Gpu::run_profiled) — the per-issue hot path carries no check.
@@ -511,11 +560,11 @@ impl Core {
                         if is_store {
                             let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
                             mem.write_u32(addr, v).map_err(|f| {
-                                self.err(wi, pc, format!("stack store fault at {:#x}", f.addr))
+                                self.mem_err(wi, pc, format!("stack store fault at {:#x}", f.addr))
                             })?;
                         } else {
                             let v = mem.read_u32(addr).map_err(|f| {
-                                self.err(wi, pc, format!("stack load fault at {:#x}", f.addr))
+                                self.mem_err(wi, pc, format!("stack load fault at {:#x}", f.addr))
                             })?;
                             write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
                         }
@@ -541,11 +590,11 @@ impl Core {
                         if is_store {
                             let v = read_reg(&self.warps[wi].regs[l], inst.rs2);
                             mem.write_u32(addr, v).map_err(|f| {
-                                self.err(wi, pc, format!("store fault at {:#x}", f.addr))
+                                self.mem_err(wi, pc, format!("store fault at {:#x}", f.addr))
                             })?;
                         } else {
                             let v = mem.read_u32(addr).map_err(|f| {
-                                self.err(wi, pc, format!("load fault at {:#x}", f.addr))
+                                self.mem_err(wi, pc, format!("load fault at {:#x}", f.addr))
                             })?;
                             write_reg(&mut self.warps[wi].regs[l], inst.rd, v);
                         }
@@ -586,6 +635,17 @@ impl Core {
                 }
                 cost = max_lat + n_lines.saturating_sub(1) as u64;
                 cost = cost.max(1);
+                // Fault injection: a due LoadBitFlip corrupts one bit of
+                // the destination register in the first active lane — the
+                // run completes, the data is silently wrong (the retry
+                // path catches it through the validator, not a trap).
+                if !is_store && faults.armed() {
+                    if let Some(bit) = faults.load_flip(cycle, pc) {
+                        let l = lanes[0];
+                        let cur = read_reg(&self.warps[wi].regs[l], inst.rd);
+                        write_reg(&mut self.warps[wi].regs[l], inst.rd, cur ^ (1u32 << bit));
+                    }
+                }
             }
             Op::AMOADD | Op::AMOAND | Op::AMOOR | Op::AMOXOR | Op::AMOMIN | Op::AMOMAX
             | Op::AMOSWAP | Op::AMOCAS => {
@@ -602,8 +662,9 @@ impl Core {
                     let old = if local_off + 4 <= self.local.len() {
                         u32::from_le_bytes(self.local[local_off..local_off + 4].try_into().unwrap())
                     } else {
-                        mem.read_u32(addr)
-                            .map_err(|f| self.err(wi, pc, format!("atomic fault at {:#x}", f.addr)))?
+                        mem.read_u32(addr).map_err(|f| {
+                            self.mem_err(wi, pc, format!("atomic fault at {:#x}", f.addr))
+                        })?
                     };
                     let new = match inst.op {
                         Op::AMOADD => old.wrapping_add(v),
@@ -626,8 +687,9 @@ impl Core {
                     if local_off + 4 <= self.local.len() {
                         self.local[local_off..local_off + 4].copy_from_slice(&new.to_le_bytes());
                     } else {
-                        mem.write_u32(addr, new)
-                            .map_err(|f| self.err(wi, pc, format!("atomic fault at {:#x}", f.addr)))?;
+                        mem.write_u32(addr, new).map_err(|f| {
+                            self.mem_err(wi, pc, format!("atomic fault at {:#x}", f.addr))
+                        })?;
                     }
                     write_reg(&mut self.warps[wi].regs[l], inst.rd, old);
                 }
@@ -793,23 +855,15 @@ impl Core {
                 stats.barriers_executed += 1;
                 let count = self.uniform_read(wi, inst.rs1, pc)?;
                 let id = inst.imm as u32;
-                let arrived = self.barriers.entry(id).or_insert(0);
-                *arrived |= 1 << wi;
-                if arrived.count_ones() >= count {
-                    let mask = *arrived;
-                    self.barriers.remove(&id);
-                    for k in 0..self.warps.len() {
-                        if mask >> k & 1 == 1 {
-                            self.warps[k].at_barrier = false;
-                        }
-                    }
-                    // Phase boundary for the sanitizer: conflicts do not
-                    // span a released barrier.
-                    if let Some(sh) = self.shadow.as_mut() {
-                        sh.barrier_release();
-                    }
-                } else {
+                // Fault injection: a due StuckBarrier drops this arrival —
+                // the warp parks but is never counted, so the block
+                // deadlocks deterministically (a fault retry must NOT
+                // absorb: the hang replays identically).
+                if faults.armed() && faults.stuck_barrier(cycle, pc) {
                     self.warps[wi].at_barrier = true;
+                    let _ = (count, id);
+                } else {
+                    self.apply_barrier(wi, id, count);
                 }
             }
             Op::MASK => {

@@ -1,0 +1,414 @@
+//! Deterministic fault injection (`volt::resilience` layer 1).
+//!
+//! A [`FaultPlan`] rides on [`super::SimConfig`] and describes a small,
+//! fixed set of transient hardware faults to inject at exact cycles:
+//! load-data bit flips, forced illegal-instruction or memory traps at a
+//! given pc (or at the next issued instruction), and a one-shot stuck
+//! barrier whose arrival is dropped. Because the simulator is
+//! bit-identical run to run, an injected fault is perfectly
+//! reproducible — which is what makes the recovery paths in
+//! `runtime::VoltDevice` and `driver::Stream` testable at all.
+//!
+//! Discipline: the empty plan is bit-identical to a build without this
+//! module — the hooks in `sim::core` are a single branch on
+//! [`FaultState::armed`] and never touch the timing model (same
+//! differential contract as `fast_forward` and `sanitize`).
+
+/// Capacity of a plan. A fixed-size array keeps [`FaultPlan`] `Copy`,
+/// which `SimConfig` (and therefore `VoltOptions`) requires.
+pub const MAX_FAULTS: usize = 8;
+
+/// What to inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip one bit of the destination register of the next executed
+    /// load (a transient memory upset). Silent data corruption — the
+    /// run completes; results differ.
+    LoadBitFlip { bit: u8 },
+    /// Force an illegal-instruction trap: at `pc` if given, else at the
+    /// next instruction issued at/after the trigger cycle.
+    IllegalTrap { pc: Option<u32> },
+    /// Force a memory-fault trap, same targeting rules as `IllegalTrap`.
+    MemTrap { pc: Option<u32> },
+    /// Drop one barrier arrival: the warp parks but is never counted,
+    /// so the block deadlocks deterministically. Models a lost
+    /// synchronization message — a *deterministic* fault that retry
+    /// must NOT paper over.
+    StuckBarrier,
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    /// Fires at the first opportunity at/after this simulated cycle.
+    pub at_cycle: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of up to [`MAX_FAULTS`] faults. `Copy` so it
+/// embeds in `SimConfig` without breaking the options builder.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    slots: [Option<Fault>; MAX_FAULTS],
+}
+
+impl FaultPlan {
+    /// The empty plan (the default): injects nothing, costs nothing.
+    pub const fn none() -> FaultPlan {
+        FaultPlan {
+            slots: [None; MAX_FAULTS],
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Number of faults that a retry loop must absorb (everything except
+    /// silent bit flips completes the run; flips corrupt it — all count).
+    pub fn faults(&self) -> impl Iterator<Item = &Fault> {
+        self.slots.iter().flatten()
+    }
+
+    /// Add a fault. Errors when the plan is full (capacity is part of
+    /// the type: plans never allocate).
+    pub fn push(&mut self, f: Fault) -> Result<(), String> {
+        match self.slots.iter_mut().find(|s| s.is_none()) {
+            Some(slot) => {
+                *slot = Some(f);
+                Ok(())
+            }
+            None => Err(format!("fault plan is full (max {MAX_FAULTS} faults)")),
+        }
+    }
+
+    /// Builder form of [`FaultPlan::push`]; panics when full (test/CLI
+    /// convenience for literal plans).
+    pub fn with(mut self, at_cycle: u64, kind: FaultKind) -> FaultPlan {
+        self.push(Fault { at_cycle, kind }).expect("fault plan full");
+        self
+    }
+
+    /// Deterministic pseudo-random plan: `n` transient faults (illegal /
+    /// memory traps and load bit flips, cycling by index) at xorshift-
+    /// derived cycles in `[0, horizon)`. The same seed always yields the
+    /// same plan — "seeded" chaos that replays exactly.
+    pub fn seeded(seed: u64, n: usize, horizon: u64) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+        let mut next = || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        };
+        for i in 0..n.min(MAX_FAULTS) {
+            let at_cycle = if horizon == 0 { 0 } else { next() % horizon };
+            let kind = match i % 3 {
+                0 => FaultKind::IllegalTrap { pc: None },
+                1 => FaultKind::MemTrap { pc: None },
+                _ => FaultKind::LoadBitFlip {
+                    bit: (next() % 32) as u8,
+                },
+            };
+            plan.push(Fault { at_cycle, kind }).unwrap();
+        }
+        plan
+    }
+
+    /// Parse a CLI spec: `;`-separated entries of
+    /// `flip@CYCLE[:BIT]`, `trap@CYCLE[:PC]`, `memtrap@CYCLE[:PC]`,
+    /// `stuckbar@CYCLE`, or `seed@SEED[:N[:HORIZON]]` (expands to a
+    /// seeded plan). Example: `--inject "trap@1000;flip@2500:7"`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("bad fault entry '{entry}': expected KIND@CYCLE"))?;
+            let mut nums = rest.split(':');
+            let first: u64 = nums
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| format!("bad number in fault entry '{entry}'"))?;
+            let second = match nums.next() {
+                Some(s) => Some(
+                    s.parse::<u64>()
+                        .map_err(|_| format!("bad number in fault entry '{entry}'"))?,
+                ),
+                None => None,
+            };
+            let third = match nums.next() {
+                Some(s) => Some(
+                    s.parse::<u64>()
+                        .map_err(|_| format!("bad number in fault entry '{entry}'"))?,
+                ),
+                None => None,
+            };
+            match kind {
+                "flip" => plan.push(Fault {
+                    at_cycle: first,
+                    kind: FaultKind::LoadBitFlip {
+                        bit: (second.unwrap_or(0) % 32) as u8,
+                    },
+                })?,
+                "trap" => plan.push(Fault {
+                    at_cycle: first,
+                    kind: FaultKind::IllegalTrap {
+                        pc: second.map(|p| p as u32),
+                    },
+                })?,
+                "memtrap" => plan.push(Fault {
+                    at_cycle: first,
+                    kind: FaultKind::MemTrap {
+                        pc: second.map(|p| p as u32),
+                    },
+                })?,
+                "stuckbar" => plan.push(Fault {
+                    at_cycle: first,
+                    kind: FaultKind::StuckBarrier,
+                })?,
+                "seed" => {
+                    let n = second.unwrap_or(1) as usize;
+                    let horizon = third.unwrap_or(100_000);
+                    for f in FaultPlan::seeded(first, n, horizon).faults() {
+                        plan.push(*f)?;
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault kind '{other}' (expected flip/trap/memtrap/stuckbar/seed)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Runtime injection state: the plan plus one-shot `fired` tracking.
+/// Lives on the `Gpu` for the device's lifetime — faults are *consumed*
+/// across runs, deliberately NOT re-armed by a launch retry, so a retry
+/// loop observes each fault exactly once and "succeeds at
+/// `retries >= fault count`" holds exactly.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    fired: [bool; MAX_FAULTS],
+    /// Cached `pending() > 0` so the per-instruction guard in the
+    /// simulator hot path is one bool load, not a slot scan.
+    armed: bool,
+    /// Human-readable record of every injection, for diagnostics.
+    pub log: Vec<String>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        FaultState {
+            plan,
+            fired: [false; MAX_FAULTS],
+            armed: !plan.is_empty(),
+            log: Vec::new(),
+        }
+    }
+
+    /// Cheap guard for the per-instruction hooks: false on the empty
+    /// plan and once every fault has fired.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Faults scheduled but not yet injected.
+    pub fn pending(&self) -> usize {
+        self.plan
+            .slots
+            .iter()
+            .zip(self.fired.iter())
+            .filter(|(s, f)| s.is_some() && !**f)
+            .count()
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> usize {
+        self.fired.iter().filter(|f| **f).count()
+    }
+
+    /// Has a [`FaultKind::StuckBarrier`] fired? A following barrier
+    /// deadlock is then attributable to the injector.
+    pub fn stuck_barrier_fired(&self) -> bool {
+        self.plan
+            .slots
+            .iter()
+            .zip(self.fired.iter())
+            .any(|(s, f)| *f && matches!(s, Some(x) if x.kind == FaultKind::StuckBarrier))
+    }
+
+    fn take(&mut self, cycle: u64, matches: impl Fn(&FaultKind) -> bool) -> Option<FaultKind> {
+        let fired = &self.fired;
+        let idx = self
+            .plan
+            .slots
+            .iter()
+            .enumerate()
+            .find_map(|(i, slot)| match slot {
+                Some(f) if !fired[i] && cycle >= f.at_cycle && matches(&f.kind) => Some(i),
+                _ => None,
+            })?;
+        let kind = self.plan.slots[idx].unwrap().kind;
+        self.fired[idx] = true;
+        self.armed = self.pending() > 0;
+        Some(kind)
+    }
+
+    /// A forced trap due at this (cycle, pc)? Consumes the fault and
+    /// returns its kind and message. Called once per issued instruction
+    /// (behind [`FaultState::armed`]).
+    pub fn trap_at(&mut self, cycle: u64, pc: u32) -> Option<(super::TrapKind, String)> {
+        let hit = |want: &Option<u32>| want.map_or(true, |p| p == pc);
+        let kind = self.take(cycle, |k| match k {
+            FaultKind::IllegalTrap { pc } | FaultKind::MemTrap { pc } => hit(pc),
+            _ => false,
+        })?;
+        let (tk, msg) = match kind {
+            FaultKind::IllegalTrap { .. } => (
+                super::TrapKind::IllegalInst,
+                "injected fault: illegal instruction".to_string(),
+            ),
+            FaultKind::MemTrap { .. } => (
+                super::TrapKind::MemFault,
+                "injected fault: memory trap".to_string(),
+            ),
+            _ => unreachable!(),
+        };
+        self.log.push(format!("cycle {cycle}: {msg} at pc {pc}"));
+        Some((tk, msg))
+    }
+
+    /// A load bit flip due at this cycle? Consumes the fault and returns
+    /// the bit index. Called only when a load actually executed.
+    pub fn load_flip(&mut self, cycle: u64, pc: u32) -> Option<u8> {
+        let kind = self.take(cycle, |k| matches!(k, FaultKind::LoadBitFlip { .. }))?;
+        let FaultKind::LoadBitFlip { bit } = kind else {
+            unreachable!()
+        };
+        self.log
+            .push(format!("cycle {cycle}: injected load bit flip (bit {bit}) at pc {pc}"));
+        Some(bit % 32)
+    }
+
+    /// A stuck barrier due at this cycle? Consumes the fault. Called
+    /// when a warp executes a barrier.
+    pub fn stuck_barrier(&mut self, cycle: u64, pc: u32) -> bool {
+        if self
+            .take(cycle, |k| matches!(k, FaultKind::StuckBarrier))
+            .is_some()
+        {
+            self.log.push(format!(
+                "cycle {cycle}: injected stuck barrier (arrival dropped) at pc {pc}"
+            ));
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::TrapKind;
+
+    #[test]
+    fn plan_push_with_and_capacity() {
+        let mut p = FaultPlan::none();
+        assert!(p.is_empty());
+        for i in 0..MAX_FAULTS {
+            p.push(Fault {
+                at_cycle: i as u64,
+                kind: FaultKind::StuckBarrier,
+            })
+            .unwrap();
+        }
+        assert_eq!(p.len(), MAX_FAULTS);
+        assert!(p
+            .push(Fault {
+                at_cycle: 0,
+                kind: FaultKind::StuckBarrier
+            })
+            .unwrap_err()
+            .contains("full"));
+        let q = FaultPlan::none().with(5, FaultKind::LoadBitFlip { bit: 3 });
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn seeded_is_deterministic() {
+        let a = FaultPlan::seeded(42, 4, 10_000);
+        let b = FaultPlan::seeded(42, 4, 10_000);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        for f in a.faults() {
+            assert!(f.at_cycle < 10_000);
+        }
+        let c = FaultPlan::seeded(43, 4, 10_000);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_grammar() {
+        let p = FaultPlan::parse("trap@1000; flip@2500:7; memtrap@10:12; stuckbar@0").unwrap();
+        assert_eq!(p.len(), 4);
+        let kinds: Vec<FaultKind> = p.faults().map(|f| f.kind).collect();
+        assert!(kinds.contains(&FaultKind::IllegalTrap { pc: None }));
+        assert!(kinds.contains(&FaultKind::LoadBitFlip { bit: 7 }));
+        assert!(kinds.contains(&FaultKind::MemTrap { pc: Some(12) }));
+        assert!(kinds.contains(&FaultKind::StuckBarrier));
+        assert_eq!(FaultPlan::parse("seed@9:3").unwrap().len(), 3);
+        assert_eq!(FaultPlan::parse("").unwrap().len(), 0);
+        assert!(FaultPlan::parse("zap@3").is_err());
+        assert!(FaultPlan::parse("trap").is_err());
+        assert!(FaultPlan::parse("trap@x").is_err());
+    }
+
+    #[test]
+    fn state_fires_one_shot_in_order() {
+        let plan = FaultPlan::none()
+            .with(100, FaultKind::IllegalTrap { pc: None })
+            .with(100, FaultKind::MemTrap { pc: Some(7) });
+        let mut st = FaultState::new(plan);
+        assert!(st.armed());
+        assert_eq!(st.pending(), 2);
+        // Before the trigger cycle: nothing.
+        assert!(st.trap_at(99, 7).is_none());
+        // At/after: the wildcard illegal trap fires first, once.
+        let (k, msg) = st.trap_at(100, 3).unwrap();
+        assert_eq!(k, TrapKind::IllegalInst);
+        assert!(msg.contains("injected"));
+        // The pc-targeted mem trap only fires at its pc.
+        assert!(st.trap_at(100, 3).is_none());
+        let (k, _) = st.trap_at(100, 7).unwrap();
+        assert_eq!(k, TrapKind::MemFault);
+        assert!(!st.armed());
+        assert_eq!(st.injected(), 2);
+        assert_eq!(st.log.len(), 2);
+    }
+
+    #[test]
+    fn flip_and_barrier_consume() {
+        let plan = FaultPlan::none()
+            .with(0, FaultKind::LoadBitFlip { bit: 40 }) // masked to <32
+            .with(5, FaultKind::StuckBarrier);
+        let mut st = FaultState::new(plan);
+        assert_eq!(st.load_flip(0, 1).unwrap(), 8);
+        assert!(st.load_flip(0, 1).is_none());
+        assert!(!st.stuck_barrier(4, 2));
+        assert!(st.stuck_barrier(5, 2));
+        assert!(!st.stuck_barrier(6, 2));
+    }
+}

@@ -1,8 +1,9 @@
 //! Top-level GPU: cores + shared L2 + global memory + the tick loop.
 
 use super::core::{Core, Issue, StepOutcome};
+use super::fault::FaultState;
 use super::mem::{Cache, GlobalMem, ShadowLocal};
-use super::{SimConfig, SimError, SimStats};
+use super::{SimConfig, SimError, SimStats, TrapKind};
 use crate::backend::emit::ProgramImage;
 use crate::backend::isa::MachInst;
 use crate::ir::Loc;
@@ -19,6 +20,29 @@ pub struct Gpu {
     /// The image's pc→source-location table, retained so runtime traps
     /// and sanitizer reports can name the offending source line.
     pub pc_loc: Vec<Option<Loc>>,
+    /// Fault-injection state ([`SimConfig::faults`]). Device-lifetime,
+    /// one-shot: faults are consumed across runs and deliberately NOT
+    /// re-armed by [`Gpu::restore`], so a launch-retry loop observes
+    /// each scheduled fault exactly once.
+    pub faults: FaultState,
+    /// What the device is running, for trap messages ("kernel 'sgemm'
+    /// exceeded max cycles ..."). Defaults to the image's kernel name;
+    /// the runtime overwrites it per launch.
+    pub label: String,
+}
+
+/// Everything a launch can mutate, captured before the run so a failed
+/// or retried launch replays from bit-identical state: global-memory
+/// segment bytes, per-core local scratchpads, the L1/L2 tag state
+/// (caches persist across launches on one device) and the heap bump
+/// pointer. Deliberately excludes [`Gpu::faults`] (one-shot by design)
+/// — per-warp state is rebuilt by `Core::reset` at every run start.
+pub struct GpuSnapshot {
+    segs: Vec<Vec<u8>>,
+    locals: Vec<Vec<u8>>,
+    l1: Vec<Cache>,
+    l2: Option<Cache>,
+    heap_next: u32,
 }
 
 /// Append the source line (when the image's line table has one for the
@@ -70,7 +94,72 @@ impl Gpu {
             // bounds.
             heap_next: map.heap_base + 4096,
             pc_loc: image.pc_loc.clone(),
+            faults: FaultState::new(cfg.faults),
+            label: image.kernel.clone(),
         }
+    }
+
+    /// Capture the launch-mutable state (see [`GpuSnapshot`]).
+    pub fn snapshot(&self) -> GpuSnapshot {
+        GpuSnapshot {
+            segs: self.mem.segs.iter().map(|s| s.data.clone()).collect(),
+            locals: self.cores.iter().map(|c| c.local.clone()).collect(),
+            l1: self.cores.iter().map(|c| c.l1.clone()).collect(),
+            l2: self.l2.clone(),
+            heap_next: self.heap_next,
+        }
+    }
+
+    /// Roll back to a snapshot taken on this device. Segment/core shapes
+    /// never change after `load`, so this is a straight byte copy.
+    pub fn restore(&mut self, snap: &GpuSnapshot) {
+        for (seg, bytes) in self.mem.segs.iter_mut().zip(snap.segs.iter()) {
+            seg.data.clone_from(bytes);
+        }
+        for ((core, local), l1) in self
+            .cores
+            .iter_mut()
+            .zip(snap.locals.iter())
+            .zip(snap.l1.iter())
+        {
+            core.local.clone_from(local);
+            core.l1 = l1.clone();
+        }
+        self.l2.clone_from(&snap.l2);
+        self.heap_next = snap.heap_next;
+    }
+
+    /// Per-warp state dump for hang diagnostics: every live warp's pc,
+    /// source line (when the line table has one) and parked/active flag.
+    fn hang_report(&self) -> String {
+        let mut s = String::new();
+        for c in &self.cores {
+            for (wi, w) in c.warps.iter().enumerate() {
+                if !w.active {
+                    continue;
+                }
+                let line = self
+                    .pc_loc
+                    .get(w.pc as usize)
+                    .copied()
+                    .flatten()
+                    .map(|l| format!(" (source line {})", l.line))
+                    .unwrap_or_default();
+                s.push_str(&format!(
+                    "\n  core {} warp {}: pc {}{} [{}]",
+                    c.id,
+                    wi,
+                    w.pc,
+                    line,
+                    if w.at_barrier {
+                        "parked at barrier"
+                    } else {
+                        "active"
+                    }
+                ));
+            }
+        }
+        s
     }
 
     /// Simple bump allocator over the heap segment (host runtime helper).
@@ -109,18 +198,20 @@ impl Gpu {
         for (pc, inst) in self.program.iter().enumerate() {
             if !self.cfg.features.supports_op(inst.op) {
                 let gate = crate::target::Features::gate_name(inst.op).unwrap_or("?");
+                // Fatal, not IllegalInst: detected statically before any
+                // cycle runs, so no retry could ever clear it.
                 return Err(locate(
                     &self.pc_loc,
-                    SimError {
-                        core: 0,
-                        warp: 0,
-                        pc: pc as u32,
-                        msg: format!(
+                    SimError::fatal(
+                        0,
+                        0,
+                        pc as u32,
+                        format!(
                             "illegal instruction '{}': device does not implement the \
                              '{gate}' extension (image/target mismatch?)",
                             inst.op.mnemonic()
                         ),
-                    },
+                    ),
                 ));
             }
         }
@@ -147,6 +238,7 @@ impl Gpu {
                     &mut self.l2,
                     &self.cfg,
                     &mut stats,
+                    &mut self.faults,
                 )
                 .map_err(|e| locate(pc_loc, e))?
                 {
@@ -174,7 +266,13 @@ impl Gpu {
                                 core: 0,
                                 warp: 0,
                                 pc: 0,
-                                msg: "barrier deadlock: all live warps parked".into(),
+                                msg: format!(
+                                    "barrier deadlock: all live warps parked in kernel '{}'{}",
+                                    self.label,
+                                    self.hang_report()
+                                ),
+                                kind: TrapKind::Deadlock,
+                                injected: self.faults.stuck_barrier_fired(),
                             });
                         }
                         break;
@@ -197,7 +295,14 @@ impl Gpu {
                     core: 0,
                     warp: 0,
                     pc: 0,
-                    msg: format!("exceeded max cycles ({})", self.cfg.max_cycles),
+                    msg: format!(
+                        "kernel '{}' exceeded max cycles ({}){}",
+                        self.label,
+                        self.cfg.max_cycles,
+                        self.hang_report()
+                    ),
+                    kind: TrapKind::Watchdog,
+                    injected: false,
                 });
             }
         }
@@ -415,6 +520,137 @@ kernel void racy(global int* a) {
         for r in &stats.sanitize_reports {
             assert!(r.line.is_some(), "report without a source line: {r:?}");
         }
+    }
+
+    /// Fault injection follows the same differential discipline as
+    /// `fast_forward`/`sanitize`: the empty plan — and a plan whose
+    /// faults never come due — is bit-identical to today in cycles,
+    /// stats and results; a due fault fires deterministically.
+    #[test]
+    fn fault_injection_differential() {
+        use crate::sim::{FaultKind, FaultPlan, TrapKind};
+        let src = r#"
+kernel void rev(global int* a, int n) {
+    local int tile[64];
+    int l = get_local_id(0);
+    int g = get_global_id(0);
+    tile[l] = a[g];
+    barrier(0);
+    if (g < n) a[g] = tile[63 - l] + a[g] / 3;
+}
+"#;
+        let img = compile(src, OptLevel::O3);
+        let run_with = |plan: FaultPlan| {
+            let cfg = SimConfig {
+                faults: plan,
+                ..SimConfig::default()
+            };
+            let mut gpu = Gpu::load(&img, cfg);
+            let a = gpu.alloc(128 * 4);
+            for i in 0..128u32 {
+                gpu.mem.write_u32(a + i * 4, i * 3).unwrap();
+            }
+            write_args(&mut gpu, &img, [2, 1, 1], [64, 1, 1], &[a, 128]);
+            let r = gpu.run();
+            let out: Vec<u32> = (0..128).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+            (r, out, gpu.faults.injected())
+        };
+        let (r_plain, out_plain, n_plain) = run_with(FaultPlan::none());
+        let s_plain = r_plain.unwrap();
+        assert_eq!(n_plain, 0);
+        // A plan whose trigger cycle is past the end of the run never
+        // fires and is bit-identical (the hooks are pure observers).
+        let late = FaultPlan::none().with(u64::MAX / 2, FaultKind::IllegalTrap { pc: None });
+        let (r_late, out_late, n_late) = run_with(late);
+        let s_late = r_late.unwrap();
+        assert_eq!(s_late.cycles, s_plain.cycles, "armed-but-idle plan changed cycles");
+        assert_eq!(s_late.instrs, s_plain.instrs);
+        assert_eq!(out_late, out_plain, "armed-but-idle plan changed results");
+        assert_eq!(n_late, 0);
+
+        // A due wildcard trap fires at the next issued instruction.
+        let (r_trap, _, n_trap) = run_with(FaultPlan::none().with(0, FaultKind::IllegalTrap { pc: None }));
+        let e = r_trap.unwrap_err();
+        assert_eq!(e.kind, TrapKind::IllegalInst);
+        assert!(e.injected, "{e}");
+        assert!(e.to_string().contains("[injected]"), "{e}");
+        assert_eq!(n_trap, 1);
+
+        // A load bit flip completes the run with identical timing but
+        // corrupted data — silent-corruption semantics.
+        let (r_flip, out_flip, n_flip) = run_with(FaultPlan::none().with(0, FaultKind::LoadBitFlip { bit: 4 }));
+        let s_flip = r_flip.unwrap();
+        assert_eq!(s_flip.cycles, s_plain.cycles, "bit flip changed timing");
+        assert_ne!(out_flip, out_plain, "bit flip did not corrupt results");
+        assert_eq!(n_flip, 1);
+
+        // A stuck barrier deadlocks deterministically, the trap names
+        // the kernel and dumps parked warps.
+        let (r_bar, _, _) = run_with(FaultPlan::none().with(0, FaultKind::StuckBarrier));
+        let e = r_bar.unwrap_err();
+        assert_eq!(e.kind, TrapKind::Deadlock);
+        assert!(e.injected);
+        assert!(e.msg.contains("barrier deadlock"), "{e}");
+        assert!(e.msg.contains("parked at barrier"), "{e}");
+    }
+
+    /// The watchdog trap names the kernel and dumps per-warp state.
+    #[test]
+    fn watchdog_names_kernel_and_dumps_warps() {
+        use crate::sim::TrapKind;
+        let src = r#"
+kernel void saxpy(global float* x, global float* y, float a, int n) {
+    int i = get_global_id(0);
+    if (i < n) { y[i] = a * x[i] + y[i]; }
+}
+"#;
+        let img = compile(src, OptLevel::O3);
+        let cfg = SimConfig {
+            max_cycles: 10,
+            ..SimConfig::default()
+        };
+        let mut gpu = Gpu::load(&img, cfg);
+        let x = gpu.alloc(64 * 4);
+        let y = gpu.alloc(64 * 4);
+        write_args(&mut gpu, &img, [1, 1, 1], [64, 1, 1], &[x, y, 0, 64]);
+        let e = gpu.run().unwrap_err();
+        assert_eq!(e.kind, TrapKind::Watchdog);
+        assert!(e.msg.contains("exceeded max cycles (10)"), "{e}");
+        assert!(e.msg.contains("kernel '"), "{e}");
+        assert!(e.msg.contains("core 0 warp 0: pc"), "{e}");
+        assert!(!e.injected);
+    }
+
+    /// Snapshot/restore rolls back everything a launch mutates: a rerun
+    /// from the snapshot is bit-identical to the first run (including
+    /// cache state, which persists across runs).
+    #[test]
+    fn snapshot_restore_bit_identical_rerun() {
+        let src = r#"
+kernel void inc(global int* a) {
+    int i = get_global_id(0);
+    a[i] = a[i] + 1;
+}
+"#;
+        let img = compile(src, OptLevel::O3);
+        let mut gpu = Gpu::load(&img, SimConfig::default());
+        let a = gpu.alloc(64 * 4);
+        for i in 0..64u32 {
+            gpu.mem.write_u32(a + i * 4, i).unwrap();
+        }
+        write_args(&mut gpu, &img, [1, 1, 1], [64, 1, 1], &[a]);
+        let snap = gpu.snapshot();
+        let s1 = gpu.run().unwrap();
+        let out1: Vec<u32> = (0..64).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+        assert_eq!(out1[5], 6);
+        gpu.restore(&snap);
+        let back = gpu.mem.read_u32(a + 5 * 4).unwrap();
+        assert_eq!(back, 5, "restore did not roll back memory");
+        let s2 = gpu.run().unwrap();
+        let out2: Vec<u32> = (0..64).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+        assert_eq!(s1.cycles, s2.cycles, "restored rerun not bit-identical");
+        assert_eq!(s1.l1_hits, s2.l1_hits, "cache state not rolled back");
+        assert_eq!(out1, out2);
     }
 
     /// Divergent loop (per-lane trip counts) — exercises vx_pred.

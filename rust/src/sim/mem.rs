@@ -296,8 +296,11 @@ impl ShadowLocal {
     }
 }
 
-/// Set-associative LRU cache (tags only — a timing model).
-#[derive(Debug)]
+/// Set-associative LRU cache (tags only — a timing model). `Clone` so
+/// a transactional launch can snapshot/restore the hierarchy: caches
+/// persist across launches, so a bit-identical retry must roll their
+/// tag state back too ([`super::gpu::GpuSnapshot`]).
+#[derive(Clone, Debug)]
 pub struct Cache {
     cfg: CacheConfig,
     /// tags[set * ways + way] = Some(tag)

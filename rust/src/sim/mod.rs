@@ -10,9 +10,11 @@
 //! the compiler — the property the paper's evaluation relies on.
 
 pub mod core;
+pub mod fault;
 pub mod gpu;
 pub mod mem;
 
+pub use fault::{Fault, FaultKind, FaultPlan, FaultState};
 pub use gpu::Gpu;
 pub use mem::{SanitizeKind, SanitizeReport, ShadowLocal};
 
@@ -84,6 +86,12 @@ pub struct SimConfig {
     /// discipline as `fast_forward`: cycle counts, results and profiler
     /// attribution are bit-identical with it on or off.
     pub sanitize: bool,
+    /// Deterministic fault-injection schedule ([`fault::FaultPlan`]).
+    /// The empty plan (the default) is bit-identical to today: the
+    /// injection hooks are a single branch on an armed flag and never
+    /// touch the timing model — the same differential discipline as
+    /// `fast_forward` and `sanitize`.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimConfig {
@@ -114,6 +122,7 @@ impl SimConfig {
             costs: t.costs,
             fast_forward: true,
             sanitize: false,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -211,20 +220,73 @@ impl SimStats {
     }
 }
 
+/// What class of trap a [`SimError`] is — the recovery policy's input.
+/// Transient classes (a flipped line, a spurious fault) are worth a
+/// rollback-and-retry; deterministic ones (a hang is a hang on replay
+/// too) must pass straight through to the caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrapKind {
+    /// Illegal instruction / feature violation.
+    IllegalInst,
+    /// Memory access fault (decode, bounds, alignment).
+    MemFault,
+    /// Watchdog: the run exceeded `max_cycles`.
+    Watchdog,
+    /// Barrier deadlock: all live warps parked.
+    Deadlock,
+    /// Structural errors with no transient interpretation (bad entry
+    /// pc, malformed control flow, ...).
+    Fatal,
+}
+
+impl TrapKind {
+    /// Would a deterministic replay from the same state hit this trap
+    /// again? Injected transients (and real-hardware analogues) say no;
+    /// hangs and structural errors say yes.
+    pub fn transient(self) -> bool {
+        matches!(self, TrapKind::IllegalInst | TrapKind::MemFault)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SimError {
     pub core: u32,
     pub warp: u32,
     pub pc: u32,
     pub msg: String,
+    /// Trap class, driving retry-vs-fail decisions upstream.
+    pub kind: TrapKind,
+    /// True when the trap came from the fault injector rather than the
+    /// program — lets tests and logs distinguish "we did this" from a
+    /// genuine compiler/runtime bug.
+    pub injected: bool,
+}
+
+impl SimError {
+    /// A fatal (non-retryable) error — the default for trap sites that
+    /// predate fault classification.
+    pub fn fatal(core: u32, warp: u32, pc: u32, msg: impl Into<String>) -> SimError {
+        SimError {
+            core,
+            warp,
+            pc,
+            msg: msg.into(),
+            kind: TrapKind::Fatal,
+            injected: false,
+        }
+    }
 }
 
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "sim error at core {} warp {} pc {}: {}",
-            self.core, self.warp, self.pc, self.msg
+            "sim error at core {} warp {} pc {}: {}{}",
+            self.core,
+            self.warp,
+            self.pc,
+            self.msg,
+            if self.injected { " [injected]" } else { "" }
         )
     }
 }

@@ -272,7 +272,7 @@ __global__ void add2(float* x, int n) {
         .unwrap();
     let mut stream = session.create_stream(&program);
     let buf = stream.malloc(64 * 4);
-    stream.enqueue_write_f32(buf, &[1.0f32; 64]);
+    stream.enqueue_write_f32(buf, &[1.0f32; 64]).unwrap();
     stream
         .enqueue_launch(
             "add2",

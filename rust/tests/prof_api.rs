@@ -44,8 +44,8 @@ fn stall_breakdown_sums_to_total_cycles() {
     let mut st = s.create_stream(&p);
     let data = st.malloc(128 * 4);
     let hist = st.malloc(8 * 4);
-    st.enqueue_write_u32(data, &(0..128u32).collect::<Vec<_>>());
-    st.enqueue_write_u32(hist, &[0u32; 8]);
+    st.enqueue_write_u32(data, &(0..128u32).collect::<Vec<_>>()).unwrap();
+    st.enqueue_write_u32(hist, &[0u32; 8]).unwrap();
     st.enqueue_launch(
         "mix",
         [2, 1, 1],
@@ -118,8 +118,8 @@ fn chrome_trace_round_trips_through_json_parser() {
     let mut st = s.create_stream(&p);
     let data = st.malloc(128 * 4);
     let hist = st.malloc(8 * 4);
-    st.enqueue_write_u32(data, &(0..128u32).collect::<Vec<_>>());
-    st.enqueue_write_u32(hist, &[0u32; 8]);
+    st.enqueue_write_u32(data, &(0..128u32).collect::<Vec<_>>()).unwrap();
+    st.enqueue_write_u32(hist, &[0u32; 8]).unwrap();
     st.enqueue_launch(
         "mix",
         [2, 1, 1],
@@ -153,8 +153,8 @@ fn profiling_is_deterministic_and_invisible() {
         let mut st = s.create_stream(&p);
         let data = st.malloc(128 * 4);
         let hist = st.malloc(8 * 4);
-        st.enqueue_write_u32(data, &(0..128u32).collect::<Vec<_>>());
-        st.enqueue_write_u32(hist, &[0u32; 8]);
+        st.enqueue_write_u32(data, &(0..128u32).collect::<Vec<_>>()).unwrap();
+        st.enqueue_write_u32(hist, &[0u32; 8]).unwrap();
         st.enqueue_launch(
             "mix",
             [2, 1, 1],
@@ -191,7 +191,7 @@ kernel void scale(global int* x, int n) {
         .unwrap();
     let mut st = s.create_stream(&p);
     let buf = st.malloc(64 * 4);
-    st.enqueue_write_u32(buf, &(0..64u32).collect::<Vec<_>>());
+    st.enqueue_write_u32(buf, &(0..64u32).collect::<Vec<_>>()).unwrap();
     st.enqueue_launch(
         "scale",
         [1, 1, 1],
@@ -265,7 +265,7 @@ kernel void pressure(global int* out, int n) {
         let p = s.compile(src).unwrap();
         let mut st = s.create_stream(&p);
         let out = st.malloc(128 * 4);
-        st.enqueue_write_u32(out, &[0u32; 128]);
+        st.enqueue_write_u32(out, &[0u32; 128]).unwrap();
         st.enqueue_launch(
             "pressure",
             [2, 1, 1],

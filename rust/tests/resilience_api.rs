@@ -1,0 +1,378 @@
+//! `volt::resilience` integration (ISSUE 7): typed-error stability,
+//! fault-injection determinism, launch-level recovery, sticky stream
+//! containment, and the corruption-safe persistent cache — all through
+//! the public API alone.
+
+use volt::driver::{Session, VoltError, VoltOptions};
+use volt::runtime::{ArgValue, LaunchPolicy, RuntimeError, VoltDevice};
+use volt::sim::{FaultKind, FaultPlan, FaultState, SimConfig, SimError, SimStats, TrapKind};
+
+const INC: &str = r#"
+kernel void inc(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] + 1;
+}
+"#;
+
+const BARRIER_SUM: &str = r#"
+kernel void bsum(global float* in, global float* out) {
+    local float buf[64];
+    int l = get_local_id(0);
+    buf[l] = in[l];
+    barrier(0);
+    out[l] = buf[63 - l];
+}
+"#;
+
+fn compile(src: &str) -> (std::sync::Arc<volt::driver::Program>, SimConfig) {
+    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let prog = session.compile(src).unwrap();
+    (prog, session.options().device_config())
+}
+
+fn device_with(src: &str, faults: FaultPlan) -> VoltDevice {
+    let (prog, base) = compile(src);
+    let cfg = SimConfig { faults, ..base };
+    VoltDevice::new(prog.image.clone(), cfg)
+}
+
+/// One inc-run: seed the buffer, launch, return (per-run stats, result).
+fn run_inc(dev: &mut VoltDevice, seed: u32) -> Result<(SimStats, Vec<u32>), RuntimeError> {
+    let buf = dev.malloc(64 * 4);
+    dev.write_u32s(buf, &[seed; 64])?;
+    let stats = dev.launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])?;
+    let out = dev.read_u32s(buf, 64)?;
+    Ok((stats, out))
+}
+
+/// Every error variant the resilience surface can hand back has a stable,
+/// greppable rendering and a stable `stage()` tag — logs and CI greps
+/// depend on these strings.
+#[test]
+fn error_variant_display_is_stable() {
+    let cases: Vec<(VoltError, &str, &str)> = vec![
+        (
+            VoltError::Frontend { line: 0, msg: "empty module".into() },
+            "frontend",
+            "frontend error: empty module",
+        ),
+        (
+            VoltError::Frontend { line: 7, msg: "unknown variable".into() },
+            "frontend",
+            "frontend error at line 7: unknown variable",
+        ),
+        (
+            VoltError::MiddleEnd { pass: "verify", msg: "bad ssa".into() },
+            "middle-end",
+            "middle-end error in pass 'verify': bad ssa",
+        ),
+        (
+            VoltError::Runtime(RuntimeError::UnknownKernel("k".into())),
+            "runtime",
+            "runtime error: unknown kernel 'k'",
+        ),
+        (
+            VoltError::Runtime(RuntimeError::UnknownSymbol("coef".into())),
+            "runtime",
+            "runtime error: unknown device symbol 'coef'",
+        ),
+        (
+            VoltError::Runtime(RuntimeError::BadLaunch("zero-sized launch".into())),
+            "runtime",
+            "runtime error: bad launch: zero-sized launch",
+        ),
+        (
+            VoltError::Runtime(RuntimeError::Mem("h2d fault at 0x0".into())),
+            "runtime",
+            "runtime error: memory error: h2d fault at 0x0",
+        ),
+        (
+            VoltError::Runtime(RuntimeError::Sim(SimError {
+                core: 1,
+                warp: 2,
+                pc: 12,
+                msg: "injected fault: memory trap".into(),
+                kind: TrapKind::MemFault,
+                injected: true,
+            })),
+            "runtime",
+            "runtime error: sim error at core 1 warp 2 pc 12: injected fault: memory trap [injected]",
+        ),
+        (
+            VoltError::InvalidOptions { msg: "bad combo".into() },
+            "options",
+            "invalid options: bad combo",
+        ),
+        (
+            VoltError::stream("transfer read before synchronize"),
+            "stream",
+            "stream error: transfer read before synchronize",
+        ),
+        (
+            VoltError::Validation { msg: "mismatch at 3".into() },
+            "validation",
+            "validation failed: mismatch at 3",
+        ),
+    ];
+    for (err, stage, display) in cases {
+        assert_eq!(err.stage(), stage, "{err:?}");
+        assert_eq!(err.to_string(), display, "{err:?}");
+        // Every variant is Clone and renders identically after cloning —
+        // the property the sticky stream fault relies on.
+        assert_eq!(err.clone().to_string(), display);
+    }
+    // The sticky-device error points at both recovery paths by name.
+    let faulted = RuntimeError::Faulted {
+        kernel: "inc".into(),
+        cause: SimError::fatal(0, 0, 0, "boom"),
+    };
+    let s = faulted.to_string();
+    assert!(s.contains("device is faulted"), "{s}");
+    assert!(s.contains("kernel 'inc'"), "{s}");
+    assert!(s.contains("reset()") && s.contains("recover()"), "{s}");
+}
+
+/// Differential contract: an armed-but-never-firing plan must not
+/// disturb the machine — cycles, instruction counts, and results are
+/// bit-identical to a device built with no plan at all.
+#[test]
+fn armed_but_unfired_plan_is_bit_identical() {
+    let mut plain = device_with(INC, FaultPlan::none());
+    // A fault scheduled far past any reachable cycle: armed (so the
+    // snapshot/guard paths are live) but never injected.
+    let mut armed = device_with(
+        INC,
+        FaultPlan::none().with(u64::MAX / 2, FaultKind::IllegalTrap { pc: None }),
+    );
+    let (s1, r1) = run_inc(&mut plain, 7).unwrap();
+    let (s2, r2) = run_inc(&mut armed, 7).unwrap();
+    assert_eq!(r1, r2);
+    assert_eq!((s1.cycles, s1.instrs, s1.loads, s1.stores), (s2.cycles, s2.instrs, s2.loads, s2.stores));
+    assert_eq!(armed.gpu.faults.injected(), 0);
+    assert_eq!(armed.gpu.faults.pending(), 1);
+}
+
+/// Retry-exactness: faults are device-lifetime one-shot, so a launch
+/// recovers iff `retries >= scheduled transient faults` — and the run
+/// that recovers produces the exact same results as an uninjected one.
+#[test]
+fn retry_succeeds_exactly_at_fault_count() {
+    let plan = FaultPlan::none()
+        .with(0, FaultKind::IllegalTrap { pc: None })
+        .with(0, FaultKind::MemTrap { pc: None });
+
+    // Reference result from a clean device.
+    let (_, want) = run_inc(&mut device_with(INC, FaultPlan::none()), 7).unwrap();
+
+    // retries = faults: recovers, results identical to the clean run.
+    let mut dev = device_with(INC, plan);
+    dev.policy = LaunchPolicy { retries: 2, backoff_cycles: 25, watchdog_max_cycles: None };
+    let (_, got) = run_inc(&mut dev, 7).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(dev.retries_performed, 2);
+    assert_eq!(dev.launches_recovered, 1);
+    assert_eq!(dev.gpu.faults.injected(), 2);
+    assert_eq!(dev.gpu.faults.log.len(), 2, "{:?}", dev.gpu.faults.log);
+
+    // retries = faults - 1: the budget runs dry and the device faults,
+    // with the input rolled back to its pre-launch value.
+    let mut dev = device_with(INC, plan);
+    dev.policy = LaunchPolicy { retries: 1, backoff_cycles: 25, watchdog_max_cycles: None };
+    let buf = dev.malloc(64 * 4);
+    dev.write_u32s(buf, &[7u32; 64]).unwrap();
+    let e = dev
+        .launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])
+        .unwrap_err();
+    assert!(matches!(e, RuntimeError::Sim(ref s) if s.injected), "{e}");
+    assert!(dev.is_faulted());
+    assert_eq!(dev.fault().unwrap().attempts, 2);
+    dev.clear_fault();
+    assert_eq!(dev.read_u32s(buf, 64).unwrap(), vec![7u32; 64], "rollback");
+}
+
+/// `reset()` restores a machine bit-identical to a freshly constructed
+/// device: same allocator addresses, same per-run stats, same results —
+/// even after the previous machine trapped and sticky-faulted.
+#[test]
+fn reset_then_rerun_is_bit_identical_to_fresh_device() {
+    let (fresh_stats, fresh_out) = run_inc(&mut device_with(INC, FaultPlan::none()), 3).unwrap();
+
+    // Poison a device: the injected trap faults it (no retry budget).
+    let mut dev = device_with(INC, FaultPlan::none().with(0, FaultKind::MemTrap { pc: None }));
+    let e = run_inc(&mut dev, 3).unwrap_err();
+    assert!(matches!(e, RuntimeError::Sim(ref s) if s.injected), "{e}");
+    assert!(dev.is_faulted());
+
+    // reset() re-arms the fault plan too — consume it under a retry
+    // budget this time, then compare the recovered run against fresh.
+    dev.reset();
+    assert!(!dev.is_faulted());
+    assert_eq!(dev.gpu.faults.pending(), 1, "reset re-arms the plan");
+    dev.policy = LaunchPolicy { retries: 1, backoff_cycles: 0, watchdog_max_cycles: None };
+    let (stats, out) = run_inc(&mut dev, 3).unwrap();
+    assert_eq!(out, fresh_out);
+    assert_eq!((stats.cycles, stats.instrs), (fresh_stats.cycles, fresh_stats.instrs));
+    assert_eq!(dev.launches, 1);
+    assert_eq!(dev.launches_recovered, 1);
+}
+
+/// A failed command sticky-faults its stream with the original typed
+/// cause; `recover()` hands the fault back once and restores service.
+#[test]
+fn stream_containment_and_recover_roundtrip() {
+    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let prog = session.compile(INC).unwrap();
+    let mut st = session.create_stream(&prog);
+    st.device_mut().gpu.faults =
+        FaultState::new(FaultPlan::none().with(0, FaultKind::IllegalTrap { pc: None }));
+
+    let buf = st.malloc(64 * 4);
+    st.enqueue_write_u32(buf, &[5u32; 64]).unwrap();
+    st.enqueue_launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])
+        .unwrap();
+    let t = st.enqueue_read_u32(buf, 64);
+    let e = st.synchronize().unwrap_err();
+    assert!(e.to_string().contains("[injected]"), "{e}");
+
+    // Sticky: the same typed cause comes back from every subsequent call.
+    assert!(st.is_faulted());
+    let again = st.enqueue_write_u32(buf, &[1u32; 64]).unwrap_err();
+    assert_eq!(again.to_string(), e.to_string());
+    // The residual read was defined as Failed, naming the faulting launch.
+    let read = st.take_u32(t).unwrap_err();
+    assert!(read.to_string().contains("stream faulted at 'inc'"), "{read}");
+
+    // recover() returns the fault exactly once, then the stream works —
+    // and the rollback preserved the pre-launch buffer contents.
+    let f = st.recover().expect("one latched fault");
+    assert_eq!(f.label, "inc");
+    assert!(st.recover().is_none());
+    st.enqueue_launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])
+        .unwrap();
+    let t2 = st.enqueue_read_u32(buf, 64);
+    st.synchronize().unwrap();
+    assert_eq!(st.take_u32(t2).unwrap(), vec![6u32; 64]);
+}
+
+/// The watchdog is deterministic: it passes straight through any retry
+/// budget, and its trap names the kernel and dumps per-warp state. Uses
+/// the runtime-only corpus kernel (statically clean, hangs at runtime).
+#[test]
+fn watchdog_trap_is_enriched_and_never_retried() {
+    let case = volt::check::buggy::runtime_all()
+        .into_iter()
+        .find(|c| c.name == "watchdog_infinite_loop")
+        .expect("runtime corpus entry");
+    assert_eq!(case.expect_trap, "watchdog");
+    let (prog, cfg) = compile(case.source);
+    let mut dev = VoltDevice::new(prog.image.clone(), cfg);
+    let buf = dev.malloc(64 * 4);
+    dev.write_u32s(buf, &[0u32; 64]).unwrap();
+    let policy = LaunchPolicy {
+        retries: 3,
+        backoff_cycles: 10,
+        watchdog_max_cycles: Some(20_000),
+    };
+    let e = dev
+        .launch_with_policy(
+            "watchdog_infinite_loop",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(buf), ArgValue::I32(64)],
+            policy,
+        )
+        .unwrap_err();
+    let RuntimeError::Sim(sim) = &e else { panic!("{e}") };
+    assert_eq!(sim.kind, TrapKind::Watchdog);
+    assert!(!sim.kind.transient());
+    assert!(sim.msg.contains("exceeded max cycles (20000)"), "{}", sim.msg);
+    assert!(sim.msg.contains("kernel 'watchdog_infinite_loop'"), "{}", sim.msg);
+    assert!(sim.msg.contains("core 0 warp 0: pc"), "{}", sim.msg);
+    assert_eq!(dev.retries_performed, 0, "watchdog must not be retried");
+    assert!(dev.is_faulted());
+}
+
+/// A dropped barrier arrival deadlocks deterministically; the trap is
+/// attributed to the injector but still refuses the retry budget — a
+/// hang is a hang on replay too.
+#[test]
+fn stuck_barrier_deadlock_passes_through_retry() {
+    let mut dev = device_with(BARRIER_SUM, FaultPlan::none().with(0, FaultKind::StuckBarrier));
+    dev.policy = LaunchPolicy { retries: 5, backoff_cycles: 10, watchdog_max_cycles: None };
+    let a = dev.malloc(64 * 4);
+    let b = dev.malloc(64 * 4);
+    dev.write_f32(a, &[1.5f32; 64]).unwrap();
+    let e = dev
+        .launch("bsum", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(a), ArgValue::Ptr(b)])
+        .unwrap_err();
+    let RuntimeError::Sim(sim) = &e else { panic!("{e}") };
+    assert_eq!(sim.kind, TrapKind::Deadlock);
+    assert!(sim.injected, "deadlock must be attributed to the injector");
+    assert!(sim.msg.contains("barrier deadlock"), "{}", sim.msg);
+    assert!(sim.msg.contains("kernel 'bsum'"), "{}", sim.msg);
+    assert_eq!(dev.retries_performed, 0, "deadlock must not be retried");
+
+    // Proof the kernel itself is sound: a fresh device with no plan runs
+    // it to completion.
+    let mut ok = device_with(BARRIER_SUM, FaultPlan::none());
+    let a = ok.malloc(64 * 4);
+    let b = ok.malloc(64 * 4);
+    ok.write_f32(a, &[1.5f32; 64]).unwrap();
+    ok.launch("bsum", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(a), ArgValue::Ptr(b)])
+        .unwrap();
+    assert_eq!(ok.read_f32(b, 64).unwrap(), vec![1.5f32; 64]);
+}
+
+/// The persistent cache end to end through the public API: a second
+/// session hits the disk tier; a flipped byte degrades to a quarantined
+/// miss and a correct recompile — never a crash, never a wrong program.
+#[test]
+fn disk_cache_survives_sessions_and_contains_corruption() {
+    let dir = std::env::temp_dir().join(format!("volt-resilience-dc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let opts = || VoltOptions::builder().build().unwrap();
+    let (fp, words) = {
+        let mut s1 = Session::with_disk_cache(opts(), &dir, 0);
+        let p = s1.compile(INC).unwrap();
+        (p.fingerprint, p.image.words.clone())
+    };
+
+    // Fresh session, same directory: served from disk, zero compiles.
+    let mut s2 = Session::with_disk_cache(opts(), &dir, 0);
+    let p2 = s2.compile(INC).unwrap();
+    assert_eq!(p2.fingerprint, fp);
+    assert_eq!(p2.image.words, words);
+    let cs = s2.cache_stats();
+    assert_eq!((cs.disk_hits, cs.misses, cs.disk_corrupt), (1, 0, 0));
+
+    // Flip one byte in the stored entry: the next session must detect
+    // it, quarantine the file, and recompile to an identical program.
+    let entry = s2.disk_cache().unwrap().entry_path(fp);
+    let mut bytes = std::fs::read(&entry).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&entry, &bytes).unwrap();
+
+    let mut s3 = Session::with_disk_cache(opts(), &dir, 0);
+    let p3 = s3.compile(INC).unwrap();
+    assert_eq!(p3.fingerprint, fp);
+    assert_eq!(p3.image.words, words, "recompile must be bit-identical");
+    let cs = s3.cache_stats();
+    assert_eq!((cs.disk_corrupt, cs.disk_hits, cs.misses), (1, 0, 1));
+    assert_eq!(s3.disk_cache().unwrap().quarantined(), 1);
+    assert!(!entry.exists(), "corrupt entry must leave the cache dir");
+
+    // The recompile re-stored the entry: a fourth session hits again.
+    let mut s4 = Session::with_disk_cache(opts(), &dir, 0);
+    s4.compile(INC).unwrap();
+    assert_eq!(s4.cache_stats().disk_hits, 1);
+
+    // And the cached program actually runs: correct results from a
+    // device built off the disk-served image.
+    let mut dev = VoltDevice::new(p2.image.clone(), s2.options().device_config());
+    let (_, out) = run_inc(&mut dev, 9).unwrap();
+    assert_eq!(out, vec![10u32; 64]);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

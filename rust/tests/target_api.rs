@@ -42,7 +42,7 @@ fn run_k_on(target: &str, opt: OptLevel, src: &str, n: u32) -> Vec<u32> {
     let (s, p) = compile_on(target, opt, src);
     let mut st = s.create_stream(&p);
     let buf = st.malloc(n * 4);
-    st.enqueue_write_u32(buf, &vec![0u32; n as usize]);
+    st.enqueue_write_u32(buf, &vec![0u32; n as usize]).unwrap();
     st.enqueue_launch(
         "k",
         [2, 1, 1],
