@@ -6,6 +6,10 @@
 //! recompiles; in practice a hit is a hash + HashMap lookup and lands
 //! orders of magnitude beyond that.
 //!
+//! A third section gates the persistent tier (ISSUE 8): fresh sessions
+//! pointed at a warm cache directory must serve every compile from disk
+//! (no recompiles, no mem hits) at >= 5x over cold.
+//!
 //! Run: cargo bench --bench recompile_cache
 
 use std::time::Instant;
@@ -77,4 +81,39 @@ fn main() {
         assert_eq!(st.misses, 1);
     }
     println!("OK: every warm compile was a cache hit");
+
+    // Disk tier: warm the persistent cache once, then time fresh
+    // sessions (empty mem tier) against the same directory — every
+    // compile must come back from disk, never the pipeline.
+    let dir = std::env::temp_dir().join(format!("volt-bench-dc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for (name, src) in &sources {
+        let mut s = Session::with_disk_cache(opts_for(name), &dir, 0);
+        s.compile(src).expect(name);
+    }
+    let t2 = Instant::now();
+    for _ in 0..passes {
+        for (name, src) in &sources {
+            let mut s = Session::with_disk_cache(opts_for(name), &dir, 0);
+            s.compile(src).expect(name);
+            let st = s.cache_stats();
+            assert_eq!(st.disk_hits, 1, "{name}: expected a disk hit");
+            assert_eq!(st.misses, 0, "{name}: warm disk tier must not recompile");
+            assert_eq!(st.hits, 0, "{name}: fresh session has no mem tier to hit");
+        }
+    }
+    let disk = t2.elapsed().as_secs_f64();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "disk: {n} disk hits in {:.3}s ({:.3} ms each)",
+        disk,
+        disk * 1e3 / n as f64
+    );
+    let disk_speedup = cold / disk.max(1e-9);
+    println!("disk-tier speedup: {disk_speedup:.1}x");
+    assert!(
+        disk_speedup >= 5.0,
+        "disk tier must be at least 5x faster than cold compiles (got {disk_speedup:.1}x)"
+    );
+    println!("OK: every disk-tier compile was served from the persistent cache");
 }

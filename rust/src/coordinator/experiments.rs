@@ -9,6 +9,7 @@ use crate::driver::{compile_program, CacheStats, Session, VoltError, VoltOptions
 use crate::prof::counters::StallBreakdown;
 use crate::prof::report::KernelProfile;
 use crate::runtime::{LaunchPolicy, VoltDevice};
+use crate::serve::{synthetic, ServeConfig, ServeReport, Service};
 use crate::sim::{CacheConfig, FaultPlan, SimConfig, SimStats};
 use crate::target::TargetDesc;
 use crate::transform::OptLevel;
@@ -127,6 +128,16 @@ pub fn run_bench_resilient(
         },
         report,
     ))
+}
+
+/// `volt serve --synthetic`: run the seeded synthetic serving workload
+/// (`cfg.seed` seeds it) through one [`Service`] batch. The
+/// programmatic entry shared by the CLI and the `serve_api`
+/// integration test — fixed `(count, cfg)` renders a byte-identical
+/// report on every call.
+pub fn serve_synthetic(count: usize, cfg: ServeConfig) -> ServeReport {
+    let seed = cfg.seed;
+    Service::new(cfg).run(synthetic(count, seed))
 }
 
 /// [`run_bench`] against an explicit target: device geometry from

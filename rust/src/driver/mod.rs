@@ -45,4 +45,4 @@ pub use options::{VoltOptions, VoltOptionsBuilder};
 pub use session::{
     compile_program, fingerprint, CacheStats, CompileTimings, KernelEntry, Program, Session,
 };
-pub use stream::{CommandKind, Event, Stream, StreamFault, Transfer};
+pub use stream::{CommandKind, CommandTiming, Event, Stream, StreamFault, Transfer};

@@ -74,12 +74,48 @@ pub struct Event {
     /// otherwise.
     pub label: String,
     pub kind: CommandKind,
+    /// Cumulative device sim-cycles when the command was enqueued — the
+    /// queue-wait anchor ([`Stream::timings`]).
+    pub enqueue_cycles: u64,
     /// Cumulative device sim-cycles when the command started / finished
     /// (copies are host-side and take zero device cycles).
     pub start_cycles: u64,
     pub end_cycles: u64,
     /// Warp instructions executed (launches only).
     pub instrs: u64,
+}
+
+/// Queue-wait vs execute split of one completed command, derived from
+/// its [`Event`] cycle stamps — the latency primitive `volt::serve`
+/// builds its percentiles on.
+#[derive(Clone, Debug)]
+pub struct CommandTiming {
+    pub label: String,
+    pub kind: CommandKind,
+    /// Device clock when the command entered the queue.
+    pub enqueue_cycle: u64,
+    /// Device clock when it began executing (everything enqueued before
+    /// it had completed).
+    pub start_cycle: u64,
+    /// Device clock when it finished.
+    pub end_cycle: u64,
+}
+
+impl CommandTiming {
+    /// Cycles the command waited behind earlier commands.
+    pub fn queue_wait(&self) -> u64 {
+        self.start_cycle - self.enqueue_cycle
+    }
+
+    /// Cycles the command itself consumed (0 for host-side copies).
+    pub fn execute_cycles(&self) -> u64 {
+        self.end_cycle - self.start_cycle
+    }
+
+    /// Enqueue-to-completion cycles.
+    pub fn turnaround(&self) -> u64 {
+        self.end_cycle - self.enqueue_cycle
+    }
 }
 
 /// Why a stream is faulted: the command that failed and its typed cause.
@@ -122,13 +158,20 @@ enum Cmd {
     },
 }
 
+/// A queued command plus the device clock at enqueue time (the
+/// queue-wait anchor of its eventual [`Event`]).
+struct Queued {
+    cmd: Cmd,
+    enqueue_cycles: u64,
+}
+
 /// An in-order command queue bound to one device executing one
 /// [`Program`].
 pub struct Stream {
     id: u64,
     program: Arc<Program>,
     dev: VoltDevice,
-    queue: VecDeque<Cmd>,
+    queue: VecDeque<Queued>,
     slots: Vec<Slot>,
     events: Vec<Event>,
     fault: Option<StreamFault>,
@@ -201,6 +244,14 @@ impl Stream {
         }
     }
 
+    /// Queue a command stamped with the current device clock.
+    fn push(&mut self, cmd: Cmd) {
+        self.queue.push_back(Queued {
+            cmd,
+            enqueue_cycles: self.dev.total_stats.cycles,
+        });
+    }
+
     /// Device-memory allocation is host-side bookkeeping and immediate.
     pub fn malloc(&mut self, size: u32) -> DevicePtr {
         self.dev.malloc(size)
@@ -216,13 +267,13 @@ impl Stream {
         if self.fault.is_some() {
             self.dev.free(ptr, size);
         } else {
-            self.queue.push_back(Cmd::Free { ptr, size });
+            self.push(Cmd::Free { ptr, size });
         }
     }
 
     pub fn enqueue_write_bytes(&mut self, dst: DevicePtr, bytes: &[u8]) -> Result<(), VoltError> {
         self.check_fault()?;
-        self.queue.push_back(Cmd::H2D {
+        self.push(Cmd::H2D {
             dst,
             bytes: bytes.to_vec(),
         });
@@ -257,7 +308,7 @@ impl Stream {
         {
             return Err(VoltError::stream(msg));
         }
-        self.queue.push_back(Cmd::SymbolWrite {
+        self.push(Cmd::SymbolWrite {
             symbol: symbol.to_string(),
             offset,
             bytes: bytes.to_vec(),
@@ -314,7 +365,7 @@ impl Stream {
                 args.len()
             )));
         }
-        self.queue.push_back(Cmd::Launch {
+        self.push(Cmd::Launch {
             kernel: kernel.to_string(),
             grid,
             block,
@@ -333,7 +384,7 @@ impl Stream {
             self.slots.push(Slot::Failed);
         } else {
             self.slots.push(Slot::Pending);
-            self.queue.push_back(Cmd::D2H { src, len, slot });
+            self.push(Cmd::D2H { src, len, slot });
         }
         Transfer {
             stream: self.id,
@@ -359,8 +410,8 @@ impl Stream {
     /// (host-side bookkeeping; nothing that could reuse the memory will
     /// run), everything else is dropped.
     fn fail_residual(&mut self) {
-        while let Some(cmd) = self.queue.pop_front() {
-            match cmd {
+        while let Some(q) = self.queue.pop_front() {
+            match q.cmd {
                 Cmd::D2H { slot, .. } => self.slots[slot] = Slot::Failed,
                 Cmd::Free { ptr, size } => self.dev.free(ptr, size),
                 _ => {}
@@ -381,7 +432,7 @@ impl Stream {
     /// cause.
     pub fn synchronize(&mut self) -> Result<(), VoltError> {
         self.check_fault()?;
-        while let Some(cmd) = self.queue.pop_front() {
+        while let Some(Queued { cmd, enqueue_cycles }) = self.queue.pop_front() {
             let (label, kind) = match &cmd {
                 Cmd::H2D { .. } => ("h2d".to_string(), CommandKind::H2D),
                 Cmd::D2H { .. } => ("d2h".to_string(), CommandKind::D2H),
@@ -446,6 +497,7 @@ impl Stream {
             self.events.push(Event {
                 label,
                 kind,
+                enqueue_cycles,
                 start_cycles,
                 end_cycles: self.dev.total_stats.cycles,
                 instrs,
@@ -532,6 +584,24 @@ impl Stream {
     /// streams; transfer slots keep only a small marker once taken).
     pub fn take_events(&mut self) -> Vec<Event> {
         std::mem::take(&mut self.events)
+    }
+
+    /// Per-command `(enqueue, start, end)` cycle view over the executed
+    /// commands, splitting each command's latency into queue-wait
+    /// (behind earlier commands in the batch) and execute time. Derived
+    /// from [`Stream::events`], so it covers the same completed-command
+    /// window and drains with [`Stream::take_events`].
+    pub fn timings(&self) -> Vec<CommandTiming> {
+        self.events
+            .iter()
+            .map(|e| CommandTiming {
+                label: e.label.clone(),
+                kind: e.kind,
+                enqueue_cycle: e.enqueue_cycles,
+                start_cycle: e.start_cycles,
+                end_cycle: e.end_cycles,
+            })
+            .collect()
     }
 
     /// Cumulative device statistics over all launches on this stream.
@@ -694,6 +764,64 @@ kernel void fill(global int* x, int v, int n) {
         assert!(ev[1].instrs > 0);
         assert_eq!(ev[2].start_cycles, ev[1].end_cycles);
         assert_eq!(st.take_u32(t).unwrap(), vec![9u32; 64]);
+    }
+
+    /// The queue-wait/execute split: stamps are monotone per command
+    /// (enqueue <= start <= end), commands execute in order, copies
+    /// cost zero device cycles, and a command enqueued before a launch
+    /// executed accrues the launch's cycles as queue wait.
+    #[test]
+    fn timing_view_is_monotone_and_copies_are_free() {
+        let mut st = stream_for(
+            r#"
+kernel void fill(global int* x, int v, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = v;
+}
+"#,
+        );
+        let b = st.malloc(256);
+        st.enqueue_write_u32(b, &[0u32; 64]).unwrap();
+        st.enqueue_launch(
+            "fill",
+            [1, 1, 1],
+            [64, 1, 1],
+            &[ArgValue::Ptr(b), ArgValue::I32(3), ArgValue::I32(64)],
+        )
+        .unwrap();
+        let t = st.enqueue_read_u32(b, 64);
+        st.synchronize().unwrap();
+        let tm = st.timings();
+        assert_eq!(tm.len(), 3);
+        for (i, c) in tm.iter().enumerate() {
+            assert!(
+                c.enqueue_cycle <= c.start_cycle && c.start_cycle <= c.end_cycle,
+                "command {i} not monotone: {c:?}"
+            );
+            if i > 0 {
+                assert!(c.start_cycle >= tm[i - 1].end_cycle, "out-of-order execute");
+            }
+            assert_eq!(c.turnaround(), c.queue_wait() + c.execute_cycles());
+        }
+        // Copies are host-side: zero device execute cycles.
+        assert_eq!(tm[0].kind, CommandKind::H2D);
+        assert_eq!(tm[0].execute_cycles(), 0);
+        assert_eq!(tm[2].kind, CommandKind::D2H);
+        assert_eq!(tm[2].execute_cycles(), 0);
+        // The launch consumed cycles; the d2h behind it waited them out.
+        let launch = &tm[1];
+        assert!(launch.execute_cycles() > 0);
+        assert_eq!(launch.queue_wait(), 0, "first batch starts at enqueue time");
+        assert_eq!(tm[2].queue_wait(), launch.execute_cycles());
+
+        // A second batch enqueues at the advanced device clock.
+        st.enqueue_write_u32(b, &[1u32; 64]).unwrap();
+        st.synchronize().unwrap();
+        let tm2 = st.timings();
+        assert_eq!(tm2.len(), 4);
+        assert_eq!(tm2[3].enqueue_cycle, launch.end_cycle);
+        assert_eq!(tm2[3].queue_wait(), 0);
+        let _ = st.take_u32(t).unwrap();
     }
 
     /// The containment contract: a failing command faults the stream,

@@ -61,6 +61,13 @@
 //! * [`coordinator`] — the benchmark registry and the experiment
 //!   harnesses regenerating every figure/table in §5 (plus the deprecated
 //!   pre-`driver` `compile_source` shim).
+//! * [`serve`] — the batched multi-tenant serving front over the whole
+//!   stack: a queue of compile+launch requests admitted with
+//!   priorities, deduped through a shared [`driver::Session`] compile
+//!   tier (in-memory + disk), dispatched across a pool of simulated
+//!   devices with per-request stream isolation, and reported with
+//!   p50/p95/p99 latency, throughput, cache provenance and per-device
+//!   utilization (`volt serve`, `docs/SERVING.md`).
 //!
 //! See `docs/API.md` for an end-to-end quickstart.
 
@@ -73,6 +80,7 @@ pub mod frontend;
 pub mod ir;
 pub mod prof;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod target;
 pub mod transform;

@@ -36,6 +36,13 @@ commands:
                                                          set the launch recovery
                                                          policy, --cache-dir the
                                                          persistent compile cache)
+  serve <manifest> [--devices N] [--opt LEVEL] [--retries N]
+        [--backoff CYCLES] [--cache-dir DIR]             batched compile+launch
+        [--cache-max BYTES] [--queue-cap N]              service over N simulated
+        [--seed S] [--json FILE]                         devices (docs/SERVING.md);
+  serve --synthetic COUNT [same options]                 --synthetic runs the seeded
+                                                         mixed workload instead of
+                                                         a manifest file
   check <benchmark|file> [--cuda] [--block X,Y,Z] [--json]
                                                          static SIMT verification:
                                                          barrier divergence, shared-
@@ -79,19 +86,12 @@ fn parse_target(args: &[String]) -> TargetDesc {
 }
 
 fn parse_level(s: &str) -> OptLevel {
-    match s.to_lowercase().as_str() {
-        "base" => OptLevel::Base,
-        "uni-hw" | "unihw" => OptLevel::UniHw,
-        "uni-ann" | "uniann" => OptLevel::UniAnn,
-        "uni-func" | "unifunc" => OptLevel::UniFunc,
-        "zicond" => OptLevel::ZiCond,
-        "recon" => OptLevel::Recon,
-        "o3" => OptLevel::O3,
-        _ => {
-            eprintln!("unknown opt level '{s}'");
-            std::process::exit(2);
-        }
-    }
+    // One spelling table for the whole CLI: the serve manifest parser
+    // owns it (`opt=` fields there must match `--opt` here).
+    volt::serve::parse_opt(s).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
 }
 
 fn flag(args: &[String], name: &str) -> bool {
@@ -104,6 +104,114 @@ fn opt_val(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Flags that consume the following token as their value (across all
+/// commands, so skipping is uniform).
+const VALUED: &[&str] = &[
+    "--opt", "--target", "--cache-dir", "--cache-max", "--retries", "--backoff", "--inject",
+    "--devices", "--queue-cap", "--seed", "--synthetic", "--json", "--top", "--trace", "--block",
+    "--levels", "--fig", "--only", "--csv",
+];
+
+const COMPILE_FLAGS: &[&str] = &["--cuda", "--opt", "--target", "--asm", "--ir", "--cache-dir"];
+const RUN_FLAGS: &[&str] = &[
+    "--opt",
+    "--target",
+    "--sw-warp",
+    "--smem-global",
+    "--no-fast-forward",
+    "--sanitize",
+    "--inject",
+    "--retries",
+    "--backoff",
+    "--cache-dir",
+];
+const SERVE_FLAGS: &[&str] = &[
+    "--synthetic",
+    "--devices",
+    "--opt",
+    "--retries",
+    "--backoff",
+    "--cache-dir",
+    "--cache-max",
+    "--queue-cap",
+    "--seed",
+    "--json",
+];
+
+/// Reject any `--flag` the command does not understand (a typo'd
+/// `--retires 2` must not silently run without retries). Values of
+/// valued flags are skipped, so a file named `--weird` still works as
+/// e.g. `--json --weird`.
+fn reject_unknown_flags(args: &[String], allowed: &[&str]) -> Result<(), String> {
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a.starts_with("--") {
+            if !allowed.contains(&a) {
+                return Err(format!("unknown flag '{a}' (allowed: {})", allowed.join(" ")));
+            }
+            if VALUED.contains(&a) {
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    Ok(())
+}
+
+/// First argument that is neither a flag nor a valued flag's value.
+fn first_positional(args: &[String]) -> Option<&String> {
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a.starts_with("--") {
+            i += if VALUED.contains(&a) { 2 } else { 1 };
+            continue;
+        }
+        return Some(&args[i]);
+    }
+    None
+}
+
+/// The options `compile`, `run`, and `serve` share, parsed in one place
+/// so the spellings and defaults cannot drift between commands.
+struct CommonOpts {
+    level: Option<OptLevel>,
+    target: TargetDesc,
+    cache_dir: Option<std::path::PathBuf>,
+    retries: u32,
+    backoff: u64,
+    inject: Option<FaultPlan>,
+}
+
+fn parse_common(args: &[String]) -> Result<CommonOpts, String> {
+    let level = match opt_val(args, "--opt") {
+        Some(s) => Some(volt::serve::parse_opt(&s)?),
+        None => None,
+    };
+    let retries = match opt_val(args, "--retries") {
+        Some(s) => s.parse().map_err(|_| format!("--retries: bad count '{s}'"))?,
+        None => 0,
+    };
+    let backoff = match opt_val(args, "--backoff") {
+        Some(s) => s.parse().map_err(|_| format!("--backoff: bad cycle count '{s}'"))?,
+        None => 0,
+    };
+    let inject = match opt_val(args, "--inject") {
+        Some(spec) => Some(FaultPlan::parse(&spec).map_err(|e| format!("--inject: {e}"))?),
+        None => None,
+    };
+    Ok(CommonOpts {
+        level,
+        target: parse_target(args),
+        cache_dir: opt_val(args, "--cache-dir").map(std::path::PathBuf::from),
+        retries,
+        backoff,
+        inject,
+    })
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
@@ -111,6 +219,7 @@ fn main() {
     let result = match cmd.as_str() {
         "compile" => cmd_compile(rest),
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "check" => cmd_check(rest),
         "prof" => cmd_prof(rest),
         "targets" => cmd_targets(rest),
@@ -128,20 +237,21 @@ fn main() {
 }
 
 fn cmd_compile(args: &[String]) -> Result<(), String> {
-    let file = args.first().ok_or("compile: missing file")?;
+    reject_unknown_flags(args, COMPILE_FLAGS)?;
+    let file = first_positional(args).ok_or("compile: missing file")?;
     let src = std::fs::read_to_string(file).map_err(|e| format!("{file}: {e}"))?;
     let dialect = if flag(args, "--cuda") || file.ends_with(".cu") {
         Dialect::Cuda
     } else {
         Dialect::OpenCL
     };
-    let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
-    let target = parse_target(args);
+    let common = parse_common(args)?;
+    let level = common.level.unwrap_or(OptLevel::Recon);
     // The builder derives the profile's geometry and warp lowering.
     let opts = VoltOptions::builder()
         .dialect(dialect)
         .opt_level(level)
-        .target_desc(target)
+        .target_desc(common.target)
         .build()
         .map_err(|e| e.to_string())?;
     if flag(args, "--ir") {
@@ -152,7 +262,7 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
         print!("{}", volt::ir::printer::print_module(&m));
         return Ok(());
     }
-    let mut session = match opt_val(args, "--cache-dir") {
+    let mut session = match &common.cache_dir {
         Some(dir) => Session::with_disk_cache(opts, dir, 0),
         None => Session::new(opts),
     };
@@ -201,30 +311,24 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
-    let name = args.first().ok_or("run: missing benchmark name")?;
+    reject_unknown_flags(args, RUN_FLAGS)?;
+    let name = first_positional(args).ok_or("run: missing benchmark name")?;
     let b = benchmarks::find(name).ok_or(format!("unknown benchmark '{name}'"))?;
-    let level = opt_val(args, "--opt").map(|s| parse_level(&s)).unwrap_or(OptLevel::Recon);
+    let common = parse_common(args)?;
+    let level = common.level.unwrap_or(OptLevel::Recon);
     let warp_hw = !flag(args, "--sw-warp");
     let smem = if flag(args, "--smem-global") {
         SharedMemMapping::Global
     } else {
         SharedMemMapping::Local
     };
-    let target = parse_target(args);
+    let target = common.target;
     let fast_forward = !flag(args, "--no-fast-forward");
     let sanitize = flag(args, "--sanitize");
 
     // volt::resilience path: deterministic fault injection, launch-level
     // recovery, and/or the persistent compile cache.
-    let inject = opt_val(args, "--inject");
-    let retries: u32 = opt_val(args, "--retries")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0);
-    let backoff: u64 = opt_val(args, "--backoff")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0);
-    let cache_dir = opt_val(args, "--cache-dir");
-    if inject.is_some() || retries > 0 || cache_dir.is_some() {
+    if common.inject.is_some() || common.retries > 0 || common.cache_dir.is_some() {
         if target.name != "vortex" {
             return Err(format!(
                 "--inject/--retries/--backoff/--cache-dir are only available with the \
@@ -239,23 +343,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     .to_string(),
             );
         }
-        let plan = match &inject {
-            Some(spec) => FaultPlan::parse(spec).map_err(|e| format!("--inject: {e}"))?,
-            None => FaultPlan::none(),
-        };
+        let plan = common.inject.unwrap_or_else(FaultPlan::none);
         let policy = LaunchPolicy {
-            retries,
-            backoff_cycles: backoff,
+            retries: common.retries,
+            backoff_cycles: common.backoff,
             watchdog_max_cycles: None,
         };
-        let (r, rep) = experiments::run_bench_resilient(
-            &b,
-            level,
-            plan,
-            policy,
-            cache_dir.as_deref().map(std::path::Path::new),
-        )
-        .map_err(|e| e.to_string())?;
+        let (r, rep) =
+            experiments::run_bench_resilient(&b, level, plan, policy, common.cache_dir.as_deref())
+                .map_err(|e| e.to_string())?;
         println!("benchmark {name} @ {level:?} on vortex: PASS (resilient)");
         println!(
             "  resilience: injected={} retries={} recovered={}",
@@ -264,7 +360,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         for l in &rep.fault_log {
             println!("    fault: {l}");
         }
-        if cache_dir.is_some() {
+        if common.cache_dir.is_some() {
             let c = rep.cache;
             println!(
                 "  disk-cache: hits={} corrupt={} evicted={} quarantined={}",
@@ -367,6 +463,65 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             }
             return Err(format!("sanitizer found {} issue(s)", reps.len()));
         }
+    }
+    Ok(())
+}
+
+/// `volt serve`: one batch of compile+launch requests — from a manifest
+/// file or the seeded synthetic workload — scheduled across N simulated
+/// devices through the shared compile tier. Exit is nonzero only when a
+/// request *without* injected faults fails; chaos requests exhausting
+/// their retry budget are expected outcomes, not service errors.
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    reject_unknown_flags(args, SERVE_FLAGS)?;
+    let common = parse_common(args)?;
+    let default_opt = common.level.unwrap_or(OptLevel::Recon);
+    let num = |name: &str, default: u64| -> Result<u64, String> {
+        match opt_val(args, name) {
+            Some(s) => s.parse().map_err(|_| format!("{name}: bad value '{s}'")),
+            None => Ok(default),
+        }
+    };
+    let cfg = volt::serve::ServeConfig {
+        devices: num("--devices", 2)? as usize,
+        retries: common.retries,
+        backoff_cycles: common.backoff,
+        queue_cap: num("--queue-cap", 0)? as usize,
+        cache_dir: common.cache_dir,
+        cache_max_bytes: num("--cache-max", 0)?,
+        seed: num("--seed", 1)? as u32,
+    };
+    let rep = match opt_val(args, "--synthetic") {
+        Some(n) => {
+            let count: usize = n.parse().map_err(|_| format!("--synthetic: bad count '{n}'"))?;
+            experiments::serve_synthetic(count, cfg)
+        }
+        None => {
+            let path =
+                first_positional(args).ok_or("serve: missing manifest file (or --synthetic N)")?;
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let base = std::path::Path::new(path)
+                .parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .unwrap_or_else(|| std::path::Path::new("."))
+                .to_path_buf();
+            let reqs = volt::serve::parse_manifest(&text, &base, default_opt)?;
+            volt::serve::Service::new(cfg).run(reqs)
+        }
+    };
+    print!("{}", rep.render_text());
+    let json = rep.render_json();
+    volt::prof::validate_json(&json)
+        .map_err(|e| format!("internal: BENCH_serving.json invalid: {e}"))?;
+    if let Some(path) = opt_val(args, "--json") {
+        std::fs::write(&path, &json).map_err(|e| e.to_string())?;
+        println!("wrote {path} ({} bytes, JSON validated)", json.len());
+    }
+    let clean = rep.clean_failures();
+    if clean > 0 {
+        return Err(format!(
+            "serve: {clean} request(s) without injected faults failed"
+        ));
     }
     Ok(())
 }
@@ -743,4 +898,65 @@ fn table1() -> String {
         out.push_str(&format!("{name:>42}: {loc:>6} LoC\n"));
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_command() {
+        let e = reject_unknown_flags(&argv(&["vecadd", "--retires", "2"]), RUN_FLAGS).unwrap_err();
+        assert!(e.contains("--retires"), "{e}");
+        reject_unknown_flags(&argv(&["vecadd", "--retries", "2"]), RUN_FLAGS).unwrap();
+        // Valued flags swallow their value, so a file named like a flag
+        // still parses: `--json --weird` is a filename, not a flag.
+        reject_unknown_flags(
+            &argv(&["--json", "--weird", "--synthetic", "5"]),
+            SERVE_FLAGS,
+        )
+        .unwrap();
+        // A run-only flag is a typo for compile, and vice versa.
+        let inject = argv(&["k.cl", "--inject", "trap@1"]);
+        assert!(reject_unknown_flags(&inject, COMPILE_FLAGS).is_err());
+        assert!(reject_unknown_flags(&argv(&["m.txt", "--asm"]), SERVE_FLAGS).is_err());
+    }
+
+    #[test]
+    fn shared_parser_reads_resilience_options() {
+        let c = parse_common(&argv(&[
+            "vecadd",
+            "--opt",
+            "o3",
+            "--retries",
+            "3",
+            "--backoff",
+            "64",
+            "--cache-dir",
+            "/tmp/x",
+            "--inject",
+            "trap@10",
+        ]))
+        .unwrap();
+        assert_eq!(c.level, Some(OptLevel::O3));
+        assert_eq!(c.retries, 3);
+        assert_eq!(c.backoff, 64);
+        assert_eq!(c.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
+        assert_eq!(c.inject.map(|p| p.len()), Some(1));
+        assert_eq!(c.target.name, "vortex");
+        assert!(parse_common(&argv(&["--retries", "many"])).is_err());
+        assert!(parse_common(&argv(&["--opt", "o9"])).is_err());
+        assert!(parse_common(&argv(&["--inject", "bogus@"])).is_err());
+    }
+
+    #[test]
+    fn first_positional_skips_flag_values() {
+        let a = argv(&["--opt", "o3", "--cache-dir", "dir", "manifest.txt"]);
+        assert_eq!(first_positional(&a).map(|s| s.as_str()), Some("manifest.txt"));
+        assert_eq!(first_positional(&argv(&["--synthetic", "5"])), None);
+    }
 }

@@ -361,6 +361,7 @@ mod tests {
         let e = Event {
             label: "we\"ird\\name".into(),
             kind: CommandKind::H2D,
+            enqueue_cycles: 0,
             start_cycles: 0,
             end_cycles: 0,
             instrs: 0,

@@ -1,0 +1,307 @@
+//! `volt::serve` — a batched multi-tenant compile+launch service over
+//! simulated devices.
+//!
+//! The serving front the ROADMAP asks for on top of PR 7's persistent
+//! cache and launch-recovery machinery: a [`Service`] accepts a batch
+//! of [`ServeRequest`]s (a manifest or the seeded synthetic workload),
+//! admits them into a bounded FIFO-with-priority queue, and dispatches
+//! them across a pool of N virtual device slots.
+//!
+//! The three load-bearing properties, in order:
+//!
+//! * **Shared compile tier.** All requests with the same options
+//!   config compile through one [`Session`] (optionally backed by the
+//!   on-disk cache), so identical fingerprints within a batch dedup to
+//!   a single pipeline run and every outcome records which tier served
+//!   it (mem / disk / miss).
+//! * **Per-request isolation.** Every request executes on its own
+//!   [`Stream`](crate::driver::Stream) over a fresh device. A chaos
+//!   request (armed [`FaultPlan`](crate::sim::FaultPlan)) that exhausts
+//!   its retry budget latches *its* stream faulted; neighbors never
+//!   observe it.
+//! * **Determinism.** Scheduling runs in virtual time (earliest-free
+//!   device slot; no OS threads, no wall clock anywhere in the ledger),
+//!   so a fixed (workload, seed, device count) renders byte-identical
+//!   `BENCH_serving.json` on every rerun.
+//!
+//! See `docs/SERVING.md` for the manifest format, the scheduling and
+//! isolation semantics, and the report schema.
+
+pub mod report;
+pub mod request;
+pub mod scheduler;
+pub mod worker;
+
+pub use report::{DeviceUtil, Provenance, RequestOutcome, RequestStatus, ServeReport};
+pub use request::{parse_manifest, parse_opt, synthetic, ArgSpec, Payload, Priority, ServeRequest};
+pub use scheduler::{DeviceSlot, Scheduler};
+
+use crate::driver::{CacheStats, Session, VoltOptions};
+use crate::frontend::Dialect;
+use crate::runtime::LaunchPolicy;
+use crate::transform::OptLevel;
+use std::collections::BTreeMap;
+
+/// Service-wide configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Virtual device slots the batch is scheduled across.
+    pub devices: usize,
+    /// Default launch-retry budget (per-request `retries=` overrides).
+    pub retries: u32,
+    /// Default retry backoff in simulated cycles.
+    pub backoff_cycles: u64,
+    /// Admission-queue capacity; 0 = unbounded.
+    pub queue_cap: usize,
+    /// Persistent compile-cache directory shared by the session pool.
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Disk-cache size cap in bytes (0 = uncapped).
+    pub cache_max_bytes: u64,
+    /// Workload seed, recorded in the report (and used by
+    /// [`synthetic`] when the CLI builds the workload).
+    pub seed: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            devices: 2,
+            retries: 0,
+            backoff_cycles: 0,
+            queue_cap: 0,
+            cache_dir: None,
+            cache_max_bytes: 0,
+            seed: 1,
+        }
+    }
+}
+
+/// The batch service: a session pool keyed by options config plus the
+/// virtual-time scheduler.
+pub struct Service {
+    cfg: ServeConfig,
+    /// One shared session per distinct (dialect, ladder level). A
+    /// BTreeMap so every iteration (stats aggregation, reporting) walks
+    /// sessions in a deterministic order.
+    sessions: BTreeMap<(u8, u8), Session>,
+}
+
+fn session_key(dialect: Dialect, opt: OptLevel) -> (u8, u8) {
+    let d = match dialect {
+        Dialect::OpenCL => 0u8,
+        Dialect::Cuda => 1u8,
+    };
+    let o = OptLevel::LADDER
+        .iter()
+        .position(|l| *l == opt)
+        .unwrap_or(OptLevel::LADDER.len()) as u8;
+    (d, o)
+}
+
+impl Service {
+    pub fn new(cfg: ServeConfig) -> Service {
+        Service {
+            cfg,
+            sessions: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    fn session_for(&mut self, dialect: Dialect, opt: OptLevel) -> &mut Session {
+        let key = session_key(dialect, opt);
+        let cfg = &self.cfg;
+        self.sessions.entry(key).or_insert_with(|| {
+            let opts = VoltOptions {
+                dialect,
+                opt,
+                ..VoltOptions::default()
+            };
+            match &cfg.cache_dir {
+                Some(dir) => Session::with_disk_cache(opts, dir, cfg.cache_max_bytes),
+                None => Session::new(opts),
+            }
+        })
+    }
+
+    /// Compile-cache counters summed over the session pool (plus total
+    /// quarantined entries).
+    pub fn cache_stats(&self) -> (CacheStats, usize) {
+        let mut total = CacheStats::default();
+        let mut quarantined = 0;
+        for s in self.sessions.values() {
+            let c = s.cache_stats();
+            total.hits += c.hits;
+            total.misses += c.misses;
+            total.disk_hits += c.disk_hits;
+            total.disk_corrupt += c.disk_corrupt;
+            total.disk_evicted += c.disk_evicted;
+            quarantined += s.disk_cache().map(|d| d.quarantined()).unwrap_or(0);
+        }
+        (total, quarantined)
+    }
+
+    /// Run one batch to completion and report. Per-request failures are
+    /// *outcomes*, not errors — the service itself cannot fail.
+    pub fn run(&mut self, requests: Vec<ServeRequest>) -> ServeReport {
+        let dialect_of = |req: &ServeRequest| match &req.payload {
+            Payload::Registry { name } => crate::coordinator::benchmarks::find(name)
+                .map(|b| b.dialect)
+                .unwrap_or(Dialect::OpenCL),
+            Payload::Source { dialect, .. } => *dialect,
+        };
+
+        let (admitted, rejected) = scheduler::admit(requests, self.cfg.queue_cap);
+        let mut sched = Scheduler::new(self.cfg.devices);
+        let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(admitted.len());
+
+        for (id, req) in &admitted {
+            let policy = LaunchPolicy {
+                retries: req.retries.unwrap_or(self.cfg.retries),
+                backoff_cycles: req.backoff.unwrap_or(self.cfg.backoff_cycles),
+                watchdog_max_cycles: None,
+            };
+            let dialect = dialect_of(req);
+            let session = self.session_for(dialect, req.opt);
+            let (device, start) = sched.assign();
+            let r = worker::execute(req, session, policy);
+            let service_cycles = r.compile_cycles + r.launch_cycles;
+            sched.complete(device, service_cycles);
+            outcomes.push(RequestOutcome {
+                id: *id,
+                label: req.payload.label().to_string(),
+                class: req.class,
+                priority: req.priority,
+                status: r.status,
+                device,
+                provenance: r.provenance,
+                queue_cycles: start,
+                compile_cycles: r.compile_cycles,
+                launch_cycles: r.launch_cycles,
+                total_cycles: start + service_cycles,
+                instrs: r.instrs,
+                retries: r.retries,
+                recovered: r.recovered,
+                injected: r.injected,
+                profiles: r.profiles,
+                error: r.error,
+            });
+        }
+        for (id, req) in &rejected {
+            outcomes.push(RequestOutcome {
+                id: *id,
+                label: req.payload.label().to_string(),
+                class: req.class,
+                priority: req.priority,
+                status: RequestStatus::Rejected,
+                device: usize::MAX,
+                provenance: None,
+                queue_cycles: 0,
+                compile_cycles: 0,
+                launch_cycles: 0,
+                total_cycles: 0,
+                instrs: 0,
+                retries: 0,
+                recovered: 0,
+                injected: 0,
+                profiles: 0,
+                error: Some(format!(
+                    "rejected at admission: queue capacity {} exceeded",
+                    self.cfg.queue_cap
+                )),
+            });
+        }
+        // Report in admission order — stable across device counts.
+        outcomes.sort_by_key(|o| o.id);
+
+        let makespan = sched.makespan();
+        let device_util = sched
+            .slots()
+            .iter()
+            .enumerate()
+            .map(|(i, s)| DeviceUtil {
+                device: i,
+                served: s.served,
+                busy_cycles: s.busy_cycles,
+                utilization_pct: if makespan == 0 {
+                    0.0
+                } else {
+                    s.busy_cycles as f64 / makespan as f64 * 100.0
+                },
+            })
+            .collect();
+        let (cache, quarantined) = self.cache_stats();
+        ServeReport {
+            devices: self.cfg.devices,
+            seed: self.cfg.seed,
+            outcomes,
+            device_util,
+            makespan_cycles: makespan,
+            cache,
+            quarantined,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The worker-pool readiness contract: everything a future
+    /// thread-per-device dispatcher would move across threads is
+    /// `Send` today (ROADMAP open item 1 builds on this).
+    #[test]
+    fn service_components_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Session>();
+        assert_send::<crate::driver::Stream>();
+        assert_send::<std::sync::Arc<crate::driver::Program>>();
+        assert_send::<Service>();
+        assert_send::<ServeRequest>();
+        assert_send::<ServeReport>();
+    }
+
+    #[test]
+    fn session_pool_keys_are_stable() {
+        assert_eq!(session_key(Dialect::OpenCL, OptLevel::Base), (0, 0));
+        assert_eq!(
+            session_key(Dialect::Cuda, OptLevel::O3),
+            (1, (OptLevel::LADDER.len() - 1) as u8)
+        );
+    }
+
+    #[test]
+    fn small_batch_end_to_end() {
+        let mut svc = Service::new(ServeConfig {
+            devices: 2,
+            ..ServeConfig::default()
+        });
+        let reqs = vec![
+            ServeRequest::registry("vecadd", OptLevel::Recon),
+            ServeRequest::registry("vecadd", OptLevel::Recon),
+            ServeRequest::registry("saxpy", OptLevel::Recon),
+        ];
+        let rep = svc.run(reqs);
+        assert_eq!(rep.outcomes.len(), 3);
+        assert!(rep.outcomes.iter().all(|o| o.status == RequestStatus::Pass));
+        // Dedup-in-flight: two distinct fingerprints, one mem hit.
+        assert_eq!(rep.cache.misses, 2);
+        assert_eq!(rep.cache.hits, 1);
+        assert_eq!(
+            rep.outcomes[1].provenance,
+            Some(Provenance::Mem),
+            "identical request in the same batch must dedup"
+        );
+        assert!(rep.makespan_cycles > 0);
+        let busy: u64 = rep.device_util.iter().map(|d| d.busy_cycles).sum();
+        let svc_total: u64 = rep
+            .outcomes
+            .iter()
+            .map(|o| o.compile_cycles + o.launch_cycles)
+            .sum();
+        assert_eq!(busy, svc_total, "device ledger must balance");
+        crate::prof::validate_json(&rep.render_json()).unwrap();
+    }
+}

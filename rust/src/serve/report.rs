@@ -1,0 +1,404 @@
+//! Per-request outcomes and the aggregate serving report.
+//!
+//! Every admitted request yields one [`RequestOutcome`] with its
+//! queue / compile / launch / total latency in *simulated* cycles and
+//! the cache tier that served its compile ([`Provenance`]). The service
+//! folds them into a [`ServeReport`]: p50/p95/p99 latency, throughput
+//! over the simulated makespan, cache hit rates and per-device
+//! utilization — rendered as text and as the `BENCH_serving.json`
+//! schema (`volt-serve/v1`). Nothing in the report depends on wall
+//! clock, so a fixed `(workload, seed, devices)` triple renders
+//! bit-identical JSON on every rerun.
+
+use super::request::Priority;
+use crate::driver::CacheStats;
+
+/// Which cache tier served the request's compile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Full pipeline run (no tier had the fingerprint).
+    Miss,
+    /// Served from the persistent on-disk tier.
+    Disk,
+    /// Served from the in-memory tier (dedup within the batch).
+    Mem,
+}
+
+impl Provenance {
+    pub fn name(self) -> &'static str {
+        match self {
+            Provenance::Miss => "miss",
+            Provenance::Disk => "disk",
+            Provenance::Mem => "mem",
+        }
+    }
+}
+
+/// Terminal state of one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Completed, validator clean, no faults observed.
+    Pass,
+    /// Completed and validator-clean after absorbing injected faults
+    /// within the retry budget.
+    Recovered,
+    /// The request's own stream/device latched a fault (contained: no
+    /// other request observed it).
+    Faulted,
+    /// Completed but the validator rejected the results (e.g. silent
+    /// data corruption from an injected bit flip).
+    Failed,
+    /// The compile pipeline rejected the source.
+    CompileError,
+    /// Turned away at admission (queue over capacity).
+    Rejected,
+}
+
+impl RequestStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestStatus::Pass => "pass",
+            RequestStatus::Recovered => "recovered",
+            RequestStatus::Faulted => "faulted",
+            RequestStatus::Failed => "failed",
+            RequestStatus::CompileError => "compile-error",
+            RequestStatus::Rejected => "rejected",
+        }
+    }
+
+    /// Did the request produce a correct result?
+    pub fn is_ok(self) -> bool {
+        matches!(self, RequestStatus::Pass | RequestStatus::Recovered)
+    }
+}
+
+/// The service's record of one request.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Admission sequence number (stable across reruns).
+    pub id: usize,
+    pub label: String,
+    pub class: &'static str,
+    pub priority: Priority,
+    pub status: RequestStatus,
+    /// Device slot the request ran on (usize::MAX for rejected).
+    pub device: usize,
+    /// Compile-cache tier that served the compile (None when the
+    /// request never reached the compiler).
+    pub provenance: Option<Provenance>,
+    /// Sim-cycles spent waiting for a device slot.
+    pub queue_cycles: u64,
+    /// Deterministic compile-cost model cycles (see `docs/SERVING.md`).
+    pub compile_cycles: u64,
+    /// Device cycles the execution consumed (includes retry backoff).
+    pub launch_cycles: u64,
+    /// queue + compile + launch.
+    pub total_cycles: u64,
+    /// Warp instructions the request executed.
+    pub instrs: u64,
+    pub retries: u64,
+    pub recovered: u64,
+    pub injected: u64,
+    /// Kernel profiles collected (per-request profiler opt-in).
+    pub profiles: usize,
+    pub error: Option<String>,
+}
+
+/// Busy accounting for one simulated device slot.
+#[derive(Clone, Debug)]
+pub struct DeviceUtil {
+    pub device: usize,
+    pub served: u32,
+    pub busy_cycles: u64,
+    /// busy / makespan.
+    pub utilization_pct: f64,
+}
+
+/// Aggregate serving report (`BENCH_serving.json`).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub devices: usize,
+    pub seed: u32,
+    pub outcomes: Vec<RequestOutcome>,
+    pub device_util: Vec<DeviceUtil>,
+    /// Virtual-time span from first dispatch to last completion.
+    pub makespan_cycles: u64,
+    /// Compile-cache counters summed over the service's session pool.
+    pub cache: CacheStats,
+    /// Corrupt disk entries quarantined under the cache directory.
+    pub quarantined: usize,
+}
+
+/// Nearest-rank percentile of a sorted sample (`p` in 0..=100).
+pub fn percentile(sorted: &[u64], p: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (p * sorted.len() as u64).div_ceil(100).max(1) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+impl ServeReport {
+    /// Latencies (total cycles) of every request that reached a device,
+    /// sorted ascending.
+    fn sorted_totals(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .outcomes
+            .iter()
+            .filter(|o| o.status != RequestStatus::Rejected)
+            .map(|o| o.total_cycles)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn completed(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| o.status != RequestStatus::Rejected)
+            .count()
+    }
+
+    pub fn count(&self, s: RequestStatus) -> usize {
+        self.outcomes.iter().filter(|o| o.status == s).count()
+    }
+
+    /// (p50, p95, p99) of total latency over completed requests.
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        let v = self.sorted_totals();
+        (percentile(&v, 50), percentile(&v, 95), percentile(&v, 99))
+    }
+
+    /// Completed requests per million simulated device-cycles.
+    pub fn throughput_per_mcycle(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            0.0
+        } else {
+            self.completed() as f64 * 1e6 / self.makespan_cycles as f64
+        }
+    }
+
+    /// Requests whose validator failed (or stream faulted) without any
+    /// injected fault — must be zero for a healthy service.
+    pub fn clean_failures(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| o.injected == 0 && o.status != RequestStatus::Rejected)
+            .filter(|o| !o.status.is_ok())
+            .count()
+    }
+
+    pub fn render_text(&self) -> String {
+        let (p50, p95, p99) = self.latency_percentiles();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "serve: {} request(s) on {} device(s), seed {}\n",
+            self.outcomes.len(),
+            self.devices,
+            self.seed
+        ));
+        out.push_str(&format!(
+            "  status: pass={} recovered={} faulted={} failed={} compile-error={} rejected={}\n",
+            self.count(RequestStatus::Pass),
+            self.count(RequestStatus::Recovered),
+            self.count(RequestStatus::Faulted),
+            self.count(RequestStatus::Failed),
+            self.count(RequestStatus::CompileError),
+            self.count(RequestStatus::Rejected),
+        ));
+        out.push_str(&format!(
+            "  latency (cycles): p50={p50} p95={p95} p99={p99}\n"
+        ));
+        out.push_str(&format!(
+            "  throughput: {:.3} req/Mcycle over a {}-cycle makespan\n",
+            self.throughput_per_mcycle(),
+            self.makespan_cycles
+        ));
+        out.push_str(&format!(
+            "  cache: mem-hits={} misses={} disk-hits={} corrupt={} evicted={} quarantined={}\n",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.disk_hits,
+            self.cache.disk_corrupt,
+            self.cache.disk_evicted,
+            self.quarantined,
+        ));
+        for d in &self.device_util {
+            out.push_str(&format!(
+                "  device {}: served={} busy={} cycles ({:.1}% utilized)\n",
+                d.device, d.served, d.busy_cycles, d.utilization_pct
+            ));
+        }
+        out
+    }
+
+    /// The `volt-serve/v1` JSON document. Pure function of the
+    /// outcomes — no timestamps, no wall clock, no map iteration — so
+    /// identical runs serialize byte-identically.
+    pub fn render_json(&self) -> String {
+        let (p50, p95, p99) = self.latency_percentiles();
+        let mut s = String::from("{\"schema\":\"volt-serve/v1\"");
+        s.push_str(&format!(",\"devices\":{}", self.devices));
+        s.push_str(&format!(",\"seed\":{}", self.seed));
+        s.push_str(&format!(",\"requests\":{}", self.outcomes.len()));
+        s.push_str(&format!(",\"completed\":{}", self.completed()));
+        s.push_str(&format!(
+            ",\"status\":{{\"pass\":{},\"recovered\":{},\"faulted\":{},\"failed\":{},\
+             \"compile_error\":{},\"rejected\":{}}}",
+            self.count(RequestStatus::Pass),
+            self.count(RequestStatus::Recovered),
+            self.count(RequestStatus::Faulted),
+            self.count(RequestStatus::Failed),
+            self.count(RequestStatus::CompileError),
+            self.count(RequestStatus::Rejected),
+        ));
+        s.push_str(&format!(
+            ",\"latency_cycles\":{{\"p50\":{p50},\"p95\":{p95},\"p99\":{p99}}}"
+        ));
+        s.push_str(&format!(
+            ",\"throughput_per_mcycle\":{:.3}",
+            self.throughput_per_mcycle()
+        ));
+        s.push_str(&format!(",\"makespan_cycles\":{}", self.makespan_cycles));
+        s.push_str(&format!(
+            ",\"cache\":{{\"mem_hits\":{},\"misses\":{},\"disk_hits\":{},\"disk_corrupt\":{},\
+             \"disk_evicted\":{},\"quarantined\":{}}}",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.disk_hits,
+            self.cache.disk_corrupt,
+            self.cache.disk_evicted,
+            self.quarantined,
+        ));
+        s.push_str(",\"device_util\":[");
+        for (i, d) in self.device_util.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"device\":{},\"served\":{},\"busy_cycles\":{},\"utilization_pct\":{:.1}}}",
+                d.device, d.served, d.busy_cycles, d.utilization_pct
+            ));
+        }
+        s.push_str("],\"outcomes\":[");
+        for (i, o) in self.outcomes.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"id\":{},\"label\":\"{}\",\"class\":\"{}\",\"priority\":\"{}\",\
+                 \"status\":\"{}\",\"device\":{},\"provenance\":{},\"queue_cycles\":{},\
+                 \"compile_cycles\":{},\"launch_cycles\":{},\"total_cycles\":{},\
+                 \"instrs\":{},\"retries\":{},\"recovered\":{},\"injected\":{},\
+                 \"profiles\":{},\"error\":{}}}",
+                o.id,
+                esc(&o.label),
+                o.class,
+                o.priority.name(),
+                o.status.name(),
+                if o.device == usize::MAX {
+                    -1i64
+                } else {
+                    o.device as i64
+                },
+                match o.provenance {
+                    Some(p) => format!("\"{}\"", p.name()),
+                    None => "null".to_string(),
+                },
+                o.queue_cycles,
+                o.compile_cycles,
+                o.launch_cycles,
+                o.total_cycles,
+                o.instrs,
+                o.retries,
+                o.recovered,
+                o.injected,
+                o.profiles,
+                match &o.error {
+                    Some(e) => format!("\"{}\"", esc(e)),
+                    None => "null".to_string(),
+                },
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Minimal JSON string escaping (labels and error messages may carry
+/// quotes/backslashes from typed error formatting).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50), 50);
+        assert_eq!(percentile(&v, 95), 95);
+        assert_eq!(percentile(&v, 99), 99);
+        assert_eq!(percentile(&v, 100), 100);
+        assert_eq!(percentile(&[42], 50), 42);
+        assert_eq!(percentile(&[], 99), 0);
+        // Ranks round up: p50 of [1,2,3] is the 2nd value.
+        assert_eq!(percentile(&[1, 2, 3], 50), 2);
+    }
+
+    #[test]
+    fn json_escapes_and_validates() {
+        let rep = ServeReport {
+            devices: 2,
+            seed: 7,
+            outcomes: vec![RequestOutcome {
+                id: 0,
+                label: "we\"ird\\name".into(),
+                class: "manifest",
+                priority: Priority::Normal,
+                status: RequestStatus::Faulted,
+                device: 1,
+                provenance: Some(Provenance::Miss),
+                queue_cycles: 0,
+                compile_cycles: 10,
+                launch_cycles: 20,
+                total_cycles: 30,
+                instrs: 5,
+                retries: 1,
+                recovered: 0,
+                injected: 2,
+                profiles: 0,
+                error: Some("trap\nat \"pc 3\"".into()),
+            }],
+            device_util: vec![DeviceUtil {
+                device: 0,
+                served: 1,
+                busy_cycles: 30,
+                utilization_pct: 100.0,
+            }],
+            makespan_cycles: 30,
+            cache: CacheStats::default(),
+            quarantined: 0,
+        };
+        let json = rep.render_json();
+        crate::prof::validate_json(&json).unwrap();
+        assert!(json.contains("\"schema\":\"volt-serve/v1\""));
+        assert!(json.contains("\\\"pc 3\\\""));
+        let text = rep.render_text();
+        assert!(text.contains("faulted=1"), "{text}");
+    }
+}

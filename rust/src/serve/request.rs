@@ -1,0 +1,408 @@
+//! Serving requests: what a client asks the batch service to do.
+//!
+//! A [`ServeRequest`] names either a registry benchmark (compiled from
+//! its bundled source and checked by its host-side validator) or an
+//! external kernel file with an explicit launch shape, plus the knobs a
+//! multi-tenant service has to honor per request: ladder level, queue
+//! priority, a per-request [`LaunchPolicy`](crate::runtime::LaunchPolicy)
+//! override, an optional deterministic [`FaultPlan`] (chaos requests),
+//! and a per-request profiler opt-in.
+//!
+//! Two front doors build request batches: [`parse_manifest`] (the
+//! `volt serve <manifest>` text format, one request per line) and
+//! [`synthetic`] (the seeded hot/cold/faulty mixed workload behind
+//! `volt serve --synthetic N`).
+
+use crate::coordinator::benchmarks::{self, Rng};
+use crate::frontend::Dialect;
+use crate::sim::{FaultKind, FaultPlan};
+use crate::transform::OptLevel;
+
+/// Queue class: lower sorts earlier at admission. Within a class the
+/// queue is FIFO (admission order breaks ties).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority, String> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            _ => Err(format!("unknown priority '{s}' (high|normal|low)")),
+        }
+    }
+}
+
+/// One kernel argument in a manifest `args=` list.
+#[derive(Clone, Copy, Debug)]
+pub enum ArgSpec {
+    /// `buf:BYTES` — allocate a device buffer of that size.
+    Buf(u32),
+    /// `i32:V`
+    I32(i32),
+    /// `f32:V`
+    F32(f32),
+}
+
+impl ArgSpec {
+    fn parse(s: &str) -> Result<ArgSpec, String> {
+        let (kind, val) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad arg '{s}' (expected buf:N | i32:V | f32:V)"))?;
+        match kind {
+            "buf" => val
+                .parse()
+                .map(ArgSpec::Buf)
+                .map_err(|_| format!("bad buffer size '{val}'")),
+            "i32" => val
+                .parse()
+                .map(ArgSpec::I32)
+                .map_err(|_| format!("bad i32 '{val}'")),
+            "f32" => val
+                .parse()
+                .map(ArgSpec::F32)
+                .map_err(|_| format!("bad f32 '{val}'")),
+            _ => Err(format!("unknown arg kind '{kind}' (buf|i32|f32)")),
+        }
+    }
+}
+
+/// What the request compiles and runs.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// A registry benchmark: compiled from its bundled source, executed
+    /// and *checked* by its host-side validator.
+    Registry { name: String },
+    /// An external kernel source with an explicit launch, executed
+    /// through a genuine [`Stream`](crate::driver::Stream) enqueue /
+    /// synchronize round (no reference validator — success means the
+    /// launch completed without a fault).
+    Source {
+        label: String,
+        source: String,
+        dialect: Dialect,
+        /// Kernel entry to launch (default: the program's first kernel).
+        entry: Option<String>,
+        grid: [u32; 3],
+        block: [u32; 3],
+        args: Vec<ArgSpec>,
+    },
+}
+
+impl Payload {
+    pub fn label(&self) -> &str {
+        match self {
+            Payload::Registry { name } => name,
+            Payload::Source { label, .. } => label,
+        }
+    }
+}
+
+/// One admission-queue entry.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub payload: Payload,
+    pub opt: OptLevel,
+    pub priority: Priority,
+    /// Workload class tag carried into the outcome (`hot` / `cold` /
+    /// `faulty` for synthetic requests, `manifest` otherwise).
+    pub class: &'static str,
+    /// Deterministic chaos plan armed on the request's own device.
+    pub faults: FaultPlan,
+    /// Per-request retry override (None = the service default).
+    pub retries: Option<u32>,
+    pub backoff: Option<u64>,
+    /// Collect per-launch kernel profiles for this request.
+    pub profile: bool,
+}
+
+impl ServeRequest {
+    pub fn registry(name: &str, opt: OptLevel) -> ServeRequest {
+        ServeRequest {
+            payload: Payload::Registry {
+                name: name.to_string(),
+            },
+            opt,
+            priority: Priority::Normal,
+            class: "manifest",
+            faults: FaultPlan::none(),
+            retries: None,
+            backoff: None,
+            profile: false,
+        }
+    }
+}
+
+/// Result-returning ladder parser shared by the CLI and the manifest
+/// format (the CLI's `parse_level` exits; libraries need the error).
+pub fn parse_opt(s: &str) -> Result<OptLevel, String> {
+    match s.to_lowercase().as_str() {
+        "base" => Ok(OptLevel::Base),
+        "uni-hw" | "unihw" => Ok(OptLevel::UniHw),
+        "uni-ann" | "uniann" => Ok(OptLevel::UniAnn),
+        "uni-func" | "unifunc" => Ok(OptLevel::UniFunc),
+        "zicond" => Ok(OptLevel::ZiCond),
+        "recon" => Ok(OptLevel::Recon),
+        "o3" => Ok(OptLevel::O3),
+        _ => Err(format!(
+            "unknown opt level '{s}' (base|uni-hw|uni-ann|uni-func|zicond|recon|o3)"
+        )),
+    }
+}
+
+fn parse_triple(s: &str, what: &str) -> Result<[u32; 3], String> {
+    let parts: Vec<u32> = s.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+    if parts.len() != 3 || parts.iter().any(|&x| x == 0) {
+        return Err(format!("bad {what} '{s}' (expected X,Y,Z with all > 0)"));
+    }
+    Ok([parts[0], parts[1], parts[2]])
+}
+
+/// Parse the `volt serve` manifest format. One request per line:
+///
+/// ```text
+/// # comment
+/// <registry-name | kernel-file.cl|.cu> [key=value ...] [profile]
+/// ```
+///
+/// Keys valid on every line: `opt=LEVEL`, `prio=high|normal|low`,
+/// `retries=N`, `backoff=CYCLES`, `inject=FAULTSPEC`, `repeat=N`
+/// (expand the line into N identical requests). File lines additionally
+/// accept `entry=KERNEL`, `grid=X,Y,Z`, `block=X,Y,Z` and
+/// `args=buf:N,i32:V,f32:V,...`; file sources are read relative to the
+/// manifest's directory.
+pub fn parse_manifest(
+    text: &str,
+    base: &std::path::Path,
+    default_opt: OptLevel,
+) -> Result<Vec<ServeRequest>, String> {
+    let mut out = vec![];
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |msg: String| format!("manifest line {}: {msg}", lineno + 1);
+        let mut tokens = line.split_whitespace();
+        let head = tokens.next().unwrap();
+        let mut req = if benchmarks::find(head).is_some() {
+            ServeRequest::registry(head, default_opt)
+        } else {
+            let path = base.join(head);
+            let source = std::fs::read_to_string(&path).map_err(|e| {
+                err(format!("'{head}': not a registry benchmark or a readable file ({e})"))
+            })?;
+            let dialect = if head.ends_with(".cu") {
+                Dialect::Cuda
+            } else {
+                Dialect::OpenCL
+            };
+            ServeRequest {
+                payload: Payload::Source {
+                    label: head.to_string(),
+                    source,
+                    dialect,
+                    entry: None,
+                    grid: [1, 1, 1],
+                    block: [64, 1, 1],
+                    args: vec![],
+                },
+                opt: default_opt,
+                priority: Priority::Normal,
+                class: "manifest",
+                faults: FaultPlan::none(),
+                retries: None,
+                backoff: None,
+                profile: false,
+            }
+        };
+        let mut repeat = 1usize;
+        for tok in tokens {
+            if tok == "profile" {
+                req.profile = true;
+                continue;
+            }
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| err(format!("bad token '{tok}' (expected key=value)")))?;
+            match key {
+                "opt" => req.opt = parse_opt(val).map_err(err)?,
+                "prio" => req.priority = Priority::parse(val).map_err(err)?,
+                "retries" => {
+                    req.retries =
+                        Some(val.parse().map_err(|_| err(format!("bad retries '{val}'")))?)
+                }
+                "backoff" => {
+                    req.backoff =
+                        Some(val.parse().map_err(|_| err(format!("bad backoff '{val}'")))?)
+                }
+                "inject" => req.faults = FaultPlan::parse(val).map_err(err)?,
+                "repeat" => {
+                    repeat = val.parse().map_err(|_| err(format!("bad repeat '{val}'")))?;
+                    if repeat == 0 || repeat > 10_000 {
+                        return Err(err(format!("repeat={repeat} out of range (1..=10000)")));
+                    }
+                }
+                "entry" | "grid" | "block" | "args" => {
+                    let Payload::Source {
+                        entry, grid, block, args, ..
+                    } = &mut req.payload
+                    else {
+                        return Err(err(format!(
+                            "'{key}=' applies only to kernel-file requests, not registry \
+                             benchmark '{head}'"
+                        )));
+                    };
+                    match key {
+                        "entry" => *entry = Some(val.to_string()),
+                        "grid" => *grid = parse_triple(val, "grid").map_err(err)?,
+                        "block" => *block = parse_triple(val, "block").map_err(err)?,
+                        _ => {
+                            *args = val
+                                .split(',')
+                                .map(ArgSpec::parse)
+                                .collect::<Result<_, _>>()
+                                .map_err(err)?
+                        }
+                    }
+                }
+                _ => return Err(err(format!("unknown key '{key}'"))),
+            }
+        }
+        for _ in 0..repeat {
+            out.push(req.clone());
+        }
+    }
+    if out.is_empty() {
+        return Err("manifest contains no requests".to_string());
+    }
+    Ok(out)
+}
+
+/// Cheap kernels the hot-repeat class cycles through (their compiles
+/// dedup in the shared cache; their validators keep sim time small).
+const HOT_SET: &[&str] = &["vecadd", "saxpy", "transpose", "dotproduct"];
+
+/// Deterministic seeded mixed workload over the registry: ~55%
+/// hot-repeat (a small kernel set at the default ladder level — mem-hit
+/// fodder), ~30% cold-unique (any registry kernel at any ladder level —
+/// distinct fingerprints), ~15% faulty (a hot kernel with 1-2 transient
+/// traps injected at launch). Priorities are seeded too. The same
+/// `(count, seed)` always yields the identical request vector — the
+/// determinism anchor for `BENCH_serving.json` diffs.
+pub fn synthetic(count: usize, seed: u32) -> Vec<ServeRequest> {
+    let registry = benchmarks::registry();
+    let mut rng = Rng(seed | 1);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let class_roll = rng.next_u32() % 100;
+        let prio_roll = rng.next_u32() % 10;
+        let pick = rng.next_u32() as usize;
+        let mut req = if class_roll < 55 {
+            let mut r = ServeRequest::registry(HOT_SET[pick % HOT_SET.len()], OptLevel::Recon);
+            r.class = "hot";
+            r
+        } else if class_roll < 85 {
+            let b = &registry[pick % registry.len()];
+            let lvl = OptLevel::LADDER[rng.next_u32() as usize % OptLevel::LADDER.len()];
+            let mut r = ServeRequest::registry(b.name, lvl);
+            r.class = "cold";
+            r
+        } else {
+            let mut r = ServeRequest::registry(HOT_SET[pick % HOT_SET.len()], OptLevel::Recon);
+            r.class = "faulty";
+            // 1 or 2 transient traps at launch: with the service's retry
+            // budget >= the trap count the request recovers, otherwise it
+            // faults its own stream and must not disturb neighbors.
+            let traps = 1 + rng.next_u32() % 2;
+            let mut plan = FaultPlan::none();
+            for _ in 0..traps {
+                plan = plan.with(0, FaultKind::IllegalTrap { pc: None });
+            }
+            r.faults = plan;
+            r
+        };
+        req.priority = match prio_roll {
+            0 | 1 => Priority::High,
+            9 => Priority::Low,
+            _ => Priority::Normal,
+        };
+        out.push(req);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic_and_mixed() {
+        let a = synthetic(100, 7);
+        let b = synthetic(100, 7);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.payload.label(), y.payload.label());
+            assert_eq!(x.opt, y.opt);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.faults.len(), y.faults.len());
+        }
+        let hot = a.iter().filter(|r| r.class == "hot").count();
+        let cold = a.iter().filter(|r| r.class == "cold").count();
+        let faulty = a.iter().filter(|r| r.class == "faulty").count();
+        assert_eq!(hot + cold + faulty, 100);
+        assert!(hot > 0 && cold > 0 && faulty > 0, "{hot}/{cold}/{faulty}");
+        let c = synthetic(100, 8);
+        assert!(
+            a.iter()
+                .zip(&c)
+                .any(|(x, y)| x.payload.label() != y.payload.label() || x.class != y.class),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn manifest_parses_registry_lines() {
+        let text = "# warm-up\nvecadd repeat=3 opt=o3 prio=high\nsaxpy inject=trap@0 retries=2\n";
+        let reqs =
+            parse_manifest(text, std::path::Path::new("."), OptLevel::Recon).unwrap();
+        assert_eq!(reqs.len(), 4);
+        assert_eq!(reqs[0].payload.label(), "vecadd");
+        assert_eq!(reqs[0].opt, OptLevel::O3);
+        assert_eq!(reqs[0].priority, Priority::High);
+        assert_eq!(reqs[3].payload.label(), "saxpy");
+        assert_eq!(reqs[3].faults.len(), 1);
+        assert_eq!(reqs[3].retries, Some(2));
+    }
+
+    #[test]
+    fn manifest_rejects_bad_lines() {
+        let base = std::path::Path::new(".");
+        for bad in [
+            "no_such_kernel_or_file",
+            "vecadd grid=1,1,1",
+            "vecadd bogus=1",
+            "vecadd prio=urgent",
+            "",
+        ] {
+            assert!(
+                parse_manifest(bad, base, OptLevel::Recon).is_err(),
+                "accepted: {bad:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Per-request execution: the compile tier, the isolation boundary and
+//! the latency ledger.
+//!
+//! A request compiles through the service's *shared* [`Session`] pool
+//! (in-memory + optional disk tier — identical fingerprints within a
+//! batch dedup to one pipeline run) and then executes on its *own*
+//! [`Stream`] over a fresh device. That asymmetry is the whole design:
+//! compiles are pure and safe to share; execution is where faults live,
+//! so a poisoned request latches only its private device/stream (PR 7's
+//! sticky-fault semantics) and its neighbors never observe it.
+//!
+//! Compile latency is charged from a deterministic cost model (wall
+//! clock would destroy run-to-run bit-identity): a full compile costs
+//! `2000 + 10·code_len` virtual cycles, a disk hit `400 + code_len`
+//! (read + checksum + decode), an in-memory hit a flat `50`. Launch
+//! latency is the *real* simulated device cycle count, including
+//! retry/backoff charges.
+
+use super::report::{Provenance, RequestStatus};
+use super::request::{ArgSpec, Payload, ServeRequest};
+use crate::coordinator::benchmarks;
+use crate::driver::{Session, Stream};
+use crate::runtime::{ArgValue, LaunchPolicy};
+use crate::sim::FaultState;
+
+/// Virtual-cycle compile-cost model (documented in `docs/SERVING.md`).
+pub fn compile_cost(provenance: Provenance, code_len: usize) -> u64 {
+    match provenance {
+        Provenance::Miss => 2_000 + 10 * code_len as u64,
+        Provenance::Disk => 400 + code_len as u64,
+        Provenance::Mem => 50,
+    }
+}
+
+/// What [`execute`] hands back to the scheduler loop.
+#[derive(Clone, Debug)]
+pub struct ExecResult {
+    pub status: RequestStatus,
+    pub provenance: Option<Provenance>,
+    pub compile_cycles: u64,
+    pub launch_cycles: u64,
+    pub instrs: u64,
+    pub retries: u64,
+    pub recovered: u64,
+    pub injected: u64,
+    pub profiles: usize,
+    pub error: Option<String>,
+}
+
+fn source_of(req: &ServeRequest) -> &str {
+    match &req.payload {
+        Payload::Registry { name } => {
+            // The label was validated against the registry at admission;
+            // find() cannot fail here.
+            benchmarks::find(name).map(|b| b.source).unwrap_or("")
+        }
+        Payload::Source { source, .. } => source,
+    }
+}
+
+/// Compile (through the shared session) and execute (on a private
+/// stream) one request. `policy` already folds the service default and
+/// the request's per-request override together.
+pub fn execute(req: &ServeRequest, session: &mut Session, policy: LaunchPolicy) -> ExecResult {
+    // Provenance by cache-counter delta: exactly one of hits / disk
+    // hits / misses advances per compile call.
+    let before = session.cache_stats();
+    let compiled = session.compile(source_of(req));
+    let after = session.cache_stats();
+    let provenance = if after.hits > before.hits {
+        Provenance::Mem
+    } else if after.disk_hits > before.disk_hits {
+        Provenance::Disk
+    } else {
+        Provenance::Miss
+    };
+    let prog = match compiled {
+        Ok(p) => p,
+        Err(e) => {
+            return ExecResult {
+                status: RequestStatus::CompileError,
+                provenance: Some(provenance),
+                compile_cycles: 0,
+                launch_cycles: 0,
+                instrs: 0,
+                retries: 0,
+                recovered: 0,
+                injected: 0,
+                profiles: 0,
+                error: Some(e.to_string()),
+            }
+        }
+    };
+    let compile_cycles = compile_cost(provenance, prog.image.code.len());
+
+    // Private execution context: a fresh device per request is the
+    // isolation boundary — faults latch here and nowhere else.
+    let mut stream = Stream::with_profiling(
+        prog.clone(),
+        session.options().device_config(),
+        req.profile,
+    );
+    stream.set_launch_policy(policy);
+    if !req.faults.is_empty() {
+        stream.device_mut().gpu.faults = FaultState::new(req.faults);
+    }
+
+    let run: Result<(), String> = match &req.payload {
+        Payload::Registry { name } => {
+            let b = benchmarks::find(name).expect("admission validated the name");
+            (b.run)(stream.device_mut())
+        }
+        Payload::Source { entry, grid, block, args, .. } => {
+            run_source(&mut stream, entry.as_deref(), *grid, *block, args)
+        }
+    };
+
+    let dev = stream.device_mut();
+    let injected = dev.gpu.faults.injected() as u64;
+    let retries = dev.retries_performed;
+    let recovered = dev.launches_recovered;
+    let device_faulted = dev.is_faulted();
+    let launch_cycles = dev.total_stats.cycles;
+    let instrs = dev.total_stats.instrs;
+    let status = match &run {
+        Ok(()) if recovered > 0 => RequestStatus::Recovered,
+        Ok(()) => RequestStatus::Pass,
+        Err(_) if device_faulted || stream.is_faulted() => RequestStatus::Faulted,
+        Err(_) => RequestStatus::Failed,
+    };
+    ExecResult {
+        status,
+        provenance: Some(provenance),
+        compile_cycles,
+        launch_cycles,
+        instrs,
+        retries,
+        recovered,
+        injected,
+        profiles: stream.profiles().len(),
+        error: run.err(),
+    }
+}
+
+/// Execute a kernel-file request through the genuine stream API:
+/// allocate `buf:` arguments, enqueue the launch, synchronize.
+fn run_source(
+    stream: &mut Stream,
+    entry: Option<&str>,
+    grid: [u32; 3],
+    block: [u32; 3],
+    args: &[ArgSpec],
+) -> Result<(), String> {
+    let kernel = match entry {
+        Some(k) => k.to_string(),
+        None => stream
+            .program()
+            .kernels
+            .first()
+            .map(|k| k.name.clone())
+            .ok_or("program has no kernels")?,
+    };
+    let mut argv = Vec::with_capacity(args.len());
+    for a in args {
+        match a {
+            ArgSpec::Buf(bytes) => {
+                let p = stream.malloc(*bytes);
+                argv.push(ArgValue::Ptr(p));
+            }
+            ArgSpec::I32(v) => argv.push(ArgValue::I32(*v)),
+            ArgSpec::F32(v) => argv.push(ArgValue::F32(*v)),
+        }
+    }
+    stream
+        .enqueue_launch(&kernel, grid, block, &argv)
+        .map_err(|e| e.to_string())?;
+    stream.synchronize().map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::VoltOptions;
+    use crate::sim::{FaultKind, FaultPlan};
+    use crate::transform::OptLevel;
+
+    fn policy(retries: u32) -> LaunchPolicy {
+        LaunchPolicy {
+            retries,
+            backoff_cycles: 0,
+            watchdog_max_cycles: None,
+        }
+    }
+
+    #[test]
+    fn compile_cost_orders_tiers() {
+        let len = 500;
+        assert!(compile_cost(Provenance::Mem, len) < compile_cost(Provenance::Disk, len));
+        assert!(compile_cost(Provenance::Disk, len) < compile_cost(Provenance::Miss, len));
+    }
+
+    #[test]
+    fn clean_registry_request_passes_and_dedups() {
+        let mut session = Session::new(VoltOptions::default());
+        let req = ServeRequest::registry("vecadd", OptLevel::Recon);
+        let r1 = execute(&req, &mut session, policy(0));
+        assert_eq!(r1.status, RequestStatus::Pass);
+        assert_eq!(r1.provenance, Some(Provenance::Miss));
+        assert!(r1.launch_cycles > 0 && r1.instrs > 0);
+        let r2 = execute(&req, &mut session, policy(0));
+        assert_eq!(r2.status, RequestStatus::Pass);
+        assert_eq!(r2.provenance, Some(Provenance::Mem));
+        assert!(r2.compile_cycles < r1.compile_cycles);
+        // Same device config, same kernel, fresh device: identical
+        // simulated work.
+        assert_eq!(r1.launch_cycles, r2.launch_cycles);
+    }
+
+    #[test]
+    fn faulty_request_recovers_within_budget_and_faults_beyond_it() {
+        let mut session = Session::new(VoltOptions::default());
+        let mut req = ServeRequest::registry("vecadd", OptLevel::Recon);
+        req.faults = FaultPlan::none()
+            .with(0, FaultKind::IllegalTrap { pc: None })
+            .with(0, FaultKind::MemTrap { pc: None });
+
+        // Budget >= trap count: absorbed and recovered.
+        let r = execute(&req, &mut session, policy(2));
+        assert_eq!(r.status, RequestStatus::Recovered, "{:?}", r.error);
+        assert_eq!(r.injected, 2);
+        assert_eq!(r.retries, 2);
+
+        // Budget < trap count: the request faults — but only its own
+        // stream; the shared session happily serves the next request.
+        let r = execute(&req, &mut session, policy(1));
+        assert_eq!(r.status, RequestStatus::Faulted);
+        assert!(r.error.is_some());
+        let clean = ServeRequest::registry("vecadd", OptLevel::Recon);
+        let r = execute(&clean, &mut session, policy(0));
+        assert_eq!(r.status, RequestStatus::Pass, "{:?}", r.error);
+        assert_eq!(r.provenance, Some(Provenance::Mem));
+    }
+}

@@ -1,0 +1,283 @@
+//! `volt::serve` integration (ISSUE 8): batch determinism, per-request
+//! fault isolation, compile dedup through the shared session tier,
+//! admission-queue behavior, and two sessions sharing one disk-cache
+//! directory — all through the public API alone.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use volt::coordinator::experiments::serve_synthetic;
+use volt::driver::{fingerprint, Session, VoltOptions};
+use volt::serve::{
+    parse_manifest, Priority, Provenance, RequestStatus, ServeConfig, ServeRequest, Service,
+};
+use volt::sim::{FaultKind, FaultPlan};
+use volt::transform::OptLevel;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "volt-serve-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Fixed (workload, seed, devices) must render byte-identical JSON, and
+/// chaos requests must never take a clean neighbor down with them.
+#[test]
+fn synthetic_batch_is_deterministic_and_contains_faults() {
+    let cfg = ServeConfig {
+        devices: 2,
+        retries: 1,
+        seed: 7,
+        ..ServeConfig::default()
+    };
+    let a = serve_synthetic(40, cfg.clone());
+    let b = serve_synthetic(40, cfg);
+    assert_eq!(a.render_json(), b.render_json(), "reruns must be bit-identical");
+    volt::prof::validate_json(&a.render_json()).unwrap();
+
+    assert_eq!(a.outcomes.len(), 40);
+    assert_eq!(a.clean_failures(), 0, "no fault-free request may fail");
+    for o in &a.outcomes {
+        if o.injected == 0 {
+            assert!(
+                o.status.is_ok(),
+                "clean request {} ({}) ended {:?}",
+                o.id,
+                o.label,
+                o.status
+            );
+        }
+        if o.status == RequestStatus::Faulted {
+            assert!(o.injected > 0, "a Faulted outcome must have injected faults");
+        }
+    }
+    // The seeded mix actually exercises the cache: hot repeats dedup.
+    assert!(a.cache.hits > 0, "hot-repeat class must produce mem hits");
+    assert!(a.cache.misses > 0);
+    let (p50, p95, p99) = a.latency_percentiles();
+    assert!(p50 > 0 && p50 <= p95 && p95 <= p99);
+}
+
+/// The device count changes the schedule (queueing, utilization), never
+/// what each request computes or where its compile was served from.
+#[test]
+fn device_count_changes_schedule_not_outcomes() {
+    let narrow = serve_synthetic(
+        30,
+        ServeConfig {
+            devices: 1,
+            retries: 2,
+            seed: 5,
+            ..ServeConfig::default()
+        },
+    );
+    let wide = serve_synthetic(
+        30,
+        ServeConfig {
+            devices: 4,
+            retries: 2,
+            seed: 5,
+            ..ServeConfig::default()
+        },
+    );
+    assert_eq!(narrow.outcomes.len(), wide.outcomes.len());
+    for (n, w) in narrow.outcomes.iter().zip(&wide.outcomes) {
+        assert_eq!(n.id, w.id);
+        assert_eq!(n.label, w.label);
+        assert_eq!(n.status, w.status);
+        assert_eq!(n.provenance, w.provenance);
+        assert_eq!(n.launch_cycles, w.launch_cycles);
+    }
+    assert_eq!(narrow.device_util.len(), 1);
+    assert_eq!(wide.device_util.len(), 4);
+    let busy = |r: &volt::serve::ServeReport| -> u64 {
+        r.device_util.iter().map(|d| d.busy_cycles).sum()
+    };
+    assert_eq!(busy(&narrow), busy(&wide), "total work is schedule-invariant");
+    assert!(
+        wide.makespan_cycles <= narrow.makespan_cycles,
+        "more devices cannot lengthen the makespan"
+    );
+}
+
+/// Identical in-flight requests dedup through the shared session tier:
+/// misses == distinct fingerprints, everything else is served from mem.
+#[test]
+fn dedup_in_flight_misses_equal_distinct_fingerprints() {
+    let mut reqs = vec![];
+    for _ in 0..3 {
+        reqs.push(ServeRequest::registry("vecadd", OptLevel::Recon));
+    }
+    for _ in 0..2 {
+        reqs.push(ServeRequest::registry("saxpy", OptLevel::Recon));
+    }
+    reqs.push(ServeRequest::registry("vecadd", OptLevel::O3));
+    let rep = Service::new(ServeConfig::default()).run(reqs);
+    assert_eq!(rep.cache.misses, 3, "three distinct (source, options) keys");
+    assert_eq!(rep.cache.hits, 3, "every repeat must be a mem hit");
+    assert_eq!(rep.outcomes[0].provenance, Some(Provenance::Miss));
+    assert_eq!(rep.outcomes[1].provenance, Some(Provenance::Mem));
+    assert_eq!(rep.outcomes[2].provenance, Some(Provenance::Mem));
+    assert!(rep.outcomes.iter().all(|o| o.status == RequestStatus::Pass));
+}
+
+/// A chaos request that exhausts its retry budget latches only its own
+/// stream; clean neighbors in the same batch (and the shared compile
+/// tier) are untouched.
+#[test]
+fn faulted_request_is_isolated_from_neighbors() {
+    let mut chaos = ServeRequest::registry("vecadd", OptLevel::Recon);
+    chaos.faults = FaultPlan::none()
+        .with(0, FaultKind::IllegalTrap { pc: None })
+        .with(0, FaultKind::IllegalTrap { pc: None });
+    chaos.class = "faulty";
+    let reqs = vec![
+        chaos,
+        ServeRequest::registry("vecadd", OptLevel::Recon),
+        ServeRequest::registry("saxpy", OptLevel::Recon),
+    ];
+    let rep = Service::new(ServeConfig::default()).run(reqs);
+    assert_eq!(rep.outcomes[0].status, RequestStatus::Faulted);
+    assert!(rep.outcomes[0].injected > 0);
+    assert_eq!(rep.outcomes[1].status, RequestStatus::Pass);
+    assert_eq!(rep.outcomes[2].status, RequestStatus::Pass);
+    // The faulted request compiled vecadd into the shared tier; its
+    // clean twin still rides that compile.
+    assert_eq!(rep.outcomes[1].provenance, Some(Provenance::Mem));
+    assert_eq!(rep.clean_failures(), 0);
+}
+
+/// Admission: priority classes first, FIFO within a class; overflow is
+/// turned away as Rejected outcomes, not errors.
+#[test]
+fn queue_cap_rejects_overflow_by_priority_then_fifo() {
+    let mut reqs = vec![];
+    for prio in [
+        Priority::Low,    // id 0 — rejected
+        Priority::Normal, // id 1 — admitted (first normal)
+        Priority::High,   // id 2 — admitted
+        Priority::Normal, // id 3 — rejected (second normal)
+        Priority::High,   // id 4 — admitted
+    ] {
+        let mut r = ServeRequest::registry("vecadd", OptLevel::Recon);
+        r.priority = prio;
+        reqs.push(r);
+    }
+    let rep = Service::new(ServeConfig {
+        queue_cap: 3,
+        ..ServeConfig::default()
+    })
+    .run(reqs);
+    assert_eq!(rep.count(RequestStatus::Rejected), 2);
+    for o in &rep.outcomes {
+        let rejected = o.status == RequestStatus::Rejected;
+        assert_eq!(rejected, o.id == 0 || o.id == 3, "outcome {}: {:?}", o.id, o.status);
+        if rejected {
+            assert!(o.error.as_deref().unwrap().contains("queue capacity"));
+        }
+    }
+    // Rejected outcomes serialize device as -1 and stay valid JSON.
+    let json = rep.render_json();
+    volt::prof::validate_json(&json).unwrap();
+    assert!(json.contains("\"device\":-1"));
+}
+
+/// The manifest front door, end to end: repeats, per-request retry
+/// overrides and chaos plans.
+#[test]
+fn manifest_batch_runs_end_to_end() {
+    let text = "# smoke\nvecadd repeat=2 prio=high\nsaxpy inject=trap@0 retries=2\n";
+    let reqs = parse_manifest(text, std::path::Path::new("."), OptLevel::Recon).unwrap();
+    let rep = Service::new(ServeConfig::default()).run(reqs);
+    assert_eq!(rep.outcomes.len(), 3);
+    assert_eq!(rep.outcomes[0].status, RequestStatus::Pass);
+    assert_eq!(rep.outcomes[1].status, RequestStatus::Pass);
+    assert_eq!(rep.outcomes[2].status, RequestStatus::Recovered);
+    assert_eq!(rep.outcomes[2].retries, 1);
+    assert_eq!(rep.clean_failures(), 0);
+}
+
+/// A second service pointed at the same cache directory replays the
+/// whole workload from the persistent tier: zero recompiles, same
+/// statuses.
+#[test]
+fn second_service_at_same_cache_dir_serves_from_disk() {
+    let dir = tmpdir("svc");
+    let cfg = ServeConfig {
+        devices: 2,
+        retries: 1,
+        seed: 3,
+        cache_dir: Some(dir.clone()),
+        ..ServeConfig::default()
+    };
+    let cold = serve_synthetic(20, cfg.clone());
+    assert_eq!(cold.cache.disk_hits, 0, "first run finds an empty directory");
+    assert!(cold.cache.misses > 0);
+
+    let warm = serve_synthetic(20, cfg);
+    assert_eq!(warm.cache.misses, 0, "warm run must not recompile anything");
+    assert!(warm.cache.disk_hits > 0);
+    assert_eq!(warm.quarantined, 0);
+    for (c, w) in cold.outcomes.iter().zip(&warm.outcomes) {
+        assert_eq!(c.status, w.status, "cache tier must not change results");
+    }
+    // Disk-served compiles are cheaper in the latency model.
+    let (cold_p50, _, _) = cold.latency_percentiles();
+    let (warm_p50, _, _) = warm.latency_percentiles();
+    assert!(warm_p50 < cold_p50, "warm p50 {warm_p50} vs cold {cold_p50}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+const K1: &str = "kernel void k1(global int* x) { int i = get_global_id(0); x[i] = i + 1; }";
+const K2: &str = "kernel void k2(global int* x) { int i = get_global_id(0); x[i] = i + 2; }";
+const K3: &str = "kernel void k3(global int* x) { int i = get_global_id(0); x[i] = i + 3; }";
+
+/// Two sessions interleaved over one disk-cache directory: each serves
+/// the other's compiles, counters stay exact, nothing is quarantined,
+/// and a size cap evicts the least-recently-used entry — not the one a
+/// sibling session just touched.
+#[test]
+fn sessions_share_a_disk_dir_with_exact_stats_and_lru_eviction() {
+    let dir = tmpdir("shared");
+    let opts = VoltOptions::default;
+    let mut a = Session::with_disk_cache(opts(), &dir, 0);
+    let mut b = Session::with_disk_cache(opts(), &dir, 0);
+
+    // Interleave: A compiles, B rides A's stores, then B hits its own
+    // mem tier.
+    let p1 = a.compile(K1).unwrap();
+    assert_eq!(b.compile(K1).unwrap().fingerprint, p1.fingerprint);
+    let p2 = a.compile(K2).unwrap();
+    assert_eq!(b.compile(K2).unwrap().fingerprint, p2.fingerprint);
+    b.compile(K1).unwrap();
+
+    let sa = a.cache_stats();
+    assert_eq!((sa.misses, sa.hits, sa.disk_hits), (2, 0, 0));
+    let sb = b.cache_stats();
+    assert_eq!((sb.misses, sb.hits, sb.disk_hits), (0, 1, 2));
+    assert_eq!(a.disk_cache().unwrap().quarantined(), 0);
+    assert_eq!(b.disk_cache().unwrap().quarantined(), 0);
+
+    // K1/K2/K3 are the same shape, so their entries are the same size:
+    // a cap of two entries (plus one byte) forces exactly one eviction.
+    let dc = a.disk_cache().unwrap();
+    let s1 = std::fs::metadata(dc.entry_path(p1.fingerprint)).unwrap().len();
+    let s2 = std::fs::metadata(dc.entry_path(p2.fingerprint)).unwrap().len();
+    assert_eq!(s1, s2, "equal-shape kernels must store equal-size entries");
+
+    let mut c = Session::with_disk_cache(opts(), &dir, s1 + s2 + 1);
+    c.compile(K1).unwrap(); // disk hit — touches K1, leaving K2 as LRU
+    c.compile(K3).unwrap(); // miss + store — over cap, evicts K2
+    let sc = c.cache_stats();
+    assert_eq!((sc.misses, sc.disk_hits, sc.disk_evicted), (1, 1, 1));
+    let dc = c.disk_cache().unwrap();
+    let key3 = fingerprint(K3, &opts());
+    assert!(!dc.entry_path(p2.fingerprint).exists(), "LRU entry must go");
+    assert!(dc.entry_path(p1.fingerprint).exists(), "touched entry must stay");
+    assert!(dc.entry_path(key3).exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
