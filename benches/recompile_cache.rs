@@ -34,7 +34,7 @@ fn main() {
     let t0 = Instant::now();
     for _ in 0..passes {
         for (name, src) in &sources {
-            let mut s = Session::new(opts_for(name));
+            let s = Session::new(opts_for(name));
             s.compile(src).expect(name);
         }
     }
@@ -42,17 +42,17 @@ fn main() {
 
     // Warm: one session per kernel source, compile once to populate, then
     // time the repeated compiles (all hits).
-    let mut sessions: Vec<Session> = sources
+    let sessions: Vec<Session> = sources
         .iter()
         .map(|(name, src)| {
-            let mut s = Session::new(opts_for(name));
+            let s = Session::new(opts_for(name));
             s.compile(src).expect(name);
             s
         })
         .collect();
     let t1 = Instant::now();
     for _ in 0..passes {
-        for (s, (name, src)) in sessions.iter_mut().zip(&sources) {
+        for (s, (name, src)) in sessions.iter().zip(&sources) {
             s.compile(src).expect(name);
         }
     }
@@ -88,13 +88,13 @@ fn main() {
     let dir = std::env::temp_dir().join(format!("volt-bench-dc-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     for (name, src) in &sources {
-        let mut s = Session::with_disk_cache(opts_for(name), &dir, 0);
+        let s = Session::with_disk_cache(opts_for(name), &dir, 0);
         s.compile(src).expect(name);
     }
     let t2 = Instant::now();
     for _ in 0..passes {
         for (name, src) in &sources {
-            let mut s = Session::with_disk_cache(opts_for(name), &dir, 0);
+            let s = Session::with_disk_cache(opts_for(name), &dir, 0);
             s.compile(src).expect(name);
             let st = s.cache_stats();
             assert_eq!(st.disk_hits, 1, "{name}: expected a disk hit");

@@ -535,6 +535,22 @@ pub fn build_image(
     dispatcher: &str,
     opts: &BackendOptions,
 ) -> Result<ProgramImage, BackendError> {
+    build_image_threaded(m, dispatcher, opts, 1)
+}
+
+/// [`build_image`] with per-function lowering fanned out across up to
+/// `threads` scoped workers ([`crate::par`]). Functions are lowered
+/// independently after dispatch; results join in call-graph order (and
+/// the first error in that order wins), so the linked image — words,
+/// line table, spill map, entries — is byte-identical to the
+/// sequential build for any thread count. Linking, fixups and the
+/// feature audit stay sequential.
+pub fn build_image_threaded(
+    m: &Module,
+    dispatcher: &str,
+    opts: &BackendOptions,
+    threads: usize,
+) -> Result<ProgramImage, BackendError> {
     let entry_fid = m.find_func(dispatcher).ok_or_else(|| {
         BackendError::new(Some(dispatcher), "unknown kernel entry")
     })?;
@@ -548,12 +564,16 @@ pub fn build_image(
         roots.push(entry_fid);
     }
     let order = cg.rpo_from(&roots);
+    let lowered = crate::par::par_map(&order, threads, |_, fid| {
+        let mf = lower_function(m, *fid, &layout, opts)?;
+        Ok::<(u32, FlatFunc), BackendError>((mf.local_mem_size, flatten(&mf)))
+    });
     let mut flats: Vec<FlatFunc> = vec![];
     let mut local_mem = 0u32;
-    for fid in order {
-        let mf = lower_function(m, fid, &layout, opts)?;
-        local_mem = local_mem.max(mf.local_mem_size);
-        flats.push(flatten(&mf));
+    for r in lowered {
+        let (lm, flat) = r?;
+        local_mem = local_mem.max(lm);
+        flats.push(flat);
     }
     // crt0 + function bases. The args block address is known from layout.
     let args_probe = m.globals.iter().position(|g| g.name == "__args").ok_or_else(|| {

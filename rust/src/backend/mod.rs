@@ -11,4 +11,4 @@ pub mod mir_opt;
 pub mod regalloc;
 pub mod safety_net;
 
-pub use emit::{build_image, BackendError, BackendOptions, ProgramImage};
+pub use emit::{build_image, build_image_threaded, BackendError, BackendOptions, ProgramImage};

@@ -100,7 +100,7 @@ pub fn run_bench_resilient(
         ..SimConfig::default()
     };
     let opts = bench_options(b, opt, true, SharedMemMapping::Local, sim);
-    let mut session = match cache_dir {
+    let session = match cache_dir {
         Some(dir) => Session::with_disk_cache(opts, dir, 0),
         None => Session::new(opts),
     };
@@ -116,7 +116,7 @@ pub fn run_bench_resilient(
         recovered: dev.launches_recovered,
         fault_log: dev.gpu.faults.log.clone(),
         cache: session.cache_stats(),
-        quarantined: session.disk_cache().map(|d| d.quarantined()).unwrap_or(0),
+        quarantined: session.disk_quarantined().unwrap_or(0),
     };
     Ok((
         RunResult {
@@ -150,13 +150,28 @@ pub fn run_bench_on(
     target: &TargetDesc,
     opt: OptLevel,
 ) -> Result<RunResult, VoltError> {
+    run_bench_on_threads(b, target, opt, 1)
+}
+
+/// [`run_bench_on`] with an explicit host worker-thread count for the
+/// simulator (and the per-function compile stages): `1` = sequential,
+/// `0` = one per available hardware thread. Cycles, results and
+/// profiles are bit-identical at any count — threads only change wall
+/// clock.
+pub fn run_bench_on_threads(
+    b: &Benchmark,
+    target: &TargetDesc,
+    opt: OptLevel,
+    threads: usize,
+) -> Result<RunResult, VoltError> {
     // One derivation of "the profile's defaults": the builder's
     // target_desc() sets geometry and warp lowering from the profile.
-    let opts = VoltOptions::builder()
+    let mut opts = VoltOptions::builder()
         .dialect(b.dialect)
         .target_desc(*target)
         .opt_level(opt)
         .build()?;
+    opts.sim.threads = threads;
     let prog = compile_program(b.source, &opts)?;
     let mut dev = VoltDevice::new(prog.image.clone(), opts.device_config());
     (b.run)(&mut dev).map_err(|msg| VoltError::Validation {

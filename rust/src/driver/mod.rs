@@ -18,7 +18,7 @@
 //! use volt::driver::{Session, VoltOptions};
 //! use volt::runtime::ArgValue;
 //!
-//! let mut session = Session::new(VoltOptions::builder().build()?);
+//! let session = Session::new(VoltOptions::builder().build()?);
 //! let program = session.compile(
 //!     "kernel void k(global int* o, int n) { int i = get_global_id(0); if (i < n) o[i] = i; }",
 //! )?;
@@ -43,6 +43,7 @@ pub use diskcache::{DiskCache, DiskLookup};
 pub use error::VoltError;
 pub use options::{VoltOptions, VoltOptionsBuilder};
 pub use session::{
-    compile_program, fingerprint, CacheStats, CompileTimings, KernelEntry, Program, Session,
+    compile_program, fingerprint, CacheStats, CompileTier, CompileTimings, KernelEntry, Program,
+    Session,
 };
 pub use stream::{CommandKind, CommandTiming, Event, Stream, StreamFault, Transfer};

@@ -7,19 +7,25 @@
 //! same kernels for many users depends on. Unlike the seed's
 //! `compile_source`, a `Program` exposes a launchable entry for *every*
 //! kernel in the module, not just `kernels[0]`.
+//!
+//! Sessions are `Send + Sync`: [`Session::compile`] takes `&self`, the
+//! memory tier is sharded behind `RwLock`s, and concurrent compiles of
+//! the *same* (source, options) pair are deduplicated — one thread runs
+//! the pipeline, the rest wait and share its `Arc<Program>` (see
+//! `docs/PARALLELISM.md`).
 
 use super::diskcache::{DiskCache, DiskLookup};
 use super::error::VoltError;
 use super::options::{Fnv1a, VoltOptions};
 use super::stream::Stream;
-use crate::backend::emit::{build_image, BackendError, ProgramImage};
+use crate::backend::emit::{build_image_threaded, BackendError, ProgramImage};
 use crate::check::{self, CheckMode, Diag};
 use crate::frontend::compile_kernels;
 use crate::ir::Type;
-use crate::transform::pass::run_middle_end_with;
+use crate::transform::pass::run_middle_end_with_threads;
 use crate::transform::MiddleEndReport;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 /// Per-stage wall-clock compile timings (the §5.2 overhead experiment).
@@ -92,27 +98,89 @@ pub struct CacheStats {
     pub disk_evicted: u64,
 }
 
+/// Which cache tier served a [`Session::compile_traced`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompileTier {
+    /// In-memory hit (including programs shared from a concurrent
+    /// compile of the same key — the waiter never ran the pipeline).
+    Mem,
+    /// Served from the persistent tier.
+    Disk,
+    /// Full pipeline run.
+    Miss,
+}
+
+/// Memory-tier shard count. Power of two so the shard index is a mask;
+/// small enough to stay cheap for single-threaded sessions, large enough
+/// that concurrent distinct-key compiles rarely contend on one lock.
+const SHARDS: usize = 16;
+
+/// Rendezvous for concurrent compiles of one fingerprint: the leader
+/// publishes `Done`/`Failed` and wakes everyone piled up behind it.
+enum InflightState {
+    Pending,
+    Done(Arc<Program>),
+    Failed,
+}
+
+struct InflightSlot {
+    state: Mutex<InflightState>,
+    cv: Condvar,
+}
+
+/// Resolves the in-flight slot when the leader finishes — including by
+/// panic, so waiters can never hang on a dead leader. `result` is set on
+/// the success path; anything else publishes `Failed` and the waiters
+/// retry as leaders of their own (each reports its own error).
+struct LeaderGuard<'a> {
+    session: &'a Session,
+    key: u64,
+    result: Option<Arc<Program>>,
+}
+
+impl Drop for LeaderGuard<'_> {
+    fn drop(&mut self) {
+        let slot = self.session.inflight.lock().unwrap().remove(&self.key);
+        if let Some(slot) = slot {
+            let mut st = slot.state.lock().unwrap();
+            *st = match self.result.take() {
+                Some(p) => InflightState::Done(p),
+                None => InflightState::Failed,
+            };
+            slot.cv.notify_all();
+        }
+    }
+}
+
 /// A compile-and-run session: configuration + binary cache (an in-memory
 /// tier, plus an optional persistent tier — see
 /// [`Session::with_disk_cache`]).
+///
+/// `Session` is `Send + Sync`; every method takes `&self`, so one
+/// session can serve compiles from many threads at once.
 pub struct Session {
     opts: VoltOptions,
-    cache: HashMap<u64, Arc<Program>>,
-    disk: Option<DiskCache>,
-    stats: CacheStats,
+    /// Memory tier, sharded by fingerprint so concurrent compiles of
+    /// different programs don't serialize on one lock.
+    shards: Vec<RwLock<HashMap<u64, Arc<Program>>>>,
+    /// In-flight compiles keyed by fingerprint (leader/waiter dedup).
+    inflight: Mutex<HashMap<u64, Arc<InflightSlot>>>,
+    disk: Option<Mutex<DiskCache>>,
+    stats: Mutex<CacheStats>,
     /// Diagnostics from the last compile's static-checker run (empty when
     /// the checker is off or the kernels were clean).
-    last_check: Vec<Diag>,
+    last_check: Mutex<Vec<Diag>>,
 }
 
 impl Session {
     pub fn new(opts: VoltOptions) -> Session {
         Session {
             opts,
-            cache: HashMap::new(),
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            inflight: Mutex::new(HashMap::new()),
             disk: None,
-            stats: CacheStats::default(),
-            last_check: Vec::new(),
+            stats: Mutex::new(CacheStats::default()),
+            last_check: Mutex::new(Vec::new()),
         }
     }
 
@@ -128,13 +196,25 @@ impl Session {
         max_bytes: u64,
     ) -> Session {
         let mut s = Session::new(opts);
-        s.disk = Some(DiskCache::new(dir, max_bytes));
+        s.disk = Some(Mutex::new(DiskCache::new(dir, max_bytes)));
         s
     }
 
-    /// The persistent tier, when one is attached.
-    pub fn disk_cache(&self) -> Option<&DiskCache> {
-        self.disk.as_ref()
+    /// Whether a persistent tier is attached.
+    pub fn has_disk_cache(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// Quarantined-entry count of the persistent tier, when one is
+    /// attached.
+    pub fn disk_quarantined(&self) -> Option<usize> {
+        self.disk.as_ref().map(|d| d.lock().unwrap().quarantined())
+    }
+
+    /// On-disk path the persistent tier stores `key` under, when a tier
+    /// is attached (the entry itself may not exist yet).
+    pub fn disk_entry_path(&self, key: u64) -> Option<std::path::PathBuf> {
+        self.disk.as_ref().map(|d| d.lock().unwrap().entry_path(key))
     }
 
     /// Session with the paper's default configuration.
@@ -149,8 +229,8 @@ impl Session {
     /// Diagnostics the static checker produced on the last
     /// [`Session::compile`] call (empty when [`VoltOptions::check`] is
     /// off or every kernel was clean).
-    pub fn last_diagnostics(&self) -> &[Diag] {
-        &self.last_check
+    pub fn last_diagnostics(&self) -> Vec<Diag> {
+        self.last_check.lock().unwrap().clone()
     }
 
     /// Compile `src` into a [`Program`], serving identical (source,
@@ -160,49 +240,137 @@ impl Session {
     /// verifier runs on *every* call — the checker is pure analysis, so
     /// it is independent of the binary cache (a cache hit still
     /// re-reports diagnostics, and `Deny` still rejects).
-    pub fn compile(&mut self, src: &str) -> Result<Arc<Program>, VoltError> {
-        self.last_check.clear();
-        if self.opts.check != CheckMode::Off {
-            // Checker-internal front-end errors are ignored here: the
-            // main pipeline below reports them as typed frontend errors.
-            if let Ok(diags) =
-                check::check_source(src, self.opts.dialect, &self.opts.check_params())
-            {
-                self.last_check = diags;
-            }
-            if self.opts.check == CheckMode::Deny && !self.last_check.is_empty() {
-                let first = &self.last_check[0];
-                return Err(VoltError::Validation {
-                    msg: format!(
-                        "volt check found {} issue{} (check=deny); first: [{}] kernel \
-                         '{}'{}: {}",
-                        self.last_check.len(),
-                        if self.last_check.len() == 1 { "" } else { "s" },
-                        first.id.id_str(),
-                        first.kernel,
-                        match first.line() {
-                            Some(l) => format!(" line {l}"),
-                            None => String::new(),
-                        },
-                        first.msg
-                    ),
-                });
-            }
-        }
+    pub fn compile(&self, src: &str) -> Result<Arc<Program>, VoltError> {
+        self.compile_traced(src).map(|(p, _)| p)
+    }
+
+    /// [`Session::compile`], additionally reporting which cache tier
+    /// served the request. Concurrent calls with the same fingerprint
+    /// are deduplicated: exactly one thread runs the pipeline (a single
+    /// `Miss`), the rest share its program as `Mem` hits.
+    pub fn compile_traced(
+        &self,
+        src: &str,
+    ) -> Result<(Arc<Program>, CompileTier), VoltError> {
+        self.run_checker(src)?;
         let key = fingerprint(src, &self.opts);
-        if self.opts.cache {
-            if let Some(p) = self.cache.get(&key) {
-                self.stats.hits += 1;
-                return Ok(p.clone());
+        if !self.opts.cache {
+            // No memory tier and no dedup: every call is its own compile
+            // (or disk hit), preserving the cache=false contract that N
+            // compiles are N misses.
+            return self.compile_uncached(src, key);
+        }
+        loop {
+            if let Some(p) = self.shard(key).read().unwrap().get(&key) {
+                self.stats.lock().unwrap().hits += 1;
+                return Ok((p.clone(), CompileTier::Mem));
+            }
+            let waiter = {
+                let mut inflight = self.inflight.lock().unwrap();
+                // Re-check under the in-flight lock: a leader publishes
+                // to the shard *before* dropping its slot, so missing
+                // here while no slot exists means nobody is compiling
+                // this key and we can safely become the leader.
+                if let Some(p) = self.shard(key).read().unwrap().get(&key) {
+                    self.stats.lock().unwrap().hits += 1;
+                    return Ok((p.clone(), CompileTier::Mem));
+                }
+                match inflight.get(&key) {
+                    Some(slot) => Some(slot.clone()),
+                    None => {
+                        inflight.insert(
+                            key,
+                            Arc::new(InflightSlot {
+                                state: Mutex::new(InflightState::Pending),
+                                cv: Condvar::new(),
+                            }),
+                        );
+                        None
+                    }
+                }
+            };
+            let Some(slot) = waiter else {
+                // Leader: run the pipeline, publish to the shard, then
+                // resolve the slot for anyone queued behind us. The guard
+                // resolves it on every exit path (including panics), so
+                // waiters can never hang.
+                let mut guard = LeaderGuard { session: self, key, result: None };
+                let out = self.compile_uncached(src, key);
+                if let Ok((p, _)) = &out {
+                    guard.result = Some(p.clone());
+                }
+                drop(guard);
+                return out;
+            };
+            let mut st = slot.state.lock().unwrap();
+            loop {
+                match &*st {
+                    InflightState::Pending => st = slot.cv.wait(st).unwrap(),
+                    InflightState::Done(p) => {
+                        self.stats.lock().unwrap().hits += 1;
+                        return Ok((p.clone(), CompileTier::Mem));
+                    }
+                    // The leader failed; retry from the top. Compile
+                    // errors are deterministic in the source, but each
+                    // caller must produce its own error value.
+                    InflightState::Failed => break,
+                }
             }
         }
+    }
+
+    /// Static checker gate: refreshes [`Session::last_diagnostics`] and
+    /// rejects under `CheckMode::Deny`.
+    fn run_checker(&self, src: &str) -> Result<(), VoltError> {
+        let mut last = self.last_check.lock().unwrap();
+        last.clear();
+        if self.opts.check == CheckMode::Off {
+            return Ok(());
+        }
+        // Checker-internal front-end errors are ignored here: the main
+        // pipeline reports them as typed frontend errors.
+        if let Ok(diags) =
+            check::check_source(src, self.opts.dialect, &self.opts.check_params())
+        {
+            *last = diags;
+        }
+        if self.opts.check == CheckMode::Deny && !last.is_empty() {
+            let first = &last[0];
+            return Err(VoltError::Validation {
+                msg: format!(
+                    "volt check found {} issue{} (check=deny); first: [{}] kernel \
+                     '{}'{}: {}",
+                    last.len(),
+                    if last.len() == 1 { "" } else { "s" },
+                    first.id.id_str(),
+                    first.kernel,
+                    match first.line() {
+                        Some(l) => format!(" line {l}"),
+                        None => String::new(),
+                    },
+                    first.msg
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Both cache-missing tiers: persistent lookup, then the full
+    /// pipeline. Publishes into the memory tier (when caching) so later
+    /// callers — and waiters piled behind a leader — hit.
+    fn compile_uncached(
+        &self,
+        src: &str,
+        key: u64,
+    ) -> Result<(Arc<Program>, CompileTier), VoltError> {
         // Persistent tier: a verified entry skips the whole pipeline (the
         // stored image is checksum-validated and every instruction
         // re-decoded); middle-end/timing reports default — the passes did
         // not run. Corrupt entries were quarantined by the cache and fall
         // through to a recompile.
-        if let Some(disk) = &mut self.disk {
-            if let DiskLookup::Hit(hit) = disk.load(key) {
+        if let Some(disk) = &self.disk {
+            let lookup = disk.lock().unwrap().load(key);
+            if let DiskLookup::Hit(hit) = lookup {
                 let (image, kernels) = *hit;
                 let prog = Arc::new(Program {
                     image,
@@ -212,20 +380,24 @@ impl Session {
                     fingerprint: key,
                 });
                 if self.opts.cache {
-                    self.cache.insert(key, prog.clone());
+                    self.shard(key).write().unwrap().insert(key, prog.clone());
                 }
-                return Ok(prog);
+                return Ok((prog, CompileTier::Disk));
             }
         }
-        self.stats.misses += 1;
+        self.stats.lock().unwrap().misses += 1;
         let prog = Arc::new(compile_program_keyed(src, &self.opts, key)?);
         if self.opts.cache {
-            self.cache.insert(key, prog.clone());
+            self.shard(key).write().unwrap().insert(key, prog.clone());
         }
-        if let Some(disk) = &mut self.disk {
-            disk.store(key, &prog.image, &prog.kernels);
+        if let Some(disk) = &self.disk {
+            disk.lock().unwrap().store(key, &prog.image, &prog.kernels);
         }
-        Ok(prog)
+        Ok((prog, CompileTier::Miss))
+    }
+
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, Arc<Program>>> {
+        &self.shards[(key as usize) & (SHARDS - 1)]
     }
 
     /// Create a command stream executing `program` on a fresh device with
@@ -240,8 +412,9 @@ impl Session {
     }
 
     pub fn cache_stats(&self) -> CacheStats {
-        let mut s = self.stats;
+        let mut s = *self.stats.lock().unwrap();
         if let Some(d) = &self.disk {
+            let d = d.lock().unwrap();
             s.disk_hits = d.hits;
             s.disk_corrupt = d.corrupt;
             s.disk_evicted = d.evicted;
@@ -250,11 +423,13 @@ impl Session {
     }
 
     pub fn cached_programs(&self) -> usize {
-        self.cache.len()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
-    pub fn clear_cache(&mut self) {
-        self.cache.clear();
+    pub fn clear_cache(&self) {
+        for shard in &self.shards {
+            shard.write().unwrap().clear();
+        }
     }
 }
 
@@ -281,6 +456,10 @@ fn compile_program_keyed(
     // Literal-constructed options go through the same consistency rules
     // as the builder.
     opts.validate()?;
+    // Per-function middle-end/backend stages fan out across the same
+    // worker budget the simulator uses; joins are in function order, so
+    // the image is byte-identical to a sequential compile.
+    let threads = crate::sim::effective_threads(opts.sim.threads);
     let t0 = Instant::now();
     let (mut m, infos) = compile_kernels(src, &opts.frontend())?;
     if infos.is_empty() {
@@ -294,7 +473,7 @@ fn compile_program_keyed(
     let t1 = Instant::now();
     // The target owns its divergence seeds (paper §4.3.1): the middle-end
     // runs with the target's TargetDivergenceInfo implementation.
-    let middle = run_middle_end_with(&mut m, &opts.opt_config(), &opts.target);
+    let middle = run_middle_end_with_threads(&mut m, &opts.opt_config(), &opts.target, threads);
     if opts.verify_ir {
         crate::ir::verify::verify_module(&m).map_err(|e| VoltError::MiddleEnd {
             pass: "verify",
@@ -307,7 +486,12 @@ fn compile_program_keyed(
     // PC from the argument block, so linking once with all dispatchers as
     // roots removes the seed's kernels[0]-only limitation.
     let t2 = Instant::now();
-    let image = build_image(&m, &format!("__main_{}", infos[0].name), &opts.backend())?;
+    let image = build_image_threaded(
+        &m,
+        &format!("__main_{}", infos[0].name),
+        &opts.backend(),
+        threads,
+    )?;
     let backend_ms = t2.elapsed().as_secs_f64() * 1e3;
 
     let mut kernels = Vec::with_capacity(infos.len());
@@ -357,8 +541,15 @@ kernel void add1(global int* x, int n) {
 "#;
 
     #[test]
+    fn session_is_send_and_sync() {
+        fn assert_traits<T: Send + Sync>() {}
+        assert_traits::<Session>();
+        assert_traits::<Program>();
+    }
+
+    #[test]
     fn program_exposes_every_kernel_entry() {
-        let mut s = Session::with_defaults();
+        let s = Session::with_defaults();
         let p = s.compile(TWO_KERNELS).unwrap();
         assert_eq!(p.kernel_names(), vec!["init", "add1"]);
         for k in &p.kernels {
@@ -374,7 +565,7 @@ kernel void add1(global int* x, int n) {
 
     #[test]
     fn cache_hits_on_identical_source_and_misses_on_changes() {
-        let mut s = Session::with_defaults();
+        let s = Session::with_defaults();
         let p1 = s.compile(TWO_KERNELS).unwrap();
         let p2 = s.compile(TWO_KERNELS).unwrap();
         assert_eq!(s.cache_stats(), CacheStats { hits: 1, misses: 1, ..Default::default() });
@@ -390,7 +581,7 @@ kernel void add1(global int* x, int n) {
 
     #[test]
     fn cache_disabled_always_misses() {
-        let mut s = Session::new(
+        let s = Session::new(
             crate::driver::VoltOptions::builder()
                 .cache(false)
                 .build()
@@ -400,6 +591,32 @@ kernel void add1(global int* x, int n) {
         s.compile(TWO_KERNELS).unwrap();
         assert_eq!(s.cache_stats(), CacheStats { hits: 0, misses: 2, ..Default::default() });
         assert_eq!(s.cached_programs(), 0);
+    }
+
+    #[test]
+    fn concurrent_same_source_compiles_dedup_to_one_miss() {
+        let s = Session::with_defaults();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| scope.spawn(|| s.compile_traced(TWO_KERNELS).unwrap()))
+                .collect();
+            let results: Vec<_> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            // Exactly one thread ran the pipeline; everyone shares its
+            // program.
+            let misses = results
+                .iter()
+                .filter(|(_, t)| *t == CompileTier::Miss)
+                .count();
+            assert_eq!(misses, 1, "exactly one leader compiles");
+            for (p, _) in &results {
+                assert!(Arc::ptr_eq(p, &results[0].0));
+            }
+        });
+        let stats = s.cache_stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 3);
+        assert_eq!(s.cached_programs(), 1);
     }
 
     #[test]
@@ -414,7 +631,7 @@ kernel void k(global float* in, global float* out) {
 }
 "#;
         // Warn: diagnostics recorded, compile succeeds.
-        let mut s = Session::new(
+        let s = Session::new(
             crate::driver::VoltOptions::builder()
                 .check(CheckMode::Warn)
                 .build()
@@ -432,7 +649,7 @@ kernel void k(global float* in, global float* out) {
         // Deny: typed validation error naming the check id; diagnostics
         // still inspectable. A cache hit re-rejects (the checker is
         // independent of the binary cache).
-        let mut s = Session::new(
+        let s = Session::new(
             crate::driver::VoltOptions::builder()
                 .check(CheckMode::Deny)
                 .build()
@@ -450,7 +667,7 @@ kernel void k(global float* in, global float* out) {
 
     #[test]
     fn frontend_errors_carry_lines() {
-        let mut s = Session::with_defaults();
+        let s = Session::with_defaults();
         let e = s.compile("kernel void k() {\n  int x = ;\n}").unwrap_err();
         match e {
             VoltError::Frontend { line, .. } => assert_eq!(line, 2),
@@ -502,15 +719,17 @@ kernel void double_it(global int* x, int n) {
         let dir = disk_dir("hit");
         let opts = || crate::driver::VoltOptions::builder().build().unwrap();
 
-        let mut s1 = Session::with_disk_cache(opts(), &dir, 0);
-        let p1 = s1.compile(DOUBLE_IT).unwrap();
+        let s1 = Session::with_disk_cache(opts(), &dir, 0);
+        let (p1, tier1) = s1.compile_traced(DOUBLE_IT).unwrap();
+        assert_eq!(tier1, CompileTier::Miss);
         assert_eq!(s1.cache_stats().misses, 1);
         let r1 = run_double_it(&p1, &s1);
 
         // A fresh session (empty memory cache) is served from disk: no
         // full compile, identical fingerprint, image and results.
-        let mut s2 = Session::with_disk_cache(opts(), &dir, 0);
-        let p2 = s2.compile(DOUBLE_IT).unwrap();
+        let s2 = Session::with_disk_cache(opts(), &dir, 0);
+        let (p2, tier2) = s2.compile_traced(DOUBLE_IT).unwrap();
+        assert_eq!(tier2, CompileTier::Disk);
         let stats = s2.cache_stats();
         assert_eq!(stats.misses, 0, "disk hit must not recompile");
         assert_eq!(stats.disk_hits, 1);
@@ -519,7 +738,8 @@ kernel void double_it(global int* x, int n) {
         assert_eq!(run_double_it(&p2, &s2), r1);
 
         // Within s2 the program is now also in the memory tier.
-        s2.compile(DOUBLE_IT).unwrap();
+        let (_, tier3) = s2.compile_traced(DOUBLE_IT).unwrap();
+        assert_eq!(tier3, CompileTier::Mem);
         assert_eq!(s2.cache_stats().hits, 1);
 
         let _ = std::fs::remove_dir_all(&dir);
@@ -530,9 +750,9 @@ kernel void double_it(global int* x, int n) {
         let dir = disk_dir("corrupt");
         let opts = || crate::driver::VoltOptions::builder().build().unwrap();
 
-        let mut s1 = Session::with_disk_cache(opts(), &dir, 0);
+        let s1 = Session::with_disk_cache(opts(), &dir, 0);
         let p1 = s1.compile(DOUBLE_IT).unwrap();
-        let path = s1.disk_cache().unwrap().entry_path(p1.fingerprint);
+        let path = s1.disk_entry_path(p1.fingerprint).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0x10;
@@ -540,18 +760,18 @@ kernel void double_it(global int* x, int n) {
 
         // The flipped byte is a logged miss + successful recompile —
         // never a crash — and the bad entry is quarantined.
-        let mut s2 = Session::with_disk_cache(opts(), &dir, 0);
+        let s2 = Session::with_disk_cache(opts(), &dir, 0);
         let p2 = s2.compile(DOUBLE_IT).unwrap();
         let stats = s2.cache_stats();
         assert_eq!(stats.disk_corrupt, 1);
         assert_eq!(stats.disk_hits, 0);
         assert_eq!(stats.misses, 1, "corrupt entry must recompile");
-        assert_eq!(s2.disk_cache().unwrap().quarantined(), 1);
+        assert_eq!(s2.disk_quarantined(), Some(1));
         assert_eq!(p2.image.words, p1.image.words);
         assert_eq!(run_double_it(&p2, &s2), run_double_it(&p1, &s1));
 
         // The recompile re-stored a good entry; a third session hits.
-        let mut s3 = Session::with_disk_cache(opts(), &dir, 0);
+        let s3 = Session::with_disk_cache(opts(), &dir, 0);
         s3.compile(DOUBLE_IT).unwrap();
         assert_eq!(s3.cache_stats().disk_hits, 1);
 

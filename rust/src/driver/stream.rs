@@ -652,7 +652,7 @@ mod tests {
     use crate::sim::{FaultKind, FaultPlan, FaultState};
 
     fn stream_for(src: &str) -> Stream {
-        let mut s = Session::new(VoltOptions::builder().build().unwrap());
+        let s = Session::new(VoltOptions::builder().build().unwrap());
         let p = s.compile(src).unwrap();
         s.create_stream(&p)
     }

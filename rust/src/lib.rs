@@ -78,6 +78,7 @@ pub mod coordinator;
 pub mod driver;
 pub mod frontend;
 pub mod ir;
+pub mod par;
 pub mod prof;
 pub mod runtime;
 pub mod serve;

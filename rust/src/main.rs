@@ -28,18 +28,24 @@ commands:
                   [--no-fast-forward] [--sanitize]       run a registry benchmark
                   [--inject SPEC] [--retries N]          (prints sim throughput;
                   [--backoff CYCLES] [--cache-dir DIR]   --no-fast-forward disables
-                                                         the idle-cycle skip;
+                  [--threads N]                          the idle-cycle skip;
                                                          --sanitize enables the
                                                          shadow-memory sanitizer;
                                                          --inject arms deterministic
                                                          faults, --retries/--backoff
                                                          set the launch recovery
                                                          policy, --cache-dir the
-                                                         persistent compile cache)
+                                                         persistent compile cache;
+                                                         --threads steps cores on a
+                                                         host worker pool, results
+                                                         bit-identical to 1 thread)
   serve <manifest> [--devices N] [--opt LEVEL] [--retries N]
         [--backoff CYCLES] [--cache-dir DIR]             batched compile+launch
         [--cache-max BYTES] [--queue-cap N]              service over N simulated
-        [--seed S] [--json FILE]                         devices (docs/SERVING.md);
+        [--seed S] [--json FILE] [--threads N]           devices (docs/SERVING.md;
+                                                         --threads drains the batch
+                                                         on a worker pool, report
+                                                         identical to 1 thread)
   serve --synthetic COUNT [same options]                 --synthetic runs the seeded
                                                          mixed workload instead of
                                                          a manifest file
@@ -109,7 +115,7 @@ fn opt_val(args: &[String], name: &str) -> Option<String> {
 const VALUED: &[&str] = &[
     "--opt", "--target", "--cache-dir", "--cache-max", "--retries", "--backoff", "--inject",
     "--devices", "--queue-cap", "--seed", "--synthetic", "--json", "--top", "--trace", "--block",
-    "--levels", "--fig", "--only", "--csv",
+    "--levels", "--fig", "--only", "--csv", "--threads",
 ];
 
 const COMPILE_FLAGS: &[&str] = &["--cuda", "--opt", "--target", "--asm", "--ir", "--cache-dir"];
@@ -124,6 +130,7 @@ const RUN_FLAGS: &[&str] = &[
     "--retries",
     "--backoff",
     "--cache-dir",
+    "--threads",
 ];
 const SERVE_FLAGS: &[&str] = &[
     "--synthetic",
@@ -136,6 +143,7 @@ const SERVE_FLAGS: &[&str] = &[
     "--queue-cap",
     "--seed",
     "--json",
+    "--threads",
 ];
 
 /// Reject any `--flag` the command does not understand (a typo'd
@@ -183,6 +191,9 @@ struct CommonOpts {
     retries: u32,
     backoff: u64,
     inject: Option<FaultPlan>,
+    /// Host worker threads (`run`: cores per cycle; `serve`: batch
+    /// drain). 1 = sequential, 0 = available parallelism.
+    threads: usize,
 }
 
 fn parse_common(args: &[String]) -> Result<CommonOpts, String> {
@@ -202,6 +213,10 @@ fn parse_common(args: &[String]) -> Result<CommonOpts, String> {
         Some(spec) => Some(FaultPlan::parse(&spec).map_err(|e| format!("--inject: {e}"))?),
         None => None,
     };
+    let threads = match opt_val(args, "--threads") {
+        Some(s) => s.parse().map_err(|_| format!("--threads: bad count '{s}'"))?,
+        None => 1,
+    };
     Ok(CommonOpts {
         level,
         target: parse_target(args),
@@ -209,6 +224,7 @@ fn parse_common(args: &[String]) -> Result<CommonOpts, String> {
         retries,
         backoff,
         inject,
+        threads,
     })
 }
 
@@ -262,7 +278,7 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
         print!("{}", volt::ir::printer::print_module(&m));
         return Ok(());
     }
-    let mut session = match &common.cache_dir {
+    let session = match &common.cache_dir {
         Some(dir) => Session::with_disk_cache(opts, dir, 0),
         None => Session::new(opts),
     };
@@ -297,14 +313,11 @@ fn cmd_compile(args: &[String]) -> Result<(), String> {
     if flag(args, "--asm") {
         print!("{}", out.image.disassemble());
     }
-    if let Some(dc) = session.disk_cache() {
+    if let Some(quarantined) = session.disk_quarantined() {
         let c = session.cache_stats();
         println!(
             "disk-cache: hits={} corrupt={} evicted={} quarantined={}",
-            c.disk_hits,
-            c.disk_corrupt,
-            c.disk_evicted,
-            dc.quarantined()
+            c.disk_hits, c.disk_corrupt, c.disk_evicted, quarantined
         );
     }
     Ok(())
@@ -342,6 +355,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                  --sw-warp/--smem-global/--no-fast-forward/--sanitize"
                     .to_string(),
             );
+        }
+        if common.threads != 1 {
+            // An armed fault plan keys on exact global cycles, so the
+            // simulator runs its sequential engine; refuse rather than
+            // silently ignore the flag.
+            return Err("--threads is not available with --inject/--retries/--cache-dir \
+                        (fault injection runs the sequential engine)"
+                .to_string());
         }
         let plan = common.inject.unwrap_or_else(FaultPlan::none);
         let policy = LaunchPolicy {
@@ -383,6 +404,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         let sim = SimConfig {
             fast_forward,
             sanitize,
+            threads: common.threads,
             ..SimConfig::default()
         };
         experiments::run_bench(&b, level, warp_hw, smem, sim)?
@@ -397,7 +419,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 target.name
             ));
         }
-        experiments::run_bench_on(&b, &target, level)?
+        experiments::run_bench_on_threads(&b, &target, level, common.threads)?
     };
     let wall_s = t0.elapsed().as_secs_f64();
     let s = &r.stats;
@@ -408,11 +430,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("benchmark {name} @ {:?} on {}: PASS", level, target.name);
     println!(
         "  sim throughput: {:.0} warp-instrs/sec wall ({:.2}s sim of {:.2}s total, \
-         fast-forward {})",
+         fast-forward {}, threads {})",
         s.instrs as f64 / sim_wall,
         sim_wall,
         wall_s,
-        if fast_forward { "on" } else { "off" }
+        if fast_forward { "on" } else { "off" },
+        common.threads
     );
     println!(
         "  cycles {}  instrs {}  thread-instrs {}  IPC {:.3}",
@@ -490,6 +513,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         cache_dir: common.cache_dir,
         cache_max_bytes: num("--cache-max", 0)?,
         seed: num("--seed", 1)? as u32,
+        threads: common.threads,
     };
     let rep = match opt_val(args, "--synthetic") {
         Some(n) => {
@@ -940,6 +964,8 @@ mod tests {
             "/tmp/x",
             "--inject",
             "trap@10",
+            "--threads",
+            "4",
         ]))
         .unwrap();
         assert_eq!(c.level, Some(OptLevel::O3));
@@ -948,9 +974,17 @@ mod tests {
         assert_eq!(c.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
         assert_eq!(c.inject.map(|p| p.len()), Some(1));
         assert_eq!(c.target.name, "vortex");
+        assert_eq!(c.threads, 4);
+        // Default is the sequential engine; 0 = available parallelism.
+        assert_eq!(parse_common(&argv(&["vecadd"])).unwrap().threads, 1);
+        assert_eq!(
+            parse_common(&argv(&["--threads", "0"])).unwrap().threads,
+            0
+        );
         assert!(parse_common(&argv(&["--retries", "many"])).is_err());
         assert!(parse_common(&argv(&["--opt", "o9"])).is_err());
         assert!(parse_common(&argv(&["--inject", "bogus@"])).is_err());
+        assert!(parse_common(&argv(&["--threads", "two"])).is_err());
     }
 
     #[test]

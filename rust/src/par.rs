@@ -1,0 +1,121 @@
+//! Minimal scoped-thread fan-out helpers (no external dependencies).
+//!
+//! The compile pipeline's per-function stages (middle-end function
+//! passes, backend lowering) are independent after dispatch; these
+//! helpers run them across a bounded set of `std::thread::scope`
+//! workers and hand the results back **in input order**, so callers
+//! join deterministically and emitted artifacts stay byte-identical to
+//! the sequential pipeline (see `docs/PARALLELISM.md`).
+
+/// Map `f` over `items` on up to `threads` scoped workers, returning
+/// the results in input order. `threads <= 1` (or a single item) runs
+/// inline — the sequential path stays allocation- and thread-free.
+///
+/// Work is dealt in strides (worker `w` takes items `w, w+T, w+2T, …`),
+/// which balances pipelines whose cost grows with position (big
+/// functions cluster) without any work-stealing machinery.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(items.len());
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    // Deal each worker a strided view of the output vector so every
+    // result lands in its input slot without synchronization.
+    let mut views: Vec<Vec<(usize, &mut Option<R>)>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (i, slot) in out.iter_mut().enumerate() {
+        views[i % workers].push((i, slot));
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for view in views {
+            handles.push(scope.spawn(move || {
+                for (i, slot) in view {
+                    *slot = Some(f(i, &items[i]));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+    out.into_iter()
+        .map(|r| r.expect("par_map slot unfilled"))
+        .collect()
+}
+
+/// [`par_map`] over mutable slots: apply `f` to every element of
+/// `items` (in place) on up to `threads` scoped workers. Used by the
+/// middle-end to run per-function pass stacks concurrently; each
+/// element is visited exactly once, and `f`'s per-element result is
+/// returned in input order (counter deltas, timings, …).
+pub fn par_for_each_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(items.len());
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let mut work: Vec<Vec<(usize, &mut T, &mut Option<R>)>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for ((i, item), slot) in items.iter_mut().enumerate().zip(out.iter_mut()) {
+        work[i % workers].push((i, item, slot));
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for chunk in work {
+            handles.push(scope.spawn(move || {
+                for (i, item, slot) in chunk {
+                    *slot = Some(f(i, item));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("par_for_each_mut worker panicked");
+        }
+    });
+    out.into_iter()
+        .map(|r| r.expect("par_for_each_mut slot unfilled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_input_order() {
+        let items: Vec<u64> = (0..37).collect();
+        let seq = par_map(&items, 1, |i, x| x * 2 + i as u64);
+        for threads in [2usize, 4, 16, 64] {
+            let par = par_map(&items, threads, |i, x| x * 2 + i as u64);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+        assert!(par_map::<u64, u64, _>(&[], 4, |_, x| *x).is_empty());
+    }
+
+    #[test]
+    fn par_for_each_mut_visits_every_slot_once() {
+        let mut items: Vec<u32> = vec![0; 23];
+        let idx = par_for_each_mut(&mut items, 4, |i, v| {
+            *v += 1;
+            i
+        });
+        assert!(items.iter().all(|v| *v == 1), "{items:?}");
+        assert_eq!(idx, (0..23).collect::<Vec<_>>());
+    }
+}

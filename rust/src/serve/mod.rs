@@ -40,7 +40,7 @@ use crate::driver::{CacheStats, Session, VoltOptions};
 use crate::frontend::Dialect;
 use crate::runtime::LaunchPolicy;
 use crate::transform::OptLevel;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// Service-wide configuration.
 #[derive(Clone, Debug)]
@@ -60,6 +60,11 @@ pub struct ServeConfig {
     /// Workload seed, recorded in the report (and used by
     /// [`synthetic`] when the CLI builds the workload).
     pub seed: u32,
+    /// Host worker threads draining the admitted batch (1 = the
+    /// sequential virtual-time loop, 0 = one per available hardware
+    /// thread). The report is schedule-equivalent at any thread count —
+    /// see `docs/PARALLELISM.md`.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +77,7 @@ impl Default for ServeConfig {
             cache_dir: None,
             cache_max_bytes: 0,
             seed: 1,
+            threads: 1,
         }
     }
 }
@@ -110,7 +116,7 @@ impl Service {
         &self.cfg
     }
 
-    fn session_for(&mut self, dialect: Dialect, opt: OptLevel) -> &mut Session {
+    fn session_for(&mut self, dialect: Dialect, opt: OptLevel) -> &Session {
         let key = session_key(dialect, opt);
         let cfg = &self.cfg;
         self.sessions.entry(key).or_insert_with(|| {
@@ -138,7 +144,7 @@ impl Service {
             total.disk_hits += c.disk_hits;
             total.disk_corrupt += c.disk_corrupt;
             total.disk_evicted += c.disk_evicted;
-            quarantined += s.disk_cache().map(|d| d.quarantined()).unwrap_or(0);
+            quarantined += s.disk_quarantined().unwrap_or(0);
         }
         (total, quarantined)
     }
@@ -154,20 +160,75 @@ impl Service {
         };
 
         let (admitted, rejected) = scheduler::admit(requests, self.cfg.queue_cap);
-        let mut sched = Scheduler::new(self.cfg.devices);
-        let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(admitted.len());
+        // Pre-create the session pool so the execution phase can share
+        // it immutably across worker threads.
+        for (_, req) in &admitted {
+            self.session_for(dialect_of(req), req.opt);
+        }
 
-        for (id, req) in &admitted {
-            let policy = LaunchPolicy {
-                retries: req.retries.unwrap_or(self.cfg.retries),
-                backoff_cycles: req.backoff.unwrap_or(self.cfg.backoff_cycles),
-                watchdog_max_cycles: None,
+        // Phase A — execution. Admitted requests are independent once
+        // the session pool exists: compiles dedup *inside* the shared
+        // `Session` (it is `Sync`), and every launch runs on a private
+        // device. `threads > 1` fans them out across a worker pool;
+        // results come back in admission order regardless.
+        let threads = crate::sim::effective_threads(self.cfg.threads);
+        let execs: Vec<worker::ExecResult> = {
+            let sessions = &self.sessions;
+            let cfg = &self.cfg;
+            crate::par::par_map(&admitted, threads, |_, (_, req)| {
+                let policy = LaunchPolicy {
+                    retries: req.retries.unwrap_or(cfg.retries),
+                    backoff_cycles: req.backoff.unwrap_or(cfg.backoff_cycles),
+                    watchdog_max_cycles: None,
+                };
+                let session = &sessions[&session_key(dialect_of(req), req.opt)];
+                worker::execute(req, session, policy)
+            })
+        };
+
+        // Phase B — the deterministic virtual-time ledger, replayed in
+        // admission order. Under a worker pool, *which* request's thread
+        // ran a dedup group's single pipeline is a race; the ledger
+        // instead charges it to the group's first-admitted request —
+        // exactly what sequential draining produces — so the report is
+        // schedule-equivalent: byte-identical at any thread count.
+        let group_of = |req: &ServeRequest| {
+            let key = session_key(dialect_of(req), req.opt);
+            let fp =
+                crate::driver::fingerprint(worker::source_of(req), self.sessions[&key].options());
+            (key, fp)
+        };
+        let mut lead_tier: HashMap<((u8, u8), u64), Provenance> = HashMap::new();
+        for ((_, req), r) in admitted.iter().zip(&execs) {
+            if r.status == RequestStatus::CompileError {
+                continue;
+            }
+            if let Some(p) = r.provenance {
+                if p != Provenance::Mem {
+                    lead_tier.entry(group_of(req)).or_insert(p);
+                }
+            }
+        }
+
+        let mut sched = Scheduler::new(self.cfg.devices);
+        let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(admitted.len() + rejected.len());
+        let mut seen: HashSet<((u8, u8), u64)> = HashSet::new();
+        for ((id, req), r) in admitted.iter().zip(&execs) {
+            let (provenance, compile_cycles) = if r.status == RequestStatus::CompileError {
+                (r.provenance, r.compile_cycles)
+            } else {
+                let g = group_of(req);
+                let p = if seen.insert(g) {
+                    // First of its dedup group: charged the pipeline run
+                    // (or disk load) the group incurred, if any.
+                    lead_tier.get(&g).cloned().unwrap_or(Provenance::Mem)
+                } else {
+                    Provenance::Mem
+                };
+                (Some(p), worker::compile_cost(p, r.code_len))
             };
-            let dialect = dialect_of(req);
-            let session = self.session_for(dialect, req.opt);
             let (device, start) = sched.assign();
-            let r = worker::execute(req, session, policy);
-            let service_cycles = r.compile_cycles + r.launch_cycles;
+            let service_cycles = compile_cycles + r.launch_cycles;
             sched.complete(device, service_cycles);
             outcomes.push(RequestOutcome {
                 id: *id,
@@ -176,9 +237,9 @@ impl Service {
                 priority: req.priority,
                 status: r.status,
                 device,
-                provenance: r.provenance,
+                provenance,
                 queue_cycles: start,
-                compile_cycles: r.compile_cycles,
+                compile_cycles,
                 launch_cycles: r.launch_cycles,
                 total_cycles: start + service_cycles,
                 instrs: r.instrs,
@@ -186,7 +247,7 @@ impl Service {
                 recovered: r.recovered,
                 injected: r.injected,
                 profiles: r.profiles,
-                error: r.error,
+                error: r.error.clone(),
             });
         }
         for (id, req) in &rejected {
@@ -249,9 +310,9 @@ impl Service {
 mod tests {
     use super::*;
 
-    /// The worker-pool readiness contract: everything a future
-    /// thread-per-device dispatcher would move across threads is
-    /// `Send` today (ROADMAP open item 1 builds on this).
+    /// The worker-pool contract: everything the thread-per-device
+    /// dispatcher moves across threads is `Send`, and everything it
+    /// *shares* (the session pool above all) is `Sync`.
     #[test]
     fn service_components_are_send() {
         fn assert_send<T: Send>() {}
@@ -261,6 +322,43 @@ mod tests {
         assert_send::<Service>();
         assert_send::<ServeRequest>();
         assert_send::<ServeReport>();
+    }
+
+    #[test]
+    fn service_components_are_sync() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<Session>();
+        assert_sync::<std::sync::Arc<crate::driver::Program>>();
+        assert_sync::<Service>();
+        assert_sync::<ServeRequest>();
+    }
+
+    /// Schedule equivalence: the threaded drain must render the *same*
+    /// report as the sequential virtual-time loop — outcomes,
+    /// provenance, ledger charges, per-device counts, bytes and all.
+    #[test]
+    fn threaded_run_matches_sequential_report() {
+        let batch = || {
+            vec![
+                ServeRequest::registry("vecadd", OptLevel::Recon),
+                ServeRequest::registry("vecadd", OptLevel::Recon),
+                ServeRequest::registry("saxpy", OptLevel::Recon),
+                ServeRequest::registry("vecadd", OptLevel::O3),
+                ServeRequest::registry("saxpy", OptLevel::Recon),
+            ]
+        };
+        let run_with = |threads: usize| {
+            let mut svc = Service::new(ServeConfig {
+                devices: 2,
+                threads,
+                ..ServeConfig::default()
+            });
+            svc.run(batch()).render_json()
+        };
+        let seq = run_with(1);
+        for threads in [2usize, 4] {
+            assert_eq!(run_with(threads), seq, "threads={threads}");
+        }
     }
 
     #[test]

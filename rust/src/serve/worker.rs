@@ -19,7 +19,7 @@
 use super::report::{Provenance, RequestStatus};
 use super::request::{ArgSpec, Payload, ServeRequest};
 use crate::coordinator::benchmarks;
-use crate::driver::{Session, Stream};
+use crate::driver::{CompileTier, Session, Stream};
 use crate::runtime::{ArgValue, LaunchPolicy};
 use crate::sim::FaultState;
 
@@ -45,9 +45,13 @@ pub struct ExecResult {
     pub injected: u64,
     pub profiles: usize,
     pub error: Option<String>,
+    /// Linked-image length the compile-cost model charges against
+    /// (0 on compile error). The service's threaded mode re-derives
+    /// ledger charges from this after provenance reassignment.
+    pub code_len: usize,
 }
 
-fn source_of(req: &ServeRequest) -> &str {
+pub(crate) fn source_of(req: &ServeRequest) -> &str {
     match &req.payload {
         Payload::Registry { name } => {
             // The label was validated against the registry at admission;
@@ -61,25 +65,24 @@ fn source_of(req: &ServeRequest) -> &str {
 /// Compile (through the shared session) and execute (on a private
 /// stream) one request. `policy` already folds the service default and
 /// the request's per-request override together.
-pub fn execute(req: &ServeRequest, session: &mut Session, policy: LaunchPolicy) -> ExecResult {
-    // Provenance by cache-counter delta: exactly one of hits / disk
-    // hits / misses advances per compile call.
-    let before = session.cache_stats();
-    let compiled = session.compile(source_of(req));
-    let after = session.cache_stats();
-    let provenance = if after.hits > before.hits {
-        Provenance::Mem
-    } else if after.disk_hits > before.disk_hits {
-        Provenance::Disk
-    } else {
-        Provenance::Miss
-    };
-    let prog = match compiled {
-        Ok(p) => p,
+///
+/// Takes `&Session`: sessions are `Sync` and safe to share across a
+/// worker pool — concurrent identical fingerprints dedup to a single
+/// pipeline run inside the session itself.
+pub fn execute(req: &ServeRequest, session: &Session, policy: LaunchPolicy) -> ExecResult {
+    let (prog, provenance) = match session.compile_traced(source_of(req)) {
+        Ok((p, tier)) => (
+            p,
+            match tier {
+                CompileTier::Mem => Provenance::Mem,
+                CompileTier::Disk => Provenance::Disk,
+                CompileTier::Miss => Provenance::Miss,
+            },
+        ),
         Err(e) => {
             return ExecResult {
                 status: RequestStatus::CompileError,
-                provenance: Some(provenance),
+                provenance: Some(Provenance::Miss),
                 compile_cycles: 0,
                 launch_cycles: 0,
                 instrs: 0,
@@ -88,10 +91,12 @@ pub fn execute(req: &ServeRequest, session: &mut Session, policy: LaunchPolicy) 
                 injected: 0,
                 profiles: 0,
                 error: Some(e.to_string()),
+                code_len: 0,
             }
         }
     };
-    let compile_cycles = compile_cost(provenance, prog.image.code.len());
+    let code_len = prog.image.code.len();
+    let compile_cycles = compile_cost(provenance, code_len);
 
     // Private execution context: a fresh device per request is the
     // isolation boundary — faults latch here and nowhere else.
@@ -139,6 +144,7 @@ pub fn execute(req: &ServeRequest, session: &mut Session, policy: LaunchPolicy) 
         injected,
         profiles: stream.profiles().len(),
         error: run.err(),
+        code_len,
     }
 }
 
@@ -201,15 +207,17 @@ mod tests {
 
     #[test]
     fn clean_registry_request_passes_and_dedups() {
-        let mut session = Session::new(VoltOptions::default());
+        let session = Session::new(VoltOptions::default());
         let req = ServeRequest::registry("vecadd", OptLevel::Recon);
-        let r1 = execute(&req, &mut session, policy(0));
+        let r1 = execute(&req, &session, policy(0));
         assert_eq!(r1.status, RequestStatus::Pass);
         assert_eq!(r1.provenance, Some(Provenance::Miss));
         assert!(r1.launch_cycles > 0 && r1.instrs > 0);
-        let r2 = execute(&req, &mut session, policy(0));
+        assert!(r1.code_len > 0);
+        let r2 = execute(&req, &session, policy(0));
         assert_eq!(r2.status, RequestStatus::Pass);
         assert_eq!(r2.provenance, Some(Provenance::Mem));
+        assert_eq!(r2.code_len, r1.code_len);
         assert!(r2.compile_cycles < r1.compile_cycles);
         // Same device config, same kernel, fresh device: identical
         // simulated work.
@@ -218,25 +226,25 @@ mod tests {
 
     #[test]
     fn faulty_request_recovers_within_budget_and_faults_beyond_it() {
-        let mut session = Session::new(VoltOptions::default());
+        let session = Session::new(VoltOptions::default());
         let mut req = ServeRequest::registry("vecadd", OptLevel::Recon);
         req.faults = FaultPlan::none()
             .with(0, FaultKind::IllegalTrap { pc: None })
             .with(0, FaultKind::MemTrap { pc: None });
 
         // Budget >= trap count: absorbed and recovered.
-        let r = execute(&req, &mut session, policy(2));
+        let r = execute(&req, &session, policy(2));
         assert_eq!(r.status, RequestStatus::Recovered, "{:?}", r.error);
         assert_eq!(r.injected, 2);
         assert_eq!(r.retries, 2);
 
         // Budget < trap count: the request faults — but only its own
         // stream; the shared session happily serves the next request.
-        let r = execute(&req, &mut session, policy(1));
+        let r = execute(&req, &session, policy(1));
         assert_eq!(r.status, RequestStatus::Faulted);
         assert!(r.error.is_some());
         let clean = ServeRequest::registry("vecadd", OptLevel::Recon);
-        let r = execute(&clean, &mut session, policy(0));
+        let r = execute(&clean, &session, policy(0));
         assert_eq!(r.status, RequestStatus::Pass, "{:?}", r.error);
         assert_eq!(r.provenance, Some(Provenance::Mem));
     }

@@ -171,12 +171,26 @@ impl Core {
         stats: &mut SimStats,
         faults: &mut FaultState,
     ) -> Result<StepOutcome, SimError> {
+        let Some(wi) = self.choose_warp(cycle, cfg) else {
+            return Ok(StepOutcome::NoneReady);
+        };
+        let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats, faults)?;
+        Ok(StepOutcome::Executed(issue))
+    }
+
+    /// Issue selection for this cycle: round-robin over the active list,
+    /// with the idle fast-forward short-circuit. Split out of [`step`] so
+    /// the parallel tick loop ([`super::gpu`]) can pick the warp in the
+    /// per-core compute phase and defer the (possibly shared-state)
+    /// execute to the in-order commit phase. Mutates only scheduler
+    /// bookkeeping (`rr`, `idle`) — never warp architectural state.
+    pub(crate) fn choose_warp(&mut self, cycle: u64, cfg: &SimConfig) -> Option<usize> {
         // Idle fast-forward: nothing about this core can change until
         // `ready_at`, so skip the warp-table scan entirely.
         if cfg.fast_forward {
             if let Some(info) = self.idle {
                 if cycle < info.ready_at {
-                    return Ok(StepOutcome::NoneReady);
+                    return None;
                 }
             }
         }
@@ -199,12 +213,11 @@ impl Core {
                     active: self.compute_active_warps(),
                 });
             }
-            return Ok(StepOutcome::NoneReady);
+            return None;
         };
         self.idle = None;
         self.rr = (wi + 1) % n;
-        let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats, faults)?;
-        Ok(StepOutcome::Executed(issue))
+        Some(wi)
     }
 
     /// Why this core cannot issue right now: the warp closest to becoming
@@ -334,7 +347,7 @@ impl Core {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec(
+    pub(crate) fn exec(
         &mut self,
         wi: usize,
         cycle: u64,

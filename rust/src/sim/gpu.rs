@@ -1,13 +1,25 @@
 //! Top-level GPU: cores + shared L2 + global memory + the tick loop.
+//!
+//! The tick loop has two interchangeable engines: the sequential loop
+//! (cores stepped in index order within each cycle) and a parallel one
+//! ([`SimConfig::threads`] > 1) that steps cores on a pool of worker
+//! threads under a deterministic cycle barrier. Determinism rests on a
+//! commit-order rule: within one cycle a worker touches only its own
+//! core's state, and every shared-state effect (GlobalMem, L2, atomics,
+//! sanitizer reports) is deferred and applied in core-index order at
+//! the barrier — so both engines are bit-identical in cycles, results,
+//! stats, profiler ledgers and sanitizer reports (`docs/PARALLELISM.md`).
 
 use super::core::{Core, Issue, StepOutcome};
-use super::fault::FaultState;
+use super::fault::{FaultPlan, FaultState};
 use super::mem::{Cache, GlobalMem, ShadowLocal};
 use super::{SimConfig, SimError, SimStats, TrapKind};
 use crate::backend::emit::ProgramImage;
-use crate::backend::isa::MachInst;
+use crate::backend::isa::{MachInst, OpClass};
 use crate::ir::Loc;
 use crate::prof::counters::Profiler;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 pub struct Gpu {
     pub cfg: SimConfig,
@@ -132,34 +144,7 @@ impl Gpu {
     /// Per-warp state dump for hang diagnostics: every live warp's pc,
     /// source line (when the line table has one) and parked/active flag.
     fn hang_report(&self) -> String {
-        let mut s = String::new();
-        for c in &self.cores {
-            for (wi, w) in c.warps.iter().enumerate() {
-                if !w.active {
-                    continue;
-                }
-                let line = self
-                    .pc_loc
-                    .get(w.pc as usize)
-                    .copied()
-                    .flatten()
-                    .map(|l| format!(" (source line {})", l.line))
-                    .unwrap_or_default();
-                s.push_str(&format!(
-                    "\n  core {} warp {}: pc {}{} [{}]",
-                    c.id,
-                    wi,
-                    w.pc,
-                    line,
-                    if w.at_barrier {
-                        "parked at barrier"
-                    } else {
-                        "active"
-                    }
-                ));
-            }
-        }
-        s
+        hang_report_cores(self.cores.iter(), &self.pc_loc)
     }
 
     /// Simple bump allocator over the heap segment (host runtime helper).
@@ -188,7 +173,7 @@ impl Gpu {
     /// sums to the total cycle count.
     pub fn run_profiled(
         &mut self,
-        mut prof: Option<&mut Profiler>,
+        prof: Option<&mut Profiler>,
     ) -> Result<SimStats, SimError> {
         // Feature audit, once per run instead of per issued instruction:
         // an opcode outside the device's declared feature set is a trap,
@@ -221,6 +206,38 @@ impl Gpu {
         }
         // Reset per-run cache state is implicit (new caches per load); for
         // repeated runs, rebuild via `Gpu::load`.
+        //
+        // Engine selection: the parallel loop pays a per-cycle barrier,
+        // so it only engages with >1 worker and >1 core. An armed fault
+        // plan forces the sequential engine — one-shot faults are
+        // consumed in (cycle, core, warp) issue order, and the compute
+        // phase would need the real injector state to preserve that
+        // order exactly; the sequential path is the semantics of record.
+        let workers = super::effective_threads(self.cfg.threads).min(self.cores.len());
+        let cycle = if workers > 1 && !self.faults.armed() {
+            self.run_ticks_parallel(workers, &mut stats, prof)?
+        } else {
+            self.run_ticks_sequential(&mut stats, prof)?
+        };
+        stats.cycles = cycle;
+        for r in stats.sanitize_reports.iter_mut() {
+            r.line = self
+                .pc_loc
+                .get(r.pc as usize)
+                .copied()
+                .flatten()
+                .map(|l| l.line);
+        }
+        Ok(stats)
+    }
+
+    /// The classic tick loop: cores stepped in index order within each
+    /// simulated cycle. Returns the final cycle count.
+    fn run_ticks_sequential(
+        &mut self,
+        stats: &mut SimStats,
+        mut prof: Option<&mut Profiler>,
+    ) -> Result<u64, SimError> {
         let mut issued: Vec<Option<Issue>> = vec![None; self.cores.len()];
         let mut cycle: u64 = 0;
         let pc_loc = &self.pc_loc;
@@ -237,7 +254,7 @@ impl Gpu {
                     &mut self.mem,
                     &mut self.l2,
                     &self.cfg,
-                    &mut stats,
+                    stats,
                     &mut self.faults,
                 )
                 .map_err(|e| locate(pc_loc, e))?
@@ -306,16 +323,371 @@ impl Gpu {
                 });
             }
         }
-        stats.cycles = cycle;
-        for r in stats.sanitize_reports.iter_mut() {
-            r.line = self
-                .pc_loc
-                .get(r.pc as usize)
+        Ok(cycle)
+    }
+
+    /// The parallel tick loop: `workers` threads (this thread included)
+    /// step disjoint core subsets inside each cycle, synchronized by an
+    /// epoch barrier; all shared-state effects commit in core-index
+    /// order afterwards. Bit-identical to the sequential engine — see
+    /// the module docs and `docs/PARALLELISM.md` for the argument.
+    ///
+    /// Phase split per cycle:
+    /// 1. *compute* (parallel, per core): pick the issue slot via
+    ///    [`Core::choose_warp`], then — only when the instruction's
+    ///    class never touches shared state ([`OpClass::Mem`] is the
+    ///    exact complement) — execute it against the core's own state,
+    ///    accumulating stats into a per-core delta. Memory-class
+    ///    instructions (and undecodable pcs) are deferred.
+    /// 2. *commit* (this thread, core-index order): deferred
+    ///    instructions execute against the real `GlobalMem`/L2/stats —
+    ///    exactly the interleaving the sequential loop produces —
+    ///    compute deltas merge, and the first error in core order wins.
+    /// 3. *bookkeeping* (this thread): time advance, deadlock/watchdog
+    ///    checks, profiler attribution. Core state is frozen here, so
+    ///    every read equals what the sequential loop would have seen.
+    fn run_ticks_parallel(
+        &mut self,
+        workers: usize,
+        stats: &mut SimStats,
+        mut prof: Option<&mut Profiler>,
+    ) -> Result<u64, SimError> {
+        let cfg = &self.cfg;
+        let prog: &[MachInst] = &self.program;
+        let pc_loc = &self.pc_loc;
+        let label = &self.label;
+        let mem = &mut self.mem;
+        let l2 = &mut self.l2;
+        let faults = &mut self.faults;
+        let slots: Vec<Mutex<Slot<'_>>> = self
+            .cores
+            .iter_mut()
+            .map(|core| {
+                Mutex::new(Slot {
+                    core,
+                    outcome: Outcome::NoIssue,
+                    delta: SimStats::default(),
+                })
+            })
+            .collect();
+        let n = slots.len();
+
+        // Cycle barrier: the coordinator publishes the cycle, resets the
+        // arrival counter and bumps the epoch (Release); workers wake on
+        // the epoch change (Acquire), compute their cores, and count
+        // themselves in. `u64::MAX` is the exit sentinel — stored by a
+        // drop guard so every return path (including errors and panics)
+        // releases the pool before the scope joins.
+        let epoch = AtomicU64::new(0);
+        let cycle_now = AtomicU64::new(0);
+        let done = AtomicUsize::new(0);
+
+        std::thread::scope(|scope| -> Result<u64, SimError> {
+            let _release_workers = SentinelGuard { epoch: &epoch };
+            for w in 1..workers {
+                let slots = &slots;
+                let epoch = &epoch;
+                let cycle_now = &cycle_now;
+                let done = &done;
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    loop {
+                        let e = wait_for_change(epoch, last);
+                        if e == u64::MAX {
+                            return;
+                        }
+                        last = e;
+                        let cycle = cycle_now.load(Ordering::Relaxed);
+                        for ci in (w..n).step_by(workers) {
+                            compute_slot(&mut slots[ci].lock().unwrap(), cycle, prog, cfg);
+                        }
+                        done.fetch_add(1, Ordering::Release);
+                    }
+                });
+            }
+
+            let mut issued: Vec<Option<Issue>> = vec![None; n];
+            let mut cycle: u64 = 0;
+            let mut tick: u64 = 0;
+            loop {
+                if slots.iter().all(|s| s.lock().unwrap().core.idle()) {
+                    break;
+                }
+                // Publish the cycle and open the epoch.
+                tick += 1;
+                cycle_now.store(cycle, Ordering::Relaxed);
+                done.store(0, Ordering::Relaxed);
+                epoch.store(tick, Ordering::Release);
+                // Coordinator doubles as worker 0.
+                for ci in (0..n).step_by(workers) {
+                    compute_slot(&mut slots[ci].lock().unwrap(), cycle, prog, cfg);
+                }
+                let mut spins = 0u32;
+                while done.load(Ordering::Acquire) != workers - 1 {
+                    spins += 1;
+                    if spins < SPIN_BUDGET {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+
+                // Commit in core-index order: the sequential loop's
+                // exact shared-state interleaving and error precedence.
+                let mut any = false;
+                for (ci, slot) in slots.iter().enumerate() {
+                    let mut slot = slot.lock().unwrap();
+                    issued[ci] = None;
+                    match std::mem::replace(&mut slot.outcome, Outcome::NoIssue) {
+                        Outcome::NoIssue => {}
+                        Outcome::Failed(e) => return Err(locate(pc_loc, e)),
+                        Outcome::Ran(info) => {
+                            any = true;
+                            issued[ci] = Some(info);
+                            merge_stats(stats, &mut slot.delta);
+                        }
+                        Outcome::Deferred(wi) => {
+                            let info = slot
+                                .core
+                                .exec(wi, cycle, prog, mem, l2, cfg, stats, faults)
+                                .map_err(|e| locate(pc_loc, e))?;
+                            any = true;
+                            issued[ci] = Some(info);
+                        }
+                    }
+                }
+
+                // Bookkeeping on frozen state (workers are parked until
+                // the next epoch; slot locks are uncontended).
+                let delta: u64 = if any {
+                    1
+                } else {
+                    let next = slots
+                        .iter()
+                        .filter_map(|s| s.lock().unwrap().core.next_ready())
+                        .min();
+                    match next {
+                        Some(nr) if nr > cycle => nr - cycle,
+                        Some(_) => 1,
+                        None => {
+                            if slots.iter().any(|s| !s.lock().unwrap().core.idle()) {
+                                return Err(SimError {
+                                    core: 0,
+                                    warp: 0,
+                                    pc: 0,
+                                    msg: format!(
+                                        "barrier deadlock: all live warps parked in kernel '{}'{}",
+                                        label,
+                                        hang_report_slots(&slots, pc_loc)
+                                    ),
+                                    kind: TrapKind::Deadlock,
+                                    injected: faults.stuck_barrier_fired(),
+                                });
+                            }
+                            break;
+                        }
+                    }
+                };
+                if let Some(p) = prof.as_deref_mut() {
+                    for (ci, slot) in slots.iter().enumerate() {
+                        let slot = slot.lock().unwrap();
+                        match &issued[ci] {
+                            Some(info) => p.record_issue(ci, info.pc, info.cost, cycle),
+                            None => p.record_stall(ci, slot.core.stall_reason(), delta),
+                        }
+                        p.record_occupancy(ci, cycle, slot.core.active_warps(), delta);
+                    }
+                }
+                cycle += delta;
+                if cycle > cfg.max_cycles {
+                    return Err(SimError {
+                        core: 0,
+                        warp: 0,
+                        pc: 0,
+                        msg: format!(
+                            "kernel '{}' exceeded max cycles ({}){}",
+                            label,
+                            cfg.max_cycles,
+                            hang_report_slots(&slots, pc_loc)
+                        ),
+                        kind: TrapKind::Watchdog,
+                        injected: false,
+                    });
+                }
+            }
+            Ok(cycle)
+        })
+    }
+}
+
+/// Iterations of `spin_loop` before a barrier wait falls back to
+/// `yield_now` — keeps latency low when a hardware thread is free and
+/// survives CPU oversubscription (more workers than host cores).
+const SPIN_BUDGET: u32 = 128;
+
+/// Spin-then-yield until `epoch` moves past `last`; returns the value.
+fn wait_for_change(epoch: &AtomicU64, last: u64) -> u64 {
+    let mut spins = 0u32;
+    loop {
+        let e = epoch.load(Ordering::Acquire);
+        if e != last {
+            return e;
+        }
+        spins += 1;
+        if spins < SPIN_BUDGET {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// What one core's compute phase produced this cycle.
+enum Outcome {
+    /// No warp could issue.
+    NoIssue,
+    /// A core-local instruction executed; its stats sit in the delta.
+    Ran(Issue),
+    /// A memory-class (or undecodable-pc) issue slot: warp chosen, the
+    /// execute deferred to the in-order commit phase.
+    Deferred(usize),
+    /// The compute-phase execute trapped; raised at commit in core
+    /// order so error precedence matches the sequential loop.
+    Failed(SimError),
+}
+
+/// One worker-owned core plus its per-cycle scratch. The mutex is
+/// uncontended by construction (a core belongs to exactly one worker
+/// within a cycle; the coordinator only locks after the barrier) — it
+/// exists to make the sharing safe, not to arbitrate.
+struct Slot<'a> {
+    core: &'a mut Core,
+    outcome: Outcome,
+    delta: SimStats,
+}
+
+/// One core's compute phase: choose the issue slot, then execute only
+/// if the instruction cannot touch shared state. The dummy memory/L2/
+/// fault-injector are never observed: non-memory instructions touch
+/// neither by construction, and the parallel engine only runs with an
+/// unarmed fault plan (an unarmed injector's hooks are no-ops).
+fn compute_slot(slot: &mut Slot<'_>, cycle: u64, prog: &[MachInst], cfg: &SimConfig) {
+    let Some(wi) = slot.core.choose_warp(cycle, cfg) else {
+        slot.outcome = Outcome::NoIssue;
+        return;
+    };
+    let pc = slot.core.warps[wi].pc;
+    let defer = match prog.get(pc as usize) {
+        None => true, // "pc out of program" raises at commit, in order
+        Some(inst) => inst.op.class() == OpClass::Mem,
+    };
+    if defer {
+        slot.outcome = Outcome::Deferred(wi);
+        return;
+    }
+    let mut no_mem = GlobalMem::default();
+    let mut no_l2: Option<Cache> = None;
+    let mut no_faults = FaultState::new(FaultPlan::none());
+    slot.delta = SimStats::default();
+    slot.outcome = match slot.core.exec(
+        wi,
+        cycle,
+        prog,
+        &mut no_mem,
+        &mut no_l2,
+        cfg,
+        &mut slot.delta,
+        &mut no_faults,
+    ) {
+        Ok(info) => Outcome::Ran(info),
+        Err(e) => Outcome::Failed(e),
+    };
+}
+
+/// Fold a compute-phase delta into the global stats. Counters are sums;
+/// prints append in merge (= core-index = sequential emission) order.
+/// `cycles` is deliberately untouched — the engine sets it once at the
+/// end — and `sanitize_reports` only ever flow through the commit phase
+/// (they come from memory-class instructions), so the append is a no-op
+/// kept for shape-completeness.
+fn merge_stats(into: &mut SimStats, from: &mut SimStats) {
+    into.instrs += from.instrs;
+    into.thread_instrs += from.thread_instrs;
+    into.splits += from.splits;
+    into.joins += from.joins;
+    into.preds += from.preds;
+    into.tmcs += from.tmcs;
+    into.barriers_executed += from.barriers_executed;
+    into.warp_ops += from.warp_ops;
+    into.atomics += from.atomics;
+    into.loads += from.loads;
+    into.stores += from.stores;
+    into.mem_requests += from.mem_requests;
+    into.l1_hits += from.l1_hits;
+    into.l1_misses += from.l1_misses;
+    into.l2_hits += from.l2_hits;
+    into.l2_misses += from.l2_misses;
+    into.local_accesses += from.local_accesses;
+    into.barrier_stall_cycles += from.barrier_stall_cycles;
+    into.prints.append(&mut from.prints);
+    into.sanitize_reports.append(&mut from.sanitize_reports);
+}
+
+/// Shared body of the hang diagnostics (see [`Gpu::hang_report`]).
+fn hang_report_cores<'a>(
+    cores: impl Iterator<Item = &'a Core>,
+    pc_loc: &[Option<Loc>],
+) -> String {
+    let mut s = String::new();
+    for c in cores {
+        for (wi, w) in c.warps.iter().enumerate() {
+            if !w.active {
+                continue;
+            }
+            let line = pc_loc
+                .get(w.pc as usize)
                 .copied()
                 .flatten()
-                .map(|l| l.line);
+                .map(|l| format!(" (source line {})", l.line))
+                .unwrap_or_default();
+            s.push_str(&format!(
+                "\n  core {} warp {}: pc {}{} [{}]",
+                c.id,
+                wi,
+                w.pc,
+                line,
+                if w.at_barrier {
+                    "parked at barrier"
+                } else {
+                    "active"
+                }
+            ));
         }
-        Ok(stats)
+    }
+    s
+}
+
+/// [`hang_report_cores`] over the parallel engine's slots (locked one
+/// at a time; the pool is parked, so the locks are uncontended).
+fn hang_report_slots(slots: &[Mutex<Slot<'_>>], pc_loc: &[Option<Loc>]) -> String {
+    let mut s = String::new();
+    for slot in slots {
+        let slot = slot.lock().unwrap();
+        s.push_str(&hang_report_cores(std::iter::once(&*slot.core), pc_loc));
+    }
+    s
+}
+
+/// Stores the exit sentinel into the barrier epoch on drop, waking and
+/// retiring every parked worker — the scope join then cannot deadlock,
+/// whichever path (completion, error, panic) left the coordinator loop.
+struct SentinelGuard<'a> {
+    epoch: &'a AtomicU64,
+}
+
+impl Drop for SentinelGuard<'_> {
+    fn drop(&mut self) {
+        self.epoch.store(u64::MAX, Ordering::Release);
     }
 }
 
@@ -443,6 +815,63 @@ kernel void rev(global int* a, int n) {
             assert_eq!(c_on.issue_cycles, c_off.issue_cycles);
             assert_eq!(c_on.stalls, c_off.stalls, "stall attribution must match");
         }
+    }
+
+    /// The parallel tick engine follows the same differential discipline
+    /// as fast-forward: any worker count is bit-identical to sequential
+    /// in cycles, stats, results, prints and profiler attribution.
+    #[test]
+    fn threads_bit_identical() {
+        let src = r#"
+kernel void rev(global int* a, int n) {
+    local int tile[64];
+    int l = get_local_id(0);
+    int g = get_global_id(0);
+    tile[l] = a[g];
+    barrier(0);
+    if (g < n) a[g] = tile[63 - l] + a[g] / 3;
+}
+"#;
+        let img = compile(src, OptLevel::O3);
+        let run_with = |threads: usize, profile: bool| {
+            let cfg = SimConfig {
+                threads,
+                ..SimConfig::default()
+            };
+            let mut gpu = Gpu::load(&img, cfg);
+            let a = gpu.alloc(128 * 4);
+            for i in 0..128u32 {
+                gpu.mem.write_u32(a + i * 4, i * 3).unwrap();
+            }
+            write_args(&mut gpu, &img, [2, 1, 1], [64, 1, 1], &[a, 128]);
+            let mut prof = profile.then(|| {
+                crate::prof::counters::Profiler::new(img.code.len(), gpu.cfg.num_cores as usize)
+            });
+            let stats = gpu.run_profiled(prof.as_mut()).unwrap();
+            let out: Vec<u32> = (0..128).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+            (stats, out, prof)
+        };
+        let (s_1, out_1, prof_1) = run_with(1, true);
+        for threads in [2usize, 3, 4] {
+            let (s_n, out_n, prof_n) = run_with(threads, true);
+            assert_eq!(s_n.cycles, s_1.cycles, "threads={threads} changed the cycle count");
+            assert_eq!(s_n.instrs, s_1.instrs, "threads={threads}");
+            assert_eq!(s_n.l1_hits, s_1.l1_hits, "threads={threads}");
+            assert_eq!(s_n.l2_misses, s_1.l2_misses, "threads={threads}");
+            assert_eq!(s_n.local_accesses, s_1.local_accesses, "threads={threads}");
+            assert_eq!(out_n, out_1, "threads={threads} changed device results");
+            let (p_1, p_n) = (prof_1.as_ref().unwrap(), prof_n.as_ref().unwrap());
+            for (c_1, c_n) in p_1.cores.iter().zip(p_n.cores.iter()) {
+                assert_eq!(c_n.total(), s_1.cycles, "ledger must sum to cycles");
+                assert_eq!(c_n.issue_cycles, c_1.issue_cycles, "threads={threads}");
+                assert_eq!(c_n.stalls, c_1.stalls, "threads={threads} stall attribution");
+            }
+        }
+        // threads == 0 resolves to the host's available parallelism and
+        // stays on the same invariant.
+        let (s_auto, out_auto, _) = run_with(0, false);
+        assert_eq!(s_auto.cycles, s_1.cycles);
+        assert_eq!(out_auto, out_1);
     }
 
     /// The sanitizer is a pure observer: cycle counts, stats and device

@@ -92,6 +92,25 @@ pub struct SimConfig {
     /// touch the timing model — the same differential discipline as
     /// `fast_forward` and `sanitize`.
     pub faults: FaultPlan,
+    /// Host worker threads stepping cores inside one simulated cycle.
+    /// A pure host-side (wall-clock) knob with the same discipline as
+    /// `fast_forward`: cycles, results, profiler attribution, fault
+    /// firing and sanitizer reports are bit-identical for any value
+    /// (see `docs/PARALLELISM.md`). 1 = sequential tick loop (the
+    /// default), 0 = one worker per available hardware thread.
+    pub threads: usize,
+}
+
+/// Resolve a requested `threads` count: 0 means "use the host's
+/// available parallelism", anything else passes through (minimum 1).
+pub fn effective_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
 }
 
 impl Default for SimConfig {
@@ -123,6 +142,7 @@ impl SimConfig {
             fast_forward: true,
             sanitize: false,
             faults: FaultPlan::none(),
+            threads: 1,
         }
     }
 

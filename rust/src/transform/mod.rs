@@ -12,4 +12,7 @@ pub mod simplify;
 pub mod strength;
 pub mod structurize;
 
-pub use pass::{run_middle_end, run_middle_end_with, MiddleEndReport, OptConfig, OptLevel};
+pub use pass::{
+    run_middle_end, run_middle_end_with, run_middle_end_with_threads, MiddleEndReport, OptConfig,
+    OptLevel,
+};

@@ -7,7 +7,7 @@ use super::*;
 use crate::analysis::tti::{TargetDivergenceInfo, VortexTti};
 use crate::analysis::{func_args, UniformityOptions};
 use crate::ir::verify::verify_module;
-use crate::ir::{FuncId, Module};
+use crate::ir::{FuncId, Function, Module};
 use std::time::Instant;
 
 /// The cumulative optimization ladder from §5.2 (Figures 7/8).
@@ -164,8 +164,48 @@ pub fn run_middle_end_with(
     cfg: &OptConfig,
     tti: &dyn TargetDivergenceInfo,
 ) -> MiddleEndReport {
+    run_middle_end_with_threads(m, cfg, tti, 1)
+}
+
+/// [`run_middle_end_with`] with the per-function pass stages fanned out
+/// across up to `threads` scoped workers ([`crate::par`]). Functions
+/// are independent for those stages (each touches only its own
+/// [`Function`]), and every counter is a commutative sum, so the
+/// resulting module — and therefore the emitted image — is identical
+/// to the sequential pipeline for any thread count. Module-level
+/// stages (reconstruction, inlining, Algorithm 1, GVN/LICM, divergence
+/// insertion) take the whole module and stay sequential.
+pub fn run_middle_end_with_threads(
+    m: &mut Module,
+    cfg: &OptConfig,
+    tti: &dyn TargetDivergenceInfo,
+    threads: usize,
+) -> MiddleEndReport {
     let mut rep = MiddleEndReport::default();
     let funcs = reachable_funcs(m);
+    let idxs: Vec<usize> = funcs.iter().map(|f| f.idx()).collect();
+    // One per-function pass over every reachable function, parallel when
+    // asked; returns the summed per-function counter.
+    let for_each = |m: &mut Module, pass: &(dyn Fn(&mut Function) -> usize + Sync)| -> usize {
+        if threads <= 1 {
+            let mut total = 0;
+            for &f in &funcs {
+                total += pass(&mut m.funcs[f.idx()]);
+            }
+            total
+        } else {
+            let mut targets: Vec<&mut Function> = m
+                .funcs
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| idxs.contains(i))
+                .map(|(_, func)| func)
+                .collect();
+            crate::par::par_for_each_mut(&mut targets, threads, |_, func| pass(func))
+                .into_iter()
+                .sum()
+        }
+    };
     let timed = |name: &str,
                      m: &mut Module,
                      rep: &mut MiddleEndReport,
@@ -188,9 +228,10 @@ pub fn run_middle_end_with(
 
     // 1. Early cleanup.
     timed("simplify0", m, &mut rep, &mut |m, _| {
-        for &f in &funcs {
-            simplify::simplify(&mut m.funcs[f.idx()]);
-        }
+        for_each(m, &|f| {
+            simplify::simplify(f);
+            0
+        });
     });
     // 2. CFG reconstruction (Recon) then structurization — pre-SSA.
     if cfg.recon {
@@ -202,22 +243,18 @@ pub fn run_middle_end_with(
         });
     }
     timed("structurize", m, &mut rep, &mut |m, rep| {
-        for &f in &funcs {
-            let r = structurize::run(&mut m.funcs[f.idx()]);
-            rep.structurize_dispatchers += r.dispatchers;
-        }
+        rep.structurize_dispatchers += for_each(m, &|f| structurize::run(f).dispatchers);
     });
     // 3. SSA construction.
     timed("mem2reg", m, &mut rep, &mut |m, rep| {
-        for &f in &funcs {
-            rep.allocas_promoted += mem2reg::run(&mut m.funcs[f.idx()]);
-        }
+        rep.allocas_promoted += for_each(m, &mem2reg::run);
     });
     // 4. Main cleanup.
     timed("simplify1", m, &mut rep, &mut |m, _| {
-        for &f in &funcs {
-            simplify::simplify(&mut m.funcs[f.idx()]);
-        }
+        for_each(m, &|f| {
+            simplify::simplify(f);
+            0
+        });
     });
     // 5. Inline small device functions (kernel bodies were already inlined
     //    into dispatchers by the front-end schedule pass).
@@ -225,9 +262,10 @@ pub fn run_middle_end_with(
         for &f in &funcs {
             rep.inlined += inline::inline_into(m, f, Some(cfg.inline_threshold));
         }
-        for &f in &funcs {
-            simplify::simplify(&mut m.funcs[f.idx()]);
-        }
+        for_each(m, &|f| {
+            simplify::simplify(f);
+            0
+        });
     });
     // 6. Algorithm 1 (Uni-Func).
     if cfg.uniformity.uni_func {
@@ -237,9 +275,10 @@ pub fn run_middle_end_with(
     }
     // 7. Canonicalize: single exit, then select normalization.
     timed("single-exit", m, &mut rep, &mut |m, _| {
-        for &f in &funcs {
-            simplify::single_exit(&mut m.funcs[f.idx()]);
-        }
+        for_each(m, &|f| {
+            simplify::single_exit(f);
+            0
+        });
     });
     // Select legality comes from the target's feature set, not the
     // ladder rung alone: no vx_cmov → no select formation, and every
@@ -249,15 +288,11 @@ pub fn run_middle_end_with(
     if zicond {
         // ZiCond: speculate small diamonds into selects (→ vx_cmov).
         timed("select-form", m, &mut rep, &mut |m, rep| {
-            for &f in &funcs {
-                rep.selects_formed += simplify::form_selects(&mut m.funcs[f.idx()]);
-            }
+            rep.selects_formed += for_each(m, &simplify::form_selects);
         });
     }
     timed("select-normalize", m, &mut rep, &mut |m, rep| {
-        for &f in &funcs {
-            rep.selects_expanded += simplify::select_normalize(&mut m.funcs[f.idx()], zicond);
-        }
+        rep.selects_expanded += for_each(m, &|f| simplify::select_normalize(f, zicond));
     });
     // 7b. The O3 rung: redundancy elimination on the canonical CondBr CFG,
     //     before divergence management rewrites loops into PredBr form.
@@ -273,14 +308,13 @@ pub fn run_middle_end_with(
             }
         });
         timed("strength-reduce", m, &mut rep, &mut |m, rep| {
-            for &f in &funcs {
-                rep.strength_reduced += strength::run(&mut m.funcs[f.idx()]);
-            }
+            rep.strength_reduced += for_each(m, &strength::run);
         });
         timed("simplify-o3", m, &mut rep, &mut |m, _| {
-            for &f in &funcs {
-                simplify::simplify(&mut m.funcs[f.idx()]);
-            }
+            for_each(m, &|f| {
+                simplify::simplify(f);
+                0
+            });
         });
     }
     // 8. Divergence-management insertion (Algorithm 2).
@@ -293,9 +327,10 @@ pub fn run_middle_end_with(
     });
     // 9. Final DCE (keep divergence intrinsics: side-effecting).
     timed("dce-final", m, &mut rep, &mut |m, _| {
-        for &f in &funcs {
-            simplify::dce(&mut m.funcs[f.idx()]);
-        }
+        for_each(m, &|f| {
+            simplify::dce(f);
+            0
+        });
     });
     rep
 }

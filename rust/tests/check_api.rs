@@ -71,7 +71,7 @@ fn every_registry_kernel_compiles_under_deny_on_every_target() {
                 .check_local_size([hint[0] as u32, hint[1] as u32, hint[2] as u32])
                 .build()
                 .unwrap();
-            let mut s = Session::new(opts);
+            let s = Session::new(opts);
             s.compile(b.source)
                 .unwrap_or_else(|e| panic!("{target}/{}: {e}", b.name));
             assert!(
@@ -93,7 +93,7 @@ fn buggy_corpus_fires_exactly_its_expected_ids_through_the_driver() {
         ];
         // Warn: compile succeeds, diagnostics recorded on the session,
         // every diagnostic carries the expected id and a source line.
-        let mut s = Session::new(
+        let s = Session::new(
             VoltOptions::builder()
                 .dialect(case.dialect)
                 .check(CheckMode::Warn)
@@ -128,7 +128,7 @@ fn buggy_corpus_fires_exactly_its_expected_ids_through_the_driver() {
             );
         }
         // Deny: typed validation error naming the check id.
-        let mut s = Session::new(
+        let s = Session::new(
             VoltOptions::builder()
                 .dialect(case.dialect)
                 .check(CheckMode::Deny)

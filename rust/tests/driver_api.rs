@@ -25,7 +25,7 @@ kernel void scale(global float* x, float a, int n) {
 /// stream API alone.
 #[test]
 fn two_kernels_from_one_source_both_launch() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let program = session.compile(TWO_KERNELS).unwrap();
     assert_eq!(program.kernel_names(), vec!["init", "scale"]);
 
@@ -68,7 +68,7 @@ fn two_kernels_from_one_source_both_launch() {
 
 #[test]
 fn cache_hits_by_content_and_options() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let p1 = session.compile(TWO_KERNELS).unwrap();
     let p2 = session.compile(TWO_KERNELS).unwrap();
     assert!(Arc::ptr_eq(&p1, &p2), "identical source must hit");
@@ -81,7 +81,7 @@ fn cache_hits_by_content_and_options() {
     assert_eq!(session.cache_stats().misses, 2);
 
     // Same source under different output-relevant options: different key.
-    let mut base = Session::new(
+    let base = Session::new(
         VoltOptions::builder()
             .opt_level(OptLevel::Base)
             .build()
@@ -143,7 +143,7 @@ fn options_validation_rejects_bad_combos() {
 
 #[test]
 fn error_variants_round_trip_their_stage() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
 
     // Frontend: bad syntax carries the line.
     let e = session
@@ -198,7 +198,7 @@ fn error_variants_round_trip_their_stage() {
 
 #[test]
 fn transfer_handles_are_bound_to_their_stream() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let program = session.compile(TWO_KERNELS).unwrap();
     let mut a = session.create_stream(&program);
     let mut b = session.create_stream(&program);
@@ -213,7 +213,7 @@ fn transfer_handles_are_bound_to_their_stream() {
 
 #[test]
 fn odd_length_transfers_are_typed_errors_for_typed_takes() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let program = session.compile(TWO_KERNELS).unwrap();
     let mut st = session.create_stream(&program);
     let buf = st.malloc(64);
@@ -229,7 +229,7 @@ fn odd_length_transfers_are_typed_errors_for_typed_takes() {
 
 #[test]
 fn symbol_writes_are_bounds_checked_at_enqueue() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let program = session
         .compile(
             r#"
@@ -254,7 +254,7 @@ kernel void k(global float* o) {
 /// The CUDA dialect flows through the same session/stream path.
 #[test]
 fn cuda_dialect_session_roundtrip() {
-    let mut session = Session::new(
+    let session = Session::new(
         VoltOptions::builder()
             .dialect(Dialect::Cuda)
             .build()
@@ -291,7 +291,7 @@ __global__ void add2(float* x, int n) {
 /// the mechanism (same Arc, no recompilation side effects).
 #[test]
 fn cache_hit_reuses_the_exact_program() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let cold = std::time::Instant::now();
     let p1 = session.compile(TWO_KERNELS).unwrap();
     let cold_ms = cold.elapsed().as_secs_f64() * 1e3;

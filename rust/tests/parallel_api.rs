@@ -1,0 +1,177 @@
+//! Cross-layer contract of the host parallelism work (ISSUE 9): worker
+//! threads change wall clock, never results.
+//!
+//! * the parallel cycle-barrier simulator is bit-identical to the
+//!   sequential engine on every target, including under the runtime
+//!   sanitizer and the profiler's per-core ledgers;
+//! * concurrent compiles of the same fingerprint through a shared
+//!   [`Session`] dedup to exactly one pipeline run;
+//! * the serve batch drained by a worker pool reports byte-identically
+//!   to the sequential virtual-time ledger.
+
+use std::sync::{Barrier, Mutex};
+
+use volt::backend::emit::SharedMemMapping;
+use volt::coordinator::benchmarks;
+use volt::coordinator::experiments::{run_bench, run_bench_on_threads};
+use volt::driver::{compile_program, CompileTier, Session, VoltOptions};
+use volt::runtime::VoltDevice;
+use volt::serve::{synthetic, ServeConfig, Service};
+use volt::sim::SimConfig;
+use volt::target::TargetDesc;
+use volt::transform::OptLevel;
+
+/// A ladder slice wide enough to cover the engine's interesting corners:
+/// plain streams, shared-memory tiles, barriers, divergence-heavy graph
+/// traversal, and multi-launch iteration.
+const KERNELS: [&str; 8] = [
+    "vecadd",
+    "sgemm",
+    "sgemm_tiled",
+    "transpose",
+    "reduce",
+    "stencil",
+    "bfs",
+    "kmeans",
+];
+
+/// The full `SimStats` rendering — every counter, the print log and the
+/// sanitizer report list. Two runs agree here iff they are bit-identical.
+fn sig(stats: &volt::sim::SimStats) -> String {
+    format!("{stats:?}")
+}
+
+#[test]
+fn parallel_sim_is_bit_identical_on_every_target() {
+    for target_name in ["vortex", "vortex-min"] {
+        let target = TargetDesc::by_name(target_name).unwrap();
+        for name in KERNELS {
+            let b = benchmarks::find(name).unwrap();
+            let base = run_bench_on_threads(&b, &target, OptLevel::O3, 1).unwrap();
+            for threads in [2usize, 4] {
+                let par = run_bench_on_threads(&b, &target, OptLevel::O3, threads).unwrap();
+                assert_eq!(
+                    sig(&par.stats),
+                    sig(&base.stats),
+                    "{name} on {target_name}: {threads}-thread sim diverged from sequential"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sanitizer_verdicts_identical_under_parallel_sim() {
+    // Shared-memory kernels exercise the sanitizer's barrier and
+    // smem-range checks; its report list rides SimStats, so the
+    // signature comparison covers verdict text and ordering.
+    for name in ["reduce", "sgemm_tiled", "stencil"] {
+        let b = benchmarks::find(name).unwrap();
+        let run = |threads: usize| {
+            let cfg = SimConfig {
+                sanitize: true,
+                threads,
+                ..SimConfig::default()
+            };
+            run_bench(&b, OptLevel::O3, true, SharedMemMapping::Local, cfg).unwrap()
+        };
+        let base = run(1);
+        let par = run(4);
+        assert_eq!(
+            sig(&par.stats),
+            sig(&base.stats),
+            "{name}: sanitized 4-thread run diverged from sequential"
+        );
+    }
+}
+
+#[test]
+fn profiler_ledger_identical_under_parallel_sim() {
+    // The profiler's per-core cycle ledgers (stall attribution, PC
+    // samples, hot lines) are the finest-grained observable state the
+    // simulator exposes; they must not notice the worker pool either.
+    for name in ["sgemm", "reduce"] {
+        let b = benchmarks::find(name).unwrap();
+        let run = |threads: usize| {
+            let mut opts = VoltOptions::builder()
+                .dialect(b.dialect)
+                .target_desc(TargetDesc::vortex())
+                .opt_level(OptLevel::O3)
+                .build()
+                .unwrap();
+            opts.sim.threads = threads;
+            let prog = compile_program(b.source, &opts).unwrap();
+            let mut dev = VoltDevice::new(prog.image.clone(), opts.device_config());
+            dev.profiling = true;
+            (b.run)(&mut dev).unwrap();
+            (sig(&dev.total_stats), format!("{:?}", dev.take_profiles()))
+        };
+        let (base_stats, base_prof) = run(1);
+        let (par_stats, par_prof) = run(4);
+        assert_eq!(par_stats, base_stats, "{name}: stats diverged under profiler");
+        assert_eq!(par_prof, base_prof, "{name}: profile ledgers diverged");
+    }
+}
+
+#[test]
+fn concurrent_compiles_dedup_to_one_pipeline_run() {
+    let b = benchmarks::find("vecadd").unwrap();
+    let session = Session::new(VoltOptions {
+        dialect: b.dialect,
+        ..VoltOptions::default()
+    });
+    let barrier = Barrier::new(4);
+    let results = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            scope.spawn(|| {
+                barrier.wait();
+                let r = session.compile_traced(b.source).unwrap();
+                results.lock().unwrap().push(r);
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), 4);
+    let misses = results
+        .iter()
+        .filter(|(_, t)| *t == CompileTier::Miss)
+        .count();
+    assert_eq!(misses, 1, "exactly one racer may run the pipeline");
+    assert!(
+        results
+            .iter()
+            .all(|(p, _)| std::sync::Arc::ptr_eq(p, &results[0].0)),
+        "all racers must share one Program"
+    );
+    let st = session.cache_stats();
+    assert_eq!((st.misses, st.hits), (1, 3));
+    assert_eq!(session.cached_programs(), 1);
+}
+
+fn serve_json(count: usize, cfg: ServeConfig) -> String {
+    let reqs = synthetic(count, cfg.seed);
+    Service::new(cfg).run(reqs).render_json()
+}
+
+#[test]
+fn threaded_serve_report_is_schedule_equivalent() {
+    for devices in [2usize, 4] {
+        let cfg = |threads: usize| ServeConfig {
+            devices,
+            retries: 1,
+            seed: 11,
+            threads,
+            ..ServeConfig::default()
+        };
+        let sequential = serve_json(64, cfg(1));
+        volt::prof::validate_json(&sequential).unwrap();
+        for threads in [2usize, 4, 0] {
+            assert_eq!(
+                serve_json(64, cfg(threads)),
+                sequential,
+                "serve report must be byte-identical at {threads} threads ({devices} devices)"
+            );
+        }
+    }
+}

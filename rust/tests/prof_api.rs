@@ -146,7 +146,7 @@ fn profiling_is_deterministic_and_invisible() {
     // with profiling off and on.
     let src = DIVERGE_SRC;
     let run = |profiling: bool| -> (u64, Vec<u32>, Vec<u32>) {
-        let mut s = Session::new(
+        let s = Session::new(
             VoltOptions::builder().profiling(profiling).build().unwrap(),
         );
         let p = s.compile(src).unwrap();
@@ -250,7 +250,7 @@ kernel void pressure(global int* out, int n) {
         ..volt::target::TargetDesc::vortex()
     };
     let run = |fast_forward: bool| {
-        let mut s = Session::new(
+        let s = Session::new(
             VoltOptions::builder()
                 .profiling(true)
                 .opt_level(OptLevel::O3)

@@ -25,7 +25,7 @@ kernel void bsum(global float* in, global float* out) {
 "#;
 
 fn compile(src: &str) -> (std::sync::Arc<volt::driver::Program>, SimConfig) {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let prog = session.compile(src).unwrap();
     (prog, session.options().device_config())
 }
@@ -220,7 +220,7 @@ fn reset_then_rerun_is_bit_identical_to_fresh_device() {
 /// cause; `recover()` hands the fault back once and restores service.
 #[test]
 fn stream_containment_and_recover_roundtrip() {
-    let mut session = Session::new(VoltOptions::builder().build().unwrap());
+    let session = Session::new(VoltOptions::builder().build().unwrap());
     let prog = session.compile(INC).unwrap();
     let mut st = session.create_stream(&prog);
     st.device_mut().gpu.faults =
@@ -333,13 +333,13 @@ fn disk_cache_survives_sessions_and_contains_corruption() {
 
     let opts = || VoltOptions::builder().build().unwrap();
     let (fp, words) = {
-        let mut s1 = Session::with_disk_cache(opts(), &dir, 0);
+        let s1 = Session::with_disk_cache(opts(), &dir, 0);
         let p = s1.compile(INC).unwrap();
         (p.fingerprint, p.image.words.clone())
     };
 
     // Fresh session, same directory: served from disk, zero compiles.
-    let mut s2 = Session::with_disk_cache(opts(), &dir, 0);
+    let s2 = Session::with_disk_cache(opts(), &dir, 0);
     let p2 = s2.compile(INC).unwrap();
     assert_eq!(p2.fingerprint, fp);
     assert_eq!(p2.image.words, words);
@@ -348,23 +348,23 @@ fn disk_cache_survives_sessions_and_contains_corruption() {
 
     // Flip one byte in the stored entry: the next session must detect
     // it, quarantine the file, and recompile to an identical program.
-    let entry = s2.disk_cache().unwrap().entry_path(fp);
+    let entry = s2.disk_entry_path(fp).unwrap();
     let mut bytes = std::fs::read(&entry).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x20;
     std::fs::write(&entry, &bytes).unwrap();
 
-    let mut s3 = Session::with_disk_cache(opts(), &dir, 0);
+    let s3 = Session::with_disk_cache(opts(), &dir, 0);
     let p3 = s3.compile(INC).unwrap();
     assert_eq!(p3.fingerprint, fp);
     assert_eq!(p3.image.words, words, "recompile must be bit-identical");
     let cs = s3.cache_stats();
     assert_eq!((cs.disk_corrupt, cs.disk_hits, cs.misses), (1, 0, 1));
-    assert_eq!(s3.disk_cache().unwrap().quarantined(), 1);
+    assert_eq!(s3.disk_quarantined(), Some(1));
     assert!(!entry.exists(), "corrupt entry must leave the cache dir");
 
     // The recompile re-stored the entry: a fourth session hits again.
-    let mut s4 = Session::with_disk_cache(opts(), &dir, 0);
+    let s4 = Session::with_disk_cache(opts(), &dir, 0);
     s4.compile(INC).unwrap();
     assert_eq!(s4.cache_stats().disk_hits, 1);
 

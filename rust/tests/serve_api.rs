@@ -244,8 +244,8 @@ const K3: &str = "kernel void k3(global int* x) { int i = get_global_id(0); x[i]
 fn sessions_share_a_disk_dir_with_exact_stats_and_lru_eviction() {
     let dir = tmpdir("shared");
     let opts = VoltOptions::default;
-    let mut a = Session::with_disk_cache(opts(), &dir, 0);
-    let mut b = Session::with_disk_cache(opts(), &dir, 0);
+    let a = Session::with_disk_cache(opts(), &dir, 0);
+    let b = Session::with_disk_cache(opts(), &dir, 0);
 
     // Interleave: A compiles, B rides A's stores, then B hits its own
     // mem tier.
@@ -259,25 +259,33 @@ fn sessions_share_a_disk_dir_with_exact_stats_and_lru_eviction() {
     assert_eq!((sa.misses, sa.hits, sa.disk_hits), (2, 0, 0));
     let sb = b.cache_stats();
     assert_eq!((sb.misses, sb.hits, sb.disk_hits), (0, 1, 2));
-    assert_eq!(a.disk_cache().unwrap().quarantined(), 0);
-    assert_eq!(b.disk_cache().unwrap().quarantined(), 0);
+    assert_eq!(a.disk_quarantined(), Some(0));
+    assert_eq!(b.disk_quarantined(), Some(0));
 
     // K1/K2/K3 are the same shape, so their entries are the same size:
     // a cap of two entries (plus one byte) forces exactly one eviction.
-    let dc = a.disk_cache().unwrap();
-    let s1 = std::fs::metadata(dc.entry_path(p1.fingerprint)).unwrap().len();
-    let s2 = std::fs::metadata(dc.entry_path(p2.fingerprint)).unwrap().len();
+    let s1 = std::fs::metadata(a.disk_entry_path(p1.fingerprint).unwrap())
+        .unwrap()
+        .len();
+    let s2 = std::fs::metadata(a.disk_entry_path(p2.fingerprint).unwrap())
+        .unwrap()
+        .len();
     assert_eq!(s1, s2, "equal-shape kernels must store equal-size entries");
 
-    let mut c = Session::with_disk_cache(opts(), &dir, s1 + s2 + 1);
+    let c = Session::with_disk_cache(opts(), &dir, s1 + s2 + 1);
     c.compile(K1).unwrap(); // disk hit — touches K1, leaving K2 as LRU
     c.compile(K3).unwrap(); // miss + store — over cap, evicts K2
     let sc = c.cache_stats();
     assert_eq!((sc.misses, sc.disk_hits, sc.disk_evicted), (1, 1, 1));
-    let dc = c.disk_cache().unwrap();
     let key3 = fingerprint(K3, &opts());
-    assert!(!dc.entry_path(p2.fingerprint).exists(), "LRU entry must go");
-    assert!(dc.entry_path(p1.fingerprint).exists(), "touched entry must stay");
-    assert!(dc.entry_path(key3).exists());
+    assert!(
+        !c.disk_entry_path(p2.fingerprint).unwrap().exists(),
+        "LRU entry must go"
+    );
+    assert!(
+        c.disk_entry_path(p1.fingerprint).unwrap().exists(),
+        "touched entry must stay"
+    );
+    assert!(c.disk_entry_path(key3).unwrap().exists());
     let _ = std::fs::remove_dir_all(&dir);
 }

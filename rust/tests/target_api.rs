@@ -33,7 +33,7 @@ fn compile_on(target: &str, opt: OptLevel, src: &str) -> (Session, Arc<Program>)
         .opt_level(opt)
         .build()
         .unwrap();
-    let mut s = Session::new(opts);
+    let s = Session::new(opts);
     let p = s.compile(src).unwrap();
     (s, p)
 }
@@ -130,7 +130,7 @@ fn hw_warp_builtins_on_vortex_min_are_typed_errors() {
             .warp_hw(true)
             .build()
             .unwrap();
-        let mut s = Session::new(opts);
+        let s = Session::new(opts);
         let e = s.compile(src).unwrap_err();
         match &e {
             VoltError::Backend(be) => {
@@ -147,7 +147,7 @@ fn hw_warp_builtins_on_vortex_min_are_typed_errors() {
             .warp_hw(false)
             .build()
             .unwrap();
-        let mut s = Session::new(opts);
+        let s = Session::new(opts);
         let p = s.compile(src).unwrap();
         let mut st = s.create_stream(&p);
         let buf = st.malloc(32 * 4);
@@ -176,12 +176,12 @@ fn binary_cache_is_keyed_by_target() {
         "two targets must occupy two cache entries"
     );
     assert_eq!(fingerprint(LADDER_SRC, &vortex), fingerprint(LADDER_SRC, &vortex));
-    let mut s = Session::new(vortex);
+    let s = Session::new(vortex);
     let p1 = s.compile(LADDER_SRC).unwrap();
     let p2 = s.compile(LADDER_SRC).unwrap();
     assert!(Arc::ptr_eq(&p1, &p2), "same target: cache hit");
     assert_eq!(s.cache_stats().hits, 1);
-    let mut sm = Session::new(min);
+    let sm = Session::new(min);
     let pm = sm.compile(LADDER_SRC).unwrap();
     assert_ne!(p1.fingerprint, pm.fingerprint);
     assert_ne!(
@@ -222,7 +222,7 @@ fn profiles_and_traces_carry_the_target() {
         .profiling(true)
         .build()
         .unwrap();
-    let mut s = Session::new(opts);
+    let s = Session::new(opts);
     let p = s.compile(LADDER_SRC).unwrap();
     let mut st = s.create_stream(&p);
     let buf = st.malloc(128 * 4);
@@ -257,7 +257,7 @@ fn geometry_above_caps_is_invalid_options() {
     assert!(e.to_string().contains("num_cores"), "{e}");
     // Launch geometry still validates against the (capped) device.
     let opts = VoltOptions::builder().target("vortex-min").build().unwrap();
-    let mut s = Session::new(opts);
+    let s = Session::new(opts);
     let p = s.compile(LADDER_SRC).unwrap();
     let mut st = s.create_stream(&p);
     let buf = st.malloc(4);
