@@ -1,18 +1,21 @@
-//! Parallel-simulation acceptance gate: N host threads must change wall
-//! clock only, never results.
+//! Simulation-speed acceptance gate: host threads and the warp JIT must
+//! change wall clock only, never results.
 //!
-//! Runs sgemm, sgemm_tiled, reduce and bfs at O3 on `vortex` with the
-//! simulator's host worker pool at 1, 2 and 4 threads (vortex has four
-//! cores, so 4 threads fully engages the cycle-barrier engine). Each
-//! configuration takes the best wall time over several repeats and
-//! reports throughput as warp-instructions per second.
+//! Runs sgemm, sgemm_tiled, reduce and bfs at O3 on `vortex` over the
+//! full jit × threads matrix — the trace-caching warp JIT off and on,
+//! each with the simulator's host worker pool at 1, 2 and 4 threads
+//! (vortex has four cores, so 4 threads fully engages the cycle-barrier
+//! engine). Each configuration takes the best wall time over several
+//! repeats and reports throughput as warp-instructions per second.
 //!
 //! Gates (non-zero exit on failure):
-//! * identity — the full `SimStats` of every 2- and 4-thread run is
-//!   bit-identical to the 1-thread run of the same kernel (cycles,
-//!   instruction counts, cache counters, prints, everything);
-//! * throughput — 4-thread sgemm is at least as fast as 1-thread
-//!   (best-of-repeats, so scheduler noise does not decide the gate).
+//! * identity — the full `SimStats` of every configuration is
+//!   bit-identical to the jit-off 1-thread run of the same kernel
+//!   (cycles, instruction counts, cache counters, prints, everything);
+//! * jit throughput — jit-on sgemm at 1 thread is at least as fast as
+//!   jit-off at 1 thread (best-of-repeats on both sides);
+//! * parallel throughput — jit-on 4-thread sgemm is at least as fast
+//!   as jit-on 1-thread.
 //!
 //! Writes BENCH_sim_throughput.json (schema-checked by the in-tree JSON
 //! validator) for the CI artifact.
@@ -21,93 +24,118 @@
 
 use std::time::Instant;
 use volt::coordinator::benchmarks;
-use volt::coordinator::experiments::run_bench_on_threads;
+use volt::coordinator::experiments::run_bench_on_configured;
 use volt::target::TargetDesc;
 use volt::transform::OptLevel;
 
 const KERNELS: [&str; 4] = ["sgemm", "sgemm_tiled", "reduce", "bfs"];
+const JITS: [bool; 2] = [false, true];
 const THREADS: [usize; 3] = [1, 2, 4];
 const REPEATS: u32 = 3;
 
 struct Row {
+    jit: bool,
     threads: usize,
     best_wall_s: f64,
+    wall_ms: f64,
     cycles: u64,
     warp_instrs: u64,
-    winstrs_per_sec: f64,
+    instrs_per_sec: f64,
     identical: bool,
 }
 
 fn main() {
     let target = TargetDesc::vortex();
     let mut failed = false;
+    let mut sgemm_jit_speedup = 0.0f64;
     let mut sgemm_speedup_4t = 0.0f64;
     let mut kernels_json = String::new();
 
     for (ki, &name) in KERNELS.iter().enumerate() {
         let b = benchmarks::find(name).expect(name);
         let mut baseline_sig = String::new();
-        let mut baseline_tput = 0.0f64;
+        let mut sgemm_off_wall = f64::INFINITY;
+        let mut sgemm_on_1t_tput = 0.0f64;
         let mut rows: Vec<Row> = vec![];
 
-        for &threads in &THREADS {
-            let mut best_wall = f64::INFINITY;
-            let mut sig = String::new();
-            let mut cycles = 0u64;
-            let mut instrs = 0u64;
-            for _ in 0..REPEATS {
-                let t0 = Instant::now();
-                let r = run_bench_on_threads(&b, &target, OptLevel::O3, threads)
-                    .unwrap_or_else(|e| panic!("{name} @ {threads} threads: {e}"));
-                let wall = t0.elapsed().as_secs_f64();
-                best_wall = best_wall.min(wall);
-                // The Debug rendering covers every SimStats field, the
-                // print log and the sanitizer report list — a one-bit
-                // divergence anywhere shows up here.
-                sig = format!("{:?}", r.stats);
-                cycles = r.stats.cycles;
-                instrs = r.stats.instrs;
+        for &jit in &JITS {
+            for &threads in &THREADS {
+                let mut best_wall = f64::INFINITY;
+                let mut sig = String::new();
+                let mut cycles = 0u64;
+                let mut instrs = 0u64;
+                for _ in 0..REPEATS {
+                    let t0 = Instant::now();
+                    let r = run_bench_on_configured(&b, &target, OptLevel::O3, threads, jit)
+                        .unwrap_or_else(|e| panic!("{name} jit={jit} @ {threads} threads: {e}"));
+                    let wall = t0.elapsed().as_secs_f64();
+                    best_wall = best_wall.min(wall);
+                    // The Debug rendering covers every SimStats field, the
+                    // print log and the sanitizer report list — a one-bit
+                    // divergence anywhere shows up here.
+                    sig = format!("{:?}", r.stats);
+                    cycles = r.stats.cycles;
+                    instrs = r.stats.instrs;
+                }
+                let tput = instrs as f64 / best_wall.max(1e-12);
+                // Baseline configuration: jit off, 1 thread (first in
+                // iteration order) — the pure interpreter.
+                let identical = if !jit && threads == 1 {
+                    baseline_sig = sig;
+                    true
+                } else {
+                    sig == baseline_sig
+                };
+                if !identical {
+                    eprintln!(
+                        "FAIL: {name} diverged at jit={jit} threads={threads} \
+                         vs jit-off 1-thread"
+                    );
+                    failed = true;
+                }
+                if name == "sgemm" && threads == 1 {
+                    if jit {
+                        sgemm_jit_speedup = sgemm_off_wall / best_wall.max(1e-12);
+                        sgemm_on_1t_tput = tput;
+                    } else {
+                        sgemm_off_wall = best_wall;
+                    }
+                }
+                if name == "sgemm" && jit && threads == 4 {
+                    sgemm_speedup_4t = tput / sgemm_on_1t_tput.max(1e-12);
+                }
+                println!(
+                    "{name:<12} jit {} threads {threads}: {cycles:>9} cycles, \
+                     {instrs:>9} warp-instrs, best {best_wall:.4}s, {tput:>12.0} winstrs/s{}",
+                    if jit { "on " } else { "off" },
+                    if identical { "" } else { "  << DIVERGED" }
+                );
+                rows.push(Row {
+                    jit,
+                    threads,
+                    best_wall_s: best_wall,
+                    wall_ms: best_wall * 1e3,
+                    cycles,
+                    warp_instrs: instrs,
+                    instrs_per_sec: tput,
+                    identical,
+                });
             }
-            let tput = instrs as f64 / best_wall.max(1e-12);
-            let identical = if threads == 1 {
-                baseline_sig = sig;
-                baseline_tput = tput;
-                true
-            } else {
-                sig == baseline_sig
-            };
-            if !identical {
-                eprintln!("FAIL: {name} diverged at {threads} threads vs 1 thread");
-                failed = true;
-            }
-            if name == "sgemm" && threads == 4 {
-                sgemm_speedup_4t = tput / baseline_tput.max(1e-12);
-            }
-            println!(
-                "{name:<12} threads {threads}: {cycles:>9} cycles, {instrs:>9} warp-instrs, \
-                 best {best_wall:.4}s, {tput:>12.0} winstrs/s{}",
-                if identical { "" } else { "  << DIVERGED" }
-            );
-            rows.push(Row {
-                threads,
-                best_wall_s: best_wall,
-                cycles,
-                warp_instrs: instrs,
-                winstrs_per_sec: tput,
-                identical,
-            });
         }
 
         kernels_json.push_str(&format!("    {{\"name\": \"{name}\", \"rows\": [\n"));
         for (i, r) in rows.iter().enumerate() {
             kernels_json.push_str(&format!(
-                "      {{\"threads\": {}, \"best_wall_s\": {:.6}, \"cycles\": {}, \
-                 \"warp_instrs\": {}, \"winstrs_per_sec\": {:.1}, \"identical\": {}}}{}\n",
+                "      {{\"jit\": {}, \"threads\": {}, \"best_wall_s\": {:.6}, \
+                 \"wall_ms\": {:.3}, \"cycles\": {}, \"warp_instrs\": {}, \
+                 \"instrs_per_sec\": {:.1}, \"identical\": {}}}{}\n",
+                r.jit,
                 r.threads,
                 r.best_wall_s,
+                r.wall_ms,
                 r.cycles,
                 r.warp_instrs,
-                r.winstrs_per_sec,
+                r.instrs_per_sec,
                 r.identical,
                 if i + 1 == rows.len() { "" } else { "," }
             ));
@@ -120,20 +148,28 @@ fn main() {
 
     let json = format!(
         "{{\n  \"bench\": \"sim_throughput\",\n  \"target\": \"{}\",\n  \"repeats\": {},\n  \
-         \"sgemm_speedup_4t\": {:.4},\n  \"kernels\": [\n{}  ]\n}}\n",
-        target.name, REPEATS, sgemm_speedup_4t, kernels_json
+         \"sgemm_jit_speedup\": {:.4},\n  \"sgemm_speedup_4t\": {:.4},\n  \"kernels\": [\n{}  ]\n}}\n",
+        target.name, REPEATS, sgemm_jit_speedup, sgemm_speedup_4t, kernels_json
     );
     volt::prof::validate_json(&json).expect("BENCH_sim_throughput.json must be valid JSON");
     std::fs::write("BENCH_sim_throughput.json", &json).expect("write BENCH_sim_throughput.json");
     println!(
-        "wrote BENCH_sim_throughput.json ({} kernels x {:?} threads)",
+        "wrote BENCH_sim_throughput.json ({} kernels x jit {:?} x threads {:?})",
         KERNELS.len(),
+        JITS,
         THREADS
     );
 
+    if sgemm_jit_speedup < 1.0 {
+        eprintln!(
+            "FAIL: jit-on sgemm wall is {sgemm_jit_speedup:.3}x the jit-off run at 1 thread \
+             (gate: >= 1.0x best-of-{REPEATS})"
+        );
+        failed = true;
+    }
     if sgemm_speedup_4t < 1.0 {
         eprintln!(
-            "FAIL: 4-thread sgemm throughput is {sgemm_speedup_4t:.3}x the 1-thread run \
+            "FAIL: 4-thread jit-on sgemm throughput is {sgemm_speedup_4t:.3}x the 1-thread run \
              (gate: >= 1.0x best-of-{REPEATS})"
         );
         failed = true;
@@ -142,7 +178,8 @@ fn main() {
         std::process::exit(1);
     }
     println!(
-        "PASS: all parallel runs bit-identical; 4-thread sgemm at {sgemm_speedup_4t:.2}x \
-         1-thread throughput"
+        "PASS: all jit/thread configurations bit-identical; sgemm jit speedup {:.2}x, \
+         4-thread scaling {:.2}x",
+        sgemm_jit_speedup, sgemm_speedup_4t
     );
 }

@@ -164,6 +164,21 @@ pub fn run_bench_on_threads(
     opt: OptLevel,
     threads: usize,
 ) -> Result<RunResult, VoltError> {
+    run_bench_on_configured(b, target, opt, threads, true)
+}
+
+/// [`run_bench_on_threads`] with the simulator's trace JIT
+/// ([`SimConfig::jit`]) explicitly on or off — the bench matrix axis of
+/// `benches/sim_throughput.rs`. Like `threads`, the knob only changes
+/// wall clock: stats, results and profiles are bit-identical either
+/// way (`rust/tests/jit_api.rs`).
+pub fn run_bench_on_configured(
+    b: &Benchmark,
+    target: &TargetDesc,
+    opt: OptLevel,
+    threads: usize,
+    jit: bool,
+) -> Result<RunResult, VoltError> {
     // One derivation of "the profile's defaults": the builder's
     // target_desc() sets geometry and warp lowering from the profile.
     let mut opts = VoltOptions::builder()
@@ -172,6 +187,7 @@ pub fn run_bench_on_threads(
         .opt_level(opt)
         .build()?;
     opts.sim.threads = threads;
+    opts.sim.jit = jit;
     let prog = compile_program(b.source, &opts)?;
     let mut dev = VoltDevice::new(prog.image.clone(), opts.device_config());
     (b.run)(&mut dev).map_err(|msg| VoltError::Validation {

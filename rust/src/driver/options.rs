@@ -171,9 +171,12 @@ impl VoltOptions {
 
     /// Fold every field that affects the produced binary into the cache
     /// fingerprint (FNV-1a). Simulator geometry and `verify_ir` do not
-    /// change the image and are deliberately excluded; the target (name,
-    /// features, shape, map) is included, so identical source compiled
-    /// for two targets yields two distinct cache entries.
+    /// change the image and are deliberately excluded — the whole `sim`
+    /// struct stays out, so pure host-side execution knobs
+    /// (`fast_forward`, `threads`, the trace JIT's `jit`) can never
+    /// split the cache; the target (name, features, shape, map) is
+    /// included, so identical source compiled for two targets yields
+    /// two distinct cache entries.
     pub(crate) fn hash_into(&self, h: &mut Fnv1a) {
         h.bytes(&self.target.fingerprint_bytes());
         h.byte(match self.dialect {
@@ -637,6 +640,20 @@ mod tests {
         }
         .hash_into(&mut c);
         assert_eq!(a.finish(), c.finish());
+        // Host-side execution knobs (fast-forward, worker threads, the
+        // trace JIT) never split the cache either.
+        let mut d = Fnv1a::new();
+        VoltOptions {
+            sim: SimConfig {
+                jit: false,
+                fast_forward: false,
+                threads: 4,
+                ..SimConfig::default()
+            },
+            ..VoltOptions::default()
+        }
+        .hash_into(&mut d);
+        assert_eq!(a.finish(), d.finish(), "sim knobs must not change the key");
     }
 
     #[test]

@@ -28,7 +28,10 @@ commands:
                   [--no-fast-forward] [--sanitize]       run a registry benchmark
                   [--inject SPEC] [--retries N]          (prints sim throughput;
                   [--backoff CYCLES] [--cache-dir DIR]   --no-fast-forward disables
-                  [--threads N]                          the idle-cycle skip;
+                  [--threads N] [--no-jit]               the idle-cycle skip;
+                                                         --no-jit the trace-caching
+                                                         warp JIT (docs/SIMJIT.md) —
+                                                         both bit-identical knobs;
                                                          --sanitize enables the
                                                          shadow-memory sanitizer;
                                                          --inject arms deterministic
@@ -125,6 +128,7 @@ const RUN_FLAGS: &[&str] = &[
     "--sw-warp",
     "--smem-global",
     "--no-fast-forward",
+    "--no-jit",
     "--sanitize",
     "--inject",
     "--retries",
@@ -338,6 +342,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let target = common.target;
     let fast_forward = !flag(args, "--no-fast-forward");
     let sanitize = flag(args, "--sanitize");
+    let jit = !flag(args, "--no-jit");
 
     // volt::resilience path: deterministic fault injection, launch-level
     // recovery, and/or the persistent compile cache.
@@ -349,10 +354,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 target.name
             ));
         }
-        if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward || sanitize {
+        if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward || sanitize
+            || !jit
+        {
             return Err(
                 "--inject/--retries/--cache-dir cannot be combined with \
-                 --sw-warp/--smem-global/--no-fast-forward/--sanitize"
+                 --sw-warp/--smem-global/--no-fast-forward/--sanitize/--no-jit"
                     .to_string(),
             );
         }
@@ -404,6 +411,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         let sim = SimConfig {
             fast_forward,
             sanitize,
+            jit,
             threads: common.threads,
             ..SimConfig::default()
         };
@@ -411,7 +419,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     } else {
         // Non-default target: geometry and warp lowering follow the
         // profile (vortex-min has no hardware shfl/vote). Refuse flag
-        // combinations the profile path would silently ignore.
+        // combinations the profile path would silently ignore;
+        // --no-jit and --threads are host-side knobs, available on
+        // every target.
         if flag(args, "--sw-warp") || flag(args, "--smem-global") || !fast_forward || sanitize {
             return Err(format!(
                 "--sw-warp/--smem-global/--no-fast-forward/--sanitize are not configurable \
@@ -419,7 +429,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 target.name
             ));
         }
-        experiments::run_bench_on_threads(&b, &target, level, common.threads)?
+        experiments::run_bench_on_configured(&b, &target, level, common.threads, jit)?
     };
     let wall_s = t0.elapsed().as_secs_f64();
     let s = &r.stats;
@@ -430,11 +440,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("benchmark {name} @ {:?} on {}: PASS", level, target.name);
     println!(
         "  sim throughput: {:.0} warp-instrs/sec wall ({:.2}s sim of {:.2}s total, \
-         fast-forward {}, threads {})",
+         fast-forward {}, jit {}, threads {})",
         s.instrs as f64 / sim_wall,
         sim_wall,
         wall_s,
         if fast_forward { "on" } else { "off" },
+        if jit { "on" } else { "off" },
         common.threads
     );
     println!(
@@ -937,6 +948,10 @@ mod tests {
         let e = reject_unknown_flags(&argv(&["vecadd", "--retires", "2"]), RUN_FLAGS).unwrap_err();
         assert!(e.contains("--retires"), "{e}");
         reject_unknown_flags(&argv(&["vecadd", "--retries", "2"]), RUN_FLAGS).unwrap();
+        // The JIT toggle is in the run allowlist; typos still reject.
+        reject_unknown_flags(&argv(&["vecadd", "--no-jit"]), RUN_FLAGS).unwrap();
+        assert!(reject_unknown_flags(&argv(&["vecadd", "--nojit"]), RUN_FLAGS).is_err());
+        assert!(reject_unknown_flags(&argv(&["saxpy.cl", "--no-jit"]), COMPILE_FLAGS).is_err());
         // Valued flags swallow their value, so a file named like a flag
         // still parses: `--json --weird` is a filename, not a flag.
         reject_unknown_flags(

@@ -91,6 +91,12 @@ impl Profiler {
         }
     }
 
+    /// One issue slot executed at `cycle`. Called once per issued
+    /// instruction by both engines — including every instruction of a
+    /// dispatched JIT trace burst, whose issues the simulator replays
+    /// at their exact interpreter cycles ([`crate::sim::trace`]), so
+    /// per-PC issue counts, latency attribution and the
+    /// cycles-sum-to-total invariant hold with the JIT on or off.
     pub fn record_issue(&mut self, core: usize, pc: u32, cost: u64, cycle: u64) {
         let c = &mut self.cores[core];
         c.issue_cycles += 1;

@@ -7,6 +7,7 @@
 
 use super::fault::FaultState;
 use super::mem::{Cache, GlobalMem, ShadowLocal};
+use super::trace::{self, ReplayQueue, ReplayTick, TraceCache};
 use super::{SimConfig, SimError, SimStats, TrapKind};
 use crate::backend::isa::{CsrId, MachInst, Op, OpClass};
 use crate::ir::interp::scalar;
@@ -40,6 +41,12 @@ pub struct Warp {
 }
 
 impl Warp {
+    /// Bare warp for the trace-JIT unit tests ([`super::trace`]).
+    #[cfg(test)]
+    pub(crate) fn for_tests(nt: u32) -> Warp {
+        Warp::new(nt)
+    }
+
     fn new(nt: u32) -> Warp {
         Warp {
             pc: 0,
@@ -76,6 +83,17 @@ pub struct Core {
     /// (it needs the image's declared local extent). A pure observer —
     /// `None` leaves execution untouched.
     pub shadow: Option<ShadowLocal>,
+    /// Trace-caching warp JIT ([`SimConfig::jit`], `docs/SIMJIT.md`):
+    /// per-PC pre-decoded straight-line regions. Core-private, so the
+    /// parallel tick engine composes with it lock-free; invalidated on
+    /// [`Core::reset`]. Kept as two separate fields (`traces`,
+    /// `replay`) so `exec` can hold a trace borrow while mutating the
+    /// warp table and the replay queue.
+    traces: TraceCache,
+    /// Cycle-exact issue schedule of the in-flight trace burst (empty
+    /// almost always). While non-empty, [`Core::step`] serves issues
+    /// from here instead of scanning the warp table.
+    replay: ReplayQueue,
 }
 
 /// Snapshot of a stalled core, valid until it next issues.
@@ -128,6 +146,8 @@ impl Core {
             full_mask,
             idle: None,
             shadow: None,
+            traces: TraceCache::new(),
+            replay: ReplayQueue::new(),
         }
     }
 
@@ -138,6 +158,11 @@ impl Core {
         self.barriers.clear();
         self.rr = 0;
         self.idle = None;
+        // JIT state never survives a reset: the program may change
+        // under the core (Gpu::load builds fresh cores, but restore/
+        // rerun paths reuse them).
+        self.traces.invalidate();
+        self.replay.clear();
         if let Some(sh) = self.shadow.as_mut() {
             sh.reset();
         }
@@ -151,13 +176,22 @@ impl Core {
         self.warps.iter().all(|w| !w.active)
     }
 
-    /// Earliest cycle at which some warp could issue, if any.
+    /// Earliest cycle at which some warp could issue, if any. While a
+    /// trace burst is in flight its next pending issue participates:
+    /// the dispatched warp's `stall_until` already sits at the burst
+    /// *end*, but the engine's event-skip must still land on every
+    /// intermediate issue cycle exactly as the interpreter would.
     pub fn next_ready(&self) -> Option<u64> {
-        self.warps
+        let base = self
+            .warps
             .iter()
             .filter(|w| w.active && !w.at_barrier)
             .map(|w| w.stall_until)
-            .min()
+            .min();
+        match self.replay.next_cycle() {
+            Some(c) => Some(base.map_or(c, |b| b.min(c))),
+            None => base,
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -171,11 +205,25 @@ impl Core {
         stats: &mut SimStats,
         faults: &mut FaultState,
     ) -> Result<StepOutcome, SimError> {
+        // JIT burst replay: a dispatched trace already committed its
+        // architectural effects; the engine still observes each issue
+        // at its exact interpreter cycle (docs/SIMJIT.md).
+        match self.replay.tick(cycle) {
+            ReplayTick::Issue(issue) => return Ok(StepOutcome::Executed(issue)),
+            ReplayTick::Wait => return Ok(StepOutcome::NoneReady),
+            ReplayTick::Idle => {}
+        }
         let Some(wi) = self.choose_warp(cycle, cfg) else {
             return Ok(StepOutcome::NoneReady);
         };
         let issue = self.exec(wi, cycle, prog, mem, l2, cfg, stats, faults)?;
         Ok(StepOutcome::Executed(issue))
+    }
+
+    /// The replay intercept for the parallel engine's compute phase
+    /// ([`super::gpu`]): purely core-local, so it runs off-thread.
+    pub(crate) fn replay_tick(&mut self, cycle: u64) -> ReplayTick {
+        self.replay.tick(cycle)
     }
 
     /// Issue selection for this cycle: round-robin over the active list,
@@ -228,10 +276,29 @@ impl Core {
     /// the idle cache while fast-forwarding (the state is frozen, so the
     /// cached value equals a rescan).
     pub fn stall_reason(&self) -> StallReason {
+        // Mid-burst gap cycle: the scoreboard guard proved at dispatch
+        // that the bursting warp's next issue strictly precedes every
+        // other warp's readiness, so the interpreter's bottleneck-warp
+        // scan would pick the bursting warp — and every traceable op
+        // class (ALU/MUL/DIV/FPU/FDIV/SFU) attributes to Scoreboard.
+        if !self.replay.is_empty() {
+            return StallReason::Scoreboard;
+        }
         if let Some(info) = self.idle {
             return info.reason;
         }
         self.compute_stall_reason()
+    }
+
+    /// The PC to report for warp `wi` in hang diagnostics. Mid-burst
+    /// the warp table's `pc` already points past the trace; the
+    /// interpreter would sit at the next unexecuted op, which is the
+    /// replay queue's pending head.
+    pub(crate) fn warp_report_pc(&self, wi: usize) -> u32 {
+        if let Some(pc) = self.replay.pending_pc(wi) {
+            return pc;
+        }
+        self.warps[wi].pc
     }
 
     fn compute_stall_reason(&self) -> StallReason {
@@ -359,6 +426,51 @@ impl Core {
         faults: &mut FaultState,
     ) -> Result<Issue, SimError> {
         let pc = self.warps[wi].pc;
+        // JIT trace dispatch (docs/SIMJIT.md). The five guards, in
+        // order: (1) the knob is on; (2) no armed fault plan — a due
+        // fault must fire at its exact (cycle, pc), so the JIT stands
+        // down entirely until every one-shot fault is consumed (the
+        // armed flag is monotone, so both engines re-engage at the
+        // same cycle); (3) full-mask uniform execution; (4) a cached
+        // trace exists — which by construction excludes every op that
+        // could trap, touch memory/shadow state, or move a mask, so
+        // the sanitizer cannot observe the burst; (5) no scoreboard
+        // hazard: the trace's last issue cycle strictly precedes every
+        // other warp's readiness, so round-robin would pick this warp
+        // at each intermediate cycle anyway (and `rr` ends at the same
+        // value). Any guard failing falls through to the interpreter.
+        if cfg.jit && !faults.armed() && self.warps[wi].tmask == self.full_mask {
+            let mut others_ready = u64::MAX;
+            for (k, w) in self.warps.iter().enumerate() {
+                if k != wi && w.active && !w.at_barrier {
+                    others_ready = others_ready.min(w.stall_until);
+                }
+            }
+            // Split borrows: `plan` holds `self.traces` for the rest of
+            // the block while the warp table and replay queue mutate.
+            if let Some(tr) = self.traces.plan(pc, prog, &cfg.costs) {
+                if cycle + tr.total_cost - tr.last_cost < others_ready {
+                    let nt = cfg.threads_per_warp as usize;
+                    let w = &mut self.warps[wi];
+                    trace::exec_trace(tr, w, nt);
+                    w.pc = tr.end_pc;
+                    w.stall_until = cycle + tr.total_cost;
+                    w.last_class = tr.last_class;
+                    // Traceable ops touch no counter besides these two
+                    // (order-insensitive sums, so bulk-charging at
+                    // dispatch equals the interpreter's totals).
+                    stats.instrs += tr.ops.len() as u64;
+                    stats.thread_instrs += (tr.ops.len() * nt) as u64;
+                    self.replay.schedule(wi as u32, cycle, tr);
+                    self.idle = None;
+                    return Ok(Issue {
+                        warp: wi as u32,
+                        pc,
+                        cost: tr.ops[0].cost,
+                    });
+                }
+            }
+        }
         let inst = *prog
             .get(pc as usize)
             .ok_or_else(|| self.err(wi, pc, "pc out of program"))?;
@@ -886,9 +998,12 @@ impl Core {
             }
             Op::SHFL => {
                 stats.warp_ops += 1;
-                let snapshot: Vec<u32> = (0..nt)
-                    .map(|l| read_reg(&self.warps[wi].regs[l], inst.rs1))
-                    .collect();
+                // Pre-shuffle snapshot in a stack buffer (nt <= 32) —
+                // the exec path allocates nothing per instruction.
+                let mut snapshot = [0u32; 32];
+                for (l, s) in snapshot.iter_mut().enumerate().take(nt) {
+                    *s = read_reg(&self.warps[wi].regs[l], inst.rs1);
+                }
                 for &l in lanes {
                     let src =
                         read_reg(&self.warps[wi].regs[l], inst.rs2) % cfg.threads_per_warp;
@@ -937,7 +1052,7 @@ impl Core {
 }
 
 #[inline]
-fn read_reg(regs: &[u32; 64], r: u8) -> u32 {
+pub(crate) fn read_reg(regs: &[u32; 64], r: u8) -> u32 {
     if r == 0 {
         0
     } else {
@@ -946,7 +1061,7 @@ fn read_reg(regs: &[u32; 64], r: u8) -> u32 {
 }
 
 #[inline]
-fn write_reg(regs: &mut [u32; 64], r: u8, v: u32) {
+pub(crate) fn write_reg(regs: &mut [u32; 64], r: u8, v: u32) {
     if r != 0 {
         regs[r as usize] = v;
     }

@@ -13,6 +13,7 @@
 use super::core::{Core, Issue, StepOutcome};
 use super::fault::{FaultPlan, FaultState};
 use super::mem::{Cache, GlobalMem, ShadowLocal};
+use super::trace::ReplayTick;
 use super::{SimConfig, SimError, SimStats, TrapKind};
 use crate::backend::emit::ProgramImage;
 use crate::backend::isa::{MachInst, OpClass};
@@ -238,6 +239,13 @@ impl Gpu {
         stats: &mut SimStats,
         mut prof: Option<&mut Profiler>,
     ) -> Result<u64, SimError> {
+        // No-alloc-per-tick invariant: everything the loop needs per
+        // cycle lives in buffers hoisted here (`issued`) or reused
+        // inside Core (`lanes_buf`, the SHFL snapshot, the replay
+        // queue's recycled Vec). The only steady-state heap traffic is
+        // program output (`stats.prints`) and sanitizer reports —
+        // event-driven, not per-cycle. Keep it that way: interpreter
+        // overhead is the sim's wall-clock bottleneck (docs/SIMJIT.md).
         let mut issued: Vec<Option<Issue>> = vec![None; self.cores.len()];
         let mut cycle: u64 = 0;
         let pc_loc = &self.pc_loc;
@@ -406,6 +414,11 @@ impl Gpu {
                 });
             }
 
+            // Same no-alloc-per-tick invariant as the sequential loop:
+            // per-cycle scratch (`issued`, the slots' delta stats) is
+            // allocated once here and reused every cycle. The dummy
+            // GlobalMem/L2/FaultState built per compute_slot call are
+            // allocation-free (empty segment list, `None`, empty plan).
             let mut issued: Vec<Option<Issue>> = vec![None; n];
             let mut cycle: u64 = 0;
             let mut tick: u64 = 0;
@@ -572,6 +585,23 @@ struct Slot<'a> {
 /// neither by construction, and the parallel engine only runs with an
 /// unarmed fault plan (an unarmed injector's hooks are no-ops).
 fn compute_slot(slot: &mut Slot<'_>, cycle: u64, prog: &[MachInst], cfg: &SimConfig) {
+    // JIT burst replay first ([`SimConfig::jit`]): entirely core-local,
+    // so it runs in the compute phase on any worker. The delta must be
+    // reset on the replay path too — `merge_stats` drains prints but
+    // leaves counters in the source, and a stale delta from an earlier
+    // cycle would double-count at commit.
+    match slot.core.replay_tick(cycle) {
+        ReplayTick::Issue(info) => {
+            slot.delta = SimStats::default();
+            slot.outcome = Outcome::Ran(info);
+            return;
+        }
+        ReplayTick::Wait => {
+            slot.outcome = Outcome::NoIssue;
+            return;
+        }
+        ReplayTick::Idle => {}
+    }
     let Some(wi) = slot.core.choose_warp(cycle, cfg) else {
         slot.outcome = Outcome::NoIssue;
         return;
@@ -644,8 +674,12 @@ fn hang_report_cores<'a>(
             if !w.active {
                 continue;
             }
+            // Mid-trace-burst, the warp table's pc already points past
+            // the trace; report the next unexecuted op instead, which
+            // is where the interpreter's pc would sit.
+            let pc = c.warp_report_pc(wi);
             let line = pc_loc
-                .get(w.pc as usize)
+                .get(pc as usize)
                 .copied()
                 .flatten()
                 .map(|l| format!(" (source line {})", l.line))
@@ -654,7 +688,7 @@ fn hang_report_cores<'a>(
                 "\n  core {} warp {}: pc {}{} [{}]",
                 c.id,
                 wi,
-                w.pc,
+                pc,
                 line,
                 if w.at_barrier {
                     "parked at barrier"
@@ -814,6 +848,63 @@ kernel void rev(global int* a, int n) {
             assert_eq!(c_on.total(), s_on.cycles, "ledger must sum to cycles");
             assert_eq!(c_on.issue_cycles, c_off.issue_cycles);
             assert_eq!(c_on.stalls, c_off.stalls, "stall attribution must match");
+        }
+    }
+
+    /// The trace-JIT follows the same differential discipline as
+    /// fast-forward: cycles, stats, results and the profiler's per-core
+    /// ledgers are bit-identical with it on or off, on both engines
+    /// (sequential and parallel). The kernel mixes traceable arithmetic
+    /// with barriers, shared memory and divergence, so both the fast
+    /// path and every fallback edge are exercised.
+    #[test]
+    fn jit_bit_identical() {
+        let src = r#"
+kernel void rev(global int* a, int n) {
+    local int tile[64];
+    int l = get_local_id(0);
+    int g = get_global_id(0);
+    tile[l] = a[g] * 3 + (a[g] ^ l);
+    barrier(0);
+    if (g < n) a[g] = tile[63 - l] + a[g] / 3;
+}
+"#;
+        let img = compile(src, OptLevel::O3);
+        let run_with = |jit: bool, threads: usize| {
+            let cfg = SimConfig {
+                jit,
+                threads,
+                ..SimConfig::default()
+            };
+            let mut gpu = Gpu::load(&img, cfg);
+            let a = gpu.alloc(128 * 4);
+            for i in 0..128u32 {
+                gpu.mem.write_u32(a + i * 4, i * 7).unwrap();
+            }
+            write_args(&mut gpu, &img, [2, 1, 1], [64, 1, 1], &[a, 128]);
+            let mut prof = Some(crate::prof::counters::Profiler::new(
+                img.code.len(),
+                gpu.cfg.num_cores as usize,
+            ));
+            let stats = gpu.run_profiled(prof.as_mut()).unwrap();
+            let out: Vec<u32> = (0..128).map(|i| gpu.mem.read_u32(a + i * 4).unwrap()).collect();
+            (stats, out, prof.unwrap())
+        };
+        let (s_off, out_off, p_off) = run_with(false, 1);
+        for threads in [1usize, 4] {
+            let (s_on, out_on, p_on) = run_with(true, threads);
+            assert_eq!(
+                s_on.cycles, s_off.cycles,
+                "jit changed the cycle count (threads={threads})"
+            );
+            assert_eq!(s_on.instrs, s_off.instrs, "threads={threads}");
+            assert_eq!(s_on.thread_instrs, s_off.thread_instrs, "threads={threads}");
+            assert_eq!(out_on, out_off, "jit changed device results (threads={threads})");
+            for (c_on, c_off) in p_on.cores.iter().zip(p_off.cores.iter()) {
+                assert_eq!(c_on.total(), s_off.cycles, "ledger must sum to cycles");
+                assert_eq!(c_on.issue_cycles, c_off.issue_cycles, "threads={threads}");
+                assert_eq!(c_on.stalls, c_off.stalls, "jit changed stall attribution");
+            }
         }
     }
 

@@ -328,7 +328,11 @@ impl Cache {
         addr / self.cfg.line
     }
 
-    /// Access one line (by line number). Returns hit.
+    /// Access one line (by line number). Returns hit. On the per-issue
+    /// hot path of every load/store — allocation-free by construction
+    /// (tag/LRU arrays are sized once in `new`), part of the
+    /// no-alloc-per-tick invariant documented in `Gpu::run_*`.
+    #[inline]
     pub fn access_line(&mut self, line: u32) -> bool {
         self.tick += 1;
         let set = (line % self.cfg.sets) as usize;
@@ -354,6 +358,7 @@ impl Cache {
         false
     }
 
+    #[inline]
     pub fn latency(&self) -> u32 {
         self.cfg.latency
     }

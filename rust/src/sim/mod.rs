@@ -13,6 +13,7 @@ pub mod core;
 pub mod fault;
 pub mod gpu;
 pub mod mem;
+pub mod trace;
 
 pub use fault::{Fault, FaultKind, FaultPlan, FaultState};
 pub use gpu::Gpu;
@@ -92,6 +93,16 @@ pub struct SimConfig {
     /// touch the timing model — the same differential discipline as
     /// `fast_forward` and `sanitize`.
     pub faults: FaultPlan,
+    /// Trace-caching warp JIT ([`trace`], `docs/SIMJIT.md`): straight-
+    /// line warp-uniform arithmetic regions are pre-decoded once per
+    /// program and dispatched as a single burst, with the per-cycle
+    /// issue schedule replayed exactly. A pure host-side (wall-clock)
+    /// optimization with the same differential discipline as
+    /// `fast_forward`: simulated cycles, results, profiler ledgers,
+    /// fault firing and sanitizer verdicts are bit-identical with it
+    /// on or off (`rust/tests/jit_api.rs`). Excluded from the compile
+    /// cache fingerprint like every other `sim` field. On by default.
+    pub jit: bool,
     /// Host worker threads stepping cores inside one simulated cycle.
     /// A pure host-side (wall-clock) knob with the same discipline as
     /// `fast_forward`: cycles, results, profiler attribution, fault
@@ -142,6 +153,7 @@ impl SimConfig {
             fast_forward: true,
             sanitize: false,
             faults: FaultPlan::none(),
+            jit: true,
             threads: 1,
         }
     }

@@ -1,0 +1,619 @@
+//! Trace-caching warp JIT for the simulator hot loop (`docs/SIMJIT.md`).
+//!
+//! The interpreter ([`super::core::Core::exec`]) decodes every
+//! `MachInst` on every issue. This module removes that overhead for the
+//! common case — straight-line, warp-uniform arithmetic — by
+//! pre-decoding a *trace* (a maximal run of register-only ops starting
+//! at a PC) exactly once per program load, then dispatching a warp down
+//! the whole trace in a single `step` call.
+//!
+//! Cranelift-style single-pass translation, not a real code generator:
+//! decoding resolves each instruction to a [`TraceKind`] (the operand
+//! mapping the interpreter would compute per cycle) plus its
+//! [`CostModel`] issue cost, and execution is a tight match over the
+//! pre-resolved kinds. The timing model is untouched — every traced
+//! instruction is charged its exact per-class cost, and the issues it
+//! would have produced are replayed to the engine cycle-by-cycle from a
+//! [`ReplayQueue`], so cycles, results, profiler ledgers and sanitizer
+//! verdicts are bit-identical with the JIT on or off
+//! ([`SimConfig::jit`](super::SimConfig::jit); `rust/tests/jit_api.rs`).
+//!
+//! What a trace may contain is deliberately narrow: ALU / MUL / DIV /
+//! FPU / FDIV / SFU register ops only. Formation stops at branches,
+//! jumps, every `vx_*` op (split/join/tmc/pred/bar/...), all memory
+//! classes (loads, stores, atomics), CSR reads, prints and `ecall` —
+//! so a traced op can never trap, touch `GlobalMem`/L1/L2, move a
+//! thread mask, park a warp, or disturb the sanitizer's shadow state.
+//! That exclusion is what makes the five dispatch guards (see
+//! [`super::core::Core::exec`]) sufficient for bit-identity.
+
+use super::core::{read_reg, write_reg, Issue, Warp};
+use crate::backend::isa::{MachInst, Op, OpClass};
+use crate::ir::interp::scalar;
+use crate::ir::{BinOp, FCmp, ICmp, UnOp};
+use crate::target::CostModel;
+
+/// Longest run of instructions one trace may cover. Long enough to
+/// swallow the unrolled arithmetic bodies the backend emits, short
+/// enough that the scoreboard guard (`last issue < other warps' ready
+/// cycle`) still passes routinely in multi-warp kernels.
+pub const TRACE_MAX: usize = 32;
+
+/// A trace shorter than this is not worth the dispatch bookkeeping —
+/// the interpreter already handles single instructions at full speed.
+pub const TRACE_MIN: usize = 2;
+
+/// Pre-resolved execute semantics of one traceable instruction — the
+/// operand mapping [`super::core::Core::exec`] recomputes per issue,
+/// done once at trace-build time.
+#[derive(Clone, Copy, Debug)]
+pub enum TraceKind {
+    Nop,
+    /// `rd = imm`.
+    Li,
+    /// `rd = rs1`.
+    Mov,
+    /// Integer ALU, register form: `rd = rs1 <op> rs2`.
+    BinI(BinOp),
+    /// Integer ALU, immediate form: `rd = rs1 <op> imm`.
+    BinImm(BinOp),
+    /// Integer compare: `rd = (rs1 <pred> rs2) as u32`.
+    CmpI(ICmp),
+    /// Float ALU: `rd = rs1 <op> rs2` over f32 bit patterns.
+    BinF(BinOp),
+    /// Float/SFU unary: `rd = <op>(rs1)`.
+    UnF(UnOp),
+    /// Float compare: `rd = (rs1 <pred> rs2) as u32`.
+    CmpF(FCmp),
+    /// Conditional move: `if rs1 != 0 { rd = rs2 }`.
+    Cmov,
+}
+
+/// One decoded instruction inside a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceOp {
+    pub pc: u32,
+    pub inst: MachInst,
+    pub kind: TraceKind,
+    /// The target's issue cost for this op's class, resolved at build
+    /// time (traceable classes never adjust their cost dynamically).
+    pub cost: u64,
+}
+
+/// A decoded straight-line region starting at `ops[0].pc`, always at
+/// least [`TRACE_MIN`] ops long.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+    /// Sum of all op costs: the dispatched warp's `stall_until` is
+    /// `dispatch_cycle + total_cost`, exactly as if the interpreter had
+    /// executed each op back-to-back.
+    pub total_cost: u64,
+    /// Cost of the final op — `total_cost - last_cost` is the offset of
+    /// the trace's *last issue cycle*, the quantity the scoreboard
+    /// guard compares against the other warps' readiness.
+    pub last_cost: u64,
+    /// PC of the first instruction after the trace.
+    pub end_pc: u32,
+    /// Class of the final op (the dispatched warp's `last_class`).
+    pub last_class: OpClass,
+}
+
+/// Decode one instruction to its trace semantics, or `None` if it may
+/// not appear in a trace (control flow, memory, vx, system — anything
+/// that can trap, touch shared or scheduler state, or move a mask).
+fn decode(inst: MachInst) -> Option<TraceKind> {
+    let kind = match inst.op {
+        Op::NOP => TraceKind::Nop,
+        Op::LI => TraceKind::Li,
+        Op::MOV => TraceKind::Mov,
+        Op::ADD => TraceKind::BinI(BinOp::Add),
+        Op::SUB => TraceKind::BinI(BinOp::Sub),
+        Op::MUL => TraceKind::BinI(BinOp::Mul),
+        Op::DIV => TraceKind::BinI(BinOp::SDiv),
+        Op::DIVU => TraceKind::BinI(BinOp::UDiv),
+        Op::REM => TraceKind::BinI(BinOp::SRem),
+        Op::REMU => TraceKind::BinI(BinOp::URem),
+        Op::AND => TraceKind::BinI(BinOp::And),
+        Op::OR => TraceKind::BinI(BinOp::Or),
+        Op::XOR => TraceKind::BinI(BinOp::Xor),
+        Op::SLL => TraceKind::BinI(BinOp::Shl),
+        Op::SRL => TraceKind::BinI(BinOp::LShr),
+        Op::SRA => TraceKind::BinI(BinOp::AShr),
+        Op::MIN => TraceKind::BinI(BinOp::SMin),
+        Op::MAX => TraceKind::BinI(BinOp::SMax),
+        Op::ADDI => TraceKind::BinImm(BinOp::Add),
+        Op::ANDI => TraceKind::BinImm(BinOp::And),
+        Op::ORI => TraceKind::BinImm(BinOp::Or),
+        Op::XORI => TraceKind::BinImm(BinOp::Xor),
+        Op::SLLI => TraceKind::BinImm(BinOp::Shl),
+        Op::SRLI => TraceKind::BinImm(BinOp::LShr),
+        Op::SRAI => TraceKind::BinImm(BinOp::AShr),
+        Op::SEQ => TraceKind::CmpI(ICmp::Eq),
+        Op::SNE => TraceKind::CmpI(ICmp::Ne),
+        Op::SLT => TraceKind::CmpI(ICmp::Slt),
+        Op::SLE => TraceKind::CmpI(ICmp::Sle),
+        Op::SLTU => TraceKind::CmpI(ICmp::Ult),
+        Op::SGEU => TraceKind::CmpI(ICmp::Uge),
+        Op::FADD => TraceKind::BinF(BinOp::FAdd),
+        Op::FSUB => TraceKind::BinF(BinOp::FSub),
+        Op::FMUL => TraceKind::BinF(BinOp::FMul),
+        Op::FDIV => TraceKind::BinF(BinOp::FDiv),
+        Op::FMIN => TraceKind::BinF(BinOp::FMin),
+        Op::FMAX => TraceKind::BinF(BinOp::FMax),
+        Op::FSQRT => TraceKind::UnF(UnOp::FSqrt),
+        Op::FNEG => TraceKind::UnF(UnOp::FNeg),
+        Op::FABS => TraceKind::UnF(UnOp::FAbs),
+        Op::FEXP => TraceKind::UnF(UnOp::FExp),
+        Op::FLOG => TraceKind::UnF(UnOp::FLog),
+        Op::FFLOOR => TraceKind::UnF(UnOp::FFloor),
+        Op::FCVTWS => TraceKind::UnF(UnOp::FpToSi),
+        Op::FCVTSW => TraceKind::UnF(UnOp::SiToFp),
+        Op::FMVXW => TraceKind::UnF(UnOp::FToBits),
+        Op::FMVWX => TraceKind::UnF(UnOp::BitsToF),
+        Op::FEQ => TraceKind::CmpF(FCmp::Oeq),
+        Op::FNE => TraceKind::CmpF(FCmp::One),
+        Op::FLT => TraceKind::CmpF(FCmp::Olt),
+        Op::FLE => TraceKind::CmpF(FCmp::Ole),
+        Op::FGT => TraceKind::CmpF(FCmp::Ogt),
+        Op::FGE => TraceKind::CmpF(FCmp::Oge),
+        Op::CMOV => TraceKind::Cmov,
+        // Everything else — branches/jumps, LW/SW, atomics, CSRR,
+        // ecall, prints, and the whole vx_* family — ends the trace.
+        _ => return None,
+    };
+    Some(kind)
+}
+
+/// Build the maximal trace starting at `pc`, or `None` when the region
+/// is shorter than [`TRACE_MIN`]. A zero-cost class (possible on a
+/// custom target) is rejected: the engine advances time by at least one
+/// cycle per issue, so the replay-cycle arithmetic below assumes every
+/// cost ≥ 1.
+fn build(pc: u32, prog: &[MachInst], costs: &CostModel) -> Option<Trace> {
+    let mut ops = Vec::new();
+    let mut total = 0u64;
+    let mut cur = pc as usize;
+    while cur < prog.len() && ops.len() < TRACE_MAX {
+        let inst = prog[cur];
+        let Some(kind) = decode(inst) else { break };
+        let cost = costs.issue_cost(inst.op.class());
+        if cost == 0 {
+            break;
+        }
+        total += cost;
+        ops.push(TraceOp {
+            pc: cur as u32,
+            inst,
+            kind,
+            cost,
+        });
+        cur += 1;
+    }
+    if ops.len() < TRACE_MIN {
+        return None;
+    }
+    let last = ops.last().unwrap();
+    Some(Trace {
+        total_cost: total,
+        last_cost: last.cost,
+        end_pc: cur as u32,
+        last_class: last.inst.op.class(),
+        ops,
+    })
+}
+
+/// Per-PC build state: traces are built at most once per program load.
+#[derive(Clone)]
+enum Slot {
+    Unknown,
+    /// The region at this PC is too short / not traceable — remembered
+    /// so the interpreter path never pays the build scan again.
+    Reject,
+    Cached(Trace),
+}
+
+/// Per-core trace cache, indexed by PC. Private core state — the
+/// parallel tick engine composes with it without any new locks —
+/// invalidated whenever the core is pointed at a (potentially) new
+/// program ([`super::core::Core::reset`], called from `Gpu::load`-built
+/// cores at every run start).
+#[derive(Default)]
+pub struct TraceCache {
+    slots: Vec<Slot>,
+}
+
+impl TraceCache {
+    pub fn new() -> TraceCache {
+        TraceCache { slots: Vec::new() }
+    }
+
+    /// Drop every cached trace (program about to change).
+    pub fn invalidate(&mut self) {
+        self.slots.clear();
+    }
+
+    /// The cached trace starting at `pc`, building it on first query.
+    /// `None` means "use the interpreter for this PC".
+    pub fn plan(&mut self, pc: u32, prog: &[MachInst], costs: &CostModel) -> Option<&Trace> {
+        if self.slots.len() != prog.len() {
+            // First query since load/reset: size the table to the
+            // program (one-time allocation, not per-tick).
+            self.slots.clear();
+            self.slots.resize(prog.len(), Slot::Unknown);
+        }
+        let idx = pc as usize;
+        if idx >= self.slots.len() {
+            return None;
+        }
+        if matches!(self.slots[idx], Slot::Unknown) {
+            self.slots[idx] = match build(pc, prog, costs) {
+                Some(t) => Slot::Cached(t),
+                None => Slot::Reject,
+            };
+        }
+        match &self.slots[idx] {
+            Slot::Cached(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// Execute every op of `trace` for all `nt` lanes of `w` (dispatch
+/// requires the full mask, so the lane set is exactly `0..nt`).
+/// Architectural effects only — the caller updates `pc`/`stall_until`/
+/// `last_class` and the stats counters.
+pub fn exec_trace(trace: &Trace, w: &mut Warp, nt: usize) {
+    for op in &trace.ops {
+        let inst = op.inst;
+        match op.kind {
+            TraceKind::Nop => {}
+            TraceKind::Li => {
+                for l in 0..nt {
+                    write_reg(&mut w.regs[l], inst.rd, inst.imm as u32);
+                }
+            }
+            TraceKind::Mov => {
+                for l in 0..nt {
+                    let v = read_reg(&w.regs[l], inst.rs1);
+                    write_reg(&mut w.regs[l], inst.rd, v);
+                }
+            }
+            TraceKind::BinI(bop) => {
+                for l in 0..nt {
+                    let a = read_reg(&w.regs[l], inst.rs1);
+                    let b = read_reg(&w.regs[l], inst.rs2);
+                    write_reg(&mut w.regs[l], inst.rd, scalar::bin_i(bop, a, b));
+                }
+            }
+            TraceKind::BinImm(bop) => {
+                for l in 0..nt {
+                    let a = read_reg(&w.regs[l], inst.rs1);
+                    write_reg(&mut w.regs[l], inst.rd, scalar::bin_i(bop, a, inst.imm as u32));
+                }
+            }
+            TraceKind::CmpI(pred) => {
+                for l in 0..nt {
+                    let a = read_reg(&w.regs[l], inst.rs1);
+                    let b = read_reg(&w.regs[l], inst.rs2);
+                    write_reg(&mut w.regs[l], inst.rd, scalar::icmp(pred, a, b) as u32);
+                }
+            }
+            TraceKind::BinF(bop) => {
+                for l in 0..nt {
+                    let a = f32::from_bits(read_reg(&w.regs[l], inst.rs1));
+                    let b = f32::from_bits(read_reg(&w.regs[l], inst.rs2));
+                    write_reg(&mut w.regs[l], inst.rd, scalar::bin_f(bop, a, b).to_bits());
+                }
+            }
+            TraceKind::UnF(uop) => {
+                for l in 0..nt {
+                    let a = read_reg(&w.regs[l], inst.rs1);
+                    write_reg(&mut w.regs[l], inst.rd, scalar::un(uop, a));
+                }
+            }
+            TraceKind::CmpF(pred) => {
+                for l in 0..nt {
+                    let a = f32::from_bits(read_reg(&w.regs[l], inst.rs1));
+                    let b = f32::from_bits(read_reg(&w.regs[l], inst.rs2));
+                    write_reg(&mut w.regs[l], inst.rd, scalar::fcmp(pred, a, b) as u32);
+                }
+            }
+            TraceKind::Cmov => {
+                for l in 0..nt {
+                    let c = read_reg(&w.regs[l], inst.rs1);
+                    if c != 0 {
+                        let v = read_reg(&w.regs[l], inst.rs2);
+                        write_reg(&mut w.regs[l], inst.rd, v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One issue the engine still owes the profiler/scheduler from a
+/// dispatched trace.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    at_cycle: u64,
+    issue: Issue,
+}
+
+/// What the replay queue says about the current cycle.
+pub enum ReplayTick {
+    /// No burst in flight — run the normal issue path.
+    Idle,
+    /// A traced instruction "issues" this cycle: report it exactly as
+    /// the interpreter would have (its effects already committed at
+    /// dispatch).
+    Issue(Issue),
+    /// Mid-burst gap cycle: the bursting warp is the earliest-ready
+    /// warp on this core (scoreboard guard), so no scan is needed —
+    /// the core reports no-issue, exactly like the interpreter.
+    Wait,
+}
+
+/// The cycle-exact issue schedule of a dispatched trace. At most one
+/// burst is in flight per core (dispatch only happens from the normal
+/// issue path, which this queue preempts until drained). The backing
+/// `Vec` is reused across bursts — no steady-state allocation.
+#[derive(Default)]
+pub struct ReplayQueue {
+    q: Vec<Pending>,
+    head: usize,
+}
+
+impl ReplayQueue {
+    pub fn new() -> ReplayQueue {
+        ReplayQueue::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head >= self.q.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.q.clear();
+        self.head = 0;
+    }
+
+    /// Queue the post-dispatch issues of `trace`: the op at index 0
+    /// issues at the dispatch cycle itself (returned directly by
+    /// `exec`), ops `1..` replay at their exact interpreter cycles —
+    /// each issue follows the previous by that op's cost (every cost is
+    /// ≥ 1, so consecutive issue cycles are strictly increasing and the
+    /// single-issue-per-core-per-cycle rule is preserved).
+    pub fn schedule(&mut self, warp: u32, dispatch_cycle: u64, trace: &Trace) {
+        self.clear();
+        let mut at = dispatch_cycle;
+        for (i, op) in trace.ops.iter().enumerate() {
+            at += op.cost;
+            if i + 1 < trace.ops.len() {
+                let next = trace.ops[i + 1];
+                self.q.push(Pending {
+                    at_cycle: at,
+                    issue: Issue {
+                        warp,
+                        pc: next.pc,
+                        cost: next.cost,
+                    },
+                });
+            }
+        }
+    }
+
+    /// Earliest cycle a pending issue is due (the core's
+    /// `next_ready` floor while a burst is in flight).
+    pub fn next_cycle(&self) -> Option<u64> {
+        self.q.get(self.head).map(|p| p.at_cycle)
+    }
+
+    /// PC the engine should report for warp `wi` in hang diagnostics:
+    /// mid-burst, the interpreter's `w.pc` would sit at the next
+    /// unexecuted op — which is the pending head.
+    pub fn pending_pc(&self, wi: usize) -> Option<u32> {
+        self.q
+            .get(self.head)
+            .filter(|p| p.issue.warp as usize == wi)
+            .map(|p| p.issue.pc)
+    }
+
+    /// Advance the replay by one engine step at `cycle`.
+    pub fn tick(&mut self, cycle: u64) -> ReplayTick {
+        let Some(p) = self.q.get(self.head) else {
+            return ReplayTick::Idle;
+        };
+        // The engine can never skip past a pending issue: `next_cycle`
+        // participates in the event-skip minimum.
+        debug_assert!(p.at_cycle >= cycle, "replay issue missed its cycle");
+        if p.at_cycle > cycle {
+            return ReplayTick::Wait;
+        }
+        let issue = p.issue;
+        self.head += 1;
+        if self.head >= self.q.len() {
+            // Burst drained: reset indices, keep the Vec's capacity.
+            self.clear();
+        }
+        ReplayTick::Issue(issue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mi(op: Op, rd: u8, rs1: u8, rs2: u8, imm: i32) -> MachInst {
+        MachInst {
+            op,
+            rd,
+            rs1,
+            rs2,
+            imm,
+        }
+    }
+
+    fn costs() -> CostModel {
+        CostModel::vortex()
+    }
+
+    #[test]
+    fn formation_stops_at_non_traceable_ops() {
+        // add, addi, <branch>, mul, ecall — the trace from pc 0 must
+        // cover exactly the two leading ALU ops.
+        let prog = vec![
+            mi(Op::ADD, 5, 6, 7, 0),
+            mi(Op::ADDI, 5, 5, 0, 3),
+            mi(Op::BEQZ, 0, 5, 0, 9),
+            mi(Op::MUL, 5, 5, 5, 0),
+            mi(Op::ECALL, 0, 0, 0, 0),
+        ];
+        let t = build(0, &prog, &costs()).expect("two ALU ops form a trace");
+        assert_eq!(t.ops.len(), 2);
+        assert_eq!(t.end_pc, 2);
+        assert_eq!(t.total_cost, 2, "two ALU ops at cost 1 each");
+        assert_eq!(t.last_cost, 1);
+        assert_eq!(t.last_class, OpClass::Alu);
+        // From the branch itself: nothing.
+        assert!(build(2, &prog, &costs()).is_none());
+        // From the lone MUL before ecall: below TRACE_MIN.
+        assert!(build(3, &prog, &costs()).is_none());
+    }
+
+    #[test]
+    fn formation_stops_at_memory_and_vx() {
+        for stopper in [
+            mi(Op::LW, 5, 6, 0, 0),
+            mi(Op::SW, 0, 6, 5, 0),
+            mi(Op::AMOADD, 5, 6, 7, 0),
+            mi(Op::BAR, 0, 6, 0, 0),
+            mi(Op::SPLIT, 0, 5, 0, 0),
+            mi(Op::JOIN, 0, 0, 0, 0),
+            mi(Op::TMC, 0, 5, 0, 0),
+            mi(Op::PRED, 0, 5, 6, 9),
+            mi(Op::CSRR, 5, 0, 0, 0),
+            mi(Op::J, 0, 0, 0, 0),
+            mi(Op::WSPAWN, 0, 5, 0, 4),
+        ] {
+            let prog = vec![
+                mi(Op::ADDI, 5, 5, 0, 1),
+                mi(Op::ADDI, 6, 6, 0, 2),
+                stopper,
+                mi(Op::ADDI, 7, 7, 0, 3),
+            ];
+            let t = build(0, &prog, &costs()).unwrap();
+            assert_eq!(t.ops.len(), 2, "trace must stop at {:?}", stopper.op);
+            assert_eq!(t.end_pc, 2);
+        }
+    }
+
+    #[test]
+    fn costs_accumulate_per_class() {
+        // addi (alu=1), mul (mul=3), fadd (fpu=4): total 8, last 4.
+        let prog = vec![
+            mi(Op::ADDI, 5, 5, 0, 1),
+            mi(Op::MUL, 6, 5, 5, 0),
+            mi(Op::FADD, 7, 6, 6, 0),
+            mi(Op::ECALL, 0, 0, 0, 0),
+        ];
+        let t = build(0, &prog, &costs()).unwrap();
+        assert_eq!(t.ops.len(), 3);
+        assert_eq!(t.total_cost, 1 + 3 + 4);
+        assert_eq!(t.last_cost, 4);
+        assert_eq!(t.last_class, OpClass::Fpu);
+    }
+
+    #[test]
+    fn trace_caps_at_max_len() {
+        let prog = vec![mi(Op::ADDI, 5, 5, 0, 1); TRACE_MAX + 10];
+        let t = build(0, &prog, &costs()).unwrap();
+        assert_eq!(t.ops.len(), TRACE_MAX);
+        assert_eq!(t.end_pc, TRACE_MAX as u32);
+    }
+
+    #[test]
+    fn cache_builds_once_and_rejects_sticky() {
+        let prog = vec![
+            mi(Op::ADDI, 5, 5, 0, 1),
+            mi(Op::ADDI, 6, 6, 0, 2),
+            mi(Op::ECALL, 0, 0, 0, 0),
+        ];
+        let mut cache = TraceCache::new();
+        let len = cache.plan(0, &prog, &costs()).map(|t| t.ops.len());
+        assert_eq!(len, Some(2));
+        // Rejected PC stays rejected without a rebuild scan.
+        assert!(cache.plan(2, &prog, &costs()).is_none());
+        assert!(cache.plan(2, &prog, &costs()).is_none());
+        // Out-of-range PC is a plain miss.
+        assert!(cache.plan(99, &prog, &costs()).is_none());
+        cache.invalidate();
+        assert_eq!(cache.plan(0, &prog, &costs()).map(|t| t.ops.len()), Some(2));
+    }
+
+    #[test]
+    fn exec_trace_matches_scalar_semantics() {
+        let prog = vec![
+            mi(Op::LI, 5, 0, 0, 21),
+            mi(Op::ADDI, 6, 5, 0, 4),     // x6 = 25
+            mi(Op::MUL, 7, 5, 6, 0),      // x7 = 525
+            mi(Op::SLT, 8, 5, 6, 0),      // x8 = 1
+            mi(Op::CMOV, 9, 8, 7, 0),     // x9 = 525 (cond true)
+            mi(Op::ADDI, 0, 5, 0, 1),     // write to x0 discarded
+            mi(Op::ECALL, 0, 0, 0, 0),
+        ];
+        let t = build(0, &prog, &costs()).unwrap();
+        assert_eq!(t.ops.len(), 6);
+        let nt = 4usize;
+        let mut w = Warp::for_tests(nt as u32);
+        exec_trace(&t, &mut w, nt);
+        for l in 0..nt {
+            assert_eq!(read_reg(&w.regs[l], 5), 21, "lane {l}");
+            assert_eq!(read_reg(&w.regs[l], 6), 25, "lane {l}");
+            assert_eq!(read_reg(&w.regs[l], 7), 525, "lane {l}");
+            assert_eq!(read_reg(&w.regs[l], 8), 1, "lane {l}");
+            assert_eq!(read_reg(&w.regs[l], 9), 525, "lane {l}");
+            assert_eq!(read_reg(&w.regs[l], 0), 0, "x0 must stay zero");
+        }
+    }
+
+    #[test]
+    fn replay_schedule_is_cycle_exact() {
+        // addi(1), mul(3), fadd(4) dispatched at cycle 10: the addi
+        // issue is returned by exec itself; the mul replays at 11
+        // (10+1), the fadd at 14 (11+3); drained after 18 (14+4) —
+        // which is exactly dispatch + total_cost.
+        let prog = vec![
+            mi(Op::ADDI, 5, 5, 0, 1),
+            mi(Op::MUL, 6, 5, 5, 0),
+            mi(Op::FADD, 7, 6, 6, 0),
+            mi(Op::ECALL, 0, 0, 0, 0),
+        ];
+        let t = build(0, &prog, &costs()).unwrap();
+        let mut rq = ReplayQueue::new();
+        rq.schedule(3, 10, &t);
+        assert!(!rq.is_empty());
+        assert_eq!(rq.next_cycle(), Some(11));
+        assert_eq!(rq.pending_pc(3), Some(1));
+        assert_eq!(rq.pending_pc(2), None, "wrong warp index");
+        assert!(matches!(rq.tick(10), ReplayTick::Wait));
+        match rq.tick(11) {
+            ReplayTick::Issue(i) => {
+                assert_eq!((i.warp, i.pc, i.cost), (3, 1, 3));
+            }
+            _ => panic!("mul must issue at cycle 11"),
+        }
+        assert_eq!(rq.next_cycle(), Some(14));
+        assert_eq!(rq.pending_pc(3), Some(2));
+        assert!(matches!(rq.tick(12), ReplayTick::Wait));
+        assert!(matches!(rq.tick(13), ReplayTick::Wait));
+        match rq.tick(14) {
+            ReplayTick::Issue(i) => {
+                assert_eq!((i.warp, i.pc, i.cost), (3, 2, 4));
+            }
+            _ => panic!("fadd must issue at cycle 14"),
+        }
+        assert!(rq.is_empty(), "burst drained after the last issue");
+        assert!(matches!(rq.tick(15), ReplayTick::Idle));
+    }
+}

@@ -1,0 +1,215 @@
+//! Trace-caching warp JIT contract (docs/SIMJIT.md): the JIT changes
+//! wall clock, never results.
+//!
+//! Every test here is a differential between `SimConfig::jit` off (the
+//! pure interpreter) and on (trace dispatch + cycle-exact replay),
+//! through the public API alone:
+//!
+//! * full-`SimStats` bit-identity on every registry kernel, on both
+//!   shipped targets;
+//! * the profiler's per-core cycle ledgers and per-PC samples agree;
+//! * the runtime sanitizer reaches the same verdicts on the entire
+//!   buggy corpus;
+//! * an armed fault plan fires at exactly the same cycles with
+//!   identical corruption / identical trap errors;
+//! * the JIT composes with the parallel cycle-barrier engine.
+
+use volt::check::buggy;
+use volt::coordinator::benchmarks;
+use volt::coordinator::experiments::run_bench_on_configured;
+use volt::driver::{compile_program, VoltOptions};
+use volt::runtime::{ArgValue, VoltDevice};
+use volt::sim::{FaultKind, FaultPlan, SimConfig, SimStats};
+use volt::target::TargetDesc;
+use volt::transform::OptLevel;
+
+/// The full `SimStats` rendering — every counter, the print log and the
+/// sanitizer report list. Two runs agree here iff they are bit-identical.
+fn sig(stats: &SimStats) -> String {
+    format!("{stats:?}")
+}
+
+#[test]
+fn jit_is_bit_identical_on_every_kernel_and_target() {
+    for target_name in ["vortex", "vortex-min"] {
+        let target = TargetDesc::by_name(target_name).unwrap();
+        for b in benchmarks::registry() {
+            let off = run_bench_on_configured(&b, &target, OptLevel::O3, 1, false)
+                .unwrap_or_else(|e| panic!("{} on {target_name} (jit off): {e}", b.name));
+            let on = run_bench_on_configured(&b, &target, OptLevel::O3, 1, true)
+                .unwrap_or_else(|e| panic!("{} on {target_name} (jit on): {e}", b.name));
+            assert_eq!(
+                sig(&on.stats),
+                sig(&off.stats),
+                "{} on {target_name}: jit run diverged from interpreter",
+                b.name
+            );
+        }
+    }
+}
+
+#[test]
+fn profiler_ledger_identical_with_jit() {
+    // The profiler's per-core cycle ledgers (stall attribution, per-PC
+    // issue counts and latency samples) are the finest-grained
+    // observable the simulator exposes; the replay queue re-issues every
+    // trace instruction at its exact interpreter cycle, so the ledgers
+    // must not notice the JIT.
+    for name in ["sgemm", "sgemm_tiled", "reduce", "bfs"] {
+        let b = benchmarks::find(name).unwrap();
+        let run = |jit: bool| {
+            let mut opts = VoltOptions::builder()
+                .dialect(b.dialect)
+                .target_desc(TargetDesc::vortex())
+                .opt_level(OptLevel::O3)
+                .build()
+                .unwrap();
+            opts.sim.jit = jit;
+            let prog = compile_program(b.source, &opts).unwrap();
+            let mut dev = VoltDevice::new(prog.image.clone(), opts.device_config());
+            dev.profiling = true;
+            (b.run)(&mut dev).unwrap();
+            (sig(&dev.total_stats), format!("{:?}", dev.take_profiles()))
+        };
+        let (off_stats, off_prof) = run(false);
+        let (on_stats, on_prof) = run(true);
+        assert_eq!(on_stats, off_stats, "{name}: stats diverged under profiler");
+        assert_eq!(on_prof, off_prof, "{name}: profile ledgers diverged");
+    }
+}
+
+#[test]
+fn sanitizer_verdicts_identical_on_buggy_corpus() {
+    // The whole 10-kernel corpus, including the barrier-divergence cases
+    // that deadlock deterministically: the rendered launch outcome (full
+    // stats + sanitizer reports on success, the exact error on failure)
+    // must be byte-identical with the JIT on or off.
+    for case in buggy::all() {
+        let launch = |jit: bool| {
+            let opts = VoltOptions::builder().dialect(case.dialect).build().unwrap();
+            let prog = compile_program(case.source, &opts)
+                .unwrap_or_else(|e| panic!("{}: {e}", case.name));
+            let cfg = SimConfig {
+                sanitize: true,
+                jit,
+                ..opts.device_config()
+            };
+            let mut dev = VoltDevice::new(prog.image.clone(), cfg);
+            let n = 64usize;
+            let input: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+            let a = dev.malloc(n as u32 * 4);
+            let b = dev.malloc(n as u32 * 4);
+            dev.write_f32(a, &input).unwrap();
+            dev.write_f32(b, &vec![0.0; n]).unwrap();
+            let kernel = prog.kernels[0].name.clone();
+            let r = dev.launch(
+                &kernel,
+                [1, 1, 1],
+                [
+                    case.block[0] as u32,
+                    case.block[1] as u32,
+                    case.block[2] as u32,
+                ],
+                &[ArgValue::Ptr(a), ArgValue::Ptr(b)],
+            );
+            format!("{r:?}")
+        };
+        assert_eq!(
+            launch(true),
+            launch(false),
+            "{}: sanitized outcome diverged with jit on",
+            case.name
+        );
+        if case.sanitizer_catchable() {
+            let out = launch(true);
+            assert!(
+                out.starts_with("Ok(") && !out.contains("sanitize_reports: []"),
+                "{}: corpus case should complete with a non-empty report list",
+                case.name
+            );
+        }
+    }
+}
+
+const INC: &str = r#"
+kernel void inc(global int* x, int n) {
+    int i = get_global_id(0);
+    if (i < n) x[i] = x[i] * 3 + 1;
+}
+"#;
+
+fn inc_device(faults: FaultPlan, jit: bool) -> VoltDevice {
+    let opts = VoltOptions::builder().build().unwrap();
+    let prog = compile_program(INC, &opts).unwrap();
+    let cfg = SimConfig {
+        faults,
+        jit,
+        ..opts.device_config()
+    };
+    VoltDevice::new(prog.image.clone(), cfg)
+}
+
+fn run_inc(dev: &mut VoltDevice) -> Result<(SimStats, Vec<u32>), volt::runtime::RuntimeError> {
+    let buf = dev.malloc(64 * 4);
+    dev.write_u32s(buf, &[7u32; 64])?;
+    let stats = dev.launch("inc", [1, 1, 1], [64, 1, 1], &[ArgValue::Ptr(buf), ArgValue::I32(64)])?;
+    let out = dev.read_u32s(buf, 64)?;
+    Ok((stats, out))
+}
+
+#[test]
+fn armed_fault_plan_fires_identically_with_jit() {
+    // An armed plan disables trace dispatch entirely (guard 2 in
+    // docs/SIMJIT.md), so injection must hit the same instruction at the
+    // same cycle either way. LoadBitFlip is the sharpest probe: it
+    // corrupts the destination of *the next executed load*, so any
+    // reordering or cycle drift changes the corrupted value.
+    let flip = FaultPlan::none().with(5, FaultKind::LoadBitFlip { bit: 3 });
+    let (s_off, r_off) = run_inc(&mut inc_device(flip, false)).unwrap();
+    let (s_on, r_on) = run_inc(&mut inc_device(flip, true)).unwrap();
+    assert_eq!(r_on, r_off, "bit-flip corruption must land identically");
+    assert_eq!(sig(&s_on), sig(&s_off));
+
+    let mut off = inc_device(flip, false);
+    let mut on = inc_device(flip, true);
+    run_inc(&mut off).unwrap();
+    run_inc(&mut on).unwrap();
+    assert_eq!(off.gpu.faults.injected(), 1);
+    assert_eq!(on.gpu.faults.injected(), 1);
+    assert_eq!(on.gpu.faults.log, off.gpu.faults.log, "injection cycles must match");
+
+    // Trap faults: the rendered error (core, warp, pc, [injected] tag)
+    // is byte-identical too.
+    let trap = FaultPlan::none().with(9, FaultKind::IllegalTrap { pc: None });
+    let e_off = run_inc(&mut inc_device(trap, false)).unwrap_err();
+    let e_on = run_inc(&mut inc_device(trap, true)).unwrap_err();
+    assert_eq!(format!("{e_on:?}"), format!("{e_off:?}"));
+
+    // And a plan armed far past the run: never fires, but its mere
+    // presence parks the JIT — still identical to the interpreter AND
+    // to an unarmed jit-on run.
+    let never = FaultPlan::none().with(u64::MAX / 2, FaultKind::MemTrap { pc: None });
+    let (s_armed, r_armed) = run_inc(&mut inc_device(never, true)).unwrap();
+    let (s_plain, r_plain) = run_inc(&mut inc_device(FaultPlan::none(), true)).unwrap();
+    assert_eq!(r_armed, r_plain);
+    assert_eq!(sig(&s_armed), sig(&s_plain));
+}
+
+#[test]
+fn jit_composes_with_parallel_sim() {
+    // jit × threads: the trace cache and replay queue are core-private,
+    // so the cycle-barrier worker pool must not observe them either.
+    let target = TargetDesc::vortex();
+    for name in ["sgemm", "bfs"] {
+        let b = benchmarks::find(name).unwrap();
+        let base = run_bench_on_configured(&b, &target, OptLevel::O3, 1, false).unwrap();
+        for threads in [2usize, 4] {
+            let jitted = run_bench_on_configured(&b, &target, OptLevel::O3, threads, true).unwrap();
+            assert_eq!(
+                sig(&jitted.stats),
+                sig(&base.stats),
+                "{name}: jit @ {threads} threads diverged from sequential interpreter"
+            );
+        }
+    }
+}
